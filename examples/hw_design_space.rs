@@ -1,0 +1,82 @@
+//! Hardware/algorithm co-design: explore the TinyCL design space before
+//! committing to silicon.
+//!
+//! Sweeps MAC lanes × model capacity, pricing every point with the 65 nm
+//! cost model *and* measuring what the capacity buys in CL accuracy —
+//! the co-design loop an autonomous-systems team would actually run.
+//!
+//! Run: `cargo run --release --example hw_design_space`
+//!      (flags: --lanes-list 2,4,8,16 --channels-list 4,8 --quick)
+
+use tinycl::cl::PolicyKind;
+use tinycl::coordinator::{BackendKind, Experiment, ExperimentConfig};
+use tinycl::hw::{CostModel, EnergyModel};
+use tinycl::nn::ModelConfig;
+use tinycl::sim::SimConfig;
+use tinycl::util::cli::Args;
+
+fn parse_list(s: &str) -> Vec<usize> {
+    s.split(',').filter(|t| !t.is_empty()).map(|t| t.trim().parse().expect("bad list")).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let lanes_list = parse_list(&args.str_or("lanes-list", "4,8,16"));
+    let channels_list = parse_list(&args.str_or("channels-list", "4,8"));
+    let quick = args.bool_or("quick", false);
+
+    println!("TinyCL design-space exploration (accuracy × silicon cost)\n");
+    println!(
+        "{:<6} {:<9} {:>9} {:>9} {:>10} {:>11} {:>9} {:>10}",
+        "lanes", "channels", "area mm²", "mW", "s/run", "µJ/run", "avg acc", "acc/mm²"
+    );
+
+    for &conv_channels in &channels_list {
+        for &lanes in &lanes_list {
+            let model = ModelConfig {
+                in_channels: 3,
+                image_size: 16,
+                conv_channels,
+                num_classes: 10,
+                grad_clip: 1.0,
+            };
+            let sim = SimConfig::paper().with_lanes(lanes);
+            let cfg = ExperimentConfig {
+                model: model.clone(),
+                sim: sim.clone(),
+                backend: BackendKind::Sim,
+                policy: PolicyKind::Gdumb,
+                num_tasks: 5,
+                epochs: if quick { 2 } else { 4 },
+                lr: 0.125,
+                memory_budget: 100,
+                train_per_class: if quick { 8 } else { 16 },
+                test_per_class: 8,
+                seed: 42,
+                ..ExperimentConfig::default()
+            };
+            let result = Experiment::new(cfg).run()?;
+            let device = result.device.expect("sim device report");
+            let cost = CostModel::for_design(&sim, &model);
+            let energy = EnergyModel::new(CostModel::for_design(&sim, &model));
+            let (rb, wbur) = result.report.replay_bursts;
+            let uj = energy.report(&device.train, rb + wbur).total_uj();
+            let area = cost.area_mm2().total();
+            let acc = result.report.final_average();
+            println!(
+                "{:<6} {:<9} {:>9.2} {:>9.1} {:>10.3} {:>11.0} {:>9.3} {:>10.3}",
+                lanes,
+                conv_channels,
+                area,
+                device.power_mw,
+                device.train_secs,
+                uj,
+                acc,
+                acc / area
+            );
+        }
+    }
+    println!("\ncolumns: s/run and µJ/run are on-device totals for the whole CL run;");
+    println!("acc/mm² is the co-design figure of merit (capability per silicon).");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Deployment scenario: after on-device continual learning, the same
+//! model serves inference requests. This example measures both sides:
+//!
+//! 1. the AOT-compiled XLA path (the software stack a host CPU would
+//!    run) — requests through the PJRT executable, latency percentiles
+//!    and throughput;
+//! 2. the TinyCL device (cycle-accurate) — per-inference cycles → latency
+//!    at the synthesized clock, plus energy per inference.
+//!
+//! Run: `cargo run --release --example serve_infer` (needs `make artifacts`)
+
+use tinycl::cl::Learner;
+use tinycl::coordinator::{Backend, BackendKind};
+use tinycl::data::SyntheticCifar;
+use tinycl::hw::{CostModel, EnergyModel};
+use tinycl::nn::ModelConfig;
+use tinycl::sim::SimConfig;
+use tinycl::util::cli::Args;
+use tinycl::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let requests = args.usize_or("requests", 200);
+    let model_cfg = ModelConfig::default();
+    let sim_cfg = SimConfig::paper();
+    let gen = SyntheticCifar::default();
+    let data = gen.generate(requests.div_ceil(10).max(1), 3);
+    let batch: Vec<_> = data.samples.iter().take(requests).collect();
+
+    println!("serving {requests} single-image requests (32×32×3, 10 classes)\n");
+
+    // --- 1. XLA software path ---
+    let mut xla = Backend::create(BackendKind::Xla, &model_cfg, &sim_cfg, "artifacts", 5)?;
+    // Brief fine-tune so the served model is not random (5 quick steps).
+    for (i, s) in batch.iter().take(5).enumerate() {
+        xla.train_step(&s.x, s.label, 10, 0.05);
+        let _ = i;
+    }
+    let mut lat_us = Vec::with_capacity(requests);
+    let mut correct = 0usize;
+    let t0 = std::time::Instant::now();
+    for s in &batch {
+        let q0 = std::time::Instant::now();
+        let pred = xla.predict(&s.x, 10);
+        lat_us.push(q0.elapsed().as_secs_f64() * 1e6);
+        correct += usize::from(pred == s.label);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let summary = Summary::of(&lat_us);
+    println!("XLA CPU path (AOT JAX/Pallas via PJRT):");
+    println!(
+        "  latency µs: p50 {:.0}  p95 {:.0}  max {:.0}",
+        summary.median, summary.p95, summary.max
+    );
+    println!(
+        "  throughput: {:.0} req/s   (top-1 {:.2} on the lightly-tuned model)",
+        requests as f64 / wall,
+        correct as f64 / requests as f64
+    );
+
+    // --- 2. TinyCL device ---
+    let mut sim = Backend::create(BackendKind::Sim, &model_cfg, &sim_cfg, "artifacts", 5)?;
+    for s in batch.iter().take(5) {
+        sim.train_step(&s.x, s.label, 10, 0.125);
+    }
+    sim.reset_sim_stats();
+    for s in &batch {
+        let _ = sim.predict(&s.x, 10);
+    }
+    let (_, infer) = sim.sim_stats().unwrap();
+    let cost = CostModel::for_design(&sim_cfg, &model_cfg);
+    let energy = EnergyModel::new(CostModel::for_design(&sim_cfg, &model_cfg));
+    let cycles_per_req = infer.cycles() as f64 / requests as f64;
+    let us_per_req = cycles_per_req * cost.clock_ns() * 1e-3;
+    let uj_per_req = energy.report(infer, 0).total_uj() / requests as f64;
+    println!("\nTinyCL device (cycle-accurate @ {:.2} ns):", cost.clock_ns());
+    println!("  latency   : {us_per_req:.1} µs/request ({cycles_per_req:.0} cycles)");
+    println!("  throughput: {:.0} req/s", 1e6 / us_per_req);
+    println!("  energy    : {uj_per_req:.2} µJ/request");
+    println!(
+        "\ndevice vs host-CPU latency: {:.1}× faster at {:.1} mW",
+        summary.median / us_per_req,
+        cost.power_mw(infer).total()
+    );
+    Ok(())
+}

@@ -1,0 +1,81 @@
+"""AOT lowering: JAX/Pallas (L2/L1) → HLO **text** artifacts for the Rust
+runtime (L3).
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids, which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids and round-trips cleanly. Lowering goes through
+stablehlo → XlaComputation with ``return_tuple=True``; the Rust side
+unwraps with ``to_tuple{N}()``. See /opt/xla-example/README.md.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged — the
+manifest records a hash of every compile-path source).
+
+Emitted per geometry (paper 32×32×8 and tiny 8×8×4):
+* ``forward[_tiny].hlo.txt``    — (k1, k2, w, x) → (logits,)
+* ``train_step[_tiny].hlo.txt`` — (k1, k2, w, x, onehot, mask, lr)
+                                  → (k1', k2', w', loss, logits)
+* ``manifest.txt``              — artifact inventory + source hash
+"""
+
+import argparse
+import hashlib
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → HLO text with return_tuple=True (see module doc)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(cfg: model.ModelConfig):
+    """Lower both entry points for one geometry; returns {name: hlo}."""
+    args = model.example_args(cfg)
+    return {
+        "forward": to_hlo_text(jax.jit(model.forward).lower(*args["forward"])),
+        "train_step": to_hlo_text(jax.jit(model.train_step).lower(*args["train_step"])),
+    }
+
+
+def source_hash() -> str:
+    """Hash of every compile-path source file (manifest freshness key)."""
+    root = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest = [f"source_hash {source_hash()}"]
+    for suffix, cfg in (("", model.PAPER), ("_tiny", model.TINY)):
+        for name, hlo in lower_all(cfg).items():
+            path = out / f"{name}{suffix}.hlo.txt"
+            path.write_text(hlo)
+            manifest.append(
+                f"{path.name} geometry=in{cfg.in_channels}x{cfg.image_size}"
+                f"c{cfg.conv_channels}n{cfg.num_classes} chars={len(hlo)}"
+            )
+            print(f"wrote {path} ({len(hlo)} chars)")
+
+    (out / "manifest.txt").write_text("\n".join(manifest) + "\n")
+    print(f"wrote {out / 'manifest.txt'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the paper's six computations (+ pure-jnp oracle).
+from . import conv, dense, ref  # noqa: F401

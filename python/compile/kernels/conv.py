@@ -1,0 +1,140 @@
+"""Pallas convolution kernels — the TPU re-think of TinyCL's datapath
+(DESIGN.md §Hardware-Adaptation).
+
+The ASIC computes one output pixel per cycle from a 9-tap × 8-channel
+window held in registers, with a snake traversal keeping 6/9 window
+columns resident. On a TPU the analogous resource is the MXU, so each
+kernel restates the paper's computation as **9 tap-matmuls accumulated in
+VMEM** instead of 9 MACs accumulated in a Dadda tree:
+
+* forward (Eq. 1):    out[hw, co] = Σ_t xpad_t[hw, ci] @ K_t[ci, co]
+* input grad (Eq. 2): same dataflow with the io-transposed, spatially
+                      flipped kernel — exactly the paper's observation
+                      that "the data flow is the same as for the forward
+                      propagation" (§III-F-3);
+* kernel grad (Eq. 3): dK_t[co, ci] = G[co, hw] @ xpad_t[ci, hw]ᵀ, one
+                      tap per grid step — the paper's MAC-per-tap
+                      indexing (Eq. 7) becomes a grid axis.
+
+Row-block tiling: the output is tiled over row blocks (grid axis), the
+padded input is passed whole; each grid step's 9 tap windows overlap the
+next step's by 2 rows — the snake-reuse halo, kept in VMEM. VMEM per
+step at the paper's geometry (Cin=8, 32×32, block=8 rows, Cout=8):
+xpad 8×34×34×4B ≈ 36 KB + kmat 9×8×8×4B ≈ 2 KB + acc 8·32×8×4B ≈ 8 KB —
+far under the ~16 MB VMEM budget; the block factor exists to keep the
+schedule shaped like the ASIC's row sweep, not to fit memory.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+the Rust runtime loads (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _row_block(h: int, preferred: int = 8) -> int:
+    """Largest divisor of ``h`` that is ≤ ``preferred`` (grid must tile
+    the row axis exactly)."""
+    for b in range(min(preferred, h), 0, -1):
+        if h % b == 0:
+            return b
+    return 1
+
+
+def conv2d_forward(x, k, pad=1, block_rows=None):
+    """Eq. (1) as 9 accumulated tap-matmuls. x (Cin,H,W), k (Cout,Cin,Kh,Kw)
+    → (Cout,H,W). Stride 1, geometry-preserving zero padding."""
+    cin, h, w = x.shape
+    cout, kcin, kh, kw = k.shape
+    assert kcin == cin, f"kernel cin {kcin} != input cin {cin}"
+    assert kh == kw == 2 * pad + 1, "geometry-preserving padding only"
+    taps = kh * kw
+    br = block_rows or _row_block(h)
+
+    xpad = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    # (taps, Cin, Cout): one MXU operand per tap.
+    kmat = k.reshape(cout, cin, taps).transpose(2, 1, 0)
+
+    def kernel(xpad_ref, kmat_ref, o_ref):
+        r = pl.program_id(0)
+        acc = jnp.zeros((br * w, cout), dtype=jnp.float32)
+        for t in range(taps):  # unrolled: taps is a static 9
+            dy, dx = divmod(t, kw)
+            window = xpad_ref[:, pl.ds(r * br + dy, br), pl.ds(dx, w)]
+            acc += window.reshape(cin, br * w).T @ kmat_ref[t]
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(h // br,),
+        in_specs=[
+            pl.BlockSpec(xpad.shape, lambda r: (0, 0, 0)),
+            pl.BlockSpec(kmat.shape, lambda r: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br * w, cout), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((h * w, cout), x.dtype),
+        interpret=True,
+    )(xpad, kmat)
+    return out.T.reshape(cout, h, w)
+
+
+def conv2d_input_grad(g, k, pad=1, block_rows=None):
+    """Eq. (2): dV = g ⊛ flip(k)ᵀ — same kernel, transformed operand."""
+    kt = jnp.flip(k, axis=(2, 3)).transpose(1, 0, 2, 3)
+    return conv2d_forward(g, kt, pad=pad, block_rows=block_rows)
+
+
+def conv2d_kernel_grad(g, x, pad=1):
+    """Eq. (3): one tap per grid step (the paper's Eq. 7 MAC indexing);
+    each step is a (Cout, HW) × (HW, Cin) MXU contraction."""
+    cout, h, w = g.shape
+    cin = x.shape[0]
+    kh = kw = 2 * pad + 1
+    taps = kh * kw
+
+    xpad = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    gmat = g.reshape(cout, h * w)
+
+    def kernel(g_ref, xpad_ref, o_ref):
+        t = pl.program_id(0)
+        dy = t // kw
+        dx = t % kw
+        window = xpad_ref[:, pl.ds(dy, h), pl.ds(dx, w)]
+        o_ref[0] = g_ref[...] @ window.reshape(cin, h * w).T
+
+    dk = pl.pallas_call(
+        kernel,
+        grid=(taps,),
+        in_specs=[
+            pl.BlockSpec(gmat.shape, lambda t: (0, 0)),
+            pl.BlockSpec(xpad.shape, lambda t: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cout, cin), lambda t: (t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((taps, cout, cin), g.dtype),
+        interpret=True,
+    )(gmat, xpad)
+    return dk.transpose(1, 2, 0).reshape(cout, cin, kh, kw)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def conv2d(x, k, pad=1):
+    """Differentiable conv whose forward *and* backward are the Pallas
+    kernels above — the model's train-step HLO therefore contains exactly
+    the paper's six computations."""
+    return conv2d_forward(x, k, pad=pad)
+
+
+def _conv2d_vjp_fwd(x, k, pad):
+    return conv2d_forward(x, k, pad=pad), (x, k)
+
+
+def _conv2d_vjp_bwd(pad, res, g):
+    x, k = res
+    return conv2d_input_grad(g, k, pad=pad), conv2d_kernel_grad(g, x, pad=pad)
+
+
+conv2d.defvjp(_conv2d_vjp_fwd, _conv2d_vjp_bwd)

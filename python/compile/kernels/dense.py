@@ -1,0 +1,124 @@
+"""Pallas dense-layer kernels (§III-F-4).
+
+The ASIC runs the dense layer on the same 9 MACs with dynamic output
+count (the CL head grows as classes arrive). The TPU restatement tiles
+the *input* dimension M (8192 at the paper's geometry) over the grid and
+accumulates into a single output block — mirroring the ASIC's partial-sum
+register that survives across the input sweep:
+
+* forward (Eq. 4):     y[N]  += a_m[km] @ W_m[km, N]   per input tile m
+* input grad (Eq. 5):  dX_m[km] = W_m[km, N] @ dY[N]    per input tile m
+* weight grad (Eq. 6): dW_m[km, N] = a_m[km] ⊗ dY[N]    per input tile m
+
+VMEM per grid step at the paper's geometry (km=1024, N=10): W tile
+1024×10×4B ≈ 40 KB + vectors — trivially resident. The head mask (the
+dynamic class count) is applied by the caller, as in the ASIC where the
+CU bounds the output counter (§III-F-4).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k_block(m: int, preferred: int = 1024) -> int:
+    """Largest divisor of ``m`` ≤ ``preferred``."""
+    for b in range(min(preferred, m), 0, -1):
+        if m % b == 0:
+            return b
+    return 1
+
+
+def dense_forward(a, w, block_k=None):
+    """Eq. (4): y = a @ W, input-tiled with an accumulating output block."""
+    m, n = w.shape
+    assert a.shape == (m,), f"a {a.shape} vs W {w.shape}"
+    km = block_k or _k_block(m)
+
+    def kernel(a_ref, w_ref, o_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += a_ref[...] @ w_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // km,),
+        in_specs=[
+            pl.BlockSpec((km,), lambda i: (i,)),
+            pl.BlockSpec((km, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, w)
+
+
+def dense_input_grad(dy, w, block_k=None):
+    """Eq. (5): dX = dY @ Wᵀ, one input tile per grid step (the paper
+    computes one dX pixel per MAC, iterating the partial-sum register)."""
+    m, n = w.shape
+    assert dy.shape == (n,)
+    km = block_k or _k_block(m)
+
+    def kernel(dy_ref, w_ref, o_ref):
+        o_ref[...] = w_ref[...] @ dy_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // km,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((km, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((km,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), dy.dtype),
+        interpret=True,
+    )(dy, w)
+
+
+def dense_weight_grad(dy, a, block_k=None):
+    """Eq. (6): dW = a ⊗ dY, outer product tiled over the input dim (the
+    paper's multi-adder mode: 64 products accumulated per cycle)."""
+    (m,) = a.shape
+    (n,) = dy.shape
+    km = block_k or _k_block(m)
+
+    def kernel(dy_ref, a_ref, o_ref):
+        o_ref[...] = a_ref[...][:, None] * dy_ref[...][None, :]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // km,),
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((km,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((km, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(dy, a)
+
+
+@jax.custom_vjp
+def dense(a, w):
+    """Differentiable dense layer whose forward and backward are the
+    Pallas kernels above."""
+    return dense_forward(a, w)
+
+
+def _dense_vjp_fwd(a, w):
+    return dense_forward(a, w), (a, w)
+
+
+def _dense_vjp_bwd(res, dy):
+    a, w = res
+    return dense_input_grad(dy, w), dense_weight_grad(dy, a)
+
+
+dense.defvjp(_dense_vjp_fwd, _dense_vjp_bwd)

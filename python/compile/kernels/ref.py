@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for the six TinyCL computations (§III-F).
+
+These are the ground truth the Pallas kernels (and, transitively, the AOT
+artifacts the Rust runtime executes) are tested against. They mirror the
+paper's equations directly:
+
+* Eq. (1): conv forward          — ``conv2d_forward``
+* Eq. (3): conv kernel gradient  — ``conv2d_kernel_grad``
+* Eq. (2): conv gradient prop    — ``conv2d_input_grad``
+* Eq. (4): dense forward         — ``dense_forward``
+* Eq. (6): dense weight gradient — ``dense_weight_grad``
+* Eq. (5): dense gradient prop   — ``dense_input_grad``
+
+Conventions match the Rust f32 reference (`rust/src/nn/`): activations
+CHW, kernels OIHW, dense weights (in, out), stride 1, zero padding that
+preserves geometry (pad = (kh-1)//2), no biases, batch size 1.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_forward(x, k, pad=1):
+    """Eq. (1): x (Cin,H,W) ⊛ k (Cout,Cin,Kh,Kw) → (Cout,H,W)."""
+    out = lax.conv_general_dilated(
+        x[None],  # NCHW
+        k,  # OIHW
+        window_strides=(1, 1),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def conv2d_input_grad(g, k, pad=1):
+    """Eq. (2): gradient w.r.t. the input — correlate g with the
+    spatially-flipped, io-transposed kernel."""
+    kt = jnp.flip(k, axis=(2, 3)).transpose(1, 0, 2, 3)  # (Cin,Cout,Kh,Kw)
+    return conv2d_forward(g, kt, pad=pad)
+
+
+def conv2d_kernel_grad(g, x, pad=1):
+    """Eq. (3): dK[o,i,dy,dx] = Σ_{h,w} g[o,h,w] · xpad[i,h+dy,w+dx]."""
+    xpad = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    cout, h, w = g.shape
+    cin = x.shape[0]
+    kh = kw = 2 * pad + 1
+    taps = []
+    for dy in range(kh):
+        for dx in range(kw):
+            window = lax.dynamic_slice(xpad, (0, dy, dx), (cin, h, w))
+            # (Cout, H*W) @ (H*W, Cin) -> (Cout, Cin)
+            taps.append(g.reshape(cout, -1) @ window.reshape(cin, -1).T)
+    dk = jnp.stack(taps, axis=-1)  # (Cout, Cin, Kh*Kw)
+    return dk.reshape(cout, cin, kh, kw)
+
+
+def dense_forward(a, w):
+    """Eq. (4): y = a · W with a (M,), W (M,N)."""
+    return a @ w
+
+
+def dense_input_grad(dy, w):
+    """Eq. (5): dX = dY · Wᵀ."""
+    return dy @ w.T
+
+
+def dense_weight_grad(dy, a):
+    """Eq. (6): dW = aᵀ · dY (outer product at batch 1)."""
+    return jnp.outer(a, dy)
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu_grad(g, pre):
+    return jnp.where(pre > 0, g, 0.0)
+
+
+def masked_softmax_ce(logits, onehot, mask):
+    """Cross-entropy over the active classes only (mask ∈ {0,1}^C); the
+    paper's dense head has a dynamic class count (§III-F-4)."""
+    neg = (1.0 - mask) * -1e9
+    z = logits + neg
+    z = z - jnp.max(z)
+    logp = z - jnp.log(jnp.sum(mask * jnp.exp(z)) + 1e-30)
+    loss = -jnp.sum(onehot * logp)
+    probs = mask * jnp.exp(logp)
+    dlogits = probs - onehot
+    return loss, dlogits
+
+
+def model_forward(params, x):
+    """The paper's evaluation model: Conv+ReLU, Conv+ReLU, Dense."""
+    k1, k2, w = params["k1"], params["k2"], params["w"]
+    a1 = relu(conv2d_forward(x, k1))
+    a2 = relu(conv2d_forward(a1, k2))
+    return dense_forward(a2.reshape(-1), w)

@@ -1,0 +1,99 @@
+"""L2: the paper's evaluation model in JAX, built on the Pallas kernels.
+
+Conv3×3(3→8) + ReLU + Conv3×3(8→8) + ReLU + Dense(8·H·W → C), batch 1,
+SGD, masked softmax-CE head (the CL head's class count is dynamic, so the
+AOT signature takes a {0,1} mask instead of a class count — §III-F-4).
+
+Both entry points are pure functions over flat argument lists so the Rust
+runtime can feed PJRT literals positionally:
+
+* ``forward(k1, k2, w, x) -> (logits,)``
+* ``train_step(k1, k2, w, x, onehot, mask, lr) ->
+        (k1', k2', w', loss, logits)``
+
+Because ``conv2d`` / ``dense`` carry custom VJPs that are themselves
+Pallas kernels, the lowered train-step HLO contains exactly the paper's
+six computations — forward ×2 conv + dense, gradient propagation ×2,
+kernel/weight gradients ×3 — not XLA's generic conv backward.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv import conv2d
+from .kernels.dense import dense
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Mirror of ``rust/src/nn/model.rs::ModelConfig`` (keep in sync)."""
+
+    in_channels: int = 3
+    image_size: int = 32
+    conv_channels: int = 8
+    num_classes: int = 10
+
+    @property
+    def dense_in(self) -> int:
+        return self.conv_channels * self.image_size * self.image_size
+
+    def shapes(self):
+        """Shapes of (k1, k2, w, x, onehot, mask, lr)."""
+        c, s = self.conv_channels, self.image_size
+        return {
+            "k1": (c, self.in_channels, 3, 3),
+            "k2": (c, c, 3, 3),
+            "w": (self.dense_in, self.num_classes),
+            "x": (self.in_channels, s, s),
+            "onehot": (self.num_classes,),
+            "mask": (self.num_classes,),
+            "lr": (),
+        }
+
+
+PAPER = ModelConfig()
+# Small geometry used by fast Rust integration tests
+# (mirror of the Rust tests' `tiny_config`).
+TINY = ModelConfig(in_channels=3, image_size=8, conv_channels=4, num_classes=4)
+
+
+def forward(k1, k2, w, x):
+    """Inference: logits over all classes (masking is the caller's)."""
+    a1 = jax.nn.relu(conv2d(x, k1))
+    a2 = jax.nn.relu(conv2d(a1, k2))
+    return (dense(a2.reshape(-1), w),)
+
+
+def _loss_fn(params, x, onehot, mask):
+    k1, k2, w = params
+    (logits,) = forward(k1, k2, w, x)
+    # Masked softmax-CE: inactive classes get -1e9 before the softmax and
+    # zero probability after (matches rust/src/nn/loss.rs).
+    z = logits + (1.0 - mask) * -1e9
+    z = z - jnp.max(z)
+    logp = z - jnp.log(jnp.sum(mask * jnp.exp(z)) + 1e-30)
+    return -jnp.sum(onehot * logp), logits
+
+
+def train_step(k1, k2, w, x, onehot, mask, lr):
+    """One batch-1 SGD step; returns updated params, loss, logits."""
+    (loss, logits), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
+        (k1, k2, w), x, onehot, mask
+    )
+    dk1, dk2, dw = grads
+    return (k1 - lr * dk1, k2 - lr * dk2, w - lr * dw, loss, logits)
+
+
+def example_args(cfg: ModelConfig):
+    """ShapeDtypeStructs for AOT lowering, in positional order."""
+    s = cfg.shapes()
+    f32 = jnp.float32
+    spec = lambda name: jax.ShapeDtypeStruct(s[name], f32)  # noqa: E731
+    return {
+        "forward": tuple(spec(n) for n in ("k1", "k2", "w", "x")),
+        "train_step": tuple(
+            spec(n) for n in ("k1", "k2", "w", "x", "onehot", "mask", "lr")
+        ),
+    }

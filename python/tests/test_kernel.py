@@ -1,0 +1,194 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (and a bfloat16 smoke) so the kernels are
+correct for *any* geometry, not just the paper's — the Rust coordinator
+sweeps model geometry in the design-space benches.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, dense, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Shape strategies: small enough that a hypothesis sweep stays fast under
+# interpret mode, wide enough to hit odd sizes (non-divisible row blocks,
+# single channels, single pixels).
+dims = st.integers(min_value=1, max_value=6)
+sizes = st.integers(min_value=3, max_value=12)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+def assert_close(got, want, rtol=1e-5, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+
+
+class TestConvForward:
+    @settings(max_examples=25, deadline=None)
+    @given(cin=dims, cout=dims, h=sizes, w=sizes, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, cin, cout, h, w, seed):
+        kx, kk = keys(seed, 2)
+        x = rand(kx, (cin, h, w))
+        k = rand(kk, (cout, cin, 3, 3))
+        assert_close(conv.conv2d_forward(x, k), ref.conv2d_forward(x, k))
+
+    def test_paper_geometry(self):
+        kx, kk = keys(0, 2)
+        x = rand(kx, (8, 32, 32))
+        k = rand(kk, (8, 8, 3, 3))
+        assert_close(conv.conv2d_forward(x, k), ref.conv2d_forward(x, k))
+
+    @pytest.mark.parametrize("block_rows", [1, 2, 4, 8, 16, 32])
+    def test_block_size_invariant(self, block_rows):
+        kx, kk = keys(1, 2)
+        x = rand(kx, (3, 32, 32))
+        k = rand(kk, (8, 3, 3, 3))
+        assert_close(
+            conv.conv2d_forward(x, k, block_rows=block_rows),
+            ref.conv2d_forward(x, k),
+        )
+
+    def test_identity_kernel(self):
+        # A centered delta kernel must reproduce the input exactly.
+        x = rand(keys(2, 1)[0], (2, 8, 8))
+        k = jnp.zeros((2, 2, 3, 3)).at[0, 0, 1, 1].set(1.0).at[1, 1, 1, 1].set(1.0)
+        assert_close(conv.conv2d_forward(x, k), x)
+
+    def test_bf16_smoke(self):
+        kx, kk = keys(3, 2)
+        x = rand(kx, (4, 8, 8), dtype=jnp.bfloat16)
+        k = rand(kk, (4, 4, 3, 3), dtype=jnp.bfloat16)
+        got = conv.conv2d_forward(x, k).astype(jnp.float32)
+        want = ref.conv2d_forward(x, k).astype(jnp.float32)
+        assert_close(got, want, rtol=0.1, atol=0.1)
+
+
+class TestConvInputGrad:
+    @settings(max_examples=25, deadline=None)
+    @given(cin=dims, cout=dims, h=sizes, w=sizes, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, cin, cout, h, w, seed):
+        kg, kk = keys(seed, 2)
+        g = rand(kg, (cout, h, w))
+        k = rand(kk, (cout, cin, 3, 3))
+        assert_close(conv.conv2d_input_grad(g, k), ref.conv2d_input_grad(g, k))
+
+    def test_matches_jax_autodiff(self):
+        # The pallas backward must equal jax's own vjp of the forward.
+        kx, kk, kg = keys(4, 3)
+        x = rand(kx, (3, 8, 8))
+        k = rand(kk, (5, 3, 3, 3))
+        g = rand(kg, (5, 8, 8))
+        _, vjp = jax.vjp(lambda x_: ref.conv2d_forward(x_, k), x)
+        assert_close(conv.conv2d_input_grad(g, k), vjp(g)[0], rtol=1e-4, atol=1e-5)
+
+
+class TestConvKernelGrad:
+    @settings(max_examples=25, deadline=None)
+    @given(cin=dims, cout=dims, h=sizes, w=sizes, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, cin, cout, h, w, seed):
+        kg, kx = keys(seed, 2)
+        g = rand(kg, (cout, h, w))
+        x = rand(kx, (cin, h, w))
+        assert_close(
+            conv.conv2d_kernel_grad(g, x), ref.conv2d_kernel_grad(g, x), rtol=1e-4, atol=1e-4
+        )
+
+    def test_matches_jax_autodiff(self):
+        kx, kk, kg = keys(5, 3)
+        x = rand(kx, (3, 8, 8))
+        k = rand(kk, (5, 3, 3, 3))
+        g = rand(kg, (5, 8, 8))
+        _, vjp = jax.vjp(lambda k_: ref.conv2d_forward(x, k_), k)
+        assert_close(conv.conv2d_kernel_grad(g, x), vjp(g)[0], rtol=1e-4, atol=1e-5)
+
+
+class TestDense:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=600),
+        n=st.integers(min_value=1, max_value=16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_forward_matches_ref(self, m, n, seed):
+        ka, kw = keys(seed, 2)
+        a = rand(ka, (m,))
+        w = rand(kw, (m, n))
+        assert_close(dense.dense_forward(a, w), ref.dense_forward(a, w), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=600),
+        n=st.integers(min_value=1, max_value=16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_input_grad_matches_ref(self, m, n, seed):
+        kd, kw = keys(seed, 2)
+        dy = rand(kd, (n,))
+        w = rand(kw, (m, n))
+        assert_close(dense.dense_input_grad(dy, w), ref.dense_input_grad(dy, w), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=600),
+        n=st.integers(min_value=1, max_value=16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_weight_grad_matches_ref(self, m, n, seed):
+        kd, ka = keys(seed, 2)
+        dy = rand(kd, (n,))
+        a = rand(ka, (m,))
+        assert_close(dense.dense_weight_grad(dy, a), ref.dense_weight_grad(dy, a))
+
+    def test_paper_geometry(self):
+        ka, kw = keys(6, 2)
+        a = rand(ka, (8192,))
+        w = rand(kw, (8192, 10))
+        assert_close(dense.dense_forward(a, w), ref.dense_forward(a, w), rtol=1e-3, atol=1e-3)
+
+    @pytest.mark.parametrize("block_k", [1, 7, 64, 512])
+    def test_block_size_invariant(self, block_k):
+        ka, kw = keys(7, 2)
+        m = 512 if 512 % block_k == 0 else 7 * 64
+        a = rand(ka, (m,))
+        w = rand(kw, (m, 8))
+        if m % block_k:
+            pytest.skip("block must divide m")
+        assert_close(
+            dense.dense_forward(a, w, block_k=block_k),
+            ref.dense_forward(a, w),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+
+class TestCustomVjp:
+    def test_conv2d_grad_is_pallas_backward(self):
+        kx, kk, kg = keys(8, 3)
+        x = rand(kx, (3, 8, 8))
+        k = rand(kk, (4, 3, 3, 3))
+        g = rand(kg, (4, 8, 8))
+        _, vjp = jax.vjp(lambda x_, k_: conv.conv2d(x_, k_), x, k)
+        dx, dk = vjp(g)
+        assert_close(dx, ref.conv2d_input_grad(g, k), rtol=1e-4, atol=1e-5)
+        assert_close(dk, ref.conv2d_kernel_grad(g, x), rtol=1e-4, atol=1e-4)
+
+    def test_dense_grad_is_pallas_backward(self):
+        ka, kw, kg = keys(9, 3)
+        a = rand(ka, (96,))
+        w = rand(kw, (96, 5))
+        g = rand(kg, (5,))
+        _, vjp = jax.vjp(dense.dense, a, w)
+        da, dw = vjp(g)
+        assert_close(da, ref.dense_input_grad(g, w), rtol=1e-4, atol=1e-5)
+        assert_close(dw, ref.dense_weight_grad(g, a))

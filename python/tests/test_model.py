@@ -1,0 +1,114 @@
+"""L2 correctness: the JAX model (shapes, loss semantics, train-step
+behaviour) and the AOT lowering path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def init_params(cfg: model.ModelConfig, seed=0):
+    s = cfg.shapes()
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    scale = lambda sh: (2.0 / np.prod(sh[1:])) ** 0.5  # noqa: E731
+    return tuple(
+        (jax.random.normal(kk, s[n]) * scale(s[n])).astype(jnp.float32)
+        for kk, n in zip(k, ("k1", "k2", "w"))
+    )
+
+
+def sample_inputs(cfg: model.ModelConfig, label=1, active=4, seed=3):
+    x = jax.random.normal(jax.random.PRNGKey(seed), cfg.shapes()["x"]).astype(jnp.float32)
+    onehot = jnp.zeros(cfg.num_classes).at[label].set(1.0)
+    mask = (jnp.arange(cfg.num_classes) < active).astype(jnp.float32)
+    return x, onehot, mask
+
+
+class TestForward:
+    def test_matches_pure_jnp_model(self):
+        cfg = model.TINY
+        k1, k2, w = init_params(cfg)
+        x, _, _ = sample_inputs(cfg)
+        (logits,) = model.forward(k1, k2, w, x)
+        want = ref.model_forward({"k1": k1, "k2": k2, "w": w}, x)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_paper_shapes(self):
+        cfg = model.PAPER
+        assert cfg.dense_in == 8192
+        k1, k2, w = init_params(cfg)
+        x, _, _ = sample_inputs(cfg)
+        (logits,) = model.forward(k1, k2, w, x)
+        assert logits.shape == (10,)
+
+
+class TestTrainStep:
+    def test_loss_decreases_on_repeated_sample(self):
+        cfg = model.TINY
+        params = init_params(cfg)
+        x, onehot, mask = sample_inputs(cfg)
+        step = jax.jit(model.train_step)
+        losses = []
+        for _ in range(10):
+            *params, loss, _ = step(*params, x, onehot, mask, jnp.float32(0.1))
+            params = tuple(params)
+            losses.append(float(loss))
+        assert losses[-1] < 0.5 * losses[0], losses
+
+    def test_masked_classes_get_no_gradient(self):
+        # With the mask restricted to classes {0,1}, rows of W feeding
+        # classes 2..N must not change.
+        cfg = model.TINY
+        params = init_params(cfg)
+        x, onehot, mask = sample_inputs(cfg, label=1, active=2)
+        k1n, k2n, wn, _, _ = model.train_step(*params, x, onehot, mask, jnp.float32(0.5))
+        w_before = np.asarray(params[2])
+        w_after = np.asarray(wn)
+        np.testing.assert_array_equal(w_before[:, 2:], w_after[:, 2:])
+        assert np.abs(w_after[:, :2] - w_before[:, :2]).max() > 0
+
+    def test_loss_is_masked_ce(self):
+        cfg = model.TINY
+        params = init_params(cfg)
+        x, onehot, mask = sample_inputs(cfg, label=0, active=2)
+        *_, loss, logits = model.train_step(*params, x, onehot, mask, jnp.float32(0.0))
+        want, _ = ref.masked_softmax_ce(logits, onehot, mask)
+        np.testing.assert_allclose(float(loss), float(want), rtol=1e-5)
+
+    def test_zero_lr_keeps_params(self):
+        cfg = model.TINY
+        params = init_params(cfg)
+        x, onehot, mask = sample_inputs(cfg)
+        k1n, k2n, wn, _, _ = model.train_step(*params, x, onehot, mask, jnp.float32(0.0))
+        for old, new in zip(params, (k1n, k2n, wn)):
+            np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+class TestAot:
+    @pytest.mark.parametrize("cfg", [model.TINY], ids=["tiny"])
+    def test_lowering_produces_parseable_hlo(self, cfg):
+        hlo = aot.lower_all(cfg)
+        for name, text in hlo.items():
+            assert text.startswith("HloModule"), f"{name} is not HLO text"
+            assert "ENTRY" in text
+
+    def test_forward_hlo_has_four_params(self):
+        hlo = aot.lower_all(model.TINY)["forward"]
+        # k1, k2, w, x — parameter count is the rust runtime's contract.
+        for i in range(4):
+            assert f"parameter({i})" in hlo
+        assert "parameter(4)" not in hlo
+
+    def test_train_step_hlo_has_seven_params(self):
+        hlo = aot.lower_all(model.TINY)["train_step"]
+        for i in range(7):
+            assert f"parameter({i})" in hlo
+        assert "parameter(7)" not in hlo
+
+    def test_source_hash_is_stable(self):
+        assert aot.source_hash() == aot.source_hash()

@@ -1,0 +1,67 @@
+//! E2 — Fig. 7 area & power breakdown.
+//!
+//! Regenerates the paper's per-component pie (memory ≈80 % of area,
+//! ≈76 % of power at the synthesized design point) from the analytical
+//! 65 nm model priced with a measured train-step activity window.
+//! Run: `cargo bench --bench fig7_breakdown`.
+
+use tinycl::fixed::Fx;
+use tinycl::hw::CostModel;
+use tinycl::nn::{Model, ModelConfig};
+use tinycl::qnn::QModel;
+use tinycl::sim::{SimConfig, TinyClDevice};
+use tinycl::tensor::{quantize_tensor, Shape, Tensor};
+use tinycl::util::rng::Pcg32;
+
+fn main() {
+    let cfg = ModelConfig::default();
+    let m = Model::new(cfg.clone(), 7);
+    let qm = QModel::from_model(&m);
+    let mut dev = TinyClDevice::new(SimConfig::paper(), cfg.clone());
+    dev.load_params(&qm.params);
+    let mut rng = Pcg32::seeded(8);
+    let shape = Shape::d3(3, 32, 32);
+    let n = shape.numel();
+    let x = quantize_tensor(&Tensor::from_vec(
+        shape,
+        (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+    ));
+    let (_, _, run) = dev.train_step(&x, 0, 10, Fx::from_f32(0.5));
+
+    let cost = CostModel::paper();
+    let area = cost.area_mm2();
+    let power = cost.power_mw(&run);
+
+    println!("E2: Fig. 7 breakdown at the paper design point\n");
+    println!("(a) area [mm²]          measured        paper");
+    for (name, v) in area.rows() {
+        println!(
+            "  {:<16} {:>7.3} ({:>5.1}%)   {}",
+            name,
+            v,
+            100.0 * v / area.total(),
+            if name == "Memory" { "≈80%" } else { "—" }
+        );
+    }
+    println!("  {:<16} {:>7.3}           4.74 mm²", "TOTAL", area.total());
+
+    println!("\n(b) power [mW]          measured        paper");
+    for (name, v) in power.rows() {
+        println!(
+            "  {:<16} {:>7.2} ({:>5.1}%)   {}",
+            name,
+            v,
+            100.0 * v / power.total(),
+            if name == "Memory" { "≈76%" } else { "—" }
+        );
+    }
+    println!("  {:<16} {:>7.2}           86 mW", "TOTAL", power.total());
+
+    let a_frac = area.memory_fraction();
+    let p_frac = power.memory_fraction();
+    assert!((a_frac - 0.80).abs() < 0.05, "area memory fraction {a_frac}");
+    assert!((p_frac - 0.76).abs() < 0.05, "power memory fraction {p_frac}");
+    assert!((area.total() - 4.74).abs() / 4.74 < 0.10);
+    assert!((power.total() - 86.0).abs() / 86.0 < 0.10);
+    println!("\nE2 PASS: memory dominates both axes at the paper's fractions");
+}

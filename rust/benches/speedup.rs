@@ -1,0 +1,78 @@
+//! E4 — §IV-C speedup: one training epoch on the TinyCL device (cycles ×
+//! synthesized clock) vs the *same* workload's software-level
+//! implementation — the AOT JAX/Pallas artifacts executed via PJRT on
+//! this host's CPU (the paper used TensorFlow on a P100; we carry their
+//! constants alongside for reference).
+//!
+//! Run: `cargo bench --bench speedup [-- --steps N]`.
+//! Requires `make artifacts`.
+
+use tinycl::cl::Learner;
+use tinycl::coordinator::{Backend, BackendKind};
+use tinycl::data::SyntheticCifar;
+use tinycl::hw::CostModel;
+use tinycl::nn::ModelConfig;
+use tinycl::sim::SimConfig;
+use tinycl::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    // The paper's "1 epoch … in 1.76 s" works out to 10,000 train steps
+    // (10 passes over the 1000-sample GDumb memory: 45,486 cycles/step ×
+    // 3.87 ns × 10,000 = 1.76 s — see EXPERIMENTS.md E4). We measure 250
+    // steps and extrapolate linearly; exact for the sim (cycles/step is
+    // constant), conservative for XLA (warmup amortizes further).
+    let steps = args.usize_or("steps", 250);
+    let epoch_steps = 10_000.0;
+    let cfg = ModelConfig::default();
+    let sim_cfg = SimConfig::paper();
+
+    let gen = SyntheticCifar::default();
+    let data = gen.generate(steps.div_ceil(10).max(1), 0);
+    let samples: Vec<_> = data.samples.iter().take(steps).collect();
+    assert!(!samples.is_empty());
+
+    println!("E4: 1 training epoch, Conv+ReLU+Conv+ReLU+Dense, batch 1 (§IV-C)\n");
+
+    // --- TinyCL device (cycle-accurate sim @ 3.87 ns) ---
+    let mut sim = Backend::create(BackendKind::Sim, &cfg, &sim_cfg, "artifacts", 3)
+        .expect("sim backend");
+    let wall0 = std::time::Instant::now();
+    for s in &samples {
+        sim.train_step(&s.x, s.label, cfg.num_classes, 0.125);
+    }
+    let sim_wall = wall0.elapsed().as_secs_f64();
+    let (train, _) = sim.sim_stats().unwrap();
+    let cost = CostModel::for_design(&sim_cfg, &cfg);
+    let cycles_per_step = train.cycles() as f64 / steps as f64;
+    let tinycl_epoch = cycles_per_step * epoch_steps * cost.clock_ns() * 1e-9;
+
+    // --- Software baseline: AOT JAX/Pallas via PJRT on this host ---
+    let mut xla = Backend::create(BackendKind::Xla, &cfg, &sim_cfg, "artifacts", 3)
+        .expect("xla backend — run `make artifacts`");
+    // Warmup (compile path already done at create; one step primes caches).
+    xla.train_step(&samples[0].x, samples[0].label, cfg.num_classes, 0.125);
+    let t0 = std::time::Instant::now();
+    for s in &samples {
+        xla.train_step(&s.x, s.label, cfg.num_classes, 0.125);
+    }
+    let xla_epoch = t0.elapsed().as_secs_f64() / steps as f64 * epoch_steps;
+
+    let speedup = xla_epoch / tinycl_epoch;
+    println!("measured over {steps} steps, scaled to the paper's 10,000-step epoch:");
+    println!(
+        "  TinyCL device   : {:.3} s/epoch   ({:.0} cycles/step @ {:.2} ns)",
+        tinycl_epoch, cycles_per_step, cost.clock_ns()
+    );
+    println!("  XLA CPU baseline: {xla_epoch:.3} s/epoch   (this host)");
+    println!("  speedup         : {speedup:.1}×");
+    println!("\npaper: 1.76 s vs 103 s on a P100 ⇒ 58× (their testbed; see EXPERIMENTS.md E4)");
+    println!("(simulator wall time for reference: {sim_wall:.2} s for {steps} steps)");
+
+    // Shape assertions: the device wins by a large factor, and its
+    // absolute epoch time lands on the paper's figure (same cycle count,
+    // same clock).
+    assert!((tinycl_epoch - 1.76).abs() < 0.3, "TinyCL epoch {tinycl_epoch} vs paper 1.76");
+    assert!(speedup > 5.0, "speedup {speedup} lost the paper's ordering");
+    println!("\nE4 PASS");
+}

@@ -1,0 +1,268 @@
+//! The replay memory — the paper's "Training Data Memory" (§III-E):
+//! a fixed budget of stored samples, kept class-balanced ("the cardinality
+//! of each training sample set must be equal, thus we avoid class
+//! imbalance problems"), updated "by replacing some samples of old classes
+//! with more samples of new classes".
+//!
+//! Two samplers:
+//! * [`SamplerKind::GreedyBalanced`] — GDumb's sampler [24]: admit until
+//!   the per-class quota is full; when a new class appears the quota
+//!   shrinks and the most-represented classes evict (deterministically,
+//!   oldest first).
+//! * [`SamplerKind::Reservoir`] — classic reservoir sampling used by
+//!   Experience Replay [21].
+//!
+//! The memory also meters its own off-chip traffic in 128-bit bursts so
+//! the energy model can charge GDumb sample movement (the 6.144 MB store
+//! lives off-die; see DESIGN.md).
+
+use crate::data::Sample;
+use crate::util::rng::Pcg32;
+
+/// Eviction/admission strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    GreedyBalanced,
+    Reservoir,
+}
+
+/// A budgeted sample store.
+pub struct ReplayMemory {
+    kind: SamplerKind,
+    capacity: usize,
+    slots: Vec<Sample>,
+    /// Total samples offered via [`Self::offer`] (reservoir denominator).
+    seen: u64,
+    rng: Pcg32,
+    /// Off-chip write traffic, 128-bit bursts.
+    pub write_bursts: u64,
+    /// Off-chip read traffic, 128-bit bursts.
+    pub read_bursts: u64,
+}
+
+impl ReplayMemory {
+    pub fn new(kind: SamplerKind, capacity: usize, seed: u64) -> ReplayMemory {
+        assert!(capacity > 0);
+        ReplayMemory {
+            kind,
+            capacity,
+            slots: Vec::with_capacity(capacity),
+            seen: 0,
+            rng: Pcg32::new(seed, 0xC1),
+            write_bursts: 0,
+            read_bursts: 0,
+        }
+    }
+
+    /// The paper's memory: 6.144 MB = 1000 samples of 32×32 RGB at 16 bit.
+    pub fn paper(kind: SamplerKind, seed: u64) -> ReplayMemory {
+        ReplayMemory::new(kind, 1000, seed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.slots
+    }
+
+    /// 128-bit bursts needed to move one sample (CHW 16-bit values).
+    fn bursts_per_sample(s: &Sample) -> u64 {
+        (s.x.shape().numel() as u64 * 16).div_ceil(128)
+    }
+
+    /// Count of stored samples per class label.
+    pub fn class_counts(&self) -> std::collections::BTreeMap<usize, usize> {
+        let mut m = std::collections::BTreeMap::new();
+        for s in &self.slots {
+            *m.entry(s.label).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Offer one stream sample to the memory; it is stored or dropped
+    /// according to the sampler. Returns `true` if stored.
+    pub fn offer(&mut self, sample: &Sample) -> bool {
+        self.seen += 1;
+        match self.kind {
+            SamplerKind::GreedyBalanced => self.offer_greedy(sample),
+            SamplerKind::Reservoir => self.offer_reservoir(sample),
+        }
+    }
+
+    /// GDumb Alg. 1: admit if below capacity or if this class holds fewer
+    /// than the (shrinking) per-class quota; evict from the largest class.
+    fn offer_greedy(&mut self, sample: &Sample) -> bool {
+        let counts = self.class_counts();
+        let num_classes = counts.len() + usize::from(!counts.contains_key(&sample.label));
+        let quota = self.capacity / num_classes.max(1);
+        let mine = counts.get(&sample.label).copied().unwrap_or(0);
+
+        if self.slots.len() < self.capacity {
+            self.store(sample.clone());
+            return true;
+        }
+        if mine >= quota {
+            return false;
+        }
+        // Evict the oldest sample of the most-represented class.
+        let (&victim_class, _) = counts.iter().max_by_key(|&(_, n)| *n).unwrap();
+        if let Some(pos) = self.slots.iter().position(|s| s.label == victim_class) {
+            self.slots.remove(pos);
+        }
+        self.store(sample.clone());
+        true
+    }
+
+    fn offer_reservoir(&mut self, sample: &Sample) -> bool {
+        if self.slots.len() < self.capacity {
+            self.store(sample.clone());
+            return true;
+        }
+        let j = (self.rng.next_u64() % self.seen) as usize;
+        if j < self.capacity {
+            self.write_bursts += Self::bursts_per_sample(sample);
+            self.slots[j] = sample.clone();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn store(&mut self, sample: Sample) {
+        self.write_bursts += Self::bursts_per_sample(&sample);
+        self.slots.push(sample);
+    }
+
+    /// Read the whole memory in a shuffled order (one GDumb training
+    /// epoch), charging read traffic.
+    pub fn epoch(&mut self, seed: u64) -> Vec<Sample> {
+        let mut order: Vec<usize> = (0..self.slots.len()).collect();
+        let mut rng = Pcg32::new(seed, 0xE0);
+        rng.shuffle(&mut order);
+        let out: Vec<Sample> = order.iter().map(|&i| self.slots[i].clone()).collect();
+        self.read_bursts += out.iter().map(Self::bursts_per_sample).sum::<u64>();
+        out
+    }
+
+    /// Draw `k` random stored samples (ER's replay draw), charging reads.
+    pub fn draw(&mut self, k: usize) -> Vec<Sample> {
+        let k = k.min(self.slots.len());
+        let idx = self.rng.sample_indices(self.slots.len(), k);
+        let out: Vec<Sample> = idx.iter().map(|&i| self.slots[i].clone()).collect();
+        self.read_bursts += out.iter().map(Self::bursts_per_sample).sum::<u64>();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Shape, Tensor};
+
+    fn sample(label: usize, tag: f32) -> Sample {
+        Sample { x: Tensor::from_vec(Shape::d3(1, 2, 2), vec![tag; 4]), label }
+    }
+
+    #[test]
+    fn greedy_fills_to_capacity() {
+        let mut m = ReplayMemory::new(SamplerKind::GreedyBalanced, 10, 1);
+        for i in 0..10 {
+            assert!(m.offer(&sample(0, i as f32)));
+        }
+        assert_eq!(m.len(), 10);
+    }
+
+    #[test]
+    fn greedy_rebalances_on_new_class() {
+        let mut m = ReplayMemory::new(SamplerKind::GreedyBalanced, 10, 1);
+        for i in 0..10 {
+            m.offer(&sample(0, i as f32));
+        }
+        // New class arrives: quota becomes 5 per class; class-1 samples
+        // must displace class-0 ones.
+        for i in 0..5 {
+            assert!(m.offer(&sample(1, 100.0 + i as f32)), "class 1 sample {i} rejected");
+        }
+        let counts = m.class_counts();
+        assert_eq!(counts[&0], 5);
+        assert_eq!(counts[&1], 5);
+        // Quota reached: further class-1 samples rejected.
+        assert!(!m.offer(&sample(1, 999.0)));
+    }
+
+    #[test]
+    fn greedy_balanced_across_paper_stream() {
+        // 5 tasks × 2 classes arriving sequentially: final memory must be
+        // near-perfectly balanced (paper: "cardinality … must be equal").
+        let mut m = ReplayMemory::new(SamplerKind::GreedyBalanced, 100, 2);
+        for class in 0..10 {
+            for i in 0..50 {
+                m.offer(&sample(class, i as f32));
+            }
+        }
+        let counts = m.class_counts();
+        assert_eq!(counts.len(), 10);
+        for (&c, &n) in &counts {
+            assert_eq!(n, 10, "class {c} has {n} ≠ 10");
+        }
+    }
+
+    #[test]
+    fn reservoir_keeps_capacity_and_mixes() {
+        let mut m = ReplayMemory::new(SamplerKind::Reservoir, 50, 3);
+        for class in 0..5 {
+            for i in 0..100 {
+                m.offer(&sample(class, i as f32));
+            }
+        }
+        assert_eq!(m.len(), 50);
+        // Every class should retain some representation w.h.p.
+        let counts = m.class_counts();
+        assert!(counts.len() >= 4, "reservoir collapsed: {counts:?}");
+    }
+
+    #[test]
+    fn traffic_metered() {
+        let mut m = ReplayMemory::new(SamplerKind::GreedyBalanced, 4, 4);
+        for i in 0..4 {
+            m.offer(&sample(0, i as f32));
+        }
+        // 4 values × 16 b = 64 b → 1 burst per sample.
+        assert_eq!(m.write_bursts, 4);
+        let _ = m.epoch(0);
+        assert_eq!(m.read_bursts, 4);
+        let _ = m.draw(2);
+        assert_eq!(m.read_bursts, 6);
+    }
+
+    #[test]
+    fn epoch_is_a_permutation() {
+        let mut m = ReplayMemory::new(SamplerKind::GreedyBalanced, 8, 5);
+        for i in 0..8 {
+            m.offer(&sample(i % 2, i as f32));
+        }
+        let e = m.epoch(9);
+        assert_eq!(e.len(), 8);
+        let mut tags: Vec<i32> = e.iter().map(|s| s.x.data()[0] as i32).collect();
+        tags.sort_unstable();
+        assert_eq!(tags, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn paper_capacity_is_1000() {
+        let m = ReplayMemory::paper(SamplerKind::GreedyBalanced, 0);
+        assert_eq!(m.capacity(), 1000);
+        // 6.144 MB / (32×32×3 × 2 B) = 1000 exactly.
+        assert_eq!(6_144_000 / (32 * 32 * 3 * 2), 1000);
+    }
+}

@@ -1,0 +1,183 @@
+//! Standard continual-learning metrics over the task-accuracy matrix.
+//!
+//! `R[i][j]` = accuracy on task `j`'s test set after finishing training
+//! task `i`. From it: average final accuracy, backward transfer (BWT,
+//! Lopez-Paz & Ranzato [18]) and the forgetting measure (Chaudhry et
+//! al. [19]) — the quantities CF-avoidance policies are judged on.
+
+use std::fmt;
+
+/// Lower-triangular accuracy matrix filled task by task.
+#[derive(Clone, Debug)]
+pub struct AccuracyMatrix {
+    /// `r[i][j]` for `j <= i`.
+    r: Vec<Vec<f64>>,
+    num_tasks: usize,
+}
+
+impl AccuracyMatrix {
+    pub fn new(num_tasks: usize) -> AccuracyMatrix {
+        AccuracyMatrix { r: Vec::with_capacity(num_tasks), num_tasks }
+    }
+
+    /// Record the accuracy row after finishing task `i`: one entry per
+    /// task `0..=i`.
+    pub fn push_row(&mut self, row: Vec<f64>) {
+        assert_eq!(row.len(), self.r.len() + 1, "row must cover tasks 0..=i");
+        assert!(self.r.len() < self.num_tasks, "matrix already complete");
+        assert!(row.iter().all(|a| (0.0..=1.0).contains(a)));
+        self.r.push(row);
+    }
+
+    pub fn rows_filled(&self) -> usize {
+        self.r.len()
+    }
+
+    pub fn at(&self, after_task: usize, on_task: usize) -> f64 {
+        self.r[after_task][on_task]
+    }
+
+    /// Average accuracy over all seen tasks after the last trained task.
+    pub fn final_average(&self) -> f64 {
+        let last = self.r.last().expect("empty matrix");
+        last.iter().sum::<f64>() / last.len() as f64
+    }
+
+    /// Backward transfer: mean over tasks j < T of `R[T][j] − R[j][j]`.
+    /// Negative BWT = forgetting.
+    pub fn backward_transfer(&self) -> f64 {
+        let t = self.r.len();
+        if t < 2 {
+            return 0.0;
+        }
+        let last = &self.r[t - 1];
+        let sum: f64 = (0..t - 1).map(|j| last[j] - self.r[j][j]).sum();
+        sum / (t - 1) as f64
+    }
+
+    /// Forgetting measure: mean over tasks j < T of
+    /// `max_{i<T} R[i][j] − R[T][j]` (always ≥ 0 up to noise).
+    pub fn forgetting(&self) -> f64 {
+        let t = self.r.len();
+        if t < 2 {
+            return 0.0;
+        }
+        let last = &self.r[t - 1];
+        let sum: f64 = (0..t - 1)
+            .map(|j| {
+                let best = (j..t - 1).map(|i| self.r[i][j]).fold(f64::MIN, f64::max);
+                best - last[j]
+            })
+            .sum();
+        sum / (t - 1) as f64
+    }
+}
+
+impl fmt::Display for AccuracyMatrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:>8}", "after\\on")?;
+        for j in 0..self.r.len() {
+            write!(f, " {:>6}", format!("T{j}"))?;
+        }
+        writeln!(f)?;
+        for (i, row) in self.r.iter().enumerate() {
+            write!(f, "{:>8}", format!("T{i}"))?;
+            for a in row {
+                write!(f, " {:>6.3}", a)?;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+/// Summary of one CL run.
+#[derive(Clone, Debug)]
+pub struct ClReport {
+    pub policy: String,
+    pub matrix: AccuracyMatrix,
+    /// Train-step count over the whole run (drives latency/energy).
+    pub train_steps: u64,
+    /// Replay-memory traffic in 128-bit bursts (reads, writes).
+    pub replay_bursts: (u64, u64),
+}
+
+impl ClReport {
+    pub fn final_average(&self) -> f64 {
+        self.matrix.final_average()
+    }
+}
+
+impl fmt::Display for ClReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "policy: {}", self.policy)?;
+        write!(f, "{}", self.matrix)?;
+        writeln!(
+            f,
+            "avg acc: {:.3}  BWT: {:+.3}  forgetting: {:.3}  steps: {}",
+            self.matrix.final_average(),
+            self.matrix.backward_transfer(),
+            self.matrix.forgetting(),
+            self.train_steps
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matrix(rows: &[&[f64]]) -> AccuracyMatrix {
+        let mut m = AccuracyMatrix::new(rows.len());
+        for r in rows {
+            m.push_row(r.to_vec());
+        }
+        m
+    }
+
+    #[test]
+    fn perfect_memory_no_forgetting() {
+        let m = matrix(&[&[0.9], &[0.9, 0.8], &[0.9, 0.8, 0.85]]);
+        assert!((m.final_average() - 0.85).abs() < 1e-12);
+        assert_eq!(m.backward_transfer(), 0.0);
+        assert_eq!(m.forgetting(), 0.0);
+    }
+
+    #[test]
+    fn catastrophic_forgetting_detected() {
+        let m = matrix(&[&[0.95], &[0.10, 0.95]]);
+        assert!(m.backward_transfer() < -0.8);
+        assert!(m.forgetting() > 0.8);
+    }
+
+    #[test]
+    fn forgetting_uses_best_intermediate() {
+        // Task 0 accuracy peaks after task 1, then collapses.
+        let m = matrix(&[&[0.5], &[0.9, 0.9], &[0.1, 0.9, 0.9]]);
+        // best over i<2 for j=0 is 0.9 → forgetting contribution 0.8.
+        assert!((m.forgetting() - (0.8 + 0.0) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_task_degenerate() {
+        let m = matrix(&[&[0.7]]);
+        assert_eq!(m.backward_transfer(), 0.0);
+        assert_eq!(m.forgetting(), 0.0);
+        assert!((m.final_average() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "row must cover")]
+    fn wrong_row_length_rejected() {
+        let mut m = AccuracyMatrix::new(3);
+        m.push_row(vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn display_renders_triangle() {
+        let m = matrix(&[&[0.9], &[0.8, 0.7]]);
+        let s = format!("{m}");
+        assert!(s.contains("T0"));
+        assert!(s.contains("0.700"));
+    }
+}

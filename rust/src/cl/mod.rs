@@ -1,0 +1,70 @@
+//! Continual-learning policies and evaluation — the workload layer the
+//! paper's control unit exists to serve (§II-B, §III-E "Training Data
+//! Memory", §IV-A).
+//!
+//! The paper trains its Conv-Conv-Dense model over **5 tasks × 2 classes**
+//! of CIFAR-10 "following the GDumb approach [24]" with a 6.144 MB replay
+//! memory (1000 samples). We implement GDumb exactly, plus the baselines a
+//! CL evaluation needs to be interpretable:
+//! * [`policy::Gdumb`] — greedy class-balanced sampler + train-from-scratch
+//!   dumb learner (the paper's policy);
+//! * [`policy::ExperienceReplay`] — interleaves new samples with reservoir
+//!   replay (no re-init) [21];
+//! * [`policy::NaiveFinetune`] — lower bound: no memory, full forgetting;
+//! * [`policy::JointUpperBound`] — trains on everything seen (oracle).
+//!
+//! Policies are generic over a [`Learner`] so the same algorithm runs on
+//! any backend: the f32 reference, the bit-exact Q4.12 model, the
+//! cycle-accurate device, or the AOT-compiled XLA executable (see
+//! `coordinator`).
+
+pub mod memory;
+pub mod metrics;
+pub mod policy;
+pub mod stream;
+
+pub use memory::{ReplayMemory, SamplerKind};
+pub use metrics::{AccuracyMatrix, ClReport};
+pub use policy::{
+    ClPolicy, ExperienceReplay, Gdumb, JointUpperBound, NaiveFinetune, PolicyKind, RunConfig,
+};
+pub use stream::{Task, TaskStream};
+
+use crate::tensor::Tensor;
+
+/// A trainable classifier backend. `active_classes` masks the head to the
+/// classes seen so far — the paper's dense layer "output features' value
+/// … is not static and changes during the operation" (§III-F-4).
+pub trait Learner {
+    /// One SGD step on a single sample (the paper trains at batch 1).
+    /// Returns the loss.
+    fn train_step(&mut self, x: &Tensor<f32>, label: usize, active_classes: usize, lr: f32)
+        -> f32;
+
+    /// Predicted class among the first `active_classes`.
+    fn predict(&mut self, x: &Tensor<f32>, active_classes: usize) -> usize;
+
+    /// Re-initialize parameters (GDumb's "dumb learner" trains from
+    /// scratch for every query). Deterministic in `seed`.
+    fn reinit(&mut self, seed: u64);
+}
+
+impl Learner for crate::nn::Model {
+    fn train_step(
+        &mut self,
+        x: &Tensor<f32>,
+        label: usize,
+        active_classes: usize,
+        lr: f32,
+    ) -> f32 {
+        crate::nn::Model::train_step(self, x, label, active_classes, lr).loss
+    }
+
+    fn predict(&mut self, x: &Tensor<f32>, active_classes: usize) -> usize {
+        crate::nn::Model::predict(self, x, active_classes)
+    }
+
+    fn reinit(&mut self, seed: u64) {
+        *self = crate::nn::Model::new(self.config.clone(), seed);
+    }
+}

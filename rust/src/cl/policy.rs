@@ -1,0 +1,432 @@
+//! The CL policies and the task-stream runner.
+//!
+//! All policies see the same interface: a [`Task`]'s samples arrive once,
+//! in stream order, and the policy decides what the learner trains on.
+//! After each task the runner evaluates every seen task's test subset and
+//! fills the [`AccuracyMatrix`].
+
+use super::memory::{ReplayMemory, SamplerKind};
+use super::metrics::{AccuracyMatrix, ClReport};
+use super::stream::{Task, TaskStream};
+use super::Learner;
+use crate::data::{Dataset, Sample};
+
+/// Hyper-parameters of one CL run (§IV-A: 10 epochs, lr 1, batch 1).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        // The paper trains "for 10 epochs, a learning rate of 1" — lr 1 is
+        // only stable in the Q4.12 datapath's saturating arithmetic; the
+        // float default uses a conventional rate (examples pass --lr 1 on
+        // the quantized backends to match the paper exactly).
+        RunConfig { epochs: 10, lr: 0.05, seed: 17 }
+    }
+}
+
+/// Which policy to instantiate (CLI/config surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Gdumb,
+    Er,
+    Naive,
+    Joint,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 4] =
+        [PolicyKind::Gdumb, PolicyKind::Er, PolicyKind::Naive, PolicyKind::Joint];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Gdumb => "gdumb",
+            PolicyKind::Er => "er",
+            PolicyKind::Naive => "naive",
+            PolicyKind::Joint => "joint",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        PolicyKind::ALL.into_iter().find(|p| p.name() == s)
+    }
+
+    pub fn build(self, memory_budget: usize, seed: u64) -> Box<dyn ClPolicy> {
+        match self {
+            PolicyKind::Gdumb => Box::new(Gdumb::new(memory_budget, seed)),
+            PolicyKind::Er => Box::new(ExperienceReplay::new(memory_budget, seed)),
+            PolicyKind::Naive => Box::new(NaiveFinetune::new()),
+            PolicyKind::Joint => Box::new(JointUpperBound::new()),
+        }
+    }
+}
+
+/// A continual-learning policy: consumes one task's stream and trains the
+/// learner. Object-safe so the coordinator can pick policies at runtime.
+pub trait ClPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Observe one task (samples arrive once, in order) and train.
+    /// Returns the number of train steps executed.
+    fn observe_task(
+        &mut self,
+        learner: &mut dyn Learner,
+        task: &Task,
+        dataset: &Dataset,
+        active_classes: usize,
+        cfg: &RunConfig,
+    ) -> u64;
+
+    /// Cumulative replay-memory traffic `(reads, writes)` in 128-bit
+    /// bursts (zero for memory-less policies).
+    fn replay_traffic(&self) -> (u64, u64) {
+        (0, 0)
+    }
+}
+
+/// GDumb [24]: greedily keep a class-balanced memory; after each task,
+/// re-initialize the learner ("dumb") and train from scratch on the
+/// memory only. This is the paper's policy (§IV-A).
+pub struct Gdumb {
+    pub memory: ReplayMemory,
+    reinit_counter: u64,
+}
+
+impl Gdumb {
+    pub fn new(budget: usize, seed: u64) -> Gdumb {
+        Gdumb { memory: ReplayMemory::new(SamplerKind::GreedyBalanced, budget, seed), reinit_counter: 0 }
+    }
+}
+
+impl ClPolicy for Gdumb {
+    fn name(&self) -> &'static str {
+        "gdumb"
+    }
+
+    fn observe_task(
+        &mut self,
+        learner: &mut dyn Learner,
+        task: &Task,
+        dataset: &Dataset,
+        active_classes: usize,
+        cfg: &RunConfig,
+    ) -> u64 {
+        for &i in &task.sample_indices {
+            self.memory.offer(&dataset.samples[i]);
+        }
+        // Dumb learner: from scratch on the (balanced) memory.
+        self.reinit_counter += 1;
+        learner.reinit(cfg.seed ^ (self.reinit_counter << 32));
+        let mut steps = 0;
+        for epoch in 0..cfg.epochs {
+            for s in self.memory.epoch(cfg.seed.wrapping_add(epoch as u64)) {
+                learner.train_step(&s.x, s.label, active_classes, cfg.lr);
+                steps += 1;
+            }
+        }
+        steps
+    }
+
+    fn replay_traffic(&self) -> (u64, u64) {
+        (self.memory.read_bursts, self.memory.write_bursts)
+    }
+}
+
+/// Experience Replay [21]: train on each arriving sample interleaved with
+/// one sample drawn from a reservoir memory; never re-initializes.
+pub struct ExperienceReplay {
+    pub memory: ReplayMemory,
+}
+
+impl ExperienceReplay {
+    pub fn new(budget: usize, seed: u64) -> ExperienceReplay {
+        ExperienceReplay { memory: ReplayMemory::new(SamplerKind::Reservoir, budget, seed) }
+    }
+}
+
+impl ClPolicy for ExperienceReplay {
+    fn name(&self) -> &'static str {
+        "er"
+    }
+
+    fn observe_task(
+        &mut self,
+        learner: &mut dyn Learner,
+        task: &Task,
+        dataset: &Dataset,
+        active_classes: usize,
+        cfg: &RunConfig,
+    ) -> u64 {
+        let mut steps = 0;
+        for _epoch in 0..cfg.epochs {
+            for &i in &task.sample_indices {
+                let s = &dataset.samples[i];
+                learner.train_step(&s.x, s.label, active_classes, cfg.lr);
+                steps += 1;
+                for r in self.memory.draw(1) {
+                    learner.train_step(&r.x, r.label, active_classes, cfg.lr);
+                    steps += 1;
+                }
+            }
+        }
+        // Admit after training so replay draws never contain the current
+        // task's own samples at full density (standard ER ordering keeps
+        // this per-sample; per-task admission is equivalent under our
+        // single-pass offer and keeps the reservoir denominator exact).
+        for &i in &task.sample_indices {
+            self.memory.offer(&dataset.samples[i]);
+        }
+        steps
+    }
+
+    fn replay_traffic(&self) -> (u64, u64) {
+        (self.memory.read_bursts, self.memory.write_bursts)
+    }
+}
+
+/// Naive fine-tuning: train on the new task only — the catastrophic-
+/// forgetting lower bound every CL paper measures against.
+pub struct NaiveFinetune;
+
+impl NaiveFinetune {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> NaiveFinetune {
+        NaiveFinetune
+    }
+}
+
+impl ClPolicy for NaiveFinetune {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn observe_task(
+        &mut self,
+        learner: &mut dyn Learner,
+        task: &Task,
+        dataset: &Dataset,
+        active_classes: usize,
+        cfg: &RunConfig,
+    ) -> u64 {
+        let mut steps = 0;
+        for _ in 0..cfg.epochs {
+            for &i in &task.sample_indices {
+                let s = &dataset.samples[i];
+                learner.train_step(&s.x, s.label, active_classes, cfg.lr);
+                steps += 1;
+            }
+        }
+        steps
+    }
+}
+
+/// Joint training on everything seen so far (from scratch per task) —
+/// the no-forgetting upper bound (unbounded memory).
+pub struct JointUpperBound {
+    seen: Vec<Sample>,
+    reinit_counter: u64,
+}
+
+impl JointUpperBound {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> JointUpperBound {
+        JointUpperBound { seen: Vec::new(), reinit_counter: 0 }
+    }
+}
+
+impl ClPolicy for JointUpperBound {
+    fn name(&self) -> &'static str {
+        "joint"
+    }
+
+    fn observe_task(
+        &mut self,
+        learner: &mut dyn Learner,
+        task: &Task,
+        dataset: &Dataset,
+        active_classes: usize,
+        cfg: &RunConfig,
+    ) -> u64 {
+        self.seen.extend(task.sample_indices.iter().map(|&i| dataset.samples[i].clone()));
+        self.reinit_counter += 1;
+        learner.reinit(cfg.seed ^ (self.reinit_counter << 24));
+        let mut order: Vec<usize> = (0..self.seen.len()).collect();
+        let mut rng = crate::util::rng::Pcg32::new(cfg.seed, 0x10 + task.id as u64);
+        let mut steps = 0;
+        for _ in 0..cfg.epochs {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let s = &self.seen[i];
+                learner.train_step(&s.x, s.label, active_classes, cfg.lr);
+                steps += 1;
+            }
+        }
+        steps
+    }
+}
+
+/// Accuracy of `learner` on the test subset of `task`, head masked to
+/// `active_classes`.
+pub fn evaluate(
+    learner: &mut dyn Learner,
+    task: &Task,
+    test: &Dataset,
+    active_classes: usize,
+) -> f64 {
+    let subset = test.task_subset(&task.classes);
+    assert!(!subset.is_empty(), "empty test subset for task {}", task.id);
+    let correct = subset
+        .iter()
+        .filter(|s| learner.predict(&s.x, active_classes) == s.label)
+        .count();
+    correct as f64 / subset.len() as f64
+}
+
+/// Run a whole CL experiment: stream the tasks through the policy,
+/// evaluating after each task. The paper's E5 driver.
+pub fn run_stream(
+    policy: &mut dyn ClPolicy,
+    learner: &mut dyn Learner,
+    stream: &TaskStream,
+    train: &Dataset,
+    test: &Dataset,
+    cfg: &RunConfig,
+) -> ClReport {
+    let mut matrix = AccuracyMatrix::new(stream.num_tasks());
+    let mut train_steps = 0;
+    for (t, task) in stream.tasks.iter().enumerate() {
+        let active = stream.active_classes_after(t);
+        train_steps += policy.observe_task(learner, task, train, active, cfg);
+        let row: Vec<f64> = stream.tasks[..=t]
+            .iter()
+            .map(|seen| evaluate(learner, seen, test, active))
+            .collect();
+        matrix.push_row(row);
+    }
+    ClReport {
+        policy: policy.name().to_string(),
+        matrix,
+        train_steps,
+        replay_bursts: {
+            let (r, w) = policy.replay_traffic();
+            (r, w)
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticCifar;
+    use crate::nn::{Model, ModelConfig};
+
+    fn setup(per_class: usize) -> (Dataset, Dataset, TaskStream, Model) {
+        let gen = SyntheticCifar { image_size: 16, ..Default::default() };
+        let train = gen.generate(per_class, 0);
+        let test = gen.generate(4, 1);
+        let stream = TaskStream::paper(&train, 5);
+        let cfg = ModelConfig {
+            in_channels: 3,
+            image_size: 16,
+            conv_channels: 4,
+            num_classes: 10,
+            grad_clip: 1.0,
+        };
+        let model = Model::new(cfg, 77);
+        (train, test, stream, model)
+    }
+
+    fn quick_cfg() -> RunConfig {
+        RunConfig { epochs: 3, lr: 0.05, seed: 5 }
+    }
+
+    #[test]
+    fn gdumb_learns_all_tasks_above_chance() {
+        let (train, test, stream, mut model) = setup(12);
+        let mut policy = Gdumb::new(60, 1);
+        let report = run_stream(&mut policy, &mut model, &stream, &train, &test, &quick_cfg());
+        assert_eq!(report.matrix.rows_filled(), 5);
+        // 10-way chance is 0.1; GDumb's balanced memory should beat it
+        // clearly on the final average.
+        assert!(
+            report.final_average() > 0.25,
+            "gdumb avg {:.3} not above chance\n{}",
+            report.final_average(),
+            report
+        );
+    }
+
+    #[test]
+    fn naive_forgets_more_than_gdumb() {
+        let (train, test, stream, mut model) = setup(12);
+        let cfg = quick_cfg();
+        let mut gdumb = Gdumb::new(60, 1);
+        let g = run_stream(&mut gdumb, &mut model, &stream, &train, &test, &cfg);
+        model.reinit(77);
+        let mut naive = NaiveFinetune::new();
+        let n = run_stream(&mut naive, &mut model, &stream, &train, &test, &cfg);
+        assert!(
+            n.matrix.forgetting() > g.matrix.forgetting(),
+            "naive forgetting {:.3} <= gdumb {:.3}",
+            n.matrix.forgetting(),
+            g.matrix.forgetting()
+        );
+    }
+
+    #[test]
+    fn joint_upper_bounds_naive() {
+        let (train, test, stream, mut model) = setup(10);
+        let cfg = quick_cfg();
+        let mut joint = JointUpperBound::new();
+        let j = run_stream(&mut joint, &mut model, &stream, &train, &test, &cfg);
+        model.reinit(77);
+        let mut naive = NaiveFinetune::new();
+        let n = run_stream(&mut naive, &mut model, &stream, &train, &test, &cfg);
+        assert!(
+            j.final_average() > n.final_average(),
+            "joint {:.3} <= naive {:.3}",
+            j.final_average(),
+            n.final_average()
+        );
+    }
+
+    #[test]
+    fn er_tracks_memory_traffic() {
+        let (train, test, stream, mut model) = setup(6);
+        let mut er = ExperienceReplay::new(30, 2);
+        let report = run_stream(&mut er, &mut model, &stream, &train, &test, &quick_cfg());
+        let (reads, writes) = report.replay_bursts;
+        assert!(writes > 0, "ER never wrote to memory");
+        assert!(reads > 0, "ER never replayed");
+    }
+
+    #[test]
+    fn step_counts_match_policy_semantics() {
+        let (train, test, stream, mut model) = setup(6);
+        let cfg = quick_cfg();
+        // Naive: epochs × samples-per-task × tasks.
+        let mut naive = NaiveFinetune::new();
+        let n = run_stream(&mut naive, &mut model, &stream, &train, &test, &cfg);
+        assert_eq!(n.train_steps, (cfg.epochs * 12 * 5) as u64);
+        // GDumb: epochs × memory-size after each task.
+        model.reinit(1);
+        let mut gdumb = Gdumb::new(1000, 3);
+        let g = run_stream(&mut gdumb, &mut model, &stream, &train, &test, &cfg);
+        // Memory never exceeds the seen sample count here (60 < 1000):
+        // after task t, memory = 12(t+1) samples.
+        let expect: u64 = (1..=5).map(|t| (cfg.epochs * 12 * t) as u64).sum();
+        assert_eq!(g.train_steps, expect);
+    }
+
+    #[test]
+    fn policy_kind_roundtrip() {
+        for k in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PolicyKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,120 @@
+//! Class-incremental task streams (§IV-A: 5 tasks × 2 classes).
+
+use crate::data::Dataset;
+use crate::util::rng::Pcg32;
+
+/// One task: a set of classes and the indices of its training samples.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: usize,
+    pub classes: Vec<usize>,
+    /// Indices into the stream's dataset, in arrival order.
+    pub sample_indices: Vec<usize>,
+}
+
+/// A class-incremental split of a dataset into tasks.
+#[derive(Clone, Debug)]
+pub struct TaskStream {
+    pub tasks: Vec<Task>,
+    pub num_classes: usize,
+}
+
+impl TaskStream {
+    /// Split `dataset` into `num_tasks` tasks of consecutive classes
+    /// (task 0 = classes 0..k, task 1 = k..2k, …), shuffling each task's
+    /// arrival order deterministically in `seed`.
+    pub fn class_incremental(dataset: &Dataset, num_tasks: usize, seed: u64) -> TaskStream {
+        assert!(num_tasks > 0 && dataset.num_classes % num_tasks == 0,
+            "{} classes cannot split into {num_tasks} equal tasks", dataset.num_classes);
+        let per_task = dataset.num_classes / num_tasks;
+        let tasks = (0..num_tasks)
+            .map(|id| {
+                let classes: Vec<usize> = (id * per_task..(id + 1) * per_task).collect();
+                let mut idx: Vec<usize> = classes
+                    .iter()
+                    .flat_map(|&c| dataset.class_indices(c).iter().copied())
+                    .collect();
+                let mut rng = Pcg32::new(seed, id as u64 + 1);
+                rng.shuffle(&mut idx);
+                Task { id, classes, sample_indices: idx }
+            })
+            .collect();
+        TaskStream { tasks, num_classes: dataset.num_classes }
+    }
+
+    /// The paper's setup: 5 tasks × 2 classes.
+    pub fn paper(dataset: &Dataset, seed: u64) -> TaskStream {
+        TaskStream::class_incremental(dataset, 5, seed)
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Number of classes visible after finishing task `t` (inclusive) —
+    /// the dense head's dynamic output size.
+    pub fn active_classes_after(&self, t: usize) -> usize {
+        self.tasks[..=t].iter().map(|task| task.classes.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticCifar;
+
+    fn tiny_dataset() -> Dataset {
+        SyntheticCifar { image_size: 8, ..Default::default() }.generate(6, 0)
+    }
+
+    #[test]
+    fn paper_split_is_5x2() {
+        let d = tiny_dataset();
+        let s = TaskStream::paper(&d, 1);
+        assert_eq!(s.num_tasks(), 5);
+        for (i, t) in s.tasks.iter().enumerate() {
+            assert_eq!(t.classes, vec![2 * i, 2 * i + 1]);
+            assert_eq!(t.sample_indices.len(), 12);
+        }
+        assert_eq!(s.active_classes_after(0), 2);
+        assert_eq!(s.active_classes_after(4), 10);
+    }
+
+    #[test]
+    fn tasks_partition_the_dataset() {
+        let d = tiny_dataset();
+        let s = TaskStream::paper(&d, 1);
+        let mut seen: Vec<usize> = s.tasks.iter().flat_map(|t| t.sample_indices.clone()).collect();
+        seen.sort_unstable();
+        let expect: Vec<usize> = (0..d.len()).collect();
+        assert_eq!(seen, expect);
+    }
+
+    #[test]
+    fn samples_match_their_task_classes() {
+        let d = tiny_dataset();
+        let s = TaskStream::class_incremental(&d, 2, 3);
+        for t in &s.tasks {
+            for &i in &t.sample_indices {
+                assert!(t.classes.contains(&d.samples[i].label));
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_depends_on_seed_only() {
+        let d = tiny_dataset();
+        let a = TaskStream::paper(&d, 7);
+        let b = TaskStream::paper(&d, 7);
+        let c = TaskStream::paper(&d, 8);
+        assert_eq!(a.tasks[0].sample_indices, b.tasks[0].sample_indices);
+        assert_ne!(a.tasks[0].sample_indices, c.tasks[0].sample_indices);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot split")]
+    fn uneven_split_rejected() {
+        let d = tiny_dataset();
+        let _ = TaskStream::class_incremental(&d, 3, 0);
+    }
+}

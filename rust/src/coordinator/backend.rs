@@ -1,0 +1,315 @@
+//! Interchangeable execution backends for the CL workload.
+//!
+//! The same [`crate::cl::Learner`] interface runs on four engines:
+//!
+//! | backend | engine | role in the paper |
+//! |---------|--------|-------------------|
+//! | `f32`   | `nn::Model` (pure Rust float) | algorithmic reference |
+//! | `qnn`   | `qnn::QModel` (bit-exact Q4.12) | what the RTL computes |
+//! | `sim`   | `sim::TinyClDevice` (cycle-accurate) | the TinyCL chip (§III) |
+//! | `xla`   | `runtime::XlaModel` (AOT JAX/Pallas via PJRT) | the "software-level implementation" baseline (§IV-C) |
+//!
+//! All four are initialized from the *same* float parameters (quantized
+//! where needed), so cross-backend comparisons isolate the datapath, not
+//! the init.
+
+use crate::cl::Learner;
+use crate::fixed::Fx;
+use crate::nn::{Model, ModelConfig};
+use crate::qnn::QModel;
+use crate::runtime::{ArtifactSet, XlaModel, XlaRuntime};
+use crate::sim::{RunStats, SimConfig, TinyClDevice};
+use crate::tensor::{quantize_tensor, Tensor};
+use anyhow::{Context, Result};
+
+/// Backend selector (CLI surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    F32,
+    Qnn,
+    Sim,
+    Xla,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 4] =
+        [BackendKind::F32, BackendKind::Qnn, BackendKind::Sim, BackendKind::Xla];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::F32 => "f32",
+            BackendKind::Qnn => "qnn",
+            BackendKind::Sim => "sim",
+            BackendKind::Xla => "xla",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        BackendKind::ALL.into_iter().find(|b| b.name() == s)
+    }
+}
+
+/// A running backend instance.
+pub enum Backend {
+    F32(Model),
+    Qnn { model: QModel, config: ModelConfig },
+    Sim { dev: TinyClDevice, train_stats: RunStats, infer_stats: RunStats },
+    Xla { model: XlaModel },
+}
+
+impl Backend {
+    /// Build a backend seeded with `Model::new(config, seed)` parameters.
+    /// `artifacts_dir` is only consulted for [`BackendKind::Xla`].
+    pub fn create(
+        kind: BackendKind,
+        config: &ModelConfig,
+        sim_cfg: &SimConfig,
+        artifacts_dir: &str,
+        seed: u64,
+    ) -> Result<Backend> {
+        let float = Model::new(config.clone(), seed);
+        Ok(match kind {
+            BackendKind::F32 => Backend::F32(float),
+            BackendKind::Qnn => {
+                Backend::Qnn { model: QModel::from_model(&float), config: config.clone() }
+            }
+            BackendKind::Sim => {
+                let mut dev = TinyClDevice::new(sim_cfg.clone(), config.clone());
+                dev.load_params(&QModel::from_model(&float).params);
+                Backend::Sim {
+                    dev,
+                    train_stats: RunStats::default(),
+                    infer_stats: RunStats::default(),
+                }
+            }
+            BackendKind::Xla => {
+                let rt = XlaRuntime::cpu().context("creating PJRT client")?;
+                // Artifacts are compiled for fixed geometries; match on
+                // geometry only (grad_clip etc. are host-side concerns).
+                let geom = (
+                    config.in_channels,
+                    config.image_size,
+                    config.conv_channels,
+                    config.num_classes,
+                );
+                let set = match geom {
+                    (3, 32, 8, 10) => ArtifactSet::paper(artifacts_dir),
+                    (3, 8, 4, 4) => ArtifactSet::tiny(artifacts_dir),
+                    _ => anyhow::bail!(
+                        "no AOT artifact for geometry {geom:?} — \
+                         add it to python/compile/aot.py and re-run `make artifacts`"
+                    ),
+                };
+                let mut model = rt.load_model(&set, config.clone())?;
+                model.set_params(&float.params)?;
+                Backend::Xla { model }
+            }
+        })
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            Backend::F32(_) => BackendKind::F32,
+            Backend::Qnn { .. } => BackendKind::Qnn,
+            Backend::Sim { .. } => BackendKind::Sim,
+            Backend::Xla { .. } => BackendKind::Xla,
+        }
+    }
+
+    /// Accumulated device activity (`sim` backend only): training and
+    /// inference windows, separately.
+    pub fn sim_stats(&self) -> Option<(&RunStats, &RunStats)> {
+        match self {
+            Backend::Sim { train_stats, infer_stats, .. } => Some((train_stats, infer_stats)),
+            _ => None,
+        }
+    }
+
+    /// The simulated device (`sim` backend only).
+    pub fn device(&self) -> Option<&TinyClDevice> {
+        match self {
+            Backend::Sim { dev, .. } => Some(dev),
+            _ => None,
+        }
+    }
+
+    /// Reset the sim backend's activity counters.
+    pub fn reset_sim_stats(&mut self) {
+        if let Backend::Sim { dev, train_stats, infer_stats } = self {
+            *train_stats = RunStats::default();
+            *infer_stats = RunStats::default();
+            dev.reset_counters();
+        }
+    }
+}
+
+impl Learner for Backend {
+    fn train_step(
+        &mut self,
+        x: &Tensor<f32>,
+        label: usize,
+        active_classes: usize,
+        lr: f32,
+    ) -> f32 {
+        match self {
+            Backend::F32(m) => m.train_step(x, label, active_classes, lr).loss,
+            Backend::Qnn { model, .. } => {
+                let xq = quantize_tensor(x);
+                model.train_step(&xq, label, active_classes, Fx::from_f32(lr)).0
+            }
+            Backend::Sim { dev, train_stats, .. } => {
+                let xq = quantize_tensor(x);
+                let (loss, _, run) = dev.train_step(&xq, label, active_classes, Fx::from_f32(lr));
+                train_stats.merge(&run);
+                loss
+            }
+            Backend::Xla { model } => model
+                .train_step(x, label, active_classes, lr)
+                .expect("xla train_step failed")
+                .0,
+        }
+    }
+
+    fn predict(&mut self, x: &Tensor<f32>, active_classes: usize) -> usize {
+        match self {
+            Backend::F32(m) => m.predict(x, active_classes),
+            Backend::Qnn { model, .. } => model.predict(&quantize_tensor(x), active_classes),
+            Backend::Sim { dev, infer_stats, .. } => {
+                let (logits, run) = dev.infer(&quantize_tensor(x));
+                infer_stats.merge(&run);
+                argmax_masked(&logits, active_classes)
+            }
+            Backend::Xla { model } => {
+                let logits = model.infer(x).expect("xla infer failed");
+                argmax_masked_f32(&logits, active_classes)
+            }
+        }
+    }
+
+    fn reinit(&mut self, seed: u64) {
+        match self {
+            Backend::F32(m) => *m = Model::new(m.config.clone(), seed),
+            Backend::Qnn { model, config } => {
+                *model = QModel::from_model(&Model::new(config.clone(), seed));
+            }
+            Backend::Sim { dev, .. } => {
+                let float = Model::new(dev.model_cfg.clone(), seed);
+                dev.load_params(&QModel::from_model(&float).params);
+            }
+            Backend::Xla { model } => {
+                let float = Model::new(model.config.clone(), seed);
+                model.set_params(&float.params).expect("xla set_params failed");
+            }
+        }
+    }
+}
+
+fn argmax_masked(logits: &[Fx], active: usize) -> usize {
+    logits
+        .iter()
+        .take(active)
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+fn argmax_masked_f32(logits: &[f32], active: usize) -> usize {
+    logits
+        .iter()
+        .take(active)
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            in_channels: 3,
+            image_size: 8,
+            conv_channels: 4,
+            num_classes: 4,
+            grad_clip: f32::INFINITY,
+        }
+    }
+
+    fn rand_image(seed: u64, cfg: &ModelConfig) -> Tensor<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        let shape = crate::tensor::Shape::d3(cfg.in_channels, cfg.image_size, cfg.image_size);
+        let n = shape.numel();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+    }
+
+    #[test]
+    fn backend_kind_roundtrip() {
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("gpu"), None);
+    }
+
+    #[test]
+    fn qnn_and_sim_backends_agree_bitwise() {
+        // The sim *is* the qnn datapath with timing; through the Learner
+        // interface they must produce identical losses and predictions.
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let mut q = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        let mut s = Backend::create(BackendKind::Sim, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        for step in 0..3 {
+            let x = rand_image(100 + step, &cfg);
+            let lq = q.train_step(&x, (step % 4) as usize, 4, 0.125);
+            let ls = s.train_step(&x, (step % 4) as usize, 4, 0.125);
+            assert_eq!(lq, ls, "loss diverged at step {step}");
+            let xe = rand_image(200 + step, &cfg);
+            assert_eq!(q.predict(&xe, 4), s.predict(&xe, 4), "prediction diverged");
+        }
+    }
+
+    #[test]
+    fn f32_and_qnn_losses_close() {
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let mut f = Backend::create(BackendKind::F32, &cfg, &sim_cfg, "artifacts", 7).unwrap();
+        let mut q = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 7).unwrap();
+        let x = rand_image(300, &cfg);
+        let lf = f.train_step(&x, 1, 4, 0.05);
+        let lq = q.train_step(&x, 1, 4, 0.05);
+        assert!((lf - lq).abs() < 0.15, "f32 {lf} vs qnn {lq}");
+    }
+
+    #[test]
+    fn sim_backend_accumulates_stats() {
+        let cfg = tiny_cfg();
+        let mut s =
+            Backend::create(BackendKind::Sim, &cfg, &SimConfig::paper(), "artifacts", 9).unwrap();
+        let x = rand_image(400, &cfg);
+        s.train_step(&x, 0, 4, 0.1);
+        s.predict(&x, 4);
+        let (train, infer) = s.sim_stats().unwrap();
+        assert!(train.cycles() > 0);
+        assert!(infer.cycles() > 0);
+        assert!(train.cycles() > infer.cycles(), "training must cost more than inference");
+        s.reset_sim_stats();
+        let (train, _) = s.sim_stats().unwrap();
+        assert_eq!(train.cycles(), 0);
+    }
+
+    #[test]
+    fn reinit_restores_determinism() {
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let mut a = Backend::create(BackendKind::F32, &cfg, &sim_cfg, "artifacts", 1).unwrap();
+        let x = rand_image(500, &cfg);
+        let l1 = a.train_step(&x, 0, 4, 0.1);
+        a.reinit(1);
+        let l2 = a.train_step(&x, 0, 4, 0.1);
+        assert_eq!(l1, l2);
+    }
+}

@@ -1,0 +1,300 @@
+//! Experiment driver: one CL run end-to-end, with device accounting.
+
+use super::backend::{Backend, BackendKind};
+use crate::cl::{self, PolicyKind, RunConfig, TaskStream};
+use crate::data::SyntheticCifar;
+use crate::hw::{CostModel, EnergyModel};
+use crate::nn::ModelConfig;
+use crate::sim::{RunStats, SimConfig};
+use crate::util::cli::Args;
+use anyhow::Result;
+use std::fmt;
+use std::time::Instant;
+
+/// Everything one experiment needs (mirrors the CLI surface).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub model: ModelConfig,
+    pub sim: SimConfig,
+    pub backend: BackendKind,
+    pub policy: PolicyKind,
+    pub num_tasks: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    /// Replay-memory budget in samples (paper: 1000).
+    pub memory_budget: usize,
+    pub train_per_class: usize,
+    pub test_per_class: usize,
+    pub noise: f32,
+    pub seed: u64,
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: ModelConfig::default(),
+            sim: SimConfig::paper(),
+            backend: BackendKind::F32,
+            policy: PolicyKind::Gdumb,
+            num_tasks: 5,
+            epochs: 10,
+            lr: 0.05,
+            memory_budget: 1000,
+            train_per_class: 100,
+            test_per_class: 20,
+            noise: 0.35,
+            seed: 17,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// The paper's §IV-A setup on the cycle-accurate device. `lr` 1.0 is
+    /// the paper's value; it is usable on the saturating Q4.12 backends.
+    pub fn paper() -> ExperimentConfig {
+        ExperimentConfig {
+            backend: BackendKind::Sim,
+            lr: 1.0,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    /// Parse from CLI flags (every field has a flag of the same name).
+    pub fn from_args(args: &Args) -> Result<ExperimentConfig> {
+        let d = ExperimentConfig::default();
+        let backend = {
+            let s = args.str_or("backend", d.backend.name());
+            BackendKind::parse(&s)
+                .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}' (f32|qnn|sim|xla)"))?
+        };
+        let policy = {
+            let s = args.str_or("policy", d.policy.name());
+            PolicyKind::parse(&s)
+                .ok_or_else(|| anyhow::anyhow!("unknown policy '{s}' (gdumb|er|naive|joint)"))?
+        };
+        let model = ModelConfig {
+            in_channels: 3,
+            image_size: args.usize_or("image-size", d.model.image_size),
+            conv_channels: args.usize_or("conv-channels", d.model.conv_channels),
+            num_classes: args.usize_or("classes", d.model.num_classes),
+            grad_clip: args.f32_or("grad-clip", 1.0),
+        };
+        let sim = SimConfig::paper()
+            .with_lanes(args.usize_or("lanes", 8))
+            .with_taps(args.usize_or("taps", 9));
+        Ok(ExperimentConfig {
+            model,
+            sim,
+            backend,
+            policy,
+            num_tasks: args.usize_or("tasks", d.num_tasks),
+            epochs: args.usize_or("epochs", d.epochs),
+            lr: args.f32_or("lr", d.lr),
+            memory_budget: args.usize_or("memory", d.memory_budget),
+            train_per_class: args.usize_or("per-class", d.train_per_class),
+            test_per_class: args.usize_or("test-per-class", d.test_per_class),
+            noise: args.f32_or("noise", d.noise),
+            seed: args.u64_or("seed", d.seed),
+            artifacts_dir: args.str_or("artifacts", &d.artifacts_dir),
+        })
+    }
+}
+
+/// Device-side accounting for a run on the `sim` backend.
+#[derive(Clone, Debug)]
+pub struct DeviceReport {
+    /// Training-window activity.
+    pub train: RunStats,
+    /// Evaluation-window activity.
+    pub infer: RunStats,
+    /// Seconds of training at the synthesized clock.
+    pub train_secs: f64,
+    /// Average power over the training window, mW.
+    pub power_mw: f64,
+    /// Training energy (on-die + replay traffic), µJ.
+    pub energy_uj: f64,
+}
+
+impl fmt::Display for DeviceReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "device: {} train cycles = {} at the synthesized clock, {:.1} mW avg, {:.1} µJ",
+            self.train.cycles(),
+            crate::util::stats::fmt_secs(self.train_secs),
+            self.power_mw,
+            self.energy_uj,
+        )?;
+        write!(f, "{}", self.train)
+    }
+}
+
+/// Result of one experiment.
+pub struct ExperimentResult {
+    pub config: ExperimentConfig,
+    pub report: cl::ClReport,
+    /// Host wall-clock of the whole run, seconds.
+    pub wall_secs: f64,
+    /// Device accounting (sim backend only).
+    pub device: Option<DeviceReport>,
+}
+
+impl fmt::Display for ExperimentResult {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "backend={} policy={} tasks={} epochs={} lr={} memory={}",
+            self.config.backend.name(),
+            self.config.policy.name(),
+            self.config.num_tasks,
+            self.config.epochs,
+            self.config.lr,
+            self.config.memory_budget
+        )?;
+        write!(f, "{}", self.report)?;
+        writeln!(f, "wall time: {:.2} s", self.wall_secs)?;
+        if let Some(d) = &self.device {
+            write!(f, "{d}")?;
+        }
+        Ok(())
+    }
+}
+
+/// One end-to-end CL experiment.
+pub struct Experiment {
+    pub config: ExperimentConfig,
+}
+
+impl Experiment {
+    pub fn new(config: ExperimentConfig) -> Experiment {
+        Experiment { config }
+    }
+
+    /// Build the backend (loads/compiles artifacts for `xla`).
+    pub fn backend(&self) -> Result<Backend> {
+        Backend::create(
+            self.config.backend,
+            &self.config.model,
+            &self.config.sim,
+            &self.config.artifacts_dir,
+            self.config.seed,
+        )
+    }
+
+    /// Run the full task stream; returns CL metrics + device accounting.
+    pub fn run(&self) -> Result<ExperimentResult> {
+        let cfg = &self.config;
+        let gen = SyntheticCifar {
+            image_size: cfg.model.image_size,
+            channels: cfg.model.in_channels,
+            num_classes: cfg.model.num_classes,
+            noise: cfg.noise,
+            seed: cfg.seed,
+        };
+        let train = gen.generate(cfg.train_per_class, 0);
+        let test = gen.generate(cfg.test_per_class, 1);
+        let stream = TaskStream::class_incremental(&train, cfg.num_tasks, cfg.seed);
+
+        let mut backend = self.backend()?;
+        let mut policy = cfg.policy.build(cfg.memory_budget, cfg.seed);
+        let run_cfg = RunConfig { epochs: cfg.epochs, lr: cfg.lr, seed: cfg.seed };
+
+        let t0 = Instant::now();
+        let report =
+            cl::policy::run_stream(policy.as_mut(), &mut backend, &stream, &train, &test, &run_cfg);
+        let wall_secs = t0.elapsed().as_secs_f64();
+
+        let device = backend.sim_stats().map(|(train_stats, infer_stats)| {
+            let cost = CostModel::for_design(&cfg.sim, &cfg.model);
+            let energy = EnergyModel::new(CostModel::for_design(&cfg.sim, &cfg.model));
+            let (replay_reads, replay_writes) = report.replay_bursts;
+            DeviceReport {
+                train: train_stats.clone(),
+                infer: infer_stats.clone(),
+                train_secs: train_stats.cycles() as f64 * cost.clock_ns() * 1e-9,
+                power_mw: cost.power_mw(train_stats).total(),
+                energy_uj: energy
+                    .report(train_stats, replay_reads + replay_writes)
+                    .total_uj(),
+            }
+        });
+
+        Ok(ExperimentResult { config: cfg.clone(), report, wall_secs, device })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_config(backend: BackendKind) -> ExperimentConfig {
+        ExperimentConfig {
+            model: ModelConfig {
+                in_channels: 3,
+                image_size: 8,
+                conv_channels: 4,
+                num_classes: 4,
+                grad_clip: 1.0,
+            },
+            backend,
+            policy: PolicyKind::Gdumb,
+            num_tasks: 2,
+            epochs: 2,
+            lr: 0.05,
+            memory_budget: 16,
+            train_per_class: 4,
+            test_per_class: 3,
+            ..ExperimentConfig::default()
+        }
+    }
+
+    #[test]
+    fn f32_experiment_completes() {
+        let r = Experiment::new(quick_config(BackendKind::F32)).run().unwrap();
+        assert_eq!(r.report.matrix.rows_filled(), 2);
+        assert!(r.device.is_none());
+        assert!(r.report.train_steps > 0);
+    }
+
+    #[test]
+    fn sim_experiment_reports_device() {
+        let r = Experiment::new(quick_config(BackendKind::Sim)).run().unwrap();
+        let d = r.device.expect("sim must report device stats");
+        assert!(d.train.cycles() > 0);
+        assert!(d.train_secs > 0.0);
+        assert!(d.power_mw > 0.0);
+        assert!(d.energy_uj > 0.0);
+        // Power must land in the physically plausible band for this chip.
+        assert!(d.power_mw < 200.0, "implausible power {}", d.power_mw);
+    }
+
+    #[test]
+    fn from_args_parses_flags() {
+        let args = Args::parse(
+            ["--backend", "sim", "--policy", "er", "--tasks", "2", "--lr", "0.5"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(c.backend, BackendKind::Sim);
+        assert_eq!(c.policy, PolicyKind::Er);
+        assert_eq!(c.num_tasks, 2);
+        assert_eq!(c.lr, 0.5);
+    }
+
+    #[test]
+    fn from_args_rejects_unknown_backend() {
+        let args = Args::parse(["--backend", "tpu"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn display_renders() {
+        let r = Experiment::new(quick_config(BackendKind::F32)).run().unwrap();
+        let s = format!("{r}");
+        assert!(s.contains("policy: gdumb"));
+        assert!(s.contains("wall time"));
+    }
+}

@@ -1,0 +1,17 @@
+//! The training coordinator — L3's top layer.
+//!
+//! Ties everything together: dataset generation, task streaming, policy
+//! selection, backend selection (f32 / qnn / cycle-accurate sim / AOT-XLA
+//! via PJRT), and reporting (CL metrics + device cycles → seconds at the
+//! synthesized clock → power/energy via the `hw` cost model).
+//!
+//! The paper's experiments map onto [`Experiment`] directly:
+//! * §IV-A CL run (E5): `backend=sim policy=gdumb tasks=5 epochs=10`
+//! * §IV-C speedup (E4): the same workload on `sim` vs `xla`, seconds
+//!   compared at the synthesized 3.87 ns clock vs wall time.
+
+pub mod backend;
+pub mod experiment;
+
+pub use backend::{Backend, BackendKind};
+pub use experiment::{DeviceReport, Experiment, ExperimentConfig, ExperimentResult};

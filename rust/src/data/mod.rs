@@ -1,0 +1,21 @@
+//! Dataset substrate.
+//!
+//! The paper trains on CIFAR-10; this environment has no network access,
+//! so we substitute a deterministic synthetic 32×32×3 10-class dataset
+//! (see DESIGN.md substitution table). What the CL experiments need from
+//! CIFAR-10 is: (a) 10 visually distinct classes, (b) enough within-class
+//! variation that memorization ≠ generalization, (c) class-incremental
+//! splits, (d) learnability by the paper's small Conv-Conv-Dense model.
+//! The generator provides all four with seeded, reproducible sampling.
+
+mod synthetic;
+
+pub use synthetic::{Dataset, Sample, SyntheticCifar};
+
+use crate::fixed::Fx;
+use crate::tensor::Tensor;
+
+/// Quantize a float sample into the accelerator's input domain.
+pub fn quantize_sample(x: &Tensor<f32>) -> Tensor<Fx> {
+    crate::tensor::quantize_tensor(x)
+}

@@ -1,0 +1,131 @@
+//! 32-bit accumulator domain (Q8.24) — the MAC adder number system.
+
+use super::{Fx, ACC_FRAC_BITS, FRAC_BITS};
+use std::fmt;
+
+/// Full-precision product/accumulator value: 32 bits, 24 fractional.
+///
+/// Models the paper's 32-bit adders fed by full-precision 16×16 products.
+/// Addition wraps exactly like a 32-bit two's-complement adder; the
+/// narrowing writeback (`to_fx`) is where round-to-nearest + saturation
+/// happen, matching §III-D.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Acc(i32);
+
+/// Right-shift amount for the Q8.24 → Q4.12 writeback.
+const WB_SHIFT: u32 = ACC_FRAC_BITS - FRAC_BITS; // 12
+/// Rounding increment: half of the writeback LSB.
+const WB_HALF: i32 = 1 << (WB_SHIFT - 1);
+
+impl Acc {
+    pub const ZERO: Acc = Acc(0);
+
+    #[inline(always)]
+    pub const fn from_raw(raw: i32) -> Acc {
+        Acc(raw)
+    }
+
+    #[inline(always)]
+    pub const fn raw(self) -> i32 {
+        self.0
+    }
+
+    /// Widen a stored value into the accumulator domain (align fractions).
+    /// Used in multi-adder mode where an SRAM operand is summed directly
+    /// with products.
+    #[inline(always)]
+    pub const fn from_fx(x: Fx) -> Acc {
+        Acc((x.raw() as i32) << WB_SHIFT)
+    }
+
+    /// 32-bit two's-complement addition (wrapping, like the RTL adder).
+    #[inline(always)]
+    pub const fn add(self, rhs: Acc) -> Acc {
+        Acc(self.0.wrapping_add(rhs.0))
+    }
+
+    #[inline(always)]
+    pub const fn sub(self, rhs: Acc) -> Acc {
+        Acc(self.0.wrapping_sub(rhs.0))
+    }
+
+    /// Narrowing writeback: round to nearest (add half-LSB, arithmetic
+    /// shift — ties toward +inf) then saturate to 16 bits.
+    #[inline(always)]
+    pub fn to_fx(self) -> Fx {
+        let rounded = (self.0.wrapping_add(WB_HALF)) >> WB_SHIFT;
+        Fx::from_raw(rounded.clamp(i16::MIN as i32, i16::MAX as i32) as i16)
+    }
+
+    /// Writeback with an externally supplied rounding increment
+    /// (`dither` ∈ [0, 2^12)) instead of the fixed half-LSB — the
+    /// stochastic rounding of the parameter-update paths (see
+    /// [`super::wb_dither`]). `dither = WB_HALF` reproduces [`Self::to_fx`].
+    #[inline(always)]
+    pub fn to_fx_dithered(self, dither: i32) -> Fx {
+        debug_assert!((0..(1 << WB_SHIFT)).contains(&dither));
+        let rounded = (self.0.wrapping_add(dither)) >> WB_SHIFT;
+        Fx::from_raw(rounded.clamp(i16::MIN as i32, i16::MAX as i32) as i16)
+    }
+
+    /// Writeback from a re-formatted accumulator: when the products were
+    /// pre-shifted by `fmt_shift` (see [`Fx::mul_acc_shifted`] and
+    /// [`super::acc_fmt_shift`]), the accumulator holds Q(8+s).(24−s) and
+    /// the narrowing shift is correspondingly shorter. Same
+    /// round-to-nearest + saturate semantics; `fmt_shift = 0` is
+    /// [`Self::to_fx`].
+    #[inline(always)]
+    pub fn to_fx_fmt(self, fmt_shift: u32) -> Fx {
+        debug_assert!(fmt_shift < WB_SHIFT);
+        let sh = WB_SHIFT - fmt_shift;
+        let rounded = (self.0.wrapping_add(1 << (sh - 1))) >> sh;
+        Fx::from_raw(rounded.clamp(i16::MIN as i32, i16::MAX as i32) as i16)
+    }
+
+    /// Value as f32 (diagnostics only — never on the datapath).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / (1u64 << ACC_FRAC_BITS) as f32
+    }
+}
+
+impl fmt::Debug for Acc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Acc({} = {:.7})", self.0, self.to_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widen_then_writeback_is_identity() {
+        for raw in [-32768i16, -1, 0, 1, 4096, 32767] {
+            let fx = Fx::from_raw(raw);
+            assert_eq!(Acc::from_fx(fx).to_fx(), fx);
+        }
+    }
+
+    #[test]
+    fn product_writeback() {
+        // 2.0 * 3.0 = 6.0 exactly representable.
+        let p = Fx::from_f32(2.0).mul_acc(Fx::from_f32(3.0));
+        assert_eq!(p.to_fx(), Fx::from_f32(6.0));
+    }
+
+    #[test]
+    fn wrapping_add_like_rtl() {
+        let a = Acc::from_raw(i32::MAX);
+        assert_eq!(a.add(Acc::from_raw(1)).raw(), i32::MIN);
+    }
+
+    #[test]
+    fn writeback_saturates_overflowed_sums() {
+        // 7.9 * 7.9 = 62.4 > 8 ⇒ saturates at writeback.
+        let p = Fx::from_f32(7.9).mul_acc(Fx::from_f32(7.9));
+        assert_eq!(p.to_fx(), Fx::MAX);
+        let n = Fx::from_f32(7.9).mul_acc(Fx::from_f32(-7.9));
+        assert_eq!(n.to_fx(), Fx::MIN);
+    }
+}

@@ -1,0 +1,178 @@
+//! Stored 16-bit Q4.12 value.
+
+use super::{Acc, FRAC_BITS, SCALE};
+use std::fmt;
+use std::ops::Neg;
+
+/// A 16-bit Q4.12 fixed-point number (range [-8, 8), LSB = 2^-12).
+///
+/// All datapath state the hardware stores in SRAM (features, kernels,
+/// gradients, weights) is this type.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Fx(i16);
+
+impl Fx {
+    pub const ZERO: Fx = Fx(0);
+    pub const ONE: Fx = Fx(1 << FRAC_BITS);
+    pub const MAX: Fx = Fx(i16::MAX);
+    pub const MIN: Fx = Fx(i16::MIN);
+
+    /// Construct from the raw 16-bit pattern.
+    #[inline(always)]
+    pub const fn from_raw(raw: i16) -> Fx {
+        Fx(raw)
+    }
+
+    /// Raw 16-bit pattern (what lives on the 128-bit memory port).
+    #[inline(always)]
+    pub const fn raw(self) -> i16 {
+        self.0
+    }
+
+    /// Quantize an f32: scale, round to nearest (ties away handled by
+    /// `round`), saturate — the conversion used when loading f32 data
+    /// (e.g. dataset pixels) into the accelerator's number system.
+    #[inline]
+    pub fn from_f32(x: f32) -> Fx {
+        let scaled = (x * SCALE).round();
+        Fx(scaled.clamp(i16::MIN as f32, i16::MAX as f32) as i16)
+    }
+
+    #[inline(always)]
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / SCALE
+    }
+
+    /// 16×16→32 multiply producing the full-precision accumulator value
+    /// (paper: "the results of the 16-bit multiplications are kept in full
+    /// precision and propagated to the 32-bit adders").
+    #[inline(always)]
+    pub fn mul_acc(self, rhs: Fx) -> Acc {
+        Acc::from_raw(self.0 as i32 * rhs.0 as i32)
+    }
+
+    /// Multiply with a power-of-two gradient-normalization right-shift at
+    /// the multiplier output, **rounded to nearest** (half-LSB add before
+    /// the arithmetic shift — one extra adder bit in hardware).
+    ///
+    /// Rounding matters: plain truncation (shift only) biases every
+    /// product by up to −½ LSB; summed over an H·W = 1024-long kernel-
+    /// gradient reduction and fed into `k −= lr·dk` every step, that bias
+    /// drifts all kernels positive until the Q4.12 range saturates and
+    /// the network dies (observed; EXPERIMENTS.md E5).
+    ///
+    /// Used by the multi-adder mode for the conv kernel gradient: the
+    /// spatial reduction over H·W positions would wrap the 32-bit
+    /// accumulator at realistic operand magnitudes (Σ of up to 1024
+    /// products, each up to ±64, in a ±128 Q8.24 domain), which destroys
+    /// training. Shifting each product by ≈log₂(H·W) normalizes the
+    /// reduction to a mean, keeping the sum in range — a zero-cost fix
+    /// the paper's datapath description is missing (see DESIGN.md
+    /// §Gradient-Normalization and EXPERIMENTS.md E5).
+    #[inline(always)]
+    pub fn mul_acc_shifted(self, rhs: Fx, shift: u32) -> Acc {
+        let p = self.0 as i32 * rhs.0 as i32;
+        if shift == 0 {
+            Acc::from_raw(p)
+        } else {
+            // |p| ≤ 2^30, the rounding increment ≤ 2^(shift−1) ≤ 2^23: no overflow.
+            Acc::from_raw((p + (1 << (shift - 1))) >> shift)
+        }
+    }
+
+    /// Symmetric value clip: clamp to `[-limit, +limit]` (a writeback
+    /// comparator+mux — the §III-A/[42] "value clipping" the control
+    /// unit applies to gradient and parameter writebacks).
+    #[inline(always)]
+    pub fn clamp_abs(self, limit: Fx) -> Fx {
+        debug_assert!(limit.0 > 0);
+        Fx(self.0.clamp(-limit.0, limit.0))
+    }
+
+    /// Saturating add in the 16-bit domain (used only outside the MAC
+    /// datapath, e.g. for the SGD weight update writeback path).
+    #[inline(always)]
+    pub fn sat_add(self, rhs: Fx) -> Fx {
+        Fx(self.0.saturating_add(rhs.0))
+    }
+
+    /// Saturating subtract in the 16-bit domain.
+    #[inline(always)]
+    pub fn sat_sub(self, rhs: Fx) -> Fx {
+        Fx(self.0.saturating_sub(rhs.0))
+    }
+
+    /// ReLU as the hardware implements it: sign-bit mux.
+    #[inline(always)]
+    pub fn relu(self) -> Fx {
+        if self.0 < 0 {
+            Fx(0)
+        } else {
+            self
+        }
+    }
+
+    #[inline(always)]
+    pub fn is_negative(self) -> bool {
+        self.0 < 0
+    }
+}
+
+impl Neg for Fx {
+    type Output = Fx;
+    #[inline(always)]
+    fn neg(self) -> Fx {
+        // -MIN saturates to MAX (two's complement edge).
+        Fx(self.0.checked_neg().unwrap_or(i16::MAX))
+    }
+}
+
+impl fmt::Debug for Fx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Fx({} = {:.5})", self.0, self.to_f32())
+    }
+}
+
+impl fmt::Display for Fx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.5}", self.to_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants() {
+        assert_eq!(Fx::ONE.to_f32(), 1.0);
+        assert_eq!(Fx::ZERO.to_f32(), 0.0);
+    }
+
+    #[test]
+    fn relu_matches_sign() {
+        assert_eq!(Fx::from_f32(-1.5).relu(), Fx::ZERO);
+        assert_eq!(Fx::from_f32(1.5).relu(), Fx::from_f32(1.5));
+        assert_eq!(Fx::ZERO.relu(), Fx::ZERO);
+    }
+
+    #[test]
+    fn neg_saturates_min() {
+        assert_eq!(-Fx::MIN, Fx::MAX);
+        assert_eq!(-Fx::from_f32(2.0), Fx::from_f32(-2.0));
+    }
+
+    #[test]
+    fn sat_add_saturates() {
+        assert_eq!(Fx::MAX.sat_add(Fx::ONE), Fx::MAX);
+        assert_eq!(Fx::MIN.sat_sub(Fx::ONE), Fx::MIN);
+    }
+
+    #[test]
+    fn from_f32_rounds() {
+        // half-LSB rounds away from zero via f32::round
+        let half_lsb = 0.5 / SCALE;
+        assert_eq!(Fx::from_f32(half_lsb).raw(), 1);
+        assert_eq!(Fx::from_f32(-half_lsb).raw(), -1);
+    }
+}

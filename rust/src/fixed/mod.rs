@@ -1,0 +1,229 @@
+//! Q4.12 fixed-point arithmetic — the TinyCL datapath number system.
+//!
+//! Paper §III-A/§III-D: data is 16-bit fixed point with 4 integer bits
+//! (sign included) and 12 fractional bits; multiplier outputs are kept at
+//! full precision (32-bit, 24 fractional bits) and fed to 32-bit adders;
+//! on writeback results are reduced to 16 bits, *rounded to nearest*, and
+//! value-clipped (saturated) per [42] since the model has no batch norm.
+//!
+//! [`Fx`] is a stored 16-bit value; [`Acc`] is the 32-bit accumulator
+//! domain (24 fractional bits). `sim/` and `qnn/` share these exact
+//! semantics, which is what makes their bit-exact equivalence meaningful.
+
+mod acc;
+mod fx;
+pub mod vecops;
+
+pub use acc::Acc;
+pub use fx::Fx;
+
+/// Fractional bits of the stored 16-bit format (Q4.12).
+pub const FRAC_BITS: u32 = 12;
+/// Fractional bits of the accumulator domain (product of two Q4.12).
+pub const ACC_FRAC_BITS: u32 = 24;
+/// Scale factor of the stored format.
+pub const SCALE: f32 = (1u32 << FRAC_BITS) as f32;
+
+/// Accumulator format shift for an `n_products`-long multi-operand
+/// reduction: the barrel-shift `s` applied to every product (and undone
+/// at writeback, [`Acc::to_fx_fmt`]) so the 32-bit accumulator cannot
+/// wrap. With post-clip operand bound |a·b| ≤ 8 (activation ≤ 8 × weight
+/// ≤ `qnn::layers::PARAM_CLIP` = 1) and accumulator range ±128, safety
+/// requires `n·8 / 2^s ≤ 128`, i.e. `s = ⌈log₂ n⌉ − 4` (min 0).
+///
+/// This is the per-layer requantization every fixed-point training chip
+/// needs and the paper's §III-D does not specify: without it the dense
+/// layer's 8192-product reduction wraps Q8.24 outright (EXPERIMENTS.md
+/// E5). Hardware cost: the same product-bus barrel shifter the gradient
+/// normalization uses, CU-configured per operation.
+pub fn acc_fmt_shift(n_products: usize) -> u32 {
+    (n_products * 8).next_power_of_two().trailing_zeros().saturating_sub(7)
+}
+
+/// Dither for stochastically-rounded parameter writebacks, keyed by the
+/// parameter's flat index and the train-step counter (splitmix64-style
+/// mixer — in hardware, an address/step-seeded LFSR as in HNPU's
+/// stochastic dynamic fixed-point [34]).
+///
+/// Batch-1 SGD in Q4.12 underflows: most per-step weight updates are
+/// below ½ writeback LSB and deterministic round-to-nearest discards
+/// them **forever**, which stalls multi-class dense training
+/// (EXPERIMENTS.md E5). Replacing the fixed half-LSB rounding increment
+/// with a uniform dither in [0, LSB) makes the expected writeback equal
+/// the true update. Keying on (index, step) — not on evaluation order —
+/// keeps the functional model and the cycle-accurate simulator
+/// bit-identical.
+pub fn wb_dither(index: u64, step: u64) -> i32 {
+    let mut z = index
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ step.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z ^= z >> 29;
+    z = z.wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 32;
+    (z as u32 & 0xFFF) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn roundtrip_exact_grid() {
+        // Every representable Q4.12 value round-trips through f32 exactly.
+        for raw in (i16::MIN..=i16::MAX).step_by(97) {
+            let fx = Fx::from_raw(raw);
+            assert_eq!(Fx::from_f32(fx.to_f32()), fx);
+        }
+    }
+
+    #[test]
+    fn saturation_limits() {
+        assert_eq!(Fx::from_f32(100.0), Fx::MAX);
+        assert_eq!(Fx::from_f32(-100.0), Fx::MIN);
+        assert_eq!(Fx::MAX.to_f32(), 32767.0 / 4096.0);
+        assert_eq!(Fx::MIN.to_f32(), -8.0);
+    }
+
+    #[test]
+    fn quantization_error_bound() {
+        check("q-error <= half LSB", 17, 500, |g| {
+            let x = g.f32_in(-7.9, 7.9);
+            let q = Fx::from_f32(x).to_f32();
+            assert!((q - x).abs() <= 0.5 / SCALE + 1e-7, "x={x} q={q}");
+        });
+    }
+
+    #[test]
+    fn mul_matches_float_within_lsb() {
+        check("fx mul ~ f32 mul", 23, 500, |g| {
+            let a = g.f32_in(-2.0, 2.0);
+            let b = g.f32_in(-2.0, 2.0);
+            let fa = Fx::from_f32(a);
+            let fb = Fx::from_f32(b);
+            let prod = fa.mul_acc(fb).to_fx().to_f32();
+            let expect = fa.to_f32() * fb.to_f32();
+            assert!(
+                (prod - expect).abs() <= 1.0 / SCALE,
+                "a={a} b={b} prod={prod} expect={expect}"
+            );
+        });
+    }
+
+    #[test]
+    fn acc_addition_associative() {
+        // 32-bit integer accumulation is exactly associative — the property
+        // the hardware relies on when reordering the 9-operand Dadda sum.
+        check("acc assoc", 29, 300, |g| {
+            let xs: Vec<Fx> = (0..9).map(|_| Fx::from_f32(g.f32_in(-1.0, 1.0))).collect();
+            let w = Fx::from_f32(g.f32_in(-1.0, 1.0));
+            let left = xs.iter().fold(Acc::ZERO, |a, x| a.add(x.mul_acc(w)));
+            let mut right = Acc::ZERO;
+            for x in xs.iter().rev() {
+                right = right.add(x.mul_acc(w));
+            }
+            assert_eq!(left, right);
+        });
+    }
+
+    #[test]
+    fn writeback_rounds_to_nearest() {
+        // 1.5 LSB in the acc domain rounds up (ties toward +inf).
+        let acc = Acc::from_raw(3 << (ACC_FRAC_BITS - FRAC_BITS - 1)); // 1.5 * 2^-12
+        assert_eq!(acc.to_fx().raw(), 2);
+        // -1.5 LSB: arithmetic-shift rounding gives -1 (ties toward +inf).
+        let acc = Acc::from_raw(-(3 << (ACC_FRAC_BITS - FRAC_BITS - 1)));
+        assert_eq!(acc.to_fx().raw(), -1);
+    }
+
+    #[test]
+    fn acc_fmt_shift_keeps_reductions_in_range() {
+        // Worst-case |product| = 8 (activation 8 × clipped weight 1):
+        // n products must fit the ±128 Q8.24 accumulator after the shift.
+        for n in [1usize, 10, 27, 72, 256, 1024, 8192, 100_000] {
+            let s = acc_fmt_shift(n);
+            let worst = n as f64 * 8.0 / (1u64 << s) as f64;
+            assert!(worst <= 128.0, "n={n} s={s} worst={worst}");
+        }
+        // …without over-shifting (≤ 2× margin beyond what's needed).
+        assert_eq!(acc_fmt_shift(10), 0);
+        assert_eq!(acc_fmt_shift(27), 1);
+        assert_eq!(acc_fmt_shift(72), 3);
+        assert_eq!(acc_fmt_shift(8192), 9);
+    }
+
+    #[test]
+    fn fmt_writeback_matches_unshifted_for_exact_values() {
+        // A value representable in Q4.12 must survive the format round
+        // trip at any shift: (v·2^24 ≫ s) written back with to_fx_fmt(s).
+        for s in 0..10u32 {
+            for v in [-4.0f32, -0.5, 0.0, 0.25, 3.75] {
+                let a = Fx::from_f32(v).mul_acc_shifted(Fx::ONE, s);
+                assert_eq!(a.to_fx_fmt(s), Fx::from_f32(v), "v={v} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn dither_is_uniform_and_unbiased() {
+        // Mean of the dither over many (index, step) pairs ≈ half LSB —
+        // the condition that makes the stochastic rounding unbiased.
+        let mut sum = 0u64;
+        let n = 100_000u64;
+        let (mut min, mut max) = (i32::MAX, 0i32);
+        for i in 0..n {
+            let d = wb_dither(i * 37, i % 257);
+            assert!((0..4096).contains(&d), "dither {d} out of range");
+            sum += d as u64;
+            min = min.min(d);
+            max = max.max(d);
+        }
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 2047.5).abs() < 20.0, "biased dither: mean {mean}");
+        assert!(min < 64 && max > 4031, "poor coverage: [{min}, {max}]");
+    }
+
+    #[test]
+    fn dither_decorrelated_across_indices_and_steps() {
+        // Neighbouring parameters / consecutive steps must not share
+        // dither values systematically.
+        let same = (0..1000)
+            .filter(|&i| wb_dither(i, 0) == wb_dither(i + 1, 0))
+            .count();
+        assert!(same < 10, "index-correlated dither ({same}/1000 equal)");
+        let same = (0..1000)
+            .filter(|&t| wb_dither(42, t) == wb_dither(42, t + 1))
+            .count();
+        assert!(same < 10, "step-correlated dither ({same}/1000 equal)");
+    }
+
+    #[test]
+    fn dithered_rounding_is_unbiased_below_half_lsb() {
+        // A true update of +0.25 writeback-LSB must materialize ~25 % of
+        // the time under the dither — never under deterministic rounding.
+        let quarter = Acc::from_raw(1 << (ACC_FRAC_BITS - FRAC_BITS - 2));
+        assert_eq!(quarter.to_fx().raw(), 0, "deterministic rounding keeps 0");
+        let hits = (0..4000u64)
+            .filter(|&t| quarter.to_fx_dithered(wb_dither(7, t)).raw() == 1)
+            .count();
+        let rate = hits as f64 / 4000.0;
+        assert!((rate - 0.25).abs() < 0.05, "materialization rate {rate} ≉ 0.25");
+    }
+
+    #[test]
+    fn clamp_abs_is_symmetric_and_idempotent() {
+        let lim = Fx::from_f32(1.0);
+        assert_eq!(Fx::from_f32(5.0).clamp_abs(lim), lim);
+        assert_eq!(Fx::from_f32(-5.0).clamp_abs(lim), -lim);
+        assert_eq!(Fx::from_f32(0.5).clamp_abs(lim), Fx::from_f32(0.5));
+        assert_eq!(Fx::MAX.clamp_abs(lim).clamp_abs(lim), lim);
+    }
+
+    #[test]
+    fn writeback_saturates() {
+        let big = Acc::from_fx(Fx::MAX).add(Acc::from_fx(Fx::MAX));
+        assert_eq!(big.to_fx(), Fx::MAX);
+        let small = Acc::from_fx(Fx::MIN).add(Acc::from_fx(Fx::MIN));
+        assert_eq!(small.to_fx(), Fx::MIN);
+    }
+}

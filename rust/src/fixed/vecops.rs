@@ -1,0 +1,131 @@
+//! Bulk Q4.12 operations shared by `qnn/` and `sim/`.
+//!
+//! These are the *numerical contracts* of the datapath: `dot8` is exactly
+//! what one MAC computes in multi-operand mode, `fma8_into` what it
+//! computes in multi-adder mode. Keeping them here (and testing them
+//! against f64 references) pins the semantics both consumers must share.
+
+use super::{Acc, Fx};
+
+/// 8-lane dot product in the accumulator domain — one MAC in
+/// *multi-operand* mode: 8 multipliers, 7 adders as a tree.
+/// 32-bit integer addition is associative, so tree order ≡ fold order.
+#[inline]
+pub fn dot8(a: &[Fx; 8], b: &[Fx; 8]) -> Acc {
+    let mut acc = Acc::ZERO;
+    for i in 0..8 {
+        acc = acc.add(a[i].mul_acc(b[i]));
+    }
+    acc
+}
+
+/// Variable-length dot product (multiple multi-operand passes chained
+/// through the partial-sum register).
+#[inline]
+pub fn dot(a: &[Fx], b: &[Fx]) -> Acc {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = Acc::ZERO;
+    for (x, y) in a.iter().zip(b) {
+        acc = acc.add(x.mul_acc(*y));
+    }
+    acc
+}
+
+/// One MAC in *multi-adder* mode: 8 independent `acc[i] += a[i] * b`
+/// updates (kernel-gradient dataflow: 8 channels of a feature times one
+/// gradient value, summed with 8 partial results).
+#[inline]
+pub fn fma8_into(acc: &mut [Acc; 8], a: &[Fx; 8], b: Fx) {
+    for i in 0..8 {
+        acc[i] = acc[i].add(a[i].mul_acc(b));
+    }
+}
+
+/// Elementwise quantize an f32 slice.
+pub fn quantize(xs: &[f32]) -> Vec<Fx> {
+    xs.iter().map(|&x| Fx::from_f32(x)).collect()
+}
+
+/// Elementwise dequantize.
+pub fn dequantize(xs: &[Fx]) -> Vec<f32> {
+    xs.iter().map(|x| x.to_f32()).collect()
+}
+
+/// SGD update in the stored domain: `w <- w - lr*g`, with the lr-scaled
+/// gradient computed at full precision and written back with
+/// round-to-nearest + saturation (the hardware's update path).
+#[inline]
+pub fn sgd_update(w: Fx, g: Fx, lr: Fx) -> Fx {
+    let scaled = g.mul_acc(lr).to_fx();
+    w.sat_sub(scaled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn fx_vec8(g: &mut crate::util::proptest::Gen, lo: f32, hi: f32) -> [Fx; 8] {
+        std::array::from_fn(|_| Fx::from_f32(g.f32_in(lo, hi)))
+    }
+
+    #[test]
+    fn dot8_matches_f64_reference() {
+        check("dot8 ~ f64", 31, 400, |g| {
+            let a = fx_vec8(g, -1.0, 1.0);
+            let b = fx_vec8(g, -1.0, 1.0);
+            let got = dot8(&a, &b).to_f32() as f64;
+            let expect: f64 = (0..8)
+                .map(|i| a[i].to_f32() as f64 * b[i].to_f32() as f64)
+                .sum();
+            // products are exact in i32; only the f32 print conversion differs
+            assert!((got - expect).abs() < 1e-5, "got {got} expect {expect}");
+        });
+    }
+
+    #[test]
+    fn dot_equals_dot8_on_len8() {
+        check("dot == dot8", 37, 200, |g| {
+            let a = fx_vec8(g, -2.0, 2.0);
+            let b = fx_vec8(g, -2.0, 2.0);
+            assert_eq!(dot(&a, &b), dot8(&a, &b));
+        });
+    }
+
+    #[test]
+    fn fma8_accumulates() {
+        check("fma8", 41, 200, |g| {
+            let a = fx_vec8(g, -1.0, 1.0);
+            let b = Fx::from_f32(g.f32_in(-1.0, 1.0));
+            let mut acc = [Acc::ZERO; 8];
+            fma8_into(&mut acc, &a, b);
+            fma8_into(&mut acc, &a, b);
+            for i in 0..8 {
+                let expect = a[i].mul_acc(b).add(a[i].mul_acc(b));
+                assert_eq!(acc[i], expect);
+            }
+        });
+    }
+
+    #[test]
+    fn sgd_update_matches_float() {
+        check("sgd ~ f32", 43, 300, |g| {
+            let w = Fx::from_f32(g.f32_in(-1.0, 1.0));
+            let grad = Fx::from_f32(g.f32_in(-1.0, 1.0));
+            let lr = Fx::from_f32(g.f32_in(0.0, 1.0));
+            let updated = sgd_update(w, grad, lr).to_f32();
+            let expect = w.to_f32() - grad.to_f32() * lr.to_f32();
+            assert!((updated - expect).abs() <= 2.0 / super::super::SCALE);
+        });
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip() {
+        let xs = [0.0f32, 0.5, -0.25, 1.0, -7.99];
+        let q = quantize(&xs);
+        let d = dequantize(&q);
+        for (x, y) in xs.iter().zip(&d) {
+            assert!((x - y).abs() <= 0.5 / super::super::SCALE);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Gate-equivalent inventories for every logic component in the TinyCL
+//! RTL (Fig. 2–4), parameterized by the design point so the design-space
+//! benches can cost points the paper never synthesized.
+//!
+//! GE counts are standard-cell estimates for 65 nm (1 GE = 1 NAND2):
+//! a pipelined 16×16 multiplier ≈ 3.3 kGE (array + partial-product regs),
+//! a 32-bit carry-lookahead adder with output register ≈ 0.52 kGE, a
+//! flip-flop ≈ 5.5–6 GE/bit, small FSMs ≈ a few kGE. The absolute values
+//! carry the usual ±20 % library spread; `Tech65::calib_area` absorbs it
+//! globally (never per-component).
+
+use crate::sim::SimConfig;
+
+/// GE of one pipelined 16×16 multiplier (Booth array + pipe registers).
+pub const MULT16_GE: f64 = 3_300.0;
+/// GE of one 32-bit adder stage with its output register.
+pub const ADD32_GE: f64 = 520.0;
+/// GE of one 32-bit 3:2 compressor row (used by the 9-operand Dadda tree).
+pub const COMPRESS32_GE: f64 = 180.0;
+/// GE per register bit (flip-flop + local clock gating share).
+pub const REG_BIT_GE: f64 = 6.0;
+/// GE of one address-manager (3 nested counters, bound comparators, snake
+/// direction logic — §III-F-1).
+pub const ADDR_MANAGER_GE: f64 = 3_200.0;
+/// GE of one data-flow manager (mux trees routing buffers → MAC lanes).
+pub const DATA_MANAGER_GE: f64 = 4_800.0;
+/// GE of the control-unit FSM (6 computations × layer sequencing).
+pub const CU_FSM_GE: f64 = 9_000.0;
+/// GE of the host/loss interface (logits out, dY in, LR scaling).
+pub const HOST_IF_GE: f64 = 30_000.0;
+
+/// One MAC block (Fig. 4): `lanes` multipliers, `lanes` reconfigurable
+/// adders, a 32-bit partial-sum register, mode-select muxing.
+pub fn mac_block_ge(lanes: usize) -> f64 {
+    let l = lanes as f64;
+    l * MULT16_GE
+        + l * ADD32_GE
+        + 32.0 * REG_BIT_GE            // psum register
+        + l * 32.0 * 1.0               // mode-select mux, ~1 GE/bit/lane
+}
+
+/// The 9-operand (general: `taps`-operand) Dadda reduction tree plus the
+/// final carry-propagate adder and the writeback round/saturate unit.
+pub fn dadda_tree_ge(taps: usize) -> f64 {
+    // A k-operand tree needs (k - 2) 3:2 compressor rows plus a CPA.
+    let rows = taps.saturating_sub(2) as f64;
+    rows * COMPRESS32_GE + ADD32_GE + 400.0 // 400 ≈ round-to-nearest + clip
+}
+
+/// The whole Processing Unit (Fig. 3): `taps` MACs + Dadda + writeback.
+pub fn pu_ge(cfg: &SimConfig) -> f64 {
+    cfg.taps as f64 * mac_block_ge(cfg.lanes) + dadda_tree_ge(cfg.taps)
+}
+
+/// Control: CU FSM + 3 data managers + 3 address managers + host/loss
+/// interface (Fig. 3 names gradient/kernel/feature managers).
+pub fn control_ge(_cfg: &SimConfig) -> f64 {
+    CU_FSM_GE + 3.0 * DATA_MANAGER_GE + 3.0 * ADDR_MANAGER_GE + HOST_IF_GE
+}
+
+/// Register bits in the prefetch/operand buffers (§III-E "dedicated
+/// buffers prefetch data from memory"):
+/// * snake window: `taps` × `lanes` × 16 b feature registers,
+/// * kernel operand buffer, double-buffered,
+/// * dense operand buffer (reuses the window registers; modeled once),
+/// * per-memory-group prefetch FIFOs: 4 groups × 2 ports × 16-deep,
+/// * the GDumb replay DMA line buffer (double-buffered 1 KB lines that
+///   stage off-chip sample traffic — §III-E Training Data Memory).
+pub fn buffer_bits(cfg: &SimConfig) -> u64 {
+    let window = (cfg.taps * cfg.lanes * 16) as u64;
+    let kernel_db = 2 * window;
+    let prefetch = 4 * 2 * cfg.port_bits() as u64 * 16; // 16-deep FIFOs
+    let replay_dma = 2 * 8_192;
+    window + kernel_db + prefetch + replay_dma
+}
+
+/// Buffer GE (register-file style storage).
+pub fn buffers_ge(cfg: &SimConfig) -> f64 {
+    buffer_bits(cfg) as f64 * REG_BIT_GE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pu_dominated_by_multipliers() {
+        let cfg = SimConfig::paper();
+        let pu = pu_ge(&cfg);
+        let mults = (cfg.taps * cfg.lanes) as f64 * MULT16_GE;
+        assert!(mults / pu > 0.6, "mult share {}", mults / pu);
+    }
+
+    #[test]
+    fn pu_scales_with_design_point() {
+        let p = pu_ge(&SimConfig::paper());
+        let half_lanes = pu_ge(&SimConfig::paper().with_lanes(4));
+        let more_taps = pu_ge(&SimConfig::paper().with_taps(25));
+        assert!(half_lanes < 0.6 * p);
+        assert!(more_taps > 2.0 * p);
+    }
+
+    #[test]
+    fn buffers_scale_with_port_width() {
+        let b8 = buffer_bits(&SimConfig::paper());
+        let b16 = buffer_bits(&SimConfig::paper().with_lanes(16));
+        assert!(b16 > b8);
+    }
+
+    #[test]
+    fn control_independent_of_lanes() {
+        assert_eq!(
+            control_ge(&SimConfig::paper()),
+            control_ge(&SimConfig::paper().with_lanes(16))
+        );
+    }
+}

@@ -1,0 +1,28 @@
+//! Analytical 65 nm cost model — the substitution for the paper's
+//! Synopsys DC synthesis run (§IV-B, Fig. 7, Table I).
+//!
+//! The paper reports post-synthesis numbers for one design point:
+//! 3.87 ns clock, 86 mW, 4.74 mm², with the memory block accounting for
+//! ~80 % of area and ~76 % of power (Fig. 7). We rebuild those numbers
+//! from first principles: a component-level area/energy/timing model with
+//! published 65 nm constants ([`tech`]), composed over the exact same
+//! component inventory the RTL has ([`components`], [`model`]). The
+//! *shape* of the result — which block dominates, by how much, how the
+//! totals move when the design point moves — is the reproduction target;
+//! the absolute constants are calibrated once against the paper's totals
+//! and then frozen (see `tests` in [`model`]).
+//!
+//! Beyond the paper, [`energy`] converts the simulator's activity
+//! counters ([`crate::sim::OpStats`]) into energy, which the ablation
+//! benches use to rank design points the paper never synthesized.
+
+pub mod components;
+pub mod comparison;
+pub mod energy;
+pub mod model;
+pub mod tech;
+
+pub use comparison::{table1_rows, ArchRow};
+pub use energy::EnergyModel;
+pub use model::{Breakdown, CostModel, DesignReport};
+pub use tech::Tech65;

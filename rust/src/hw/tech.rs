@@ -1,0 +1,158 @@
+//! 65 nm technology constants.
+//!
+//! Sources (rounded to one significant structure, not vendor-exact):
+//! * NAND2-equivalent gate area ≈ 1.44 µm² (65 nm standard cell, typical
+//!   9-track library).
+//! * 6T SRAM bit cell ≈ 0.525 µm²; small macros pay a large periphery
+//!   multiplier (decoder, sense amps, BIST) — we model cell × factor +
+//!   fixed per-macro overhead, the standard memory-compiler shape.
+//! * Dynamic energies per op in 65 nm at ~1.2 V: a pipelined 16-bit
+//!   multiply ≈ 0.6 pJ, a 32-bit add ≈ 0.08 pJ (LNPU/HNPU-class numbers).
+//!   The 128-bit SRAM access energy (40/44 pJ) is deliberately at the
+//!   conservative end: the paper's flow is plain Design Compiler
+//!   synthesis (§IV-A), whose memory implementation (no custom macro
+//!   low-power options, high-activity banked arrays) is what makes its
+//!   memory block 76 % of total power at only ~2 Mbit — a compiled
+//!   low-power macro would not dominate this way. The constant encodes
+//!   that observed behaviour.
+//! * Leakage from area: ~25 µW/mm² logic, ~13 µW/mm² SRAM at 25 °C TT.
+//!
+//! One constant, `CALIB`, absorbs the residual between this first-
+//! principles stack and the paper's reported totals; it is fixed by the
+//! calibration test in [`super::model`] and never tuned per-experiment.
+
+/// Technology parameters for the 65 nm node used by the paper.
+#[derive(Clone, Debug)]
+pub struct Tech65 {
+    /// Area of one NAND2-equivalent gate, µm².
+    pub ge_um2: f64,
+    /// 6T SRAM cell area, µm²/bit.
+    pub sram_cell_um2: f64,
+    /// SRAM periphery multiplier on cell area (decoders, sense amps, mux).
+    pub sram_periphery: f64,
+    /// Fixed per-macro SRAM overhead, µm² (control, BIST, spare rows).
+    pub sram_macro_fixed_um2: f64,
+    /// Dynamic energy of one 16×16 multiply, pJ.
+    pub e_mult16_pj: f64,
+    /// Dynamic energy of one 32-bit add, pJ.
+    pub e_add32_pj: f64,
+    /// Dynamic energy of one 128-bit SRAM read, pJ.
+    pub e_sram_read128_pj: f64,
+    /// Dynamic energy of one 128-bit SRAM write, pJ.
+    pub e_sram_write128_pj: f64,
+    /// Dynamic energy of one 16-bit register-file/buffer move, pJ.
+    pub e_reg16_pj: f64,
+    /// Off-chip (GDumb replay) memory access energy per 128-bit burst, pJ.
+    /// LPDDR-class: ~20 pJ/bit → ~2.5 nJ per 128 b; only charged by the
+    /// CL controller when swapping replay samples.
+    pub e_offchip_read128_pj: f64,
+    /// Logic leakage power density, mW/mm².
+    pub leak_logic_mw_per_mm2: f64,
+    /// SRAM leakage power density, mW/mm².
+    pub leak_sram_mw_per_mm2: f64,
+    /// Clock-tree + sequential overhead as a fraction of datapath dynamic
+    /// power.
+    pub clock_overhead: f64,
+    /// Residual calibration factor applied to all dynamic energies so the
+    /// composed model lands on the paper's 86 mW at the paper's activity
+    /// (fixed once by `model::tests::calibrated_to_paper_totals`).
+    pub calib_dyn: f64,
+    /// Residual calibration factor on area (cell libraries differ by
+    /// ±20 % between vendors; fixed once, frozen).
+    pub calib_area: f64,
+}
+
+impl Default for Tech65 {
+    fn default() -> Self {
+        Tech65 {
+            ge_um2: 1.44,
+            sram_cell_um2: 0.525,
+            sram_periphery: 2.53,
+            sram_macro_fixed_um2: 4_000.0,
+            e_mult16_pj: 0.60,
+            e_add32_pj: 0.08,
+            e_sram_read128_pj: 40.0,
+            e_sram_write128_pj: 44.0,
+            e_reg16_pj: 0.05,
+            e_offchip_read128_pj: 2_560.0,
+            leak_logic_mw_per_mm2: 0.025,
+            leak_sram_mw_per_mm2: 0.013,
+            clock_overhead: 0.18,
+            calib_dyn: 1.0,
+            calib_area: 1.33,
+        }
+    }
+}
+
+impl Tech65 {
+    /// The node's canonical parameter set.
+    pub fn paper_node() -> Tech65 {
+        Tech65::default()
+    }
+
+    /// SRAM macro area in µm² for `bits` capacity.
+    pub fn sram_macro_um2(&self, bits: u64) -> f64 {
+        (bits as f64 * self.sram_cell_um2 * self.sram_periphery + self.sram_macro_fixed_um2)
+            * self.calib_area
+    }
+
+    /// Logic area in µm² for a gate-equivalent count.
+    pub fn logic_um2(&self, ges: f64) -> f64 {
+        ges * self.ge_um2 * self.calib_area
+    }
+
+    /// Scale an SRAM access energy for a port narrower/wider than 128 bit.
+    /// Energy is roughly linear in bitline count at fixed depth.
+    pub fn sram_read_pj(&self, port_bits: usize) -> f64 {
+        self.e_sram_read128_pj * (port_bits as f64 / 128.0) * self.calib_dyn
+    }
+
+    pub fn sram_write_pj(&self, port_bits: usize) -> f64 {
+        self.e_sram_write128_pj * (port_bits as f64 / 128.0) * self.calib_dyn
+    }
+
+    pub fn mult_pj(&self) -> f64 {
+        self.e_mult16_pj * self.calib_dyn
+    }
+
+    pub fn add_pj(&self) -> f64 {
+        self.e_add32_pj * self.calib_dyn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sram_macro_area_monotone_in_bits() {
+        let t = Tech65::paper_node();
+        let a = t.sram_macro_um2(1 << 10);
+        let b = t.sram_macro_um2(1 << 16);
+        let c = t.sram_macro_um2(1 << 20);
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn small_macro_dominated_by_fixed_overhead() {
+        let t = Tech65::paper_node();
+        // A 1-kbit macro should cost much more per bit than a 1-Mbit one.
+        let small = t.sram_macro_um2(1 << 10) / (1 << 10) as f64;
+        let big = t.sram_macro_um2(1 << 20) / (1 << 20) as f64;
+        assert!(small > 3.0 * big, "small={small} big={big}");
+    }
+
+    #[test]
+    fn port_energy_scales_linearly() {
+        let t = Tech65::paper_node();
+        let half = t.sram_read_pj(64);
+        let full = t.sram_read_pj(128);
+        assert!((full / half - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn offchip_much_more_expensive_than_onchip() {
+        let t = Tech65::paper_node();
+        assert!(t.e_offchip_read128_pj > 50.0 * t.e_sram_read128_pj);
+    }
+}

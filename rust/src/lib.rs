@@ -1,0 +1,23 @@
+//! # tinycl — reproduction of "TinyCL: An Efficient Hardware Architecture
+//! # for Continual Learning on Autonomous Systems" (Ressa et al., 2024)
+//!
+//! Three-layer stack (see DESIGN.md):
+//! * **L3 (this crate)** — cycle-accurate simulator of the TinyCL
+//!   microarchitecture (`sim`), 65 nm cost model (`hw`), continual-learning
+//!   policies (`cl`), dataset substrate (`data`), f32 and Q4.12 functional
+//!   models (`nn`, `qnn`), PJRT runtime for the AOT software baseline
+//!   (`runtime`) and the training coordinator (`coordinator`).
+//! * **L2/L1 (python/, build-time only)** — JAX model + Pallas kernels,
+//!   AOT-lowered to HLO text artifacts loaded by `runtime`.
+
+pub mod cl;
+pub mod coordinator;
+pub mod data;
+pub mod fixed;
+pub mod hw;
+pub mod nn;
+pub mod qnn;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;

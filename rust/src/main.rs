@@ -1,0 +1,260 @@
+//! `tinycl` — leader binary for the TinyCL reproduction.
+//!
+//! Subcommands (see `tinycl help`):
+//! * `train`     — run a CL experiment on a chosen backend/policy (§IV-A)
+//! * `infer`     — single-sample inference on a chosen backend
+//! * `sim-layer` — per-op cycle counts at the paper's geometry (§IV-B)
+//! * `report-hw` — area/power/clock report + Fig. 7 breakdown + Table I
+//! * `speedup`   — epoch time: TinyCL-sim vs AOT-XLA software baseline
+//!                 vs the paper's P100 constant (§IV-C)
+//! * `sweep`     — design-space sweep over lanes × taps (ablation A2)
+
+use anyhow::{bail, Result};
+use tinycl::coordinator::{Backend, BackendKind, Experiment, ExperimentConfig};
+use tinycl::data::SyntheticCifar;
+use tinycl::hw::{comparison, CostModel, EnergyModel};
+use tinycl::sim::{OpKind, SimConfig};
+use tinycl::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "train" => cmd_train(args),
+        "infer" => cmd_infer(args),
+        "sim-layer" => cmd_sim_layer(args),
+        "report-hw" => cmd_report_hw(args),
+        "speedup" => cmd_speedup(args),
+        "sweep" => cmd_sweep(args),
+        "help" | "--help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' — try `tinycl help`"),
+    }
+}
+
+const HELP: &str = "\
+tinycl — TinyCL (Ressa et al., 2024) reproduction
+
+USAGE: tinycl <SUBCOMMAND> [flags]
+
+SUBCOMMANDS
+  train      run a continual-learning experiment
+             --backend f32|qnn|sim|xla   --policy gdumb|er|naive|joint
+             --tasks N --epochs N --lr F --memory N --per-class N
+             --image-size N --conv-channels N --classes N --seed N
+  infer      one inference on a trained-from-scratch model
+             --backend ... --image-size ... (same model flags)
+  sim-layer  per-operation cycle counts at the paper geometry (§IV-B)
+             --image-size N --conv-channels N --classes N
+  report-hw  synthesized-design report: clock, area, power (Fig. 7),
+             Table I comparison  [--lanes N --taps N]
+  speedup    1 training epoch: TinyCL cycles vs XLA baseline wall time
+             --steps N (default: one GDumb epoch of 1000)
+  sweep      design-space sweep over --lanes-list and --taps-list
+  help       this text
+";
+
+/// `train`: the paper's §IV-A experiment, configurable.
+fn cmd_train(args: &Args) -> Result<()> {
+    let config = ExperimentConfig::from_args(args)?;
+    eprintln!(
+        "running CL experiment: backend={} policy={} …",
+        config.backend.name(),
+        config.policy.name()
+    );
+    let result = Experiment::new(config).run()?;
+    println!("{result}");
+    Ok(())
+}
+
+/// `infer`: single forward pass, print logits (smoke / demo).
+fn cmd_infer(args: &Args) -> Result<()> {
+    let config = ExperimentConfig::from_args(args)?;
+    let mut backend = Experiment::new(config.clone()).backend()?;
+    let gen = SyntheticCifar {
+        image_size: config.model.image_size,
+        channels: config.model.in_channels,
+        num_classes: config.model.num_classes,
+        noise: config.noise,
+        seed: config.seed,
+    };
+    let data = gen.generate(1, 2);
+    for s in data.samples.iter().take(args.usize_or("count", 3)) {
+        use tinycl::cl::Learner;
+        let pred = backend.predict(&s.x, config.model.num_classes);
+        println!(
+            "label={} pred={} {}",
+            s.label,
+            pred,
+            if pred == s.label { "✓" } else { "✗" }
+        );
+    }
+    Ok(())
+}
+
+/// `sim-layer`: E1 — per-op cycles of one train step.
+fn cmd_sim_layer(args: &Args) -> Result<()> {
+    let config = ExperimentConfig::from_args(args)?;
+    let mut backend = Backend::create(
+        BackendKind::Sim,
+        &config.model,
+        &config.sim,
+        &config.artifacts_dir,
+        config.seed,
+    )?;
+    use tinycl::cl::Learner;
+    let gen = SyntheticCifar {
+        image_size: config.model.image_size,
+        channels: config.model.in_channels,
+        num_classes: config.model.num_classes,
+        noise: config.noise,
+        seed: config.seed,
+    };
+    let s = &gen.generate(1, 0).samples[0];
+    backend.train_step(&s.x, s.label, config.model.num_classes, config.lr);
+    let (train, _) = backend.sim_stats().unwrap();
+    println!("one train step at {}×{}×{} in, {} filters:",
+        config.model.image_size, config.model.image_size, config.model.in_channels,
+        config.model.conv_channels);
+    println!("{train}");
+    println!("paper §IV-B reference (32×32×8 in, 8 filters): conv fwd / grad-prop / kgrad = 8192 each; dense fwd 1280, dense dX 1821, dense dW 1280");
+    Ok(())
+}
+
+/// `report-hw`: E2 + E3 — Fig. 7 breakdown and Table I.
+fn cmd_report_hw(args: &Args) -> Result<()> {
+    let config = ExperimentConfig::from_args(args)?;
+    let cost = CostModel::for_design(&config.sim, &config.model);
+
+    // Measure one train step's activity for the power column.
+    let mut backend = Backend::create(
+        BackendKind::Sim,
+        &config.model,
+        &config.sim,
+        &config.artifacts_dir,
+        config.seed,
+    )?;
+    use tinycl::cl::Learner;
+    let gen = SyntheticCifar::default();
+    let s = &gen.generate(1, 0).samples[0];
+    backend.train_step(&s.x, s.label, config.model.num_classes, config.lr);
+    let (train, _) = backend.sim_stats().unwrap();
+
+    println!("=== design report ({} taps × {} lanes) ===", config.sim.taps, config.sim.lanes);
+    println!("{}", cost.report(train));
+    println!("paper §IV-B: 3.87 ns, 86 mW, 4.74 mm²; Fig. 7: memory ≈80% area / ≈76% power\n");
+
+    println!("=== Table I ===");
+    print!("{}", comparison::render_table1(&comparison::table1_rows(&cost, train)));
+
+    let energy = EnergyModel::new(cost);
+    println!("\n=== energy of one train step ===");
+    print!("{}", energy.report(train, 0));
+    Ok(())
+}
+
+/// `speedup`: E4 — one training epoch on sim (cycles → seconds at the
+/// synthesized clock) vs the AOT-XLA software baseline (wall time), with
+/// the paper's P100 constant for reference.
+fn cmd_speedup(args: &Args) -> Result<()> {
+    let config = ExperimentConfig::from_args(args)?;
+    let steps = args.usize_or("steps", 1000);
+    let gen = SyntheticCifar::default();
+    let per_class = steps.div_ceil(10).max(1);
+    let data = gen.generate(per_class, 0);
+    let samples: Vec<_> = data.samples.iter().take(steps).collect();
+
+    use tinycl::cl::Learner;
+
+    // TinyCL device.
+    let mut sim = Backend::create(
+        BackendKind::Sim, &config.model, &config.sim, &config.artifacts_dir, config.seed)?;
+    for s in &samples {
+        sim.train_step(&s.x, s.label, config.model.num_classes, config.lr);
+    }
+    let (train, _) = sim.sim_stats().unwrap();
+    let cost = CostModel::for_design(&config.sim, &config.model);
+    let sim_secs = train.cycles() as f64 * cost.clock_ns() * 1e-9;
+
+    // Software baseline: AOT JAX/Pallas via PJRT.
+    let mut xla = Backend::create(
+        BackendKind::Xla, &config.model, &config.sim, &config.artifacts_dir, config.seed)?;
+    let t0 = std::time::Instant::now();
+    for s in &samples {
+        xla.train_step(&s.x, s.label, config.model.num_classes, config.lr);
+    }
+    let xla_secs = t0.elapsed().as_secs_f64();
+
+    // The paper's constants for the same nominal workload.
+    let paper_gpu = 103.0;
+    let paper_tinycl = 1.76;
+
+    println!("one epoch = {steps} train steps (batch 1)");
+    println!("TinyCL (sim, {:.2} ns clock): {:.3} s  ({} cycles)",
+        cost.clock_ns(), sim_secs, train.cycles());
+    println!("XLA CPU baseline (this host): {xla_secs:.3} s");
+    println!("speedup vs this host's software baseline: {:.1}×", xla_secs / sim_secs);
+    println!("paper: TinyCL {paper_tinycl} s vs P100 {paper_gpu} s ⇒ 58× (their testbed)");
+    Ok(())
+}
+
+/// `sweep`: A2 — design-space sweep (lanes × taps).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let config = ExperimentConfig::from_args(args)?;
+    let lanes_list = parse_list(&args.str_or("lanes-list", "2,4,8,16"));
+    let taps_list = parse_list(&args.str_or("taps-list", "9"));
+    use tinycl::cl::Learner;
+
+    println!(
+        "{:<6} {:<6} {:>12} {:>10} {:>10} {:>10} {:>12}",
+        "taps", "lanes", "cycles/step", "clock ns", "area mm²", "power mW", "µJ/step"
+    );
+    for &taps in &taps_list {
+        for &lanes in &lanes_list {
+            let sim_cfg = SimConfig::paper().with_lanes(lanes).with_taps(taps);
+            let mut backend = Backend::create(
+                BackendKind::Sim, &config.model, &sim_cfg, &config.artifacts_dir, config.seed)?;
+            let gen = SyntheticCifar {
+                image_size: config.model.image_size,
+                channels: config.model.in_channels,
+                num_classes: config.model.num_classes,
+                noise: config.noise,
+                seed: config.seed,
+            };
+            let s = &gen.generate(1, 0).samples[0];
+            backend.train_step(&s.x, s.label, config.model.num_classes, config.lr);
+            let (train, _) = backend.sim_stats().unwrap();
+            let cost = CostModel::for_design(&sim_cfg, &config.model);
+            let energy = EnergyModel::new(CostModel::for_design(&sim_cfg, &config.model));
+            println!(
+                "{:<6} {:<6} {:>12} {:>10.2} {:>10.2} {:>10.1} {:>12.2}",
+                taps,
+                lanes,
+                train.cycles(),
+                cost.clock_ns(),
+                cost.area_mm2().total(),
+                cost.power_mw(train).total(),
+                energy.report(train, 0).total_uj(),
+            );
+        }
+    }
+    let _ = OpKind::ALL; // keep OpKind linked for future per-op sweeps
+    Ok(())
+}
+
+fn parse_list(s: &str) -> Vec<usize> {
+    s.split(',').filter(|t| !t.is_empty()).map(|t| t.trim().parse().expect("bad list")).collect()
+}

@@ -1,0 +1,257 @@
+//! 2D convolution: forward, input-gradient and kernel-gradient (Eqs. 1–3).
+
+use crate::tensor::{Shape, Tensor};
+
+/// Output spatial size for a conv with the given geometry.
+pub fn out_size(in_size: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (in_size + 2 * pad - k) / stride + 1
+}
+
+/// Forward convolution (paper Eq. 1): `x` CHW, `kernel` OIHW → CHW.
+pub fn forward(x: &Tensor<f32>, kernel: &Tensor<f32>, stride: usize, pad: usize) -> Tensor<f32> {
+    let [cin, h, w]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
+    let kd = kernel.shape().dims();
+    let (cout, kcin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
+    assert_eq!(cin, kcin, "channel mismatch: x {cin} vs kernel {kcin}");
+    let oh = out_size(h, kh, stride, pad);
+    let ow = out_size(w, kw, stride, pad);
+
+    let mut out = Tensor::zeros(Shape::d3(cout, oh, ow));
+    for oc in 0..cout {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0.0f32;
+                for ic in 0..cin {
+                    for ky in 0..kh {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            acc += x.at3(ic, iy as usize, ix as usize)
+                                * kernel.at4(oc, ic, ky, kx);
+                        }
+                    }
+                }
+                out.set3(oc, oy, ox, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Gradient w.r.t. the input (paper Eq. 2): propagate `dy` back through
+/// the kernel. `dy` is CHW over output geometry; result has `x`'s shape.
+pub fn input_grad(
+    dy: &Tensor<f32>,
+    kernel: &Tensor<f32>,
+    x_shape: &Shape,
+    stride: usize,
+    pad: usize,
+) -> Tensor<f32> {
+    let [cin, h, w]: [usize; 3] = x_shape.dims().try_into().expect("x_shape must be CHW");
+    let kd = kernel.shape().dims();
+    let (cout, kcin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
+    assert_eq!(cin, kcin);
+    let dyd = dy.shape().dims();
+    assert_eq!(dyd[0], cout, "dy channels");
+
+    let mut dx = Tensor::zeros(x_shape.clone());
+    for oc in 0..cout {
+        for oy in 0..dyd[1] {
+            for ox in 0..dyd[2] {
+                let g = dy.at3(oc, oy, ox);
+                if g == 0.0 {
+                    continue;
+                }
+                for ic in 0..cin {
+                    for ky in 0..kh {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let cur = dx.at3(ic, iy as usize, ix as usize);
+                            dx.set3(
+                                ic,
+                                iy as usize,
+                                ix as usize,
+                                cur + g * kernel.at4(oc, ic, ky, kx),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Gradient w.r.t. the kernel (paper Eq. 3): correlate input with `dy`.
+pub fn kernel_grad(
+    dy: &Tensor<f32>,
+    x: &Tensor<f32>,
+    kernel_shape: &Shape,
+    stride: usize,
+    pad: usize,
+) -> Tensor<f32> {
+    let [cin, h, w]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
+    let kd = kernel_shape.dims();
+    let (cout, kcin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
+    assert_eq!(cin, kcin);
+    let dyd = dy.shape().dims();
+    assert_eq!(dyd[0], cout);
+
+    let mut dk = Tensor::zeros(kernel_shape.clone());
+    for oc in 0..cout {
+        for oy in 0..dyd[1] {
+            for ox in 0..dyd[2] {
+                let g = dy.at3(oc, oy, ox);
+                if g == 0.0 {
+                    continue;
+                }
+                for ic in 0..cin {
+                    for ky in 0..kh {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let cur = dk.at4(oc, ic, ky, kx);
+                            dk.set4(
+                                oc,
+                                ic,
+                                ky,
+                                kx,
+                                cur + g * x.at3(ic, iy as usize, ix as usize),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dk
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Pcg32;
+
+    fn rand_tensor(rng: &mut Pcg32, shape: Shape) -> Tensor<f32> {
+        let n = shape.numel();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+    }
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1x1 kernel with weight 1 on a single channel is the identity.
+        let mut rng = Pcg32::seeded(1);
+        let x = rand_tensor(&mut rng, Shape::d3(1, 5, 5));
+        let k = Tensor::from_vec(Shape::d4(1, 1, 1, 1), vec![1.0]);
+        let y = forward(&x, &k, 1, 0);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn known_3x3_convolution() {
+        // All-ones 3x3 input, all-ones 3x3 kernel, pad 1:
+        // corners see 4, edges 6, center 9.
+        let x = Tensor::full(Shape::d3(1, 3, 3), 1.0f32);
+        let k = Tensor::full(Shape::d4(1, 1, 3, 3), 1.0f32);
+        let y = forward(&x, &k, 1, 1);
+        assert_eq!(
+            y.data(),
+            &[4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]
+        );
+    }
+
+    #[test]
+    fn stride_two_downsamples() {
+        let x = Tensor::full(Shape::d3(1, 4, 4), 1.0f32);
+        let k = Tensor::full(Shape::d4(1, 1, 2, 2), 1.0f32);
+        let y = forward(&x, &k, 2, 0);
+        assert_eq!(y.shape().dims(), &[1, 2, 2]);
+        assert!(y.data().iter().all(|&v| v == 4.0));
+    }
+
+    /// Finite-difference check of the analytic gradients.
+    #[test]
+    fn gradients_match_finite_difference() {
+        check("conv grads ~ finite diff", 53, 8, |g| {
+            let cin = g.usize_in(1, 2);
+            let cout = g.usize_in(1, 2);
+            let hw = g.usize_in(3, 5);
+            let mut rng = g.rng().fork(9);
+            let x = rand_tensor(&mut rng, Shape::d3(cin, hw, hw));
+            let k = rand_tensor(&mut rng, Shape::d4(cout, cin, 3, 3));
+            let dy_shape = forward(&x, &k, 1, 1).shape().clone();
+            let dy = rand_tensor(&mut rng, dy_shape);
+
+            // loss = <forward(x,k), dy>; check d loss / dx and d loss / dk.
+            let dx = input_grad(&dy, &k, x.shape(), 1, 1);
+            let dk = kernel_grad(&dy, &x, k.shape(), 1, 1);
+            let eps = 1e-2f32;
+
+            let loss = |x: &Tensor<f32>, k: &Tensor<f32>| -> f32 {
+                forward(x, k, 1, 1)
+                    .data()
+                    .iter()
+                    .zip(dy.data())
+                    .map(|(a, b)| a * b)
+                    .sum()
+            };
+
+            // spot-check a few coordinates of each gradient
+            for probe in 0..4 {
+                let i = (probe * 7 + 3) % x.data().len();
+                let mut xp = x.clone();
+                xp.data_mut()[i] += eps;
+                let mut xm = x.clone();
+                xm.data_mut()[i] -= eps;
+                let fd = (loss(&xp, &k) - loss(&xm, &k)) / (2.0 * eps);
+                assert!(
+                    (fd - dx.data()[i]).abs() < 2e-2,
+                    "dx[{i}]: fd={fd} analytic={}",
+                    dx.data()[i]
+                );
+
+                let j = (probe * 5 + 1) % k.data().len();
+                let mut kp = k.clone();
+                kp.data_mut()[j] += eps;
+                let mut km = k.clone();
+                km.data_mut()[j] -= eps;
+                let fd = (loss(&x, &kp) - loss(&x, &km)) / (2.0 * eps);
+                assert!(
+                    (fd - dk.data()[j]).abs() < 2e-2,
+                    "dk[{j}]: fd={fd} analytic={}",
+                    dk.data()[j]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn paper_shapes() {
+        // conv on the paper's 32x32x8 feature with 8 filters keeps geometry.
+        let mut rng = Pcg32::seeded(2);
+        let x = rand_tensor(&mut rng, Shape::d3(8, 32, 32));
+        let k = rand_tensor(&mut rng, Shape::d4(8, 8, 3, 3));
+        let y = forward(&x, &k, 1, 1);
+        assert_eq!(y.shape().dims(), &[8, 32, 32]);
+    }
+}

@@ -1,0 +1,122 @@
+//! Dense layer: forward (Eq. 4), input gradient (Eq. 5), weight gradient
+//! (Eq. 6). Weights are stored `(in, out)` row-major, matching Eq. (4)'s
+//! `W_{i,n}` indexing.
+
+use crate::tensor::{Shape, Tensor};
+
+/// `y_n = Σ_i I_i · W_{i,n}` — Eq. (4).
+pub fn forward(x: &[f32], w: &Tensor<f32>) -> Vec<f32> {
+    let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
+    assert_eq!(x.len(), n_in, "input length {} vs weight rows {n_in}", x.len());
+    let wd = w.data();
+    let mut y = vec![0.0f32; n_out];
+    for i in 0..n_in {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue; // post-ReLU inputs are often sparse
+        }
+        let row = &wd[i * n_out..(i + 1) * n_out];
+        for (n, wn) in row.iter().enumerate() {
+            y[n] += xi * wn;
+        }
+    }
+    y
+}
+
+/// `dX_i = Σ_n dY_n · W_{i,n}` — Eq. (5).
+pub fn input_grad(dy: &[f32], w: &Tensor<f32>) -> Vec<f32> {
+    let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
+    assert_eq!(dy.len(), n_out);
+    let wd = w.data();
+    let mut dx = vec![0.0f32; n_in];
+    for i in 0..n_in {
+        let row = &wd[i * n_out..(i + 1) * n_out];
+        let mut acc = 0.0f32;
+        for (n, wn) in row.iter().enumerate() {
+            acc += dy[n] * wn;
+        }
+        dx[i] = acc;
+    }
+    dx
+}
+
+/// `dW_{i,n} = I_i · dY_n` — Eq. (6), an outer product.
+pub fn weight_grad(dy: &[f32], x: &[f32]) -> Tensor<f32> {
+    let mut dw = Tensor::zeros(Shape::d2(x.len(), dy.len()));
+    let n_out = dy.len();
+    let data = dw.data_mut();
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &mut data[i * n_out..(i + 1) * n_out];
+        for (n, &g) in dy.iter().enumerate() {
+            row[n] = xi * g;
+        }
+    }
+    dw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn forward_known_values() {
+        // W = [[1,2],[3,4],[5,6]] (in=3, out=2); x = [1,1,1] → y = [9,12].
+        let w = Tensor::from_vec(Shape::d2(3, 2), vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(forward(&[1., 1., 1.], &w), vec![9., 12.]);
+        // x = [1,0,0] picks out the first row.
+        assert_eq!(forward(&[1., 0., 0.], &w), vec![1., 2.]);
+    }
+
+    #[test]
+    fn input_grad_is_w_transpose_times_dy() {
+        let w = Tensor::from_vec(Shape::d2(3, 2), vec![1., 2., 3., 4., 5., 6.]);
+        // dX_i = Σ_n dY_n W_{i,n}; dY = [1, 10] → dX = [21, 43, 65].
+        assert_eq!(input_grad(&[1., 10.], &w), vec![21., 43., 65.]);
+    }
+
+    #[test]
+    fn weight_grad_outer_product() {
+        let dw = weight_grad(&[2., 3.], &[1., 10.]);
+        assert_eq!(dw.shape().dims(), &[2, 2]);
+        assert_eq!(dw.data(), &[2., 3., 20., 30.]);
+    }
+
+    #[test]
+    fn grads_match_finite_difference() {
+        check("dense grads ~ finite diff", 61, 20, |g| {
+            let n_in = g.usize_in(2, 10);
+            let n_out = g.usize_in(1, 6);
+            let x: Vec<f32> = (0..n_in).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let wvec: Vec<f32> = (0..n_in * n_out).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            let w = Tensor::from_vec(Shape::d2(n_in, n_out), wvec);
+            let dy: Vec<f32> = (0..n_out).map(|_| g.f32_in(-1.0, 1.0)).collect();
+
+            let loss = |x: &[f32], w: &Tensor<f32>| -> f32 {
+                forward(x, w).iter().zip(&dy).map(|(a, b)| a * b).sum()
+            };
+            let dx = input_grad(&dy, &w);
+            let dw = weight_grad(&dy, &x);
+            let eps = 1e-2f32;
+
+            for i in 0..n_in {
+                let mut xp = x.clone();
+                xp[i] += eps;
+                let mut xm = x.clone();
+                xm[i] -= eps;
+                let fd = (loss(&xp, &w) - loss(&xm, &w)) / (2.0 * eps);
+                assert!((fd - dx[i]).abs() < 1e-2, "dx[{i}] fd={fd} got={}", dx[i]);
+            }
+            let j = g.usize_in(0, n_in * n_out - 1);
+            let mut wp = w.clone();
+            wp.data_mut()[j] += eps;
+            let mut wm = w.clone();
+            wm.data_mut()[j] -= eps;
+            let fd = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps);
+            assert!((fd - dw.data()[j]).abs() < 1e-2);
+        });
+    }
+}

@@ -1,0 +1,54 @@
+//! Weight initialization (He/Kaiming uniform — appropriate for ReLU nets
+//! and keeps magnitudes inside Q4.12's [-8, 8) range by construction).
+
+use crate::tensor::{Shape, Tensor};
+use crate::util::rng::Pcg32;
+
+/// He-uniform init for a conv kernel OIHW: bound = sqrt(6 / fan_in).
+pub fn conv_kernel(rng: &mut Pcg32, cout: usize, cin: usize, kh: usize, kw: usize) -> Tensor<f32> {
+    let fan_in = (cin * kh * kw) as f32;
+    let bound = (6.0 / fan_in).sqrt();
+    let shape = Shape::d4(cout, cin, kh, kw);
+    let n = shape.numel();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-bound, bound)).collect())
+}
+
+/// He-uniform init for dense weights (in, out): bound = sqrt(6 / n_in).
+pub fn dense_weights(rng: &mut Pcg32, n_in: usize, n_out: usize) -> Tensor<f32> {
+    let bound = (6.0 / n_in as f32).sqrt();
+    let shape = Shape::d2(n_in, n_out);
+    let n = shape.numel();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-bound, bound)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_respected() {
+        let mut rng = Pcg32::seeded(3);
+        let k = conv_kernel(&mut rng, 8, 3, 3, 3);
+        let bound = (6.0f32 / 27.0).sqrt();
+        assert!(k.data().iter().all(|v| v.abs() <= bound));
+        let w = dense_weights(&mut rng, 8192, 10);
+        let bound = (6.0f32 / 8192.0).sqrt();
+        assert!(w.data().iter().all(|v| v.abs() <= bound));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = conv_kernel(&mut Pcg32::seeded(1), 2, 2, 3, 3);
+        let b = conv_kernel(&mut Pcg32::seeded(1), 2, 2, 3, 3);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn not_degenerate() {
+        let mut rng = Pcg32::seeded(5);
+        let k = conv_kernel(&mut rng, 4, 4, 3, 3);
+        let distinct: std::collections::HashSet<u32> =
+            k.data().iter().map(|v| v.to_bits()).collect();
+        assert!(distinct.len() > k.data().len() / 2);
+    }
+}

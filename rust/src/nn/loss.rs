@@ -1,0 +1,95 @@
+//! Softmax cross-entropy loss with class masking for class-incremental CL.
+//!
+//! The paper's CL setup grows the effective output head as tasks arrive
+//! ("the output features' value is equal to the number of classes [...]
+//! not static", §III-F-4). We keep the dense layer at the full 10-way
+//! width and mask logits of classes not yet seen — numerically equivalent
+//! to a growing head and what the dynamic `n` in the dense dataflow models.
+
+/// Softmax over the first `active` logits; inactive entries get probability
+/// zero. Numerically stabilized by max subtraction.
+pub fn masked_softmax(logits: &[f32], active: usize) -> Vec<f32> {
+    assert!(active >= 1 && active <= logits.len());
+    let m = logits[..active].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits[..active].iter().map(|&l| (l - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    let mut p = vec![0.0; logits.len()];
+    for (i, e) in exps.into_iter().enumerate() {
+        p[i] = e / z;
+    }
+    p
+}
+
+/// Cross-entropy loss and its gradient w.r.t. the logits:
+/// `dL/dlogit_i = p_i - 1[i == label]` (zero for masked classes).
+pub fn softmax_ce(logits: &[f32], label: usize, active: usize) -> (f32, Vec<f32>) {
+    assert!(label < active, "label {label} outside active head {active}");
+    let p = masked_softmax(logits, active);
+    let loss = -(p[label].max(1e-12)).ln();
+    let mut grad = p;
+    grad[label] -= 1.0;
+    (loss, grad)
+}
+
+/// Argmax over the active head (prediction).
+pub fn predict(logits: &[f32], active: usize) -> usize {
+    logits[..active]
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn softmax_sums_to_one_over_active() {
+        let p = masked_softmax(&[1.0, 2.0, 3.0, 100.0], 3);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert_eq!(p[3], 0.0); // masked class untouched despite huge logit
+    }
+
+    #[test]
+    fn loss_decreases_with_correct_confidence() {
+        let (low, _) = softmax_ce(&[0.0, 0.0], 0, 2);
+        let (high, _) = softmax_ce(&[5.0, 0.0], 0, 2);
+        assert!(high < low);
+    }
+
+    #[test]
+    fn gradient_sums_to_zero_and_matches_fd() {
+        check("ce grad ~ fd", 67, 50, |g| {
+            let n = g.usize_in(2, 10);
+            let active = g.usize_in(2, n);
+            let label = g.usize_in(0, active - 1);
+            let logits: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let (_, grad) = softmax_ce(&logits, label, active);
+            // gradient over active head sums to zero
+            assert!(grad[..active].iter().sum::<f32>().abs() < 1e-5);
+            // masked entries have zero gradient
+            for i in active..n {
+                assert_eq!(grad[i], 0.0);
+            }
+            // finite difference on one coordinate
+            let i = g.usize_in(0, active - 1);
+            let eps = 1e-3;
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let mut lm = logits.clone();
+            lm[i] -= eps;
+            let (fp, _) = softmax_ce(&lp, label, active);
+            let (fm, _) = softmax_ce(&lm, label, active);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!((fd - grad[i]).abs() < 1e-3, "fd={fd} grad={}", grad[i]);
+        });
+    }
+
+    #[test]
+    fn predict_ignores_masked() {
+        assert_eq!(predict(&[1.0, 2.0, 99.0], 2), 1);
+    }
+}

@@ -1,0 +1,22 @@
+//! f32 reference implementations of every layer TinyCL executes.
+//!
+//! This is the *software-level implementation* of the paper's workload
+//! (§IV-A compares against TensorFlow-on-P100 running exactly this model:
+//! Conv3×3(3→8) + ReLU + Conv3×3(8→8) + ReLU + Dense(8192→C)). It serves
+//! as (1) the float oracle for the fixed-point `qnn`/`sim` paths, (2) the
+//! fast backend for CL baselines, and (3) the cross-check target for the
+//! AOT JAX artifacts executed via PJRT.
+//!
+//! Conventions: activations CHW, kernels OIHW (out, in, kh, kw), dense
+//! weights (in, out) per paper Eq. (4). No biases — the paper's datapath
+//! has no bias port (§III); batch size is 1 (§IV-A).
+
+pub mod conv;
+pub mod dense;
+pub mod init;
+pub mod loss;
+pub mod model;
+pub mod relu;
+pub mod sgd;
+
+pub use model::{Gradients, Model, ModelConfig, Params, TrainOutput};

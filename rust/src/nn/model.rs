@@ -1,0 +1,287 @@
+//! The paper's evaluation model (§IV-A): Conv3×3 + ReLU + Conv3×3 + ReLU
+//! + Dense, trained with SGD at batch size 1.
+
+use super::{conv, dense, loss, relu, sgd};
+use crate::tensor::{Shape, Tensor};
+use crate::util::rng::Pcg32;
+
+/// Model geometry. Defaults mirror §IV-A: 32×32×3 input, 8 filters per
+/// conv (stride 1, pad 1 — geometry-preserving), 10 classes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub in_channels: usize,
+    pub image_size: usize,
+    pub conv_channels: usize,
+    pub num_classes: usize,
+    /// Gradient-norm clip for the float path (`f32::INFINITY` = off).
+    pub grad_clip: f32,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            in_channels: 3,
+            image_size: 32,
+            conv_channels: 8,
+            num_classes: 10,
+            grad_clip: f32::INFINITY,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn dense_in(&self) -> usize {
+        self.conv_channels * self.image_size * self.image_size
+    }
+
+    /// Gradient-normalization shift for the fixed-point conv kernel
+    /// gradient: ≈log₂(H·W), the length of the spatial reduction. The
+    /// barrel shift at the multiplier output keeps the 32-bit Q8.24
+    /// accumulator from wrapping (`qnn`/`sim` only; the float path uses
+    /// true gradients + norm clipping). See `Fx::mul_acc_shifted`.
+    pub fn kgrad_shift(&self) -> u32 {
+        (self.image_size * self.image_size).next_power_of_two().trailing_zeros()
+    }
+
+    /// Gradient-normalization shift for the fixed-point fused dense
+    /// weight update: ≈½·log₂(fan-in). Unlike the conv kernel gradient
+    /// this product never wraps (no reduction), but its magnitude —
+    /// activation (≤ 8) × loss gradient — is orders above the useful
+    /// weight scale (~√(1/fan-in)), and at batch 1 the un-normalized
+    /// update drives W into saturation over a long GDumb epoch
+    /// (EXPERIMENTS.md E5). The same product-bus barrel shift fixes it.
+    pub fn dense_grad_shift(&self) -> u32 {
+        self.dense_in().next_power_of_two().trailing_zeros() / 2
+    }
+
+    /// Total trainable parameters.
+    pub fn param_count(&self) -> usize {
+        self.conv_channels * self.in_channels * 9
+            + self.conv_channels * self.conv_channels * 9
+            + self.dense_in() * self.num_classes
+    }
+}
+
+/// Trainable parameters.
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub k1: Tensor<f32>, // (C, in, 3, 3)
+    pub k2: Tensor<f32>, // (C, C, 3, 3)
+    pub w: Tensor<f32>,  // (C*H*W, classes)
+}
+
+/// Per-parameter gradients from one backward pass.
+#[derive(Clone, Debug)]
+pub struct Gradients {
+    pub k1: Tensor<f32>,
+    pub k2: Tensor<f32>,
+    pub w: Tensor<f32>,
+}
+
+/// Intermediate activations needed by the backward pass (the paper's
+/// "Partial Feature memory" holds exactly these).
+pub struct ForwardCache {
+    pub x: Tensor<f32>,
+    pub z1: Tensor<f32>, // conv1 pre-activation
+    pub a1: Tensor<f32>, // relu(z1)
+    pub z2: Tensor<f32>, // conv2 pre-activation
+    pub a2: Tensor<f32>, // relu(z2), flattened into dense
+    pub logits: Vec<f32>,
+}
+
+/// Result of a single train step.
+#[derive(Clone, Debug)]
+pub struct TrainOutput {
+    pub loss: f32,
+    pub correct: bool,
+}
+
+pub struct Model {
+    pub config: ModelConfig,
+    pub params: Params,
+}
+
+impl Model {
+    /// Fresh model with He-uniform init, deterministic in `seed`.
+    pub fn new(config: ModelConfig, seed: u64) -> Model {
+        let mut rng = Pcg32::new(seed, 100);
+        let params = Params {
+            k1: super::init::conv_kernel(
+                &mut rng,
+                config.conv_channels,
+                config.in_channels,
+                3,
+                3,
+            ),
+            k2: super::init::conv_kernel(
+                &mut rng,
+                config.conv_channels,
+                config.conv_channels,
+                3,
+                3,
+            ),
+            w: super::init::dense_weights(&mut rng, config.dense_in(), config.num_classes),
+        };
+        Model { config, params }
+    }
+
+    pub fn from_params(config: ModelConfig, params: Params) -> Model {
+        assert_eq!(
+            params.w.shape(),
+            &Shape::d2(config.dense_in(), config.num_classes)
+        );
+        Model { config, params }
+    }
+
+    /// Forward pass keeping the caches backward needs.
+    pub fn forward_cached(&self, x: &Tensor<f32>) -> ForwardCache {
+        let z1 = conv::forward(x, &self.params.k1, 1, 1);
+        let a1 = relu::forward(&z1);
+        let z2 = conv::forward(&a1, &self.params.k2, 1, 1);
+        let a2 = relu::forward(&z2);
+        let flat = a2.data();
+        let logits = dense::forward(flat, &self.params.w);
+        ForwardCache { x: x.clone(), z1, a1, z2, a2, logits }
+    }
+
+    /// Inference only: logits.
+    pub fn forward(&self, x: &Tensor<f32>) -> Vec<f32> {
+        self.forward_cached(x).logits
+    }
+
+    /// Predicted class over the first `active_classes` logits.
+    pub fn predict(&self, x: &Tensor<f32>, active_classes: usize) -> usize {
+        loss::predict(&self.forward(x), active_classes)
+    }
+
+    /// Full backward pass from the CE gradient. Returns gradients for all
+    /// parameters (does not mutate the model).
+    pub fn backward(&self, cache: &ForwardCache, dlogits: &[f32]) -> Gradients {
+        // Dense layer.
+        let dw = dense::weight_grad(dlogits, cache.a2.data());
+        let da2_flat = dense::input_grad(dlogits, &self.params.w);
+        let da2 = Tensor::from_vec(cache.a2.shape().clone(), da2_flat);
+
+        // ReLU 2 + conv2.
+        let dz2 = relu::backward(&da2, &cache.z2);
+        let dk2 = conv::kernel_grad(&dz2, &cache.a1, self.params.k2.shape(), 1, 1);
+        let da1 = conv::input_grad(&dz2, &self.params.k2, cache.a1.shape(), 1, 1);
+
+        // ReLU 1 + conv1 (no input gradient needed at the first layer).
+        let dz1 = relu::backward(&da1, &cache.z1);
+        let dk1 = conv::kernel_grad(&dz1, &cache.x, self.params.k1.shape(), 1, 1);
+
+        Gradients { k1: dk1, k2: dk2, w: dw }
+    }
+
+    /// One SGD train step (batch 1) on `(x, label)` with the head masked to
+    /// `active_classes`. Returns loss and top-1 correctness.
+    pub fn train_step(
+        &mut self,
+        x: &Tensor<f32>,
+        label: usize,
+        active_classes: usize,
+        lr: f32,
+    ) -> TrainOutput {
+        let cache = self.forward_cached(x);
+        let (loss_value, dlogits) = loss::softmax_ce(&cache.logits, label, active_classes);
+        let correct = loss::predict(&cache.logits, active_classes) == label;
+        let mut grads = self.backward(&cache, &dlogits);
+        sgd::clip_by_norm(&mut grads.k1, self.config.grad_clip);
+        sgd::clip_by_norm(&mut grads.k2, self.config.grad_clip);
+        sgd::clip_by_norm(&mut grads.w, self.config.grad_clip);
+        self.apply(&grads, lr);
+        TrainOutput { loss: loss_value, correct }
+    }
+
+    /// Apply pre-computed gradients.
+    pub fn apply(&mut self, grads: &Gradients, lr: f32) {
+        sgd::step(&mut self.params.k1, &grads.k1, lr);
+        sgd::step(&mut self.params.k2, &grads.k2, lr);
+        sgd::step(&mut self.params.w, &grads.w, lr);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_config() -> ModelConfig {
+        ModelConfig {
+            in_channels: 3,
+            image_size: 8,
+            conv_channels: 4,
+            num_classes: 4,
+            grad_clip: f32::INFINITY,
+        }
+    }
+
+    fn rand_image(seed: u64, cfg: &ModelConfig) -> Tensor<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        let shape = Shape::d3(cfg.in_channels, cfg.image_size, cfg.image_size);
+        let n = shape.numel();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+    }
+
+    #[test]
+    fn shapes_consistent() {
+        let cfg = ModelConfig::default();
+        let m = Model::new(cfg.clone(), 1);
+        assert_eq!(m.params.k1.shape().dims(), &[8, 3, 3, 3]);
+        assert_eq!(m.params.k2.shape().dims(), &[8, 8, 3, 3]);
+        assert_eq!(m.params.w.shape().dims(), &[8192, 10]);
+        assert_eq!(cfg.param_count(), 8 * 3 * 9 + 8 * 8 * 9 + 8192 * 10);
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_same_sample() {
+        let cfg = tiny_config();
+        let mut m = Model::new(cfg.clone(), 2);
+        let x = rand_image(3, &cfg);
+        let first = m.train_step(&x, 1, 4, 0.05).loss;
+        let mut last = first;
+        for _ in 0..20 {
+            last = m.train_step(&x, 1, 4, 0.05).loss;
+        }
+        assert!(
+            last < first * 0.5,
+            "loss did not drop: first={first} last={last}"
+        );
+    }
+
+    #[test]
+    fn masked_classes_never_predicted() {
+        let cfg = tiny_config();
+        let m = Model::new(cfg.clone(), 4);
+        let x = rand_image(5, &cfg);
+        for _ in 0..5 {
+            assert!(m.predict(&x, 2) < 2);
+        }
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let cfg = tiny_config();
+        let x = rand_image(7, &cfg);
+        let mut a = Model::new(cfg.clone(), 9);
+        let mut b = Model::new(cfg.clone(), 9);
+        for _ in 0..3 {
+            let la = a.train_step(&x, 0, 4, 0.1).loss;
+            let lb = b.train_step(&x, 0, 4, 0.1).loss;
+            assert_eq!(la, lb);
+        }
+        assert_eq!(a.params.w.data(), b.params.w.data());
+    }
+
+    #[test]
+    fn backward_does_not_mutate() {
+        let cfg = tiny_config();
+        let m = Model::new(cfg.clone(), 11);
+        let x = rand_image(13, &cfg);
+        let before = m.params.w.data().to_vec();
+        let cache = m.forward_cached(&x);
+        let (_, dl) = super::loss::softmax_ce(&cache.logits, 0, 4);
+        let _ = m.backward(&cache, &dl);
+        assert_eq!(m.params.w.data(), &before[..]);
+    }
+}

@@ -1,0 +1,52 @@
+//! ReLU activation (forward + backward mask).
+
+use crate::tensor::Tensor;
+
+pub fn forward(x: &Tensor<f32>) -> Tensor<f32> {
+    x.map(|v| v.max(0.0))
+}
+
+/// dL/dx = dL/dy where the *pre-activation* was positive, else 0.
+pub fn backward(dy: &Tensor<f32>, pre_activation: &Tensor<f32>) -> Tensor<f32> {
+    assert_eq!(dy.shape(), pre_activation.shape());
+    dy.zip_with(pre_activation, |g, x| if x > 0.0 { g } else { 0.0 })
+}
+
+pub fn forward_vec(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| v.max(0.0)).collect()
+}
+
+pub fn backward_vec(dy: &[f32], pre_activation: &[f32]) -> Vec<f32> {
+    assert_eq!(dy.len(), pre_activation.len());
+    dy.iter()
+        .zip(pre_activation)
+        .map(|(&g, &x)| if x > 0.0 { g } else { 0.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    #[test]
+    fn forward_clamps_negatives() {
+        let x = Tensor::from_vec(Shape::d1(4), vec![-2.0, -0.0, 1.0, 3.5]);
+        assert_eq!(forward(&x).data(), &[0.0, 0.0, 1.0, 3.5]);
+    }
+
+    #[test]
+    fn backward_masks_by_preactivation() {
+        let pre = Tensor::from_vec(Shape::d1(4), vec![-1.0, 0.0, 2.0, 5.0]);
+        let dy = Tensor::from_vec(Shape::d1(4), vec![10.0, 10.0, 10.0, 10.0]);
+        assert_eq!(backward(&dy, &pre).data(), &[0.0, 0.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn vec_variants_agree() {
+        let pre = vec![-1.0, 2.0];
+        let dy = vec![3.0, 4.0];
+        assert_eq!(forward_vec(&pre), vec![0.0, 2.0]);
+        assert_eq!(backward_vec(&dy, &pre), vec![0.0, 4.0]);
+    }
+}

@@ -1,0 +1,57 @@
+//! Plain SGD parameter update (the paper's optimizer; lr = 1, batch 1).
+
+use crate::tensor::Tensor;
+
+/// `w <- w - lr * g`, in place.
+pub fn step(w: &mut Tensor<f32>, g: &Tensor<f32>, lr: f32) {
+    assert_eq!(w.shape(), g.shape());
+    for (wi, gi) in w.data_mut().iter_mut().zip(g.data()) {
+        *wi -= lr * gi;
+    }
+}
+
+/// Gradient-norm clipping (stabilizes lr=1 fixed-point-style training on
+/// the float path; threshold ∞ disables it).
+pub fn clip_by_norm(g: &mut Tensor<f32>, max_norm: f32) {
+    if !max_norm.is_finite() {
+        return;
+    }
+    let norm = g.l2_norm();
+    if norm > max_norm && norm > 0.0 {
+        let k = max_norm / norm;
+        for v in g.data_mut() {
+            *v *= k;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    #[test]
+    fn step_applies_lr() {
+        let mut w = Tensor::from_vec(Shape::d1(2), vec![1.0, 2.0]);
+        let g = Tensor::from_vec(Shape::d1(2), vec![0.5, -0.5]);
+        step(&mut w, &g, 2.0);
+        assert_eq!(w.data(), &[0.0, 3.0]);
+    }
+
+    #[test]
+    fn clip_scales_down_only() {
+        let mut g = Tensor::from_vec(Shape::d1(2), vec![3.0, 4.0]); // norm 5
+        clip_by_norm(&mut g, 1.0);
+        assert!((g.l2_norm() - 1.0).abs() < 1e-6);
+        let mut g2 = Tensor::from_vec(Shape::d1(2), vec![0.3, 0.4]);
+        clip_by_norm(&mut g2, 1.0);
+        assert_eq!(g2.data(), &[0.3, 0.4]);
+    }
+
+    #[test]
+    fn infinite_threshold_noop() {
+        let mut g = Tensor::from_vec(Shape::d1(2), vec![30.0, 40.0]);
+        clip_by_norm(&mut g, f32::INFINITY);
+        assert_eq!(g.data(), &[30.0, 40.0]);
+    }
+}

@@ -1,0 +1,426 @@
+//! Q4.12 layer computations with the hardware's exact writeback points.
+//!
+//! Writeback value clips (§III-A, [42]): the control unit clamps the
+//! kernel-gradient writeback to ±[`GRAD_CLIP`] and every parameter-update
+//! writeback to ±[`PARAM_CLIP`] — a comparator+mux on the writeback bus.
+//! Without them, batch-1 training in a ±8 number system is unstable: a
+//! saturated-logit phase keeps the loss gradient large, the kernel
+//! gradient (bounded only by the Q4.12 range, ±8) then moves kernels by
+//! up to lr·8 per step, and the network locks into all-saturated
+//! activations (EXPERIMENTS.md E5 documents the failure signature).
+//! The f32 reference gets the same stability from gradient-norm clipping.
+
+use crate::fixed::{acc_fmt_shift, wb_dither, Acc, Fx};
+use crate::tensor::{Shape, Tensor};
+
+/// Dither-key bases so every parameter tensor draws a disjoint
+/// stochastic-rounding stream (shared by `qnn` and `sim` — the key is
+/// (base + tensor-flat index, step), independent of evaluation order).
+pub const DITHER_BASE_W: u64 = 0;
+pub const DITHER_BASE_K2: u64 = 1 << 40;
+pub const DITHER_BASE_K1: u64 = 2 << 40;
+
+/// Kernel-gradient writeback clip: ±1/16 (256 raw). Normal gradient
+/// magnitudes at the paper geometry are ~1e-3; this only truncates the
+/// runaway regime.
+pub const GRAD_CLIP: Fx = Fx::from_raw(256);
+/// Parameter writeback clip: ±1.0 (4096 raw). Trained conv kernels and
+/// dense weights in this model are ≪ 1; ±1 leaves 12 dB of headroom
+/// while making activation blow-up impossible to sustain.
+pub const PARAM_CLIP: Fx = Fx::from_raw(4096);
+
+/// Conv forward, Eq. (1), hardware numerics: full 32-bit accumulation per
+/// output pixel (across all taps and input-channel groups), single
+/// writeback, optional fused ReLU.
+pub fn conv_forward(
+    x: &Tensor<Fx>,
+    kernel: &Tensor<Fx>,
+    pad: usize,
+    fuse_relu: bool,
+) -> Tensor<Fx> {
+    let [cin, h, w]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
+    let kd = kernel.shape().dims();
+    let (cout, kcin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
+    assert_eq!(cin, kcin);
+    let oh = h + 2 * pad + 1 - kh; // stride 1
+    let ow = w + 2 * pad + 1 - kw;
+
+    let fmt = acc_fmt_shift(cin * kh * kw);
+    let mut out = Tensor::zeros(Shape::d3(cout, oh, ow));
+    for oc in 0..cout {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = Acc::ZERO;
+                for ic in 0..cin {
+                    for ky in 0..kh {
+                        let iy = (oy + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            acc = acc.add(
+                                x.at3(ic, iy as usize, ix as usize)
+                                    .mul_acc_shifted(kernel.at4(oc, ic, ky, kx), fmt),
+                            );
+                        }
+                    }
+                }
+                let mut v = acc.to_fx_fmt(fmt);
+                if fuse_relu {
+                    v = v.relu();
+                }
+                out.set3(oc, oy, ox, v);
+            }
+        }
+    }
+    out
+}
+
+/// Conv gradient propagation, Eq. (2): same dataflow as forward with the
+/// kernel transposed (out↔in) and rotated 180°. One writeback per pixel.
+pub fn conv_input_grad(
+    dy: &Tensor<Fx>,
+    kernel: &Tensor<Fx>,
+    x_shape: &Shape,
+    pad: usize,
+) -> Tensor<Fx> {
+    let [cin, h, w]: [usize; 3] = x_shape.dims().try_into().expect("x_shape must be CHW");
+    let kd = kernel.shape().dims();
+    let (cout, kcin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
+    assert_eq!(cin, kcin);
+    let dyd = dy.shape().dims();
+    assert_eq!(dyd[0], cout);
+    let (gh, gw) = (dyd[1], dyd[2]);
+
+    let fmt = acc_fmt_shift(cout * kh * kw);
+    let mut dx = Tensor::zeros(x_shape.clone());
+    for ic in 0..cin {
+        for iy in 0..h {
+            for ix in 0..w {
+                let mut acc = Acc::ZERO;
+                for oc in 0..cout {
+                    for ky in 0..kh {
+                        // forward: iy = oy + ky - pad  ⇒  oy = iy - ky + pad
+                        let oy = iy as isize - ky as isize + pad as isize;
+                        if oy < 0 || oy >= gh as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ox = ix as isize - kx as isize + pad as isize;
+                            if ox < 0 || ox >= gw as isize {
+                                continue;
+                            }
+                            acc = acc.add(
+                                dy.at3(oc, oy as usize, ox as usize)
+                                    .mul_acc_shifted(kernel.at4(oc, ic, ky, kx), fmt),
+                            );
+                        }
+                    }
+                }
+                dx.set3(ic, iy, ix, acc.to_fx_fmt(fmt));
+            }
+        }
+    }
+    dx
+}
+
+/// Conv kernel gradient, Eq. (3): one 32-bit accumulator per kernel tap,
+/// accumulated over all spatial positions, one writeback per tap.
+///
+/// `grad_shift` is the gradient-normalization barrel shift applied to
+/// every product before accumulation (see [`Fx::mul_acc_shifted`]): the
+/// H·W-long spatial reduction would wrap the 32-bit accumulator at
+/// realistic magnitudes. The model passes ≈log₂(H·W)
+/// ([`crate::nn::ModelConfig::kgrad_shift`]); pass 0 to reproduce the
+/// paper's literal (wrap-prone) datapath.
+pub fn conv_kernel_grad(
+    dy: &Tensor<Fx>,
+    x: &Tensor<Fx>,
+    kernel_shape: &Shape,
+    pad: usize,
+    grad_shift: u32,
+) -> Tensor<Fx> {
+    let [cin, h, w]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
+    let kd = kernel_shape.dims();
+    let (cout, kcin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
+    assert_eq!(cin, kcin);
+    let dyd = dy.shape().dims();
+    assert_eq!(dyd[0], cout);
+
+    let mut dk = Tensor::zeros(kernel_shape.clone());
+    for oc in 0..cout {
+        for ic in 0..cin {
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    let mut acc = Acc::ZERO;
+                    for oy in 0..dyd[1] {
+                        let iy = (oy + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for ox in 0..dyd[2] {
+                            let ix = (ox + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            acc = acc.add(
+                                dy.at3(oc, oy, ox)
+                                    .mul_acc_shifted(x.at3(ic, iy as usize, ix as usize), grad_shift),
+                            );
+                        }
+                    }
+                    dk.set4(oc, ic, ky, kx, acc.to_fx().clamp_abs(GRAD_CLIP));
+                }
+            }
+        }
+    }
+    dk
+}
+
+/// Dense forward, Eq. (4): full 32-bit accumulation per output, one
+/// writeback each.
+pub fn dense_forward(x: &[Fx], w: &Tensor<Fx>) -> Vec<Fx> {
+    let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
+    assert_eq!(x.len(), n_in);
+    let fmt = acc_fmt_shift(n_in);
+    let wd = w.data();
+    (0..n_out)
+        .map(|n| {
+            let mut acc = Acc::ZERO;
+            for i in 0..n_in {
+                acc = acc.add(x[i].mul_acc_shifted(wd[i * n_out + n], fmt));
+            }
+            acc.to_fx_fmt(fmt)
+        })
+        .collect()
+}
+
+/// Dense gradient propagation, Eq. (5): `dX_i = Σ_n dY_n · W_{i,n}`.
+pub fn dense_input_grad(dy: &[Fx], w: &Tensor<Fx>) -> Vec<Fx> {
+    let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
+    assert_eq!(dy.len(), n_out);
+    let fmt = acc_fmt_shift(n_out);
+    let wd = w.data();
+    (0..n_in)
+        .map(|i| {
+            let mut acc = Acc::ZERO;
+            for n in 0..n_out {
+                acc = acc.add(dy[n].mul_acc_shifted(wd[i * n_out + n], fmt));
+            }
+            acc.to_fx_fmt(fmt)
+        })
+        .collect()
+}
+
+/// Fused dense weight update (Eq. 6 + SGD, multi-adder mode): for each
+/// weight, `W_{i,n} <- wb(W_{i,n} - (I_i · dY'_n) >> grad_shift)` where
+/// `dY'` is the lr-pre-scaled loss gradient, `grad_shift` the
+/// normalization barrel shift ([`crate::nn::ModelConfig::dense_grad_shift`])
+/// and `wb` the 32-bit → 16-bit writeback. Mutates `w` in place; dW is
+/// never materialized, as in the hardware.
+pub fn dense_weight_update(
+    w: &mut Tensor<Fx>,
+    x: &[Fx],
+    dy_scaled: &[Fx],
+    grad_shift: u32,
+    step: u64,
+) {
+    let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
+    assert_eq!(x.len(), n_in);
+    assert_eq!(dy_scaled.len(), n_out);
+    let wd = w.data_mut();
+    for i in 0..n_in {
+        let xi = x[i];
+        if xi == Fx::ZERO {
+            continue; // zero product leaves the weight bit-identical
+        }
+        let row = &mut wd[i * n_out..(i + 1) * n_out];
+        for (n, wv) in row.iter_mut().enumerate() {
+            let acc = Acc::from_fx(*wv).sub(xi.mul_acc_shifted(dy_scaled[n], grad_shift));
+            let dither = wb_dither(DITHER_BASE_W + (i * n_out + n) as u64, step);
+            *wv = acc.to_fx_dithered(dither).clamp_abs(PARAM_CLIP);
+        }
+    }
+}
+
+/// ReLU backward using the stored *post-activation* (what Partial Feature
+/// memory holds): gradient passes where `a > 0`.
+pub fn relu_backward(dy: &Tensor<Fx>, a: &Tensor<Fx>) -> Tensor<Fx> {
+    assert_eq!(dy.shape(), a.shape());
+    let mut out = dy.clone();
+    for (g, &av) in out.data_mut().iter_mut().zip(a.data()) {
+        if !(av > Fx::ZERO) {
+            *g = Fx::ZERO;
+        }
+    }
+    out
+}
+
+/// Parameter update `p <- wb(p - lr·g)` in the accumulator domain.
+pub fn param_update(p: &mut Tensor<Fx>, g: &Tensor<Fx>, lr: Fx, index_base: u64, step: u64) {
+    assert_eq!(p.shape(), g.shape());
+    for (i, (pv, &gv)) in p.data_mut().iter_mut().zip(g.data()).enumerate() {
+        let acc = Acc::from_fx(*pv).sub(gv.mul_acc(lr));
+        let dither = wb_dither(index_base + i as u64, step);
+        *pv = acc.to_fx_dithered(dither).clamp_abs(PARAM_CLIP);
+    }
+}
+
+/// Pre-scale the loss gradient by lr (one multiply per class, done once
+/// before the fused dense update).
+pub fn scale_grad(dy: &[Fx], lr: Fx) -> Vec<Fx> {
+    dy.iter().map(|g| g.mul_acc(lr).to_fx()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn;
+    use crate::tensor::{dequantize_tensor, max_abs_diff, quantize_tensor};
+    use crate::util::rng::Pcg32;
+
+    fn rand_f32(rng: &mut Pcg32, shape: Shape, scale: f32) -> Tensor<f32> {
+        let n = shape.numel();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-scale, scale)).collect())
+    }
+
+    #[test]
+    fn conv_forward_tracks_float() {
+        let mut rng = Pcg32::seeded(21);
+        let xf = rand_f32(&mut rng, Shape::d3(3, 8, 8), 1.0);
+        let kf = rand_f32(&mut rng, Shape::d4(4, 3, 3, 3), 0.3);
+        let yq = conv_forward(&quantize_tensor(&xf), &quantize_tensor(&kf), 1, false);
+        let yf = nn::conv::forward(&xf, &kf, 1, 1);
+        // error budget: 27 products, each operand quantized to ±½LSB
+        assert!(max_abs_diff(&dequantize_tensor(&yq), &yf) < 0.01);
+    }
+
+    #[test]
+    fn conv_forward_fused_relu() {
+        let mut rng = Pcg32::seeded(22);
+        let xf = rand_f32(&mut rng, Shape::d3(2, 6, 6), 1.0);
+        let kf = rand_f32(&mut rng, Shape::d4(2, 2, 3, 3), 0.5);
+        let y = conv_forward(&quantize_tensor(&xf), &quantize_tensor(&kf), 1, true);
+        assert!(y.data().iter().all(|v| !v.is_negative()));
+    }
+
+    #[test]
+    fn conv_input_grad_tracks_float() {
+        let mut rng = Pcg32::seeded(23);
+        let x_shape = Shape::d3(3, 8, 8);
+        let kf = rand_f32(&mut rng, Shape::d4(4, 3, 3, 3), 0.3);
+        let dyf = rand_f32(&mut rng, Shape::d3(4, 8, 8), 0.5);
+        let dxq = conv_input_grad(&quantize_tensor(&dyf), &quantize_tensor(&kf), &x_shape, 1);
+        let dxf = nn::conv::input_grad(&dyf, &kf, &x_shape, 1, 1);
+        assert!(max_abs_diff(&dequantize_tensor(&dxq), &dxf) < 0.02);
+    }
+
+    #[test]
+    fn conv_kernel_grad_tracks_float() {
+        // Small gradients so the ±GRAD_CLIP writeback clamp stays inert
+        // and the comparison is purely about quantization error.
+        let mut rng = Pcg32::seeded(24);
+        let xf = rand_f32(&mut rng, Shape::d3(2, 8, 8), 0.5);
+        let dyf = rand_f32(&mut rng, Shape::d3(3, 8, 8), 0.002);
+        let kshape = Shape::d4(3, 2, 3, 3);
+        let dkq = conv_kernel_grad(&quantize_tensor(&dyf), &quantize_tensor(&xf), &kshape, 1, 0);
+        let dkf = nn::conv::kernel_grad(&dyf, &xf, &kshape, 1, 1);
+        assert!(max_abs_diff(&dequantize_tensor(&dkq), &dkf) < 0.05);
+    }
+
+    #[test]
+    fn conv_kernel_grad_shift_scales_by_power_of_two() {
+        // With shift s the writeback approximates (Σ products) / 2^s.
+        // Gradient magnitudes kept small so neither value hits ±GRAD_CLIP.
+        let mut rng = Pcg32::seeded(26);
+        let xf = rand_f32(&mut rng, Shape::d3(2, 8, 8), 0.5);
+        let dyf = rand_f32(&mut rng, Shape::d3(3, 8, 8), 0.01);
+        let kshape = Shape::d4(3, 2, 3, 3);
+        let dk0 = conv_kernel_grad(&quantize_tensor(&dyf), &quantize_tensor(&xf), &kshape, 1, 0);
+        let dk3 = conv_kernel_grad(&quantize_tensor(&dyf), &quantize_tensor(&xf), &kshape, 1, 3);
+        for (a, b) in dk0.data().iter().zip(dk3.data()) {
+            // 8× ratio, up to per-product rounding error.
+            assert!(
+                (a.to_f32() / 8.0 - b.to_f32()).abs() < 0.02,
+                "unshifted {} shifted {}",
+                a.to_f32(),
+                b.to_f32()
+            );
+        }
+    }
+
+    #[test]
+    fn conv_kernel_grad_shift_prevents_wrap() {
+        // Adversarial magnitudes: unshifted accumulation wraps (sign
+        // garbage); shifted stays at the true value, clamped to the
+        // gradient writeback clip — positive, never sign-flipped.
+        let x = Tensor::full(Shape::d3(1, 16, 16), Fx::from_f32(4.0));
+        let dy = Tensor::full(Shape::d3(1, 16, 16), Fx::from_f32(4.0));
+        let kshape = Shape::d4(1, 1, 3, 3);
+        // center tap: 256 positions × 16.0 = 4096 ≫ 128 (wraps without shift)
+        let dk8 = conv_kernel_grad(&dy, &x, &kshape, 1, 8);
+        // mean product = 16.0 ⇒ rails at +GRAD_CLIP (clamped, right sign).
+        assert_eq!(dk8.at4(0, 0, 1, 1), GRAD_CLIP);
+    }
+
+    #[test]
+    fn dense_roundtrip_vs_float() {
+        let mut rng = Pcg32::seeded(25);
+        let x: Vec<f32> = (0..64).map(|_| rng.range_f32(0.0, 1.0)).collect();
+        let wf = rand_f32(&mut rng, Shape::d2(64, 10), 0.2);
+        let xq: Vec<Fx> = x.iter().map(|&v| Fx::from_f32(v)).collect();
+        let yq = dense_forward(&xq, &quantize_tensor(&wf));
+        let yf = nn::dense::forward(&x, &wf);
+        for (q, f) in yq.iter().zip(&yf) {
+            assert!((q.to_f32() - f).abs() < 0.02, "q={q} f={f}");
+        }
+    }
+
+    #[test]
+    fn dense_weight_update_matches_manual() {
+        // w=1.0, x=0.5, dy'=0.25 ⇒ w' = 1 - 0.125 = 0.875 exactly.
+        let mut w = Tensor::full(Shape::d2(1, 1), Fx::from_f32(1.0));
+        dense_weight_update(&mut w, &[Fx::from_f32(0.5)], &[Fx::from_f32(0.25)], 0, 0);
+        assert_eq!(w.data()[0], Fx::from_f32(0.875));
+    }
+
+    #[test]
+    fn param_update_lr_one() {
+        let mut p = Tensor::full(Shape::d1(3), Fx::from_f32(1.0));
+        let g = Tensor::from_vec(
+            Shape::d1(3),
+            vec![Fx::from_f32(0.5), Fx::from_f32(-0.5), Fx::ZERO],
+        );
+        param_update(&mut p, &g, Fx::ONE, 0, 0);
+        assert_eq!(p.data()[0], Fx::from_f32(0.5));
+        // 1.5 rails at the ±PARAM_CLIP (= 1.0) writeback clamp.
+        assert_eq!(p.data()[1], PARAM_CLIP);
+        assert_eq!(p.data()[2], Fx::from_f32(1.0));
+    }
+
+    #[test]
+    fn param_update_clips_symmetrically() {
+        let mut p = Tensor::full(Shape::d1(2), Fx::ZERO);
+        let g = Tensor::from_vec(Shape::d1(2), vec![Fx::from_f32(-7.0), Fx::from_f32(7.0)]);
+        param_update(&mut p, &g, Fx::ONE, 0, 0);
+        assert_eq!(p.data()[0], PARAM_CLIP);
+        assert_eq!(p.data()[1], -PARAM_CLIP);
+    }
+
+    #[test]
+    fn relu_backward_masks_nonpositive() {
+        let a = Tensor::from_vec(
+            Shape::d1(3),
+            vec![Fx::from_f32(1.0), Fx::ZERO, Fx::from_f32(-1.0)],
+        );
+        let dy = Tensor::full(Shape::d1(3), Fx::from_f32(2.0));
+        let dz = relu_backward(&dy, &a);
+        assert_eq!(dz.data()[0], Fx::from_f32(2.0));
+        assert_eq!(dz.data()[1], Fx::ZERO);
+        assert_eq!(dz.data()[2], Fx::ZERO);
+    }
+}

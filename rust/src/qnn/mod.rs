@@ -1,0 +1,31 @@
+//! Bit-exact Q4.12 functional model of the TinyCL datapath.
+//!
+//! `qnn` computes exactly what the RTL computes — same number system
+//! ([`crate::fixed`]), same accumulation domain, same writeback points —
+//! but without cycle timing. It is the numerical oracle for the
+//! cycle-accurate `sim`: because 32-bit two's-complement accumulation is
+//! associative, `sim` and `qnn` agree *bit-for-bit* as long as they widen,
+//! multiply and write back at the same points (tested in
+//! `rust/tests/sim_vs_qnn.rs`).
+//!
+//! Writeback points (where Q8.24 → Q4.12 rounding happens), mirroring
+//! §III-D/§III-F:
+//! * conv forward / gradient propagation: once per output pixel, after the
+//!   full accumulation across input-channel groups (then fused ReLU);
+//! * conv kernel gradient: once per kernel tap, after accumulating over
+//!   all spatial positions of one output channel;
+//! * dense forward / gradient propagation: once per output element;
+//! * dense weight update: fused `W -= I·dY'` in the 32-bit adder
+//!   (multi-adder mode sums products *with* the streamed-in old weights),
+//!   one writeback per weight;
+//! * parameter updates: `p -= lr·g` computed in the accumulator domain.
+//!
+//! The loss layer (softmax-CE) is computed by the host/control processor
+//! in float and its gradient re-quantized — the paper describes no loss
+//! datapath, only that dY "comes from the loss computation" (§III-F-4);
+//! see DESIGN.md substitution table.
+
+pub mod layers;
+pub mod model;
+
+pub use model::{QGradients, QModel, QParams};

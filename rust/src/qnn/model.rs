@@ -1,0 +1,225 @@
+//! The full TinyCL workload in hardware numerics: quantized model state,
+//! forward, backward and the fused update sequence the control unit runs.
+
+use super::layers;
+use crate::fixed::Fx;
+use crate::nn::loss;
+use crate::nn::ModelConfig;
+use crate::tensor::{quantize_tensor, Shape, Tensor};
+
+/// Quantized parameters (what Kernel memory holds).
+#[derive(Clone, Debug)]
+pub struct QParams {
+    pub k1: Tensor<Fx>,
+    pub k2: Tensor<Fx>,
+    pub w: Tensor<Fx>,
+}
+
+impl QParams {
+    /// Quantize float parameters into the Q4.12 domain.
+    pub fn from_f32(p: &crate::nn::Params) -> QParams {
+        QParams {
+            k1: quantize_tensor(&p.k1),
+            k2: quantize_tensor(&p.k2),
+            w: quantize_tensor(&p.w),
+        }
+    }
+}
+
+/// Gradients materialized by the backward pass (dense dW is not here —
+/// the hardware fuses it into the update, see `layers::dense_weight_update`).
+#[derive(Clone, Debug)]
+pub struct QGradients {
+    pub k1: Tensor<Fx>,
+    pub k2: Tensor<Fx>,
+}
+
+/// Forward activations the backward pass reuses (Partial Feature memory).
+pub struct QForwardCache {
+    pub x: Tensor<Fx>,
+    pub a1: Tensor<Fx>,
+    pub a2: Tensor<Fx>,
+    pub logits: Vec<Fx>,
+}
+
+/// Quantized model driving the six control-unit computations in the order
+/// the paper's CU sequences them.
+pub struct QModel {
+    pub config: ModelConfig,
+    pub params: QParams,
+    /// Train-step counter — keys the stochastic-rounding dither
+    /// ([`crate::fixed::wb_dither`]); reset on (re)construction.
+    pub step: u64,
+}
+
+impl QModel {
+    pub fn new(config: ModelConfig, params: QParams) -> QModel {
+        QModel { config, params, step: 0 }
+    }
+
+    /// From a float model (shared init path with the reference).
+    pub fn from_model(m: &crate::nn::Model) -> QModel {
+        QModel {
+            config: m.config.clone(),
+            params: QParams::from_f32(&m.params),
+            step: 0,
+        }
+    }
+
+    /// Forward pass (computations 1, 1, 4 of §III-F) with fused ReLU.
+    pub fn forward_cached(&self, x: &Tensor<Fx>) -> QForwardCache {
+        let a1 = layers::conv_forward(x, &self.params.k1, 1, true);
+        let a2 = layers::conv_forward(&a1, &self.params.k2, 1, true);
+        let logits = layers::dense_forward(a2.data(), &self.params.w);
+        QForwardCache { x: x.clone(), a1, a2, logits }
+    }
+
+    pub fn forward(&self, x: &Tensor<Fx>) -> Vec<Fx> {
+        self.forward_cached(x).logits
+    }
+
+    /// Predicted class over the active head.
+    pub fn predict(&self, x: &Tensor<Fx>, active_classes: usize) -> usize {
+        let logits = self.forward(x);
+        let f: Vec<f32> = logits.iter().map(|l| l.to_f32()).collect();
+        loss::predict(&f, active_classes)
+    }
+
+    /// One full train step exactly as the CU sequences it:
+    /// forward → host loss grad → dense fused-update + grad-prop →
+    /// conv2 kernel-grad + grad-prop → conv1 kernel-grad → kernel updates.
+    ///
+    /// Returns (loss, correct) computed at the host.
+    pub fn train_step(
+        &mut self,
+        x: &Tensor<Fx>,
+        label: usize,
+        active_classes: usize,
+        lr: Fx,
+    ) -> (f32, bool) {
+        let cache = self.forward_cached(x);
+
+        // Host-side loss layer (float; see module docs of `qnn`).
+        let logits_f: Vec<f32> = cache.logits.iter().map(|l| l.to_f32()).collect();
+        let (loss_value, dlogits_f) = loss::softmax_ce(&logits_f, label, active_classes);
+        let correct = loss::predict(&logits_f, active_classes) == label;
+        let dy: Vec<Fx> = dlogits_f.iter().map(|&g| Fx::from_f32(g)).collect();
+
+        // Dense gradient propagation (Eq. 5) — uses pre-update weights.
+        let dx_flat = layers::dense_input_grad(&dy, &self.params.w);
+        let da2 = Tensor::from_vec(cache.a2.shape().clone(), dx_flat);
+
+        // Dense fused weight update (Eq. 6 + SGD in multi-adder mode),
+        // with the dense normalization shift (ModelConfig::dense_grad_shift).
+        let dy_scaled = layers::scale_grad(&dy, lr);
+        layers::dense_weight_update(
+            &mut self.params.w,
+            cache.a2.data(),
+            &dy_scaled,
+            self.config.dense_grad_shift(),
+            self.step,
+        );
+
+        // ReLU2 mask, conv2 backward (kernel grads use the normalization
+        // shift — see ModelConfig::kgrad_shift).
+        let shift = self.config.kgrad_shift();
+        let dz2 = layers::relu_backward(&da2, &cache.a2);
+        let dk2 =
+            layers::conv_kernel_grad(&dz2, &cache.a1, self.params.k2.shape(), 1, shift);
+        let da1 = layers::conv_input_grad(&dz2, &self.params.k2, cache.a1.shape(), 1);
+
+        // ReLU1 mask, conv1 kernel gradient (no input grad at layer 1).
+        let dz1 = layers::relu_backward(&da1, &cache.a1);
+        let dk1 = layers::conv_kernel_grad(&dz1, &cache.x, self.params.k1.shape(), 1, shift);
+
+        // Kernel updates (dithered writebacks, disjoint key streams).
+        layers::param_update(&mut self.params.k2, &dk2, lr, layers::DITHER_BASE_K2, self.step);
+        layers::param_update(&mut self.params.k1, &dk1, lr, layers::DITHER_BASE_K1, self.step);
+        self.step += 1;
+
+        (loss_value, correct)
+    }
+
+    /// Input geometry helper.
+    pub fn input_shape(&self) -> Shape {
+        Shape::d3(
+            self.config.in_channels,
+            self.config.image_size,
+            self.config.image_size,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Model, ModelConfig};
+    use crate::tensor::quantize_tensor;
+    use crate::util::rng::Pcg32;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            in_channels: 3,
+            image_size: 8,
+            conv_channels: 4,
+            num_classes: 4,
+            grad_clip: f32::INFINITY,
+        }
+    }
+
+    fn rand_image(seed: u64, cfg: &ModelConfig) -> Tensor<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        let shape = Shape::d3(cfg.in_channels, cfg.image_size, cfg.image_size);
+        let n = shape.numel();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+    }
+
+    #[test]
+    fn quantized_forward_tracks_float() {
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 31);
+        let qm = QModel::from_model(&m);
+        let xf = rand_image(33, &cfg);
+        let yf = m.forward(&xf);
+        let yq = qm.forward(&quantize_tensor(&xf));
+        for (f, q) in yf.iter().zip(&yq) {
+            assert!(
+                (f - q.to_f32()).abs() < 0.15,
+                "float {f} vs quant {}",
+                q.to_f32()
+            );
+        }
+    }
+
+    #[test]
+    fn train_step_learns_single_sample() {
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 35);
+        let mut qm = QModel::from_model(&m);
+        let x = quantize_tensor(&rand_image(37, &cfg));
+        let lr = crate::fixed::Fx::from_f32(0.05);
+        let first = qm.train_step(&x, 2, 4, lr).0;
+        let mut last = first;
+        for _ in 0..25 {
+            last = qm.train_step(&x, 2, 4, lr).0;
+        }
+        assert!(last < first, "loss: first={first} last={last}");
+        assert_eq!(qm.predict(&x, 4), 2);
+    }
+
+    #[test]
+    fn train_step_deterministic() {
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 39);
+        let x = quantize_tensor(&rand_image(41, &cfg));
+        let lr = crate::fixed::Fx::from_f32(0.1);
+        let mut a = QModel::from_model(&m);
+        let mut b = QModel::from_model(&m);
+        for _ in 0..3 {
+            a.train_step(&x, 1, 4, lr);
+            b.train_step(&x, 1, 4, lr);
+        }
+        assert_eq!(a.params.w.data(), b.params.w.data());
+        assert_eq!(a.params.k1.data(), b.params.k1.data());
+    }
+}

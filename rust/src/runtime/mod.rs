@@ -1,0 +1,238 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them once on the CPU PJRT client, and
+//! execute them from the L3 hot path. Python never runs here.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax ≥
+//! 0.5 serialized protos carry 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and python/compile/aot.py).
+//!
+//! [`XlaModel`] wraps the two entry points with the paper's model
+//! signature and implements a full train loop host-side: parameters stay
+//! in [`xla::Literal`]s between steps (one host copy per step — the
+//! model is ~340 KB, negligible on the CPU client; see EXPERIMENTS.md
+//! §Perf for the measured per-step overhead).
+
+use crate::nn::ModelConfig;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Names of the artifact files for one model geometry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub forward: PathBuf,
+    pub train_step: PathBuf,
+}
+
+impl ArtifactSet {
+    /// The paper-geometry artifacts in `dir` (`forward.hlo.txt`, …).
+    pub fn paper(dir: impl AsRef<Path>) -> ArtifactSet {
+        let d = dir.as_ref();
+        ArtifactSet { forward: d.join("forward.hlo.txt"), train_step: d.join("train_step.hlo.txt") }
+    }
+
+    /// The tiny-geometry artifacts (fast tests).
+    pub fn tiny(dir: impl AsRef<Path>) -> ArtifactSet {
+        let d = dir.as_ref();
+        ArtifactSet {
+            forward: d.join("forward_tiny.hlo.txt"),
+            train_step: d.join("train_step_tiny.hlo.txt"),
+        }
+    }
+
+    pub fn exist(&self) -> bool {
+        self.forward.exists() && self.train_step.exists()
+    }
+}
+
+/// A PJRT client that compiles artifact files into executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// CPU PJRT client (the only plugin in this environment).
+    pub fn cpu() -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(XlaRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn compile_artifact(&self, path: impl AsRef<Path>) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compile {}: {e}", path.display()))
+    }
+
+    /// Load + compile a full artifact set into an [`XlaModel`].
+    pub fn load_model(&self, set: &ArtifactSet, config: ModelConfig) -> Result<XlaModel> {
+        if !set.exist() {
+            bail!(
+                "artifacts missing ({} / {}) — run `make artifacts`",
+                set.forward.display(),
+                set.train_step.display()
+            );
+        }
+        Ok(XlaModel {
+            forward: self.compile_artifact(&set.forward)?,
+            train_step: self.compile_artifact(&set.train_step)?,
+            params: None,
+            config,
+        })
+    }
+}
+
+/// Convert a CHW/OIHW/2-D tensor into an f32 literal of the same shape.
+pub fn literal_from_tensor(t: &Tensor<f32>) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().dims().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data()).reshape(&dims).map_err(|e| anyhow!("reshape literal: {e}"))
+}
+
+/// Extract an f32 vector from a literal.
+pub fn literal_to_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))
+}
+
+/// The paper's model, AOT-compiled, with parameters held as literals.
+pub struct XlaModel {
+    forward: xla::PjRtLoadedExecutable,
+    train_step: xla::PjRtLoadedExecutable,
+    /// (k1, k2, w); `None` until [`Self::set_params`].
+    params: Option<[xla::Literal; 3]>,
+    pub config: ModelConfig,
+}
+
+impl XlaModel {
+    /// Install parameters from host tensors.
+    pub fn set_params(&mut self, p: &crate::nn::Params) -> Result<()> {
+        self.params = Some([
+            literal_from_tensor(&p.k1)?,
+            literal_from_tensor(&p.k2)?,
+            literal_from_tensor(&p.w)?,
+        ]);
+        Ok(())
+    }
+
+    fn params(&self) -> Result<&[xla::Literal; 3]> {
+        self.params.as_ref().context("XlaModel params not set — call set_params first")
+    }
+
+    /// Read parameters back to host tensors (checkpoint/verification).
+    pub fn read_params(&self) -> Result<crate::nn::Params> {
+        let [k1, k2, w] = self.params()?;
+        let c = &self.config;
+        let sh4 = |o: usize, i: usize| crate::tensor::Shape::d4(o, i, 3, 3);
+        Ok(crate::nn::Params {
+            k1: Tensor::from_vec(sh4(c.conv_channels, c.in_channels), literal_to_vec(k1)?),
+            k2: Tensor::from_vec(sh4(c.conv_channels, c.conv_channels), literal_to_vec(k2)?),
+            w: Tensor::from_vec(
+                crate::tensor::Shape::d2(c.dense_in(), c.num_classes),
+                literal_to_vec(w)?,
+            ),
+        })
+    }
+
+    /// Inference: logits over all classes.
+    pub fn infer(&self, x: &Tensor<f32>) -> Result<Vec<f32>> {
+        let [k1, k2, w] = self.params()?;
+        let xl = literal_from_tensor(x)?;
+        let result = self
+            .forward
+            .execute::<&xla::Literal>(&[k1, k2, w, &xl])
+            .map_err(|e| anyhow!("forward execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("forward readback: {e}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("forward tuple: {e}"))?;
+        literal_to_vec(&out)
+    }
+
+    /// One batch-1 SGD step; updates the held parameters, returns
+    /// (loss, logits).
+    pub fn train_step(
+        &mut self,
+        x: &Tensor<f32>,
+        label: usize,
+        active_classes: usize,
+        lr: f32,
+    ) -> Result<(f32, Vec<f32>)> {
+        let c = self.config.num_classes;
+        assert!(label < active_classes && active_classes <= c);
+        let mut onehot = vec![0f32; c];
+        onehot[label] = 1.0;
+        let mask: Vec<f32> =
+            (0..c).map(|i| if i < active_classes { 1.0 } else { 0.0 }).collect();
+
+        let [k1, k2, w] = self.params()?;
+        let xl = literal_from_tensor(x)?;
+        let oh = xla::Literal::vec1(&onehot);
+        let mk = xla::Literal::vec1(&mask);
+        let lrl = xla::Literal::scalar(lr);
+
+        let result = self
+            .train_step
+            .execute::<&xla::Literal>(&[k1, k2, w, &xl, &oh, &mk, &lrl])
+            .map_err(|e| anyhow!("train_step execute: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("train_step readback: {e}"))?;
+        let mut elems = tuple.to_tuple().map_err(|e| anyhow!("train_step tuple: {e}"))?;
+        if elems.len() != 5 {
+            bail!("train_step returned {}-tuple, expected 5", elems.len());
+        }
+        let logits = literal_to_vec(&elems[4])?;
+        let loss = literal_scalar(&elems[3])?;
+        let w_new = elems.remove(2);
+        let k2_new = elems.remove(1);
+        let k1_new = elems.remove(0);
+        self.params = Some([k1_new, k2_new, w_new]);
+        Ok((loss, logits))
+    }
+}
+
+/// Extract a scalar f32 from a rank-0 literal.
+fn literal_scalar(l: &xla::Literal) -> Result<f32> {
+    let v = l.to_vec::<f32>().map_err(|e| anyhow!("scalar literal: {e}"))?;
+    v.first().copied().context("empty scalar literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts + a PJRT client live in
+    // rust/tests/xla_runtime.rs (integration); here only pure host-side
+    // helpers are covered so `cargo test --lib` stays artifact-free.
+
+    #[test]
+    fn artifact_set_paths() {
+        let s = ArtifactSet::paper("artifacts");
+        assert!(s.forward.ends_with("forward.hlo.txt"));
+        let t = ArtifactSet::tiny("artifacts");
+        assert!(t.train_step.ends_with("train_step_tiny.hlo.txt"));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::from_vec(
+            crate::tensor::Shape::d3(2, 2, 2),
+            (0..8).map(|i| i as f32).collect(),
+        );
+        let l = literal_from_tensor(&t).unwrap();
+        assert_eq!(literal_to_vec(&l).unwrap(), t.data());
+    }
+
+    #[test]
+    fn missing_artifacts_detected() {
+        let s = ArtifactSet::paper("/nonexistent");
+        assert!(!s.exist());
+    }
+}

@@ -1,0 +1,322 @@
+//! Address generation: snake traversal and the 3×3 sliding-window
+//! register file (Fig. 5).
+//!
+//! The forward AGU moves the convolution window in a snake: row 0
+//! left→right, row 1 right→left, ... On a horizontal step the window
+//! keeps 2 of its 3 columns (6 of 9 channel-group vectors); on the
+//! row-change step it keeps 2 of its 3 rows. At full throttle each cycle
+//! fetches at most 3 new channel-group vectors — the property §III-F-1
+//! claims and `benches/ablation_snake.rs` quantifies against raster order.
+
+use super::sram::{BankedSram, LaneVec, MAX_LANES};
+
+/// Snake iterator over an `h`×`w` output plane. Yields `(y, x)`.
+#[derive(Clone, Debug)]
+pub struct SnakeIter {
+    h: usize,
+    w: usize,
+    i: usize,
+}
+
+impl SnakeIter {
+    pub fn new(h: usize, w: usize) -> SnakeIter {
+        SnakeIter { h, w, i: 0 }
+    }
+}
+
+impl Iterator for SnakeIter {
+    type Item = (usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize)> {
+        if self.i >= self.h * self.w {
+            return None;
+        }
+        let y = self.i / self.w;
+        let xr = self.i % self.w;
+        let x = if y % 2 == 0 { xr } else { self.w - 1 - xr };
+        self.i += 1;
+        Some((y, x))
+    }
+}
+
+/// Raster iterator (the baseline the snake is compared against in A1).
+pub fn raster(h: usize, w: usize) -> impl Iterator<Item = (usize, usize)> {
+    (0..h * w).map(move |i| (i / w, i % w))
+}
+
+/// A rectangular channel-group region inside a [`BankedSram`]:
+/// `groups` channel groups × `h`×`w` spatial positions.
+/// Address layout: `base + (group*h + y)*w + x`.
+#[derive(Clone, Copy, Debug)]
+pub struct Region {
+    pub base: usize,
+    pub groups: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Region {
+    pub fn new(base: usize, groups: usize, h: usize, w: usize) -> Region {
+        Region { base, groups, h, w }
+    }
+
+    pub fn words(&self) -> usize {
+        self.groups * self.h * self.w
+    }
+
+    pub fn end(&self) -> usize {
+        self.base + self.words()
+    }
+
+    #[inline]
+    pub fn addr(&self, group: usize, y: usize, x: usize) -> usize {
+        debug_assert!(group < self.groups && y < self.h && x < self.w);
+        self.base + (group * self.h + y) * self.w + x
+    }
+
+    /// Uncounted data read of one channel-group vector (the executor
+    /// charges port transactions explicitly — see `sram` docs).
+    #[inline(always)]
+    pub fn peek_vec(&self, mem: &BankedSram, group: usize, y: usize, x: usize) -> LaneVec {
+        mem.peek_vec(self.addr(group, y, x))
+    }
+}
+
+/// 3×3 sliding-window register file over one channel group of a [`Region`].
+///
+/// `slide_to` moves the window center and fetches only the vectors not
+/// already resident, charging one read per fetched in-bounds position
+/// (padding positions are zero and cost nothing). Window contents are
+/// indexed `[tap] = [ky*3+kx]` with `(ky,kx)` relative offsets `0..3`
+/// (center at `(1,1)` for pad-1 convs).
+pub struct WindowBuffer {
+    /// (iy, ix) of window position [0][0], may be negative (padding).
+    top: isize,
+    left: isize,
+    valid: bool,
+    data: [LaneVec; 9],
+    pub fetches: u64,
+}
+
+impl Default for WindowBuffer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WindowBuffer {
+    pub fn new() -> WindowBuffer {
+        WindowBuffer {
+            top: 0,
+            left: 0,
+            valid: false,
+            data: [[crate::fixed::Fx::ZERO; MAX_LANES]; 9],
+            fetches: 0,
+        }
+    }
+
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+        self.fetches = 0;
+    }
+
+    /// Invalidate the window contents but keep the fetch counter — used
+    /// by the no-reuse ablation, which refetches all 9 taps every pixel.
+    pub fn invalidate_keep_count(&mut self) {
+        self.valid = false;
+    }
+
+    /// Current window contents in tap order.
+    pub fn taps(&self) -> &[LaneVec; 9] {
+        &self.data
+    }
+
+    #[inline(always)]
+    fn fetch(
+        &mut self,
+        mem: &mut BankedSram,
+        region: &Region,
+        group: usize,
+        iy: isize,
+        ix: isize,
+    ) -> LaneVec {
+        if iy < 0 || iy >= region.h as isize || ix < 0 || ix >= region.w as isize {
+            return [crate::fixed::Fx::ZERO; MAX_LANES]; // padding: no access
+        }
+        self.fetches += 1;
+        mem.charge_reads(1);
+        region.peek_vec(mem, group, iy as usize, ix as usize)
+    }
+
+    /// Move the window so its top-left input position is
+    /// `(oy-pad, ox-pad)` for output `(oy, ox)`; fetch missing entries.
+    /// Returns the number of vectors fetched this step.
+    pub fn slide_to(
+        &mut self,
+        mem: &mut BankedSram,
+        region: &Region,
+        group: usize,
+        oy: usize,
+        ox: usize,
+        pad: usize,
+    ) -> u64 {
+        let new_top = oy as isize - pad as isize;
+        let new_left = ox as isize - pad as isize;
+        let before = self.fetches;
+
+        if self.valid && new_top == self.top && new_left == self.left + 1 {
+            // step right: shift columns left, fetch right column
+            for r in 0..3 {
+                self.data[r * 3] = self.data[r * 3 + 1];
+                self.data[r * 3 + 1] = self.data[r * 3 + 2];
+                self.data[r * 3 + 2] =
+                    self.fetch(mem, region, group, new_top + r as isize, new_left + 2);
+            }
+        } else if self.valid && new_top == self.top && new_left == self.left - 1 {
+            // step left (snake return row)
+            for r in 0..3 {
+                self.data[r * 3 + 2] = self.data[r * 3 + 1];
+                self.data[r * 3 + 1] = self.data[r * 3];
+                self.data[r * 3] = self.fetch(mem, region, group, new_top + r as isize, new_left);
+            }
+        } else if self.valid && new_top == self.top + 1 && new_left == self.left {
+            // step down: shift rows up, fetch bottom row
+            for r in 0..2 {
+                for c in 0..3 {
+                    self.data[r * 3 + c] = self.data[(r + 1) * 3 + c];
+                }
+            }
+            for c in 0..3 {
+                self.data[6 + c] =
+                    self.fetch(mem, region, group, new_top + 2, new_left + c as isize);
+            }
+        } else {
+            // cold start (or non-adjacent jump, e.g. raster wrap): full load
+            for r in 0..3 {
+                for c in 0..3 {
+                    self.data[r * 3 + c] =
+                        self.fetch(mem, region, group, new_top + r as isize, new_left + c as isize);
+                }
+            }
+        }
+        self.top = new_top;
+        self.left = new_left;
+        self.valid = true;
+        self.fetches - before
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Fx;
+
+    #[test]
+    fn snake_covers_all_once_and_is_adjacent() {
+        let mut seen = std::collections::HashSet::new();
+        let mut prev: Option<(usize, usize)> = None;
+        for (y, x) in SnakeIter::new(4, 5) {
+            assert!(seen.insert((y, x)), "duplicate ({y},{x})");
+            if let Some((py, px)) = prev {
+                let dy = y as isize - py as isize;
+                let dx = x as isize - px as isize;
+                assert!(
+                    (dy == 0 && dx.abs() == 1) || (dy == 1 && dx == 0),
+                    "non-adjacent step ({py},{px})→({y},{x})"
+                );
+            }
+            prev = Some((y, x));
+        }
+        assert_eq!(seen.len(), 20);
+    }
+
+    #[test]
+    fn snake_alternates_direction() {
+        let order: Vec<(usize, usize)> = SnakeIter::new(2, 3).collect();
+        assert_eq!(order, vec![(0, 0), (0, 1), (0, 2), (1, 2), (1, 1), (1, 0)]);
+    }
+
+    fn make_region() -> (BankedSram, Region) {
+        let mut mem = BankedSram::new("feat", 8, 64);
+        let region = Region::new(0, 1, 8, 8);
+        for y in 0..8 {
+            for x in 0..8 {
+                for l in 0..8 {
+                    mem.load(region.addr(0, y, x), l, Fx::from_raw((y * 8 + x) as i16));
+                }
+            }
+        }
+        (mem, region)
+    }
+
+    #[test]
+    fn window_fetches_at_most_3_in_steady_state() {
+        let (mut mem, region) = make_region();
+        let mut win = WindowBuffer::new();
+        let mut max_steady = 0;
+        for (i, (oy, ox)) in SnakeIter::new(8, 8).enumerate() {
+            let fetched = win.slide_to(&mut mem, &region, 0, oy, ox, 1);
+            if i == 0 {
+                assert!(fetched <= 4, "cold start with padding fetched {fetched}");
+            } else {
+                max_steady = max_steady.max(fetched);
+            }
+        }
+        assert!(max_steady <= 3, "steady-state fetch {max_steady} > 3");
+    }
+
+    #[test]
+    fn window_contents_match_direct_read() {
+        let (mut mem, region) = make_region();
+        let mut win = WindowBuffer::new();
+        for (oy, ox) in SnakeIter::new(8, 8) {
+            win.slide_to(&mut mem, &region, 0, oy, ox, 1);
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    let iy = oy as isize + ky as isize - 1;
+                    let ix = ox as isize + kx as isize - 1;
+                    let expect = if iy < 0 || iy >= 8 || ix < 0 || ix >= 8 {
+                        Fx::ZERO
+                    } else {
+                        Fx::from_raw((iy * 8 + ix) as i16)
+                    };
+                    assert_eq!(
+                        win.taps()[ky * 3 + kx][0],
+                        expect,
+                        "window mismatch at out=({oy},{ox}) tap=({ky},{kx})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn snake_fetches_fewer_than_raster() {
+        let (mut mem, region) = make_region();
+        let mut win = WindowBuffer::new();
+        for (oy, ox) in SnakeIter::new(8, 8) {
+            win.slide_to(&mut mem, &region, 0, oy, ox, 1);
+        }
+        let snake_fetches = win.fetches;
+
+        let mut win2 = WindowBuffer::new();
+        for (oy, ox) in raster(8, 8) {
+            win2.slide_to(&mut mem, &region, 0, oy, ox, 1);
+        }
+        let raster_fetches = win2.fetches;
+        assert!(
+            snake_fetches < raster_fetches,
+            "snake {snake_fetches} !< raster {raster_fetches}"
+        );
+    }
+
+    #[test]
+    fn region_addressing() {
+        let r = Region::new(100, 2, 4, 4);
+        assert_eq!(r.addr(0, 0, 0), 100);
+        assert_eq!(r.addr(0, 1, 2), 106);
+        assert_eq!(r.addr(1, 0, 0), 116);
+        assert_eq!(r.words(), 32);
+        assert_eq!(r.end(), 132);
+    }
+}

@@ -1,0 +1,126 @@
+//! Microarchitecture parameters.
+//!
+//! Defaults reproduce the paper's design point; the design-space benches
+//! (A2 in DESIGN.md) sweep `lanes` and `taps` to show why 9×8 was chosen.
+
+/// Static configuration of the simulated accelerator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    /// Parallel MAC blocks in the PU — one per kernel tap (paper: 9,
+    /// matching the 3×3 kernel footprint).
+    pub taps: usize,
+    /// Multiplier lanes per MAC — the channel-group width (paper: 8).
+    /// Also fixes the SRAM port width: `lanes` × 16 bits (paper: 128).
+    pub lanes: usize,
+    /// Count pipeline-fill / kernel-preload cycles. The paper's §IV-B
+    /// numbers are steady-state (8192 = exactly one output per cycle), so
+    /// the default is `false`; the ablation benches flip it to show the
+    /// overhead is <1%.
+    pub count_fill: bool,
+    /// Snake-like sliding window (§III-F-1, Fig. 5). `false` switches the
+    /// conv executors to raster traversal (full window reload at each row
+    /// wrap) — the A1 ablation quantifying what the snake buys.
+    pub snake: bool,
+    /// Keep the 9-tap window registers between output pixels (the Fig. 5
+    /// reuse). `false` refetches the whole window every pixel — the
+    /// no-reuse lower bound A1 compares against (9 reads/pixel).
+    pub window_reuse: bool,
+    /// Clock period in ns (paper: 3.87 ns post-synthesis).
+    pub clock_ns: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            taps: 9,
+            lanes: 8,
+            count_fill: false,
+            snake: true,
+            window_reuse: true,
+            clock_ns: 3.87,
+        }
+    }
+}
+
+impl SimConfig {
+    /// The paper's synthesized design point.
+    pub fn paper() -> SimConfig {
+        SimConfig::default()
+    }
+
+    pub fn with_lanes(mut self, lanes: usize) -> SimConfig {
+        assert!(lanes > 0 && lanes <= super::sram::MAX_LANES);
+        self.lanes = lanes;
+        self
+    }
+
+    pub fn with_taps(mut self, taps: usize) -> SimConfig {
+        assert!(taps > 0);
+        self.taps = taps;
+        self
+    }
+
+    pub fn with_fill(mut self, count_fill: bool) -> SimConfig {
+        self.count_fill = count_fill;
+        self
+    }
+
+    pub fn with_snake(mut self, snake: bool) -> SimConfig {
+        self.snake = snake;
+        self
+    }
+
+    pub fn with_window_reuse(mut self, window_reuse: bool) -> SimConfig {
+        self.window_reuse = window_reuse;
+        self
+    }
+
+    /// SRAM port width in bits.
+    pub fn port_bits(&self) -> usize {
+        self.lanes * 16
+    }
+
+    /// Seconds for a cycle count at this clock.
+    pub fn secs(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.clock_ns * 1e-9
+    }
+
+    /// Peak MAC throughput in ops/cycle (1 multiply + 1 add = 2 ops),
+    /// used for the Table I TOPS figure.
+    pub fn peak_ops_per_cycle(&self) -> f64 {
+        (self.taps * self.lanes * 2) as f64
+    }
+
+    /// Peak TOPS at the configured clock.
+    pub fn peak_tops(&self) -> f64 {
+        self.peak_ops_per_cycle() / self.clock_ns / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_design_point() {
+        let c = SimConfig::paper();
+        assert_eq!(c.taps, 9);
+        assert_eq!(c.lanes, 8);
+        assert_eq!(c.port_bits(), 128);
+        assert!((c.clock_ns - 3.87).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_tops_near_paper_performance() {
+        // Table I reports 0.037 TOPS for TinyCL: 9×8 MACs × 2 ops / 3.87ns
+        // = 0.0372 TOPS.
+        let c = SimConfig::paper();
+        assert!((c.peak_tops() - 0.037).abs() < 0.001, "{}", c.peak_tops());
+    }
+
+    #[test]
+    fn secs_at_clock() {
+        let c = SimConfig::paper();
+        assert!((c.secs(1_000_000) - 3.87e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,530 @@
+//! The Control Unit + top level (Fig. 2): owns the four memory groups,
+//! sequences the six computations per layer, and exposes inference /
+//! train-step entry points to the coordinator.
+//!
+//! Sequencing of one train step (mirrors `qnn::QModel::train_step`, which
+//! is the bit-exactness oracle):
+//!
+//! 1. conv1 forward (+ReLU) → a1, conv2 forward (+ReLU) → a2   [feature mem]
+//! 2. dense forward → logits
+//! 3. host loss layer (float softmax-CE; see `qnn` module docs) → dY
+//! 4. dense gradient propagation (fused ReLU mask) → dz2       [gradient A]
+//! 5. dense fused weight update (dW never materialized)
+//! 6. conv2 kernel gradient (from a1, dz2) → dk2               [staged in B]
+//! 7. conv2 gradient propagation (pre-update k2, mask a1) → dz1 [gradient B]
+//! 8. conv1 kernel gradient (from x, dz1) → dk1                [staged in A]
+//! 9. kernel updates k2 ← k2 − lr·dk2, k1 ← k1 − lr·dk1
+//!
+//! The two gradient memories ping-pong exactly as §III-E argues they must
+//! ("1 would not be enough").
+
+use super::agu::Region;
+use super::config::SimConfig;
+use super::exec_conv::{self, ConvGeom, KernelRegion};
+use super::exec_dense::{self, DenseWRegion};
+use super::pu::Pu;
+use super::sram::BankedSram;
+use super::stats::{OpKind, OpStats, RunStats};
+use crate::fixed::{Acc, Fx};
+use crate::nn::loss;
+use crate::nn::ModelConfig;
+use crate::qnn::QParams;
+use crate::tensor::Tensor;
+
+/// The simulated accelerator.
+pub struct TinyClDevice {
+    pub sim_cfg: SimConfig,
+    pub model_cfg: ModelConfig,
+    /// Train-step counter keying the stochastic-rounding dither; reset by
+    /// [`Self::load_params`] so freshly-loaded parameters replay the same
+    /// dither stream as a fresh [`crate::qnn::QModel`].
+    step: u64,
+    pu: Pu,
+    // §III-E memory groups.
+    feature_mem: BankedSram,
+    kernel_mem: BankedSram,
+    gradient_a: BankedSram,
+    gradient_b: BankedSram,
+    // Regions.
+    x_region: Region,
+    a1_region: Region,
+    a2_region: Region,
+    k1_region: KernelRegion,
+    k2_region: KernelRegion,
+    w_region: DenseWRegion,
+    grad_region: Region, // same geometry in both gradient memories
+}
+
+impl TinyClDevice {
+    pub fn new(sim_cfg: SimConfig, model_cfg: ModelConfig) -> TinyClDevice {
+        let lanes = sim_cfg.lanes;
+        let (h, w) = (model_cfg.image_size, model_cfg.image_size);
+        let hw = h * w;
+        let in_groups = model_cfg.in_channels.div_ceil(lanes);
+        let cgroups = model_cfg.conv_channels.div_ceil(lanes);
+
+        let x_region = Region::new(0, in_groups, h, w);
+        let a1_region = Region::new(x_region.end(), cgroups, h, w);
+        let a2_region = Region::new(a1_region.end(), cgroups, h, w);
+        let feature_depth = a2_region.end();
+
+        let k1_region = KernelRegion { base: 0, cout: model_cfg.conv_channels, in_groups };
+        let k2_region = KernelRegion {
+            base: k1_region.end(),
+            cout: model_cfg.conv_channels,
+            in_groups: cgroups,
+        };
+        let w_region = DenseWRegion {
+            base: k2_region.end(),
+            groups: cgroups,
+            hw,
+            n_out: model_cfg.num_classes,
+            n_in: model_cfg.dense_in(),
+        };
+        let kernel_depth = w_region.end();
+
+        let grad_region = Region::new(0, cgroups, h, w);
+        let grad_depth = grad_region.end();
+
+        TinyClDevice {
+            step: 0,
+            pu: Pu::new(sim_cfg.taps, lanes),
+            feature_mem: BankedSram::new("feature", lanes, feature_depth),
+            kernel_mem: BankedSram::new("kernel", lanes, kernel_depth),
+            gradient_a: BankedSram::new("gradient_a", lanes, grad_depth),
+            gradient_b: BankedSram::new("gradient_b", lanes, grad_depth),
+            sim_cfg,
+            model_cfg,
+            x_region,
+            a1_region,
+            a2_region,
+            k1_region,
+            k2_region,
+            w_region,
+            grad_region,
+        }
+    }
+
+    /// Geometry of conv1 / conv2 as `ConvGeom`.
+    fn geom1(&self) -> ConvGeom {
+        ConvGeom {
+            cin: self.model_cfg.in_channels,
+            cout: self.model_cfg.conv_channels,
+            h: self.model_cfg.image_size,
+            w: self.model_cfg.image_size,
+            pad: 1,
+        }
+    }
+
+    fn geom2(&self) -> ConvGeom {
+        ConvGeom {
+            cin: self.model_cfg.conv_channels,
+            cout: self.model_cfg.conv_channels,
+            h: self.model_cfg.image_size,
+            w: self.model_cfg.image_size,
+            pad: 1,
+        }
+    }
+
+    /// DMA parameters into kernel memory (uncounted — one-time setup).
+    /// Resets the dither step counter (fresh training run).
+    pub fn load_params(&mut self, params: &QParams) {
+        self.step = 0;
+        exec_conv::load_kernel(&mut self.kernel_mem, &self.k1_region, &params.k1, self.sim_cfg.lanes);
+        exec_conv::load_kernel(&mut self.kernel_mem, &self.k2_region, &params.k2, self.sim_cfg.lanes);
+        exec_dense::load_dense_w(&mut self.kernel_mem, &self.w_region, &params.w, self.sim_cfg.lanes);
+    }
+
+    /// Current train-step counter (dither stream position).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Restore the train-step counter (checkpoint resume: together with
+    /// [`Self::load_params`] this makes a resumed run bit-identical to an
+    /// uninterrupted one).
+    pub fn set_step(&mut self, step: u64) {
+        self.step = step;
+    }
+
+    /// Read parameters back out (checkpointing / verification).
+    pub fn read_params(&self) -> QParams {
+        let lanes = self.sim_cfg.lanes;
+        QParams {
+            k1: exec_conv::store_kernel(
+                &self.kernel_mem,
+                &self.k1_region,
+                self.model_cfg.conv_channels,
+                self.model_cfg.in_channels,
+                lanes,
+            ),
+            k2: exec_conv::store_kernel(
+                &self.kernel_mem,
+                &self.k2_region,
+                self.model_cfg.conv_channels,
+                self.model_cfg.conv_channels,
+                lanes,
+            ),
+            w: exec_dense::store_dense_w(
+                &self.kernel_mem,
+                &self.w_region,
+                self.model_cfg.dense_in(),
+                lanes,
+            ),
+        }
+    }
+
+    /// DMA an input sample into feature memory (charged by the CL
+    /// controller as part of GDumb memory traffic, not here).
+    fn load_input(&mut self, x: &Tensor<Fx>) {
+        let lanes = self.sim_cfg.lanes;
+        let d = x.shape().dims();
+        assert_eq!(d[0], self.model_cfg.in_channels);
+        assert_eq!(d[1], self.model_cfg.image_size);
+        for c in 0..d[0] {
+            for y in 0..d[1] {
+                for xx in 0..d[2] {
+                    self.feature_mem.load(
+                        self.x_region.addr(c / lanes, y, xx),
+                        c % lanes,
+                        x.at3(c, y, xx),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Inference with stats (the public entry point).
+    pub fn infer(&mut self, x: &Tensor<Fx>) -> (Vec<Fx>, RunStats) {
+        self.forward_impl(x)
+    }
+
+    fn forward_impl(&mut self, x: &Tensor<Fx>) -> (Vec<Fx>, RunStats) {
+        self.load_input(x);
+        let mut run = RunStats::default();
+
+        // conv1: x → a1. Input and output both live in feature memory; the
+        // executor takes two &mut BankedSram, so route the output through
+        // gradient memory A's port and copy — physically this is the
+        // feature SRAM's second port (§III-E reads and writes per cycle);
+        // traffic accounting is unaffected (write charged where it lands).
+        let s1 = self.conv_forward_within_feature(
+            self.x_region, self.a1_region, self.k1_region, self.geom1(), true,
+        );
+        run.record(OpKind::ConvForward, s1);
+
+        let s2 = self.conv_forward_within_feature(
+            self.a1_region, self.a2_region, self.k2_region, self.geom2(), true,
+        );
+        run.record(OpKind::ConvForward, s2);
+
+        let (logits, s3) = exec_dense::run_dense_forward(
+            &self.sim_cfg, &mut self.pu, &mut self.feature_mem, &self.a2_region,
+            &mut self.kernel_mem, &self.w_region, &mut self.gradient_a,
+        );
+        run.record(OpKind::DenseForward, s3);
+        (logits, run)
+    }
+
+    /// conv forward where input and output regions are both in feature
+    /// memory: stream the output through a bounce buffer region in
+    /// gradient A (hardware: same-SRAM second port; the simulator needs
+    /// disjoint &mut). Output writes are re-charged to feature memory.
+    fn conv_forward_within_feature(
+        &mut self,
+        in_region: Region,
+        out_region: Region,
+        kregion: KernelRegion,
+        geom: ConvGeom,
+        relu: bool,
+    ) -> OpStats {
+        let stats = exec_conv::conv_forward_sim(
+            &self.sim_cfg, &mut self.pu, &mut self.feature_mem, &in_region,
+            &mut self.kernel_mem, &kregion, &mut self.gradient_a, &self.grad_region,
+            &geom, relu,
+        );
+        // Move the bounce buffer into its true home and fix the accounting:
+        // the writes physically target feature memory.
+        let lanes = self.sim_cfg.lanes;
+        let writes = self.gradient_a.writes;
+        for c in 0..geom.cout {
+            for y in 0..geom.h {
+                for x in 0..geom.w {
+                    let v = self.gradient_a.peek(self.grad_region.addr(c / lanes, y, x), c % lanes);
+                    self.feature_mem.load(out_region.addr(c / lanes, y, x), c % lanes, v);
+                }
+            }
+        }
+        self.gradient_a.writes = writes - stats.feature_writes;
+        self.feature_mem.charge_writes(stats.feature_writes);
+        stats
+    }
+
+    /// One full train step. Returns (loss, correct, stats).
+    pub fn train_step(
+        &mut self,
+        x: &Tensor<Fx>,
+        label: usize,
+        active_classes: usize,
+        lr: Fx,
+    ) -> (f32, bool, RunStats) {
+        let (logits, mut run) = self.forward_impl(x);
+
+        // Host loss layer (float; identical to qnn::QModel::train_step).
+        let logits_f: Vec<f32> = logits.iter().map(|l| l.to_f32()).collect();
+        let (loss_value, dlogits_f) = loss::softmax_ce(&logits_f, label, active_classes);
+        let correct = loss::predict(&logits_f, active_classes) == label;
+        let dy: Vec<Fx> = dlogits_f.iter().map(|&g| Fx::from_f32(g)).collect();
+
+        // Dense gradient propagation (pre-update weights), fused ReLU mask,
+        // dz2 → gradient A.
+        let s = exec_dense::dense_input_grad_sim(
+            &self.sim_cfg, &mut self.pu, &dy, &mut self.feature_mem, &self.a2_region,
+            &mut self.kernel_mem, &self.w_region, &mut self.gradient_a, &self.grad_region,
+        );
+        run.record(OpKind::DenseInputGrad, s);
+
+        // Dense fused weight update (normalization shift as in qnn).
+        let dy_scaled = crate::qnn::layers::scale_grad(&dy, lr);
+        let s = exec_dense::dense_weight_update_sim(
+            &self.sim_cfg, &mut self.pu, &dy_scaled, &mut self.feature_mem,
+            &self.a2_region, &mut self.kernel_mem, &self.w_region,
+            self.model_cfg.dense_grad_shift(), self.step,
+        );
+        run.record(OpKind::DenseWeightUpdate, s);
+
+        // conv2 kernel gradient: inputs a1 (feature mem) × dz2 (gradient A),
+        // staged into gradient B. Kernel grads use the normalization shift
+        // (ModelConfig::kgrad_shift) — identical to qnn for bit-exactness.
+        let shift = self.model_cfg.kgrad_shift();
+        let (geom1, geom2) = (self.geom1(), self.geom2());
+        let mut dk2 = Tensor::zeros(self.k2_shape());
+        let s = exec_conv::conv_kernel_grad_sim(
+            &self.sim_cfg, &mut self.pu, &mut self.feature_mem, &self.a1_region,
+            &mut self.gradient_a, &self.grad_region, &mut self.gradient_b,
+            &geom2, &mut dk2, shift,
+        );
+        run.record(OpKind::ConvKernelGrad, s);
+
+        // conv2 gradient propagation (pre-update k2), mask a1, dz1 → gradient B.
+        let s = exec_conv::conv_input_grad_sim(
+            &self.sim_cfg, &mut self.pu, &mut self.gradient_a, &self.grad_region,
+            &mut self.kernel_mem, &self.k2_region, &mut self.gradient_b,
+            &self.grad_region, Some((&mut self.feature_mem, &self.a1_region)),
+            &geom2,
+        );
+        run.record(OpKind::ConvInputGrad, s);
+
+        // conv1 kernel gradient: x × dz1 (gradient B), staged into gradient A.
+        let mut dk1 = Tensor::zeros(self.k1_shape());
+        let s = exec_conv::conv_kernel_grad_sim(
+            &self.sim_cfg, &mut self.pu, &mut self.feature_mem, &self.x_region,
+            &mut self.gradient_b, &self.grad_region, &mut self.gradient_a,
+            &geom1, &mut dk1, shift,
+        );
+        run.record(OpKind::ConvKernelGrad, s);
+
+        // Kernel updates (k2 then k1, matching qnn).
+        let s = self.kernel_update(self.k2_region, &dk2, lr, crate::qnn::layers::DITHER_BASE_K2);
+        run.record(OpKind::KernelUpdate, s);
+        let s = self.kernel_update(self.k1_region, &dk1, lr, crate::qnn::layers::DITHER_BASE_K1);
+        run.record(OpKind::KernelUpdate, s);
+        self.step += 1;
+
+        (loss_value, correct, run)
+    }
+
+    fn k1_shape(&self) -> crate::tensor::Shape {
+        crate::tensor::Shape::d4(
+            self.model_cfg.conv_channels,
+            self.model_cfg.in_channels,
+            3,
+            3,
+        )
+    }
+
+    fn k2_shape(&self) -> crate::tensor::Shape {
+        crate::tensor::Shape::d4(
+            self.model_cfg.conv_channels,
+            self.model_cfg.conv_channels,
+            3,
+            3,
+        )
+    }
+
+    /// Kernel SGD update: one tap-vector per cycle — read K, read staged
+    /// dK, write K (`wb(K − lr·dK)` per lane, same numerics as
+    /// `qnn::layers::param_update`).
+    fn kernel_update(
+        &mut self,
+        kregion: KernelRegion,
+        dk: &Tensor<Fx>,
+        lr: Fx,
+        dither_base: u64,
+    ) -> OpStats {
+        let lanes = self.sim_cfg.lanes;
+        let kd = dk.shape().dims().to_vec();
+        let mut stats = OpStats::default();
+        for oc in 0..kd[0] {
+            for icg in 0..kregion.in_groups {
+                for tap in 0..9 {
+                    let addr = kregion.addr(oc, icg, tap);
+                    let (ky, kx) = (tap / 3, tap % 3);
+                    for l in 0..lanes {
+                        let ic = icg * lanes + l;
+                        if ic >= kd[1] {
+                            break;
+                        }
+                        let k = self.kernel_mem.peek(addr, l);
+                        let g = dk.at4(oc, ic, ky, kx);
+                        // Tensor-flat index (oc, ic, ky, kx) matches
+                        // qnn::layers::param_update's enumeration.
+                        let flat = ((oc * kd[1] + ic) * 3 + ky) * 3 + kx;
+                        let dither = crate::fixed::wb_dither(dither_base + flat as u64, self.step);
+                        let updated = Acc::from_fx(k)
+                            .sub(g.mul_acc(lr))
+                            .to_fx_dithered(dither)
+                            .clamp_abs(crate::qnn::layers::PARAM_CLIP);
+                        self.kernel_mem.load(addr, l, updated);
+                        stats.mults += 1;
+                        stats.adds += 1;
+                    }
+                    self.kernel_mem.charge_reads(1);
+                    self.kernel_mem.charge_writes(1);
+                    self.gradient_a.charge_reads(1); // staged dK read
+                    stats.kernel_reads += 1;
+                    stats.kernel_writes += 1;
+                    stats.gradient_reads += 1;
+                    stats.cycles += 1;
+                }
+            }
+        }
+        stats
+    }
+
+    /// Total SRAM capacity in bits (hw area/power model input).
+    pub fn sram_bits(&self) -> u64 {
+        self.feature_mem.bits()
+            + self.kernel_mem.bits()
+            + self.gradient_a.bits()
+            + self.gradient_b.bits()
+    }
+
+    /// Per-memory-group capacity and bank count — the `hw` cost model's
+    /// SRAM inventory (each bank is one physical macro).
+    pub fn memory_inventory(&self) -> [(&'static str, u64, usize); 4] {
+        [
+            (self.feature_mem.name(), self.feature_mem.bits(), self.feature_mem.lanes()),
+            (self.kernel_mem.name(), self.kernel_mem.bits(), self.kernel_mem.lanes()),
+            (self.gradient_a.name(), self.gradient_a.bits(), self.gradient_a.lanes()),
+            (self.gradient_b.name(), self.gradient_b.bits(), self.gradient_b.lanes()),
+        ]
+    }
+
+    /// Cumulative SRAM access counters since the last
+    /// [`reset_counters`](Self::reset_counters), per memory group:
+    /// `(name, reads, writes)`.
+    pub fn memory_traffic(&self) -> [(&'static str, u64, u64); 4] {
+        [
+            (self.feature_mem.name(), self.feature_mem.reads, self.feature_mem.writes),
+            (self.kernel_mem.name(), self.kernel_mem.reads, self.kernel_mem.writes),
+            (self.gradient_a.name(), self.gradient_a.reads, self.gradient_a.writes),
+            (self.gradient_b.name(), self.gradient_b.reads, self.gradient_b.writes),
+        ]
+    }
+
+    /// Reset all SRAM access counters (between measurement windows).
+    pub fn reset_counters(&mut self) {
+        self.feature_mem.reset_counters();
+        self.kernel_mem.reset_counters();
+        self.gradient_a.reset_counters();
+        self.gradient_b.reset_counters();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Model;
+    use crate::qnn::QModel;
+    use crate::tensor::{quantize_tensor, Shape};
+    use crate::util::rng::Pcg32;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            in_channels: 3,
+            image_size: 8,
+            conv_channels: 4,
+            num_classes: 4,
+            grad_clip: f32::INFINITY,
+        }
+    }
+
+    fn rand_image(seed: u64, cfg: &ModelConfig) -> Tensor<Fx> {
+        let mut rng = Pcg32::seeded(seed);
+        let shape = Shape::d3(cfg.in_channels, cfg.image_size, cfg.image_size);
+        let n = shape.numel();
+        quantize_tensor(&Tensor::from_vec(
+            shape,
+            (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+        ))
+    }
+
+    #[test]
+    fn inference_bit_exact_vs_qnn() {
+        let cfg = tiny_cfg();
+        let m = Model::new(cfg.clone(), 201);
+        let qm = QModel::from_model(&m);
+        let mut dev = TinyClDevice::new(SimConfig::paper(), cfg.clone());
+        dev.load_params(&qm.params);
+        let x = rand_image(202, &cfg);
+        let (logits, stats) = dev.infer(&x);
+        assert_eq!(logits, qm.forward(&x), "device ≠ qnn logits");
+        assert!(stats.cycles() > 0);
+    }
+
+    #[test]
+    fn train_step_bit_exact_vs_qnn() {
+        let cfg = tiny_cfg();
+        let m = Model::new(cfg.clone(), 203);
+        let mut qm = QModel::from_model(&m);
+        let mut dev = TinyClDevice::new(SimConfig::paper(), cfg.clone());
+        dev.load_params(&qm.params);
+        let lr = Fx::from_f32(0.125);
+
+        for step in 0..3 {
+            let x = rand_image(300 + step, &cfg);
+            let label = (step % 4) as usize;
+            let (ql, _) = qm.train_step(&x, label, 4, lr);
+            let (sl, _, _) = dev.train_step(&x, label, 4, lr);
+            assert_eq!(ql, sl, "loss diverged at step {step}");
+            let p = dev.read_params();
+            assert_eq!(p.k1.data(), qm.params.k1.data(), "k1 diverged at {step}");
+            assert_eq!(p.k2.data(), qm.params.k2.data(), "k2 diverged at {step}");
+            assert_eq!(p.w.data(), qm.params.w.data(), "w diverged at {step}");
+        }
+    }
+
+    #[test]
+    fn paper_cycle_counts_full_step() {
+        // Full-size model: per-op cycle counts from §IV-B.
+        let cfg = ModelConfig::default();
+        let m = Model::new(cfg.clone(), 205);
+        let qm = QModel::from_model(&m);
+        let mut dev = TinyClDevice::new(SimConfig::paper(), cfg.clone());
+        dev.load_params(&qm.params);
+        let x = rand_image(206, &cfg);
+        let (_, _, run) = dev.train_step(&x, 0, 10, Fx::from_f32(0.5));
+
+        // conv forwards: conv1 (3ch in, 1 group) 8192 + conv2 8192.
+        assert_eq!(run.by_op[&OpKind::ConvForward].cycles, 16384);
+        assert_eq!(run.by_op[&OpKind::DenseForward].cycles, 1280);
+        assert_eq!(run.by_op[&OpKind::DenseInputGrad].cycles, 1822);
+        assert_eq!(run.by_op[&OpKind::DenseWeightUpdate].cycles, 1280);
+        // kernel grads: conv2 8192 + conv1 8192.
+        assert_eq!(run.by_op[&OpKind::ConvKernelGrad].cycles, 16384);
+        assert_eq!(run.by_op[&OpKind::ConvInputGrad].cycles, 8192);
+        // updates: k2 = 8 oc × 1 g × 9 + k1 = 8 × 1 × 9.
+        assert_eq!(run.by_op[&OpKind::KernelUpdate].cycles, 144);
+    }
+}

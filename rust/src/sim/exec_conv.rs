@@ -1,0 +1,603 @@
+//! Cycle-stepped executors for the three convolution computations
+//! (§III-F-1..3). One simulated cycle = one PU issue, exactly as the
+//! paper's dataflow describes; data is held in [`BankedSram`]s and the
+//! numerics go through the same `fixed` ops as `qnn`, so results are
+//! bit-exact with the functional model while cycles/accesses are counted
+//! per the microarchitecture.
+//!
+//! Accumulation nesting: the input-channel-group loop is *inside* the
+//! output-pixel loop, accumulating in the PU's 32-bit partial-sum register
+//! and writing back once per pixel. The paper's Fig. 3 kernel SRAM blocks
+//! ("64 blocks of 3×3") hold the whole kernel set locally, so kernel
+//! group switching costs no extra memory traffic within a sweep.
+
+use super::agu::{raster, Region, SnakeIter, WindowBuffer};
+use super::config::SimConfig;
+use super::mac::MacMode;
+use super::pu::Pu;
+use super::sram::{BankedSram, LaneVec, MAX_LANES};
+use super::stats::OpStats;
+use crate::fixed::{acc_fmt_shift, Acc, Fx};
+
+/// Convolution geometry (stride 1, square input, geometry-preserving
+/// padding — the paper's only configuration).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvGeom {
+    pub cin: usize,
+    pub cout: usize,
+    pub h: usize,
+    pub w: usize,
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    pub fn in_groups(&self, lanes: usize) -> usize {
+        self.cin.div_ceil(lanes)
+    }
+    pub fn out_groups(&self, lanes: usize) -> usize {
+        self.cout.div_ceil(lanes)
+    }
+}
+
+/// Output traversal order: the paper's snake (Fig. 5) or plain raster
+/// (the A1 ablation). Raster wraps are non-adjacent jumps, so the window
+/// buffer reloads all 9 taps at each row start.
+fn traversal(cfg: &SimConfig, h: usize, w: usize) -> Box<dyn Iterator<Item = (usize, usize)>> {
+    if cfg.snake {
+        Box::new(SnakeIter::new(h, w))
+    } else {
+        Box::new(raster(h, w))
+    }
+}
+
+/// Kernel storage layout inside the kernel SRAM:
+/// `base + ((oc * in_groups + icg) * 9 + tap)`, lane = input channel
+/// within the group. `load_kernel` fills it from an OIHW tensor.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelRegion {
+    pub base: usize,
+    pub cout: usize,
+    pub in_groups: usize,
+}
+
+impl KernelRegion {
+    pub fn addr(&self, oc: usize, icg: usize, tap: usize) -> usize {
+        debug_assert!(oc < self.cout && icg < self.in_groups && tap < 9);
+        self.base + (oc * self.in_groups + icg) * 9 + tap
+    }
+
+    pub fn words(&self) -> usize {
+        self.cout * self.in_groups * 9
+    }
+
+    pub fn end(&self) -> usize {
+        self.base + self.words()
+    }
+}
+
+/// Load an OIHW kernel tensor into the kernel SRAM (DMA-style, uncounted).
+pub fn load_kernel(
+    mem: &mut BankedSram,
+    region: &KernelRegion,
+    kernel: &crate::tensor::Tensor<Fx>,
+    lanes: usize,
+) {
+    let kd = kernel.shape().dims();
+    assert_eq!(kd[0], region.cout);
+    assert_eq!(kd[2], 3);
+    assert_eq!(kd[3], 3);
+    for oc in 0..kd[0] {
+        for ic in 0..kd[1] {
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    let addr = region.addr(oc, ic / lanes, ky * 3 + kx);
+                    mem.load(addr, ic % lanes, kernel.at4(oc, ic, ky, kx));
+                }
+            }
+        }
+    }
+}
+
+/// Read a kernel tensor back out of the SRAM (verification / update path).
+pub fn store_kernel(
+    mem: &BankedSram,
+    region: &KernelRegion,
+    cout: usize,
+    cin: usize,
+    lanes: usize,
+) -> crate::tensor::Tensor<Fx> {
+    let mut t = crate::tensor::Tensor::zeros(crate::tensor::Shape::d4(cout, cin, 3, 3));
+    for oc in 0..cout {
+        for ic in 0..cin {
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    let addr = region.addr(oc, ic / lanes, ky * 3 + kx);
+                    t.set4(oc, ic, ky, kx, mem.peek(addr, ic % lanes));
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Fetch the 9 tap vectors of one (oc, icg) kernel slice into the PU-local
+/// registers. Charged as 9 port reads (once per sweep, double-buffered in
+/// hardware so it does not add cycles at steady state).
+fn fetch_kernel_taps(
+    mem: &mut BankedSram,
+    region: &KernelRegion,
+    oc: usize,
+    icg: usize,
+) -> [LaneVec; 9] {
+    let mut taps = [[Fx::ZERO; MAX_LANES]; 9];
+    for (tap, slot) in taps.iter_mut().enumerate() {
+        let addr = region.addr(oc, icg, tap);
+        for l in 0..mem.lanes() {
+            slot[l] = mem.peek(addr, l);
+        }
+    }
+    mem.charge_reads(9);
+    taps
+}
+
+/// §III-F-1 forward convolution (+ fused ReLU). Returns per-op stats;
+/// output lands in `out_mem`/`out_region` (lane = oc % lanes,
+/// group = oc / lanes).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_forward_sim(
+    cfg: &SimConfig,
+    pu: &mut Pu,
+    feat_mem: &mut BankedSram,
+    in_region: &Region,
+    kmem: &mut BankedSram,
+    kregion: &KernelRegion,
+    out_mem: &mut BankedSram,
+    out_region: &Region,
+    geom: &ConvGeom,
+    relu: bool,
+) -> OpStats {
+    assert_eq!(cfg.taps, 9, "conv executors model the 3×3 window (9 taps)");
+    let lanes = cfg.lanes;
+    let icgs = geom.in_groups(lanes);
+    assert_eq!(in_region.groups, icgs);
+    // Accumulator format for the cin·3·3 reduction (matches qnn).
+    let fmt = acc_fmt_shift(geom.cin * 9);
+    let mut stats = OpStats::default();
+    pu.set_mode(MacMode::MultiOperand);
+
+    let (m0, a0) = {
+        let c = pu.counters();
+        (c.mults, c.adds)
+    };
+    let (fr0, kr0, ow0) = (feat_mem.reads, kmem.reads, out_mem.writes);
+
+    for oc in 0..geom.cout {
+        // Per-sweep kernel preload (double-buffered; +9·icgs cycles only
+        // if fills are counted).
+        let ktaps: Vec<[LaneVec; 9]> = (0..icgs)
+            .map(|icg| fetch_kernel_taps(kmem, kregion, oc, icg))
+            .collect();
+        if cfg.count_fill {
+            stats.cycles += (9 * icgs) as u64;
+        }
+        let mut windows: Vec<WindowBuffer> = (0..icgs).map(|_| WindowBuffer::new()).collect();
+
+        for (oy, ox) in traversal(cfg, geom.h, geom.w) {
+            let mut acc = Acc::ZERO;
+            for icg in 0..icgs {
+                if !cfg.window_reuse {
+                    windows[icg].invalidate_keep_count();
+                }
+                windows[icg].slide_to(feat_mem, in_region, icg, oy, ox, geom.pad);
+                acc = acc.add(pu.cycle_conv(windows[icg].taps(), &ktaps[icg], fmt));
+                stats.cycles += 1;
+            }
+            let v = Pu::writeback(acc, relu, fmt);
+            out_mem.write_lane(out_region.addr(oc / lanes, oy, ox), oc % lanes, v);
+        }
+    }
+
+    let c = pu.counters();
+    stats.mults = c.mults - m0;
+    stats.adds = c.adds - a0;
+    stats.feature_reads = feat_mem.reads - fr0;
+    stats.kernel_reads = kmem.reads - kr0;
+    stats.feature_writes = out_mem.writes - ow0;
+    pu.clear_state();
+    stats
+}
+
+/// §III-F-3 gradient propagation: same dataflow as forward with the
+/// kernel transposed (oc↔ic) and rotated 180°; output is optionally
+/// masked by the stored post-activation (fused ReLU backward).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_input_grad_sim(
+    cfg: &SimConfig,
+    pu: &mut Pu,
+    grad_mem: &mut BankedSram,
+    dy_region: &Region,
+    kmem: &mut BankedSram,
+    kregion: &KernelRegion,
+    out_mem: &mut BankedSram,
+    dx_region: &Region,
+    mask: Option<(&mut BankedSram, &Region)>,
+    geom: &ConvGeom,
+) -> OpStats {
+    assert_eq!(cfg.taps, 9);
+    let lanes = cfg.lanes;
+    let ocgs = geom.out_groups(lanes);
+    assert_eq!(dy_region.groups, ocgs);
+    // Accumulator format for the cout·3·3 reduction (matches qnn).
+    let fmt = acc_fmt_shift(geom.cout * 9);
+    let mut stats = OpStats::default();
+    pu.set_mode(MacMode::MultiOperand);
+
+    let (m0, a0) = {
+        let c = pu.counters();
+        (c.mults, c.adds)
+    };
+    let (gr0, kr0, ow0) = (grad_mem.reads, kmem.reads, out_mem.writes);
+    let mut mask = mask;
+    let mut mask_reads = 0u64;
+
+    for ic in 0..geom.cin {
+        // Transposed+rotated kernel slice: tap (ty,tx) lane oc ←
+        // K[oc][ic][2-ty][2-tx]. Gathered across oc: charged as 9 reads
+        // per output-channel group (transposable kernel banking).
+        let mut ktaps: Vec<[LaneVec; 9]> = vec![[[Fx::ZERO; MAX_LANES]; 9]; ocgs];
+        for (ocg, taps) in ktaps.iter_mut().enumerate() {
+            for ty in 0..3 {
+                for tx in 0..3 {
+                    let tap = ty * 3 + tx;
+                    for l in 0..lanes {
+                        let oc = ocg * lanes + l;
+                        if oc >= geom.cout {
+                            break;
+                        }
+                        let addr = kregion.addr(oc, ic / lanes, (2 - ty) * 3 + (2 - tx));
+                        taps[tap][l] = kmem.peek(addr, ic % lanes);
+                    }
+                }
+            }
+            kmem.charge_reads(9);
+        }
+        if cfg.count_fill {
+            stats.cycles += (9 * ocgs) as u64;
+        }
+        let mut windows: Vec<WindowBuffer> = (0..ocgs).map(|_| WindowBuffer::new()).collect();
+
+        for (iy, ix) in traversal(cfg, geom.h, geom.w) {
+            let mut acc = Acc::ZERO;
+            for ocg in 0..ocgs {
+                if !cfg.window_reuse {
+                    windows[ocg].invalidate_keep_count();
+                }
+                windows[ocg].slide_to(grad_mem, dy_region, ocg, iy, ix, geom.pad);
+                acc = acc.add(pu.cycle_conv(windows[ocg].taps(), &ktaps[ocg], fmt));
+                stats.cycles += 1;
+            }
+            let mut v = acc.to_fx_fmt(fmt);
+            if let Some((mmem, mregion)) = mask.as_mut() {
+                let a = mmem.peek(mregion.addr(ic / lanes, iy, ix), ic % lanes);
+                mmem.charge_reads(1);
+                mask_reads += 1;
+                if !(a > Fx::ZERO) {
+                    v = Fx::ZERO;
+                }
+            }
+            out_mem.write_lane(dx_region.addr(ic / lanes, iy, ix), ic % lanes, v);
+        }
+    }
+
+    let c = pu.counters();
+    stats.mults = c.mults - m0;
+    stats.adds = c.adds - a0;
+    stats.gradient_reads = grad_mem.reads - gr0;
+    stats.kernel_reads = kmem.reads - kr0;
+    stats.gradient_writes = out_mem.writes - ow0;
+    stats.feature_reads += mask_reads;
+    pu.clear_state();
+    stats
+}
+
+/// §III-F-2 kernel gradient: multi-adder mode, one accumulator per
+/// (tap, input-channel lane), swept over all gradient positions of one
+/// output channel (Eq. 7's MAC-to-tap assignment). Writes dK into
+/// `dk_out` and charges the staging writes to the gradient memory.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_kernel_grad_sim(
+    cfg: &SimConfig,
+    pu: &mut Pu,
+    feat_mem: &mut BankedSram,
+    x_region: &Region,
+    grad_mem: &mut BankedSram,
+    dy_region: &Region,
+    stage_mem: &mut BankedSram,
+    geom: &ConvGeom,
+    dk_out: &mut crate::tensor::Tensor<Fx>,
+    grad_shift: u32,
+) -> OpStats {
+    assert_eq!(cfg.taps, 9);
+    let lanes = cfg.lanes;
+    let icgs = geom.in_groups(lanes);
+    assert_eq!(x_region.groups, icgs);
+    let kd = dk_out.shape().dims().to_vec();
+    assert_eq!(kd[0], geom.cout);
+    assert_eq!(kd[1], geom.cin);
+    let mut stats = OpStats::default();
+    pu.set_mode(MacMode::MultiAdder);
+
+    let (m0, a0) = {
+        let c = pu.counters();
+        (c.mults, c.adds)
+    };
+    let (fr0, gr0, sw0) = (feat_mem.reads, grad_mem.reads, stage_mem.writes);
+
+    for oc in 0..geom.cout {
+        for icg in 0..icgs {
+            pu.clear_state();
+            let mut window = WindowBuffer::new();
+            for (oy, ox) in traversal(cfg, geom.h, geom.w) {
+                if !cfg.window_reuse {
+                    window.invalidate_keep_count();
+                }
+                window.slide_to(feat_mem, x_region, icg, oy, ox, geom.pad);
+                let g = grad_mem.peek(dy_region.addr(oc / lanes, oy, ox), oc % lanes);
+                grad_mem.charge_reads(1);
+                for (tap, tv) in window.taps().iter().enumerate() {
+                    pu.macs[tap].cycle_multi_adder(tv, g, grad_shift);
+                }
+                stats.cycles += 1;
+            }
+            // Writeback: one vector (lanes values) per tap.
+            for tap in 0..9 {
+                let (ky, kx) = (tap / 3, tap % 3);
+                for l in 0..lanes {
+                    let ic = icg * lanes + l;
+                    if ic >= geom.cin {
+                        break;
+                    }
+                    dk_out.set4(
+                        oc, ic, ky, kx,
+                        pu.macs[tap].acc8[l].to_fx().clamp_abs(crate::qnn::layers::GRAD_CLIP),
+                    );
+                }
+            }
+            stage_mem.charge_writes(9);
+            if cfg.count_fill {
+                stats.cycles += 9;
+            }
+        }
+    }
+
+    let c = pu.counters();
+    stats.mults = c.mults - m0;
+    stats.adds = c.adds - a0;
+    stats.feature_reads = feat_mem.reads - fr0;
+    stats.gradient_reads = grad_mem.reads - gr0;
+    stats.gradient_writes = stage_mem.writes - sw0;
+    pu.clear_state();
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::layers;
+    use crate::tensor::{quantize_tensor, Shape, Tensor};
+    use crate::util::rng::Pcg32;
+
+    fn rand_fx(rng: &mut Pcg32, shape: Shape, scale: f32) -> Tensor<Fx> {
+        let n = shape.numel();
+        quantize_tensor(&Tensor::from_vec(
+            shape,
+            (0..n).map(|_| rng.range_f32(-scale, scale)).collect(),
+        ))
+    }
+
+    /// Load a CHW tensor into a feature region (unused lanes zero).
+    pub fn load_chw(mem: &mut BankedSram, region: &Region, t: &Tensor<Fx>, lanes: usize) {
+        let d = t.shape().dims();
+        for c in 0..d[0] {
+            for y in 0..d[1] {
+                for x in 0..d[2] {
+                    mem.load(region.addr(c / lanes, y, x), c % lanes, t.at3(c, y, x));
+                }
+            }
+        }
+    }
+
+    /// Read a CHW tensor back out of a region.
+    pub fn read_chw(
+        mem: &BankedSram,
+        region: &Region,
+        ch: usize,
+        lanes: usize,
+    ) -> Tensor<Fx> {
+        let mut t = Tensor::zeros(Shape::d3(ch, region.h, region.w));
+        for c in 0..ch {
+            for y in 0..region.h {
+                for x in 0..region.w {
+                    t.set3(c, y, x, mem.peek(region.addr(c / lanes, y, x), c % lanes));
+                }
+            }
+        }
+        t
+    }
+
+    struct Rig {
+        cfg: SimConfig,
+        pu: Pu,
+        feat: BankedSram,
+        kmem: BankedSram,
+        grad: BankedSram,
+    }
+
+    fn rig() -> Rig {
+        let cfg = SimConfig::paper();
+        Rig {
+            pu: Pu::new(cfg.taps, cfg.lanes),
+            feat: BankedSram::new("feature", cfg.lanes, 8192),
+            kmem: BankedSram::new("kernel", cfg.lanes, 8192),
+            grad: BankedSram::new("gradient", cfg.lanes, 8192),
+            cfg,
+        }
+    }
+
+    #[test]
+    fn forward_bit_exact_vs_qnn_and_paper_cycles() {
+        // The paper's headline geometry: 32×32, 8 in / 8 out channels
+        // ⇒ exactly 8192 cycles (§IV-B).
+        let mut r = rig();
+        let mut rng = Pcg32::seeded(71);
+        let geom = ConvGeom { cin: 8, cout: 8, h: 32, w: 32, pad: 1 };
+        let x = rand_fx(&mut rng, Shape::d3(8, 32, 32), 1.0);
+        let k = rand_fx(&mut rng, Shape::d4(8, 8, 3, 3), 0.3);
+
+        let in_region = Region::new(0, 1, 32, 32);
+        let out_region = Region::new(2048, 1, 32, 32);
+        let kregion = KernelRegion { base: 0, cout: 8, in_groups: 1 };
+        load_chw(&mut r.feat, &in_region, &x, 8);
+        load_kernel(&mut r.kmem, &kregion, &k, 8);
+
+        let stats = conv_forward_sim(
+            &r.cfg, &mut r.pu, &mut r.feat, &in_region, &mut r.kmem, &kregion,
+            &mut r.grad, &out_region, &geom, true,
+        );
+        assert_eq!(stats.cycles, 8192, "paper §IV-B forward cycle count");
+
+        let got = read_chw(&r.grad, &out_region, 8, 8);
+        let expect = layers::conv_forward(&x, &k, 1, true);
+        assert_eq!(got.data(), expect.data(), "sim ≠ qnn (forward)");
+        // Steady state: ≤3 feature fetches per cycle.
+        assert!(stats.feature_reads <= stats.cycles * 3);
+        // Full MAC issue: 72 mults per cycle.
+        assert_eq!(stats.mults, stats.cycles * 72);
+    }
+
+    #[test]
+    fn forward_three_channel_input_padded_group() {
+        // conv1 geometry: 3 input channels occupy one (partial) group.
+        let mut r = rig();
+        let mut rng = Pcg32::seeded(73);
+        let geom = ConvGeom { cin: 3, cout: 8, h: 16, w: 16, pad: 1 };
+        let x = rand_fx(&mut rng, Shape::d3(3, 16, 16), 1.0);
+        let k = rand_fx(&mut rng, Shape::d4(8, 3, 3, 3), 0.3);
+
+        let in_region = Region::new(0, 1, 16, 16);
+        let out_region = Region::new(256, 1, 16, 16);
+        let kregion = KernelRegion { base: 0, cout: 8, in_groups: 1 };
+        load_chw(&mut r.feat, &in_region, &x, 8);
+        load_kernel(&mut r.kmem, &kregion, &k, 8);
+
+        let stats = conv_forward_sim(
+            &r.cfg, &mut r.pu, &mut r.feat, &in_region, &mut r.kmem, &kregion,
+            &mut r.grad, &out_region, &geom, false,
+        );
+        assert_eq!(stats.cycles, 16 * 16 * 8);
+        let got = read_chw(&r.grad, &out_region, 8, 8);
+        let expect = layers::conv_forward(&x, &k, 1, false);
+        assert_eq!(got.data(), expect.data());
+    }
+
+    #[test]
+    fn input_grad_bit_exact_and_8192_cycles() {
+        let mut r = rig();
+        let mut rng = Pcg32::seeded(79);
+        let geom = ConvGeom { cin: 8, cout: 8, h: 32, w: 32, pad: 1 };
+        let dy = rand_fx(&mut rng, Shape::d3(8, 32, 32), 0.5);
+        let k = rand_fx(&mut rng, Shape::d4(8, 8, 3, 3), 0.3);
+
+        let dy_region = Region::new(0, 1, 32, 32);
+        let dx_region = Region::new(1024, 1, 32, 32);
+        let kregion = KernelRegion { base: 0, cout: 8, in_groups: 1 };
+        load_chw(&mut r.grad, &dy_region, &dy, 8);
+        load_kernel(&mut r.kmem, &kregion, &k, 8);
+
+        let mut grad2 = BankedSram::new("gradient2", 8, 8192);
+        let stats = conv_input_grad_sim(
+            &r.cfg, &mut r.pu, &mut r.grad, &dy_region, &mut r.kmem, &kregion,
+            &mut grad2, &dx_region, None, &geom,
+        );
+        assert_eq!(stats.cycles, 8192, "paper §IV-B grad-prop cycle count");
+
+        let got = read_chw(&grad2, &dx_region, 8, 8);
+        let expect = layers::conv_input_grad(&dy, &k, &Shape::d3(8, 32, 32), 1);
+        assert_eq!(got.data(), expect.data(), "sim ≠ qnn (input grad)");
+    }
+
+    #[test]
+    fn input_grad_with_relu_mask() {
+        let mut r = rig();
+        let mut rng = Pcg32::seeded(83);
+        let geom = ConvGeom { cin: 4, cout: 4, h: 8, w: 8, pad: 1 };
+        let dy = rand_fx(&mut rng, Shape::d3(4, 8, 8), 0.5);
+        let k = rand_fx(&mut rng, Shape::d4(4, 4, 3, 3), 0.3);
+        let a = rand_fx(&mut rng, Shape::d3(4, 8, 8), 1.0);
+
+        let dy_region = Region::new(0, 1, 8, 8);
+        let dx_region = Region::new(64, 1, 8, 8);
+        let a_region = Region::new(0, 1, 8, 8);
+        let kregion = KernelRegion { base: 0, cout: 4, in_groups: 1 };
+        load_chw(&mut r.grad, &dy_region, &dy, 8);
+        load_kernel(&mut r.kmem, &kregion, &k, 8);
+        load_chw(&mut r.feat, &a_region, &a, 8);
+
+        let mut grad2 = BankedSram::new("gradient2", 8, 1024);
+        conv_input_grad_sim(
+            &r.cfg, &mut r.pu, &mut r.grad, &dy_region, &mut r.kmem, &kregion,
+            &mut grad2, &dx_region, Some((&mut r.feat, &a_region)), &geom,
+        );
+        let got = read_chw(&grad2, &dx_region, 4, 8);
+        let dx = layers::conv_input_grad(&dy, &k, &Shape::d3(4, 8, 8), 1);
+        let expect = layers::relu_backward(&dx, &a);
+        assert_eq!(got.data(), expect.data(), "fused mask ≠ relu_backward∘grad");
+    }
+
+    #[test]
+    fn kernel_grad_bit_exact_and_8192_cycles() {
+        let mut r = rig();
+        let mut rng = Pcg32::seeded(89);
+        let geom = ConvGeom { cin: 8, cout: 8, h: 32, w: 32, pad: 1 };
+        let x = rand_fx(&mut rng, Shape::d3(8, 32, 32), 1.0);
+        let dy = rand_fx(&mut rng, Shape::d3(8, 32, 32), 0.1);
+
+        let x_region = Region::new(0, 1, 32, 32);
+        let dy_region = Region::new(0, 1, 32, 32);
+        load_chw(&mut r.feat, &x_region, &x, 8);
+        load_chw(&mut r.grad, &dy_region, &dy, 8);
+
+        let mut dk = Tensor::zeros(Shape::d4(8, 8, 3, 3));
+        let mut stage = BankedSram::new("gradient2", 8, 1024);
+        let stats = conv_kernel_grad_sim(
+            &r.cfg, &mut r.pu, &mut r.feat, &x_region, &mut r.grad, &dy_region,
+            &mut stage, &geom, &mut dk, 0,
+        );
+        assert_eq!(stats.cycles, 8192, "paper §IV-B kernel-grad cycle count");
+
+        let expect = layers::conv_kernel_grad(&dy, &x, &Shape::d4(8, 8, 3, 3), 1, 0);
+        assert_eq!(dk.data(), expect.data(), "sim ≠ qnn (kernel grad)");
+        assert_eq!(stats.gradient_writes, 8 * 9); // 9 tap-vectors per oc
+    }
+
+    #[test]
+    fn fill_accounting_is_small() {
+        let mut r = rig();
+        r.cfg = r.cfg.with_fill(true);
+        let mut rng = Pcg32::seeded(97);
+        let geom = ConvGeom { cin: 8, cout: 8, h: 32, w: 32, pad: 1 };
+        let x = rand_fx(&mut rng, Shape::d3(8, 32, 32), 1.0);
+        let k = rand_fx(&mut rng, Shape::d4(8, 8, 3, 3), 0.3);
+        let in_region = Region::new(0, 1, 32, 32);
+        let out_region = Region::new(2048, 1, 32, 32);
+        let kregion = KernelRegion { base: 0, cout: 8, in_groups: 1 };
+        load_chw(&mut r.feat, &in_region, &x, 8);
+        load_kernel(&mut r.kmem, &kregion, &k, 8);
+        let stats = conv_forward_sim(
+            &r.cfg, &mut r.pu, &mut r.feat, &in_region, &mut r.kmem, &kregion,
+            &mut r.grad, &out_region, &geom, true,
+        );
+        // 8192 + 8 sweeps × 9 preload cycles = 8264: <1% overhead.
+        assert_eq!(stats.cycles, 8192 + 72);
+    }
+}

@@ -1,0 +1,515 @@
+//! Cycle-stepped executors for the dense-layer computations (§III-F-4).
+//!
+//! The dense input is the flattened conv feature (channel-major:
+//! `i = c·H·W + p` with `p = y·W + x`), read straight out of the feature
+//! SRAM's channel banks: one vector access returns one pixel's channel
+//! group, and `lanes` MACs process `lanes` pixels per cycle — the paper's
+//! "8 pixels of 8 channels" (64 operands/cycle).
+//!
+//! Weights live in the kernel SRAM addressed `(group, pixel, n)` with the
+//! channel in the lane dimension, so forward and the fused update read
+//! them in port-width units; gradient propagation needs the transposed
+//! orientation and is charged one port read per MAC per cycle
+//! (transposable banking, same assumption as the conv backward kernel
+//! reads — see DESIGN.md).
+
+use super::config::SimConfig;
+use super::mac::MacMode;
+use super::pu::Pu;
+use super::sram::{BankedSram, LaneVec, MAX_LANES};
+use super::stats::OpStats;
+use crate::fixed::{acc_fmt_shift, wb_dither, Acc, Fx};
+
+/// Dense weight region: `(groups × hw)` input positions × `n_out` columns.
+/// `addr(g, p, n) = base + (g·hw + p)·n_out + n`, lane = channel in group.
+#[derive(Clone, Copy, Debug)]
+pub struct DenseWRegion {
+    pub base: usize,
+    pub groups: usize,
+    pub hw: usize,
+    pub n_out: usize,
+    /// True input count (`C·H·W`, may be below the padded lane capacity
+    /// `groups·lanes·hw`) — fixes the accumulator format the CU programs
+    /// for the forward reduction.
+    pub n_in: usize,
+}
+
+impl DenseWRegion {
+    #[inline]
+    pub fn addr(&self, g: usize, p: usize, n: usize) -> usize {
+        debug_assert!(g < self.groups && p < self.hw && n < self.n_out);
+        self.base + (g * self.hw + p) * self.n_out + n
+    }
+
+    pub fn words(&self) -> usize {
+        self.groups * self.hw * self.n_out
+    }
+
+    pub fn end(&self) -> usize {
+        self.base + self.words()
+    }
+}
+
+/// Load a `(n_in, n_out)` weight tensor (row-major, `n_in = C·H·W`
+/// channel-major flat index) into the SRAM layout.
+pub fn load_dense_w(
+    mem: &mut BankedSram,
+    region: &DenseWRegion,
+    w: &crate::tensor::Tensor<Fx>,
+    lanes: usize,
+) {
+    let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
+    assert_eq!(n_out, region.n_out);
+    // Channel count may be a partial final group (e.g. 4 channels on an
+    // 8-lane machine); the unused lanes stay zero.
+    assert!(n_in <= region.groups * lanes * region.hw);
+    assert_eq!(n_in % region.hw, 0, "n_in must be whole channels");
+    for i in 0..n_in {
+        let c = i / region.hw;
+        let p = i % region.hw;
+        for n in 0..n_out {
+            mem.load(region.addr(c / lanes, p, n), c % lanes, w.data()[i * n_out + n]);
+        }
+    }
+}
+
+/// Read the weight tensor back out (update verification). `n_in` is the
+/// true input count (may be less than the region's lane capacity).
+pub fn store_dense_w(
+    mem: &BankedSram,
+    region: &DenseWRegion,
+    n_in: usize,
+    lanes: usize,
+) -> crate::tensor::Tensor<Fx> {
+    assert!(n_in <= region.groups * lanes * region.hw);
+    let mut t = crate::tensor::Tensor::zeros(crate::tensor::Shape::d2(n_in, region.n_out));
+    for i in 0..n_in {
+        let c = i / region.hw;
+        let p = i % region.hw;
+        for n in 0..region.n_out {
+            let v = mem.peek(region.addr(c / lanes, p, n), c % lanes);
+            t.data_mut()[i * region.n_out + n] = v;
+        }
+    }
+    t
+}
+
+/// Feature-region vector read helper (uncounted; callers charge ports).
+#[inline]
+fn feat_vec(
+    mem: &BankedSram,
+    region: &super::agu::Region,
+    g: usize,
+    p: usize,
+) -> LaneVec {
+    let (y, x) = (p / region.w, p % region.w);
+    let addr = region.addr(g, y, x);
+    let mut out = [Fx::ZERO; MAX_LANES];
+    for l in 0..mem.lanes() {
+        out[l] = mem.peek(addr, l);
+    }
+    out
+}
+
+/// Dense forward (Eq. 4/8): `lanes` MACs × `lanes` lanes per cycle,
+/// psum-accumulated per output, one writeback per output element.
+/// Logits are returned and their store charged to the gradient memory.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_forward_sim(
+    cfg: &SimConfig,
+    pu: &mut Pu,
+    feat_mem: &mut BankedSram,
+    x_region: &super::agu::Region,
+    kmem: &mut BankedSram,
+    wregion: &DenseWRegion,
+    grad_mem: &mut BankedSram,
+) -> Vec<Fx> {
+    run_dense_forward(cfg, pu, feat_mem, x_region, kmem, wregion, grad_mem).0
+}
+
+/// Forward returning (logits, stats).
+#[allow(clippy::too_many_arguments)]
+pub fn run_dense_forward(
+    cfg: &SimConfig,
+    pu: &mut Pu,
+    feat_mem: &mut BankedSram,
+    x_region: &super::agu::Region,
+    kmem: &mut BankedSram,
+    wregion: &DenseWRegion,
+    grad_mem: &mut BankedSram,
+) -> (Vec<Fx>, OpStats) {
+    let lanes = cfg.lanes;
+    let macs_used = lanes.min(pu.taps());
+    let hw = wregion.hw;
+    let groups = wregion.groups;
+    let mut stats = OpStats::default();
+    pu.set_mode(MacMode::MultiOperand);
+
+    let (m0, a0) = {
+        let c = pu.counters();
+        (c.mults, c.adds)
+    };
+    let (fr0, kr0, gw0) = (feat_mem.reads, kmem.reads, grad_mem.writes);
+
+    let fmt = acc_fmt_shift(wregion.n_in);
+    let mut logits = Vec::with_capacity(wregion.n_out);
+    for n in 0..wregion.n_out {
+        for m in pu.macs.iter_mut() {
+            m.clear_psum();
+        }
+        for g in 0..groups {
+            let mut p0 = 0;
+            while p0 < hw {
+                for m in 0..macs_used {
+                    let p = p0 + m;
+                    if p >= hw {
+                        break;
+                    }
+                    let xv = feat_vec(feat_mem, x_region, g, p);
+                    let mut wv = [Fx::ZERO; MAX_LANES];
+                    let addr = wregion.addr(g, p, n);
+                    for l in 0..lanes {
+                        wv[l] = kmem.peek(addr, l);
+                    }
+                    pu.macs[m].cycle_multi_operand(&xv, &wv, fmt);
+                }
+                let issued = macs_used.min(hw - p0) as u64;
+                feat_mem.charge_reads(issued);
+                kmem.charge_reads(issued);
+                stats.cycles += 1;
+                p0 += macs_used;
+            }
+        }
+        // Dadda reduction of the used psums, single writeback.
+        let mut acc = Acc::ZERO;
+        for m in 0..macs_used {
+            acc = acc.add(pu.macs[m].psum);
+        }
+        pu.dadda_reductions += 1;
+        logits.push(acc.to_fx_fmt(fmt));
+        grad_mem.charge_writes(1);
+    }
+
+    let c = pu.counters();
+    stats.mults = c.mults - m0;
+    stats.adds = c.adds - a0;
+    stats.feature_reads = feat_mem.reads - fr0;
+    stats.kernel_reads = kmem.reads - kr0;
+    stats.gradient_writes = grad_mem.writes - gw0;
+    pu.clear_state();
+    (logits, stats)
+}
+
+/// Dense gradient propagation (Eq. 5/9): `taps` MACs each own one dX
+/// element, iterating the gradient vector `lanes` at a time through the
+/// partial-sum register. The writeback is fused with the ReLU mask using
+/// the stored activation (`x[i] > 0`), and dX lands in the gradient
+/// memory as a CHW plane for the following conv backward.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_input_grad_sim(
+    cfg: &SimConfig,
+    pu: &mut Pu,
+    dy: &[Fx],
+    feat_mem: &mut BankedSram,
+    x_region: &super::agu::Region,
+    kmem: &mut BankedSram,
+    wregion: &DenseWRegion,
+    out_mem: &mut BankedSram,
+    dx_region: &super::agu::Region,
+) -> OpStats {
+    let lanes = cfg.lanes;
+    let taps = pu.taps();
+    let hw = wregion.hw;
+    let n_out = wregion.n_out;
+    assert_eq!(dy.len(), n_out);
+    let n_in = wregion.groups * lanes * hw;
+    let fmt = acc_fmt_shift(n_out);
+    let mut stats = OpStats::default();
+    pu.set_mode(MacMode::MultiOperand);
+
+    let (m0, a0) = {
+        let c = pu.counters();
+        (c.mults, c.adds)
+    };
+    let (fr0, kr0, gw0) = (kmem.reads, feat_mem.reads, out_mem.writes);
+    let mut dy_reads = 0u64;
+
+    let mut i0 = 0;
+    while i0 < n_in {
+        let group_n = taps.min(n_in - i0);
+        for m in pu.macs.iter_mut() {
+            m.clear_psum();
+        }
+        let mut n0 = 0;
+        while n0 < n_out {
+            let chunk = lanes.min(n_out - n0);
+            // dY chunk: one port read, shared by all MACs via broadcast.
+            let mut dyv = [Fx::ZERO; MAX_LANES];
+            dyv[..chunk].copy_from_slice(&dy[n0..n0 + chunk]);
+            dy_reads += 1;
+            for m in 0..group_n {
+                let i = i0 + m;
+                let c = i / hw;
+                let p = i % hw;
+                let mut wv = [Fx::ZERO; MAX_LANES];
+                for (l, wl) in wv.iter_mut().enumerate().take(chunk) {
+                    *wl = kmem.peek(wregion.addr(c / lanes, p, n0 + l), c % lanes);
+                }
+                pu.macs[m].cycle_multi_operand(&dyv, &wv, fmt);
+            }
+            kmem.charge_reads(group_n as u64); // transposed-orientation reads
+            stats.cycles += 1;
+            n0 += lanes;
+        }
+        // Writeback with fused ReLU mask; dX stored CHW in gradient memory.
+        for m in 0..group_n {
+            let i = i0 + m;
+            let c = i / hw;
+            let p = i % hw;
+            let (y, x) = (p / dx_region.w, p % dx_region.w);
+            let a = feat_mem.peek(x_region.addr(c / lanes, y, x), c % lanes);
+            let mut v = pu.macs[m].psum.to_fx_fmt(fmt);
+            if !(a > Fx::ZERO) {
+                v = Fx::ZERO;
+            }
+            out_mem.write_lane(dx_region.addr(c / lanes, y, x), c % lanes, v);
+        }
+        feat_mem.charge_reads(group_n.div_ceil(lanes) as u64); // mask reads
+        i0 += taps;
+    }
+
+    let c = pu.counters();
+    stats.mults = c.mults - m0;
+    stats.adds = c.adds - a0;
+    stats.kernel_reads = kmem.reads - fr0;
+    stats.feature_reads = feat_mem.reads - kr0;
+    stats.gradient_writes = out_mem.writes - gw0;
+    stats.gradient_reads = dy_reads;
+    pu.clear_state();
+    stats
+}
+
+/// Fused dense weight update (Eq. 6 + SGD, multi-adder mode): per cycle
+/// `lanes` MACs each produce `lanes` updated weights
+/// `W ← wb(W − I·dY′)` which are written straight back — dW is never
+/// materialized. `dy_scaled` is the lr-pre-scaled loss gradient.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_weight_update_sim(
+    cfg: &SimConfig,
+    pu: &mut Pu,
+    dy_scaled: &[Fx],
+    feat_mem: &mut BankedSram,
+    x_region: &super::agu::Region,
+    kmem: &mut BankedSram,
+    wregion: &DenseWRegion,
+    grad_shift: u32,
+    step: u64,
+) -> OpStats {
+    let lanes = cfg.lanes;
+    let macs_used = lanes.min(pu.taps());
+    let hw = wregion.hw;
+    assert_eq!(dy_scaled.len(), wregion.n_out);
+    let mut stats = OpStats::default();
+    pu.set_mode(MacMode::MultiAdder);
+
+    let (m0, a0) = {
+        let c = pu.counters();
+        (c.mults, c.adds)
+    };
+    let (fr0, kr0, kw0) = (feat_mem.reads, kmem.reads, kmem.writes);
+
+    for (n, &dyn_) in dy_scaled.iter().enumerate() {
+        for g in 0..wregion.groups {
+            let mut p0 = 0;
+            while p0 < hw {
+                for m in 0..macs_used {
+                    let p = p0 + m;
+                    if p >= hw {
+                        break;
+                    }
+                    let xv = feat_vec(feat_mem, x_region, g, p);
+                    let addr = wregion.addr(g, p, n);
+                    let mut wv = [Fx::ZERO; MAX_LANES];
+                    let mut dithers = [0i32; MAX_LANES];
+                    for l in 0..lanes {
+                        wv[l] = kmem.peek(addr, l);
+                        // W flat index = (c·hw + p)·n_out + n (matches qnn).
+                        let c = g * lanes + l;
+                        let i = c * wregion.hw + p;
+                        dithers[l] = wb_dither(
+                            crate::qnn::layers::DITHER_BASE_W
+                                + (i * wregion.n_out + n) as u64,
+                            step,
+                        );
+                    }
+                    let out =
+                        pu.macs[m].cycle_multi_adder_fused(&xv, dyn_, &wv, grad_shift, &dithers);
+                    for l in 0..lanes {
+                        kmem.load(addr, l, out[l]);
+                    }
+                }
+                let issued = macs_used.min(hw - p0) as u64;
+                feat_mem.charge_reads(issued);
+                kmem.charge_reads(issued);
+                kmem.charge_writes(issued);
+                stats.cycles += 1;
+                p0 += macs_used;
+            }
+        }
+    }
+
+    let c = pu.counters();
+    stats.mults = c.mults - m0;
+    stats.adds = c.adds - a0;
+    stats.feature_reads = feat_mem.reads - fr0;
+    stats.kernel_reads = kmem.reads - kr0;
+    stats.kernel_writes = kmem.writes - kw0;
+    pu.clear_state();
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::layers;
+    use crate::sim::agu::Region;
+    use crate::tensor::{quantize_tensor, Shape, Tensor};
+    use crate::util::rng::Pcg32;
+
+    fn rand_fx(rng: &mut Pcg32, shape: Shape, scale: f32) -> Tensor<Fx> {
+        let n = shape.numel();
+        quantize_tensor(&Tensor::from_vec(
+            shape,
+            (0..n).map(|_| rng.range_f32(-scale, scale)).collect(),
+        ))
+    }
+
+    fn load_chw(mem: &mut BankedSram, region: &Region, t: &Tensor<Fx>, lanes: usize) {
+        let d = t.shape().dims();
+        for c in 0..d[0] {
+            for y in 0..d[1] {
+                for x in 0..d[2] {
+                    mem.load(region.addr(c / lanes, y, x), c % lanes, t.at3(c, y, x));
+                }
+            }
+        }
+    }
+
+    /// Paper geometry: 32×32×8 feature → 10 classes.
+    struct Rig {
+        cfg: SimConfig,
+        pu: Pu,
+        feat: BankedSram,
+        kmem: BankedSram,
+        grad: BankedSram,
+        x_region: Region,
+        wregion: DenseWRegion,
+        x: Tensor<Fx>,
+        w: Tensor<Fx>,
+    }
+
+    fn rig(seed: u64, h: usize, ch: usize, n_out: usize) -> Rig {
+        let cfg = SimConfig::paper();
+        let mut rng = Pcg32::seeded(seed);
+        let x = rand_fx(&mut rng, Shape::d3(ch, h, h), 1.0);
+        // post-ReLU-like input: half the values zeroed via relu
+        let x = Tensor::from_vec(
+            x.shape().clone(),
+            x.data().iter().map(|v| v.relu()).collect(),
+        );
+        let w = rand_fx(&mut rng, Shape::d2(ch * h * h, n_out), 0.1);
+        let groups = ch.div_ceil(cfg.lanes);
+        let mut feat = BankedSram::new("feature", cfg.lanes, groups * h * h + 16);
+        let x_region = Region::new(0, groups, h, h);
+        load_chw(&mut feat, &x_region, &x, cfg.lanes);
+        let wregion = DenseWRegion { base: 0, groups, hw: h * h, n_out, n_in: ch * h * h };
+        let mut kmem = BankedSram::new("kernel", cfg.lanes, wregion.words() + 16);
+        load_dense_w(&mut kmem, &wregion, &w, cfg.lanes);
+        Rig {
+            pu: Pu::new(cfg.taps, cfg.lanes),
+            grad: BankedSram::new("gradient", cfg.lanes, groups * h * h + 16),
+            cfg,
+            feat,
+            kmem,
+            x_region,
+            wregion,
+            x,
+            w,
+        }
+    }
+
+    #[test]
+    fn forward_bit_exact_and_1280_cycles() {
+        let mut r = rig(101, 32, 8, 10);
+        let (logits, stats) = run_dense_forward(
+            &r.cfg, &mut r.pu, &mut r.feat, &r.x_region, &mut r.kmem, &r.wregion,
+            &mut r.grad,
+        );
+        assert_eq!(stats.cycles, 1280, "paper §IV-B dense forward cycles");
+        let expect = layers::dense_forward(r.x.data(), &r.w);
+        assert_eq!(logits, expect, "sim ≠ qnn (dense forward)");
+    }
+
+    #[test]
+    fn input_grad_bit_exact_and_cycle_count() {
+        let mut r = rig(103, 32, 8, 10);
+        let mut rng = Pcg32::seeded(104);
+        let dy: Vec<Fx> = (0..10).map(|_| Fx::from_f32(rng.range_f32(-0.5, 0.5))).collect();
+        let dx_region = Region::new(0, 1, 32, 32);
+        let mut grad2 = BankedSram::new("gradient2", 8, 1024 + 16);
+        let stats = dense_input_grad_sim(
+            &r.cfg, &mut r.pu, &dy, &mut r.feat, &r.x_region, &mut r.kmem,
+            &r.wregion, &mut grad2, &dx_region,
+        );
+        // ceil(8192/9) groups × ceil(10/8) chunks = 911 × 2 = 1822:
+        // the paper's idealized (I/9)(n/8) = 1821 (see EXPERIMENTS.md E1).
+        assert_eq!(stats.cycles, 1822);
+
+        let dx = layers::dense_input_grad(&dy, &r.w);
+        let da2 = Tensor::from_vec(Shape::d3(8, 32, 32), dx);
+        let expect = layers::relu_backward(&da2, &r.x);
+        let mut got = Tensor::zeros(Shape::d3(8, 32, 32));
+        for c in 0..8 {
+            for y in 0..32 {
+                for x in 0..32 {
+                    got.set3(c, y, x, grad2.peek(dx_region.addr(0, y, x), c));
+                }
+            }
+        }
+        assert_eq!(got.data(), expect.data(), "sim ≠ qnn (dense input grad)");
+    }
+
+    #[test]
+    fn weight_update_bit_exact_and_1280_cycles() {
+        let mut r = rig(107, 32, 8, 10);
+        let mut rng = Pcg32::seeded(108);
+        let dy: Vec<Fx> = (0..10).map(|_| Fx::from_f32(rng.range_f32(-0.5, 0.5))).collect();
+        let lr = Fx::from_f32(0.5);
+        let dy_scaled = layers::scale_grad(&dy, lr);
+
+        let stats = dense_weight_update_sim(
+            &r.cfg, &mut r.pu, &dy_scaled, &mut r.feat, &r.x_region, &mut r.kmem,
+            &r.wregion, 0, 7,
+        );
+        assert_eq!(stats.cycles, 1280, "paper §IV-B dense weight-grad cycles");
+
+        let mut expect = r.w.clone();
+        layers::dense_weight_update(&mut expect, r.x.data(), &dy_scaled, 0, 7);
+        let got = store_dense_w(&r.kmem, &r.wregion, 8 * 32 * 32, 8);
+        assert_eq!(got.data(), expect.data(), "sim ≠ qnn (fused update)");
+    }
+
+    #[test]
+    fn small_geometry_roundtrip() {
+        // Non-multiple sizes exercise the partial-chunk paths.
+        let mut r = rig(109, 5, 8, 3);
+        let (logits, stats) = run_dense_forward(
+            &r.cfg, &mut r.pu, &mut r.feat, &r.x_region, &mut r.kmem, &r.wregion,
+            &mut r.grad,
+        );
+        // hw=25 → ceil(25/8)=4 cycles per output × 3 outputs
+        assert_eq!(stats.cycles, 12);
+        let expect = layers::dense_forward(r.x.data(), &r.w);
+        assert_eq!(logits, expect);
+    }
+}

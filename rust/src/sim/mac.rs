@@ -1,0 +1,215 @@
+//! One MAC block (Fig. 4): 8 multipliers + 8 adders, reconfigurable
+//! between multi-operand (adder tree) and multi-adder (8 independent
+//! accumulators) modes at runtime.
+
+use super::sram::{LaneVec, MAX_LANES};
+use crate::fixed::{Acc, Fx};
+
+/// Adder interconnect configuration (§III-D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MacMode {
+    /// 7 adders form a tree summing the 8 products: one dot product per
+    /// cycle (forward / gradient propagation).
+    MultiOperand,
+    /// 8 adders each sum one product with one incoming partial value:
+    /// 8 independent accumulations per cycle (kernel/weight gradients).
+    MultiAdder,
+}
+
+/// Operation counters for the power model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MacCounters {
+    pub mults: u64,
+    pub adds: u64,
+}
+
+/// A MAC block. The partial-sum register (`psum`) survives across cycles
+/// in multi-operand mode (dense forward accumulates 8 lanes/cycle over
+/// many cycles); the 8 multi-adder accumulators live in `acc8`.
+#[derive(Clone, Debug)]
+pub struct Mac {
+    lanes: usize,
+    pub mode: MacMode,
+    pub psum: Acc,
+    pub acc8: [Acc; MAX_LANES],
+    pub counters: MacCounters,
+}
+
+impl Mac {
+    pub fn new(lanes: usize) -> Mac {
+        assert!(lanes >= 1 && lanes <= MAX_LANES);
+        Mac {
+            lanes,
+            mode: MacMode::MultiOperand,
+            psum: Acc::ZERO,
+            acc8: [Acc::ZERO; MAX_LANES],
+            counters: MacCounters::default(),
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn set_mode(&mut self, mode: MacMode) {
+        self.mode = mode;
+    }
+
+    pub fn clear_psum(&mut self) {
+        self.psum = Acc::ZERO;
+    }
+
+    pub fn clear_acc8(&mut self) {
+        self.acc8 = [Acc::ZERO; MAX_LANES];
+    }
+
+    /// Multi-operand cycle: `psum += Σ_l (a[l]·b[l]) >> fmt_shift` (one
+    /// dot-product step; `fmt_shift` is the accumulator-format barrel
+    /// shift, see [`crate::fixed::acc_fmt_shift`]). Returns the dot
+    /// product of this cycle (before psum accumulation) so the PU can
+    /// route it to the Dadda tree instead when doing spatial reduction.
+    #[inline]
+    pub fn cycle_multi_operand(&mut self, a: &LaneVec, b: &LaneVec, fmt_shift: u32) -> Acc {
+        debug_assert_eq!(self.mode, MacMode::MultiOperand);
+        let mut dot = Acc::ZERO;
+        for l in 0..self.lanes {
+            dot = dot.add(a[l].mul_acc_shifted(b[l], fmt_shift));
+        }
+        self.counters.mults += self.lanes as u64;
+        // lanes-1 tree adds + 1 psum add
+        self.counters.adds += self.lanes as u64;
+        self.psum = self.psum.add(dot);
+        dot
+    }
+
+    /// Multi-adder cycle: `acc8[l] += (a[l]·b) >> shift` for all lanes
+    /// (8 channels of one feature × one gradient value, §III-D). `shift`
+    /// is the gradient-normalization barrel shift on the product bus —
+    /// 0 disables it; the kernel-gradient op sets ≈log₂(H·W) so the
+    /// spatial reduction cannot wrap the 32-bit accumulator (see
+    /// `Fx::mul_acc_shifted`).
+    #[inline]
+    pub fn cycle_multi_adder(&mut self, a: &LaneVec, b: Fx, shift: u32) {
+        debug_assert_eq!(self.mode, MacMode::MultiAdder);
+        for l in 0..self.lanes {
+            self.acc8[l] = self.acc8[l].add(a[l].mul_acc_shifted(b, shift));
+        }
+        self.counters.mults += self.lanes as u64;
+        self.counters.adds += self.lanes as u64;
+    }
+
+    /// Multi-adder cycle with externally supplied addends (fused dense
+    /// weight update: products summed with streamed-in old weights).
+    /// Returns the `lanes` writeback values.
+    #[inline]
+    pub fn cycle_multi_adder_fused(
+        &mut self,
+        a: &LaneVec,
+        b: Fx,
+        addends: &LaneVec,
+        shift: u32,
+        dithers: &[i32; MAX_LANES],
+    ) -> LaneVec {
+        debug_assert_eq!(self.mode, MacMode::MultiAdder);
+        let mut out = [Fx::ZERO; MAX_LANES];
+        for l in 0..self.lanes {
+            let acc = Acc::from_fx(addends[l]).sub(a[l].mul_acc_shifted(b, shift));
+            out[l] = acc
+                .to_fx_dithered(dithers[l])
+                .clamp_abs(crate::qnn::layers::PARAM_CLIP);
+        }
+        self.counters.mults += self.lanes as u64;
+        self.counters.adds += self.lanes as u64;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::vecops;
+
+    fn lv(vals: &[f32]) -> LaneVec {
+        let mut v = [Fx::ZERO; MAX_LANES];
+        for (i, &x) in vals.iter().enumerate() {
+            v[i] = Fx::from_f32(x);
+        }
+        v
+    }
+
+    #[test]
+    fn multi_operand_matches_dot8() {
+        let mut mac = Mac::new(8);
+        let a = lv(&[0.5, -0.25, 1.0, 2.0, -1.0, 0.125, 0.75, -0.5]);
+        let b = lv(&[1.0, 1.0, 0.5, -0.5, 2.0, 4.0, -1.0, 1.0]);
+        let dot = mac.cycle_multi_operand(&a, &b, 0);
+        let mut a8 = [Fx::ZERO; 8];
+        let mut b8 = [Fx::ZERO; 8];
+        a8.copy_from_slice(&a[..8]);
+        b8.copy_from_slice(&b[..8]);
+        assert_eq!(dot, vecops::dot8(&a8, &b8));
+        assert_eq!(mac.psum, dot);
+        assert_eq!(mac.counters.mults, 8);
+    }
+
+    #[test]
+    fn psum_accumulates_across_cycles() {
+        let mut mac = Mac::new(8);
+        let a = lv(&[1.0; 8]);
+        let b = lv(&[0.5; 8]);
+        mac.cycle_multi_operand(&a, &b, 0);
+        mac.cycle_multi_operand(&a, &b, 0);
+        assert_eq!(mac.psum.to_fx(), Fx::from_f32(8.0)); // 2 × 8 × 0.5
+    }
+
+    #[test]
+    fn multi_adder_accumulates_lanes() {
+        let mut mac = Mac::new(8);
+        mac.set_mode(MacMode::MultiAdder);
+        let a = lv(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 0.5]);
+        mac.cycle_multi_adder(&a, Fx::from_f32(0.5), 0);
+        mac.cycle_multi_adder(&a, Fx::from_f32(0.5), 0);
+        assert_eq!(mac.acc8[0].to_fx(), Fx::from_f32(1.0));
+        assert_eq!(mac.acc8[3].to_fx(), Fx::from_f32(4.0));
+    }
+
+    #[test]
+    fn multi_adder_shift_normalizes_products() {
+        let mut mac = Mac::new(8);
+        mac.set_mode(MacMode::MultiAdder);
+        let a = lv(&[4.0; 8]);
+        // (4.0 × 2.0) >> 3 = 1.0 per cycle.
+        mac.cycle_multi_adder(&a, Fx::from_f32(2.0), 3);
+        assert_eq!(mac.acc8[0].to_fx(), Fx::from_f32(1.0));
+        // Accumulating 16 such cycles reaches exactly 16.0 in the Q8.24
+        // accumulator (no wrap — the unshifted sum, 16 × 8 = 128, would
+        // sit right at the wrap point); writeback saturates to Q4.12 max.
+        for _ in 0..15 {
+            mac.cycle_multi_adder(&a, Fx::from_f32(2.0), 3);
+        }
+        assert!((mac.acc8[0].to_f32() - 16.0).abs() < 1e-6);
+        assert_eq!(mac.acc8[0].to_fx(), Fx::MAX);
+    }
+
+    #[test]
+    fn fused_update_is_w_minus_product() {
+        let mut mac = Mac::new(8);
+        mac.set_mode(MacMode::MultiAdder);
+        let x = lv(&[0.5; 8]);
+        let w = lv(&[1.0; 8]);
+        let out = mac.cycle_multi_adder_fused(&x, Fx::from_f32(0.25), &w, 0, &[2048; MAX_LANES]);
+        for l in 0..8 {
+            assert_eq!(out[l], Fx::from_f32(1.0 - 0.125));
+        }
+    }
+
+    #[test]
+    fn lane_count_respected() {
+        let mut mac = Mac::new(4);
+        let a = lv(&[1.0, 1.0, 1.0, 1.0, 9.0, 9.0, 9.0, 9.0]);
+        let b = lv(&[1.0; 8]);
+        let dot = mac.cycle_multi_operand(&a, &b, 0);
+        assert_eq!(dot.to_fx(), Fx::from_f32(4.0)); // upper lanes ignored
+        assert_eq!(mac.counters.mults, 4);
+    }
+}

@@ -1,0 +1,33 @@
+//! Cycle-accurate simulator of the TinyCL microarchitecture (§III).
+//!
+//! This is the substitution for the paper's SystemVerilog RTL (see
+//! DESIGN.md): it models the Processing Unit (9 MACs × 8 lanes with
+//! runtime-reconfigurable adder modes, Fig. 3/4), the snake-like
+//! convolution sliding window (Fig. 5), the channel-banked SRAMs with
+//! 128-bit ports (§III-E), the prefetch buffers, and the control unit's
+//! six computations (§III-F) — at per-cycle granularity with exact Q4.12
+//! datapath numerics.
+//!
+//! Two invariants are enforced by tests:
+//! 1. **Bit-exactness** with the functional model `qnn` (32-bit
+//!    accumulation is associative, so identical widen/writeback points ⇒
+//!    identical bits — `rust/tests/sim_vs_qnn.rs`).
+//! 2. **Cycle counts** of §IV-B: 8192 cycles for conv forward / gradient
+//!    propagation / kernel gradient at 32×32×8-in 8-filter geometry, 1280
+//!    for dense forward and fused weight update, ~1821 for dense gradient
+//!    propagation (`benches/cycles.rs`; the ±1 delta on the last number is
+//!    discussed in EXPERIMENTS.md E1).
+
+pub mod agu;
+pub mod config;
+pub mod control;
+pub mod exec_conv;
+pub mod exec_dense;
+pub mod mac;
+pub mod pu;
+pub mod sram;
+pub mod stats;
+
+pub use config::SimConfig;
+pub use control::TinyClDevice;
+pub use stats::{OpKind, OpStats, RunStats};

@@ -1,0 +1,125 @@
+//! The Processing Unit (Fig. 3): `taps` parallel MAC blocks plus the
+//! 9-operand Dadda adder that reduces their outputs to one value.
+
+use super::mac::{Mac, MacCounters, MacMode};
+use super::sram::LaneVec;
+use crate::fixed::{Acc, Fx};
+
+pub struct Pu {
+    pub macs: Vec<Mac>,
+    /// Dadda-tree reduction count (for the power model).
+    pub dadda_reductions: u64,
+}
+
+impl Pu {
+    pub fn new(taps: usize, lanes: usize) -> Pu {
+        Pu {
+            macs: (0..taps).map(|_| Mac::new(lanes)).collect(),
+            dadda_reductions: 0,
+        }
+    }
+
+    pub fn taps(&self) -> usize {
+        self.macs.len()
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.macs[0].lanes()
+    }
+
+    pub fn set_mode(&mut self, mode: MacMode) {
+        for m in &mut self.macs {
+            m.set_mode(mode);
+        }
+    }
+
+    /// One forward-convolution cycle: each MAC dots one window column/tap
+    /// group against its kernel group; the Dadda tree sums all tap results
+    /// (exact 32-bit adds — associative, so tree shape is irrelevant to
+    /// the value). Returns the spatial sum of this cycle.
+    #[inline]
+    pub fn cycle_conv(
+        &mut self,
+        features: &[LaneVec],
+        kernels: &[LaneVec],
+        fmt_shift: u32,
+    ) -> Acc {
+        debug_assert_eq!(features.len(), self.macs.len());
+        debug_assert_eq!(kernels.len(), self.macs.len());
+        let mut sum = Acc::ZERO;
+        for (i, mac) in self.macs.iter_mut().enumerate() {
+            let dot = mac.cycle_multi_operand(&features[i], &kernels[i], fmt_shift);
+            sum = sum.add(dot);
+        }
+        self.dadda_reductions += 1;
+        sum
+    }
+
+    /// Aggregate MAC counters (power model).
+    pub fn counters(&self) -> MacCounters {
+        let mut c = MacCounters::default();
+        for m in &self.macs {
+            c.mults += m.counters.mults;
+            c.adds += m.counters.adds;
+        }
+        c
+    }
+
+    /// Clear all partial-sum state (between operations).
+    pub fn clear_state(&mut self) {
+        for m in &mut self.macs {
+            m.clear_psum();
+            m.clear_acc8();
+        }
+    }
+
+    /// Writeback helper: narrow a (format-shifted) accumulator with
+    /// optional fused ReLU.
+    #[inline]
+    pub fn writeback(acc: Acc, relu: bool, fmt_shift: u32) -> Fx {
+        let v = acc.to_fx_fmt(fmt_shift);
+        if relu {
+            v.relu()
+        } else {
+            v
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::sram::MAX_LANES;
+
+    fn lv(x: f32) -> LaneVec {
+        [Fx::from_f32(x); MAX_LANES]
+    }
+
+    #[test]
+    fn conv_cycle_sums_taps() {
+        let mut pu = Pu::new(9, 8);
+        let feats = vec![lv(1.0); 9];
+        let kerns = vec![lv(0.125); 9];
+        // each tap dot = 8 × 0.125 = 1.0; 9 taps → 9.0
+        let sum = pu.cycle_conv(&feats, &kerns, 0);
+        assert_eq!(sum.to_fx(), Fx::from_f32(9.0));
+        assert_eq!(pu.dadda_reductions, 1);
+        assert_eq!(pu.counters().mults, 72);
+    }
+
+    #[test]
+    fn writeback_fused_relu() {
+        let neg = Fx::from_f32(-1.0).mul_acc(Fx::from_f32(2.0));
+        assert_eq!(Pu::writeback(neg, true, 0), Fx::ZERO);
+        assert_eq!(Pu::writeback(neg, false, 0), Fx::from_f32(-2.0));
+    }
+
+    #[test]
+    fn clear_state_resets_psums() {
+        let mut pu = Pu::new(2, 8);
+        pu.cycle_conv(&[lv(1.0), lv(1.0)], &[lv(1.0), lv(1.0)], 0);
+        assert_ne!(pu.macs[0].psum, Acc::ZERO);
+        pu.clear_state();
+        assert_eq!(pu.macs[0].psum, Acc::ZERO);
+    }
+}

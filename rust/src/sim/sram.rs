@@ -1,0 +1,197 @@
+//! Channel-banked SRAM with a port-wide (`lanes` × 16-bit) access unit.
+//!
+//! §III-E: "we design the memories with a port width of 128 bits, to read
+//! 8 features at a time [...] the SRAM is organized according to the
+//! channel". One [`BankedSram`] models a *bank group*: `lanes` parallel
+//! banks holding the same spatial position of `lanes` consecutive
+//! channels, so one vector access returns a channel group of one feature.
+//!
+//! Access counting is the basis of the `hw::power` dynamic-energy model;
+//! the executors also use the counters to prove snake-window reuse (A1).
+
+use crate::fixed::Fx;
+
+/// Hard upper bound on lanes (array-backed vector accesses, no allocation
+/// on the hot path).
+pub const MAX_LANES: usize = 16;
+
+/// A channel-group vector as moved over one SRAM port.
+pub type LaneVec = [Fx; MAX_LANES];
+
+pub fn lane_vec_from(slice: &[Fx]) -> LaneVec {
+    debug_assert!(slice.len() <= MAX_LANES);
+    let mut v = [Fx::ZERO; MAX_LANES];
+    v[..slice.len()].copy_from_slice(slice);
+    v
+}
+
+/// One bank group: `lanes` banks × `depth` words each.
+#[derive(Clone, Debug)]
+pub struct BankedSram {
+    name: &'static str,
+    lanes: usize,
+    depth: usize,
+    /// data[addr * lanes + lane]
+    data: Vec<Fx>,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl BankedSram {
+    pub fn new(name: &'static str, lanes: usize, depth: usize) -> BankedSram {
+        assert!(lanes >= 1 && lanes <= MAX_LANES);
+        BankedSram {
+            name,
+            lanes,
+            depth,
+            data: vec![Fx::ZERO; lanes * depth],
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Capacity in bits (for the hw area/power model).
+    pub fn bits(&self) -> u64 {
+        (self.lanes * self.depth * 16) as u64
+    }
+
+    /// One port-wide read: all lanes at spatial address `addr`.
+    #[inline]
+    pub fn read_vec(&mut self, addr: usize) -> LaneVec {
+        debug_assert!(addr < self.depth, "{}: read {addr} >= {}", self.name, self.depth);
+        self.reads += 1;
+        let mut out = [Fx::ZERO; MAX_LANES];
+        let base = addr * self.lanes;
+        out[..self.lanes].copy_from_slice(&self.data[base..base + self.lanes]);
+        out
+    }
+
+    /// One port-wide write.
+    #[inline]
+    pub fn write_vec(&mut self, addr: usize, value: &LaneVec) {
+        debug_assert!(addr < self.depth, "{}: write {addr} >= {}", self.name, self.depth);
+        self.writes += 1;
+        let base = addr * self.lanes;
+        self.data[base..base + self.lanes].copy_from_slice(&value[..self.lanes]);
+    }
+
+    /// Single-lane write (scalar output path, e.g. one conv output pixel
+    /// per cycle). Counted as one port transaction.
+    #[inline]
+    pub fn write_lane(&mut self, addr: usize, lane: usize, value: Fx) {
+        debug_assert!(addr < self.depth && lane < self.lanes);
+        self.writes += 1;
+        self.data[addr * self.lanes + lane] = value;
+    }
+
+    /// Single-lane read. Counted as one port transaction.
+    #[inline]
+    pub fn read_lane(&mut self, addr: usize, lane: usize) -> Fx {
+        debug_assert!(addr < self.depth && lane < self.lanes);
+        self.reads += 1;
+        self.data[addr * self.lanes + lane]
+    }
+
+    /// Bulk load without access counting (DMA-style initialization — the
+    /// cost of loading a sample into feature memory is accounted by the
+    /// control unit, not per word).
+    pub fn load(&mut self, addr: usize, lane: usize, value: Fx) {
+        self.data[addr * self.lanes + lane] = value;
+    }
+
+    /// Bulk inspect without access counting (verification only).
+    pub fn peek(&self, addr: usize, lane: usize) -> Fx {
+        self.data[addr * self.lanes + lane]
+    }
+
+    /// Uncounted whole-vector inspect (hot path of the window buffer —
+    /// one slice copy instead of `lanes` indexed reads).
+    #[inline(always)]
+    pub fn peek_vec(&self, addr: usize) -> LaneVec {
+        let mut out = [Fx::ZERO; MAX_LANES];
+        let base = addr * self.lanes;
+        out[..self.lanes].copy_from_slice(&self.data[base..base + self.lanes]);
+        out
+    }
+
+    /// Explicit port-transaction accounting: executors that access data
+    /// via `peek`/`load` (uncounted) declare the transactions the real
+    /// dataflow would issue with these.
+    pub fn charge_reads(&mut self, n: u64) {
+        self.reads += n;
+    }
+
+    pub fn charge_writes(&mut self, n: u64) {
+        self.writes += n;
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.reads = 0;
+        self.writes = 0;
+    }
+
+    pub fn clear(&mut self) {
+        self.data.fill(Fx::ZERO);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vector_roundtrip_counts_accesses() {
+        let mut m = BankedSram::new("feat", 8, 32);
+        let mut v = [Fx::ZERO; MAX_LANES];
+        for i in 0..8 {
+            v[i] = Fx::from_raw(i as i16 + 1);
+        }
+        m.write_vec(3, &v);
+        let r = m.read_vec(3);
+        assert_eq!(&r[..8], &v[..8]);
+        assert_eq!(m.reads, 1);
+        assert_eq!(m.writes, 1);
+    }
+
+    #[test]
+    fn lane_accessors() {
+        let mut m = BankedSram::new("k", 4, 16);
+        m.write_lane(2, 3, Fx::from_raw(77));
+        assert_eq!(m.read_lane(2, 3), Fx::from_raw(77));
+        assert_eq!(m.peek(2, 3), Fx::from_raw(77));
+        assert_eq!(m.reads, 1);
+        assert_eq!(m.writes, 1);
+    }
+
+    #[test]
+    fn load_and_peek_do_not_count() {
+        let mut m = BankedSram::new("g", 8, 8);
+        m.load(0, 0, Fx::ONE);
+        assert_eq!(m.peek(0, 0), Fx::ONE);
+        assert_eq!(m.reads + m.writes, 0);
+    }
+
+    #[test]
+    fn bits_capacity() {
+        let m = BankedSram::new("feat", 8, 1024);
+        assert_eq!(m.bits(), 8 * 1024 * 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_lanes_rejected() {
+        BankedSram::new("x", MAX_LANES + 1, 4);
+    }
+}

@@ -1,0 +1,193 @@
+//! Cycle / access / energy-event accounting.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::ops::AddAssign;
+
+/// The six control-unit computations (§III-F) plus the update phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpKind {
+    ConvForward,
+    ConvKernelGrad,
+    ConvInputGrad,
+    DenseForward,
+    DenseInputGrad,
+    DenseWeightUpdate,
+    KernelUpdate,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 7] = [
+        OpKind::ConvForward,
+        OpKind::ConvKernelGrad,
+        OpKind::ConvInputGrad,
+        OpKind::DenseForward,
+        OpKind::DenseInputGrad,
+        OpKind::DenseWeightUpdate,
+        OpKind::KernelUpdate,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::ConvForward => "conv_forward",
+            OpKind::ConvKernelGrad => "conv_kernel_grad",
+            OpKind::ConvInputGrad => "conv_input_grad",
+            OpKind::DenseForward => "dense_forward",
+            OpKind::DenseInputGrad => "dense_input_grad",
+            OpKind::DenseWeightUpdate => "dense_weight_update",
+            OpKind::KernelUpdate => "kernel_update",
+        }
+    }
+}
+
+/// Counters for one executed operation (one layer, one direction).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpStats {
+    pub cycles: u64,
+    /// 16×16 multiplies issued.
+    pub mults: u64,
+    /// 32-bit adder operations issued.
+    pub adds: u64,
+    /// Vector (port-wide) SRAM reads, by memory.
+    pub feature_reads: u64,
+    pub kernel_reads: u64,
+    pub gradient_reads: u64,
+    /// Vector SRAM writes, by memory.
+    pub feature_writes: u64,
+    pub kernel_writes: u64,
+    pub gradient_writes: u64,
+}
+
+impl OpStats {
+    pub fn total_reads(&self) -> u64 {
+        self.feature_reads + self.kernel_reads + self.gradient_reads
+    }
+
+    pub fn total_writes(&self) -> u64 {
+        self.feature_writes + self.kernel_writes + self.gradient_writes
+    }
+
+    /// MAC utilization against the configured peak (mults per cycle).
+    pub fn mac_utilization(&self, peak_mults_per_cycle: f64) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.mults as f64 / (self.cycles as f64 * peak_mults_per_cycle)
+        }
+    }
+}
+
+impl AddAssign for OpStats {
+    fn add_assign(&mut self, rhs: OpStats) {
+        self.cycles += rhs.cycles;
+        self.mults += rhs.mults;
+        self.adds += rhs.adds;
+        self.feature_reads += rhs.feature_reads;
+        self.kernel_reads += rhs.kernel_reads;
+        self.gradient_reads += rhs.gradient_reads;
+        self.feature_writes += rhs.feature_writes;
+        self.kernel_writes += rhs.kernel_writes;
+        self.gradient_writes += rhs.gradient_writes;
+    }
+}
+
+/// Aggregated statistics for a whole run (e.g. a train step, an epoch),
+/// broken down by operation kind.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub by_op: BTreeMap<OpKind, OpStats>,
+}
+
+impl RunStats {
+    pub fn record(&mut self, kind: OpKind, stats: OpStats) {
+        *self.by_op.entry(kind).or_default() += stats;
+    }
+
+    pub fn merge(&mut self, other: &RunStats) {
+        for (k, v) in &other.by_op {
+            *self.by_op.entry(*k).or_default() += *v;
+        }
+    }
+
+    pub fn total(&self) -> OpStats {
+        let mut t = OpStats::default();
+        for v in self.by_op.values() {
+            t += *v;
+        }
+        t
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.total().cycles
+    }
+}
+
+impl fmt::Display for RunStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{:<22} {:>12} {:>14} {:>12} {:>12}",
+            "op", "cycles", "mults", "reads", "writes"
+        )?;
+        for (k, v) in &self.by_op {
+            writeln!(
+                f,
+                "{:<22} {:>12} {:>14} {:>12} {:>12}",
+                k.name(),
+                v.cycles,
+                v.mults,
+                v.total_reads(),
+                v.total_writes()
+            )?;
+        }
+        let t = self.total();
+        writeln!(
+            f,
+            "{:<22} {:>12} {:>14} {:>12} {:>12}",
+            "TOTAL",
+            t.cycles,
+            t.mults,
+            t.total_reads(),
+            t.total_writes()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut a = OpStats { cycles: 10, mults: 100, ..Default::default() };
+        a += OpStats { cycles: 5, mults: 50, adds: 7, ..Default::default() };
+        assert_eq!(a.cycles, 15);
+        assert_eq!(a.mults, 150);
+        assert_eq!(a.adds, 7);
+    }
+
+    #[test]
+    fn run_stats_totals() {
+        let mut r = RunStats::default();
+        r.record(OpKind::ConvForward, OpStats { cycles: 100, ..Default::default() });
+        r.record(OpKind::ConvForward, OpStats { cycles: 50, ..Default::default() });
+        r.record(OpKind::DenseForward, OpStats { cycles: 10, ..Default::default() });
+        assert_eq!(r.cycles(), 160);
+        assert_eq!(r.by_op[&OpKind::ConvForward].cycles, 150);
+    }
+
+    #[test]
+    fn utilization() {
+        let s = OpStats { cycles: 10, mults: 720, ..Default::default() };
+        assert!((s.mac_utilization(72.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_contains_rows() {
+        let mut r = RunStats::default();
+        r.record(OpKind::ConvForward, OpStats { cycles: 1, ..Default::default() });
+        let s = format!("{r}");
+        assert!(s.contains("conv_forward"));
+        assert!(s.contains("TOTAL"));
+    }
+}

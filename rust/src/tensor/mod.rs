@@ -1,0 +1,54 @@
+//! Dense tensor substrate.
+//!
+//! Two concrete element domains are used throughout the stack:
+//! `Tensor<f32>` for the software reference path (`nn/`) and `Tensor<Fx>`
+//! for the hardware number system (`qnn/`, `sim/`). Layout is CHW for
+//! activations (channel-major, matching the paper's channel-banked SRAM)
+//! and `(out, in, kh, kw)` for convolution kernels.
+
+mod shape;
+mod tensor;
+
+pub use shape::Shape;
+pub use tensor::Tensor;
+
+use crate::fixed::Fx;
+
+/// Quantize an f32 tensor into the Q4.12 domain (shape-preserving).
+pub fn quantize_tensor(t: &Tensor<f32>) -> Tensor<Fx> {
+    Tensor::from_vec(
+        t.shape().clone(),
+        t.data().iter().map(|&x| Fx::from_f32(x)).collect(),
+    )
+}
+
+/// Dequantize back to f32 (diagnostics / cross-checks).
+pub fn dequantize_tensor(t: &Tensor<Fx>) -> Tensor<f32> {
+    Tensor::from_vec(
+        t.shape().clone(),
+        t.data().iter().map(|x| x.to_f32()).collect(),
+    )
+}
+
+/// Max absolute difference between two f32 tensors (test helper).
+pub fn max_abs_diff(a: &Tensor<f32>, b: &Tensor<f32>) -> f32 {
+    assert_eq!(a.shape(), b.shape(), "shape mismatch");
+    a.data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_bound() {
+        let t = Tensor::from_vec(Shape::d2(2, 3), vec![0.1, -0.2, 0.3, 1.5, -1.5, 0.0]);
+        let q = quantize_tensor(&t);
+        let d = dequantize_tensor(&q);
+        assert!(max_abs_diff(&t, &d) <= 0.5 / crate::fixed::SCALE);
+    }
+}

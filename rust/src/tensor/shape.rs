@@ -1,0 +1,119 @@
+//! Tensor shape: up to 4 dimensions, row-major strides.
+
+use std::fmt;
+
+/// A shape of rank 1–4 (all the stack needs: vectors, matrices, CHW
+/// activations, OIHW kernels).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: Vec<usize>,
+}
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Shape {
+        assert!(
+            (1..=4).contains(&dims.len()),
+            "rank must be 1..=4, got {}",
+            dims.len()
+        );
+        assert!(dims.iter().all(|&d| d > 0), "zero-sized dim in {dims:?}");
+        Shape { dims: dims.to_vec() }
+    }
+
+    pub fn d1(a: usize) -> Shape {
+        Shape::new(&[a])
+    }
+    pub fn d2(a: usize, b: usize) -> Shape {
+        Shape::new(&[a, b])
+    }
+    pub fn d3(a: usize, b: usize, c: usize) -> Shape {
+        Shape::new(&[a, b, c])
+    }
+    pub fn d4(a: usize, b: usize, c: usize, d: usize) -> Shape {
+        Shape::new(&[a, b, c, d])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.dims[i]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.dims.len()];
+        for i in (0..self.dims.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1];
+        }
+        s
+    }
+
+    /// Linear offset of a multi-index (debug-checked bounds).
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        let mut off = 0;
+        let mut stride = 1;
+        for i in (0..self.dims.len()).rev() {
+            debug_assert!(idx[i] < self.dims[i], "index {idx:?} out of {:?}", self.dims);
+            off += idx[i] * stride;
+            stride *= self.dims[i];
+        }
+        off
+    }
+}
+
+impl fmt::Debug for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Shape{:?}", self.dims)
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let strs: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "{}", strs.join("x"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_strides() {
+        let s = Shape::d3(2, 3, 4);
+        assert_eq!(s.numel(), 24);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn offset_row_major() {
+        let s = Shape::d3(2, 3, 4);
+        assert_eq!(s.offset(&[0, 0, 0]), 0);
+        assert_eq!(s.offset(&[1, 2, 3]), 23);
+        assert_eq!(s.offset(&[0, 1, 0]), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_dim_rejected() {
+        Shape::new(&[2, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rank5_rejected() {
+        Shape::new(&[1, 1, 1, 1, 1]);
+    }
+}

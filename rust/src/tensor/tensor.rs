@@ -1,0 +1,189 @@
+//! Generic dense tensor over a copyable element type.
+
+use super::Shape;
+use std::fmt;
+
+/// Owned dense row-major tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Shape,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero/default-filled tensor.
+    pub fn zeros(shape: Shape) -> Tensor<T> {
+        let n = shape.numel();
+        Tensor { shape, data: vec![T::default(); n] }
+    }
+}
+
+impl<T: Copy> Tensor<T> {
+    pub fn from_vec(shape: Shape, data: Vec<T>) -> Tensor<T> {
+        assert_eq!(
+            shape.numel(),
+            data.len(),
+            "shape {shape:?} wants {} elements, got {}",
+            shape.numel(),
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn full(shape: Shape, value: T) -> Tensor<T> {
+        let n = shape.numel();
+        Tensor { shape, data: vec![value; n] }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    #[inline(always)]
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.shape.offset(idx)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, idx: &[usize], value: T) {
+        let off = self.shape.offset(idx);
+        self.data[off] = value;
+    }
+
+    /// Fast 3D accessors for CHW activations (hot path in nn/qnn).
+    #[inline(always)]
+    pub fn at3(&self, c: usize, h: usize, w: usize) -> T {
+        let d = self.shape.dims();
+        debug_assert_eq!(d.len(), 3);
+        self.data[(c * d[1] + h) * d[2] + w]
+    }
+
+    #[inline(always)]
+    pub fn set3(&mut self, c: usize, h: usize, w: usize, value: T) {
+        let d = self.shape.dims();
+        debug_assert_eq!(d.len(), 3);
+        let off = (c * d[1] + h) * d[2] + w;
+        self.data[off] = value;
+    }
+
+    /// Fast 4D accessors for OIHW kernels.
+    #[inline(always)]
+    pub fn at4(&self, o: usize, i: usize, h: usize, w: usize) -> T {
+        let d = self.shape.dims();
+        debug_assert_eq!(d.len(), 4);
+        self.data[((o * d[1] + i) * d[2] + h) * d[3] + w]
+    }
+
+    #[inline(always)]
+    pub fn set4(&mut self, o: usize, i: usize, h: usize, w: usize, value: T) {
+        let d = self.shape.dims();
+        debug_assert_eq!(d.len(), 4);
+        let off = ((o * d[1] + i) * d[2] + h) * d[3] + w;
+        self.data[off] = value;
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(&self, shape: Shape) -> Tensor<T> {
+        assert_eq!(shape.numel(), self.data.len());
+        Tensor { shape, data: self.data.clone() }
+    }
+
+    pub fn map<U: Copy, F: Fn(T) -> U>(&self, f: F) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+impl Tensor<f32> {
+    /// Elementwise binary op with shape check.
+    pub fn zip_with<F: Fn(f32, f32) -> f32>(&self, other: &Tensor<f32>, f: F) -> Tensor<f32> {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn scale(&self, k: f32) -> Tensor<f32> {
+        self.map(|x| x * k)
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+impl<T: Copy + fmt::Debug> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor<{}>(", std::any::type_name::<T>())?;
+        write!(f, "{:?}, ", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, "{:?})", self.data)
+        } else {
+            write!(f, "[{:?}, {:?}, ... {} elems])", self.data[0], self.data[1], self.data.len())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut t: Tensor<f32> = Tensor::zeros(Shape::d3(2, 3, 4));
+        assert_eq!(t.data().len(), 24);
+        t.set3(1, 2, 3, 7.0);
+        assert_eq!(t.at3(1, 2, 3), 7.0);
+        assert_eq!(t.at(&[1, 2, 3]), 7.0);
+    }
+
+    #[test]
+    fn kernel_4d_indexing() {
+        let mut k: Tensor<f32> = Tensor::zeros(Shape::d4(8, 3, 3, 3));
+        k.set4(7, 2, 1, 0, 1.5);
+        assert_eq!(k.at4(7, 2, 1, 0), 1.5);
+        assert_eq!(k.at(&[7, 2, 1, 0]), 1.5);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(Shape::d2(2, 3), vec![1, 2, 3, 4, 5, 6]);
+        let r = t.reshaped(Shape::d1(6));
+        assert_eq!(r.data(), &[1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_length_checked() {
+        Tensor::from_vec(Shape::d2(2, 2), vec![1.0f32]);
+    }
+
+    #[test]
+    fn zip_and_scale() {
+        let a = Tensor::from_vec(Shape::d1(3), vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(Shape::d1(3), vec![10.0, 20.0, 30.0]);
+        let s = a.zip_with(&b, |x, y| x + y);
+        assert_eq!(s.data(), &[11.0, 22.0, 33.0]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0, 6.0]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Minimal command-line argument parsing (no `clap` in the vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed getters.
+//!
+//! Ambiguity rule: `--key token` always binds `token` as the value unless
+//! `token` starts with `--`. Boolean flags must therefore be written
+//! `--flag=true`, placed last, or followed by another flag — and
+//! positionals (subcommands) should come first, which is the convention
+//! all `tinycl` binaries follow.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                    args.seen.push(k.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    let is_flag_next =
+                        iter.peek().map(|n| n.starts_with("--")).unwrap_or(true);
+                    if is_flag_next {
+                        args.flags.insert(stripped.to_string(), "true".to_string());
+                    } else {
+                        args.flags.insert(stripped.to_string(), iter.next().unwrap());
+                    }
+                    args.seen.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.parse_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.parse_or(key, default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(other) => panic!("--{key}: expected bool, got {other:?}"),
+        }
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}={v}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["train", "--epochs", "10", "--lr=0.5", "--verbose"]);
+        assert_eq!(a.usize_or("epochs", 0), 10);
+        assert_eq!(a.f64_or("lr", 0.0), 0.5);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.positional(), &["train".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.str_or("name", "x"), "x");
+        assert!(!a.bool_or("flag", false));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["--dry-run"]);
+        assert!(a.bool_or("dry-run", false));
+    }
+
+    #[test]
+    fn flag_before_flag_is_boolean() {
+        let a = parse(&["--a", "--b", "3"]);
+        assert!(a.bool_or("a", false));
+        assert_eq!(a.usize_or("b", 0), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_number_panics() {
+        let a = parse(&["--n", "abc"]);
+        a.usize_or("n", 0);
+    }
+}

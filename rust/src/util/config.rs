@@ -1,0 +1,314 @@
+//! Minimal TOML-subset configuration parser (no `serde`/`toml` in the
+//! vendor set).
+//!
+//! Supported grammar — enough for experiment configs:
+//!   * `[section]` and `[section.sub]` headers
+//!   * `key = value` where value is int, float, bool, "string", or a flat
+//!     array of those (`[1, 2, 3]`)
+//!   * `#` comments, blank lines
+//!
+//! Keys are exposed flattened as `section.sub.key`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Bool(v) => write!(f, "{v}"),
+            Value::Str(v) => write!(f, "{v:?}"),
+            Value::Array(vs) => {
+                write!(f, "[")?;
+                for (i, v) in vs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// A parsed config: flattened `section.key -> Value`.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ParseError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |m: &str| ParseError { line: lineno + 1, message: m.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.trim().to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let full = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                let value = parse_value(v.trim())
+                    .ok_or_else(|| err(&format!("bad value for {key:?}: {v:?}")))?;
+                cfg.values.insert(full, value);
+            } else {
+                return Err(err(&format!("expected `key = value`, got {line:?}")));
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Ok(Config::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.i64_or(key, default as i64) as usize
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// Overlay: values in `other` win.
+    pub fn merged_with(mut self, other: &Config) -> Config {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+        self
+    }
+
+    /// Set a value programmatically (CLI overrides).
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.values.insert(key.to_string(), value);
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if s.is_empty() {
+        return None;
+    }
+    if s == "true" {
+        return Some(Value::Bool(true));
+    }
+    if s == "false" {
+        return Some(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"')?;
+        return Some(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']')?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Some(Value::Array(vec![]));
+        }
+        let items: Option<Vec<Value>> =
+            split_top_level(inner).into_iter().map(|p| parse_value(p.trim())).collect();
+        return items.map(Value::Array);
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+/// Split on commas that are not inside quotes (flat arrays only).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            r#"
+            # experiment config
+            seed = 42
+            [model]
+            conv_channels = 8
+            lr = 1.0           # paper uses lr 1
+            name = "tinycl"
+            [cl]
+            gdumb = true
+            tasks = [0, 1, 2]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.i64_or("seed", 0), 42);
+        assert_eq!(cfg.usize_or("model.conv_channels", 0), 8);
+        assert_eq!(cfg.f64_or("model.lr", 0.0), 1.0);
+        assert_eq!(cfg.str_or("model.name", ""), "tinycl");
+        assert!(cfg.bool_or("cl.gdumb", false));
+        assert_eq!(
+            cfg.get("cl.tasks").unwrap().as_array().unwrap().len(),
+            3
+        );
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.i64_or("a.b", 5), 5);
+        assert_eq!(cfg.str_or("x", "d"), "d");
+    }
+
+    #[test]
+    fn merge_overlays() {
+        let base = Config::parse("a = 1\nb = 2").unwrap();
+        let over = Config::parse("b = 3").unwrap();
+        let m = base.merged_with(&over);
+        assert_eq!(m.i64_or("a", 0), 1);
+        assert_eq!(m.i64_or("b", 0), 3);
+    }
+
+    #[test]
+    fn hash_in_string_not_comment() {
+        let cfg = Config::parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(cfg.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = Config::parse("ok = 1\nbroken line").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        assert!(Config::parse("k = @nope").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared substrates: deterministic RNG, CLI/config parsing, measurement
+//! statistics and a property-test harness.
+//!
+//! Everything here exists because the offline vendor snapshot only carries
+//! the `xla` crate's dependency closure (no rand/clap/toml/criterion/
+//! proptest) — see DESIGN.md "Vendored-crate constraint".
+
+pub mod cli;
+pub mod config;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

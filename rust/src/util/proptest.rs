@@ -1,0 +1,117 @@
+//! Tiny property-testing harness (the vendor set has no `proptest`).
+//!
+//! A property is a closure over a [`Gen`] that panics on violation. The
+//! runner executes it for a fixed number of deterministic cases; on failure
+//! it reports the case index and seed so the exact case can be replayed.
+//!
+//! No shrinking — cases are kept small by construction instead.
+
+use crate::util::rng::Pcg32;
+
+/// Random-value source handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below_usize(hi - lo + 1)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + (self.rng.next_u64() % ((hi - lo) as u64 + 1)) as i64
+    }
+
+    pub fn i16_any(&mut self) -> i16 {
+        self.rng.next_u32() as u16 as i16
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below_usize(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_i16(&mut self, len: usize) -> Vec<i16> {
+        (0..len).map(|_| self.i16_any()).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` for `cases` deterministic cases derived from `seed`.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, seed: u64, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let rng = Pcg32::new(seed, case as u64 + 1);
+        let mut gen = Gen { rng, case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut gen);
+        }));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed at case {case}/{cases} (seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("addition commutes", 1, 50, |g| {
+            let a = g.i64_in(-1000, 1000);
+            let b = g.i64_in(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn failing_property_reports_case() {
+        check("always fails", 1, 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_ranges() {
+        check("ranges respected", 2, 100, |g| {
+            let u = g.usize_in(3, 9);
+            assert!((3..=9).contains(&u));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let c = *g.choose(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&c));
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        check("record", 7, 5, |g| first.push(g.i64_in(0, 1 << 30)));
+        let mut second = Vec::new();
+        check("record", 7, 5, |g| second.push(g.i64_in(0, 1 << 30)));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,197 @@
+//! Lightweight measurement statistics and a micro-bench harness.
+//!
+//! The vendored crate set has no `criterion`; `cargo bench` targets use
+//! [`Bench`] (`harness = false`) which does warmup, adaptive iteration
+//! counts, and reports min/median/mean/p95 like criterion's summary line.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of f64 samples.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub std_dev: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty slice");
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            min: sorted[0],
+            max: sorted[n - 1],
+            mean,
+            median: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            std_dev: var.sqrt(),
+        }
+    }
+}
+
+/// Percentile by linear interpolation over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&pct));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Minimal bench harness: warms up, then runs until `target_time` or
+/// `max_iters`, reporting wall time per iteration.
+pub struct Bench {
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub max_iters: usize,
+    name: String,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench {
+            warmup: Duration::from_millis(200),
+            target_time: Duration::from_secs(2),
+            max_iters: 10_000,
+            name: name.to_string(),
+        }
+    }
+
+    pub fn with_times(mut self, warmup_ms: u64, target_ms: u64) -> Bench {
+        self.warmup = Duration::from_millis(warmup_ms);
+        self.target_time = Duration::from_millis(target_ms);
+        self
+    }
+
+    /// Run `f` repeatedly; returns per-iteration seconds summary and prints
+    /// a criterion-style line.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.target_time && samples.len() < self.max_iters {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_secs_f64());
+        }
+        let summary = Summary::of(&samples);
+        println!(
+            "bench {:<40} iters {:>6}  min {}  median {}  mean {}  p95 {}",
+            self.name,
+            summary.n,
+            fmt_secs(summary.min),
+            fmt_secs(summary.median),
+            fmt_secs(summary.mean),
+            fmt_secs(summary.p95),
+        );
+        summary
+    }
+}
+
+/// Human-readable seconds (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:8.2}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:8.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:8.2}ms", s * 1e3)
+    } else {
+        format!("{:8.3}s ", s)
+    }
+}
+
+/// Online mean/max counter for streaming metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    pub n: u64,
+    pub sum: f64,
+    pub max: f64,
+    pub min: f64,
+}
+
+impl Running {
+    pub fn new() -> Running {
+        Running { n: 0, sum: 0.0, max: f64::NEG_INFINITY, min: f64::INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if x < self.min {
+            self.min = x;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = vec![0.0, 10.0];
+        assert_eq!(percentile_sorted(&v, 50.0), 5.0);
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn running_counter() {
+        let mut r = Running::new();
+        for x in [2.0, 4.0, 6.0] {
+            r.push(x);
+        }
+        assert_eq!(r.mean(), 4.0);
+        assert_eq!(r.max, 6.0);
+        assert_eq!(r.min, 2.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let b = Bench::new("noop").with_times(1, 5);
+        let s = b.run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.n > 0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Correctness-chain link 5: §IV-B cycle counts — the simulator
+//! reproduces the paper's reported per-operation latencies at the
+//! paper's geometry, and the counts scale with geometry the way the
+//! dataflow says they must.
+
+use tinycl::fixed::Fx;
+use tinycl::nn::{Model, ModelConfig};
+use tinycl::qnn::QModel;
+use tinycl::sim::{OpKind, RunStats, SimConfig, TinyClDevice};
+use tinycl::tensor::{quantize_tensor, Shape, Tensor};
+use tinycl::util::rng::Pcg32;
+
+fn train_step_stats(cfg: &ModelConfig, sim: SimConfig, seed: u64) -> RunStats {
+    let m = Model::new(cfg.clone(), seed);
+    let qm = QModel::from_model(&m);
+    let mut dev = TinyClDevice::new(sim, cfg.clone());
+    dev.load_params(&qm.params);
+    let mut rng = Pcg32::seeded(seed + 1);
+    let shape = Shape::d3(cfg.in_channels, cfg.image_size, cfg.image_size);
+    let n = shape.numel();
+    let x = quantize_tensor(&Tensor::from_vec(
+        shape,
+        (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+    ));
+    let (_, _, run) = dev.train_step(&x, 0, cfg.num_classes, Fx::from_f32(0.5));
+    run
+}
+
+#[test]
+fn paper_conv_ops_are_8192_cycles() {
+    // §IV-B: "8,192 clock cycles to compute either the forward
+    // convolution, the gradient propagation, or the gradient of the
+    // weight when we use 8 filters and the input feature has a shape of
+    // 32×32×8". In a train step conv forward runs twice (conv1 with a
+    // 3-channel input costs the same 8192: one channel-group sweep) and
+    // the kernel gradient twice; gradient propagation once (conv2 only).
+    let run = train_step_stats(&ModelConfig::default(), SimConfig::paper(), 1);
+    assert_eq!(run.by_op[&OpKind::ConvForward].cycles, 2 * 8192);
+    assert_eq!(run.by_op[&OpKind::ConvKernelGrad].cycles, 2 * 8192);
+    assert_eq!(run.by_op[&OpKind::ConvInputGrad].cycles, 8192);
+}
+
+#[test]
+fn paper_dense_ops_cycle_counts() {
+    // §IV-B: dense 32×32×8 → 10: forward 1280, "1,821 clock cycles for
+    // the computation of the gradients of the weights, and 1,280 …
+    // gradient propagation". The paper's own formula (§III-F-4:
+    // (I/9)·(n/8) = ⌈8192/9⌉·⌈10/8⌉ = 911×2 = 1822) attributes ~1821 to
+    // gradient *propagation* while weight derivative streams 64
+    // operands/cycle = 8192·10/64 = 1280 — i.e. the two labels read
+    // swapped; we reproduce the numbers the dataflow yields (±1 from the
+    // ceil split) and flag the swap in EXPERIMENTS.md E1.
+    let run = train_step_stats(&ModelConfig::default(), SimConfig::paper(), 2);
+    assert_eq!(run.by_op[&OpKind::DenseForward].cycles, 1280);
+    assert_eq!(run.by_op[&OpKind::DenseWeightUpdate].cycles, 1280);
+    let dx = run.by_op[&OpKind::DenseInputGrad].cycles;
+    assert!((1820..=1822).contains(&dx), "dense grad-prop {dx} not ≈1821");
+}
+
+#[test]
+fn full_step_total_within_paper_epoch_budget() {
+    // §IV-C: 1.76 s/epoch at 3.87 ns. With 1000 GDumb samples × 10
+    // epochs the implied per-step budget is ~45.5 k cycles — our step
+    // lands on it (documented in EXPERIMENTS.md E4).
+    let run = train_step_stats(&ModelConfig::default(), SimConfig::paper(), 3);
+    let total = run.cycles();
+    assert!((40_000..=50_000).contains(&total), "step total {total} out of range");
+}
+
+#[test]
+fn conv_cycles_scale_linearly_with_output_channels() {
+    // One output pixel per cycle per channel-group sweep: doubling output
+    // channels doubles conv forward cycles.
+    let base = ModelConfig { conv_channels: 8, ..ModelConfig::default() };
+    let double = ModelConfig { conv_channels: 16, ..ModelConfig::default() };
+    let r8 = train_step_stats(&base, SimConfig::paper(), 4);
+    let r16 = train_step_stats(&double, SimConfig::paper(), 4);
+    // conv2 dominates: 8→8 (8192) vs 16→16 (4 group-sweeps × 8192).
+    assert!(
+        r16.by_op[&OpKind::ConvForward].cycles > 2 * r8.by_op[&OpKind::ConvForward].cycles,
+        "{} vs {}",
+        r16.by_op[&OpKind::ConvForward].cycles,
+        r8.by_op[&OpKind::ConvForward].cycles
+    );
+}
+
+#[test]
+fn conv_cycles_scale_quadratically_with_image_size() {
+    let small = ModelConfig { image_size: 16, ..ModelConfig::default() };
+    let big = ModelConfig { image_size: 32, ..ModelConfig::default() };
+    let rs = train_step_stats(&small, SimConfig::paper(), 5);
+    let rb = train_step_stats(&big, SimConfig::paper(), 5);
+    let ratio = rb.by_op[&OpKind::ConvForward].cycles as f64
+        / rs.by_op[&OpKind::ConvForward].cycles as f64;
+    assert!((3.8..=4.2).contains(&ratio), "H×W scaling ratio {ratio} ≠ ~4");
+}
+
+#[test]
+fn fewer_lanes_cost_more_cycles() {
+    // Halving the channel-group width doubles the group sweeps for conv2.
+    let cfg = ModelConfig::default();
+    let r8 = train_step_stats(&cfg, SimConfig::paper(), 6);
+    let r4 = train_step_stats(&cfg, SimConfig::paper().with_lanes(4), 6);
+    assert!(
+        r4.by_op[&OpKind::ConvForward].cycles > r8.by_op[&OpKind::ConvForward].cycles,
+        "4-lane {} ≤ 8-lane {}",
+        r4.by_op[&OpKind::ConvForward].cycles,
+        r8.by_op[&OpKind::ConvForward].cycles
+    );
+}
+
+#[test]
+fn mac_utilization_near_one_for_conv_forward() {
+    // The snake window keeps the PU fed: one output pixel per cycle means
+    // 72 mults/cycle at the paper design point for the 8-channel conv2
+    // (conv1 has only 3 real input channels of 8 lanes, so utilization
+    // averaged over both convs is lower but must stay > 0.6).
+    let run = train_step_stats(&ModelConfig::default(), SimConfig::paper(), 7);
+    let conv = run.by_op[&OpKind::ConvForward];
+    let peak = (9 * 8) as f64;
+    let util = conv.mac_utilization(peak);
+    assert!(util > 0.6, "conv forward utilization {util}");
+}
+
+#[test]
+fn snake_reuse_bounds_feature_reads() {
+    // §III-F-1: at full throttle 3 new feature vectors per output pixel
+    // (6 of 9 reused). Conv forward feature reads must stay below
+    // 3.5 per cycle (setup rows cost a little extra).
+    let run = train_step_stats(&ModelConfig::default(), SimConfig::paper(), 8);
+    let conv = run.by_op[&OpKind::ConvForward];
+    let per_cycle = conv.feature_reads as f64 / conv.cycles as f64;
+    assert!(per_cycle <= 3.5, "feature reads/cycle {per_cycle} > 3.5 — snake reuse broken");
+}

@@ -1,0 +1,156 @@
+//! Failure injection: the system must fail loudly and precisely on
+//! mis-use, and stay numerically safe under hostile inputs.
+
+use tinycl::cl::{ReplayMemory, SamplerKind};
+use tinycl::data::Sample;
+use tinycl::fixed::Fx;
+use tinycl::nn::{Model, ModelConfig};
+use tinycl::qnn::QModel;
+use tinycl::runtime::{ArtifactSet, XlaRuntime};
+use tinycl::sim::{SimConfig, TinyClDevice};
+use tinycl::tensor::{quantize_tensor, Shape, Tensor};
+
+fn tiny() -> ModelConfig {
+    ModelConfig {
+        in_channels: 3,
+        image_size: 8,
+        conv_channels: 4,
+        num_classes: 4,
+        grad_clip: f32::INFINITY,
+    }
+}
+
+#[test]
+fn missing_artifacts_give_actionable_error() {
+    let rt = match XlaRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(_) => return, // no PJRT in this environment — nothing to test
+    };
+    let set = ArtifactSet::paper("/definitely/not/a/dir");
+    let msg = match rt.load_model(&set, ModelConfig::default()) {
+        Ok(_) => panic!("load_model succeeded on a missing directory"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn malformed_hlo_rejected_at_compile_time() {
+    let rt = match XlaRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(_) => return,
+    };
+    let dir = std::env::temp_dir().join("tinycl_bad_hlo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.hlo.txt");
+    std::fs::write(&bad, "HloModule utterly { broken").unwrap();
+    assert!(rt.compile_artifact(&bad).is_err(), "malformed HLO compiled?");
+}
+
+#[test]
+#[should_panic]
+fn wrong_input_shape_panics_on_device() {
+    let cfg = tiny();
+    let m = Model::new(cfg.clone(), 1);
+    let mut dev = TinyClDevice::new(SimConfig::paper(), cfg);
+    dev.load_params(&QModel::from_model(&m).params);
+    // 16×16 image into an 8×8 device: must assert, not corrupt SRAM.
+    let wrong = Tensor::<Fx>::zeros(Shape::d3(3, 16, 16));
+    let _ = dev.infer(&wrong);
+}
+
+#[test]
+#[should_panic]
+fn label_outside_active_classes_panics() {
+    let cfg = tiny();
+    let mut m = Model::new(cfg.clone(), 2);
+    let x = Tensor::full(Shape::d3(3, 8, 8), 0.1);
+    // label 3 with only 2 active classes is a CL-protocol violation.
+    m.train_step(&x, 3, 2, 0.1);
+}
+
+#[test]
+fn saturating_inputs_do_not_poison_training() {
+    // All-extreme inputs (±max Q4.12) must keep loss finite and params
+    // in range — the clipping path of §III-A.
+    let cfg = tiny();
+    let m = Model::new(cfg.clone(), 3);
+    let mut qm = QModel::from_model(&m);
+    let hot = quantize_tensor(&Tensor::full(Shape::d3(3, 8, 8), 1e9));
+    let cold = quantize_tensor(&Tensor::full(Shape::d3(3, 8, 8), -1e9));
+    for step in 0..10 {
+        let x = if step % 2 == 0 { &hot } else { &cold };
+        let (loss, _) = qm.train_step(x, step % 4, 4, Fx::from_f32(1.0));
+        assert!(loss.is_finite(), "loss non-finite at step {step}");
+    }
+    for p in [&qm.params.k1, &qm.params.k2, &qm.params.w] {
+        assert!(p.data().iter().all(|v| v.to_f32().abs() <= 8.0));
+    }
+}
+
+#[test]
+fn replay_memory_survives_hostile_stream() {
+    // Single-class flood followed by many rare classes: balance must
+    // recover, capacity must never be exceeded.
+    let mut mem = ReplayMemory::new(SamplerKind::GreedyBalanced, 50, 7);
+    let img = |v: f32| Tensor::full(Shape::d3(1, 2, 2), v);
+    for i in 0..500 {
+        mem.offer(&Sample { x: img(i as f32), label: 0 });
+    }
+    assert_eq!(mem.len(), 50);
+    for class in 1..10 {
+        for i in 0..20 {
+            mem.offer(&Sample { x: img(1000.0 + i as f32), label: class });
+        }
+    }
+    assert_eq!(mem.len(), 50);
+    let counts = mem.class_counts();
+    assert_eq!(counts.len(), 10, "some class starved: {counts:?}");
+    let max = counts.values().max().unwrap();
+    let min = counts.values().min().unwrap();
+    assert!(max - min <= 1, "imbalance {counts:?}");
+}
+
+#[test]
+fn zero_lr_is_a_fixed_point_everywhere() {
+    let cfg = tiny();
+    let m = Model::new(cfg.clone(), 5);
+    let mut qm = QModel::from_model(&m);
+    let mut dev = TinyClDevice::new(SimConfig::paper(), cfg.clone());
+    dev.load_params(&qm.params);
+    let x = quantize_tensor(&Tensor::full(Shape::d3(3, 8, 8), 0.3));
+    let before = qm.params.clone();
+    qm.train_step(&x, 0, 4, Fx::from_f32(0.0));
+    dev.train_step(&x, 0, 4, Fx::from_f32(0.0));
+    assert_eq!(qm.params.w.data(), before.w.data());
+    assert_eq!(dev.read_params().w.data(), before.w.data());
+}
+
+#[test]
+fn empty_gradient_memory_reuse_is_safe() {
+    // Two consecutive train steps reuse the ping-pong gradient memories;
+    // stale contents from step N must never leak into step N+1 (compare
+    // against a fresh device fed only step N+1's input).
+    let cfg = tiny();
+    let m = Model::new(cfg.clone(), 6);
+    let qm = QModel::from_model(&m);
+
+    let x1 = quantize_tensor(&Tensor::full(Shape::d3(3, 8, 8), 0.5));
+    let x2 = quantize_tensor(&Tensor::full(Shape::d3(3, 8, 8), -0.25));
+
+    // Device A: step on x1 then x2. Device B (fresh params after A's x1
+    // step): step on x2 only. Parameters after must agree bit-for-bit.
+    let mut dev_a = TinyClDevice::new(SimConfig::paper(), cfg.clone());
+    dev_a.load_params(&qm.params);
+    dev_a.train_step(&x1, 0, 4, Fx::from_f32(0.25));
+    let mid = dev_a.read_params();
+    dev_a.train_step(&x2, 1, 4, Fx::from_f32(0.25));
+
+    let mut dev_b = TinyClDevice::new(SimConfig::paper(), cfg.clone());
+    dev_b.load_params(&mid);
+    dev_b.set_step(dev_a.step() - 1); // resume the dither stream at step 1
+    dev_b.train_step(&x2, 1, 4, Fx::from_f32(0.25));
+
+    assert_eq!(dev_a.read_params().w.data(), dev_b.read_params().w.data());
+    assert_eq!(dev_a.read_params().k1.data(), dev_b.read_params().k1.data());
+}
