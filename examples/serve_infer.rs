@@ -7,7 +7,9 @@
 //! 2. the TinyCL device (cycle-accurate) — per-inference cycles → latency
 //!    at the synthesized clock, plus energy per inference.
 //!
-//! Run: `cargo run --release --example serve_infer` (needs `make artifacts`)
+//! Run: `cargo run --release --example serve_infer`
+//! (the XLA path needs `--features xla` + `make artifacts`; without it
+//! the host side is served by the im2col+GEMM `f32-fast` backend)
 
 use tinycl::cl::Learner;
 use tinycl::coordinator::{Backend, BackendKind};
@@ -29,8 +31,16 @@ fn main() -> anyhow::Result<()> {
 
     println!("serving {requests} single-image requests (32×32×3, 10 classes)\n");
 
-    // --- 1. XLA software path ---
-    let mut xla = Backend::create(BackendKind::Xla, &model_cfg, &sim_cfg, "artifacts", 5)?;
+    // --- 1. Host software path: AOT-XLA when built with `--features
+    // xla` (and artifacts are present), otherwise the im2col+GEMM
+    // `f32-fast` core — the fastest pure-Rust serving path.
+    let mut xla = match Backend::create(BackendKind::Xla, &model_cfg, &sim_cfg, "artifacts", 5) {
+        Ok(b) => b,
+        Err(e) => {
+            println!("note: XLA path unavailable ({e}); serving on the f32-fast backend\n");
+            Backend::create(BackendKind::F32Fast, &model_cfg, &sim_cfg, "artifacts", 5)?
+        }
+    };
     // Brief fine-tune so the served model is not random (5 quick steps).
     for (i, s) in batch.iter().take(5).enumerate() {
         xla.train_step(&s.x, s.label, 10, 0.05);
@@ -47,7 +57,10 @@ fn main() -> anyhow::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let summary = Summary::of(&lat_us);
-    println!("XLA CPU path (AOT JAX/Pallas via PJRT):");
+    match xla.kind() {
+        BackendKind::Xla => println!("XLA CPU path (AOT JAX/Pallas via PJRT):"),
+        kind => println!("host CPU path ({} backend):", kind.name()),
+    }
     println!(
         "  latency µs: p50 {:.0}  p95 {:.0}  max {:.0}",
         summary.median, summary.p95, summary.max

@@ -1,0 +1,136 @@
+"""Export golden test vectors from the jnp oracles into rust/tests/golden/.
+
+The Rust crate carries two f32 implementations of every layer (naive
+loops in ``nn::conv``/``nn::dense`` and the im2col+GEMM core in
+``nn::gemm``). These fixtures pin both to the *Python* reference in
+``kernels/ref.py`` — the same oracle the Pallas kernels and the AOT
+artifacts are tested against — so the Rust and Python numerics can never
+drift apart silently.
+
+Inputs are deterministic (seeded ``numpy.random.RandomState``), cast to
+float32 before entering the oracle, and serialized as plain JSON floats
+(every f32 round-trips exactly through the f64 JSON number).
+
+Run from the repo root:  python3 python/compile/export_golden.py
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from kernels import ref  # noqa: E402
+
+OUT_DIR = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "..", "rust", "tests", "golden"
+)
+
+def f32(rng, shape):
+    return rng.uniform(-1.0, 1.0, size=shape).astype(np.float32)
+
+def flat(a):
+    return [float(v) for v in np.asarray(a, dtype=np.float32).reshape(-1)]
+
+def conv_case(name, rng, cin, cout, hw, pad):
+    x = f32(rng, (cin, hw, hw))
+    k = f32(rng, (cout, cin, 3, 3))
+    y = ref.conv2d_forward(x, k, pad=pad)
+    assert y.shape == (cout, hw + 2 * pad - 2, hw + 2 * pad - 2), y.shape
+    dy = f32(rng, y.shape)
+    dx = ref.conv2d_input_grad(dy, k, pad=pad)
+    assert dx.shape == x.shape, dx.shape
+    dk = ref.conv2d_kernel_grad(dy, x, pad=pad, kh=3, kw=3)
+    assert dk.shape == k.shape, dk.shape
+    return {
+        "name": name,
+        "cin": cin,
+        "cout": cout,
+        "h": hw,
+        "w": hw,
+        "kh": 3,
+        "kw": 3,
+        "stride": 1,
+        "pad": pad,
+        "x": flat(x),
+        "k": flat(k),
+        "y": flat(y),
+        "dy": flat(dy),
+        "dx": flat(dx),
+        "dk": flat(dk),
+    }
+
+def dense_case(name, rng, n_in, n_out, sparse_x):
+    x = f32(rng, (n_in,))
+    if sparse_x:  # post-ReLU-like input: the layers' real operating regime
+        x = np.maximum(x, 0.0).astype(np.float32)
+    w = f32(rng, (n_in, n_out))
+    y = ref.dense_forward(x, w)
+    dy = f32(rng, (n_out,))
+    dx = ref.dense_input_grad(dy, w)
+    dw = ref.dense_weight_grad(dy, x)
+    return {
+        "name": name,
+        "n_in": n_in,
+        "n_out": n_out,
+        "x": flat(x),
+        "w": flat(w),
+        "y": flat(y),
+        "dy": flat(dy),
+        "dx": flat(dx),
+        "dw": flat(dw),
+    }
+
+def model_case(name, rng, cin, hw, channels, classes):
+    params = {
+        "k1": f32(rng, (channels, cin, 3, 3)),
+        "k2": f32(rng, (channels, channels, 3, 3)) * np.float32(0.5),
+        "w": f32(rng, (channels * hw * hw, classes)) * np.float32(0.25),
+    }
+    x = f32(rng, (cin, hw, hw))
+    logits = ref.model_forward(params, x)
+    return {
+        "name": name,
+        "cin": cin,
+        "image": hw,
+        "channels": channels,
+        "classes": classes,
+        "k1": flat(params["k1"]),
+        "k2": flat(params["k2"]),
+        "w": flat(params["w"]),
+        "x": flat(x),
+        "logits": flat(logits),
+    }
+
+def main():
+    os.makedirs(OUT_DIR, exist_ok=True)
+    rng = np.random.RandomState(20240297)  # arXiv:2402.09780, reversed-ish
+
+    conv = {
+        "cases": [
+            conv_case("conv_2to3_5x5_pad1", rng, 2, 3, 5, 1),
+            conv_case("conv_1to1_4x4_pad0", rng, 1, 1, 4, 0),
+            conv_case("conv_3to4_6x6_pad1", rng, 3, 4, 6, 1),
+        ]
+    }
+    dense = {
+        "cases": [
+            dense_case("dense_12to4", rng, 12, 4, False),
+            dense_case("dense_48to6_sparse", rng, 48, 6, True),
+        ]
+    }
+    model = {"cases": [model_case("model_2ch_6px_c3_4cls", rng, 2, 6, 3, 4)]}
+
+    for fname, payload in [
+        ("conv.json", conv),
+        ("dense.json", dense),
+        ("model.json", model),
+    ]:
+        path = os.path.join(OUT_DIR, fname)
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        print(f"wrote {path} ({os.path.getsize(path)} bytes)")
+
+if __name__ == "__main__":
+    main()

@@ -83,9 +83,12 @@ def conv2d_forward(x, k, pad=1, block_rows=None):
 
 
 def conv2d_input_grad(g, k, pad=1, block_rows=None):
-    """Eq. (2): dV = g ⊛ flip(k)ᵀ — same kernel, transformed operand."""
+    """Eq. (2): dV = g ⊛ flip(k)ᵀ — same kernel, transformed operand.
+    Adjoint padding is Kh-1-pad (== pad for the geometry-preserving
+    3×3/pad-1 case), matching ``ref.conv2d_input_grad``."""
     kt = jnp.flip(k, axis=(2, 3)).transpose(1, 0, 2, 3)
-    return conv2d_forward(g, kt, pad=pad, block_rows=block_rows)
+    kh = k.shape[2]
+    return conv2d_forward(g, kt, pad=kh - 1 - pad, block_rows=block_rows)
 
 
 def conv2d_kernel_grad(g, x, pad=1):

@@ -33,18 +33,22 @@ def conv2d_forward(x, k, pad=1):
 
 
 def conv2d_input_grad(g, k, pad=1):
-    """Eq. (2): gradient w.r.t. the input — correlate g with the
-    spatially-flipped, io-transposed kernel."""
+    """Eq. (2): gradient w.r.t. the input — full correlation of g with the
+    spatially-flipped, io-transposed kernel (adjoint padding = Kh-1-pad,
+    which reduces to `pad` for the geometry-preserving 3×3/pad-1 case)."""
     kt = jnp.flip(k, axis=(2, 3)).transpose(1, 0, 2, 3)  # (Cin,Cout,Kh,Kw)
-    return conv2d_forward(g, kt, pad=pad)
+    kh = k.shape[2]
+    return conv2d_forward(g, kt, pad=kh - 1 - pad)
 
 
-def conv2d_kernel_grad(g, x, pad=1):
-    """Eq. (3): dK[o,i,dy,dx] = Σ_{h,w} g[o,h,w] · xpad[i,h+dy,w+dx]."""
+def conv2d_kernel_grad(g, x, pad=1, kh=None, kw=None):
+    """Eq. (3): dK[o,i,dy,dx] = Σ_{h,w} g[o,h,w] · xpad[i,h+dy,w+dx].
+    `kh`/`kw` default to the geometry-preserving 2·pad+1."""
     xpad = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
     cout, h, w = g.shape
     cin = x.shape[0]
-    kh = kw = 2 * pad + 1
+    kh = 2 * pad + 1 if kh is None else kh
+    kw = 2 * pad + 1 if kw is None else kw
     taps = []
     for dy in range(kh):
         for dx in range(kw):

@@ -65,6 +65,7 @@ impl Learner for crate::nn::Model {
     }
 
     fn reinit(&mut self, seed: u64) {
-        *self = crate::nn::Model::new(self.config.clone(), seed);
+        let engine = self.engine;
+        *self = crate::nn::Model::new(self.config.clone(), seed).with_engine(engine);
     }
 }

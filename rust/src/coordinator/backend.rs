@@ -1,43 +1,56 @@
 //! Interchangeable execution backends for the CL workload.
 //!
-//! The same [`crate::cl::Learner`] interface runs on four engines:
+//! The same [`crate::cl::Learner`] interface runs on five engines:
 //!
 //! | backend | engine | role in the paper |
 //! |---------|--------|-------------------|
-//! | `f32`   | `nn::Model` (pure Rust float) | algorithmic reference |
-//! | `qnn`   | `qnn::QModel` (bit-exact Q4.12) | what the RTL computes |
-//! | `sim`   | `sim::TinyClDevice` (cycle-accurate) | the TinyCL chip (§III) |
-//! | `xla`   | `runtime::XlaModel` (AOT JAX/Pallas via PJRT) | the "software-level implementation" baseline (§IV-C) |
+//! | `f32`      | `nn::Model` (pure Rust float, naive loops) | algorithmic reference |
+//! | `f32-fast` | `nn::Model` + `nn::gemm` (im2col + blocked GEMM) | fast host datapath |
+//! | `qnn`      | `qnn::QModel` (bit-exact Q4.12) | what the RTL computes |
+//! | `sim`      | `sim::TinyClDevice` (cycle-accurate) | the TinyCL chip (§III) |
+//! | `xla`      | `runtime::XlaModel` (AOT JAX/Pallas via PJRT) | the "software-level implementation" baseline (§IV-C) |
 //!
-//! All four are initialized from the *same* float parameters (quantized
-//! where needed), so cross-backend comparisons isolate the datapath, not
-//! the init.
+//! All backends are initialized from the *same* float parameters
+//! (quantized where needed), so cross-backend comparisons isolate the
+//! datapath, not the init. The `xla` backend requires the off-by-default
+//! `xla` cargo feature (plus a PJRT plugin and AOT artifacts at runtime);
+//! without it, selecting `xla` fails with an actionable error.
 
 use crate::cl::Learner;
 use crate::fixed::Fx;
-use crate::nn::{Model, ModelConfig};
+use crate::nn::{Engine, Model, ModelConfig};
 use crate::qnn::QModel;
+#[cfg(feature = "xla")]
 use crate::runtime::{ArtifactSet, XlaModel, XlaRuntime};
 use crate::sim::{RunStats, SimConfig, TinyClDevice};
 use crate::tensor::{quantize_tensor, Tensor};
-use anyhow::{Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
+use anyhow::Result;
 
 /// Backend selector (CLI surface).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
     F32,
+    F32Fast,
     Qnn,
     Sim,
     Xla,
 }
 
 impl BackendKind {
-    pub const ALL: [BackendKind; 4] =
-        [BackendKind::F32, BackendKind::Qnn, BackendKind::Sim, BackendKind::Xla];
+    pub const ALL: [BackendKind; 5] = [
+        BackendKind::F32,
+        BackendKind::F32Fast,
+        BackendKind::Qnn,
+        BackendKind::Sim,
+        BackendKind::Xla,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             BackendKind::F32 => "f32",
+            BackendKind::F32Fast => "f32-fast",
             BackendKind::Qnn => "qnn",
             BackendKind::Sim => "sim",
             BackendKind::Xla => "xla",
@@ -51,9 +64,12 @@ impl BackendKind {
 
 /// A running backend instance.
 pub enum Backend {
+    /// Float model; covers both the `f32` (naive) and `f32-fast` (GEMM)
+    /// kinds — the model's [`Engine`] field tells them apart.
     F32(Model),
     Qnn { model: QModel, config: ModelConfig },
     Sim { dev: TinyClDevice, train_stats: RunStats, infer_stats: RunStats },
+    #[cfg(feature = "xla")]
     Xla { model: XlaModel },
 }
 
@@ -70,6 +86,7 @@ impl Backend {
         let float = Model::new(config.clone(), seed);
         Ok(match kind {
             BackendKind::F32 => Backend::F32(float),
+            BackendKind::F32Fast => Backend::F32(float.with_engine(Engine::Gemm)),
             BackendKind::Qnn => {
                 Backend::Qnn { model: QModel::from_model(&float), config: config.clone() }
             }
@@ -82,6 +99,7 @@ impl Backend {
                     infer_stats: RunStats::default(),
                 }
             }
+            #[cfg(feature = "xla")]
             BackendKind::Xla => {
                 let rt = XlaRuntime::cpu().context("creating PJRT client")?;
                 // Artifacts are compiled for fixed geometries; match on
@@ -104,14 +122,25 @@ impl Backend {
                 model.set_params(&float.params)?;
                 Backend::Xla { model }
             }
+            #[cfg(not(feature = "xla"))]
+            BackendKind::Xla => {
+                let _ = artifacts_dir;
+                anyhow::bail!(
+                    "the `xla` backend needs the off-by-default `xla` cargo feature — \
+                     rebuild with `cargo build --features xla` (and see rust/README.md \
+                     for the PJRT/artifact prerequisites)"
+                )
+            }
         })
     }
 
     pub fn kind(&self) -> BackendKind {
         match self {
+            Backend::F32(m) if m.engine == Engine::Gemm => BackendKind::F32Fast,
             Backend::F32(_) => BackendKind::F32,
             Backend::Qnn { .. } => BackendKind::Qnn,
             Backend::Sim { .. } => BackendKind::Sim,
+            #[cfg(feature = "xla")]
             Backend::Xla { .. } => BackendKind::Xla,
         }
     }
@@ -163,6 +192,7 @@ impl Learner for Backend {
                 train_stats.merge(&run);
                 loss
             }
+            #[cfg(feature = "xla")]
             Backend::Xla { model } => model
                 .train_step(x, label, active_classes, lr)
                 .expect("xla train_step failed")
@@ -179,6 +209,7 @@ impl Learner for Backend {
                 infer_stats.merge(&run);
                 argmax_masked(&logits, active_classes)
             }
+            #[cfg(feature = "xla")]
             Backend::Xla { model } => {
                 let logits = model.infer(x).expect("xla infer failed");
                 argmax_masked_f32(&logits, active_classes)
@@ -188,7 +219,10 @@ impl Learner for Backend {
 
     fn reinit(&mut self, seed: u64) {
         match self {
-            Backend::F32(m) => *m = Model::new(m.config.clone(), seed),
+            Backend::F32(m) => {
+                let engine = m.engine;
+                *m = Model::new(m.config.clone(), seed).with_engine(engine);
+            }
             Backend::Qnn { model, config } => {
                 *model = QModel::from_model(&Model::new(config.clone(), seed));
             }
@@ -196,6 +230,7 @@ impl Learner for Backend {
                 let float = Model::new(dev.model_cfg.clone(), seed);
                 dev.load_params(&QModel::from_model(&float).params);
             }
+            #[cfg(feature = "xla")]
             Backend::Xla { model } => {
                 let float = Model::new(model.config.clone(), seed);
                 model.set_params(&float.params).expect("xla set_params failed");
@@ -214,6 +249,7 @@ fn argmax_masked(logits: &[Fx], active: usize) -> usize {
         .unwrap_or(0)
 }
 
+#[cfg(feature = "xla")]
 fn argmax_masked_f32(logits: &[f32], active: usize) -> usize {
     logits
         .iter()
@@ -252,6 +288,55 @@ mod tests {
             assert_eq!(BackendKind::parse(k.name()), Some(k));
         }
         assert_eq!(BackendKind::parse("gpu"), None);
+    }
+
+    #[test]
+    fn f32_fast_reports_its_own_kind() {
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let f = Backend::create(BackendKind::F32, &cfg, &sim_cfg, "artifacts", 3).unwrap();
+        let g = Backend::create(BackendKind::F32Fast, &cfg, &sim_cfg, "artifacts", 3).unwrap();
+        assert_eq!(f.kind(), BackendKind::F32);
+        assert_eq!(g.kind(), BackendKind::F32Fast);
+    }
+
+    #[test]
+    fn f32_fast_tracks_f32_through_training() {
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let mut f = Backend::create(BackendKind::F32, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        let mut g = Backend::create(BackendKind::F32Fast, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        for step in 0..5 {
+            let x = rand_image(600 + step, &cfg);
+            let lf = f.train_step(&x, (step % 4) as usize, 4, 0.05);
+            let lg = g.train_step(&x, (step % 4) as usize, 4, 0.05);
+            assert!(
+                (lf - lg).abs() <= 1e-4 * (1.0 + lf.abs()),
+                "step {step}: f32 {lf} vs f32-fast {lg}"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_fast_reinit_keeps_the_gemm_engine() {
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let mut g = Backend::create(BackendKind::F32Fast, &cfg, &sim_cfg, "artifacts", 7).unwrap();
+        g.reinit(8);
+        assert_eq!(g.kind(), BackendKind::F32Fast, "reinit dropped the engine");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_without_feature_fails_actionably() {
+        let cfg = tiny_cfg();
+        let err = match Backend::create(BackendKind::Xla, &cfg, &SimConfig::paper(), "artifacts", 1)
+        {
+            Ok(_) => panic!("xla backend must not build without the feature"),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--features xla"), "unhelpful error: {msg}");
     }
 
     #[test]

@@ -67,7 +67,9 @@ impl ExperimentConfig {
         let backend = {
             let s = args.str_or("backend", d.backend.name());
             BackendKind::parse(&s)
-                .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}' (f32|qnn|sim|xla)"))?
+                .ok_or_else(|| {
+                    anyhow::anyhow!("unknown backend '{s}' (f32|f32-fast|qnn|sim|xla)")
+                })?
         };
         let policy = {
             let s = args.str_or("policy", d.policy.name());

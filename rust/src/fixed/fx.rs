@@ -142,6 +142,85 @@ impl fmt::Display for Fx {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn prop_from_f32_rounds_and_saturates() {
+        // Quantization == clamp to the representable range + round to
+        // nearest, for any input including far outside [-8, 8).
+        check("from_f32 ~ clamp+round", 71, 500, |g| {
+            let x = g.f32_in(-20.0, 20.0);
+            let q = Fx::from_f32(x).to_f32();
+            let clamped = x.clamp(i16::MIN as f32 / SCALE, i16::MAX as f32 / SCALE);
+            assert!((q - clamped).abs() <= 0.5 / SCALE + 1e-6, "x={x} q={q}");
+        });
+    }
+
+    #[test]
+    fn prop_sat_add_sub_match_wide_reference() {
+        // Saturating 16-bit ops == exact i32 arithmetic clamped to i16,
+        // over the full raw range (the RTL writeback comparator).
+        check("sat_add/sat_sub ~ i32 clamp", 73, 500, |g| {
+            let (a, b) = (g.i16_any(), g.i16_any());
+            let (fa, fb) = (Fx::from_raw(a), Fx::from_raw(b));
+            let sum = (a as i32 + b as i32).clamp(i16::MIN as i32, i16::MAX as i32);
+            assert_eq!(fa.sat_add(fb).raw() as i32, sum, "add {a}+{b}");
+            let diff = (a as i32 - b as i32).clamp(i16::MIN as i32, i16::MAX as i32);
+            assert_eq!(fa.sat_sub(fb).raw() as i32, diff, "sub {a}-{b}");
+        });
+    }
+
+    #[test]
+    fn prop_mul_acc_is_exact() {
+        // 16×16→32 products never lose bits (paper §III-D: full
+        // precision into the adders).
+        check("mul_acc exact", 79, 500, |g| {
+            let (a, b) = (g.i16_any(), g.i16_any());
+            let p = Fx::from_raw(a).mul_acc(Fx::from_raw(b));
+            assert_eq!(p.raw(), a as i32 * b as i32);
+        });
+    }
+
+    #[test]
+    fn prop_mul_acc_shifted_rounds_to_nearest() {
+        // The barrel-shifted product == round-to-nearest of p / 2^s
+        // (ties toward +inf), checked against an f64 reference.
+        check("mul_acc_shifted ~ round(p/2^s)", 83, 500, |g| {
+            let (a, b) = (g.i16_any(), g.i16_any());
+            let shift = g.usize_in(0, 12) as u32;
+            let got = Fx::from_raw(a).mul_acc_shifted(Fx::from_raw(b), shift).raw() as i64;
+            let p = a as i64 * b as i64;
+            let expect = (p as f64 / f64::from(1u32 << shift) + 0.5).floor() as i64;
+            assert_eq!(got, expect, "a={a} b={b} shift={shift}");
+        });
+    }
+
+    #[test]
+    fn prop_clamp_abs_bounds_and_preserves() {
+        check("clamp_abs", 89, 500, |g| {
+            let v = Fx::from_raw(g.i16_any());
+            let limit = Fx::from_raw(g.usize_in(1, i16::MAX as usize) as i16);
+            let c = v.clamp_abs(limit);
+            assert!(c.raw() >= -limit.raw() && c.raw() <= limit.raw(), "{v:?} -> {c:?}");
+            if v.raw().abs() <= limit.raw() {
+                assert_eq!(c, v, "in-range value altered");
+            }
+            assert_eq!(c.clamp_abs(limit), c, "clamp not idempotent");
+        });
+    }
+
+    #[test]
+    fn prop_neg_saturates_only_at_min() {
+        check("neg involution", 97, 500, |g| {
+            let v = Fx::from_raw(g.i16_any());
+            if v == Fx::MIN {
+                assert_eq!(-v, Fx::MAX);
+            } else {
+                assert_eq!((-(-v)).raw(), v.raw());
+                assert_eq!((-v).raw(), -v.raw());
+            }
+        });
+    }
 
     #[test]
     fn constants() {

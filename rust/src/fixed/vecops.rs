@@ -70,6 +70,44 @@ mod tests {
     }
 
     #[test]
+    fn prop_dot_matches_wide_reference_with_wrapping() {
+        // The chained 32-bit accumulator == the low 32 bits of the exact
+        // i64 sum of full-precision products, for ANY operands (including
+        // ones that wrap) — the strongest statement of the adder
+        // semantics both `qnn` and `sim` rely on.
+        check("dot ~ i64 wrap", 47, 300, |g| {
+            let len = g.usize_in(0, 40);
+            let a: Vec<Fx> = (0..len).map(|_| Fx::from_raw(g.i16_any())).collect();
+            let b: Vec<Fx> = (0..len).map(|_| Fx::from_raw(g.i16_any())).collect();
+            let wide: i64 =
+                a.iter().zip(&b).map(|(x, y)| x.raw() as i64 * y.raw() as i64).sum();
+            assert_eq!(dot(&a, &b).raw(), wide as i32, "len {len}");
+        });
+    }
+
+    #[test]
+    fn prop_fma8_matches_scalar_reference_over_rounds() {
+        // Multi-adder mode accumulated over several rounds == per-lane
+        // i64 bookkeeping wrapped to 32 bits.
+        check("fma8 rounds ~ i64 wrap", 53, 200, |g| {
+            let rounds = g.usize_in(1, 5);
+            let mut acc = [Acc::ZERO; 8];
+            let mut wide = [0i64; 8];
+            for _ in 0..rounds {
+                let a: [Fx; 8] = std::array::from_fn(|_| Fx::from_raw(g.i16_any()));
+                let b = Fx::from_raw(g.i16_any());
+                fma8_into(&mut acc, &a, b);
+                for (w, x) in wide.iter_mut().zip(&a) {
+                    *w += x.raw() as i64 * b.raw() as i64;
+                }
+            }
+            for (lane, (got, expect)) in acc.iter().zip(&wide).enumerate() {
+                assert_eq!(got.raw(), *expect as i32, "lane {lane} after {rounds} rounds");
+            }
+        });
+    }
+
+    #[test]
     fn dot8_matches_f64_reference() {
         check("dot8 ~ f64", 31, 400, |g| {
             let a = fx_vec8(g, -1.0, 1.0);

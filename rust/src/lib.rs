@@ -17,6 +17,10 @@ pub mod fixed;
 pub mod hw;
 pub mod nn;
 pub mod qnn;
+/// PJRT runtime for the AOT software baseline — needs the off-by-default
+/// `xla` cargo feature (default builds run on machines with no PJRT
+/// plugin; see rust/README.md).
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sim;
 pub mod tensor;

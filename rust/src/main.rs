@@ -52,7 +52,8 @@ USAGE: tinycl <SUBCOMMAND> [flags]
 
 SUBCOMMANDS
   train      run a continual-learning experiment
-             --backend f32|qnn|sim|xla   --policy gdumb|er|naive|joint
+             --backend f32|f32-fast|qnn|sim|xla   --policy gdumb|er|naive|joint
+             (the `xla` backend needs a build with `--features xla`)
              --tasks N --epochs N --lr F --memory N --per-class N
              --image-size N --conv-channels N --classes N --seed N
   infer      one inference on a trained-from-scratch model
@@ -167,8 +168,10 @@ fn cmd_report_hw(args: &Args) -> Result<()> {
 }
 
 /// `speedup`: E4 — one training epoch on sim (cycles → seconds at the
-/// synthesized clock) vs the AOT-XLA software baseline (wall time), with
-/// the paper's P100 constant for reference.
+/// synthesized clock) vs this host's software baselines: the naive f32
+/// reference, the im2col+GEMM `f32-fast` core and — when built with
+/// `--features xla` — the AOT-XLA executable. The paper's P100 constant
+/// is carried alongside for reference.
 fn cmd_speedup(args: &Args) -> Result<()> {
     let config = ExperimentConfig::from_args(args)?;
     let steps = args.usize_or("steps", 1000);
@@ -178,6 +181,24 @@ fn cmd_speedup(args: &Args) -> Result<()> {
     let samples: Vec<_> = data.samples.iter().take(steps).collect();
 
     use tinycl::cl::Learner;
+
+    let run_host = |kind: BackendKind| -> Result<f64> {
+        let mut backend = Backend::create(
+            kind, &config.model, &config.sim, &config.artifacts_dir, config.seed)?;
+        let t0 = std::time::Instant::now();
+        for s in &samples {
+            backend.train_step(&s.x, s.label, config.model.num_classes, config.lr);
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    };
+
+    // Host software baselines.
+    let naive_secs = run_host(BackendKind::F32)?;
+    let fast_secs = run_host(BackendKind::F32Fast)?;
+    #[cfg(feature = "xla")]
+    let xla_secs = Some(run_host(BackendKind::Xla)?);
+    #[cfg(not(feature = "xla"))]
+    let xla_secs: Option<f64> = None;
 
     // TinyCL device.
     let mut sim = Backend::create(
@@ -189,15 +210,6 @@ fn cmd_speedup(args: &Args) -> Result<()> {
     let cost = CostModel::for_design(&config.sim, &config.model);
     let sim_secs = train.cycles() as f64 * cost.clock_ns() * 1e-9;
 
-    // Software baseline: AOT JAX/Pallas via PJRT.
-    let mut xla = Backend::create(
-        BackendKind::Xla, &config.model, &config.sim, &config.artifacts_dir, config.seed)?;
-    let t0 = std::time::Instant::now();
-    for s in &samples {
-        xla.train_step(&s.x, s.label, config.model.num_classes, config.lr);
-    }
-    let xla_secs = t0.elapsed().as_secs_f64();
-
     // The paper's constants for the same nominal workload.
     let paper_gpu = 103.0;
     let paper_tinycl = 1.76;
@@ -205,8 +217,15 @@ fn cmd_speedup(args: &Args) -> Result<()> {
     println!("one epoch = {steps} train steps (batch 1)");
     println!("TinyCL (sim, {:.2} ns clock): {:.3} s  ({} cycles)",
         cost.clock_ns(), sim_secs, train.cycles());
-    println!("XLA CPU baseline (this host): {xla_secs:.3} s");
-    println!("speedup vs this host's software baseline: {:.1}×", xla_secs / sim_secs);
+    println!("f32 naive baseline (this host): {naive_secs:.3} s");
+    println!("f32-fast GEMM baseline (this host): {fast_secs:.3} s  ({:.1}× over naive)",
+        naive_secs / fast_secs);
+    match xla_secs {
+        Some(x) => println!("XLA CPU baseline (this host): {x:.3} s"),
+        None => println!("XLA CPU baseline: skipped (built without the `xla` feature)"),
+    }
+    println!("speedup vs this host's fastest software baseline: {:.1}×",
+        xla_secs.unwrap_or(f64::INFINITY).min(fast_secs) / sim_secs);
     println!("paper: TinyCL {paper_tinycl} s vs P100 {paper_gpu} s ⇒ 58× (their testbed)");
     Ok(())
 }

@@ -1,0 +1,450 @@
+//! im2col + cache-blocked f32 GEMM — the `f32-fast` compute core.
+//!
+//! The naive kernels in [`super::conv`] walk a 6-deep per-element loop
+//! with padding branches in the innermost body. This module restructures
+//! the same three convolution computations (paper Eqs. 1–3) as matrix
+//! multiplies over an im2col-packed input, the classic lowering every
+//! fast CPU training stack uses (cf. PULP-TrainLib's blocked kernels):
+//!
+//! * forward:      `Y (Cout×N) = K (Cout×KD) · cols(X) (KD×N)`
+//! * input grad:   `dcols (KD×N) = Kᵀ (KD×Cout) · dY (Cout×N)`, col2im
+//! * kernel grad:  `dK (Cout×KD) = dY (Cout×N) · cols(X)ᵀ (N×KD)`
+//!
+//! with `KD = Cin·Kh·Kw` and `N = Oh·Ow`. The OIHW kernel tensor is
+//! already a row-major `Cout×KD` matrix and the CHW output is already a
+//! row-major `Cout×N` matrix, so packing is only needed on the input
+//! side. All inner loops run over contiguous slices (axpy / unrolled
+//! dot), which the compiler vectorizes; the GEMMs block the `N`
+//! dimension into L1-sized panels.
+//!
+//! Numerics: same multiplies as the naive path but different summation
+//! order, so results agree to float round-off (≤ 1e-4 relative — pinned
+//! by `tests/gemm_vs_naive.rs` and the golden vectors), not bitwise.
+
+use super::conv::out_size;
+use crate::tensor::{Shape, Tensor};
+
+/// Column-panel width for the blocked GEMMs: 256 f32 = 1 KiB per row
+/// keeps a full B-panel plus the C row in L1 at the paper's geometry.
+const PANEL: usize = 256;
+
+/// `C (m×n) += A (m×k) · B (k×n)`, all row-major.
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A must be m×k");
+    assert_eq!(b.len(), k * n, "B must be k×n");
+    assert_eq!(c.len(), m * n, "C must be m×n");
+    for j0 in (0..n).step_by(PANEL) {
+        let j1 = (j0 + PANEL).min(n);
+        for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
+            for (&av, b_row) in a_row.iter().zip(b.chunks_exact(n)) {
+                if av == 0.0 {
+                    continue;
+                }
+                for (cv, &bv) in c_row[j0..j1].iter_mut().zip(&b_row[j0..j1]) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `C (k×n) += Aᵀ · B` where `A` is `m×k` and `B` is `m×n`, row-major.
+/// (Transposition is implicit: A is read row by row, scattering into C
+/// rows, so every inner loop still runs over contiguous memory.)
+pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A must be m×k");
+    assert_eq!(b.len(), m * n, "B must be m×n");
+    assert_eq!(c.len(), k * n, "C must be k×n");
+    for (a_row, b_row) in a.chunks_exact(k).zip(b.chunks_exact(n)) {
+        for (&av, c_row) in a_row.iter().zip(c.chunks_exact_mut(n)) {
+            if av == 0.0 {
+                continue;
+            }
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `C (m×n) += A · Bᵀ` where `A` is `m×kd` and `B` is `n×kd`, row-major:
+/// every C element is a dot product of two contiguous rows.
+pub fn gemm_nt(m: usize, n: usize, kd: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * kd, "A must be m×kd");
+    assert_eq!(b.len(), n * kd, "B must be n×kd");
+    assert_eq!(c.len(), m * n, "C must be m×n");
+    for (a_row, c_row) in a.chunks_exact(kd).zip(c.chunks_exact_mut(n)) {
+        for (cv, b_row) in c_row.iter_mut().zip(b.chunks_exact(kd)) {
+            *cv += dot(a_row, b_row);
+        }
+    }
+}
+
+/// Unrolled dot product: 8 independent accumulators break the sequential
+/// FP-add dependency chain so the loop pipelines/vectorizes.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let a8 = a.chunks_exact(8);
+    let b8 = b.chunks_exact(8);
+    let ra = a8.remainder();
+    let rb = b8.remainder();
+    let mut acc = [0.0f32; 8];
+    for (ca, cb) in a8.zip(b8) {
+        for l in 0..8 {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ra.iter().zip(rb) {
+        tail += x * y;
+    }
+    tail + ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+}
+
+/// Pack a CHW input into the `(Cin·Kh·Kw) × (Oh·Ow)` column matrix for a
+/// `Kh×Kw` convolution. Out-of-image taps (padding) stay zero. Returns
+/// the matrix and the output spatial size.
+pub fn im2col(
+    x: &Tensor<f32>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<f32>, usize, usize) {
+    let [cin, h, w]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
+    let oh = out_size(h, kh, stride, pad);
+    let ow = out_size(w, kw, stride, pad);
+    let n = oh * ow;
+    let mut cols = vec![0.0f32; cin * kh * kw * n];
+    let xd = x.data();
+    let mut row = 0;
+    for ic in 0..cin {
+        let plane = &xd[ic * h * w..(ic + 1) * h * w];
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let dest = &mut cols[row * n..(row + 1) * n];
+                for oy in 0..oh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let src = &plane[iy as usize * w..iy as usize * w + w];
+                    let drow = &mut dest[oy * ow..(oy + 1) * ow];
+                    for ox in 0..ow {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix >= 0 && ix < w as isize {
+                            drow[ox] = src[ix as usize];
+                        }
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+    (cols, oh, ow)
+}
+
+/// Scatter-add a `(Cin·Kh·Kw) × (Oh·Ow)` column-gradient matrix back
+/// into a CHW input gradient (the adjoint of [`im2col`]).
+#[allow(clippy::too_many_arguments)]
+fn col2im(
+    dcols: &[f32],
+    cin: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+) -> Vec<f32> {
+    let n = oh * ow;
+    let mut dx = vec![0.0f32; cin * h * w];
+    let mut row = 0;
+    for ic in 0..cin {
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let src = &dcols[row * n..(row + 1) * n];
+                let plane = &mut dx[ic * h * w..(ic + 1) * h * w];
+                for oy in 0..oh {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let drow = &mut plane[iy as usize * w..iy as usize * w + w];
+                    let srow = &src[oy * ow..(oy + 1) * ow];
+                    for ox in 0..ow {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix >= 0 && ix < w as isize {
+                            drow[ix as usize] += srow[ox];
+                        }
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+    dx
+}
+
+/// Forward convolution (paper Eq. 1) via im2col + GEMM. Drop-in
+/// replacement for [`super::conv::forward`].
+pub fn forward(x: &Tensor<f32>, kernel: &Tensor<f32>, stride: usize, pad: usize) -> Tensor<f32> {
+    let [cin, _, _]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
+    let kd = kernel.shape().dims();
+    let (cout, kcin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
+    assert_eq!(cin, kcin, "channel mismatch: x {cin} vs kernel {kcin}");
+    let (cols, oh, ow) = im2col(x, kh, kw, stride, pad);
+    let n = oh * ow;
+    let mut out = vec![0.0f32; cout * n];
+    gemm_nn(cout, cin * kh * kw, n, kernel.data(), &cols, &mut out);
+    Tensor::from_vec(Shape::d3(cout, oh, ow), out)
+}
+
+/// Gradient w.r.t. the input (paper Eq. 2) via GEMM + col2im. Drop-in
+/// replacement for [`super::conv::input_grad`].
+pub fn input_grad(
+    dy: &Tensor<f32>,
+    kernel: &Tensor<f32>,
+    x_shape: &Shape,
+    stride: usize,
+    pad: usize,
+) -> Tensor<f32> {
+    let [cin, h, w]: [usize; 3] = x_shape.dims().try_into().expect("x_shape must be CHW");
+    let kd = kernel.shape().dims();
+    let (cout, kcin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
+    assert_eq!(cin, kcin);
+    let dyd = dy.shape().dims();
+    assert_eq!(dyd[0], cout, "dy channels");
+    let (oh, ow) = (dyd[1], dyd[2]);
+    debug_assert_eq!(oh, out_size(h, kh, stride, pad));
+    debug_assert_eq!(ow, out_size(w, kw, stride, pad));
+    let n = oh * ow;
+    let kdim = cin * kh * kw;
+    let mut dcols = vec![0.0f32; kdim * n];
+    gemm_tn(cout, kdim, n, kernel.data(), dy.data(), &mut dcols);
+    let dx = col2im(&dcols, cin, h, w, kh, kw, stride, pad, oh, ow);
+    Tensor::from_vec(x_shape.clone(), dx)
+}
+
+/// Gradient w.r.t. the kernel (paper Eq. 3) via im2col + GEMM. Drop-in
+/// replacement for [`super::conv::kernel_grad`].
+pub fn kernel_grad(
+    dy: &Tensor<f32>,
+    x: &Tensor<f32>,
+    kernel_shape: &Shape,
+    stride: usize,
+    pad: usize,
+) -> Tensor<f32> {
+    let [cin, _, _]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
+    let kd = kernel_shape.dims();
+    let (cout, kcin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
+    assert_eq!(cin, kcin);
+    let (cols, oh, ow) = im2col(x, kh, kw, stride, pad);
+    let dyd = dy.shape().dims();
+    assert_eq!(dyd[0], cout);
+    assert_eq!((dyd[1], dyd[2]), (oh, ow), "dy geometry vs conv geometry");
+    let kdim = cin * kh * kw;
+    let mut dk = vec![0.0f32; cout * kdim];
+    gemm_nt(cout, kdim, oh * ow, dy.data(), &cols, &mut dk);
+    Tensor::from_vec(kernel_shape.clone(), dk)
+}
+
+/// Dense forward (Eq. 4) through the GEMM core: `y (1×Nout) = x (1×Nin) ·
+/// W (Nin×Nout)`.
+pub fn dense_forward(x: &[f32], w: &Tensor<f32>) -> Vec<f32> {
+    let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
+    assert_eq!(x.len(), n_in, "input length {} vs weight rows {n_in}", x.len());
+    let mut y = vec![0.0f32; n_out];
+    gemm_nn(1, n_in, n_out, x, w.data(), &mut y);
+    y
+}
+
+/// Dense input gradient (Eq. 5): `dX (Nin) = W (Nin×Nout) · dY (Nout)` —
+/// one contiguous-row dot per input element.
+pub fn dense_input_grad(dy: &[f32], w: &Tensor<f32>) -> Vec<f32> {
+    let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
+    assert_eq!(dy.len(), n_out);
+    let dx: Vec<f32> = w.data().chunks_exact(n_out).map(|row| dot(row, dy)).collect();
+    debug_assert_eq!(dx.len(), n_in);
+    dx
+}
+
+/// Dense weight gradient (Eq. 6): rank-1 outer product `dW = x ⊗ dY`,
+/// written row-at-a-time (axpy form, skipping post-ReLU zeros).
+pub fn dense_weight_grad(dy: &[f32], x: &[f32]) -> Tensor<f32> {
+    let n_out = dy.len();
+    let mut dw = vec![0.0f32; x.len() * n_out];
+    for (&xi, dw_row) in x.iter().zip(dw.chunks_exact_mut(n_out)) {
+        if xi == 0.0 {
+            continue;
+        }
+        for (d, &g) in dw_row.iter_mut().zip(dy) {
+            *d = xi * g;
+        }
+    }
+    Tensor::from_vec(Shape::d2(x.len(), n_out), dw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{conv, dense};
+    use crate::util::rng::Pcg32;
+
+    fn rand_tensor(rng: &mut Pcg32, shape: Shape) -> Tensor<f32> {
+        let n = shape.numel();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "{what}[{i}]: gemm {x} vs naive {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_nn_known_values() {
+        // [1 2; 3 4] · [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0f32; 4];
+        gemm_nn(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn gemm_tn_is_a_transpose_times_b() {
+        // Aᵀ·B with A = [1 2; 3 4] (2×2), B = [5 6; 7 8]:
+        // Aᵀ = [1 3; 2 4] → [1·5+3·7, 1·6+3·8; 2·5+4·7, 2·6+4·8]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0f32; 4];
+        gemm_tn(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, [26.0, 30.0, 38.0, 44.0]);
+    }
+
+    #[test]
+    fn gemm_nt_is_a_times_b_transpose() {
+        // A·Bᵀ with A = [1 2; 3 4], B = [5 6; 7 8]:
+        // [1·5+2·6, 1·7+2·8; 3·5+4·6, 3·7+4·8]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0f32; 4];
+        gemm_nt(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, [17.0, 23.0, 39.0, 53.0]);
+    }
+
+    #[test]
+    fn gemm_panels_cover_wide_matrices() {
+        // n > PANEL exercises the panel loop. C = A·B with A = ones(1×2),
+        // B = ones(2×n) → every C element is 2.
+        let n = PANEL * 2 + 37;
+        let a = vec![1.0f32; 2];
+        let b = vec![1.0f32; 2 * n];
+        let mut c = vec![0.0f32; n];
+        gemm_nn(1, 2, n, &a, &b, &mut c);
+        assert!(c.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn dot_matches_reference_on_odd_lengths() {
+        let mut rng = Pcg32::seeded(5);
+        for len in [0usize, 1, 7, 8, 9, 64, 100] {
+            let a: Vec<f32> = (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let expect: f64 =
+                a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            assert!((dot(&a, &b) as f64 - expect).abs() < 1e-4, "len {len}");
+        }
+    }
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        let mut rng = Pcg32::seeded(1);
+        let x = rand_tensor(&mut rng, Shape::d3(1, 5, 5));
+        let k = Tensor::from_vec(Shape::d4(1, 1, 1, 1), vec![1.0]);
+        let y = forward(&x, &k, 1, 0);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn known_3x3_convolution() {
+        let x = Tensor::full(Shape::d3(1, 3, 3), 1.0f32);
+        let k = Tensor::full(Shape::d4(1, 1, 3, 3), 1.0f32);
+        let y = forward(&x, &k, 1, 1);
+        assert_eq!(y.data(), &[4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn stride_two_matches_naive() {
+        let mut rng = Pcg32::seeded(9);
+        let x = rand_tensor(&mut rng, Shape::d3(2, 7, 7));
+        let k = rand_tensor(&mut rng, Shape::d4(3, 2, 3, 3));
+        let fast = forward(&x, &k, 2, 1);
+        let naive = conv::forward(&x, &k, 2, 1);
+        assert_eq!(fast.shape(), naive.shape());
+        assert_close(fast.data(), naive.data(), 1e-5, "stride-2 forward");
+    }
+
+    #[test]
+    fn paper_geometry_matches_naive_all_three_ops() {
+        let mut rng = Pcg32::seeded(2);
+        let x = rand_tensor(&mut rng, Shape::d3(8, 32, 32));
+        let k = rand_tensor(&mut rng, Shape::d4(8, 8, 3, 3));
+        let y_fast = forward(&x, &k, 1, 1);
+        let y_naive = conv::forward(&x, &k, 1, 1);
+        assert_close(y_fast.data(), y_naive.data(), 1e-4, "forward");
+
+        let dy = rand_tensor(&mut rng, y_naive.shape().clone());
+        let dx_fast = input_grad(&dy, &k, x.shape(), 1, 1);
+        let dx_naive = conv::input_grad(&dy, &k, x.shape(), 1, 1);
+        assert_close(dx_fast.data(), dx_naive.data(), 1e-4, "input_grad");
+
+        let dk_fast = kernel_grad(&dy, &x, k.shape(), 1, 1);
+        let dk_naive = conv::kernel_grad(&dy, &x, k.shape(), 1, 1);
+        assert_close(dk_fast.data(), dk_naive.data(), 1e-4, "kernel_grad");
+    }
+
+    #[test]
+    fn dense_ops_match_naive() {
+        let mut rng = Pcg32::seeded(3);
+        let (n_in, n_out) = (64, 10);
+        let x: Vec<f32> = (0..n_in).map(|_| rng.range_f32(-1.0, 1.0).max(0.0)).collect();
+        let w = rand_tensor(&mut rng, Shape::d2(n_in, n_out));
+        let dy: Vec<f32> = (0..n_out).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+
+        assert_close(&dense_forward(&x, &w), &dense::forward(&x, &w), 1e-5, "dense fwd");
+        assert_close(
+            &dense_input_grad(&dy, &w),
+            &dense::input_grad(&dy, &w),
+            1e-5,
+            "dense dX",
+        );
+        assert_close(
+            dense_weight_grad(&dy, &x).data(),
+            dense::weight_grad(&dy, &x).data(),
+            1e-5,
+            "dense dW",
+        );
+    }
+
+    #[test]
+    fn im2col_col2im_adjoint() {
+        // <im2col(x), c> == <x, col2im(c)> — the defining adjoint
+        // identity that makes input_grad the exact transpose of forward.
+        let mut rng = Pcg32::seeded(11);
+        let x = rand_tensor(&mut rng, Shape::d3(2, 5, 5));
+        let (cols, oh, ow) = im2col(&x, 3, 3, 1, 1);
+        let c: Vec<f32> = (0..cols.len()).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let lhs: f64 = cols.iter().zip(&c).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let back = col2im(&c, 2, 5, 5, 3, 3, 1, 1, oh, ow);
+        let rhs: f64 = x.data().iter().zip(&back).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "adjoint identity violated: {lhs} vs {rhs}");
+    }
+}

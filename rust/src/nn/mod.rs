@@ -13,10 +13,11 @@
 
 pub mod conv;
 pub mod dense;
+pub mod gemm;
 pub mod init;
 pub mod loss;
 pub mod model;
 pub mod relu;
 pub mod sgd;
 
-pub use model::{Gradients, Model, ModelConfig, Params, TrainOutput};
+pub use model::{Engine, Gradients, Model, ModelConfig, Params, TrainOutput};

@@ -1,9 +1,22 @@
 //! The paper's evaluation model (§IV-A): Conv3×3 + ReLU + Conv3×3 + ReLU
 //! + Dense, trained with SGD at batch size 1.
 
-use super::{conv, dense, loss, relu, sgd};
+use super::{conv, dense, gemm, loss, relu, sgd};
 use crate::tensor::{Shape, Tensor};
 use crate::util::rng::Pcg32;
+
+/// Which compute core executes the conv/dense layers. Both engines share
+/// parameters and init; they differ only in float summation order (the
+/// GEMM core is pinned to the naive one within 1e-4 by
+/// `tests/gemm_vs_naive.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Engine {
+    /// Per-element reference loops (`nn::conv`, `nn::dense`).
+    #[default]
+    Naive,
+    /// im2col + cache-blocked GEMM (`nn::gemm`) — the `f32-fast` backend.
+    Gemm,
+}
 
 /// Model geometry. Defaults mirror §IV-A: 32×32×3 input, 8 filters per
 /// conv (stride 1, pad 1 — geometry-preserving), 10 classes.
@@ -99,6 +112,8 @@ pub struct TrainOutput {
 pub struct Model {
     pub config: ModelConfig,
     pub params: Params,
+    /// Compute core for conv/dense (default: naive reference loops).
+    pub engine: Engine,
 }
 
 impl Model {
@@ -122,7 +137,7 @@ impl Model {
             ),
             w: super::init::dense_weights(&mut rng, config.dense_in(), config.num_classes),
         };
-        Model { config, params }
+        Model { config, params, engine: Engine::Naive }
     }
 
     pub fn from_params(config: ModelConfig, params: Params) -> Model {
@@ -130,17 +145,67 @@ impl Model {
             params.w.shape(),
             &Shape::d2(config.dense_in(), config.num_classes)
         );
-        Model { config, params }
+        Model { config, params, engine: Engine::Naive }
+    }
+
+    /// Select the compute core (builder-style; parameters are untouched).
+    pub fn with_engine(mut self, engine: Engine) -> Model {
+        self.engine = engine;
+        self
+    }
+
+    // Engine dispatch: one seam per layer computation, so the forward
+    // and backward passes read identically for both cores.
+
+    fn conv_forward(&self, x: &Tensor<f32>, k: &Tensor<f32>) -> Tensor<f32> {
+        match self.engine {
+            Engine::Naive => conv::forward(x, k, 1, 1),
+            Engine::Gemm => gemm::forward(x, k, 1, 1),
+        }
+    }
+
+    fn conv_input_grad(&self, dy: &Tensor<f32>, k: &Tensor<f32>, x_shape: &Shape) -> Tensor<f32> {
+        match self.engine {
+            Engine::Naive => conv::input_grad(dy, k, x_shape, 1, 1),
+            Engine::Gemm => gemm::input_grad(dy, k, x_shape, 1, 1),
+        }
+    }
+
+    fn conv_kernel_grad(&self, dy: &Tensor<f32>, x: &Tensor<f32>, k_shape: &Shape) -> Tensor<f32> {
+        match self.engine {
+            Engine::Naive => conv::kernel_grad(dy, x, k_shape, 1, 1),
+            Engine::Gemm => gemm::kernel_grad(dy, x, k_shape, 1, 1),
+        }
+    }
+
+    fn dense_forward(&self, flat: &[f32]) -> Vec<f32> {
+        match self.engine {
+            Engine::Naive => dense::forward(flat, &self.params.w),
+            Engine::Gemm => gemm::dense_forward(flat, &self.params.w),
+        }
+    }
+
+    fn dense_input_grad(&self, dlogits: &[f32]) -> Vec<f32> {
+        match self.engine {
+            Engine::Naive => dense::input_grad(dlogits, &self.params.w),
+            Engine::Gemm => gemm::dense_input_grad(dlogits, &self.params.w),
+        }
+    }
+
+    fn dense_weight_grad(&self, dlogits: &[f32], flat: &[f32]) -> Tensor<f32> {
+        match self.engine {
+            Engine::Naive => dense::weight_grad(dlogits, flat),
+            Engine::Gemm => gemm::dense_weight_grad(dlogits, flat),
+        }
     }
 
     /// Forward pass keeping the caches backward needs.
     pub fn forward_cached(&self, x: &Tensor<f32>) -> ForwardCache {
-        let z1 = conv::forward(x, &self.params.k1, 1, 1);
+        let z1 = self.conv_forward(x, &self.params.k1);
         let a1 = relu::forward(&z1);
-        let z2 = conv::forward(&a1, &self.params.k2, 1, 1);
+        let z2 = self.conv_forward(&a1, &self.params.k2);
         let a2 = relu::forward(&z2);
-        let flat = a2.data();
-        let logits = dense::forward(flat, &self.params.w);
+        let logits = self.dense_forward(a2.data());
         ForwardCache { x: x.clone(), z1, a1, z2, a2, logits }
     }
 
@@ -158,18 +223,18 @@ impl Model {
     /// parameters (does not mutate the model).
     pub fn backward(&self, cache: &ForwardCache, dlogits: &[f32]) -> Gradients {
         // Dense layer.
-        let dw = dense::weight_grad(dlogits, cache.a2.data());
-        let da2_flat = dense::input_grad(dlogits, &self.params.w);
+        let dw = self.dense_weight_grad(dlogits, cache.a2.data());
+        let da2_flat = self.dense_input_grad(dlogits);
         let da2 = Tensor::from_vec(cache.a2.shape().clone(), da2_flat);
 
         // ReLU 2 + conv2.
         let dz2 = relu::backward(&da2, &cache.z2);
-        let dk2 = conv::kernel_grad(&dz2, &cache.a1, self.params.k2.shape(), 1, 1);
-        let da1 = conv::input_grad(&dz2, &self.params.k2, cache.a1.shape(), 1, 1);
+        let dk2 = self.conv_kernel_grad(&dz2, &cache.a1, self.params.k2.shape());
+        let da1 = self.conv_input_grad(&dz2, &self.params.k2, cache.a1.shape());
 
         // ReLU 1 + conv1 (no input gradient needed at the first layer).
         let dz1 = relu::backward(&da1, &cache.z1);
-        let dk1 = conv::kernel_grad(&dz1, &cache.x, self.params.k1.shape(), 1, 1);
+        let dk1 = self.conv_kernel_grad(&dz1, &cache.x, self.params.k1.shape());
 
         Gradients { k1: dk1, k2: dk2, w: dw }
     }
@@ -271,6 +336,26 @@ mod tests {
             assert_eq!(la, lb);
         }
         assert_eq!(a.params.w.data(), b.params.w.data());
+    }
+
+    #[test]
+    fn engines_share_init_and_agree_on_loss() {
+        let cfg = tiny_config();
+        let mut naive = Model::new(cfg.clone(), 2);
+        let mut fast = Model::new(cfg.clone(), 2).with_engine(Engine::Gemm);
+        assert_eq!(naive.params.w.data(), fast.params.w.data(), "init must not depend on engine");
+        let x = rand_image(3, &cfg);
+        for step in 0..5 {
+            let ln = naive.train_step(&x, 1, 4, 0.05).loss;
+            let lf = fast.train_step(&x, 1, 4, 0.05).loss;
+            assert!(
+                (ln - lf).abs() <= 1e-4 * (1.0 + ln.abs()),
+                "step {step}: naive loss {ln} vs gemm loss {lf}"
+            );
+        }
+        for (a, b) in naive.params.k1.data().iter().zip(fast.params.k1.data()) {
+            assert!((a - b).abs() <= 1e-4, "k1 diverged: {a} vs {b}");
+        }
     }
 
     #[test]

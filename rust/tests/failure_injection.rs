@@ -6,6 +6,7 @@ use tinycl::data::Sample;
 use tinycl::fixed::Fx;
 use tinycl::nn::{Model, ModelConfig};
 use tinycl::qnn::QModel;
+#[cfg(feature = "xla")]
 use tinycl::runtime::{ArtifactSet, XlaRuntime};
 use tinycl::sim::{SimConfig, TinyClDevice};
 use tinycl::tensor::{quantize_tensor, Shape, Tensor};
@@ -20,6 +21,7 @@ fn tiny() -> ModelConfig {
     }
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn missing_artifacts_give_actionable_error() {
     let rt = match XlaRuntime::cpu() {
@@ -34,6 +36,7 @@ fn missing_artifacts_give_actionable_error() {
     assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn malformed_hlo_rejected_at_compile_time() {
     let rt = match XlaRuntime::cpu() {

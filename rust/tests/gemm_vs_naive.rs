@@ -1,0 +1,164 @@
+//! Parity properties: the im2col+GEMM compute core (`nn::gemm`) must
+//! reproduce the naive reference kernels (`nn::conv`, `nn::dense`) over
+//! randomized channels, stride, padding and geometry — same multiplies,
+//! different summation order, so agreement is float-round-off tight
+//! (≤ 1e-4 relative), never exact by construction.
+
+use tinycl::nn::{conv, dense, gemm, Engine, Model, ModelConfig};
+use tinycl::tensor::{Shape, Tensor};
+use tinycl::util::proptest::{check, Gen};
+use tinycl::util::rng::Pcg32;
+
+const TOL: f32 = 1e-4;
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= TOL * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: gemm {x} vs naive {y}"
+        );
+    }
+}
+
+fn rand_tensor(rng: &mut Pcg32, shape: Shape) -> Tensor<f32> {
+    let n = shape.numel();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+}
+
+/// One random conv geometry: channels, spatial size, kernel, stride, pad.
+fn conv_geometry(g: &mut Gen) -> (usize, usize, usize, usize, usize, usize) {
+    let cin = g.usize_in(1, 3);
+    let cout = g.usize_in(1, 3);
+    let hw = g.usize_in(3, 8);
+    let k = *g.choose(&[1usize, 3]);
+    let stride = g.usize_in(1, 2);
+    let pad = g.usize_in(0, 1);
+    (cin, cout, hw, k, stride, pad)
+}
+
+#[test]
+fn conv_forward_parity() {
+    check("gemm::forward == conv::forward", 101, 50, |g| {
+        let (cin, cout, hw, k, stride, pad) = conv_geometry(g);
+        let mut rng = g.rng().fork(1);
+        let x = rand_tensor(&mut rng, Shape::d3(cin, hw, hw));
+        let kernel = rand_tensor(&mut rng, Shape::d4(cout, cin, k, k));
+        let fast = gemm::forward(&x, &kernel, stride, pad);
+        let naive = conv::forward(&x, &kernel, stride, pad);
+        assert_eq!(fast.shape(), naive.shape(), "shapes (k={k} s={stride} p={pad})");
+        assert_close(fast.data(), naive.data(), "forward");
+    });
+}
+
+#[test]
+fn conv_input_grad_parity() {
+    check("gemm::input_grad == conv::input_grad", 103, 50, |g| {
+        let (cin, cout, hw, k, stride, pad) = conv_geometry(g);
+        let mut rng = g.rng().fork(2);
+        let x = rand_tensor(&mut rng, Shape::d3(cin, hw, hw));
+        let kernel = rand_tensor(&mut rng, Shape::d4(cout, cin, k, k));
+        let dy_shape = conv::forward(&x, &kernel, stride, pad).shape().clone();
+        let dy = rand_tensor(&mut rng, dy_shape);
+        let fast = gemm::input_grad(&dy, &kernel, x.shape(), stride, pad);
+        let naive = conv::input_grad(&dy, &kernel, x.shape(), stride, pad);
+        assert_close(fast.data(), naive.data(), "input_grad");
+    });
+}
+
+#[test]
+fn conv_kernel_grad_parity() {
+    check("gemm::kernel_grad == conv::kernel_grad", 107, 50, |g| {
+        let (cin, cout, hw, k, stride, pad) = conv_geometry(g);
+        let mut rng = g.rng().fork(3);
+        let x = rand_tensor(&mut rng, Shape::d3(cin, hw, hw));
+        let kernel_shape = Shape::d4(cout, cin, k, k);
+        let kernel = rand_tensor(&mut rng, kernel_shape.clone());
+        let dy_shape = conv::forward(&x, &kernel, stride, pad).shape().clone();
+        let dy = rand_tensor(&mut rng, dy_shape);
+        let fast = gemm::kernel_grad(&dy, &x, &kernel_shape, stride, pad);
+        let naive = conv::kernel_grad(&dy, &x, &kernel_shape, stride, pad);
+        assert_close(fast.data(), naive.data(), "kernel_grad");
+    });
+}
+
+#[test]
+fn dense_parity() {
+    check("gemm dense ops == naive dense ops", 109, 60, |g| {
+        let n_in = g.usize_in(1, 40);
+        let n_out = g.usize_in(1, 12);
+        // Mix of dense and post-ReLU-sparse inputs (zero-skip paths).
+        let sparse = g.bool();
+        let x: Vec<f32> = (0..n_in)
+            .map(|_| {
+                let v = g.f32_in(-1.0, 1.0);
+                if sparse && v < 0.0 {
+                    0.0
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let w = {
+            let data: Vec<f32> = (0..n_in * n_out).map(|_| g.f32_in(-1.0, 1.0)).collect();
+            Tensor::from_vec(Shape::d2(n_in, n_out), data)
+        };
+        let dy: Vec<f32> = (0..n_out).map(|_| g.f32_in(-1.0, 1.0)).collect();
+
+        assert_close(&gemm::dense_forward(&x, &w), &dense::forward(&x, &w), "dense fwd");
+        assert_close(&gemm::dense_input_grad(&dy, &w), &dense::input_grad(&dy, &w), "dense dX");
+        assert_close(
+            gemm::dense_weight_grad(&dy, &x).data(),
+            dense::weight_grad(&dy, &x).data(),
+            "dense dW",
+        );
+    });
+}
+
+#[test]
+fn full_model_training_parity() {
+    // The two engines must track each other through whole train
+    // trajectories (forward, backward, SGD), across geometries.
+    for (image, channels, classes, seed) in
+        [(8usize, 4usize, 4usize, 11u64), (6, 3, 5, 13), (12, 2, 3, 17)]
+    {
+        let cfg = ModelConfig {
+            in_channels: 3,
+            image_size: image,
+            conv_channels: channels,
+            num_classes: classes,
+            grad_clip: f32::INFINITY,
+        };
+        let mut naive = Model::new(cfg.clone(), seed);
+        let mut fast = Model::new(cfg.clone(), seed).with_engine(Engine::Gemm);
+        let mut rng = Pcg32::seeded(seed + 1);
+        for step in 0..6 {
+            let x = rand_tensor(&mut rng, Shape::d3(3, image, image));
+            let label = step % classes;
+            let ln = naive.train_step(&x, label, classes, 0.05).loss;
+            let lf = fast.train_step(&x, label, classes, 0.05).loss;
+            assert!(
+                (ln - lf).abs() <= TOL * (1.0 + ln.abs()),
+                "geometry {image}/{channels}/{classes} step {step}: naive {ln} vs fast {lf}"
+            );
+        }
+        assert_close(naive.params.k1.data(), fast.params.k1.data(), "k1 after training");
+        assert_close(naive.params.k2.data(), fast.params.k2.data(), "k2 after training");
+        assert_close(naive.params.w.data(), fast.params.w.data(), "w after training");
+        // Inference logits from the trained models agree too.
+        let x = rand_tensor(&mut rng, Shape::d3(3, image, image));
+        assert_close(&naive.forward(&x), &fast.forward(&x), "logits after training");
+    }
+}
+
+#[test]
+fn gemm_handles_paper_geometry() {
+    // The exact §IV-A shapes the f32-fast backend runs in production.
+    let mut rng = Pcg32::seeded(23);
+    let x = rand_tensor(&mut rng, Shape::d3(3, 32, 32));
+    let k1 = rand_tensor(&mut rng, Shape::d4(8, 3, 3, 3));
+    let y1 = gemm::forward(&x, &k1, 1, 1);
+    assert_eq!(y1.shape().dims(), &[8, 32, 32]);
+    let naive = conv::forward(&x, &k1, 1, 1);
+    assert_close(y1.data(), naive.data(), "paper conv1");
+}

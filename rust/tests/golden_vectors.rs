@@ -1,0 +1,311 @@
+//! Golden vectors: both f32 compute cores (naive `nn::conv`/`nn::dense`
+//! and the im2col+GEMM `nn::gemm`) must reproduce fixtures exported from
+//! the Python oracle (`python/compile/kernels/ref.py`) — the same
+//! reference the Pallas kernels and AOT artifacts are tested against.
+//! This pins the Rust and Python numerics to each other so they cannot
+//! drift apart silently.
+//!
+//! Fixtures are committed under `tests/golden/` and regenerated with
+//! `python3 python/compile/export_golden.py`. Values are float32 computed
+//! in float32; both Rust paths must match within 1e-4 relative.
+
+use tinycl::nn::{conv, dense, gemm, Engine, Model, ModelConfig, Params};
+use tinycl::tensor::{Shape, Tensor};
+
+const TOL: f32 = 1e-4;
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= TOL * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: rust {x} vs golden {y}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON reader (the vendor set has no serde). Supports exactly
+// what the exporter emits: objects, arrays, strings without escapes,
+// and numbers (including exponents).
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum Json {
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> &Json {
+        match self {
+            Json::Obj(fields) => fields
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v)
+                .unwrap_or_else(|| panic!("missing key {key:?}")),
+            other => panic!("get({key:?}) on non-object {other:?}"),
+        }
+    }
+
+    fn cases(&self) -> &[Json] {
+        match self.get("cases") {
+            Json::Arr(items) => items,
+            other => panic!("cases is not an array: {other:?}"),
+        }
+    }
+
+    fn usize(&self) -> usize {
+        match self {
+            Json::Num(n) => *n as usize,
+            other => panic!("not a number: {other:?}"),
+        }
+    }
+
+    fn str(&self) -> &str {
+        match self {
+            Json::Str(s) => s,
+            other => panic!("not a string: {other:?}"),
+        }
+    }
+
+    fn f32s(&self) -> Vec<f32> {
+        match self {
+            Json::Arr(items) => items
+                .iter()
+                .map(|v| match v {
+                    Json::Num(n) => *n as f32,
+                    other => panic!("non-number in array: {other:?}"),
+                })
+                .collect(),
+            other => panic!("not an array: {other:?}"),
+        }
+    }
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn parse(text: &'a str) -> Json {
+        let mut p = Parser { s: text.as_bytes(), i: 0 };
+        let v = p.value();
+        p.ws();
+        assert_eq!(p.i, p.s.len(), "trailing garbage at byte {}", p.i);
+        v
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> u8 {
+        assert!(self.i < self.s.len(), "unexpected end of JSON");
+        self.s[self.i]
+    }
+
+    fn value(&mut self) -> Json {
+        self.ws();
+        match self.peek() {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Json::Str(self.string()),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Json {
+        self.i += 1; // consume '{'
+        let mut fields = Vec::new();
+        self.ws();
+        if self.peek() == b'}' {
+            self.i += 1;
+            return Json::Obj(fields);
+        }
+        loop {
+            self.ws();
+            let key = self.string();
+            self.ws();
+            assert_eq!(self.peek(), b':', "expected ':' at byte {}", self.i);
+            self.i += 1;
+            fields.push((key, self.value()));
+            self.ws();
+            match self.peek() {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Json::Obj(fields);
+                }
+                c => panic!("bad object separator {:?} at byte {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Json {
+        self.i += 1; // consume '['
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == b']' {
+            self.i += 1;
+            return Json::Arr(items);
+        }
+        loop {
+            items.push(self.value());
+            self.ws();
+            match self.peek() {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Json::Arr(items);
+                }
+                c => panic!("bad array separator {:?} at byte {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> String {
+        assert_eq!(self.peek(), b'"', "expected string at byte {}", self.i);
+        self.i += 1;
+        let start = self.i;
+        while self.peek() != b'"' {
+            assert_ne!(self.peek(), b'\\', "string escapes unsupported");
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.s[start..self.i]).expect("utf8").to_string();
+        self.i += 1;
+        s
+    }
+
+    fn number(&mut self) -> Json {
+        let start = self.i;
+        while self.i < self.s.len()
+            && matches!(self.s[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i]).expect("utf8");
+        Json::Num(text.parse().unwrap_or_else(|e| panic!("bad number {text:?}: {e}")))
+    }
+}
+
+#[test]
+fn json_reader_smoke() {
+    let j = Parser::parse(r#"{"a": [1, -2.5, 3e-2], "b": {"name": "x"}}"#);
+    assert_eq!(j.get("a").f32s(), vec![1.0, -2.5, 0.03]);
+    assert_eq!(j.get("b").get("name").str(), "x");
+}
+
+// ---------------------------------------------------------------------
+// The golden checks themselves.
+// ---------------------------------------------------------------------
+
+fn tensor(shape: Shape, data: Vec<f32>) -> Tensor<f32> {
+    Tensor::from_vec(shape, data)
+}
+
+#[test]
+fn conv_golden_vectors_pin_both_cores() {
+    let doc = Parser::parse(include_str!("golden/conv.json"));
+    for case in doc.cases() {
+        let name = case.get("name").str().to_string();
+        let (cin, cout) = (case.get("cin").usize(), case.get("cout").usize());
+        let (h, w) = (case.get("h").usize(), case.get("w").usize());
+        let (kh, kw) = (case.get("kh").usize(), case.get("kw").usize());
+        let stride = case.get("stride").usize();
+        let pad = case.get("pad").usize();
+        let x = tensor(Shape::d3(cin, h, w), case.get("x").f32s());
+        let kernel = tensor(Shape::d4(cout, cin, kh, kw), case.get("k").f32s());
+        let golden_y = case.get("y").f32s();
+        let golden_dx = case.get("dx").f32s();
+        let golden_dk = case.get("dk").f32s();
+
+        let y_naive = conv::forward(&x, &kernel, stride, pad);
+        let y_fast = gemm::forward(&x, &kernel, stride, pad);
+        assert_close(y_naive.data(), &golden_y, &format!("{name}: naive forward"));
+        assert_close(y_fast.data(), &golden_y, &format!("{name}: gemm forward"));
+
+        let dy = tensor(y_naive.shape().clone(), case.get("dy").f32s());
+        let dx_naive = conv::input_grad(&dy, &kernel, x.shape(), stride, pad);
+        let dx_fast = gemm::input_grad(&dy, &kernel, x.shape(), stride, pad);
+        assert_close(dx_naive.data(), &golden_dx, &format!("{name}: naive input_grad"));
+        assert_close(dx_fast.data(), &golden_dx, &format!("{name}: gemm input_grad"));
+
+        let dk_naive = conv::kernel_grad(&dy, &x, kernel.shape(), stride, pad);
+        let dk_fast = gemm::kernel_grad(&dy, &x, kernel.shape(), stride, pad);
+        assert_close(dk_naive.data(), &golden_dk, &format!("{name}: naive kernel_grad"));
+        assert_close(dk_fast.data(), &golden_dk, &format!("{name}: gemm kernel_grad"));
+    }
+}
+
+#[test]
+fn dense_golden_vectors_pin_both_cores() {
+    let doc = Parser::parse(include_str!("golden/dense.json"));
+    for case in doc.cases() {
+        let name = case.get("name").str().to_string();
+        let (n_in, n_out) = (case.get("n_in").usize(), case.get("n_out").usize());
+        let x = case.get("x").f32s();
+        let w = tensor(Shape::d2(n_in, n_out), case.get("w").f32s());
+        let dy = case.get("dy").f32s();
+
+        let golden_y = case.get("y").f32s();
+        assert_close(&dense::forward(&x, &w), &golden_y, &format!("{name}: naive fwd"));
+        assert_close(&gemm::dense_forward(&x, &w), &golden_y, &format!("{name}: gemm fwd"));
+        assert_close(
+            &dense::input_grad(&dy, &w),
+            &case.get("dx").f32s(),
+            &format!("{name}: naive dX"),
+        );
+        assert_close(
+            &gemm::dense_input_grad(&dy, &w),
+            &case.get("dx").f32s(),
+            &format!("{name}: gemm dX"),
+        );
+        assert_close(
+            dense::weight_grad(&dy, &x).data(),
+            &case.get("dw").f32s(),
+            &format!("{name}: naive dW"),
+        );
+        assert_close(
+            gemm::dense_weight_grad(&dy, &x).data(),
+            &case.get("dw").f32s(),
+            &format!("{name}: gemm dW"),
+        );
+    }
+}
+
+#[test]
+fn model_golden_logits_pin_both_engines() {
+    let doc = Parser::parse(include_str!("golden/model.json"));
+    for case in doc.cases() {
+        let name = case.get("name").str().to_string();
+        let cin = case.get("cin").usize();
+        let image = case.get("image").usize();
+        let channels = case.get("channels").usize();
+        let classes = case.get("classes").usize();
+        let cfg = ModelConfig {
+            in_channels: cin,
+            image_size: image,
+            conv_channels: channels,
+            num_classes: classes,
+            grad_clip: f32::INFINITY,
+        };
+        let params = Params {
+            k1: tensor(Shape::d4(channels, cin, 3, 3), case.get("k1").f32s()),
+            k2: tensor(Shape::d4(channels, channels, 3, 3), case.get("k2").f32s()),
+            w: tensor(Shape::d2(cfg.dense_in(), classes), case.get("w").f32s()),
+        };
+        let x = tensor(Shape::d3(cin, image, image), case.get("x").f32s());
+        let golden = case.get("logits").f32s();
+
+        let naive = Model::from_params(cfg.clone(), params.clone());
+        assert_close(&naive.forward(&x), &golden, &format!("{name}: naive logits"));
+        let fast = Model::from_params(cfg, params).with_engine(Engine::Gemm);
+        assert_close(&fast.forward(&x), &golden, &format!("{name}: gemm logits"));
+    }
+}

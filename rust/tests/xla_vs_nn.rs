@@ -5,161 +5,177 @@
 //! Requires `make artifacts`. Tests are skipped (with a loud message)
 //! when artifacts are missing so `cargo test` degrades gracefully on a
 //! fresh checkout.
+//!
+//! Requires the off-by-default `xla` cargo feature (plus a PJRT plugin
+//! at runtime). Without it the suite is not compiled; a placeholder test
+//! prints a loud skip message instead.
 
-use tinycl::nn::{Model, ModelConfig};
-use tinycl::runtime::{ArtifactSet, XlaRuntime};
-use tinycl::tensor::{Shape, Tensor};
-use tinycl::util::rng::Pcg32;
-
-fn tiny() -> ModelConfig {
-    ModelConfig {
-        in_channels: 3,
-        image_size: 8,
-        conv_channels: 4,
-        num_classes: 4,
-        grad_clip: f32::INFINITY,
-    }
-}
-
-fn rand_image(seed: u64, cfg: &ModelConfig) -> Tensor<f32> {
-    let mut rng = Pcg32::seeded(seed);
-    let shape = Shape::d3(cfg.in_channels, cfg.image_size, cfg.image_size);
-    let n = shape.numel();
-    Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
-}
-
-fn artifacts_or_skip(set: &ArtifactSet) -> bool {
-    if set.exist() {
-        true
-    } else {
-        eprintln!("SKIP: artifacts missing — run `make artifacts`");
-        false
-    }
-}
-
-fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
-    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
-    for (i, (x, y)) in a.iter().zip(b).enumerate() {
-        assert!(
-            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
-            "{what}[{i}]: rust {x} vs xla {y}"
-        );
-    }
-}
-
+#[cfg(not(feature = "xla"))]
 #[test]
-fn forward_logits_match_f32_reference() {
-    let set = ArtifactSet::tiny("artifacts");
-    if !artifacts_or_skip(&set) {
-        return;
-    }
-    let cfg = tiny();
-    let m = Model::new(cfg.clone(), 21);
-    let rt = XlaRuntime::cpu().unwrap();
-    let mut xm = rt.load_model(&set, cfg.clone()).unwrap();
-    xm.set_params(&m.params).unwrap();
-
-    for seed in 0..5 {
-        let x = rand_image(seed, &cfg);
-        let rust_logits = m.forward(&x);
-        let xla_logits = xm.infer(&x).unwrap();
-        assert_close(&rust_logits, &xla_logits, 1e-4, "logits");
-    }
+fn xla_parity_suite_skipped() {
+    eprintln!(
+        "SKIP: built without the `xla` feature — XLA vs f32 parity tests were not compiled; \
+         rebuild with `cargo test --features xla` (see rust/README.md)"
+    );
 }
 
-#[test]
-fn train_step_matches_f32_reference() {
-    let set = ArtifactSet::tiny("artifacts");
-    if !artifacts_or_skip(&set) {
-        return;
-    }
-    let cfg = tiny();
-    let mut m = Model::new(cfg.clone(), 23);
-    let rt = XlaRuntime::cpu().unwrap();
-    let mut xm = rt.load_model(&set, cfg.clone()).unwrap();
-    xm.set_params(&m.params).unwrap();
+#[cfg(feature = "xla")]
+mod with_xla {
+    use tinycl::nn::{Model, ModelConfig};
+    use tinycl::runtime::{ArtifactSet, XlaRuntime};
+    use tinycl::tensor::{Shape, Tensor};
+    use tinycl::util::rng::Pcg32;
 
-    for step in 0..4 {
-        let x = rand_image(100 + step, &cfg);
-        let label = (step % 4) as usize;
-        let rust_out = m.train_step(&x, label, 4, 0.1);
-        let (xla_loss, _) = xm.train_step(&x, label, 4, 0.1).unwrap();
-        assert!(
-            (rust_out.loss - xla_loss).abs() < 1e-4 * (1.0 + rust_out.loss),
-            "step {step}: rust loss {} vs xla {xla_loss}",
-            rust_out.loss
-        );
-        // Parameters stay synchronized across layers.
-        let xp = xm.read_params().unwrap();
-        assert_close(m.params.k1.data(), xp.k1.data(), 1e-4, "k1");
-        assert_close(m.params.k2.data(), xp.k2.data(), 1e-4, "k2");
-        assert_close(m.params.w.data(), xp.w.data(), 1e-4, "w");
-    }
-}
-
-#[test]
-fn masked_head_gets_no_gradient_through_xla() {
-    let set = ArtifactSet::tiny("artifacts");
-    if !artifacts_or_skip(&set) {
-        return;
-    }
-    let cfg = tiny();
-    let m = Model::new(cfg.clone(), 29);
-    let rt = XlaRuntime::cpu().unwrap();
-    let mut xm = rt.load_model(&set, cfg.clone()).unwrap();
-    xm.set_params(&m.params).unwrap();
-
-    let x = rand_image(500, &cfg);
-    xm.train_step(&x, 1, 2, 0.5).unwrap(); // only classes {0,1} active
-    let after = xm.read_params().unwrap();
-    // Columns 2..4 of W must be untouched.
-    let n = cfg.num_classes;
-    for (i, (before_v, after_v)) in m.params.w.data().iter().zip(after.w.data()).enumerate() {
-        if i % n >= 2 {
-            assert_eq!(before_v, after_v, "masked weight {i} changed");
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            in_channels: 3,
+            image_size: 8,
+            conv_channels: 4,
+            num_classes: 4,
+            grad_clip: f32::INFINITY,
         }
     }
-}
 
-#[test]
-fn paper_geometry_artifacts_load_and_run() {
-    let set = ArtifactSet::paper("artifacts");
-    if !artifacts_or_skip(&set) {
-        return;
+    fn rand_image(seed: u64, cfg: &ModelConfig) -> Tensor<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        let shape = Shape::d3(cfg.in_channels, cfg.image_size, cfg.image_size);
+        let n = shape.numel();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
     }
-    let cfg = ModelConfig::default();
-    let m = Model::new(cfg.clone(), 31);
-    let rt = XlaRuntime::cpu().unwrap();
-    let mut xm = rt.load_model(&set, cfg.clone()).unwrap();
-    xm.set_params(&m.params).unwrap();
 
-    let x = rand_image(600, &cfg);
-    let rust_logits = m.forward(&x);
-    let xla_logits = xm.infer(&x).unwrap();
-    assert_close(&rust_logits, &xla_logits, 1e-3, "paper logits");
-
-    let (loss, logits) = xm.train_step(&x, 0, 10, 0.05).unwrap();
-    assert!(loss.is_finite() && logits.len() == 10);
-}
-
-#[test]
-fn xla_training_is_deterministic() {
-    let set = ArtifactSet::tiny("artifacts");
-    if !artifacts_or_skip(&set) {
-        return;
+    fn artifacts_or_skip(set: &ArtifactSet) -> bool {
+        if set.exist() {
+            true
+        } else {
+            eprintln!("SKIP: artifacts missing — run `make artifacts`");
+            false
+        }
     }
-    let cfg = tiny();
-    let m = Model::new(cfg.clone(), 37);
-    let rt = XlaRuntime::cpu().unwrap();
-    let run = || {
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "{what}[{i}]: rust {x} vs xla {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_logits_match_f32_reference() {
+        let set = ArtifactSet::tiny("artifacts");
+        if !artifacts_or_skip(&set) {
+            return;
+        }
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 21);
+        let rt = XlaRuntime::cpu().unwrap();
         let mut xm = rt.load_model(&set, cfg.clone()).unwrap();
         xm.set_params(&m.params).unwrap();
-        let mut losses = Vec::new();
-        for step in 0..3 {
-            let x = rand_image(700 + step, &cfg);
-            losses.push(xm.train_step(&x, (step % 4) as usize, 4, 0.1).unwrap().0);
+
+        for seed in 0..5 {
+            let x = rand_image(seed, &cfg);
+            let rust_logits = m.forward(&x);
+            let xla_logits = xm.infer(&x).unwrap();
+            assert_close(&rust_logits, &xla_logits, 1e-4, "logits");
         }
-        losses
-    };
-    assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn train_step_matches_f32_reference() {
+        let set = ArtifactSet::tiny("artifacts");
+        if !artifacts_or_skip(&set) {
+            return;
+        }
+        let cfg = tiny();
+        let mut m = Model::new(cfg.clone(), 23);
+        let rt = XlaRuntime::cpu().unwrap();
+        let mut xm = rt.load_model(&set, cfg.clone()).unwrap();
+        xm.set_params(&m.params).unwrap();
+
+        for step in 0..4 {
+            let x = rand_image(100 + step, &cfg);
+            let label = (step % 4) as usize;
+            let rust_out = m.train_step(&x, label, 4, 0.1);
+            let (xla_loss, _) = xm.train_step(&x, label, 4, 0.1).unwrap();
+            assert!(
+                (rust_out.loss - xla_loss).abs() < 1e-4 * (1.0 + rust_out.loss),
+                "step {step}: rust loss {} vs xla {xla_loss}",
+                rust_out.loss
+            );
+            // Parameters stay synchronized across layers.
+            let xp = xm.read_params().unwrap();
+            assert_close(m.params.k1.data(), xp.k1.data(), 1e-4, "k1");
+            assert_close(m.params.k2.data(), xp.k2.data(), 1e-4, "k2");
+            assert_close(m.params.w.data(), xp.w.data(), 1e-4, "w");
+        }
+    }
+
+    #[test]
+    fn masked_head_gets_no_gradient_through_xla() {
+        let set = ArtifactSet::tiny("artifacts");
+        if !artifacts_or_skip(&set) {
+            return;
+        }
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 29);
+        let rt = XlaRuntime::cpu().unwrap();
+        let mut xm = rt.load_model(&set, cfg.clone()).unwrap();
+        xm.set_params(&m.params).unwrap();
+
+        let x = rand_image(500, &cfg);
+        xm.train_step(&x, 1, 2, 0.5).unwrap(); // only classes {0,1} active
+        let after = xm.read_params().unwrap();
+        // Columns 2..4 of W must be untouched.
+        let n = cfg.num_classes;
+        for (i, (before_v, after_v)) in m.params.w.data().iter().zip(after.w.data()).enumerate() {
+            if i % n >= 2 {
+                assert_eq!(before_v, after_v, "masked weight {i} changed");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_geometry_artifacts_load_and_run() {
+        let set = ArtifactSet::paper("artifacts");
+        if !artifacts_or_skip(&set) {
+            return;
+        }
+        let cfg = ModelConfig::default();
+        let m = Model::new(cfg.clone(), 31);
+        let rt = XlaRuntime::cpu().unwrap();
+        let mut xm = rt.load_model(&set, cfg.clone()).unwrap();
+        xm.set_params(&m.params).unwrap();
+
+        let x = rand_image(600, &cfg);
+        let rust_logits = m.forward(&x);
+        let xla_logits = xm.infer(&x).unwrap();
+        assert_close(&rust_logits, &xla_logits, 1e-3, "paper logits");
+
+        let (loss, logits) = xm.train_step(&x, 0, 10, 0.05).unwrap();
+        assert!(loss.is_finite() && logits.len() == 10);
+    }
+
+    #[test]
+    fn xla_training_is_deterministic() {
+        let set = ArtifactSet::tiny("artifacts");
+        if !artifacts_or_skip(&set) {
+            return;
+        }
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 37);
+        let rt = XlaRuntime::cpu().unwrap();
+        let run = || {
+            let mut xm = rt.load_model(&set, cfg.clone()).unwrap();
+            xm.set_params(&m.params).unwrap();
+            let mut losses = Vec::new();
+            for step in 0..3 {
+                let x = rand_image(700 + step, &cfg);
+                losses.push(xm.train_step(&x, (step % 4) as usize, 4, 0.1).unwrap().0);
+            }
+            losses
+        };
+        assert_eq!(run(), run());
+    }
 }
