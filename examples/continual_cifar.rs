@@ -68,6 +68,9 @@ fn main() -> anyhow::Result<()> {
         // (saturating arithmetic) but converges worse — EXPERIMENTS.md E5.
         lr: args.f32_or("lr", 0.125),
         seed,
+        // The device datapath is per-sample; batch 1 is the paper's
+        // setting (the sim backend would loop a larger batch anyway).
+        batch: 1,
     };
     let per_class = args.usize_or("per-class", 100);
     let memory = args.usize_or("memory", 1000);

@@ -154,6 +154,28 @@ impl ReplayMemory {
         out
     }
 
+    /// One shuffled pass over the memory pre-chunked into training
+    /// minibatches of `batch` samples (the last one may be short), in
+    /// the same order [`Self::epoch`] would yield for this seed.
+    /// Charges the same read traffic; each sample is cloned exactly
+    /// once (the chunks are split off the epoch's Vec, not re-cloned).
+    pub fn epoch_batches(&mut self, seed: u64, batch: usize) -> Vec<Vec<Sample>> {
+        let samples = self.epoch(seed);
+        let batch = batch.max(1);
+        let mut out: Vec<Vec<Sample>> = Vec::with_capacity(samples.len().div_ceil(batch));
+        for s in samples {
+            match out.last_mut() {
+                Some(last) if last.len() < batch => last.push(s),
+                _ => {
+                    let mut chunk = Vec::with_capacity(batch);
+                    chunk.push(s);
+                    out.push(chunk);
+                }
+            }
+        }
+        out
+    }
+
     /// Draw `k` random stored samples (ER's replay draw), charging reads.
     pub fn draw(&mut self, k: usize) -> Vec<Sample> {
         let k = k.min(self.slots.len());
@@ -256,6 +278,22 @@ mod tests {
         let mut tags: Vec<i32> = e.iter().map(|s| s.x.data()[0] as i32).collect();
         tags.sort_unstable();
         assert_eq!(tags, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn epoch_batches_partition_the_epoch() {
+        let mut m = ReplayMemory::new(SamplerKind::GreedyBalanced, 10, 6);
+        for i in 0..10 {
+            m.offer(&sample(i % 3, i as f32));
+        }
+        let batches = m.epoch_batches(4, 4);
+        assert_eq!(batches.len(), 3, "10 samples in batches of 4 → 4+4+2");
+        assert_eq!(batches[0].len(), 4);
+        assert_eq!(batches[2].len(), 2);
+        // Same shuffle as a plain epoch at the same seed.
+        let flat: Vec<i32> = batches.iter().flatten().map(|s| s.x.data()[0] as i32).collect();
+        let plain: Vec<i32> = m.epoch(4).iter().map(|s| s.x.data()[0] as i32).collect();
+        assert_eq!(flat, plain);
     }
 
     #[test]

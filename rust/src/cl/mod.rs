@@ -32,6 +32,26 @@ pub use stream::{Task, TaskStream};
 
 use crate::tensor::Tensor;
 
+/// Sequential per-sample minibatch fallback: one [`Learner::train_step`]
+/// per sample, in order. Shared by the trait's default `train_batch` and
+/// by backend overrides for engines without a batched datapath, so the
+/// two can never drift. Returns the mean loss.
+pub fn train_batch_sequential<L: Learner + ?Sized>(
+    learner: &mut L,
+    xs: &[&Tensor<f32>],
+    labels: &[usize],
+    active_classes: usize,
+    lr: f32,
+) -> f32 {
+    assert_eq!(xs.len(), labels.len(), "batch inputs vs labels");
+    assert!(!xs.is_empty(), "empty batch");
+    let mut sum = 0.0;
+    for (x, &label) in xs.iter().zip(labels) {
+        sum += learner.train_step(x, label, active_classes, lr);
+    }
+    sum / xs.len() as f32
+}
+
 /// A trainable classifier backend. `active_classes` masks the head to the
 /// classes seen so far — the paper's dense layer "output features' value
 /// … is not static and changes during the operation" (§III-F-4).
@@ -40,6 +60,22 @@ pub trait Learner {
     /// Returns the loss.
     fn train_step(&mut self, x: &Tensor<f32>, label: usize, active_classes: usize, lr: f32)
         -> f32;
+
+    /// One SGD step on a minibatch. Backends with a true batched
+    /// datapath (the float `nn::Model`) override this with
+    /// mean-gradient semantics; the default sequentially applies
+    /// [`Learner::train_step`] per sample, so quantized/device backends
+    /// keep the paper's per-sample behavior at any `--batch`. Returns
+    /// the mean loss.
+    fn train_batch(
+        &mut self,
+        xs: &[&Tensor<f32>],
+        labels: &[usize],
+        active_classes: usize,
+        lr: f32,
+    ) -> f32 {
+        train_batch_sequential(self, xs, labels, active_classes, lr)
+    }
 
     /// Predicted class among the first `active_classes`.
     fn predict(&mut self, x: &Tensor<f32>, active_classes: usize) -> usize;
@@ -60,12 +96,21 @@ impl Learner for crate::nn::Model {
         crate::nn::Model::train_step(self, x, label, active_classes, lr).loss
     }
 
+    fn train_batch(
+        &mut self,
+        xs: &[&Tensor<f32>],
+        labels: &[usize],
+        active_classes: usize,
+        lr: f32,
+    ) -> f32 {
+        crate::nn::Model::train_batch(self, xs, labels, active_classes, lr).loss
+    }
+
     fn predict(&mut self, x: &Tensor<f32>, active_classes: usize) -> usize {
         crate::nn::Model::predict(self, x, active_classes)
     }
 
     fn reinit(&mut self, seed: u64) {
-        let engine = self.engine;
-        *self = crate::nn::Model::new(self.config.clone(), seed).with_engine(engine);
+        crate::nn::Model::reinit(self, seed);
     }
 }

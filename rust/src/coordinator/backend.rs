@@ -170,6 +170,14 @@ impl Backend {
             dev.reset_counters();
         }
     }
+
+    /// Set the GEMM worker-thread budget (float backends only; the
+    /// quantized/device backends model serial hardware and ignore it).
+    pub fn set_threads(&mut self, threads: usize) {
+        if let Backend::F32(m) = self {
+            m.threads = threads.max(1);
+        }
+    }
 }
 
 impl Learner for Backend {
@@ -200,6 +208,21 @@ impl Learner for Backend {
         }
     }
 
+    fn train_batch(
+        &mut self,
+        xs: &[&Tensor<f32>],
+        labels: &[usize],
+        active_classes: usize,
+        lr: f32,
+    ) -> f32 {
+        if let Backend::F32(m) = self {
+            // True minibatch: one set of batched GEMMs, mean gradient.
+            return m.train_batch(xs, labels, active_classes, lr).loss;
+        }
+        // Quantized/device/XLA backends: the paper's per-sample steps.
+        crate::cl::train_batch_sequential(self, xs, labels, active_classes, lr)
+    }
+
     fn predict(&mut self, x: &Tensor<f32>, active_classes: usize) -> usize {
         match self {
             Backend::F32(m) => m.predict(x, active_classes),
@@ -219,10 +242,7 @@ impl Learner for Backend {
 
     fn reinit(&mut self, seed: u64) {
         match self {
-            Backend::F32(m) => {
-                let engine = m.engine;
-                *m = Model::new(m.config.clone(), seed).with_engine(engine);
-            }
+            Backend::F32(m) => m.reinit(seed),
             Backend::Qnn { model, config } => {
                 *model = QModel::from_model(&Model::new(config.clone(), seed));
             }
@@ -324,6 +344,47 @@ mod tests {
         let mut g = Backend::create(BackendKind::F32Fast, &cfg, &sim_cfg, "artifacts", 7).unwrap();
         g.reinit(8);
         assert_eq!(g.kind(), BackendKind::F32Fast, "reinit dropped the engine");
+    }
+
+    #[test]
+    fn f32_fast_train_batch_tracks_f32() {
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let mut f = Backend::create(BackendKind::F32, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        let mut g = Backend::create(BackendKind::F32Fast, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        g.set_threads(2);
+        assert_eq!(g.kind(), BackendKind::F32Fast, "set_threads changed the kind");
+        let xs: Vec<Tensor<f32>> = (0..4u64).map(|i| rand_image(700 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let labels = [0usize, 1, 2, 3];
+        for step in 0..3 {
+            let lf = f.train_batch(&refs, &labels, 4, 0.05);
+            let lg = g.train_batch(&refs, &labels, 4, 0.05);
+            assert!(
+                (lf - lg).abs() <= 1e-4 * (1.0 + lf.abs()),
+                "step {step}: f32 {lf} vs f32-fast {lg}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_float_backends_train_batch_sequentially() {
+        // The Learner default: backends without a batched datapath run
+        // the paper's per-sample steps in order — bit-identical to a
+        // manual loop of train_step.
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let mut a = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        let mut b = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        let xs: Vec<Tensor<f32>> = (0..3u64).map(|i| rand_image(800 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let labels = [0usize, 1, 2];
+        let mean = a.train_batch(&refs, &labels, 4, 0.125);
+        let mut sum = 0.0;
+        for (x, &l) in refs.iter().zip(&labels) {
+            sum += b.train_step(x, l, 4, 0.125);
+        }
+        assert_eq!(mean, sum / 3.0);
     }
 
     #[cfg(not(feature = "xla"))]

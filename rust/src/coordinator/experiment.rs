@@ -21,6 +21,13 @@ pub struct ExperimentConfig {
     pub num_tasks: usize,
     pub epochs: usize,
     pub lr: f32,
+    /// Training minibatch size (paper: 1). Float backends execute a
+    /// minibatch as one set of batched GEMMs with mean-gradient SGD;
+    /// other backends fall back to per-sample steps.
+    pub batch: usize,
+    /// GEMM worker-thread budget for the float backends (1 = serial;
+    /// thread count never changes results — see `nn::gemm`).
+    pub threads: usize,
     /// Replay-memory budget in samples (paper: 1000).
     pub memory_budget: usize,
     pub train_per_class: usize,
@@ -40,6 +47,8 @@ impl Default for ExperimentConfig {
             num_tasks: 5,
             epochs: 10,
             lr: 0.05,
+            batch: 1,
+            threads: 1,
             memory_budget: 1000,
             train_per_class: 100,
             test_per_class: 20,
@@ -86,6 +95,11 @@ impl ExperimentConfig {
         let sim = SimConfig::paper()
             .with_lanes(args.usize_or("lanes", 8))
             .with_taps(args.usize_or("taps", 9));
+        // --threads 0 = auto-detect the host's parallelism.
+        let threads = match args.usize_or("threads", d.threads) {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        };
         Ok(ExperimentConfig {
             model,
             sim,
@@ -94,6 +108,8 @@ impl ExperimentConfig {
             num_tasks: args.usize_or("tasks", d.num_tasks),
             epochs: args.usize_or("epochs", d.epochs),
             lr: args.f32_or("lr", d.lr),
+            batch: args.usize_or("batch", d.batch).max(1),
+            threads,
             memory_budget: args.usize_or("memory", d.memory_budget),
             train_per_class: args.usize_or("per-class", d.train_per_class),
             test_per_class: args.usize_or("test-per-class", d.test_per_class),
@@ -147,12 +163,14 @@ impl fmt::Display for ExperimentResult {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
             f,
-            "backend={} policy={} tasks={} epochs={} lr={} memory={}",
+            "backend={} policy={} tasks={} epochs={} lr={} batch={} threads={} memory={}",
             self.config.backend.name(),
             self.config.policy.name(),
             self.config.num_tasks,
             self.config.epochs,
             self.config.lr,
+            self.config.batch,
+            self.config.threads,
             self.config.memory_budget
         )?;
         write!(f, "{}", self.report)?;
@@ -174,15 +192,18 @@ impl Experiment {
         Experiment { config }
     }
 
-    /// Build the backend (loads/compiles artifacts for `xla`).
+    /// Build the backend (loads/compiles artifacts for `xla`),
+    /// configured with the experiment's thread budget.
     pub fn backend(&self) -> Result<Backend> {
-        Backend::create(
+        let mut backend = Backend::create(
             self.config.backend,
             &self.config.model,
             &self.config.sim,
             &self.config.artifacts_dir,
             self.config.seed,
-        )
+        )?;
+        backend.set_threads(self.config.threads);
+        Ok(backend)
     }
 
     /// Run the full task stream; returns CL metrics + device accounting.
@@ -201,7 +222,8 @@ impl Experiment {
 
         let mut backend = self.backend()?;
         let mut policy = cfg.policy.build(cfg.memory_budget, cfg.seed);
-        let run_cfg = RunConfig { epochs: cfg.epochs, lr: cfg.lr, seed: cfg.seed };
+        let run_cfg =
+            RunConfig { epochs: cfg.epochs, lr: cfg.lr, seed: cfg.seed, batch: cfg.batch };
 
         let t0 = Instant::now();
         let report =
@@ -284,6 +306,32 @@ mod tests {
         assert_eq!(c.policy, PolicyKind::Er);
         assert_eq!(c.num_tasks, 2);
         assert_eq!(c.lr, 0.5);
+        assert_eq!(c.batch, 1, "batch defaults to the paper's 1");
+        assert_eq!(c.threads, 1, "threads default to serial");
+    }
+
+    #[test]
+    fn from_args_parses_batch_and_threads() {
+        let args = Args::parse(["--batch", "8", "--threads", "4"].iter().map(|s| s.to_string()));
+        let c = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(c.batch, 8);
+        assert_eq!(c.threads, 4);
+        // --threads 0 auto-detects (≥ 1 on any host); --batch clamps to ≥ 1.
+        let args = Args::parse(["--batch", "0", "--threads", "0"].iter().map(|s| s.to_string()));
+        let c = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(c.batch, 1);
+        assert!(c.threads >= 1);
+    }
+
+    #[test]
+    fn batched_threaded_experiment_matches_metrics_shape() {
+        // The full CL loop runs on the batched+threaded fast path.
+        let mut cfg = quick_config(BackendKind::F32Fast);
+        cfg.batch = 4;
+        cfg.threads = 2;
+        let r = Experiment::new(cfg).run().unwrap();
+        assert_eq!(r.report.matrix.rows_filled(), 2);
+        assert!(r.report.train_steps > 0);
     }
 
     #[test]

@@ -55,6 +55,10 @@ SUBCOMMANDS
              --backend f32|f32-fast|qnn|sim|xla   --policy gdumb|er|naive|joint
              (the `xla` backend needs a build with `--features xla`)
              --tasks N --epochs N --lr F --memory N --per-class N
+             --batch N (minibatch size; float backends run one batched
+             GEMM set per minibatch, others loop per sample)
+             --threads N (GEMM worker threads, 0 = auto; results are
+             bit-identical at any thread count)
              --image-size N --conv-channels N --classes N --seed N
   infer      one inference on a trained-from-scratch model
              --backend ... --image-size ... (same model flags)
@@ -64,6 +68,7 @@ SUBCOMMANDS
              Table I comparison  [--lanes N --taps N]
   speedup    1 training epoch: TinyCL cycles vs XLA baseline wall time
              --steps N (default: one GDumb epoch of 1000)
+             --batch N --threads N (batched+threaded f32-fast rung)
   sweep      design-space sweep over --lanes-list and --taps-list
   help       this text
 ";
@@ -195,6 +200,27 @@ fn cmd_speedup(args: &Args) -> Result<()> {
     // Host software baselines.
     let naive_secs = run_host(BackendKind::F32)?;
     let fast_secs = run_host(BackendKind::F32Fast)?;
+
+    // Batched + threaded f32-fast rung (PR 2's training engine). The
+    // thread budget comes from the shared config parse (--threads 0 =
+    // auto); only the batch default differs from `train` (8 makes the
+    // rung meaningful without flags).
+    let batch = args.usize_or("batch", 8).max(1);
+    let threads = config.threads;
+    let batched_secs = {
+        let kind = BackendKind::F32Fast;
+        let mut backend =
+            Backend::create(kind, &config.model, &config.sim, &config.artifacts_dir, config.seed)?;
+        backend.set_threads(threads);
+        let t0 = std::time::Instant::now();
+        for chunk in samples.chunks(batch) {
+            let xs: Vec<&tinycl::tensor::Tensor<f32>> = chunk.iter().map(|s| &s.x).collect();
+            let labels: Vec<usize> = chunk.iter().map(|s| s.label).collect();
+            backend.train_batch(&xs, &labels, config.model.num_classes, config.lr);
+        }
+        t0.elapsed().as_secs_f64()
+    };
+
     #[cfg(feature = "xla")]
     let xla_secs = Some(run_host(BackendKind::Xla)?);
     #[cfg(not(feature = "xla"))]
@@ -220,12 +246,17 @@ fn cmd_speedup(args: &Args) -> Result<()> {
     println!("f32 naive baseline (this host): {naive_secs:.3} s");
     println!("f32-fast GEMM baseline (this host): {fast_secs:.3} s  ({:.1}× over naive)",
         naive_secs / fast_secs);
+    println!(
+        "f32-fast batched (batch {batch}, {threads} threads): {batched_secs:.3} s  \
+         ({:.1}× over batch-1 f32-fast)",
+        fast_secs / batched_secs
+    );
     match xla_secs {
         Some(x) => println!("XLA CPU baseline (this host): {x:.3} s"),
         None => println!("XLA CPU baseline: skipped (built without the `xla` feature)"),
     }
     println!("speedup vs this host's fastest software baseline: {:.1}×",
-        xla_secs.unwrap_or(f64::INFINITY).min(fast_secs) / sim_secs);
+        xla_secs.unwrap_or(f64::INFINITY).min(fast_secs).min(batched_secs) / sim_secs);
     println!("paper: TinyCL {paper_tinycl} s vs P100 {paper_gpu} s ⇒ 58× (their testbed)");
     Ok(())
 }

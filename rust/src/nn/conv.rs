@@ -44,6 +44,19 @@ pub fn forward(x: &Tensor<f32>, kernel: &Tensor<f32>, stride: usize, pad: usize)
     out
 }
 
+/// Batched forward reference: the per-sample kernel looped over `B`
+/// same-shape CHW inputs — the parity oracle for `nn::gemm`'s packed
+/// single-GEMM batch path.
+pub fn forward_batch(
+    xs: &[&Tensor<f32>],
+    kernel: &Tensor<f32>,
+    stride: usize,
+    pad: usize,
+) -> Vec<Tensor<f32>> {
+    assert!(!xs.is_empty(), "empty batch");
+    xs.iter().map(|x| forward(x, kernel, stride, pad)).collect()
+}
+
 /// Gradient w.r.t. the input (paper Eq. 2): propagate `dy` back through
 /// the kernel. `dy` is CHW over output geometry; result has `x`'s shape.
 pub fn input_grad(

@@ -23,6 +23,15 @@ pub fn forward(x: &[f32], w: &Tensor<f32>) -> Vec<f32> {
     y
 }
 
+/// Batched forward reference: one per-sample matvec per row of the
+/// sample-major input `x (B × Nin)` — the parity oracle for
+/// `nn::gemm::dense_forward_batch`'s single `B×Nin·Nin×Nout` GEMM.
+pub fn forward_batch(x: &[f32], w: &Tensor<f32>, batch: usize) -> Vec<f32> {
+    let n_in = w.shape().dims()[0];
+    assert_eq!(x.len(), batch * n_in, "x must be B×Nin");
+    x.chunks_exact(n_in).flat_map(|row| forward(row, w)).collect()
+}
+
 /// `dX_i = Σ_n dY_n · W_{i,n}` — Eq. (5).
 pub fn input_grad(dy: &[f32], w: &Tensor<f32>) -> Vec<f32> {
     let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");

@@ -17,30 +17,140 @@
 //! dot), which the compiler vectorizes; the GEMMs block the `N`
 //! dimension into L1-sized panels.
 //!
+//! **Batching (PR 2).** The `*_batch` functions generalize the lowering
+//! to NCHW minibatches: all `B` images are packed into one
+//! `(Cin·Kh·Kw) × (B·Oh·Ow)` column matrix, so each conv pass is a
+//! single large GEMM amortized across the batch, and the dense layer is
+//! a true `B×in · in×out` GEMM. Between layers, batched activations
+//! live in a *channel-major packed* layout — a row-major `(C, B·H·W)`
+//! matrix whose row `c` holds image 0's plane, then image 1's, … — which
+//! is exactly the GEMM output layout, so no transposes happen between
+//! convolutions. The dense layer needs sample-major rows; the
+//! [`packed_to_rows`]/[`rows_to_packed`] pair converts (B·C memcpys).
+//!
+//! **Threading (PR 2).** `gemm_nn_mt`/`gemm_tn_mt`/`gemm_nt_mt` shard
+//! the output-column loop across `threads` scoped workers
+//! (`std::thread::scope` — no external deps, nothing outlives the
+//! call). Every worker owns a disjoint contiguous column range of `C`,
+//! so there are no reduction races and no atomics, and the per-element
+//! summation order is independent of the sharding: **threads=N is
+//! bit-identical to threads=1** (asserted by unit tests and
+//! `tests/batched_parity.rs`). Problems below [`MT_MIN_MACS`]
+//! multiply-accumulates stay single-threaded so tiny layers don't pay
+//! spawn overhead.
+//!
 //! Numerics: same multiplies as the naive path but different summation
 //! order, so results agree to float round-off (≤ 1e-4 relative — pinned
 //! by `tests/gemm_vs_naive.rs` and the golden vectors), not bitwise.
 
 use super::conv::out_size;
 use crate::tensor::{Shape, Tensor};
+use std::thread;
 
 /// Column-panel width for the blocked GEMMs: 256 f32 = 1 KiB per row
 /// keeps a full B-panel plus the C row in L1 at the paper's geometry.
 const PANEL: usize = 256;
 
-/// `C (m×n) += A (m×k) · B (k×n)`, all row-major.
+/// Multiply-accumulate count below which the `*_mt` GEMMs stay
+/// single-threaded: spawning scoped workers costs tens of microseconds,
+/// which only amortizes once the problem is a few hundred kFLOPs.
+pub const MT_MIN_MACS: usize = 1 << 16;
+
+/// Raw output pointer smuggled into scoped workers. Each worker derives
+/// `&mut` subslices only for the (row, column-range) chunks it owns, so
+/// no two threads ever alias the same element.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// How many workers a problem of `macs` multiply-accumulates with
+/// `cols` shardable output columns should use (1 = stay on the caller's
+/// thread). Deterministic in its inputs — thread count never influences
+/// *values*, only wall-clock.
+fn plan_workers(threads: usize, macs: usize, cols: usize) -> usize {
+    if threads <= 1 || macs < MT_MIN_MACS {
+        1
+    } else {
+        threads.min(cols).max(1)
+    }
+}
+
+/// Split `0..n` into `workers` near-equal contiguous ranges.
+fn col_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let base = n / workers;
+    let extra = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for i in 0..workers {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// `C (m×n) += A (m×k) · B (k×n)`, all row-major, single-threaded.
 pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    gemm_nn_mt(m, k, n, a, b, c, 1);
+}
+
+/// [`gemm_nn`] with the output columns sharded across up to `threads`
+/// scoped workers. Bit-identical to the single-threaded path.
+pub fn gemm_nn_mt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    threads: usize,
+) {
     assert_eq!(a.len(), m * k, "A must be m×k");
     assert_eq!(b.len(), k * n, "B must be k×n");
     assert_eq!(c.len(), m * n, "C must be m×n");
-    for j0 in (0..n).step_by(PANEL) {
-        let j1 = (j0 + PANEL).min(n);
-        for (a_row, c_row) in a.chunks_exact(k).zip(c.chunks_exact_mut(n)) {
-            for (&av, b_row) in a_row.iter().zip(b.chunks_exact(n)) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    let workers = plan_workers(threads, m * k * n, n);
+    let ptr = SendPtr(c.as_mut_ptr());
+    if workers <= 1 {
+        gemm_nn_range(m, k, n, a, b, ptr, 0, n);
+        return;
+    }
+    thread::scope(|s| {
+        for (lo, hi) in col_ranges(n, workers) {
+            s.spawn(move || gemm_nn_range(m, k, n, a, b, ptr, lo, hi));
+        }
+    });
+}
+
+/// The panel-blocked NN kernel over output columns `lo..hi`. The k-loop
+/// order per output element never depends on `(lo, hi)`, so any column
+/// sharding produces bit-identical sums.
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_range(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: SendPtr,
+    lo: usize,
+    hi: usize,
+) {
+    for j0 in (lo..hi).step_by(PANEL) {
+        let j1 = (j0 + PANEL).min(hi);
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            // Safety: this worker is the only writer of columns lo..hi.
+            let c_row = unsafe { std::slice::from_raw_parts_mut(c.0.add(i * n + j0), j1 - j0) };
+            for (kk, &av) in a_row.iter().enumerate() {
                 if av == 0.0 {
                     continue;
                 }
-                for (cv, &bv) in c_row[j0..j1].iter_mut().zip(&b_row[j0..j1]) {
+                let b_row = &b[kk * n + j0..kk * n + j1];
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
                     *cv += av * bv;
                 }
             }
@@ -48,33 +158,116 @@ pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
     }
 }
 
-/// `C (k×n) += Aᵀ · B` where `A` is `m×k` and `B` is `m×n`, row-major.
-/// (Transposition is implicit: A is read row by row, scattering into C
-/// rows, so every inner loop still runs over contiguous memory.)
+/// `C (k×n) += Aᵀ · B` where `A` is `m×k` and `B` is `m×n`, row-major,
+/// single-threaded. (Transposition is implicit: A is read row by row,
+/// scattering into C rows, so every inner loop still runs over
+/// contiguous memory.)
 pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    gemm_tn_mt(m, k, n, a, b, c, 1);
+}
+
+/// [`gemm_tn`] with the output columns sharded across up to `threads`
+/// scoped workers. Bit-identical to the single-threaded path.
+pub fn gemm_tn_mt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    threads: usize,
+) {
     assert_eq!(a.len(), m * k, "A must be m×k");
     assert_eq!(b.len(), m * n, "B must be m×n");
     assert_eq!(c.len(), k * n, "C must be k×n");
+    if k == 0 || n == 0 {
+        return;
+    }
+    let workers = plan_workers(threads, m * k * n, n);
+    let ptr = SendPtr(c.as_mut_ptr());
+    if workers <= 1 {
+        gemm_tn_range(k, n, a, b, ptr, 0, n);
+        return;
+    }
+    thread::scope(|s| {
+        for (lo, hi) in col_ranges(n, workers) {
+            s.spawn(move || gemm_tn_range(k, n, a, b, ptr, lo, hi));
+        }
+    });
+}
+
+/// The TN kernel over output columns `lo..hi`: the row-loop (reduction)
+/// order per output element never depends on `(lo, hi)`.
+fn gemm_tn_range(k: usize, n: usize, a: &[f32], b: &[f32], c: SendPtr, lo: usize, hi: usize) {
     for (a_row, b_row) in a.chunks_exact(k).zip(b.chunks_exact(n)) {
-        for (&av, c_row) in a_row.iter().zip(c.chunks_exact_mut(n)) {
+        for (kk, &av) in a_row.iter().enumerate() {
             if av == 0.0 {
                 continue;
             }
-            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+            // Safety: this worker is the only writer of columns lo..hi.
+            let c_row = unsafe { std::slice::from_raw_parts_mut(c.0.add(kk * n + lo), hi - lo) };
+            for (cv, &bv) in c_row.iter_mut().zip(&b_row[lo..hi]) {
                 *cv += av * bv;
             }
         }
     }
 }
 
-/// `C (m×n) += A · Bᵀ` where `A` is `m×kd` and `B` is `n×kd`, row-major:
-/// every C element is a dot product of two contiguous rows.
+/// `C (m×n) += A · Bᵀ` where `A` is `m×kd` and `B` is `n×kd`, row-major,
+/// single-threaded: every C element is a dot product of two contiguous
+/// rows.
 pub fn gemm_nt(m: usize, n: usize, kd: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    gemm_nt_mt(m, n, kd, a, b, c, 1);
+}
+
+/// [`gemm_nt`] with the output columns sharded across up to `threads`
+/// scoped workers. Bit-identical to the single-threaded path.
+pub fn gemm_nt_mt(
+    m: usize,
+    n: usize,
+    kd: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    threads: usize,
+) {
     assert_eq!(a.len(), m * kd, "A must be m×kd");
     assert_eq!(b.len(), n * kd, "B must be n×kd");
     assert_eq!(c.len(), m * n, "C must be m×n");
-    for (a_row, c_row) in a.chunks_exact(kd).zip(c.chunks_exact_mut(n)) {
-        for (cv, b_row) in c_row.iter_mut().zip(b.chunks_exact(kd)) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    let workers = plan_workers(threads, m * kd.max(1) * n, n);
+    let ptr = SendPtr(c.as_mut_ptr());
+    if workers <= 1 {
+        gemm_nt_range(m, n, kd, a, b, ptr, 0, n);
+        return;
+    }
+    thread::scope(|s| {
+        for (lo, hi) in col_ranges(n, workers) {
+            s.spawn(move || gemm_nt_range(m, n, kd, a, b, ptr, lo, hi));
+        }
+    });
+}
+
+/// The NT kernel over output columns `lo..hi`: each element is one
+/// [`dot`], whose accumulation order never depends on `(lo, hi)`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_nt_range(
+    m: usize,
+    n: usize,
+    kd: usize,
+    a: &[f32],
+    b: &[f32],
+    c: SendPtr,
+    lo: usize,
+    hi: usize,
+) {
+    for i in 0..m {
+        let a_row = &a[i * kd..(i + 1) * kd];
+        // Safety: this worker is the only writer of columns lo..hi.
+        let c_row = unsafe { std::slice::from_raw_parts_mut(c.0.add(i * n + lo), hi - lo) };
+        for (cv, b_row) in c_row.iter_mut().zip(b[lo * kd..hi * kd].chunks_exact(kd)) {
             *cv += dot(a_row, b_row);
         }
     }
@@ -112,43 +305,92 @@ pub fn im2col(
     pad: usize,
 ) -> (Vec<f32>, usize, usize) {
     let [cin, h, w]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
+    im2col_batch(x.data(), 1, cin, h, w, kh, kw, stride, pad, 1)
+}
+
+/// Batched [`im2col`]: `x` is a channel-major packed batch — a row-major
+/// `(Cin, B·H·W)` matrix whose row `c` is image 0's plane, then image
+/// 1's, … (for `B = 1` this is plain CHW). Packs all images into one
+/// `(Cin·Kh·Kw) × (B·Oh·Ow)` column matrix with image-major columns
+/// (image `b` owns columns `b·Oh·Ow ..`). Images are sharded across up
+/// to `threads` scoped workers; each image's columns are disjoint, so
+/// the result is bit-identical at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_batch(
+    x: &[f32],
+    batch: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    threads: usize,
+) -> (Vec<f32>, usize, usize) {
+    assert!(batch > 0, "empty batch");
+    assert_eq!(x.len(), cin * batch * h * w, "packed input size");
     let oh = out_size(h, kh, stride, pad);
     let ow = out_size(w, kw, stride, pad);
     let n = oh * ow;
-    let mut cols = vec![0.0f32; cin * kh * kw * n];
-    let xd = x.data();
-    let mut row = 0;
-    for ic in 0..cin {
-        let plane = &xd[ic * h * w..(ic + 1) * h * w];
-        for ky in 0..kh {
-            for kx in 0..kw {
-                let dest = &mut cols[row * n..(row + 1) * n];
-                for oy in 0..oh {
-                    let iy = (oy * stride + ky) as isize - pad as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    let src = &plane[iy as usize * w..iy as usize * w + w];
-                    let drow = &mut dest[oy * ow..(oy + 1) * ow];
-                    for ox in 0..ow {
-                        let ix = (ox * stride + kx) as isize - pad as isize;
-                        if ix >= 0 && ix < w as isize {
-                            drow[ox] = src[ix as usize];
+    let bn = batch * n;
+    let mut cols = vec![0.0f32; cin * kh * kw * bn];
+    let workers = plan_workers(threads, cols.len(), batch);
+    let ptr = SendPtr(cols.as_mut_ptr());
+    let pack_images = |b0: usize, b1: usize| {
+        for bi in b0..b1 {
+            let mut row = 0;
+            for ic in 0..cin {
+                let plane = &x[(ic * batch + bi) * h * w..(ic * batch + bi + 1) * h * w];
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        // Safety: image bi's columns are written only by
+                        // the worker that owns bi.
+                        let dest = unsafe {
+                            std::slice::from_raw_parts_mut(ptr.0.add(row * bn + bi * n), n)
+                        };
+                        for oy in 0..oh {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            let src = &plane[iy as usize * w..iy as usize * w + w];
+                            let drow = &mut dest[oy * ow..(oy + 1) * ow];
+                            for ox in 0..ow {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if ix >= 0 && ix < w as isize {
+                                    drow[ox] = src[ix as usize];
+                                }
+                            }
                         }
+                        row += 1;
                     }
                 }
-                row += 1;
             }
         }
+    };
+    if workers <= 1 {
+        pack_images(0, batch);
+    } else {
+        let worker = &pack_images;
+        thread::scope(|s| {
+            for (b0, b1) in col_ranges(batch, workers) {
+                s.spawn(move || worker(b0, b1));
+            }
+        });
     }
     (cols, oh, ow)
 }
 
-/// Scatter-add a `(Cin·Kh·Kw) × (Oh·Ow)` column-gradient matrix back
-/// into a CHW input gradient (the adjoint of [`im2col`]).
+/// Scatter-add a `(Cin·Kh·Kw) × (B·Oh·Ow)` column-gradient matrix back
+/// into a channel-major packed `(Cin, B·H·W)` input gradient (the
+/// adjoint of [`im2col_batch`]). Images are sharded across workers; each
+/// image's accumulation runs on exactly one worker in a fixed order, so
+/// the result is bit-identical at any thread count.
 #[allow(clippy::too_many_arguments)]
-fn col2im(
+fn col2im_batch(
     dcols: &[f32],
+    batch: usize,
     cin: usize,
     h: usize,
     w: usize,
@@ -158,32 +400,55 @@ fn col2im(
     pad: usize,
     oh: usize,
     ow: usize,
+    threads: usize,
 ) -> Vec<f32> {
     let n = oh * ow;
-    let mut dx = vec![0.0f32; cin * h * w];
-    let mut row = 0;
-    for ic in 0..cin {
-        for ky in 0..kh {
-            for kx in 0..kw {
-                let src = &dcols[row * n..(row + 1) * n];
-                let plane = &mut dx[ic * h * w..(ic + 1) * h * w];
-                for oy in 0..oh {
-                    let iy = (oy * stride + ky) as isize - pad as isize;
-                    if iy < 0 || iy >= h as isize {
-                        continue;
-                    }
-                    let drow = &mut plane[iy as usize * w..iy as usize * w + w];
-                    let srow = &src[oy * ow..(oy + 1) * ow];
-                    for ox in 0..ow {
-                        let ix = (ox * stride + kx) as isize - pad as isize;
-                        if ix >= 0 && ix < w as isize {
-                            drow[ix as usize] += srow[ox];
+    let bn = batch * n;
+    assert_eq!(dcols.len(), cin * kh * kw * bn, "column-gradient size");
+    let mut dx = vec![0.0f32; cin * batch * h * w];
+    let workers = plan_workers(threads, dcols.len(), batch);
+    let ptr = SendPtr(dx.as_mut_ptr());
+    let scatter_images = |b0: usize, b1: usize| {
+        for bi in b0..b1 {
+            let mut row = 0;
+            for ic in 0..cin {
+                // Safety: image bi's plane is written only by the worker
+                // that owns bi.
+                let plane = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add((ic * batch + bi) * h * w), h * w)
+                };
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let src = &dcols[row * bn + bi * n..row * bn + bi * n + n];
+                        for oy in 0..oh {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            let drow = &mut plane[iy as usize * w..iy as usize * w + w];
+                            let srow = &src[oy * ow..(oy + 1) * ow];
+                            for ox in 0..ow {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if ix >= 0 && ix < w as isize {
+                                    drow[ix as usize] += srow[ox];
+                                }
+                            }
                         }
+                        row += 1;
                     }
                 }
-                row += 1;
             }
         }
+    };
+    if workers <= 1 {
+        scatter_images(0, batch);
+    } else {
+        let worker = &scatter_images;
+        thread::scope(|s| {
+            for (b0, b1) in col_ranges(batch, workers) {
+                s.spawn(move || worker(b0, b1));
+            }
+        });
     }
     dx
 }
@@ -196,10 +461,23 @@ pub fn forward(x: &Tensor<f32>, kernel: &Tensor<f32>, stride: usize, pad: usize)
     let (cout, kcin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
     assert_eq!(cin, kcin, "channel mismatch: x {cin} vs kernel {kcin}");
     let (cols, oh, ow) = im2col(x, kh, kw, stride, pad);
-    let n = oh * ow;
-    let mut out = vec![0.0f32; cout * n];
-    gemm_nn(cout, cin * kh * kw, n, kernel.data(), &cols, &mut out);
+    let out = conv_forward_batch(&cols, kernel, oh * ow, 1);
     Tensor::from_vec(Shape::d3(cout, oh, ow), out)
+}
+
+/// Batched forward conv over an already-packed column matrix: one
+/// `Cout × (B·Oh·Ow)` GEMM. Returns the channel-major packed output.
+pub fn conv_forward_batch(
+    cols: &[f32],
+    kernel: &Tensor<f32>,
+    bn: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let kd = kernel.shape().dims();
+    let (cout, kdim) = (kd[0], kd[1] * kd[2] * kd[3]);
+    let mut out = vec![0.0f32; cout * bn];
+    gemm_nn_mt(cout, kdim, bn, kernel.data(), cols, &mut out, threads);
+    out
 }
 
 /// Gradient w.r.t. the input (paper Eq. 2) via GEMM + col2im. Drop-in
@@ -220,12 +498,34 @@ pub fn input_grad(
     let (oh, ow) = (dyd[1], dyd[2]);
     debug_assert_eq!(oh, out_size(h, kh, stride, pad));
     debug_assert_eq!(ow, out_size(w, kw, stride, pad));
-    let n = oh * ow;
-    let kdim = cin * kh * kw;
-    let mut dcols = vec![0.0f32; kdim * n];
-    gemm_tn(cout, kdim, n, kernel.data(), dy.data(), &mut dcols);
-    let dx = col2im(&dcols, cin, h, w, kh, kw, stride, pad, oh, ow);
+    let dx = conv_input_grad_batch(dy.data(), kernel, 1, h, w, stride, pad, oh, ow, 1);
     Tensor::from_vec(x_shape.clone(), dx)
+}
+
+/// Batched input gradient: `dy` is the channel-major packed output
+/// gradient `(Cout, B·Oh·Ow)`; the result is the channel-major packed
+/// input gradient `(Cin, B·H·W)`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_input_grad_batch(
+    dy: &[f32],
+    kernel: &Tensor<f32>,
+    batch: usize,
+    h: usize,
+    w: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let kd = kernel.shape().dims();
+    let (cout, cin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
+    let bn = batch * oh * ow;
+    assert_eq!(dy.len(), cout * bn, "dy size");
+    let kdim = cin * kh * kw;
+    let mut dcols = vec![0.0f32; kdim * bn];
+    gemm_tn_mt(cout, kdim, bn, kernel.data(), dy, &mut dcols, threads);
+    col2im_batch(&dcols, batch, cin, h, w, kh, kw, stride, pad, oh, ow, threads)
 }
 
 /// Gradient w.r.t. the kernel (paper Eq. 3) via im2col + GEMM. Drop-in
@@ -245,52 +545,137 @@ pub fn kernel_grad(
     let dyd = dy.shape().dims();
     assert_eq!(dyd[0], cout);
     assert_eq!((dyd[1], dyd[2]), (oh, ow), "dy geometry vs conv geometry");
-    let kdim = cin * kh * kw;
+    conv_kernel_grad_batch(dy.data(), &cols, kernel_shape, oh * ow, 1)
+}
+
+/// Batched kernel gradient over an already-packed column matrix:
+/// `dK (Cout×KD) = dY (Cout×B·N) · colsᵀ`. The gradient is *summed*
+/// over the batch (the caller scales by `1/B` for mean-gradient SGD).
+pub fn conv_kernel_grad_batch(
+    dy: &[f32],
+    cols: &[f32],
+    kernel_shape: &Shape,
+    bn: usize,
+    threads: usize,
+) -> Tensor<f32> {
+    let kd = kernel_shape.dims();
+    let (cout, kdim) = (kd[0], kd[1] * kd[2] * kd[3]);
+    assert_eq!(dy.len(), cout * bn, "dy size");
+    assert_eq!(cols.len(), kdim * bn, "cols size");
     let mut dk = vec![0.0f32; cout * kdim];
-    gemm_nt(cout, kdim, oh * ow, dy.data(), &cols, &mut dk);
+    gemm_nt_mt(cout, kdim, bn, dy, cols, &mut dk, threads);
     Tensor::from_vec(kernel_shape.clone(), dk)
 }
 
 /// Dense forward (Eq. 4) through the GEMM core: `y (1×Nout) = x (1×Nin) ·
 /// W (Nin×Nout)`.
 pub fn dense_forward(x: &[f32], w: &Tensor<f32>) -> Vec<f32> {
+    dense_forward_batch(x, w, 1, 1)
+}
+
+/// Batched dense forward: `Y (B×Nout) = X (B×Nin) · W (Nin×Nout)`, with
+/// `X` in sample-major rows (see [`packed_to_rows`]).
+pub fn dense_forward_batch(x: &[f32], w: &Tensor<f32>, batch: usize, threads: usize) -> Vec<f32> {
     let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
-    assert_eq!(x.len(), n_in, "input length {} vs weight rows {n_in}", x.len());
-    let mut y = vec![0.0f32; n_out];
-    gemm_nn(1, n_in, n_out, x, w.data(), &mut y);
+    assert_eq!(x.len(), batch * n_in, "input length {} vs {batch}×{n_in}", x.len());
+    let mut y = vec![0.0f32; batch * n_out];
+    gemm_nn_mt(batch, n_in, n_out, x, w.data(), &mut y, threads);
     y
 }
 
 /// Dense input gradient (Eq. 5): `dX (Nin) = W (Nin×Nout) · dY (Nout)` —
 /// one contiguous-row dot per input element.
 pub fn dense_input_grad(dy: &[f32], w: &Tensor<f32>) -> Vec<f32> {
+    dense_input_grad_batch(dy, w, 1, 1)
+}
+
+/// Batched dense input gradient: `dX (B×Nin) = dY (B×Nout) · Wᵀ`.
+pub fn dense_input_grad_batch(
+    dy: &[f32],
+    w: &Tensor<f32>,
+    batch: usize,
+    threads: usize,
+) -> Vec<f32> {
     let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
-    assert_eq!(dy.len(), n_out);
-    let dx: Vec<f32> = w.data().chunks_exact(n_out).map(|row| dot(row, dy)).collect();
-    debug_assert_eq!(dx.len(), n_in);
+    assert_eq!(dy.len(), batch * n_out);
+    let mut dx = vec![0.0f32; batch * n_in];
+    gemm_nt_mt(batch, n_in, n_out, dy, w.data(), &mut dx, threads);
     dx
 }
 
 /// Dense weight gradient (Eq. 6): rank-1 outer product `dW = x ⊗ dY`,
 /// written row-at-a-time (axpy form, skipping post-ReLU zeros).
 pub fn dense_weight_grad(dy: &[f32], x: &[f32]) -> Tensor<f32> {
-    let n_out = dy.len();
-    let mut dw = vec![0.0f32; x.len() * n_out];
-    for (&xi, dw_row) in x.iter().zip(dw.chunks_exact_mut(n_out)) {
-        if xi == 0.0 {
-            continue;
-        }
-        for (d, &g) in dw_row.iter_mut().zip(dy) {
-            *d = xi * g;
+    dense_weight_grad_batch(dy, x, 1, x.len(), dy.len(), 1)
+}
+
+/// Batched dense weight gradient: `dW (Nin×Nout) = Xᵀ (Nin×B) · dY
+/// (B×Nout)` — the rank-B generalization of the outer product, *summed*
+/// over the batch (the caller scales by `1/B`).
+pub fn dense_weight_grad_batch(
+    dy: &[f32],
+    x: &[f32],
+    batch: usize,
+    n_in: usize,
+    n_out: usize,
+    threads: usize,
+) -> Tensor<f32> {
+    assert_eq!(x.len(), batch * n_in, "x size");
+    assert_eq!(dy.len(), batch * n_out, "dy size");
+    let mut dw = vec![0.0f32; n_in * n_out];
+    gemm_tn_mt(batch, n_in, n_out, x, dy, &mut dw, threads);
+    Tensor::from_vec(Shape::d2(n_in, n_out), dw)
+}
+
+/// Pack `B` same-shape CHW images into the channel-major batch layout —
+/// a row-major `(C, B·H·W)` matrix whose row `c` holds image 0's plane,
+/// then image 1's, …
+pub fn pack_batch(xs: &[&Tensor<f32>]) -> Vec<f32> {
+    assert!(!xs.is_empty(), "empty batch");
+    let shape = xs[0].shape();
+    let [c, h, w]: [usize; 3] = shape.dims().try_into().expect("samples must be CHW");
+    let (b, n) = (xs.len(), h * w);
+    let mut out = vec![0.0f32; c * b * n];
+    for (bi, x) in xs.iter().enumerate() {
+        assert_eq!(x.shape(), shape, "batch samples must share a shape");
+        let xd = x.data();
+        for ci in 0..c {
+            let dst = (ci * b + bi) * n;
+            out[dst..dst + n].copy_from_slice(&xd[ci * n..(ci + 1) * n]);
         }
     }
-    Tensor::from_vec(Shape::d2(x.len(), n_out), dw)
+    out
+}
+
+/// Channel-major packed `(C, B·N)` → sample-major rows `(B, C·N)`: row
+/// `b` is image `b`'s flattened CHW activation, ready for the dense
+/// GEMM.
+pub fn packed_to_rows(packed: &[f32], channels: usize, batch: usize, n: usize) -> Vec<f32> {
+    assert_eq!(packed.len(), channels * batch * n);
+    let mut rows = vec![0.0f32; batch * channels * n];
+    for c in 0..channels {
+        for b in 0..batch {
+            let src = (c * batch + b) * n;
+            let dst = (b * channels + c) * n;
+            rows[dst..dst + n].copy_from_slice(&packed[src..src + n]);
+        }
+    }
+    rows
+}
+
+/// Sample-major rows `(B, C·N)` → channel-major packed `(C, B·N)` — the
+/// inverse of [`packed_to_rows`] (used on the dense layer's input
+/// gradient before it re-enters the conv stack). The inverse block
+/// transpose is the same transpose with the axis roles swapped.
+pub fn rows_to_packed(rows: &[f32], channels: usize, batch: usize, n: usize) -> Vec<f32> {
+    packed_to_rows(rows, batch, channels, n)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::nn::{conv, dense};
+    use crate::util::proptest::assert_close;
     use crate::util::rng::Pcg32;
 
     fn rand_tensor(rng: &mut Pcg32, shape: Shape) -> Tensor<f32> {
@@ -298,14 +683,8 @@ mod tests {
         Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
     }
 
-    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
-        assert_eq!(a.len(), b.len(), "{what}: length mismatch");
-        for (i, (x, y)) in a.iter().zip(b).enumerate() {
-            assert!(
-                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
-                "{what}[{i}]: gemm {x} vs naive {y}"
-            );
-        }
+    fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect()
     }
 
     #[test]
@@ -350,6 +729,73 @@ mod tests {
         let mut c = vec![0.0f32; n];
         gemm_nn(1, 2, n, &a, &b, &mut c);
         assert!(c.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn mt_gemms_bit_identical_to_single_thread() {
+        // Problem sizes above MT_MIN_MACS so the sharded path actually
+        // engages; column sharding must not change a single bit.
+        let mut rng = Pcg32::seeded(31);
+        let (m, k, n) = (8, 32, 512); // 131072 MACs
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        for threads in [2, 3, 5] {
+            let mut c1 = vec![0.0f32; m * n];
+            let mut cn = vec![0.0f32; m * n];
+            gemm_nn_mt(m, k, n, &a, &b, &mut c1, 1);
+            gemm_nn_mt(m, k, n, &a, &b, &mut cn, threads);
+            assert_eq!(c1, cn, "gemm_nn threads={threads}");
+        }
+
+        let (m, k, n) = (32, 16, 256); // 131072 MACs, C = 16×256
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, m * n);
+        for threads in [2, 4] {
+            let mut c1 = vec![0.0f32; k * n];
+            let mut cn = vec![0.0f32; k * n];
+            gemm_tn_mt(m, k, n, &a, &b, &mut c1, 1);
+            gemm_tn_mt(m, k, n, &a, &b, &mut cn, threads);
+            assert_eq!(c1, cn, "gemm_tn threads={threads}");
+        }
+
+        let (m, n, kd) = (16, 64, 128); // 131072 MACs
+        let a = rand_vec(&mut rng, m * kd);
+        let b = rand_vec(&mut rng, n * kd);
+        for threads in [2, 7] {
+            let mut c1 = vec![0.0f32; m * n];
+            let mut cn = vec![0.0f32; m * n];
+            gemm_nt_mt(m, n, kd, &a, &b, &mut c1, 1);
+            gemm_nt_mt(m, n, kd, &a, &b, &mut cn, threads);
+            assert_eq!(c1, cn, "gemm_nt threads={threads}");
+        }
+    }
+
+    #[test]
+    fn mt_threshold_keeps_tiny_problems_single_threaded() {
+        assert_eq!(plan_workers(8, MT_MIN_MACS - 1, 1000), 1);
+        assert_eq!(plan_workers(8, MT_MIN_MACS, 1000), 8);
+        assert_eq!(plan_workers(1, usize::MAX, 1000), 1);
+        // Never more workers than shardable columns.
+        assert_eq!(plan_workers(8, usize::MAX, 3), 3);
+        // Oversubscribed tiny GEMM still computes correctly.
+        let a = [1.0, 2.0];
+        let b = [3.0, 4.0];
+        let mut c = [0.0f32; 1];
+        gemm_nt_mt(1, 1, 2, &a, &b, &mut c, 16);
+        assert_eq!(c, [11.0]);
+    }
+
+    #[test]
+    fn col_ranges_partition() {
+        for (n, w) in [(10, 3), (7, 7), (256, 2), (5, 1)] {
+            let ranges = col_ranges(n, w);
+            assert_eq!(ranges.len(), w);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges[w - 1].1, n);
+            for i in 1..w {
+                assert_eq!(ranges[i].0, ranges[i - 1].1, "contiguous at {i}");
+            }
+        }
     }
 
     #[test]
@@ -443,8 +889,153 @@ mod tests {
         let (cols, oh, ow) = im2col(&x, 3, 3, 1, 1);
         let c: Vec<f32> = (0..cols.len()).map(|_| rng.range_f32(-1.0, 1.0)).collect();
         let lhs: f64 = cols.iter().zip(&c).map(|(&a, &b)| a as f64 * b as f64).sum();
-        let back = col2im(&c, 2, 5, 5, 3, 3, 1, 1, oh, ow);
+        let back = col2im_batch(&c, 1, 2, 5, 5, 3, 3, 1, 1, oh, ow, 1);
         let rhs: f64 = x.data().iter().zip(&back).map(|(&a, &b)| a as f64 * b as f64).sum();
         assert!((lhs - rhs).abs() < 1e-3, "adjoint identity violated: {lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn pack_batch_and_row_transposes_roundtrip() {
+        let mut rng = Pcg32::seeded(13);
+        let shape = Shape::d3(3, 4, 5);
+        let xs: Vec<Tensor<f32>> = (0..4).map(|_| rand_tensor(&mut rng, shape.clone())).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let packed = pack_batch(&refs);
+        let n = 4 * 5;
+        // Image b, channel c plane sits at row c, columns b·N..(b+1)·N.
+        for (bi, x) in xs.iter().enumerate() {
+            for c in 0..3 {
+                assert_eq!(
+                    &packed[(c * 4 + bi) * n..(c * 4 + bi + 1) * n],
+                    &x.data()[c * n..(c + 1) * n],
+                    "image {bi} channel {c}"
+                );
+            }
+        }
+        // packed → rows is per-sample flattened CHW; rows → packed inverts.
+        let rows = packed_to_rows(&packed, 3, 4, n);
+        for (bi, x) in xs.iter().enumerate() {
+            assert_eq!(&rows[bi * 3 * n..(bi + 1) * 3 * n], x.data(), "row {bi}");
+        }
+        assert_eq!(rows_to_packed(&rows, 3, 4, n), packed);
+    }
+
+    #[test]
+    fn im2col_batch_matches_per_image() {
+        let mut rng = Pcg32::seeded(17);
+        let shape = Shape::d3(2, 6, 6);
+        let xs: Vec<Tensor<f32>> = (0..3).map(|_| rand_tensor(&mut rng, shape.clone())).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let packed = pack_batch(&refs);
+        for threads in [1, 2] {
+            let (cols, oh, ow) = im2col_batch(&packed, 3, 2, 6, 6, 3, 3, 1, 1, threads);
+            let n = oh * ow;
+            for (bi, x) in xs.iter().enumerate() {
+                let (single, soh, sow) = im2col(x, 3, 3, 1, 1);
+                assert_eq!((soh, sow), (oh, ow));
+                let kdim = 2 * 3 * 3;
+                for r in 0..kdim {
+                    assert_eq!(
+                        &cols[r * 3 * n + bi * n..r * 3 * n + (bi + 1) * n],
+                        &single[r * n..(r + 1) * n],
+                        "image {bi} row {r} (threads {threads})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_conv_ops_match_loop_of_singles() {
+        let mut rng = Pcg32::seeded(19);
+        let (cin, cout, hw, b) = (3, 4, 8, 5);
+        let xs: Vec<Tensor<f32>> =
+            (0..b).map(|_| rand_tensor(&mut rng, Shape::d3(cin, hw, hw))).collect();
+        let k = rand_tensor(&mut rng, Shape::d4(cout, cin, 3, 3));
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let packed = pack_batch(&refs);
+        let (cols, oh, ow) = im2col_batch(&packed, b, cin, hw, hw, 3, 3, 1, 1, 1);
+        let n = oh * ow;
+        let y = conv_forward_batch(&cols, &k, b * n, 1);
+        let singles: Vec<Tensor<f32>> = xs.iter().map(|x| forward(x, &k, 1, 1)).collect();
+        for (bi, s) in singles.iter().enumerate() {
+            for c in 0..cout {
+                assert_close(
+                    &y[(c * b + bi) * n..(c * b + bi + 1) * n],
+                    &s.data()[c * n..(c + 1) * n],
+                    1e-5,
+                    &format!("forward image {bi} channel {c}"),
+                );
+            }
+        }
+
+        // Input gradient: batched vs per-image.
+        let dys: Vec<Tensor<f32>> =
+            (0..b).map(|_| rand_tensor(&mut rng, Shape::d3(cout, oh, ow))).collect();
+        let dy_refs: Vec<&Tensor<f32>> = dys.iter().collect();
+        let dy_packed = pack_batch(&dy_refs);
+        let dx = conv_input_grad_batch(&dy_packed, &k, b, hw, hw, 1, 1, oh, ow, 1);
+        for (bi, dyi) in dys.iter().enumerate() {
+            let single = input_grad(dyi, &k, &Shape::d3(cin, hw, hw), 1, 1);
+            for c in 0..cin {
+                assert_close(
+                    &dx[(c * b + bi) * hw * hw..(c * b + bi + 1) * hw * hw],
+                    &single.data()[c * hw * hw..(c + 1) * hw * hw],
+                    1e-5,
+                    &format!("input_grad image {bi} channel {c}"),
+                );
+            }
+        }
+
+        // Kernel gradient: batched sum vs sum of per-image gradients.
+        let dk = conv_kernel_grad_batch(&dy_packed, &cols, k.shape(), b * n, 1);
+        let mut dk_sum = vec![0.0f32; k.shape().numel()];
+        for (x, dyi) in xs.iter().zip(&dys) {
+            let g = kernel_grad(dyi, x, k.shape(), 1, 1);
+            for (acc, &v) in dk_sum.iter_mut().zip(g.data()) {
+                *acc += v;
+            }
+        }
+        assert_close(dk.data(), &dk_sum, 1e-4, "kernel_grad batch sum");
+    }
+
+    #[test]
+    fn batched_dense_ops_match_loop_of_singles() {
+        let mut rng = Pcg32::seeded(23);
+        let (n_in, n_out, b) = (40, 7, 4);
+        let w = rand_tensor(&mut rng, Shape::d2(n_in, n_out));
+        let x = rand_vec(&mut rng, b * n_in);
+        let dy = rand_vec(&mut rng, b * n_out);
+
+        let y = dense_forward_batch(&x, &w, b, 1);
+        let dx = dense_input_grad_batch(&dy, &w, b, 1);
+        for bi in 0..b {
+            let xi = &x[bi * n_in..(bi + 1) * n_in];
+            let dyi = &dy[bi * n_out..(bi + 1) * n_out];
+            assert_close(
+                &y[bi * n_out..(bi + 1) * n_out],
+                &dense::forward(xi, &w),
+                1e-5,
+                &format!("dense fwd row {bi}"),
+            );
+            assert_close(
+                &dx[bi * n_in..(bi + 1) * n_in],
+                &dense::input_grad(dyi, &w),
+                1e-5,
+                &format!("dense dX row {bi}"),
+            );
+        }
+
+        let dw = dense_weight_grad_batch(&dy, &x, b, n_in, n_out, 1);
+        let mut dw_sum = vec![0.0f32; n_in * n_out];
+        for bi in 0..b {
+            let dyi = &dy[bi * n_out..(bi + 1) * n_out];
+            let xi = &x[bi * n_in..(bi + 1) * n_in];
+            let g = dense::weight_grad(dyi, xi);
+            for (acc, &v) in dw_sum.iter_mut().zip(g.data()) {
+                *acc += v;
+            }
+        }
+        assert_close(dw.data(), &dw_sum, 1e-4, "dense dW batch sum");
     }
 }

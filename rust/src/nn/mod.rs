@@ -9,7 +9,9 @@
 //!
 //! Conventions: activations CHW, kernels OIHW (out, in, kh, kw), dense
 //! weights (in, out) per paper Eq. (4). No biases — the paper's datapath
-//! has no bias port (§III); batch size is 1 (§IV-A).
+//! has no bias port (§III). The paper trains at batch size 1;
+//! `Model::train_batch` additionally offers mean-gradient minibatches,
+//! which the GEMM engine executes as batched packed GEMMs (`nn::gemm`).
 
 pub mod conv;
 pub mod dense;
@@ -20,4 +22,4 @@ pub mod model;
 pub mod relu;
 pub mod sgd;
 
-pub use model::{Engine, Gradients, Model, ModelConfig, Params, TrainOutput};
+pub use model::{BatchTrainOutput, Engine, Gradients, Model, ModelConfig, Params, TrainOutput};

@@ -1,5 +1,10 @@
 //! The paper's evaluation model (§IV-A): Conv3×3 + ReLU + Conv3×3 + ReLU
-//! + Dense, trained with SGD at batch size 1.
+//! + Dense, trained with SGD. The paper trains at batch size 1; PR 2
+//! adds true minibatch entry points ([`Model::forward_batch`] /
+//! [`Model::train_batch`], mean-gradient semantics) that the GEMM
+//! engine executes as batched packed GEMMs, optionally sharded across
+//! scoped worker threads. Batch-1 [`Model::train_step`] delegates to
+//! the batched path with `B = 1` (numerically identical).
 
 use super::{conv, dense, gemm, loss, relu, sgd};
 use crate::tensor::{Shape, Tensor};
@@ -109,11 +114,38 @@ pub struct TrainOutput {
     pub correct: bool,
 }
 
+/// Result of one minibatch train step.
+#[derive(Clone, Debug)]
+pub struct BatchTrainOutput {
+    /// Mean cross-entropy loss over the batch.
+    pub loss: f32,
+    /// Top-1 correct predictions over the batch (pre-update logits).
+    pub correct: usize,
+}
+
+/// Caches from one batched GEMM-engine forward pass. Activations are in
+/// the channel-major packed layout (`nn::gemm`); the im2col column
+/// matrices are kept so backward never re-packs the same input.
+struct GemmBatchCache {
+    cols1: Vec<f32>,
+    z1: Vec<f32>,
+    cols2: Vec<f32>,
+    z2: Vec<f32>,
+    /// Sample-major post-ReLU dense input (B × dense_in).
+    xd: Vec<f32>,
+    /// Sample-major logits (B × num_classes).
+    logits: Vec<f32>,
+}
+
 pub struct Model {
     pub config: ModelConfig,
     pub params: Params,
     /// Compute core for conv/dense (default: naive reference loops).
     pub engine: Engine,
+    /// Scoped worker threads the GEMM engine may use (1 = serial).
+    /// Thread count never changes results: the sharded GEMMs are
+    /// bit-identical to single-thread (see `nn::gemm`).
+    pub threads: usize,
 }
 
 impl Model {
@@ -137,7 +169,7 @@ impl Model {
             ),
             w: super::init::dense_weights(&mut rng, config.dense_in(), config.num_classes),
         };
-        Model { config, params, engine: Engine::Naive }
+        Model { config, params, engine: Engine::Naive, threads: 1 }
     }
 
     pub fn from_params(config: ModelConfig, params: Params) -> Model {
@@ -145,13 +177,29 @@ impl Model {
             params.w.shape(),
             &Shape::d2(config.dense_in(), config.num_classes)
         );
-        Model { config, params, engine: Engine::Naive }
+        Model { config, params, engine: Engine::Naive, threads: 1 }
     }
 
     /// Select the compute core (builder-style; parameters are untouched).
     pub fn with_engine(mut self, engine: Engine) -> Model {
         self.engine = engine;
         self
+    }
+
+    /// Set the GEMM worker-thread budget (builder-style; clamped to ≥1).
+    pub fn with_threads(mut self, threads: usize) -> Model {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Re-initialize parameters in place (GDumb's "dumb learner" trains
+    /// from scratch for every query), deterministic in `seed`,
+    /// preserving the engine and thread configuration. Centralizes the
+    /// engine-preserving reset the CL layer and the coordinator both
+    /// hand-rolled before PR 2 (flagged in PR 1 review).
+    pub fn reinit(&mut self, seed: u64) {
+        let (engine, threads) = (self.engine, self.threads);
+        *self = Model::new(self.config.clone(), seed).with_engine(engine).with_threads(threads);
     }
 
     // Engine dispatch: one seam per layer computation, so the forward
@@ -240,7 +288,8 @@ impl Model {
     }
 
     /// One SGD train step (batch 1) on `(x, label)` with the head masked to
-    /// `active_classes`. Returns loss and top-1 correctness.
+    /// `active_classes`. Returns loss and top-1 correctness. Delegates to
+    /// [`Model::train_batch`] with `B = 1` (identical numerics).
     pub fn train_step(
         &mut self,
         x: &Tensor<f32>,
@@ -248,15 +297,155 @@ impl Model {
         active_classes: usize,
         lr: f32,
     ) -> TrainOutput {
-        let cache = self.forward_cached(x);
-        let (loss_value, dlogits) = loss::softmax_ce(&cache.logits, label, active_classes);
-        let correct = loss::predict(&cache.logits, active_classes) == label;
-        let mut grads = self.backward(&cache, &dlogits);
+        let out = self.train_batch(&[x], &[label], active_classes, lr);
+        TrainOutput { loss: out.loss, correct: out.correct == 1 }
+    }
+
+    /// Batched inference: per-sample logits. The GEMM engine runs the
+    /// whole batch as packed GEMMs; the naive engine loops.
+    pub fn forward_batch(&self, xs: &[&Tensor<f32>]) -> Vec<Vec<f32>> {
+        assert!(!xs.is_empty(), "empty batch");
+        match self.engine {
+            Engine::Naive => xs.iter().map(|x| self.forward(x)).collect(),
+            Engine::Gemm => {
+                let classes = self.config.num_classes;
+                let fwd = self.gemm_forward_batch(xs);
+                fwd.logits.chunks(classes).map(|c| c.to_vec()).collect()
+            }
+        }
+    }
+
+    /// One SGD step on a minibatch with mean-gradient semantics: the
+    /// per-sample gradients are averaged, clipped once and applied once
+    /// (for `B = 1` this reduces exactly to the paper's per-sample
+    /// step). Both engines implement the same semantics, so batched
+    /// naive-vs-GEMM parity holds at any batch size
+    /// (`tests/batched_parity.rs`).
+    pub fn train_batch(
+        &mut self,
+        xs: &[&Tensor<f32>],
+        labels: &[usize],
+        active_classes: usize,
+        lr: f32,
+    ) -> BatchTrainOutput {
+        assert!(!xs.is_empty(), "empty batch");
+        assert_eq!(xs.len(), labels.len(), "batch inputs vs labels");
+        let (mut grads, loss_sum, correct) = match self.engine {
+            Engine::Naive => self.naive_batch_grads(xs, labels, active_classes),
+            Engine::Gemm => self.gemm_batch_grads(xs, labels, active_classes),
+        };
+        let scale = 1.0 / xs.len() as f32;
+        scale_tensor(&mut grads.k1, scale);
+        scale_tensor(&mut grads.k2, scale);
+        scale_tensor(&mut grads.w, scale);
         sgd::clip_by_norm(&mut grads.k1, self.config.grad_clip);
         sgd::clip_by_norm(&mut grads.k2, self.config.grad_clip);
         sgd::clip_by_norm(&mut grads.w, self.config.grad_clip);
         self.apply(&grads, lr);
-        TrainOutput { loss: loss_value, correct }
+        BatchTrainOutput { loss: loss_sum / xs.len() as f32, correct }
+    }
+
+    /// Naive-engine minibatch: loop the per-sample reference backward
+    /// and sum the gradients (the parity oracle for the GEMM path).
+    fn naive_batch_grads(
+        &self,
+        xs: &[&Tensor<f32>],
+        labels: &[usize],
+        active_classes: usize,
+    ) -> (Gradients, f32, usize) {
+        let mut acc: Option<Gradients> = None;
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0usize;
+        for (x, &label) in xs.iter().zip(labels) {
+            let cache = self.forward_cached(x);
+            let (l, dl) = loss::softmax_ce(&cache.logits, label, active_classes);
+            loss_sum += l;
+            correct += usize::from(loss::predict(&cache.logits, active_classes) == label);
+            let g = self.backward(&cache, &dl);
+            acc = Some(match acc {
+                None => g,
+                Some(mut sum) => {
+                    add_tensor(&mut sum.k1, &g.k1);
+                    add_tensor(&mut sum.k2, &g.k2);
+                    add_tensor(&mut sum.w, &g.w);
+                    sum
+                }
+            });
+        }
+        (acc.expect("non-empty batch"), loss_sum, correct)
+    }
+
+    /// GEMM-engine batched forward: pack once, one GEMM per layer pass.
+    fn gemm_forward_batch(&self, xs: &[&Tensor<f32>]) -> GemmBatchCache {
+        let b = xs.len();
+        let hw = self.config.image_size;
+        let n = hw * hw;
+        let cin = self.config.in_channels;
+        let cc = self.config.conv_channels;
+        let t = self.threads;
+        assert_eq!(
+            xs[0].shape(),
+            &Shape::d3(cin, hw, hw),
+            "input must match the model geometry"
+        );
+        // For B = 1 the packed layout *is* CHW — borrow instead of copy.
+        let packed_input;
+        let x0: &[f32] = if b == 1 {
+            xs[0].data()
+        } else {
+            packed_input = gemm::pack_batch(xs);
+            &packed_input
+        };
+        let (cols1, oh, ow) = gemm::im2col_batch(x0, b, cin, hw, hw, 3, 3, 1, 1, t);
+        debug_assert_eq!((oh, ow), (hw, hw), "3×3 s1 p1 conv preserves geometry");
+        let z1 = gemm::conv_forward_batch(&cols1, &self.params.k1, b * n, t);
+        let a1 = relu::forward_vec(&z1);
+        let (cols2, _, _) = gemm::im2col_batch(&a1, b, cc, hw, hw, 3, 3, 1, 1, t);
+        let z2 = gemm::conv_forward_batch(&cols2, &self.params.k2, b * n, t);
+        let a2 = relu::forward_vec(&z2);
+        let xd = if b == 1 { a2 } else { gemm::packed_to_rows(&a2, cc, b, n) };
+        let logits = gemm::dense_forward_batch(&xd, &self.params.w, b, t);
+        GemmBatchCache { cols1, z1, cols2, z2, xd, logits }
+    }
+
+    /// GEMM-engine minibatch: each backward pass is one large GEMM over
+    /// the packed batch, reusing the forward's im2col column matrices.
+    fn gemm_batch_grads(
+        &self,
+        xs: &[&Tensor<f32>],
+        labels: &[usize],
+        active_classes: usize,
+    ) -> (Gradients, f32, usize) {
+        let b = xs.len();
+        let hw = self.config.image_size;
+        let n = hw * hw;
+        let cc = self.config.conv_channels;
+        let classes = self.config.num_classes;
+        let t = self.threads;
+        let fwd = self.gemm_forward_batch(xs);
+        let mut dlogits = vec![0.0f32; b * classes];
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0usize;
+        for (bi, &label) in labels.iter().enumerate() {
+            let row = &fwd.logits[bi * classes..(bi + 1) * classes];
+            let (l, dl) = loss::softmax_ce(row, label, active_classes);
+            loss_sum += l;
+            correct += usize::from(loss::predict(row, active_classes) == label);
+            dlogits[bi * classes..(bi + 1) * classes].copy_from_slice(&dl);
+        }
+        // Dense layer.
+        let d_in = self.config.dense_in();
+        let dw = gemm::dense_weight_grad_batch(&dlogits, &fwd.xd, b, d_in, classes, t);
+        let da2_rows = gemm::dense_input_grad_batch(&dlogits, &self.params.w, b, t);
+        let da2 = if b == 1 { da2_rows } else { gemm::rows_to_packed(&da2_rows, cc, b, n) };
+        // ReLU 2 + conv2 (cols2 reused — no second im2col of a1).
+        let dz2 = relu::backward_vec(&da2, &fwd.z2);
+        let dk2 = gemm::conv_kernel_grad_batch(&dz2, &fwd.cols2, self.params.k2.shape(), b * n, t);
+        let da1 = gemm::conv_input_grad_batch(&dz2, &self.params.k2, b, hw, hw, 1, 1, hw, hw, t);
+        // ReLU 1 + conv1 (no input gradient needed at the first layer).
+        let dz1 = relu::backward_vec(&da1, &fwd.z1);
+        let dk1 = gemm::conv_kernel_grad_batch(&dz1, &fwd.cols1, self.params.k1.shape(), b * n, t);
+        (Gradients { k1: dk1, k2: dk2, w: dw }, loss_sum, correct)
     }
 
     /// Apply pre-computed gradients.
@@ -264,6 +453,18 @@ impl Model {
         sgd::step(&mut self.params.k1, &grads.k1, lr);
         sgd::step(&mut self.params.k2, &grads.k2, lr);
         sgd::step(&mut self.params.w, &grads.w, lr);
+    }
+}
+
+fn add_tensor(dst: &mut Tensor<f32>, src: &Tensor<f32>) {
+    for (d, &s) in dst.data_mut().iter_mut().zip(src.data()) {
+        *d += s;
+    }
+}
+
+fn scale_tensor(t: &mut Tensor<f32>, k: f32) {
+    for v in t.data_mut() {
+        *v *= k;
     }
 }
 
@@ -355,6 +556,91 @@ mod tests {
         }
         for (a, b) in naive.params.k1.data().iter().zip(fast.params.k1.data()) {
             assert!((a - b).abs() <= 1e-4, "k1 diverged: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn reinit_is_deterministic_and_preserves_engine() {
+        let cfg = tiny_config();
+        let mut m = Model::new(cfg.clone(), 5).with_engine(Engine::Gemm).with_threads(3);
+        let x = rand_image(6, &cfg);
+        m.train_step(&x, 1, 4, 0.05);
+        m.reinit(5);
+        let fresh = Model::new(cfg, 5);
+        assert_eq!(m.params.w.data(), fresh.params.w.data(), "reinit must match a fresh init");
+        assert_eq!(m.engine, Engine::Gemm, "reinit dropped the engine");
+        assert_eq!(m.threads, 3, "reinit dropped the thread budget");
+    }
+
+    #[test]
+    fn train_batch_is_mean_of_fixed_param_grads() {
+        // Reference: per-sample backward at FIXED params, summed, scaled
+        // by 1/B, applied once — what minibatch SGD means. The naive
+        // engine must match it exactly (same code path by construction);
+        // the GEMM engine within float round-off.
+        let cfg = tiny_config();
+        let xs: Vec<Tensor<f32>> = (0..3).map(|i| rand_image(20 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let labels = [0usize, 1, 2];
+        let lr = 0.05;
+        for engine in [Engine::Naive, Engine::Gemm] {
+            let mut m = Model::new(cfg.clone(), 8).with_engine(engine);
+            let mut r = Model::new(cfg.clone(), 8); // naive reference copy
+            let mut sums: Option<Gradients> = None;
+            for (x, &label) in refs.iter().zip(&labels) {
+                let cache = r.forward_cached(x);
+                let (_, dl) = super::loss::softmax_ce(&cache.logits, label, 4);
+                let g = r.backward(&cache, &dl);
+                sums = Some(match sums {
+                    None => g,
+                    Some(mut s) => {
+                        add_tensor(&mut s.k1, &g.k1);
+                        add_tensor(&mut s.k2, &g.k2);
+                        add_tensor(&mut s.w, &g.w);
+                        s
+                    }
+                });
+            }
+            let mut g = sums.unwrap();
+            scale_tensor(&mut g.k1, 1.0 / 3.0);
+            scale_tensor(&mut g.k2, 1.0 / 3.0);
+            scale_tensor(&mut g.w, 1.0 / 3.0);
+            r.apply(&g, lr);
+
+            m.train_batch(&refs, &labels, 4, lr);
+            let tol = if engine == Engine::Naive { 0.0 } else { 1e-4 };
+            crate::util::proptest::assert_close(
+                m.params.w.data(),
+                r.params.w.data(),
+                tol,
+                &format!("{engine:?} minibatch w"),
+            );
+            crate::util::proptest::assert_close(
+                m.params.k1.data(),
+                r.params.k1.data(),
+                tol,
+                &format!("{engine:?} minibatch k1"),
+            );
+        }
+    }
+
+    #[test]
+    fn forward_batch_matches_per_sample_forward() {
+        let cfg = tiny_config();
+        let xs: Vec<Tensor<f32>> = (0..4).map(|i| rand_image(40 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        for engine in [Engine::Naive, Engine::Gemm] {
+            let m = Model::new(cfg.clone(), 9).with_engine(engine).with_threads(2);
+            let batched = m.forward_batch(&refs);
+            assert_eq!(batched.len(), 4);
+            for (bi, x) in xs.iter().enumerate() {
+                crate::util::proptest::assert_close(
+                    &batched[bi],
+                    &m.forward(x),
+                    1e-5,
+                    &format!("{engine:?} logits sample {bi}"),
+                );
+            }
         }
     }
 

@@ -54,6 +54,20 @@ impl Gen {
     }
 }
 
+/// Relative-tolerance closeness assert shared by the unit and
+/// integration parity suites: `|a-b| ≤ tol·(1 + max(|a|,|b|))` per
+/// element. (Collapses the per-suite copies flagged in PR 1 review —
+/// integration tests reach it through `tests/common/mod.rs`.)
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
 /// Run `prop` for `cases` deterministic cases derived from `seed`.
 pub fn check<F: FnMut(&mut Gen)>(name: &str, seed: u64, cases: usize, mut prop: F) {
     for case in 0..cases {

@@ -1,0 +1,168 @@
+//! PR 2 batched-engine properties:
+//! * `forward_batch`/`train_batch` parity vs a loop of B batch-1 calls
+//!   (≤ 1e-4 relative, randomized geometry and batch size);
+//! * threads=1 vs threads=N **bit-identical** training and inference
+//!   (the sharded GEMMs give every worker disjoint output columns, so
+//!   the summation order never depends on the thread count);
+//! * the naive batched conv/dense references vs the packed GEMM path.
+
+mod common;
+
+use common::{assert_close, TOL};
+use tinycl::nn::{conv, dense, gemm, loss, Engine, Model, ModelConfig};
+use tinycl::tensor::{Shape, Tensor};
+use tinycl::util::proptest::check;
+use tinycl::util::rng::Pcg32;
+
+fn rand_tensor(rng: &mut Pcg32, shape: Shape) -> Tensor<f32> {
+    let n = shape.numel();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+}
+
+fn cfg(image: usize, channels: usize, classes: usize) -> ModelConfig {
+    ModelConfig {
+        in_channels: 3,
+        image_size: image,
+        conv_channels: channels,
+        num_classes: classes,
+        grad_clip: f32::INFINITY,
+    }
+}
+
+#[test]
+fn forward_batch_matches_loop_of_singles() {
+    check("forward_batch == B × forward", 201, 12, |g| {
+        let image = *g.choose(&[6usize, 8, 10]);
+        let channels = g.usize_in(2, 4);
+        let classes = g.usize_in(2, 5);
+        let b = g.usize_in(1, 5);
+        let c = cfg(image, channels, classes);
+        let mut rng = g.rng().fork(7);
+        let xs: Vec<Tensor<f32>> =
+            (0..b).map(|_| rand_tensor(&mut rng, Shape::d3(3, image, image))).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        for engine in [Engine::Naive, Engine::Gemm] {
+            let m = Model::new(c.clone(), 11).with_engine(engine).with_threads(3);
+            let batched = m.forward_batch(&refs);
+            assert_eq!(batched.len(), b);
+            for (bi, x) in xs.iter().enumerate() {
+                assert_close(
+                    &batched[bi],
+                    &m.forward(x),
+                    TOL,
+                    &format!("{engine:?} sample {bi}/{b}"),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn train_batch_is_mean_of_batch1_grads_randomized() {
+    // The defining parity: one batched GEMM train step == B batch-1
+    // backward passes at *fixed* params, averaged, applied once.
+    check("train_batch == averaged batch-1 grads", 207, 8, |g| {
+        let image = *g.choose(&[6usize, 8]);
+        let channels = g.usize_in(2, 4);
+        let classes = g.usize_in(2, 4);
+        let b = g.usize_in(1, 6);
+        let c = cfg(image, channels, classes);
+        let mut rng = g.rng().fork(5);
+        let xs: Vec<Tensor<f32>> =
+            (0..b).map(|_| rand_tensor(&mut rng, Shape::d3(3, image, image))).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let labels: Vec<usize> = (0..b).map(|i| i % classes).collect();
+        let lr = 0.05f32;
+
+        // Batched step on the (threaded) GEMM engine.
+        let mut m = Model::new(c.clone(), 21).with_engine(Engine::Gemm).with_threads(2);
+        m.train_batch(&refs, &labels, classes, lr);
+
+        // Reference: loop of B batch-1 backward calls on the naive
+        // engine, gradients averaged, one manual SGD application.
+        let r = Model::new(c.clone(), 21);
+        let mut gk1 = vec![0.0f32; r.params.k1.shape().numel()];
+        let mut gk2 = vec![0.0f32; r.params.k2.shape().numel()];
+        let mut gw = vec![0.0f32; r.params.w.shape().numel()];
+        for (x, &label) in refs.iter().zip(&labels) {
+            let cache = r.forward_cached(x);
+            let (_, dl) = loss::softmax_ce(&cache.logits, label, classes);
+            let grads = r.backward(&cache, &dl);
+            for (acc, &v) in gk1.iter_mut().zip(grads.k1.data()) {
+                *acc += v;
+            }
+            for (acc, &v) in gk2.iter_mut().zip(grads.k2.data()) {
+                *acc += v;
+            }
+            for (acc, &v) in gw.iter_mut().zip(grads.w.data()) {
+                *acc += v;
+            }
+        }
+        let scale = lr / b as f32;
+        let step = |p: &[f32], grad: &[f32]| -> Vec<f32> {
+            p.iter().zip(grad).map(|(pv, gv)| pv - scale * gv).collect()
+        };
+        assert_close(m.params.k1.data(), &step(r.params.k1.data(), &gk1), TOL, "k1");
+        assert_close(m.params.k2.data(), &step(r.params.k2.data(), &gk2), TOL, "k2");
+        assert_close(m.params.w.data(), &step(r.params.w.data(), &gw), TOL, "w");
+    });
+}
+
+#[test]
+fn threads_do_not_change_a_single_bit() {
+    // Geometry big enough that the sharded GEMMs actually engage
+    // (conv2's GEMM is ~590k MACs at batch 4, well over MT_MIN_MACS).
+    let c = cfg(16, 8, 6);
+    let mut serial = Model::new(c.clone(), 9).with_engine(Engine::Gemm).with_threads(1);
+    let mut sharded = Model::new(c.clone(), 9).with_engine(Engine::Gemm).with_threads(4);
+    let mut rng = Pcg32::seeded(44);
+    for step in 0..3 {
+        let xs: Vec<Tensor<f32>> =
+            (0..4).map(|_| rand_tensor(&mut rng, Shape::d3(3, 16, 16))).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let labels = [0usize, 1, 2, 3];
+        let l1 = serial.train_batch(&refs, &labels, 6, 0.05).loss;
+        let ln = sharded.train_batch(&refs, &labels, 6, 0.05).loss;
+        assert_eq!(l1, ln, "step {step}: loss must be bit-identical across thread counts");
+    }
+    assert_eq!(serial.params.k1.data(), sharded.params.k1.data(), "k1 bitwise");
+    assert_eq!(serial.params.k2.data(), sharded.params.k2.data(), "k2 bitwise");
+    assert_eq!(serial.params.w.data(), sharded.params.w.data(), "w bitwise");
+    // Inference down the threaded batched path too.
+    let x = rand_tensor(&mut rng, Shape::d3(3, 16, 16));
+    assert_eq!(serial.forward_batch(&[&x]), sharded.forward_batch(&[&x]));
+}
+
+#[test]
+fn naive_batched_references_match_packed_gemm_path() {
+    // The conv/dense `forward_batch` reference loops (PR 2 satellites)
+    // pin the packed single-GEMM batch to the per-sample naive kernels.
+    let mut rng = Pcg32::seeded(55);
+    let (b, cin, cout, hw) = (4usize, 3usize, 5usize, 7usize);
+    let xs: Vec<Tensor<f32>> =
+        (0..b).map(|_| rand_tensor(&mut rng, Shape::d3(cin, hw, hw))).collect();
+    let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+    let k = rand_tensor(&mut rng, Shape::d4(cout, cin, 3, 3));
+    let naive = conv::forward_batch(&refs, &k, 1, 1);
+    let packed = gemm::pack_batch(&refs);
+    let (cols, oh, ow) = gemm::im2col_batch(&packed, b, cin, hw, hw, 3, 3, 1, 1, 2);
+    let n = oh * ow;
+    let y = gemm::conv_forward_batch(&cols, &k, b * n, 2);
+    for (bi, s) in naive.iter().enumerate() {
+        for c in 0..cout {
+            assert_close(
+                &y[(c * b + bi) * n..(c * b + bi + 1) * n],
+                &s.data()[c * n..(c + 1) * n],
+                TOL,
+                &format!("conv image {bi} channel {c}"),
+            );
+        }
+    }
+
+    let (n_in, n_out, db) = (20usize, 6usize, 3usize);
+    let w = rand_tensor(&mut rng, Shape::d2(n_in, n_out));
+    let x: Vec<f32> = (0..db * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let yb = dense::forward_batch(&x, &w, db);
+    let yg = gemm::dense_forward_batch(&x, &w, db, 1);
+    assert_close(&yg, &yb, TOL, "dense batched forward");
+}

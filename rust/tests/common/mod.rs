@@ -1,0 +1,19 @@
+//! Shared helpers for the integration-test suites — collapses the
+//! per-suite `assert_close` relative-tolerance copies (flagged in the
+//! PR 1 review) into one place. The implementation lives in
+//! `tinycl::util::proptest` so in-crate unit tests share it too.
+#![allow(dead_code)] // each suite links its own copy and uses a subset
+
+/// Default relative tolerance for f32 parity suites: same multiplies,
+/// different summation order.
+pub const TOL: f32 = 1e-4;
+
+/// `|a-b| ≤ tol·(1 + max(|a|,|b|))` per element.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    tinycl::util::proptest::assert_close(a, b, tol, what);
+}
+
+/// [`assert_close`] at the default [`TOL`].
+pub fn assert_close_default(a: &[f32], b: &[f32], what: &str) {
+    assert_close(a, b, TOL, what);
+}

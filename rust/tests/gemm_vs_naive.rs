@@ -4,22 +4,13 @@
 //! different summation order, so agreement is float-round-off tight
 //! (≤ 1e-4 relative), never exact by construction.
 
+mod common;
+
+use common::{assert_close_default as assert_close, TOL};
 use tinycl::nn::{conv, dense, gemm, Engine, Model, ModelConfig};
 use tinycl::tensor::{Shape, Tensor};
 use tinycl::util::proptest::{check, Gen};
 use tinycl::util::rng::Pcg32;
-
-const TOL: f32 = 1e-4;
-
-fn assert_close(a: &[f32], b: &[f32], what: &str) {
-    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
-    for (i, (x, y)) in a.iter().zip(b).enumerate() {
-        assert!(
-            (x - y).abs() <= TOL * (1.0 + x.abs().max(y.abs())),
-            "{what}[{i}]: gemm {x} vs naive {y}"
-        );
-    }
-}
 
 fn rand_tensor(rng: &mut Pcg32, shape: Shape) -> Tensor<f32> {
     let n = shape.numel();

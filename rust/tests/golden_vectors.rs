@@ -9,20 +9,11 @@
 //! `python3 python/compile/export_golden.py`. Values are float32 computed
 //! in float32; both Rust paths must match within 1e-4 relative.
 
+mod common;
+
+use common::assert_close_default as assert_close;
 use tinycl::nn::{conv, dense, gemm, Engine, Model, ModelConfig, Params};
 use tinycl::tensor::{Shape, Tensor};
-
-const TOL: f32 = 1e-4;
-
-fn assert_close(a: &[f32], b: &[f32], what: &str) {
-    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
-    for (i, (x, y)) in a.iter().zip(b).enumerate() {
-        assert!(
-            (x - y).abs() <= TOL * (1.0 + x.abs().max(y.abs())),
-            "{what}[{i}]: rust {x} vs golden {y}"
-        );
-    }
-}
 
 // ---------------------------------------------------------------------
 // Minimal JSON reader (the vendor set has no serde). Supports exactly

@@ -10,6 +10,8 @@
 //! at runtime). Without it the suite is not compiled; a placeholder test
 //! prints a loud skip message instead.
 
+mod common;
+
 #[cfg(not(feature = "xla"))]
 #[test]
 fn xla_parity_suite_skipped() {
@@ -52,15 +54,7 @@ mod with_xla {
         }
     }
 
-    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
-        assert_eq!(a.len(), b.len(), "{what}: length mismatch");
-        for (i, (x, y)) in a.iter().zip(b).enumerate() {
-            assert!(
-                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
-                "{what}[{i}]: rust {x} vs xla {y}"
-            );
-        }
-    }
+    use crate::common::assert_close;
 
     #[test]
     fn forward_logits_match_f32_reference() {
