@@ -1,17 +1,28 @@
 //! Quickstart: the whole system in ~60 lines.
 //!
 //! Runs a small class-incremental experiment with the paper's GDumb
-//! policy on the float reference backend, then replays the same stream on
-//! the cycle-accurate TinyCL device and prints what the chip would cost
-//! (time at the synthesized clock, average power, energy).
+//! policy on the fast float backend (batched minibatches, GEMM worker
+//! threads), then replays the same stream on the cycle-accurate TinyCL
+//! device and prints what the chip would cost (time at the synthesized
+//! clock, average power, energy).
 //!
 //! Run: `cargo run --release --example quickstart`
+//!       [-- --batch N --threads N --qnn-engine naive|fast]
+//! (`--threads 0` = auto; the knobs flow through the same
+//! `ExperimentConfig` surface the `tinycl train` CLI uses)
 
 use tinycl::cl::PolicyKind;
 use tinycl::coordinator::{BackendKind, Experiment, ExperimentConfig};
 use tinycl::nn::ModelConfig;
+use tinycl::qnn::QnnEngine;
+use tinycl::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let batch = args.usize_or("batch", 8).max(1);
+    let threads = args.threads_or_auto("threads", 0);
+    let qnn_engine = QnnEngine::from_args(&args)?;
+
     // A laptop-friendly geometry: 16×16 images, 4 conv channels,
     // 5 tasks × 2 classes (the paper's split, smaller canvas).
     let base = ExperimentConfig {
@@ -25,7 +36,10 @@ fn main() -> anyhow::Result<()> {
         policy: PolicyKind::Gdumb,
         num_tasks: 5,
         epochs: 4,
-        lr: 0.05,
+        lr: 0.05 * batch as f32, // linear lr scaling for minibatches
+        batch,
+        threads,
+        qnn_engine,
         memory_budget: 100,
         train_per_class: 20,
         test_per_class: 10,
@@ -33,9 +47,9 @@ fn main() -> anyhow::Result<()> {
         ..ExperimentConfig::default()
     };
 
-    println!("=== 1. GDumb on the float reference backend ===");
+    println!("=== 1. GDumb on the fast float backend (batch {batch}, {threads} threads) ===");
     let f32_run = Experiment::new(ExperimentConfig {
-        backend: BackendKind::F32,
+        backend: BackendKind::F32Fast,
         ..base.clone()
     })
     .run()?;

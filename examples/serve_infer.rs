@@ -8,8 +8,11 @@
 //!    at the synthesized clock, plus energy per inference.
 //!
 //! Run: `cargo run --release --example serve_infer`
+//!       [-- --backend f32|f32-fast|qnn|xla --threads N --qnn-engine naive|fast]
 //! (the XLA path needs `--features xla` + `make artifacts`; without it
-//! the host side is served by the im2col+GEMM `f32-fast` backend)
+//! the host side defaults to the im2col+GEMM `f32-fast` backend.
+//! `--backend qnn` serves the bit-exact Q4.12 model on its integer-GEMM
+//! fast engine; `--threads N` sets the GEMM worker budget, 0 = auto)
 
 use tinycl::cl::Learner;
 use tinycl::coordinator::{Backend, BackendKind};
@@ -31,16 +34,28 @@ fn main() -> anyhow::Result<()> {
 
     println!("serving {requests} single-image requests (32×32×3, 10 classes)\n");
 
-    // --- 1. Host software path: AOT-XLA when built with `--features
-    // xla` (and artifacts are present), otherwise the im2col+GEMM
-    // `f32-fast` core — the fastest pure-Rust serving path.
-    let mut xla = match Backend::create(BackendKind::Xla, &model_cfg, &sim_cfg, "artifacts", 5) {
-        Ok(b) => b,
-        Err(e) => {
-            println!("note: XLA path unavailable ({e}); serving on the f32-fast backend\n");
-            Backend::create(BackendKind::F32Fast, &model_cfg, &sim_cfg, "artifacts", 5)?
+    // --- 1. Host software path. `--backend` picks it explicitly;
+    // the default tries AOT-XLA when built with `--features xla` (and
+    // artifacts are present), otherwise the im2col+GEMM `f32-fast`
+    // core — the fastest pure-f32 serving path.
+    let threads = args.threads_or_auto("threads", 0);
+    let qnn_engine = tinycl::qnn::QnnEngine::from_args(&args)?;
+    let mut xla = match args.get("backend") {
+        Some(name) => {
+            let kind = BackendKind::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown backend '{name}'"))?;
+            Backend::create(kind, &model_cfg, &sim_cfg, "artifacts", 5)?
         }
+        None => match Backend::create(BackendKind::Xla, &model_cfg, &sim_cfg, "artifacts", 5) {
+            Ok(b) => b,
+            Err(e) => {
+                println!("note: XLA path unavailable ({e}); serving on the f32-fast backend\n");
+                Backend::create(BackendKind::F32Fast, &model_cfg, &sim_cfg, "artifacts", 5)?
+            }
+        },
     };
+    xla.set_threads(threads);
+    xla.set_qnn_engine(qnn_engine);
     // Brief fine-tune so the served model is not random (5 quick steps).
     for (i, s) in batch.iter().take(5).enumerate() {
         xla.train_step(&s.x, s.label, 10, 0.05);

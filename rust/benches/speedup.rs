@@ -12,6 +12,11 @@
 //!    scoped workers (`--threads`, default auto). Must win by ≥ 2× on
 //!    epoch wall-clock — asserted — and be **bit-identical** to
 //!    threads=1 — also asserted.
+//! 2b. **naive qnn vs fast qnn** (PR 3's integer engine): the bit-exact
+//!    Q4.12 oracle's epoch, per-element loops vs the integer
+//!    im2col+GEMM fast path on the persistent worker pool. Must win by
+//!    ≥ 4× — asserted — and be **bit-identical** to the naive oracle on
+//!    losses and every parameter — also asserted.
 //! 3. **TinyCL device vs software**: one training epoch on the
 //!    cycle-accurate sim (cycles × synthesized clock) vs the fastest
 //!    host baseline, with the paper's P100 constants for reference. The
@@ -29,10 +34,12 @@
 use tinycl::cl::Learner;
 use tinycl::coordinator::{Backend, BackendKind};
 use tinycl::data::SyntheticCifar;
+use tinycl::fixed::Fx;
 use tinycl::hw::CostModel;
 use tinycl::nn::{Engine, Model, ModelConfig};
+use tinycl::qnn::{QModel, QnnEngine};
 use tinycl::sim::SimConfig;
-use tinycl::tensor::Tensor;
+use tinycl::tensor::{quantize_tensor, Tensor};
 use tinycl::util::cli::Args;
 
 fn main() {
@@ -46,10 +53,7 @@ fn main() {
     // (warmup amortizes further).
     let steps = args.usize_or("steps", if smoke { 48 } else { 250 });
     let batch = args.usize_or("batch", 8).max(1);
-    let threads = match args.usize_or("threads", 0) {
-        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-        n => n,
-    };
+    let threads = args.threads_or_auto("threads", 0);
     let epoch_steps = 10_000.0;
     let cfg = if smoke {
         ModelConfig {
@@ -122,6 +126,55 @@ fn main() {
          {batched_speedup:.1}× over batch-1 f32-fast)",
         batched_step * 1e3
     );
+
+    // --- Rung 2b (PR 3): the Q4.12 oracle — naive loops vs the
+    // bit-identical integer im2col+GEMM engine, batch 1 (the paper's
+    // training regime). The fast rung uses the same thread budget as
+    // the batched f32 rung; the naive rung is inherently serial.
+    let time_qnn = |engine: QnnEngine, qthreads: usize| -> f64 {
+        let mut backend = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 3)
+            .expect("qnn backend");
+        backend.set_qnn_engine(engine);
+        backend.set_threads(qthreads);
+        backend.train_step(&samples[0].x, samples[0].label, cfg.num_classes, 0.125);
+        let t0 = std::time::Instant::now();
+        for s in &samples {
+            backend.train_step(&s.x, s.label, cfg.num_classes, 0.125);
+        }
+        t0.elapsed().as_secs_f64() / steps as f64
+    };
+    let qnn_naive_step = time_qnn(QnnEngine::Naive, 1);
+    let qnn_fast_step = time_qnn(QnnEngine::Fast, threads);
+    let qnn_speedup = qnn_naive_step / qnn_fast_step;
+    println!(
+        "  qnn naive  : {:.3} ms   (bit-exact Q4.12 oracle, per-element loops)",
+        qnn_naive_step * 1e3
+    );
+    println!(
+        "  qnn fast   : {:.3} ms   ({qnn_speedup:.1}× over naive qnn, integer im2col+GEMM)",
+        qnn_fast_step * 1e3
+    );
+
+    // Bit-exactness gate for the qnn rung: the fast engine (threaded)
+    // must reproduce the naive oracle exactly — losses and every
+    // parameter bit — or the speedup is meaningless.
+    {
+        let m = Model::new(cfg.clone(), 7);
+        let mut naive = QModel::from_model(&m).with_engine(QnnEngine::Naive);
+        let mut fast =
+            QModel::from_model(&m).with_engine(QnnEngine::Fast).with_threads(threads.max(2));
+        let lr = Fx::from_f32(0.125);
+        for s in samples.iter().take(3) {
+            let xq = quantize_tensor(&s.x);
+            let ln = naive.train_step(&xq, s.label, cfg.num_classes, lr);
+            let lf = fast.train_step(&xq, s.label, cfg.num_classes, lr);
+            assert_eq!(ln, lf, "qnn fast engine diverged from the naive oracle");
+        }
+        assert_eq!(naive.params.w.data(), fast.params.w.data(), "qnn w bits diverged");
+        assert_eq!(naive.params.k1.data(), fast.params.k1.data(), "qnn k1 bits diverged");
+        assert_eq!(naive.params.k2.data(), fast.params.k2.data(), "qnn k2 bits diverged");
+        println!("  determinism: qnn fast (threads={}) bit-identical to naive ✓", threads.max(2));
+    }
 
     // Determinism gate: thread sharding must not change a single bit.
     {
@@ -200,8 +253,10 @@ fn main() {
          \"steps\": {steps},\n  \"batch\": {batch},\n  \"threads\": {threads},\n  \
          \"naive_ns_per_step\": {:.0},\n  \"fast_ns_per_step\": {:.0},\n  \
          \"batched_ns_per_step\": {:.0},\n  \
+         \"qnn_naive_ns_per_step\": {:.0},\n  \"qnn_fast_ns_per_step\": {:.0},\n  \
          \"fast_speedup_over_naive\": {host_speedup:.2},\n  \
          \"batched_speedup_over_fast\": {batched_speedup:.2},\n  \
+         \"qnn_fast_speedup_over_naive\": {qnn_speedup:.2},\n  \
          \"tinycl_epoch_secs\": {tinycl_epoch:.4},\n  \"sw_epoch_secs\": {sw_epoch:.4}\n}}\n",
         cfg.image_size,
         cfg.in_channels,
@@ -210,6 +265,8 @@ fn main() {
         naive_step * 1e9,
         fast_step * 1e9,
         batched_step * 1e9,
+        qnn_naive_step * 1e9,
+        qnn_fast_step * 1e9,
     );
     match std::fs::write("BENCH_speedup.json", &json) {
         Ok(()) => println!("\nwrote BENCH_speedup.json"),
@@ -230,6 +287,11 @@ fn main() {
             batched_speedup >= 2.0,
             "batched+threaded speedup {batched_speedup:.2}× < 2× over batch-1 f32-fast \
              (batch {batch}, {threads} threads) — training engine regressed"
+        );
+        assert!(
+            qnn_speedup >= 4.0,
+            "qnn fast speedup {qnn_speedup:.1}× < 4× over naive qnn — \
+             integer GEMM engine regressed"
         );
         assert!((tinycl_epoch - 1.76).abs() < 0.3, "TinyCL epoch {tinycl_epoch} vs paper 1.76");
         assert!(speedup > 5.0, "speedup {speedup} lost the paper's ordering");

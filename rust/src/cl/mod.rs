@@ -80,6 +80,15 @@ pub trait Learner {
     /// Predicted class among the first `active_classes`.
     fn predict(&mut self, x: &Tensor<f32>, active_classes: usize) -> usize;
 
+    /// Batched prediction. Backends with a batched forward datapath
+    /// (the float model, the Q4.12 fast engine) override this with one
+    /// packed forward per minibatch — bit-identical per sample to
+    /// [`Learner::predict`]; the default falls back to per-sample
+    /// prediction, so accuracy sweeps never change results, only speed.
+    fn predict_batch(&mut self, xs: &[&Tensor<f32>], active_classes: usize) -> Vec<usize> {
+        xs.iter().map(|x| self.predict(x, active_classes)).collect()
+    }
+
     /// Re-initialize parameters (GDumb's "dumb learner" trains from
     /// scratch for every query). Deterministic in `seed`.
     fn reinit(&mut self, seed: u64);
@@ -108,6 +117,13 @@ impl Learner for crate::nn::Model {
 
     fn predict(&mut self, x: &Tensor<f32>, active_classes: usize) -> usize {
         crate::nn::Model::predict(self, x, active_classes)
+    }
+
+    fn predict_batch(&mut self, xs: &[&Tensor<f32>], active_classes: usize) -> Vec<usize> {
+        crate::nn::Model::forward_batch(self, xs)
+            .iter()
+            .map(|logits| crate::nn::loss::predict(logits, active_classes))
+            .collect()
     }
 
     fn reinit(&mut self, seed: u64) {

@@ -296,8 +296,16 @@ impl ClPolicy for JointUpperBound {
     }
 }
 
+/// Minibatch size for accuracy evaluation: predictions are independent,
+/// so batching is purely a throughput knob — backends with a batched
+/// forward run one packed GEMM set per chunk, the rest fall back to
+/// per-sample prediction (see [`Learner::predict_batch`]).
+const EVAL_BATCH: usize = 64;
+
 /// Accuracy of `learner` on the test subset of `task`, head masked to
-/// `active_classes`.
+/// `active_classes`. Evaluates in [`EVAL_BATCH`]-sized minibatches
+/// through [`Learner::predict_batch`] — bit-identical to the per-sample
+/// sweep (`tests/qnn_fast_parity.rs` pins the parity).
 pub fn evaluate(
     learner: &mut dyn Learner,
     task: &Task,
@@ -306,10 +314,12 @@ pub fn evaluate(
 ) -> f64 {
     let subset = test.task_subset(&task.classes);
     assert!(!subset.is_empty(), "empty test subset for task {}", task.id);
-    let correct = subset
-        .iter()
-        .filter(|s| learner.predict(&s.x, active_classes) == s.label)
-        .count();
+    let mut correct = 0usize;
+    for chunk in subset.chunks(EVAL_BATCH) {
+        let xs: Vec<&Tensor<f32>> = chunk.iter().map(|s| &s.x).collect();
+        let preds = learner.predict_batch(&xs, active_classes);
+        correct += preds.iter().zip(chunk).filter(|(p, s)| **p == s.label).count();
+    }
     correct as f64 / subset.len() as f64
 }
 

@@ -6,7 +6,7 @@
 //! |---------|--------|-------------------|
 //! | `f32`      | `nn::Model` (pure Rust float, naive loops) | algorithmic reference |
 //! | `f32-fast` | `nn::Model` + `nn::gemm` (im2col + blocked GEMM) | fast host datapath |
-//! | `qnn`      | `qnn::QModel` (bit-exact Q4.12) | what the RTL computes |
+//! | `qnn`      | `qnn::QModel` (bit-exact Q4.12; `--qnn-engine` picks the naive loops or the bit-identical integer im2col+GEMM fast path) | what the RTL computes |
 //! | `sim`      | `sim::TinyClDevice` (cycle-accurate) | the TinyCL chip (§III) |
 //! | `xla`      | `runtime::XlaModel` (AOT JAX/Pallas via PJRT) | the "software-level implementation" baseline (§IV-C) |
 //!
@@ -19,7 +19,7 @@
 use crate::cl::Learner;
 use crate::fixed::Fx;
 use crate::nn::{Engine, Model, ModelConfig};
-use crate::qnn::QModel;
+use crate::qnn::{QModel, QnnEngine};
 #[cfg(feature = "xla")]
 use crate::runtime::{ArtifactSet, XlaModel, XlaRuntime};
 use crate::sim::{RunStats, SimConfig, TinyClDevice};
@@ -171,11 +171,33 @@ impl Backend {
         }
     }
 
-    /// Set the GEMM worker-thread budget (float backends only; the
-    /// quantized/device backends model serial hardware and ignore it).
+    /// Set the GEMM worker-thread budget. Applies to the float model
+    /// and to the `qnn` fast engine (whose column sharding is
+    /// bit-invisible); the cycle-accurate `sim` models serial hardware
+    /// and ignores it.
     pub fn set_threads(&mut self, threads: usize) {
-        if let Backend::F32(m) = self {
-            m.threads = threads.max(1);
+        match self {
+            Backend::F32(m) => m.threads = threads.max(1),
+            Backend::Qnn { model, .. } => model.threads = threads.max(1),
+            _ => {}
+        }
+    }
+
+    /// Select the Q4.12 compute engine (`qnn` backend only): `fast` is
+    /// the integer im2col+GEMM path, `naive` the per-element oracle —
+    /// bit-identical, so this is a speed/debuggability knob, wired
+    /// through `--qnn-engine` like `--threads`.
+    pub fn set_qnn_engine(&mut self, engine: QnnEngine) {
+        if let Backend::Qnn { model, .. } = self {
+            model.engine = engine;
+        }
+    }
+
+    /// The active Q4.12 engine, if this is the `qnn` backend.
+    pub fn qnn_engine(&self) -> Option<QnnEngine> {
+        match self {
+            Backend::Qnn { model, .. } => Some(model.engine),
+            _ => None,
         }
     }
 }
@@ -219,8 +241,35 @@ impl Learner for Backend {
             // True minibatch: one set of batched GEMMs, mean gradient.
             return m.train_batch(xs, labels, active_classes, lr).loss;
         }
-        // Quantized/device/XLA backends: the paper's per-sample steps.
+        if let Backend::Qnn { model, .. } = self {
+            // Q4.12 minibatch: gradients against batch-entry params as
+            // one packed integer-GEMM set, hardware writebacks applied
+            // per sample in stream order (see `qnn::model`). B = 1 is
+            // bit-identical to the paper's per-sample step.
+            let xqs: Vec<Tensor<Fx>> = xs.iter().map(|x| quantize_tensor(x)).collect();
+            let refs: Vec<&Tensor<Fx>> = xqs.iter().collect();
+            return model.train_batch(&refs, labels, active_classes, Fx::from_f32(lr)).0;
+        }
+        // Device/XLA backends: the paper's per-sample steps.
         crate::cl::train_batch_sequential(self, xs, labels, active_classes, lr)
+    }
+
+    fn predict_batch(&mut self, xs: &[&Tensor<f32>], active_classes: usize) -> Vec<usize> {
+        if let Backend::F32(m) = self {
+            return m
+                .forward_batch(xs)
+                .iter()
+                .map(|logits| crate::nn::loss::predict(logits, active_classes))
+                .collect();
+        }
+        if let Backend::Qnn { model, .. } = self {
+            let xqs: Vec<Tensor<Fx>> = xs.iter().map(|x| quantize_tensor(x)).collect();
+            let refs: Vec<&Tensor<Fx>> = xqs.iter().collect();
+            return model.predict_batch(&refs, active_classes);
+        }
+        // Device/XLA backends predict per sample (keeps the sim's
+        // per-inference cycle accounting exact).
+        xs.iter().map(|x| self.predict(x, active_classes)).collect()
     }
 
     fn predict(&mut self, x: &Tensor<f32>, active_classes: usize) -> usize {
@@ -368,14 +417,14 @@ mod tests {
     }
 
     #[test]
-    fn non_float_backends_train_batch_sequentially() {
-        // The Learner default: backends without a batched datapath run
-        // the paper's per-sample steps in order — bit-identical to a
-        // manual loop of train_step.
+    fn sim_backend_trains_batches_sequentially() {
+        // The Learner default: backends without a batched datapath (the
+        // cycle-accurate device) run the paper's per-sample steps in
+        // order — bit-identical to a manual loop of train_step.
         let cfg = tiny_cfg();
         let sim_cfg = SimConfig::paper();
-        let mut a = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
-        let mut b = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        let mut a = Backend::create(BackendKind::Sim, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        let mut b = Backend::create(BackendKind::Sim, &cfg, &sim_cfg, "artifacts", 5).unwrap();
         let xs: Vec<Tensor<f32>> = (0..3u64).map(|i| rand_image(800 + i, &cfg)).collect();
         let refs: Vec<&Tensor<f32>> = xs.iter().collect();
         let labels = [0usize, 1, 2];
@@ -385,6 +434,50 @@ mod tests {
             sum += b.train_step(x, l, 4, 0.125);
         }
         assert_eq!(mean, sum / 3.0);
+    }
+
+    #[test]
+    fn qnn_train_batch_at_batch_one_matches_train_step() {
+        // PR 3: qnn dropped the per-sample train_batch fallback for a
+        // true batched datapath; at B = 1 it must stay bit-identical to
+        // the paper's per-sample step.
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let mut a = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        let mut b = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        for step in 0..3u64 {
+            let x = rand_image(900 + step, &cfg);
+            let lb = a.train_batch(&[&x], &[step as usize % 4], 4, 0.125);
+            let ls = b.train_step(&x, step as usize % 4, 4, 0.125);
+            assert_eq!(lb, ls, "step {step}");
+        }
+    }
+
+    #[test]
+    fn qnn_engine_knob_is_bit_invisible() {
+        // `--qnn-engine naive` and the default fast engine must agree
+        // bit-for-bit through the Learner interface, threaded or not.
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let mut naive = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        naive.set_qnn_engine(QnnEngine::Naive);
+        assert_eq!(naive.qnn_engine(), Some(QnnEngine::Naive));
+        let mut fast = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        fast.set_threads(3);
+        assert_eq!(fast.qnn_engine(), Some(QnnEngine::Fast), "fast is the default");
+        let xs: Vec<Tensor<f32>> = (0..4u64).map(|i| rand_image(950 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let labels = [0usize, 1, 2, 3];
+        for step in 0..2 {
+            let ln = naive.train_batch(&refs, &labels, 4, 0.125);
+            let lf = fast.train_batch(&refs, &labels, 4, 0.125);
+            assert_eq!(ln, lf, "step {step}");
+        }
+        assert_eq!(
+            naive.predict_batch(&refs, 4),
+            fast.predict_batch(&refs, 4),
+            "batched predictions"
+        );
     }
 
     #[cfg(not(feature = "xla"))]

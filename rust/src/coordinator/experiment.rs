@@ -2,6 +2,7 @@
 
 use super::backend::{Backend, BackendKind};
 use crate::cl::{self, PolicyKind, RunConfig, TaskStream};
+use crate::qnn::QnnEngine;
 use crate::data::SyntheticCifar;
 use crate::hw::{CostModel, EnergyModel};
 use crate::nn::ModelConfig;
@@ -25,9 +26,13 @@ pub struct ExperimentConfig {
     /// minibatch as one set of batched GEMMs with mean-gradient SGD;
     /// other backends fall back to per-sample steps.
     pub batch: usize,
-    /// GEMM worker-thread budget for the float backends (1 = serial;
-    /// thread count never changes results — see `nn::gemm`).
+    /// GEMM worker-thread budget for the float and quantized-fast
+    /// backends (1 = serial; thread count never changes results — see
+    /// `nn::gemm` / `fixed::gemm`).
     pub threads: usize,
+    /// Q4.12 compute engine for the `qnn` backend (`fast` = integer
+    /// im2col+GEMM, `naive` = the per-element oracle — bit-identical).
+    pub qnn_engine: QnnEngine,
     /// Replay-memory budget in samples (paper: 1000).
     pub memory_budget: usize,
     pub train_per_class: usize,
@@ -49,6 +54,7 @@ impl Default for ExperimentConfig {
             lr: 0.05,
             batch: 1,
             threads: 1,
+            qnn_engine: QnnEngine::Fast,
             memory_budget: 1000,
             train_per_class: 100,
             test_per_class: 20,
@@ -96,10 +102,8 @@ impl ExperimentConfig {
             .with_lanes(args.usize_or("lanes", 8))
             .with_taps(args.usize_or("taps", 9));
         // --threads 0 = auto-detect the host's parallelism.
-        let threads = match args.usize_or("threads", d.threads) {
-            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-            n => n,
-        };
+        let threads = args.threads_or_auto("threads", d.threads);
+        let qnn_engine = QnnEngine::from_args(args)?;
         Ok(ExperimentConfig {
             model,
             sim,
@@ -110,6 +114,7 @@ impl ExperimentConfig {
             lr: args.f32_or("lr", d.lr),
             batch: args.usize_or("batch", d.batch).max(1),
             threads,
+            qnn_engine,
             memory_budget: args.usize_or("memory", d.memory_budget),
             train_per_class: args.usize_or("per-class", d.train_per_class),
             test_per_class: args.usize_or("test-per-class", d.test_per_class),
@@ -161,9 +166,14 @@ pub struct ExperimentResult {
 
 impl fmt::Display for ExperimentResult {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let qnn = if self.config.backend == BackendKind::Qnn {
+            format!(" qnn-engine={}", self.config.qnn_engine.name())
+        } else {
+            String::new()
+        };
         writeln!(
             f,
-            "backend={} policy={} tasks={} epochs={} lr={} batch={} threads={} memory={}",
+            "backend={} policy={} tasks={} epochs={} lr={} batch={} threads={} memory={}{qnn}",
             self.config.backend.name(),
             self.config.policy.name(),
             self.config.num_tasks,
@@ -203,6 +213,7 @@ impl Experiment {
             self.config.seed,
         )?;
         backend.set_threads(self.config.threads);
+        backend.set_qnn_engine(self.config.qnn_engine);
         Ok(backend)
     }
 
@@ -332,6 +343,32 @@ mod tests {
         let r = Experiment::new(cfg).run().unwrap();
         assert_eq!(r.report.matrix.rows_filled(), 2);
         assert!(r.report.train_steps > 0);
+    }
+
+    #[test]
+    fn from_args_parses_qnn_engine() {
+        let args = Args::parse(std::iter::empty::<String>());
+        let c = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(c.qnn_engine, QnnEngine::Fast, "fast is the default");
+        let args = Args::parse(["--qnn-engine", "naive"].iter().map(|s| s.to_string()));
+        let c = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(c.qnn_engine, QnnEngine::Naive);
+        let args = Args::parse(["--qnn-engine", "gpu"].iter().map(|s| s.to_string()));
+        assert!(ExperimentConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn qnn_batched_experiment_completes_and_reports_engine() {
+        // The full CL loop on the quantized backend's batched+threaded
+        // integer-GEMM path.
+        let mut cfg = quick_config(BackendKind::Qnn);
+        cfg.batch = 4;
+        cfg.threads = 2;
+        let r = Experiment::new(cfg).run().unwrap();
+        assert_eq!(r.report.matrix.rows_filled(), 2);
+        assert!(r.report.train_steps > 0);
+        let s = format!("{r}");
+        assert!(s.contains("qnn-engine=fast"), "missing engine in report: {s}");
     }
 
     #[test]

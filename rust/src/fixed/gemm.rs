@@ -1,0 +1,403 @@
+//! Cache-blocked integer GEMM kernels over Q4.12 operands — the compute
+//! core of the `qnn` fast path.
+//!
+//! Every output element is a **wrapping i32 sum of individually
+//! barrel-shifted 16×16 products**, i.e. exactly the chain
+//! `acc.add(a.mul_acc_shifted(b, shift))` the naive loops in
+//! `qnn::layers` (and the MACs in `sim`) execute. Two facts make the
+//! GEMM restructuring *bit-identical* rather than merely close:
+//!
+//! 1. 32-bit two's-complement addition is associative and commutative,
+//!    so panel blocking, column sharding and loop interchange never
+//!    change a single bit of the sum (the same property `sim` relies on
+//!    for its Dadda-tree reductions — see `fixed::vecops`).
+//! 2. A zero operand contributes an exactly-zero term even under the
+//!    round-to-nearest pre-shift: `(0 + 2^(s−1)) >> s = 0` for every
+//!    `s ≥ 1`. im2col's zero-padding entries (and the naive loops'
+//!    skipped out-of-image taps) are therefore interchangeable.
+//!
+//! The kernels accumulate into raw `i32` slices (the [`super::Acc`]
+//! bit pattern); the caller applies the layer's writeback (format
+//! shift, rounding, saturation, clips) once per element, at the same
+//! points the hardware does. Threading shards disjoint output columns
+//! across the persistent worker pool ([`crate::util::pool`]), so
+//! threads=N is bit-identical to threads=1 by construction.
+
+use super::Fx;
+use crate::util::pool::{self, col_ranges, plan_workers, SendPtr};
+
+/// Column-panel width: 256 i32 = 1 KiB per accumulator row keeps a
+/// panel plus the operand row in L1 (same blocking as the f32 core).
+const PANEL: usize = 256;
+
+/// Rounding increment for a `shift`-bit product pre-shift (0 when the
+/// shift is 0 — `(p + 0) >> 0 = p` reproduces the unshifted product).
+#[inline(always)]
+fn round_half(shift: u32) -> i32 {
+    if shift == 0 {
+        0
+    } else {
+        1 << (shift - 1)
+    }
+}
+
+/// Wrapping dot product of individually shifted products — the
+/// variable-length generalization of [`super::vecops::dot`] with the
+/// gradient-normalization barrel shift at the multiplier output.
+/// Bit-identical to folding `acc.add(a.mul_acc_shifted(b, shift))`.
+#[inline]
+pub fn dot_shifted(a: &[Fx], b: &[Fx], shift: u32) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let half = round_half(shift);
+    let mut acc = 0i32;
+    for (x, y) in a.iter().zip(b) {
+        acc = acc.wrapping_add((x.raw() as i32 * y.raw() as i32 + half) >> shift);
+    }
+    acc
+}
+
+/// `C (m×n) += A (m×k) · B (k×n)` in the shifted-product wrapping-sum
+/// semantics, all row-major, output columns sharded across up to
+/// `threads` pool workers. Bit-identical at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn_mt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[Fx],
+    b: &[Fx],
+    c: &mut [i32],
+    shift: u32,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A must be m×k");
+    assert_eq!(b.len(), k * n, "B must be k×n");
+    assert_eq!(c.len(), m * n, "C must be m×n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let workers = plan_workers(threads, m * k * n, n);
+    let ptr = SendPtr(c.as_mut_ptr());
+    if workers <= 1 {
+        gemm_nn_range(m, k, n, a, b, ptr, shift, 0, n);
+        return;
+    }
+    let ranges = col_ranges(n, workers);
+    pool::run(ranges.len(), |wi| {
+        let (lo, hi) = ranges[wi];
+        gemm_nn_range(m, k, n, a, b, ptr, shift, lo, hi);
+    });
+}
+
+/// Panel-blocked NN kernel over output columns `lo..hi`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_range(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[Fx],
+    b: &[Fx],
+    c: SendPtr<i32>,
+    shift: u32,
+    lo: usize,
+    hi: usize,
+) {
+    let half = round_half(shift);
+    for j0 in (lo..hi).step_by(PANEL) {
+        let j1 = (j0 + PANEL).min(hi);
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            // Safety: this task is the only writer of columns lo..hi.
+            let c_row = unsafe { std::slice::from_raw_parts_mut(c.0.add(i * n + j0), j1 - j0) };
+            for (kk, &av) in a_row.iter().enumerate() {
+                if av.raw() == 0 {
+                    continue; // zero operand ⇒ exactly-zero shifted product
+                }
+                let ai = av.raw() as i32;
+                let b_row = &b[kk * n + j0..kk * n + j1];
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv = cv.wrapping_add((ai * bv.raw() as i32 + half) >> shift);
+                }
+            }
+        }
+    }
+}
+
+/// `C (k×n) += Aᵀ · B` where `A` is `m×k` and `B` is `m×n`, shifted-
+/// product wrapping-sum semantics, columns sharded across pool workers.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_mt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[Fx],
+    b: &[Fx],
+    c: &mut [i32],
+    shift: u32,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A must be m×k");
+    assert_eq!(b.len(), m * n, "B must be m×n");
+    assert_eq!(c.len(), k * n, "C must be k×n");
+    if k == 0 || n == 0 {
+        return;
+    }
+    let workers = plan_workers(threads, m * k * n, n);
+    let ptr = SendPtr(c.as_mut_ptr());
+    if workers <= 1 {
+        gemm_tn_range(k, n, a, b, ptr, shift, 0, n);
+        return;
+    }
+    let ranges = col_ranges(n, workers);
+    pool::run(ranges.len(), |wi| {
+        let (lo, hi) = ranges[wi];
+        gemm_tn_range(k, n, a, b, ptr, shift, lo, hi);
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_tn_range(
+    k: usize,
+    n: usize,
+    a: &[Fx],
+    b: &[Fx],
+    c: SendPtr<i32>,
+    shift: u32,
+    lo: usize,
+    hi: usize,
+) {
+    let half = round_half(shift);
+    for (a_row, b_row) in a.chunks_exact(k).zip(b.chunks_exact(n)) {
+        for (kk, &av) in a_row.iter().enumerate() {
+            if av.raw() == 0 {
+                continue;
+            }
+            let ai = av.raw() as i32;
+            // Safety: this task is the only writer of columns lo..hi.
+            let c_row = unsafe { std::slice::from_raw_parts_mut(c.0.add(kk * n + lo), hi - lo) };
+            for (cv, &bv) in c_row.iter_mut().zip(&b_row[lo..hi]) {
+                *cv = cv.wrapping_add((ai * bv.raw() as i32 + half) >> shift);
+            }
+        }
+    }
+}
+
+/// `C (m×n) += A · Bᵀ` where `A` is `m×kd` and `B` is `n×kd`: every
+/// output element is one contiguous-row [`dot_shifted`]. Columns sharded
+/// across pool workers.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_mt(
+    m: usize,
+    n: usize,
+    kd: usize,
+    a: &[Fx],
+    b: &[Fx],
+    c: &mut [i32],
+    shift: u32,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * kd, "A must be m×kd");
+    assert_eq!(b.len(), n * kd, "B must be n×kd");
+    assert_eq!(c.len(), m * n, "C must be m×n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let workers = plan_workers(threads, m * kd.max(1) * n, n);
+    let ptr = SendPtr(c.as_mut_ptr());
+    if workers <= 1 {
+        gemm_nt_range(m, n, kd, a, b, ptr, shift, 0, n);
+        return;
+    }
+    let ranges = col_ranges(n, workers);
+    pool::run(ranges.len(), |wi| {
+        let (lo, hi) = ranges[wi];
+        gemm_nt_range(m, n, kd, a, b, ptr, shift, lo, hi);
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_nt_range(
+    m: usize,
+    n: usize,
+    kd: usize,
+    a: &[Fx],
+    b: &[Fx],
+    c: SendPtr<i32>,
+    shift: u32,
+    lo: usize,
+    hi: usize,
+) {
+    for i in 0..m {
+        let a_row = &a[i * kd..(i + 1) * kd];
+        // Safety: this task is the only writer of columns lo..hi.
+        let c_row = unsafe { std::slice::from_raw_parts_mut(c.0.add(i * n + lo), hi - lo) };
+        for (cv, b_row) in c_row.iter_mut().zip(b[lo * kd..hi * kd].chunks_exact(kd)) {
+            *cv = cv.wrapping_add(dot_shifted(a_row, b_row, shift));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Acc;
+    use crate::util::proptest::check;
+
+    fn rand_fx(g: &mut crate::util::proptest::Gen, n: usize) -> Vec<Fx> {
+        (0..n).map(|_| Fx::from_raw(g.i16_any())).collect()
+    }
+
+    /// Naive reference: the exact `Acc`/`mul_acc_shifted` chain the GEMM
+    /// must reproduce, element by element.
+    fn naive_nn(m: usize, k: usize, n: usize, a: &[Fx], b: &[Fx], shift: u32) -> Vec<i32> {
+        let mut c = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = Acc::ZERO;
+                for kk in 0..k {
+                    acc = acc.add(a[i * k + kk].mul_acc_shifted(b[kk * n + j], shift));
+                }
+                c[i * n + j] = acc.raw();
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn prop_nn_matches_acc_chain_any_shift() {
+        // Full-raw-range operands: sums wrap; the GEMM must wrap the
+        // same way the Acc chain does, at every shift.
+        check("int gemm_nn ~ acc chain", 211, 40, |g| {
+            let (m, k, n) = (g.usize_in(1, 5), g.usize_in(1, 12), g.usize_in(1, 20));
+            let shift = g.usize_in(0, 12) as u32;
+            let a = rand_fx(g, m * k);
+            let b = rand_fx(g, k * n);
+            let mut c = vec![0i32; m * n];
+            gemm_nn_mt(m, k, n, &a, &b, &mut c, shift, 1);
+            assert_eq!(c, naive_nn(m, k, n, &a, &b, shift), "m={m} k={k} n={n} s={shift}");
+        });
+    }
+
+    #[test]
+    fn prop_tn_matches_acc_chain() {
+        check("int gemm_tn ~ acc chain", 223, 40, |g| {
+            let (m, k, n) = (g.usize_in(1, 8), g.usize_in(1, 6), g.usize_in(1, 16));
+            let shift = g.usize_in(0, 12) as u32;
+            let a = rand_fx(g, m * k);
+            let b = rand_fx(g, m * n);
+            let mut c = vec![0i32; k * n];
+            gemm_tn_mt(m, k, n, &a, &b, &mut c, shift, 1);
+            // Reference: C = Aᵀ·B element-wise via the Acc chain.
+            let mut expect = vec![0i32; k * n];
+            for kk in 0..k {
+                for j in 0..n {
+                    let mut acc = Acc::ZERO;
+                    for i in 0..m {
+                        acc = acc.add(a[i * k + kk].mul_acc_shifted(b[i * n + j], shift));
+                    }
+                    expect[kk * n + j] = acc.raw();
+                }
+            }
+            assert_eq!(c, expect, "m={m} k={k} n={n} s={shift}");
+        });
+    }
+
+    #[test]
+    fn prop_nt_matches_acc_chain() {
+        check("int gemm_nt ~ acc chain", 227, 40, |g| {
+            let (m, n, kd) = (g.usize_in(1, 6), g.usize_in(1, 10), g.usize_in(1, 24));
+            let shift = g.usize_in(0, 12) as u32;
+            let a = rand_fx(g, m * kd);
+            let b = rand_fx(g, n * kd);
+            let mut c = vec![0i32; m * n];
+            gemm_nt_mt(m, n, kd, &a, &b, &mut c, shift, 1);
+            let mut expect = vec![0i32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = Acc::ZERO;
+                    for kk in 0..kd {
+                        acc = acc.add(a[i * kd + kk].mul_acc_shifted(b[j * kd + kk], shift));
+                    }
+                    expect[i * n + j] = acc.raw();
+                }
+            }
+            assert_eq!(c, expect, "m={m} n={n} kd={kd} s={shift}");
+        });
+    }
+
+    #[test]
+    fn prop_dot_shifted_matches_vecops_dot_at_shift_zero() {
+        check("dot_shifted(0) == vecops::dot", 229, 100, |g| {
+            let len = g.usize_in(0, 40);
+            let a = rand_fx(g, len);
+            let b = rand_fx(g, len);
+            assert_eq!(dot_shifted(&a, &b, 0), crate::fixed::vecops::dot(&a, &b).raw());
+        });
+    }
+
+    fn rand_fx_rng(rng: &mut crate::util::rng::Pcg32, n: usize) -> Vec<Fx> {
+        (0..n).map(|_| Fx::from_raw(rng.next_u32() as u16 as i16)).collect()
+    }
+
+    #[test]
+    fn mt_bit_identical_to_single_thread() {
+        // Above MT_MIN_MACS so sharding engages; wrap-heavy operands.
+        let mut g = crate::util::rng::Pcg32::seeded(233);
+        let (m, k, n) = (8, 32, 512); // 131072 MACs
+        let a = rand_fx_rng(&mut g, m * k);
+        let b = rand_fx_rng(&mut g, k * n);
+        for shift in [0u32, 3, 9] {
+            let mut c1 = vec![0i32; m * n];
+            gemm_nn_mt(m, k, n, &a, &b, &mut c1, shift, 1);
+            for threads in [2, 3, 5] {
+                let mut cn = vec![0i32; m * n];
+                gemm_nn_mt(m, k, n, &a, &b, &mut cn, shift, threads);
+                assert_eq!(c1, cn, "gemm_nn threads={threads} shift={shift}");
+            }
+        }
+
+        let (m, k, n) = (32, 16, 256);
+        let a = rand_fx_rng(&mut g, m * k);
+        let b = rand_fx_rng(&mut g, m * n);
+        let mut c1 = vec![0i32; k * n];
+        gemm_tn_mt(m, k, n, &a, &b, &mut c1, 3, 1);
+        for threads in [2, 4] {
+            let mut cn = vec![0i32; k * n];
+            gemm_tn_mt(m, k, n, &a, &b, &mut cn, 3, threads);
+            assert_eq!(c1, cn, "gemm_tn threads={threads}");
+        }
+
+        let (m, n, kd) = (16, 64, 128);
+        let a = rand_fx_rng(&mut g, m * kd);
+        let b = rand_fx_rng(&mut g, n * kd);
+        let mut c1 = vec![0i32; m * n];
+        gemm_nt_mt(m, n, kd, &a, &b, &mut c1, 10, 1);
+        for threads in [2, 7] {
+            let mut cn = vec![0i32; m * n];
+            gemm_nt_mt(m, n, kd, &a, &b, &mut cn, 10, threads);
+            assert_eq!(c1, cn, "gemm_nt threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zero_operand_skip_is_exact() {
+        // The inner-loop `a == 0` skip must be invisible: a zero operand
+        // contributes (0 + 2^(s-1)) >> s = 0 at every shift.
+        for shift in 0..=12u32 {
+            assert_eq!(Fx::ZERO.mul_acc_shifted(Fx::MAX, shift).raw(), 0, "shift {shift}");
+            assert_eq!(Fx::ZERO.mul_acc_shifted(Fx::MIN, shift).raw(), 0, "shift {shift}");
+        }
+    }
+
+    #[test]
+    fn panels_cover_wide_matrices() {
+        // n > PANEL exercises the panel loop: ones(1×2)·ones(2×n) = 2·ONE²
+        let n = PANEL * 2 + 37;
+        let a = vec![Fx::ONE; 2];
+        let b = vec![Fx::ONE; 2 * n];
+        let mut c = vec![0i32; n];
+        gemm_nn_mt(1, 2, n, &a, &b, &mut c, 0, 1);
+        let one_sq = Fx::ONE.mul_acc(Fx::ONE).raw();
+        assert!(c.iter().all(|&v| v == 2 * one_sq));
+    }
+}

@@ -12,6 +12,7 @@
 
 mod acc;
 mod fx;
+pub mod gemm;
 pub mod vecops;
 
 pub use acc::Acc;

@@ -59,6 +59,8 @@ SUBCOMMANDS
              GEMM set per minibatch, others loop per sample)
              --threads N (GEMM worker threads, 0 = auto; results are
              bit-identical at any thread count)
+             --qnn-engine naive|fast (Q4.12 compute engine; fast is the
+             integer im2col+GEMM path, bit-identical to the naive oracle)
              --image-size N --conv-channels N --classes N --seed N
   infer      one inference on a trained-from-scratch model
              --backend ... --image-size ... (same model flags)
@@ -69,6 +71,7 @@ SUBCOMMANDS
   speedup    1 training epoch: TinyCL cycles vs XLA baseline wall time
              --steps N (default: one GDumb epoch of 1000)
              --batch N --threads N (batched+threaded f32-fast rung)
+             (also times the qnn naive vs fast integer-GEMM rung)
   sweep      design-space sweep over --lanes-list and --taps-list
   help       this text
 ";
@@ -201,6 +204,21 @@ fn cmd_speedup(args: &Args) -> Result<()> {
     let naive_secs = run_host(BackendKind::F32)?;
     let fast_secs = run_host(BackendKind::F32Fast)?;
 
+    // Q4.12 oracle rung: naive loops vs the bit-identical integer GEMM.
+    let run_qnn = |engine: tinycl::qnn::QnnEngine, threads: usize| -> Result<f64> {
+        let mut backend = Backend::create(
+            BackendKind::Qnn, &config.model, &config.sim, &config.artifacts_dir, config.seed)?;
+        backend.set_qnn_engine(engine);
+        backend.set_threads(threads);
+        let t0 = std::time::Instant::now();
+        for s in &samples {
+            backend.train_step(&s.x, s.label, config.model.num_classes, config.lr);
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    };
+    let qnn_naive_secs = run_qnn(tinycl::qnn::QnnEngine::Naive, 1)?;
+    let qnn_fast_secs = run_qnn(tinycl::qnn::QnnEngine::Fast, config.threads)?;
+
     // Batched + threaded f32-fast rung (PR 2's training engine). The
     // thread budget comes from the shared config parse (--threads 0 =
     // auto); only the batch default differs from `train` (8 makes the
@@ -250,6 +268,12 @@ fn cmd_speedup(args: &Args) -> Result<()> {
         "f32-fast batched (batch {batch}, {threads} threads): {batched_secs:.3} s  \
          ({:.1}× over batch-1 f32-fast)",
         fast_secs / batched_secs
+    );
+    println!("qnn naive Q4.12 oracle (this host): {qnn_naive_secs:.3} s");
+    println!(
+        "qnn fast integer-GEMM oracle (this host): {qnn_fast_secs:.3} s  \
+         ({:.1}× over naive qnn, bit-identical)",
+        qnn_naive_secs / qnn_fast_secs
     );
     match xla_secs {
         Some(x) => println!("XLA CPU baseline (this host): {x:.3} s"),

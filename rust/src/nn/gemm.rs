@@ -28,67 +28,34 @@
 //! convolutions. The dense layer needs sample-major rows; the
 //! [`packed_to_rows`]/[`rows_to_packed`] pair converts (B·C memcpys).
 //!
-//! **Threading (PR 2).** `gemm_nn_mt`/`gemm_tn_mt`/`gemm_nt_mt` shard
-//! the output-column loop across `threads` scoped workers
-//! (`std::thread::scope` — no external deps, nothing outlives the
-//! call). Every worker owns a disjoint contiguous column range of `C`,
-//! so there are no reduction races and no atomics, and the per-element
-//! summation order is independent of the sharding: **threads=N is
-//! bit-identical to threads=1** (asserted by unit tests and
-//! `tests/batched_parity.rs`). Problems below [`MT_MIN_MACS`]
-//! multiply-accumulates stay single-threaded so tiny layers don't pay
-//! spawn overhead.
+//! **Threading (PR 2, pooled in PR 3).** `gemm_nn_mt`/`gemm_tn_mt`/
+//! `gemm_nt_mt` shard the output-column loop across `threads` workers
+//! of the process-wide persistent pool ([`crate::util::pool`] — no
+//! external deps; PR 2 respawned scoped threads per call, which cost
+//! tens of microseconds per GEMM). Every worker owns a disjoint
+//! contiguous column range of `C`, so there are no reduction races and
+//! no atomics, and the per-element summation order is independent of
+//! the sharding: **threads=N is bit-identical to threads=1** (asserted
+//! by unit tests and `tests/batched_parity.rs`). Problems below
+//! [`MT_MIN_MACS`] multiply-accumulates stay single-threaded so tiny
+//! layers don't pay dispatch overhead.
 //!
 //! Numerics: same multiplies as the naive path but different summation
 //! order, so results agree to float round-off (≤ 1e-4 relative — pinned
 //! by `tests/gemm_vs_naive.rs` and the golden vectors), not bitwise.
+//! (The *integer* GEMM core in `fixed::gemm` shares this module's
+//! blocking and sharding scheme but is exactly bitwise — wrapping i32
+//! sums are associative.)
 
 use super::conv::out_size;
 use crate::tensor::{Shape, Tensor};
-use std::thread;
+use crate::util::pool::{self, col_ranges, plan_workers, SendPtr};
+
+pub use crate::util::pool::MT_MIN_MACS;
 
 /// Column-panel width for the blocked GEMMs: 256 f32 = 1 KiB per row
 /// keeps a full B-panel plus the C row in L1 at the paper's geometry.
 const PANEL: usize = 256;
-
-/// Multiply-accumulate count below which the `*_mt` GEMMs stay
-/// single-threaded: spawning scoped workers costs tens of microseconds,
-/// which only amortizes once the problem is a few hundred kFLOPs.
-pub const MT_MIN_MACS: usize = 1 << 16;
-
-/// Raw output pointer smuggled into scoped workers. Each worker derives
-/// `&mut` subslices only for the (row, column-range) chunks it owns, so
-/// no two threads ever alias the same element.
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
-/// How many workers a problem of `macs` multiply-accumulates with
-/// `cols` shardable output columns should use (1 = stay on the caller's
-/// thread). Deterministic in its inputs — thread count never influences
-/// *values*, only wall-clock.
-fn plan_workers(threads: usize, macs: usize, cols: usize) -> usize {
-    if threads <= 1 || macs < MT_MIN_MACS {
-        1
-    } else {
-        threads.min(cols).max(1)
-    }
-}
-
-/// Split `0..n` into `workers` near-equal contiguous ranges.
-fn col_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
-    let base = n / workers;
-    let extra = n % workers;
-    let mut out = Vec::with_capacity(workers);
-    let mut start = 0;
-    for i in 0..workers {
-        let len = base + usize::from(i < extra);
-        out.push((start, start + len));
-        start += len;
-    }
-    out
-}
 
 /// `C (m×n) += A (m×k) · B (k×n)`, all row-major, single-threaded.
 pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
@@ -96,7 +63,7 @@ pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
 }
 
 /// [`gemm_nn`] with the output columns sharded across up to `threads`
-/// scoped workers. Bit-identical to the single-threaded path.
+/// persistent-pool workers. Bit-identical to the single-threaded path.
 pub fn gemm_nn_mt(
     m: usize,
     k: usize,
@@ -118,10 +85,10 @@ pub fn gemm_nn_mt(
         gemm_nn_range(m, k, n, a, b, ptr, 0, n);
         return;
     }
-    thread::scope(|s| {
-        for (lo, hi) in col_ranges(n, workers) {
-            s.spawn(move || gemm_nn_range(m, k, n, a, b, ptr, lo, hi));
-        }
+    let ranges = col_ranges(n, workers);
+    pool::run(ranges.len(), |wi| {
+        let (lo, hi) = ranges[wi];
+        gemm_nn_range(m, k, n, a, b, ptr, lo, hi);
     });
 }
 
@@ -135,7 +102,7 @@ fn gemm_nn_range(
     n: usize,
     a: &[f32],
     b: &[f32],
-    c: SendPtr,
+    c: SendPtr<f32>,
     lo: usize,
     hi: usize,
 ) {
@@ -167,7 +134,7 @@ pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
 }
 
 /// [`gemm_tn`] with the output columns sharded across up to `threads`
-/// scoped workers. Bit-identical to the single-threaded path.
+/// persistent-pool workers. Bit-identical to the single-threaded path.
 pub fn gemm_tn_mt(
     m: usize,
     k: usize,
@@ -189,16 +156,16 @@ pub fn gemm_tn_mt(
         gemm_tn_range(k, n, a, b, ptr, 0, n);
         return;
     }
-    thread::scope(|s| {
-        for (lo, hi) in col_ranges(n, workers) {
-            s.spawn(move || gemm_tn_range(k, n, a, b, ptr, lo, hi));
-        }
+    let ranges = col_ranges(n, workers);
+    pool::run(ranges.len(), |wi| {
+        let (lo, hi) = ranges[wi];
+        gemm_tn_range(k, n, a, b, ptr, lo, hi);
     });
 }
 
 /// The TN kernel over output columns `lo..hi`: the row-loop (reduction)
 /// order per output element never depends on `(lo, hi)`.
-fn gemm_tn_range(k: usize, n: usize, a: &[f32], b: &[f32], c: SendPtr, lo: usize, hi: usize) {
+fn gemm_tn_range(k: usize, n: usize, a: &[f32], b: &[f32], c: SendPtr<f32>, lo: usize, hi: usize) {
     for (a_row, b_row) in a.chunks_exact(k).zip(b.chunks_exact(n)) {
         for (kk, &av) in a_row.iter().enumerate() {
             if av == 0.0 {
@@ -221,7 +188,7 @@ pub fn gemm_nt(m: usize, n: usize, kd: usize, a: &[f32], b: &[f32], c: &mut [f32
 }
 
 /// [`gemm_nt`] with the output columns sharded across up to `threads`
-/// scoped workers. Bit-identical to the single-threaded path.
+/// persistent-pool workers. Bit-identical to the single-threaded path.
 pub fn gemm_nt_mt(
     m: usize,
     n: usize,
@@ -243,10 +210,10 @@ pub fn gemm_nt_mt(
         gemm_nt_range(m, n, kd, a, b, ptr, 0, n);
         return;
     }
-    thread::scope(|s| {
-        for (lo, hi) in col_ranges(n, workers) {
-            s.spawn(move || gemm_nt_range(m, n, kd, a, b, ptr, lo, hi));
-        }
+    let ranges = col_ranges(n, workers);
+    pool::run(ranges.len(), |wi| {
+        let (lo, hi) = ranges[wi];
+        gemm_nt_range(m, n, kd, a, b, ptr, lo, hi);
     });
 }
 
@@ -259,7 +226,7 @@ fn gemm_nt_range(
     kd: usize,
     a: &[f32],
     b: &[f32],
-    c: SendPtr,
+    c: SendPtr<f32>,
     lo: usize,
     hi: usize,
 ) {
@@ -313,11 +280,13 @@ pub fn im2col(
 /// 1's, … (for `B = 1` this is plain CHW). Packs all images into one
 /// `(Cin·Kh·Kw) × (B·Oh·Ow)` column matrix with image-major columns
 /// (image `b` owns columns `b·Oh·Ow ..`). Images are sharded across up
-/// to `threads` scoped workers; each image's columns are disjoint, so
-/// the result is bit-identical at any thread count.
+/// to `threads` pool workers; each image's columns are disjoint, so
+/// the result is bit-identical at any thread count. Generic over the
+/// element (pure data movement; out-of-image taps stay `T::default()`)
+/// so the f32 and Q4.12 engines share one packing definition.
 #[allow(clippy::too_many_arguments)]
-pub fn im2col_batch(
-    x: &[f32],
+pub fn im2col_batch<T: Copy + Default>(
+    x: &[T],
     batch: usize,
     cin: usize,
     h: usize,
@@ -327,14 +296,14 @@ pub fn im2col_batch(
     stride: usize,
     pad: usize,
     threads: usize,
-) -> (Vec<f32>, usize, usize) {
+) -> (Vec<T>, usize, usize) {
     assert!(batch > 0, "empty batch");
     assert_eq!(x.len(), cin * batch * h * w, "packed input size");
     let oh = out_size(h, kh, stride, pad);
     let ow = out_size(w, kw, stride, pad);
     let n = oh * ow;
     let bn = batch * n;
-    let mut cols = vec![0.0f32; cin * kh * kw * bn];
+    let mut cols = vec![T::default(); cin * kh * kw * bn];
     let workers = plan_workers(threads, cols.len(), batch);
     let ptr = SendPtr(cols.as_mut_ptr());
     let pack_images = |b0: usize, b1: usize| {
@@ -372,11 +341,10 @@ pub fn im2col_batch(
     if workers <= 1 {
         pack_images(0, batch);
     } else {
-        let worker = &pack_images;
-        thread::scope(|s| {
-            for (b0, b1) in col_ranges(batch, workers) {
-                s.spawn(move || worker(b0, b1));
-            }
+        let ranges = col_ranges(batch, workers);
+        pool::run(ranges.len(), |wi| {
+            let (b0, b1) = ranges[wi];
+            pack_images(b0, b1);
         });
     }
     (cols, oh, ow)
@@ -443,11 +411,10 @@ fn col2im_batch(
     if workers <= 1 {
         scatter_images(0, batch);
     } else {
-        let worker = &scatter_images;
-        thread::scope(|s| {
-            for (b0, b1) in col_ranges(batch, workers) {
-                s.spawn(move || worker(b0, b1));
-            }
+        let ranges = col_ranges(batch, workers);
+        pool::run(ranges.len(), |wi| {
+            let (b0, b1) = ranges[wi];
+            scatter_images(b0, b1);
         });
     }
     dx
@@ -629,13 +596,14 @@ pub fn dense_weight_grad_batch(
 
 /// Pack `B` same-shape CHW images into the channel-major batch layout —
 /// a row-major `(C, B·H·W)` matrix whose row `c` holds image 0's plane,
-/// then image 1's, …
-pub fn pack_batch(xs: &[&Tensor<f32>]) -> Vec<f32> {
+/// then image 1's, … Generic over the element so the f32 and Q4.12
+/// (`fixed::Fx`) engines share one layout definition.
+pub fn pack_batch<T: Copy + Default>(xs: &[&Tensor<T>]) -> Vec<T> {
     assert!(!xs.is_empty(), "empty batch");
     let shape = xs[0].shape();
     let [c, h, w]: [usize; 3] = shape.dims().try_into().expect("samples must be CHW");
     let (b, n) = (xs.len(), h * w);
-    let mut out = vec![0.0f32; c * b * n];
+    let mut out = vec![T::default(); c * b * n];
     for (bi, x) in xs.iter().enumerate() {
         assert_eq!(x.shape(), shape, "batch samples must share a shape");
         let xd = x.data();
@@ -650,9 +618,14 @@ pub fn pack_batch(xs: &[&Tensor<f32>]) -> Vec<f32> {
 /// Channel-major packed `(C, B·N)` → sample-major rows `(B, C·N)`: row
 /// `b` is image `b`'s flattened CHW activation, ready for the dense
 /// GEMM.
-pub fn packed_to_rows(packed: &[f32], channels: usize, batch: usize, n: usize) -> Vec<f32> {
+pub fn packed_to_rows<T: Copy + Default>(
+    packed: &[T],
+    channels: usize,
+    batch: usize,
+    n: usize,
+) -> Vec<T> {
     assert_eq!(packed.len(), channels * batch * n);
-    let mut rows = vec![0.0f32; batch * channels * n];
+    let mut rows = vec![T::default(); batch * channels * n];
     for c in 0..channels {
         for b in 0..batch {
             let src = (c * batch + b) * n;
@@ -667,7 +640,12 @@ pub fn packed_to_rows(packed: &[f32], channels: usize, batch: usize, n: usize) -
 /// inverse of [`packed_to_rows`] (used on the dense layer's input
 /// gradient before it re-enters the conv stack). The inverse block
 /// transpose is the same transpose with the axis roles swapped.
-pub fn rows_to_packed(rows: &[f32], channels: usize, batch: usize, n: usize) -> Vec<f32> {
+pub fn rows_to_packed<T: Copy + Default>(
+    rows: &[T],
+    channels: usize,
+    batch: usize,
+    n: usize,
+) -> Vec<T> {
     packed_to_rows(rows, batch, channels, n)
 }
 
@@ -772,30 +750,14 @@ mod tests {
 
     #[test]
     fn mt_threshold_keeps_tiny_problems_single_threaded() {
-        assert_eq!(plan_workers(8, MT_MIN_MACS - 1, 1000), 1);
-        assert_eq!(plan_workers(8, MT_MIN_MACS, 1000), 8);
-        assert_eq!(plan_workers(1, usize::MAX, 1000), 1);
-        // Never more workers than shardable columns.
-        assert_eq!(plan_workers(8, usize::MAX, 3), 3);
-        // Oversubscribed tiny GEMM still computes correctly.
+        // plan_workers/col_ranges unit properties live with the helpers
+        // in `util::pool`; here only the GEMM-level consequence:
+        // an oversubscribed tiny GEMM still computes correctly.
         let a = [1.0, 2.0];
         let b = [3.0, 4.0];
         let mut c = [0.0f32; 1];
         gemm_nt_mt(1, 1, 2, &a, &b, &mut c, 16);
         assert_eq!(c, [11.0]);
-    }
-
-    #[test]
-    fn col_ranges_partition() {
-        for (n, w) in [(10, 3), (7, 7), (256, 2), (5, 1)] {
-            let ranges = col_ranges(n, w);
-            assert_eq!(ranges.len(), w);
-            assert_eq!(ranges[0].0, 0);
-            assert_eq!(ranges[w - 1].1, n);
-            for i in 1..w {
-                assert_eq!(ranges[i].0, ranges[i - 1].1, "contiguous at {i}");
-            }
-        }
     }
 
     #[test]

@@ -1,0 +1,529 @@
+//! Integer im2col + GEMM fast path for the Q4.12 layer computations —
+//! **bit-identical** to the naive loops in [`super::layers`] and to the
+//! cycle-accurate `sim` executors, just restructured for the host CPU.
+//!
+//! Lowering (same shapes as the f32 core in `nn::gemm`):
+//!
+//! * forward:      `Y (Cout×B·N) = K (Cout×KD) · cols(X) (KD×B·N)`
+//! * input grad:   `dcols = Kᵀ · dY`, then a wrapping col2im scatter-add
+//! * kernel grad:  per-sample `dKᵇ (Cout×KD) = dYᵇ (Cout×N) · cols(Xᵇ)ᵀ`
+//! * dense:        `Y (B×Nout) = X (B×Nin) · W`, `dX = dY · Wᵀ`
+//!
+//! Why this is exact and not approximate: every Q4.12 MAC term is an
+//! individually barrel-shifted product summed on a **wrapping 32-bit
+//! adder** ([`crate::fixed::gemm`]), wrapping addition is associative
+//! and commutative, and zero-padding taps contribute exactly-zero terms
+//! — so the GEMM's loop order, panel blocking, and disjoint-column
+//! thread sharding reproduce the naive accumulators bit for bit. The
+//! per-element writebacks (format shift, round-to-nearest, saturation,
+//! value clips, dither) are applied once per output at the same points
+//! `layers.rs` and the RTL apply them. Pinned by
+//! `tests/qnn_fast_parity.rs` across shapes, batch sizes, thread counts
+//! and saturation/wrap-heavy operands.
+//!
+//! Batched activations use the channel-major packed `(C, B·H·W)` layout
+//! of `nn::gemm` (for `B = 1` it *is* plain CHW), with
+//! [`crate::nn::gemm::pack_batch`]/[`crate::nn::gemm::packed_to_rows`]
+//! shared generically between the f32 and integer engines.
+
+use super::layers::{DITHER_BASE_W, GRAD_CLIP, PARAM_CLIP};
+use crate::fixed::{acc_fmt_shift, gemm as fxgemm, wb_dither, Acc, Fx};
+use crate::tensor::{Shape, Tensor};
+use crate::util::pool::{self, col_ranges, plan_workers, SendPtr};
+
+/// Batched im2col over Q4.12 activations — the shared generic packing
+/// ([`crate::nn::gemm::im2col_batch`]) at stride 1, the only
+/// configuration the Q4.12 model (and the paper's datapath) supports.
+/// Out-of-image taps stay `Fx::ZERO`, whose shifted products are exactly
+/// zero, matching the naive loops' skipped taps. Images are sharded
+/// across pool workers; bit-identical at any thread count. Returns the
+/// column matrix and the output spatial size.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_batch(
+    x: &[Fx],
+    batch: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    pad: usize,
+    threads: usize,
+) -> (Vec<Fx>, usize, usize) {
+    crate::nn::gemm::im2col_batch(x, batch, cin, h, w, kh, kw, 1, pad, threads)
+}
+
+/// Batched conv forward (Eq. 1) over an already-packed column matrix:
+/// one `Cout × (B·N)` integer GEMM, then the hardware's per-pixel
+/// writeback (format-shift round + saturate, optional fused ReLU).
+/// Bit-identical to looping [`super::layers::conv_forward`] per sample.
+pub fn conv_forward_batch(
+    cols: &[Fx],
+    kernel: &Tensor<Fx>,
+    bn: usize,
+    fuse_relu: bool,
+    threads: usize,
+) -> Vec<Fx> {
+    let kd = kernel.shape().dims();
+    let (cout, kdim) = (kd[0], kd[1] * kd[2] * kd[3]);
+    let fmt = acc_fmt_shift(kdim);
+    let mut accs = vec![0i32; cout * bn];
+    fxgemm::gemm_nn_mt(cout, kdim, bn, kernel.data(), cols, &mut accs, fmt, threads);
+    accs.iter()
+        .map(|&raw| {
+            let v = Acc::from_raw(raw).to_fx_fmt(fmt);
+            if fuse_relu {
+                v.relu()
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+/// Batched conv gradient propagation (Eq. 2): `dcols = Kᵀ·dY` via one
+/// integer GEMM, then a wrapping col2im scatter-add in the accumulator
+/// domain with a single per-pixel writeback. `dy` is channel-major
+/// packed `(Cout, B·Oh·Ow)`; the result is channel-major packed
+/// `(Cin, B·H·W)`. Bit-identical to
+/// [`super::layers::conv_input_grad`] per sample.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_input_grad_batch(
+    dy: &[Fx],
+    kernel: &Tensor<Fx>,
+    batch: usize,
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+    pad: usize,
+    threads: usize,
+) -> Vec<Fx> {
+    let kd = kernel.shape().dims();
+    let (cout, cin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
+    let n = oh * ow;
+    let bn = batch * n;
+    assert_eq!(dy.len(), cout * bn, "dy size");
+    let fmt = acc_fmt_shift(cout * kh * kw);
+    let kdim = cin * kh * kw;
+    let mut dcols = vec![0i32; kdim * bn];
+    fxgemm::gemm_tn_mt(cout, kdim, bn, kernel.data(), dy, &mut dcols, fmt, threads);
+
+    // col2im: wrapping scatter-add of the per-tap partial accumulators
+    // into one Q8.24 accumulator per input pixel (the same product set,
+    // hence the same wrapped sum, as the naive per-pixel loop). Images
+    // are sharded across workers; each pixel has exactly one writer.
+    let mut dx = vec![0i32; cin * batch * h * w];
+    let workers = plan_workers(threads, dcols.len(), batch);
+    let ptr = SendPtr(dx.as_mut_ptr());
+    let scatter_images = |b0: usize, b1: usize| {
+        for bi in b0..b1 {
+            let mut row = 0;
+            for ic in 0..cin {
+                // Safety: image bi's plane is written only by the worker
+                // that owns bi.
+                let plane = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add((ic * batch + bi) * h * w), h * w)
+                };
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let src = &dcols[row * bn + bi * n..row * bn + bi * n + n];
+                        for oy in 0..oh {
+                            let iy = (oy + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            let drow = &mut plane[iy as usize * w..iy as usize * w + w];
+                            let srow = &src[oy * ow..(oy + 1) * ow];
+                            for ox in 0..ow {
+                                let ix = (ox + kx) as isize - pad as isize;
+                                if ix >= 0 && ix < w as isize {
+                                    let slot = &mut drow[ix as usize];
+                                    *slot = slot.wrapping_add(srow[ox]);
+                                }
+                            }
+                        }
+                        row += 1;
+                    }
+                }
+            }
+        }
+    };
+    if workers <= 1 {
+        scatter_images(0, batch);
+    } else {
+        let ranges = col_ranges(batch, workers);
+        pool::run(ranges.len(), |wi| {
+            let (b0, b1) = ranges[wi];
+            scatter_images(b0, b1);
+        });
+    }
+    dx.iter().map(|&raw| Acc::from_raw(raw).to_fx_fmt(fmt)).collect()
+}
+
+/// Batched conv kernel gradient (Eq. 3), **per sample**: the Q4.12
+/// training semantics applies each sample's `param_update` sequentially,
+/// so the batch returns one `dKᵇ` per sample rather than a summed
+/// gradient. Each `dKᵇ` is a `Cout×KD · KD×N` NT-GEMM over the sample's
+/// contiguous column range of the shared packed matrices; the writeback
+/// is the hardware's `to_fx` round + `±GRAD_CLIP` clamp per tap.
+/// `(sample, out-channel)` units are sharded across pool workers.
+/// Bit-identical to [`super::layers::conv_kernel_grad`] per sample.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_kernel_grad_batch(
+    dy: &[Fx],
+    cols: &[Fx],
+    kernel_shape: &Shape,
+    batch: usize,
+    n: usize,
+    grad_shift: u32,
+    threads: usize,
+) -> Vec<Tensor<Fx>> {
+    let kd = kernel_shape.dims();
+    let (cout, kdim) = (kd[0], kd[1] * kd[2] * kd[3]);
+    let bn = batch * n;
+    assert_eq!(dy.len(), cout * bn, "dy size");
+    assert_eq!(cols.len(), kdim * bn, "cols size");
+
+    let units = batch * cout;
+    let mut accs = vec![0i32; units * kdim];
+    let workers = plan_workers(threads, units * kdim * n, units);
+    let ptr = SendPtr(accs.as_mut_ptr());
+    let grad_units = |lo: usize, hi: usize| {
+        for u in lo..hi {
+            let (bi, oc) = (u / cout, u % cout);
+            let dy_row = &dy[oc * bn + bi * n..oc * bn + bi * n + n];
+            // Safety: unit u's accumulator row has exactly one writer.
+            let out_row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * kdim), kdim) };
+            for (r, slot) in out_row.iter_mut().enumerate() {
+                let col_row = &cols[r * bn + bi * n..r * bn + bi * n + n];
+                *slot = fxgemm::dot_shifted(dy_row, col_row, grad_shift);
+            }
+        }
+    };
+    if workers <= 1 {
+        grad_units(0, units);
+    } else {
+        let ranges = col_ranges(units, workers);
+        pool::run(ranges.len(), |wi| {
+            let (lo, hi) = ranges[wi];
+            grad_units(lo, hi);
+        });
+    }
+
+    (0..batch)
+        .map(|bi| {
+            let mut dk = Tensor::zeros(kernel_shape.clone());
+            for (slot, &raw) in dk
+                .data_mut()
+                .iter_mut()
+                .zip(&accs[bi * cout * kdim..(bi + 1) * cout * kdim])
+            {
+                *slot = Acc::from_raw(raw).to_fx().clamp_abs(GRAD_CLIP);
+            }
+            dk
+        })
+        .collect()
+}
+
+/// Batched dense forward (Eq. 4): one `B×Nin · Nin×Nout` integer GEMM
+/// with `x` in sample-major rows, writeback per output element.
+/// Bit-identical to [`super::layers::dense_forward`] per sample.
+pub fn dense_forward_batch(x: &[Fx], w: &Tensor<Fx>, batch: usize, threads: usize) -> Vec<Fx> {
+    let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
+    assert_eq!(x.len(), batch * n_in, "input length {} vs {batch}×{n_in}", x.len());
+    let fmt = acc_fmt_shift(n_in);
+    let mut accs = vec![0i32; batch * n_out];
+    fxgemm::gemm_nn_mt(batch, n_in, n_out, x, w.data(), &mut accs, fmt, threads);
+    accs.iter().map(|&raw| Acc::from_raw(raw).to_fx_fmt(fmt)).collect()
+}
+
+/// Batched dense gradient propagation (Eq. 5): `dX (B×Nin) = dY · Wᵀ` —
+/// every element one contiguous-row shifted dot. Bit-identical to
+/// [`super::layers::dense_input_grad`] per sample.
+pub fn dense_input_grad_batch(dy: &[Fx], w: &Tensor<Fx>, batch: usize, threads: usize) -> Vec<Fx> {
+    let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
+    assert_eq!(dy.len(), batch * n_out, "dy size");
+    let fmt = acc_fmt_shift(n_out);
+    let mut accs = vec![0i32; batch * n_in];
+    fxgemm::gemm_nt_mt(batch, n_in, n_out, dy, w.data(), &mut accs, fmt, threads);
+    accs.iter().map(|&raw| Acc::from_raw(raw).to_fx_fmt(fmt)).collect()
+}
+
+/// Fused dense weight update (Eq. 6 + SGD) with the weight rows sharded
+/// across pool workers — the per-element arithmetic (widen, shifted
+/// product subtract, dithered writeback, `±PARAM_CLIP`) is exactly
+/// [`super::layers::dense_weight_update`]'s, and rows are independent,
+/// so sharding is bit-invisible.
+pub fn dense_weight_update(
+    w: &mut Tensor<Fx>,
+    x: &[Fx],
+    dy_scaled: &[Fx],
+    grad_shift: u32,
+    step: u64,
+    threads: usize,
+) {
+    let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
+    assert_eq!(x.len(), n_in);
+    assert_eq!(dy_scaled.len(), n_out);
+    let wd = w.data_mut();
+    let workers = plan_workers(threads, n_in * n_out, n_in);
+    let ptr = SendPtr(wd.as_mut_ptr());
+    let update_rows = |lo: usize, hi: usize| {
+        for (i, &xi) in x.iter().enumerate().take(hi).skip(lo) {
+            if xi == Fx::ZERO {
+                continue; // zero product leaves the weight bit-identical
+            }
+            // Safety: row i is written only by the worker that owns it.
+            let row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * n_out), n_out) };
+            for (n, wv) in row.iter_mut().enumerate() {
+                let acc = Acc::from_fx(*wv).sub(xi.mul_acc_shifted(dy_scaled[n], grad_shift));
+                let dither = wb_dither(DITHER_BASE_W + (i * n_out + n) as u64, step);
+                *wv = acc.to_fx_dithered(dither).clamp_abs(PARAM_CLIP);
+            }
+        }
+    };
+    if workers <= 1 {
+        update_rows(0, n_in);
+    } else {
+        let ranges = col_ranges(n_in, workers);
+        pool::run(ranges.len(), |wi| {
+            let (lo, hi) = ranges[wi];
+            update_rows(lo, hi);
+        });
+    }
+}
+
+/// ReLU backward over packed slices: gradient passes where the stored
+/// post-activation is positive (same mux as
+/// [`super::layers::relu_backward`], flat layout).
+pub fn relu_mask(dy: &[Fx], a: &[Fx]) -> Vec<Fx> {
+    assert_eq!(dy.len(), a.len());
+    dy.iter()
+        .zip(a)
+        .map(|(&g, &av)| if av > Fx::ZERO { g } else { Fx::ZERO })
+        .collect()
+}
+
+// ---- single-sample wrappers (drop-in replacements for the naive ops,
+// used by the batch-1 paths and the parity suites) ----
+
+/// [`super::layers::conv_forward`] through the integer GEMM engine.
+pub fn conv_forward(
+    x: &Tensor<Fx>,
+    kernel: &Tensor<Fx>,
+    pad: usize,
+    fuse_relu: bool,
+    threads: usize,
+) -> Tensor<Fx> {
+    let [cin, h, w]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
+    let kd = kernel.shape().dims();
+    let (kcin, kh, kw) = (kd[1], kd[2], kd[3]);
+    assert_eq!(cin, kcin, "channel mismatch: x {cin} vs kernel {kcin}");
+    let (cols, oh, ow) = im2col_batch(x.data(), 1, cin, h, w, kh, kw, pad, threads);
+    let out = conv_forward_batch(&cols, kernel, oh * ow, fuse_relu, threads);
+    Tensor::from_vec(Shape::d3(kd[0], oh, ow), out)
+}
+
+/// [`super::layers::conv_input_grad`] through the integer GEMM engine.
+pub fn conv_input_grad(
+    dy: &Tensor<Fx>,
+    kernel: &Tensor<Fx>,
+    x_shape: &Shape,
+    pad: usize,
+    threads: usize,
+) -> Tensor<Fx> {
+    let [cin, h, w]: [usize; 3] = x_shape.dims().try_into().expect("x_shape must be CHW");
+    let kd = kernel.shape().dims();
+    assert_eq!(cin, kd[1]);
+    let dyd = dy.shape().dims();
+    assert_eq!(dyd[0], kd[0], "dy channels");
+    let dx = conv_input_grad_batch(dy.data(), kernel, 1, h, w, dyd[1], dyd[2], pad, threads);
+    Tensor::from_vec(x_shape.clone(), dx)
+}
+
+/// [`super::layers::conv_kernel_grad`] through the integer GEMM engine.
+pub fn conv_kernel_grad(
+    dy: &Tensor<Fx>,
+    x: &Tensor<Fx>,
+    kernel_shape: &Shape,
+    pad: usize,
+    grad_shift: u32,
+    threads: usize,
+) -> Tensor<Fx> {
+    let [cin, h, w]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
+    let kd = kernel_shape.dims();
+    assert_eq!(cin, kd[1]);
+    let (cols, oh, ow) = im2col_batch(x.data(), 1, cin, h, w, kd[2], kd[3], pad, threads);
+    let dyd = dy.shape().dims();
+    assert_eq!(dyd[0], kd[0]);
+    assert_eq!((dyd[1], dyd[2]), (oh, ow), "dy geometry vs conv geometry");
+    conv_kernel_grad_batch(dy.data(), &cols, kernel_shape, 1, oh * ow, grad_shift, threads)
+        .pop()
+        .expect("batch of one")
+}
+
+/// [`super::layers::dense_forward`] through the integer GEMM engine.
+pub fn dense_forward(x: &[Fx], w: &Tensor<Fx>, threads: usize) -> Vec<Fx> {
+    dense_forward_batch(x, w, 1, threads)
+}
+
+/// [`super::layers::dense_input_grad`] through the integer GEMM engine.
+pub fn dense_input_grad(dy: &[Fx], w: &Tensor<Fx>, threads: usize) -> Vec<Fx> {
+    dense_input_grad_batch(dy, w, 1, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qnn::layers;
+    use crate::util::rng::Pcg32;
+
+    fn rand_fx_tensor(rng: &mut Pcg32, shape: Shape) -> Tensor<Fx> {
+        let n = shape.numel();
+        let data = (0..n).map(|_| Fx::from_raw(rng.next_u32() as u16 as i16)).collect();
+        Tensor::from_vec(shape, data)
+    }
+
+    #[test]
+    fn conv_forward_bit_exact_full_range() {
+        // Full-raw-range operands: writebacks saturate, accumulators can
+        // wrap — the fast path must reproduce every bit anyway.
+        let mut rng = Pcg32::seeded(301);
+        for (cin, cout, hw, pad) in [(3, 4, 6, 1), (1, 2, 5, 0), (4, 3, 7, 1)] {
+            let x = rand_fx_tensor(&mut rng, Shape::d3(cin, hw, hw));
+            let k = rand_fx_tensor(&mut rng, Shape::d4(cout, cin, 3, 3));
+            for fuse_relu in [false, true] {
+                let naive = layers::conv_forward(&x, &k, pad, fuse_relu);
+                for threads in [1, 3] {
+                    let fast = conv_forward(&x, &k, pad, fuse_relu, threads);
+                    assert_eq!(fast.shape(), naive.shape());
+                    assert_eq!(
+                        fast.data(),
+                        naive.data(),
+                        "cin={cin} cout={cout} hw={hw} pad={pad} relu={fuse_relu} t={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_input_grad_bit_exact_full_range() {
+        let mut rng = Pcg32::seeded(303);
+        for (cin, cout, hw, pad) in [(3, 4, 6, 1), (2, 2, 5, 0)] {
+            let x_shape = Shape::d3(cin, hw, hw);
+            let k = rand_fx_tensor(&mut rng, Shape::d4(cout, cin, 3, 3));
+            let (gh, gw) = (hw + 2 * pad - 2, hw + 2 * pad - 2);
+            let dy = rand_fx_tensor(&mut rng, Shape::d3(cout, gh, gw));
+            let naive = layers::conv_input_grad(&dy, &k, &x_shape, pad);
+            for threads in [1, 2] {
+                let fast = conv_input_grad(&dy, &k, &x_shape, pad, threads);
+                assert_eq!(fast.data(), naive.data(), "cin={cin} pad={pad} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_kernel_grad_bit_exact_incl_wrap() {
+        let mut rng = Pcg32::seeded(307);
+        for (cin, cout, hw, pad, shift) in [(2, 3, 6, 1, 0), (3, 2, 8, 1, 3), (1, 1, 5, 0, 8)] {
+            let x = rand_fx_tensor(&mut rng, Shape::d3(cin, hw, hw));
+            let kshape = Shape::d4(cout, cin, 3, 3);
+            let (gh, gw) = (hw + 2 * pad - 2, hw + 2 * pad - 2);
+            let dy = rand_fx_tensor(&mut rng, Shape::d3(cout, gh, gw));
+            let naive = layers::conv_kernel_grad(&dy, &x, &kshape, pad, shift);
+            for threads in [1, 2] {
+                let fast = conv_kernel_grad(&dy, &x, &kshape, pad, shift, threads);
+                assert_eq!(fast.data(), naive.data(), "cin={cin} shift={shift} t={threads}");
+            }
+        }
+        // The adversarial wrap case from layers.rs: unshifted accumulation
+        // wraps; the fast path must wrap identically.
+        let x = Tensor::full(Shape::d3(1, 16, 16), Fx::from_f32(4.0));
+        let dy = Tensor::full(Shape::d3(1, 16, 16), Fx::from_f32(4.0));
+        let kshape = Shape::d4(1, 1, 3, 3);
+        for shift in [0u32, 8] {
+            let naive = layers::conv_kernel_grad(&dy, &x, &kshape, 1, shift);
+            let fast = conv_kernel_grad(&dy, &x, &kshape, 1, shift, 2);
+            assert_eq!(fast.data(), naive.data(), "wrap case shift={shift}");
+        }
+    }
+
+    #[test]
+    fn dense_ops_bit_exact_full_range() {
+        let mut rng = Pcg32::seeded(311);
+        for (n_in, n_out) in [(7, 3), (64, 10), (33, 5)] {
+            let x: Vec<Fx> =
+                (0..n_in).map(|_| Fx::from_raw(rng.next_u32() as u16 as i16)).collect();
+            let w = rand_fx_tensor(&mut rng, Shape::d2(n_in, n_out));
+            let dy: Vec<Fx> =
+                (0..n_out).map(|_| Fx::from_raw(rng.next_u32() as u16 as i16)).collect();
+            for threads in [1, 2] {
+                assert_eq!(
+                    dense_forward(&x, &w, threads),
+                    layers::dense_forward(&x, &w),
+                    "fwd {n_in}x{n_out} t={threads}"
+                );
+                assert_eq!(
+                    dense_input_grad(&dy, &w, threads),
+                    layers::dense_input_grad(&dy, &w),
+                    "dX {n_in}x{n_out} t={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_dense_update_bit_exact() {
+        let mut rng = Pcg32::seeded(313);
+        let (n_in, n_out) = (40, 6);
+        let w0 = rand_fx_tensor(&mut rng, Shape::d2(n_in, n_out));
+        let mut x: Vec<Fx> =
+            (0..n_in).map(|_| Fx::from_raw(rng.next_u32() as u16 as i16)).collect();
+        x[3] = Fx::ZERO; // exercise the zero-activation skip
+        let dy: Vec<Fx> = (0..n_out).map(|_| Fx::from_raw(rng.next_u32() as u16 as i16)).collect();
+        for (shift, step) in [(0u32, 0u64), (6, 41)] {
+            let mut naive = w0.clone();
+            layers::dense_weight_update(&mut naive, &x, &dy, shift, step);
+            for threads in [1, 3] {
+                let mut fast = w0.clone();
+                dense_weight_update(&mut fast, &x, &dy, shift, step, threads);
+                assert_eq!(fast.data(), naive.data(), "shift={shift} step={step} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn relu_mask_matches_layers() {
+        let mut rng = Pcg32::seeded(317);
+        let a = rand_fx_tensor(&mut rng, Shape::d3(2, 4, 4));
+        let dy = rand_fx_tensor(&mut rng, Shape::d3(2, 4, 4));
+        let expect = layers::relu_backward(&dy, &a);
+        assert_eq!(relu_mask(dy.data(), a.data()), expect.data());
+    }
+
+    #[test]
+    fn im2col_batch_columns_are_per_image() {
+        let mut rng = Pcg32::seeded(319);
+        let shape = Shape::d3(2, 5, 5);
+        let xs: Vec<Tensor<Fx>> = (0..3).map(|_| rand_fx_tensor(&mut rng, shape.clone())).collect();
+        let refs: Vec<&Tensor<Fx>> = xs.iter().collect();
+        let packed = crate::nn::gemm::pack_batch(&refs);
+        for threads in [1, 2] {
+            let (cols, oh, ow) = im2col_batch(&packed, 3, 2, 5, 5, 3, 3, 1, threads);
+            let n = oh * ow;
+            for (bi, x) in xs.iter().enumerate() {
+                let (single, soh, sow) = im2col_batch(x.data(), 1, 2, 5, 5, 3, 3, 1, 1);
+                assert_eq!((soh, sow), (oh, ow));
+                for r in 0..2 * 9 {
+                    assert_eq!(
+                        &cols[r * 3 * n + bi * n..r * 3 * n + (bi + 1) * n],
+                        &single[r * n..(r + 1) * n],
+                        "image {bi} row {r} (threads {threads})"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -25,7 +25,48 @@
 //! datapath, only that dY "comes from the loss computation" (§III-F-4);
 //! see DESIGN.md substitution table.
 
+pub mod gemm;
 pub mod layers;
 pub mod model;
 
 pub use model::{QGradients, QModel, QParams};
+
+/// Which compute core executes the Q4.12 layer computations. Both
+/// engines produce **bit-identical** results (pinned by
+/// `tests/qnn_fast_parity.rs`); `naive` remains selectable as the
+/// debugging oracle (`--qnn-engine naive`), `fast` is the integer
+/// im2col+GEMM restructuring of the same arithmetic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QnnEngine {
+    /// Per-element reference loops (`qnn::layers`) — what the RTL's
+    /// dataflow description reads like.
+    Naive,
+    /// Integer im2col + cache-blocked GEMM (`qnn::gemm`) — the same
+    /// wrapping-accumulator arithmetic restructured for the host CPU.
+    #[default]
+    Fast,
+}
+
+impl QnnEngine {
+    pub const ALL: [QnnEngine; 2] = [QnnEngine::Naive, QnnEngine::Fast];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QnnEngine::Naive => "naive",
+            QnnEngine::Fast => "fast",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QnnEngine> {
+        QnnEngine::ALL.into_iter().find(|e| e.name() == s)
+    }
+
+    /// Parse the `--qnn-engine` CLI flag (absent ⇒ the default, fast) —
+    /// the one parse-or-actionable-error shared by the CLI, benches and
+    /// examples.
+    pub fn from_args(args: &crate::util::cli::Args) -> anyhow::Result<QnnEngine> {
+        let s = args.str_or("qnn-engine", QnnEngine::default().name());
+        QnnEngine::parse(&s)
+            .ok_or_else(|| anyhow::anyhow!("unknown qnn engine '{s}' (naive|fast)"))
+    }
+}

@@ -1,8 +1,29 @@
 //! The full TinyCL workload in hardware numerics: quantized model state,
 //! forward, backward and the fused update sequence the control unit runs.
+//!
+//! Two interchangeable compute engines execute the layer math
+//! ([`QnnEngine`]): the naive per-element loops of [`layers`] (the
+//! debugging oracle) and the integer im2col+GEMM fast path of
+//! [`super::gemm`] — **bit-identical** by construction (wrapping 32-bit
+//! accumulation is associative; see `qnn::gemm` and
+//! `tests/qnn_fast_parity.rs`), so the default is the fast engine.
+//!
+//! **Batch-N semantics.** The paper trains at batch 1; [`QModel::train_batch`]
+//! generalizes the control unit's sequence to a minibatch while keeping
+//! every writeback the hardware's: all forwards and gradient
+//! propagations run against the batch-entry parameters (one big GEMM
+//! set on the fast engine), then the parameter updates — the fused
+//! dense update and both kernel updates — are applied per sample in
+//! stream order, each advancing the dither step counter exactly as a
+//! sequence of batch-1 steps would. For `B = 1` this reduces bit-for-bit
+//! to the paper's per-sample step (which is how [`QModel::train_step`]
+//! is implemented), keeping the `sim` parity suites green.
 
+use super::gemm as qgemm;
 use super::layers;
+use super::QnnEngine;
 use crate::fixed::Fx;
+use crate::nn::gemm::{pack_batch, packed_to_rows, rows_to_packed};
 use crate::nn::loss;
 use crate::nn::ModelConfig;
 use crate::tensor::{quantize_tensor, Shape, Tensor};
@@ -42,6 +63,29 @@ pub struct QForwardCache {
     pub logits: Vec<Fx>,
 }
 
+/// Caches from one fast-engine batched forward pass: channel-major
+/// packed activations (`nn::gemm` layout; plain CHW for `B = 1`) plus
+/// the im2col column matrices, kept so backward never re-packs.
+struct FastForward {
+    cols1: Vec<Fx>,
+    a1: Vec<Fx>,
+    cols2: Vec<Fx>,
+    a2: Vec<Fx>,
+    /// Sample-major post-ReLU dense input (B × dense_in) — `None` at
+    /// `B = 1`, where the packed layout already *is* the single sample's
+    /// flattened CHW row (no copy on the per-sample hot path).
+    a2_rows: Option<Vec<Fx>>,
+    /// Sample-major logits (B × num_classes).
+    logits: Vec<Fx>,
+}
+
+impl FastForward {
+    /// The dense layer's sample-major input rows.
+    fn a2_rows(&self) -> &[Fx] {
+        self.a2_rows.as_deref().unwrap_or(&self.a2)
+    }
+}
+
 /// Quantized model driving the six control-unit computations in the order
 /// the paper's CU sequences them.
 pub struct QModel {
@@ -50,32 +94,126 @@ pub struct QModel {
     /// Train-step counter — keys the stochastic-rounding dither
     /// ([`crate::fixed::wb_dither`]); reset on (re)construction.
     pub step: u64,
+    /// Compute engine for the layer math (default: the bit-identical
+    /// integer GEMM fast path; `naive` is the debugging oracle).
+    pub engine: QnnEngine,
+    /// Worker threads for the fast engine's GEMMs (1 = serial). Thread
+    /// count never changes results — disjoint-column sharding of
+    /// order-independent wrapping sums (see `fixed::gemm`).
+    pub threads: usize,
+}
+
+/// Host-side loss layer (float; see module docs of `qnn`): loss, top-1
+/// correctness and the re-quantized loss gradient for one sample.
+fn loss_grad(logits: &[Fx], label: usize, active_classes: usize) -> (f32, bool, Vec<Fx>) {
+    let f: Vec<f32> = logits.iter().map(|l| l.to_f32()).collect();
+    let (loss_value, dl) = loss::softmax_ce(&f, label, active_classes);
+    let correct = loss::predict(&f, active_classes) == label;
+    (loss_value, correct, dl.iter().map(|&g| Fx::from_f32(g)).collect())
 }
 
 impl QModel {
     pub fn new(config: ModelConfig, params: QParams) -> QModel {
-        QModel { config, params, step: 0 }
+        QModel { config, params, step: 0, engine: QnnEngine::default(), threads: 1 }
     }
 
     /// From a float model (shared init path with the reference).
     pub fn from_model(m: &crate::nn::Model) -> QModel {
-        QModel {
-            config: m.config.clone(),
-            params: QParams::from_f32(&m.params),
-            step: 0,
+        QModel::new(m.config.clone(), QParams::from_f32(&m.params))
+    }
+
+    /// Select the compute engine (builder-style; parameters untouched).
+    pub fn with_engine(mut self, engine: QnnEngine) -> QModel {
+        self.engine = engine;
+        self
+    }
+
+    /// Set the GEMM worker-thread budget (builder-style; clamped to ≥1).
+    pub fn with_threads(mut self, threads: usize) -> QModel {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Fast-engine batched forward: pack once, one integer GEMM per
+    /// layer pass. Bit-identical per sample to the naive forward.
+    fn fast_forward(&self, xs: &[&Tensor<Fx>]) -> FastForward {
+        let b = xs.len();
+        let hw = self.config.image_size;
+        let n = hw * hw;
+        let cin = self.config.in_channels;
+        let cc = self.config.conv_channels;
+        let t = self.threads;
+        assert_eq!(
+            xs[0].shape(),
+            &Shape::d3(cin, hw, hw),
+            "input must match the model geometry"
+        );
+        // For B = 1 the packed layout *is* CHW — borrow instead of copy.
+        let packed_input;
+        let x0: &[Fx] = if b == 1 {
+            xs[0].data()
+        } else {
+            packed_input = pack_batch(xs);
+            &packed_input
+        };
+        let (cols1, oh, ow) = qgemm::im2col_batch(x0, b, cin, hw, hw, 3, 3, 1, t);
+        debug_assert_eq!((oh, ow), (hw, hw), "3×3 s1 p1 conv preserves geometry");
+        let a1 = qgemm::conv_forward_batch(&cols1, &self.params.k1, b * n, true, t);
+        let (cols2, _, _) = qgemm::im2col_batch(&a1, b, cc, hw, hw, 3, 3, 1, t);
+        let a2 = qgemm::conv_forward_batch(&cols2, &self.params.k2, b * n, true, t);
+        let a2_rows = if b == 1 { None } else { Some(packed_to_rows(&a2, cc, b, n)) };
+        let logits = qgemm::dense_forward_batch(
+            a2_rows.as_deref().unwrap_or(&a2),
+            &self.params.w,
+            b,
+            t,
+        );
+        FastForward { cols1, a1, cols2, a2, a2_rows, logits }
+    }
+
+    /// Forward pass (computations 1, 1, 4 of §III-F) with fused ReLU,
+    /// keeping the activations backward reuses.
+    pub fn forward_cached(&self, x: &Tensor<Fx>) -> QForwardCache {
+        match self.engine {
+            QnnEngine::Naive => {
+                let a1 = layers::conv_forward(x, &self.params.k1, 1, true);
+                let a2 = layers::conv_forward(&a1, &self.params.k2, 1, true);
+                let logits = layers::dense_forward(a2.data(), &self.params.w);
+                QForwardCache { x: x.clone(), a1, a2, logits }
+            }
+            QnnEngine::Fast => {
+                let hw = self.config.image_size;
+                let cc = self.config.conv_channels;
+                let f = self.fast_forward(&[x]);
+                QForwardCache {
+                    x: x.clone(),
+                    a1: Tensor::from_vec(Shape::d3(cc, hw, hw), f.a1),
+                    a2: Tensor::from_vec(Shape::d3(cc, hw, hw), f.a2),
+                    logits: f.logits,
+                }
+            }
         }
     }
 
-    /// Forward pass (computations 1, 1, 4 of §III-F) with fused ReLU.
-    pub fn forward_cached(&self, x: &Tensor<Fx>) -> QForwardCache {
-        let a1 = layers::conv_forward(x, &self.params.k1, 1, true);
-        let a2 = layers::conv_forward(&a1, &self.params.k2, 1, true);
-        let logits = layers::dense_forward(a2.data(), &self.params.w);
-        QForwardCache { x: x.clone(), a1, a2, logits }
+    pub fn forward(&self, x: &Tensor<Fx>) -> Vec<Fx> {
+        match self.engine {
+            QnnEngine::Naive => self.forward_cached(x).logits,
+            QnnEngine::Fast => self.fast_forward(&[x]).logits,
+        }
     }
 
-    pub fn forward(&self, x: &Tensor<Fx>) -> Vec<Fx> {
-        self.forward_cached(x).logits
+    /// Batched inference: per-sample logits. The fast engine runs the
+    /// whole batch as packed integer GEMMs; the naive engine loops.
+    pub fn forward_batch(&self, xs: &[&Tensor<Fx>]) -> Vec<Vec<Fx>> {
+        assert!(!xs.is_empty(), "empty batch");
+        match self.engine {
+            QnnEngine::Naive => xs.iter().map(|x| self.forward(x)).collect(),
+            QnnEngine::Fast => {
+                let classes = self.config.num_classes;
+                let fwd = self.fast_forward(xs);
+                fwd.logits.chunks(classes).map(|c| c.to_vec()).collect()
+            }
+        }
     }
 
     /// Predicted class over the active head.
@@ -85,11 +223,24 @@ impl QModel {
         loss::predict(&f, active_classes)
     }
 
+    /// Batched prediction over the active head (one packed forward on
+    /// the fast engine — bit-identical to per-sample `predict`).
+    pub fn predict_batch(&self, xs: &[&Tensor<Fx>], active_classes: usize) -> Vec<usize> {
+        self.forward_batch(xs)
+            .iter()
+            .map(|logits| {
+                let f: Vec<f32> = logits.iter().map(|l| l.to_f32()).collect();
+                loss::predict(&f, active_classes)
+            })
+            .collect()
+    }
+
     /// One full train step exactly as the CU sequences it:
     /// forward → host loss grad → dense fused-update + grad-prop →
     /// conv2 kernel-grad + grad-prop → conv1 kernel-grad → kernel updates.
     ///
-    /// Returns (loss, correct) computed at the host.
+    /// Returns (loss, correct) computed at the host. Implemented as a
+    /// `B = 1` [`QModel::train_batch`] (bit-identical by construction).
     pub fn train_step(
         &mut self,
         x: &Tensor<Fx>,
@@ -97,47 +248,164 @@ impl QModel {
         active_classes: usize,
         lr: Fx,
     ) -> (f32, bool) {
-        let cache = self.forward_cached(x);
+        let (loss_value, correct) = self.train_batch(&[x], &[label], active_classes, lr);
+        (loss_value, correct == 1)
+    }
 
-        // Host-side loss layer (float; see module docs of `qnn`).
-        let logits_f: Vec<f32> = cache.logits.iter().map(|l| l.to_f32()).collect();
-        let (loss_value, dlogits_f) = loss::softmax_ce(&logits_f, label, active_classes);
-        let correct = loss::predict(&logits_f, active_classes) == label;
-        let dy: Vec<Fx> = dlogits_f.iter().map(|&g| Fx::from_f32(g)).collect();
+    /// One minibatch train step: gradients against the batch-entry
+    /// parameters, updates applied per sample in stream order (see the
+    /// module docs). Returns (mean loss, correct count).
+    pub fn train_batch(
+        &mut self,
+        xs: &[&Tensor<Fx>],
+        labels: &[usize],
+        active_classes: usize,
+        lr: Fx,
+    ) -> (f32, usize) {
+        assert!(!xs.is_empty(), "empty batch");
+        assert_eq!(xs.len(), labels.len(), "batch inputs vs labels");
+        match self.engine {
+            QnnEngine::Naive => self.train_batch_naive(xs, labels, active_classes, lr),
+            QnnEngine::Fast => self.train_batch_fast(xs, labels, active_classes, lr),
+        }
+    }
 
-        // Dense gradient propagation (Eq. 5) — uses pre-update weights.
-        let dx_flat = layers::dense_input_grad(&dy, &self.params.w);
-        let da2 = Tensor::from_vec(cache.a2.shape().clone(), dx_flat);
-
-        // Dense fused weight update (Eq. 6 + SGD in multi-adder mode),
-        // with the dense normalization shift (ModelConfig::dense_grad_shift).
-        let dy_scaled = layers::scale_grad(&dy, lr);
-        layers::dense_weight_update(
-            &mut self.params.w,
-            cache.a2.data(),
-            &dy_scaled,
-            self.config.dense_grad_shift(),
-            self.step,
-        );
-
-        // ReLU2 mask, conv2 backward (kernel grads use the normalization
-        // shift — see ModelConfig::kgrad_shift).
+    /// Naive-engine minibatch: the per-element reference loops in the
+    /// exact sequence the fast engine must reproduce — the bit-exactness
+    /// oracle for `tests/qnn_fast_parity.rs`.
+    fn train_batch_naive(
+        &mut self,
+        xs: &[&Tensor<Fx>],
+        labels: &[usize],
+        active_classes: usize,
+        lr: Fx,
+    ) -> (f32, usize) {
+        let b = xs.len();
+        // 1. All forwards at the batch-entry parameters.
+        let caches: Vec<QForwardCache> = xs.iter().map(|x| self.forward_cached(x)).collect();
+        // 2. Host-side loss layer per sample.
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0usize;
+        let mut dys: Vec<Vec<Fx>> = Vec::with_capacity(b);
+        for (cache, &label) in caches.iter().zip(labels) {
+            let (l, c, dy) = loss_grad(&cache.logits, label, active_classes);
+            loss_sum += l;
+            correct += usize::from(c);
+            dys.push(dy);
+        }
+        // 3. Dense gradient propagation (Eq. 5) for every sample at the
+        // batch-entry weights (pre-update W, as in the batch-1 step).
+        let da2s: Vec<Tensor<Fx>> = caches
+            .iter()
+            .zip(&dys)
+            .map(|(cache, dy)| {
+                Tensor::from_vec(
+                    cache.a2.shape().clone(),
+                    layers::dense_input_grad(dy, &self.params.w),
+                )
+            })
+            .collect();
+        // 4. Fused dense weight updates (Eq. 6 + SGD), per sample in
+        // stream order — each reads the weights the previous wrote.
+        let dshift = self.config.dense_grad_shift();
+        for (i, (cache, dy)) in caches.iter().zip(&dys).enumerate() {
+            let dy_scaled = layers::scale_grad(dy, lr);
+            layers::dense_weight_update(
+                &mut self.params.w,
+                cache.a2.data(),
+                &dy_scaled,
+                dshift,
+                self.step + i as u64,
+            );
+        }
+        // 5. Conv backward per sample at the batch-entry kernels and the
+        // cached activations (kernels update only after the batch).
         let shift = self.config.kgrad_shift();
-        let dz2 = layers::relu_backward(&da2, &cache.a2);
-        let dk2 =
-            layers::conv_kernel_grad(&dz2, &cache.a1, self.params.k2.shape(), 1, shift);
-        let da1 = layers::conv_input_grad(&dz2, &self.params.k2, cache.a1.shape(), 1);
+        let mut dk2s = Vec::with_capacity(b);
+        let mut dk1s = Vec::with_capacity(b);
+        for (cache, da2) in caches.iter().zip(&da2s) {
+            let dz2 = layers::relu_backward(da2, &cache.a2);
+            dk2s.push(layers::conv_kernel_grad(&dz2, &cache.a1, self.params.k2.shape(), 1, shift));
+            let da1 = layers::conv_input_grad(&dz2, &self.params.k2, cache.a1.shape(), 1);
+            let dz1 = layers::relu_backward(&da1, &cache.a1);
+            dk1s.push(layers::conv_kernel_grad(&dz1, &cache.x, self.params.k1.shape(), 1, shift));
+        }
+        // 6. Kernel updates per sample in stream order (dithered
+        // writebacks, disjoint key streams, per-sample step counter).
+        for (i, (dk2, dk1)) in dk2s.iter().zip(&dk1s).enumerate() {
+            let s = self.step + i as u64;
+            layers::param_update(&mut self.params.k2, dk2, lr, layers::DITHER_BASE_K2, s);
+            layers::param_update(&mut self.params.k1, dk1, lr, layers::DITHER_BASE_K1, s);
+        }
+        self.step += b as u64;
+        (loss_sum / b as f32, correct)
+    }
 
-        // ReLU1 mask, conv1 kernel gradient (no input grad at layer 1).
-        let dz1 = layers::relu_backward(&da1, &cache.a1);
-        let dk1 = layers::conv_kernel_grad(&dz1, &cache.x, self.params.k1.shape(), 1, shift);
-
-        // Kernel updates (dithered writebacks, disjoint key streams).
-        layers::param_update(&mut self.params.k2, &dk2, lr, layers::DITHER_BASE_K2, self.step);
-        layers::param_update(&mut self.params.k1, &dk1, lr, layers::DITHER_BASE_K1, self.step);
-        self.step += 1;
-
-        (loss_value, correct)
+    /// Fast-engine minibatch: the same sequence with each layer pass one
+    /// packed integer GEMM, backward reusing the forward's im2col
+    /// columns. Bit-identical to [`QModel::train_batch_naive`].
+    fn train_batch_fast(
+        &mut self,
+        xs: &[&Tensor<Fx>],
+        labels: &[usize],
+        active_classes: usize,
+        lr: Fx,
+    ) -> (f32, usize) {
+        let b = xs.len();
+        let hw = self.config.image_size;
+        let n = hw * hw;
+        let cc = self.config.conv_channels;
+        let classes = self.config.num_classes;
+        let d_in = self.config.dense_in();
+        let t = self.threads;
+        let fwd = self.fast_forward(xs);
+        // Host-side loss layer per sample.
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0usize;
+        let mut dy_rows: Vec<Fx> = Vec::with_capacity(b * classes);
+        for (bi, &label) in labels.iter().enumerate() {
+            let row = &fwd.logits[bi * classes..(bi + 1) * classes];
+            let (l, c, dy) = loss_grad(row, label, active_classes);
+            loss_sum += l;
+            correct += usize::from(c);
+            dy_rows.extend(dy);
+        }
+        // Dense gradient propagation (batched) at the batch-entry weights.
+        let da2_rows = qgemm::dense_input_grad_batch(&dy_rows, &self.params.w, b, t);
+        let da2 = if b == 1 { da2_rows } else { rows_to_packed(&da2_rows, cc, b, n) };
+        // Fused dense updates per sample in stream order.
+        let dshift = self.config.dense_grad_shift();
+        let a2_rows = fwd.a2_rows();
+        for bi in 0..b {
+            let dy_b = &dy_rows[bi * classes..(bi + 1) * classes];
+            let dy_scaled = layers::scale_grad(dy_b, lr);
+            let x_b = &a2_rows[bi * d_in..(bi + 1) * d_in];
+            qgemm::dense_weight_update(
+                &mut self.params.w,
+                x_b,
+                &dy_scaled,
+                dshift,
+                self.step + bi as u64,
+                t,
+            );
+        }
+        // Conv backward, reusing the forward's column matrices.
+        let shift = self.config.kgrad_shift();
+        let dz2 = qgemm::relu_mask(&da2, &fwd.a2);
+        let dk2s =
+            qgemm::conv_kernel_grad_batch(&dz2, &fwd.cols2, self.params.k2.shape(), b, n, shift, t);
+        let da1 = qgemm::conv_input_grad_batch(&dz2, &self.params.k2, b, hw, hw, hw, hw, 1, t);
+        let dz1 = qgemm::relu_mask(&da1, &fwd.a1);
+        let dk1s =
+            qgemm::conv_kernel_grad_batch(&dz1, &fwd.cols1, self.params.k1.shape(), b, n, shift, t);
+        // Kernel updates per sample in stream order.
+        for (bi, (dk2, dk1)) in dk2s.iter().zip(&dk1s).enumerate() {
+            let s = self.step + bi as u64;
+            layers::param_update(&mut self.params.k2, dk2, lr, layers::DITHER_BASE_K2, s);
+            layers::param_update(&mut self.params.k1, dk1, lr, layers::DITHER_BASE_K1, s);
+        }
+        self.step += b as u64;
+        (loss_sum / b as f32, correct)
     }
 
     /// Input geometry helper.
@@ -221,5 +489,54 @@ mod tests {
         }
         assert_eq!(a.params.w.data(), b.params.w.data());
         assert_eq!(a.params.k1.data(), b.params.k1.data());
+    }
+
+    #[test]
+    fn engines_bit_identical_through_training() {
+        // The tentpole invariant at unit scope: fast == naive, bit for
+        // bit, on losses, predictions and every parameter, at batch 1
+        // and batch > 1 and any thread count.
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 43);
+        let mut naive = QModel::from_model(&m).with_engine(QnnEngine::Naive);
+        let mut fast = QModel::from_model(&m).with_engine(QnnEngine::Fast).with_threads(3);
+        let lr = crate::fixed::Fx::from_f32(0.125);
+        for step in 0..2 {
+            let x = quantize_tensor(&rand_image(100 + step, &cfg));
+            let ln = naive.train_step(&x, step as usize % 4, 4, lr);
+            let lf = fast.train_step(&x, step as usize % 4, 4, lr);
+            assert_eq!(ln, lf, "batch-1 step {step}");
+        }
+        let xs: Vec<Tensor<Fx>> =
+            (0..3u64).map(|i| quantize_tensor(&rand_image(200 + i, &cfg))).collect();
+        let refs: Vec<&Tensor<Fx>> = xs.iter().collect();
+        let labels = [0usize, 1, 2];
+        let ln = naive.train_batch(&refs, &labels, 4, lr);
+        let lf = fast.train_batch(&refs, &labels, 4, lr);
+        assert_eq!(ln, lf, "batch-3 loss/correct");
+        assert_eq!(naive.params.w.data(), fast.params.w.data(), "w bits");
+        assert_eq!(naive.params.k1.data(), fast.params.k1.data(), "k1 bits");
+        assert_eq!(naive.params.k2.data(), fast.params.k2.data(), "k2 bits");
+        assert_eq!(naive.step, fast.step, "step counters");
+        let xe = quantize_tensor(&rand_image(300, &cfg));
+        assert_eq!(naive.predict(&xe, 4), fast.predict(&xe, 4));
+        assert_eq!(
+            naive.forward_batch(&refs),
+            fast.forward_batch(&refs),
+            "batched logits"
+        );
+    }
+
+    #[test]
+    fn predict_batch_matches_per_sample() {
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 47);
+        let qm = QModel::from_model(&m);
+        let xs: Vec<Tensor<Fx>> =
+            (0..4u64).map(|i| quantize_tensor(&rand_image(400 + i, &cfg))).collect();
+        let refs: Vec<&Tensor<Fx>> = xs.iter().collect();
+        let batched = qm.predict_batch(&refs, 4);
+        let singles: Vec<usize> = refs.iter().map(|x| qm.predict(x, 4)).collect();
+        assert_eq!(batched, singles);
     }
 }

@@ -82,6 +82,18 @@ impl Args {
         self.parse_or(key, default)
     }
 
+    /// Worker-thread count flag with the `0 = auto-detect` convention
+    /// shared by every thread knob in the repo (`--threads` on the CLI,
+    /// the benches, and the examples): `default` is used when the flag
+    /// is absent, and a value of 0 resolves to the host's available
+    /// parallelism.
+    pub fn threads_or_auto(&self, key: &str, default: usize) -> usize {
+        match self.usize_or(key, default) {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        }
+    }
+
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         match self.get(key) {
             None => default,

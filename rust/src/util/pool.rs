@@ -1,0 +1,335 @@
+//! Lazily-initialized persistent worker pool shared by the f32 and
+//! integer GEMM engines, plus the column-sharding helpers both use.
+//!
+//! PR 2's scoped threads (`std::thread::scope`) respawned OS threads on
+//! every GEMM call — tens of microseconds of spawn/join overhead per
+//! call, which dominates small-batch epochs where one train step issues
+//! ~8 GEMMs. This pool spawns its workers once (first parallel GEMM) and
+//! keeps them parked on a job queue for the life of the process, so a
+//! sharded GEMM costs one channel send per worker instead of one
+//! `clone()`d thread stack.
+//!
+//! [`run`] keeps the scoped-thread *borrowing* model: the closure may
+//! capture stack references, because `run` never returns before every
+//! dispatched task has finished (a completion latch is waited on even
+//! when the caller's own shard panics). Determinism is unchanged — the
+//! pool only decides *where* a shard executes, never how its sums are
+//! ordered, so the threads=N ⇒ bit-identical guarantee of the GEMM
+//! kernels is preserved (asserted by `tests/batched_parity.rs` and
+//! `tests/qnn_fast_parity.rs`).
+//!
+//! Tasks must be leaves: a pool task must not call [`run`] itself (the
+//! GEMM kernels never do). Queue capacity is unbounded; if a caller
+//! requests more shards than there are workers, the surplus queues and
+//! drains as workers free up, so oversubscription degrades gracefully.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+/// Multiply-accumulate count below which the sharded GEMMs stay
+/// single-threaded: even pool dispatch costs a few microseconds, which
+/// only amortizes once the problem is a few hundred kFLOPs.
+pub const MT_MIN_MACS: usize = 1 << 16;
+
+/// Hard cap on pool size (beyond physical parallelism extra workers only
+/// add queue contention).
+const MAX_WORKERS: usize = 64;
+
+/// Raw output pointer smuggled into pool workers. Each worker derives
+/// `&mut` subslices only for the (row, column-range) chunks it owns, so
+/// no two tasks ever alias the same element.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// How many workers a problem of `macs` multiply-accumulates with
+/// `cols` shardable output columns should use (1 = stay on the caller's
+/// thread). Deterministic in its inputs — thread count never influences
+/// *values*, only wall-clock.
+pub fn plan_workers(threads: usize, macs: usize, cols: usize) -> usize {
+    if threads <= 1 || macs < MT_MIN_MACS {
+        1
+    } else {
+        threads.min(cols).max(1)
+    }
+}
+
+/// Split `0..n` into `workers` near-equal contiguous ranges.
+pub fn col_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let base = n / workers;
+    let extra = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for i in 0..workers {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Pool {
+    tx: Mutex<Sender<Job>>,
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        // The caller always executes shard 0 itself, so parallelism-1
+        // workers saturate the machine.
+        let want = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .saturating_sub(1)
+            .min(MAX_WORKERS);
+        let mut spawned = 0;
+        for i in 0..want {
+            let rx = Arc::clone(&rx);
+            if thread::Builder::new()
+                .name(format!("tinycl-pool-{i}"))
+                .spawn(move || worker_loop(&rx))
+                .is_ok()
+            {
+                spawned += 1;
+            }
+        }
+        Pool { tx: Mutex::new(tx), workers: spawned }
+    })
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.recv()
+        };
+        match job {
+            // A panicking task must not kill the worker: the panic is
+            // recorded by the task's latch guard and re-raised on the
+            // caller's thread.
+            Ok(job) => drop(catch_unwind(AssertUnwindSafe(job))),
+            Err(_) => break, // channel closed: process is shutting down
+        }
+    }
+}
+
+/// Completion latch: `run` blocks until every dispatched task has
+/// arrived, which is what makes handing stack borrows to pool threads
+/// sound.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: Mutex::new(n), done: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn arrive(&self) {
+        let mut left = self.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.remaining.lock().unwrap_or_else(|e| e.into_inner());
+        while *left > 0 {
+            left = self.done.wait(left).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// Arrives at the latch even if the task body panics (the drop runs
+/// during unwinding), recording the panic for the caller to re-raise.
+struct ArriveOnDrop<'a>(&'a Latch);
+
+impl Drop for ArriveOnDrop<'_> {
+    fn drop(&mut self) {
+        if thread::panicking() {
+            self.0.panicked.store(true, Ordering::Relaxed);
+        }
+        self.0.arrive();
+    }
+}
+
+/// Blocks on the latch when dropped — including during a panic unwind of
+/// the caller's own shard, so borrowed captures never escape `run`.
+struct WaitOnDrop<'a>(&'a Latch);
+
+impl Drop for WaitOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// Run `f(0..tasks)` with tasks 1.. dispatched to the persistent pool
+/// and task 0 executed on the calling thread. Blocks until every task
+/// has finished; panics if any task panicked. `f` may borrow from the
+/// caller's stack. With `tasks <= 1` (or an empty pool) everything runs
+/// inline on the caller.
+pub fn run<F: Fn(usize) + Sync>(tasks: usize, f: F) {
+    if tasks == 0 {
+        return;
+    }
+    if tasks == 1 {
+        f(0);
+        return;
+    }
+    let p = pool();
+    if p.workers == 0 {
+        for i in 0..tasks {
+            f(i);
+        }
+        return;
+    }
+    let latch = Latch::new(tasks - 1);
+    {
+        // Erase the borrow lifetimes: the `WaitOnDrop` guard below keeps
+        // `run` (and thus `f` and `latch`) alive until every dispatched
+        // task has arrived at the latch, even on panic — the same
+        // guarantee `std::thread::scope` gives, without the respawn.
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        let f_static = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f_ref)
+        };
+        let latch_static = unsafe { std::mem::transmute::<&Latch, &'static Latch>(&latch) };
+        let _wait = WaitOnDrop(&latch);
+        {
+            let tx = p.tx.lock().unwrap_or_else(|e| e.into_inner());
+            for i in 1..tasks {
+                let job: Job = Box::new(move || {
+                    let _arrive = ArriveOnDrop(latch_static);
+                    f_static(i);
+                });
+                if let Err(returned) = tx.send(job) {
+                    // Queue unexpectedly closed: run the task inline
+                    // (its latch guard still fires).
+                    (returned.0)();
+                }
+            }
+        }
+        f(0);
+        // `_wait` drops here, blocking until all dispatched tasks arrive.
+    }
+    if latch.panicked.load(Ordering::Relaxed) {
+        panic!("a worker-pool task panicked (see stderr for the original panic)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for tasks in [1usize, 2, 3, 8, 33] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            run(tasks, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} of {tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_tasks_is_a_noop() {
+        run(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn pool_is_reusable_across_calls() {
+        // Many back-to-back fan-outs through the same persistent pool —
+        // the per-call scoped-spawn pattern this replaces would create
+        // hundreds of threads here.
+        let total = AtomicUsize::new(0);
+        for _ in 0..100 {
+            run(4, |i| {
+                total.fetch_add(i + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 100 * (1 + 2 + 3 + 4));
+    }
+
+    #[test]
+    fn tasks_can_borrow_and_mutate_disjoint_output() {
+        let mut out = vec![0usize; 10];
+        let ranges = col_ranges(out.len(), 3);
+        let ptr = SendPtr(out.as_mut_ptr());
+        run(ranges.len(), |wi| {
+            let (lo, hi) = ranges[wi];
+            let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+            for (off, v) in chunk.iter_mut().enumerate() {
+                *v = lo + off + 1;
+            }
+        });
+        let expect: Vec<usize> = (1..=10).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let result = std::panic::catch_unwind(|| {
+            run(4, |i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(result.is_err(), "worker panic must propagate to the caller");
+        // The pool must still be serviceable afterwards.
+        let ok = AtomicUsize::new(0);
+        run(4, |_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn oversubscription_completes() {
+        // Far more tasks than workers: the queue drains as workers free.
+        let total = AtomicUsize::new(0);
+        run(200, |_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn plan_workers_thresholds() {
+        assert_eq!(plan_workers(8, MT_MIN_MACS - 1, 1000), 1);
+        assert_eq!(plan_workers(8, MT_MIN_MACS, 1000), 8);
+        assert_eq!(plan_workers(1, usize::MAX, 1000), 1);
+        // Never more workers than shardable columns.
+        assert_eq!(plan_workers(8, usize::MAX, 3), 3);
+    }
+
+    #[test]
+    fn col_ranges_partition() {
+        for (n, w) in [(10, 3), (7, 7), (256, 2), (5, 1)] {
+            let ranges = col_ranges(n, w);
+            assert_eq!(ranges.len(), w);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges[w - 1].1, n);
+            for i in 1..w {
+                assert_eq!(ranges[i].0, ranges[i - 1].1, "contiguous at {i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! PR 3 bit-exactness gates: the integer im2col+GEMM fast path must
+//! reproduce the naive Q4.12 oracle — and, at batch 1, the
+//! cycle-accurate device — **bit for bit**, across randomized shapes,
+//! batch sizes, thread counts, and saturation/wrap-heavy operands.
+//!
+//! Together with `tests/sim_vs_qnn.rs` (which runs the default — fast —
+//! engine against the device) this closes the chain
+//! `qnn-fast == qnn-naive == sim`: wrapping 32-bit accumulation is
+//! associative, so the GEMM restructuring may reorder sums freely, and
+//! any divergence would mean a product, shift, or writeback landed at a
+//! different point than the architecture specifies.
+
+mod common;
+
+use tinycl::cl::{self, Learner, TaskStream};
+use tinycl::coordinator::{Backend, BackendKind};
+use tinycl::data::SyntheticCifar;
+use tinycl::fixed::Fx;
+use tinycl::nn::{Model, ModelConfig};
+use tinycl::qnn::{gemm as qgemm, layers, QModel, QnnEngine};
+use tinycl::sim::{SimConfig, TinyClDevice};
+use tinycl::tensor::{quantize_tensor, Shape, Tensor};
+use tinycl::util::rng::Pcg32;
+
+fn config(image: usize, conv: usize, classes: usize) -> ModelConfig {
+    ModelConfig {
+        in_channels: 3,
+        image_size: image,
+        conv_channels: conv,
+        num_classes: classes,
+        grad_clip: f32::INFINITY,
+    }
+}
+
+/// Full-raw-range Q4.12 tensor: values up to ±8 exercise writeback
+/// saturation and (at shift 0) 32-bit accumulator wrap.
+fn rand_fx_full(rng: &mut Pcg32, shape: Shape) -> Tensor<Fx> {
+    let n = shape.numel();
+    Tensor::from_vec(shape, (0..n).map(|_| Fx::from_raw(rng.next_u32() as u16 as i16)).collect())
+}
+
+fn rand_image(seed: u64, cfg: &ModelConfig) -> Tensor<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    let shape = Shape::d3(cfg.in_channels, cfg.image_size, cfg.image_size);
+    let n = shape.numel();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+}
+
+#[test]
+fn layer_ops_bit_exact_randomized_shapes_and_threads() {
+    // Randomized geometry sweep over all three conv computations and
+    // both dense computations, full-raw-range operands, at several
+    // thread counts. `assert_eq!` on raw bit patterns — no tolerance.
+    let mut rng = Pcg32::seeded(61);
+    for trial in 0..12u32 {
+        let cin = 1 + (rng.next_u32() % 4) as usize;
+        let cout = 1 + (rng.next_u32() % 4) as usize;
+        let h = 4 + (rng.next_u32() % 6) as usize;
+        let w = 4 + (rng.next_u32() % 6) as usize;
+        let pad = (rng.next_u32() % 2) as usize;
+        let (gh, gw) = (h + 2 * pad - 2, w + 2 * pad - 2);
+        let grad_shift = [0u32, 3, 8][(rng.next_u32() % 3) as usize];
+        let x = rand_fx_full(&mut rng, Shape::d3(cin, h, w));
+        let k = rand_fx_full(&mut rng, Shape::d4(cout, cin, 3, 3));
+        let dy = rand_fx_full(&mut rng, Shape::d3(cout, gh, gw));
+
+        let fwd_naive = layers::conv_forward(&x, &k, pad, trial % 2 == 0);
+        let dx_naive = layers::conv_input_grad(&dy, &k, x.shape(), pad);
+        let dk_naive = layers::conv_kernel_grad(&dy, &x, k.shape(), pad, grad_shift);
+        for threads in [1usize, 2, 5] {
+            let fwd = qgemm::conv_forward(&x, &k, pad, trial % 2 == 0, threads);
+            assert_eq!(fwd.data(), fwd_naive.data(), "fwd trial {trial} t={threads}");
+            let dx = qgemm::conv_input_grad(&dy, &k, x.shape(), pad, threads);
+            assert_eq!(dx.data(), dx_naive.data(), "dx trial {trial} t={threads}");
+            let dk = qgemm::conv_kernel_grad(&dy, &x, k.shape(), pad, grad_shift, threads);
+            assert_eq!(
+                dk.data(),
+                dk_naive.data(),
+                "dk trial {trial} shift={grad_shift} t={threads}"
+            );
+        }
+
+        let n_in = 1 + (rng.next_u32() % 60) as usize;
+        let n_out = 1 + (rng.next_u32() % 12) as usize;
+        let xd: Vec<Fx> =
+            (0..n_in).map(|_| Fx::from_raw(rng.next_u32() as u16 as i16)).collect();
+        let wd = rand_fx_full(&mut rng, Shape::d2(n_in, n_out));
+        let dyd: Vec<Fx> =
+            (0..n_out).map(|_| Fx::from_raw(rng.next_u32() as u16 as i16)).collect();
+        let fwd_naive = layers::dense_forward(&xd, &wd);
+        let dx_naive = layers::dense_input_grad(&dyd, &wd);
+        for threads in [1usize, 3] {
+            assert_eq!(
+                qgemm::dense_forward(&xd, &wd, threads),
+                fwd_naive,
+                "dense fwd trial {trial} t={threads}"
+            );
+            assert_eq!(
+                qgemm::dense_input_grad(&dyd, &wd, threads),
+                dx_naive,
+                "dense dx trial {trial} t={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn saturation_boundary_operands_bit_exact() {
+    // Operands pinned at the Q4.12 clip boundary (±MAX/±MIN mixtures):
+    // every writeback saturates and unshifted accumulators wrap — the
+    // adversarial regime for a restructured summation.
+    let vals = [Fx::MAX, Fx::MIN, Fx::from_f32(7.99), Fx::from_f32(-7.99), Fx::ZERO];
+    let mut rng = Pcg32::seeded(67);
+    let pick = |rng: &mut Pcg32| vals[(rng.next_u32() % vals.len() as u32) as usize];
+    let (cin, cout, hw) = (2usize, 3usize, 8usize);
+    let x = Tensor::from_vec(
+        Shape::d3(cin, hw, hw),
+        (0..cin * hw * hw).map(|_| pick(&mut rng)).collect(),
+    );
+    let k = Tensor::from_vec(
+        Shape::d4(cout, cin, 3, 3),
+        (0..cout * cin * 9).map(|_| pick(&mut rng)).collect(),
+    );
+    let dy = Tensor::from_vec(
+        Shape::d3(cout, hw, hw),
+        (0..cout * hw * hw).map(|_| pick(&mut rng)).collect(),
+    );
+    assert_eq!(
+        qgemm::conv_forward(&x, &k, 1, true, 2).data(),
+        layers::conv_forward(&x, &k, 1, true).data(),
+        "saturated forward"
+    );
+    assert_eq!(
+        qgemm::conv_input_grad(&dy, &k, x.shape(), 1, 2).data(),
+        layers::conv_input_grad(&dy, &k, x.shape(), 1).data(),
+        "saturated input grad"
+    );
+    for shift in [0u32, 6] {
+        assert_eq!(
+            qgemm::conv_kernel_grad(&dy, &x, k.shape(), 1, shift, 2).data(),
+            layers::conv_kernel_grad(&dy, &x, k.shape(), 1, shift).data(),
+            "saturated kernel grad shift={shift}"
+        );
+    }
+}
+
+#[test]
+fn train_parity_across_batch_sizes_and_thread_counts() {
+    // The tentpole gate: whole training runs on the fast engine equal
+    // the naive oracle bit-for-bit at every (batch, threads) tested —
+    // losses, correct counts, dither step counters, and all parameters.
+    let cfg = config(8, 4, 4);
+    let lr = Fx::from_f32(0.125);
+    for &batch in &[1usize, 2, 5] {
+        for &threads in &[1usize, 3] {
+            let m = Model::new(cfg.clone(), 71 + batch as u64);
+            let mut naive = QModel::from_model(&m).with_engine(QnnEngine::Naive);
+            let mut fast =
+                QModel::from_model(&m).with_engine(QnnEngine::Fast).with_threads(threads);
+            for step in 0..3u64 {
+                let xs: Vec<Tensor<Fx>> = (0..batch as u64)
+                    .map(|i| quantize_tensor(&rand_image(step * 100 + i, &cfg)))
+                    .collect();
+                let refs: Vec<&Tensor<Fx>> = xs.iter().collect();
+                let labels: Vec<usize> =
+                    (0..batch).map(|i| (i + step as usize) % cfg.num_classes).collect();
+                let ln = naive.train_batch(&refs, &labels, cfg.num_classes, lr);
+                let lf = fast.train_batch(&refs, &labels, cfg.num_classes, lr);
+                assert_eq!(ln, lf, "batch={batch} threads={threads} step={step}");
+            }
+            assert_eq!(naive.step, fast.step, "step counter batch={batch}");
+            assert_eq!(
+                naive.params.w.data(),
+                fast.params.w.data(),
+                "w bits batch={batch} threads={threads}"
+            );
+            assert_eq!(
+                naive.params.k1.data(),
+                fast.params.k1.data(),
+                "k1 bits batch={batch} threads={threads}"
+            );
+            assert_eq!(
+                naive.params.k2.data(),
+                fast.params.k2.data(),
+                "k2 bits batch={batch} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fast_engine_bit_exact_vs_cycle_accurate_device() {
+    // Batch-1 chain closure: the fast engine against the device itself
+    // (the strongest statement — any divergence in widen/multiply/
+    // writeback points shows here), threaded to also exercise the pool.
+    let cfg = config(8, 5, 4); // 5 channels: partial lane groups in sim
+    let m = Model::new(cfg.clone(), 83);
+    let mut qm = QModel::from_model(&m).with_engine(QnnEngine::Fast).with_threads(2);
+    let mut dev = TinyClDevice::new(SimConfig::paper(), cfg.clone());
+    dev.load_params(&qm.params);
+    let lr = Fx::from_f32(0.25);
+    for step in 0..4u64 {
+        let x = quantize_tensor(&rand_image(8300 + step, &cfg));
+        let label = step as usize % cfg.num_classes;
+        let (dev_logits, _) = dev.infer(&x);
+        assert_eq!(dev_logits, qm.forward(&x), "logits diverged at step {step}");
+        let (ql, _) = qm.train_step(&x, label, cfg.num_classes, lr);
+        let (sl, _, _) = dev.train_step(&x, label, cfg.num_classes, lr);
+        assert_eq!(ql, sl, "loss diverged at step {step}");
+        let p = dev.read_params();
+        assert_eq!(p.k1.data(), qm.params.k1.data(), "k1 bits diverged at step {step}");
+        assert_eq!(p.k2.data(), qm.params.k2.data(), "k2 bits diverged at step {step}");
+        assert_eq!(p.w.data(), qm.params.w.data(), "w bits diverged at step {step}");
+    }
+}
+
+#[test]
+fn batched_evaluate_matches_per_sample_sweep() {
+    // Satellite gate: `cl::policy::evaluate` now sweeps the accuracy
+    // matrix through `predict_batch`; predictions must be identical to
+    // the per-sample loop on every backend that overrides it.
+    let cfg = config(8, 4, 4);
+    let gen = SyntheticCifar {
+        image_size: cfg.image_size,
+        channels: cfg.in_channels,
+        num_classes: cfg.num_classes,
+        noise: 0.35,
+        seed: 29,
+    };
+    // 40 per class ⇒ 80-sample task subsets: crosses the EVAL_BATCH=64
+    // chunk boundary so partial chunks are exercised.
+    let test = gen.generate(40, 1);
+    let stream = TaskStream::class_incremental(&test, 2, 29);
+    let sim_cfg = SimConfig::paper();
+    for kind in [BackendKind::F32Fast, BackendKind::Qnn] {
+        let mut backend = Backend::create(kind, &cfg, &sim_cfg, "artifacts", 31).unwrap();
+        backend.set_threads(2);
+        for task in &stream.tasks {
+            let batched = cl::policy::evaluate(&mut backend, task, &test, cfg.num_classes);
+            let subset = test.task_subset(&task.classes);
+            let correct = subset
+                .iter()
+                .filter(|s| backend.predict(&s.x, cfg.num_classes) == s.label)
+                .count();
+            let per_sample = correct as f64 / subset.len() as f64;
+            assert_eq!(
+                batched,
+                per_sample,
+                "{} task {}: batched evaluate diverged",
+                kind.name(),
+                task.id
+            );
+        }
+    }
+}
