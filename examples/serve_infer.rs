@@ -1,38 +1,55 @@
 //! Deployment scenario: after on-device continual learning, the same
-//! model serves inference requests. This example measures both sides:
+//! model serves inference requests — now through the `serve` subsystem
+//! (PR 4): a dynamic batcher coalesces concurrent client requests into
+//! cross-request batches on a dedicated model thread, admission control
+//! sheds overload, and continual-learning updates can be interleaved
+//! with serving on the same owner (serve-while-learning). This example
+//! measures both sides:
 //!
-//! 1. the AOT-compiled XLA path (the software stack a host CPU would
-//!    run) — requests through the PJRT executable, latency percentiles
-//!    and throughput;
-//! 2. the TinyCL device (cycle-accurate) — per-inference cycles → latency
-//!    at the synthesized clock, plus energy per inference.
+//! 1. the host software path (AOT-XLA when built with `--features xla`
+//!    + `make artifacts`, otherwise the im2col+GEMM `f32-fast` backend;
+//!    `--backend qnn` serves the bit-exact Q4.12 model on its
+//!    integer-GEMM fast engine) under closed-loop multi-client load —
+//!    latency percentiles, throughput, batch histogram, shed accounting;
+//! 2. the TinyCL device (cycle-accurate) — per-inference cycles →
+//!    latency at the synthesized clock, plus energy per inference.
 //!
 //! Run: `cargo run --release --example serve_infer`
-//!       [-- --backend f32|f32-fast|qnn|xla --threads N --qnn-engine naive|fast]
-//! (the XLA path needs `--features xla` + `make artifacts`; without it
-//! the host side defaults to the im2col+GEMM `f32-fast` backend.
-//! `--backend qnn` serves the bit-exact Q4.12 model on its integer-GEMM
-//! fast engine; `--threads N` sets the GEMM worker budget, 0 = auto)
+//!       [-- --requests N (total predict requests, default 200)
+//!           --clients N (closed-loop client threads, default 4)
+//!           --backend f32|f32-fast|qnn|xla --threads N
+//!           --qnn-engine naive|fast
+//!           --max-batch N --max-wait-us N --queue-depth N
+//!           --train N (serve-while-learning steps, default 8)]
+//!
+//! For the full laddered benchmark (max_batch 1 vs N, parity gates,
+//! BENCH_serve.json) use `tinycl serve-bench` / `cargo bench --bench
+//! serve`.
 
 use tinycl::cl::Learner;
 use tinycl::coordinator::{Backend, BackendKind};
 use tinycl::data::SyntheticCifar;
 use tinycl::hw::{CostModel, EnergyModel};
 use tinycl::nn::ModelConfig;
+use tinycl::serve::server::{default_queue_depth, DEFAULT_MAX_WAIT};
+use tinycl::serve::{run_closed_loop, LoadConfig, ServeRunReport, Server, ServerConfig};
 use tinycl::sim::SimConfig;
 use tinycl::util::cli::Args;
-use tinycl::util::stats::Summary;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let requests = args.usize_or("requests", 200);
+    let clients = args.usize_or("clients", 4).max(1);
+    let train_steps = args.usize_or("train", 8);
     let model_cfg = ModelConfig::default();
     let sim_cfg = SimConfig::paper();
     let gen = SyntheticCifar::default();
     let data = gen.generate(requests.div_ceil(10).max(1), 3);
-    let batch: Vec<_> = data.samples.iter().take(requests).collect();
 
-    println!("serving {requests} single-image requests (32×32×3, 10 classes)\n");
+    println!(
+        "serving {requests} single-image requests (32×32×3, 10 classes) \
+         from {clients} closed-loop clients\n"
+    );
 
     // --- 1. Host software path. `--backend` picks it explicitly;
     // the default tries AOT-XLA when built with `--features xla` (and
@@ -40,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     // core — the fastest pure-f32 serving path.
     let threads = args.threads_or_auto("threads", 0);
     let qnn_engine = tinycl::qnn::QnnEngine::from_args(&args)?;
-    let mut xla = match args.get("backend") {
+    let mut host = match args.get("backend") {
         Some(name) => {
             let kind = BackendKind::parse(name)
                 .ok_or_else(|| anyhow::anyhow!("unknown backend '{name}'"))?;
@@ -54,45 +71,66 @@ fn main() -> anyhow::Result<()> {
             }
         },
     };
-    xla.set_threads(threads);
-    xla.set_qnn_engine(qnn_engine);
+    host.set_threads(threads);
+    host.set_qnn_engine(qnn_engine);
+    let kind = host.kind();
     // Brief fine-tune so the served model is not random (5 quick steps).
-    for (i, s) in batch.iter().take(5).enumerate() {
-        xla.train_step(&s.x, s.label, 10, 0.05);
-        let _ = i;
+    for s in data.samples.iter().take(5) {
+        host.train_step(&s.x, s.label, 10, 0.05);
     }
-    let mut lat_us = Vec::with_capacity(requests);
-    let mut correct = 0usize;
-    let t0 = std::time::Instant::now();
-    for s in &batch {
-        let q0 = std::time::Instant::now();
-        let pred = xla.predict(&s.x, 10);
-        lat_us.push(q0.elapsed().as_secs_f64() * 1e6);
-        correct += usize::from(pred == s.label);
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    let summary = Summary::of(&lat_us);
-    match xla.kind() {
+
+    // Hand the model to its serving thread and open the floodgates.
+    let serve_cfg = ServerConfig {
+        max_batch: args.usize_or("max-batch", tinycl::cl::EVAL_BATCH).max(1),
+        max_wait: std::time::Duration::from_micros(
+            args.u64_or("max-wait-us", DEFAULT_MAX_WAIT.as_micros() as u64),
+        ),
+        queue_depth: args.usize_or("queue-depth", default_queue_depth(clients)),
+    };
+    let server = Server::start(host, serve_cfg);
+    let client = server.client();
+    let trainer = server.client();
+    let load = LoadConfig { clients, requests, active_classes: 10 };
+    let result = std::thread::scope(|scope| {
+        let load_run = scope.spawn(|| run_closed_loop(&client, &data.samples, &load));
+        // Serve-while-learning: the stream keeps teaching the deployed
+        // model *during* traffic. Updates ride the same queue as the
+        // predicts, so the single model-thread owner applies them in
+        // stream order — CL semantics survive serving.
+        for s in data.samples.iter().take(train_steps) {
+            if trainer.train(&s.x, s.label, 10, 0.05).is_none() {
+                break;
+            }
+        }
+        load_run.join().expect("load clients panicked")
+    });
+    let queue = server.queue_stats();
+    let (_host, stats) = server.shutdown();
+    assert!(queue.consistent(), "admission accounting must balance");
+
+    let report = ServeRunReport::new(
+        kind.name(),
+        serve_cfg.max_batch,
+        clients,
+        queue,
+        stats,
+        result.wall_secs,
+        &result.latencies_us,
+        result.correct,
+    );
+    match kind {
         BackendKind::Xla => println!("XLA CPU path (AOT JAX/Pallas via PJRT):"),
-        kind => println!("host CPU path ({} backend):", kind.name()),
+        _ => println!("host CPU path ({} backend, dynamic batcher):", kind.name()),
     }
-    println!(
-        "  latency µs: p50 {:.0}  p95 {:.0}  max {:.0}",
-        summary.median, summary.p95, summary.max
-    );
-    println!(
-        "  throughput: {:.0} req/s   (top-1 {:.2} on the lightly-tuned model)",
-        requests as f64 / wall,
-        correct as f64 / requests as f64
-    );
+    println!("{report}\n");
 
     // --- 2. TinyCL device ---
     let mut sim = Backend::create(BackendKind::Sim, &model_cfg, &sim_cfg, "artifacts", 5)?;
-    for s in batch.iter().take(5) {
+    for s in data.samples.iter().take(5) {
         sim.train_step(&s.x, s.label, 10, 0.125);
     }
     sim.reset_sim_stats();
-    for s in &batch {
+    for s in data.samples.iter().cycle().take(requests) {
         let _ = sim.predict(&s.x, 10);
     }
     let (_, infer) = sim.sim_stats().unwrap();
@@ -101,14 +139,16 @@ fn main() -> anyhow::Result<()> {
     let cycles_per_req = infer.cycles() as f64 / requests as f64;
     let us_per_req = cycles_per_req * cost.clock_ns() * 1e-3;
     let uj_per_req = energy.report(infer, 0).total_uj() / requests as f64;
-    println!("\nTinyCL device (cycle-accurate @ {:.2} ns):", cost.clock_ns());
+    println!("TinyCL device (cycle-accurate @ {:.2} ns):", cost.clock_ns());
     println!("  latency   : {us_per_req:.1} µs/request ({cycles_per_req:.0} cycles)");
     println!("  throughput: {:.0} req/s", 1e6 / us_per_req);
     println!("  energy    : {uj_per_req:.2} µJ/request");
-    println!(
-        "\ndevice vs host-CPU latency: {:.1}× faster at {:.1} mW",
-        summary.median / us_per_req,
-        cost.power_mw(infer).total()
-    );
+    if let Some(lat) = &report.latency {
+        println!(
+            "\ndevice vs host-CPU p50 latency: {:.1}× faster at {:.1} mW",
+            lat.p50_us / us_per_req,
+            cost.power_mw(infer).total()
+        );
+    }
     Ok(())
 }

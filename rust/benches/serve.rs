@@ -1,0 +1,24 @@
+//! Serving bench: the dynamic-batching inference server under
+//! closed-loop multi-client load — same driver as `tinycl serve-bench`
+//! (see `serve::bench`), exposed as a bench binary so `cargo bench
+//! --bench serve` sits next to the other paper-figure benches.
+//!
+//! Run: `cargo bench --bench serve [-- --clients N --max-batch N
+//! --max-wait-us N --queue-depth N --requests N --backend ...
+//! --threads N --qnn-engine naive|fast --smoke]`.
+//!
+//! Ladders `max_batch = 1` vs `max_batch = N` per backend, parity-pins
+//! every served answer against per-sample `predict`, checks the shed
+//! accounting (`offered == admitted + shed`), and at the paper geometry
+//! asserts cross-request batching wins ≥ 2× on `f32-fast` and `qnn`.
+//! Emits `BENCH_serve.json`.
+
+use tinycl::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = tinycl::serve::bench::run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

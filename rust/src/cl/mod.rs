@@ -25,6 +25,7 @@ pub mod stream;
 
 pub use memory::{ReplayMemory, SamplerKind};
 pub use metrics::{AccuracyMatrix, ClReport};
+pub use policy::EVAL_BATCH;
 pub use policy::{
     ClPolicy, ExperienceReplay, Gdumb, JointUpperBound, NaiveFinetune, PolicyKind, RunConfig,
 };

@@ -296,11 +296,22 @@ impl ClPolicy for JointUpperBound {
     }
 }
 
-/// Minibatch size for accuracy evaluation: predictions are independent,
-/// so batching is purely a throughput knob — backends with a batched
-/// forward run one packed GEMM set per chunk, the rest fall back to
-/// per-sample prediction (see [`Learner::predict_batch`]).
-const EVAL_BATCH: usize = 64;
+/// Batched-forward chunk size shared by accuracy evaluation and the
+/// serving batcher's default `max_batch` (`serve::ServerConfig`).
+/// Predictions are independent, so chunking is purely a throughput knob
+/// — backends with a batched forward run one packed GEMM set per chunk,
+/// the rest fall back to per-sample prediction (see
+/// [`Learner::predict_batch`]). 64 because at the paper geometry it is
+/// past the knee of the amortization curve: the packed conv GEMMs span
+/// tens of thousands of output columns (64 × 1024 pixels), far beyond
+/// the worker pool's `MT_MIN_MACS` threshold with full column-sharding
+/// headroom, and per-call overheads (pool dispatch, packing-buffer
+/// allocation) are split 64 ways — while the chunk's im2col workspace
+/// (~400 KB per sample, ~25 MB per chunk) stays a trivial host-memory
+/// footprint. Larger chunks only grow the workspace without measurably
+/// improving per-sample cost; much smaller ones re-pay the dispatch
+/// overhead per call.
+pub const EVAL_BATCH: usize = 64;
 
 /// Accuracy of `learner` on the test subset of `task`, head masked to
 /// `active_classes`. Evaluates in [`EVAL_BATCH`]-sized minibatches

@@ -15,6 +15,11 @@
 //! datapath, not the init. The `xla` backend requires the off-by-default
 //! `xla` cargo feature (plus a PJRT plugin and AOT artifacts at runtime);
 //! without it, selecting `xla` fails with an actionable error.
+//!
+//! Backends are `Send`: the serving subsystem (`crate::serve`) moves a
+//! whole [`Backend`] onto a dedicated model thread that owns it for the
+//! life of the server, so every backend must stay free of thread-pinned
+//! state (pinned here by a compile-time test).
 
 use crate::cl::Learner;
 use crate::fixed::Fx;
@@ -200,6 +205,16 @@ impl Backend {
             _ => None,
         }
     }
+
+    /// The underlying float model (`f32`/`f32-fast` backends only).
+    /// The serve bench uses it to consult raw logits when judging a
+    /// prediction flip against the ≤ 1e-4 batched-forward contract.
+    pub fn float_model(&self) -> Option<&Model> {
+        match self {
+            Backend::F32(m) => Some(m),
+            _ => None,
+        }
+    }
 }
 
 impl Learner for Backend {
@@ -349,6 +364,16 @@ mod tests {
         let shape = crate::tensor::Shape::d3(cfg.in_channels, cfg.image_size, cfg.image_size);
         let n = shape.numel();
         Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+    }
+
+    #[test]
+    fn backends_move_to_a_serving_thread() {
+        // `serve::Server::start` hands the whole backend to its model
+        // thread; if a future backend variant grows a non-Send field
+        // (an Rc, a thread-pinned handle), this fails at compile time
+        // instead of deep inside the serve subsystem.
+        fn assert_send<T: Send>() {}
+        assert_send::<Backend>();
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //!   microarchitecture (`sim`), 65 nm cost model (`hw`), continual-learning
 //!   policies (`cl`), dataset substrate (`data`), f32 and Q4.12 functional
 //!   models (`nn`, `qnn`), PJRT runtime for the AOT software baseline
-//!   (`runtime`) and the training coordinator (`coordinator`).
+//!   (`runtime`), the training coordinator (`coordinator`) and the
+//!   dynamic-batching inference server (`serve`).
 //! * **L2/L1 (python/, build-time only)** — JAX model + Pallas kernels,
 //!   AOT-lowered to HLO text artifacts loaded by `runtime`.
 
@@ -22,6 +23,7 @@ pub mod qnn;
 /// plugin; see rust/README.md).
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tensor;
 pub mod util;

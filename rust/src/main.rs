@@ -7,6 +7,9 @@
 //! * `report-hw` — area/power/clock report + Fig. 7 breakdown + Table I
 //! * `speedup`   — epoch time: TinyCL-sim vs AOT-XLA software baseline
 //!                 vs the paper's P100 constant (§IV-C)
+//! * `serve-bench` — dynamic-batching inference server under multi-client
+//!                 closed-loop load (admission control + cross-request
+//!                 batching; emits BENCH_serve.json)
 //! * `sweep`     — design-space sweep over lanes × taps (ablation A2)
 
 use anyhow::{bail, Result};
@@ -36,6 +39,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "sim-layer" => cmd_sim_layer(args),
         "report-hw" => cmd_report_hw(args),
         "speedup" => cmd_speedup(args),
+        "serve-bench" => tinycl::serve::bench::run(args),
         "sweep" => cmd_sweep(args),
         "help" | "--help" => {
             print!("{HELP}");
@@ -72,6 +76,16 @@ SUBCOMMANDS
              --steps N (default: one GDumb epoch of 1000)
              --batch N --threads N (batched+threaded f32-fast rung)
              (also times the qnn naive vs fast integer-GEMM rung)
+  serve-bench  multi-client inference serving: dynamic batcher +
+             admission control, laddered max_batch 1 vs N per backend
+             --backend f32|f32-fast|qnn|sim (default: both fast backends)
+             --clients N (default 8) --requests N (default 2000)
+             --max-batch N (default 64) --max-wait-us N (default 200)
+             --queue-depth N (shed beyond it; default 2×clients, min 8)
+             --threads N --qnn-engine naive|fast --seed N
+             --smoke (tiny geometry, CI-safe; ratio asserts relaxed)
+             asserts batching ≥ 2× at the paper geometry and parity with
+             per-sample predict; writes BENCH_serve.json
   sweep      design-space sweep over --lanes-list and --taps-list
   help       this text
 ";
@@ -288,8 +302,8 @@ fn cmd_speedup(args: &Args) -> Result<()> {
 /// `sweep`: A2 — design-space sweep (lanes × taps).
 fn cmd_sweep(args: &Args) -> Result<()> {
     let config = ExperimentConfig::from_args(args)?;
-    let lanes_list = parse_list(&args.str_or("lanes-list", "2,4,8,16"));
-    let taps_list = parse_list(&args.str_or("taps-list", "9"));
+    let lanes_list = args.usize_list_or("lanes-list", "2,4,8,16");
+    let taps_list = args.usize_list_or("taps-list", "9");
     use tinycl::cl::Learner;
 
     println!(
@@ -327,8 +341,4 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     let _ = OpKind::ALL; // keep OpKind linked for future per-op sweeps
     Ok(())
-}
-
-fn parse_list(s: &str) -> Vec<usize> {
-    s.split(',').filter(|t| !t.is_empty()).map(|t| t.trim().parse().expect("bad list")).collect()
 }

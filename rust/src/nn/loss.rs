@@ -41,10 +41,36 @@ pub fn predict(logits: &[f32], active: usize) -> usize {
         .unwrap()
 }
 
+/// True when the top two logits over the active head are within `tol`
+/// relative tolerance of each other. This is the only case where a
+/// batched GEMM forward may legitimately flip a prediction relative to
+/// the per-sample pass (the float engines' documented ≤ 1e-4 logit
+/// contract) — the serving parity gates in `serve::bench` and
+/// `tests/serve_parity.rs` share this one definition so the contract
+/// cannot drift between them.
+pub fn top2_near_tie(logits: &[f32], active: usize, tol: f32) -> bool {
+    let mut head: Vec<f32> = logits[..active].to_vec();
+    head.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    head.len() < 2 || head[0] - head[1] <= tol * (1.0 + head[0].abs())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::proptest::check;
+
+    #[test]
+    fn near_tie_gate_matches_its_contract() {
+        // Clear winner: no flip allowed.
+        assert!(!top2_near_tie(&[1.0, 0.5, 0.9], 3, 1e-4));
+        // Exact tie and within-tolerance gap: flip permitted.
+        assert!(top2_near_tie(&[1.0, 1.0, 0.0], 3, 1e-4));
+        assert!(top2_near_tie(&[1.0, 1.0 - 1e-5, 0.0], 3, 1e-4));
+        // The masked tail must not influence the verdict.
+        assert!(!top2_near_tie(&[1.0, 0.5, 0.999_99], 2, 1e-4));
+        // A one-class head cannot flip at all.
+        assert!(top2_near_tie(&[3.0], 1, 1e-4));
+    }
 
     #[test]
     fn softmax_sums_to_one_over_active() {

@@ -137,6 +137,10 @@ struct GemmBatchCache {
     logits: Vec<f32>,
 }
 
+// Clone: the serving tests snapshot a warmed model (one copy moves onto
+// the server's model thread, the other stays behind as the per-sample
+// parity oracle).
+#[derive(Clone)]
 pub struct Model {
     pub config: ModelConfig,
     pub params: Params,

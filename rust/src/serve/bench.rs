@@ -1,0 +1,286 @@
+//! The `tinycl serve-bench` driver: a closed-loop multi-client load run
+//! over the serving subsystem, laddered `max_batch = 1` vs `max_batch =
+//! N` per backend so the cross-request batching win is measured, not
+//! assumed.
+//!
+//! Flags: `--backend f32|f32-fast|qnn|sim` (default: ladder both
+//! `f32-fast` and `qnn`), `--threads N` (GEMM workers, 0 = auto),
+//! `--qnn-engine naive|fast`, `--clients N`, `--max-batch N`,
+//! `--max-wait-us N`, `--queue-depth N`, `--requests N`, `--seed N`,
+//! `--smoke` (tiny geometry, ratio asserts relaxed — the CI rung).
+//!
+//! Every run is checked for (a) shed-accounting consistency
+//! (`offered == admitted + shed`, and the client-side shed count agrees
+//! with the queue's), (b) positive throughput, and (c) **serving
+//! parity**: every served prediction must match per-sample
+//! [`Learner::predict`] on an identically-built-and-warmed reference
+//! backend — bit-exactly on the integer/device backends, and on the
+//! float backends with the same top-2-near-tie escape the parity tests
+//! encode (their batched-forward contract is ≤ 1e-4 on logits, not bit
+//! equality; see `tests/serve_parity.rs`). Batching is a throughput
+//! knob, never an accuracy knob. At the paper geometry the ladder must show
+//! `max_batch N` ≥ 2× the throughput of `max_batch 1` on the `f32-fast`
+//! and `qnn` backends — asserted, so serving perf can't silently rot.
+//! Results land in `BENCH_serve.json` (the `BENCH_speedup.json`
+//! convention: machine-readable perf trajectory across PRs).
+
+use super::loadgen::{run_closed_loop, LoadConfig, LoadResult};
+use super::metrics::ServeRunReport;
+use super::server::{default_queue_depth, Server, ServerConfig, DEFAULT_MAX_WAIT};
+use crate::cl::Learner;
+use crate::coordinator::{Backend, BackendKind};
+use crate::data::{Sample, SyntheticCifar};
+use crate::nn::ModelConfig;
+use crate::qnn::QnnEngine;
+use crate::sim::SimConfig;
+use crate::util::cli::Args;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Quick fine-tune applied identically to the served backend and the
+/// parity reference, so the model is not random and both agree bit-wise.
+const WARMUP_STEPS: usize = 5;
+const WARMUP_LR: f32 = 0.05;
+
+/// Paper-mode floor for the cross-request batching win (the ROADMAP's
+/// "heavy traffic" axis regresses if batching stops paying).
+const SPEEDUP_FLOOR: f64 = 2.0;
+
+struct BenchSetup {
+    model_cfg: ModelConfig,
+    sim_cfg: SimConfig,
+    threads: usize,
+    qnn_engine: QnnEngine,
+    seed: u64,
+    clients: usize,
+    requests: usize,
+    max_wait: Duration,
+    queue_depth: usize,
+}
+
+impl BenchSetup {
+    fn build_backend(&self, kind: BackendKind, samples: &[Sample]) -> Result<Backend> {
+        let mut backend =
+            Backend::create(kind, &self.model_cfg, &self.sim_cfg, "artifacts", self.seed)?;
+        backend.set_threads(self.threads);
+        backend.set_qnn_engine(self.qnn_engine);
+        for s in samples.iter().take(WARMUP_STEPS) {
+            backend.train_step(&s.x, s.label, self.model_cfg.num_classes, WARMUP_LR);
+        }
+        Ok(backend)
+    }
+}
+
+/// One (backend, max_batch) run: build, serve, load, account.
+fn run_one(
+    setup: &BenchSetup,
+    kind: BackendKind,
+    max_batch: usize,
+    samples: &[Sample],
+) -> Result<(ServeRunReport, LoadResult)> {
+    let backend = setup.build_backend(kind, samples)?;
+    let server = Server::start(
+        backend,
+        ServerConfig { max_batch, max_wait: setup.max_wait, queue_depth: setup.queue_depth },
+    );
+    let load = LoadConfig {
+        clients: setup.clients,
+        requests: setup.requests,
+        active_classes: setup.model_cfg.num_classes,
+    };
+    let result = run_closed_loop(&server.client(), samples, &load);
+    let queue = server.queue_stats();
+    let (_backend, stats) = server.shutdown();
+    let report = ServeRunReport::new(
+        kind.name(),
+        max_batch,
+        setup.clients,
+        queue,
+        stats,
+        result.wall_secs,
+        &result.latencies_us,
+        result.correct,
+    );
+    // Accounting gates — these hold in smoke mode too (CI's rung).
+    assert!(
+        queue.consistent(),
+        "shed accounting broke: offered {} != admitted {} + shed {}",
+        queue.offered,
+        queue.admitted,
+        queue.shed
+    );
+    assert_eq!(
+        queue.shed, result.shed,
+        "queue-side and client-side shed counts disagree"
+    );
+    assert_eq!(
+        report.server.served,
+        queue.admitted,
+        "admitted requests were not all served"
+    );
+    assert!(report.throughput_rps > 0.0, "zero serving throughput");
+    Ok((report, result))
+}
+
+/// Entry point for the `serve-bench` subcommand (and the `serve` bench
+/// binary — same driver, two front doors).
+pub fn run(args: &Args) -> Result<()> {
+    let smoke = args.bool_or("smoke", false);
+    let model_cfg = if smoke {
+        ModelConfig {
+            in_channels: 3,
+            image_size: 8,
+            conv_channels: 4,
+            num_classes: 4,
+            grad_clip: f32::INFINITY,
+        }
+    } else {
+        ModelConfig::default()
+    };
+    let clients = args.usize_or("clients", 8).max(1);
+    let max_batch = args.usize_or("max-batch", crate::cl::EVAL_BATCH).max(1);
+    let setup = BenchSetup {
+        sim_cfg: SimConfig::paper(),
+        threads: args.threads_or_auto("threads", 0),
+        qnn_engine: QnnEngine::from_args(args)?,
+        seed: args.u64_or("seed", 5),
+        clients,
+        requests: args.usize_or("requests", if smoke { 240 } else { 2000 }),
+        max_wait: Duration::from_micros(
+            args.u64_or("max-wait-us", DEFAULT_MAX_WAIT.as_micros() as u64),
+        ),
+        queue_depth: args.usize_or("queue-depth", default_queue_depth(clients)),
+        model_cfg,
+    };
+    let kinds: Vec<BackendKind> = match args.get("backend") {
+        Some(name) => vec![BackendKind::parse(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown backend '{name}' (f32|f32-fast|qnn|sim)"))?],
+        None => vec![BackendKind::F32Fast, BackendKind::Qnn],
+    };
+
+    let gen = SyntheticCifar {
+        image_size: setup.model_cfg.image_size,
+        channels: setup.model_cfg.in_channels,
+        num_classes: setup.model_cfg.num_classes,
+        noise: 0.35,
+        seed: 3,
+    };
+    let samples = gen.generate(10, 0).samples;
+
+    let mode = if smoke { "smoke" } else { "paper" };
+    println!(
+        "serve-bench [{mode}]: {} closed-loop requests, {} clients, \
+         queue depth {}, max_wait {} µs, {} GEMM threads\n",
+        setup.requests,
+        setup.clients,
+        setup.queue_depth,
+        setup.max_wait.as_micros(),
+        setup.threads
+    );
+
+    let mut runs: Vec<ServeRunReport> = Vec::new();
+    let mut speedups: Vec<(BackendKind, f64)> = Vec::new();
+    for &kind in &kinds {
+        // Per-sample parity oracle: an identically built + warmed
+        // backend answering with `Learner::predict`.
+        let mut reference = setup.build_backend(kind, &samples)?;
+        let ref_preds: Vec<usize> = samples
+            .iter()
+            .map(|s| reference.predict(&s.x, setup.model_cfg.num_classes))
+            .collect();
+
+        let ladder: Vec<usize> = if max_batch == 1 { vec![1] } else { vec![1, max_batch] };
+        let mut throughputs = Vec::new();
+        for &mb in &ladder {
+            let (report, result) = run_one(&setup, kind, mb, &samples)?;
+            for &(idx, pred) in &result.predictions {
+                if pred == ref_preds[idx] {
+                    continue;
+                }
+                // Float backends guarantee ≤ 1e-4 on logits, not bit
+                // equality: a flip is within contract only on a genuine
+                // top-2 near-tie (`nn::loss::top2_near_tie` — the same
+                // gate the parity tests use). Integer/device backends
+                // are bit-exact — no escape.
+                let near_tie = reference.float_model().is_some_and(|m| {
+                    crate::nn::loss::top2_near_tie(
+                        &m.forward(&samples[idx].x),
+                        setup.model_cfg.num_classes,
+                        1e-4,
+                    )
+                });
+                assert!(
+                    near_tie,
+                    "serving parity broke: backend {} max_batch {mb} sample {idx} \
+                     served {pred} but per-sample predict says {} (not a near-tie)",
+                    kind.name(),
+                    ref_preds[idx]
+                );
+            }
+            println!("{report}");
+            println!(
+                "  parity  : {} served answers == per-sample predict ✓\n",
+                result.predictions.len()
+            );
+            throughputs.push(report.throughput_rps);
+            runs.push(report);
+        }
+        if throughputs.len() == 2 {
+            let s = throughputs[1] / throughputs[0];
+            println!(
+                "{}: cross-request batching {s:.2}× throughput (max_batch {max_batch} vs 1)\n",
+                kind.name()
+            );
+            speedups.push((kind, s));
+        }
+    }
+
+    // --- Machine-readable result (perf trajectory across PRs) ---
+    let run_objs: Vec<String> = runs.iter().map(|r| r.to_json("    ")).collect();
+    let speedup_objs: Vec<String> = speedups
+        .iter()
+        .map(|(k, s)| format!("\"{}\": {s:.2}", k.name()))
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"mode\": \"{mode}\",\n  \
+         \"geometry\": {{\"image_size\": {}, \"in_channels\": {}, \
+         \"conv_channels\": {}, \"classes\": {}}},\n  \
+         \"clients\": {},\n  \"requests\": {},\n  \"threads\": {},\n  \
+         \"max_wait_us\": {},\n  \"queue_depth\": {},\n  \
+         \"batched_speedup\": {{{}}},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        setup.model_cfg.image_size,
+        setup.model_cfg.in_channels,
+        setup.model_cfg.conv_channels,
+        setup.model_cfg.num_classes,
+        setup.clients,
+        setup.requests,
+        setup.threads,
+        setup.max_wait.as_micros(),
+        setup.queue_depth,
+        speedup_objs.join(", "),
+        run_objs.join(",\n"),
+    );
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("WARN: could not write BENCH_serve.json: {e}"),
+    }
+
+    // Ratio gate only at the paper geometry (repo convention: smoke
+    // tolerates slow shared CI runners; accounting/parity gates above
+    // always apply).
+    if !smoke {
+        for (kind, s) in &speedups {
+            if matches!(kind, BackendKind::F32Fast | BackendKind::Qnn) {
+                assert!(
+                    *s >= SPEEDUP_FLOOR,
+                    "cross-request batching on {} won only {s:.2}× (< {SPEEDUP_FLOOR}×) \
+                     over max_batch 1 at {} clients — serving engine regressed",
+                    kind.name(),
+                    setup.clients
+                );
+            }
+        }
+    }
+    println!("\nserve-bench PASS");
+    Ok(())
+}

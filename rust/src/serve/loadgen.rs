@@ -1,0 +1,137 @@
+//! Closed-loop multi-client load generator.
+//!
+//! N client threads (plain `std::thread::scope` — the GEMM worker pool
+//! must stay free for the model thread, and clients block on responses,
+//! which a pool task must never do) each drive their share of the
+//! request schedule **closed-loop**: the next request is issued only
+//! after the previous one resolves (served or shed), the standard way to
+//! measure a server without coordinated-omission artifacts from an
+//! open-loop arrival process.
+//!
+//! Each client records per-request latency (offer → response) and the
+//! served predictions keyed by sample index, so callers can parity-pin
+//! every answer against per-sample [`crate::cl::Learner::predict`].
+
+use super::server::{Served, ServeClient};
+use crate::data::Sample;
+use std::time::{Duration, Instant};
+
+/// Brief client-side backoff after a shed response: a closed loop would
+/// otherwise re-offer instantly and spin the admission check.
+const SHED_BACKOFF: Duration = Duration::from_micros(100);
+
+/// One load run's shape.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadConfig {
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Total requests across all clients (split round-robin).
+    pub requests: usize,
+    /// Head mask every request uses.
+    pub active_classes: usize,
+}
+
+/// Merged result of one closed-loop run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadResult {
+    /// Wall clock of the whole run (first offer → last response).
+    pub wall_secs: f64,
+    /// Per-served-request latency in µs (unordered across clients).
+    pub latencies_us: Vec<f64>,
+    /// Served `(sample_index, prediction)` pairs for parity checks.
+    pub predictions: Vec<(usize, usize)>,
+    /// Requests that came back [`Served::Shed`].
+    pub shed: u64,
+    /// Served predictions that matched the sample's label.
+    pub correct: u64,
+}
+
+/// Drive `cfg.requests` closed-loop requests from `cfg.clients` threads
+/// against `client`'s server, cycling over `samples`. Returns merged
+/// per-request measurements; request `i` uses `samples[i % len]` and is
+/// issued by client `i % clients`, so the schedule is deterministic even
+/// though completion order is not.
+pub fn run_closed_loop(client: &ServeClient, samples: &[Sample], cfg: &LoadConfig) -> LoadResult {
+    assert!(cfg.clients >= 1, "need at least one client");
+    assert!(!samples.is_empty(), "need samples to serve");
+    let t0 = Instant::now();
+    let per_client: Vec<LoadResult> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..cfg.clients)
+            .map(|c| {
+                let client = client.clone();
+                scope.spawn(move || {
+                    let mut out = LoadResult::default();
+                    let mut i = c;
+                    while i < cfg.requests {
+                        let idx = i % samples.len();
+                        let s = &samples[idx];
+                        let q0 = Instant::now();
+                        match client.predict(&s.x, cfg.active_classes) {
+                            Served::Ok { pred, .. } => {
+                                out.latencies_us.push(q0.elapsed().as_secs_f64() * 1e6);
+                                out.predictions.push((idx, pred));
+                                out.correct += u64::from(pred == s.label);
+                            }
+                            Served::Shed => {
+                                out.shed += 1;
+                                std::thread::sleep(SHED_BACKOFF);
+                            }
+                            Served::Closed => break,
+                        }
+                        i += cfg.clients;
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("load client panicked")).collect()
+    });
+    let mut merged = LoadResult { wall_secs: t0.elapsed().as_secs_f64(), ..Default::default() };
+    for r in per_client {
+        merged.latencies_us.extend(r.latencies_us);
+        merged.predictions.extend(r.predictions);
+        merged.shed += r.shed;
+        merged.correct += r.correct;
+    }
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticCifar;
+    use crate::nn::{Engine, Model, ModelConfig};
+    use crate::serve::server::{Server, ServerConfig};
+
+    #[test]
+    fn closed_loop_serves_every_request() {
+        let cfg = ModelConfig {
+            in_channels: 3,
+            image_size: 8,
+            conv_channels: 4,
+            num_classes: 4,
+            grad_clip: f32::INFINITY,
+        };
+        let gen = SyntheticCifar {
+            image_size: 8,
+            channels: 3,
+            num_classes: 4,
+            noise: 0.3,
+            seed: 11,
+        };
+        let data = gen.generate(4, 0);
+        let model = Model::new(cfg, 5).with_engine(Engine::Gemm);
+        let server = Server::start(model, ServerConfig { max_batch: 8, ..Default::default() });
+        let load = LoadConfig { clients: 3, requests: 30, active_classes: 4 };
+        let result = run_closed_loop(&server.client(), &data.samples, &load);
+        // Capacity is ample (depth 256 ≫ 3 clients): nothing sheds and
+        // every request is served and measured.
+        assert_eq!(result.shed, 0);
+        assert_eq!(result.predictions.len(), 30);
+        assert_eq!(result.latencies_us.len(), 30);
+        assert!(result.latencies_us.iter().all(|&l| l > 0.0));
+        assert!(result.wall_secs > 0.0);
+        let (_, stats) = server.shutdown();
+        assert_eq!(stats.served, 30);
+    }
+}

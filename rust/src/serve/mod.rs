@@ -1,0 +1,43 @@
+//! `serve` — the inference-serving subsystem: a dynamic batcher that
+//! coalesces concurrent single-image predict requests into cross-request
+//! batches, admission control that sheds overload instead of queueing
+//! unbounded latency, and a closed-loop multi-client load harness.
+//!
+//! The paper's deployment story (§IV-C) is a device that continually
+//! learns and then *serves* predictions from the same model. This
+//! subsystem grows that into the ROADMAP's "heavy traffic" axis: many
+//! clients, one model owner, throughput from the batched GEMM datapaths
+//! ([`crate::cl::Learner::predict_batch`] — one packed GEMM set per
+//! coalesced batch on the `f32-fast` and `qnn` backends).
+//!
+//! Shape of the subsystem:
+//! * [`queue`] — bounded MPSC queue + the batcher
+//!   ([`queue::ServeQueue::pop_batch`]: flush on `max_batch` or a
+//!   `max_wait` deadline) + shed/admit accounting;
+//! * [`server`] — the dedicated model thread that owns the
+//!   [`crate::cl::Learner`], executing predict batches and
+//!   serve-while-learning train jobs serialized in stream order;
+//! * [`loadgen`] — N plain-`std::thread` closed-loop clients measuring
+//!   per-request latency;
+//! * [`metrics`] — latency percentiles, throughput, batch histogram,
+//!   shed rate, `BENCH_serve.json` emission;
+//! * [`bench`] — the `tinycl serve-bench` driver (also the `serve`
+//!   bench binary): ladders `max_batch` 1 vs N per backend, parity-pins
+//!   every served answer against per-sample `predict`, and asserts the
+//!   batching win at the paper geometry.
+
+pub mod bench;
+pub mod loadgen;
+pub mod metrics;
+pub mod queue;
+pub mod server;
+
+pub use loadgen::{run_closed_loop, LoadConfig, LoadResult};
+pub use metrics::{LatencySummary, ServeRunReport};
+pub use queue::{
+    Admission, Batch, PredictJob, PredictResponse, QueueStats, ServeQueue, TrainJob, IDLE_FLUSH,
+};
+pub use server::{
+    default_queue_depth, ServeClient, Served, Server, ServerConfig, ServerStats,
+    DEFAULT_MAX_WAIT, DEFAULT_QUEUE_DEPTH,
+};

@@ -1,0 +1,427 @@
+//! Bounded request queue + dynamic batcher — the admission-control core
+//! of the serving subsystem.
+//!
+//! Producers (client threads) [`ServeQueue::offer`] single-image predict
+//! jobs; the single consumer (the server's model thread) pulls them with
+//! [`ServeQueue::pop_batch`], which **coalesces concurrent requests into
+//! one cross-request batch**: it collects up to `max_batch` queued
+//! predicts and, when fewer are waiting, holds the batch open until a
+//! `max_wait` deadline measured from the first pop — the classic
+//! dynamic-batching flush-on-size-or-deadline rule.
+//!
+//! An open batch also flushes early once arrivals go quiet: if no new
+//! job lands for [`IDLE_FLUSH`] (a rolling window, reset by each
+//! arrival), waiting longer can only add dead time — a closed-loop
+//! client crowd smaller than `max_batch` would otherwise pay the full
+//! deadline on every batch. The `max_wait` deadline still hard-caps the
+//! hold-open time under a steady trickle of arrivals.
+//!
+//! Admission control is a hard bound on queued predicts (`depth`): an
+//! offer beyond it is **shed** synchronously (the client learns
+//! immediately, nothing blocks, no latency blow-up) and the shed is
+//! counted, so overload degrades gracefully and visibly. The invariant
+//! `offered == admitted + shed` is the accounting contract the bench and
+//! CI check.
+//!
+//! Train jobs ride the same FIFO (serve-while-learning): they are never
+//! shed (control plane, client-paced) and act as a **batch boundary** —
+//! a predict batch never crosses a queued train job, so parameter
+//! updates and predictions serialize in exact stream order on the one
+//! model-thread owner, preserving CL's stream-order semantics.
+
+use crate::tensor::Tensor;
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One admitted predict request: the input image, the head mask, and the
+/// channel the prediction is sent back on.
+pub struct PredictJob {
+    pub x: Tensor<f32>,
+    pub active_classes: usize,
+    pub resp: Sender<PredictResponse>,
+}
+
+/// What the model thread sends back for one predict request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PredictResponse {
+    /// Predicted class (argmax over the active head).
+    pub pred: usize,
+    /// Size of the cross-request batch this prediction rode in.
+    pub batch_size: usize,
+}
+
+/// One serve-while-learning update: applied on the model thread, in
+/// stream order relative to every other queued job.
+pub struct TrainJob {
+    pub x: Tensor<f32>,
+    pub label: usize,
+    pub active_classes: usize,
+    pub lr: f32,
+    /// Receives the step's loss.
+    pub resp: Sender<f32>,
+}
+
+/// Quiescence window for the early flush: an open, non-full batch is
+/// released once no new job has arrived for this long. Long enough to
+/// coalesce a burst of concurrent clients racing to enqueue (their
+/// inter-offer jitter is single-digit µs plus scheduler noise), short
+/// enough to be invisible next to a batched forward pass.
+pub const IDLE_FLUSH: Duration = Duration::from_micros(50);
+
+enum Job {
+    Predict(PredictJob),
+    Train(TrainJob),
+}
+
+/// What the model thread pulled: a coalesced predict batch (never empty,
+/// never crossing a train job) or a single train job.
+pub enum Batch {
+    Predicts(Vec<PredictJob>),
+    Train(TrainJob),
+}
+
+/// Synchronous admission verdict for one offered predict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Enqueued; a response will arrive on the job's channel.
+    Admitted,
+    /// Queue at capacity — rejected without enqueueing (counted).
+    Shed,
+    /// Queue closed (server shutting down) — rejected, not counted as
+    /// shed (it is not an overload signal).
+    Closed,
+}
+
+/// Admission-control counters (see module docs for the invariant).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Predicts presented to [`ServeQueue::offer`] while open.
+    pub offered: u64,
+    /// Predicts accepted into the queue.
+    pub admitted: u64,
+    /// Predicts rejected at the admission bound.
+    pub shed: u64,
+    /// Train jobs enqueued (never shed).
+    pub trains: u64,
+    /// Predicts currently queued (waiting for the batcher).
+    pub pending: usize,
+}
+
+impl QueueStats {
+    /// The accounting contract: every offered predict was either
+    /// admitted or shed — nothing vanishes.
+    pub fn consistent(&self) -> bool {
+        self.offered == self.admitted + self.shed
+    }
+
+    /// Fraction of offered predicts shed (0 when nothing was offered).
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
+}
+
+struct Inner {
+    jobs: VecDeque<Job>,
+    stats: QueueStats,
+    closed: bool,
+}
+
+/// The MPSC bounded queue. Cheap to share behind an `Arc`; all methods
+/// take `&self`.
+pub struct ServeQueue {
+    inner: Mutex<Inner>,
+    nonempty: Condvar,
+    depth: usize,
+}
+
+impl ServeQueue {
+    /// `depth` bounds *queued* predicts (clamped to ≥ 1); train jobs are
+    /// not counted against it.
+    pub fn new(depth: usize) -> ServeQueue {
+        ServeQueue {
+            inner: Mutex::new(Inner {
+                jobs: VecDeque::new(),
+                stats: QueueStats::default(),
+                closed: false,
+            }),
+            nonempty: Condvar::new(),
+            depth: depth.max(1),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Offer one predict. Never blocks: either the job is enqueued
+    /// ([`Admission::Admitted`]) or it is rejected on the spot.
+    pub fn offer(&self, job: PredictJob) -> Admission {
+        let mut inner = self.lock();
+        if inner.closed {
+            return Admission::Closed;
+        }
+        inner.stats.offered += 1;
+        if inner.stats.pending >= self.depth {
+            inner.stats.shed += 1;
+            return Admission::Shed;
+        }
+        inner.stats.admitted += 1;
+        inner.stats.pending += 1;
+        inner.jobs.push_back(Job::Predict(job));
+        drop(inner);
+        self.nonempty.notify_all();
+        Admission::Admitted
+    }
+
+    /// Enqueue one train job (control plane: never shed). Returns false
+    /// if the queue is closed.
+    pub fn push_train(&self, job: TrainJob) -> bool {
+        let mut inner = self.lock();
+        if inner.closed {
+            return false;
+        }
+        inner.stats.trains += 1;
+        inner.jobs.push_back(Job::Train(job));
+        drop(inner);
+        self.nonempty.notify_all();
+        true
+    }
+
+    /// Close the queue: subsequent offers are rejected; the consumer
+    /// drains what is already queued, then [`ServeQueue::pop_batch`]
+    /// returns `None`.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.nonempty.notify_all();
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.lock().stats
+    }
+
+    /// Dynamic-batching pop (single consumer). Blocks until at least one
+    /// job is queued (or the queue is closed *and* drained → `None`).
+    /// A train job returns alone. A predict opens a batch that is
+    /// flushed at the earliest of: it reaches `max_batch`; a train job
+    /// is next in line (stream-order boundary); the queue closes;
+    /// `max_wait` has elapsed since the batch opened; or no new job has
+    /// arrived for [`IDLE_FLUSH`] (quiescence — see module docs).
+    pub fn pop_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Batch> {
+        let max_batch = max_batch.max(1);
+        let mut inner = self.lock();
+        loop {
+            if !inner.jobs.is_empty() {
+                break;
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.nonempty.wait(inner).unwrap_or_else(|e| e.into_inner());
+        }
+        match inner.jobs.pop_front().expect("nonempty") {
+            Job::Train(t) => Some(Batch::Train(t)),
+            Job::Predict(first) => {
+                inner.stats.pending -= 1;
+                let mut batch = Vec::with_capacity(max_batch.min(64));
+                batch.push(first);
+                let deadline = Instant::now() + max_wait;
+                loop {
+                    while batch.len() < max_batch
+                        && matches!(inner.jobs.front(), Some(Job::Predict(_)))
+                    {
+                        if let Some(Job::Predict(p)) = inner.jobs.pop_front() {
+                            inner.stats.pending -= 1;
+                            batch.push(p);
+                        }
+                    }
+                    if batch.len() >= max_batch
+                        || matches!(inner.jobs.front(), Some(Job::Train(_)))
+                        || inner.closed
+                    {
+                        break;
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    // The queue is empty here (nothing left to drain).
+                    // Hold the batch open for one quiescence window,
+                    // bounded by the deadline — the window restarts on
+                    // every arrival because a drain re-enters this loop.
+                    // A timeout with nothing new means arrivals went
+                    // quiet: flush rather than burn the rest of the
+                    // deadline as dead time.
+                    let wait_for = IDLE_FLUSH.min(deadline - now);
+                    let (guard, timeout) = self
+                        .nonempty
+                        .wait_timeout(inner, wait_for)
+                        .unwrap_or_else(|e| e.into_inner());
+                    inner = guard;
+                    if timeout.timed_out() && inner.jobs.is_empty() {
+                        break;
+                    }
+                }
+                Some(Batch::Predicts(batch))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+    use std::sync::mpsc::channel;
+
+    fn img(v: f32) -> Tensor<f32> {
+        Tensor::from_vec(Shape::d3(1, 2, 2), vec![v; 4])
+    }
+
+    fn predict_job(v: f32) -> (PredictJob, std::sync::mpsc::Receiver<PredictResponse>) {
+        let (tx, rx) = channel();
+        (PredictJob { x: img(v), active_classes: 2, resp: tx }, rx)
+    }
+
+    fn train_job() -> TrainJob {
+        // The receiver is dropped — fine, nothing sends on it here.
+        let (tx, _) = channel();
+        TrainJob { x: img(0.0), label: 0, active_classes: 2, lr: 0.1, resp: tx }
+    }
+
+    #[test]
+    fn shed_accounting_is_deterministic() {
+        // No consumer: a depth-3 queue admits exactly 3 of 8 offers and
+        // sheds the other 5, and the books always balance.
+        let q = ServeQueue::new(3);
+        let mut verdicts = Vec::new();
+        for i in 0..8 {
+            let (job, _rx) = predict_job(i as f32);
+            verdicts.push(q.offer(job));
+        }
+        assert_eq!(&verdicts[..3], &[Admission::Admitted; 3]);
+        assert_eq!(&verdicts[3..], &[Admission::Shed; 5]);
+        let s = q.stats();
+        assert_eq!((s.offered, s.admitted, s.shed, s.pending), (8, 3, 5, 3));
+        assert!(s.consistent());
+        assert!((s.shed_rate() - 5.0 / 8.0).abs() < 1e-12);
+        // Draining frees capacity: the next offer is admitted again.
+        match q.pop_batch(8, Duration::ZERO) {
+            Some(Batch::Predicts(b)) => assert_eq!(b.len(), 3),
+            _ => panic!("expected a predict batch"),
+        }
+        let (job, _rx) = predict_job(9.0);
+        assert_eq!(q.offer(job), Admission::Admitted);
+        assert!(q.stats().consistent());
+    }
+
+    #[test]
+    fn pop_batch_flushes_on_max_batch() {
+        let q = ServeQueue::new(16);
+        let rxs: Vec<_> = (0..5).map(|i| {
+            let (job, rx) = predict_job(i as f32);
+            assert_eq!(q.offer(job), Admission::Admitted);
+            rx
+        }).collect();
+        // max_batch 3: first pop returns exactly 3 without waiting for
+        // the deadline (the batch is already full).
+        match q.pop_batch(3, Duration::from_secs(10)) {
+            Some(Batch::Predicts(b)) => assert_eq!(b.len(), 3),
+            _ => panic!("expected predicts"),
+        }
+        // Remaining 2 flush on the (zero) deadline, not on size.
+        match q.pop_batch(3, Duration::ZERO) {
+            Some(Batch::Predicts(b)) => assert_eq!(b.len(), 2),
+            _ => panic!("expected predicts"),
+        }
+        drop(rxs);
+    }
+
+    #[test]
+    fn train_jobs_are_batch_boundaries() {
+        // Queue: P P T P — the first batch must stop before the train
+        // job even though max_batch would admit more, the train job pops
+        // alone, and the trailing predict forms its own batch. This is
+        // what keeps serve-while-learning in stream order.
+        let q = ServeQueue::new(16);
+        let (p1, _r1) = predict_job(1.0);
+        let (p2, _r2) = predict_job(2.0);
+        q.offer(p1);
+        q.offer(p2);
+        q.push_train(train_job());
+        let (p3, _r3) = predict_job(3.0);
+        q.offer(p3);
+        match q.pop_batch(64, Duration::from_secs(10)) {
+            Some(Batch::Predicts(b)) => assert_eq!(b.len(), 2, "batch crossed a train job"),
+            _ => panic!("expected predicts"),
+        }
+        assert!(matches!(q.pop_batch(64, Duration::ZERO), Some(Batch::Train(_))));
+        match q.pop_batch(64, Duration::ZERO) {
+            Some(Batch::Predicts(b)) => assert_eq!(b.len(), 1),
+            _ => panic!("expected predicts"),
+        }
+        assert_eq!(q.stats().trains, 1);
+    }
+
+    #[test]
+    fn quiet_arrivals_flush_before_the_deadline() {
+        // 5 queued, room for 8, a 10 s deadline: the idle-flush window
+        // must release the batch as soon as arrivals go quiet instead of
+        // holding it open for the full deadline.
+        let q = ServeQueue::new(16);
+        let rxs: Vec<_> = (0..5)
+            .map(|i| {
+                let (job, rx) = predict_job(i as f32);
+                assert_eq!(q.offer(job), Admission::Admitted);
+                rx
+            })
+            .collect();
+        let t0 = Instant::now();
+        match q.pop_batch(8, Duration::from_secs(10)) {
+            Some(Batch::Predicts(b)) => assert_eq!(b.len(), 5),
+            _ => panic!("expected predicts"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "idle flush never fired; pop held the batch to the deadline"
+        );
+        drop(rxs);
+    }
+
+    #[test]
+    fn close_rejects_offers_and_drains() {
+        let q = ServeQueue::new(4);
+        let (p1, _r1) = predict_job(1.0);
+        q.offer(p1);
+        q.close();
+        let (p2, _r2) = predict_job(2.0);
+        assert_eq!(q.offer(p2), Admission::Closed);
+        assert!(!q.push_train(train_job()));
+        // The queued predict is still drained before the None.
+        assert!(matches!(q.pop_batch(8, Duration::ZERO), Some(Batch::Predicts(_))));
+        assert!(q.pop_batch(8, Duration::ZERO).is_none());
+        // Closed offers are not shed: the books still balance.
+        let s = q.stats();
+        assert_eq!((s.offered, s.admitted, s.shed), (1, 1, 0));
+        assert!(s.consistent());
+    }
+
+    #[test]
+    fn pop_blocks_until_an_offer_arrives() {
+        let q = std::sync::Arc::new(ServeQueue::new(4));
+        let q2 = std::sync::Arc::clone(&q);
+        let t = std::thread::spawn(move || match q2.pop_batch(4, Duration::ZERO) {
+            Some(Batch::Predicts(b)) => b.len(),
+            _ => 0,
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let (p, _r) = predict_job(1.0);
+        q.offer(p);
+        assert_eq!(t.join().unwrap(), 1);
+    }
+}

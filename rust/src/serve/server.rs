@@ -1,0 +1,350 @@
+//! The inference server: one dedicated **model thread** owns the
+//! [`Learner`] and is the only code that ever touches it, so predictions
+//! and serve-while-learning updates are serialized in queue (stream)
+//! order with zero locking around the model itself.
+//!
+//! The model thread loops on [`ServeQueue::pop_batch`]: coalesced
+//! predict batches are executed as **one** [`Learner::predict_batch`]
+//! call — one packed GEMM set on the `f32-fast` and `qnn` backends, the
+//! whole point of cross-request batching — and train jobs are applied
+//! via [`Learner::train_step`] between batches. Clients talk to the
+//! server through cloneable [`ServeClient`] handles.
+
+use super::queue::{
+    Admission, Batch, PredictJob, PredictResponse, QueueStats, ServeQueue, TrainJob,
+};
+use crate::cl::Learner;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Default flush deadline: long enough for a closed-loop client crowd to
+/// refill the queue after a batch, short enough to stay invisible next
+/// to a paper-geometry forward pass (hundreds of µs).
+pub const DEFAULT_MAX_WAIT: Duration = Duration::from_micros(200);
+
+/// Default admission bound on queued predicts (standalone servers with
+/// an unknown client population).
+pub const DEFAULT_QUEUE_DEPTH: usize = 256;
+
+/// Default admission bound for a load run with a known closed-loop
+/// client count: twice the in-flight cap (headroom for arrival jitter),
+/// floored at 8. One policy shared by `serve-bench` and the serving
+/// example, so "the default queue depth" has a single definition.
+pub fn default_queue_depth(clients: usize) -> usize {
+    (2 * clients).max(8)
+}
+
+/// Batcher + admission-control knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Flush a batch at this many coalesced requests. Default:
+    /// [`crate::cl::EVAL_BATCH`] — the same packed-forward chunk size
+    /// the CL evaluation sweep uses (see its doc comment for why 64).
+    pub max_batch: usize,
+    /// Flush a partial batch this long after it opened.
+    pub max_wait: Duration,
+    /// Admission bound: queued predicts beyond this are shed.
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: crate::cl::EVAL_BATCH,
+            max_wait: DEFAULT_MAX_WAIT,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+        }
+    }
+}
+
+/// What the model thread did, returned by [`Server::shutdown`].
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    /// Predict requests answered.
+    pub served: u64,
+    /// Cross-request batches executed.
+    pub batches: u64,
+    /// Serve-while-learning updates applied.
+    pub train_steps: u64,
+    /// batch size → how many batches flushed at that size.
+    pub batch_hist: BTreeMap<usize, u64>,
+}
+
+impl ServerStats {
+    /// Mean coalesced batch size (0 when nothing was served).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Outcome of one client-side predict call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Served {
+    /// Answered: predicted class + the batch it rode in.
+    Ok { pred: usize, batch_size: usize },
+    /// Rejected at the admission bound — retry later or back off.
+    Shed,
+    /// Server is shutting down.
+    Closed,
+}
+
+/// Cheap cloneable handle for submitting work to a running [`Server`].
+#[derive(Clone)]
+pub struct ServeClient {
+    queue: Arc<ServeQueue>,
+}
+
+impl ServeClient {
+    /// Synchronous single-image predict: offers the request and, if
+    /// admitted, blocks until the model thread answers. Shedding returns
+    /// immediately — admission control never queues latency it cannot
+    /// serve.
+    pub fn predict(&self, x: &Tensor<f32>, active_classes: usize) -> Served {
+        let (tx, rx) = channel::<PredictResponse>();
+        match self.queue.offer(PredictJob { x: x.clone(), active_classes, resp: tx }) {
+            Admission::Admitted => match rx.recv() {
+                Ok(r) => Served::Ok { pred: r.pred, batch_size: r.batch_size },
+                Err(_) => Served::Closed,
+            },
+            Admission::Shed => Served::Shed,
+            Admission::Closed => Served::Closed,
+        }
+    }
+
+    /// Serve-while-learning: submit one SGD step, applied on the model
+    /// thread in stream order relative to every queued predict/train.
+    /// Blocks until applied; returns the loss (`None` once the server is
+    /// shutting down).
+    pub fn train(
+        &self,
+        x: &Tensor<f32>,
+        label: usize,
+        active_classes: usize,
+        lr: f32,
+    ) -> Option<f32> {
+        let (tx, rx) = channel::<f32>();
+        if !self.queue.push_train(TrainJob { x: x.clone(), label, active_classes, lr, resp: tx }) {
+            return None;
+        }
+        rx.recv().ok()
+    }
+
+    /// Admission-control counters so far.
+    pub fn queue_stats(&self) -> QueueStats {
+        self.queue.stats()
+    }
+}
+
+/// A running inference server. Owns the model thread; dropping without
+/// [`Server::shutdown`] detaches it (prefer shutdown — it returns the
+/// learner and the stats).
+pub struct Server<L: Learner + Send + 'static> {
+    queue: Arc<ServeQueue>,
+    handle: JoinHandle<(L, ServerStats)>,
+}
+
+impl<L: Learner + Send + 'static> Server<L> {
+    /// Move `learner` onto a dedicated model thread and start serving.
+    pub fn start(learner: L, cfg: ServerConfig) -> Server<L> {
+        let queue = Arc::new(ServeQueue::new(cfg.queue_depth));
+        let q = Arc::clone(&queue);
+        let handle = std::thread::Builder::new()
+            .name("tinycl-serve".to_string())
+            .spawn(move || model_loop(learner, &q, cfg))
+            .expect("spawning the serve model thread");
+        Server { queue, handle }
+    }
+
+    pub fn client(&self) -> ServeClient {
+        ServeClient { queue: Arc::clone(&self.queue) }
+    }
+
+    pub fn queue_stats(&self) -> QueueStats {
+        self.queue.stats()
+    }
+
+    /// Stop admitting, drain everything already queued, join the model
+    /// thread, and hand back the learner (with any serve-while-learning
+    /// updates applied) plus the serving stats.
+    pub fn shutdown(self) -> (L, ServerStats) {
+        self.queue.close();
+        self.handle.join().expect("serve model thread panicked")
+    }
+}
+
+/// The model thread: the single owner of the learner.
+fn model_loop<L: Learner>(
+    mut learner: L,
+    queue: &ServeQueue,
+    cfg: ServerConfig,
+) -> (L, ServerStats) {
+    let mut stats = ServerStats::default();
+    while let Some(batch) = queue.pop_batch(cfg.max_batch, cfg.max_wait) {
+        match batch {
+            Batch::Predicts(jobs) => {
+                let batch_size = jobs.len();
+                stats.batches += 1;
+                stats.served += batch_size as u64;
+                *stats.batch_hist.entry(batch_size).or_insert(0) += 1;
+                // One packed forward per active-head group (requests
+                // virtually always share one head, so this is one
+                // `predict_batch` for the whole coalesced batch).
+                let mut by_head: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+                for (i, job) in jobs.iter().enumerate() {
+                    by_head.entry(job.active_classes).or_default().push(i);
+                }
+                for (active, idxs) in by_head {
+                    let xs: Vec<&Tensor<f32>> = idxs.iter().map(|&i| &jobs[i].x).collect();
+                    let preds = learner.predict_batch(&xs, active);
+                    // A short vector would silently drop responses and
+                    // hang the affected clients — fail attributably.
+                    assert_eq!(
+                        preds.len(),
+                        idxs.len(),
+                        "predict_batch returned {} predictions for {} inputs",
+                        preds.len(),
+                        idxs.len()
+                    );
+                    for (&i, pred) in idxs.iter().zip(preds) {
+                        // A client that gave up is not an error.
+                        let _ = jobs[i].resp.send(PredictResponse { pred, batch_size });
+                    }
+                }
+            }
+            Batch::Train(job) => {
+                let loss = learner.train_step(&job.x, job.label, job.active_classes, job.lr);
+                stats.train_steps += 1;
+                let _ = job.resp.send(loss);
+            }
+        }
+    }
+    (learner, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Engine, Model, ModelConfig};
+    use crate::util::rng::Pcg32;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            in_channels: 3,
+            image_size: 8,
+            conv_channels: 4,
+            num_classes: 4,
+            grad_clip: f32::INFINITY,
+        }
+    }
+
+    fn rand_image(seed: u64, cfg: &ModelConfig) -> Tensor<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        let shape = crate::tensor::Shape::d3(cfg.in_channels, cfg.image_size, cfg.image_size);
+        let n = shape.numel();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+    }
+
+    #[test]
+    fn serves_and_accounts_consistently() {
+        let cfg = tiny_cfg();
+        let model = Model::new(cfg.clone(), 5).with_engine(Engine::Gemm);
+        let server = Server::start(model, ServerConfig::default());
+        let images: Vec<Tensor<f32>> = (0..12u64).map(|i| rand_image(i, &cfg)).collect();
+        let served: Vec<usize> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|c| {
+                    let client = server.client();
+                    let images = &images;
+                    scope.spawn(move || {
+                        let mut preds = Vec::new();
+                        for x in images.iter().skip(c).step_by(4) {
+                            match client.predict(x, 4) {
+                                Served::Ok { pred, batch_size } => {
+                                    assert!(batch_size >= 1);
+                                    preds.push(pred);
+                                }
+                                other => panic!("unexpected outcome {other:?}"),
+                            }
+                        }
+                        preds
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(served.len(), 12);
+        let stats_mid = server.queue_stats();
+        assert!(stats_mid.consistent());
+        assert_eq!(stats_mid.admitted, 12);
+        let (_model, stats) = server.shutdown();
+        assert_eq!(stats.served, 12);
+        assert_eq!(stats.batch_hist.iter().map(|(s, n)| *s as u64 * n).sum::<u64>(), 12);
+        assert!(stats.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn train_jobs_apply_in_stream_order() {
+        // Serve-while-learning: K train jobs submitted through the queue
+        // while predicts fly must leave the model bit-identical to the
+        // same K steps applied sequentially — predictions are reads, and
+        // the single model thread applies writes in stream order.
+        let cfg = tiny_cfg();
+        let seed_model = Model::new(cfg.clone(), 9).with_engine(Engine::Gemm);
+        let mut reference = seed_model.clone();
+        let server = Server::start(
+            seed_model,
+            ServerConfig { max_batch: 8, ..ServerConfig::default() },
+        );
+        let trains: Vec<(Tensor<f32>, usize)> =
+            (0..6u64).map(|i| (rand_image(100 + i, &cfg), (i % 4) as usize)).collect();
+        let probe: Vec<Tensor<f32>> = (0..16u64).map(|i| rand_image(200 + i, &cfg)).collect();
+        std::thread::scope(|scope| {
+            // Two predict clients hammering while the trainer streams.
+            for c in 0..2 {
+                let client = server.client();
+                let probe = &probe;
+                scope.spawn(move || {
+                    for x in probe.iter().skip(c).step_by(2) {
+                        let _ = client.predict(x, 4);
+                    }
+                });
+            }
+            let trainer = server.client();
+            let trains = &trains;
+            scope.spawn(move || {
+                for (x, label) in trains {
+                    let loss = trainer.train(x, *label, 4, 0.05).expect("train while open");
+                    assert!(loss.is_finite());
+                }
+            });
+        });
+        let (trained, stats) = server.shutdown();
+        assert_eq!(stats.train_steps, 6);
+        for (x, label) in &trains {
+            reference.train_step(x, *label, 4, 0.05);
+        }
+        assert_eq!(trained.params.w.data(), reference.params.w.data(), "w diverged");
+        assert_eq!(trained.params.k1.data(), reference.params.k1.data(), "k1 diverged");
+        assert_eq!(trained.params.k2.data(), reference.params.k2.data(), "k2 diverged");
+    }
+
+    #[test]
+    fn shutdown_returns_learner_and_drains() {
+        let cfg = tiny_cfg();
+        let server = Server::start(Model::new(cfg, 3), ServerConfig::default());
+        let client = server.client();
+        let (_, stats) = server.shutdown();
+        assert_eq!(stats.served, 0);
+        // Post-shutdown submissions are refused cleanly.
+        assert_eq!(client.predict(&rand_image(1, &tiny_cfg()), 4), Served::Closed);
+        assert_eq!(client.train(&rand_image(1, &tiny_cfg()), 0, 4, 0.1), None);
+    }
+}

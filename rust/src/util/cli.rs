@@ -94,6 +94,19 @@ impl Args {
         }
     }
 
+    /// Comma-separated usize list flag (e.g. `--lanes-list 2,4,8`),
+    /// shared by the sweep and bench ladders. Empty entries are skipped;
+    /// a malformed entry panics with the flag name, like the scalar
+    /// getters.
+    pub fn usize_list_or(&self, key: &str, default: &str) -> Vec<usize> {
+        let raw = self.str_or(key, default);
+        raw.split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| t.parse().unwrap_or_else(|e| panic!("--{key}={raw}: entry {t:?}: {e}")))
+            .collect()
+    }
+
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         match self.get(key) {
             None => default,
@@ -159,5 +172,19 @@ mod tests {
     fn bad_number_panics() {
         let a = parse(&["--n", "abc"]);
         a.usize_or("n", 0);
+    }
+
+    #[test]
+    fn usize_lists_parse_with_defaults() {
+        let a = parse(&["--lanes-list", "2, 4,8,"]);
+        assert_eq!(a.usize_list_or("lanes-list", "1"), vec![2, 4, 8]);
+        assert_eq!(a.usize_list_or("taps-list", "9"), vec![9]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_list_entry_panics() {
+        let a = parse(&["--lanes-list", "2,x"]);
+        a.usize_list_or("lanes-list", "1");
     }
 }

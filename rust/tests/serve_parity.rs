@@ -1,0 +1,204 @@
+//! Serving parity + admission-control accounting (PR 4).
+//!
+//! The dynamic batcher coalesces whatever happens to be queued, so batch
+//! composition is timing-dependent — these tests pin the property that
+//! makes that safe: **batching is invisible in the answers**. Every
+//! served prediction must match per-sample [`Learner::predict`] on an
+//! identically built backend — bit-identical on `qnn` (the integer
+//! batched forward is exact), and within the documented ≤ 1e-4 logit
+//! contract on `f32-fast` (a prediction may differ only on a top-2
+//! near-tie inside that tolerance; in practice the packed batch forward
+//! is bit-identical per sample). Swept across clients ∈ {1,4,8} ×
+//! max_batch ∈ {1,8,64}, plus overload accounting and the
+//! serve-while-learning stream-order guarantee.
+
+use tinycl::cl::Learner;
+use tinycl::coordinator::{Backend, BackendKind};
+use tinycl::data::{Dataset, SyntheticCifar};
+use tinycl::nn::{Engine, Model, ModelConfig};
+use tinycl::serve::{run_closed_loop, LoadConfig, Served, Server, ServerConfig};
+use tinycl::sim::SimConfig;
+use std::time::Duration;
+
+const ACTIVE: usize = 4;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        in_channels: 3,
+        image_size: 8,
+        conv_channels: 4,
+        num_classes: 4,
+        grad_clip: f32::INFINITY,
+    }
+}
+
+fn tiny_data() -> Dataset {
+    let gen = SyntheticCifar {
+        image_size: 8,
+        channels: 3,
+        num_classes: 4,
+        noise: 0.35,
+        seed: 11,
+    };
+    gen.generate(6, 0)
+}
+
+/// Build the qnn backend exactly as the serve bench does: same seed,
+/// same brief warmup, so server and reference agree bit-wise.
+fn warmed_qnn(data: &Dataset) -> Backend {
+    let mut b =
+        Backend::create(BackendKind::Qnn, &tiny_cfg(), &SimConfig::paper(), "artifacts", 5)
+            .unwrap();
+    b.set_threads(2);
+    for s in data.samples.iter().take(5) {
+        b.train_step(&s.x, s.label, ACTIVE, 0.125);
+    }
+    b
+}
+
+fn serve_cfg(max_batch: usize) -> ServerConfig {
+    ServerConfig {
+        max_batch,
+        max_wait: Duration::from_micros(200),
+        queue_depth: 64,
+    }
+}
+
+#[test]
+fn qnn_server_matches_per_sample_predict_across_grid() {
+    let data = tiny_data();
+    let mut reference = warmed_qnn(&data);
+    let ref_preds: Vec<usize> =
+        data.samples.iter().map(|s| reference.predict(&s.x, ACTIVE)).collect();
+    for clients in [1usize, 4, 8] {
+        for max_batch in [1usize, 8, 64] {
+            let server = Server::start(warmed_qnn(&data), serve_cfg(max_batch));
+            let load = LoadConfig { clients, requests: 48, active_classes: ACTIVE };
+            let result = run_closed_loop(&server.client(), &data.samples, &load);
+            let queue = server.queue_stats();
+            let (_backend, stats) = server.shutdown();
+            assert!(queue.consistent(), "accounting broke at c={clients} mb={max_batch}");
+            assert_eq!(result.predictions.len() as u64, queue.admitted);
+            assert_eq!(stats.served, queue.admitted);
+            for &(idx, pred) in &result.predictions {
+                assert_eq!(
+                    pred, ref_preds[idx],
+                    "qnn serving changed an answer: clients={clients} \
+                     max_batch={max_batch} sample={idx}"
+                );
+            }
+            // Batches can never exceed the flush bound.
+            assert!(stats.batch_hist.keys().all(|&s| s <= max_batch.max(1)));
+        }
+    }
+}
+
+#[test]
+fn f32_fast_server_within_logit_tolerance_across_grid() {
+    let data = tiny_data();
+    let cfg = tiny_cfg();
+    let mut seed_model = Model::new(cfg, 9).with_engine(Engine::Gemm).with_threads(2);
+    for s in data.samples.iter().take(5) {
+        Model::train_step(&mut seed_model, &s.x, s.label, ACTIVE, 0.05);
+    }
+    let reference = seed_model.clone();
+    for clients in [1usize, 4, 8] {
+        for max_batch in [1usize, 8, 64] {
+            let server = Server::start(seed_model.clone(), serve_cfg(max_batch));
+            let load = LoadConfig { clients, requests: 48, active_classes: ACTIVE };
+            let result = run_closed_loop(&server.client(), &data.samples, &load);
+            let (_m, _stats) = server.shutdown();
+            assert_eq!(result.predictions.len(), 48);
+            for &(idx, pred) in &result.predictions {
+                let logits = reference.forward(&data.samples[idx].x);
+                let ref_pred = tinycl::nn::loss::predict(&logits, ACTIVE);
+                if pred != ref_pred {
+                    // Only a genuine near-tie may flip under the ≤ 1e-4
+                    // batched-forward contract (one shared definition —
+                    // the serve bench uses the same gate).
+                    assert!(
+                        tinycl::nn::loss::top2_near_tie(&logits, ACTIVE, 1e-4),
+                        "f32-fast serving flipped a non-tied answer: clients={clients} \
+                         max_batch={max_batch} sample={idx}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn overloaded_server_sheds_gracefully_and_accounts() {
+    // A depth-2 queue under 8 closed-loop clients: whether or not any
+    // individual run sheds is timing-dependent, but the books must
+    // always balance and every admitted request must be answered.
+    let data = tiny_data();
+    let server = Server::start(
+        warmed_qnn(&data),
+        ServerConfig { max_batch: 4, max_wait: Duration::from_micros(100), queue_depth: 2 },
+    );
+    let load = LoadConfig { clients: 8, requests: 120, active_classes: ACTIVE };
+    let result = run_closed_loop(&server.client(), &data.samples, &load);
+    let queue = server.queue_stats();
+    let (_b, stats) = server.shutdown();
+    assert!(queue.consistent(), "offered {} != admitted {} + shed {}",
+        queue.offered, queue.admitted, queue.shed);
+    assert_eq!(queue.shed, result.shed, "client-side and queue-side shed counts disagree");
+    assert_eq!(stats.served, queue.admitted, "an admitted request went unanswered");
+    assert_eq!(result.predictions.len() as u64 + result.shed, 120);
+}
+
+#[test]
+fn serve_while_learning_is_stream_ordered_on_qnn() {
+    // Interleaved updates must leave the served model exactly where the
+    // same update sequence leaves an unserved reference: predictions are
+    // reads, train jobs serialize in submission order on the one model
+    // thread (the Q4.12 datapath is bit-exact, so any drift would show).
+    let data = tiny_data();
+    let mut reference = warmed_qnn(&data);
+    let server = Server::start(warmed_qnn(&data), serve_cfg(8));
+    let trains: Vec<usize> = (0..10).map(|i| (i * 7) % data.samples.len()).collect();
+    let mut served_losses = Vec::new();
+    std::thread::scope(|scope| {
+        for c in 0..2 {
+            let client = server.client();
+            let data = &data;
+            scope.spawn(move || {
+                for s in data.samples.iter().skip(c).step_by(2) {
+                    match client.predict(&s.x, ACTIVE) {
+                        Served::Ok { .. } | Served::Shed => {}
+                        Served::Closed => break,
+                    }
+                }
+            });
+        }
+        let trainer = server.client();
+        for &i in &trains {
+            let s = &data.samples[i];
+            let loss = trainer.train(&s.x, s.label, ACTIVE, 0.125).expect("server open");
+            served_losses.push(loss);
+        }
+    });
+    let (mut served_backend, stats) = server.shutdown();
+    assert_eq!(stats.train_steps, trains.len() as u64);
+    for (k, &i) in trains.iter().enumerate() {
+        let s = &data.samples[i];
+        let ref_loss = reference.train_step(&s.x, s.label, ACTIVE, 0.125);
+        assert_eq!(served_losses[k], ref_loss, "loss diverged at interleaved step {k}");
+    }
+    for s in &data.samples {
+        assert_eq!(
+            served_backend.predict(&s.x, ACTIVE),
+            reference.predict(&s.x, ACTIVE),
+            "post-serving model diverged from the stream-order reference"
+        );
+    }
+}
+
+#[test]
+fn server_default_batch_is_the_eval_chunk() {
+    // The satellite contract: one named constant drives both the CL
+    // evaluation sweep and the serving batcher's default flush size.
+    assert_eq!(ServerConfig::default().max_batch, tinycl::cl::EVAL_BATCH);
+    assert_eq!(tinycl::cl::EVAL_BATCH, 64);
+}
