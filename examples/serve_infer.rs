@@ -1,10 +1,11 @@
 //! Deployment scenario: after on-device continual learning, the same
-//! model serves inference requests — now through the `serve` subsystem
-//! (PR 4): a dynamic batcher coalesces concurrent client requests into
-//! cross-request batches on a dedicated model thread, admission control
-//! sheds overload, and continual-learning updates can be interleaved
-//! with serving on the same owner (serve-while-learning). This example
-//! measures both sides:
+//! model serves inference requests — through the `serve` subsystem
+//! (PR 4, sharded in PR 5): a dynamic batcher coalesces concurrent
+//! client requests into cross-request batches fanned out over a pool of
+//! bit-identical model replicas, admission control sheds overload, and
+//! continual-learning updates interleave with serving under a pool-wide
+//! stream-order barrier (serve-while-learning). This example measures
+//! both sides:
 //!
 //! 1. the host software path (AOT-XLA when built with `--features xla`
 //!    + `make artifacts`, otherwise the im2col+GEMM `f32-fast` backend;
@@ -17,14 +18,20 @@
 //! Run: `cargo run --release --example serve_infer`
 //!       [-- --requests N (total predict requests, default 200)
 //!           --clients N (closed-loop client threads, default 4)
+//!           --replicas N (model replica threads, default 1)
 //!           --backend f32|f32-fast|qnn|xla --threads N
 //!           --qnn-engine naive|fast
 //!           --max-batch N --max-wait-us N --queue-depth N
+//!           --open-loop (timed-arrival load instead of closed-loop)
+//!           --arrival-rate R (open-loop offered req/s, default 2000)
 //!           --train N (serve-while-learning steps, default 8)]
 //!
-//! For the full laddered benchmark (max_batch 1 vs N, parity gates,
-//! BENCH_serve.json) use `tinycl serve-bench` / `cargo bench --bench
-//! serve`.
+//! With `--open-loop`, latency is coordinated-omission corrected:
+//! measured from each request's *intended* (scheduled) arrival, so
+//! overload shows up as latency instead of silently slowing the
+//! generator down. For the full laddered benchmark (max_batch / replica
+//! ladders, saturation sweep, parity gates, BENCH_serve.json) use
+//! `tinycl serve-bench` / `cargo bench --bench serve`.
 
 use tinycl::cl::Learner;
 use tinycl::coordinator::{Backend, BackendKind};
@@ -32,7 +39,10 @@ use tinycl::data::SyntheticCifar;
 use tinycl::hw::{CostModel, EnergyModel};
 use tinycl::nn::ModelConfig;
 use tinycl::serve::server::{default_queue_depth, DEFAULT_MAX_WAIT};
-use tinycl::serve::{run_closed_loop, LoadConfig, ServeRunReport, Server, ServerConfig};
+use tinycl::serve::{
+    run_closed_loop, run_open_loop, ArrivalProcess, Lane, LoadConfig, OpenLoopConfig,
+    ServeRunReport, Server, ServerConfig,
+};
 use tinycl::sim::SimConfig;
 use tinycl::util::cli::Args;
 
@@ -40,16 +50,27 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let requests = args.usize_or("requests", 200);
     let clients = args.usize_or("clients", 4).max(1);
+    let replicas = args.usize_or("replicas", 1).max(1);
+    let open_loop = args.bool_or("open-loop", false);
+    let arrival_rate = args.f64_or("arrival-rate", 2000.0);
     let train_steps = args.usize_or("train", 8);
     let model_cfg = ModelConfig::default();
     let sim_cfg = SimConfig::paper();
     let gen = SyntheticCifar::default();
     let data = gen.generate(requests.div_ceil(10).max(1), 3);
 
-    println!(
-        "serving {requests} single-image requests (32×32×3, 10 classes) \
-         from {clients} closed-loop clients\n"
-    );
+    if open_loop {
+        println!(
+            "serving {requests} single-image requests (32×32×3, 10 classes) \
+             from an open-loop Poisson schedule at {arrival_rate:.0} req/s \
+             on {replicas} replica(s)\n"
+        );
+    } else {
+        println!(
+            "serving {requests} single-image requests (32×32×3, 10 classes) \
+             from {clients} closed-loop clients on {replicas} replica(s)\n"
+        );
+    }
 
     // --- 1. Host software path. `--backend` picks it explicitly;
     // the default tries AOT-XLA when built with `--features xla` (and
@@ -79,50 +100,77 @@ fn main() -> anyhow::Result<()> {
         host.train_step(&s.x, s.label, 10, 0.05);
     }
 
-    // Hand the model to its serving thread and open the floodgates.
+    // Hand the model to its replica pool and open the floodgates.
     let serve_cfg = ServerConfig {
         max_batch: args.usize_or("max-batch", tinycl::cl::EVAL_BATCH).max(1),
         max_wait: std::time::Duration::from_micros(
             args.u64_or("max-wait-us", DEFAULT_MAX_WAIT.as_micros() as u64),
         ),
         queue_depth: args.usize_or("queue-depth", default_queue_depth(clients)),
+        replicas,
     };
     let server = Server::start(host, serve_cfg);
     let client = server.client();
     let trainer = server.client();
-    let load = LoadConfig { clients, requests, active_classes: 10 };
-    let result = std::thread::scope(|scope| {
-        let load_run = scope.spawn(|| run_closed_loop(&client, &data.samples, &load));
+    let (wall_secs, latencies_us, correct, offered_rps) = std::thread::scope(|scope| {
+        let load_run = scope.spawn(|| {
+            if open_loop {
+                let cfg = OpenLoopConfig {
+                    rate_rps: arrival_rate,
+                    requests,
+                    process: ArrivalProcess::Poisson,
+                    seed: 5,
+                    active_classes: 10,
+                    lane: Lane::Interactive,
+                };
+                let r = run_open_loop(&client, &data.samples, &cfg);
+                (r.wall_secs, r.latencies_us, r.correct, Some(r.offered_rps))
+            } else {
+                let load = LoadConfig { clients, requests, active_classes: 10 };
+                let r = run_closed_loop(&client, &data.samples, &load);
+                (r.wall_secs, r.latencies_us, r.correct, None)
+            }
+        });
         // Serve-while-learning: the stream keeps teaching the deployed
         // model *during* traffic. Updates ride the same queue as the
-        // predicts, so the single model-thread owner applies them in
-        // stream order — CL semantics survive serving.
+        // predicts; a pool-wide barrier applies them in stream order and
+        // re-broadcasts the weights, so every replica stays bit-identical
+        // — CL semantics survive sharded serving.
         for s in data.samples.iter().take(train_steps) {
             if trainer.train(&s.x, s.label, 10, 0.05).is_none() {
                 break;
             }
         }
-        load_run.join().expect("load clients panicked")
+        load_run.join().expect("load harness panicked")
     });
     let queue = server.queue_stats();
     let (_host, stats) = server.shutdown();
     assert!(queue.consistent(), "admission accounting must balance");
 
-    let report = ServeRunReport::new(
+    let mut report = ServeRunReport::new(
         kind.name(),
         serve_cfg.max_batch,
-        clients,
+        // Open-loop load has one timed dispatcher, not a client crowd
+        // (same convention as serve-bench's open-loop rung).
+        if open_loop { 1 } else { clients },
         queue,
         stats,
-        result.wall_secs,
-        &result.latencies_us,
-        result.correct,
+        wall_secs,
+        &latencies_us,
+        correct,
     );
+    if let Some(offered) = offered_rps {
+        report = report.with_offered_rps(offered);
+    }
     match kind {
         BackendKind::Xla => println!("XLA CPU path (AOT JAX/Pallas via PJRT):"),
         _ => println!("host CPU path ({} backend, dynamic batcher):", kind.name()),
     }
-    println!("{report}\n");
+    println!("{report}");
+    if replicas > 1 {
+        println!("  fan-out : {:?} requests per replica", report.server.per_replica_served);
+    }
+    println!();
 
     // --- 2. TinyCL device ---
     let mut sim = Backend::create(BackendKind::Sim, &model_cfg, &sim_cfg, "artifacts", 5)?;

@@ -1,0 +1,117 @@
+"""Differential oracle for the serving subsystem's coordinated-omission
+latency correction (rust/src/serve/loadgen.rs).
+
+Pure-python, no third-party deps: runnable standalone
+(``python3 python/tests/test_coordinated_omission.py``) or under pytest.
+
+The model: a fixed open-loop arrival schedule hits a single FIFO server
+with a known constant service time. Completion times follow the textbook
+recurrence ``done_i = max(arrival_i, done_{i-1}) + service``. The
+**corrected** latency of request *i* is ``done_i - arrival_i`` — time
+from *intended* arrival, charging every microsecond the request spent
+queued. The **uncorrected** view ("measure from whenever the generator
+could send", i.e. when the server freed up) reports a flat ``service``
+for every request — the coordinated omission the correction exists to
+expose.
+
+Percentiles use the same linear interpolation as the Rust
+``util::stats::percentile_sorted``. The constants asserted here are the
+exact values ``rust/src/serve/loadgen.rs`` pins in
+``coordinated_omission_correction_matches_python_differential`` — the
+two suites must agree on the same numbers or one of them drifted.
+"""
+
+# The shared fixed case: arrivals every 100 µs, service 150 µs, n = 20.
+ARRIVAL_GAP_US = 100
+SERVICE_US = 150
+N = 20
+
+# Constants pinned on both sides of the differential.
+EXPECTED = {
+    "p50": 625.0,
+    "p95": 1052.5,
+    "p99": 1090.5,
+    "max": 1100.0,
+    "mean": 625.0,
+}
+
+
+def percentile_sorted(sorted_v, pct):
+    """Mirror of rust `util::stats::percentile_sorted` (linear
+    interpolation over a pre-sorted list)."""
+    assert sorted_v, "empty sample set"
+    assert 0.0 <= pct <= 100.0
+    if len(sorted_v) == 1:
+        return sorted_v[0]
+    rank = pct / 100.0 * (len(sorted_v) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(sorted_v) - 1)
+    frac = rank - lo
+    return sorted_v[lo] * (1.0 - frac) + sorted_v[hi] * frac
+
+
+def fifo_completions(arrivals, service):
+    done, prev = [], 0
+    for a in arrivals:
+        t = max(a, prev) + service
+        done.append(t)
+        prev = t
+    return done
+
+
+def corrected_latencies(arrivals, completions):
+    return [c - a for a, c in zip(arrivals, completions)]
+
+
+def test_corrected_percentiles_match_the_rust_constants():
+    arrivals = [ARRIVAL_GAP_US * i for i in range(1, N + 1)]
+    completions = fifo_completions(arrivals, SERVICE_US)
+    lat = sorted(corrected_latencies(arrivals, completions))
+    # The saturated FIFO makes the backlog, and thus the corrected
+    # latency, grow linearly: 150, 200, 250, … 1100.
+    assert lat == list(range(150, 1101, 50))
+    got = {
+        "p50": percentile_sorted(lat, 50.0),
+        "p95": percentile_sorted(lat, 95.0),
+        "p99": percentile_sorted(lat, 99.0),
+        "max": float(lat[-1]),
+        "mean": sum(lat) / len(lat),
+    }
+    for key, want in EXPECTED.items():
+        assert abs(got[key] - want) < 1e-9, f"{key}: {got[key]} != {want}"
+
+
+def test_uncorrected_view_hides_the_queueing():
+    """The omission itself: measured from actual send (= when the server
+    freed up), every request looks like a flat `service` — p50 and p99
+    collapse to 150 µs while the corrected p50 is 625 µs."""
+    arrivals = [ARRIVAL_GAP_US * i for i in range(1, N + 1)]
+    completions = fifo_completions(arrivals, SERVICE_US)
+    sends = [max(a, prev) for a, prev in zip(arrivals, [0] + completions[:-1])]
+    naive = [c - s for s, c in zip(sends, completions)]
+    assert all(v == SERVICE_US for v in naive)
+    assert percentile_sorted(sorted(naive), 50.0) == SERVICE_US
+    # The corrected distribution is a different world.
+    corrected = sorted(corrected_latencies(arrivals, completions))
+    assert percentile_sorted(corrected, 50.0) / SERVICE_US > 4.0
+
+
+def test_percentile_edge_cases_match_rust_hardening():
+    """Mirrors the `LatencySummary` edge cases the Rust side unit-tests:
+    single sample and all-ties collapse every percentile to the value."""
+    assert percentile_sorted([42.0], 50.0) == 42.0
+    assert percentile_sorted([42.0], 99.0) == 42.0
+    tied = [7.0] * 9
+    for pct in (0.0, 50.0, 95.0, 99.0, 100.0):
+        assert percentile_sorted(tied, pct) == 7.0
+    two = [100.0, 200.0]
+    assert percentile_sorted(two, 50.0) == 150.0
+    assert percentile_sorted(two, 100.0) == 200.0
+
+
+if __name__ == "__main__":
+    test_corrected_percentiles_match_the_rust_constants()
+    test_uncorrected_view_hides_the_queueing()
+    test_percentile_edge_cases_match_rust_hardening()
+    print("coordinated-omission differential: OK")
+    print("expected constants:", EXPECTED)

@@ -1,17 +1,21 @@
-//! Serving bench: the dynamic-batching inference server under
-//! closed-loop multi-client load — same driver as `tinycl serve-bench`
-//! (see `serve::bench`), exposed as a bench binary so `cargo bench
-//! --bench serve` sits next to the other paper-figure benches.
+//! Serving bench: the replica-pool inference server under closed-loop
+//! and open-loop load — same driver as `tinycl serve-bench` (see
+//! `serve::bench`), exposed as a bench binary so `cargo bench --bench
+//! serve` sits next to the other paper-figure benches.
 //!
 //! Run: `cargo bench --bench serve [-- --clients N --max-batch N
-//! --max-wait-us N --queue-depth N --requests N --backend ...
-//! --threads N --qnn-engine naive|fast --smoke]`.
+//! --replicas N --open-loop=false --arrival-rate R
+//! --arrival-process poisson|uniform --max-wait-us N --queue-depth N
+//! --requests N --backend ... --threads N --qnn-engine naive|fast
+//! --smoke]`.
 //!
-//! Ladders `max_batch = 1` vs `max_batch = N` per backend, parity-pins
-//! every served answer against per-sample `predict`, checks the shed
-//! accounting (`offered == admitted + shed`), and at the paper geometry
-//! asserts cross-request batching wins ≥ 2× on `f32-fast` and `qnn`.
-//! Emits `BENCH_serve.json`.
+//! Ladders `max_batch = 1` vs `N` and `replicas = 1` vs `N` per
+//! backend, sweeps an open-loop saturation ladder (coordinated-
+//! omission-corrected latency, achieved-vs-offered knee), parity-pins
+//! every served answer against per-sample `predict`, checks the
+//! per-lane shed accounting (`offered == admitted + shed`), and at the
+//! paper geometry asserts cross-request batching ≥ 2× (`f32-fast`,
+//! `qnn`) and 2-replica `f32-fast` ≥ 1.5×. Emits `BENCH_serve.json`.
 
 use tinycl::util::cli::Args;
 

@@ -93,6 +93,20 @@ pub trait Learner {
     /// Re-initialize parameters (GDumb's "dumb learner" trains from
     /// scratch for every query). Deterministic in `seed`.
     fn reinit(&mut self, seed: u64);
+
+    /// A bit-identical copy of this learner, used by the serving
+    /// subsystem to populate a replica pool (`serve::Server` with
+    /// `replicas > 1`) and to re-broadcast weights after each
+    /// serve-while-learning train barrier. `None` means the backend
+    /// cannot be duplicated (e.g. it owns device/runtime handles) and
+    /// replicated serving must refuse it with an actionable error —
+    /// which is why this is a runtime capability, not a `Clone` bound.
+    fn clone_replica(&self) -> Option<Self>
+    where
+        Self: Sized,
+    {
+        None
+    }
 }
 
 impl Learner for crate::nn::Model {
@@ -129,5 +143,9 @@ impl Learner for crate::nn::Model {
 
     fn reinit(&mut self, seed: u64) {
         crate::nn::Model::reinit(self, seed);
+    }
+
+    fn clone_replica(&self) -> Option<Self> {
+        Some(self.clone())
     }
 }

@@ -304,6 +304,27 @@ impl Learner for Backend {
         }
     }
 
+    fn clone_replica(&self) -> Option<Self> {
+        // Host-state backends duplicate bit-identically: tensors,
+        // dither counters and SRAM contents are plain data. The xla
+        // backend owns PJRT runtime handles and device buffers — it
+        // cannot be replicated, so `serve --replicas N>1` refuses it
+        // with an actionable error instead of cloning a live client.
+        match self {
+            Backend::F32(m) => Some(Backend::F32(m.clone())),
+            Backend::Qnn { model, config } => {
+                Some(Backend::Qnn { model: model.clone(), config: config.clone() })
+            }
+            Backend::Sim { dev, train_stats, infer_stats } => Some(Backend::Sim {
+                dev: dev.clone(),
+                train_stats: train_stats.clone(),
+                infer_stats: infer_stats.clone(),
+            }),
+            #[cfg(feature = "xla")]
+            Backend::Xla { .. } => None,
+        }
+    }
+
     fn reinit(&mut self, seed: u64) {
         match self {
             Backend::F32(m) => m.reinit(seed),

@@ -7,7 +7,8 @@
 //!   policies (`cl`), dataset substrate (`data`), f32 and Q4.12 functional
 //!   models (`nn`, `qnn`), PJRT runtime for the AOT software baseline
 //!   (`runtime`), the training coordinator (`coordinator`) and the
-//!   dynamic-batching inference server (`serve`).
+//!   replicated dynamic-batching inference server (`serve`: replica
+//!   pool, priority lanes, open-loop load generation).
 //! * **L2/L1 (python/, build-time only)** — JAX model + Pallas kernels,
 //!   AOT-lowered to HLO text artifacts loaded by `runtime`.
 

@@ -7,9 +7,10 @@
 //! * `report-hw` — area/power/clock report + Fig. 7 breakdown + Table I
 //! * `speedup`   — epoch time: TinyCL-sim vs AOT-XLA software baseline
 //!                 vs the paper's P100 constant (§IV-C)
-//! * `serve-bench` — dynamic-batching inference server under multi-client
-//!                 closed-loop load (admission control + cross-request
-//!                 batching; emits BENCH_serve.json)
+//! * `serve-bench` — replica-pool inference serving under closed-loop
+//!                 and open-loop load (dynamic batching, priority lanes,
+//!                 admission control, coordinated-omission-corrected
+//!                 latency; emits BENCH_serve.json)
 //! * `sweep`     — design-space sweep over lanes × taps (ablation A2)
 
 use anyhow::{bail, Result};
@@ -76,16 +77,24 @@ SUBCOMMANDS
              --steps N (default: one GDumb epoch of 1000)
              --batch N --threads N (batched+threaded f32-fast rung)
              (also times the qnn naive vs fast integer-GEMM rung)
-  serve-bench  multi-client inference serving: dynamic batcher +
-             admission control, laddered max_batch 1 vs N per backend
+  serve-bench  multi-client inference serving: replica pool + dynamic
+             batcher + priority lanes + admission control. Rungs:
+             max_batch 1 vs N ladder, replicas 1 vs N ladder, and an
+             open-loop saturation sweep (timed arrivals, coordinated-
+             omission-corrected latency, achieved-vs-offered knee)
              --backend f32|f32-fast|qnn|sim (default: both fast backends)
              --clients N (default 8) --requests N (default 2000)
              --max-batch N (default 64) --max-wait-us N (default 200)
-             --queue-depth N (shed beyond it; default 2×clients, min 8)
+             --queue-depth N (shed beyond it per lane; default
+             2×clients, min 8)
+             --replicas N (replica-ladder top, default 2; 1 skips)
+             --open-loop=false (skip the sweep) --arrival-rate R (req/s,
+             single point) --arrival-process poisson|uniform
              --threads N --qnn-engine naive|fast --seed N
              --smoke (tiny geometry, CI-safe; ratio asserts relaxed)
-             asserts batching ≥ 2× at the paper geometry and parity with
-             per-sample predict; writes BENCH_serve.json
+             asserts batching ≥ 2× and 2-replica f32-fast ≥ 1.5× at the
+             paper geometry, and parity with per-sample predict on every
+             rung; writes BENCH_serve.json
   sweep      design-space sweep over --lanes-list and --taps-list
   help       this text
 ";

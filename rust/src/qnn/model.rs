@@ -88,6 +88,10 @@ impl FastForward {
 
 /// Quantized model driving the six control-unit computations in the order
 /// the paper's CU sequences them.
+// Clone: replicated serving snapshots the model per replica and
+// re-broadcasts it after each train barrier (`serve::server`); state is
+// plain tensors + counters, so a clone is bit-identical by construction.
+#[derive(Clone)]
 pub struct QModel {
     pub config: ModelConfig,
     pub params: QParams,

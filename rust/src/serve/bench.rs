@@ -1,31 +1,49 @@
-//! The `tinycl serve-bench` driver: a closed-loop multi-client load run
-//! over the serving subsystem, laddered `max_batch = 1` vs `max_batch =
-//! N` per backend so the cross-request batching win is measured, not
-//! assumed.
+//! The `tinycl serve-bench` driver: load runs over the serving
+//! subsystem, laddered so each serving mechanism's win is measured, not
+//! assumed:
+//!
+//! 1. **Batching ladder** (closed loop): `max_batch = 1` vs `N` per
+//!    backend — the PR 4 cross-request-batching rung (≥ 2× at the paper
+//!    geometry).
+//! 2. **Replica ladder** (closed loop): `replicas = 1` vs `N` at GEMM
+//!    `threads = 1` per replica, so the parallelism axis is replicas
+//!    alone — the sharded-serving rung (f32-fast ≥ 1.5× at 2 replicas,
+//!    paper geometry).
+//! 3. **Open-loop saturation sweep**: timed Poisson/uniform arrivals at
+//!    rates below and beyond the measured closed-loop capacity, with
+//!    coordinated-omission-corrected latency — reports the
+//!    achieved-vs-offered throughput knee instead of letting a closed
+//!    loop hide overload.
 //!
 //! Flags: `--backend f32|f32-fast|qnn|sim` (default: ladder both
 //! `f32-fast` and `qnn`), `--threads N` (GEMM workers, 0 = auto),
 //! `--qnn-engine naive|fast`, `--clients N`, `--max-batch N`,
-//! `--max-wait-us N`, `--queue-depth N`, `--requests N`, `--seed N`,
-//! `--smoke` (tiny geometry, ratio asserts relaxed — the CI rung).
+//! `--replicas N` (replica-ladder top, default 2; 1 skips the rung),
+//! `--open-loop` (run the sweep; on by default — `--open-loop=false`
+//! skips it), `--arrival-rate R` (req/s; replaces the sweep with one
+//! point), `--arrival-process poisson|uniform`, `--max-wait-us N`,
+//! `--queue-depth N`, `--requests N`, `--seed N`, `--smoke` (tiny
+//! geometry, ratio asserts relaxed — the CI rung).
 //!
 //! Every run is checked for (a) shed-accounting consistency
-//! (`offered == admitted + shed`, and the client-side shed count agrees
-//! with the queue's), (b) positive throughput, and (c) **serving
-//! parity**: every served prediction must match per-sample
-//! [`Learner::predict`] on an identically-built-and-warmed reference
-//! backend — bit-exactly on the integer/device backends, and on the
-//! float backends with the same top-2-near-tie escape the parity tests
-//! encode (their batched-forward contract is ≤ 1e-4 on logits, not bit
-//! equality; see `tests/serve_parity.rs`). Batching is a throughput
-//! knob, never an accuracy knob. At the paper geometry the ladder must show
-//! `max_batch N` ≥ 2× the throughput of `max_batch 1` on the `f32-fast`
-//! and `qnn` backends — asserted, so serving perf can't silently rot.
-//! Results land in `BENCH_serve.json` (the `BENCH_speedup.json`
-//! convention: machine-readable perf trajectory across PRs).
+//! (`offered == admitted + shed` per lane and aggregate, and the
+//! client-side shed count agrees with the queue's), (b) positive
+//! throughput, and (c) **serving parity**: every served prediction must
+//! match per-sample [`Learner::predict`] on an identically-built-and-
+//! warmed reference backend — bit-exactly on the integer/device
+//! backends, and on the float backends with the same top-2-near-tie
+//! escape the parity tests encode (their batched-forward contract is
+//! ≤ 1e-4 on logits, not bit equality; see `tests/serve_parity.rs`).
+//! Batching, replication and lane scheduling are throughput knobs,
+//! never accuracy knobs. Results land in `BENCH_serve.json` (the
+//! `BENCH_speedup.json` convention: machine-readable perf trajectory
+//! across PRs).
 
-use super::loadgen::{run_closed_loop, LoadConfig, LoadResult};
+use super::loadgen::{
+    run_closed_loop, run_open_loop, ArrivalProcess, LoadConfig, OpenLoopConfig,
+};
 use super::metrics::ServeRunReport;
+use super::queue::Lane;
 use super::server::{default_queue_depth, Server, ServerConfig, DEFAULT_MAX_WAIT};
 use crate::cl::Learner;
 use crate::coordinator::{Backend, BackendKind};
@@ -46,6 +64,14 @@ const WARMUP_LR: f32 = 0.05;
 /// "heavy traffic" axis regresses if batching stops paying).
 const SPEEDUP_FLOOR: f64 = 2.0;
 
+/// Paper-mode floor for 2 replicas over 1 on `f32-fast` (sharded
+/// serving must pay for its second model thread).
+const REPLICA_FLOOR: f64 = 1.5;
+
+/// Open-loop sweep rungs as fractions of the measured closed-loop
+/// capacity: comfortably under, near, and beyond the knee.
+const SWEEP_FRACTIONS: [f64; 3] = [0.5, 0.9, 1.5];
+
 struct BenchSetup {
     model_cfg: ModelConfig,
     sim_cfg: SimConfig,
@@ -56,13 +82,19 @@ struct BenchSetup {
     requests: usize,
     max_wait: Duration,
     queue_depth: usize,
+    arrival_process: ArrivalProcess,
 }
 
 impl BenchSetup {
-    fn build_backend(&self, kind: BackendKind, samples: &[Sample]) -> Result<Backend> {
+    fn build_backend(
+        &self,
+        kind: BackendKind,
+        samples: &[Sample],
+        threads: usize,
+    ) -> Result<Backend> {
         let mut backend =
             Backend::create(kind, &self.model_cfg, &self.sim_cfg, "artifacts", self.seed)?;
-        backend.set_threads(self.threads);
+        backend.set_threads(threads);
         backend.set_qnn_engine(self.qnn_engine);
         for s in samples.iter().take(WARMUP_STEPS) {
             backend.train_step(&s.x, s.label, self.model_cfg.num_classes, WARMUP_LR);
@@ -71,17 +103,43 @@ impl BenchSetup {
     }
 }
 
-/// One (backend, max_batch) run: build, serve, load, account.
-fn run_one(
+/// The universal per-run gates: books balance (per lane and aggregate),
+/// everything admitted was answered, both sides agree on the sheds, and
+/// something was actually served per unit time.
+fn check_accounting(report: &ServeRunReport, client_shed: u64) {
+    let queue = &report.queue;
+    assert!(
+        queue.consistent(),
+        "shed accounting broke: offered {} != admitted {} + shed {} (lanes {:?})",
+        queue.offered,
+        queue.admitted,
+        queue.shed,
+        queue.lanes
+    );
+    assert_eq!(queue.shed, client_shed, "queue-side and client-side shed counts disagree");
+    assert_eq!(report.server.served, queue.admitted, "admitted requests were not all served");
+    assert!(report.throughput_rps > 0.0, "zero serving throughput");
+}
+
+/// One closed-loop (backend, max_batch, replicas) run: build, serve,
+/// load, account. `threads` pins the per-replica GEMM worker budget.
+fn run_closed(
     setup: &BenchSetup,
     kind: BackendKind,
     max_batch: usize,
+    replicas: usize,
+    threads: usize,
     samples: &[Sample],
-) -> Result<(ServeRunReport, LoadResult)> {
-    let backend = setup.build_backend(kind, samples)?;
+) -> Result<(ServeRunReport, Vec<(usize, usize)>)> {
+    let backend = setup.build_backend(kind, samples, threads)?;
     let server = Server::start(
         backend,
-        ServerConfig { max_batch, max_wait: setup.max_wait, queue_depth: setup.queue_depth },
+        ServerConfig {
+            max_batch,
+            max_wait: setup.max_wait,
+            queue_depth: setup.queue_depth,
+            replicas,
+        },
     );
     let load = LoadConfig {
         clients: setup.clients,
@@ -90,7 +148,7 @@ fn run_one(
     };
     let result = run_closed_loop(&server.client(), samples, &load);
     let queue = server.queue_stats();
-    let (_backend, stats) = server.shutdown();
+    let (_backends, stats) = server.shutdown_all();
     let report = ServeRunReport::new(
         kind.name(),
         max_batch,
@@ -101,25 +159,84 @@ fn run_one(
         &result.latencies_us,
         result.correct,
     );
-    // Accounting gates — these hold in smoke mode too (CI's rung).
-    assert!(
-        queue.consistent(),
-        "shed accounting broke: offered {} != admitted {} + shed {}",
-        queue.offered,
-        queue.admitted,
-        queue.shed
+    check_accounting(&report, result.shed);
+    Ok((report, result.predictions))
+}
+
+/// One open-loop (backend, rate) run at `replicas = 1`.
+fn run_open(
+    setup: &BenchSetup,
+    kind: BackendKind,
+    max_batch: usize,
+    rate_rps: f64,
+    samples: &[Sample],
+) -> Result<(ServeRunReport, Vec<(usize, usize)>)> {
+    let backend = setup.build_backend(kind, samples, setup.threads)?;
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            max_batch,
+            max_wait: setup.max_wait,
+            queue_depth: setup.queue_depth,
+            replicas: 1,
+        },
     );
-    assert_eq!(
-        queue.shed, result.shed,
-        "queue-side and client-side shed counts disagree"
-    );
-    assert_eq!(
-        report.server.served,
-        queue.admitted,
-        "admitted requests were not all served"
-    );
-    assert!(report.throughput_rps > 0.0, "zero serving throughput");
-    Ok((report, result))
+    let cfg = OpenLoopConfig {
+        rate_rps,
+        requests: setup.requests,
+        process: setup.arrival_process,
+        seed: setup.seed,
+        active_classes: setup.model_cfg.num_classes,
+        lane: Lane::Interactive,
+    };
+    let result = run_open_loop(&server.client(), samples, &cfg);
+    let queue = server.queue_stats();
+    let (_backend, stats) = server.shutdown();
+    let report = ServeRunReport::new(
+        kind.name(),
+        max_batch,
+        1, // one open-loop dispatcher, not a client crowd
+        queue,
+        stats,
+        result.wall_secs,
+        &result.latencies_us,
+        result.correct,
+    )
+    .with_offered_rps(result.offered_rps);
+    check_accounting(&report, result.shed);
+    Ok((report, result.predictions))
+}
+
+/// Serving parity: every served answer must match the per-sample oracle
+/// (near-tie escape on float backends only — see module docs).
+fn check_parity(
+    setup: &BenchSetup,
+    kind: BackendKind,
+    reference: &mut Backend,
+    ref_preds: &[usize],
+    predictions: &[(usize, usize)],
+    samples: &[Sample],
+    rung: &str,
+) {
+    for &(idx, pred) in predictions {
+        if pred == ref_preds[idx] {
+            continue;
+        }
+        let near_tie = reference.float_model().is_some_and(|m| {
+            crate::nn::loss::top2_near_tie(
+                &m.forward(&samples[idx].x),
+                setup.model_cfg.num_classes,
+                1e-4,
+            )
+        });
+        assert!(
+            near_tie,
+            "serving parity broke: backend {} rung {rung} sample {idx} \
+             served {pred} but per-sample predict says {} (not a near-tie)",
+            kind.name(),
+            ref_preds[idx]
+        );
+    }
 }
 
 /// Entry point for the `serve-bench` subcommand (and the `serve` bench
@@ -139,6 +256,17 @@ pub fn run(args: &Args) -> Result<()> {
     };
     let clients = args.usize_or("clients", 8).max(1);
     let max_batch = args.usize_or("max-batch", crate::cl::EVAL_BATCH).max(1);
+    let replicas = args.usize_or("replicas", 2).max(1);
+    let open_loop = args.bool_or("open-loop", true);
+    let arrival_rate: Option<f64> = args
+        .get("arrival-rate")
+        .map(|r| r.parse::<f64>().map_err(|e| anyhow::anyhow!("--arrival-rate={r}: {e}")))
+        .transpose()?;
+    let arrival_process = {
+        let raw = args.str_or("arrival-process", "poisson");
+        ArrivalProcess::parse(&raw)
+            .ok_or_else(|| anyhow::anyhow!("unknown arrival process '{raw}' (poisson|uniform)"))?
+    };
     let setup = BenchSetup {
         sim_cfg: SimConfig::paper(),
         threads: args.threads_or_auto("threads", 0),
@@ -150,6 +278,7 @@ pub fn run(args: &Args) -> Result<()> {
             args.u64_or("max-wait-us", DEFAULT_MAX_WAIT.as_micros() as u64),
         ),
         queue_depth: args.usize_or("queue-depth", default_queue_depth(clients)),
+        arrival_process,
         model_cfg,
     };
     let kinds: Vec<BackendKind> = match args.get("backend") {
@@ -169,59 +298,48 @@ pub fn run(args: &Args) -> Result<()> {
 
     let mode = if smoke { "smoke" } else { "paper" };
     println!(
-        "serve-bench [{mode}]: {} closed-loop requests, {} clients, \
-         queue depth {}, max_wait {} µs, {} GEMM threads\n",
+        "serve-bench [{mode}]: {} requests, {} closed-loop clients, queue depth {}, \
+         max_wait {} µs, {} GEMM threads, replica ladder 1→{replicas}, open-loop {}\n",
         setup.requests,
         setup.clients,
         setup.queue_depth,
         setup.max_wait.as_micros(),
-        setup.threads
+        setup.threads,
+        if open_loop { setup.arrival_process.name() } else { "off" },
     );
 
     let mut runs: Vec<ServeRunReport> = Vec::new();
-    let mut speedups: Vec<(BackendKind, f64)> = Vec::new();
+    let mut batch_speedups: Vec<(BackendKind, f64)> = Vec::new();
+    let mut replica_speedups: Vec<(BackendKind, f64)> = Vec::new();
+    // `None` = no swept rate kept up (≥ 90% of offered) — recorded as
+    // JSON null, distinguishable from a measured knee.
+    let mut knees: Vec<(BackendKind, Option<f64>)> = Vec::new();
     for &kind in &kinds {
         // Per-sample parity oracle: an identically built + warmed
         // backend answering with `Learner::predict`.
-        let mut reference = setup.build_backend(kind, &samples)?;
+        let mut reference = setup.build_backend(kind, &samples, setup.threads)?;
         let ref_preds: Vec<usize> = samples
             .iter()
             .map(|s| reference.predict(&s.x, setup.model_cfg.num_classes))
             .collect();
 
+        // --- 1. batching ladder (closed loop, 1 replica) ---
         let ladder: Vec<usize> = if max_batch == 1 { vec![1] } else { vec![1, max_batch] };
         let mut throughputs = Vec::new();
         for &mb in &ladder {
-            let (report, result) = run_one(&setup, kind, mb, &samples)?;
-            for &(idx, pred) in &result.predictions {
-                if pred == ref_preds[idx] {
-                    continue;
-                }
-                // Float backends guarantee ≤ 1e-4 on logits, not bit
-                // equality: a flip is within contract only on a genuine
-                // top-2 near-tie (`nn::loss::top2_near_tie` — the same
-                // gate the parity tests use). Integer/device backends
-                // are bit-exact — no escape.
-                let near_tie = reference.float_model().is_some_and(|m| {
-                    crate::nn::loss::top2_near_tie(
-                        &m.forward(&samples[idx].x),
-                        setup.model_cfg.num_classes,
-                        1e-4,
-                    )
-                });
-                assert!(
-                    near_tie,
-                    "serving parity broke: backend {} max_batch {mb} sample {idx} \
-                     served {pred} but per-sample predict says {} (not a near-tie)",
-                    kind.name(),
-                    ref_preds[idx]
-                );
-            }
-            println!("{report}");
-            println!(
-                "  parity  : {} served answers == per-sample predict ✓\n",
-                result.predictions.len()
+            let (report, predictions) =
+                run_closed(&setup, kind, mb, 1, setup.threads, &samples)?;
+            check_parity(
+                &setup,
+                kind,
+                &mut reference,
+                &ref_preds,
+                &predictions,
+                &samples,
+                &format!("max_batch={mb}"),
             );
+            println!("{report}");
+            println!("  parity  : {} served answers == per-sample predict ✓\n", predictions.len());
             throughputs.push(report.throughput_rps);
             runs.push(report);
         }
@@ -231,23 +349,119 @@ pub fn run(args: &Args) -> Result<()> {
                 "{}: cross-request batching {s:.2}× throughput (max_batch {max_batch} vs 1)\n",
                 kind.name()
             );
-            speedups.push((kind, s));
+            batch_speedups.push((kind, s));
+        }
+        let capacity_rps = *throughputs.last().expect("at least one ladder rung");
+
+        // --- 2. replica ladder (closed loop, GEMM threads pinned to 1
+        // so the parallelism axis is replicas alone) ---
+        if replicas > 1 {
+            let mut rep_throughputs = Vec::new();
+            for &r in &[1usize, replicas] {
+                let (report, predictions) = run_closed(&setup, kind, max_batch, r, 1, &samples)?;
+                check_parity(
+                    &setup,
+                    kind,
+                    &mut reference,
+                    &ref_preds,
+                    &predictions,
+                    &samples,
+                    &format!("replicas={r}"),
+                );
+                println!("{report}");
+                println!(
+                    "  parity  : {} served answers == per-sample predict ✓  \
+                     (fan-out {:?})\n",
+                    predictions.len(),
+                    report.server.per_replica_served
+                );
+                rep_throughputs.push(report.throughput_rps);
+                runs.push(report);
+            }
+            let s = rep_throughputs[1] / rep_throughputs[0];
+            println!("{}: {replicas} replicas {s:.2}× throughput (vs 1 replica)\n", kind.name());
+            replica_speedups.push((kind, s));
+        }
+
+        // --- 3. open-loop saturation sweep (coordinated-omission-
+        // corrected latency; 1 replica) ---
+        if open_loop {
+            let rates: Vec<f64> = match arrival_rate {
+                Some(r) => vec![r],
+                None => SWEEP_FRACTIONS.iter().map(|f| f * capacity_rps).collect(),
+            };
+            let mut knee: Option<f64> = None;
+            for &rate in &rates {
+                let (report, predictions) = run_open(&setup, kind, max_batch, rate, &samples)?;
+                check_parity(
+                    &setup,
+                    kind,
+                    &mut reference,
+                    &ref_preds,
+                    &predictions,
+                    &samples,
+                    &format!("open-loop rate={rate:.0}"),
+                );
+                let offered = report.offered_rps.expect("open-loop run");
+                let achieved = report.throughput_rps;
+                if achieved >= 0.9 * offered {
+                    knee = Some(knee.unwrap_or(0.0).max(offered));
+                }
+                println!("{report}");
+                println!(
+                    "  open    : achieved {achieved:.0} of offered {offered:.0} req/s \
+                     ({:.0}%), CO-corrected latency\n",
+                    100.0 * achieved / offered.max(1e-12),
+                );
+                runs.push(report);
+            }
+            match knee {
+                Some(k) if rates.len() > 1 => println!(
+                    "{}: open-loop knee — kept up through ≈{k:.0} req/s offered \
+                     (closed-loop capacity {capacity_rps:.0})\n",
+                    kind.name()
+                ),
+                None => println!(
+                    "{}: no swept rate was sustained at ≥ 90% of offered — \
+                     every rung ran past the knee\n",
+                    kind.name()
+                ),
+                _ => {}
+            }
+            knees.push((kind, knee));
         }
     }
 
     // --- Machine-readable result (perf trajectory across PRs) ---
     let run_objs: Vec<String> = runs.iter().map(|r| r.to_json("    ")).collect();
-    let speedup_objs: Vec<String> = speedups
-        .iter()
-        .map(|(k, s)| format!("\"{}\": {s:.2}", k.name()))
-        .collect();
+    let fmt_pairs = |pairs: &[(BackendKind, f64)]| -> String {
+        pairs
+            .iter()
+            .map(|(k, s)| format!("\"{}\": {s:.2}", k.name()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    let fmt_opt_pairs = |pairs: &[(BackendKind, Option<f64>)]| -> String {
+        pairs
+            .iter()
+            .map(|(k, s)| match s {
+                Some(s) => format!("\"{}\": {s:.2}", k.name()),
+                None => format!("\"{}\": null", k.name()),
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
     let json = format!(
         "{{\n  \"bench\": \"serve\",\n  \"mode\": \"{mode}\",\n  \
          \"geometry\": {{\"image_size\": {}, \"in_channels\": {}, \
          \"conv_channels\": {}, \"classes\": {}}},\n  \
          \"clients\": {},\n  \"requests\": {},\n  \"threads\": {},\n  \
          \"max_wait_us\": {},\n  \"queue_depth\": {},\n  \
-         \"batched_speedup\": {{{}}},\n  \"runs\": [\n{}\n  ]\n}}\n",
+         \"replicas_ladder\": [1, {replicas}],\n  \
+         \"arrival_process\": \"{}\",\n  \
+         \"batched_speedup\": {{{}}},\n  \
+         \"replica_speedup\": {{{}}},\n  \
+         \"open_loop_knee_rps\": {{{}}},\n  \"runs\": [\n{}\n  ]\n}}\n",
         setup.model_cfg.image_size,
         setup.model_cfg.in_channels,
         setup.model_cfg.conv_channels,
@@ -257,7 +471,10 @@ pub fn run(args: &Args) -> Result<()> {
         setup.threads,
         setup.max_wait.as_micros(),
         setup.queue_depth,
-        speedup_objs.join(", "),
+        setup.arrival_process.name(),
+        fmt_pairs(&batch_speedups),
+        fmt_pairs(&replica_speedups),
+        fmt_opt_pairs(&knees),
         run_objs.join(",\n"),
     );
     match std::fs::write("BENCH_serve.json", &json) {
@@ -265,11 +482,11 @@ pub fn run(args: &Args) -> Result<()> {
         Err(e) => eprintln!("WARN: could not write BENCH_serve.json: {e}"),
     }
 
-    // Ratio gate only at the paper geometry (repo convention: smoke
+    // Ratio gates only at the paper geometry (repo convention: smoke
     // tolerates slow shared CI runners; accounting/parity gates above
     // always apply).
     if !smoke {
-        for (kind, s) in &speedups {
+        for (kind, s) in &batch_speedups {
             if matches!(kind, BackendKind::F32Fast | BackendKind::Qnn) {
                 assert!(
                     *s >= SPEEDUP_FLOOR,
@@ -277,6 +494,17 @@ pub fn run(args: &Args) -> Result<()> {
                      over max_batch 1 at {} clients — serving engine regressed",
                     kind.name(),
                     setup.clients
+                );
+            }
+        }
+        for (kind, s) in &replica_speedups {
+            if matches!(kind, BackendKind::F32Fast) {
+                assert!(
+                    *s >= REPLICA_FLOOR,
+                    "{} replicas on {} won only {s:.2}× (< {REPLICA_FLOOR}×) over one \
+                     replica — sharded serving regressed",
+                    replicas,
+                    kind.name()
                 );
             }
         }

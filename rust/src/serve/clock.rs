@@ -1,0 +1,164 @@
+//! Time source abstraction for the serving subsystem.
+//!
+//! The batcher's flush deadlines, the open-loop load generator's arrival
+//! schedule, and the coordinated-omission latency math all consume time
+//! through one [`Clock`] trait instead of calling `Instant::now()`
+//! directly. Production uses [`WallClock`]; the deterministic test
+//! harness uses [`MockClock`], whose time only moves when a test (or the
+//! mock's `sleep_until_us`) advances it — so flush-deadline,
+//! idle-quiescence, and latency-correction behavior can be pinned
+//! without wall-clock sleeps or flaky timing margins.
+//!
+//! Time is a `u64` microsecond count from the clock's own epoch (its
+//! construction, for [`WallClock`]). Everything that compares timestamps
+//! — intended arrival vs completion, batch-open vs deadline — must read
+//! them from the *same* clock instance; [`super::server::Server`] hands
+//! its clock to every client handle for exactly this reason.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A monotonic microsecond clock the serving subsystem reads time from.
+pub trait Clock: Send + Sync {
+    /// Microseconds since this clock's epoch. Monotonic.
+    fn now_us(&self) -> u64;
+
+    /// Block until `now_us() >= t_us` (return immediately if already
+    /// past). [`WallClock`] sleeps; [`MockClock`] *advances itself* —
+    /// virtual waiting costs no real time.
+    fn sleep_until_us(&self, t_us: u64);
+}
+
+/// Real time: microseconds since construction, `sleep_until_us` sleeps.
+///
+/// The final stretch before the target is spin-waited (OS sleep
+/// granularity is tens of microseconds — too coarse for open-loop
+/// arrival schedules at serving rates, where inter-arrival gaps are
+/// themselves tens of microseconds).
+pub struct WallClock {
+    epoch: Instant,
+}
+
+/// Spin (instead of sleep) when this close to the wake-up target.
+const SPIN_WINDOW_US: u64 = 200;
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { epoch: Instant::now() }
+    }
+
+    /// The common construction: one shared epoch behind an `Arc`.
+    pub fn shared() -> Arc<dyn Clock> {
+        Arc::new(WallClock::new())
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn sleep_until_us(&self, t_us: u64) {
+        loop {
+            let now = self.now_us();
+            if now >= t_us {
+                return;
+            }
+            let left = t_us - now;
+            if left > SPIN_WINDOW_US {
+                std::thread::sleep(Duration::from_micros(left - SPIN_WINDOW_US));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+}
+
+/// Virtual time for deterministic tests: starts at 0 and only moves when
+/// `advance_us`/`set_us` is called or a virtual sleep runs. Never blocks.
+///
+/// Caveat for batcher tests: a frozen clock never reaches a *future*
+/// flush deadline, so drive `pop_batch` with `max_wait = 0` (flush
+/// decisions then depend only on queue content) or test the pure
+/// [`super::queue::flush_decision`] policy against explicit mock
+/// timestamps — that is the harness `tests/serve_lanes.rs` uses.
+#[derive(Default)]
+pub struct MockClock {
+    now_us: AtomicU64,
+}
+
+impl MockClock {
+    pub fn new() -> MockClock {
+        MockClock { now_us: AtomicU64::new(0) }
+    }
+
+    pub fn shared() -> Arc<MockClock> {
+        Arc::new(MockClock::new())
+    }
+
+    /// Move time forward by `dt_us`.
+    pub fn advance_us(&self, dt_us: u64) {
+        self.now_us.fetch_add(dt_us, Ordering::SeqCst);
+    }
+
+    /// Jump to an absolute time (monotonic: earlier targets are no-ops).
+    pub fn set_us(&self, t_us: u64) {
+        self.now_us.fetch_max(t_us, Ordering::SeqCst);
+    }
+}
+
+impl Clock for MockClock {
+    fn now_us(&self) -> u64 {
+        self.now_us.load(Ordering::SeqCst)
+    }
+
+    fn sleep_until_us(&self, t_us: u64) {
+        // Virtual sleep: waiting *is* advancing.
+        self.set_us(t_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_clock_is_deterministic() {
+        let c = MockClock::new();
+        assert_eq!(c.now_us(), 0);
+        c.advance_us(40);
+        assert_eq!(c.now_us(), 40);
+        c.sleep_until_us(100);
+        assert_eq!(c.now_us(), 100);
+        // Monotonic: sleeping toward the past does not rewind.
+        c.sleep_until_us(7);
+        assert_eq!(c.now_us(), 100);
+        c.set_us(90);
+        assert_eq!(c.now_us(), 100);
+    }
+
+    #[test]
+    fn wall_clock_moves_forward() {
+        let c = WallClock::new();
+        let a = c.now_us();
+        let b = c.now_us();
+        assert!(b >= a, "monotonicity");
+        // sleep_until into the past returns immediately.
+        c.sleep_until_us(0);
+    }
+
+    #[test]
+    fn clocks_are_object_safe() {
+        let clocks: Vec<Arc<dyn Clock>> = vec![WallClock::shared(), MockClock::shared()];
+        for c in &clocks {
+            c.sleep_until_us(c.now_us());
+        }
+    }
+}

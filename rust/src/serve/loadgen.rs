@@ -1,26 +1,43 @@
-//! Closed-loop multi-client load generator.
+//! Load generators: closed-loop (PR 4) and open-loop (timed arrivals
+//! with coordinated-omission-corrected latency).
 //!
-//! N client threads (plain `std::thread::scope` — the GEMM worker pool
-//! must stay free for the model thread, and clients block on responses,
-//! which a pool task must never do) each drive their share of the
-//! request schedule **closed-loop**: the next request is issued only
-//! after the previous one resolves (served or shed), the standard way to
-//! measure a server without coordinated-omission artifacts from an
-//! open-loop arrival process.
+//! **Closed loop** ([`run_closed_loop`]): N client threads (plain
+//! `std::thread::scope` — the GEMM worker pool must stay free for the
+//! model threads, and clients block on responses, which a pool task must
+//! never do) each issue the next request only after the previous one
+//! resolves. This measures the server *at the concurrency the clients
+//! provide* — in-flight work is bounded by the client count, so the
+//! server is never observed beyond that load.
 //!
-//! Each client records per-request latency (offer → response) and the
-//! served predictions keyed by sample index, so callers can parity-pin
-//! every answer against per-sample [`crate::cl::Learner::predict`].
+//! **Open loop** ([`run_open_loop`]): requests arrive on a **timed
+//! schedule** generated from a seeded PRNG ([`arrival_schedule_us`]:
+//! Poisson or uniform arrivals at a target rate), dispatched through the
+//! non-blocking [`ServeClient::predict_async`] so a slow response never
+//! delays later arrivals. This is how overload is measured honestly:
+//! the offered rate does not bend to the server's pace. Latency is
+//! **coordinated-omission corrected** ([`corrected_latencies_us`]):
+//! measured from each request's *intended* arrival time to its
+//! server-stamped completion, so queueing delay that a closed loop (or
+//! a lagging dispatcher) would silently omit is charged to the request.
+//! Both ends of that subtraction live on the server's own [`Clock`]
+//! epoch ([`ServeClient::clock`]).
+//!
+//! The correction math is pinned against a Python differential
+//! (`python/tests/test_coordinated_omission.py`) on a fixed schedule
+//! with known service times.
 
-use super::server::{Served, ServeClient};
+use super::clock::Clock;
+use super::queue::Lane;
+use super::server::{Served, ServeClient, Submitted};
 use crate::data::Sample;
+use crate::util::rng::Pcg32;
 use std::time::{Duration, Instant};
 
 /// Brief client-side backoff after a shed response: a closed loop would
 /// otherwise re-offer instantly and spin the admission check.
 const SHED_BACKOFF: Duration = Duration::from_micros(100);
 
-/// One load run's shape.
+/// One closed-loop load run's shape.
 #[derive(Clone, Copy, Debug)]
 pub struct LoadConfig {
     /// Concurrent closed-loop clients.
@@ -96,22 +113,189 @@ pub fn run_closed_loop(client: &ServeClient, samples: &[Sample], cfg: &LoadConfi
     merged
 }
 
+/// Arrival process of the open-loop schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Constant inter-arrival gap `1/rate` (deterministic pacing).
+    Uniform,
+    /// Exponential inter-arrival gaps (memoryless traffic — the
+    /// standard open-loop model; bursts stress the batcher realistically).
+    Poisson,
+}
+
+impl ArrivalProcess {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalProcess::Uniform => "uniform",
+            ArrivalProcess::Poisson => "poisson",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArrivalProcess> {
+        [ArrivalProcess::Uniform, ArrivalProcess::Poisson]
+            .into_iter()
+            .find(|p| p.name() == s)
+    }
+}
+
+/// Intended arrival times (µs from run start) for `n` requests at
+/// `rate_rps`, from a seeded PRNG — the same `(process, rate, n, seed)`
+/// always yields the same schedule, so open-loop runs are replayable.
+pub fn arrival_schedule_us(
+    process: ArrivalProcess,
+    rate_rps: f64,
+    n: usize,
+    seed: u64,
+) -> Vec<u64> {
+    assert!(rate_rps > 0.0, "arrival rate must be positive");
+    let mut rng = Pcg32::new(seed, 77);
+    let mean_gap_us = 1e6 / rate_rps;
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let gap = match process {
+            ArrivalProcess::Uniform => mean_gap_us,
+            ArrivalProcess::Poisson => {
+                // u ∈ (0, 1]: never ln(0).
+                let u = (rng.next_u32() as f64 + 1.0) / 4_294_967_296.0;
+                -u.ln() * mean_gap_us
+            }
+        };
+        t += gap;
+        out.push(t.round() as u64);
+    }
+    out
+}
+
+/// The coordinated-omission correction: per-request latency measured
+/// from the **intended** arrival time to the completion time (same
+/// clock), not from whenever the generator got around to sending. A
+/// request the server (or a lagging dispatcher) made wait is charged
+/// that wait. Slices are per-request pairs; completion earlier than
+/// intended (clock skew) clamps to 0.
+pub fn corrected_latencies_us(intended_us: &[u64], completed_us: &[u64]) -> Vec<f64> {
+    assert_eq!(intended_us.len(), completed_us.len(), "per-request pairs");
+    intended_us
+        .iter()
+        .zip(completed_us)
+        .map(|(&a, &c)| c.saturating_sub(a) as f64)
+        .collect()
+}
+
+/// One open-loop load run's shape.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenLoopConfig {
+    /// Offered arrival rate (requests/second).
+    pub rate_rps: f64,
+    /// Requests in the schedule.
+    pub requests: usize,
+    pub process: ArrivalProcess,
+    /// Seeds the arrival schedule (replayable).
+    pub seed: u64,
+    /// Head mask every request uses.
+    pub active_classes: usize,
+    /// Priority lane the requests ride.
+    pub lane: Lane,
+}
+
+/// Result of one open-loop run.
+#[derive(Clone, Debug, Default)]
+pub struct OpenLoopResult {
+    /// Run wall clock (first intended arrival → last response drained).
+    pub wall_secs: f64,
+    /// The rate the schedule actually offered (requests / schedule span).
+    pub offered_rps: f64,
+    /// Served requests per second of wall clock.
+    pub achieved_rps: f64,
+    /// Coordinated-omission-corrected per-request latency (µs), served
+    /// requests only.
+    pub latencies_us: Vec<f64>,
+    /// Served `(sample_index, prediction)` pairs for parity checks.
+    pub predictions: Vec<(usize, usize)>,
+    /// Requests shed at admission.
+    pub shed: u64,
+    /// Served predictions matching the sample's label.
+    pub correct: u64,
+    /// Worst dispatcher lag behind the intended schedule (µs) — large
+    /// values mean the *generator* could not keep up; the correction
+    /// still charges the lag to the affected requests.
+    pub max_dispatch_lag_us: u64,
+}
+
+/// Drive one open-loop run against `client`'s server: dispatch the
+/// seeded arrival schedule at its intended times (non-blocking sends),
+/// then drain all responses. Request `i` uses `samples[i % len]`.
+pub fn run_open_loop(
+    client: &ServeClient,
+    samples: &[Sample],
+    cfg: &OpenLoopConfig,
+) -> OpenLoopResult {
+    assert!(!samples.is_empty(), "need samples to serve");
+    assert!(cfg.requests >= 1, "need at least one request");
+    let clock = client.clock();
+    let schedule = arrival_schedule_us(cfg.process, cfg.rate_rps, cfg.requests, cfg.seed);
+    let span_us = *schedule.last().expect("non-empty schedule");
+    let mut out = OpenLoopResult {
+        offered_rps: cfg.requests as f64 / (span_us.max(1) as f64 / 1e6),
+        ..OpenLoopResult::default()
+    };
+    let t0 = clock.now_us();
+    // Wall clock runs from the *first intended arrival* (t0 is only the
+    // schedule epoch — the lead-in gap before the first request is not
+    // serving time and must not dilute achieved_rps).
+    let first_due = t0 + schedule[0];
+    let mut pending: Vec<(usize, u64, std::sync::mpsc::Receiver<super::PredictResponse>)> =
+        Vec::with_capacity(cfg.requests);
+    for (i, &offset) in schedule.iter().enumerate() {
+        let due = t0 + offset;
+        clock.sleep_until_us(due);
+        out.max_dispatch_lag_us = out.max_dispatch_lag_us.max(clock.now_us().saturating_sub(due));
+        let idx = i % samples.len();
+        match client.predict_async(&samples[idx].x, cfg.active_classes, cfg.lane) {
+            Submitted::Pending(rx) => pending.push((idx, due, rx)),
+            Submitted::Shed => out.shed += 1,
+            Submitted::Closed => break,
+        }
+    }
+    // Drain: responses carry server-stamped completion times, so the
+    // drain order cannot distort the measurement.
+    let mut intended = Vec::with_capacity(pending.len());
+    let mut completed = Vec::with_capacity(pending.len());
+    for (idx, due, rx) in pending {
+        if let Ok(resp) = rx.recv() {
+            intended.push(due);
+            completed.push(resp.done_us);
+            out.predictions.push((idx, resp.pred));
+            out.correct += u64::from(resp.pred == samples[idx].label);
+        }
+    }
+    out.latencies_us = corrected_latencies_us(&intended, &completed);
+    out.wall_secs = (clock.now_us().saturating_sub(first_due)) as f64 / 1e6;
+    out.achieved_rps = out.predictions.len() as f64 / out.wall_secs.max(1e-12);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::SyntheticCifar;
     use crate::nn::{Engine, Model, ModelConfig};
+    use crate::serve::clock::MockClock;
+    use crate::serve::metrics::LatencySummary;
     use crate::serve::server::{Server, ServerConfig};
+    use std::sync::Arc;
 
-    #[test]
-    fn closed_loop_serves_every_request() {
-        let cfg = ModelConfig {
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
             in_channels: 3,
             image_size: 8,
             conv_channels: 4,
             num_classes: 4,
             grad_clip: f32::INFINITY,
-        };
+        }
+    }
+
+    fn tiny_samples() -> Vec<Sample> {
         let gen = SyntheticCifar {
             image_size: 8,
             channels: 3,
@@ -119,11 +303,16 @@ mod tests {
             noise: 0.3,
             seed: 11,
         };
-        let data = gen.generate(4, 0);
-        let model = Model::new(cfg, 5).with_engine(Engine::Gemm);
+        gen.generate(4, 0).samples
+    }
+
+    #[test]
+    fn closed_loop_serves_every_request() {
+        let model = Model::new(tiny_cfg(), 5).with_engine(Engine::Gemm);
         let server = Server::start(model, ServerConfig { max_batch: 8, ..Default::default() });
+        let samples = tiny_samples();
         let load = LoadConfig { clients: 3, requests: 30, active_classes: 4 };
-        let result = run_closed_loop(&server.client(), &data.samples, &load);
+        let result = run_closed_loop(&server.client(), &samples, &load);
         // Capacity is ample (depth 256 ≫ 3 clients): nothing sheds and
         // every request is served and measured.
         assert_eq!(result.shed, 0);
@@ -133,5 +322,113 @@ mod tests {
         assert!(result.wall_secs > 0.0);
         let (_, stats) = server.shutdown();
         assert_eq!(stats.served, 30);
+    }
+
+    #[test]
+    fn arrival_schedules_are_seeded_and_hit_the_rate() {
+        // Uniform at 10k rps: exact 100 µs grid.
+        let u = arrival_schedule_us(ArrivalProcess::Uniform, 10_000.0, 5, 1);
+        assert_eq!(u, vec![100, 200, 300, 400, 500]);
+        // Same (process, rate, n, seed) ⇒ same schedule; different seed
+        // ⇒ different Poisson draws.
+        let a = arrival_schedule_us(ArrivalProcess::Poisson, 10_000.0, 64, 9);
+        let b = arrival_schedule_us(ArrivalProcess::Poisson, 10_000.0, 64, 9);
+        let c = arrival_schedule_us(ArrivalProcess::Poisson, 10_000.0, 64, 10);
+        assert_eq!(a, b, "schedule must be replayable");
+        assert_ne!(a, c, "seed must matter");
+        // Monotone non-decreasing arrivals.
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // Mean inter-arrival ≈ 100 µs over a long draw (±15%).
+        let long = arrival_schedule_us(ArrivalProcess::Poisson, 10_000.0, 4000, 3);
+        let mean = *long.last().unwrap() as f64 / 4000.0;
+        assert!((mean - 100.0).abs() < 15.0, "poisson mean gap {mean} µs");
+    }
+
+    #[test]
+    fn coordinated_omission_correction_matches_python_differential() {
+        // Fixed schedule + known service times on a single FIFO server
+        // (completion_i = max(arrival_i, completion_{i-1}) + service):
+        // the expected corrected percentiles are computed independently
+        // by python/tests/test_coordinated_omission.py — both sides pin
+        // the same constants. Arrivals every 100 µs, service 150 µs:
+        // the server saturates and the backlog grows linearly.
+        let n = 20u64;
+        let arrivals: Vec<u64> = (1..=n).map(|i| 100 * i).collect();
+        let service = 150u64;
+        let mut completions = Vec::new();
+        let mut prev_done = 0u64;
+        for &a in &arrivals {
+            let done = a.max(prev_done) + service;
+            completions.push(done);
+            prev_done = done;
+        }
+        let corrected = corrected_latencies_us(&arrivals, &completions);
+        let summary = LatencySummary::of_us(&corrected).unwrap();
+        // Constants from the Python differential (exact arithmetic).
+        assert!((summary.p50_us - 625.0).abs() < 1e-9, "p50 {}", summary.p50_us);
+        assert!((summary.p95_us - 1052.5).abs() < 1e-9, "p95 {}", summary.p95_us);
+        assert!((summary.p99_us - 1090.5).abs() < 1e-9, "p99 {}", summary.p99_us);
+        assert!((summary.max_us - 1100.0).abs() < 1e-9, "max {}", summary.max_us);
+        assert!((summary.mean_us - 625.0).abs() < 1e-9, "mean {}", summary.mean_us);
+        // The uncorrected view (measure from actual send = when the
+        // server freed up) would report a flat 150 µs — the omission the
+        // correction exists to expose.
+        let naive: Vec<f64> = completions
+            .iter()
+            .zip(std::iter::once(&0u64).chain(&completions))
+            .map(|(&done, &prev)| (done - prev.max(done - service)) as f64)
+            .collect();
+        assert!(naive.iter().all(|&l| (l - 150.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn open_loop_on_a_mock_clock_is_deterministic_in_accounting() {
+        // The virtual-clock harness: the dispatcher's sleeps advance the
+        // MockClock instead of wall time, so the run completes with no
+        // real sleeps and the offered schedule is exact.
+        let clock = MockClock::shared();
+        let model = Model::new(tiny_cfg(), 5).with_engine(Engine::Gemm);
+        let server = Server::start_with_clock(
+            model,
+            ServerConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::ZERO,
+                ..Default::default()
+            },
+            // Arc<MockClock> coerces to Arc<dyn Clock> at the call site;
+            // the test keeps its own handle to drive/inspect the clock.
+            Arc::clone(&clock),
+        );
+        let samples = tiny_samples();
+        let cfg = OpenLoopConfig {
+            rate_rps: 100_000.0,
+            requests: 40,
+            process: ArrivalProcess::Uniform,
+            seed: 7,
+            active_classes: 4,
+            lane: Lane::Interactive,
+        };
+        let result = run_open_loop(&server.client(), &samples, &cfg);
+        // Uniform 100k rps ⇒ 10 µs grid ⇒ span 400 µs ⇒ offered exactly
+        // the target rate.
+        assert!((result.offered_rps - 100_000.0).abs() < 1e-6);
+        assert_eq!(result.predictions.len() as u64 + result.shed, 40);
+        assert_eq!(result.shed, 0, "depth 256 must not shed 40 requests");
+        assert_eq!(result.latencies_us.len(), 40);
+        assert!(result.latencies_us.iter().all(|&l| l >= 0.0));
+        assert!(result.achieved_rps > 0.0);
+        let queue = server.queue_stats();
+        assert!(queue.consistent());
+        assert_eq!(queue.admitted, 40);
+        let (_, stats) = server.shutdown();
+        assert_eq!(stats.served, 40);
+    }
+
+    #[test]
+    fn arrival_process_roundtrip() {
+        for p in [ArrivalProcess::Uniform, ArrivalProcess::Poisson] {
+            assert_eq!(ArrivalProcess::parse(p.name()), Some(p));
+        }
+        assert_eq!(ArrivalProcess::parse("bursty"), None);
     }
 }

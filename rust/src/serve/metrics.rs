@@ -1,8 +1,9 @@
-//! Serving metrics: latency percentiles, throughput, shed accounting and
-//! the machine-readable `BENCH_serve.json` emission (same convention as
-//! `BENCH_speedup.json` — perf trajectory tracked across PRs).
+//! Serving metrics: latency percentiles, throughput, per-lane shed
+//! accounting and the machine-readable `BENCH_serve.json` emission (same
+//! convention as `BENCH_speedup.json` — perf trajectory tracked across
+//! PRs).
 
-use super::queue::QueueStats;
+use super::queue::{Lane, LaneStats, QueueStats};
 use super::server::ServerStats;
 use crate::util::stats::percentile_sorted;
 use std::fmt;
@@ -19,13 +20,20 @@ pub struct LatencySummary {
 
 impl LatencySummary {
     /// Summarize (sorts a copy). `None` on an empty sample set — a run
-    /// where everything was shed has no latency distribution.
+    /// where everything was shed has no latency distribution. A single
+    /// sample collapses every percentile to that value; ties are exact
+    /// (no interpolation noise). `f64::total_cmp` keeps the sort total
+    /// even for NaN (which sorts last, surfacing as a NaN `max_us`
+    /// instead of a panic mid-bench); debug builds additionally assert
+    /// no NaN ever reaches here — latencies are computed differences of
+    /// timestamps, so one would mean a harness bug.
     pub fn of_us(samples: &[f64]) -> Option<LatencySummary> {
         if samples.is_empty() {
             return None;
         }
+        debug_assert!(samples.iter().all(|l| !l.is_nan()), "NaN latency sample");
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Some(LatencySummary {
             p50_us: percentile_sorted(&sorted, 50.0),
             p95_us: percentile_sorted(&sorted, 95.0),
@@ -52,6 +60,12 @@ pub struct ServeRunReport {
     pub backend: String,
     pub max_batch: usize,
     pub clients: usize,
+    /// Replica model threads behind the queue.
+    pub replicas: usize,
+    /// `Some(rate)` for an open-loop run (the offered arrival rate in
+    /// req/s, with latencies coordinated-omission corrected); `None`
+    /// for closed-loop.
+    pub offered_rps: Option<f64>,
     pub queue: QueueStats,
     pub server: ServerStats,
     pub wall_secs: f64,
@@ -80,6 +94,8 @@ impl ServeRunReport {
             backend: backend.to_string(),
             max_batch,
             clients,
+            replicas: server.per_replica_served.len().max(1),
+            offered_rps: None,
             queue,
             server: server.clone(),
             wall_secs,
@@ -87,6 +103,27 @@ impl ServeRunReport {
             latency: LatencySummary::of_us(latencies_us),
             top1: correct as f64 / served as f64,
         }
+    }
+
+    /// Mark this run as open-loop at the given offered rate.
+    pub fn with_offered_rps(mut self, offered_rps: f64) -> ServeRunReport {
+        self.offered_rps = Some(offered_rps);
+        self
+    }
+
+    fn mode(&self) -> &'static str {
+        if self.offered_rps.is_some() {
+            "open"
+        } else {
+            "closed"
+        }
+    }
+
+    fn lane_json(l: &LaneStats) -> String {
+        format!(
+            "{{\"offered\": {}, \"admitted\": {}, \"shed\": {}}}",
+            l.offered, l.admitted, l.shed
+        )
     }
 
     /// One JSON object (hand-rolled — the vendor set has no serde).
@@ -98,27 +135,42 @@ impl ServeRunReport {
             ),
             None => "null".to_string(),
         };
+        let offered = match self.offered_rps {
+            Some(r) => format!("{r:.1}"),
+            None => "null".to_string(),
+        };
         let hist: Vec<String> =
             self.server.batch_hist.iter().map(|(s, n)| format!("[{s}, {n}]")).collect();
+        let per_replica: Vec<String> =
+            self.server.per_replica_served.iter().map(u64::to_string).collect();
         format!(
-            "{indent}{{\"backend\": \"{}\", \"max_batch\": {}, \"clients\": {}, \
+            "{indent}{{\"backend\": \"{}\", \"mode\": \"{}\", \"max_batch\": {}, \
+             \"clients\": {}, \"replicas\": {}, \"offered_rps\": {offered}, \
              \"offered\": {}, \"admitted\": {}, \"shed\": {}, \"shed_rate\": {:.4}, \
-             \"served\": {}, \"train_steps\": {}, \"wall_secs\": {:.4}, \
+             \"lanes\": {{\"interactive\": {}, \"bulk\": {}}}, \
+             \"served\": {}, \"train_steps\": {}, \"resyncs\": {}, \"wall_secs\": {:.4}, \
              \"throughput_rps\": {:.1}, \"latency_us\": {lat}, \
-             \"mean_batch\": {:.2}, \"batch_hist\": [{}], \"top1\": {:.3}}}",
+             \"mean_batch\": {:.2}, \"batch_hist\": [{}], \
+             \"per_replica_served\": [{}], \"top1\": {:.3}}}",
             self.backend,
+            self.mode(),
             self.max_batch,
             self.clients,
+            self.replicas,
             self.queue.offered,
             self.queue.admitted,
             self.queue.shed,
             self.queue.shed_rate(),
+            Self::lane_json(self.queue.lane(Lane::Interactive)),
+            Self::lane_json(self.queue.lane(Lane::Bulk)),
             self.server.served,
             self.server.train_steps,
+            self.server.resyncs,
             self.wall_secs,
             self.throughput_rps,
             self.server.mean_batch(),
             hist.join(", "),
+            per_replica.join(", "),
             self.top1,
         )
     }
@@ -126,12 +178,21 @@ impl ServeRunReport {
 
 impl fmt::Display for ServeRunReport {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        writeln!(
+        write!(
             f,
-            "{} max_batch={} clients={}: {:.0} req/s  (mean batch {:.2}, top-1 {:.2})",
+            "{} [{}] max_batch={} clients={} replicas={}",
             self.backend,
+            self.mode(),
             self.max_batch,
             self.clients,
+            self.replicas,
+        )?;
+        if let Some(r) = self.offered_rps {
+            write!(f, " offered={r:.0} req/s")?;
+        }
+        writeln!(
+            f,
+            ": {:.0} req/s  (mean batch {:.2}, top-1 {:.2})",
             self.throughput_rps,
             self.server.mean_batch(),
             self.top1,
@@ -149,6 +210,15 @@ impl fmt::Display for ServeRunReport {
             self.queue.shed_rate() * 100.0,
             self.server.train_steps,
         )?;
+        let bulk = self.queue.lane(Lane::Bulk);
+        if bulk.offered > 0 {
+            let inter = self.queue.lane(Lane::Interactive);
+            writeln!(
+                f,
+                "  lanes   : interactive {}/{} shed {}  ·  bulk {}/{} shed {}",
+                inter.admitted, inter.offered, inter.shed, bulk.admitted, bulk.offered, bulk.shed,
+            )?;
+        }
         let hist: Vec<String> =
             self.server.batch_hist.iter().map(|(s, n)| format!("{s}×{n}")).collect();
         write!(f, "  batches : {}", hist.join("  "))
@@ -166,7 +236,30 @@ mod tests {
         assert!((l.p50_us - 50.5).abs() < 1e-9);
         assert_eq!(l.max_us, 100.0);
         assert!(l.p95_us < l.p99_us && l.p99_us < l.max_us);
+    }
+
+    #[test]
+    fn latency_summary_edge_cases() {
+        // Empty: no distribution (an all-shed run), not a panic.
         assert!(LatencySummary::of_us(&[]).is_none());
+        // Single sample: every statistic is that sample.
+        let one = LatencySummary::of_us(&[42.0]).unwrap();
+        for v in [one.p50_us, one.p95_us, one.p99_us, one.max_us, one.mean_us] {
+            assert_eq!(v, 42.0);
+        }
+        // All-tied samples: exact, no interpolation drift.
+        let tied = LatencySummary::of_us(&[7.0; 9]).unwrap();
+        for v in [tied.p50_us, tied.p95_us, tied.p99_us, tied.max_us, tied.mean_us] {
+            assert_eq!(v, 7.0);
+        }
+        // Two samples: p50 interpolates halfway, max is exact.
+        let two = LatencySummary::of_us(&[100.0, 200.0]).unwrap();
+        assert_eq!(two.p50_us, 150.0);
+        assert_eq!(two.max_us, 200.0);
+        // Unsorted input with duplicates sorts correctly (total order).
+        let dup = LatencySummary::of_us(&[5.0, 1.0, 5.0, 1.0, 5.0]).unwrap();
+        assert_eq!(dup.p50_us, 5.0);
+        assert_eq!(dup.max_us, 5.0);
     }
 
     #[test]
@@ -174,18 +267,49 @@ mod tests {
         let mut hist = std::collections::BTreeMap::new();
         hist.insert(4usize, 2u64);
         hist.insert(2usize, 1u64);
-        let server = ServerStats { served: 10, batches: 3, train_steps: 0, batch_hist: hist };
-        let queue = QueueStats { offered: 12, admitted: 10, shed: 2, trains: 0, pending: 0 };
+        let server = ServerStats {
+            served: 10,
+            batches: 3,
+            train_steps: 0,
+            resyncs: 0,
+            batch_hist: hist,
+            per_replica_served: vec![6, 4],
+        };
+        let mut queue = QueueStats {
+            offered: 12,
+            admitted: 10,
+            shed: 2,
+            trains: 0,
+            pending: 0,
+            ..QueueStats::default()
+        };
+        queue.lanes[Lane::Interactive.index()] =
+            LaneStats { offered: 9, admitted: 8, shed: 1, pending: 0 };
+        queue.lanes[Lane::Bulk.index()] =
+            LaneStats { offered: 3, admitted: 2, shed: 1, pending: 0 };
+        assert!(queue.consistent());
         let r =
             ServeRunReport::new("f32-fast", 8, 4, queue, server, 0.5, &[100.0, 200.0, 300.0], 7);
+        assert_eq!(r.replicas, 2, "replicas inferred from per-replica stats");
         let j = r.to_json("");
         assert!(j.contains("\"backend\": \"f32-fast\""), "{j}");
+        assert!(j.contains("\"mode\": \"closed\""), "{j}");
+        assert!(j.contains("\"offered_rps\": null"), "{j}");
         assert!(j.contains("\"shed\": 2"), "{j}");
+        assert!(j.contains("\"replicas\": 2"), "{j}");
+        assert!(j.contains("\"per_replica_served\": [6, 4]"), "{j}");
+        assert!(j.contains("\"bulk\": {\"offered\": 3, \"admitted\": 2, \"shed\": 1}"), "{j}");
         assert!(j.contains("\"batch_hist\": [[2, 1], [4, 2]]"), "{j}");
         assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
         // Display renders without panicking and carries the shed line.
         let s = format!("{r}");
         assert!(s.contains("shed 2"), "{s}");
+        assert!(s.contains("bulk 2/3"), "{s}");
         assert!((r.throughput_rps - 20.0).abs() < 1e-9);
+        // Open-loop marking flips the mode and records the offer.
+        let open = r.clone().with_offered_rps(1234.5);
+        let oj = open.to_json("");
+        assert!(oj.contains("\"mode\": \"open\""), "{oj}");
+        assert!(oj.contains("\"offered_rps\": 1234.5"), "{oj}");
     }
 }

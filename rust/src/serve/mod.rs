@@ -1,43 +1,58 @@
-//! `serve` — the inference-serving subsystem: a dynamic batcher that
-//! coalesces concurrent single-image predict requests into cross-request
-//! batches, admission control that sheds overload instead of queueing
-//! unbounded latency, and a closed-loop multi-client load harness.
+//! `serve` — the inference-serving subsystem: a replica pool of model
+//! threads behind one dynamic-batching queue with priority lanes,
+//! admission control that sheds overload instead of queueing unbounded
+//! latency, and closed-loop + open-loop (coordinated-omission-corrected)
+//! load harnesses.
 //!
 //! The paper's deployment story (§IV-C) is a device that continually
 //! learns and then *serves* predictions from the same model. This
 //! subsystem grows that into the ROADMAP's "heavy traffic" axis: many
-//! clients, one model owner, throughput from the batched GEMM datapaths
-//! ([`crate::cl::Learner::predict_batch`] — one packed GEMM set per
-//! coalesced batch on the `f32-fast` and `qnn` backends).
+//! clients, N bit-identical model replicas, throughput from the batched
+//! GEMM datapaths ([`crate::cl::Learner::predict_batch`] — one packed
+//! GEMM set per coalesced batch on the `f32-fast` and `qnn` backends).
 //!
 //! Shape of the subsystem:
-//! * [`queue`] — bounded MPSC queue + the batcher
-//!   ([`queue::ServeQueue::pop_batch`]: flush on `max_batch` or a
-//!   `max_wait` deadline) + shed/admit accounting;
-//! * [`server`] — the dedicated model thread that owns the
-//!   [`crate::cl::Learner`], executing predict batches and
-//!   serve-while-learning train jobs serialized in stream order;
-//! * [`loadgen`] — N plain-`std::thread` closed-loop clients measuring
-//!   per-request latency;
+//! * [`clock`] — the [`clock::Clock`] time source (wall clock in
+//!   production, [`clock::MockClock`] for deterministic sleep-free
+//!   tests of the batcher and latency math);
+//! * [`queue`] — bounded MPMC queue with two priority lanes
+//!   (interactive > bulk under an anti-starvation budget), the dynamic
+//!   batcher ([`queue::ServeQueue::pop_batch`], flush rules in the pure
+//!   [`queue::flush_decision`]), per-lane shed/admit accounting, and
+//!   the stream-order train fence that pauses the pool for updates;
+//! * [`server`] — the replica pool: `replicas` model threads each
+//!   owning a [`crate::cl::Learner::clone_replica`] snapshot, executing
+//!   predict batches concurrently and serve-while-learning train jobs
+//!   under a pool-wide quiesce barrier with post-update weight
+//!   re-broadcast (all replicas stay bit-identical);
+//! * [`loadgen`] — closed-loop N-client harness plus the open-loop
+//!   timed-arrival generator (seeded Poisson/uniform schedules,
+//!   latency measured from *intended* arrival:
+//!   [`loadgen::corrected_latencies_us`]);
 //! * [`metrics`] — latency percentiles, throughput, batch histogram,
-//!   shed rate, `BENCH_serve.json` emission;
+//!   per-lane shed rates, `BENCH_serve.json` emission;
 //! * [`bench`] — the `tinycl serve-bench` driver (also the `serve`
-//!   bench binary): ladders `max_batch` 1 vs N per backend, parity-pins
-//!   every served answer against per-sample `predict`, and asserts the
-//!   batching win at the paper geometry.
+//!   bench binary): batching ladder, replica ladder, open-loop
+//!   saturation sweep, all parity-pinned against per-sample `predict`.
 
 pub mod bench;
+pub mod clock;
 pub mod loadgen;
 pub mod metrics;
 pub mod queue;
 pub mod server;
 
-pub use loadgen::{run_closed_loop, LoadConfig, LoadResult};
+pub use clock::{Clock, MockClock, WallClock};
+pub use loadgen::{
+    arrival_schedule_us, corrected_latencies_us, run_closed_loop, run_open_loop, ArrivalProcess,
+    LoadConfig, LoadResult, OpenLoopConfig, OpenLoopResult,
+};
 pub use metrics::{LatencySummary, ServeRunReport};
 pub use queue::{
-    Admission, Batch, PredictJob, PredictResponse, QueueStats, ServeQueue, TrainJob, IDLE_FLUSH,
+    flush_decision, Admission, Batch, BatchSnapshot, FlushDecision, Lane, LaneStats, PredictJob,
+    PredictResponse, QueueStats, ServeQueue, TrainJob, IDLE_FLUSH, STARVATION_BUDGET,
 };
 pub use server::{
-    default_queue_depth, ServeClient, Served, Server, ServerConfig, ServerStats,
+    default_queue_depth, ServeClient, Served, Server, ServerConfig, ServerStats, Submitted,
     DEFAULT_MAX_WAIT, DEFAULT_QUEUE_DEPTH,
 };

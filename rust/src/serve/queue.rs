@@ -2,58 +2,114 @@
 //! of the serving subsystem.
 //!
 //! Producers (client threads) [`ServeQueue::offer`] single-image predict
-//! jobs; the single consumer (the server's model thread) pulls them with
+//! jobs into one of two **priority lanes** ([`Lane::Interactive`] is
+//! served first, [`Lane::Bulk`] rides behind it under an anti-starvation
+//! budget); consumers (the server's replica model threads) pull with
 //! [`ServeQueue::pop_batch`], which **coalesces concurrent requests into
 //! one cross-request batch**: it collects up to `max_batch` queued
-//! predicts and, when fewer are waiting, holds the batch open until a
-//! `max_wait` deadline measured from the first pop — the classic
-//! dynamic-batching flush-on-size-or-deadline rule.
+//! predicts from one lane and, when fewer are waiting, holds the batch
+//! open until a `max_wait` deadline measured from the first pop — the
+//! classic dynamic-batching flush-on-size-or-deadline rule. The flush
+//! rule itself is the *pure* [`flush_decision`] function, so deadline
+//! and idle-quiescence behavior is unit-tested against a virtual clock
+//! with zero wall-clock sleeps (see [`super::clock`]).
 //!
 //! An open batch also flushes early once arrivals go quiet: if no new
-//! job lands for [`IDLE_FLUSH`] (a rolling window, reset by each
-//! arrival), waiting longer can only add dead time — a closed-loop
-//! client crowd smaller than `max_batch` would otherwise pay the full
-//! deadline on every batch. The `max_wait` deadline still hard-caps the
-//! hold-open time under a steady trickle of arrivals.
+//! predict has landed *on the batch's own lane* for [`IDLE_FLUSH`],
+//! waiting longer can only add dead time — a closed-loop client crowd
+//! smaller than `max_batch` would otherwise pay the full deadline on
+//! every batch, and other-lane traffic (which can never join a
+//! lane-pure batch) must not hold one open either. The `max_wait`
+//! deadline still hard-caps the hold-open time under a steady trickle.
 //!
-//! Admission control is a hard bound on queued predicts (`depth`): an
-//! offer beyond it is **shed** synchronously (the client learns
-//! immediately, nothing blocks, no latency blow-up) and the shed is
-//! counted, so overload degrades gracefully and visibly. The invariant
-//! `offered == admitted + shed` is the accounting contract the bench and
-//! CI check.
+//! **Lanes and admission.** Each lane has its own bound of `depth`
+//! queued predicts and its own books: an offer beyond the bound is
+//! **shed** synchronously (the client learns immediately, nothing
+//! blocks) and counted *in that lane*, so the invariant
+//! `offered == admitted + shed` holds per lane and in aggregate
+//! ([`QueueStats::consistent`] checks both). Lane selection when both
+//! have work: interactive wins, except that a bulk front passed over for
+//! [`ServeQueue::starvation_budget`] consecutive predict flushes is
+//! served next — no lane ever waits more than that many flushes
+//! (property-tested in `tests/serve_lanes.rs`). Batches are lane-pure.
 //!
-//! Train jobs ride the same FIFO (serve-while-learning): they are never
-//! shed (control plane, client-paced) and act as a **batch boundary** —
-//! a predict batch never crosses a queued train job, so parameter
-//! updates and predictions serialize in exact stream order on the one
-//! model-thread owner, preserving CL's stream-order semantics.
+//! **Train jobs and the replica barrier.** Train jobs (serve-while-
+//! learning) are control plane: never shed, and a **stream-order fence**
+//! — every job carries an admission sequence number, a predict batch
+//! only takes predicts admitted *before* the oldest queued train, and
+//! the train itself pops only once both lanes are past it. Popping a
+//! train pauses the queue (no consumer receives work) until the popping
+//! replica finishes the update and calls [`ServeQueue::resume`]; with
+//! multiple replicas the popper first [`ServeQueue::wait_quiesced`]s so
+//! in-flight predict batches (tracked via [`ServeQueue::done`]) drain.
+//! Predictions admitted before the train thus always see pre-update
+//! weights and those admitted after always see post-update weights, on
+//! every replica — CL's stream-order semantics survive sharded serving.
 
+use super::clock::{Clock, WallClock};
 use crate::tensor::Tensor;
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
-/// One admitted predict request: the input image, the head mask, and the
-/// channel the prediction is sent back on.
+/// Priority class of a predict request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// Latency-sensitive traffic: served first.
+    Interactive,
+    /// Throughput traffic (sweeps, background scoring): served when the
+    /// interactive lane is idle, or when its anti-starvation budget
+    /// expires.
+    Bulk,
+}
+
+impl Lane {
+    pub const ALL: [Lane; 2] = [Lane::Interactive, Lane::Bulk];
+
+    pub fn index(self) -> usize {
+        match self {
+            Lane::Interactive => 0,
+            Lane::Bulk => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Interactive => "interactive",
+            Lane::Bulk => "bulk",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Lane> {
+        Lane::ALL.into_iter().find(|l| l.name() == s)
+    }
+}
+
+/// One admitted predict request: the input image, the head mask, the
+/// priority lane, and the channel the prediction is sent back on.
 pub struct PredictJob {
     pub x: Tensor<f32>,
     pub active_classes: usize,
+    pub lane: Lane,
     pub resp: Sender<PredictResponse>,
 }
 
-/// What the model thread sends back for one predict request.
+/// What a model thread sends back for one predict request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PredictResponse {
     /// Predicted class (argmax over the active head).
     pub pred: usize,
     /// Size of the cross-request batch this prediction rode in.
     pub batch_size: usize,
+    /// Completion timestamp on the server's clock — the open-loop load
+    /// generator subtracts the *intended* arrival time from this for
+    /// coordinated-omission-corrected latency.
+    pub done_us: u64,
 }
 
-/// One serve-while-learning update: applied on the model thread, in
-/// stream order relative to every other queued job.
+/// One serve-while-learning update: applied on a model thread under the
+/// replica barrier, in stream order relative to every other queued job.
 pub struct TrainJob {
     pub x: Tensor<f32>,
     pub label: usize,
@@ -64,19 +120,19 @@ pub struct TrainJob {
 }
 
 /// Quiescence window for the early flush: an open, non-full batch is
-/// released once no new job has arrived for this long. Long enough to
-/// coalesce a burst of concurrent clients racing to enqueue (their
+/// released once no new predict has arrived for this long. Long enough
+/// to coalesce a burst of concurrent clients racing to enqueue (their
 /// inter-offer jitter is single-digit µs plus scheduler noise), short
 /// enough to be invisible next to a batched forward pass.
 pub const IDLE_FLUSH: Duration = Duration::from_micros(50);
 
-enum Job {
-    Predict(PredictJob),
-    Train(TrainJob),
-}
+/// Default anti-starvation budget: a non-empty bulk lane is served at
+/// least once every `1 + STARVATION_BUDGET` predict flushes.
+pub const STARVATION_BUDGET: u64 = 4;
 
-/// What the model thread pulled: a coalesced predict batch (never empty,
-/// never crossing a train job) or a single train job.
+/// What a model thread pulled: a coalesced lane-pure predict batch
+/// (never empty, never crossing a train fence) or a single train job
+/// (the queue is paused until [`ServeQueue::resume`]).
 pub enum Batch {
     Predicts(Vec<PredictJob>),
     Train(TrainJob),
@@ -87,33 +143,60 @@ pub enum Batch {
 pub enum Admission {
     /// Enqueued; a response will arrive on the job's channel.
     Admitted,
-    /// Queue at capacity — rejected without enqueueing (counted).
+    /// Lane at capacity — rejected without enqueueing (counted).
     Shed,
     /// Queue closed (server shutting down) — rejected, not counted as
     /// shed (it is not an overload signal).
     Closed,
 }
 
-/// Admission-control counters (see module docs for the invariant).
+/// Per-lane admission books (see module docs for the invariant).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LaneStats {
+    /// Predicts presented to [`ServeQueue::offer`] on this lane while open.
+    pub offered: u64,
+    /// Predicts accepted into the lane.
+    pub admitted: u64,
+    /// Predicts rejected at the lane's admission bound.
+    pub shed: u64,
+    /// Predicts currently queued in the lane.
+    pub pending: usize,
+}
+
+impl LaneStats {
+    /// Every offered predict was either admitted or shed.
+    pub fn consistent(&self) -> bool {
+        self.offered == self.admitted + self.shed
+    }
+}
+
+/// Admission-control counters: aggregates over both lanes plus the
+/// per-lane books.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct QueueStats {
-    /// Predicts presented to [`ServeQueue::offer`] while open.
+    /// Predicts presented to [`ServeQueue::offer`] while open (all lanes).
     pub offered: u64,
-    /// Predicts accepted into the queue.
+    /// Predicts accepted into the queue (all lanes).
     pub admitted: u64,
-    /// Predicts rejected at the admission bound.
+    /// Predicts rejected at an admission bound (all lanes).
     pub shed: u64,
     /// Train jobs enqueued (never shed).
     pub trains: u64,
-    /// Predicts currently queued (waiting for the batcher).
+    /// Predicts currently queued (waiting for a batcher).
     pub pending: usize,
+    /// The per-lane books, indexed by [`Lane::index`].
+    pub lanes: [LaneStats; 2],
 }
 
 impl QueueStats {
     /// The accounting contract: every offered predict was either
-    /// admitted or shed — nothing vanishes.
+    /// admitted or shed — nothing vanishes, per lane and in aggregate.
     pub fn consistent(&self) -> bool {
-        self.offered == self.admitted + self.shed
+        self.lanes.iter().all(LaneStats::consistent)
+            && self.offered == self.lanes.iter().map(|l| l.offered).sum::<u64>()
+            && self.admitted == self.lanes.iter().map(|l| l.admitted).sum::<u64>()
+            && self.shed == self.lanes.iter().map(|l| l.shed).sum::<u64>()
+            && self.offered == self.admitted + self.shed
     }
 
     /// Fraction of offered predicts shed (0 when nothing was offered).
@@ -124,56 +207,181 @@ impl QueueStats {
             self.shed as f64 / self.offered as f64
         }
     }
+
+    pub fn lane(&self, lane: Lane) -> &LaneStats {
+        &self.lanes[lane.index()]
+    }
 }
+
+/// Why (or for how long not) to flush an open batch — the pure decision
+/// core of the dynamic batcher, factored out so the timing rules are
+/// testable against explicit clock values with no sleeps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushDecision {
+    Flush,
+    /// Nothing forces a flush yet: wait at most this many µs for more
+    /// arrivals (the earliest of the deadline and the idle window).
+    WaitUs(u64),
+}
+
+/// Snapshot of an open batch, fed to [`flush_decision`].
+#[derive(Clone, Copy, Debug)]
+pub struct BatchSnapshot {
+    /// Requests coalesced so far (≥ 1).
+    pub len: usize,
+    /// Flush-at-size bound.
+    pub max_batch: usize,
+    /// When the batch opened (first pop), on the queue's clock.
+    pub opened_us: u64,
+    /// Last arrival that could still join this batch (same lane), on
+    /// the queue's clock.
+    pub last_arrival_us: u64,
+    /// A train job is queued: nothing admitted later can join this
+    /// batch (stream-order fence), so holding it open is pure dead time.
+    pub barrier_pending: bool,
+    /// Queue closing: flush what we have.
+    pub closed: bool,
+}
+
+/// The dynamic batcher's flush rule. Flush when the batch is full, a
+/// train fence or shutdown makes waiting pointless, the `max_wait`
+/// deadline (measured from batch open) expires, or arrivals have gone
+/// quiet for `idle_us` (measured from the later of batch open and the
+/// last arrival). Otherwise report how long the caller may wait before
+/// one of those deadlines can first fire.
+pub fn flush_decision(
+    s: &BatchSnapshot,
+    now_us: u64,
+    max_wait_us: u64,
+    idle_us: u64,
+) -> FlushDecision {
+    if s.len >= s.max_batch || s.barrier_pending || s.closed {
+        return FlushDecision::Flush;
+    }
+    let deadline = s.opened_us.saturating_add(max_wait_us);
+    let idle_deadline = s.opened_us.max(s.last_arrival_us).saturating_add(idle_us);
+    let next = deadline.min(idle_deadline);
+    if now_us >= next {
+        FlushDecision::Flush
+    } else {
+        FlushDecision::WaitUs(next - now_us)
+    }
+}
+
+/// A queued job tagged with its admission sequence number (the
+/// stream-order fence trains enforce).
+struct Seq<T>(u64, T);
 
 struct Inner {
-    jobs: VecDeque<Job>,
+    lanes: [VecDeque<Seq<PredictJob>>; 2],
+    trains: VecDeque<Seq<TrainJob>>,
     stats: QueueStats,
     closed: bool,
+    /// Next admission sequence number (predicts and trains share it).
+    next_seq: u64,
+    /// Predict batches popped but not yet [`ServeQueue::done`].
+    busy: usize,
+    /// A popped train job is being applied: consumers must not pop.
+    paused: bool,
+    /// Consecutive predict flushes the bulk lane was eligible for but
+    /// passed over (anti-starvation aging). Interactive needs no
+    /// counter: it is the preferred lane, so it can only ever wait one
+    /// flush (the bulk override itself).
+    bulk_passed_over: u64,
+    /// Last predict arrival per lane (µs on `clock`), for the idle
+    /// flush. Tracked per lane because batches are lane-pure: an
+    /// arrival on the *other* lane can never join an open batch, so it
+    /// must not re-arm that batch's quiescence window.
+    last_arrival_us: [u64; 2],
 }
 
-/// The MPSC bounded queue. Cheap to share behind an `Arc`; all methods
-/// take `&self`.
+/// The bounded multi-producer multi-consumer queue. Cheap to share
+/// behind an `Arc`; all methods take `&self`.
 pub struct ServeQueue {
     inner: Mutex<Inner>,
     nonempty: Condvar,
+    /// Signalled by [`ServeQueue::done`] when `busy` hits zero.
+    quiesced: Condvar,
     depth: usize,
+    starvation_budget: u64,
+    clock: Arc<dyn Clock>,
 }
 
 impl ServeQueue {
-    /// `depth` bounds *queued* predicts (clamped to ≥ 1); train jobs are
-    /// not counted against it.
+    /// `depth` bounds queued predicts *per lane* (clamped to ≥ 1); train
+    /// jobs are not counted against it. Uses a fresh wall clock.
     pub fn new(depth: usize) -> ServeQueue {
+        ServeQueue::with_clock(depth, WallClock::shared())
+    }
+
+    /// Like [`ServeQueue::new`] with an explicit time source (the server
+    /// shares one clock between queue, replicas, and load generators so
+    /// every timestamp lives on one epoch).
+    pub fn with_clock(depth: usize, clock: Arc<dyn Clock>) -> ServeQueue {
         ServeQueue {
             inner: Mutex::new(Inner {
-                jobs: VecDeque::new(),
+                lanes: [VecDeque::new(), VecDeque::new()],
+                trains: VecDeque::new(),
                 stats: QueueStats::default(),
                 closed: false,
+                next_seq: 0,
+                busy: 0,
+                paused: false,
+                bulk_passed_over: 0,
+                last_arrival_us: [0, 0],
             }),
             nonempty: Condvar::new(),
+            quiesced: Condvar::new(),
             depth: depth.max(1),
+            starvation_budget: STARVATION_BUDGET,
+            clock,
         }
+    }
+
+    /// Override the anti-starvation budget (builder-style, pre-`Arc`).
+    pub fn with_starvation_budget(mut self, budget: u64) -> ServeQueue {
+        self.starvation_budget = budget;
+        self
+    }
+
+    /// Flushes a non-empty bulk lane may wait behind interactive traffic
+    /// before it must be served.
+    pub fn starvation_budget(&self) -> u64 {
+        self.starvation_budget
+    }
+
+    /// The queue's time source (shared with the owning server).
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
         self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Offer one predict. Never blocks: either the job is enqueued
-    /// ([`Admission::Admitted`]) or it is rejected on the spot.
+    /// Offer one predict on its job's lane. Never blocks: either the job
+    /// is enqueued ([`Admission::Admitted`]) or rejected on the spot.
     pub fn offer(&self, job: PredictJob) -> Admission {
+        let li = job.lane.index();
         let mut inner = self.lock();
         if inner.closed {
             return Admission::Closed;
         }
         inner.stats.offered += 1;
-        if inner.stats.pending >= self.depth {
+        inner.stats.lanes[li].offered += 1;
+        if inner.stats.lanes[li].pending >= self.depth {
             inner.stats.shed += 1;
+            inner.stats.lanes[li].shed += 1;
             return Admission::Shed;
         }
         inner.stats.admitted += 1;
         inner.stats.pending += 1;
-        inner.jobs.push_back(Job::Predict(job));
+        inner.stats.lanes[li].admitted += 1;
+        inner.stats.lanes[li].pending += 1;
+        inner.last_arrival_us[li] = self.clock.now_us();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.lanes[li].push_back(Seq(seq, job));
         drop(inner);
         self.nonempty.notify_all();
         Admission::Admitted
@@ -187,89 +395,176 @@ impl ServeQueue {
             return false;
         }
         inner.stats.trains += 1;
-        inner.jobs.push_back(Job::Train(job));
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.trains.push_back(Seq(seq, job));
         drop(inner);
         self.nonempty.notify_all();
         true
     }
 
-    /// Close the queue: subsequent offers are rejected; the consumer
-    /// drains what is already queued, then [`ServeQueue::pop_batch`]
-    /// returns `None`.
+    /// Close the queue: subsequent offers are rejected; consumers drain
+    /// what is already queued, then [`ServeQueue::pop_batch`] returns
+    /// `None`.
     pub fn close(&self) {
         self.lock().closed = true;
         self.nonempty.notify_all();
+        self.quiesced.notify_all();
     }
 
     pub fn stats(&self) -> QueueStats {
         self.lock().stats
     }
 
-    /// Dynamic-batching pop (single consumer). Blocks until at least one
-    /// job is queued (or the queue is closed *and* drained → `None`).
-    /// A train job returns alone. A predict opens a batch that is
-    /// flushed at the earliest of: it reaches `max_batch`; a train job
-    /// is next in line (stream-order boundary); the queue closes;
-    /// `max_wait` has elapsed since the batch opened; or no new job has
-    /// arrived for [`IDLE_FLUSH`] (quiescence — see module docs).
+    /// Predict batches popped but not yet marked [`ServeQueue::done`].
+    pub fn in_flight(&self) -> usize {
+        self.lock().busy
+    }
+
+    /// A consumer finished executing a predict batch it popped. Pairs
+    /// 1:1 with `Batch::Predicts` returns from [`ServeQueue::pop_batch`].
+    pub fn done(&self) {
+        let mut inner = self.lock();
+        debug_assert!(inner.busy > 0, "done() without a popped batch");
+        inner.busy = inner.busy.saturating_sub(1);
+        let quiet = inner.busy == 0;
+        drop(inner);
+        if quiet {
+            self.quiesced.notify_all();
+        }
+    }
+
+    /// Block until no predict batch is in flight. Called by the replica
+    /// that popped a train job (the queue is already paused, so no new
+    /// batch can start) before it applies the update.
+    pub fn wait_quiesced(&self) {
+        let mut inner = self.lock();
+        while inner.busy > 0 {
+            inner = self.quiesced.wait(inner).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Reopen the queue after a train barrier (pairs with the
+    /// `Batch::Train` return that paused it).
+    pub fn resume(&self) {
+        self.lock().paused = false;
+        self.nonempty.notify_all();
+    }
+
+    /// The stream-order fence: sequence number of the oldest queued
+    /// train, or `u64::MAX` when none is queued.
+    fn fence(inner: &Inner) -> u64 {
+        inner.trains.front().map(|t| t.0).unwrap_or(u64::MAX)
+    }
+
+    /// Does `lane` have a front predict admitted before the fence?
+    fn lane_ready(inner: &Inner, lane: Lane, fence: u64) -> bool {
+        inner.lanes[lane.index()].front().map(|j| j.0 < fence).unwrap_or(false)
+    }
+
+    /// Dynamic-batching pop (any number of consumers). Blocks until work
+    /// is available (or the queue is closed *and* drained → `None`).
+    ///
+    /// A train job returns alone once every predict admitted before it
+    /// has been popped; the return itself pauses the queue (see module
+    /// docs — the caller must [`ServeQueue::wait_quiesced`], apply, and
+    /// [`ServeQueue::resume`]). A predict opens a lane-pure batch
+    /// flushed per [`flush_decision`]; the caller must report
+    /// [`ServeQueue::done`] after executing it.
     pub fn pop_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Batch> {
         let max_batch = max_batch.max(1);
+        let max_wait_us = max_wait.as_micros() as u64;
+        let idle_us = IDLE_FLUSH.as_micros() as u64;
         let mut inner = self.lock();
-        loop {
-            if !inner.jobs.is_empty() {
-                break;
-            }
-            if inner.closed {
-                return None;
+        let lane = loop {
+            if !inner.paused {
+                let fence = Self::fence(&inner);
+                let int_ready = Self::lane_ready(&inner, Lane::Interactive, fence);
+                let bulk_ready = Self::lane_ready(&inner, Lane::Bulk, fence);
+                // A train pops only when both lanes are past its seq —
+                // every predict admitted before it is already popped
+                // (in-flight execution is the caller's wait_quiesced).
+                if fence < u64::MAX && !int_ready && !bulk_ready {
+                    let Seq(_, t) = inner.trains.pop_front().expect("fence without a train");
+                    inner.paused = true;
+                    return Some(Batch::Train(t));
+                }
+                if int_ready || bulk_ready {
+                    let bulk_due = inner.bulk_passed_over >= self.starvation_budget;
+                    let lane = if bulk_ready && (!int_ready || bulk_due) {
+                        Lane::Bulk
+                    } else {
+                        Lane::Interactive
+                    };
+                    // Anti-starvation aging: a bulk front passed over
+                    // grows the counter; serving bulk resets it.
+                    if lane == Lane::Bulk {
+                        inner.bulk_passed_over = 0;
+                    } else if bulk_ready {
+                        inner.bulk_passed_over += 1;
+                    }
+                    break lane;
+                }
+                // Fully drained shutdown: no trains, no predicts (with
+                // no train queued, a fence cannot be holding jobs back).
+                if inner.closed
+                    && inner.trains.is_empty()
+                    && inner.lanes.iter().all(VecDeque::is_empty)
+                {
+                    return None;
+                }
             }
             inner = self.nonempty.wait(inner).unwrap_or_else(|e| e.into_inner());
-        }
-        match inner.jobs.pop_front().expect("nonempty") {
-            Job::Train(t) => Some(Batch::Train(t)),
-            Job::Predict(first) => {
+        };
+        // Open a lane-pure batch from `lane`. The batch counts as in
+        // flight from this moment — a train barrier must wait for jobs
+        // held in an *open* batch too, or it could re-broadcast weights
+        // while pre-train requests are still unexecuted.
+        let li = lane.index();
+        let Seq(_, first) = inner.lanes[li].pop_front().expect("ready lane was empty");
+        inner.stats.pending -= 1;
+        inner.stats.lanes[li].pending -= 1;
+        inner.busy += 1;
+        let mut batch = Vec::with_capacity(max_batch.min(64));
+        batch.push(first);
+        let opened_us = self.clock.now_us();
+        loop {
+            // Drain what is already queued (up to the fence). While a
+            // train barrier holds the queue (`paused`), the fence that
+            // guarded its jobs is gone — drain nothing and flush, so a
+            // post-barrier arrival can never ride a pre-barrier batch.
+            while batch.len() < max_batch && !inner.paused {
+                let fence = Self::fence(&inner);
+                if !Self::lane_ready(&inner, lane, fence) {
+                    break;
+                }
+                let Seq(_, p) = inner.lanes[li].pop_front().expect("ready lane was empty");
                 inner.stats.pending -= 1;
-                let mut batch = Vec::with_capacity(max_batch.min(64));
-                batch.push(first);
-                let deadline = Instant::now() + max_wait;
-                loop {
-                    while batch.len() < max_batch
-                        && matches!(inner.jobs.front(), Some(Job::Predict(_)))
-                    {
-                        if let Some(Job::Predict(p)) = inner.jobs.pop_front() {
-                            inner.stats.pending -= 1;
-                            batch.push(p);
-                        }
-                    }
-                    if batch.len() >= max_batch
-                        || matches!(inner.jobs.front(), Some(Job::Train(_)))
-                        || inner.closed
-                    {
-                        break;
-                    }
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    // The queue is empty here (nothing left to drain).
-                    // Hold the batch open for one quiescence window,
-                    // bounded by the deadline — the window restarts on
-                    // every arrival because a drain re-enters this loop.
-                    // A timeout with nothing new means arrivals went
-                    // quiet: flush rather than burn the rest of the
-                    // deadline as dead time.
-                    let wait_for = IDLE_FLUSH.min(deadline - now);
-                    let (guard, timeout) = self
+                inner.stats.lanes[li].pending -= 1;
+                batch.push(p);
+            }
+            let snap = BatchSnapshot {
+                len: batch.len(),
+                max_batch,
+                opened_us,
+                // Only same-lane arrivals re-arm the idle window — the
+                // other lane's traffic can never join this batch.
+                last_arrival_us: inner.last_arrival_us[li],
+                barrier_pending: !inner.trains.is_empty() || inner.paused,
+                closed: inner.closed,
+            };
+            match flush_decision(&snap, self.clock.now_us(), max_wait_us, idle_us) {
+                FlushDecision::Flush => break,
+                FlushDecision::WaitUs(wait_us) => {
+                    let (guard, _timeout) = self
                         .nonempty
-                        .wait_timeout(inner, wait_for)
+                        .wait_timeout(inner, Duration::from_micros(wait_us.max(1)))
                         .unwrap_or_else(|e| e.into_inner());
                     inner = guard;
-                    if timeout.timed_out() && inner.jobs.is_empty() {
-                        break;
-                    }
                 }
-                Some(Batch::Predicts(batch))
             }
         }
+        Some(Batch::Predicts(batch))
     }
 }
 
@@ -284,14 +579,28 @@ mod tests {
     }
 
     fn predict_job(v: f32) -> (PredictJob, std::sync::mpsc::Receiver<PredictResponse>) {
+        lane_job(v, Lane::Interactive)
+    }
+
+    fn lane_job(v: f32, lane: Lane) -> (PredictJob, std::sync::mpsc::Receiver<PredictResponse>) {
         let (tx, rx) = channel();
-        (PredictJob { x: img(v), active_classes: 2, resp: tx }, rx)
+        (PredictJob { x: img(v), active_classes: 2, lane, resp: tx }, rx)
     }
 
     fn train_job() -> TrainJob {
         // The receiver is dropped — fine, nothing sends on it here.
         let (tx, _) = channel();
         TrainJob { x: img(0.0), label: 0, active_classes: 2, lr: 0.1, resp: tx }
+    }
+
+    fn pop_predicts(q: &ServeQueue, max_batch: usize) -> Vec<PredictJob> {
+        match q.pop_batch(max_batch, Duration::ZERO) {
+            Some(Batch::Predicts(b)) => {
+                q.done();
+                b
+            }
+            _ => panic!("expected a predict batch"),
+        }
     }
 
     #[test]
@@ -310,35 +619,69 @@ mod tests {
         assert_eq!((s.offered, s.admitted, s.shed, s.pending), (8, 3, 5, 3));
         assert!(s.consistent());
         assert!((s.shed_rate() - 5.0 / 8.0).abs() < 1e-12);
+        // All on the interactive lane; the bulk books stay zeroed.
+        assert_eq!(s.lane(Lane::Interactive).shed, 5);
+        assert_eq!(*s.lane(Lane::Bulk), LaneStats::default());
         // Draining frees capacity: the next offer is admitted again.
-        match q.pop_batch(8, Duration::ZERO) {
-            Some(Batch::Predicts(b)) => assert_eq!(b.len(), 3),
-            _ => panic!("expected a predict batch"),
-        }
+        assert_eq!(pop_predicts(&q, 8).len(), 3);
         let (job, _rx) = predict_job(9.0);
         assert_eq!(q.offer(job), Admission::Admitted);
         assert!(q.stats().consistent());
     }
 
     #[test]
+    fn lanes_have_independent_depth_and_books() {
+        // depth 2: each lane admits 2 and sheds its own overflow; the
+        // aggregate books are the lane sums.
+        let q = ServeQueue::new(2);
+        let mut keep = Vec::new();
+        for i in 0..3 {
+            let (j, rx) = lane_job(i as f32, Lane::Interactive);
+            q.offer(j);
+            keep.push(rx);
+        }
+        for i in 0..4 {
+            let (j, rx) = lane_job(10.0 + i as f32, Lane::Bulk);
+            q.offer(j);
+            keep.push(rx);
+        }
+        let s = q.stats();
+        assert!(s.consistent());
+        assert_eq!(
+            (s.lane(Lane::Interactive).admitted, s.lane(Lane::Interactive).shed),
+            (2, 1)
+        );
+        assert_eq!((s.lane(Lane::Bulk).admitted, s.lane(Lane::Bulk).shed), (2, 2));
+        assert_eq!((s.offered, s.admitted, s.shed), (7, 4, 3));
+    }
+
+    // The anti-starvation bound itself ("bulk waits at most
+    // STARVATION_BUDGET flushes", custom budgets, recovery after an
+    // override) is property-tested in `tests/serve_lanes.rs` — one
+    // home for those schedules, so the bound can't drift between
+    // suites.
+
+    #[test]
     fn pop_batch_flushes_on_max_batch() {
         let q = ServeQueue::new(16);
-        let rxs: Vec<_> = (0..5).map(|i| {
-            let (job, rx) = predict_job(i as f32);
-            assert_eq!(q.offer(job), Admission::Admitted);
-            rx
-        }).collect();
+        let rxs: Vec<_> = (0..5)
+            .map(|i| {
+                let (job, rx) = predict_job(i as f32);
+                assert_eq!(q.offer(job), Admission::Admitted);
+                rx
+            })
+            .collect();
         // max_batch 3: first pop returns exactly 3 without waiting for
         // the deadline (the batch is already full).
         match q.pop_batch(3, Duration::from_secs(10)) {
-            Some(Batch::Predicts(b)) => assert_eq!(b.len(), 3),
+            Some(Batch::Predicts(b)) => {
+                assert_eq!(b.len(), 3);
+                q.done();
+            }
             _ => panic!("expected predicts"),
         }
         // Remaining 2 flush on the (zero) deadline, not on size.
-        match q.pop_batch(3, Duration::ZERO) {
-            Some(Batch::Predicts(b)) => assert_eq!(b.len(), 2),
-            _ => panic!("expected predicts"),
-        }
+        assert_eq!(pop_predicts(&q, 3).len(), 2);
         drop(rxs);
     }
 
@@ -346,8 +689,9 @@ mod tests {
     fn train_jobs_are_batch_boundaries() {
         // Queue: P P T P — the first batch must stop before the train
         // job even though max_batch would admit more, the train job pops
-        // alone, and the trailing predict forms its own batch. This is
-        // what keeps serve-while-learning in stream order.
+        // alone (pausing the queue), and the trailing predict forms its
+        // own batch after resume. This is what keeps serve-while-
+        // learning in stream order.
         let q = ServeQueue::new(16);
         let (p1, _r1) = predict_job(1.0);
         let (p2, _r2) = predict_job(2.0);
@@ -357,15 +701,107 @@ mod tests {
         let (p3, _r3) = predict_job(3.0);
         q.offer(p3);
         match q.pop_batch(64, Duration::from_secs(10)) {
-            Some(Batch::Predicts(b)) => assert_eq!(b.len(), 2, "batch crossed a train job"),
+            Some(Batch::Predicts(b)) => {
+                assert_eq!(b.len(), 2, "batch crossed a train job");
+                q.done();
+            }
             _ => panic!("expected predicts"),
         }
         assert!(matches!(q.pop_batch(64, Duration::ZERO), Some(Batch::Train(_))));
-        match q.pop_batch(64, Duration::ZERO) {
-            Some(Batch::Predicts(b)) => assert_eq!(b.len(), 1),
+        q.resume();
+        assert_eq!(pop_predicts(&q, 64).len(), 1);
+        assert_eq!(q.stats().trains, 1);
+    }
+
+    #[test]
+    fn fence_holds_across_both_lanes() {
+        // I(0) B(1) T(2) I(3) B(4): pre-fence predicts drain lane-pure
+        // (interactive first), then the train, then the post-fence jobs.
+        let q = ServeQueue::new(16);
+        let (i1, _a) = lane_job(1.0, Lane::Interactive);
+        let (b1, _b) = lane_job(2.0, Lane::Bulk);
+        q.offer(i1);
+        q.offer(b1);
+        q.push_train(train_job());
+        let (i2, _c) = lane_job(3.0, Lane::Interactive);
+        let (b2, _d) = lane_job(4.0, Lane::Bulk);
+        q.offer(i2);
+        q.offer(b2);
+        let first = pop_predicts(&q, 64);
+        assert_eq!((first.len(), first[0].lane), (1, Lane::Interactive));
+        let second = pop_predicts(&q, 64);
+        assert_eq!((second.len(), second[0].lane), (1, Lane::Bulk));
+        assert!(matches!(q.pop_batch(64, Duration::ZERO), Some(Batch::Train(_))));
+        q.resume();
+        let third = pop_predicts(&q, 64);
+        assert_eq!((third.len(), third[0].lane), (1, Lane::Interactive));
+        let fourth = pop_predicts(&q, 64);
+        assert_eq!((fourth.len(), fourth[0].lane), (1, Lane::Bulk));
+    }
+
+    #[test]
+    fn train_waits_for_in_flight_batches_to_quiesce() {
+        // Pop a predict batch (in flight), queue a train, pop it (queue
+        // pauses), and have a second thread block in wait_quiesced: it
+        // must return only after done(). No sleeps — pure rendezvous.
+        let q = std::sync::Arc::new(ServeQueue::new(16));
+        let (p, _r) = predict_job(1.0);
+        q.offer(p);
+        match q.pop_batch(8, Duration::ZERO) {
+            Some(Batch::Predicts(_)) => {}
             _ => panic!("expected predicts"),
         }
-        assert_eq!(q.stats().trains, 1);
+        assert_eq!(q.in_flight(), 1);
+        q.push_train(train_job());
+        assert!(matches!(q.pop_batch(8, Duration::ZERO), Some(Batch::Train(_))));
+        let q2 = std::sync::Arc::clone(&q);
+        let waiter = std::thread::spawn(move || {
+            q2.wait_quiesced();
+            q2.in_flight()
+        });
+        q.done();
+        assert_eq!(waiter.join().unwrap(), 0);
+        q.resume();
+    }
+
+    #[test]
+    fn flush_policy_deadline_and_idle_on_a_virtual_clock() {
+        // Deadline/idle/quiescence rules pinned against explicit mock
+        // timestamps — zero wall-clock anywhere. Complements the
+        // MockClock-driven walk in `tests/serve_lanes.rs`; this copy
+        // keeps the cases that exercise snapshot edge states directly
+        // (stale arrivals, trickle at the deadline boundary).
+        let snap = |len, opened, arrival| BatchSnapshot {
+            len,
+            max_batch: 8,
+            opened_us: opened,
+            last_arrival_us: arrival,
+            barrier_pending: false,
+            closed: false,
+        };
+        // Size flush.
+        assert_eq!(flush_decision(&snap(8, 0, 0), 0, 200, 50), FlushDecision::Flush);
+        // Fresh batch: waits for the idle window first.
+        assert_eq!(flush_decision(&snap(1, 100, 100), 100, 200, 50), FlushDecision::WaitUs(50));
+        // A later arrival slides the idle deadline forward…
+        assert_eq!(flush_decision(&snap(2, 100, 140), 149, 200, 50), FlushDecision::WaitUs(41));
+        // …idle window expires with no new arrival → flush (well before
+        // the 200 µs deadline).
+        assert_eq!(flush_decision(&snap(2, 100, 140), 190, 200, 50), FlushDecision::Flush);
+        // A steady trickle keeps the idle window alive but the hard
+        // deadline caps the hold-open time.
+        assert_eq!(flush_decision(&snap(5, 100, 299), 299, 200, 50), FlushDecision::WaitUs(1));
+        assert_eq!(flush_decision(&snap(5, 100, 299), 300, 200, 50), FlushDecision::Flush);
+        // Stale arrivals (queued long before the pop): the idle window
+        // counts from batch open, not from the old arrival stamp.
+        assert_eq!(flush_decision(&snap(1, 500, 20), 510, 200, 50), FlushDecision::WaitUs(40));
+        // Train fence or shutdown → immediate flush.
+        let mut fenced = snap(3, 100, 100);
+        fenced.barrier_pending = true;
+        assert_eq!(flush_decision(&fenced, 100, 200, 50), FlushDecision::Flush);
+        let mut closing = snap(3, 100, 100);
+        closing.closed = true;
+        assert_eq!(flush_decision(&closing, 100, 200, 50), FlushDecision::Flush);
     }
 
     #[test]
@@ -381,9 +817,12 @@ mod tests {
                 rx
             })
             .collect();
-        let t0 = Instant::now();
+        let t0 = std::time::Instant::now();
         match q.pop_batch(8, Duration::from_secs(10)) {
-            Some(Batch::Predicts(b)) => assert_eq!(b.len(), 5),
+            Some(Batch::Predicts(b)) => {
+                assert_eq!(b.len(), 5);
+                q.done();
+            }
             _ => panic!("expected predicts"),
         }
         assert!(
@@ -403,7 +842,7 @@ mod tests {
         assert_eq!(q.offer(p2), Admission::Closed);
         assert!(!q.push_train(train_job()));
         // The queued predict is still drained before the None.
-        assert!(matches!(q.pop_batch(8, Duration::ZERO), Some(Batch::Predicts(_))));
+        assert_eq!(pop_predicts(&q, 8).len(), 1);
         assert!(q.pop_batch(8, Duration::ZERO).is_none());
         // Closed offers are not shed: the books still balance.
         let s = q.stats();
@@ -416,12 +855,25 @@ mod tests {
         let q = std::sync::Arc::new(ServeQueue::new(4));
         let q2 = std::sync::Arc::clone(&q);
         let t = std::thread::spawn(move || match q2.pop_batch(4, Duration::ZERO) {
-            Some(Batch::Predicts(b)) => b.len(),
+            Some(Batch::Predicts(b)) => {
+                q2.done();
+                b.len()
+            }
             _ => 0,
         });
         std::thread::sleep(Duration::from_millis(20));
         let (p, _r) = predict_job(1.0);
         q.offer(p);
         assert_eq!(t.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn lane_roundtrip_and_indices() {
+        for l in Lane::ALL {
+            assert_eq!(Lane::parse(l.name()), Some(l));
+        }
+        assert_eq!(Lane::parse("express"), None);
+        assert_eq!(Lane::Interactive.index(), 0);
+        assert_eq!(Lane::Bulk.index(), 1);
     }
 }

@@ -1,23 +1,37 @@
-//! The inference server: one dedicated **model thread** owns the
-//! [`Learner`] and is the only code that ever touches it, so predictions
-//! and serve-while-learning updates are serialized in queue (stream)
-//! order with zero locking around the model itself.
+//! The inference server: a pool of **replica model threads**, each
+//! owning a bit-identical [`Learner`] snapshot, all fed from one
+//! [`ServeQueue`] so coalesced cross-request batches fan out across
+//! replicas. With `replicas = 1` this degenerates to PR 4's single
+//! model-thread owner.
 //!
-//! The model thread loops on [`ServeQueue::pop_batch`]: coalesced
-//! predict batches are executed as **one** [`Learner::predict_batch`]
-//! call — one packed GEMM set on the `f32-fast` and `qnn` backends, the
-//! whole point of cross-request batching — and train jobs are applied
-//! via [`Learner::train_step`] between batches. Clients talk to the
-//! server through cloneable [`ServeClient`] handles.
+//! Each replica loops on [`ServeQueue::pop_batch`]: coalesced predict
+//! batches are executed as **one** [`Learner::predict_batch`] call — one
+//! packed GEMM set on the `f32-fast` and `qnn` backends, the whole point
+//! of cross-request batching. Serve-while-learning train jobs are
+//! **stream-order barriers across the pool**: popping one pauses the
+//! queue, the popping replica waits for every in-flight batch to drain
+//! ([`ServeQueue::wait_quiesced`]), applies the update to its own
+//! learner, then re-broadcasts a [`Learner::clone_replica`] snapshot to
+//! every other replica's inbox before reopening the queue — so all
+//! replicas stay bit-identical after every update (pinned by
+//! `tests/serve_parity.rs`). Predictions admitted before the train see
+//! pre-update weights, those after see post-update weights, on every
+//! replica.
+//!
+//! Clients talk to the pool through cloneable [`ServeClient`] handles:
+//! synchronous [`ServeClient::predict`] (interactive lane),
+//! lane-explicit [`ServeClient::predict_on`], and the non-blocking
+//! [`ServeClient::predict_async`] the open-loop load generator uses.
 
+use super::clock::{Clock, WallClock};
 use super::queue::{
-    Admission, Batch, PredictJob, PredictResponse, QueueStats, ServeQueue, TrainJob,
+    Admission, Batch, Lane, PredictJob, PredictResponse, QueueStats, ServeQueue, TrainJob,
 };
 use crate::cl::Learner;
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
-use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -26,8 +40,8 @@ use std::time::Duration;
 /// to a paper-geometry forward pass (hundreds of µs).
 pub const DEFAULT_MAX_WAIT: Duration = Duration::from_micros(200);
 
-/// Default admission bound on queued predicts (standalone servers with
-/// an unknown client population).
+/// Default admission bound on queued predicts per lane (standalone
+/// servers with an unknown client population).
 pub const DEFAULT_QUEUE_DEPTH: usize = 256;
 
 /// Default admission bound for a load run with a known closed-loop
@@ -38,7 +52,7 @@ pub fn default_queue_depth(clients: usize) -> usize {
     (2 * clients).max(8)
 }
 
-/// Batcher + admission-control knobs.
+/// Batcher + admission-control + pool knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
     /// Flush a batch at this many coalesced requests. Default:
@@ -47,8 +61,12 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// Flush a partial batch this long after it opened.
     pub max_wait: Duration,
-    /// Admission bound: queued predicts beyond this are shed.
+    /// Admission bound per lane: queued predicts beyond it are shed.
     pub queue_depth: usize,
+    /// Model threads in the pool, each owning a bit-identical learner
+    /// snapshot (1 = the single-owner server). Requires
+    /// [`Learner::clone_replica`] support when > 1.
+    pub replicas: usize,
 }
 
 impl Default for ServerConfig {
@@ -57,11 +75,13 @@ impl Default for ServerConfig {
             max_batch: crate::cl::EVAL_BATCH,
             max_wait: DEFAULT_MAX_WAIT,
             queue_depth: DEFAULT_QUEUE_DEPTH,
+            replicas: 1,
         }
     }
 }
 
-/// What the model thread did, returned by [`Server::shutdown`].
+/// What the pool did, returned by [`Server::shutdown`] (merged over all
+/// replicas).
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     /// Predict requests answered.
@@ -70,8 +90,14 @@ pub struct ServerStats {
     pub batches: u64,
     /// Serve-while-learning updates applied.
     pub train_steps: u64,
+    /// Weight re-broadcasts adopted by non-leader replicas after train
+    /// barriers (0 on a single-replica server).
+    pub resyncs: u64,
     /// batch size → how many batches flushed at that size.
     pub batch_hist: BTreeMap<usize, u64>,
+    /// Requests answered by each replica (fan-out visibility; sums to
+    /// `served`).
+    pub per_replica_served: Vec<u64>,
 }
 
 impl ServerStats {
@@ -82,6 +108,17 @@ impl ServerStats {
         } else {
             self.served as f64 / self.batches as f64
         }
+    }
+
+    fn merge(&mut self, other: &ServerStats) {
+        self.served += other.served;
+        self.batches += other.batches;
+        self.train_steps += other.train_steps;
+        self.resyncs += other.resyncs;
+        for (&size, &n) in &other.batch_hist {
+            *self.batch_hist.entry(size).or_insert(0) += n;
+        }
+        self.per_replica_served.push(other.served);
     }
 }
 
@@ -96,6 +133,16 @@ pub enum Served {
     Closed,
 }
 
+/// Outcome of a non-blocking [`ServeClient::predict_async`] submission.
+pub enum Submitted {
+    /// Admitted: the response will arrive on this channel.
+    Pending(Receiver<PredictResponse>),
+    /// Rejected at the admission bound.
+    Shed,
+    /// Server is shutting down.
+    Closed,
+}
+
 /// Cheap cloneable handle for submitting work to a running [`Server`].
 #[derive(Clone)]
 pub struct ServeClient {
@@ -103,26 +150,44 @@ pub struct ServeClient {
 }
 
 impl ServeClient {
-    /// Synchronous single-image predict: offers the request and, if
-    /// admitted, blocks until the model thread answers. Shedding returns
-    /// immediately — admission control never queues latency it cannot
-    /// serve.
+    /// Synchronous single-image predict on the interactive lane: offers
+    /// the request and, if admitted, blocks until a replica answers.
+    /// Shedding returns immediately — admission control never queues
+    /// latency it cannot serve.
     pub fn predict(&self, x: &Tensor<f32>, active_classes: usize) -> Served {
-        let (tx, rx) = channel::<PredictResponse>();
-        match self.queue.offer(PredictJob { x: x.clone(), active_classes, resp: tx }) {
-            Admission::Admitted => match rx.recv() {
+        self.predict_on(x, active_classes, Lane::Interactive)
+    }
+
+    /// [`ServeClient::predict`] with an explicit priority lane.
+    pub fn predict_on(&self, x: &Tensor<f32>, active_classes: usize, lane: Lane) -> Served {
+        match self.predict_async(x, active_classes, lane) {
+            Submitted::Pending(rx) => match rx.recv() {
                 Ok(r) => Served::Ok { pred: r.pred, batch_size: r.batch_size },
                 Err(_) => Served::Closed,
             },
-            Admission::Shed => Served::Shed,
-            Admission::Closed => Served::Closed,
+            Submitted::Shed => Served::Shed,
+            Submitted::Closed => Served::Closed,
         }
     }
 
-    /// Serve-while-learning: submit one SGD step, applied on the model
-    /// thread in stream order relative to every queued predict/train.
-    /// Blocks until applied; returns the loss (`None` once the server is
-    /// shutting down).
+    /// Non-blocking submit: the admission verdict returns immediately;
+    /// an admitted request's response (with its server-side completion
+    /// timestamp) arrives on the returned channel. The open-loop load
+    /// generator dispatches its whole arrival schedule this way so a
+    /// slow response can never stall later arrivals.
+    pub fn predict_async(&self, x: &Tensor<f32>, active_classes: usize, lane: Lane) -> Submitted {
+        let (tx, rx) = channel::<PredictResponse>();
+        match self.queue.offer(PredictJob { x: x.clone(), active_classes, lane, resp: tx }) {
+            Admission::Admitted => Submitted::Pending(rx),
+            Admission::Shed => Submitted::Shed,
+            Admission::Closed => Submitted::Closed,
+        }
+    }
+
+    /// Serve-while-learning: submit one SGD step, applied under the
+    /// pool-wide train barrier in stream order relative to every queued
+    /// predict/train. Blocks until applied; returns the loss (`None`
+    /// once the server is shutting down).
     pub fn train(
         &self,
         x: &Tensor<f32>,
@@ -141,26 +206,65 @@ impl ServeClient {
     pub fn queue_stats(&self) -> QueueStats {
         self.queue.stats()
     }
+
+    /// The server's clock — the epoch every [`PredictResponse::done_us`]
+    /// is stamped on. Load generators measure intended arrivals on this
+    /// same clock so latencies are differences of one time base.
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        Arc::clone(self.queue.clock())
+    }
 }
 
-/// A running inference server. Owns the model thread; dropping without
-/// [`Server::shutdown`] detaches it (prefer shutdown — it returns the
-/// learner and the stats).
+/// Per-replica weight inboxes for post-train re-broadcast.
+type Inbox<L> = Arc<Vec<Mutex<Option<L>>>>;
+
+/// A running inference server. Owns the replica threads; dropping
+/// without [`Server::shutdown`] detaches them (prefer shutdown — it
+/// returns the learners and the stats).
 pub struct Server<L: Learner + Send + 'static> {
     queue: Arc<ServeQueue>,
-    handle: JoinHandle<(L, ServerStats)>,
+    handles: Vec<JoinHandle<(L, ServerStats)>>,
 }
 
 impl<L: Learner + Send + 'static> Server<L> {
-    /// Move `learner` onto a dedicated model thread and start serving.
+    /// Start serving `learner` on `cfg.replicas` model threads (wall
+    /// clock). Panics if `replicas > 1` and the learner does not support
+    /// [`Learner::clone_replica`].
     pub fn start(learner: L, cfg: ServerConfig) -> Server<L> {
-        let queue = Arc::new(ServeQueue::new(cfg.queue_depth));
-        let q = Arc::clone(&queue);
-        let handle = std::thread::Builder::new()
-            .name("tinycl-serve".to_string())
-            .spawn(move || model_loop(learner, &q, cfg))
-            .expect("spawning the serve model thread");
-        Server { queue, handle }
+        Server::start_with_clock(learner, cfg, WallClock::shared())
+    }
+
+    /// [`Server::start`] with an explicit time source (tests use a
+    /// [`super::clock::MockClock`]; load benches share the clock with
+    /// their generators via [`ServeClient::clock`]).
+    pub fn start_with_clock(learner: L, cfg: ServerConfig, clock: Arc<dyn Clock>) -> Server<L> {
+        let replicas = cfg.replicas.max(1);
+        let queue = Arc::new(ServeQueue::with_clock(cfg.queue_depth, clock));
+        let mut learners = Vec::with_capacity(replicas);
+        learners.push(learner);
+        for _ in 1..replicas {
+            let snapshot = learners[0].clone_replica().unwrap_or_else(|| {
+                panic!(
+                    "this backend cannot be replicated (clone_replica unsupported) — \
+                     serve it with replicas = 1"
+                )
+            });
+            learners.push(snapshot);
+        }
+        let inbox: Inbox<L> = Arc::new((0..replicas).map(|_| Mutex::new(None)).collect());
+        let handles = learners
+            .into_iter()
+            .enumerate()
+            .map(|(replica, l)| {
+                let q = Arc::clone(&queue);
+                let inbox = Arc::clone(&inbox);
+                std::thread::Builder::new()
+                    .name(format!("tinycl-serve-{replica}"))
+                    .spawn(move || model_loop(replica, l, &q, cfg, &inbox))
+                    .expect("spawning a serve replica thread")
+            })
+            .collect();
+        Server { queue, handles }
     }
 
     pub fn client(&self) -> ServeClient {
@@ -171,23 +275,63 @@ impl<L: Learner + Send + 'static> Server<L> {
         self.queue.stats()
     }
 
-    /// Stop admitting, drain everything already queued, join the model
-    /// thread, and hand back the learner (with any serve-while-learning
-    /// updates applied) plus the serving stats.
+    /// Replica threads serving this pool.
+    pub fn replicas(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Stop admitting, drain everything already queued, join every
+    /// replica, and hand back the primary learner (with all
+    /// serve-while-learning updates applied) plus the merged stats.
     pub fn shutdown(self) -> (L, ServerStats) {
+        let (mut learners, stats) = self.shutdown_all();
+        (learners.remove(0), stats)
+    }
+
+    /// [`Server::shutdown`], returning every replica's learner (index =
+    /// replica id). After a drained shutdown all of them are
+    /// bit-identical — the parity tests assert exactly that.
+    pub fn shutdown_all(self) -> (Vec<L>, ServerStats) {
         self.queue.close();
-        self.handle.join().expect("serve model thread panicked")
+        let mut learners = Vec::with_capacity(self.handles.len());
+        let mut merged = ServerStats::default();
+        for handle in self.handles {
+            let (learner, stats) = handle.join().expect("serve replica thread panicked");
+            merged.merge(&stats);
+            learners.push(learner);
+        }
+        (learners, merged)
     }
 }
 
-/// The model thread: the single owner of the learner.
+/// Take any re-broadcast weights waiting in this replica's inbox.
+fn adopt<L: Learner>(
+    replica: usize,
+    inbox: &[Mutex<Option<L>>],
+    learner: &mut L,
+    stats: &mut ServerStats,
+) {
+    let fresh = inbox[replica].lock().unwrap_or_else(|e| e.into_inner()).take();
+    if let Some(fresh) = fresh {
+        *learner = fresh;
+        stats.resyncs += 1;
+    }
+}
+
+/// One replica model thread: pop, (re-)sync, execute.
 fn model_loop<L: Learner>(
+    replica: usize,
     mut learner: L,
     queue: &ServeQueue,
     cfg: ServerConfig,
+    inbox: &[Mutex<Option<L>>],
 ) -> (L, ServerStats) {
     let mut stats = ServerStats::default();
     while let Some(batch) = queue.pop_batch(cfg.max_batch, cfg.max_wait) {
+        // Another replica may have led a train barrier while this one
+        // slept in pop_batch: adopt the re-broadcast weights *before*
+        // executing anything popped after that barrier.
+        adopt(replica, inbox, &mut learner, &mut stats);
         match batch {
             Batch::Predicts(jobs) => {
                 let batch_size = jobs.len();
@@ -213,19 +357,40 @@ fn model_loop<L: Learner>(
                         preds.len(),
                         idxs.len()
                     );
+                    let done_us = queue.clock().now_us();
                     for (&i, pred) in idxs.iter().zip(preds) {
                         // A client that gave up is not an error.
-                        let _ = jobs[i].resp.send(PredictResponse { pred, batch_size });
+                        let _ = jobs[i].resp.send(PredictResponse { pred, batch_size, done_us });
                     }
                 }
+                queue.done();
             }
             Batch::Train(job) => {
+                // This replica popped the barrier: the queue is paused.
+                // Wait out in-flight predict batches (they were admitted
+                // before the train — pre-update weights are correct for
+                // them), apply the update here, re-broadcast, reopen.
+                queue.wait_quiesced();
                 let loss = learner.train_step(&job.x, job.label, job.active_classes, job.lr);
                 stats.train_steps += 1;
+                for (r, slot) in inbox.iter().enumerate() {
+                    if r != replica {
+                        let snapshot = learner.clone_replica().unwrap_or_else(|| {
+                            panic!("replicated serving requires clone_replica support")
+                        });
+                        // Latest barrier wins over any unconsumed snapshot.
+                        *slot.lock().unwrap_or_else(|e| e.into_inner()) = Some(snapshot);
+                    }
+                }
+                queue.resume();
                 let _ = job.resp.send(loss);
             }
         }
     }
+    // The final barrier may have been led by another replica after this
+    // one's last pop: adopt before handing the learner back so shutdown
+    // returns bit-identical replicas.
+    adopt(replica, inbox, &mut learner, &mut stats);
     (learner, stats)
 }
 
@@ -288,6 +453,43 @@ mod tests {
         assert_eq!(stats.served, 12);
         assert_eq!(stats.batch_hist.iter().map(|(s, n)| *s as u64 * n).sum::<u64>(), 12);
         assert!(stats.mean_batch() >= 1.0);
+        assert_eq!(stats.per_replica_served, vec![12]);
+    }
+
+    #[test]
+    fn replica_pool_serves_everything_and_stays_consistent() {
+        let cfg = tiny_cfg();
+        let model = Model::new(cfg.clone(), 5).with_engine(Engine::Gemm);
+        let server = Server::start(
+            model,
+            ServerConfig { replicas: 3, max_batch: 4, ..ServerConfig::default() },
+        );
+        assert_eq!(server.replicas(), 3);
+        let images: Vec<Tensor<f32>> = (0..24u64).map(|i| rand_image(i, &cfg)).collect();
+        std::thread::scope(|scope| {
+            for c in 0..6 {
+                let client = server.client();
+                let images = &images;
+                scope.spawn(move || {
+                    for x in images.iter().skip(c).step_by(6) {
+                        match client.predict(x, 4) {
+                            Served::Ok { .. } => {}
+                            other => panic!("unexpected outcome {other:?}"),
+                        }
+                    }
+                });
+            }
+        });
+        let (models, stats) = server.shutdown_all();
+        assert_eq!(models.len(), 3);
+        assert_eq!(stats.served, 24);
+        assert_eq!(stats.per_replica_served.len(), 3);
+        assert_eq!(stats.per_replica_served.iter().sum::<u64>(), 24);
+        // No trains ⇒ no resyncs, and all replicas still bit-identical.
+        assert_eq!(stats.resyncs, 0);
+        for m in &models[1..] {
+            assert_eq!(m.params.w.data(), models[0].params.w.data());
+        }
     }
 
     #[test]
@@ -295,7 +497,7 @@ mod tests {
         // Serve-while-learning: K train jobs submitted through the queue
         // while predicts fly must leave the model bit-identical to the
         // same K steps applied sequentially — predictions are reads, and
-        // the single model thread applies writes in stream order.
+        // the train barrier serializes writes in stream order.
         let cfg = tiny_cfg();
         let seed_model = Model::new(cfg.clone(), 9).with_engine(Engine::Gemm);
         let mut reference = seed_model.clone();
@@ -337,6 +539,48 @@ mod tests {
     }
 
     #[test]
+    fn replicas_resync_bit_identically_after_train_barriers() {
+        let cfg = tiny_cfg();
+        let seed_model = Model::new(cfg.clone(), 11).with_engine(Engine::Gemm);
+        let mut reference = seed_model.clone();
+        let server = Server::start(
+            seed_model,
+            ServerConfig { replicas: 2, max_batch: 4, ..ServerConfig::default() },
+        );
+        let probe: Vec<Tensor<f32>> = (0..12u64).map(|i| rand_image(300 + i, &cfg)).collect();
+        let trains: Vec<(Tensor<f32>, usize)> =
+            (0..4u64).map(|i| (rand_image(400 + i, &cfg), (i % 4) as usize)).collect();
+        std::thread::scope(|scope| {
+            for c in 0..2 {
+                let client = server.client();
+                let probe = &probe;
+                scope.spawn(move || {
+                    for x in probe.iter().skip(c).step_by(2) {
+                        let _ = client.predict(x, 4);
+                    }
+                });
+            }
+            let trainer = server.client();
+            let trains = &trains;
+            scope.spawn(move || {
+                for (x, label) in trains {
+                    trainer.train(x, *label, 4, 0.05).expect("train while open");
+                }
+            });
+        });
+        let (models, stats) = server.shutdown_all();
+        assert_eq!(stats.train_steps, 4);
+        for (x, label) in &trains {
+            reference.train_step(x, *label, 4, 0.05);
+        }
+        for (r, m) in models.iter().enumerate() {
+            assert_eq!(m.params.w.data(), reference.params.w.data(), "replica {r} w diverged");
+            assert_eq!(m.params.k1.data(), reference.params.k1.data(), "replica {r} k1 diverged");
+            assert_eq!(m.params.k2.data(), reference.params.k2.data(), "replica {r} k2 diverged");
+        }
+    }
+
+    #[test]
     fn shutdown_returns_learner_and_drains() {
         let cfg = tiny_cfg();
         let server = Server::start(Model::new(cfg, 3), ServerConfig::default());
@@ -346,5 +590,9 @@ mod tests {
         // Post-shutdown submissions are refused cleanly.
         assert_eq!(client.predict(&rand_image(1, &tiny_cfg()), 4), Served::Closed);
         assert_eq!(client.train(&rand_image(1, &tiny_cfg()), 0, 4, 0.1), None);
+        assert!(matches!(
+            client.predict_async(&rand_image(1, &tiny_cfg()), 4, Lane::Bulk),
+            Submitted::Closed
+        ));
     }
 }

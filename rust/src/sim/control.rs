@@ -32,6 +32,10 @@ use crate::qnn::QParams;
 use crate::tensor::Tensor;
 
 /// The simulated accelerator.
+// Clone: a duplicated device is an independent, bit-identical chip —
+// SRAM contents, dither step and counters all copy (replicated serving
+// and the ROADMAP's multi-device sim-farm direction both rely on this).
+#[derive(Clone)]
 pub struct TinyClDevice {
     pub sim_cfg: SimConfig,
     pub model_cfg: ModelConfig,

@@ -5,6 +5,9 @@ use super::mac::{Mac, MacCounters, MacMode};
 use super::sram::LaneVec;
 use crate::fixed::{Acc, Fx};
 
+// Clone: lets a whole simulated device be duplicated (replicated
+// serving / design-space farms) — pure state, no handles.
+#[derive(Clone)]
 pub struct Pu {
     pub macs: Vec<Mac>,
     /// Dadda-tree reduction count (for the power model).

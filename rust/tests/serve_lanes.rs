@@ -1,0 +1,285 @@
+//! Priority-lane property tests (PR 5) on deterministic synthetic
+//! schedules: per-lane shed accounting, train-barrier ordering across
+//! lanes, the anti-starvation bound, and the batcher's flush policy on
+//! a virtual clock. None of these tests sleeps or asserts on wall-clock
+//! durations — schedules are preloaded, pops use `Duration::ZERO`, and
+//! the timing rules are exercised through the pure `flush_decision`
+//! with `MockClock` timestamps.
+
+use std::sync::mpsc::{channel, Receiver};
+use std::time::Duration;
+use tinycl::serve::{
+    flush_decision, Admission, Batch, BatchSnapshot, Clock, FlushDecision, Lane, MockClock,
+    PredictJob, PredictResponse, ServeQueue, Served, Server, ServerConfig, TrainJob,
+    STARVATION_BUDGET,
+};
+use tinycl::tensor::{Shape, Tensor};
+
+fn img(v: f32) -> Tensor<f32> {
+    Tensor::from_vec(Shape::d3(1, 2, 2), vec![v; 4])
+}
+
+fn job(v: f32, lane: Lane) -> (PredictJob, Receiver<PredictResponse>) {
+    let (tx, rx) = channel();
+    (PredictJob { x: img(v), active_classes: 2, lane, resp: tx }, rx)
+}
+
+fn train() -> TrainJob {
+    let (tx, _) = channel();
+    TrainJob { x: img(0.0), label: 0, active_classes: 2, lr: 0.1, resp: tx }
+}
+
+/// Pop one predict batch with no hold-open and report (lane, ids) —
+/// the ids are encoded in the image values.
+fn pop_ids(q: &ServeQueue, max_batch: usize) -> (Lane, Vec<i32>) {
+    match q.pop_batch(max_batch, Duration::ZERO) {
+        Some(Batch::Predicts(b)) => {
+            q.done();
+            let lane = b[0].lane;
+            assert!(b.iter().all(|j| j.lane == lane), "batches must be lane-pure");
+            (lane, b.iter().map(|j| j.x.data()[0] as i32).collect())
+        }
+        _ => panic!("expected a predict batch"),
+    }
+}
+
+#[test]
+fn per_lane_shed_accounting_invariant() {
+    // Deterministic schedule, no consumer: lane books must balance
+    // individually, sum to the aggregates, and never leak across lanes.
+    let q = ServeQueue::new(3);
+    let mut rxs = Vec::new();
+    for i in 0..5 {
+        let (j, rx) = job(i as f32, Lane::Interactive);
+        q.offer(j);
+        rxs.push(rx);
+    }
+    for i in 0..7 {
+        let (j, rx) = job(100.0 + i as f32, Lane::Bulk);
+        q.offer(j);
+        rxs.push(rx);
+    }
+    let s = q.stats();
+    assert!(s.consistent(), "per-lane or aggregate books broke: {s:?}");
+    let inter = s.lane(Lane::Interactive);
+    let bulk = s.lane(Lane::Bulk);
+    assert_eq!((inter.offered, inter.admitted, inter.shed), (5, 3, 2));
+    assert_eq!((bulk.offered, bulk.admitted, bulk.shed), (7, 3, 4));
+    assert_eq!((s.offered, s.admitted, s.shed), (12, 6, 6));
+    // Draining one lane frees that lane only.
+    let (lane, ids) = pop_ids(&q, 64);
+    assert_eq!(lane, Lane::Interactive);
+    assert_eq!(ids, vec![0, 1, 2]);
+    let (j, _rx) = job(50.0, Lane::Interactive);
+    assert_eq!(q.offer(j), Admission::Admitted);
+    let (j, _rx2) = job(200.0, Lane::Bulk);
+    assert_eq!(q.offer(j), Admission::Shed, "bulk lane is still full");
+    assert!(q.stats().consistent());
+}
+
+#[test]
+fn bulk_waits_at_most_the_starvation_budget() {
+    // The bound under continuous interactive pressure: before every pop
+    // another interactive job arrives, so interactive is *always*
+    // eligible — bulk must still be served within STARVATION_BUDGET + 1
+    // flushes of entering the queue.
+    let q = ServeQueue::new(1024);
+    let mut rxs = Vec::new();
+    let (b, brx) = job(999.0, Lane::Bulk);
+    q.offer(b);
+    rxs.push(brx);
+    let mut flushes_before_bulk = 0u64;
+    loop {
+        let (j, rx) = job(flushes_before_bulk as f32, Lane::Interactive);
+        q.offer(j);
+        rxs.push(rx);
+        let (lane, _) = pop_ids(&q, 1);
+        if lane == Lane::Bulk {
+            break;
+        }
+        flushes_before_bulk += 1;
+        assert!(
+            flushes_before_bulk <= STARVATION_BUDGET,
+            "bulk starved for {flushes_before_bulk} flushes (budget {STARVATION_BUDGET})"
+        );
+    }
+    assert_eq!(flushes_before_bulk, STARVATION_BUDGET);
+}
+
+#[test]
+fn custom_starvation_budget_is_honored() {
+    let q = ServeQueue::new(64).with_starvation_budget(1);
+    assert_eq!(q.starvation_budget(), 1);
+    let (b, _brx) = job(999.0, Lane::Bulk);
+    q.offer(b);
+    let mut rxs = Vec::new();
+    for i in 0..4 {
+        let (j, rx) = job(i as f32, Lane::Interactive);
+        q.offer(j);
+        rxs.push(rx);
+    }
+    // Budget 1: one interactive flush, then bulk, then interactive again.
+    assert_eq!(pop_ids(&q, 1).0, Lane::Interactive);
+    assert_eq!(pop_ids(&q, 1).0, Lane::Bulk);
+    assert_eq!(pop_ids(&q, 1).0, Lane::Interactive);
+}
+
+#[test]
+fn interactive_recovers_immediately_after_a_bulk_override() {
+    // After the anti-starvation override serves bulk once, priority
+    // reverts to interactive — bulk cannot monopolize the queue either.
+    let q = ServeQueue::new(64);
+    let mut rxs = Vec::new();
+    for i in 0..3 {
+        let (j, rx) = job(100.0 + i as f32, Lane::Bulk);
+        q.offer(j);
+        rxs.push(rx);
+    }
+    for i in 0..(STARVATION_BUDGET + 2) {
+        let (j, rx) = job(i as f32, Lane::Interactive);
+        q.offer(j);
+        rxs.push(rx);
+    }
+    let mut lanes = Vec::new();
+    for _ in 0..(STARVATION_BUDGET + 2) {
+        lanes.push(pop_ids(&q, 1).0);
+    }
+    let k = STARVATION_BUDGET as usize;
+    assert_eq!(&lanes[..k], vec![Lane::Interactive; k].as_slice());
+    assert_eq!(lanes[k], Lane::Bulk, "override after the budget");
+    assert_eq!(lanes[k + 1], Lane::Interactive, "priority reverts after one bulk batch");
+}
+
+#[test]
+fn train_fence_orders_across_lanes_and_multiple_barriers() {
+    // Schedule: I0 B1 T I2 T B3 — pops must respect both fences: the
+    // pre-fence predicts (interactive first), train, the middle
+    // predict, train, the tail.
+    let q = ServeQueue::new(64);
+    let mut rxs = Vec::new();
+    let (a, rx) = job(0.0, Lane::Interactive);
+    q.offer(a);
+    rxs.push(rx);
+    let (b, rx) = job(1.0, Lane::Bulk);
+    q.offer(b);
+    rxs.push(rx);
+    q.push_train(train());
+    let (c, rx) = job(2.0, Lane::Interactive);
+    q.offer(c);
+    rxs.push(rx);
+    q.push_train(train());
+    let (d, rx) = job(3.0, Lane::Bulk);
+    q.offer(d);
+    rxs.push(rx);
+
+    assert_eq!(pop_ids(&q, 64), (Lane::Interactive, vec![0]));
+    assert_eq!(pop_ids(&q, 64), (Lane::Bulk, vec![1]));
+    assert!(matches!(q.pop_batch(64, Duration::ZERO), Some(Batch::Train(_))));
+    q.resume();
+    assert_eq!(pop_ids(&q, 64), (Lane::Interactive, vec![2]));
+    assert!(matches!(q.pop_batch(64, Duration::ZERO), Some(Batch::Train(_))));
+    q.resume();
+    assert_eq!(pop_ids(&q, 64), (Lane::Bulk, vec![3]));
+    assert_eq!(q.stats().trains, 2);
+}
+
+#[test]
+fn train_barrier_waits_for_open_and_in_flight_batches() {
+    // busy bookkeeping: a popped-but-unfinished batch holds the barrier
+    // (wait_quiesced blocks until done()). Pure rendezvous, no sleeps.
+    let q = std::sync::Arc::new(ServeQueue::new(64));
+    let (a, _rx) = job(0.0, Lane::Interactive);
+    q.offer(a);
+    assert!(matches!(q.pop_batch(8, Duration::ZERO), Some(Batch::Predicts(_))));
+    assert_eq!(q.in_flight(), 1);
+    q.push_train(train());
+    assert!(matches!(q.pop_batch(8, Duration::ZERO), Some(Batch::Train(_))));
+    let q2 = std::sync::Arc::clone(&q);
+    let barrier = std::thread::spawn(move || {
+        q2.wait_quiesced();
+        q2.resume();
+    });
+    q.done(); // the in-flight batch finishes → the barrier may proceed
+    barrier.join().unwrap();
+    assert_eq!(q.in_flight(), 0);
+}
+
+#[test]
+fn flush_policy_on_a_mock_clock() {
+    // The deterministic virtual-clock harness for the batcher: drive
+    // the pure flush rule with MockClock timestamps. (A frozen clock
+    // can never reach a future deadline — which is exactly why the rule
+    // is pure: no sleeps, no flakes.)
+    let clock = MockClock::new();
+    let max_wait_us = 200;
+    let idle_us = 50;
+    clock.set_us(1_000);
+    let opened = clock.now_us();
+    let mut snap = BatchSnapshot {
+        len: 1,
+        max_batch: 8,
+        opened_us: opened,
+        last_arrival_us: opened,
+        barrier_pending: false,
+        closed: false,
+    };
+    // Fresh batch: wait exactly the idle window.
+    let decide = |snap: &BatchSnapshot, now: u64| flush_decision(snap, now, max_wait_us, idle_us);
+    assert_eq!(decide(&snap, clock.now_us()), FlushDecision::WaitUs(50));
+    // An arrival 30 µs in restarts the idle window.
+    clock.advance_us(30);
+    snap.last_arrival_us = clock.now_us();
+    snap.len = 2;
+    assert_eq!(decide(&snap, clock.now_us()), FlushDecision::WaitUs(50));
+    // Quiet for the whole window → flush, 120 µs before the deadline.
+    clock.advance_us(idle_us);
+    assert_eq!(decide(&snap, clock.now_us()), FlushDecision::Flush);
+    // A steady trickle re-arms idle forever, but the deadline caps it:
+    // at opened+200 the batch flushes no matter how recent the arrival.
+    let mut trickle = snap;
+    trickle.last_arrival_us = opened + 199;
+    assert_eq!(decide(&trickle, opened + 199), FlushDecision::WaitUs(1));
+    assert_eq!(decide(&trickle, opened + 200), FlushDecision::Flush);
+    // Size, fence and shutdown flush immediately regardless of time.
+    let mut full = snap;
+    full.len = full.max_batch;
+    assert_eq!(decide(&full, opened), FlushDecision::Flush);
+    let mut fenced = snap;
+    fenced.barrier_pending = true;
+    assert_eq!(decide(&fenced, opened), FlushDecision::Flush);
+    let mut closing = snap;
+    closing.closed = true;
+    assert_eq!(decide(&closing, opened), FlushDecision::Flush);
+}
+
+#[test]
+fn lanes_flow_end_to_end_through_a_server() {
+    // Bulk and interactive requests both reach a model and come back
+    // with the right per-lane accounting.
+    use tinycl::nn::{Engine, Model, ModelConfig};
+    let cfg = ModelConfig {
+        in_channels: 3,
+        image_size: 8,
+        conv_channels: 4,
+        num_classes: 4,
+        grad_clip: f32::INFINITY,
+    };
+    let model = Model::new(cfg.clone(), 5).with_engine(Engine::Gemm);
+    let server = Server::start(model, ServerConfig { max_batch: 8, ..Default::default() });
+    let client = server.client();
+    let shape = Shape::d3(3, 8, 8);
+    let x = Tensor::from_vec(shape.clone(), vec![0.1; shape.numel()]);
+    for i in 0..6 {
+        let lane = if i % 2 == 0 { Lane::Interactive } else { Lane::Bulk };
+        match client.predict_on(&x, 4, lane) {
+            Served::Ok { pred, .. } => assert!(pred < 4),
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+    let stats = server.queue_stats();
+    assert!(stats.consistent());
+    assert_eq!(stats.lane(Lane::Interactive).admitted, 3);
+    assert_eq!(stats.lane(Lane::Bulk).admitted, 3);
+    let (_m, server_stats) = server.shutdown();
+    assert_eq!(server_stats.served, 6);
+}

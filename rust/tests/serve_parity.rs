@@ -1,16 +1,20 @@
-//! Serving parity + admission-control accounting (PR 4).
+//! Serving parity + admission-control accounting (PR 4, replicas PR 5).
 //!
-//! The dynamic batcher coalesces whatever happens to be queued, so batch
-//! composition is timing-dependent — these tests pin the property that
-//! makes that safe: **batching is invisible in the answers**. Every
-//! served prediction must match per-sample [`Learner::predict`] on an
+//! The dynamic batcher coalesces whatever happens to be queued and the
+//! replica pool executes batches on whichever model thread pops them,
+//! so batch composition and placement are timing-dependent — these
+//! tests pin the property that makes that safe: **batching, replication
+//! and scheduling are invisible in the answers**. Every served
+//! prediction must match per-sample [`Learner::predict`] on an
 //! identically built backend — bit-identical on `qnn` (the integer
 //! batched forward is exact), and within the documented ≤ 1e-4 logit
 //! contract on `f32-fast` (a prediction may differ only on a top-2
 //! near-tie inside that tolerance; in practice the packed batch forward
 //! is bit-identical per sample). Swept across clients ∈ {1,4,8} ×
-//! max_batch ∈ {1,8,64}, plus overload accounting and the
-//! serve-while-learning stream-order guarantee.
+//! max_batch ∈ {1,8,64} at one replica and replicas ∈ {1,2,4} ×
+//! max_batch ∈ {1,64} at 8 clients, plus overload accounting, the
+//! serve-while-learning stream-order guarantee, and the replica
+//! re-sync bit-identity after train barriers.
 
 use tinycl::cl::Learner;
 use tinycl::coordinator::{Backend, BackendKind};
@@ -56,12 +60,17 @@ fn warmed_qnn(data: &Dataset) -> Backend {
     b
 }
 
-fn serve_cfg(max_batch: usize) -> ServerConfig {
+fn replica_cfg(max_batch: usize, replicas: usize) -> ServerConfig {
     ServerConfig {
         max_batch,
         max_wait: Duration::from_micros(200),
         queue_depth: 64,
+        replicas,
     }
+}
+
+fn serve_cfg(max_batch: usize) -> ServerConfig {
+    replica_cfg(max_batch, 1)
 }
 
 #[test]
@@ -135,7 +144,12 @@ fn overloaded_server_sheds_gracefully_and_accounts() {
     let data = tiny_data();
     let server = Server::start(
         warmed_qnn(&data),
-        ServerConfig { max_batch: 4, max_wait: Duration::from_micros(100), queue_depth: 2 },
+        ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            queue_depth: 2,
+            replicas: 1,
+        },
     );
     let load = LoadConfig { clients: 8, requests: 120, active_classes: ACTIVE };
     let result = run_closed_loop(&server.client(), &data.samples, &load);
@@ -196,9 +210,140 @@ fn serve_while_learning_is_stream_ordered_on_qnn() {
 }
 
 #[test]
+fn qnn_replica_grid_matches_per_sample_predict() {
+    // PR 5 grid: replicas {1,2,4} × max_batch {1,64} on the bit-exact
+    // integer backend at 8 clients. Which replica answers is timing-
+    // dependent; the answer itself must never be.
+    let data = tiny_data();
+    let mut reference = warmed_qnn(&data);
+    let ref_preds: Vec<usize> =
+        data.samples.iter().map(|s| reference.predict(&s.x, ACTIVE)).collect();
+    for replicas in [1usize, 2, 4] {
+        for max_batch in [1usize, 64] {
+            let server = Server::start(warmed_qnn(&data), replica_cfg(max_batch, replicas));
+            let load = LoadConfig { clients: 8, requests: 48, active_classes: ACTIVE };
+            let result = run_closed_loop(&server.client(), &data.samples, &load);
+            let queue = server.queue_stats();
+            let (backends, stats) = server.shutdown_all();
+            assert_eq!(backends.len(), replicas);
+            assert!(queue.consistent(), "accounting broke at r={replicas} mb={max_batch}");
+            assert_eq!(result.predictions.len() as u64, queue.admitted);
+            assert_eq!(stats.served, queue.admitted);
+            assert_eq!(stats.per_replica_served.len(), replicas);
+            assert_eq!(stats.per_replica_served.iter().sum::<u64>(), stats.served);
+            for &(idx, pred) in &result.predictions {
+                assert_eq!(
+                    pred, ref_preds[idx],
+                    "qnn replica serving changed an answer: replicas={replicas} \
+                     max_batch={max_batch} sample={idx}"
+                );
+            }
+            assert!(stats.batch_hist.keys().all(|&s| s <= max_batch.max(1)));
+        }
+    }
+}
+
+#[test]
+fn f32_fast_replica_grid_within_logit_tolerance() {
+    let data = tiny_data();
+    let cfg = tiny_cfg();
+    let mut seed_model = Model::new(cfg, 9).with_engine(Engine::Gemm).with_threads(2);
+    for s in data.samples.iter().take(5) {
+        Model::train_step(&mut seed_model, &s.x, s.label, ACTIVE, 0.05);
+    }
+    let reference = seed_model.clone();
+    for replicas in [1usize, 2, 4] {
+        for max_batch in [1usize, 64] {
+            let server = Server::start(seed_model.clone(), replica_cfg(max_batch, replicas));
+            let load = LoadConfig { clients: 8, requests: 48, active_classes: ACTIVE };
+            let result = run_closed_loop(&server.client(), &data.samples, &load);
+            let (_models, stats) = server.shutdown_all();
+            assert_eq!(result.predictions.len(), 48);
+            assert_eq!(stats.per_replica_served.iter().sum::<u64>(), 48);
+            for &(idx, pred) in &result.predictions {
+                let logits = reference.forward(&data.samples[idx].x);
+                let ref_pred = tinycl::nn::loss::predict(&logits, ACTIVE);
+                if pred != ref_pred {
+                    assert!(
+                        tinycl::nn::loss::top2_near_tie(&logits, ACTIVE, 1e-4),
+                        "f32-fast replica serving flipped a non-tied answer: \
+                         replicas={replicas} max_batch={max_batch} sample={idx}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_while_learning_resyncs_replicas_bit_identically_on_qnn() {
+    // The replica-pool barrier contract: after every train job the
+    // leader re-broadcasts its weights, so a drained shutdown must
+    // return replicas that (a) agree with the sequentially-updated
+    // reference and (b) agree with *each other* bit-for-bit — the
+    // Q4.12 datapath is exact, so one stale parameter anywhere flips a
+    // prediction.
+    let data = tiny_data();
+    let replicas = 3usize;
+    let mut reference = warmed_qnn(&data);
+    let server = Server::start(warmed_qnn(&data), replica_cfg(8, replicas));
+    let trains: Vec<usize> = (0..10).map(|i| (i * 7) % data.samples.len()).collect();
+    let mut served_losses = Vec::new();
+    std::thread::scope(|scope| {
+        for c in 0..2 {
+            let client = server.client();
+            let data = &data;
+            scope.spawn(move || {
+                for s in data.samples.iter().skip(c).step_by(2) {
+                    match client.predict(&s.x, ACTIVE) {
+                        Served::Ok { .. } | Served::Shed => {}
+                        Served::Closed => break,
+                    }
+                }
+            });
+        }
+        let trainer = server.client();
+        for &i in &trains {
+            let s = &data.samples[i];
+            let loss = trainer.train(&s.x, s.label, ACTIVE, 0.125).expect("server open");
+            served_losses.push(loss);
+        }
+    });
+    let (mut backends, stats) = server.shutdown_all();
+    assert_eq!(stats.train_steps, trains.len() as u64);
+    // Every replica that did not lead the final barrier must have
+    // adopted at least one re-broadcast.
+    assert!(
+        stats.resyncs >= (replicas - 1) as u64,
+        "only {} resyncs for {} trains across {replicas} replicas",
+        stats.resyncs,
+        trains.len()
+    );
+    for (k, &i) in trains.iter().enumerate() {
+        let s = &data.samples[i];
+        let ref_loss = reference.train_step(&s.x, s.label, ACTIVE, 0.125);
+        assert_eq!(served_losses[k], ref_loss, "loss diverged at interleaved step {k}");
+    }
+    // Behavioral bit-identity of every replica vs the reference (and
+    // therefore vs each other) over the full probe set.
+    for s in &data.samples {
+        let want = reference.predict(&s.x, ACTIVE);
+        for (r, b) in backends.iter_mut().enumerate() {
+            assert_eq!(
+                b.predict(&s.x, ACTIVE),
+                want,
+                "replica {r} desynced from the stream-order reference"
+            );
+        }
+    }
+}
+
+#[test]
 fn server_default_batch_is_the_eval_chunk() {
     // The satellite contract: one named constant drives both the CL
     // evaluation sweep and the serving batcher's default flush size.
     assert_eq!(ServerConfig::default().max_batch, tinycl::cl::EVAL_BATCH);
     assert_eq!(tinycl::cl::EVAL_BATCH, 64);
+    // And the pool default stays the single-owner server.
+    assert_eq!(ServerConfig::default().replicas, 1);
 }
