@@ -12,7 +12,7 @@
 //!      (flags: --epochs N --lr F --per-class N --memory N --seed N
 //!       --skip-baseline; takes a few minutes at the defaults)
 
-use tinycl::cl::{self, Learner, PolicyKind, RunConfig, TaskStream};
+use tinycl::cl::{self, Learner, PolicyKind, ReplayBudget, RunConfig, TaskStream};
 use tinycl::coordinator::{Backend, BackendKind};
 use tinycl::data::SyntheticCifar;
 use tinycl::hw::{CostModel, EnergyModel};
@@ -88,7 +88,8 @@ fn main() -> anyhow::Result<()> {
     let mut backend =
         Backend::create(BackendKind::Sim, &model_cfg, &sim_cfg, "artifacts", seed)?;
     let mut logger = LossLogger { inner: &mut backend, losses: Vec::new() };
-    let mut policy = PolicyKind::Gdumb.build(memory, seed);
+    let budget = ReplayBudget::from_slots(memory, model_cfg.sample_bytes());
+    let mut policy = PolicyKind::Gdumb.build(budget, 0, seed);
     let t0 = std::time::Instant::now();
     let report = cl::policy::run_stream(
         policy.as_mut(), &mut logger, &stream, &train, &test, &run_cfg);
@@ -120,7 +121,7 @@ fn main() -> anyhow::Result<()> {
         println!("\nnaive fine-tuning baseline (no CL policy):");
         backend.reinit(seed);
         backend.reset_sim_stats();
-        let mut naive = PolicyKind::Naive.build(memory, seed);
+        let mut naive = PolicyKind::Naive.build(budget, 0, seed);
         let naive_report = cl::policy::run_stream(
             naive.as_mut(), &mut backend, &stream, &train, &test, &run_cfg);
         println!("{naive_report}");

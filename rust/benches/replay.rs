@@ -1,0 +1,24 @@
+//! Latent-replay frontier bench: replay cut × byte budget vs the
+//! raw-sample baselines at equal byte budgets — same driver as
+//! `tinycl replay-bench` (see `cl::bench`), exposed as a bench binary so
+//! `cargo bench --bench replay` sits next to the other paper-figure
+//! benches.
+//!
+//! Run: `cargo bench --bench replay [-- --backend f32-fast|f32|qnn
+//! --budgets-kb 6144,3072,1536 --tasks N --epochs N --batch N
+//! --per-class N --threads N --qnn-engine naive|fast --seed N --smoke]`.
+//!
+//! For each byte budget it runs gdumb, er and latent-replay at every
+//! cut, reports accuracy/forgetting/train time per point, and at the
+//! paper geometry asserts an interior cut trains ≥ 2× faster than gdumb
+//! at the largest budget. Emits `BENCH_replay.json`.
+
+use tinycl::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = tinycl::cl::bench::run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

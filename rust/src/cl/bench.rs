@@ -1,0 +1,382 @@
+//! `tinycl replay-bench` — the latent-replay memory–latency–accuracy
+//! frontier (ROADMAP item 2).
+//!
+//! Sweeps replay byte budgets × cut points and runs the raw-sample
+//! baselines (gdumb, er) at the *same byte budgets*, so every point
+//! answers the deployment question the paper's 6.144 MB memory poses:
+//! given this many bytes of replay SRAM, is it better to hold raw
+//! samples and train the whole network, or activations at a cut and
+//! train only the suffix? Activations at the paper geometry are larger
+//! per slot (8×32×32 vs 3×32×32 values), so a latent memory holds ~2.7×
+//! fewer samples — but each epoch skips the frozen prefix entirely,
+//! which is where the ≥ 2× train-time win asserted below comes from.
+//!
+//! Conventions follow `serve-bench`: `--smoke` shrinks the geometry for
+//! CI and relaxes the ratio asserts; results land in `BENCH_replay.json`
+//! (one object per run) so the driver can track the frontier across PRs.
+
+use super::metrics::AccuracyMatrix;
+use super::policy::{self, ClPolicy, ExperienceReplay, Gdumb, ReplayBudget, RunConfig};
+use super::stream::TaskStream;
+use super::LatentReplay;
+use crate::coordinator::{Backend, BackendKind};
+use crate::data::{Dataset, SyntheticCifar};
+use crate::nn::{ModelConfig, MAX_CUT};
+use crate::qnn::QnnEngine;
+use crate::sim::SimConfig;
+use crate::util::cli::Args;
+use anyhow::Result;
+use std::time::Instant;
+
+/// One (policy, budget) point on the frontier.
+struct RunRecord {
+    policy: &'static str,
+    cut: Option<usize>,
+    budget_bytes: u64,
+    slot_bytes: u64,
+    capacity_slots: usize,
+    stored_slots: usize,
+    final_avg_acc: f64,
+    forgetting: f64,
+    train_secs: f64,
+    train_steps: u64,
+    replay_read_bursts: u64,
+    replay_write_bursts: u64,
+}
+
+impl RunRecord {
+    fn to_json(&self, indent: &str) -> String {
+        let cut = match self.cut {
+            Some(c) => c.to_string(),
+            None => "null".to_string(),
+        };
+        format!(
+            "{indent}{{\"policy\": \"{}\", \"cut\": {cut}, \"budget_bytes\": {}, \
+             \"slot_bytes\": {}, \"capacity_slots\": {}, \"stored_slots\": {}, \
+             \"final_avg_acc\": {:.4}, \"forgetting\": {:.4}, \"train_secs\": {:.4}, \
+             \"train_steps\": {}, \"replay_read_bursts\": {}, \"replay_write_bursts\": {}}}",
+            self.policy,
+            self.budget_bytes,
+            self.slot_bytes,
+            self.capacity_slots,
+            self.stored_slots,
+            self.final_avg_acc,
+            self.forgetting,
+            self.train_secs,
+            self.train_steps,
+            self.replay_read_bursts,
+            self.replay_write_bursts,
+        )
+    }
+}
+
+struct Setup {
+    model: ModelConfig,
+    backend: BackendKind,
+    qnn_engine: QnnEngine,
+    threads: usize,
+    stream: TaskStream,
+    train: Dataset,
+    test: Dataset,
+    run_cfg: RunConfig,
+}
+
+impl Setup {
+    fn backend(&self) -> Result<Backend> {
+        let mut b = Backend::create(
+            self.backend,
+            &self.model,
+            &SimConfig::paper(),
+            "artifacts",
+            self.run_cfg.seed,
+        )?;
+        b.set_threads(self.threads);
+        b.set_qnn_engine(self.qnn_engine);
+        Ok(b)
+    }
+}
+
+/// Drive one full task stream, timing only the training windows
+/// (`observe_task`); evaluation is common to every policy and excluded.
+fn drive(
+    policy: &mut dyn ClPolicy,
+    backend: &mut Backend,
+    setup: &Setup,
+) -> (AccuracyMatrix, f64, u64) {
+    let mut matrix = AccuracyMatrix::new(setup.stream.num_tasks());
+    let mut steps = 0;
+    let mut secs = 0.0;
+    for (t, task) in setup.stream.tasks.iter().enumerate() {
+        let active = setup.stream.active_classes_after(t);
+        let t0 = Instant::now();
+        steps += policy.observe_task(backend, task, &setup.train, active, &setup.run_cfg);
+        secs += t0.elapsed().as_secs_f64();
+        let row: Vec<f64> = setup.stream.tasks[..=t]
+            .iter()
+            .map(|seen| policy::evaluate(backend, seen, &setup.test, active))
+            .collect();
+        matrix.push_row(row);
+    }
+    (matrix, secs, steps)
+}
+
+fn record(
+    policy: &'static str,
+    cut: Option<usize>,
+    budget_bytes: u64,
+    memory: (u64, usize, usize, u64, u64),
+    matrix: &AccuracyMatrix,
+    train_secs: f64,
+    train_steps: u64,
+) -> RunRecord {
+    let (slot_bytes, capacity_slots, stored_slots, reads, writes) = memory;
+    RunRecord {
+        policy,
+        cut,
+        budget_bytes,
+        slot_bytes,
+        capacity_slots,
+        stored_slots,
+        final_avg_acc: matrix.final_average(),
+        forgetting: matrix.forgetting(),
+        train_secs,
+        train_steps,
+        replay_read_bursts: reads,
+        replay_write_bursts: writes,
+    }
+}
+
+fn run_one(setup: &Setup, budget_bytes: u64, cut: Option<usize>) -> Result<RunRecord> {
+    let sample_bytes = setup.model.sample_bytes();
+    let mut backend = setup.backend()?;
+    let seed = setup.run_cfg.seed;
+    Ok(match cut {
+        None => {
+            // Raw-sample baseline at the same byte budget.
+            let budget = ReplayBudget::from_bytes(budget_bytes, sample_bytes);
+            let mut p = Gdumb::new(budget.slots, seed);
+            let (matrix, secs, steps) = drive(&mut p, &mut backend, setup);
+            let memory = (
+                sample_bytes,
+                p.memory.capacity(),
+                p.memory.len(),
+                p.memory.read_bursts,
+                p.memory.write_bursts,
+            );
+            record("gdumb", None, budget_bytes, memory, &matrix, secs, steps)
+        }
+        Some(c) => {
+            let mut p = LatentReplay::new(budget_bytes, c, seed);
+            let (matrix, secs, steps) = drive(&mut p, &mut backend, setup);
+            let (reads, writes) = p.memory.traffic();
+            let memory = (
+                p.memory.slot_bytes().unwrap_or(0),
+                p.memory.capacity().unwrap_or(0),
+                p.memory.len(),
+                reads,
+                writes,
+            );
+            record("latent-replay", Some(c), budget_bytes, memory, &matrix, secs, steps)
+        }
+    })
+}
+
+/// The `er` baseline is a separate shape (reservoir, no re-init), so it
+/// gets its own runner rather than a third arm above.
+fn run_er(setup: &Setup, budget_bytes: u64) -> Result<RunRecord> {
+    let sample_bytes = setup.model.sample_bytes();
+    let mut backend = setup.backend()?;
+    let budget = ReplayBudget::from_bytes(budget_bytes, sample_bytes);
+    let mut p = ExperienceReplay::new(budget.slots, setup.run_cfg.seed);
+    let (matrix, secs, steps) = drive(&mut p, &mut backend, setup);
+    Ok(RunRecord {
+        policy: "er",
+        cut: None,
+        budget_bytes,
+        slot_bytes: sample_bytes,
+        capacity_slots: p.memory.capacity(),
+        stored_slots: p.memory.len(),
+        final_avg_acc: matrix.final_average(),
+        forgetting: matrix.forgetting(),
+        train_secs: secs,
+        train_steps: steps,
+        replay_read_bursts: p.memory.read_bursts,
+        replay_write_bursts: p.memory.write_bursts,
+    })
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let smoke = args.bool_or("smoke", false);
+    let model = if smoke {
+        ModelConfig {
+            in_channels: 3,
+            image_size: 8,
+            conv_channels: 4,
+            num_classes: 4,
+            grad_clip: 1.0,
+        }
+    } else {
+        ModelConfig { grad_clip: 1.0, ..ModelConfig::default() }
+    };
+    let backend = {
+        let s = args.str_or("backend", "f32-fast");
+        let kind = BackendKind::parse(&s)
+            .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}' (f32|f32-fast|qnn)"))?;
+        if !matches!(kind, BackendKind::F32 | BackendKind::F32Fast | BackendKind::Qnn) {
+            anyhow::bail!("backend '{s}' has no cut-point datapath — use f32, f32-fast or qnn");
+        }
+        kind
+    };
+    let num_tasks = args.usize_or("tasks", if smoke { 2 } else { 5 });
+    let seed = args.u64_or("seed", 17);
+    let run_cfg = RunConfig {
+        epochs: args.usize_or("epochs", if smoke { 2 } else { 3 }),
+        lr: args.f32_or("lr", 0.05),
+        seed,
+        batch: args.usize_or("batch", if smoke { 4 } else { 8 }).max(1),
+    };
+    let gen = SyntheticCifar {
+        image_size: model.image_size,
+        channels: model.in_channels,
+        num_classes: model.num_classes,
+        noise: 0.35,
+        seed,
+    };
+    let per_class = args.usize_or("per-class", if smoke { 6 } else { 60 });
+    let test_per_class = args.usize_or("test-per-class", if smoke { 4 } else { 20 });
+    let train = gen.generate(per_class, 0);
+    let test = gen.generate(test_per_class, 1);
+    let setup = Setup {
+        stream: TaskStream::class_incremental(&train, num_tasks, seed),
+        train,
+        test,
+        backend,
+        qnn_engine: QnnEngine::from_args(args)?,
+        threads: args.threads_or_auto("threads", 0),
+        run_cfg,
+        model,
+    };
+    // Byte budgets: the paper's 6.144 MB memory and two halvings (kB
+    // here = 1000 B, matching the paper's 6144 kB = 1000 raw slots).
+    let budgets: Vec<u64> = if smoke {
+        args.usize_list_or("budgets-kb", "6,3").iter().map(|&k| k as u64 * 1000).collect()
+    } else {
+        args.usize_list_or("budgets-kb", "6144,3072,1536")
+            .iter()
+            .map(|&k| k as u64 * 1000)
+            .collect()
+    };
+    anyhow::ensure!(!budgets.is_empty(), "--budgets-kb must name at least one budget");
+    let mode = if smoke { "smoke" } else { "paper" };
+    println!(
+        "replay-bench [{mode}]: backend={} tasks={} epochs={} batch={} budgets={budgets:?} B",
+        setup.backend.name(),
+        num_tasks,
+        setup.run_cfg.epochs,
+        setup.run_cfg.batch,
+    );
+
+    let mut runs: Vec<RunRecord> = Vec::new();
+    for &budget in &budgets {
+        println!("\n--- byte budget {budget} ---");
+        let mut batch = vec![run_one(&setup, budget, None)?, run_er(&setup, budget)?];
+        for cut in 0..=MAX_CUT {
+            batch.push(run_one(&setup, budget, Some(cut))?);
+        }
+        for r in &batch {
+            let cut = match r.cut {
+                Some(c) => c.to_string(),
+                None => "-".to_string(),
+            };
+            println!(
+                "{:>13} cut={cut} slots={}/{} ({} B/slot): acc {:.3} forgetting {:.3} \
+                 train {:.2}s ({} steps)",
+                r.policy,
+                r.stored_slots,
+                r.capacity_slots,
+                r.slot_bytes,
+                r.final_avg_acc,
+                r.forgetting,
+                r.train_secs,
+                r.train_steps,
+            );
+        }
+        runs.extend(batch);
+    }
+
+    // Train-epoch speedup of each interior cut vs gdumb at the largest
+    // (the paper's) budget — the frontier's latency axis.
+    let largest = *budgets.iter().max().unwrap();
+    let gdumb_secs = runs
+        .iter()
+        .find(|r| r.policy == "gdumb" && r.budget_bytes == largest)
+        .map(|r| r.train_secs)
+        .unwrap();
+    let interior: Vec<(usize, f64)> = (1..=MAX_CUT)
+        .filter_map(|c| {
+            runs.iter()
+                .find(|r| r.cut == Some(c) && r.budget_bytes == largest)
+                .map(|r| (c, gdumb_secs / r.train_secs.max(1e-12)))
+        })
+        .collect();
+    println!();
+    for &(c, s) in &interior {
+        println!("cut {c} vs gdumb at {largest} B: {s:.2}× faster training");
+    }
+
+    // On the quantized backend, cut 0 *is* gdumb — the latent store
+    // round-trips the Q4.12 inputs exactly, so the whole run must agree.
+    if setup.backend == BackendKind::Qnn {
+        for &budget in &budgets {
+            let g = runs.iter().find(|r| r.policy == "gdumb" && r.budget_bytes == budget).unwrap();
+            let l = runs.iter().find(|r| r.cut == Some(0) && r.budget_bytes == budget).unwrap();
+            assert_eq!(g.final_avg_acc, l.final_avg_acc, "qnn cut-0 accuracy parity at {budget} B");
+            assert_eq!(g.train_steps, l.train_steps, "qnn cut-0 step parity at {budget} B");
+        }
+        println!("qnn cut-0 runs match gdumb exactly (accuracy and step counts)");
+    }
+
+    let run_objs: Vec<String> = runs.iter().map(|r| r.to_json("    ")).collect();
+    let speedups = interior
+        .iter()
+        .map(|(c, s)| format!("\"cut{c}\": {s:.2}"))
+        .collect::<Vec<_>>()
+        .join(", ");
+    let json = format!(
+        "{{\n  \"bench\": \"replay\",\n  \"mode\": \"{mode}\",\n  \
+         \"geometry\": {{\"image_size\": {}, \"in_channels\": {}, \
+         \"conv_channels\": {}, \"classes\": {}}},\n  \
+         \"backend\": \"{}\",\n  \"tasks\": {},\n  \"epochs\": {},\n  \
+         \"batch\": {},\n  \"threads\": {},\n  \"sample_bytes\": {},\n  \
+         \"budgets_bytes\": {budgets:?},\n  \
+         \"interior_speedup\": {{{speedups}}},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        setup.model.image_size,
+        setup.model.in_channels,
+        setup.model.conv_channels,
+        setup.model.num_classes,
+        setup.backend.name(),
+        num_tasks,
+        setup.run_cfg.epochs,
+        setup.run_cfg.batch,
+        setup.threads,
+        setup.model.sample_bytes(),
+        run_objs.join(",\n"),
+    );
+    match std::fs::write("BENCH_replay.json", &json) {
+        Ok(()) => println!("wrote BENCH_replay.json"),
+        Err(e) => eprintln!("WARN: could not write BENCH_replay.json: {e}"),
+    }
+
+    // Ratio gate only at the paper geometry (repo convention: smoke
+    // keeps CI honest about plumbing, not performance).
+    if !smoke {
+        let best = interior.iter().map(|&(_, s)| s).fold(0.0f64, f64::max);
+        assert!(
+            best >= 2.0,
+            "expected an interior cut to train ≥ 2× faster than gdumb at equal bytes, got {best:.2}×"
+        );
+    }
+
+    println!("\nreplay-bench PASS");
+    Ok(())
+}

@@ -1,0 +1,331 @@
+//! Latent replay: store *activations* at a network cut point instead of
+//! raw inputs (Pellegrini/Ravaglia et al.; ROADMAP item 2).
+//!
+//! The paper's replay memory holds raw 32×32×3 samples (6.144 MB for
+//! 1000 slots, §III-E). Freezing a prefix of the Conv-Conv-Dense model
+//! lets the memory hold the activation at a chosen cut instead: each
+//! stored sample then skips the frozen prefix on every training epoch,
+//! trading memory bytes per slot against per-step latency and accuracy.
+//! That memory–latency–accuracy frontier is what `tinycl replay-bench`
+//! sweeps.
+//!
+//! Mechanics:
+//! * **Admission** — each arriving sample is pushed through the frozen
+//!   prefix *once* (batched, one packed GEMM set per chunk on the fast
+//!   engines), quantized to Q4.12 (the memory's native width, §III-E),
+//!   and offered to a byte-budgeted greedy class-balanced store.
+//! * **Training** — the suffix from the cut re-initializes per task
+//!   (GDumb's "dumb learner", on the trainable suffix only) and trains
+//!   on shuffled minibatches of stored latents.
+//! * **Parity** — at `--replay-cut 0` the "activation" is the raw input
+//!   and the policy *is* GDumb: same admissions, same epoch shuffles,
+//!   same re-init seeds, bit-identical on the Q4.12 backends (pinned by
+//!   `tests/latent_parity.rs`).
+
+use super::memory::{ReplayStore, Replayable, SamplerKind};
+use super::policy::{epoch_seed, ClPolicy, RunConfig, EVAL_BATCH};
+use super::stream::Task;
+use super::Learner;
+use crate::data::Dataset;
+use crate::fixed::{vecops, Fx};
+use crate::tensor::{Shape, Tensor};
+
+/// One stored latent: a Q4.12 activation (or raw input, at cut 0) plus
+/// its class label for balanced admission.
+#[derive(Clone)]
+pub struct LatentSlot {
+    pub data: Vec<Fx>,
+    pub label: usize,
+}
+
+impl Replayable for LatentSlot {
+    fn label(&self) -> usize {
+        self.label
+    }
+
+    /// 16-bit values, like the raw-sample store.
+    fn bursts(&self) -> u64 {
+        (self.data.len() as u64 * 16).div_ceil(128)
+    }
+}
+
+/// A byte-budgeted, greedy class-balanced store of Q4.12 activations.
+///
+/// The budget is in *bytes*, not slots: slot size depends on the cut
+/// geometry, which the policy only learns from the first activation it
+/// sees. Capacity resolves lazily at that point —
+/// `max(budget / slot_bytes, 1)` slots — so the same byte budget yields
+/// different slot counts at different cuts (the frontier's x-axis).
+pub struct LatentMemory {
+    budget_bytes: u64,
+    seed: u64,
+    store: Option<ReplayStore<LatentSlot>>,
+    slot_shape: Option<Shape>,
+}
+
+impl LatentMemory {
+    pub fn new(budget_bytes: u64, seed: u64) -> LatentMemory {
+        assert!(budget_bytes > 0, "latent memory budget must be positive");
+        LatentMemory { budget_bytes, seed, store: None, slot_shape: None }
+    }
+
+    /// The configured budget in bytes.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Bytes per stored slot (Q4.12 = 2 bytes/value); `None` before the
+    /// first offer fixes the activation geometry.
+    pub fn slot_bytes(&self) -> Option<u64> {
+        self.slot_shape.as_ref().map(|s| s.numel() as u64 * 2)
+    }
+
+    /// Slot capacity; `None` before the first offer.
+    pub fn capacity(&self) -> Option<usize> {
+        self.store.as_ref().map(ReplayStore::capacity)
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.as_ref().map_or(0, ReplayStore::len)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes currently resident in the memory (exact: slots × slot size).
+    pub fn stored_bytes(&self) -> u64 {
+        self.slot_bytes().unwrap_or(0) * self.len() as u64
+    }
+
+    /// Cumulative `(read, write)` traffic in 128-bit bursts.
+    pub fn traffic(&self) -> (u64, u64) {
+        self.store.as_ref().map_or((0, 0), |s| (s.read_bursts, s.write_bursts))
+    }
+
+    /// Quantize one activation to Q4.12 and offer it to the balanced
+    /// sampler. The first offer fixes the slot geometry and resolves the
+    /// byte budget into a slot capacity; later offers must match.
+    pub fn offer(&mut self, act: &Tensor<f32>, label: usize) -> bool {
+        let shape = self.slot_shape.get_or_insert_with(|| act.shape().clone());
+        assert_eq!(act.shape(), shape, "latent geometry changed between offers");
+        let store = self.store.get_or_insert_with(|| {
+            let slot_bytes = shape.numel() as u64 * 2;
+            let capacity = ((self.budget_bytes / slot_bytes) as usize).max(1);
+            ReplayStore::new(SamplerKind::GreedyBalanced, capacity, self.seed)
+        });
+        store.offer(&LatentSlot { data: vecops::quantize(act.data()), label })
+    }
+
+    /// One shuffled pass over the memory, pre-chunked into minibatches —
+    /// same shuffle stream as the raw store, so a cut-0 run replays
+    /// GDumb's exact epoch order.
+    pub fn epoch_batches(&mut self, seed: u64, batch: usize) -> Vec<Vec<LatentSlot>> {
+        match &mut self.store {
+            Some(s) => s.epoch_batches(seed, batch),
+            None => Vec::new(),
+        }
+    }
+
+    /// Dequantize a stored slot back to the activation tensor the suffix
+    /// trains on (exact: stored values live on the Fx grid).
+    pub fn to_tensor(&self, slot: &LatentSlot) -> Tensor<f32> {
+        let shape = self.slot_shape.clone().expect("empty memory has no geometry");
+        Tensor::from_vec(shape, vecops::dequantize(&slot.data))
+    }
+}
+
+/// The latent-replay policy: GDumb's greedy-balanced admission and
+/// train-from-scratch loop, applied to the trainable suffix at
+/// `--replay-cut` over stored activations.
+pub struct LatentReplay {
+    pub memory: LatentMemory,
+    cut: usize,
+    reinit_counter: u64,
+}
+
+impl LatentReplay {
+    /// `budget_bytes` is the replay-memory byte budget (the paper's
+    /// 6.144 MB memory is `--memory-bytes 6144000`); `cut` picks the
+    /// frozen prefix (0 = none — plain GDumb).
+    pub fn new(budget_bytes: u64, cut: usize, seed: u64) -> LatentReplay {
+        assert!(
+            cut <= crate::nn::MAX_CUT,
+            "replay cut {cut} out of range (max {})",
+            crate::nn::MAX_CUT
+        );
+        LatentReplay { memory: LatentMemory::new(budget_bytes, seed), cut, reinit_counter: 0 }
+    }
+
+    pub fn cut(&self) -> usize {
+        self.cut
+    }
+}
+
+impl ClPolicy for LatentReplay {
+    fn name(&self) -> &'static str {
+        "latent-replay"
+    }
+
+    fn observe_task(
+        &mut self,
+        learner: &mut dyn Learner,
+        task: &Task,
+        dataset: &Dataset,
+        active_classes: usize,
+        cfg: &RunConfig,
+    ) -> u64 {
+        // Admission: one frozen-prefix forward per arriving sample, in
+        // stream order, chunked so the fast engines run one packed GEMM
+        // set per chunk rather than per sample.
+        for chunk in task.sample_indices.chunks(EVAL_BATCH) {
+            let xs: Vec<&Tensor<f32>> = chunk.iter().map(|&i| &dataset.samples[i].x).collect();
+            let acts = learner.forward_to_cut_batch(&xs, self.cut);
+            for (act, &i) in acts.iter().zip(chunk) {
+                self.memory.offer(act, dataset.samples[i].label);
+            }
+        }
+        // Dumb learner on the suffix only: the frozen prefix keeps its
+        // weights (stored latents would go stale otherwise), everything
+        // from the cut re-initializes and trains from scratch. Same
+        // seed schedule as GDumb, so cut 0 replays it exactly.
+        self.reinit_counter += 1;
+        learner.reinit_suffix(self.cut, cfg.seed ^ (self.reinit_counter << 32));
+        let mut steps = 0;
+        for epoch in 0..cfg.epochs {
+            let es = epoch_seed(cfg.seed, task.id, epoch);
+            for chunk in self.memory.epoch_batches(es, cfg.batch) {
+                let acts: Vec<Tensor<f32>> =
+                    chunk.iter().map(|s| self.memory.to_tensor(s)).collect();
+                let refs: Vec<&Tensor<f32>> = acts.iter().collect();
+                let labels: Vec<usize> = chunk.iter().map(|s| s.label).collect();
+                learner.train_latent_batch(&refs, &labels, self.cut, active_classes, cfg.lr);
+                steps += chunk.len() as u64;
+            }
+        }
+        steps
+    }
+
+    fn replay_traffic(&self) -> (u64, u64) {
+        self.memory.traffic()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_act(seed: u64, shape: Shape) -> Tensor<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        let n = shape.numel();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(-4.0, 4.0)).collect())
+    }
+
+    #[test]
+    fn q412_round_trip_is_tight_and_idempotent() {
+        // Property: quantize→dequantize lands within half a Q4.12 step
+        // of the original, and a second round trip is exact (the grid is
+        // a fixed point of the codec).
+        let step = 1.0 / 4096.0;
+        for case in 0..50u64 {
+            let act = rand_act(1000 + case, Shape::d3(2, 3, 3));
+            let q = vecops::quantize(act.data());
+            let d = vecops::dequantize(&q);
+            for (orig, back) in act.data().iter().zip(&d) {
+                assert!(
+                    (orig - back).abs() <= 0.5 * step + f32::EPSILON,
+                    "case {case}: {orig} -> {back}"
+                );
+            }
+            assert_eq!(vecops::quantize(&d), q, "case {case}: grid not idempotent");
+        }
+    }
+
+    #[test]
+    fn round_trip_through_memory_is_exact_on_the_grid() {
+        // Offer pre-quantized activations; what comes back out must be
+        // bit-identical — the memory is a lossless store for anything
+        // already on the Fx grid (raw Q4.12 inputs at cut 0, and every
+        // activation the quantized datapath produces).
+        let shape = Shape::d3(2, 4, 4);
+        let mut mem = LatentMemory::new(10_000, 9);
+        let mut originals = Vec::new();
+        for i in 0..6u64 {
+            let raw = rand_act(2000 + i, shape.clone());
+            let snapped = Tensor::from_vec(
+                shape.clone(),
+                vecops::dequantize(&vecops::quantize(raw.data())),
+            );
+            assert!(mem.offer(&snapped, i as usize % 3), "under capacity, all admitted");
+            originals.push(snapped);
+        }
+        let mut seen = 0;
+        for chunk in mem.epoch_batches(7, 2) {
+            for slot in &chunk {
+                let t = mem.to_tensor(slot);
+                let orig = originals
+                    .iter()
+                    .find(|o| o.data() == t.data())
+                    .unwrap_or_else(|| panic!("slot does not round-trip to any original"));
+                assert_eq!(orig.shape(), t.shape());
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, 6);
+    }
+
+    #[test]
+    fn byte_accounting_is_exact() {
+        // Shape 2×4×4 = 32 values = 64 B/slot; an 8-slot budget of
+        // 512 B resolves exactly, stored_bytes tracks slot count, and
+        // burst metering charges ceil(32·16/128) = 4 bursts per write.
+        let shape = Shape::d3(2, 4, 4);
+        let mut mem = LatentMemory::new(512, 3);
+        assert_eq!(mem.slot_bytes(), None, "geometry unknown before first offer");
+        assert_eq!(mem.capacity(), None);
+        for i in 0..12u64 {
+            mem.offer(&rand_act(3000 + i, shape.clone()), 0);
+        }
+        assert_eq!(mem.slot_bytes(), Some(64));
+        assert_eq!(mem.capacity(), Some(8), "512 B / 64 B per slot");
+        assert_eq!(mem.len(), 8, "single class: fills to capacity, then rejects");
+        assert_eq!(mem.stored_bytes(), 512);
+        let (reads, writes) = mem.traffic();
+        assert_eq!(writes, 8 * 4, "4 bursts per admitted slot");
+        assert_eq!(reads, 0);
+    }
+
+    #[test]
+    fn sub_slot_budget_still_holds_one_item() {
+        let shape = Shape::d3(2, 4, 4); // 64 B/slot
+        let mut mem = LatentMemory::new(10, 3);
+        assert!(mem.offer(&rand_act(1, shape), 0));
+        assert_eq!(mem.capacity(), Some(1));
+        assert_eq!(mem.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "latent geometry changed")]
+    fn geometry_change_between_offers_panics() {
+        let mut mem = LatentMemory::new(10_000, 3);
+        mem.offer(&rand_act(1, Shape::d3(2, 4, 4)), 0);
+        mem.offer(&rand_act(2, Shape::d3(3, 4, 4)), 0);
+    }
+
+    #[test]
+    fn admission_is_class_balanced() {
+        // Same greedy sampler as GDumb: a skewed stream still ends
+        // class-balanced within quota arithmetic.
+        let shape = Shape::d3(2, 4, 4);
+        let mut mem = LatentMemory::new(512, 5); // 8 slots
+        for i in 0..40u64 {
+            let label = if i < 30 { 0 } else { 1 };
+            mem.offer(&rand_act(4000 + i, shape.clone()), label);
+        }
+        let store = mem.store.as_ref().unwrap();
+        let counts = store.class_counts();
+        assert_eq!(counts.get(&0), Some(&4));
+        assert_eq!(counts.get(&1), Some(&4));
+    }
+}

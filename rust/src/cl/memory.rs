@@ -12,9 +12,13 @@
 //! * [`SamplerKind::Reservoir`] — classic reservoir sampling used by
 //!   Experience Replay [21].
 //!
-//! The memory also meters its own off-chip traffic in 128-bit bursts so
-//! the energy model can charge GDumb sample movement (the 6.144 MB store
-//! lives off-die; see DESIGN.md).
+//! The store is generic over what it holds ([`Replayable`]): raw samples
+//! for GDumb/ER ([`ReplayMemory`]) and quantized cut-point activations for
+//! latent replay (`cl::latent`). It also meters its own off-chip traffic
+//! in 128-bit bursts so the energy model can charge sample movement (the
+//! 6.144 MB store lives off-die; see DESIGN.md).
+
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::data::Sample;
 use crate::util::rng::Pcg32;
@@ -26,24 +30,58 @@ pub enum SamplerKind {
     Reservoir,
 }
 
-/// A budgeted sample store.
-pub struct ReplayMemory {
+/// Anything the replay store can hold: it has a class label (for balanced
+/// admission) and a movement cost in 128-bit off-chip bursts.
+pub trait Replayable: Clone {
+    fn label(&self) -> usize;
+    /// 128-bit bursts needed to move this item off/on chip.
+    fn bursts(&self) -> u64;
+}
+
+impl Replayable for Sample {
+    fn label(&self) -> usize {
+        self.label
+    }
+
+    /// CHW 16-bit values.
+    fn bursts(&self) -> u64 {
+        (self.x.shape().numel() as u64 * 16).div_ceil(128)
+    }
+}
+
+/// A budgeted item store.
+pub struct ReplayStore<T: Replayable> {
     kind: SamplerKind,
     capacity: usize,
-    slots: Vec<Sample>,
-    /// Total samples offered via [`Self::offer`] (reservoir denominator).
+    slots: Vec<T>,
+    /// Total items offered via [`Self::offer`] (reservoir denominator).
     seen: u64,
     rng: Pcg32,
     /// Off-chip write traffic, 128-bit bursts.
     pub write_bursts: u64,
     /// Off-chip read traffic, 128-bit bursts.
     pub read_bursts: u64,
+    // Greedy-sampler bookkeeping, maintained incrementally so an offer is
+    // O(log n) instead of rebuilding counts + scanning slots per offer
+    // (O(n²) per task at the paper's 1000-slot memory). Unused (and not
+    // maintained) by the reservoir sampler.
+    /// Stored items per class.
+    counts: BTreeMap<usize, usize>,
+    /// Arrival order per class (front = oldest = next eviction victim).
+    fifo: BTreeMap<usize, VecDeque<u64>>,
+    /// Arrival sequence number of each slot, aligned with `slots` and
+    /// always ascending (appends grow it, removals preserve order).
+    order: Vec<u64>,
+    next_seq: u64,
 }
 
-impl ReplayMemory {
-    pub fn new(kind: SamplerKind, capacity: usize, seed: u64) -> ReplayMemory {
+/// The raw-sample store used by GDumb and Experience Replay.
+pub type ReplayMemory = ReplayStore<Sample>;
+
+impl<T: Replayable> ReplayStore<T> {
+    pub fn new(kind: SamplerKind, capacity: usize, seed: u64) -> ReplayStore<T> {
         assert!(capacity > 0);
-        ReplayMemory {
+        ReplayStore {
             kind,
             capacity,
             slots: Vec::with_capacity(capacity),
@@ -51,12 +89,11 @@ impl ReplayMemory {
             rng: Pcg32::new(seed, 0xC1),
             write_bursts: 0,
             read_bursts: 0,
+            counts: BTreeMap::new(),
+            fifo: BTreeMap::new(),
+            order: Vec::new(),
+            next_seq: 0,
         }
-    }
-
-    /// The paper's memory: 6.144 MB = 1000 samples of 32×32 RGB at 16 bit.
-    pub fn paper(kind: SamplerKind, seed: u64) -> ReplayMemory {
-        ReplayMemory::new(kind, 1000, seed)
     }
 
     pub fn len(&self) -> usize {
@@ -71,98 +108,109 @@ impl ReplayMemory {
         self.capacity
     }
 
-    pub fn samples(&self) -> &[Sample] {
+    pub fn samples(&self) -> &[T] {
         &self.slots
     }
 
-    /// 128-bit bursts needed to move one sample (CHW 16-bit values).
-    fn bursts_per_sample(s: &Sample) -> u64 {
-        (s.x.shape().numel() as u64 * 16).div_ceil(128)
-    }
-
-    /// Count of stored samples per class label.
-    pub fn class_counts(&self) -> std::collections::BTreeMap<usize, usize> {
-        let mut m = std::collections::BTreeMap::new();
+    /// Count of stored items per class label.
+    pub fn class_counts(&self) -> BTreeMap<usize, usize> {
+        let mut m = BTreeMap::new();
         for s in &self.slots {
-            *m.entry(s.label).or_insert(0) += 1;
+            *m.entry(s.label()).or_insert(0) += 1;
         }
         m
     }
 
-    /// Offer one stream sample to the memory; it is stored or dropped
+    /// Offer one stream item to the memory; it is stored or dropped
     /// according to the sampler. Returns `true` if stored.
-    pub fn offer(&mut self, sample: &Sample) -> bool {
+    pub fn offer(&mut self, item: &T) -> bool {
         self.seen += 1;
         match self.kind {
-            SamplerKind::GreedyBalanced => self.offer_greedy(sample),
-            SamplerKind::Reservoir => self.offer_reservoir(sample),
+            SamplerKind::GreedyBalanced => self.offer_greedy(item),
+            SamplerKind::Reservoir => self.offer_reservoir(item),
         }
     }
 
     /// GDumb Alg. 1: admit if below capacity or if this class holds fewer
-    /// than the (shrinking) per-class quota; evict from the largest class.
-    fn offer_greedy(&mut self, sample: &Sample) -> bool {
-        let counts = self.class_counts();
-        let num_classes = counts.len() + usize::from(!counts.contains_key(&sample.label));
+    /// than the (shrinking) per-class quota; evict the oldest item of the
+    /// most-represented class (ties break to the largest label, matching
+    /// `BTreeMap` iteration order).
+    fn offer_greedy(&mut self, item: &T) -> bool {
+        debug_assert_eq!(self.counts, self.class_counts());
+        let label = item.label();
+        let num_classes = self.counts.len() + usize::from(!self.counts.contains_key(&label));
         let quota = self.capacity / num_classes.max(1);
-        let mine = counts.get(&sample.label).copied().unwrap_or(0);
+        let mine = self.counts.get(&label).copied().unwrap_or(0);
 
         if self.slots.len() < self.capacity {
-            self.store(sample.clone());
+            self.store(item.clone());
             return true;
         }
         if mine >= quota {
             return false;
         }
-        // Evict the oldest sample of the most-represented class.
-        let (&victim_class, _) = counts.iter().max_by_key(|&(_, n)| *n).unwrap();
-        if let Some(pos) = self.slots.iter().position(|s| s.label == victim_class) {
-            self.slots.remove(pos);
+        let (&victim, _) = self.counts.iter().max_by_key(|&(_, n)| *n).unwrap();
+        let seq = self.fifo.get_mut(&victim).unwrap().pop_front().unwrap();
+        let pos = self.order.binary_search(&seq).unwrap();
+        self.slots.remove(pos);
+        self.order.remove(pos);
+        let c = self.counts.get_mut(&victim).unwrap();
+        *c -= 1;
+        if *c == 0 {
+            self.counts.remove(&victim);
+            self.fifo.remove(&victim);
         }
-        self.store(sample.clone());
+        self.store(item.clone());
         true
     }
 
-    fn offer_reservoir(&mut self, sample: &Sample) -> bool {
+    fn offer_reservoir(&mut self, item: &T) -> bool {
         if self.slots.len() < self.capacity {
-            self.store(sample.clone());
+            self.store(item.clone());
             return true;
         }
-        let j = (self.rng.next_u64() % self.seen) as usize;
+        let j = self.rng.below_u64(self.seen) as usize;
         if j < self.capacity {
-            self.write_bursts += Self::bursts_per_sample(sample);
-            self.slots[j] = sample.clone();
+            self.write_bursts += item.bursts();
+            self.slots[j] = item.clone();
             true
         } else {
             false
         }
     }
 
-    fn store(&mut self, sample: Sample) {
-        self.write_bursts += Self::bursts_per_sample(&sample);
-        self.slots.push(sample);
+    fn store(&mut self, item: T) {
+        self.write_bursts += item.bursts();
+        if self.kind == SamplerKind::GreedyBalanced {
+            let label = item.label();
+            *self.counts.entry(label).or_insert(0) += 1;
+            self.fifo.entry(label).or_default().push_back(self.next_seq);
+            self.order.push(self.next_seq);
+            self.next_seq += 1;
+        }
+        self.slots.push(item);
     }
 
     /// Read the whole memory in a shuffled order (one GDumb training
     /// epoch), charging read traffic.
-    pub fn epoch(&mut self, seed: u64) -> Vec<Sample> {
+    pub fn epoch(&mut self, seed: u64) -> Vec<T> {
         let mut order: Vec<usize> = (0..self.slots.len()).collect();
         let mut rng = Pcg32::new(seed, 0xE0);
         rng.shuffle(&mut order);
-        let out: Vec<Sample> = order.iter().map(|&i| self.slots[i].clone()).collect();
-        self.read_bursts += out.iter().map(Self::bursts_per_sample).sum::<u64>();
+        let out: Vec<T> = order.iter().map(|&i| self.slots[i].clone()).collect();
+        self.read_bursts += out.iter().map(Replayable::bursts).sum::<u64>();
         out
     }
 
     /// One shuffled pass over the memory pre-chunked into training
-    /// minibatches of `batch` samples (the last one may be short), in
+    /// minibatches of `batch` items (the last one may be short), in
     /// the same order [`Self::epoch`] would yield for this seed.
-    /// Charges the same read traffic; each sample is cloned exactly
+    /// Charges the same read traffic; each item is cloned exactly
     /// once (the chunks are split off the epoch's Vec, not re-cloned).
-    pub fn epoch_batches(&mut self, seed: u64, batch: usize) -> Vec<Vec<Sample>> {
+    pub fn epoch_batches(&mut self, seed: u64, batch: usize) -> Vec<Vec<T>> {
         let samples = self.epoch(seed);
         let batch = batch.max(1);
-        let mut out: Vec<Vec<Sample>> = Vec::with_capacity(samples.len().div_ceil(batch));
+        let mut out: Vec<Vec<T>> = Vec::with_capacity(samples.len().div_ceil(batch));
         for s in samples {
             match out.last_mut() {
                 Some(last) if last.len() < batch => last.push(s),
@@ -176,13 +224,20 @@ impl ReplayMemory {
         out
     }
 
-    /// Draw `k` random stored samples (ER's replay draw), charging reads.
-    pub fn draw(&mut self, k: usize) -> Vec<Sample> {
+    /// Draw `k` random stored items (ER's replay draw), charging reads.
+    pub fn draw(&mut self, k: usize) -> Vec<T> {
         let k = k.min(self.slots.len());
         let idx = self.rng.sample_indices(self.slots.len(), k);
-        let out: Vec<Sample> = idx.iter().map(|&i| self.slots[i].clone()).collect();
-        self.read_bursts += out.iter().map(Self::bursts_per_sample).sum::<u64>();
+        let out: Vec<T> = idx.iter().map(|&i| self.slots[i].clone()).collect();
+        self.read_bursts += out.iter().map(Replayable::bursts).sum::<u64>();
         out
+    }
+}
+
+impl ReplayMemory {
+    /// The paper's memory: 6.144 MB = 1000 samples of 32×32 RGB at 16 bit.
+    pub fn paper(kind: SamplerKind, seed: u64) -> ReplayMemory {
+        ReplayMemory::new(kind, 1000, seed)
     }
 }
 
@@ -190,6 +245,7 @@ impl ReplayMemory {
 mod tests {
     use super::*;
     use crate::tensor::{Shape, Tensor};
+    use crate::util::proptest;
 
     fn sample(label: usize, tag: f32) -> Sample {
         Sample { x: Tensor::from_vec(Shape::d3(1, 2, 2), vec![tag; 4]), label }
@@ -237,6 +293,155 @@ mod tests {
         for (&c, &n) in &counts {
             assert_eq!(n, 10, "class {c} has {n} ≠ 10");
         }
+    }
+
+    /// The pre-refactor greedy sampler, kept verbatim as a reference model:
+    /// rebuild `class_counts()` per offer, evict via an O(n) position scan.
+    /// The incremental sampler must make identical decisions and keep the
+    /// slots in an identical order.
+    struct ReferenceGreedy {
+        capacity: usize,
+        slots: Vec<(usize, f32)>,
+    }
+
+    impl ReferenceGreedy {
+        fn offer(&mut self, label: usize, tag: f32) -> bool {
+            let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+            for &(l, _) in &self.slots {
+                *counts.entry(l).or_insert(0) += 1;
+            }
+            let num_classes = counts.len() + usize::from(!counts.contains_key(&label));
+            let quota = self.capacity / num_classes.max(1);
+            let mine = counts.get(&label).copied().unwrap_or(0);
+            if self.slots.len() < self.capacity {
+                self.slots.push((label, tag));
+                return true;
+            }
+            if mine >= quota {
+                return false;
+            }
+            let (&victim, _) = counts.iter().max_by_key(|&(_, n)| *n).unwrap();
+            if let Some(pos) = self.slots.iter().position(|&(l, _)| l == victim) {
+                self.slots.remove(pos);
+            }
+            self.slots.push((label, tag));
+            true
+        }
+    }
+
+    #[test]
+    fn greedy_matches_reference_on_random_streams() {
+        proptest::check("greedy old-vs-new parity", 0xCAFE, 60, |g| {
+            let capacity = g.usize_in(1, 24);
+            let classes = g.usize_in(1, 8);
+            let offers = g.usize_in(1, 160);
+            let mut new = ReplayMemory::new(SamplerKind::GreedyBalanced, capacity, 7);
+            let mut old = ReferenceGreedy { capacity, slots: Vec::new() };
+            for t in 0..offers {
+                let label = g.usize_in(0, classes - 1);
+                let tag = t as f32;
+                let a = new.offer(&sample(label, tag));
+                let b = old.offer(label, tag);
+                assert_eq!(a, b, "admit decision diverged at offer {t}");
+                let got: Vec<(usize, f32)> =
+                    new.samples().iter().map(|s| (s.label, s.x.data()[0])).collect();
+                assert_eq!(got, old.slots, "stored sequence diverged at offer {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn greedy_invariants_under_random_streams() {
+        proptest::check("greedy invariants", 0xBEEF, 60, |g| {
+            let capacity = g.usize_in(1, 32);
+            let classes = g.usize_in(1, 10);
+            let offers = g.usize_in(1, 200);
+            let mut m = ReplayMemory::new(SamplerKind::GreedyBalanced, capacity, 11);
+            let mut last_writes = 0;
+            for t in 0..offers {
+                let label = g.usize_in(0, classes - 1);
+                let before = m.class_counts();
+                let was_full = m.len() == capacity;
+                let stored = m.offer(&sample(label, t as f32));
+                assert!(m.len() <= capacity);
+                let after = m.class_counts();
+                assert_eq!(after.values().sum::<usize>(), m.len());
+                // Balance bounds once the memory is full: an admitted
+                // class never exceeds the (shrinking) per-class quota, a
+                // rejected class was already at it, and rebalancing only
+                // ever shrinks the most-represented class.
+                if was_full {
+                    let nc = before.len() + usize::from(!before.contains_key(&label));
+                    let quota = capacity / nc.max(1);
+                    let mine = before.get(&label).copied().unwrap_or(0);
+                    if stored {
+                        assert!(after[&label] <= quota, "offer {t}: over quota");
+                    } else {
+                        assert!(mine >= quota, "offer {t}: rejected below quota");
+                    }
+                    let max_before = before.values().max().copied().unwrap_or(0);
+                    let max_after = after.values().max().copied().unwrap_or(0);
+                    assert!(max_after <= max_before, "offer {t}: imbalance grew");
+                }
+                // Burst accounting: monotone, charged exactly on store.
+                let expected = if stored { last_writes + 1 } else { last_writes };
+                assert_eq!(m.write_bursts, expected, "write bursts at offer {t}");
+                last_writes = m.write_bursts;
+            }
+        });
+    }
+
+    #[test]
+    fn reservoir_invariants_under_random_streams() {
+        proptest::check("reservoir invariants", 0xF00D, 40, |g| {
+            let capacity = g.usize_in(1, 24);
+            let offers = g.usize_in(1, 200);
+            let mut m = ReplayMemory::new(SamplerKind::Reservoir, capacity, 13);
+            let mut last_writes = 0;
+            for t in 0..offers {
+                let stored = m.offer(&sample(t % 5, t as f32));
+                assert!(m.len() <= capacity);
+                assert_eq!(m.len(), capacity.min(t + 1), "size cap at offer {t}");
+                let expected = if stored { last_writes + 1 } else { last_writes };
+                assert_eq!(m.write_bursts, expected, "write bursts at offer {t}");
+                last_writes = m.write_bursts;
+            }
+        });
+    }
+
+    #[test]
+    fn reservoir_inclusion_is_uniform_across_seeds() {
+        // Algorithm R keeps every stream item with probability
+        // capacity/seen — including the early ones that filled the
+        // reservoir. The old `next_u64() % seen` draw was modulo-biased;
+        // the Lemire draw must keep per-item inclusion flat. 400 seeds,
+        // capacity 10, stream 50 → expected inclusion 400·0.2 = 80,
+        // σ = √(400·0.2·0.8) = 8; bound at 5σ.
+        const SEEDS: u64 = 400;
+        const CAP: usize = 10;
+        const STREAM: usize = 50;
+        let mut included = [0u32; STREAM];
+        for seed in 0..SEEDS {
+            let mut m = ReplayMemory::new(SamplerKind::Reservoir, CAP, seed);
+            for t in 0..STREAM {
+                m.offer(&sample(0, t as f32));
+            }
+            assert_eq!(m.len(), CAP);
+            for s in m.samples() {
+                included[s.x.data()[0] as usize] += 1;
+            }
+        }
+        let expected = SEEDS as f64 * CAP as f64 / STREAM as f64;
+        let sigma = (SEEDS as f64 * 0.2 * 0.8).sqrt();
+        for (i, &n) in included.iter().enumerate() {
+            assert!(
+                (n as f64 - expected).abs() <= 5.0 * sigma,
+                "item {i} included {n} times, expected {expected}±{:.0}",
+                5.0 * sigma
+            );
+        }
+        let total: u32 = included.iter().sum();
+        assert_eq!(total as usize, SEEDS as usize * CAP, "reservoir always holds CAP items");
     }
 
     #[test]

@@ -11,23 +11,30 @@
 //! * [`policy::ExperienceReplay`] — interleaves new samples with reservoir
 //!   replay (no re-init) [21];
 //! * [`policy::NaiveFinetune`] — lower bound: no memory, full forgetting;
-//! * [`policy::JointUpperBound`] — trains on everything seen (oracle).
+//! * [`policy::JointUpperBound`] — trains on everything seen (oracle);
+//! * [`latent::LatentReplay`] — stores Q4.12 *activations* at a cut point
+//!   and trains only the suffix (the memory–latency–accuracy frontier,
+//!   `tinycl replay-bench`).
 //!
 //! Policies are generic over a [`Learner`] so the same algorithm runs on
 //! any backend: the f32 reference, the bit-exact Q4.12 model, the
 //! cycle-accurate device, or the AOT-compiled XLA executable (see
 //! `coordinator`).
 
+pub mod bench;
+pub mod latent;
 pub mod memory;
 pub mod metrics;
 pub mod policy;
 pub mod stream;
 
-pub use memory::{ReplayMemory, SamplerKind};
+pub use latent::{LatentMemory, LatentReplay};
+pub use memory::{ReplayMemory, ReplayStore, Replayable, SamplerKind};
 pub use metrics::{AccuracyMatrix, ClReport};
 pub use policy::EVAL_BATCH;
 pub use policy::{
-    ClPolicy, ExperienceReplay, Gdumb, JointUpperBound, NaiveFinetune, PolicyKind, RunConfig,
+    epoch_seed, ClPolicy, ExperienceReplay, Gdumb, JointUpperBound, NaiveFinetune, PolicyKind,
+    ReplayBudget, RunConfig,
 };
 pub use stream::{Task, TaskStream};
 
@@ -94,6 +101,46 @@ pub trait Learner {
     /// scratch for every query). Deterministic in `seed`.
     fn reinit(&mut self, seed: u64);
 
+    /// Deepest cut point the backend supports for latent replay, or
+    /// `None` when it has no cut datapath (the cycle-accurate device
+    /// and the AOT XLA executable ship fixed full-network programs).
+    /// Policies that need activations must check this before calling
+    /// the methods below — like `clone_replica`, it is a runtime
+    /// capability so `--policy latent-replay` can refuse an unsupported
+    /// backend with an actionable error instead of a panic mid-run.
+    fn max_latent_cut(&self) -> Option<usize> {
+        None
+    }
+
+    /// Forward the frozen prefix of the network to `cut` for a batch of
+    /// inputs (cut 0 returns the inputs unchanged). Only callable when
+    /// [`Learner::max_latent_cut`] admits `cut`.
+    fn forward_to_cut_batch(&mut self, _xs: &[&Tensor<f32>], _cut: usize) -> Vec<Tensor<f32>> {
+        panic!("backend does not support latent replay (max_latent_cut() is None)")
+    }
+
+    /// One suffix-only training minibatch from stored activations at
+    /// `cut`. Returns the mean loss. Only callable when
+    /// [`Learner::max_latent_cut`] admits `cut`.
+    fn train_latent_batch(
+        &mut self,
+        _acts: &[&Tensor<f32>],
+        _labels: &[usize],
+        _cut: usize,
+        _active_classes: usize,
+        _lr: f32,
+    ) -> f32 {
+        panic!("backend does not support latent replay (max_latent_cut() is None)")
+    }
+
+    /// Re-initialize only the trainable suffix from `cut`, leaving the
+    /// frozen prefix untouched; at cut 0 this must match
+    /// [`Learner::reinit`]. Only callable when
+    /// [`Learner::max_latent_cut`] admits `cut`.
+    fn reinit_suffix(&mut self, _cut: usize, _seed: u64) {
+        panic!("backend does not support latent replay (max_latent_cut() is None)")
+    }
+
     /// A bit-identical copy of this learner, used by the serving
     /// subsystem to populate a replica pool (`serve::Server` with
     /// `replicas > 1`) and to re-broadcast weights after each
@@ -143,6 +190,29 @@ impl Learner for crate::nn::Model {
 
     fn reinit(&mut self, seed: u64) {
         crate::nn::Model::reinit(self, seed);
+    }
+
+    fn max_latent_cut(&self) -> Option<usize> {
+        Some(crate::nn::MAX_CUT)
+    }
+
+    fn forward_to_cut_batch(&mut self, xs: &[&Tensor<f32>], cut: usize) -> Vec<Tensor<f32>> {
+        crate::nn::Model::forward_to_cut_batch(self, xs, cut)
+    }
+
+    fn train_latent_batch(
+        &mut self,
+        acts: &[&Tensor<f32>],
+        labels: &[usize],
+        cut: usize,
+        active_classes: usize,
+        lr: f32,
+    ) -> f32 {
+        crate::nn::Model::train_batch_from(self, cut, acts, labels, active_classes, lr).loss
+    }
+
+    fn reinit_suffix(&mut self, cut: usize, seed: u64) {
+        crate::nn::Model::reinit_suffix(self, cut, seed);
     }
 
     fn clone_replica(&self) -> Option<Self> {

@@ -53,6 +53,42 @@ fn train_minibatch(
     samples.len() as u64
 }
 
+/// Epoch shuffle seed derived from `(run seed, task id, epoch)`. All the
+/// epoch-shuffling policies mix all three so no two (task, epoch) pairs
+/// replay the same permutation-seed sequence (the old `seed + epoch`
+/// scheme repeated identically across tasks).
+pub fn epoch_seed(seed: u64, task: usize, epoch: usize) -> u64 {
+    seed ^ (task as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (epoch as u64).wrapping_mul(0xD134_2543_DE82_EF95)
+}
+
+/// A replay-memory budget, carried in both units so raw-sample policies
+/// (slot-counted) and latent replay (byte-counted) stay comparable at an
+/// equal byte budget.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayBudget {
+    /// Whole raw samples that fit the budget (GDumb/ER capacity).
+    pub slots: usize,
+    /// The budget in bytes (latent replay divides this by its own
+    /// per-activation footprint, which depends on the cut).
+    pub bytes: u64,
+}
+
+impl ReplayBudget {
+    /// From a slot count (the classic `--memory` knob); `sample_bytes` is
+    /// the raw per-sample footprint (16-bit CHW values).
+    pub fn from_slots(slots: usize, sample_bytes: u64) -> ReplayBudget {
+        ReplayBudget { slots, bytes: slots as u64 * sample_bytes }
+    }
+
+    /// From a byte budget (`--memory-bytes`): raw-sample policies get as
+    /// many whole samples as fit (at least one).
+    pub fn from_bytes(bytes: u64, sample_bytes: u64) -> ReplayBudget {
+        assert!(sample_bytes > 0);
+        ReplayBudget { slots: ((bytes / sample_bytes) as usize).max(1), bytes }
+    }
+}
+
 /// Which policy to instantiate (CLI/config surface).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PolicyKind {
@@ -60,11 +96,17 @@ pub enum PolicyKind {
     Er,
     Naive,
     Joint,
+    LatentReplay,
 }
 
 impl PolicyKind {
-    pub const ALL: [PolicyKind; 4] =
-        [PolicyKind::Gdumb, PolicyKind::Er, PolicyKind::Naive, PolicyKind::Joint];
+    pub const ALL: [PolicyKind; 5] = [
+        PolicyKind::Gdumb,
+        PolicyKind::Er,
+        PolicyKind::Naive,
+        PolicyKind::Joint,
+        PolicyKind::LatentReplay,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -72,6 +114,7 @@ impl PolicyKind {
             PolicyKind::Er => "er",
             PolicyKind::Naive => "naive",
             PolicyKind::Joint => "joint",
+            PolicyKind::LatentReplay => "latent-replay",
         }
     }
 
@@ -79,12 +122,15 @@ impl PolicyKind {
         PolicyKind::ALL.into_iter().find(|p| p.name() == s)
     }
 
-    pub fn build(self, memory_budget: usize, seed: u64) -> Box<dyn ClPolicy> {
+    pub fn build(self, budget: ReplayBudget, replay_cut: usize, seed: u64) -> Box<dyn ClPolicy> {
         match self {
-            PolicyKind::Gdumb => Box::new(Gdumb::new(memory_budget, seed)),
-            PolicyKind::Er => Box::new(ExperienceReplay::new(memory_budget, seed)),
+            PolicyKind::Gdumb => Box::new(Gdumb::new(budget.slots, seed)),
+            PolicyKind::Er => Box::new(ExperienceReplay::new(budget.slots, seed)),
             PolicyKind::Naive => Box::new(NaiveFinetune::new()),
             PolicyKind::Joint => Box::new(JointUpperBound::new()),
+            PolicyKind::LatentReplay => {
+                Box::new(super::latent::LatentReplay::new(budget.bytes, replay_cut, seed))
+            }
         }
     }
 }
@@ -122,7 +168,10 @@ pub struct Gdumb {
 
 impl Gdumb {
     pub fn new(budget: usize, seed: u64) -> Gdumb {
-        Gdumb { memory: ReplayMemory::new(SamplerKind::GreedyBalanced, budget, seed), reinit_counter: 0 }
+        Gdumb {
+            memory: ReplayMemory::new(SamplerKind::GreedyBalanced, budget, seed),
+            reinit_counter: 0,
+        }
     }
 }
 
@@ -148,7 +197,7 @@ impl ClPolicy for Gdumb {
         learner.reinit(cfg.seed ^ (self.reinit_counter << 32));
         let mut steps = 0;
         for epoch in 0..cfg.epochs {
-            let epoch_seed = cfg.seed.wrapping_add(epoch as u64);
+            let epoch_seed = epoch_seed(cfg.seed, task.id, epoch);
             for chunk in self.memory.epoch_batches(epoch_seed, cfg.batch) {
                 let refs: Vec<&Sample> = chunk.iter().collect();
                 steps += train_minibatch(learner, &refs, active_classes, cfg.lr);
@@ -283,9 +332,12 @@ impl ClPolicy for JointUpperBound {
         self.reinit_counter += 1;
         learner.reinit(cfg.seed ^ (self.reinit_counter << 24));
         let mut order: Vec<usize> = (0..self.seen.len()).collect();
-        let mut rng = crate::util::rng::Pcg32::new(cfg.seed, 0x10 + task.id as u64);
         let mut steps = 0;
-        for _ in 0..cfg.epochs {
+        for epoch in 0..cfg.epochs {
+            // Same (seed, task, epoch) derivation as the replay policies'
+            // epoch shuffles, on Joint's own stream id.
+            let mut rng =
+                crate::util::rng::Pcg32::new(epoch_seed(cfg.seed, task.id, epoch), 0x10);
             rng.shuffle(&mut order);
             for idx_chunk in order.chunks(cfg.batch.max(1)) {
                 let refs: Vec<&Sample> = idx_chunk.iter().map(|&i| &self.seen[i]).collect();
@@ -490,6 +542,21 @@ mod tests {
         );
         let expect: u64 = (1..=5).map(|t| (cfg.epochs * 12 * t) as u64).sum();
         assert_eq!(report.train_steps, expect, "batching changed the step accounting");
+    }
+
+    #[test]
+    fn epoch_seeds_distinct_across_tasks_and_epochs() {
+        // The pre-fix scheme (`seed + epoch`) collided across tasks; the
+        // mixed derivation must give every (task, epoch) its own seed.
+        let mut seen = std::collections::BTreeSet::new();
+        for task in 0..16 {
+            for epoch in 0..32 {
+                assert!(
+                    seen.insert(epoch_seed(17, task, epoch)),
+                    "epoch seed collision at task {task}, epoch {epoch}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::qnn::{QModel, QnnEngine};
 #[cfg(feature = "xla")]
 use crate::runtime::{ArtifactSet, XlaModel, XlaRuntime};
 use crate::sim::{RunStats, SimConfig, TinyClDevice};
-use crate::tensor::{quantize_tensor, Tensor};
+use crate::tensor::{dequantize_tensor, quantize_tensor, Tensor};
 #[cfg(feature = "xla")]
 use anyhow::Context;
 use anyhow::Result;
@@ -325,11 +325,74 @@ impl Learner for Backend {
         }
     }
 
+    fn max_latent_cut(&self) -> Option<usize> {
+        match self {
+            // The host backends expose the full cut-point datapath; the
+            // cycle-accurate device and the AOT XLA executable run fixed
+            // full-network programs, so latent replay refuses them.
+            Backend::F32(_) | Backend::Qnn { .. } => Some(crate::nn::MAX_CUT),
+            _ => None,
+        }
+    }
+
+    fn forward_to_cut_batch(&mut self, xs: &[&Tensor<f32>], cut: usize) -> Vec<Tensor<f32>> {
+        match self {
+            Backend::F32(m) => m.forward_to_cut_batch(xs, cut),
+            Backend::Qnn { model, .. } => {
+                // Quantize → integer prefix → dequantize. The stored
+                // activation is exactly what the Q4.12 datapath produced
+                // (dequantize is exact on the Fx grid), so re-quantizing
+                // at training time is lossless.
+                let xqs: Vec<Tensor<Fx>> = xs.iter().map(|x| quantize_tensor(x)).collect();
+                let refs: Vec<&Tensor<Fx>> = xqs.iter().collect();
+                model
+                    .forward_to_cut_batch(&refs, cut)
+                    .iter()
+                    .map(dequantize_tensor)
+                    .collect()
+            }
+            _ => panic!("backend does not support latent replay (max_latent_cut() is None)"),
+        }
+    }
+
+    fn train_latent_batch(
+        &mut self,
+        acts: &[&Tensor<f32>],
+        labels: &[usize],
+        cut: usize,
+        active_classes: usize,
+        lr: f32,
+    ) -> f32 {
+        match self {
+            Backend::F32(m) => m.train_batch_from(cut, acts, labels, active_classes, lr).loss,
+            Backend::Qnn { model, .. } => {
+                let aqs: Vec<Tensor<Fx>> = acts.iter().map(|a| quantize_tensor(a)).collect();
+                let refs: Vec<&Tensor<Fx>> = aqs.iter().collect();
+                model.train_batch_from(cut, &refs, labels, active_classes, Fx::from_f32(lr)).0
+            }
+            _ => panic!("backend does not support latent replay (max_latent_cut() is None)"),
+        }
+    }
+
+    fn reinit_suffix(&mut self, cut: usize, seed: u64) {
+        match self {
+            Backend::F32(m) => m.reinit_suffix(cut, seed),
+            Backend::Qnn { model, .. } => model.reinit_suffix(cut, seed),
+            _ => panic!("backend does not support latent replay (max_latent_cut() is None)"),
+        }
+    }
+
     fn reinit(&mut self, seed: u64) {
         match self {
             Backend::F32(m) => m.reinit(seed),
             Backend::Qnn { model, config } => {
-                *model = QModel::from_model(&Model::new(config.clone(), seed));
+                // Fresh params, same engine/threads knobs (both are
+                // bit-invisible; dropping them silently de-threaded
+                // every GDumb re-init on the fast engine).
+                let (engine, threads) = (model.engine, model.threads);
+                *model = QModel::from_model(&Model::new(config.clone(), seed))
+                    .with_engine(engine)
+                    .with_threads(threads);
             }
             Backend::Sim { dev, .. } => {
                 let float = Model::new(dev.model_cfg.clone(), seed);
@@ -584,6 +647,77 @@ mod tests {
         s.reset_sim_stats();
         let (train, _) = s.sim_stats().unwrap();
         assert_eq!(train.cycles(), 0);
+    }
+
+    #[test]
+    fn qnn_reinit_keeps_engine_and_threads() {
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let mut q = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        q.set_qnn_engine(QnnEngine::Naive);
+        q.set_threads(3);
+        q.reinit(6);
+        assert_eq!(q.qnn_engine(), Some(QnnEngine::Naive), "reinit dropped the engine");
+        if let Backend::Qnn { model, .. } = &q {
+            assert_eq!(model.threads, 3, "reinit dropped the thread budget");
+        }
+    }
+
+    #[test]
+    fn latent_cut_capability_matches_backend() {
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        for kind in [BackendKind::F32, BackendKind::F32Fast, BackendKind::Qnn] {
+            let b = Backend::create(kind, &cfg, &sim_cfg, "artifacts", 1).unwrap();
+            assert_eq!(b.max_latent_cut(), Some(crate::nn::MAX_CUT), "{kind:?}");
+        }
+        let s = Backend::create(BackendKind::Sim, &cfg, &sim_cfg, "artifacts", 1).unwrap();
+        assert_eq!(s.max_latent_cut(), None, "sim has no cut datapath");
+    }
+
+    #[test]
+    fn qnn_latent_cut0_matches_train_batch_bitwise() {
+        // Through the Backend (quantize → Fx grid → dequantize round
+        // trip included), cut-0 latent training is the raw-replay path.
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let mut a = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        let mut b = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        let xs: Vec<Tensor<f32>> = (0..3u64).map(|i| rand_image(40 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let labels = [0usize, 2, 1];
+        let acts = a.forward_to_cut_batch(&refs, 0);
+        let act_refs: Vec<&Tensor<f32>> = acts.iter().collect();
+        let la = a.train_latent_batch(&act_refs, &labels, 0, 4, 0.125);
+        let lb = b.train_batch(&refs, &labels, 4, 0.125);
+        assert_eq!(la, lb, "cut-0 latent loss vs raw batch loss");
+        let xe = rand_image(90, &cfg);
+        assert_eq!(a.predict(&xe, 4), b.predict(&xe, 4), "diverged weights");
+    }
+
+    #[test]
+    fn qnn_latent_suffix_agrees_across_engines() {
+        let cfg = tiny_cfg();
+        let sim_cfg = SimConfig::paper();
+        let mut naive = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        naive.set_qnn_engine(QnnEngine::Naive);
+        let mut fast = Backend::create(BackendKind::Qnn, &cfg, &sim_cfg, "artifacts", 5).unwrap();
+        fast.set_threads(3);
+        let xs: Vec<Tensor<f32>> = (0..3u64).map(|i| rand_image(60 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let labels = [1usize, 3, 2];
+        for cut in 1..=crate::nn::MAX_CUT {
+            let an = naive.forward_to_cut_batch(&refs, cut);
+            let af = fast.forward_to_cut_batch(&refs, cut);
+            for (n, f) in an.iter().zip(&af) {
+                assert_eq!(n.data(), f.data(), "cut {cut} activations");
+            }
+            let an_refs: Vec<&Tensor<f32>> = an.iter().collect();
+            let af_refs: Vec<&Tensor<f32>> = af.iter().collect();
+            let ln = naive.train_latent_batch(&an_refs, &labels, cut, 4, 0.125);
+            let lf = fast.train_latent_batch(&af_refs, &labels, cut, 4, 0.125);
+            assert_eq!(ln, lf, "cut {cut} suffix loss");
+        }
     }
 
     #[test]

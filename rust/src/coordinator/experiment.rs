@@ -1,7 +1,7 @@
 //! Experiment driver: one CL run end-to-end, with device accounting.
 
 use super::backend::{Backend, BackendKind};
-use crate::cl::{self, PolicyKind, RunConfig, TaskStream};
+use crate::cl::{self, Learner, PolicyKind, RunConfig, TaskStream};
 use crate::qnn::QnnEngine;
 use crate::data::SyntheticCifar;
 use crate::hw::{CostModel, EnergyModel};
@@ -33,8 +33,17 @@ pub struct ExperimentConfig {
     /// Q4.12 compute engine for the `qnn` backend (`fast` = integer
     /// im2col+GEMM, `naive` = the per-element oracle — bit-identical).
     pub qnn_engine: QnnEngine,
-    /// Replay-memory budget in samples (paper: 1000).
+    /// Replay-memory budget in samples (paper: 1000). Superseded by
+    /// `memory_bytes` when that is set.
     pub memory_budget: usize,
+    /// Replay-memory budget in *bytes* (`--memory-bytes`; the paper's
+    /// memory is 6 144 000). Cuts change bytes-per-slot, so byte budgets
+    /// are the unit that makes policies comparable across cuts.
+    pub memory_bytes: Option<u64>,
+    /// Latent-replay cut point (`--replay-cut`): 0 stores raw inputs
+    /// (plain GDumb), 1 stores post-conv1 activations, 2 post-conv2
+    /// (dense-only training). Only `--policy latent-replay` reads it.
+    pub replay_cut: usize,
     pub train_per_class: usize,
     pub test_per_class: usize,
     pub noise: f32,
@@ -56,6 +65,8 @@ impl Default for ExperimentConfig {
             threads: 1,
             qnn_engine: QnnEngine::Fast,
             memory_budget: 1000,
+            memory_bytes: None,
+            replay_cut: 0,
             train_per_class: 100,
             test_per_class: 20,
             noise: 0.35,
@@ -89,7 +100,9 @@ impl ExperimentConfig {
         let policy = {
             let s = args.str_or("policy", d.policy.name());
             PolicyKind::parse(&s)
-                .ok_or_else(|| anyhow::anyhow!("unknown policy '{s}' (gdumb|er|naive|joint)"))?
+                .ok_or_else(|| {
+                    anyhow::anyhow!("unknown policy '{s}' (gdumb|er|naive|joint|latent-replay)")
+                })?
         };
         let model = ModelConfig {
             in_channels: 3,
@@ -116,6 +129,8 @@ impl ExperimentConfig {
             threads,
             qnn_engine,
             memory_budget: args.usize_or("memory", d.memory_budget),
+            memory_bytes: args.get("memory-bytes").map(|_| args.u64_or("memory-bytes", 0)),
+            replay_cut: args.usize_or("replay-cut", d.replay_cut),
             train_per_class: args.usize_or("per-class", d.train_per_class),
             test_per_class: args.usize_or("test-per-class", d.test_per_class),
             noise: args.f32_or("noise", d.noise),
@@ -171,9 +186,18 @@ impl fmt::Display for ExperimentResult {
         } else {
             String::new()
         };
+        let memory = match self.config.memory_bytes {
+            Some(bytes) => format!("{bytes}B"),
+            None => format!("{}", self.config.memory_budget),
+        };
+        let cut = if self.config.policy == PolicyKind::LatentReplay {
+            format!(" cut={}", self.config.replay_cut)
+        } else {
+            String::new()
+        };
         writeln!(
             f,
-            "backend={} policy={} tasks={} epochs={} lr={} batch={} threads={} memory={}{qnn}",
+            "backend={} policy={} tasks={} epochs={} lr={} batch={} threads={} memory={memory}{cut}{qnn}",
             self.config.backend.name(),
             self.config.policy.name(),
             self.config.num_tasks,
@@ -181,7 +205,6 @@ impl fmt::Display for ExperimentResult {
             self.config.lr,
             self.config.batch,
             self.config.threads,
-            self.config.memory_budget
         )?;
         write!(f, "{}", self.report)?;
         writeln!(f, "wall time: {:.2} s", self.wall_secs)?;
@@ -232,7 +255,25 @@ impl Experiment {
         let stream = TaskStream::class_incremental(&train, cfg.num_tasks, cfg.seed);
 
         let mut backend = self.backend()?;
-        let mut policy = cfg.policy.build(cfg.memory_budget, cfg.seed);
+        if cfg.policy == PolicyKind::LatentReplay {
+            let max = backend.max_latent_cut().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "backend '{}' has no cut-point datapath — latent replay needs \
+                     f32, f32-fast or qnn",
+                    cfg.backend.name()
+                )
+            })?;
+            if cfg.replay_cut > max {
+                anyhow::bail!("--replay-cut {} out of range (max {max})", cfg.replay_cut);
+            }
+        }
+        let sample_bytes = cfg.model.sample_bytes();
+        let budget = match cfg.memory_bytes {
+            Some(0) => anyhow::bail!("--memory-bytes must be a positive byte count"),
+            Some(bytes) => cl::ReplayBudget::from_bytes(bytes, sample_bytes),
+            None => cl::ReplayBudget::from_slots(cfg.memory_budget, sample_bytes),
+        };
+        let mut policy = cfg.policy.build(budget, cfg.replay_cut, cfg.seed);
         let run_cfg =
             RunConfig { epochs: cfg.epochs, lr: cfg.lr, seed: cfg.seed, batch: cfg.batch };
 
@@ -369,6 +410,60 @@ mod tests {
         assert!(r.report.train_steps > 0);
         let s = format!("{r}");
         assert!(s.contains("qnn-engine=fast"), "missing engine in report: {s}");
+    }
+
+    #[test]
+    fn from_args_parses_latent_flags() {
+        let args = Args::parse(
+            ["--policy", "latent-replay", "--replay-cut", "2", "--memory-bytes", "6144000"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(c.policy, PolicyKind::LatentReplay);
+        assert_eq!(c.replay_cut, 2);
+        assert_eq!(c.memory_bytes, Some(6_144_000));
+        let args = Args::parse(std::iter::empty::<String>());
+        let c = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(c.replay_cut, 0);
+        assert_eq!(c.memory_bytes, None, "slot budget remains the default unit");
+    }
+
+    #[test]
+    fn latent_experiment_completes_on_each_cut() {
+        for backend in [BackendKind::F32Fast, BackendKind::Qnn] {
+            for cut in 0..=crate::nn::MAX_CUT {
+                let mut cfg = quick_config(backend);
+                cfg.policy = PolicyKind::LatentReplay;
+                cfg.replay_cut = cut;
+                cfg.memory_bytes = Some(4096);
+                cfg.batch = 4;
+                let r = Experiment::new(cfg).run().unwrap();
+                assert_eq!(r.report.matrix.rows_filled(), 2, "{backend:?} cut {cut}");
+                assert!(r.report.train_steps > 0);
+                let s = format!("{r}");
+                assert!(s.contains(&format!("cut={cut}")), "missing cut in: {s}");
+                assert!(s.contains("memory=4096B"), "missing byte budget in: {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn latent_refuses_backends_without_cut_datapath() {
+        let mut cfg = quick_config(BackendKind::Sim);
+        cfg.policy = PolicyKind::LatentReplay;
+        let err = Experiment::new(cfg).run().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no cut-point datapath"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn latent_rejects_out_of_range_cut() {
+        let mut cfg = quick_config(BackendKind::F32);
+        cfg.policy = PolicyKind::LatentReplay;
+        cfg.replay_cut = crate::nn::MAX_CUT + 1;
+        let err = Experiment::new(cfg).run().unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"));
     }
 
     #[test]

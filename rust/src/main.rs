@@ -11,6 +11,9 @@
 //!                 and open-loop load (dynamic batching, priority lanes,
 //!                 admission control, coordinated-omission-corrected
 //!                 latency; emits BENCH_serve.json)
+//! * `replay-bench` — latent-replay frontier: cut × byte-budget sweep of
+//!                 accuracy and train time vs gdumb/er at equal byte
+//!                 budgets (emits BENCH_replay.json)
 //! * `sweep`     — design-space sweep over lanes × taps (ablation A2)
 
 use anyhow::{bail, Result};
@@ -41,6 +44,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "report-hw" => cmd_report_hw(args),
         "speedup" => cmd_speedup(args),
         "serve-bench" => tinycl::serve::bench::run(args),
+        "replay-bench" => tinycl::cl::bench::run(args),
         "sweep" => cmd_sweep(args),
         "help" | "--help" => {
             print!("{HELP}");
@@ -57,9 +61,15 @@ USAGE: tinycl <SUBCOMMAND> [flags]
 
 SUBCOMMANDS
   train      run a continual-learning experiment
-             --backend f32|f32-fast|qnn|sim|xla   --policy gdumb|er|naive|joint
+             --backend f32|f32-fast|qnn|sim|xla
+             --policy gdumb|er|naive|joint|latent-replay
              (the `xla` backend needs a build with `--features xla`)
              --tasks N --epochs N --lr F --memory N --per-class N
+             --memory-bytes N (replay budget in bytes instead of slots;
+             the paper's memory is 6144000)
+             --replay-cut 0|1|2 (latent-replay only: freeze the prefix
+             and store activations at the cut; 0 = raw inputs = gdumb,
+             1 = post-conv1, 2 = post-conv2, dense-only training)
              --batch N (minibatch size; float backends run one batched
              GEMM set per minibatch, others loop per sample)
              --threads N (GEMM worker threads, 0 = auto; results are
@@ -95,6 +105,18 @@ SUBCOMMANDS
              asserts batching ≥ 2× and 2-replica f32-fast ≥ 1.5× at the
              paper geometry, and parity with per-sample predict on every
              rung; writes BENCH_serve.json
+  replay-bench  latent-replay memory–latency–accuracy frontier: sweeps
+             replay cut × byte budget and runs gdumb/er at the same
+             byte budgets for comparison
+             --backend f32-fast|f32|qnn (default f32-fast)
+             --budgets-kb LIST (byte budgets in kB, default
+             6144,3072,1536 — the paper's memory and halvings)
+             --tasks N --epochs N --batch N --per-class N
+             --threads N --qnn-engine naive|fast --seed N
+             --smoke (tiny geometry, CI-safe; ratio asserts relaxed)
+             asserts an interior cut trains ≥ 2× faster than gdumb at
+             the paper geometry's largest budget; writes
+             BENCH_replay.json
   sweep      design-space sweep over --lanes-list and --taps-list
   help       this text
 ";

@@ -649,6 +649,21 @@ pub fn rows_to_packed<T: Copy + Default>(
     packed_to_rows(rows, batch, channels, n)
 }
 
+/// Flatten per-sample CHW tensors straight into the sample-major row
+/// layout `(B, C·N)` — the dense layer's input when the activations are
+/// already split per sample (latent replay's dense-only cut feeds stored
+/// a2 activations here without a pack/unpack round trip).
+pub fn rows_from_samples<T: Copy>(xs: &[&Tensor<T>]) -> Vec<T> {
+    assert!(!xs.is_empty(), "empty batch");
+    let shape = xs[0].shape();
+    let mut out = Vec::with_capacity(xs.len() * shape.numel());
+    for x in xs {
+        assert_eq!(x.shape(), shape, "batch samples must share a shape");
+        out.extend_from_slice(x.data());
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -22,4 +22,6 @@ pub mod model;
 pub mod relu;
 pub mod sgd;
 
-pub use model::{BatchTrainOutput, Engine, Gradients, Model, ModelConfig, Params, TrainOutput};
+pub use model::{
+    BatchTrainOutput, Engine, Gradients, Model, ModelConfig, Params, TrainOutput, MAX_CUT,
+};

@@ -23,6 +23,12 @@ pub enum Engine {
     Gemm,
 }
 
+/// Highest supported replay cut point. Cut 0 replays raw inputs through
+/// the full network (the classic policies' regime); cut 1 stores the
+/// post-ReLU conv1 activation and trains conv2 + dense; cut 2 stores the
+/// post-ReLU conv2 activation and trains the dense head only.
+pub const MAX_CUT: usize = 2;
+
 /// Model geometry. Defaults mirror §IV-A: 32×32×3 input, 8 filters per
 /// conv (stride 1, pad 1 — geometry-preserving), 10 classes.
 #[derive(Clone, Debug, PartialEq)]
@@ -70,6 +76,27 @@ impl ModelConfig {
     /// (EXPERIMENTS.md E5). The same product-bus barrel shift fixes it.
     pub fn dense_grad_shift(&self) -> u32 {
         self.dense_in().next_power_of_two().trailing_zeros() / 2
+    }
+
+    /// Activation shape at a replay cut (both convs are geometry-
+    /// preserving, so only the channel count depends on the cut).
+    pub fn cut_shape(&self, cut: usize) -> Shape {
+        assert!(cut <= MAX_CUT, "cut {cut} out of range (max {MAX_CUT})");
+        match cut {
+            0 => Shape::d3(self.in_channels, self.image_size, self.image_size),
+            _ => Shape::d3(self.conv_channels, self.image_size, self.image_size),
+        }
+    }
+
+    /// Stored bytes per raw sample at 16 bit per value — the unit of the
+    /// paper's replay-memory accounting (6.144 MB = 1000 × 32·32·3 × 2 B).
+    pub fn sample_bytes(&self) -> u64 {
+        self.cut_bytes(0)
+    }
+
+    /// Stored bytes per replayed item at `cut` (Q4.12 → 2 B per value).
+    pub fn cut_bytes(&self, cut: usize) -> u64 {
+        self.cut_shape(cut).numel() as u64 * 2
     }
 
     /// Total trainable parameters.
@@ -427,16 +454,8 @@ impl Model {
         let classes = self.config.num_classes;
         let t = self.threads;
         let fwd = self.gemm_forward_batch(xs);
-        let mut dlogits = vec![0.0f32; b * classes];
-        let mut loss_sum = 0.0f32;
-        let mut correct = 0usize;
-        for (bi, &label) in labels.iter().enumerate() {
-            let row = &fwd.logits[bi * classes..(bi + 1) * classes];
-            let (l, dl) = loss::softmax_ce(row, label, active_classes);
-            loss_sum += l;
-            correct += usize::from(loss::predict(row, active_classes) == label);
-            dlogits[bi * classes..(bi + 1) * classes].copy_from_slice(&dl);
-        }
+        let (dlogits, loss_sum, correct) =
+            batch_loss_grads(&fwd.logits, labels, classes, active_classes);
         // Dense layer.
         let d_in = self.config.dense_in();
         let dw = gemm::dense_weight_grad_batch(&dlogits, &fwd.xd, b, d_in, classes, t);
@@ -450,6 +469,242 @@ impl Model {
         let dz1 = relu::backward_vec(&da1, &fwd.z1);
         let dk1 = gemm::conv_kernel_grad_batch(&dz1, &fwd.cols1, self.params.k1.shape(), b * n, t);
         (Gradients { k1: dk1, k2: dk2, w: dw }, loss_sum, correct)
+    }
+
+    // ---- Cut-point datapath (latent replay) -------------------------
+    //
+    // The network splits at a replay cut into a frozen prefix and a
+    // trainable suffix. The prefix runs forward-only (batched, at
+    // admission time); the suffix trains from stored activations with
+    // the same mean-gradient minibatch semantics as `train_batch`. At
+    // cut 0 both entry points delegate to the full-network paths, so
+    // cut-0 latent replay is bit-identical to raw replay by
+    // construction (pinned in the tests below).
+
+    /// Forward the frozen prefix to `cut` for a whole batch. The GEMM
+    /// engine runs one packed GEMM set over the batch; the naive engine
+    /// loops the reference convs. Cut 0 returns the inputs unchanged.
+    pub fn forward_to_cut_batch(&self, xs: &[&Tensor<f32>], cut: usize) -> Vec<Tensor<f32>> {
+        assert!(cut <= MAX_CUT, "cut {cut} out of range (max {MAX_CUT})");
+        assert!(!xs.is_empty(), "empty batch");
+        if cut == 0 {
+            return xs.iter().map(|x| (*x).clone()).collect();
+        }
+        match self.engine {
+            Engine::Naive => xs
+                .iter()
+                .map(|x| {
+                    let a1 = relu::forward(&self.conv_forward(x, &self.params.k1));
+                    if cut == 1 {
+                        a1
+                    } else {
+                        relu::forward(&self.conv_forward(&a1, &self.params.k2))
+                    }
+                })
+                .collect(),
+            Engine::Gemm => {
+                let b = xs.len();
+                let hw = self.config.image_size;
+                let n = hw * hw;
+                let cin = self.config.in_channels;
+                let cc = self.config.conv_channels;
+                let t = self.threads;
+                let packed_input;
+                let x0: &[f32] = if b == 1 {
+                    xs[0].data()
+                } else {
+                    packed_input = gemm::pack_batch(xs);
+                    &packed_input
+                };
+                let (cols1, _, _) = gemm::im2col_batch(x0, b, cin, hw, hw, 3, 3, 1, 1, t);
+                let mut a =
+                    relu::forward_vec(&gemm::conv_forward_batch(&cols1, &self.params.k1, b * n, t));
+                if cut == 2 {
+                    let (cols2, _, _) = gemm::im2col_batch(&a, b, cc, hw, hw, 3, 3, 1, 1, t);
+                    a = relu::forward_vec(&gemm::conv_forward_batch(
+                        &cols2,
+                        &self.params.k2,
+                        b * n,
+                        t,
+                    ));
+                }
+                let rows = if b == 1 { a } else { gemm::packed_to_rows(&a, cc, b, n) };
+                rows.chunks(cc * n)
+                    .map(|r| Tensor::from_vec(Shape::d3(cc, hw, hw), r.to_vec()))
+                    .collect()
+            }
+        }
+    }
+
+    /// One mean-gradient SGD minibatch on the suffix from `cut`, fed
+    /// stored activations. Only the suffix parameters move; at cut 0
+    /// this *is* [`Model::train_batch`].
+    pub fn train_batch_from(
+        &mut self,
+        cut: usize,
+        acts: &[&Tensor<f32>],
+        labels: &[usize],
+        active_classes: usize,
+        lr: f32,
+    ) -> BatchTrainOutput {
+        assert!(cut <= MAX_CUT, "cut {cut} out of range (max {MAX_CUT})");
+        if cut == 0 {
+            return self.train_batch(acts, labels, active_classes, lr);
+        }
+        assert!(!acts.is_empty(), "empty batch");
+        assert_eq!(acts.len(), labels.len(), "batch inputs vs labels");
+        for a in acts {
+            assert_eq!(a.shape(), &self.config.cut_shape(cut), "activation vs cut geometry");
+        }
+        let b = acts.len();
+        let (dk2, mut dw, loss_sum, correct) = if cut == 1 {
+            let (dk2, dw, l, c) = self.suffix_grads_from_a1(acts, labels, active_classes);
+            (Some(dk2), dw, l, c)
+        } else {
+            let (dw, l, c) = self.dense_grads_from_a2(acts, labels, active_classes);
+            (None, dw, l, c)
+        };
+        let scale = 1.0 / b as f32;
+        if let Some(mut dk2) = dk2 {
+            scale_tensor(&mut dk2, scale);
+            sgd::clip_by_norm(&mut dk2, self.config.grad_clip);
+            sgd::step(&mut self.params.k2, &dk2, lr);
+        }
+        scale_tensor(&mut dw, scale);
+        sgd::clip_by_norm(&mut dw, self.config.grad_clip);
+        sgd::step(&mut self.params.w, &dw, lr);
+        BatchTrainOutput { loss: loss_sum / b as f32, correct }
+    }
+
+    /// Cut-1 suffix gradients (conv2 + dense) from stored a1 activations.
+    /// Shares every layer op with the full path, so the suffix step's
+    /// k2/w updates are bit-identical to `train_batch`'s on both engines.
+    fn suffix_grads_from_a1(
+        &self,
+        acts: &[&Tensor<f32>],
+        labels: &[usize],
+        active_classes: usize,
+    ) -> (Tensor<f32>, Tensor<f32>, f32, usize) {
+        match self.engine {
+            Engine::Naive => {
+                let mut sum: Option<(Tensor<f32>, Tensor<f32>)> = None;
+                let mut loss_sum = 0.0f32;
+                let mut correct = 0usize;
+                for (a1, &label) in acts.iter().zip(labels) {
+                    let z2 = self.conv_forward(a1, &self.params.k2);
+                    let a2 = relu::forward(&z2);
+                    let logits = self.dense_forward(a2.data());
+                    let (l, dl) = loss::softmax_ce(&logits, label, active_classes);
+                    loss_sum += l;
+                    correct += usize::from(loss::predict(&logits, active_classes) == label);
+                    let dw = self.dense_weight_grad(&dl, a2.data());
+                    let da2 = Tensor::from_vec(a2.shape().clone(), self.dense_input_grad(&dl));
+                    let dz2 = relu::backward(&da2, &z2);
+                    let dk2 = self.conv_kernel_grad(&dz2, a1, self.params.k2.shape());
+                    sum = Some(match sum {
+                        None => (dk2, dw),
+                        Some((mut sk2, mut sw)) => {
+                            add_tensor(&mut sk2, &dk2);
+                            add_tensor(&mut sw, &dw);
+                            (sk2, sw)
+                        }
+                    });
+                }
+                let (dk2, dw) = sum.expect("non-empty batch");
+                (dk2, dw, loss_sum, correct)
+            }
+            Engine::Gemm => {
+                let b = acts.len();
+                let hw = self.config.image_size;
+                let n = hw * hw;
+                let cc = self.config.conv_channels;
+                let classes = self.config.num_classes;
+                let d_in = self.config.dense_in();
+                let t = self.threads;
+                let packed_acts;
+                let a1: &[f32] = if b == 1 {
+                    acts[0].data()
+                } else {
+                    packed_acts = gemm::pack_batch(acts);
+                    &packed_acts
+                };
+                let (cols2, _, _) = gemm::im2col_batch(a1, b, cc, hw, hw, 3, 3, 1, 1, t);
+                let z2 = gemm::conv_forward_batch(&cols2, &self.params.k2, b * n, t);
+                let a2 = relu::forward_vec(&z2);
+                let xd = if b == 1 { a2 } else { gemm::packed_to_rows(&a2, cc, b, n) };
+                let logits = gemm::dense_forward_batch(&xd, &self.params.w, b, t);
+                let (dlogits, loss_sum, correct) =
+                    batch_loss_grads(&logits, labels, classes, active_classes);
+                let dw = gemm::dense_weight_grad_batch(&dlogits, &xd, b, d_in, classes, t);
+                let da2_rows = gemm::dense_input_grad_batch(&dlogits, &self.params.w, b, t);
+                let da2 = if b == 1 { da2_rows } else { gemm::rows_to_packed(&da2_rows, cc, b, n) };
+                let dz2 = relu::backward_vec(&da2, &z2);
+                let dk2 =
+                    gemm::conv_kernel_grad_batch(&dz2, &cols2, self.params.k2.shape(), b * n, t);
+                (dk2, dw, loss_sum, correct)
+            }
+        }
+    }
+
+    /// Cut-2 gradients (dense head only) from stored a2 activations.
+    fn dense_grads_from_a2(
+        &self,
+        acts: &[&Tensor<f32>],
+        labels: &[usize],
+        active_classes: usize,
+    ) -> (Tensor<f32>, f32, usize) {
+        match self.engine {
+            Engine::Naive => {
+                let mut sum: Option<Tensor<f32>> = None;
+                let mut loss_sum = 0.0f32;
+                let mut correct = 0usize;
+                for (a2, &label) in acts.iter().zip(labels) {
+                    let logits = self.dense_forward(a2.data());
+                    let (l, dl) = loss::softmax_ce(&logits, label, active_classes);
+                    loss_sum += l;
+                    correct += usize::from(loss::predict(&logits, active_classes) == label);
+                    let dw = self.dense_weight_grad(&dl, a2.data());
+                    sum = Some(match sum {
+                        None => dw,
+                        Some(mut s) => {
+                            add_tensor(&mut s, &dw);
+                            s
+                        }
+                    });
+                }
+                (sum.expect("non-empty batch"), loss_sum, correct)
+            }
+            Engine::Gemm => {
+                let b = acts.len();
+                let classes = self.config.num_classes;
+                let d_in = self.config.dense_in();
+                let t = self.threads;
+                let xd = gemm::rows_from_samples(acts);
+                let logits = gemm::dense_forward_batch(&xd, &self.params.w, b, t);
+                let (dlogits, loss_sum, correct) =
+                    batch_loss_grads(&logits, labels, classes, active_classes);
+                let dw = gemm::dense_weight_grad_batch(&dlogits, &xd, b, d_in, classes, t);
+                (dw, loss_sum, correct)
+            }
+        }
+    }
+
+    /// Re-initialize only the parameters at and after `cut` (latent
+    /// replay's "dumb" suffix learner), deterministic in `seed` and
+    /// leaving the frozen prefix untouched. `reinit_suffix(0, s)` is
+    /// bit-identical to [`Model::reinit`]`(s)`: the fresh draw fills
+    /// k1, k2, w from one rng stream in that order, so copying a prefix
+    /// of the tensors never perturbs the rest.
+    pub fn reinit_suffix(&mut self, cut: usize, seed: u64) {
+        assert!(cut <= MAX_CUT, "cut {cut} out of range (max {MAX_CUT})");
+        let fresh = Model::new(self.config.clone(), seed);
+        if cut == 0 {
+            self.params.k1 = fresh.params.k1;
+        }
+        if cut <= 1 {
+            self.params.k2 = fresh.params.k2;
+        }
+        self.params.w = fresh.params.w;
     }
 
     /// Apply pre-computed gradients.
@@ -470,6 +725,26 @@ fn scale_tensor(t: &mut Tensor<f32>, k: f32) {
     for v in t.data_mut() {
         *v *= k;
     }
+}
+
+/// Per-row softmax-CE losses and gradients over sample-major logits.
+fn batch_loss_grads(
+    logits: &[f32],
+    labels: &[usize],
+    classes: usize,
+    active_classes: usize,
+) -> (Vec<f32>, f32, usize) {
+    let mut dlogits = vec![0.0f32; labels.len() * classes];
+    let mut loss_sum = 0.0f32;
+    let mut correct = 0usize;
+    for (bi, &label) in labels.iter().enumerate() {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let (l, dl) = loss::softmax_ce(row, label, active_classes);
+        loss_sum += l;
+        correct += usize::from(loss::predict(row, active_classes) == label);
+        dlogits[bi * classes..(bi + 1) * classes].copy_from_slice(&dl);
+    }
+    (dlogits, loss_sum, correct)
 }
 
 #[cfg(test)]
@@ -658,5 +933,143 @@ mod tests {
         let (_, dl) = super::loss::softmax_ce(&cache.logits, 0, 4);
         let _ = m.backward(&cache, &dl);
         assert_eq!(m.params.w.data(), &before[..]);
+    }
+
+    #[test]
+    fn cut_geometry_accounting() {
+        let cfg = ModelConfig::default();
+        // Paper memory unit: one raw 32×32×3 sample at 16 bit = 6144 B.
+        assert_eq!(cfg.sample_bytes(), 6144);
+        assert_eq!(cfg.cut_shape(0).numel(), 3 * 32 * 32);
+        // Post-conv activations: 8 channels, geometry preserved.
+        assert_eq!(cfg.cut_bytes(1), 8 * 32 * 32 * 2);
+        assert_eq!(cfg.cut_bytes(2), 8 * 32 * 32 * 2);
+    }
+
+    #[test]
+    fn forward_to_cut_matches_full_forward_prefix() {
+        let cfg = tiny_config();
+        let xs: Vec<Tensor<f32>> = (0..3).map(|i| rand_image(60 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        for engine in [Engine::Naive, Engine::Gemm] {
+            let m = Model::new(cfg.clone(), 14).with_engine(engine).with_threads(2);
+            // Cut 0 is the identity.
+            let c0 = m.forward_to_cut_batch(&refs, 0);
+            assert_eq!(c0[1].data(), xs[1].data());
+            // Cuts 1 and 2 must match the per-sample cached forward.
+            let c1 = m.forward_to_cut_batch(&refs, 1);
+            let c2 = m.forward_to_cut_batch(&refs, 2);
+            let oracle = Model::new(cfg.clone(), 14); // naive reference
+            for (bi, x) in xs.iter().enumerate() {
+                let cache = oracle.forward_cached(x);
+                assert_eq!(c1[bi].shape(), &cfg.cut_shape(1));
+                crate::util::proptest::assert_close(
+                    c1[bi].data(),
+                    cache.a1.data(),
+                    1e-5,
+                    &format!("{engine:?} cut-1 sample {bi}"),
+                );
+                crate::util::proptest::assert_close(
+                    c2[bi].data(),
+                    cache.a2.data(),
+                    1e-5,
+                    &format!("{engine:?} cut-2 sample {bi}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn train_batch_from_cut0_is_train_batch() {
+        let cfg = tiny_config();
+        let xs: Vec<Tensor<f32>> = (0..3).map(|i| rand_image(70 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let labels = [0usize, 1, 2];
+        for engine in [Engine::Naive, Engine::Gemm] {
+            let mut a = Model::new(cfg.clone(), 21).with_engine(engine);
+            let mut b = Model::new(cfg.clone(), 21).with_engine(engine);
+            let oa = a.train_batch(&refs, &labels, 4, 0.05);
+            let ob = b.train_batch_from(0, &refs, &labels, 4, 0.05);
+            assert_eq!(oa.loss, ob.loss, "{engine:?} cut-0 loss");
+            assert_eq!(a.params.k1.data(), b.params.k1.data(), "{engine:?} cut-0 k1");
+            assert_eq!(a.params.k2.data(), b.params.k2.data(), "{engine:?} cut-0 k2");
+            assert_eq!(a.params.w.data(), b.params.w.data(), "{engine:?} cut-0 w");
+        }
+    }
+
+    #[test]
+    fn suffix_step_matches_full_step_and_freezes_prefix() {
+        // Train one model through the full network and another through
+        // the cut-1 suffix fed the same a1 activations: the k2/w updates
+        // must agree bit-for-bit (identical layer ops on identical
+        // inputs) while the suffix model's k1 stays frozen.
+        let cfg = tiny_config();
+        let xs: Vec<Tensor<f32>> = (0..3).map(|i| rand_image(80 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let labels = [1usize, 3, 0];
+        for engine in [Engine::Naive, Engine::Gemm] {
+            let mut full = Model::new(cfg.clone(), 31).with_engine(engine).with_threads(2);
+            let mut suffix = Model::new(cfg.clone(), 31).with_engine(engine).with_threads(2);
+            let k1_before = suffix.params.k1.data().to_vec();
+            let acts = suffix.forward_to_cut_batch(&refs, 1);
+            let act_refs: Vec<&Tensor<f32>> = acts.iter().collect();
+            let of = full.train_batch(&refs, &labels, 4, 0.05);
+            let os = suffix.train_batch_from(1, &act_refs, &labels, 4, 0.05);
+            assert_eq!(of.loss, os.loss, "{engine:?} suffix loss");
+            assert_eq!(of.correct, os.correct, "{engine:?} suffix correct");
+            assert_eq!(full.params.k2.data(), suffix.params.k2.data(), "{engine:?} k2");
+            assert_eq!(full.params.w.data(), suffix.params.w.data(), "{engine:?} w");
+            assert_eq!(suffix.params.k1.data(), &k1_before[..], "{engine:?} prefix moved");
+            assert_ne!(full.params.k1.data(), &k1_before[..], "{engine:?} full k1 frozen?");
+        }
+    }
+
+    #[test]
+    fn dense_only_cut_freezes_both_convs() {
+        let cfg = tiny_config();
+        let xs: Vec<Tensor<f32>> = (0..2).map(|i| rand_image(90 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        for engine in [Engine::Naive, Engine::Gemm] {
+            let mut m = Model::new(cfg.clone(), 41).with_engine(engine);
+            let k1 = m.params.k1.data().to_vec();
+            let k2 = m.params.k2.data().to_vec();
+            let w = m.params.w.data().to_vec();
+            let acts = m.forward_to_cut_batch(&refs, 2);
+            let act_refs: Vec<&Tensor<f32>> = acts.iter().collect();
+            m.train_batch_from(2, &act_refs, &[0, 1], 4, 0.05);
+            assert_eq!(m.params.k1.data(), &k1[..], "{engine:?} k1 moved");
+            assert_eq!(m.params.k2.data(), &k2[..], "{engine:?} k2 moved");
+            assert_ne!(m.params.w.data(), &w[..], "{engine:?} dense head never trained");
+        }
+    }
+
+    #[test]
+    fn reinit_suffix_cut0_is_full_reinit() {
+        let cfg = tiny_config();
+        let x = rand_image(17, &cfg);
+        let mut a = Model::new(cfg.clone(), 5).with_engine(Engine::Gemm).with_threads(3);
+        let mut b = a.clone();
+        a.train_step(&x, 1, 4, 0.05);
+        b.train_step(&x, 1, 4, 0.05);
+        a.reinit(99);
+        b.reinit_suffix(0, 99);
+        assert_eq!(a.params.k1.data(), b.params.k1.data());
+        assert_eq!(a.params.k2.data(), b.params.k2.data());
+        assert_eq!(a.params.w.data(), b.params.w.data());
+        assert_eq!(b.engine, Engine::Gemm);
+        assert_eq!(b.threads, 3);
+    }
+
+    #[test]
+    fn reinit_suffix_keeps_frozen_prefix() {
+        let cfg = tiny_config();
+        let mut m = Model::new(cfg.clone(), 5);
+        let k1 = m.params.k1.data().to_vec();
+        let k2 = m.params.k2.data().to_vec();
+        m.reinit_suffix(2, 123);
+        assert_eq!(m.params.k1.data(), &k1[..]);
+        assert_eq!(m.params.k2.data(), &k2[..]);
+        let fresh = Model::new(cfg, 123);
+        assert_eq!(m.params.w.data(), fresh.params.w.data(), "w must come from the fresh draw");
     }
 }

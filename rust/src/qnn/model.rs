@@ -412,6 +412,312 @@ impl QModel {
         (loss_sum / b as f32, correct)
     }
 
+    // ---- Cut-point datapath (latent replay) -------------------------
+    //
+    // Same split as `nn::Model`: frozen prefix forward to the cut,
+    // suffix-only training from stored Q4.12 activations, with the CU's
+    // per-sample stream-order writebacks and dither-step accounting
+    // preserved exactly. Because the k2/w update sequence never consumes
+    // a layer-1 gradient, the cut-1 suffix step's k2/w bits match the
+    // full step's, and cut 0 delegates outright — bit-identical to raw
+    // replay by construction.
+
+    /// Forward the frozen prefix to `cut` for a whole batch (fused-ReLU
+    /// integer convs; one packed GEMM set on the fast engine). Cut 0
+    /// returns the inputs unchanged.
+    pub fn forward_to_cut_batch(&self, xs: &[&Tensor<Fx>], cut: usize) -> Vec<Tensor<Fx>> {
+        let max = crate::nn::MAX_CUT;
+        assert!(cut <= max, "cut {cut} out of range (max {max})");
+        assert!(!xs.is_empty(), "empty batch");
+        if cut == 0 {
+            return xs.iter().map(|x| (*x).clone()).collect();
+        }
+        let hw = self.config.image_size;
+        let cc = self.config.conv_channels;
+        match self.engine {
+            QnnEngine::Naive => xs
+                .iter()
+                .map(|x| {
+                    let a1 = layers::conv_forward(x, &self.params.k1, 1, true);
+                    if cut == 1 {
+                        a1
+                    } else {
+                        layers::conv_forward(&a1, &self.params.k2, 1, true)
+                    }
+                })
+                .collect(),
+            QnnEngine::Fast => {
+                let b = xs.len();
+                let n = hw * hw;
+                let cin = self.config.in_channels;
+                let t = self.threads;
+                let packed_input;
+                let x0: &[Fx] = if b == 1 {
+                    xs[0].data()
+                } else {
+                    packed_input = pack_batch(xs);
+                    &packed_input
+                };
+                let (cols1, _, _) = qgemm::im2col_batch(x0, b, cin, hw, hw, 3, 3, 1, t);
+                let mut a = qgemm::conv_forward_batch(&cols1, &self.params.k1, b * n, true, t);
+                if cut == 2 {
+                    let (cols2, _, _) = qgemm::im2col_batch(&a, b, cc, hw, hw, 3, 3, 1, t);
+                    a = qgemm::conv_forward_batch(&cols2, &self.params.k2, b * n, true, t);
+                }
+                let rows = if b == 1 { a } else { packed_to_rows(&a, cc, b, n) };
+                rows.chunks(cc * n)
+                    .map(|r| Tensor::from_vec(Shape::d3(cc, hw, hw), r.to_vec()))
+                    .collect()
+            }
+        }
+    }
+
+    /// One suffix minibatch from stored activations at `cut`, with the
+    /// control unit's per-sample stream-order writebacks (each advancing
+    /// the dither step). At cut 0 this *is* [`QModel::train_batch`].
+    /// Returns (mean loss, correct count).
+    pub fn train_batch_from(
+        &mut self,
+        cut: usize,
+        acts: &[&Tensor<Fx>],
+        labels: &[usize],
+        active_classes: usize,
+        lr: Fx,
+    ) -> (f32, usize) {
+        let max = crate::nn::MAX_CUT;
+        assert!(cut <= max, "cut {cut} out of range (max {max})");
+        if cut == 0 {
+            return self.train_batch(acts, labels, active_classes, lr);
+        }
+        assert!(!acts.is_empty(), "empty batch");
+        assert_eq!(acts.len(), labels.len(), "batch inputs vs labels");
+        if cut == 1 {
+            match self.engine {
+                QnnEngine::Naive => self.train_suffix_naive(acts, labels, active_classes, lr),
+                QnnEngine::Fast => self.train_suffix_fast(acts, labels, active_classes, lr),
+            }
+        } else {
+            self.train_dense_only(acts, labels, active_classes, lr)
+        }
+    }
+
+    /// Cut-1 suffix minibatch, naive engine: conv2 + dense slice of
+    /// [`QModel::train_batch_naive`]'s sequence (layer 1 is frozen and
+    /// its gradients are never formed).
+    fn train_suffix_naive(
+        &mut self,
+        acts: &[&Tensor<Fx>],
+        labels: &[usize],
+        active_classes: usize,
+        lr: Fx,
+    ) -> (f32, usize) {
+        let b = acts.len();
+        // Forwards from the stored a1, at the batch-entry parameters.
+        let a2s: Vec<Tensor<Fx>> = acts
+            .iter()
+            .map(|a1| layers::conv_forward(a1, &self.params.k2, 1, true))
+            .collect();
+        let logits: Vec<Vec<Fx>> =
+            a2s.iter().map(|a2| layers::dense_forward(a2.data(), &self.params.w)).collect();
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0usize;
+        let mut dys: Vec<Vec<Fx>> = Vec::with_capacity(b);
+        for (lg, &label) in logits.iter().zip(labels) {
+            let (l, c, dy) = loss_grad(lg, label, active_classes);
+            loss_sum += l;
+            correct += usize::from(c);
+            dys.push(dy);
+        }
+        // Dense gradient propagation at the batch-entry weights.
+        let da2s: Vec<Tensor<Fx>> = a2s
+            .iter()
+            .zip(&dys)
+            .map(|(a2, dy)| {
+                Tensor::from_vec(
+                    a2.shape().clone(),
+                    layers::dense_input_grad(dy, &self.params.w),
+                )
+            })
+            .collect();
+        // Fused dense updates per sample in stream order.
+        let dshift = self.config.dense_grad_shift();
+        for (i, (a2, dy)) in a2s.iter().zip(&dys).enumerate() {
+            let dy_scaled = layers::scale_grad(dy, lr);
+            layers::dense_weight_update(
+                &mut self.params.w,
+                a2.data(),
+                &dy_scaled,
+                dshift,
+                self.step + i as u64,
+            );
+        }
+        // Conv2 kernel gradients from the stored a1 (no layer-1 work).
+        let shift = self.config.kgrad_shift();
+        let mut dk2s = Vec::with_capacity(b);
+        for ((a1, a2), da2) in acts.iter().zip(&a2s).zip(&da2s) {
+            let dz2 = layers::relu_backward(da2, a2);
+            dk2s.push(layers::conv_kernel_grad(&dz2, a1, self.params.k2.shape(), 1, shift));
+        }
+        for (i, dk2) in dk2s.iter().enumerate() {
+            let s = self.step + i as u64;
+            layers::param_update(&mut self.params.k2, dk2, lr, layers::DITHER_BASE_K2, s);
+        }
+        self.step += b as u64;
+        (loss_sum / b as f32, correct)
+    }
+
+    /// Cut-1 suffix minibatch, fast engine: the packed-GEMM slice of
+    /// [`QModel::train_batch_fast`]. Bit-identical to the naive suffix.
+    fn train_suffix_fast(
+        &mut self,
+        acts: &[&Tensor<Fx>],
+        labels: &[usize],
+        active_classes: usize,
+        lr: Fx,
+    ) -> (f32, usize) {
+        let b = acts.len();
+        let hw = self.config.image_size;
+        let n = hw * hw;
+        let cc = self.config.conv_channels;
+        let classes = self.config.num_classes;
+        let d_in = self.config.dense_in();
+        let t = self.threads;
+        let packed_acts;
+        let a1: &[Fx] = if b == 1 {
+            acts[0].data()
+        } else {
+            packed_acts = pack_batch(acts);
+            &packed_acts
+        };
+        let (cols2, _, _) = qgemm::im2col_batch(a1, b, cc, hw, hw, 3, 3, 1, t);
+        let a2 = qgemm::conv_forward_batch(&cols2, &self.params.k2, b * n, true, t);
+        let a2_rows_owned;
+        let a2_rows: &[Fx] = if b == 1 {
+            &a2
+        } else {
+            a2_rows_owned = packed_to_rows(&a2, cc, b, n);
+            &a2_rows_owned
+        };
+        let logits = qgemm::dense_forward_batch(a2_rows, &self.params.w, b, t);
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0usize;
+        let mut dy_rows: Vec<Fx> = Vec::with_capacity(b * classes);
+        for (bi, &label) in labels.iter().enumerate() {
+            let row = &logits[bi * classes..(bi + 1) * classes];
+            let (l, c, dy) = loss_grad(row, label, active_classes);
+            loss_sum += l;
+            correct += usize::from(c);
+            dy_rows.extend(dy);
+        }
+        let da2_rows = qgemm::dense_input_grad_batch(&dy_rows, &self.params.w, b, t);
+        let da2 = if b == 1 { da2_rows } else { rows_to_packed(&da2_rows, cc, b, n) };
+        let dshift = self.config.dense_grad_shift();
+        for bi in 0..b {
+            let dy_b = &dy_rows[bi * classes..(bi + 1) * classes];
+            let dy_scaled = layers::scale_grad(dy_b, lr);
+            let x_b = &a2_rows[bi * d_in..(bi + 1) * d_in];
+            qgemm::dense_weight_update(
+                &mut self.params.w,
+                x_b,
+                &dy_scaled,
+                dshift,
+                self.step + bi as u64,
+                t,
+            );
+        }
+        let shift = self.config.kgrad_shift();
+        let dz2 = qgemm::relu_mask(&da2, &a2);
+        let dk2s =
+            qgemm::conv_kernel_grad_batch(&dz2, &cols2, self.params.k2.shape(), b, n, shift, t);
+        for (bi, dk2) in dk2s.iter().enumerate() {
+            let s = self.step + bi as u64;
+            layers::param_update(&mut self.params.k2, dk2, lr, layers::DITHER_BASE_K2, s);
+        }
+        self.step += b as u64;
+        (loss_sum / b as f32, correct)
+    }
+
+    /// Cut-2 minibatch: the dense head is the whole trainable suffix.
+    /// All logits are computed at the batch-entry weights, then the
+    /// fused dense updates run per sample in stream order.
+    fn train_dense_only(
+        &mut self,
+        acts: &[&Tensor<Fx>],
+        labels: &[usize],
+        active_classes: usize,
+        lr: Fx,
+    ) -> (f32, usize) {
+        let b = acts.len();
+        let d_in = self.config.dense_in();
+        let dshift = self.config.dense_grad_shift();
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0usize;
+        match self.engine {
+            QnnEngine::Naive => {
+                let logits: Vec<Vec<Fx>> = acts
+                    .iter()
+                    .map(|a2| layers::dense_forward(a2.data(), &self.params.w))
+                    .collect();
+                for (i, (a2, &label)) in acts.iter().zip(labels).enumerate() {
+                    let (l, c, dy) = loss_grad(&logits[i], label, active_classes);
+                    loss_sum += l;
+                    correct += usize::from(c);
+                    let dy_scaled = layers::scale_grad(&dy, lr);
+                    layers::dense_weight_update(
+                        &mut self.params.w,
+                        a2.data(),
+                        &dy_scaled,
+                        dshift,
+                        self.step + i as u64,
+                    );
+                }
+            }
+            QnnEngine::Fast => {
+                let t = self.threads;
+                let classes = self.config.num_classes;
+                let xd = crate::nn::gemm::rows_from_samples(acts);
+                let logits = qgemm::dense_forward_batch(&xd, &self.params.w, b, t);
+                for (bi, &label) in labels.iter().enumerate() {
+                    let row = &logits[bi * classes..(bi + 1) * classes];
+                    let (l, c, dy) = loss_grad(row, label, active_classes);
+                    loss_sum += l;
+                    correct += usize::from(c);
+                    let dy_scaled = layers::scale_grad(&dy, lr);
+                    let x_b = &xd[bi * d_in..(bi + 1) * d_in];
+                    qgemm::dense_weight_update(
+                        &mut self.params.w,
+                        x_b,
+                        &dy_scaled,
+                        dshift,
+                        self.step + bi as u64,
+                        t,
+                    );
+                }
+            }
+        }
+        self.step += b as u64;
+        (loss_sum / b as f32, correct)
+    }
+
+    /// Re-initialize only the parameters at and after `cut`, resetting
+    /// the dither step counter (as any reinit does) and leaving the
+    /// frozen prefix's bits untouched. `reinit_suffix(0, s)` matches the
+    /// coordinator's full reinit bit-for-bit (shared float init path,
+    /// quantized tensor by tensor).
+    pub fn reinit_suffix(&mut self, cut: usize, seed: u64) {
+        let max = crate::nn::MAX_CUT;
+        assert!(cut <= max, "cut {cut} out of range (max {max})");
+        let fresh = QParams::from_f32(&crate::nn::Model::new(self.config.clone(), seed).params);
+        if cut == 0 {
+            self.params.k1 = fresh.k1;
+        }
+        if cut <= 1 {
+            self.params.k2 = fresh.k2;
+        }
+        self.params.w = fresh.w;
+        self.step = 0;
+    }
+
     /// Input geometry helper.
     pub fn input_shape(&self) -> Shape {
         Shape::d3(
@@ -542,5 +848,136 @@ mod tests {
         let batched = qm.predict_batch(&refs, 4);
         let singles: Vec<usize> = refs.iter().map(|x| qm.predict(x, 4)).collect();
         assert_eq!(batched, singles);
+    }
+
+    #[test]
+    fn forward_to_cut_matches_cached_prefix_on_both_engines() {
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 51);
+        let naive = QModel::from_model(&m).with_engine(QnnEngine::Naive);
+        let fast = QModel::from_model(&m).with_engine(QnnEngine::Fast).with_threads(3);
+        let xs: Vec<Tensor<Fx>> =
+            (0..3u64).map(|i| quantize_tensor(&rand_image(500 + i, &cfg))).collect();
+        let refs: Vec<&Tensor<Fx>> = xs.iter().collect();
+        for cut in 0..=crate::nn::MAX_CUT {
+            let an = naive.forward_to_cut_batch(&refs, cut);
+            let af = fast.forward_to_cut_batch(&refs, cut);
+            for ((n, f), x) in an.iter().zip(&af).zip(&xs) {
+                assert_eq!(n.data(), f.data(), "cut {cut} engine parity");
+                match cut {
+                    0 => assert_eq!(n.data(), x.data(), "cut 0 is the input"),
+                    c => {
+                        let cache = naive.forward_cached(x);
+                        let oracle = if c == 1 { &cache.a1 } else { &cache.a2 };
+                        assert_eq!(n.data(), oracle.data(), "cut {c} vs cached forward");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn train_from_cut0_is_train_batch_bit_exact() {
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 52);
+        for engine in [QnnEngine::Naive, QnnEngine::Fast] {
+            let mut full = QModel::from_model(&m).with_engine(engine).with_threads(2);
+            let mut via = full.clone();
+            let xs: Vec<Tensor<Fx>> =
+                (0..3u64).map(|i| quantize_tensor(&rand_image(600 + i, &cfg))).collect();
+            let refs: Vec<&Tensor<Fx>> = xs.iter().collect();
+            let labels = [1usize, 3, 0];
+            let lr = Fx::from_f32(0.125);
+            let a = full.train_batch(&refs, &labels, 4, lr);
+            let b = via.train_batch_from(0, &refs, &labels, 4, lr);
+            assert_eq!(a, b, "loss/correct");
+            assert_eq!(full.params.w.data(), via.params.w.data(), "w bits");
+            assert_eq!(full.params.k1.data(), via.params.k1.data(), "k1 bits");
+            assert_eq!(full.params.k2.data(), via.params.k2.data(), "k2 bits");
+            assert_eq!(full.step, via.step, "step counters");
+        }
+    }
+
+    #[test]
+    fn suffix_step_matches_full_step_and_freezes_prefix() {
+        // From stored a1, the suffix step reproduces the full step's
+        // k2/w bits exactly (their update sequence never consumes a
+        // layer-1 gradient) while k1 stays frozen.
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 53);
+        for engine in [QnnEngine::Naive, QnnEngine::Fast] {
+            let mut full = QModel::from_model(&m).with_engine(engine).with_threads(3);
+            let mut sfx = full.clone();
+            let xs: Vec<Tensor<Fx>> =
+                (0..3u64).map(|i| quantize_tensor(&rand_image(700 + i, &cfg))).collect();
+            let refs: Vec<&Tensor<Fx>> = xs.iter().collect();
+            let labels = [2usize, 0, 1];
+            let lr = Fx::from_f32(0.25);
+            let (lf, cf) = full.train_batch(&refs, &labels, 4, lr);
+            let a1s = sfx.forward_to_cut_batch(&refs, 1);
+            let a1_refs: Vec<&Tensor<Fx>> = a1s.iter().collect();
+            let (ls, cs) = sfx.train_batch_from(1, &a1_refs, &labels, 4, lr);
+            assert_eq!(lf, ls, "loss bits ({engine:?})");
+            assert_eq!(cf, cs, "correct count ({engine:?})");
+            assert_eq!(full.params.w.data(), sfx.params.w.data(), "w bits");
+            assert_eq!(full.params.k2.data(), sfx.params.k2.data(), "k2 bits");
+            let entry_k1 = QParams::from_f32(&m.params).k1;
+            assert_eq!(sfx.params.k1.data(), entry_k1.data(), "k1 frozen");
+            assert_ne!(full.params.k1.data(), entry_k1.data(), "full path moves k1");
+            assert_eq!(full.step, sfx.step, "step counters");
+        }
+    }
+
+    #[test]
+    fn dense_only_cut_freezes_both_convs_and_matches_across_engines() {
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 54);
+        let mut naive = QModel::from_model(&m).with_engine(QnnEngine::Naive);
+        let mut fast = QModel::from_model(&m).with_engine(QnnEngine::Fast).with_threads(3);
+        let xs: Vec<Tensor<Fx>> =
+            (0..3u64).map(|i| quantize_tensor(&rand_image(800 + i, &cfg))).collect();
+        let refs: Vec<&Tensor<Fx>> = xs.iter().collect();
+        let a2s = naive.forward_to_cut_batch(&refs, 2);
+        let a2_refs: Vec<&Tensor<Fx>> = a2s.iter().collect();
+        let labels = [3usize, 1, 2];
+        let lr = Fx::from_f32(0.25);
+        let ln = naive.train_batch_from(2, &a2_refs, &labels, 4, lr);
+        let lf = fast.train_batch_from(2, &a2_refs, &labels, 4, lr);
+        assert_eq!(ln, lf, "loss/correct engine parity");
+        assert_eq!(naive.params.w.data(), fast.params.w.data(), "w bits");
+        assert_ne!(naive.params.w.data(), QParams::from_f32(&m.params).w.data(), "w moved");
+        assert_eq!(naive.params.k1.data(), QParams::from_f32(&m.params).k1.data(), "k1 frozen");
+        assert_eq!(naive.params.k2.data(), QParams::from_f32(&m.params).k2.data(), "k2 frozen");
+        assert_eq!(naive.step, 3, "step still advances per sample");
+    }
+
+    #[test]
+    fn reinit_suffix_cut0_is_full_reinit() {
+        let cfg = tiny();
+        let mut qm = QModel::from_model(&Model::new(cfg.clone(), 55))
+            .with_engine(QnnEngine::Fast)
+            .with_threads(2);
+        let x = quantize_tensor(&rand_image(900, &cfg));
+        qm.train_step(&x, 1, 4, Fx::from_f32(0.125));
+        qm.reinit_suffix(0, 123);
+        let fresh = QParams::from_f32(&Model::new(cfg, 123).params);
+        assert_eq!(qm.params.k1.data(), fresh.k1.data());
+        assert_eq!(qm.params.k2.data(), fresh.k2.data());
+        assert_eq!(qm.params.w.data(), fresh.w.data());
+        assert_eq!(qm.step, 0, "reinit resets the dither step");
+        assert_eq!(qm.engine, QnnEngine::Fast, "engine preserved");
+        assert_eq!(qm.threads, 2, "threads preserved");
+    }
+
+    #[test]
+    fn reinit_suffix_keeps_frozen_prefix() {
+        let cfg = tiny();
+        let mut qm = QModel::from_model(&Model::new(cfg.clone(), 56));
+        let before = qm.params.clone();
+        qm.reinit_suffix(2, 321);
+        let fresh = QParams::from_f32(&Model::new(cfg, 321).params);
+        assert_eq!(qm.params.k1.data(), before.k1.data(), "k1 kept");
+        assert_eq!(qm.params.k2.data(), before.k2.data(), "k2 kept");
+        assert_eq!(qm.params.w.data(), fresh.w.data(), "w redrawn");
     }
 }

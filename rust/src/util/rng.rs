@@ -55,6 +55,20 @@ impl Pcg32 {
         }
     }
 
+    /// Uniform in [0, bound) without modulo bias — 64-bit Lemire rejection,
+    /// for bounds (e.g. reservoir `seen` counters) that outgrow u32.
+    pub fn below_u64(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "below_u64(0)");
+        loop {
+            let x = self.next_u64() as u128;
+            let m = x * bound as u128;
+            let l = m as u64;
+            if l >= bound || l >= (u64::MAX - bound + 1) % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
     /// Uniform usize in [0, bound).
     pub fn below_usize(&mut self, bound: usize) -> usize {
         assert!(bound > 0 && bound <= u32::MAX as usize);
@@ -141,6 +155,23 @@ mod tests {
             seen[v as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn below_u64_is_in_range_and_covers() {
+        let mut rng = Pcg32::seeded(19);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below_u64(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // Bounds past u32::MAX stay in range (the whole point of the widening).
+        let big = (u32::MAX as u64) * 3;
+        for _ in 0..100 {
+            assert!(rng.below_u64(big) < big);
+        }
     }
 
     #[test]

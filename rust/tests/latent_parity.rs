@@ -1,0 +1,189 @@
+//! Latent-replay parity gates.
+//!
+//! The `latent-replay` policy at `--replay-cut 0` stores the raw inputs
+//! (quantized to the memory's Q4.12 width) and re-initializes the whole
+//! network per task — which *is* GDumb. These tests pin that:
+//!
+//! * on the `qnn` backend the two policies are **bit-identical** for any
+//!   dataset (the quantize→store→dequantize round trip is exact on the
+//!   Fx grid, and training quantizes inputs anyway);
+//! * on the float backends they are bit-identical once the dataset is
+//!   pre-quantized onto the Fx grid (the only difference left is the
+//!   memory's codec, which is then the identity);
+//! * interior cuts still learn (above chance after the full stream) and
+//!   the `qnn` naive/fast engines agree bit-for-bit through the whole
+//!   latent policy loop.
+
+use tinycl::cl::{self, ClPolicy, Gdumb, LatentReplay, RunConfig, TaskStream};
+use tinycl::coordinator::{Backend, BackendKind};
+use tinycl::data::{Dataset, SyntheticCifar};
+use tinycl::fixed::vecops;
+use tinycl::nn::ModelConfig;
+use tinycl::qnn::QnnEngine;
+use tinycl::sim::SimConfig;
+use tinycl::tensor::Tensor;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        in_channels: 3,
+        image_size: 8,
+        conv_channels: 4,
+        num_classes: 4,
+        grad_clip: 1.0,
+    }
+}
+
+fn setup(cfg: &ModelConfig, per_class: usize) -> (Dataset, Dataset, TaskStream) {
+    let gen = SyntheticCifar {
+        image_size: cfg.image_size,
+        channels: cfg.in_channels,
+        num_classes: cfg.num_classes,
+        noise: 0.35,
+        seed: 7,
+    };
+    let train = gen.generate(per_class, 0);
+    let test = gen.generate(per_class.div_ceil(2), 1);
+    let stream = TaskStream::class_incremental(&train, 2, 5);
+    (train, test, stream)
+}
+
+fn run_cfg() -> RunConfig {
+    RunConfig { epochs: 2, lr: 0.05, seed: 5, batch: 4 }
+}
+
+fn backend(kind: BackendKind, cfg: &ModelConfig, engine: QnnEngine, threads: usize) -> Backend {
+    let mut b = Backend::create(kind, cfg, &SimConfig::paper(), "artifacts", 5).unwrap();
+    b.set_qnn_engine(engine);
+    b.set_threads(threads);
+    b
+}
+
+/// Snap every sample onto the Q4.12 grid (what the replay memory and
+/// the quantized datapath see anyway).
+fn quantize_dataset(d: &Dataset) -> Dataset {
+    let mut out = d.clone();
+    for s in &mut out.samples {
+        let snapped = vecops::dequantize(&vecops::quantize(s.x.data()));
+        s.x = Tensor::from_vec(s.x.shape().clone(), snapped);
+    }
+    out
+}
+
+fn assert_reports_identical(a: &cl::ClReport, b: &cl::ClReport, what: &str) {
+    assert_eq!(a.train_steps, b.train_steps, "{what}: train steps");
+    assert_eq!(a.matrix.rows_filled(), b.matrix.rows_filled(), "{what}: rows");
+    for after in 0..a.matrix.rows_filled() {
+        for on in 0..=after {
+            assert_eq!(
+                a.matrix.at(after, on),
+                b.matrix.at(after, on),
+                "{what}: accuracy after task {after} on task {on}"
+            );
+        }
+    }
+    assert_eq!(a.replay_bursts, b.replay_bursts, "{what}: replay traffic");
+}
+
+/// The byte budget that gives the latent store exactly `slots` cut-0
+/// slots — so both policies under comparison hold the same capacity.
+fn budget_for(cfg: &ModelConfig, slots: usize) -> u64 {
+    cfg.sample_bytes() * slots as u64
+}
+
+#[test]
+fn qnn_cut0_is_gdumb_bit_for_bit() {
+    let cfg = tiny_cfg();
+    let (train, test, stream) = setup(&cfg, 6);
+    let rc = run_cfg();
+    const SLOTS: usize = 12;
+    let mut g = Gdumb::new(SLOTS, rc.seed);
+    let mut l = LatentReplay::new(budget_for(&cfg, SLOTS), 0, rc.seed);
+    let mut bg = backend(BackendKind::Qnn, &cfg, QnnEngine::Fast, 2);
+    let mut bl = backend(BackendKind::Qnn, &cfg, QnnEngine::Fast, 2);
+    let rg = cl::policy::run_stream(&mut g, &mut bg, &stream, &train, &test, &rc);
+    let rl = cl::policy::run_stream(&mut l, &mut bl, &stream, &train, &test, &rc);
+    assert_reports_identical(&rg, &rl, "qnn cut 0 vs gdumb");
+}
+
+#[test]
+fn float_cut0_is_gdumb_on_the_fx_grid() {
+    // On the float backends the latent store's Q4.12 codec is the only
+    // difference at cut 0; pre-quantizing the dataset makes it the
+    // identity, and the runs must then agree bit-for-bit.
+    let cfg = tiny_cfg();
+    let (train, test, stream) = setup(&cfg, 6);
+    let train = quantize_dataset(&train);
+    let test = quantize_dataset(&test);
+    let rc = run_cfg();
+    const SLOTS: usize = 12;
+    for kind in [BackendKind::F32, BackendKind::F32Fast] {
+        let mut g = Gdumb::new(SLOTS, rc.seed);
+        let mut l = LatentReplay::new(budget_for(&cfg, SLOTS), 0, rc.seed);
+        let mut bg = backend(kind, &cfg, QnnEngine::Fast, 2);
+        let mut bl = backend(kind, &cfg, QnnEngine::Fast, 2);
+        let rg = cl::policy::run_stream(&mut g, &mut bg, &stream, &train, &test, &rc);
+        let rl = cl::policy::run_stream(&mut l, &mut bl, &stream, &train, &test, &rc);
+        assert_reports_identical(&rg, &rl, &format!("{kind:?} cut 0 vs gdumb"));
+    }
+}
+
+#[test]
+fn interior_cuts_learn_above_chance() {
+    // The suffix alone must still learn the stream: a frozen random
+    // prefix is a fixed feature map, not a lobotomy. Chance here is
+    // 0.25 (4 classes).
+    let cfg = tiny_cfg();
+    let (train, test, stream) = setup(&cfg, 12);
+    let rc = RunConfig { epochs: 3, ..run_cfg() };
+    for cut in 1..=tinycl::nn::MAX_CUT {
+        let mut p = LatentReplay::new(budget_for(&cfg, 16), cut, rc.seed);
+        let mut b = backend(BackendKind::F32Fast, &cfg, QnnEngine::Fast, 2);
+        let r = cl::policy::run_stream(&mut p, &mut b, &stream, &train, &test, &rc);
+        let acc = r.final_average();
+        assert!(acc > 0.3, "cut {cut}: final average accuracy {acc} not above chance");
+        let (reads, writes) = r.replay_bursts;
+        assert!(reads > 0 && writes > 0, "cut {cut}: replay traffic unmetered");
+    }
+}
+
+#[test]
+fn qnn_engines_agree_through_the_latent_policy() {
+    // The whole policy loop — batched prefix forwards at admission,
+    // quantized store, suffix training — must be bit-identical between
+    // the naive oracle and the threaded integer-GEMM engine at every cut.
+    let cfg = tiny_cfg();
+    let (train, test, stream) = setup(&cfg, 6);
+    let rc = run_cfg();
+    for cut in 0..=tinycl::nn::MAX_CUT {
+        let mut pn = LatentReplay::new(budget_for(&cfg, 10), cut, rc.seed);
+        let mut pf = LatentReplay::new(budget_for(&cfg, 10), cut, rc.seed);
+        let mut bn = backend(BackendKind::Qnn, &cfg, QnnEngine::Naive, 1);
+        let mut bf = backend(BackendKind::Qnn, &cfg, QnnEngine::Fast, 3);
+        let rn = cl::policy::run_stream(&mut pn, &mut bn, &stream, &train, &test, &rc);
+        let rf = cl::policy::run_stream(&mut pf, &mut bf, &stream, &train, &test, &rc);
+        assert_reports_identical(&rn, &rf, &format!("qnn naive vs fast at cut {cut}"));
+    }
+}
+
+#[test]
+fn latent_memory_shrinks_with_deeper_cuts_at_equal_bytes() {
+    // The frontier's memory axis: one byte budget, different slot
+    // geometries. At this tiny geometry a raw slot is 3·8·8·2 = 384 B
+    // and an activation slot 4·8·8·2 = 512 B, so the same budget holds
+    // fewer latent slots — the capacity trade replay-bench sweeps.
+    let cfg = tiny_cfg();
+    let (train, _test, stream) = setup(&cfg, 8);
+    let rc = run_cfg();
+    let budget = budget_for(&cfg, 8); // 3072 B
+    let mut caps = Vec::new();
+    for cut in 0..=tinycl::nn::MAX_CUT {
+        let mut p = LatentReplay::new(budget, cut, rc.seed);
+        let mut b = backend(BackendKind::F32Fast, &cfg, QnnEngine::Fast, 1);
+        let task = &stream.tasks[0];
+        p.observe_task(&mut b, task, &train, stream.active_classes_after(0), &rc);
+        caps.push(p.memory.capacity().unwrap());
+    }
+    assert_eq!(caps[0], 8, "cut 0 slots are raw samples");
+    assert_eq!(caps[1], 6, "3072 B / 512 B per activation");
+    assert_eq!(caps[2], 6);
+}
