@@ -17,6 +17,16 @@
 //!    im2col+GEMM fast path on the persistent worker pool. Must win by
 //!    ≥ 4× — asserted — and be **bit-identical** to the naive oracle on
 //!    losses and every parameter — also asserted.
+//! 2c. **`gemm` rung family (this PR's microkernels)**: the serve-path
+//!    batched forward with the pre-PR kernels (fresh allocations,
+//!    unfused zero-skip GEMMs, per-call weight reads) vs the
+//!    register-tiled path behind `Model::forward_batch` on a packed
+//!    weight snapshot (fused conv+ReLU epilogues, recycled scratch).
+//!    Must win by ≥ 2× — asserted — and produce **identical logits** —
+//!    also asserted. A micro-rung times the zero-skip kernel against
+//!    the tiled one at the two serve shapes to pin where each pays:
+//!    skipa must keep winning on the sparse-A/tiny-N dense layer, the
+//!    tiled kernel on the dense-A/wide-N convs.
 //! 3. **TinyCL device vs software**: one training epoch on the
 //!    cycle-accurate sim (cycles × synthesized clock) vs the fastest
 //!    host baseline, with the paper's P100 constants for reference. The
@@ -36,11 +46,12 @@ use tinycl::coordinator::{Backend, BackendKind};
 use tinycl::data::SyntheticCifar;
 use tinycl::fixed::Fx;
 use tinycl::hw::CostModel;
-use tinycl::nn::{Engine, Model, ModelConfig};
+use tinycl::nn::{gemm, Engine, Model, ModelConfig};
 use tinycl::qnn::{QModel, QnnEngine};
 use tinycl::sim::SimConfig;
 use tinycl::tensor::{quantize_tensor, Tensor};
 use tinycl::util::cli::Args;
+use tinycl::util::rng::Pcg32;
 
 fn main() {
     let args = Args::from_env();
@@ -196,6 +207,115 @@ fn main() {
         println!("  determinism: threads={} bit-identical to threads=1 ✓", threads.max(2));
     }
 
+    // --- Rung 2c (this PR): register-tiled serve-path microkernels ---
+    // Reference: the pre-PR serve-path forward, reconstructed from the
+    // kernels this PR kept verbatim — fresh allocations per call, the
+    // zero-skip GEMM plus a separate ReLU pass for both convs, weights
+    // read straight from the row-major tensors. The candidate is
+    // `forward_batch` on a packed weight snapshot (what `clone_replica`
+    // hands the serving replica pool): register-tiled microkernels,
+    // fused conv+ReLU epilogues, recycled scratch.
+    let serve_xs: Vec<&Tensor<f32>> = samples.iter().take(batch).map(|s| &s.x).collect();
+    let (hw, cin, cc) = (cfg.image_size, cfg.in_channels, cfg.conv_channels);
+    let spatial = hw * hw;
+    let serve_b = serve_xs.len();
+    let mut served = Model::new(cfg.clone(), 7).with_engine(Engine::Gemm).with_threads(threads);
+    served.pack_weights();
+    let params = served.params.clone();
+    let serve_ref = |xs: &[&Tensor<f32>]| -> Vec<f32> {
+        let b = xs.len();
+        let bn = b * spatial;
+        let x0 = gemm::pack_batch(xs);
+        let (cols1, _, _) = gemm::im2col_batch(&x0, b, cin, hw, hw, 3, 3, 1, 1, threads);
+        let mut a1 = vec![0.0f32; cc * bn];
+        gemm::gemm_nn_skipa_mt(cc, cin * 9, bn, params.k1.data(), &cols1, &mut a1, threads);
+        for v in &mut a1 {
+            *v = v.max(0.0);
+        }
+        let (cols2, _, _) = gemm::im2col_batch(&a1, b, cc, hw, hw, 3, 3, 1, 1, threads);
+        let mut a2 = vec![0.0f32; cc * bn];
+        gemm::gemm_nn_skipa_mt(cc, cc * 9, bn, params.k2.data(), &cols2, &mut a2, threads);
+        for v in &mut a2 {
+            *v = v.max(0.0);
+        }
+        let xd = gemm::packed_to_rows(&a2, cc, b, spatial);
+        gemm::dense_forward_batch(&xd, &params.w, b, threads)
+    };
+    let ref_logits = serve_ref(&serve_xs);
+    let tiled_logits: Vec<f32> = served.forward_batch(&serve_xs).into_iter().flatten().collect();
+    assert_eq!(ref_logits, tiled_logits, "microkernel serve path changed the logits");
+    let serve_iters = if smoke { 20 } else { 200 };
+    let t0 = std::time::Instant::now();
+    for _ in 0..serve_iters {
+        std::hint::black_box(serve_ref(&serve_xs));
+    }
+    let gemm_serve_ref_ns = t0.elapsed().as_nanos() as f64 / serve_iters as f64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..serve_iters {
+        std::hint::black_box(served.forward_batch(&serve_xs));
+    }
+    let gemm_serve_tiled_ns = t0.elapsed().as_nanos() as f64 / serve_iters as f64;
+    let gemm_serve_speedup = gemm_serve_ref_ns / gemm_serve_tiled_ns;
+    println!(
+        "  gemm serve : {:.3} ms → {:.3} ms per batch-{serve_b} forward \
+         ({gemm_serve_speedup:.1}× from register tiling + packing + fused ReLU; \
+         logits identical ✓)",
+        gemm_serve_ref_ns * 1e-6,
+        gemm_serve_tiled_ns * 1e-6
+    );
+
+    // Micro-rung: zero-skip vs register-tiled at the two serve GEMM
+    // shapes, pinning the per-layer kernel choice. The dense layer's A
+    // is a post-ReLU activation matrix (~half zeros, N = classes) where
+    // skipping zero rows of work still pays; the conv's A is a dense
+    // kernel matrix with a wide N = B·Oh·Ow where the tiled kernel wins.
+    let micro_iters = if smoke { 40 } else { 120 };
+    let mut rng = Pcg32::seeded(11);
+    let dense_in = cfg.dense_in();
+    let classes = cfg.num_classes;
+    let da: Vec<f32> = (0..serve_b * dense_in)
+        .map(|_| rng.range_f32(-1.0, 1.0).max(0.0))
+        .collect();
+    let db: Vec<f32> = (0..dense_in * classes).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let kdim = cc * 9;
+    let bn = serve_b * spatial;
+    let ca: Vec<f32> = (0..cc * kdim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let cb: Vec<f32> = (0..kdim * bn).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let time_kernel = |f: &mut dyn FnMut()| -> f64 {
+        f(); // warmup
+        let t0 = std::time::Instant::now();
+        for _ in 0..micro_iters {
+            f();
+        }
+        t0.elapsed().as_nanos() as f64 / micro_iters as f64
+    };
+    let mut dc = vec![0.0f32; serve_b * classes];
+    let gemm_dense_skipa_ns = time_kernel(&mut || {
+        dc.fill(0.0);
+        gemm::gemm_nn_skipa_mt(serve_b, dense_in, classes, &da, &db, &mut dc, threads);
+    });
+    let gemm_dense_tiled_ns = time_kernel(&mut || {
+        dc.fill(0.0);
+        gemm::gemm_nn_mt(serve_b, dense_in, classes, &da, &db, &mut dc, threads);
+    });
+    let mut cout = vec![0.0f32; cc * bn];
+    let gemm_conv_skipa_ns = time_kernel(&mut || {
+        cout.fill(0.0);
+        gemm::gemm_nn_skipa_mt(cc, kdim, bn, &ca, &cb, &mut cout, threads);
+    });
+    let gemm_conv_tiled_ns = time_kernel(&mut || {
+        cout.fill(0.0);
+        gemm::gemm_nn_mt(cc, kdim, bn, &ca, &cb, &mut cout, threads);
+    });
+    println!(
+        "  gemm micro : dense {serve_b}×{dense_in}×{classes} skipa {:.0} µs vs tiled {:.0} µs; \
+         conv {cc}×{kdim}×{bn} skipa {:.0} µs vs tiled {:.0} µs",
+        gemm_dense_skipa_ns * 1e-3,
+        gemm_dense_tiled_ns * 1e-3,
+        gemm_conv_skipa_ns * 1e-3,
+        gemm_conv_tiled_ns * 1e-3
+    );
+
     // --- Rung 3: TinyCL device (cycle-accurate sim @ 3.87 ns) ---
     let mut sim =
         Backend::create(BackendKind::Sim, &cfg, &sim_cfg, "artifacts", 3).expect("sim backend");
@@ -254,6 +374,13 @@ fn main() {
          \"naive_ns_per_step\": {:.0},\n  \"fast_ns_per_step\": {:.0},\n  \
          \"batched_ns_per_step\": {:.0},\n  \
          \"qnn_naive_ns_per_step\": {:.0},\n  \"qnn_fast_ns_per_step\": {:.0},\n  \
+         \"gemm_serve_ref_ns\": {gemm_serve_ref_ns:.0},\n  \
+         \"gemm_serve_tiled_ns\": {gemm_serve_tiled_ns:.0},\n  \
+         \"gemm_serve_speedup\": {gemm_serve_speedup:.2},\n  \
+         \"gemm_dense_skipa_ns\": {gemm_dense_skipa_ns:.0},\n  \
+         \"gemm_dense_tiled_ns\": {gemm_dense_tiled_ns:.0},\n  \
+         \"gemm_conv_skipa_ns\": {gemm_conv_skipa_ns:.0},\n  \
+         \"gemm_conv_tiled_ns\": {gemm_conv_tiled_ns:.0},\n  \
          \"fast_speedup_over_naive\": {host_speedup:.2},\n  \
          \"batched_speedup_over_fast\": {batched_speedup:.2},\n  \
          \"qnn_fast_speedup_over_naive\": {qnn_speedup:.2},\n  \
@@ -292,6 +419,21 @@ fn main() {
             qnn_speedup >= 4.0,
             "qnn fast speedup {qnn_speedup:.1}× < 4× over naive qnn — \
              integer GEMM engine regressed"
+        );
+        assert!(
+            gemm_serve_speedup >= 2.0,
+            "serve-path microkernel speedup {gemm_serve_speedup:.2}× < 2× over the pre-PR \
+             kernels — register tiling / weight packing / fused epilogue regressed"
+        );
+        assert!(
+            gemm_dense_skipa_ns <= gemm_dense_tiled_ns,
+            "zero-skip lost its home turf: dense-layer skipa {gemm_dense_skipa_ns:.0} ns vs \
+             tiled {gemm_dense_tiled_ns:.0} ns — revisit dense_forward_batch's kernel choice"
+        );
+        assert!(
+            gemm_conv_tiled_ns <= gemm_conv_skipa_ns,
+            "register-tiled conv GEMM {gemm_conv_tiled_ns:.0} ns slower than zero-skip \
+             {gemm_conv_skipa_ns:.0} ns — revisit the conv-path kernel choice"
         );
         assert!((tinycl_epoch - 1.76).abs() < 0.3, "TinyCL epoch {tinycl_epoch} vs paper 1.76");
         assert!(speedup > 5.0, "speedup {speedup} lost the paper's ordering");

@@ -216,6 +216,11 @@ impl Learner for crate::nn::Model {
     }
 
     fn clone_replica(&self) -> Option<Self> {
-        Some(self.clone())
+        // Replicas are weight-stable snapshots: pack the conv kernels
+        // into microkernel tile order once here, so steady-state serving
+        // never repacks per batch (`nn::gemm::PackedA`).
+        let mut replica = self.clone();
+        replica.pack_weights();
+        Some(replica)
     }
 }

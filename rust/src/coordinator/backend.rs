@@ -306,14 +306,23 @@ impl Learner for Backend {
 
     fn clone_replica(&self) -> Option<Self> {
         // Host-state backends duplicate bit-identically: tensors,
-        // dither counters and SRAM contents are plain data. The xla
-        // backend owns PJRT runtime handles and device buffers — it
-        // cannot be replicated, so `serve --replicas N>1` refuses it
-        // with an actionable error instead of cloning a live client.
+        // dither counters and SRAM contents are plain data. Replicas
+        // are weight-stable snapshots, so the host models also repack
+        // their conv kernels into microkernel tile order here — once
+        // per snapshot, not per batch. The xla backend owns PJRT
+        // runtime handles and device buffers — it cannot be
+        // replicated, so `serve --replicas N>1` refuses it with an
+        // actionable error instead of cloning a live client.
         match self {
-            Backend::F32(m) => Some(Backend::F32(m.clone())),
+            Backend::F32(m) => {
+                let mut replica = m.clone();
+                replica.pack_weights();
+                Some(Backend::F32(replica))
+            }
             Backend::Qnn { model, config } => {
-                Some(Backend::Qnn { model: model.clone(), config: config.clone() })
+                let mut replica = model.clone();
+                replica.pack_weights();
+                Some(Backend::Qnn { model: replica, config: config.clone() })
             }
             Backend::Sim { dev, train_stats, infer_stats } => Some(Backend::Sim {
                 dev: dev.clone(),

@@ -1,5 +1,5 @@
-//! Cache-blocked integer GEMM kernels over Q4.12 operands — the compute
-//! core of the `qnn` fast path.
+//! Register-tiled integer GEMM microkernels over Q4.12 operands — the
+//! compute core of the `qnn` fast path.
 //!
 //! Every output element is a **wrapping i32 sum of individually
 //! barrel-shifted 16×16 products**, i.e. exactly the chain
@@ -8,27 +8,42 @@
 //! GEMM restructuring *bit-identical* rather than merely close:
 //!
 //! 1. 32-bit two's-complement addition is associative and commutative,
-//!    so panel blocking, column sharding and loop interchange never
-//!    change a single bit of the sum (the same property `sim` relies on
-//!    for its Dadda-tree reductions — see `fixed::vecops`).
+//!    so register tiling, panel blocking, column sharding and loop
+//!    interchange never change a single bit of the sum (the same
+//!    property `sim` relies on for its Dadda-tree reductions — see
+//!    `fixed::vecops`).
 //! 2. A zero operand contributes an exactly-zero term even under the
 //!    round-to-nearest pre-shift: `(0 + 2^(s−1)) >> s = 0` for every
 //!    `s ≥ 1`. im2col's zero-padding entries (and the naive loops'
 //!    skipped out-of-image taps) are therefore interchangeable.
 //!
-//! The kernels accumulate into raw `i32` slices (the [`super::Acc`]
-//! bit pattern); the caller applies the layer's writeback (format
-//! shift, rounding, saturation, clips) once per element, at the same
-//! points the hardware does. Threading shards disjoint output columns
-//! across the persistent worker pool ([`crate::util::pool`]), so
-//! threads=N is bit-identical to threads=1 by construction.
+//! The hot paths are [`MR`]×[`NR`] register tiles reading the A operand
+//! through a [`QPackedA`] tile-order layout (packed once per call, or
+//! once per weight snapshot by the model layer). The tiled kernels
+//! accumulate into raw `i32` slices (the [`super::Acc`] bit pattern);
+//! the caller applies the layer's writeback (format shift, rounding,
+//! saturation, clips) once per element — except the *fused* NN variants,
+//! which run the `to_fx_fmt` round/saturate (and optionally ReLU) inside
+//! the C-tile store so the accumulator never round-trips through memory.
+//! Threading shards disjoint output columns across the persistent worker
+//! pool ([`crate::util::pool`]), so threads=N is bit-identical to
+//! threads=1 by construction.
 
-use super::Fx;
+use super::{Acc, Fx};
 use crate::util::pool::{self, col_ranges, plan_workers, SendPtr};
 
 /// Column-panel width: 256 i32 = 1 KiB per accumulator row keeps a
 /// panel plus the operand row in L1 (same blocking as the f32 core).
 const PANEL: usize = 256;
+
+/// Microkernel tile height: rows of A (and C) per register tile.
+pub const MR: usize = 4;
+
+/// Microkernel tile width: columns of C per register tile.
+pub const NR: usize = 8;
+
+/// NT-kernel tile width in B rows (output columns per tile).
+const NT_NR: usize = 4;
 
 /// Rounding increment for a `shift`-bit product pre-shift (0 when the
 /// shift is 0 — `(p + 0) >> 0 = p` reproduces the unshifted product).
@@ -56,11 +71,223 @@ pub fn dot_shifted(a: &[Fx], b: &[Fx], shift: u32) -> i32 {
     acc
 }
 
+/// An `m×k` A operand repacked into microkernel-tile order: row blocks
+/// of [`MR`] rows, each block stored column-major
+/// (`data[i0*k + kk*mr_i + mi] = a[(i0+mi)*k + kk]`) so the NN and
+/// fused microkernels stream A with unit stride. Packing is pure data
+/// movement — the kernels execute the same per-output wrapping-add
+/// chain as the row-major path, so results are bit-identical. Weight
+/// snapshots (serving replicas) pack once and reuse across calls.
+#[derive(Clone, Debug)]
+pub struct QPackedA {
+    m: usize,
+    k: usize,
+    data: Vec<Fx>,
+}
+
+impl QPackedA {
+    pub fn pack(m: usize, k: usize, a: &[Fx]) -> QPackedA {
+        assert_eq!(a.len(), m * k, "A must be m×k");
+        let mut data = vec![Fx::ZERO; m * k];
+        let mut w = 0;
+        for i0 in (0..m).step_by(MR) {
+            let mr_i = MR.min(m - i0);
+            for kk in 0..k {
+                for mi in 0..mr_i {
+                    data[w] = a[(i0 + mi) * k + kk];
+                    w += 1;
+                }
+            }
+        }
+        QPackedA { m, k, data }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// True when this pack is element-for-element the pack of `a` — the
+    /// freshness check behind the packed-weight-cache debug asserts.
+    pub fn matches(&self, m: usize, k: usize, a: &[Fx]) -> bool {
+        if self.m != m || self.k != k || a.len() != m * k {
+            return false;
+        }
+        let mut r = 0;
+        for i0 in (0..m).step_by(MR) {
+            let mr_i = MR.min(m - i0);
+            for kk in 0..k {
+                for mi in 0..mr_i {
+                    if self.data[r] != a[(i0 + mi) * k + kk] {
+                        return false;
+                    }
+                    r += 1;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// One `MR_`×[`NR`] register tile of the packed NN kernel: accumulators
+/// load from C, run the k-ascending shifted-product chain, store back.
+///
+/// # Safety
+/// The caller must own output columns `jj..jj+NR` of rows
+/// `i0..i0+MR_`, and `ap` must be the packed block for rows
+/// `i0..i0+MR_` (length `MR_*k`).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn nn_tile<const MR_: usize>(
+    k: usize,
+    n: usize,
+    ap: &[Fx],
+    b: &[Fx],
+    c: *mut i32,
+    i0: usize,
+    jj: usize,
+    half: i32,
+    shift: u32,
+) {
+    let mut acc = [[0i32; NR]; MR_];
+    for (mi, row) in acc.iter_mut().enumerate() {
+        let crow = c.add((i0 + mi) * n + jj);
+        for (u, v) in row.iter_mut().enumerate() {
+            *v = *crow.add(u);
+        }
+    }
+    for kk in 0..k {
+        let bq = &b[kk * n + jj..kk * n + jj + NR];
+        for (mi, row) in acc.iter_mut().enumerate() {
+            let ai = ap[kk * MR_ + mi].raw() as i32;
+            for (v, &bv) in row.iter_mut().zip(bq) {
+                *v = v.wrapping_add((ai * bv.raw() as i32 + half) >> shift);
+            }
+        }
+    }
+    for (mi, row) in acc.iter().enumerate() {
+        let crow = c.add((i0 + mi) * n + jj);
+        for (u, &v) in row.iter().enumerate() {
+            *crow.add(u) = v;
+        }
+    }
+}
+
+/// Panel-blocked tiled NN kernel over output columns `lo..hi`, reading
+/// A in [`QPackedA`] order.
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_packed_range(
+    m: usize,
+    k: usize,
+    n: usize,
+    pa: &[Fx],
+    b: &[Fx],
+    c: SendPtr<i32>,
+    shift: u32,
+    lo: usize,
+    hi: usize,
+) {
+    let half = round_half(shift);
+    for j0 in (lo..hi).step_by(PANEL) {
+        let j1 = (j0 + PANEL).min(hi);
+        for i0 in (0..m).step_by(MR) {
+            let mr_i = MR.min(m - i0);
+            let ap = &pa[i0 * k..i0 * k + mr_i * k];
+            let mut jj = j0;
+            // Safety: this task is the only writer of columns lo..hi.
+            unsafe {
+                while jj + NR <= j1 {
+                    match mr_i {
+                        4 => nn_tile::<4>(k, n, ap, b, c.0, i0, jj, half, shift),
+                        3 => nn_tile::<3>(k, n, ap, b, c.0, i0, jj, half, shift),
+                        2 => nn_tile::<2>(k, n, ap, b, c.0, i0, jj, half, shift),
+                        _ => nn_tile::<1>(k, n, ap, b, c.0, i0, jj, half, shift),
+                    }
+                    jj += NR;
+                }
+            }
+            for j in jj..j1 {
+                for mi in 0..mr_i {
+                    // Safety: as above — sole writer of this column range.
+                    let cv = unsafe { &mut *c.0.add((i0 + mi) * n + j) };
+                    let mut acc = *cv;
+                    for kk in 0..k {
+                        let ai = ap[kk * mr_i + mi].raw() as i32;
+                        acc = acc.wrapping_add((ai * b[kk * n + j].raw() as i32 + half) >> shift);
+                    }
+                    *cv = acc;
+                }
+            }
+        }
+    }
+}
+
+/// `C (m×n) += A · B (k×n)` with A pre-packed in tile order — the
+/// snapshot-packed serving path. Bit-identical to [`gemm_nn_mt`].
+pub fn gemm_nn_packed_mt(
+    pa: &QPackedA,
+    n: usize,
+    b: &[Fx],
+    c: &mut [i32],
+    shift: u32,
+    threads: usize,
+) {
+    let (m, k) = (pa.m, pa.k);
+    assert_eq!(b.len(), k * n, "B must be k×n");
+    assert_eq!(c.len(), m * n, "C must be m×n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let workers = plan_workers(threads, m * k * n, n);
+    let ptr = SendPtr(c.as_mut_ptr());
+    if workers <= 1 {
+        gemm_nn_packed_range(m, k, n, &pa.data, b, ptr, shift, 0, n);
+        return;
+    }
+    let ranges = col_ranges(n, workers);
+    pool::run(ranges.len(), |wi| {
+        let (lo, hi) = ranges[wi];
+        gemm_nn_packed_range(m, k, n, &pa.data, b, ptr, shift, lo, hi);
+    });
+}
+
 /// `C (m×n) += A (m×k) · B (k×n)` in the shifted-product wrapping-sum
 /// semantics, all row-major, output columns sharded across up to
-/// `threads` pool workers. Bit-identical at any thread count.
+/// `threads` pool workers. Packs A into tile order per call (O(m·k),
+/// negligible next to the O(m·k·n) multiply). Bit-identical at any
+/// thread count.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_nn_mt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[Fx],
+    b: &[Fx],
+    c: &mut [i32],
+    shift: u32,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A must be m×k");
+    assert_eq!(b.len(), k * n, "B must be k×n");
+    assert_eq!(c.len(), m * n, "C must be m×n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let pa = QPackedA::pack(m, k, a);
+    gemm_nn_packed_mt(&pa, n, b, c, shift, threads);
+}
+
+/// The pre-tiling NN kernel, kept verbatim: scalar axpy rows that
+/// **skip zero A operands**. Wins over the tiled kernel only when A is
+/// a sparse post-ReLU activation matrix and n is small (the dense
+/// head's `batch×8192 · 8192×10`); the `gemm` micro-rung in
+/// `benches/speedup.rs` pins that choice. Bit-identical to
+/// [`gemm_nn_mt`] (a zero operand contributes an exactly-zero term).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn_skipa_mt(
     m: usize,
     k: usize,
     n: usize,
@@ -79,19 +306,19 @@ pub fn gemm_nn_mt(
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {
-        gemm_nn_range(m, k, n, a, b, ptr, shift, 0, n);
+        gemm_nn_skipa_range(m, k, n, a, b, ptr, shift, 0, n);
         return;
     }
     let ranges = col_ranges(n, workers);
     pool::run(ranges.len(), |wi| {
         let (lo, hi) = ranges[wi];
-        gemm_nn_range(m, k, n, a, b, ptr, shift, lo, hi);
+        gemm_nn_skipa_range(m, k, n, a, b, ptr, shift, lo, hi);
     });
 }
 
-/// Panel-blocked NN kernel over output columns `lo..hi`.
+/// Panel-blocked zero-skipping NN kernel over output columns `lo..hi`.
 #[allow(clippy::too_many_arguments)]
-fn gemm_nn_range(
+fn gemm_nn_skipa_range(
     m: usize,
     k: usize,
     n: usize,
@@ -123,6 +350,196 @@ fn gemm_nn_range(
     }
 }
 
+/// Fused-epilogue variant of [`nn_tile`]: accumulators start at zero
+/// and the Q4.12 `to_fx_fmt` round/saturate (plus optional ReLU) runs
+/// at the C-tile store.
+///
+/// # Safety
+/// Same contract as [`nn_tile`], with `out` the `m×n` `Fx` output.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn nn_tile_fused<const MR_: usize>(
+    k: usize,
+    n: usize,
+    ap: &[Fx],
+    b: &[Fx],
+    out: *mut Fx,
+    i0: usize,
+    jj: usize,
+    half: i32,
+    shift: u32,
+    relu: bool,
+) {
+    let mut acc = [[0i32; NR]; MR_];
+    for kk in 0..k {
+        let bq = &b[kk * n + jj..kk * n + jj + NR];
+        for (mi, row) in acc.iter_mut().enumerate() {
+            let ai = ap[kk * MR_ + mi].raw() as i32;
+            for (v, &bv) in row.iter_mut().zip(bq) {
+                *v = v.wrapping_add((ai * bv.raw() as i32 + half) >> shift);
+            }
+        }
+    }
+    for (mi, row) in acc.iter().enumerate() {
+        let orow = out.add((i0 + mi) * n + jj);
+        for (u, &v) in row.iter().enumerate() {
+            let fx = Acc::from_raw(v).to_fx_fmt(shift);
+            *orow.add(u) = if relu { fx.relu() } else { fx };
+        }
+    }
+}
+
+/// Tiled fused NN kernel over output columns `lo..hi`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_fused_range(
+    m: usize,
+    k: usize,
+    n: usize,
+    pa: &[Fx],
+    b: &[Fx],
+    out: SendPtr<Fx>,
+    shift: u32,
+    relu: bool,
+    lo: usize,
+    hi: usize,
+) {
+    let half = round_half(shift);
+    for j0 in (lo..hi).step_by(PANEL) {
+        let j1 = (j0 + PANEL).min(hi);
+        for i0 in (0..m).step_by(MR) {
+            let mr_i = MR.min(m - i0);
+            let ap = &pa[i0 * k..i0 * k + mr_i * k];
+            let mut jj = j0;
+            // Safety: this task is the only writer of columns lo..hi.
+            unsafe {
+                while jj + NR <= j1 {
+                    match mr_i {
+                        4 => nn_tile_fused::<4>(k, n, ap, b, out.0, i0, jj, half, shift, relu),
+                        3 => nn_tile_fused::<3>(k, n, ap, b, out.0, i0, jj, half, shift, relu),
+                        2 => nn_tile_fused::<2>(k, n, ap, b, out.0, i0, jj, half, shift, relu),
+                        _ => nn_tile_fused::<1>(k, n, ap, b, out.0, i0, jj, half, shift, relu),
+                    }
+                    jj += NR;
+                }
+            }
+            for j in jj..j1 {
+                for mi in 0..mr_i {
+                    let mut acc = 0i32;
+                    for kk in 0..k {
+                        let ai = ap[kk * mr_i + mi].raw() as i32;
+                        acc = acc.wrapping_add((ai * b[kk * n + j].raw() as i32 + half) >> shift);
+                    }
+                    let fx = Acc::from_raw(acc).to_fx_fmt(shift);
+                    // Safety: as above — sole writer of this column range.
+                    unsafe {
+                        *out.0.add((i0 + mi) * n + j) = if relu { fx.relu() } else { fx };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fused conv epilogue with a snapshot-packed A: `out = wb(A·B)` where
+/// `wb` is `Acc::to_fx_fmt(shift)` (and ReLU when `relu`), applied
+/// inside the microkernel's C-tile store so the i32 accumulator never
+/// round-trips through memory. `shift` doubles as the per-product
+/// barrel shift and the writeback format shift — exactly `qnn`'s conv
+/// forward, where both equal `acc_fmt_shift(kdim)`. **Overwrites**
+/// `out` (no accumulate semantics). Bit-identical to running
+/// [`gemm_nn_mt`] into a zeroed i32 buffer and mapping the writeback
+/// after.
+pub fn gemm_nn_fused_packed_mt(
+    pa: &QPackedA,
+    n: usize,
+    b: &[Fx],
+    out: &mut [Fx],
+    shift: u32,
+    relu: bool,
+    threads: usize,
+) {
+    let (m, k) = (pa.m, pa.k);
+    assert_eq!(b.len(), k * n, "B must be k×n");
+    assert_eq!(out.len(), m * n, "out must be m×n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let workers = plan_workers(threads, m * k * n, n);
+    let ptr = SendPtr(out.as_mut_ptr());
+    if workers <= 1 {
+        gemm_nn_fused_range(m, k, n, &pa.data, b, ptr, shift, relu, 0, n);
+        return;
+    }
+    let ranges = col_ranges(n, workers);
+    pool::run(ranges.len(), |wi| {
+        let (lo, hi) = ranges[wi];
+        gemm_nn_fused_range(m, k, n, &pa.data, b, ptr, shift, relu, lo, hi);
+    });
+}
+
+/// [`gemm_nn_fused_packed_mt`] packing A per call.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn_fused_mt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[Fx],
+    b: &[Fx],
+    out: &mut [Fx],
+    shift: u32,
+    relu: bool,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A must be m×k");
+    let pa = QPackedA::pack(m, k, a);
+    gemm_nn_fused_packed_mt(&pa, n, b, out, shift, relu, threads);
+}
+
+/// One `KR_`×[`NR`] register tile of the TN kernel: C rows
+/// `kk0..kk0+KR_`, accumulated over all m samples with i ascending.
+///
+/// # Safety
+/// The caller must own output columns `jj..jj+NR` of C rows
+/// `kk0..kk0+KR_`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tn_tile<const KR_: usize>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[Fx],
+    b: &[Fx],
+    c: *mut i32,
+    kk0: usize,
+    jj: usize,
+    half: i32,
+    shift: u32,
+) {
+    let mut acc = [[0i32; NR]; KR_];
+    for (t, row) in acc.iter_mut().enumerate() {
+        let crow = c.add((kk0 + t) * n + jj);
+        for (u, v) in row.iter_mut().enumerate() {
+            *v = *crow.add(u);
+        }
+    }
+    for i in 0..m {
+        let a_seg = &a[i * k + kk0..i * k + kk0 + KR_];
+        let b_seg = &b[i * n + jj..i * n + jj + NR];
+        for (t, row) in acc.iter_mut().enumerate() {
+            let ai = a_seg[t].raw() as i32;
+            for (v, &bv) in row.iter_mut().zip(b_seg) {
+                *v = v.wrapping_add((ai * bv.raw() as i32 + half) >> shift);
+            }
+        }
+    }
+    for (t, row) in acc.iter().enumerate() {
+        let crow = c.add((kk0 + t) * n + jj);
+        for (u, &v) in row.iter().enumerate() {
+            *crow.add(u) = v;
+        }
+    }
+}
+
 /// `C (k×n) += Aᵀ · B` where `A` is `m×k` and `B` is `m×n`, shifted-
 /// product wrapping-sum semantics, columns sharded across pool workers.
 #[allow(clippy::too_many_arguments)]
@@ -145,18 +562,20 @@ pub fn gemm_tn_mt(
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {
-        gemm_tn_range(k, n, a, b, ptr, shift, 0, n);
+        gemm_tn_range(m, k, n, a, b, ptr, shift, 0, n);
         return;
     }
     let ranges = col_ranges(n, workers);
     pool::run(ranges.len(), |wi| {
         let (lo, hi) = ranges[wi];
-        gemm_tn_range(k, n, a, b, ptr, shift, lo, hi);
+        gemm_tn_range(m, k, n, a, b, ptr, shift, lo, hi);
     });
 }
 
+/// Panel-blocked tiled TN kernel over output columns `lo..hi`.
 #[allow(clippy::too_many_arguments)]
 fn gemm_tn_range(
+    m: usize,
     k: usize,
     n: usize,
     a: &[Fx],
@@ -167,23 +586,83 @@ fn gemm_tn_range(
     hi: usize,
 ) {
     let half = round_half(shift);
-    for (a_row, b_row) in a.chunks_exact(k).zip(b.chunks_exact(n)) {
-        for (kk, &av) in a_row.iter().enumerate() {
-            if av.raw() == 0 {
-                continue;
-            }
-            let ai = av.raw() as i32;
+    for j0 in (lo..hi).step_by(PANEL) {
+        let j1 = (j0 + PANEL).min(hi);
+        for kk0 in (0..k).step_by(MR) {
+            let kr = MR.min(k - kk0);
+            let mut jj = j0;
             // Safety: this task is the only writer of columns lo..hi.
-            let c_row = unsafe { std::slice::from_raw_parts_mut(c.0.add(kk * n + lo), hi - lo) };
-            for (cv, &bv) in c_row.iter_mut().zip(&b_row[lo..hi]) {
-                *cv = cv.wrapping_add((ai * bv.raw() as i32 + half) >> shift);
+            unsafe {
+                while jj + NR <= j1 {
+                    match kr {
+                        4 => tn_tile::<4>(m, k, n, a, b, c.0, kk0, jj, half, shift),
+                        3 => tn_tile::<3>(m, k, n, a, b, c.0, kk0, jj, half, shift),
+                        2 => tn_tile::<2>(m, k, n, a, b, c.0, kk0, jj, half, shift),
+                        _ => tn_tile::<1>(m, k, n, a, b, c.0, kk0, jj, half, shift),
+                    }
+                    jj += NR;
+                }
+            }
+            for j in jj..j1 {
+                for t in 0..kr {
+                    // Safety: as above — sole writer of this column range.
+                    let cv = unsafe { &mut *c.0.add((kk0 + t) * n + j) };
+                    let mut acc = *cv;
+                    for i in 0..m {
+                        let ai = a[i * k + kk0 + t].raw() as i32;
+                        acc = acc.wrapping_add((ai * b[i * n + j].raw() as i32 + half) >> shift);
+                    }
+                    *cv = acc;
+                }
             }
         }
     }
 }
 
+/// One `MR_`×[`NT_NR`] register tile of the NT kernel: a block of
+/// contiguous-row dot products sharing both operand streams.
+///
+/// # Safety
+/// The caller must own output columns `j..j+NT_NR` of C rows
+/// `i0..i0+MR_`, and rows `j..j+NT_NR` of B must exist.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn nt_tile<const MR_: usize>(
+    n: usize,
+    kd: usize,
+    a: &[Fx],
+    b: &[Fx],
+    c: *mut i32,
+    i0: usize,
+    j: usize,
+    half: i32,
+    shift: u32,
+) {
+    let mut acc = [[0i32; NT_NR]; MR_];
+    for kk in 0..kd {
+        let mut bq = [0i32; NT_NR];
+        for (u, bv) in bq.iter_mut().enumerate() {
+            *bv = b[(j + u) * kd + kk].raw() as i32;
+        }
+        for (mi, row) in acc.iter_mut().enumerate() {
+            let ai = a[(i0 + mi) * kd + kk].raw() as i32;
+            for (v, &bv) in row.iter_mut().zip(&bq) {
+                *v = v.wrapping_add((ai * bv + half) >> shift);
+            }
+        }
+    }
+    for (mi, row) in acc.iter().enumerate() {
+        let crow = c.add((i0 + mi) * n + j);
+        for (u, &v) in row.iter().enumerate() {
+            let cv = crow.add(u);
+            *cv = (*cv).wrapping_add(v);
+        }
+    }
+}
+
 /// `C (m×n) += A · Bᵀ` where `A` is `m×kd` and `B` is `n×kd`: every
-/// output element is one contiguous-row [`dot_shifted`]. Columns sharded
+/// output element is one contiguous-row [`dot_shifted`], computed in
+/// 4×4 register tiles that share the operand streams. Columns sharded
 /// across pool workers.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_nt_mt(
@@ -227,12 +706,82 @@ fn gemm_nt_range(
     lo: usize,
     hi: usize,
 ) {
-    for i in 0..m {
-        let a_row = &a[i * kd..(i + 1) * kd];
+    let half = round_half(shift);
+    for i0 in (0..m).step_by(MR) {
+        let mr_i = MR.min(m - i0);
+        let mut j = lo;
         // Safety: this task is the only writer of columns lo..hi.
-        let c_row = unsafe { std::slice::from_raw_parts_mut(c.0.add(i * n + lo), hi - lo) };
-        for (cv, b_row) in c_row.iter_mut().zip(b[lo * kd..hi * kd].chunks_exact(kd)) {
-            *cv = cv.wrapping_add(dot_shifted(a_row, b_row, shift));
+        unsafe {
+            while j + NT_NR <= hi {
+                match mr_i {
+                    4 => nt_tile::<4>(n, kd, a, b, c.0, i0, j, half, shift),
+                    3 => nt_tile::<3>(n, kd, a, b, c.0, i0, j, half, shift),
+                    2 => nt_tile::<2>(n, kd, a, b, c.0, i0, j, half, shift),
+                    _ => nt_tile::<1>(n, kd, a, b, c.0, i0, j, half, shift),
+                }
+                j += NT_NR;
+            }
+        }
+        for jr in j..hi {
+            let b_row = &b[jr * kd..(jr + 1) * kd];
+            for mi in 0..mr_i {
+                let a_row = &a[(i0 + mi) * kd..(i0 + mi + 1) * kd];
+                // Safety: as above — sole writer of this column range.
+                let cv = unsafe { &mut *c.0.add((i0 + mi) * n + jr) };
+                *cv = cv.wrapping_add(dot_shifted(a_row, b_row, shift));
+            }
+        }
+    }
+}
+
+/// Scalar single-threaded NN reference: the exact `Acc` chain, element
+/// by element. Pins the microkernels in the parity tests.
+pub fn gemm_nn_ref(m: usize, k: usize, n: usize, a: &[Fx], b: &[Fx], c: &mut [i32], shift: u32) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let half = round_half(shift);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = c[i * n + j];
+            for kk in 0..k {
+                let p = a[i * k + kk].raw() as i32 * b[kk * n + j].raw() as i32;
+                acc = acc.wrapping_add((p + half) >> shift);
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// Scalar single-threaded TN reference (`C (k×n) += Aᵀ·B`, i ascending
+/// per output).
+pub fn gemm_tn_ref(m: usize, k: usize, n: usize, a: &[Fx], b: &[Fx], c: &mut [i32], shift: u32) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    let half = round_half(shift);
+    for kk in 0..k {
+        for j in 0..n {
+            let mut acc = c[kk * n + j];
+            for i in 0..m {
+                let p = a[i * k + kk].raw() as i32 * b[i * n + j].raw() as i32;
+                acc = acc.wrapping_add((p + half) >> shift);
+            }
+            c[kk * n + j] = acc;
+        }
+    }
+}
+
+/// Scalar single-threaded NT reference (`C (m×n) += A·Bᵀ`, one
+/// [`dot_shifted`] per output).
+pub fn gemm_nt_ref(m: usize, n: usize, kd: usize, a: &[Fx], b: &[Fx], c: &mut [i32], shift: u32) {
+    assert_eq!(a.len(), m * kd);
+    assert_eq!(b.len(), n * kd);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let d = dot_shifted(&a[i * kd..(i + 1) * kd], &b[j * kd..(j + 1) * kd], shift);
+            c[i * n + j] = c[i * n + j].wrapping_add(d);
         }
     }
 }
@@ -276,6 +825,61 @@ mod tests {
             gemm_nn_mt(m, k, n, &a, &b, &mut c, shift, 1);
             assert_eq!(c, naive_nn(m, k, n, &a, &b, shift), "m={m} k={k} n={n} s={shift}");
         });
+    }
+
+    #[test]
+    fn prop_skipa_and_fused_match_tiled_nn() {
+        // The zero-skipping legacy kernel, the packed kernel, and the
+        // fused writeback must all agree with the tiled core bit for
+        // bit — including forced zero operands.
+        check("int nn variants agree", 241, 30, |g| {
+            let (m, k, n) = (g.usize_in(1, 6), g.usize_in(1, 10), g.usize_in(1, 20));
+            let shift = g.usize_in(0, 11) as u32;
+            let mut a = rand_fx(g, m * k);
+            for v in a.iter_mut() {
+                if g.usize_in(0, 2) == 0 {
+                    *v = Fx::ZERO;
+                }
+            }
+            let b = rand_fx(g, k * n);
+            let mut c_tiled = vec![0i32; m * n];
+            gemm_nn_mt(m, k, n, &a, &b, &mut c_tiled, shift, 1);
+            let mut c_skip = vec![0i32; m * n];
+            gemm_nn_skipa_mt(m, k, n, &a, &b, &mut c_skip, shift, 1);
+            assert_eq!(c_tiled, c_skip, "skipa m={m} k={k} n={n} s={shift}");
+            let pa = QPackedA::pack(m, k, &a);
+            assert!(pa.matches(m, k, &a));
+            let mut c_packed = vec![0i32; m * n];
+            gemm_nn_packed_mt(&pa, n, &b, &mut c_packed, shift, 1);
+            assert_eq!(c_tiled, c_packed, "packed m={m} k={k} n={n} s={shift}");
+            for relu in [false, true] {
+                let mut fused = vec![Fx::ZERO; m * n];
+                gemm_nn_fused_mt(m, k, n, &a, &b, &mut fused, shift, relu, 1);
+                let unfused: Vec<Fx> = c_tiled
+                    .iter()
+                    .map(|&raw| {
+                        let v = Acc::from_raw(raw).to_fx_fmt(shift);
+                        if relu {
+                            v.relu()
+                        } else {
+                            v
+                        }
+                    })
+                    .collect();
+                assert_eq!(fused, unfused, "fused m={m} k={k} n={n} s={shift} relu={relu}");
+            }
+        });
+    }
+
+    #[test]
+    fn packed_matches_detects_staleness() {
+        let a: Vec<Fx> = (0..6 * 7).map(|i| Fx::from_raw(i as i16 * 31)).collect();
+        let pa = QPackedA::pack(6, 7, &a);
+        assert!(pa.matches(6, 7, &a));
+        let mut stale = a.clone();
+        stale[13] = Fx::from_raw(stale[13].raw().wrapping_add(1));
+        assert!(!pa.matches(6, 7, &stale));
+        assert!(!pa.matches(7, 6, &a));
     }
 
     #[test]
@@ -381,8 +985,8 @@ mod tests {
 
     #[test]
     fn zero_operand_skip_is_exact() {
-        // The inner-loop `a == 0` skip must be invisible: a zero operand
-        // contributes (0 + 2^(s-1)) >> s = 0 at every shift.
+        // The skipa kernel's `a == 0` skip must be invisible: a zero
+        // operand contributes (0 + 2^(s-1)) >> s = 0 at every shift.
         for shift in 0..=12u32 {
             assert_eq!(Fx::ZERO.mul_acc_shifted(Fx::MAX, shift).raw(), 0, "shift {shift}");
             assert_eq!(Fx::ZERO.mul_acc_shifted(Fx::MIN, shift).raw(), 0, "shift {shift}");

@@ -57,14 +57,224 @@ pub use crate::util::pool::MT_MIN_MACS;
 /// keeps a full B-panel plus the C row in L1 at the paper's geometry.
 const PANEL: usize = 256;
 
+/// Microkernel tile height: rows of A (and C) per register tile.
+pub const MR: usize = 4;
+
+/// Microkernel tile width: columns of C per register tile.
+pub const NR: usize = 8;
+
+/// An `m×k` A operand repacked into microkernel-tile order: row blocks
+/// of [`MR`] rows, each block stored column-major
+/// (`data[i0*k + kk*mr_i + mi] = a[(i0+mi)*k + kk]`) so the NN and
+/// fused microkernels stream A with unit stride. Packing is pure data
+/// movement — the tiled kernels run the identical per-output k-ascending
+/// FP-add chain either way, so results are bit-identical. Weight
+/// snapshots (serving replicas) pack once at `clone_replica` and reuse
+/// across every forward call.
+#[derive(Clone, Debug)]
+pub struct PackedA {
+    m: usize,
+    k: usize,
+    data: Vec<f32>,
+}
+
+impl PackedA {
+    pub fn pack(m: usize, k: usize, a: &[f32]) -> PackedA {
+        assert_eq!(a.len(), m * k, "A must be m×k");
+        let mut data = vec![0.0f32; m * k];
+        let mut w = 0;
+        for i0 in (0..m).step_by(MR) {
+            let mr_i = MR.min(m - i0);
+            for kk in 0..k {
+                for mi in 0..mr_i {
+                    data[w] = a[(i0 + mi) * k + kk];
+                    w += 1;
+                }
+            }
+        }
+        PackedA { m, k, data }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// True when this pack is bit-for-bit the pack of `a` — the
+    /// freshness check behind the packed-weight-cache debug asserts.
+    pub fn matches(&self, m: usize, k: usize, a: &[f32]) -> bool {
+        if self.m != m || self.k != k || a.len() != m * k {
+            return false;
+        }
+        let mut r = 0;
+        for i0 in (0..m).step_by(MR) {
+            let mr_i = MR.min(m - i0);
+            for kk in 0..k {
+                for mi in 0..mr_i {
+                    if self.data[r].to_bits() != a[(i0 + mi) * k + kk].to_bits() {
+                        return false;
+                    }
+                    r += 1;
+                }
+            }
+        }
+        true
+    }
+}
+
 /// `C (m×n) += A (m×k) · B (k×n)`, all row-major, single-threaded.
 pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     gemm_nn_mt(m, k, n, a, b, c, 1);
 }
 
 /// [`gemm_nn`] with the output columns sharded across up to `threads`
-/// persistent-pool workers. Bit-identical to the single-threaded path.
+/// persistent-pool workers. Packs A into tile order per call (O(m·k),
+/// negligible next to the O(m·k·n) multiply). Bit-identical to the
+/// single-threaded path: each output element is one k-ascending FP-add
+/// chain regardless of tiling or sharding.
 pub fn gemm_nn_mt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A must be m×k");
+    assert_eq!(b.len(), k * n, "B must be k×n");
+    assert_eq!(c.len(), m * n, "C must be m×n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let pa = PackedA::pack(m, k, a);
+    gemm_nn_packed_mt(&pa, n, b, c, threads);
+}
+
+/// `C (m×n) += A · B (k×n)` with A pre-packed in tile order — the
+/// snapshot-packed serving path. Bit-identical to [`gemm_nn_mt`].
+pub fn gemm_nn_packed_mt(pa: &PackedA, n: usize, b: &[f32], c: &mut [f32], threads: usize) {
+    let (m, k) = (pa.m, pa.k);
+    assert_eq!(b.len(), k * n, "B must be k×n");
+    assert_eq!(c.len(), m * n, "C must be m×n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let workers = plan_workers(threads, m * k * n, n);
+    let ptr = SendPtr(c.as_mut_ptr());
+    if workers <= 1 {
+        gemm_nn_packed_range(m, k, n, &pa.data, b, ptr, 0, n);
+        return;
+    }
+    let ranges = col_ranges(n, workers);
+    pool::run(ranges.len(), |wi| {
+        let (lo, hi) = ranges[wi];
+        gemm_nn_packed_range(m, k, n, &pa.data, b, ptr, lo, hi);
+    });
+}
+
+/// One `MR_`×[`NR`] register tile of the packed NN kernel: accumulators
+/// load from C, run the k-ascending FP-add chain, store back — the same
+/// per-output chain as a scalar axpy loop over a zero-initialized C, so
+/// the tiling is bit-invisible.
+///
+/// # Safety
+/// The caller must own output columns `jj..jj+NR` of rows `i0..i0+MR_`,
+/// and `ap` must be the packed block for those rows (length `MR_*k`).
+#[inline(always)]
+unsafe fn nn_tile<const MR_: usize>(
+    k: usize,
+    n: usize,
+    ap: &[f32],
+    b: &[f32],
+    c: *mut f32,
+    i0: usize,
+    jj: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR_];
+    for (mi, row) in acc.iter_mut().enumerate() {
+        let crow = c.add((i0 + mi) * n + jj);
+        for (u, v) in row.iter_mut().enumerate() {
+            *v = *crow.add(u);
+        }
+    }
+    for kk in 0..k {
+        let bq = &b[kk * n + jj..kk * n + jj + NR];
+        for (mi, row) in acc.iter_mut().enumerate() {
+            let av = ap[kk * MR_ + mi];
+            for (v, &bv) in row.iter_mut().zip(bq) {
+                *v += av * bv;
+            }
+        }
+    }
+    for (mi, row) in acc.iter().enumerate() {
+        let crow = c.add((i0 + mi) * n + jj);
+        for (u, &v) in row.iter().enumerate() {
+            *crow.add(u) = v;
+        }
+    }
+}
+
+/// Panel-blocked tiled NN kernel over output columns `lo..hi`, reading
+/// A in [`PackedA`] order. Every output element's k-loop order never
+/// depends on `(lo, hi)` or the tile shape, so any column sharding
+/// produces bit-identical sums.
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_packed_range(
+    m: usize,
+    k: usize,
+    n: usize,
+    pa: &[f32],
+    b: &[f32],
+    c: SendPtr<f32>,
+    lo: usize,
+    hi: usize,
+) {
+    for j0 in (lo..hi).step_by(PANEL) {
+        let j1 = (j0 + PANEL).min(hi);
+        for i0 in (0..m).step_by(MR) {
+            let mr_i = MR.min(m - i0);
+            let ap = &pa[i0 * k..i0 * k + mr_i * k];
+            let mut jj = j0;
+            // Safety: this worker is the only writer of columns lo..hi.
+            unsafe {
+                while jj + NR <= j1 {
+                    match mr_i {
+                        4 => nn_tile::<4>(k, n, ap, b, c.0, i0, jj),
+                        3 => nn_tile::<3>(k, n, ap, b, c.0, i0, jj),
+                        2 => nn_tile::<2>(k, n, ap, b, c.0, i0, jj),
+                        _ => nn_tile::<1>(k, n, ap, b, c.0, i0, jj),
+                    }
+                    jj += NR;
+                }
+            }
+            for j in jj..j1 {
+                for mi in 0..mr_i {
+                    // Safety: as above — sole writer of this column range.
+                    let cv = unsafe { &mut *c.0.add((i0 + mi) * n + j) };
+                    let mut acc = *cv;
+                    for kk in 0..k {
+                        acc += ap[kk * mr_i + mi] * b[kk * n + j];
+                    }
+                    *cv = acc;
+                }
+            }
+        }
+    }
+}
+
+/// The pre-tiling NN kernel, kept verbatim: scalar axpy rows that
+/// **skip zero A operands**. The skip branch mispredicts on dense A
+/// (conv kernels), but wins when A is a sparse post-ReLU activation
+/// matrix and n is small — the dense head's `batch×8192 · 8192×10`,
+/// where one skipped row avoids the whole 10-wide axpy. The `gemm`
+/// micro-rung in `benches/speedup.rs` pins that choice. Bit-identical
+/// to [`gemm_nn_mt`]: with C zero-initialized (+0.0, as every caller
+/// does), adding the skipped `±0.0` products is an exact FP identity.
+pub fn gemm_nn_skipa_mt(
     m: usize,
     k: usize,
     n: usize,
@@ -82,21 +292,19 @@ pub fn gemm_nn_mt(
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {
-        gemm_nn_range(m, k, n, a, b, ptr, 0, n);
+        gemm_nn_skipa_range(m, k, n, a, b, ptr, 0, n);
         return;
     }
     let ranges = col_ranges(n, workers);
     pool::run(ranges.len(), |wi| {
         let (lo, hi) = ranges[wi];
-        gemm_nn_range(m, k, n, a, b, ptr, lo, hi);
+        gemm_nn_skipa_range(m, k, n, a, b, ptr, lo, hi);
     });
 }
 
-/// The panel-blocked NN kernel over output columns `lo..hi`. The k-loop
-/// order per output element never depends on `(lo, hi)`, so any column
-/// sharding produces bit-identical sums.
+/// Panel-blocked zero-skipping NN kernel over output columns `lo..hi`.
 #[allow(clippy::too_many_arguments)]
-fn gemm_nn_range(
+fn gemm_nn_skipa_range(
     m: usize,
     k: usize,
     n: usize,
@@ -125,6 +333,139 @@ fn gemm_nn_range(
     }
 }
 
+/// Fused-epilogue variant of [`nn_tile`]: accumulators start at `0.0`
+/// and the optional ReLU (`max(0.0)`) runs at the C-tile store.
+///
+/// # Safety
+/// Same contract as [`nn_tile`], with `out` the `m×n` output.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn nn_tile_fused<const MR_: usize>(
+    k: usize,
+    n: usize,
+    ap: &[f32],
+    b: &[f32],
+    out: *mut f32,
+    i0: usize,
+    jj: usize,
+    relu: bool,
+) {
+    let mut acc = [[0.0f32; NR]; MR_];
+    for kk in 0..k {
+        let bq = &b[kk * n + jj..kk * n + jj + NR];
+        for (mi, row) in acc.iter_mut().enumerate() {
+            let av = ap[kk * MR_ + mi];
+            for (v, &bv) in row.iter_mut().zip(bq) {
+                *v += av * bv;
+            }
+        }
+    }
+    for (mi, row) in acc.iter().enumerate() {
+        let orow = out.add((i0 + mi) * n + jj);
+        for (u, &v) in row.iter().enumerate() {
+            *orow.add(u) = if relu { v.max(0.0) } else { v };
+        }
+    }
+}
+
+/// Tiled fused NN kernel over output columns `lo..hi`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_fused_range(
+    m: usize,
+    k: usize,
+    n: usize,
+    pa: &[f32],
+    b: &[f32],
+    out: SendPtr<f32>,
+    relu: bool,
+    lo: usize,
+    hi: usize,
+) {
+    for j0 in (lo..hi).step_by(PANEL) {
+        let j1 = (j0 + PANEL).min(hi);
+        for i0 in (0..m).step_by(MR) {
+            let mr_i = MR.min(m - i0);
+            let ap = &pa[i0 * k..i0 * k + mr_i * k];
+            let mut jj = j0;
+            // Safety: this worker is the only writer of columns lo..hi.
+            unsafe {
+                while jj + NR <= j1 {
+                    match mr_i {
+                        4 => nn_tile_fused::<4>(k, n, ap, b, out.0, i0, jj, relu),
+                        3 => nn_tile_fused::<3>(k, n, ap, b, out.0, i0, jj, relu),
+                        2 => nn_tile_fused::<2>(k, n, ap, b, out.0, i0, jj, relu),
+                        _ => nn_tile_fused::<1>(k, n, ap, b, out.0, i0, jj, relu),
+                    }
+                    jj += NR;
+                }
+            }
+            for j in jj..j1 {
+                for mi in 0..mr_i {
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += ap[kk * mr_i + mi] * b[kk * n + j];
+                    }
+                    // Safety: as above — sole writer of this column range.
+                    unsafe {
+                        *out.0.add((i0 + mi) * n + j) = if relu { acc.max(0.0) } else { acc };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fused conv+ReLU epilogue with a snapshot-packed A: `out = A·B` with
+/// the activation (`max(0.0)`, when `relu`) applied inside the
+/// microkernel's C-tile store, eliminating one full pass over the
+/// output. **Overwrites** `out` (no accumulate semantics).
+/// Bit-identical to [`gemm_nn_mt`] into a zeroed buffer followed by
+/// `relu::forward_vec` — same k-ascending chain from `0.0`, same
+/// `max(0.0)` per element.
+pub fn gemm_nn_fused_packed_mt(
+    pa: &PackedA,
+    n: usize,
+    b: &[f32],
+    out: &mut [f32],
+    relu: bool,
+    threads: usize,
+) {
+    let (m, k) = (pa.m, pa.k);
+    assert_eq!(b.len(), k * n, "B must be k×n");
+    assert_eq!(out.len(), m * n, "out must be m×n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let workers = plan_workers(threads, m * k * n, n);
+    let ptr = SendPtr(out.as_mut_ptr());
+    if workers <= 1 {
+        gemm_nn_fused_range(m, k, n, &pa.data, b, ptr, relu, 0, n);
+        return;
+    }
+    let ranges = col_ranges(n, workers);
+    pool::run(ranges.len(), |wi| {
+        let (lo, hi) = ranges[wi];
+        gemm_nn_fused_range(m, k, n, &pa.data, b, ptr, relu, lo, hi);
+    });
+}
+
+/// [`gemm_nn_fused_packed_mt`] packing A per call.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nn_fused_mt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    relu: bool,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A must be m×k");
+    let pa = PackedA::pack(m, k, a);
+    gemm_nn_fused_packed_mt(&pa, n, b, out, relu, threads);
+}
+
 /// `C (k×n) += Aᵀ · B` where `A` is `m×k` and `B` is `m×n`, row-major,
 /// single-threaded. (Transposition is implicit: A is read row by row,
 /// scattering into C rows, so every inner loop still runs over
@@ -134,7 +475,9 @@ pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]
 }
 
 /// [`gemm_tn`] with the output columns sharded across up to `threads`
-/// persistent-pool workers. Bit-identical to the single-threaded path.
+/// persistent-pool workers. Bit-identical to the single-threaded path:
+/// each output element is one i-ascending (sample-ascending) FP-add
+/// chain regardless of tiling or sharding.
 pub fn gemm_tn_mt(
     m: usize,
     k: usize,
@@ -153,19 +496,150 @@ pub fn gemm_tn_mt(
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {
-        gemm_tn_range(k, n, a, b, ptr, 0, n);
+        gemm_tn_range(m, k, n, a, b, ptr, 0, n);
         return;
     }
     let ranges = col_ranges(n, workers);
     pool::run(ranges.len(), |wi| {
         let (lo, hi) = ranges[wi];
-        gemm_tn_range(k, n, a, b, ptr, lo, hi);
+        gemm_tn_range(m, k, n, a, b, ptr, lo, hi);
     });
 }
 
-/// The TN kernel over output columns `lo..hi`: the row-loop (reduction)
-/// order per output element never depends on `(lo, hi)`.
-fn gemm_tn_range(k: usize, n: usize, a: &[f32], b: &[f32], c: SendPtr<f32>, lo: usize, hi: usize) {
+/// One `KR_`×[`NR`] register tile of the TN kernel: C rows
+/// `kk0..kk0+KR_`, accumulated over all m samples with i ascending —
+/// the same per-output chain as the scalar scatter loop.
+///
+/// # Safety
+/// The caller must own output columns `jj..jj+NR` of C rows
+/// `kk0..kk0+KR_`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tn_tile<const KR_: usize>(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: *mut f32,
+    kk0: usize,
+    jj: usize,
+) {
+    let mut acc = [[0.0f32; NR]; KR_];
+    for (t, row) in acc.iter_mut().enumerate() {
+        let crow = c.add((kk0 + t) * n + jj);
+        for (u, v) in row.iter_mut().enumerate() {
+            *v = *crow.add(u);
+        }
+    }
+    for i in 0..m {
+        let a_seg = &a[i * k + kk0..i * k + kk0 + KR_];
+        let b_seg = &b[i * n + jj..i * n + jj + NR];
+        for (t, row) in acc.iter_mut().enumerate() {
+            let av = a_seg[t];
+            for (v, &bv) in row.iter_mut().zip(b_seg) {
+                *v += av * bv;
+            }
+        }
+    }
+    for (t, row) in acc.iter().enumerate() {
+        let crow = c.add((kk0 + t) * n + jj);
+        for (u, &v) in row.iter().enumerate() {
+            *crow.add(u) = v;
+        }
+    }
+}
+
+/// Panel-blocked tiled TN kernel over output columns `lo..hi`: the
+/// row-loop (reduction) order per output element never depends on
+/// `(lo, hi)` or the tile shape.
+#[allow(clippy::too_many_arguments)]
+fn gemm_tn_range(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: SendPtr<f32>,
+    lo: usize,
+    hi: usize,
+) {
+    for j0 in (lo..hi).step_by(PANEL) {
+        let j1 = (j0 + PANEL).min(hi);
+        for kk0 in (0..k).step_by(MR) {
+            let kr = MR.min(k - kk0);
+            let mut jj = j0;
+            // Safety: this worker is the only writer of columns lo..hi.
+            unsafe {
+                while jj + NR <= j1 {
+                    match kr {
+                        4 => tn_tile::<4>(m, k, n, a, b, c.0, kk0, jj),
+                        3 => tn_tile::<3>(m, k, n, a, b, c.0, kk0, jj),
+                        2 => tn_tile::<2>(m, k, n, a, b, c.0, kk0, jj),
+                        _ => tn_tile::<1>(m, k, n, a, b, c.0, kk0, jj),
+                    }
+                    jj += NR;
+                }
+            }
+            for j in jj..j1 {
+                for t in 0..kr {
+                    // Safety: as above — sole writer of this column range.
+                    let cv = unsafe { &mut *c.0.add((kk0 + t) * n + j) };
+                    let mut acc = *cv;
+                    for i in 0..m {
+                        acc += a[i * k + kk0 + t] * b[i * n + j];
+                    }
+                    *cv = acc;
+                }
+            }
+        }
+    }
+}
+
+/// The pre-tiling TN kernel, kept verbatim: scalar scatter rows that
+/// **skip zero A operands**. Wins when A is a sparse post-ReLU
+/// activation matrix and n is small (the dense weight gradient's
+/// `Xᵀ (8192×B) · dY (B×10)`, where one skipped activation avoids a
+/// whole 10-wide axpy). Bit-identical to [`gemm_tn_mt`] under the same
+/// zero-initialized-C argument as [`gemm_nn_skipa_mt`].
+pub fn gemm_tn_skipa_mt(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A must be m×k");
+    assert_eq!(b.len(), m * n, "B must be m×n");
+    assert_eq!(c.len(), k * n, "C must be k×n");
+    if k == 0 || n == 0 {
+        return;
+    }
+    let workers = plan_workers(threads, m * k * n, n);
+    let ptr = SendPtr(c.as_mut_ptr());
+    if workers <= 1 {
+        gemm_tn_skipa_range(k, n, a, b, ptr, 0, n);
+        return;
+    }
+    let ranges = col_ranges(n, workers);
+    pool::run(ranges.len(), |wi| {
+        let (lo, hi) = ranges[wi];
+        gemm_tn_skipa_range(k, n, a, b, ptr, lo, hi);
+    });
+}
+
+/// The zero-skipping TN kernel over output columns `lo..hi`.
+fn gemm_tn_skipa_range(
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: SendPtr<f32>,
+    lo: usize,
+    hi: usize,
+) {
     for (a_row, b_row) in a.chunks_exact(k).zip(b.chunks_exact(n)) {
         for (kk, &av) in a_row.iter().enumerate() {
             if av == 0.0 {
@@ -188,7 +662,9 @@ pub fn gemm_nt(m: usize, n: usize, kd: usize, a: &[f32], b: &[f32], c: &mut [f32
 }
 
 /// [`gemm_nt`] with the output columns sharded across up to `threads`
-/// persistent-pool workers. Bit-identical to the single-threaded path.
+/// persistent-pool workers. Bit-identical to the single-threaded path:
+/// every output element runs exactly [`dot`]'s operation sequence,
+/// whether computed alone or inside a 2×2 tile.
 pub fn gemm_nt_mt(
     m: usize,
     n: usize,
@@ -217,8 +693,67 @@ pub fn gemm_nt_mt(
     });
 }
 
-/// The NT kernel over output columns `lo..hi`: each element is one
-/// [`dot`], whose accumulation order never depends on `(lo, hi)`.
+/// A 2×2 NT register tile: four [`dot`]-structured reductions sharing
+/// both operand streams (each A row is read once for two outputs, each
+/// B row once for two outputs). Every output's FP operation sequence —
+/// 8-accumulator chunks, scalar tail, fixed reduction tree — is exactly
+/// [`dot`]'s, so the tile is bit-invisible.
+///
+/// # Safety
+/// The caller must own output columns `j..j+2` of C rows `i0..i0+2`;
+/// all four slices must have length `kd`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn nt_tile_2x2(
+    n: usize,
+    kd: usize,
+    a0: &[f32],
+    a1: &[f32],
+    b0: &[f32],
+    b1: &[f32],
+    c: *mut f32,
+    i0: usize,
+    j: usize,
+) {
+    let mut acc00 = [0.0f32; 8];
+    let mut acc01 = [0.0f32; 8];
+    let mut acc10 = [0.0f32; 8];
+    let mut acc11 = [0.0f32; 8];
+    let chunks = kd / 8 * 8;
+    let mut o = 0;
+    while o < chunks {
+        for l in 0..8 {
+            let x0 = a0[o + l];
+            let x1 = a1[o + l];
+            let y0 = b0[o + l];
+            let y1 = b1[o + l];
+            acc00[l] += x0 * y0;
+            acc01[l] += x0 * y1;
+            acc10[l] += x1 * y0;
+            acc11[l] += x1 * y1;
+        }
+        o += 8;
+    }
+    let (mut t00, mut t01, mut t10, mut t11) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for l in chunks..kd {
+        let x0 = a0[l];
+        let x1 = a1[l];
+        let y0 = b0[l];
+        let y1 = b1[l];
+        t00 += x0 * y0;
+        t01 += x0 * y1;
+        t10 += x1 * y0;
+        t11 += x1 * y1;
+    }
+    *c.add(i0 * n + j) += dot_reduce(t00, &acc00);
+    *c.add(i0 * n + j + 1) += dot_reduce(t01, &acc01);
+    *c.add((i0 + 1) * n + j) += dot_reduce(t10, &acc10);
+    *c.add((i0 + 1) * n + j + 1) += dot_reduce(t11, &acc11);
+}
+
+/// The tiled NT kernel over output columns `lo..hi`: 2×2 tiles of
+/// [`dot`]-identical reductions, with row/column remainders falling
+/// back to per-output [`dot`] calls.
 #[allow(clippy::too_many_arguments)]
 fn gemm_nt_range(
     m: usize,
@@ -230,14 +765,44 @@ fn gemm_nt_range(
     lo: usize,
     hi: usize,
 ) {
-    for i in 0..m {
-        let a_row = &a[i * kd..(i + 1) * kd];
+    let mut i0 = 0;
+    while i0 + 2 <= m {
+        let a0 = &a[i0 * kd..(i0 + 1) * kd];
+        let a1 = &a[(i0 + 1) * kd..(i0 + 2) * kd];
+        let mut j = lo;
         // Safety: this worker is the only writer of columns lo..hi.
-        let c_row = unsafe { std::slice::from_raw_parts_mut(c.0.add(i * n + lo), hi - lo) };
-        for (cv, b_row) in c_row.iter_mut().zip(b[lo * kd..hi * kd].chunks_exact(kd)) {
-            *cv += dot(a_row, b_row);
+        unsafe {
+            while j + 2 <= hi {
+                let b0 = &b[j * kd..(j + 1) * kd];
+                let b1 = &b[(j + 1) * kd..(j + 2) * kd];
+                nt_tile_2x2(n, kd, a0, a1, b0, b1, c.0, i0, j);
+                j += 2;
+            }
+            for jr in j..hi {
+                let b_row = &b[jr * kd..(jr + 1) * kd];
+                *c.0.add(i0 * n + jr) += dot(a0, b_row);
+                *c.0.add((i0 + 1) * n + jr) += dot(a1, b_row);
+            }
+        }
+        i0 += 2;
+    }
+    if i0 < m {
+        let a_row = &a[i0 * kd..(i0 + 1) * kd];
+        for jr in lo..hi {
+            let b_row = &b[jr * kd..(jr + 1) * kd];
+            // Safety: as above — sole writer of this column range.
+            unsafe {
+                *c.0.add(i0 * n + jr) += dot(a_row, b_row);
+            }
         }
     }
+}
+
+/// [`dot`]'s fixed reduction tree over its 8 accumulators plus the
+/// scalar tail — factored out so the NT tile provably shares it.
+#[inline(always)]
+fn dot_reduce(tail: f32, acc: &[f32; 8]) -> f32 {
+    tail + ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
 }
 
 /// Unrolled dot product: 8 independent accumulators break the sequential
@@ -258,7 +823,54 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     for (&x, &y) in ra.iter().zip(rb) {
         tail += x * y;
     }
-    tail + ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+    dot_reduce(tail, &acc)
+}
+
+/// Scalar single-threaded NN reference (`C += A·B`, one k-ascending
+/// chain per output). Pins the microkernels in the parity tests.
+pub fn gemm_nn_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = c[i * n + j];
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// Scalar single-threaded TN reference (`C (k×n) += Aᵀ·B`, one
+/// i-ascending chain per output).
+pub fn gemm_tn_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    for kk in 0..k {
+        for j in 0..n {
+            let mut acc = c[kk * n + j];
+            for i in 0..m {
+                acc += a[i * k + kk] * b[i * n + j];
+            }
+            c[kk * n + j] = acc;
+        }
+    }
+}
+
+/// Scalar single-threaded NT reference (`C (m×n) += A·Bᵀ`, one [`dot`]
+/// per output).
+pub fn gemm_nt_ref(m: usize, n: usize, kd: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * kd);
+    assert_eq!(b.len(), n * kd);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            c[i * n + j] += dot(&a[i * kd..(i + 1) * kd], &b[j * kd..(j + 1) * kd]);
+        }
+    }
 }
 
 /// Pack a CHW input into the `(Cin·Kh·Kw) × (Oh·Ow)` column matrix for a
@@ -297,13 +909,46 @@ pub fn im2col_batch<T: Copy + Default>(
     pad: usize,
     threads: usize,
 ) -> (Vec<T>, usize, usize) {
+    let mut cols = Vec::new();
+    let (oh, ow) = im2col_batch_into(x, batch, cin, h, w, kh, kw, stride, pad, threads, &mut cols);
+    (cols, oh, ow)
+}
+
+/// True when a conv's column matrix *is* its channel-major packed input
+/// (1×1 kernel, stride 1, no padding) — the im2col copy can be elided
+/// bit-exactly, because every column is the single in-image tap at the
+/// same spatial index.
+pub fn im2col_elidable(kh: usize, kw: usize, stride: usize, pad: usize) -> bool {
+    kh == 1 && kw == 1 && stride == 1 && pad == 0
+}
+
+/// [`im2col_batch`] into a caller-provided buffer, so serve batches and
+/// train steps reuse one allocation instead of churning a multi-MB
+/// column matrix per call. The buffer is cleared and zero-filled to the
+/// exact size first (out-of-image taps must read `T::default()`), then
+/// packed identically to [`im2col_batch`].
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_batch_into<T: Copy + Default>(
+    x: &[T],
+    batch: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    threads: usize,
+    cols: &mut Vec<T>,
+) -> (usize, usize) {
     assert!(batch > 0, "empty batch");
     assert_eq!(x.len(), cin * batch * h * w, "packed input size");
     let oh = out_size(h, kh, stride, pad);
     let ow = out_size(w, kw, stride, pad);
     let n = oh * ow;
     let bn = batch * n;
-    let mut cols = vec![T::default(); cin * kh * kw * bn];
+    cols.clear();
+    cols.resize(cin * kh * kw * bn, T::default());
     let workers = plan_workers(threads, cols.len(), batch);
     let ptr = SendPtr(cols.as_mut_ptr());
     let pack_images = |b0: usize, b1: usize| {
@@ -347,7 +992,7 @@ pub fn im2col_batch<T: Copy + Default>(
             pack_images(b0, b1);
         });
     }
-    (cols, oh, ow)
+    (oh, ow)
 }
 
 /// Scatter-add a `(Cin·Kh·Kw) × (B·Oh·Ow)` column-gradient matrix back
@@ -423,10 +1068,15 @@ fn col2im_batch(
 /// Forward convolution (paper Eq. 1) via im2col + GEMM. Drop-in
 /// replacement for [`super::conv::forward`].
 pub fn forward(x: &Tensor<f32>, kernel: &Tensor<f32>, stride: usize, pad: usize) -> Tensor<f32> {
-    let [cin, _, _]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
+    let [cin, h, w]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
     let kd = kernel.shape().dims();
     let (cout, kcin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
     assert_eq!(cin, kcin, "channel mismatch: x {cin} vs kernel {kcin}");
+    if im2col_elidable(kh, kw, stride, pad) {
+        // The CHW input *is* the (Cin × H·W) column matrix — skip the copy.
+        let out = conv_forward_batch(x.data(), kernel, h * w, 1);
+        return Tensor::from_vec(Shape::d3(cout, h, w), out);
+    }
     let (cols, oh, ow) = im2col(x, kh, kw, stride, pad);
     let out = conv_forward_batch(&cols, kernel, oh * ow, 1);
     Tensor::from_vec(Shape::d3(cout, oh, ow), out)
@@ -445,6 +1095,23 @@ pub fn conv_forward_batch(
     let mut out = vec![0.0f32; cout * bn];
     gemm_nn_mt(cout, kdim, bn, kernel.data(), cols, &mut out, threads);
     out
+}
+
+/// [`conv_forward_batch`] with a snapshot-packed kernel and the fused
+/// epilogue, writing into a caller-provided scratch buffer: `out =
+/// relu?(K·cols)` in one pass. Bit-identical to [`conv_forward_batch`]
+/// followed by `relu::forward_vec` (see [`gemm_nn_fused_packed_mt`]).
+pub fn conv_forward_batch_packed_into(
+    cols: &[f32],
+    pk: &PackedA,
+    bn: usize,
+    relu: bool,
+    out: &mut Vec<f32>,
+    threads: usize,
+) {
+    out.clear();
+    out.resize(pk.m() * bn, 0.0);
+    gemm_nn_fused_packed_mt(pk, bn, cols, out, relu, threads);
 }
 
 /// Gradient w.r.t. the input (paper Eq. 2) via GEMM + col2im. Drop-in
@@ -492,6 +1159,11 @@ pub fn conv_input_grad_batch(
     let kdim = cin * kh * kw;
     let mut dcols = vec![0.0f32; kdim * bn];
     gemm_tn_mt(cout, kdim, bn, kernel.data(), dy, &mut dcols, threads);
+    if im2col_elidable(kh, kw, stride, pad) {
+        // The column gradient *is* the packed input gradient (every
+        // column owns exactly one in-image tap) — skip the scatter.
+        return dcols;
+    }
     col2im_batch(&dcols, batch, cin, h, w, kh, kw, stride, pad, oh, ow, threads)
 }
 
@@ -504,15 +1176,23 @@ pub fn kernel_grad(
     stride: usize,
     pad: usize,
 ) -> Tensor<f32> {
-    let [cin, _, _]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
+    let [cin, h, w]: [usize; 3] = x.shape().dims().try_into().expect("x must be CHW");
     let kd = kernel_shape.dims();
     let (cout, kcin, kh, kw) = (kd[0], kd[1], kd[2], kd[3]);
     assert_eq!(cin, kcin);
-    let (cols, oh, ow) = im2col(x, kh, kw, stride, pad);
+    let (held, oh, ow);
+    let cols: &[f32] = if im2col_elidable(kh, kw, stride, pad) {
+        // The CHW input *is* the column matrix — borrow it directly.
+        (oh, ow) = (h, w);
+        x.data()
+    } else {
+        (held, oh, ow) = im2col(x, kh, kw, stride, pad);
+        &held
+    };
     let dyd = dy.shape().dims();
     assert_eq!(dyd[0], cout);
     assert_eq!((dyd[1], dyd[2]), (oh, ow), "dy geometry vs conv geometry");
-    conv_kernel_grad_batch(dy.data(), &cols, kernel_shape, oh * ow, 1)
+    conv_kernel_grad_batch(dy.data(), cols, kernel_shape, oh * ow, 1)
 }
 
 /// Batched kernel gradient over an already-packed column matrix:
@@ -541,12 +1221,15 @@ pub fn dense_forward(x: &[f32], w: &Tensor<f32>) -> Vec<f32> {
 }
 
 /// Batched dense forward: `Y (B×Nout) = X (B×Nin) · W (Nin×Nout)`, with
-/// `X` in sample-major rows (see [`packed_to_rows`]).
+/// `X` in sample-major rows (see [`packed_to_rows`]). X is a post-ReLU
+/// activation matrix (~half zeros at the paper geometry) and `Nout` is
+/// tiny, so this is the one forward GEMM where the zero-skipping kernel
+/// beats the register-tiled one — pinned by the `gemm` micro-rung.
 pub fn dense_forward_batch(x: &[f32], w: &Tensor<f32>, batch: usize, threads: usize) -> Vec<f32> {
     let [n_in, n_out]: [usize; 2] = w.shape().dims().try_into().expect("w must be 2D");
     assert_eq!(x.len(), batch * n_in, "input length {} vs {batch}×{n_in}", x.len());
     let mut y = vec![0.0f32; batch * n_out];
-    gemm_nn_mt(batch, n_in, n_out, x, w.data(), &mut y, threads);
+    gemm_nn_skipa_mt(batch, n_in, n_out, x, w.data(), &mut y, threads);
     y
 }
 
@@ -590,7 +1273,9 @@ pub fn dense_weight_grad_batch(
     assert_eq!(x.len(), batch * n_in, "x size");
     assert_eq!(dy.len(), batch * n_out, "dy size");
     let mut dw = vec![0.0f32; n_in * n_out];
-    gemm_tn_mt(batch, n_in, n_out, x, dy, &mut dw, threads);
+    // A = Xᵀ is the post-ReLU activation matrix (~half zeros) and n_out
+    // is tiny — the zero-skipping kernel's territory, like the forward.
+    gemm_tn_skipa_mt(batch, n_in, n_out, x, dy, &mut dw, threads);
     Tensor::from_vec(Shape::d2(n_in, n_out), dw)
 }
 
@@ -785,6 +1470,123 @@ mod tests {
                 a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
             assert!((dot(&a, &b) as f64 - expect).abs() < 1e-4, "len {len}");
         }
+    }
+
+    #[test]
+    fn tiled_kernels_bit_identical_to_scalar_refs_and_variants() {
+        // Remainder-shape sweep incl. forced zeros: the tiled kernels,
+        // the zero-skipping kernels, the packed path, and the fused
+        // epilogue must all agree with the scalar references bit for
+        // bit. (The full randomized grid lives in
+        // tests/microkernel_parity.rs.)
+        let mut rng = Pcg32::seeded(41);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 9, 17), (8, 27, 33)] {
+            let mut a = rand_vec(&mut rng, m * k);
+            for v in a.iter_mut() {
+                if rng.next_u32() % 3 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let b = rand_vec(&mut rng, k * n);
+            let mut c_ref = vec![0.0f32; m * n];
+            gemm_nn_ref(m, k, n, &a, &b, &mut c_ref);
+            let mut c = vec![0.0f32; m * n];
+            gemm_nn_mt(m, k, n, &a, &b, &mut c, 1);
+            assert_eq!(c, c_ref, "nn tiled {m}x{k}x{n}");
+            let mut c = vec![0.0f32; m * n];
+            gemm_nn_skipa_mt(m, k, n, &a, &b, &mut c, 1);
+            assert_eq!(c, c_ref, "nn skipa {m}x{k}x{n}");
+            let pa = PackedA::pack(m, k, &a);
+            assert!(pa.matches(m, k, &a));
+            let mut c = vec![0.0f32; m * n];
+            gemm_nn_packed_mt(&pa, n, &b, &mut c, 1);
+            assert_eq!(c, c_ref, "nn packed {m}x{k}x{n}");
+            for relu in [false, true] {
+                let mut fused = vec![f32::NAN; m * n];
+                gemm_nn_fused_mt(m, k, n, &a, &b, &mut fused, relu, 1);
+                let unfused: Vec<f32> =
+                    c_ref.iter().map(|&v| if relu { v.max(0.0) } else { v }).collect();
+                assert_eq!(fused, unfused, "nn fused {m}x{k}x{n} relu={relu}");
+            }
+
+            // TN: A is m×k, B is m×n, C is k×n.
+            let b2 = rand_vec(&mut rng, m * n);
+            let mut c_ref = vec![0.0f32; k * n];
+            gemm_tn_ref(m, k, n, &a, &b2, &mut c_ref);
+            let mut c = vec![0.0f32; k * n];
+            gemm_tn_mt(m, k, n, &a, &b2, &mut c, 1);
+            assert_eq!(c, c_ref, "tn tiled {m}x{k}x{n}");
+            let mut c = vec![0.0f32; k * n];
+            gemm_tn_skipa_mt(m, k, n, &a, &b2, &mut c, 1);
+            assert_eq!(c, c_ref, "tn skipa {m}x{k}x{n}");
+
+            // NT: A is m×kd, B is n×kd with kd = k.
+            let b3 = rand_vec(&mut rng, n * k);
+            let mut c_ref = vec![0.0f32; m * n];
+            gemm_nt_ref(m, n, k, &a, &b3, &mut c_ref);
+            let mut c = vec![0.0f32; m * n];
+            gemm_nt_mt(m, n, k, &a, &b3, &mut c, 1);
+            assert_eq!(c, c_ref, "nt tiled {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn stale_pack_is_detected() {
+        let mut rng = Pcg32::seeded(53);
+        let a = rand_vec(&mut rng, 6 * 7);
+        let pa = PackedA::pack(6, 7, &a);
+        assert!(pa.matches(6, 7, &a));
+        let mut stale = a.clone();
+        stale[13] += 1.0;
+        assert!(!pa.matches(6, 7, &stale));
+        assert!(!pa.matches(7, 6, &a));
+    }
+
+    #[test]
+    fn im2col_into_reuses_buffer_and_matches_fresh() {
+        let mut rng = Pcg32::seeded(47);
+        let shape = Shape::d3(2, 6, 6);
+        let xs: Vec<Tensor<f32>> = (0..2).map(|_| rand_tensor(&mut rng, shape.clone())).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let packed = pack_batch(&refs);
+        let (fresh, oh, ow) = im2col_batch(&packed, 2, 2, 6, 6, 3, 3, 1, 1, 1);
+        // A dirty, wrong-sized buffer must come out identical: padding
+        // taps must be re-zeroed, not inherited.
+        let mut buf = vec![7.0f32; 10];
+        let (oh2, ow2) = im2col_batch_into(&packed, 2, 2, 6, 6, 3, 3, 1, 1, 1, &mut buf);
+        assert_eq!((oh, ow), (oh2, ow2));
+        assert_eq!(fresh, buf);
+        // Second fill reuses the allocation.
+        let cap = buf.capacity();
+        im2col_batch_into(&packed, 2, 2, 6, 6, 3, 3, 1, 1, 1, &mut buf);
+        assert_eq!(fresh, buf);
+        assert_eq!(cap, buf.capacity());
+    }
+
+    #[test]
+    fn one_by_one_conv_elision_is_bit_exact() {
+        // 1×1/stride-1/pad-0: the packed activation IS the column
+        // matrix; the elided paths must match the explicit im2col /
+        // col2im paths exactly.
+        let mut rng = Pcg32::seeded(43);
+        let x = rand_tensor(&mut rng, Shape::d3(3, 6, 5));
+        let k = rand_tensor(&mut rng, Shape::d4(4, 3, 1, 1));
+        let (cols, oh, ow) = im2col(&x, 1, 1, 1, 0);
+        assert_eq!(&cols, x.data(), "elision precondition: cols == x");
+        let y = forward(&x, &k, 1, 0);
+        let out = conv_forward_batch(&cols, &k, oh * ow, 1);
+        assert_eq!(y.data(), &out[..], "elided forward");
+
+        let dy = rand_tensor(&mut rng, Shape::d3(4, 6, 5));
+        let dx = input_grad(&dy, &k, x.shape(), 1, 0);
+        let mut dcols = vec![0.0f32; 3 * oh * ow];
+        gemm_tn_mt(4, 3, oh * ow, k.data(), dy.data(), &mut dcols, 1);
+        let back = col2im_batch(&dcols, 1, 3, 6, 5, 1, 1, 1, 0, oh, ow, 1);
+        assert_eq!(dx.data(), &back[..], "elided input_grad");
+
+        let dk = kernel_grad(&dy, &x, k.shape(), 1, 0);
+        let dk2 = conv_kernel_grad_batch(dy.data(), &cols, k.shape(), oh * ow, 1);
+        assert_eq!(dk.data(), dk2.data(), "elided kernel_grad");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 use super::{conv, dense, gemm, loss, relu, sgd};
 use crate::tensor::{Shape, Tensor};
 use crate::util::rng::Pcg32;
+use std::cell::RefCell;
 
 /// Which compute core executes the conv/dense layers. Both engines share
 /// parameters and init; they differ only in float summation order (the
@@ -164,6 +165,54 @@ struct GemmBatchCache {
     logits: Vec<f32>,
 }
 
+/// Conv kernels repacked into microkernel tile order (`gemm::PackedA`)
+/// — built once per weight snapshot ([`Model::pack_weights`], called at
+/// `Learner::clone_replica` / barrier re-broadcast), consumed by the
+/// serve-path forward, and dropped by every weight update.
+#[derive(Clone)]
+struct PackedWeights {
+    k1: gemm::PackedA,
+    k2: gemm::PackedA,
+}
+
+impl PackedWeights {
+    fn pack(params: &Params) -> PackedWeights {
+        let d1 = params.k1.shape().dims();
+        let d2 = params.k2.shape().dims();
+        PackedWeights {
+            k1: gemm::PackedA::pack(d1[0], d1[1] * d1[2] * d1[3], params.k1.data()),
+            k2: gemm::PackedA::pack(d2[0], d2[1] * d2[2] * d2[3], params.k2.data()),
+        }
+    }
+
+    fn is_fresh(&self, params: &Params) -> bool {
+        let d1 = params.k1.shape().dims();
+        let d2 = params.k2.shape().dims();
+        self.k1.matches(d1[0], d1[1] * d1[2] * d1[3], params.k1.data())
+            && self.k2.matches(d2[0], d2[1] * d2[2] * d2[3], params.k2.data())
+    }
+}
+
+/// Pool of reusable f32 scratch buffers for the GEMM engine's im2col
+/// column matrices and conv outputs — allocation churn at serve batch
+/// sizes is measurable, and every consumer clears + resizes before use
+/// so recycling never changes results.
+#[derive(Clone, Default)]
+struct Scratch {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    fn take(&mut self) -> Vec<f32> {
+        self.bufs.pop().unwrap_or_default()
+    }
+
+    fn put(&mut self, mut buf: Vec<f32>) {
+        buf.clear();
+        self.bufs.push(buf);
+    }
+}
+
 // Clone: the serving tests snapshot a warmed model (one copy moves onto
 // the server's model thread, the other stays behind as the per-sample
 // parity oracle).
@@ -177,6 +226,13 @@ pub struct Model {
     /// Thread count never changes results: the sharded GEMMs are
     /// bit-identical to single-thread (see `nn::gemm`).
     pub threads: usize,
+    /// Snapshot-packed conv kernels for the serve-path forward. `None`
+    /// until [`Model::pack_weights`]; invalidated by every weight
+    /// update (train step, suffix step, `reinit`, `reinit_suffix`).
+    packed: Option<PackedWeights>,
+    /// Recycled GEMM scratch buffers (interior-mutable so the `&self`
+    /// forward paths can reuse them across calls).
+    scratch: RefCell<Scratch>,
 }
 
 impl Model {
@@ -200,7 +256,14 @@ impl Model {
             ),
             w: super::init::dense_weights(&mut rng, config.dense_in(), config.num_classes),
         };
-        Model { config, params, engine: Engine::Naive, threads: 1 }
+        Model {
+            config,
+            params,
+            engine: Engine::Naive,
+            threads: 1,
+            packed: None,
+            scratch: RefCell::new(Scratch::default()),
+        }
     }
 
     pub fn from_params(config: ModelConfig, params: Params) -> Model {
@@ -208,7 +271,14 @@ impl Model {
             params.w.shape(),
             &Shape::d2(config.dense_in(), config.num_classes)
         );
-        Model { config, params, engine: Engine::Naive, threads: 1 }
+        Model {
+            config,
+            params,
+            engine: Engine::Naive,
+            threads: 1,
+            packed: None,
+            scratch: RefCell::new(Scratch::default()),
+        }
     }
 
     /// Select the compute core (builder-style; parameters are untouched).
@@ -231,6 +301,17 @@ impl Model {
     pub fn reinit(&mut self, seed: u64) {
         let (engine, threads) = (self.engine, self.threads);
         *self = Model::new(self.config.clone(), seed).with_engine(engine).with_threads(threads);
+    }
+
+    /// Repack the conv kernels into microkernel tile order for the
+    /// serve-path forward. Called once per weight snapshot — replica
+    /// creation and barrier re-broadcast go through
+    /// `Learner::clone_replica`, which packs the clone — so steady-state
+    /// serving never repacks per batch. Every weight update drops the
+    /// pack; a debug assertion on the serve path catches any update
+    /// site that forgets.
+    pub fn pack_weights(&mut self) {
+        self.packed = Some(PackedWeights::pack(&self.params));
     }
 
     // Engine dispatch: one seam per layer computation, so the forward
@@ -333,17 +414,81 @@ impl Model {
     }
 
     /// Batched inference: per-sample logits. The GEMM engine runs the
-    /// whole batch as packed GEMMs; the naive engine loops.
+    /// serve-path forward — snapshot-packed weights, fused conv+ReLU
+    /// epilogues, recycled scratch — which is bit-identical to the
+    /// train-path forward (`nn::gemm` module docs prove each step); the
+    /// naive engine loops.
     pub fn forward_batch(&self, xs: &[&Tensor<f32>]) -> Vec<Vec<f32>> {
         assert!(!xs.is_empty(), "empty batch");
         match self.engine {
             Engine::Naive => xs.iter().map(|x| self.forward(x)).collect(),
             Engine::Gemm => {
                 let classes = self.config.num_classes;
-                let fwd = self.gemm_forward_batch(xs);
-                fwd.logits.chunks(classes).map(|c| c.to_vec()).collect()
+                let logits = self.gemm_serve_logits(xs);
+                logits.chunks(classes).map(|c| c.to_vec()).collect()
             }
         }
+    }
+
+    /// Serve-path batched forward: inference needs no pre-activations,
+    /// so both convs run with the ReLU fused into the microkernel's
+    /// C-tile store, the kernels come from the packed snapshot (packed
+    /// on the fly when no snapshot exists — e.g. a model queried
+    /// mid-training), and the column/activation buffers are recycled
+    /// across calls. Returns sample-major logits (B × classes).
+    fn gemm_serve_logits(&self, xs: &[&Tensor<f32>]) -> Vec<f32> {
+        let b = xs.len();
+        let hw = self.config.image_size;
+        let n = hw * hw;
+        let cin = self.config.in_channels;
+        let cc = self.config.conv_channels;
+        let t = self.threads;
+        assert_eq!(
+            xs[0].shape(),
+            &Shape::d3(cin, hw, hw),
+            "input must match the model geometry"
+        );
+        let packed_store;
+        let pw: &PackedWeights = match &self.packed {
+            Some(p) => {
+                debug_assert!(
+                    p.is_fresh(&self.params),
+                    "stale packed weights: a weight update failed to invalidate the pack"
+                );
+                p
+            }
+            None => {
+                packed_store = PackedWeights::pack(&self.params);
+                &packed_store
+            }
+        };
+        let packed_input;
+        let x0: &[f32] = if b == 1 {
+            xs[0].data()
+        } else {
+            packed_input = gemm::pack_batch(xs);
+            &packed_input
+        };
+        let mut cols1 = self.scratch.borrow_mut().take();
+        gemm::im2col_batch_into(x0, b, cin, hw, hw, 3, 3, 1, 1, t, &mut cols1);
+        let mut a1 = self.scratch.borrow_mut().take();
+        gemm::conv_forward_batch_packed_into(&cols1, &pw.k1, b * n, true, &mut a1, t);
+        let mut cols2 = self.scratch.borrow_mut().take();
+        gemm::im2col_batch_into(&a1, b, cc, hw, hw, 3, 3, 1, 1, t, &mut cols2);
+        let mut a2 = self.scratch.borrow_mut().take();
+        gemm::conv_forward_batch_packed_into(&cols2, &pw.k2, b * n, true, &mut a2, t);
+        let logits = if b == 1 {
+            gemm::dense_forward_batch(&a2, &self.params.w, b, t)
+        } else {
+            let xd = gemm::packed_to_rows(&a2, cc, b, n);
+            gemm::dense_forward_batch(&xd, &self.params.w, b, t)
+        };
+        let mut sc = self.scratch.borrow_mut();
+        sc.put(cols1);
+        sc.put(a1);
+        sc.put(cols2);
+        sc.put(a2);
+        logits
     }
 
     /// One SGD step on a minibatch with mean-gradient semantics: the
@@ -427,11 +572,13 @@ impl Model {
             packed_input = gemm::pack_batch(xs);
             &packed_input
         };
-        let (cols1, oh, ow) = gemm::im2col_batch(x0, b, cin, hw, hw, 3, 3, 1, 1, t);
+        let mut cols1 = self.scratch.borrow_mut().take();
+        let (oh, ow) = gemm::im2col_batch_into(x0, b, cin, hw, hw, 3, 3, 1, 1, t, &mut cols1);
         debug_assert_eq!((oh, ow), (hw, hw), "3×3 s1 p1 conv preserves geometry");
         let z1 = gemm::conv_forward_batch(&cols1, &self.params.k1, b * n, t);
         let a1 = relu::forward_vec(&z1);
-        let (cols2, _, _) = gemm::im2col_batch(&a1, b, cc, hw, hw, 3, 3, 1, 1, t);
+        let mut cols2 = self.scratch.borrow_mut().take();
+        gemm::im2col_batch_into(&a1, b, cc, hw, hw, 3, 3, 1, 1, t, &mut cols2);
         let z2 = gemm::conv_forward_batch(&cols2, &self.params.k2, b * n, t);
         let a2 = relu::forward_vec(&z2);
         let xd = if b == 1 { a2 } else { gemm::packed_to_rows(&a2, cc, b, n) };
@@ -468,6 +615,12 @@ impl Model {
         // ReLU 1 + conv1 (no input gradient needed at the first layer).
         let dz1 = relu::backward_vec(&da1, &fwd.z1);
         let dk1 = gemm::conv_kernel_grad_batch(&dz1, &fwd.cols1, self.params.k1.shape(), b * n, t);
+        // Recycle the column matrices — the next step's im2col refills
+        // them without reallocating.
+        let GemmBatchCache { cols1, cols2, .. } = fwd;
+        let mut sc = self.scratch.borrow_mut();
+        sc.put(cols1);
+        sc.put(cols2);
         (Gradients { k1: dk1, k2: dk2, w: dw }, loss_sum, correct)
     }
 
@@ -565,6 +718,7 @@ impl Model {
             (None, dw, l, c)
         };
         let scale = 1.0 / b as f32;
+        self.packed = None; // suffix steps update weights too
         if let Some(mut dk2) = dk2 {
             scale_tensor(&mut dk2, scale);
             sgd::clip_by_norm(&mut dk2, self.config.grad_clip);
@@ -697,6 +851,7 @@ impl Model {
     /// of the tensors never perturbs the rest.
     pub fn reinit_suffix(&mut self, cut: usize, seed: u64) {
         assert!(cut <= MAX_CUT, "cut {cut} out of range (max {MAX_CUT})");
+        self.packed = None;
         let fresh = Model::new(self.config.clone(), seed);
         if cut == 0 {
             self.params.k1 = fresh.params.k1;
@@ -707,8 +862,10 @@ impl Model {
         self.params.w = fresh.params.w;
     }
 
-    /// Apply pre-computed gradients.
+    /// Apply pre-computed gradients. Drops the packed weight snapshot:
+    /// the pack must never survive a weight update.
     pub fn apply(&mut self, grads: &Gradients, lr: f32) {
+        self.packed = None;
         sgd::step(&mut self.params.k1, &grads.k1, lr);
         sgd::step(&mut self.params.k2, &grads.k2, lr);
         sgd::step(&mut self.params.w, &grads.w, lr);
@@ -920,6 +1077,45 @@ mod tests {
                     &format!("{engine:?} logits sample {bi}"),
                 );
             }
+        }
+    }
+
+    #[test]
+    fn packed_serve_forward_bit_identical_and_invalidated_on_update() {
+        let cfg = tiny_config();
+        let xs: Vec<Tensor<f32>> = (0..3).map(|i| rand_image(100 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        let labels = [0usize, 1, 2];
+        let mut m = Model::new(cfg.clone(), 51).with_engine(Engine::Gemm).with_threads(2);
+        m.train_batch(&refs, &labels, 4, 0.05);
+        let before = m.forward_batch(&refs);
+        m.pack_weights();
+        assert!(m.packed.is_some());
+        assert_eq!(m.forward_batch(&refs), before, "packed serve forward must be bit-identical");
+        // Every weight-update site must drop the pack (the serve path
+        // debug-asserts freshness, so a missed site also fails there).
+        m.train_batch(&refs, &labels, 4, 0.05);
+        assert!(m.packed.is_none(), "train step kept a stale pack");
+        m.pack_weights();
+        let acts = m.forward_to_cut_batch(&refs, 2);
+        let act_refs: Vec<&Tensor<f32>> = acts.iter().collect();
+        m.train_batch_from(2, &act_refs, &labels, 4, 0.05);
+        assert!(m.packed.is_none(), "suffix step kept a stale pack");
+        m.pack_weights();
+        m.reinit_suffix(2, 7);
+        assert!(m.packed.is_none(), "reinit_suffix kept a stale pack");
+        m.pack_weights();
+        m.reinit(7);
+        assert!(m.packed.is_none(), "reinit kept a stale pack");
+        // The on-the-fly fallback still agrees with per-sample forward.
+        let post = m.forward_batch(&refs);
+        for (bi, x) in xs.iter().enumerate() {
+            crate::util::proptest::assert_close(
+                &post[bi],
+                &m.forward(x),
+                1e-5,
+                &format!("sample {bi}"),
+            );
         }
     }
 

@@ -27,6 +27,7 @@
 //! shared generically between the f32 and integer engines.
 
 use super::layers::{DITHER_BASE_W, GRAD_CLIP, PARAM_CLIP};
+use crate::fixed::gemm::QPackedA;
 use crate::fixed::{acc_fmt_shift, gemm as fxgemm, wb_dither, Acc, Fx};
 use crate::tensor::{Shape, Tensor};
 use crate::util::pool::{self, col_ranges, plan_workers, SendPtr};
@@ -53,10 +54,31 @@ pub fn im2col_batch(
     crate::nn::gemm::im2col_batch(x, batch, cin, h, w, kh, kw, 1, pad, threads)
 }
 
+/// [`im2col_batch`] into a caller-owned scratch buffer — same packing,
+/// no per-call allocation ([`crate::nn::gemm::im2col_batch_into`]).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_batch_into(
+    x: &[Fx],
+    batch: usize,
+    cin: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    pad: usize,
+    threads: usize,
+    cols: &mut Vec<Fx>,
+) -> (usize, usize) {
+    crate::nn::gemm::im2col_batch_into(x, batch, cin, h, w, kh, kw, 1, pad, threads, cols)
+}
+
 /// Batched conv forward (Eq. 1) over an already-packed column matrix:
-/// one `Cout × (B·N)` integer GEMM, then the hardware's per-pixel
-/// writeback (format-shift round + saturate, optional fused ReLU).
-/// Bit-identical to looping [`super::layers::conv_forward`] per sample.
+/// one `Cout × (B·N)` integer GEMM with the hardware's per-pixel
+/// writeback (format-shift round + saturate, optional fused ReLU)
+/// applied **inside the microkernel's C-tile store** — no i32 staging
+/// buffer, no second pass over the output. The fused epilogue uses the
+/// same `Acc::to_fx_fmt` + `Fx::relu` per output element, so it stays
+/// bit-identical to looping [`super::layers::conv_forward`] per sample.
 pub fn conv_forward_batch(
     cols: &[Fx],
     kernel: &Tensor<Fx>,
@@ -67,18 +89,29 @@ pub fn conv_forward_batch(
     let kd = kernel.shape().dims();
     let (cout, kdim) = (kd[0], kd[1] * kd[2] * kd[3]);
     let fmt = acc_fmt_shift(kdim);
-    let mut accs = vec![0i32; cout * bn];
-    fxgemm::gemm_nn_mt(cout, kdim, bn, kernel.data(), cols, &mut accs, fmt, threads);
-    accs.iter()
-        .map(|&raw| {
-            let v = Acc::from_raw(raw).to_fx_fmt(fmt);
-            if fuse_relu {
-                v.relu()
-            } else {
-                v
-            }
-        })
-        .collect()
+    let mut out = vec![Fx::ZERO; cout * bn];
+    let kdata = kernel.data();
+    fxgemm::gemm_nn_fused_mt(cout, kdim, bn, kdata, cols, &mut out, fmt, fuse_relu, threads);
+    out
+}
+
+/// [`conv_forward_batch`] with the kernel pre-packed into microkernel
+/// tile order (snapshot serving: pack once per weight broadcast, not
+/// per batch), writing into a caller-owned scratch buffer. The fmt
+/// shift is derived from the packed `k` dimension exactly as the
+/// unpacked path derives it from the kernel shape.
+pub fn conv_forward_batch_packed_into(
+    cols: &[Fx],
+    pk: &QPackedA,
+    bn: usize,
+    fuse_relu: bool,
+    out: &mut Vec<Fx>,
+    threads: usize,
+) {
+    let fmt = acc_fmt_shift(pk.k());
+    out.clear();
+    out.resize(pk.m() * bn, Fx::ZERO);
+    fxgemm::gemm_nn_fused_packed_mt(pk, bn, cols, out, fmt, fuse_relu, threads);
 }
 
 /// Batched conv gradient propagation (Eq. 2): `dcols = Kᵀ·dY` via one
@@ -234,7 +267,11 @@ pub fn dense_forward_batch(x: &[Fx], w: &Tensor<Fx>, batch: usize, threads: usiz
     assert_eq!(x.len(), batch * n_in, "input length {} vs {batch}×{n_in}", x.len());
     let fmt = acc_fmt_shift(n_in);
     let mut accs = vec![0i32; batch * n_out];
-    fxgemm::gemm_nn_mt(batch, n_in, n_out, x, w.data(), &mut accs, fmt, threads);
+    // A = x is the flattened post-ReLU activation (roughly half zeros)
+    // and n_out is tiny — the zero-skipping kernel's territory; a
+    // skipped operand's shifted product is exactly zero, so skipping
+    // stays bit-identical.
+    fxgemm::gemm_nn_skipa_mt(batch, n_in, n_out, x, w.data(), &mut accs, fmt, threads);
     accs.iter().map(|&raw| Acc::from_raw(raw).to_fx_fmt(fmt)).collect()
 }
 
@@ -320,6 +357,12 @@ pub fn conv_forward(
     let kd = kernel.shape().dims();
     let (kcin, kh, kw) = (kd[1], kd[2], kd[3]);
     assert_eq!(cin, kcin, "channel mismatch: x {cin} vs kernel {kcin}");
+    // 1×1/stride-1/pad-0: the CHW activation already *is* the column
+    // matrix — skip the im2col copy entirely.
+    if crate::nn::gemm::im2col_elidable(kh, kw, 1, pad) {
+        let out = conv_forward_batch(x.data(), kernel, h * w, fuse_relu, threads);
+        return Tensor::from_vec(Shape::d3(kd[0], h, w), out);
+    }
     let (cols, oh, ow) = im2col_batch(x.data(), 1, cin, h, w, kh, kw, pad, threads);
     let out = conv_forward_batch(&cols, kernel, oh * ow, fuse_relu, threads);
     Tensor::from_vec(Shape::d3(kd[0], oh, ow), out)
@@ -404,6 +447,41 @@ mod tests {
                         "cin={cin} cout={cout} hw={hw} pad={pad} relu={fuse_relu} t={threads}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn one_by_one_conv_elides_im2col_bit_exact() {
+        // kh = kw = 1, pad = 0 takes the elided path (no column copy);
+        // it must still match the naive loops bit for bit.
+        let mut rng = Pcg32::seeded(331);
+        let x = rand_fx_tensor(&mut rng, Shape::d3(3, 6, 5));
+        let k = rand_fx_tensor(&mut rng, Shape::d4(4, 3, 1, 1));
+        for fuse_relu in [false, true] {
+            let naive = layers::conv_forward(&x, &k, 0, fuse_relu);
+            for threads in [1, 2] {
+                let fast = conv_forward(&x, &k, 0, fuse_relu, threads);
+                assert_eq!(fast.data(), naive.data(), "relu={fuse_relu} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_conv_forward_matches_unpacked() {
+        let mut rng = Pcg32::seeded(337);
+        let x = rand_fx_tensor(&mut rng, Shape::d3(3, 6, 6));
+        let k = rand_fx_tensor(&mut rng, Shape::d4(4, 3, 3, 3));
+        let (cols, oh, ow) = im2col_batch(x.data(), 1, 3, 6, 6, 3, 3, 1, 1);
+        let bn = oh * ow;
+        let pk = QPackedA::pack(4, 27, k.data());
+        assert!(pk.matches(4, 27, k.data()));
+        for relu in [false, true] {
+            let plain = conv_forward_batch(&cols, &k, bn, relu, 1);
+            let mut out = vec![Fx::from_f32(7.0); 3]; // dirty, wrong-sized
+            for threads in [1, 2] {
+                conv_forward_batch_packed_into(&cols, &pk, bn, relu, &mut out, threads);
+                assert_eq!(out, plain, "relu={relu} t={threads}");
             }
         }
     }

@@ -22,11 +22,13 @@
 use super::gemm as qgemm;
 use super::layers;
 use super::QnnEngine;
+use crate::fixed::gemm::QPackedA;
 use crate::fixed::Fx;
 use crate::nn::gemm::{pack_batch, packed_to_rows, rows_to_packed};
 use crate::nn::loss;
 use crate::nn::ModelConfig;
 use crate::tensor::{quantize_tensor, Shape, Tensor};
+use std::cell::RefCell;
 
 /// Quantized parameters (what Kernel memory holds).
 #[derive(Clone, Debug)]
@@ -86,6 +88,53 @@ impl FastForward {
     }
 }
 
+/// Conv kernels repacked into microkernel tile order
+/// ([`crate::fixed::gemm::QPackedA`]) — built once per weight snapshot
+/// ([`QModel::pack_weights`], called at `clone_replica` / barrier
+/// re-broadcast), dropped by every weight update.
+#[derive(Clone)]
+struct QPackedWeights {
+    k1: QPackedA,
+    k2: QPackedA,
+}
+
+impl QPackedWeights {
+    fn pack(params: &QParams) -> QPackedWeights {
+        let d1 = params.k1.shape().dims();
+        let d2 = params.k2.shape().dims();
+        QPackedWeights {
+            k1: QPackedA::pack(d1[0], d1[1] * d1[2] * d1[3], params.k1.data()),
+            k2: QPackedA::pack(d2[0], d2[1] * d2[2] * d2[3], params.k2.data()),
+        }
+    }
+
+    fn is_fresh(&self, params: &QParams) -> bool {
+        let d1 = params.k1.shape().dims();
+        let d2 = params.k2.shape().dims();
+        self.k1.matches(d1[0], d1[1] * d1[2] * d1[3], params.k1.data())
+            && self.k2.matches(d2[0], d2[1] * d2[2] * d2[3], params.k2.data())
+    }
+}
+
+/// Pool of reusable Q4.12 scratch buffers for the fast engine's column
+/// matrices and conv outputs; every consumer clears + resizes before
+/// use, so recycling never changes bits.
+#[derive(Clone, Default)]
+struct QScratch {
+    bufs: Vec<Vec<Fx>>,
+}
+
+impl QScratch {
+    fn take(&mut self) -> Vec<Fx> {
+        self.bufs.pop().unwrap_or_default()
+    }
+
+    fn put(&mut self, mut buf: Vec<Fx>) {
+        buf.clear();
+        self.bufs.push(buf);
+    }
+}
+
 /// Quantized model driving the six control-unit computations in the order
 /// the paper's CU sequences them.
 // Clone: replicated serving snapshots the model per replica and
@@ -105,6 +154,12 @@ pub struct QModel {
     /// count never changes results — disjoint-column sharding of
     /// order-independent wrapping sums (see `fixed::gemm`).
     pub threads: usize,
+    /// Snapshot-packed conv kernels for the fast forward. `None` until
+    /// [`QModel::pack_weights`]; dropped by every weight update.
+    packed: Option<QPackedWeights>,
+    /// Recycled fast-engine scratch buffers (interior-mutable so the
+    /// `&self` forward paths can reuse them across calls).
+    scratch: RefCell<QScratch>,
 }
 
 /// Host-side loss layer (float; see module docs of `qnn`): loss, top-1
@@ -118,7 +173,26 @@ fn loss_grad(logits: &[Fx], label: usize, active_classes: usize) -> (f32, bool, 
 
 impl QModel {
     pub fn new(config: ModelConfig, params: QParams) -> QModel {
-        QModel { config, params, step: 0, engine: QnnEngine::default(), threads: 1 }
+        QModel {
+            config,
+            params,
+            step: 0,
+            engine: QnnEngine::default(),
+            threads: 1,
+            packed: None,
+            scratch: RefCell::new(QScratch::default()),
+        }
+    }
+
+    /// Repack the conv kernels into microkernel tile order for the fast
+    /// forward. Called once per weight snapshot (`clone_replica` /
+    /// barrier re-broadcast); every weight update drops the pack, and a
+    /// debug assertion on the forward catches any update site that
+    /// forgets. Packing never changes bits — wrapping adds are
+    /// order-independent, and the packed kernels are the same values in
+    /// tile order (`fixed::gemm`).
+    pub fn pack_weights(&mut self) {
+        self.packed = Some(QPackedWeights::pack(&self.params));
     }
 
     /// From a float model (shared init path with the reference).
@@ -152,6 +226,24 @@ impl QModel {
             &Shape::d3(cin, hw, hw),
             "input must match the model geometry"
         );
+        // Kernels come from the packed snapshot when one exists (serving
+        // replicas); a model trained between forwards packs on the fly —
+        // the kernels are tiny, so the repack is negligible next to the
+        // GEMMs.
+        let packed_store;
+        let pw: &QPackedWeights = match &self.packed {
+            Some(p) => {
+                debug_assert!(
+                    p.is_fresh(&self.params),
+                    "stale packed weights: a weight update failed to invalidate the pack"
+                );
+                p
+            }
+            None => {
+                packed_store = QPackedWeights::pack(&self.params);
+                &packed_store
+            }
+        };
         // For B = 1 the packed layout *is* CHW — borrow instead of copy.
         let packed_input;
         let x0: &[Fx] = if b == 1 {
@@ -160,11 +252,15 @@ impl QModel {
             packed_input = pack_batch(xs);
             &packed_input
         };
-        let (cols1, oh, ow) = qgemm::im2col_batch(x0, b, cin, hw, hw, 3, 3, 1, t);
+        let mut cols1 = self.scratch.borrow_mut().take();
+        let (oh, ow) = qgemm::im2col_batch_into(x0, b, cin, hw, hw, 3, 3, 1, t, &mut cols1);
         debug_assert_eq!((oh, ow), (hw, hw), "3×3 s1 p1 conv preserves geometry");
-        let a1 = qgemm::conv_forward_batch(&cols1, &self.params.k1, b * n, true, t);
-        let (cols2, _, _) = qgemm::im2col_batch(&a1, b, cc, hw, hw, 3, 3, 1, t);
-        let a2 = qgemm::conv_forward_batch(&cols2, &self.params.k2, b * n, true, t);
+        let mut a1 = self.scratch.borrow_mut().take();
+        qgemm::conv_forward_batch_packed_into(&cols1, &pw.k1, b * n, true, &mut a1, t);
+        let mut cols2 = self.scratch.borrow_mut().take();
+        qgemm::im2col_batch_into(&a1, b, cc, hw, hw, 3, 3, 1, t, &mut cols2);
+        let mut a2 = self.scratch.borrow_mut().take();
+        qgemm::conv_forward_batch_packed_into(&cols2, &pw.k2, b * n, true, &mut a2, t);
         let a2_rows = if b == 1 { None } else { Some(packed_to_rows(&a2, cc, b, n)) };
         let logits = qgemm::dense_forward_batch(
             a2_rows.as_deref().unwrap_or(&a2),
@@ -173,6 +269,16 @@ impl QModel {
             t,
         );
         FastForward { cols1, a1, cols2, a2, a2_rows, logits }
+    }
+
+    /// Return a consumed [`FastForward`]'s large buffers to the scratch
+    /// pool for the next call.
+    fn recycle(&self, fwd: FastForward) {
+        let mut sc = self.scratch.borrow_mut();
+        sc.put(fwd.cols1);
+        sc.put(fwd.a1);
+        sc.put(fwd.cols2);
+        sc.put(fwd.a2);
     }
 
     /// Forward pass (computations 1, 1, 4 of §III-F) with fused ReLU,
@@ -202,7 +308,12 @@ impl QModel {
     pub fn forward(&self, x: &Tensor<Fx>) -> Vec<Fx> {
         match self.engine {
             QnnEngine::Naive => self.forward_cached(x).logits,
-            QnnEngine::Fast => self.fast_forward(&[x]).logits,
+            QnnEngine::Fast => {
+                let mut fwd = self.fast_forward(&[x]);
+                let logits = std::mem::take(&mut fwd.logits);
+                self.recycle(fwd);
+                logits
+            }
         }
     }
 
@@ -215,7 +326,9 @@ impl QModel {
             QnnEngine::Fast => {
                 let classes = self.config.num_classes;
                 let fwd = self.fast_forward(xs);
-                fwd.logits.chunks(classes).map(|c| c.to_vec()).collect()
+                let out = fwd.logits.chunks(classes).map(|c| c.to_vec()).collect();
+                self.recycle(fwd);
+                out
             }
         }
     }
@@ -268,6 +381,7 @@ impl QModel {
     ) -> (f32, usize) {
         assert!(!xs.is_empty(), "empty batch");
         assert_eq!(xs.len(), labels.len(), "batch inputs vs labels");
+        self.packed = None; // the step below updates every parameter
         match self.engine {
             QnnEngine::Naive => self.train_batch_naive(xs, labels, active_classes, lr),
             QnnEngine::Fast => self.train_batch_fast(xs, labels, active_classes, lr),
@@ -408,6 +522,7 @@ impl QModel {
             layers::param_update(&mut self.params.k2, dk2, lr, layers::DITHER_BASE_K2, s);
             layers::param_update(&mut self.params.k1, dk1, lr, layers::DITHER_BASE_K1, s);
         }
+        self.recycle(fwd);
         self.step += b as u64;
         (loss_sum / b as f32, correct)
     }
@@ -491,6 +606,7 @@ impl QModel {
         }
         assert!(!acts.is_empty(), "empty batch");
         assert_eq!(acts.len(), labels.len(), "batch inputs vs labels");
+        self.packed = None; // suffix steps update weights too
         if cut == 1 {
             match self.engine {
                 QnnEngine::Naive => self.train_suffix_naive(acts, labels, active_classes, lr),
@@ -707,6 +823,7 @@ impl QModel {
     pub fn reinit_suffix(&mut self, cut: usize, seed: u64) {
         let max = crate::nn::MAX_CUT;
         assert!(cut <= max, "cut {cut} out of range (max {max})");
+        self.packed = None;
         let fresh = QParams::from_f32(&crate::nn::Model::new(self.config.clone(), seed).params);
         if cut == 0 {
             self.params.k1 = fresh.k1;
@@ -949,6 +1066,33 @@ mod tests {
         assert_eq!(naive.params.k1.data(), QParams::from_f32(&m.params).k1.data(), "k1 frozen");
         assert_eq!(naive.params.k2.data(), QParams::from_f32(&m.params).k2.data(), "k2 frozen");
         assert_eq!(naive.step, 3, "step still advances per sample");
+    }
+
+    #[test]
+    fn packed_weights_bit_identical_and_invalidated_on_update() {
+        let cfg = tiny();
+        let m = Model::new(cfg.clone(), 57);
+        let mut qm = QModel::from_model(&m).with_engine(QnnEngine::Fast).with_threads(2);
+        let xs: Vec<Tensor<Fx>> =
+            (0..3u64).map(|i| quantize_tensor(&rand_image(950 + i, &cfg))).collect();
+        let refs: Vec<&Tensor<Fx>> = xs.iter().collect();
+        let before = qm.forward_batch(&refs);
+        qm.pack_weights();
+        assert!(qm.packed.is_some());
+        assert_eq!(qm.forward_batch(&refs), before, "packed forward must be bit-identical");
+        // Every weight-update site must drop the pack (the forward
+        // debug-asserts freshness, so a missed site also fails there).
+        let lr = Fx::from_f32(0.125);
+        qm.train_batch(&refs, &[0, 1, 2], 4, lr);
+        assert!(qm.packed.is_none(), "train step kept a stale pack");
+        qm.pack_weights();
+        let a2s = qm.forward_to_cut_batch(&refs, 2);
+        let a2_refs: Vec<&Tensor<Fx>> = a2s.iter().collect();
+        qm.train_batch_from(2, &a2_refs, &[0, 1, 2], 4, lr);
+        assert!(qm.packed.is_none(), "suffix step kept a stale pack");
+        qm.pack_weights();
+        qm.reinit_suffix(2, 9);
+        assert!(qm.packed.is_none(), "reinit_suffix kept a stale pack");
     }
 
     #[test]

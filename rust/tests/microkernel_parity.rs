@@ -1,0 +1,220 @@
+//! Randomized remainder-shape parity grid for the register-tiled GEMM
+//! microkernels (`nn::gemm` + `fixed::gemm`).
+//!
+//! The microkernels walk MR×NR register tiles with remainder handling on
+//! both edges, so the shapes that break them are exactly the ones a
+//! fixed-geometry test never visits: m below/straddling MR, n
+//! below/straddling NR and the NT tile width, k = 1. This grid drives
+//! all six kernels (f32 NN/TN/NT, wrapping-i32 NN/TN/NT) plus their
+//! packed / zero-skip / fused variants over ~40 random shapes with
+//! every dimension in 1..=17, plus the paper-geometry serve and train
+//! shapes, across thread counts {1, 2, 4}, against the scalar
+//! single-threaded references — **bit-exact**, per the engine's
+//! determinism contract. The integer grid additionally sweeps every
+//! writeback fmt shift on the small shapes (the fused epilogue's
+//! round/saturate depends on it).
+//!
+//! A is generated with ~1/3 forced zeros so the zero-skip kernels take
+//! both branches, C is seeded with non-zero values to catch a kernel
+//! that overwrites where it must accumulate, and the fused outputs are
+//! pre-filled with junk to prove the overwrite semantics.
+
+use tinycl::fixed::gemm as qgemm;
+use tinycl::fixed::{acc_fmt_shift, Acc, Fx};
+use tinycl::nn::gemm;
+use tinycl::util::rng::Pcg32;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+/// ~40 random remainder shapes (every dim 1..=17 spans the MR=4 / NR=8
+/// tile edges) plus the paper-geometry GEMM shapes: conv1 and conv2 at
+/// batch 2 (`8×27×2048`, `8×72×2048` — truncated B·Oh·Ow to keep the
+/// debug-mode grid fast; the tile/remainder structure is identical) and
+/// the dense head (`2×8192×10`).
+fn shapes() -> Vec<(usize, usize, usize)> {
+    let mut rng = Pcg32::seeded(97);
+    let mut v: Vec<(usize, usize, usize)> = (0..40)
+        .map(|_| {
+            let m = 1 + rng.below(17) as usize;
+            let k = 1 + rng.below(17) as usize;
+            let n = 1 + rng.below(17) as usize;
+            (m, k, n)
+        })
+        .collect();
+    v.push((8, 27, 2048));
+    v.push((8, 72, 2048));
+    v.push((2, 8192, 10));
+    v
+}
+
+fn f32_mat(rng: &mut Pcg32, len: usize, zero_one_in: u32) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            if rng.below(zero_one_in) == 0 {
+                0.0
+            } else {
+                rng.range_f32(-1.0, 1.0)
+            }
+        })
+        .collect()
+}
+
+fn fx_mat(rng: &mut Pcg32, len: usize, zero_one_in: u32) -> Vec<Fx> {
+    (0..len)
+        .map(|_| {
+            if rng.below(zero_one_in) == 0 {
+                Fx::ZERO
+            } else {
+                // Full-range raw bit patterns: wrapping adds and the
+                // saturating writeback must agree with the reference
+                // even where f32-quantized inputs would never go.
+                Fx::from_raw((rng.next_u32() & 0xffff) as u16 as i16)
+            }
+        })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn f32_microkernels_match_scalar_refs_across_shapes_and_threads() {
+    let mut rng = Pcg32::seeded(1009);
+    for (m, k, n) in shapes() {
+        let a = f32_mat(&mut rng, m * k, 3);
+        let b = f32_mat(&mut rng, k * n, 5);
+        let b_tn = f32_mat(&mut rng, m * n, 5);
+        let b_nt = f32_mat(&mut rng, n * k, 5);
+        let seed_mn: Vec<f32> = (0..m * n).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+        let seed_kn: Vec<f32> = (0..k * n).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+
+        let mut nn_ref = seed_mn.clone();
+        gemm::gemm_nn_ref(m, k, n, &a, &b, &mut nn_ref);
+        let mut nn_zero = vec![0.0f32; m * n];
+        gemm::gemm_nn_ref(m, k, n, &a, &b, &mut nn_zero);
+        let nn_relu: Vec<f32> = nn_zero.iter().map(|v| v.max(0.0)).collect();
+        let mut tn_ref = seed_kn.clone();
+        gemm::gemm_tn_ref(m, k, n, &a, &b_tn, &mut tn_ref);
+        let mut nt_ref = seed_mn.clone();
+        gemm::gemm_nt_ref(m, n, k, &a, &b_nt, &mut nt_ref);
+
+        let pa = gemm::PackedA::pack(m, k, &a);
+        for t in THREADS {
+            let ctx = format!("shape {m}×{k}×{n}, threads {t}");
+
+            let mut c = seed_mn.clone();
+            gemm::gemm_nn_mt(m, k, n, &a, &b, &mut c, t);
+            assert_eq!(bits(&c), bits(&nn_ref), "NN tiled vs ref [{ctx}]");
+
+            let mut c = seed_mn.clone();
+            gemm::gemm_nn_skipa_mt(m, k, n, &a, &b, &mut c, t);
+            assert_eq!(bits(&c), bits(&nn_ref), "NN zero-skip vs ref [{ctx}]");
+
+            let mut c = seed_mn.clone();
+            gemm::gemm_nn_packed_mt(&pa, n, &b, &mut c, t);
+            assert_eq!(bits(&c), bits(&nn_ref), "NN packed vs ref [{ctx}]");
+
+            let mut out = vec![9.0f32; m * n];
+            gemm::gemm_nn_fused_mt(m, k, n, &a, &b, &mut out, false, t);
+            assert_eq!(bits(&out), bits(&nn_zero), "NN fused (no relu) vs ref [{ctx}]");
+
+            let mut out = vec![9.0f32; m * n];
+            gemm::gemm_nn_fused_mt(m, k, n, &a, &b, &mut out, true, t);
+            assert_eq!(bits(&out), bits(&nn_relu), "NN fused+relu vs ref [{ctx}]");
+
+            let mut out = vec![9.0f32; m * n];
+            gemm::gemm_nn_fused_packed_mt(&pa, n, &b, &mut out, true, t);
+            assert_eq!(bits(&out), bits(&nn_relu), "NN fused packed vs ref [{ctx}]");
+
+            let mut c = seed_kn.clone();
+            gemm::gemm_tn_mt(m, k, n, &a, &b_tn, &mut c, t);
+            assert_eq!(bits(&c), bits(&tn_ref), "TN tiled vs ref [{ctx}]");
+
+            let mut c = seed_kn.clone();
+            gemm::gemm_tn_skipa_mt(m, k, n, &a, &b_tn, &mut c, t);
+            assert_eq!(bits(&c), bits(&tn_ref), "TN zero-skip vs ref [{ctx}]");
+
+            let mut c = seed_mn.clone();
+            gemm::gemm_nt_mt(m, n, k, &a, &b_nt, &mut c, t);
+            assert_eq!(bits(&c), bits(&nt_ref), "NT tiled vs ref [{ctx}]");
+        }
+    }
+}
+
+#[test]
+fn fx_microkernels_match_scalar_refs_across_shapes_threads_and_shifts() {
+    let mut rng = Pcg32::seeded(2027);
+    for (m, k, n) in shapes() {
+        let a = fx_mat(&mut rng, m * k, 3);
+        let b = fx_mat(&mut rng, k * n, 5);
+        let b_tn = fx_mat(&mut rng, m * n, 5);
+        let b_nt = fx_mat(&mut rng, n * k, 5);
+        let seed_mn: Vec<i32> = (0..m * n).map(|_| rng.next_u32() as i32 >> 8).collect();
+        let seed_kn: Vec<i32> = (0..k * n).map(|_| rng.next_u32() as i32 >> 8).collect();
+
+        // Small shapes sweep every writeback fmt shift the fused
+        // epilogue accepts (`to_fx_fmt` needs shift < 12); the paper
+        // shapes pin the shift their layer actually uses.
+        let shifts: Vec<u32> = if m.max(k).max(n) <= 17 {
+            (0..12).collect()
+        } else {
+            vec![acc_fmt_shift(k)]
+        };
+        let pa = qgemm::QPackedA::pack(m, k, &a);
+
+        for &shift in &shifts {
+            let mut nn_ref = seed_mn.clone();
+            qgemm::gemm_nn_ref(m, k, n, &a, &b, &mut nn_ref, shift);
+            let mut nn_zero = vec![0i32; m * n];
+            qgemm::gemm_nn_ref(m, k, n, &a, &b, &mut nn_zero, shift);
+            let mut wb_plain = Vec::with_capacity(m * n);
+            let mut wb_relu = Vec::with_capacity(m * n);
+            for &v in &nn_zero {
+                let fx = Acc::from_raw(v).to_fx_fmt(shift);
+                wb_plain.push(fx);
+                wb_relu.push(fx.relu());
+            }
+            let mut tn_ref = seed_kn.clone();
+            qgemm::gemm_tn_ref(m, k, n, &a, &b_tn, &mut tn_ref, shift);
+            let mut nt_ref = seed_mn.clone();
+            qgemm::gemm_nt_ref(m, n, k, &a, &b_nt, &mut nt_ref, shift);
+
+            for t in THREADS {
+                let ctx = format!("shape {m}×{k}×{n}, shift {shift}, threads {t}");
+
+                let mut c = seed_mn.clone();
+                qgemm::gemm_nn_mt(m, k, n, &a, &b, &mut c, shift, t);
+                assert_eq!(c, nn_ref, "i32 NN tiled vs ref [{ctx}]");
+
+                let mut c = seed_mn.clone();
+                qgemm::gemm_nn_skipa_mt(m, k, n, &a, &b, &mut c, shift, t);
+                assert_eq!(c, nn_ref, "i32 NN zero-skip vs ref [{ctx}]");
+
+                let mut c = seed_mn.clone();
+                qgemm::gemm_nn_packed_mt(&pa, n, &b, &mut c, shift, t);
+                assert_eq!(c, nn_ref, "i32 NN packed vs ref [{ctx}]");
+
+                let mut out = vec![Fx::MAX; m * n];
+                qgemm::gemm_nn_fused_mt(m, k, n, &a, &b, &mut out, shift, false, t);
+                assert_eq!(out, wb_plain, "Fx NN fused (no relu) vs ref [{ctx}]");
+
+                let mut out = vec![Fx::MAX; m * n];
+                qgemm::gemm_nn_fused_mt(m, k, n, &a, &b, &mut out, shift, true, t);
+                assert_eq!(out, wb_relu, "Fx NN fused+relu vs ref [{ctx}]");
+
+                let mut out = vec![Fx::MAX; m * n];
+                qgemm::gemm_nn_fused_packed_mt(&pa, n, &b, &mut out, shift, true, t);
+                assert_eq!(out, wb_relu, "Fx NN fused packed vs ref [{ctx}]");
+
+                let mut c = seed_kn.clone();
+                qgemm::gemm_tn_mt(m, k, n, &a, &b_tn, &mut c, shift, t);
+                assert_eq!(c, tn_ref, "i32 TN tiled vs ref [{ctx}]");
+
+                let mut c = seed_mn.clone();
+                qgemm::gemm_nt_mt(m, n, k, &a, &b_nt, &mut c, shift, t);
+                assert_eq!(c, nt_ref, "i32 NT tiled vs ref [{ctx}]");
+            }
+        }
+    }
+}
