@@ -41,7 +41,7 @@ use tinycl::nn::ModelConfig;
 use tinycl::serve::server::{default_queue_depth, DEFAULT_MAX_WAIT};
 use tinycl::serve::{
     run_closed_loop, run_open_loop, ArrivalProcess, Lane, LoadConfig, OpenLoopConfig,
-    ServeRunReport, Server, ServerConfig,
+    RetryPolicy, ServeRunReport, Server, ServerConfig,
 };
 use tinycl::sim::SimConfig;
 use tinycl::util::cli::Args;
@@ -108,6 +108,7 @@ fn main() -> anyhow::Result<()> {
         ),
         queue_depth: args.usize_or("queue-depth", default_queue_depth(clients)),
         replicas,
+        ..ServerConfig::default()
     };
     let server = Server::start(host, serve_cfg);
     let client = server.client();
@@ -122,11 +123,17 @@ fn main() -> anyhow::Result<()> {
                     seed: 5,
                     active_classes: 10,
                     lane: Lane::Interactive,
+                    deadline: None,
                 };
                 let r = run_open_loop(&client, &data.samples, &cfg);
                 (r.wall_secs, r.latencies_us, r.correct, Some(r.offered_rps))
             } else {
-                let load = LoadConfig { clients, requests, active_classes: 10 };
+                let load = LoadConfig {
+                    clients,
+                    requests,
+                    active_classes: 10,
+                    retry: RetryPolicy::default(),
+                };
                 let r = run_closed_loop(&client, &data.samples, &load);
                 (r.wall_secs, r.latencies_us, r.correct, None)
             }

@@ -4,18 +4,24 @@
 //! serve` sits next to the other paper-figure benches.
 //!
 //! Run: `cargo bench --bench serve [-- --clients N --max-batch N
-//! --replicas N --open-loop=false --arrival-rate R
+//! --replicas N --open-loop=false --slo=false --arrival-rate R
 //! --arrival-process poisson|uniform --max-wait-us N --queue-depth N
 //! --requests N --backend ... --threads N --qnn-engine naive|fast
 //! --smoke]`.
 //!
 //! Ladders `max_batch = 1` vs `N` and `replicas = 1` vs `N` per
 //! backend, sweeps an open-loop saturation ladder (coordinated-
-//! omission-corrected latency, achieved-vs-offered knee), parity-pins
-//! every served answer against per-sample `predict`, checks the
-//! per-lane shed accounting (`offered == admitted + shed`), and at the
-//! paper geometry asserts cross-request batching ≥ 2× (`f32-fast`,
-//! `qnn`) and 2-replica `f32-fast` ≥ 1.5×. Emits `BENCH_serve.json`.
+//! omission-corrected latency, achieved-vs-offered knee), then runs
+//! the SLO-attainment rung at 0.9× the knee: per-request deadlines,
+//! serve-while-learning on, an injected replica kill mid-run healed by
+//! the autoscaler at the next train barrier, diff-only weight
+//! re-broadcast, and exactly-once accounting (zero duplicate or lost
+//! responses). Parity-pins every served answer against per-sample
+//! `predict`, checks the per-lane shed taxonomy
+//! (`offered == admitted + shed_capacity + shed_deadline`), and at the
+//! paper geometry asserts cross-request batching ≥ 2×, 2-replica
+//! `f32-fast` ≥ 1.5×, and interactive SLO attainment ≥ 99%. Emits
+//! `BENCH_serve.json`.
 
 use tinycl::util::cli::Args;
 

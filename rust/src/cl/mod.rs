@@ -154,6 +154,38 @@ pub trait Learner {
     {
         None
     }
+
+    /// Monotone weight-snapshot version, bumped by every weight update,
+    /// or `None` when the backend has no version stamps. Versioned
+    /// backends let the serving layer re-broadcast post-train weights
+    /// as *diffs*: each replica copies only the tensors whose stamp
+    /// advanced past its own ([`Learner::sync_weights_from`]), so a
+    /// dense-head-only update ships one small tensor instead of the
+    /// whole model.
+    fn weights_version(&self) -> Option<u64> {
+        None
+    }
+
+    /// Adopt `src`'s weights by diff, copying exactly the tensors whose
+    /// version stamps differ (plus any update-order state that must
+    /// travel with them, e.g. the quantized model's dither counter).
+    /// Returns the bytes copied, or `None` when the backend does not
+    /// support diff sync — the caller falls back to a full snapshot.
+    /// Both learners must share snapshot lineage (replicas of one
+    /// pool): stamps, not contents, decide what is copied.
+    fn sync_weights_from(&mut self, src: &Self) -> Option<u64>
+    where
+        Self: Sized,
+    {
+        let _ = src;
+        None
+    }
+
+    /// Bytes of one full weight snapshot — the re-broadcast baseline
+    /// diff sync is measured against — or `None` when unknown.
+    fn weights_bytes(&self) -> Option<u64> {
+        None
+    }
 }
 
 impl Learner for crate::nn::Model {
@@ -222,5 +254,17 @@ impl Learner for crate::nn::Model {
         let mut replica = self.clone();
         replica.pack_weights();
         Some(replica)
+    }
+
+    fn weights_version(&self) -> Option<u64> {
+        Some(crate::nn::Model::weights_version(self))
+    }
+
+    fn sync_weights_from(&mut self, src: &Self) -> Option<u64> {
+        Some(crate::nn::Model::sync_weights_from(self, src))
+    }
+
+    fn weights_bytes(&self) -> Option<u64> {
+        Some(crate::nn::Model::weights_bytes(self))
     }
 }

@@ -344,6 +344,35 @@ impl Learner for Backend {
         }
     }
 
+    fn weights_version(&self) -> Option<u64> {
+        match self {
+            Backend::F32(m) => Some(m.weights_version()),
+            Backend::Qnn { model, .. } => Some(model.weights_version()),
+            // The device and XLA backends hold weights out of host
+            // reach (SRAM images / device buffers) — no stamps, so the
+            // serving layer falls back to full-snapshot re-broadcast.
+            _ => None,
+        }
+    }
+
+    fn sync_weights_from(&mut self, src: &Self) -> Option<u64> {
+        match (self, src) {
+            (Backend::F32(dst), Backend::F32(src)) => Some(dst.sync_weights_from(src)),
+            (Backend::Qnn { model: dst, .. }, Backend::Qnn { model: src, .. }) => {
+                Some(dst.sync_weights_from(src))
+            }
+            _ => None,
+        }
+    }
+
+    fn weights_bytes(&self) -> Option<u64> {
+        match self {
+            Backend::F32(m) => Some(m.weights_bytes()),
+            Backend::Qnn { model, .. } => Some(model.weights_bytes()),
+            _ => None,
+        }
+    }
+
     fn forward_to_cut_batch(&mut self, xs: &[&Tensor<f32>], cut: usize) -> Vec<Tensor<f32>> {
         match self {
             Backend::F32(m) => m.forward_to_cut_batch(xs, cut),
@@ -397,11 +426,15 @@ impl Learner for Backend {
             Backend::Qnn { model, config } => {
                 // Fresh params, same engine/threads knobs (both are
                 // bit-invisible; dropping them silently de-threaded
-                // every GDumb re-init on the fast engine).
-                let (engine, threads) = (model.engine, model.threads);
+                // every GDumb re-init on the fast engine). The version
+                // counter survives the rebuild so diff re-broadcast
+                // stays sound across re-inits.
+                let (engine, threads, version) =
+                    (model.engine, model.threads, model.weights_version());
                 *model = QModel::from_model(&Model::new(config.clone(), seed))
                     .with_engine(engine)
                     .with_threads(threads);
+                model.inherit_version(version);
             }
             Backend::Sim { dev, .. } => {
                 let float = Model::new(dev.model_cfg.clone(), seed);

@@ -89,9 +89,13 @@ SUBCOMMANDS
              (also times the qnn naive vs fast integer-GEMM rung)
   serve-bench  multi-client inference serving: replica pool + dynamic
              batcher + priority lanes + admission control. Rungs:
-             max_batch 1 vs N ladder, replicas 1 vs N ladder, and an
+             max_batch 1 vs N ladder, replicas 1 vs N ladder, an
              open-loop saturation sweep (timed arrivals, coordinated-
-             omission-corrected latency, achieved-vs-offered knee)
+             omission-corrected latency, achieved-vs-offered knee),
+             and an SLO-attainment rung at 0.9× the knee with
+             serve-while-learning on, per-request deadlines, a
+             watchdog, the autoscaler healing an injected replica
+             kill mid-run, and diff-only weight re-broadcast
              --backend f32|f32-fast|qnn|sim (default: both fast backends)
              --clients N (default 8) --requests N (default 2000)
              --max-batch N (default 64) --max-wait-us N (default 200)
@@ -100,6 +104,7 @@ SUBCOMMANDS
              --replicas N (replica-ladder top, default 2; 1 skips)
              --open-loop=false (skip the sweep) --arrival-rate R (req/s,
              single point) --arrival-process poisson|uniform
+             --slo=false (skip the fault-injected SLO rung)
              --threads N --qnn-engine naive|fast --seed N
              --smoke (tiny geometry, CI-safe; ratio asserts relaxed)
              asserts batching ≥ 2× and 2-replica f32-fast ≥ 1.5× at the

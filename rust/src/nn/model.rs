@@ -233,6 +233,13 @@ pub struct Model {
     /// Recycled GEMM scratch buffers (interior-mutable so the `&self`
     /// forward paths can reuse them across calls).
     scratch: RefCell<Scratch>,
+    /// Monotone weight-snapshot version, bumped by every weight update
+    /// (the serving layer's diff re-broadcast key). Survives `reinit`.
+    version: u64,
+    /// Per-tensor stamp (k1, k2, w): the `version` at each tensor's
+    /// last update. Diff sync copies exactly the tensors whose stamp
+    /// differs from the source snapshot's.
+    tensor_versions: [u64; 3],
 }
 
 impl Model {
@@ -263,6 +270,8 @@ impl Model {
             threads: 1,
             packed: None,
             scratch: RefCell::new(Scratch::default()),
+            version: 0,
+            tensor_versions: [0; 3],
         }
     }
 
@@ -278,7 +287,74 @@ impl Model {
             threads: 1,
             packed: None,
             scratch: RefCell::new(Scratch::default()),
+            version: 0,
+            tensor_versions: [0; 3],
         }
+    }
+
+    /// Record a weight update: drop the packed conv snapshot (it must
+    /// never survive an update) and advance the version stamps of the
+    /// tensors that moved. Every update site funnels through here so
+    /// pack invalidation and diff-sync bookkeeping cannot drift apart.
+    fn touch(&mut self, k1: bool, k2: bool, w: bool) {
+        self.packed = None;
+        self.version += 1;
+        let v = self.version;
+        if k1 {
+            self.tensor_versions[0] = v;
+        }
+        if k2 {
+            self.tensor_versions[1] = v;
+        }
+        if w {
+            self.tensor_versions[2] = v;
+        }
+    }
+
+    /// Current weight-snapshot version (advances on every update,
+    /// including `reinit`).
+    pub fn weights_version(&self) -> u64 {
+        self.version
+    }
+
+    /// Bytes of one full weight snapshot (the re-broadcast baseline
+    /// diff sync saves against).
+    pub fn weights_bytes(&self) -> u64 {
+        4 * (self.params.k1.data().len() + self.params.k2.data().len() + self.params.w.data().len())
+            as u64
+    }
+
+    /// Adopt `src`'s weights by diff: copy exactly the tensors whose
+    /// version stamp differs, adopt `src`'s stamps, and return the bytes
+    /// copied. Both models must share snapshot lineage (replicas of one
+    /// pool, synced at every barrier) — stamps, not contents, decide.
+    /// A dense-only update (deepest-cut train step) copies just `w` and
+    /// keeps this model's conv weight pack valid: `PackedWeights` holds
+    /// only k1/k2, so the pack survives untouched unless a conv tensor
+    /// moved, in which case `src`'s (freshly packed) snapshot pack is
+    /// adopted too.
+    pub fn sync_weights_from(&mut self, src: &Model) -> u64 {
+        let mut bytes = 0u64;
+        let mut conv_changed = false;
+        for i in 0..3 {
+            if self.tensor_versions[i] == src.tensor_versions[i] {
+                continue;
+            }
+            let (dst_t, src_t) = match i {
+                0 => (&mut self.params.k1, &src.params.k1),
+                1 => (&mut self.params.k2, &src.params.k2),
+                _ => (&mut self.params.w, &src.params.w),
+            };
+            *dst_t = src_t.clone();
+            bytes += 4 * dst_t.data().len() as u64;
+            self.tensor_versions[i] = src.tensor_versions[i];
+            conv_changed |= i < 2;
+        }
+        self.version = src.version;
+        if conv_changed {
+            self.packed = src.packed.clone();
+        }
+        bytes
     }
 
     /// Select the compute core (builder-style; parameters are untouched).
@@ -299,8 +375,12 @@ impl Model {
     /// engine-preserving reset the CL layer and the coordinator both
     /// hand-rolled before PR 2 (flagged in PR 1 review).
     pub fn reinit(&mut self, seed: u64) {
-        let (engine, threads) = (self.engine, self.threads);
+        let (engine, threads, version) = (self.engine, self.threads, self.version);
         *self = Model::new(self.config.clone(), seed).with_engine(engine).with_threads(threads);
+        // A reinit is a weight update like any other: the version keeps
+        // advancing (never resets) so replica diff sync stays sound.
+        self.version = version;
+        self.touch(true, true, true);
     }
 
     /// Repack the conv kernels into microkernel tile order for the
@@ -718,7 +798,9 @@ impl Model {
             (None, dw, l, c)
         };
         let scale = 1.0 / b as f32;
-        self.packed = None; // suffix steps update weights too
+        // Suffix steps update weights too: cut 1 moves k2 + w, cut 2
+        // moves only the dense head (the cheap-diff re-broadcast case).
+        self.touch(false, cut == 1, true);
         if let Some(mut dk2) = dk2 {
             scale_tensor(&mut dk2, scale);
             sgd::clip_by_norm(&mut dk2, self.config.grad_clip);
@@ -851,7 +933,7 @@ impl Model {
     /// of the tensors never perturbs the rest.
     pub fn reinit_suffix(&mut self, cut: usize, seed: u64) {
         assert!(cut <= MAX_CUT, "cut {cut} out of range (max {MAX_CUT})");
-        self.packed = None;
+        self.touch(cut == 0, cut <= 1, true);
         let fresh = Model::new(self.config.clone(), seed);
         if cut == 0 {
             self.params.k1 = fresh.params.k1;
@@ -865,7 +947,7 @@ impl Model {
     /// Apply pre-computed gradients. Drops the packed weight snapshot:
     /// the pack must never survive a weight update.
     pub fn apply(&mut self, grads: &Gradients, lr: f32) {
-        self.packed = None;
+        self.touch(true, true, true);
         sgd::step(&mut self.params.k1, &grads.k1, lr);
         sgd::step(&mut self.params.k2, &grads.k2, lr);
         sgd::step(&mut self.params.w, &grads.w, lr);

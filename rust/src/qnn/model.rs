@@ -160,6 +160,12 @@ pub struct QModel {
     /// Recycled fast-engine scratch buffers (interior-mutable so the
     /// `&self` forward paths can reuse them across calls).
     scratch: RefCell<QScratch>,
+    /// Monotone weight-snapshot version, bumped by every weight update
+    /// (the serving layer's diff re-broadcast key).
+    version: u64,
+    /// Per-tensor stamp (k1, k2, w): the `version` at each tensor's
+    /// last update.
+    tensor_versions: [u64; 3],
 }
 
 /// Host-side loss layer (float; see module docs of `qnn`): loss, top-1
@@ -181,7 +187,82 @@ impl QModel {
             threads: 1,
             packed: None,
             scratch: RefCell::new(QScratch::default()),
+            version: 0,
+            tensor_versions: [0; 3],
         }
+    }
+
+    /// Record a weight update: drop the packed conv snapshot and
+    /// advance the version stamps of the tensors that moved (see the
+    /// float model's `touch` — same contract).
+    fn touch(&mut self, k1: bool, k2: bool, w: bool) {
+        self.packed = None;
+        self.version += 1;
+        let v = self.version;
+        if k1 {
+            self.tensor_versions[0] = v;
+        }
+        if k2 {
+            self.tensor_versions[1] = v;
+        }
+        if w {
+            self.tensor_versions[2] = v;
+        }
+    }
+
+    /// Current weight-snapshot version (advances on every update).
+    pub fn weights_version(&self) -> u64 {
+        self.version
+    }
+
+    /// Keep the version counter monotone across a wholesale model
+    /// replacement: GDumb re-init builds a brand-new `QModel` (version
+    /// 0), but diff sync must still see every tensor as newer than any
+    /// replica stamped from the old lineage. Adopt the predecessor's
+    /// counter, then stamp all tensors as rewritten.
+    pub fn inherit_version(&mut self, prev_version: u64) {
+        self.version = prev_version;
+        self.touch(true, true, true);
+    }
+
+    /// Bytes of one full Q4.12 weight snapshot (2 bytes per value).
+    pub fn weights_bytes(&self) -> u64 {
+        2 * (self.params.k1.data().len()
+            + self.params.k2.data().len()
+            + self.params.w.data().len()) as u64
+    }
+
+    /// Adopt `src`'s weights by diff: copy exactly the tensors whose
+    /// version stamp differs plus the train-step dither counter, adopt
+    /// `src`'s stamps, and return the bytes copied. The dither counter
+    /// must travel with every diff — any replica may lead a future
+    /// barrier, and stochastic-rounding bits key on it (`wb_dither`),
+    /// so bit-exact pool parity requires it synced even when only the
+    /// dense head moved. A dense-only diff keeps this model's conv
+    /// weight pack valid (`QPackedWeights` holds only k1/k2).
+    pub fn sync_weights_from(&mut self, src: &QModel) -> u64 {
+        let mut bytes = 0u64;
+        let mut conv_changed = false;
+        for i in 0..3 {
+            if self.tensor_versions[i] == src.tensor_versions[i] {
+                continue;
+            }
+            let (dst_t, src_t) = match i {
+                0 => (&mut self.params.k1, &src.params.k1),
+                1 => (&mut self.params.k2, &src.params.k2),
+                _ => (&mut self.params.w, &src.params.w),
+            };
+            *dst_t = src_t.clone();
+            bytes += 2 * dst_t.data().len() as u64;
+            self.tensor_versions[i] = src.tensor_versions[i];
+            conv_changed |= i < 2;
+        }
+        self.version = src.version;
+        self.step = src.step;
+        if conv_changed {
+            self.packed = src.packed.clone();
+        }
+        bytes
     }
 
     /// Repack the conv kernels into microkernel tile order for the fast
@@ -381,7 +462,7 @@ impl QModel {
     ) -> (f32, usize) {
         assert!(!xs.is_empty(), "empty batch");
         assert_eq!(xs.len(), labels.len(), "batch inputs vs labels");
-        self.packed = None; // the step below updates every parameter
+        self.touch(true, true, true); // the step below updates every parameter
         match self.engine {
             QnnEngine::Naive => self.train_batch_naive(xs, labels, active_classes, lr),
             QnnEngine::Fast => self.train_batch_fast(xs, labels, active_classes, lr),
@@ -606,7 +687,9 @@ impl QModel {
         }
         assert!(!acts.is_empty(), "empty batch");
         assert_eq!(acts.len(), labels.len(), "batch inputs vs labels");
-        self.packed = None; // suffix steps update weights too
+        // Suffix steps update weights too: cut 1 moves k2 + w, cut 2
+        // moves only the dense head (the cheap-diff re-broadcast case).
+        self.touch(false, cut == 1, true);
         if cut == 1 {
             match self.engine {
                 QnnEngine::Naive => self.train_suffix_naive(acts, labels, active_classes, lr),
@@ -823,7 +906,7 @@ impl QModel {
     pub fn reinit_suffix(&mut self, cut: usize, seed: u64) {
         let max = crate::nn::MAX_CUT;
         assert!(cut <= max, "cut {cut} out of range (max {max})");
-        self.packed = None;
+        self.touch(cut == 0, cut <= 1, true);
         let fresh = QParams::from_f32(&crate::nn::Model::new(self.config.clone(), seed).params);
         if cut == 0 {
             self.params.k1 = fresh.k1;

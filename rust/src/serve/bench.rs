@@ -14,16 +14,28 @@
 //!    coordinated-omission-corrected latency — reports the
 //!    achieved-vs-offered throughput knee instead of letting a closed
 //!    loop hide overload.
+//! 4. **SLO rung** (open loop at 90% of the measured knee): the
+//!    interactive lane under a latency budget calibrated from a
+//!    fault-free run at the same rate, serve-while-learning ON
+//!    (suffix-only trains at the deepest cut — the diff-re-broadcast
+//!    lever), **one replica killed mid-run** by a [`FaultPlan`], and
+//!    the autoscaler healing the pool at the next train barrier. Gates
+//!    at the paper geometry: ≥ 99% of offered requests answered within
+//!    budget, zero duplicate and zero lost responses, and diff
+//!    re-broadcast bytes strictly under the full-snapshot baseline.
 //!
 //! Flags: `--backend f32|f32-fast|qnn|sim` (default: ladder both
 //! `f32-fast` and `qnn`), `--threads N` (GEMM workers, 0 = auto),
 //! `--qnn-engine naive|fast`, `--clients N`, `--max-batch N`,
 //! `--replicas N` (replica-ladder top, default 2; 1 skips the rung),
 //! `--open-loop` (run the sweep; on by default — `--open-loop=false`
-//! skips it), `--arrival-rate R` (req/s; replaces the sweep with one
-//! point), `--arrival-process poisson|uniform`, `--max-wait-us N`,
-//! `--queue-depth N`, `--requests N`, `--seed N`, `--smoke` (tiny
-//! geometry, ratio asserts relaxed — the CI rung).
+//! skips it), `--slo` (run the SLO/fault rung; on by default —
+//! `--slo=false` skips it), `--arrival-rate R` (req/s; replaces the
+//! sweep with one point), `--arrival-process poisson|uniform`,
+//! `--max-wait-us N`, `--queue-depth N`, `--requests N`, `--seed N`,
+//! `--smoke` (tiny geometry, ratio asserts relaxed — the CI rung; the
+//! fault-injected SLO rung still runs and its exactly-once gates still
+//! apply).
 //!
 //! Every run is checked for (a) shed-accounting consistency
 //! (`offered == admitted + shed` per lane and aggregate, and the
@@ -39,12 +51,16 @@
 //! `BENCH_speedup.json` convention: machine-readable perf trajectory
 //! across PRs).
 
+use super::clock::WallClock;
 use super::loadgen::{
-    run_closed_loop, run_open_loop, ArrivalProcess, LoadConfig, OpenLoopConfig,
+    run_closed_loop, run_open_loop, ArrivalProcess, LoadConfig, OpenLoopConfig, RetryPolicy,
 };
-use super::metrics::ServeRunReport;
+use super::metrics::{LatencySummary, ServeRunReport};
 use super::queue::Lane;
-use super::server::{default_queue_depth, Server, ServerConfig, DEFAULT_MAX_WAIT};
+use super::server::{
+    default_queue_depth, AutoscalePolicy, FaultPlan, FaultTarget, Server, ServerConfig,
+    DEFAULT_MAX_WAIT,
+};
 use crate::cl::Learner;
 use crate::coordinator::{Backend, BackendKind};
 use crate::data::{Sample, SyntheticCifar};
@@ -71,6 +87,16 @@ const REPLICA_FLOOR: f64 = 1.5;
 /// Open-loop sweep rungs as fractions of the measured closed-loop
 /// capacity: comfortably under, near, and beyond the knee.
 const SWEEP_FRACTIONS: [f64; 3] = [0.5, 0.9, 1.5];
+
+/// Paper-mode floor for interactive SLO attainment at 0.9× the knee
+/// with learning on and one replica killed mid-run.
+const SLO_ATTAINMENT_FLOOR: f64 = 0.99;
+
+/// SLO budget = this multiple of the calibration run's p99 (floored at
+/// [`SLO_BUDGET_FLOOR_US`]): tight enough that the budget means
+/// something, loose enough that an honest self-healing pool passes.
+const SLO_BUDGET_P99_MULT: f64 = 8.0;
+const SLO_BUDGET_FLOOR_US: u64 = 10_000;
 
 struct BenchSetup {
     model_cfg: ModelConfig,
@@ -139,12 +165,14 @@ fn run_closed(
             max_wait: setup.max_wait,
             queue_depth: setup.queue_depth,
             replicas,
+            ..ServerConfig::default()
         },
     );
     let load = LoadConfig {
         clients: setup.clients,
         requests: setup.requests,
         active_classes: setup.model_cfg.num_classes,
+        retry: RetryPolicy::default(),
     };
     let result = run_closed_loop(&server.client(), samples, &load);
     let queue = server.queue_stats();
@@ -179,6 +207,7 @@ fn run_open(
             max_wait: setup.max_wait,
             queue_depth: setup.queue_depth,
             replicas: 1,
+            ..ServerConfig::default()
         },
     );
     let cfg = OpenLoopConfig {
@@ -188,8 +217,11 @@ fn run_open(
         seed: setup.seed,
         active_classes: setup.model_cfg.num_classes,
         lane: Lane::Interactive,
+        deadline: None,
     };
     let result = run_open_loop(&server.client(), samples, &cfg);
+    assert_eq!(result.duplicates, 0, "open-loop run observed a duplicate response");
+    assert_eq!(result.lost, 0, "open-loop run lost an admitted response");
     let queue = server.queue_stats();
     let (_backend, stats) = server.shutdown();
     let report = ServeRunReport::new(
@@ -203,8 +235,186 @@ fn run_open(
         result.correct,
     )
     .with_offered_rps(result.offered_rps);
-    check_accounting(&report, result.shed);
+    check_accounting(&report, result.shed + result.shed_deadline);
     Ok((report, result.predictions))
+}
+
+/// The SLO rung: interactive-lane serving under a latency budget at the
+/// given rate, with serve-while-learning on (suffix-only trains at the
+/// backend's deepest cut), one replica killed mid-run, a watchdog armed,
+/// and the autoscaler healing the pool at the next train barrier. The
+/// budget is calibrated from a fault-free run at the same rate
+/// ([`SLO_BUDGET_P99_MULT`] × its p99). Exactly-once gates (zero
+/// duplicates, zero losses, books balance) apply in every mode; the
+/// attainment/diff-bytes ratio gates only at the paper geometry.
+fn run_slo(
+    setup: &BenchSetup,
+    kind: BackendKind,
+    max_batch: usize,
+    rate_rps: f64,
+    samples: &[Sample],
+    smoke: bool,
+) -> Result<ServeRunReport> {
+    // --- calibration: same rate, no faults, no deadline ---
+    let backend = setup.build_backend(kind, samples, setup.threads)?;
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            max_batch,
+            max_wait: setup.max_wait,
+            queue_depth: setup.queue_depth,
+            replicas: 2,
+            ..ServerConfig::default()
+        },
+    );
+    let calib_cfg = OpenLoopConfig {
+        rate_rps,
+        requests: (setup.requests / 3).max(30),
+        process: setup.arrival_process,
+        seed: setup.seed ^ 0xCA11B,
+        active_classes: setup.model_cfg.num_classes,
+        lane: Lane::Interactive,
+        deadline: None,
+    };
+    let calib = run_open_loop(&server.client(), samples, &calib_cfg);
+    server.shutdown();
+    let p99 = LatencySummary::of_us(&calib.latencies_us).map(|l| l.p99_us).unwrap_or(0.0);
+    let budget_us = ((SLO_BUDGET_P99_MULT * p99) as u64).max(SLO_BUDGET_FLOOR_US);
+
+    // --- the measured run: deadline-enforced, learning on, one kill ---
+    let backend = setup.build_backend(kind, samples, setup.threads)?;
+    let full_bytes = backend.weights_bytes();
+    let cut = backend.max_latent_cut().expect("slo-rung backends support latent cuts");
+    let span_us = (setup.requests as f64 / rate_rps * 1e6) as u64;
+    let plan = FaultPlan::new().kill(FaultTarget::Any, span_us / 2);
+    let server = Server::start_with_faults(
+        backend,
+        ServerConfig {
+            max_batch,
+            max_wait: setup.max_wait,
+            queue_depth: setup.queue_depth,
+            replicas: 2,
+            lane_slo: [Some(Duration::from_micros(budget_us)), None],
+            stall_timeout: Some(Duration::from_secs(5)),
+            diff_resync: true,
+            autoscale: Some(AutoscalePolicy {
+                min_replicas: 2,
+                max_replicas: 3,
+                scale_up_pending: setup.queue_depth,
+                scale_down_pending: 0,
+            }),
+        },
+        WallClock::shared(),
+        plan,
+    );
+    let client = server.client();
+    let trains: u64 = if smoke { 3 } else { 6 };
+    let (result, trained) = std::thread::scope(|scope| {
+        let trainer_client = client.clone();
+        let trainer = scope.spawn(move || {
+            // Trains spread across the arrival span so barriers bracket
+            // the kill — the post-kill barrier is where the autoscaler
+            // heals the pool and the diff re-broadcast is exercised.
+            let clock = trainer_client.clock();
+            let t0 = clock.now_us();
+            let gap = span_us / (trains + 1);
+            let mut applied = 0u64;
+            for i in 1..=trains {
+                clock.sleep_until_us(t0 + i * gap);
+                let s = &samples[i as usize % samples.len()];
+                if trainer_client
+                    .train_at_cut(&s.x, s.label, setup.model_cfg.num_classes, WARMUP_LR, cut)
+                    .is_some()
+                {
+                    applied += 1;
+                }
+            }
+            applied
+        });
+        let open_cfg = OpenLoopConfig {
+            rate_rps,
+            requests: setup.requests,
+            process: setup.arrival_process,
+            seed: setup.seed ^ 0x510,
+            active_classes: setup.model_cfg.num_classes,
+            lane: Lane::Interactive,
+            deadline: Some(Duration::from_micros(budget_us)),
+        };
+        let result = run_open_loop(&client, samples, &open_cfg);
+        let trained = trainer.join().expect("trainer thread panicked");
+        (result, trained)
+    });
+    let queue = server.queue_stats();
+    let (_learners, stats) = server.shutdown_all();
+    // Attainment over *offered*: sheds (capacity or deadline) are SLO
+    // misses, not exemptions.
+    let within = result.latencies_us.iter().filter(|&&l| l <= budget_us as f64).count();
+    let attainment = within as f64 / setup.requests as f64;
+    let report = ServeRunReport::new(
+        kind.name(),
+        max_batch,
+        1,
+        queue,
+        stats.clone(),
+        result.wall_secs,
+        &result.latencies_us,
+        result.correct,
+    )
+    .with_offered_rps(result.offered_rps)
+    .with_slo(budget_us, attainment);
+    check_accounting(&report, result.shed + result.shed_deadline);
+    // Exactly-once and fault-accounting gates hold in every mode: the
+    // kill is deterministic in count, and replayed batches may never
+    // double-answer or vanish.
+    assert_eq!(result.duplicates, 0, "{}: duplicate response after replica kill", kind.name());
+    assert_eq!(result.lost, 0, "{}: lost response after replica kill", kind.name());
+    assert_eq!(stats.faults_injected, 1, "{}: fault plan did not fire exactly once", kind.name());
+    assert_eq!(stats.replicas_lost, 1, "{}: kill did not cost exactly one replica", kind.name());
+    assert_eq!(stats.train_steps, trained, "{}: train books disagree", kind.name());
+    println!(
+        "{}: slo rung — budget {budget_us} µs (calibrated {SLO_BUDGET_P99_MULT}×p99), \
+         attainment {:.2}% of {} offered, kill at {} µs: lost {} spawned {} replays {}, \
+         resyncs {} ({} diff, {} B diffed)\n",
+        kind.name(),
+        attainment * 100.0,
+        setup.requests,
+        span_us / 2,
+        stats.replicas_lost,
+        stats.replicas_spawned,
+        stats.replays,
+        stats.resyncs,
+        stats.resyncs_diff,
+        stats.resync_diff_bytes,
+    );
+    if !smoke {
+        assert!(
+            attainment >= SLO_ATTAINMENT_FLOOR,
+            "{}: interactive SLO attainment {attainment:.4} < {SLO_ATTAINMENT_FLOOR} at \
+             0.9× knee with learning on and one replica kill",
+            kind.name()
+        );
+        assert!(
+            stats.replicas_spawned >= 1,
+            "{}: pool never healed after the kill (no spawn at a barrier)",
+            kind.name()
+        );
+        assert!(
+            stats.resyncs_diff > 0,
+            "{}: no diff re-broadcasts despite versioned backend + trains",
+            kind.name()
+        );
+        let full = full_bytes.expect("versioned backends report snapshot bytes");
+        assert!(
+            stats.resync_diff_bytes < stats.resyncs_diff * full,
+            "{}: diff re-broadcast ({} B over {} resyncs) did not beat the \
+             full-snapshot baseline ({} B each) despite dense-head-only trains",
+            kind.name(),
+            stats.resync_diff_bytes,
+            stats.resyncs_diff,
+            full
+        );
+    }
+    Ok(report)
 }
 
 /// Serving parity: every served answer must match the per-sample oracle
@@ -258,6 +468,7 @@ pub fn run(args: &Args) -> Result<()> {
     let max_batch = args.usize_or("max-batch", crate::cl::EVAL_BATCH).max(1);
     let replicas = args.usize_or("replicas", 2).max(1);
     let open_loop = args.bool_or("open-loop", true);
+    let slo = args.bool_or("slo", true);
     let arrival_rate: Option<f64> = args
         .get("arrival-rate")
         .map(|r| r.parse::<f64>().map_err(|e| anyhow::anyhow!("--arrival-rate={r}: {e}")))
@@ -299,13 +510,15 @@ pub fn run(args: &Args) -> Result<()> {
     let mode = if smoke { "smoke" } else { "paper" };
     println!(
         "serve-bench [{mode}]: {} requests, {} closed-loop clients, queue depth {}, \
-         max_wait {} µs, {} GEMM threads, replica ladder 1→{replicas}, open-loop {}\n",
+         max_wait {} µs, {} GEMM threads, replica ladder 1→{replicas}, open-loop {}, \
+         slo rung {}\n",
         setup.requests,
         setup.clients,
         setup.queue_depth,
         setup.max_wait.as_micros(),
         setup.threads,
         if open_loop { setup.arrival_process.name() } else { "off" },
+        if slo { "on (kill + autoscale + diff resync)" } else { "off" },
     );
 
     let mut runs: Vec<ServeRunReport> = Vec::new();
@@ -314,6 +527,7 @@ pub fn run(args: &Args) -> Result<()> {
     // `None` = no swept rate kept up (≥ 90% of offered) — recorded as
     // JSON null, distinguishable from a measured knee.
     let mut knees: Vec<(BackendKind, Option<f64>)> = Vec::new();
+    let mut slo_attainments: Vec<(BackendKind, f64)> = Vec::new();
     for &kind in &kinds {
         // Per-sample parity oracle: an identically built + warmed
         // backend answering with `Learner::predict`.
@@ -385,6 +599,7 @@ pub fn run(args: &Args) -> Result<()> {
 
         // --- 3. open-loop saturation sweep (coordinated-omission-
         // corrected latency; 1 replica) ---
+        let mut measured_knee: Option<f64> = None;
         if open_loop {
             let rates: Vec<f64> = match arrival_rate {
                 Some(r) => vec![r],
@@ -428,7 +643,20 @@ pub fn run(args: &Args) -> Result<()> {
                 ),
                 _ => {}
             }
+            measured_knee = knee;
             knees.push((kind, knee));
+        }
+
+        // --- 4. SLO rung: deadline-enforced serving at 0.9× the knee
+        // with learning on and one injected replica kill (self-healing
+        // pool; see run_slo for the gates) ---
+        if slo {
+            let rate = 0.9 * measured_knee.unwrap_or(capacity_rps);
+            let report = run_slo(&setup, kind, max_batch, rate, &samples, smoke)?;
+            println!("{report}\n");
+            slo_attainments
+                .push((kind, report.slo_attainment_interactive.expect("slo rung sets it")));
+            runs.push(report);
         }
     }
 
@@ -451,6 +679,13 @@ pub fn run(args: &Args) -> Result<()> {
             .collect::<Vec<_>>()
             .join(", ")
     };
+    let fmt_attain = |pairs: &[(BackendKind, f64)]| -> String {
+        pairs
+            .iter()
+            .map(|(k, a)| format!("\"{}\": {a:.4}", k.name()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
     let json = format!(
         "{{\n  \"bench\": \"serve\",\n  \"mode\": \"{mode}\",\n  \
          \"geometry\": {{\"image_size\": {}, \"in_channels\": {}, \
@@ -461,7 +696,8 @@ pub fn run(args: &Args) -> Result<()> {
          \"arrival_process\": \"{}\",\n  \
          \"batched_speedup\": {{{}}},\n  \
          \"replica_speedup\": {{{}}},\n  \
-         \"open_loop_knee_rps\": {{{}}},\n  \"runs\": [\n{}\n  ]\n}}\n",
+         \"open_loop_knee_rps\": {{{}}},\n  \
+         \"slo_attainment_interactive\": {{{}}},\n  \"runs\": [\n{}\n  ]\n}}\n",
         setup.model_cfg.image_size,
         setup.model_cfg.in_channels,
         setup.model_cfg.conv_channels,
@@ -475,6 +711,7 @@ pub fn run(args: &Args) -> Result<()> {
         fmt_pairs(&batch_speedups),
         fmt_pairs(&replica_speedups),
         fmt_opt_pairs(&knees),
+        fmt_attain(&slo_attainments),
         run_objs.join(",\n"),
     );
     match std::fs::write("BENCH_serve.json", &json) {

@@ -75,6 +75,12 @@ pub struct ServeRunReport {
     /// Top-1 accuracy of the served predictions (lightly-tuned model —
     /// a sanity signal, not a benchmark number).
     pub top1: f64,
+    /// Interactive-lane SLO budget (µs) when this run enforced one.
+    pub slo_budget_us: Option<u64>,
+    /// Fraction of *offered* interactive requests answered within the
+    /// SLO budget (sheds count against attainment — dropping a request
+    /// is an SLO miss, not an exemption).
+    pub slo_attainment_interactive: Option<f64>,
 }
 
 impl ServeRunReport {
@@ -102,6 +108,8 @@ impl ServeRunReport {
             throughput_rps: server.served as f64 / wall_secs.max(1e-12),
             latency: LatencySummary::of_us(latencies_us),
             top1: correct as f64 / served as f64,
+            slo_budget_us: None,
+            slo_attainment_interactive: None,
         }
     }
 
@@ -111,8 +119,17 @@ impl ServeRunReport {
         self
     }
 
+    /// Record the interactive-lane SLO outcome of this run.
+    pub fn with_slo(mut self, budget_us: u64, attainment: f64) -> ServeRunReport {
+        self.slo_budget_us = Some(budget_us);
+        self.slo_attainment_interactive = Some(attainment);
+        self
+    }
+
     fn mode(&self) -> &'static str {
-        if self.offered_rps.is_some() {
+        if self.slo_attainment_interactive.is_some() {
+            "slo"
+        } else if self.offered_rps.is_some() {
             "open"
         } else {
             "closed"
@@ -121,8 +138,9 @@ impl ServeRunReport {
 
     fn lane_json(l: &LaneStats) -> String {
         format!(
-            "{{\"offered\": {}, \"admitted\": {}, \"shed\": {}}}",
-            l.offered, l.admitted, l.shed
+            "{{\"offered\": {}, \"admitted\": {}, \"shed\": {}, \
+             \"shed_capacity\": {}, \"shed_deadline\": {}}}",
+            l.offered, l.admitted, l.shed, l.shed_capacity, l.shed_deadline
         )
     }
 
@@ -143,12 +161,32 @@ impl ServeRunReport {
             self.server.batch_hist.iter().map(|(s, n)| format!("[{s}, {n}]")).collect();
         let per_replica: Vec<String> =
             self.server.per_replica_served.iter().map(u64::to_string).collect();
+        let scaling: Vec<String> = self
+            .server
+            .autoscale_events
+            .iter()
+            .map(|(t, from, to)| format!("[{t}, {from}, {to}]"))
+            .collect();
+        let slo_budget = match self.slo_budget_us {
+            Some(b) => b.to_string(),
+            None => "null".to_string(),
+        };
+        let slo_attain = match self.slo_attainment_interactive {
+            Some(a) => format!("{a:.4}"),
+            None => "null".to_string(),
+        };
         format!(
             "{indent}{{\"backend\": \"{}\", \"mode\": \"{}\", \"max_batch\": {}, \
              \"clients\": {}, \"replicas\": {}, \"offered_rps\": {offered}, \
-             \"offered\": {}, \"admitted\": {}, \"shed\": {}, \"shed_rate\": {:.4}, \
+             \"offered\": {}, \"admitted\": {}, \"shed\": {}, \
+             \"shed_capacity\": {}, \"shed_deadline\": {}, \"shed_rate\": {:.4}, \
+             \"slo_budget_us\": {slo_budget}, \"slo_attainment_interactive\": {slo_attain}, \
              \"lanes\": {{\"interactive\": {}, \"bulk\": {}}}, \
-             \"served\": {}, \"train_steps\": {}, \"resyncs\": {}, \"wall_secs\": {:.4}, \
+             \"served\": {}, \"train_steps\": {}, \"resyncs\": {}, \
+             \"resyncs_diff\": {}, \"resync_diff_bytes\": {}, \
+             \"replays\": {}, \"batches_stolen\": {}, \"replicas_lost\": {}, \
+             \"replicas_retired\": {}, \"replicas_spawned\": {}, \"faults_injected\": {}, \
+             \"autoscale_events\": [{}], \"wall_secs\": {:.4}, \
              \"throughput_rps\": {:.1}, \"latency_us\": {lat}, \
              \"mean_batch\": {:.2}, \"batch_hist\": [{}], \
              \"per_replica_served\": [{}], \"top1\": {:.3}}}",
@@ -160,12 +198,23 @@ impl ServeRunReport {
             self.queue.offered,
             self.queue.admitted,
             self.queue.shed,
+            self.queue.shed_capacity,
+            self.queue.shed_deadline,
             self.queue.shed_rate(),
             Self::lane_json(self.queue.lane(Lane::Interactive)),
             Self::lane_json(self.queue.lane(Lane::Bulk)),
             self.server.served,
             self.server.train_steps,
             self.server.resyncs,
+            self.server.resyncs_diff,
+            self.server.resync_diff_bytes,
+            self.server.replays,
+            self.server.batches_stolen,
+            self.server.replicas_lost,
+            self.server.replicas_retired,
+            self.server.replicas_spawned,
+            self.server.faults_injected,
+            scaling.join(", "),
             self.wall_secs,
             self.throughput_rps,
             self.server.mean_batch(),
@@ -203,13 +252,20 @@ impl fmt::Display for ServeRunReport {
         }
         writeln!(
             f,
-            "  traffic : offered {}  admitted {}  shed {} ({:.1}%)  trains {}",
+            "  traffic : offered {}  admitted {}  shed {} ({:.1}%: {} capacity, {} deadline)  \
+             trains {}",
             self.queue.offered,
             self.queue.admitted,
             self.queue.shed,
             self.queue.shed_rate() * 100.0,
+            self.queue.shed_capacity,
+            self.queue.shed_deadline,
             self.server.train_steps,
         )?;
+        if let (Some(budget), Some(attain)) = (self.slo_budget_us, self.slo_attainment_interactive)
+        {
+            writeln!(f, "  slo     : {budget} µs budget, {:.2}% attainment", attain * 100.0)?;
+        }
         let bulk = self.queue.lane(Lane::Bulk);
         if bulk.offered > 0 {
             let inter = self.queue.lane(Lane::Interactive);
@@ -217,6 +273,23 @@ impl fmt::Display for ServeRunReport {
                 f,
                 "  lanes   : interactive {}/{} shed {}  ·  bulk {}/{} shed {}",
                 inter.admitted, inter.offered, inter.shed, bulk.admitted, bulk.offered, bulk.shed,
+            )?;
+        }
+        let s = &self.server;
+        if s.replicas_lost + s.replicas_retired + s.replicas_spawned + s.faults_injected > 0 {
+            writeln!(
+                f,
+                "  pool    : lost {}  retired {}  spawned {}  faults {}  replays {}  stolen {}  \
+                 resyncs {} ({} diff, {} B)",
+                s.replicas_lost,
+                s.replicas_retired,
+                s.replicas_spawned,
+                s.faults_injected,
+                s.replays,
+                s.batches_stolen,
+                s.resyncs,
+                s.resyncs_diff,
+                s.resync_diff_bytes,
             )?;
         }
         let hist: Vec<String> =
@@ -270,23 +343,36 @@ mod tests {
         let server = ServerStats {
             served: 10,
             batches: 3,
-            train_steps: 0,
-            resyncs: 0,
             batch_hist: hist,
             per_replica_served: vec![6, 4],
+            ..ServerStats::default()
         };
         let mut queue = QueueStats {
             offered: 12,
             admitted: 10,
             shed: 2,
+            shed_capacity: 1,
+            shed_deadline: 1,
             trains: 0,
             pending: 0,
             ..QueueStats::default()
         };
-        queue.lanes[Lane::Interactive.index()] =
-            LaneStats { offered: 9, admitted: 8, shed: 1, pending: 0 };
-        queue.lanes[Lane::Bulk.index()] =
-            LaneStats { offered: 3, admitted: 2, shed: 1, pending: 0 };
+        queue.lanes[Lane::Interactive.index()] = LaneStats {
+            offered: 9,
+            admitted: 8,
+            shed: 1,
+            shed_capacity: 0,
+            shed_deadline: 1,
+            pending: 0,
+        };
+        queue.lanes[Lane::Bulk.index()] = LaneStats {
+            offered: 3,
+            admitted: 2,
+            shed: 1,
+            shed_capacity: 1,
+            shed_deadline: 0,
+            pending: 0,
+        };
         assert!(queue.consistent());
         let r =
             ServeRunReport::new("f32-fast", 8, 4, queue, server, 0.5, &[100.0, 200.0, 300.0], 7);
@@ -298,7 +384,17 @@ mod tests {
         assert!(j.contains("\"shed\": 2"), "{j}");
         assert!(j.contains("\"replicas\": 2"), "{j}");
         assert!(j.contains("\"per_replica_served\": [6, 4]"), "{j}");
-        assert!(j.contains("\"bulk\": {\"offered\": 3, \"admitted\": 2, \"shed\": 1}"), "{j}");
+        assert!(
+            j.contains(
+                "\"bulk\": {\"offered\": 3, \"admitted\": 2, \"shed\": 1, \
+                 \"shed_capacity\": 1, \"shed_deadline\": 0}"
+            ),
+            "{j}"
+        );
+        assert!(j.contains("\"shed_capacity\": 1, \"shed_deadline\": 1, \"shed_rate\""), "{j}");
+        assert!(j.contains("\"slo_budget_us\": null"), "{j}");
+        assert!(j.contains("\"autoscale_events\": []"), "{j}");
+        assert!(j.contains("\"resync_diff_bytes\": 0"), "{j}");
         assert!(j.contains("\"batch_hist\": [[2, 1], [4, 2]]"), "{j}");
         assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
         // Display renders without panicking and carries the shed line.
@@ -311,5 +407,12 @@ mod tests {
         let oj = open.to_json("");
         assert!(oj.contains("\"mode\": \"open\""), "{oj}");
         assert!(oj.contains("\"offered_rps\": 1234.5"), "{oj}");
+        // SLO marking flips it again and records budget + attainment.
+        let slo = open.with_slo(2000, 0.995);
+        let sj = slo.to_json("");
+        assert!(sj.contains("\"mode\": \"slo\""), "{sj}");
+        assert!(sj.contains("\"slo_budget_us\": 2000"), "{sj}");
+        assert!(sj.contains("\"slo_attainment_interactive\": 0.9950"), "{sj}");
+        assert_eq!(sj.matches('{').count(), sj.matches('}').count(), "{sj}");
     }
 }

@@ -24,16 +24,27 @@
 //!   owning a [`crate::cl::Learner::clone_replica`] snapshot, executing
 //!   predict batches concurrently and serve-while-learning train jobs
 //!   under a pool-wide quiesce barrier with post-update weight
-//!   re-broadcast (all replicas stay bit-identical);
-//! * [`loadgen`] — closed-loop N-client harness plus the open-loop
+//!   re-broadcast (all replicas stay bit-identical). PR 8 makes the
+//!   pool *self-healing*: an exactly-once in-flight ledger replays the
+//!   batches of a crashed or wedged replica without double-answering,
+//!   a [`server::FaultPlan`] injects panics/stalls deterministically on
+//!   the clock seam, a watchdog retires wedged replicas, an autoscaler
+//!   grows/shrinks the pool at train-barrier quiesce points, and the
+//!   re-broadcast ships *versioned diffs* (only tensors touched since
+//!   each replica's snapshot version);
+//! * [`loadgen`] — closed-loop N-client harness (bounded seeded
+//!   [`loadgen::RetryPolicy`] backoff on sheds) plus the open-loop
 //!   timed-arrival generator (seeded Poisson/uniform schedules,
 //!   latency measured from *intended* arrival:
-//!   [`loadgen::corrected_latencies_us`]);
+//!   [`loadgen::corrected_latencies_us`], per-request SLO deadlines,
+//!   exhaustive answered/shed/lost drain accounting);
 //! * [`metrics`] — latency percentiles, throughput, batch histogram,
-//!   per-lane shed rates, `BENCH_serve.json` emission;
+//!   per-lane shed taxonomy (capacity vs deadline), SLO attainment,
+//!   `BENCH_serve.json` emission;
 //! * [`bench`] — the `tinycl serve-bench` driver (also the `serve`
 //!   bench binary): batching ladder, replica ladder, open-loop
-//!   saturation sweep, all parity-pinned against per-sample `predict`.
+//!   saturation sweep, SLO-attainment rung with an injected replica
+//!   kill, all parity-pinned against per-sample `predict`.
 
 pub mod bench;
 pub mod clock;
@@ -45,14 +56,16 @@ pub mod server;
 pub use clock::{Clock, MockClock, WallClock};
 pub use loadgen::{
     arrival_schedule_us, corrected_latencies_us, run_closed_loop, run_open_loop, ArrivalProcess,
-    LoadConfig, LoadResult, OpenLoopConfig, OpenLoopResult,
+    LoadConfig, LoadResult, OpenLoopConfig, OpenLoopResult, RetryPolicy,
 };
 pub use metrics::{LatencySummary, ServeRunReport};
 pub use queue::{
     flush_decision, Admission, Batch, BatchSnapshot, FlushDecision, Lane, LaneStats, PredictJob,
-    PredictResponse, QueueStats, ServeQueue, TrainJob, IDLE_FLUSH, STARVATION_BUDGET,
+    PredictOutcome, PredictResponse, QueueStats, ServeQueue, TrainJob, IDLE_FLUSH,
+    STARVATION_BUDGET,
 };
 pub use server::{
-    default_queue_depth, ServeClient, Served, Server, ServerConfig, ServerStats, Submitted,
+    default_queue_depth, AutoscalePolicy, FaultKind, FaultPlan, FaultSpec, FaultTarget,
+    InjectedFault, ServeClient, Served, Server, ServerConfig, ServerStats, Submitted,
     DEFAULT_MAX_WAIT, DEFAULT_QUEUE_DEPTH,
 };

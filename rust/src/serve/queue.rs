@@ -33,6 +33,19 @@
 //! served next — no lane ever waits more than that many flushes
 //! (property-tested in `tests/serve_lanes.rs`). Batches are lane-pure.
 //!
+//! **Deadlines and SLO shedding.** Every predict may carry an absolute
+//! `deadline_us` (explicit, or stamped at admission from the lane's SLO
+//! budget — [`ServeQueue::with_lane_slo`]). A request already at or past
+//! its deadline is dropped **at admission** (counted `shed_deadline`,
+//! never enqueued) and dropped **again at batch-build time**: a request
+//! that expired while queued is pulled off the lane, its admission is
+//! reclassified from `admitted` to `shed_deadline`, and the waiting
+//! client is told via [`PredictOutcome::DeadlineShed`] — a stale answer
+//! is worse than a shed. The books therefore satisfy
+//! `offered == admitted + shed_capacity + shed_deadline` per lane and in
+//! aggregate *at every instant*, where `admitted` counts admissions
+//! still standing (queued, in flight, or answered).
+//!
 //! **Train jobs and the replica barrier.** Train jobs (serve-while-
 //! learning) are control plane: never shed, and a **stream-order fence**
 //! — every job carries an admission sequence number, a predict batch
@@ -45,10 +58,23 @@
 //! Predictions admitted before the train thus always see pre-update
 //! weights and those admitted after always see post-update weights, on
 //! every replica — CL's stream-order semantics survive sharded serving.
+//!
+//! **Orphans (fault recovery).** When a replica dies or wedges while
+//! holding a popped batch, the watchdog/unwind machinery in
+//! [`super::server`] hands the batch's un-answered jobs back via
+//! [`ServeQueue::abandon`]. Orphans are served *before either lane* by
+//! the next healthy consumer (they were admitted earliest and have
+//! already waited a full batch lifetime) and — because they were all
+//! admitted before any queued train's fence — a train never pops while
+//! orphans remain. The barrier leader additionally drains them with
+//! [`ServeQueue::take_orphans`] so pre-barrier requests are answered on
+//! pre-update weights. Each abandoned job is replayed exactly once:
+//! ownership moves queue → one replica → (on fault) queue → one replica.
 
 use super::clock::{Clock, WallClock};
 use crate::tensor::Tensor;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -87,12 +113,17 @@ impl Lane {
 }
 
 /// One admitted predict request: the input image, the head mask, the
-/// priority lane, and the channel the prediction is sent back on.
+/// priority lane, an optional absolute deadline, and the channel the
+/// outcome is sent back on.
 pub struct PredictJob {
     pub x: Tensor<f32>,
     pub active_classes: usize,
     pub lane: Lane,
-    pub resp: Sender<PredictResponse>,
+    /// Absolute deadline on the queue's clock (µs). `None` at offer time
+    /// means "use the lane's SLO budget if one is configured"; a request
+    /// at or past this instant is shed instead of served.
+    pub deadline_us: Option<u64>,
+    pub resp: Sender<PredictOutcome>,
 }
 
 /// What a model thread sends back for one predict request.
@@ -108,6 +139,16 @@ pub struct PredictResponse {
     pub done_us: u64,
 }
 
+/// Terminal outcome delivered on an admitted request's channel: either a
+/// prediction, or a batch-build deadline shed (the request expired while
+/// queued — reclassified in the books, never answered stale).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredictOutcome {
+    Answered(PredictResponse),
+    /// The request was past its deadline when a batcher reached it.
+    DeadlineShed,
+}
+
 /// One serve-while-learning update: applied on a model thread under the
 /// replica barrier, in stream order relative to every other queued job.
 pub struct TrainJob {
@@ -115,6 +156,11 @@ pub struct TrainJob {
     pub label: usize,
     pub active_classes: usize,
     pub lr: f32,
+    /// Latent-replay cut this update trains at: 0 = full-network step;
+    /// `cut > 0` forwards the frozen prefix and trains only the suffix
+    /// (at the deepest cut, only the dense head moves — the lever that
+    /// makes diff re-broadcast cheap; see `super::server`).
+    pub cut: usize,
     /// Receives the step's loss.
     pub resp: Sender<f32>,
 }
@@ -141,9 +187,10 @@ pub enum Batch {
 /// Synchronous admission verdict for one offered predict.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Admission {
-    /// Enqueued; a response will arrive on the job's channel.
+    /// Enqueued; an outcome will arrive on the job's channel.
     Admitted,
-    /// Lane at capacity — rejected without enqueueing (counted).
+    /// Rejected without enqueueing (lane at capacity, or the request was
+    /// already past its deadline — the books record which).
     Shed,
     /// Queue closed (server shutting down) — rejected, not counted as
     /// shed (it is not an overload signal).
@@ -155,18 +202,27 @@ pub enum Admission {
 pub struct LaneStats {
     /// Predicts presented to [`ServeQueue::offer`] on this lane while open.
     pub offered: u64,
-    /// Predicts accepted into the lane.
+    /// Admissions still standing (queued, in flight, or answered). A
+    /// batch-build deadline drop moves its request from here to
+    /// `shed_deadline`, so `admitted` is exactly "will be / was served".
     pub admitted: u64,
-    /// Predicts rejected at the lane's admission bound.
+    /// Total predicts shed (`shed_capacity + shed_deadline`).
     pub shed: u64,
+    /// Predicts rejected at the lane's admission bound.
+    pub shed_capacity: u64,
+    /// Predicts dropped for being past their deadline — at admission or
+    /// at batch-build time.
+    pub shed_deadline: u64,
     /// Predicts currently queued in the lane.
     pub pending: usize,
 }
 
 impl LaneStats {
-    /// Every offered predict was either admitted or shed.
+    /// Every offered predict was either admitted or shed for exactly one
+    /// reason: `offered == admitted + shed_capacity + shed_deadline`.
     pub fn consistent(&self) -> bool {
-        self.offered == self.admitted + self.shed
+        self.shed == self.shed_capacity + self.shed_deadline
+            && self.offered == self.admitted + self.shed_capacity + self.shed_deadline
     }
 }
 
@@ -176,10 +232,14 @@ impl LaneStats {
 pub struct QueueStats {
     /// Predicts presented to [`ServeQueue::offer`] while open (all lanes).
     pub offered: u64,
-    /// Predicts accepted into the queue (all lanes).
+    /// Standing admissions (all lanes; see [`LaneStats::admitted`]).
     pub admitted: u64,
-    /// Predicts rejected at an admission bound (all lanes).
+    /// Total predicts shed (all lanes, both reasons).
     pub shed: u64,
+    /// Predicts rejected at an admission bound (all lanes).
+    pub shed_capacity: u64,
+    /// Predicts dropped past-deadline (all lanes, both drop points).
+    pub shed_deadline: u64,
     /// Train jobs enqueued (never shed).
     pub trains: u64,
     /// Predicts currently queued (waiting for a batcher).
@@ -190,12 +250,16 @@ pub struct QueueStats {
 
 impl QueueStats {
     /// The accounting contract: every offered predict was either
-    /// admitted or shed — nothing vanishes, per lane and in aggregate.
+    /// admitted or shed for exactly one recorded reason — nothing
+    /// vanishes, per lane and in aggregate.
     pub fn consistent(&self) -> bool {
         self.lanes.iter().all(LaneStats::consistent)
             && self.offered == self.lanes.iter().map(|l| l.offered).sum::<u64>()
             && self.admitted == self.lanes.iter().map(|l| l.admitted).sum::<u64>()
             && self.shed == self.lanes.iter().map(|l| l.shed).sum::<u64>()
+            && self.shed_capacity == self.lanes.iter().map(|l| l.shed_capacity).sum::<u64>()
+            && self.shed_deadline == self.lanes.iter().map(|l| l.shed_deadline).sum::<u64>()
+            && self.shed == self.shed_capacity + self.shed_deadline
             && self.offered == self.admitted + self.shed
     }
 
@@ -275,6 +339,12 @@ struct Seq<T>(u64, T);
 struct Inner {
     lanes: [VecDeque<Seq<PredictJob>>; 2],
     trains: VecDeque<Seq<TrainJob>>,
+    /// Un-answered jobs handed back from a dead/wedged replica's popped
+    /// batch ([`ServeQueue::abandon`]) — served before either lane, and
+    /// a fence for trains (they were all admitted pre-barrier). Not
+    /// counted in `stats.pending` (their admission already left the
+    /// lane books' pending column at the original pop).
+    orphans: VecDeque<PredictJob>,
     stats: QueueStats,
     closed: bool,
     /// Next admission sequence number (predicts and trains share it).
@@ -304,6 +374,9 @@ pub struct ServeQueue {
     quiesced: Condvar,
     depth: usize,
     starvation_budget: u64,
+    /// Per-lane latency SLO budget (µs): offers without an explicit
+    /// deadline are stamped `now + budget` at admission.
+    lane_slo_us: [Option<u64>; 2],
     clock: Arc<dyn Clock>,
 }
 
@@ -322,6 +395,7 @@ impl ServeQueue {
             inner: Mutex::new(Inner {
                 lanes: [VecDeque::new(), VecDeque::new()],
                 trains: VecDeque::new(),
+                orphans: VecDeque::new(),
                 stats: QueueStats::default(),
                 closed: false,
                 next_seq: 0,
@@ -334,6 +408,7 @@ impl ServeQueue {
             quiesced: Condvar::new(),
             depth: depth.max(1),
             starvation_budget: STARVATION_BUDGET,
+            lane_slo_us: [None, None],
             clock,
         }
     }
@@ -344,10 +419,24 @@ impl ServeQueue {
         self
     }
 
+    /// Set a lane's latency SLO budget (builder-style, pre-`Arc`): every
+    /// offer on that lane without an explicit deadline is stamped
+    /// `admission + budget`, and expiry sheds it at admission or at
+    /// batch build (see module docs).
+    pub fn with_lane_slo(mut self, lane: Lane, budget: Duration) -> ServeQueue {
+        self.lane_slo_us[lane.index()] = Some(budget.as_micros() as u64);
+        self
+    }
+
     /// Flushes a non-empty bulk lane may wait behind interactive traffic
     /// before it must be served.
     pub fn starvation_budget(&self) -> u64 {
         self.starvation_budget
+    }
+
+    /// The lane's SLO budget, if one is configured.
+    pub fn lane_slo_us(&self, lane: Lane) -> Option<u64> {
+        self.lane_slo_us[lane.index()]
     }
 
     /// The queue's time source (shared with the owning server).
@@ -360,25 +449,42 @@ impl ServeQueue {
     }
 
     /// Offer one predict on its job's lane. Never blocks: either the job
-    /// is enqueued ([`Admission::Admitted`]) or rejected on the spot.
-    pub fn offer(&self, job: PredictJob) -> Admission {
+    /// is enqueued ([`Admission::Admitted`]) or rejected on the spot —
+    /// past-deadline requests are `shed_deadline`, capacity overflow is
+    /// `shed_capacity`.
+    pub fn offer(&self, mut job: PredictJob) -> Admission {
         let li = job.lane.index();
+        let now = self.clock.now_us();
+        if job.deadline_us.is_none() {
+            job.deadline_us = self.lane_slo_us[li].map(|slo| now.saturating_add(slo));
+        }
         let mut inner = self.lock();
         if inner.closed {
             return Admission::Closed;
         }
         inner.stats.offered += 1;
         inner.stats.lanes[li].offered += 1;
+        // Dead on arrival: a request already at/past its deadline is a
+        // deadline shed, not a capacity signal.
+        if job.deadline_us.is_some_and(|d| now >= d) {
+            inner.stats.shed += 1;
+            inner.stats.shed_deadline += 1;
+            inner.stats.lanes[li].shed += 1;
+            inner.stats.lanes[li].shed_deadline += 1;
+            return Admission::Shed;
+        }
         if inner.stats.lanes[li].pending >= self.depth {
             inner.stats.shed += 1;
+            inner.stats.shed_capacity += 1;
             inner.stats.lanes[li].shed += 1;
+            inner.stats.lanes[li].shed_capacity += 1;
             return Admission::Shed;
         }
         inner.stats.admitted += 1;
         inner.stats.pending += 1;
         inner.stats.lanes[li].admitted += 1;
         inner.stats.lanes[li].pending += 1;
-        inner.last_arrival_us[li] = self.clock.now_us();
+        inner.last_arrival_us[li] = now;
         let seq = inner.next_seq;
         inner.next_seq += 1;
         inner.lanes[li].push_back(Seq(seq, job));
@@ -412,6 +518,35 @@ impl ServeQueue {
         self.quiesced.notify_all();
     }
 
+    /// Has [`ServeQueue::close`] (or [`ServeQueue::abort_pending`])
+    /// been called?
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    /// Close *and drop* everything still queued — the last-replica-died
+    /// path: with no consumer left, queued jobs would strand their
+    /// clients forever, so their channels are dropped instead (blocked
+    /// callers observe `Closed`, never a hang). Dropped jobs stay
+    /// `admitted` in the books (they were; nobody un-serves an
+    /// admission), so `consistent()` still holds.
+    pub fn abort_pending(&self) {
+        let mut inner = self.lock();
+        inner.closed = true;
+        for li in 0..2 {
+            let n = inner.lanes[li].len();
+            inner.stats.pending -= n;
+            inner.stats.lanes[li].pending -= n;
+            inner.lanes[li].clear();
+        }
+        inner.trains.clear();
+        inner.orphans.clear();
+        inner.paused = false;
+        drop(inner);
+        self.nonempty.notify_all();
+        self.quiesced.notify_all();
+    }
+
     pub fn stats(&self) -> QueueStats {
         self.lock().stats
     }
@@ -421,8 +556,9 @@ impl ServeQueue {
         self.lock().busy
     }
 
-    /// A consumer finished executing a predict batch it popped. Pairs
-    /// 1:1 with `Batch::Predicts` returns from [`ServeQueue::pop_batch`].
+    /// A consumer finished executing a predict batch it popped (or a
+    /// watchdog/unwind path finished abandoning one). Pairs 1:1 with
+    /// `Batch::Predicts` returns from [`ServeQueue::pop_batch`].
     pub fn done(&self) {
         let mut inner = self.lock();
         debug_assert!(inner.busy > 0, "done() without a popped batch");
@@ -451,6 +587,85 @@ impl ServeQueue {
         self.nonempty.notify_all();
     }
 
+    /// Wake every blocked consumer without adding work — used after a
+    /// replica is retired so it can observe its cancel token and exit.
+    pub fn poke(&self) {
+        self.nonempty.notify_all();
+    }
+
+    /// Hand a dead/wedged replica's un-answered jobs back for replay by
+    /// a healthy consumer. Accepted even on a closed queue (they are
+    /// standing admissions and drain like any queued work). The caller
+    /// still owes the original batch's [`ServeQueue::done`].
+    pub fn abandon(&self, jobs: Vec<PredictJob>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let mut inner = self.lock();
+        inner.orphans.extend(jobs);
+        drop(inner);
+        self.nonempty.notify_all();
+    }
+
+    /// Orphaned jobs awaiting replay.
+    pub fn orphan_count(&self) -> usize {
+        self.lock().orphans.len()
+    }
+
+    /// Drain every orphaned job — the barrier leader calls this after
+    /// [`ServeQueue::wait_quiesced`] and answers them on *pre-update*
+    /// weights before applying the train step (they were all admitted
+    /// before the barrier).
+    pub fn take_orphans(&self) -> Vec<PredictJob> {
+        self.lock().orphans.drain(..).collect()
+    }
+
+    /// Deadline-check one job held outside the queue (a taken orphan):
+    /// returns it if still fresh; otherwise sheds it (books reclassified,
+    /// [`PredictOutcome::DeadlineShed`] sent) and returns `None`.
+    pub fn expire_if_late(&self, job: PredictJob) -> Option<PredictJob> {
+        if Self::is_expired(&job, self.clock.now_us()) {
+            let mut inner = self.lock();
+            Self::shed_expired(&mut inner, job, false);
+            None
+        } else {
+            Some(job)
+        }
+    }
+
+    fn is_expired(job: &PredictJob, now_us: u64) -> bool {
+        job.deadline_us.is_some_and(|d| now_us >= d)
+    }
+
+    /// Reclassify one expired admitted job: `admitted` → `shed_deadline`
+    /// (the invariant holds at every instant), tell the waiting client.
+    /// `from_lane` also releases the job's pending slot.
+    fn shed_expired(inner: &mut Inner, job: PredictJob, from_lane: bool) {
+        let li = job.lane.index();
+        if from_lane {
+            inner.stats.pending -= 1;
+            inner.stats.lanes[li].pending -= 1;
+        }
+        inner.stats.admitted -= 1;
+        inner.stats.lanes[li].admitted -= 1;
+        inner.stats.shed += 1;
+        inner.stats.shed_deadline += 1;
+        inner.stats.lanes[li].shed += 1;
+        inner.stats.lanes[li].shed_deadline += 1;
+        // A client that gave up is not an error.
+        let _ = job.resp.send(PredictOutcome::DeadlineShed);
+    }
+
+    /// Drop expired jobs off a lane's front (batch-build shedding; jobs
+    /// behind an unexpired front surface when they reach it — FIFO order
+    /// with per-lane budgets means fronts expire first).
+    fn purge_expired_front(inner: &mut Inner, li: usize, now_us: u64) {
+        while inner.lanes[li].front().is_some_and(|Seq(_, j)| Self::is_expired(j, now_us)) {
+            let Seq(_, job) = inner.lanes[li].pop_front().expect("checked front");
+            Self::shed_expired(inner, job, true);
+        }
+    }
+
     /// The stream-order fence: sequence number of the oldest queued
     /// train, or `u64::MAX` when none is queued.
     fn fence(inner: &Inner) -> u64 {
@@ -464,20 +679,62 @@ impl ServeQueue {
 
     /// Dynamic-batching pop (any number of consumers). Blocks until work
     /// is available (or the queue is closed *and* drained → `None`).
+    /// See [`ServeQueue::pop_batch_cancellable`] for the full contract.
+    pub fn pop_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Batch> {
+        self.pop_batch_cancellable(max_batch, max_wait, &AtomicBool::new(false))
+    }
+
+    /// [`ServeQueue::pop_batch`] with a cancel token: a retired replica's
+    /// token is raised and the queue [`ServeQueue::poke`]d, making its
+    /// blocked pop return `None` without consuming work.
     ///
     /// A train job returns alone once every predict admitted before it
-    /// has been popped; the return itself pauses the queue (see module
-    /// docs — the caller must [`ServeQueue::wait_quiesced`], apply, and
-    /// [`ServeQueue::resume`]). A predict opens a lane-pure batch
-    /// flushed per [`flush_decision`]; the caller must report
-    /// [`ServeQueue::done`] after executing it.
-    pub fn pop_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Batch> {
+    /// has been popped (orphans included); the return itself pauses the
+    /// queue (see module docs — the caller must
+    /// [`ServeQueue::wait_quiesced`], apply, and [`ServeQueue::resume`]).
+    /// A predict pop first replays any orphaned batch, then opens a
+    /// lane-pure batch flushed per [`flush_decision`]; expired jobs are
+    /// shed instead of batched. The caller must report
+    /// [`ServeQueue::done`] after executing (or abandoning) a predict
+    /// batch.
+    pub fn pop_batch_cancellable(
+        &self,
+        max_batch: usize,
+        max_wait: Duration,
+        cancel: &AtomicBool,
+    ) -> Option<Batch> {
         let max_batch = max_batch.max(1);
         let max_wait_us = max_wait.as_micros() as u64;
         let idle_us = IDLE_FLUSH.as_micros() as u64;
         let mut inner = self.lock();
         let lane = loop {
+            if cancel.load(Ordering::Acquire) {
+                return None;
+            }
             if !inner.paused {
+                let now = self.clock.now_us();
+                // Replayed faults first: an orphaned batch is the oldest
+                // admitted work in the system.
+                if !inner.orphans.is_empty() {
+                    let mut batch = Vec::with_capacity(max_batch.min(64));
+                    while batch.len() < max_batch {
+                        match inner.orphans.pop_front() {
+                            None => break,
+                            Some(job) if Self::is_expired(&job, now) => {
+                                Self::shed_expired(&mut inner, job, false);
+                            }
+                            Some(job) => batch.push(job),
+                        }
+                    }
+                    if !batch.is_empty() {
+                        inner.busy += 1;
+                        return Some(Batch::Predicts(batch));
+                    }
+                    // Every orphan had expired — fall through.
+                }
+                for li in 0..2 {
+                    Self::purge_expired_front(&mut inner, li, now);
+                }
                 let fence = Self::fence(&inner);
                 let int_ready = Self::lane_ready(&inner, Lane::Interactive, fence);
                 let bulk_ready = Self::lane_ready(&inner, Lane::Bulk, fence);
@@ -509,6 +766,7 @@ impl ServeQueue {
                 // no train queued, a fence cannot be holding jobs back).
                 if inner.closed
                     && inner.trains.is_empty()
+                    && inner.orphans.is_empty()
                     && inner.lanes.iter().all(VecDeque::is_empty)
                 {
                     return None;
@@ -529,11 +787,14 @@ impl ServeQueue {
         batch.push(first);
         let opened_us = self.clock.now_us();
         loop {
-            // Drain what is already queued (up to the fence). While a
-            // train barrier holds the queue (`paused`), the fence that
+            // Drain what is already queued (up to the fence), shedding
+            // anything that expired while it waited. While a train
+            // barrier holds the queue (`paused`), the fence that
             // guarded its jobs is gone — drain nothing and flush, so a
             // post-barrier arrival can never ride a pre-barrier batch.
+            let now = self.clock.now_us();
             while batch.len() < max_batch && !inner.paused {
+                Self::purge_expired_front(&mut inner, li, now);
                 let fence = Self::fence(&inner);
                 if !Self::lane_ready(&inner, lane, fence) {
                     break;
@@ -571,26 +832,44 @@ impl ServeQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::clock::MockClock;
     use crate::tensor::Shape;
-    use std::sync::mpsc::channel;
+    use std::sync::mpsc::{channel, Receiver};
 
     fn img(v: f32) -> Tensor<f32> {
         Tensor::from_vec(Shape::d3(1, 2, 2), vec![v; 4])
     }
 
-    fn predict_job(v: f32) -> (PredictJob, std::sync::mpsc::Receiver<PredictResponse>) {
+    fn predict_job(v: f32) -> (PredictJob, Receiver<PredictOutcome>) {
         lane_job(v, Lane::Interactive)
     }
 
-    fn lane_job(v: f32, lane: Lane) -> (PredictJob, std::sync::mpsc::Receiver<PredictResponse>) {
+    fn lane_job(v: f32, lane: Lane) -> (PredictJob, Receiver<PredictOutcome>) {
         let (tx, rx) = channel();
-        (PredictJob { x: img(v), active_classes: 2, lane, resp: tx }, rx)
+        (
+            PredictJob { x: img(v), active_classes: 2, lane, deadline_us: None, resp: tx },
+            rx,
+        )
+    }
+
+    fn deadline_job(v: f32, deadline_us: u64) -> (PredictJob, Receiver<PredictOutcome>) {
+        let (tx, rx) = channel();
+        (
+            PredictJob {
+                x: img(v),
+                active_classes: 2,
+                lane: Lane::Interactive,
+                deadline_us: Some(deadline_us),
+                resp: tx,
+            },
+            rx,
+        )
     }
 
     fn train_job() -> TrainJob {
         // The receiver is dropped — fine, nothing sends on it here.
         let (tx, _) = channel();
-        TrainJob { x: img(0.0), label: 0, active_classes: 2, lr: 0.1, resp: tx }
+        TrainJob { x: img(0.0), label: 0, active_classes: 2, lr: 0.1, cut: 0, resp: tx }
     }
 
     fn pop_predicts(q: &ServeQueue, max_batch: usize) -> Vec<PredictJob> {
@@ -618,9 +897,12 @@ mod tests {
         let s = q.stats();
         assert_eq!((s.offered, s.admitted, s.shed, s.pending), (8, 3, 5, 3));
         assert!(s.consistent());
+        // All capacity sheds — no deadlines configured anywhere.
+        assert_eq!((s.shed_capacity, s.shed_deadline), (5, 0));
         assert!((s.shed_rate() - 5.0 / 8.0).abs() < 1e-12);
         // All on the interactive lane; the bulk books stay zeroed.
         assert_eq!(s.lane(Lane::Interactive).shed, 5);
+        assert_eq!(s.lane(Lane::Interactive).shed_capacity, 5);
         assert_eq!(*s.lane(Lane::Bulk), LaneStats::default());
         // Draining frees capacity: the next offer is admitted again.
         assert_eq!(pop_predicts(&q, 8).len(), 3);
@@ -653,6 +935,145 @@ mod tests {
         );
         assert_eq!((s.lane(Lane::Bulk).admitted, s.lane(Lane::Bulk).shed), (2, 2));
         assert_eq!((s.offered, s.admitted, s.shed), (7, 4, 3));
+    }
+
+    #[test]
+    fn deadline_sheds_at_admission_and_at_batch_build() {
+        // MockClock grid: a dead-on-arrival offer sheds at admission; a
+        // request that expires while queued sheds at batch build (books
+        // reclassified, client told); a fresh one is served. The
+        // three-way invariant holds at every step.
+        let clock = MockClock::shared();
+        let q = ServeQueue::with_clock(16, std::sync::Arc::<MockClock>::clone(&clock));
+        clock.set_us(100);
+        // Already past its deadline at offer → admission-time shed.
+        let (doa, doa_rx) = deadline_job(1.0, 100);
+        assert_eq!(q.offer(doa), Admission::Shed);
+        let s = q.stats();
+        assert_eq!((s.offered, s.admitted, s.shed_capacity, s.shed_deadline), (1, 0, 0, 1));
+        assert!(s.consistent());
+        // Admission-time sheds get no outcome message (the synchronous
+        // verdict is the outcome).
+        assert!(doa_rx.try_recv().is_err());
+        // Admitted fresh, expires while queued → batch-build shed.
+        let (late, late_rx) = deadline_job(2.0, 200);
+        assert_eq!(q.offer(late), Admission::Admitted);
+        // A fresh job with headroom rides through.
+        let (ok, ok_rx) = deadline_job(3.0, 10_000);
+        assert_eq!(q.offer(ok), Admission::Admitted);
+        clock.set_us(250); // past `late`'s deadline, inside `ok`'s
+        let batch = pop_predicts(&q, 8);
+        assert_eq!(batch.len(), 1, "expired job must not ride the batch");
+        assert_eq!(batch[0].x.data()[0], 3.0);
+        assert_eq!(late_rx.recv().unwrap(), PredictOutcome::DeadlineShed);
+        let s = q.stats();
+        assert_eq!((s.offered, s.admitted, s.shed_capacity, s.shed_deadline), (3, 1, 0, 2));
+        assert_eq!(s.pending, 0);
+        assert!(s.consistent());
+        drop(ok_rx);
+    }
+
+    #[test]
+    fn lane_slo_budget_stamps_deadlines() {
+        let clock = MockClock::shared();
+        let q = ServeQueue::with_clock(16, std::sync::Arc::<MockClock>::clone(&clock))
+            .with_lane_slo(Lane::Interactive, Duration::from_micros(500));
+        assert_eq!(q.lane_slo_us(Lane::Interactive), Some(500));
+        assert_eq!(q.lane_slo_us(Lane::Bulk), None);
+        clock.set_us(1000);
+        let (j, _rx) = predict_job(1.0);
+        assert_eq!(q.offer(j), Admission::Admitted);
+        let batch = pop_predicts(&q, 8);
+        assert_eq!(batch[0].deadline_us, Some(1500), "deadline = admission + SLO budget");
+        // Bulk (no SLO) stays deadline-free.
+        let (b, _brx) = lane_job(2.0, Lane::Bulk);
+        q.offer(b);
+        let batch = pop_predicts(&q, 8);
+        assert_eq!(batch[0].deadline_us, None);
+    }
+
+    #[test]
+    fn orphans_replay_before_lanes_and_fence_trains() {
+        // Abandoned jobs are served before queued lane work, and a
+        // queued train cannot pop while orphans remain (they were
+        // admitted pre-barrier).
+        let q = ServeQueue::new(16);
+        let (p1, _r1) = predict_job(1.0);
+        q.offer(p1);
+        let mut stolen = pop_predicts(&q, 8); // simulate a dead replica's batch
+        assert_eq!(stolen.len(), 1);
+        let (p2, _r2) = predict_job(2.0);
+        q.offer(p2);
+        q.push_train(train_job());
+        q.abandon(vec![stolen.remove(0)]);
+        assert_eq!(q.orphan_count(), 1);
+        // First pop replays the orphan (not the queued lane job).
+        let replay = pop_predicts(&q, 8);
+        assert_eq!(replay[0].x.data()[0], 1.0);
+        // Next the pre-fence lane job, then the train.
+        let pre = pop_predicts(&q, 8);
+        assert_eq!(pre[0].x.data()[0], 2.0);
+        assert!(matches!(q.pop_batch(8, Duration::ZERO), Some(Batch::Train(_))));
+        q.resume();
+        let s = q.stats();
+        assert!(s.consistent());
+        assert_eq!(s.admitted, 2);
+    }
+
+    #[test]
+    fn expired_orphans_are_shed_on_replay() {
+        let clock = MockClock::shared();
+        let q = ServeQueue::with_clock(16, std::sync::Arc::<MockClock>::clone(&clock));
+        let (p, rx) = deadline_job(1.0, 500);
+        q.offer(p);
+        let mut stolen = pop_predicts(&q, 8);
+        q.abandon(vec![stolen.remove(0)]);
+        clock.set_us(600); // expires while orphaned
+        let (fresh, _frx) = predict_job(2.0);
+        q.offer(fresh);
+        let batch = pop_predicts(&q, 8);
+        assert_eq!(batch[0].x.data()[0], 2.0, "expired orphan must not be replayed");
+        assert_eq!(rx.recv().unwrap(), PredictOutcome::DeadlineShed);
+        let s = q.stats();
+        assert!(s.consistent());
+        assert_eq!((s.admitted, s.shed_deadline), (1, 1));
+        // take_orphans + expire_if_late: the leader-path equivalent.
+        let (p2, rx2) = deadline_job(3.0, 650);
+        q.offer(p2);
+        let mut b2 = pop_predicts(&q, 8);
+        q.abandon(vec![b2.remove(0)]);
+        clock.set_us(700);
+        let orphans = q.take_orphans();
+        assert_eq!(orphans.len(), 1);
+        for job in orphans {
+            assert!(q.expire_if_late(job).is_none());
+        }
+        assert_eq!(rx2.recv().unwrap(), PredictOutcome::DeadlineShed);
+        assert!(q.stats().consistent());
+    }
+
+    #[test]
+    fn cancel_token_returns_none_without_consuming() {
+        let q = std::sync::Arc::new(ServeQueue::new(4));
+        let (p, _r) = predict_job(1.0);
+        q.offer(p);
+        let cancel = AtomicBool::new(true);
+        // Raised token: pop returns None immediately, work untouched.
+        assert!(q.pop_batch_cancellable(8, Duration::ZERO, &cancel).is_none());
+        assert_eq!(q.stats().pending, 1);
+        // A parked consumer wakes on poke and observes the token.
+        let q2 = std::sync::Arc::clone(&q);
+        let _ = pop_predicts(&q, 8); // drain so the next pop blocks
+        let cancel = std::sync::Arc::new(AtomicBool::new(false));
+        let c2 = std::sync::Arc::clone(&cancel);
+        let t = std::thread::spawn(move || {
+            q2.pop_batch_cancellable(8, Duration::ZERO, &c2).is_none()
+        });
+        // Rendezvous-free: raising the token then poking is eventually
+        // observed regardless of interleaving (no sleeps asserted on).
+        cancel.store(true, Ordering::Release);
+        q.poke();
+        assert!(t.join().unwrap());
     }
 
     // The anti-starvation bound itself ("bulk waits at most

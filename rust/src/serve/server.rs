@@ -4,19 +4,61 @@
 //! replicas. With `replicas = 1` this degenerates to PR 4's single
 //! model-thread owner.
 //!
-//! Each replica loops on [`ServeQueue::pop_batch`]: coalesced predict
-//! batches are executed as **one** [`Learner::predict_batch`] call — one
-//! packed GEMM set on the `f32-fast` and `qnn` backends, the whole point
-//! of cross-request batching. Serve-while-learning train jobs are
-//! **stream-order barriers across the pool**: popping one pauses the
-//! queue, the popping replica waits for every in-flight batch to drain
-//! ([`ServeQueue::wait_quiesced`]), applies the update to its own
-//! learner, then re-broadcasts a [`Learner::clone_replica`] snapshot to
-//! every other replica's inbox before reopening the queue — so all
-//! replicas stay bit-identical after every update (pinned by
-//! `tests/serve_parity.rs`). Predictions admitted before the train see
-//! pre-update weights, those after see post-update weights, on every
-//! replica.
+//! Each replica loops on [`ServeQueue::pop_batch_cancellable`]:
+//! coalesced predict batches are executed as **one**
+//! [`Learner::predict_batch`] call — one packed GEMM set on the
+//! `f32-fast` and `qnn` backends, the whole point of cross-request
+//! batching. Serve-while-learning train jobs are **stream-order
+//! barriers across the pool**: popping one pauses the queue, the
+//! popping replica waits for every in-flight batch to drain
+//! ([`ServeQueue::wait_quiesced`]), answers any orphaned pre-barrier
+//! requests on pre-update weights, applies the update to its own
+//! learner, then re-broadcasts to every other replica's inbox before
+//! reopening the queue — so all replicas stay bit-identical after every
+//! update (pinned by `tests/serve_parity.rs`). Predictions admitted
+//! before the train see pre-update weights, those after see post-update
+//! weights, on every replica.
+//!
+//! # Exactly-once execution and fault recovery
+//!
+//! Every popped predict batch is **checked into a flight table** before
+//! it executes; the lease it gets back is the sole authority to answer.
+//! Completing a flight *removes* it under one mutex, so exactly one
+//! party — the executing replica, or a watchdog that stole the lease —
+//! ever owns the jobs' response channels: no request is double-answered
+//! and none is lost. A replica that panics mid-batch (injected via
+//! [`FaultPlan`] or organic) unwinds through a crash guard that retires
+//! it, steals its flight, and hands the un-answered jobs back to the
+//! queue as *orphans*, replayed exactly once by a healthy replica ahead
+//! of all lane traffic (see `super::queue`). A replica that *wedges*
+//! (stall fault, or a pathologically slow batch) is caught by
+//! [`Server::watchdog_scan`]: flights older than the stall timeout are
+//! stolen the same way — if the wedged replica ever finishes, its
+//! `complete` misses and it discards its answers. Fault checkpoints sit
+//! between check-in and compute on the serve path only (never inside a
+//! train barrier, which holds the whole pool).
+//!
+//! # Autoscaling at the quiesce barrier
+//!
+//! With an [`AutoscalePolicy`], the barrier leader — at the one point
+//! where the pool is paused, drained, and synchronized — compares queue
+//! depth against the policy thresholds and grows or shrinks the pool by
+//! one replica (spawn from a post-update snapshot; retire via cancel
+//! token), and heals back up to `min_replicas` after a crash. Spawn and
+//! retire *only* happen at this quiesce point, so a new replica is
+//! born bit-identical and a retiring one never strands work.
+//!
+//! # Versioned snapshots and diff re-broadcast
+//!
+//! Backends that stamp their weights ([`Learner::weights_version`])
+//! re-broadcast **diffs**: the leader publishes one shared post-update
+//! snapshot and each replica copies only the tensors whose per-tensor
+//! version advanced past its own ([`Learner::sync_weights_from`]) —
+//! after a deepest-cut train step that touches only the dense head,
+//! that is one small tensor instead of the whole model, and the conv
+//! weight packs (`PackedA`/`QPackedA`) survive untouched. A replica
+//! keeps serving its stale version until its next pop adopts the
+//! re-sync at a batch boundary.
 //!
 //! Clients talk to the pool through cloneable [`ServeClient`] handles:
 //! synchronous [`ServeClient::predict`] (interactive lane),
@@ -25,13 +67,15 @@
 
 use super::clock::{Clock, WallClock};
 use super::queue::{
-    Admission, Batch, Lane, PredictJob, PredictResponse, QueueStats, ServeQueue, TrainJob,
+    Admission, Batch, Lane, PredictJob, PredictOutcome, PredictResponse, QueueStats, ServeQueue,
+    TrainJob,
 };
 use crate::cl::Learner;
 use crate::tensor::Tensor;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -52,6 +96,113 @@ pub fn default_queue_depth(clients: usize) -> usize {
     (2 * clients).max(8)
 }
 
+/// Pool-resizing policy, evaluated by the train-barrier leader at the
+/// quiesce point (queue paused, pool drained and synchronized — the
+/// only instant where membership can change without racing a batch or a
+/// re-broadcast). Thresholds are queue depths; callers that have run
+/// the open-loop knee sweep typically derive them from the measured
+/// knee (e.g. scale up when the backlog exceeds one knee-sized batch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AutoscalePolicy {
+    /// Never shrink below this many live replicas; after a crash the
+    /// next barrier heals the pool back up to it.
+    pub min_replicas: usize,
+    /// Never grow beyond this many live replicas.
+    pub max_replicas: usize,
+    /// Grow by one when queued predicts at the barrier reach this.
+    pub scale_up_pending: usize,
+    /// Shrink by one when queued predicts at the barrier are at or
+    /// below this (and `live > min_replicas`).
+    pub scale_down_pending: usize,
+}
+
+/// What an injected fault does to its victim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic the replica thread mid-batch (after check-in, before
+    /// compute) — the crash guard retires it and orphans its batch.
+    Panic,
+    /// Wedge the replica mid-batch until [`Server::fault_release_stalls`]
+    /// (or shutdown) — only [`Server::watchdog_scan`] can recover its
+    /// batch.
+    Stall,
+}
+
+/// Which replica a fault hits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// A specific replica id.
+    Replica(usize),
+    /// The first replica to reach a fault checkpoint at/after the
+    /// trigger time.
+    Any,
+}
+
+/// One scheduled fault: at `at_us` on the server's clock (a
+/// [`super::clock::MockClock`] makes the instant exact), `target`
+/// suffers `kind` at its next fault checkpoint.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    pub at_us: u64,
+    pub target: FaultTarget,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of injected replica faults
+/// ([`Server::start_with_faults`]). Faults fire at checkpoints on the
+/// serve path — between a batch's flight check-in and its compute — so
+/// every injected death or stall leaves a checked-in batch to recover,
+/// which is exactly the hard case.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Schedule a panic.
+    pub fn kill(mut self, target: FaultTarget, at_us: u64) -> FaultPlan {
+        self.faults.push(FaultSpec { at_us, target, kind: FaultKind::Panic });
+        self
+    }
+
+    /// Schedule a stall.
+    pub fn stall(mut self, target: FaultTarget, at_us: u64) -> FaultPlan {
+        self.faults.push(FaultSpec { at_us, target, kind: FaultKind::Stall });
+        self
+    }
+
+    fn has_panics(&self) -> bool {
+        self.faults.iter().any(|f| f.kind == FaultKind::Panic)
+    }
+}
+
+/// Panic payload of an injected [`FaultKind::Panic`] — recognized (and
+/// its default-hook backtrace suppressed) so an injected kill is a
+/// quiet, attributable event while organic panics stay loud.
+#[derive(Debug)]
+pub struct InjectedFault {
+    pub replica: usize,
+}
+
+/// Suppress the default "thread panicked" report for *injected* faults
+/// only; everything else chains to the previously installed hook.
+/// Installed once per process, and only when a plan contains panics.
+fn install_injected_panic_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<InjectedFault>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
 /// Batcher + admission-control + pool knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
@@ -63,10 +214,27 @@ pub struct ServerConfig {
     pub max_wait: Duration,
     /// Admission bound per lane: queued predicts beyond it are shed.
     pub queue_depth: usize,
-    /// Model threads in the pool, each owning a bit-identical learner
-    /// snapshot (1 = the single-owner server). Requires
+    /// Model threads in the pool at start, each owning a bit-identical
+    /// learner snapshot (1 = the single-owner server). Requires
     /// [`Learner::clone_replica`] support when > 1.
     pub replicas: usize,
+    /// Per-lane latency SLO budget, indexed by [`Lane::index`]: offers
+    /// without an explicit deadline are stamped `admission + budget`
+    /// and shed once past it (at admission and at batch build).
+    pub lane_slo: [Option<Duration>; 2],
+    /// Steal in-flight batches older than this (wedged-replica
+    /// recovery): `Some` also starts a background watchdog thread that
+    /// scans at a quarter of this period. Set it well above the worst
+    /// honest batch time — a false-positive steal never double-answers
+    /// (the flight table arbitrates) but does retire the slow replica.
+    pub stall_timeout: Option<Duration>,
+    /// Re-broadcast post-train weights as version diffs when the
+    /// backend supports it ([`Learner::weights_version`]); `false`
+    /// forces full-snapshot re-broadcast (the parity baseline).
+    pub diff_resync: bool,
+    /// Grow/shrink the pool at train-barrier quiesce points; `None`
+    /// keeps the pool fixed at `replicas`.
+    pub autoscale: Option<AutoscalePolicy>,
 }
 
 impl Default for ServerConfig {
@@ -76,27 +244,54 @@ impl Default for ServerConfig {
             max_wait: DEFAULT_MAX_WAIT,
             queue_depth: DEFAULT_QUEUE_DEPTH,
             replicas: 1,
+            lane_slo: [None, None],
+            stall_timeout: None,
+            diff_resync: true,
+            autoscale: None,
         }
     }
 }
 
 /// What the pool did, returned by [`Server::shutdown`] (merged over all
-/// replicas).
+/// replicas, plus pool-level fault/scaling counters).
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     /// Predict requests answered.
     pub served: u64,
-    /// Cross-request batches executed.
+    /// Cross-request batches executed (and answered — stolen flights
+    /// are counted in `batches_stolen` instead).
     pub batches: u64,
     /// Serve-while-learning updates applied.
     pub train_steps: u64,
     /// Weight re-broadcasts adopted by non-leader replicas after train
-    /// barriers (0 on a single-replica server).
+    /// barriers (full + diff; 0 on a single-replica server).
     pub resyncs: u64,
+    /// The subset of `resyncs` adopted as version diffs.
+    pub resyncs_diff: u64,
+    /// Bytes actually copied by diff re-syncs (full-model bytes ×
+    /// `resyncs` is the baseline this saves against).
+    pub resync_diff_bytes: u64,
+    /// Batches this pool computed whose lease had been stolen by the
+    /// watchdog first — answers discarded, no duplicates sent.
+    pub batches_stolen: u64,
+    /// Orphaned batches handed back for replay after a replica died or
+    /// was retired mid-flight (each replayed exactly once).
+    pub replays: u64,
+    /// Replicas lost to panics (injected or organic).
+    pub replicas_lost: u64,
+    /// Replicas retired alive (autoscale-down or watchdog steal).
+    pub replicas_retired: u64,
+    /// Replicas spawned after start (autoscale-up or crash healing).
+    pub replicas_spawned: u64,
+    /// Faults actually injected by the [`FaultPlan`].
+    pub faults_injected: u64,
+    /// Pool-size changes at barriers: (barrier time µs, live before,
+    /// live after).
+    pub autoscale_events: Vec<(u64, usize, usize)>,
     /// batch size → how many batches flushed at that size.
     pub batch_hist: BTreeMap<usize, u64>,
     /// Requests answered by each replica (fan-out visibility; sums to
-    /// `served`).
+    /// `served`; ordered live-pool-first as in [`Server::shutdown_all`]).
     pub per_replica_served: Vec<u64>,
 }
 
@@ -115,6 +310,9 @@ impl ServerStats {
         self.batches += other.batches;
         self.train_steps += other.train_steps;
         self.resyncs += other.resyncs;
+        self.resyncs_diff += other.resyncs_diff;
+        self.resync_diff_bytes += other.resync_diff_bytes;
+        self.batches_stolen += other.batches_stolen;
         for (&size, &n) in &other.batch_hist {
             *self.batch_hist.entry(size).or_insert(0) += n;
         }
@@ -127,17 +325,19 @@ impl ServerStats {
 pub enum Served {
     /// Answered: predicted class + the batch it rode in.
     Ok { pred: usize, batch_size: usize },
-    /// Rejected at the admission bound — retry later or back off.
+    /// Rejected by admission control (capacity) or dropped past its
+    /// deadline — the queue's per-reason books record which.
     Shed,
-    /// Server is shutting down.
+    /// Server is shutting down (or lost its last replica).
     Closed,
 }
 
 /// Outcome of a non-blocking [`ServeClient::predict_async`] submission.
 pub enum Submitted {
-    /// Admitted: the response will arrive on this channel.
-    Pending(Receiver<PredictResponse>),
-    /// Rejected at the admission bound.
+    /// Admitted: the outcome (answer or deadline shed) will arrive on
+    /// this channel.
+    Pending(Receiver<PredictOutcome>),
+    /// Rejected at the admission bound or already past deadline.
     Shed,
     /// Server is shutting down.
     Closed,
@@ -158,11 +358,16 @@ impl ServeClient {
         self.predict_on(x, active_classes, Lane::Interactive)
     }
 
-    /// [`ServeClient::predict`] with an explicit priority lane.
+    /// [`ServeClient::predict`] with an explicit priority lane. A
+    /// batch-build deadline drop surfaces as [`Served::Shed`], same as
+    /// an admission shed — the per-reason queue books tell them apart.
     pub fn predict_on(&self, x: &Tensor<f32>, active_classes: usize, lane: Lane) -> Served {
         match self.predict_async(x, active_classes, lane) {
             Submitted::Pending(rx) => match rx.recv() {
-                Ok(r) => Served::Ok { pred: r.pred, batch_size: r.batch_size },
+                Ok(PredictOutcome::Answered(r)) => {
+                    Served::Ok { pred: r.pred, batch_size: r.batch_size }
+                }
+                Ok(PredictOutcome::DeadlineShed) => Served::Shed,
                 Err(_) => Served::Closed,
             },
             Submitted::Shed => Served::Shed,
@@ -171,13 +376,27 @@ impl ServeClient {
     }
 
     /// Non-blocking submit: the admission verdict returns immediately;
-    /// an admitted request's response (with its server-side completion
+    /// an admitted request's outcome (with its server-side completion
     /// timestamp) arrives on the returned channel. The open-loop load
     /// generator dispatches its whole arrival schedule this way so a
-    /// slow response can never stall later arrivals.
+    /// slow response can never stall later arrivals. The deadline, if
+    /// any, comes from the lane's configured SLO budget.
     pub fn predict_async(&self, x: &Tensor<f32>, active_classes: usize, lane: Lane) -> Submitted {
-        let (tx, rx) = channel::<PredictResponse>();
-        match self.queue.offer(PredictJob { x: x.clone(), active_classes, lane, resp: tx }) {
+        self.predict_async_with_deadline(x, active_classes, lane, None)
+    }
+
+    /// [`ServeClient::predict_async`] with an explicit absolute deadline
+    /// (µs on the server's clock), overriding the lane SLO stamp.
+    pub fn predict_async_with_deadline(
+        &self,
+        x: &Tensor<f32>,
+        active_classes: usize,
+        lane: Lane,
+        deadline_us: Option<u64>,
+    ) -> Submitted {
+        let (tx, rx) = channel::<PredictOutcome>();
+        let job = PredictJob { x: x.clone(), active_classes, lane, deadline_us, resp: tx };
+        match self.queue.offer(job) {
             Admission::Admitted => Submitted::Pending(rx),
             Admission::Shed => Submitted::Shed,
             Admission::Closed => Submitted::Closed,
@@ -195,8 +414,25 @@ impl ServeClient {
         active_classes: usize,
         lr: f32,
     ) -> Option<f32> {
+        self.train_at_cut(x, label, active_classes, lr, 0)
+    }
+
+    /// [`ServeClient::train`] at a latent-replay cut: `cut > 0` trains
+    /// only the suffix from that cut (at the deepest cut, only the
+    /// dense head — the update whose diff re-broadcast is one tensor).
+    /// Requires the backend to admit `cut` via
+    /// [`Learner::max_latent_cut`].
+    pub fn train_at_cut(
+        &self,
+        x: &Tensor<f32>,
+        label: usize,
+        active_classes: usize,
+        lr: f32,
+        cut: usize,
+    ) -> Option<f32> {
         let (tx, rx) = channel::<f32>();
-        if !self.queue.push_train(TrainJob { x: x.clone(), label, active_classes, lr, resp: tx }) {
+        let job = TrainJob { x: x.clone(), label, active_classes, lr, cut, resp: tx };
+        if !self.queue.push_train(job) {
             return None;
         }
         rx.recv().ok()
@@ -213,17 +449,305 @@ impl ServeClient {
     pub fn clock(&self) -> Arc<dyn Clock> {
         Arc::clone(self.queue.clock())
     }
+
+    /// Test-only: a client over a bare queue with no replica pool, for
+    /// exercising admission-path behavior (sheds, retries) in isolation.
+    #[cfg(test)]
+    pub(crate) fn for_tests(queue: Arc<ServeQueue>) -> ServeClient {
+        ServeClient { queue }
+    }
 }
 
-/// Per-replica weight inboxes for post-train re-broadcast.
-type Inbox<L> = Arc<Vec<Mutex<Option<L>>>>;
+/// A post-barrier weight hand-off waiting in a replica's inbox.
+enum Resync<L> {
+    /// A complete bit-identical snapshot: replace the learner.
+    Full(L),
+    /// A shared reference snapshot: copy only the tensors whose version
+    /// stamp advanced past the adopter's ([`Learner::sync_weights_from`]).
+    Diff(Arc<Mutex<L>>),
+}
 
-/// A running inference server. Owns the replica threads; dropping
-/// without [`Server::shutdown`] detaches them (prefer shutdown — it
+/// One checked-in predict batch: the lease table entry that makes
+/// execution exactly-once (see module docs).
+struct Flight {
+    owner: usize,
+    jobs: Vec<PredictJob>,
+    checked_in_us: u64,
+    /// Whether completing this flight owes the queue a
+    /// [`ServeQueue::done`] (true for popped batches; false for orphans
+    /// served inline at a barrier, which were never counted in-flight).
+    owes_done: bool,
+}
+
+/// Lease-arbitrated in-flight batches: `complete`/`steal_*` *remove*
+/// entries under one mutex, so exactly one party ever holds a flight's
+/// response channels.
+#[derive(Default)]
+struct FlightTable {
+    inner: Mutex<(u64, HashMap<u64, Flight>)>,
+}
+
+impl FlightTable {
+    fn lock(&self) -> MutexGuard<'_, (u64, HashMap<u64, Flight>)> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn check_in(&self, owner: usize, jobs: Vec<PredictJob>, now_us: u64, owes_done: bool) -> u64 {
+        let mut inner = self.lock();
+        let lease = inner.0;
+        inner.0 += 1;
+        inner.1.insert(lease, Flight { owner, jobs, checked_in_us: now_us, owes_done });
+        lease
+    }
+
+    /// The executing replica finished computing: `Some` means it won the
+    /// lease and must answer; `None` means a watchdog stole the batch
+    /// (it is being replayed elsewhere) — discard the computed answers.
+    fn complete(&self, lease: u64) -> Option<Flight> {
+        self.lock().1.remove(&lease)
+    }
+
+    /// Steal every flight owned by a (dead) replica.
+    fn steal_from(&self, owner: usize) -> Vec<Flight> {
+        let mut inner = self.lock();
+        let leases: Vec<u64> =
+            inner.1.iter().filter(|(_, f)| f.owner == owner).map(|(&l, _)| l).collect();
+        leases.into_iter().filter_map(|l| inner.1.remove(&l)).collect()
+    }
+
+    /// Steal every flight checked in at least `max_age_us` ago.
+    fn steal_older_than(&self, now_us: u64, max_age_us: u64) -> Vec<Flight> {
+        let mut inner = self.lock();
+        let leases: Vec<u64> = inner
+            .1
+            .iter()
+            .filter(|(_, f)| now_us.saturating_sub(f.checked_in_us) >= max_age_us)
+            .map(|(&l, _)| l)
+            .collect();
+        leases.into_iter().filter_map(|l| inner.1.remove(&l)).collect()
+    }
+}
+
+/// Deterministic fault delivery + stall parking (see [`FaultPlan`]).
+#[derive(Default)]
+struct FaultInjector {
+    pending: Mutex<Vec<FaultSpec>>,
+    stalled: Mutex<Vec<usize>>,
+    stall_cv: Condvar,
+    released: AtomicBool,
+    injected: AtomicU64,
+}
+
+impl FaultInjector {
+    /// Serve-path fault checkpoint: fire the first due fault targeting
+    /// this replica. A panic unwinds from here (the caller's batch is
+    /// already checked in); a stall parks here until release.
+    fn check(&self, replica: usize, now_us: u64) {
+        let due = {
+            let mut pending = self.pending.lock().unwrap_or_else(|e| e.into_inner());
+            let idx = pending.iter().position(|f| {
+                now_us >= f.at_us
+                    && match f.target {
+                        FaultTarget::Replica(r) => r == replica,
+                        FaultTarget::Any => true,
+                    }
+            });
+            idx.map(|i| pending.remove(i))
+        };
+        let Some(spec) = due else { return };
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        match spec.kind {
+            FaultKind::Panic => std::panic::panic_any(InjectedFault { replica }),
+            FaultKind::Stall => self.park(replica),
+        }
+    }
+
+    fn park(&self, replica: usize) {
+        let mut stalled = self.stalled.lock().unwrap_or_else(|e| e.into_inner());
+        stalled.push(replica);
+        self.stall_cv.notify_all();
+        while !self.released.load(Ordering::Acquire) {
+            stalled = self.stall_cv.wait(stalled).unwrap_or_else(|e| e.into_inner());
+        }
+        stalled.retain(|&r| r != replica);
+    }
+
+    /// Block until at least `n` replicas are parked in stalls — the
+    /// test-side rendezvous that replaces any sleep.
+    fn wait_stalled(&self, n: usize) {
+        let mut stalled = self.stalled.lock().unwrap_or_else(|e| e.into_inner());
+        while stalled.len() < n {
+            stalled = self.stall_cv.wait(stalled).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn release(&self) {
+        self.released.store(true, Ordering::Release);
+        self.stall_cv.notify_all();
+    }
+}
+
+/// Everything the replica threads, the watchdog, and the autoscaler
+/// share. Membership vectors (`inbox`, `cancels`, `retired`) are
+/// indexed by replica id and only ever *grow* — ids are never reused,
+/// so stats and fault targets stay unambiguous across scaling.
+struct PoolShared<L: Learner + Send + 'static> {
+    queue: Arc<ServeQueue>,
+    cfg: ServerConfig,
+    flights: FlightTable,
+    inbox: Mutex<Vec<Option<Resync<L>>>>,
+    cancels: Mutex<Vec<Arc<AtomicBool>>>,
+    retired: Mutex<Vec<bool>>,
+    live: AtomicUsize,
+    injector: FaultInjector,
+    handles: Mutex<Vec<JoinHandle<ReplicaExit<L>>>>,
+    replays: AtomicU64,
+    replicas_lost: AtomicU64,
+    replicas_retired: AtomicU64,
+    replicas_spawned: AtomicU64,
+    autoscale_events: Mutex<Vec<(u64, usize, usize)>>,
+}
+
+impl<L: Learner + Send + 'static> PoolShared<L> {
+    /// Mark a replica retired (idempotent): raise its cancel token and
+    /// poke the queue so a blocked pop observes it. Returns whether
+    /// this call did the retiring.
+    fn retire_slot(&self, replica: usize) -> bool {
+        let newly = {
+            let mut retired = self.retired.lock().unwrap_or_else(|e| e.into_inner());
+            if retired[replica] {
+                false
+            } else {
+                retired[replica] = true;
+                true
+            }
+        };
+        if newly {
+            let cancel = {
+                let cancels = self.cancels.lock().unwrap_or_else(|e| e.into_inner());
+                Arc::clone(&cancels[replica])
+            };
+            cancel.store(true, Ordering::Release);
+            self.live.fetch_sub(1, Ordering::AcqRel);
+            self.queue.poke();
+        }
+        newly
+    }
+
+    /// Hand stolen flights back for exactly-once replay: abandon their
+    /// jobs to the queue (orphans) and settle the owed `done()`s. With
+    /// no live replica left there is nobody to replay on — fail fast:
+    /// drop the jobs (their clients observe `Closed`, never a hang) and
+    /// abort everything still queued.
+    fn requeue_stolen(&self, stolen: Vec<Flight>) {
+        let alive = self.live.load(Ordering::Acquire) > 0;
+        for flight in stolen {
+            self.replays.fetch_add(1, Ordering::Relaxed);
+            if alive {
+                // Abandon before done(): a barrier leader waking from
+                // wait_quiesced is guaranteed to see these orphans.
+                self.queue.abandon(flight.jobs);
+            }
+            if flight.owes_done {
+                self.queue.done();
+            }
+        }
+        if !alive {
+            self.queue.abort_pending();
+            self.injector.release();
+        }
+    }
+
+    /// Steal flights older than `max_age`, retire their owners, and
+    /// requeue the jobs. Returns how many flights were recovered.
+    fn scan_stalled(&self, max_age: Duration) -> usize {
+        let now = self.queue.clock().now_us();
+        let stolen = self.flights.steal_older_than(now, max_age.as_micros() as u64);
+        let recovered = stolen.len();
+        for flight in stolen {
+            if self.retire_slot(flight.owner) {
+                self.replicas_retired.fetch_add(1, Ordering::Relaxed);
+            }
+            self.requeue_stolen(vec![flight]);
+        }
+        recovered
+    }
+}
+
+/// Register a new replica slot and start its model thread. Used both at
+/// server start and by the autoscaler (with a post-update snapshot).
+fn spawn_replica<L: Learner + Send + 'static>(shared: &Arc<PoolShared<L>>, learner: L) -> usize {
+    let cancel = Arc::new(AtomicBool::new(false));
+    let id = {
+        let mut retired = shared.retired.lock().unwrap_or_else(|e| e.into_inner());
+        let mut cancels = shared.cancels.lock().unwrap_or_else(|e| e.into_inner());
+        let mut inbox = shared.inbox.lock().unwrap_or_else(|e| e.into_inner());
+        let id = retired.len();
+        retired.push(false);
+        cancels.push(Arc::clone(&cancel));
+        inbox.push(None);
+        id
+    };
+    shared.live.fetch_add(1, Ordering::AcqRel);
+    let shared2 = Arc::clone(shared);
+    let handle = std::thread::Builder::new()
+        .name(format!("tinycl-serve-{id}"))
+        .spawn(move || model_loop(id, learner, &shared2, &cancel))
+        .expect("spawning a serve replica thread");
+    shared.handles.lock().unwrap_or_else(|e| e.into_inner()).push(handle);
+    id
+}
+
+/// What a replica thread hands back at exit.
+struct ReplicaExit<L> {
+    id: usize,
+    /// Retired replicas hold a *stale* snapshot (they stopped adopting
+    /// re-syncs when retired); live ones are current and bit-identical.
+    retired: bool,
+    learner: L,
+    stats: ServerStats,
+}
+
+/// Unwind guard armed for a replica thread's whole life: on a panic
+/// (injected or organic) it retires the replica, steals its checked-in
+/// flight, and requeues the jobs for exactly-once replay — so a crash
+/// can neither double-answer, lose, nor strand a request.
+struct CrashGuard<L: Learner + Send + 'static> {
+    shared: Arc<PoolShared<L>>,
+    replica: usize,
+}
+
+impl<L: Learner + Send + 'static> Drop for CrashGuard<L> {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return;
+        }
+        self.shared.replicas_lost.fetch_add(1, Ordering::Relaxed);
+        self.shared.retire_slot(self.replica);
+        let stolen = self.shared.flights.steal_from(self.replica);
+        self.shared.requeue_stolen(stolen);
+    }
+}
+
+/// Reopen the queue when the barrier leader leaves its critical
+/// section, even by unwinding — an organic train panic must not leave
+/// the whole pool paused forever.
+struct ResumeGuard<'a> {
+    queue: &'a ServeQueue,
+}
+
+impl Drop for ResumeGuard<'_> {
+    fn drop(&mut self) {
+        self.queue.resume();
+    }
+}
+
+/// A running inference server. Owns the replica pool; dropping without
+/// [`Server::shutdown`] detaches the threads (prefer shutdown — it
 /// returns the learners and the stats).
 pub struct Server<L: Learner + Send + 'static> {
-    queue: Arc<ServeQueue>,
-    handles: Vec<JoinHandle<(L, ServerStats)>>,
+    shared: Arc<PoolShared<L>>,
+    watchdog: Option<JoinHandle<()>>,
 }
 
 impl<L: Learner + Send + 'static> Server<L> {
@@ -238,8 +762,46 @@ impl<L: Learner + Send + 'static> Server<L> {
     /// [`super::clock::MockClock`]; load benches share the clock with
     /// their generators via [`ServeClient::clock`]).
     pub fn start_with_clock(learner: L, cfg: ServerConfig, clock: Arc<dyn Clock>) -> Server<L> {
+        Server::start_with_faults(learner, cfg, clock, FaultPlan::default())
+    }
+
+    /// [`Server::start_with_clock`] plus an injected-fault schedule —
+    /// the robustness harness entrypoint.
+    pub fn start_with_faults(
+        learner: L,
+        cfg: ServerConfig,
+        clock: Arc<dyn Clock>,
+        plan: FaultPlan,
+    ) -> Server<L> {
+        if plan.has_panics() {
+            install_injected_panic_hook();
+        }
         let replicas = cfg.replicas.max(1);
-        let queue = Arc::new(ServeQueue::with_clock(cfg.queue_depth, clock));
+        let mut queue = ServeQueue::with_clock(cfg.queue_depth, clock);
+        for lane in Lane::ALL {
+            if let Some(budget) = cfg.lane_slo[lane.index()] {
+                queue = queue.with_lane_slo(lane, budget);
+            }
+        }
+        let shared = Arc::new(PoolShared {
+            queue: Arc::new(queue),
+            cfg,
+            flights: FlightTable::default(),
+            inbox: Mutex::new(Vec::new()),
+            cancels: Mutex::new(Vec::new()),
+            retired: Mutex::new(Vec::new()),
+            live: AtomicUsize::new(0),
+            injector: FaultInjector {
+                pending: Mutex::new(plan.faults),
+                ..FaultInjector::default()
+            },
+            handles: Mutex::new(Vec::new()),
+            replays: AtomicU64::new(0),
+            replicas_lost: AtomicU64::new(0),
+            replicas_retired: AtomicU64::new(0),
+            replicas_spawned: AtomicU64::new(0),
+            autoscale_events: Mutex::new(Vec::new()),
+        });
         let mut learners = Vec::with_capacity(replicas);
         learners.push(learner);
         for _ in 1..replicas {
@@ -251,147 +813,386 @@ impl<L: Learner + Send + 'static> Server<L> {
             });
             learners.push(snapshot);
         }
-        let inbox: Inbox<L> = Arc::new((0..replicas).map(|_| Mutex::new(None)).collect());
-        let handles = learners
-            .into_iter()
-            .enumerate()
-            .map(|(replica, l)| {
-                let q = Arc::clone(&queue);
-                let inbox = Arc::clone(&inbox);
-                std::thread::Builder::new()
-                    .name(format!("tinycl-serve-{replica}"))
-                    .spawn(move || model_loop(replica, l, &q, cfg, &inbox))
-                    .expect("spawning a serve replica thread")
-            })
-            .collect();
-        Server { queue, handles }
+        for l in learners {
+            spawn_replica(&shared, l);
+        }
+        let watchdog = cfg.stall_timeout.map(|timeout| {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("tinycl-serve-watchdog".into())
+                .spawn(move || {
+                    // Pacing is wall-clock; *ages* are measured on the
+                    // queue's clock, so the policy itself stays testable
+                    // under MockClock (tests call watchdog_scan directly).
+                    let poll = (timeout / 4).max(Duration::from_millis(1));
+                    while !shared.queue.is_closed() {
+                        std::thread::sleep(poll);
+                        shared.scan_stalled(timeout);
+                    }
+                })
+                .expect("spawning the serve watchdog thread")
+        });
+        Server { shared, watchdog }
     }
 
     pub fn client(&self) -> ServeClient {
-        ServeClient { queue: Arc::clone(&self.queue) }
+        ServeClient { queue: Arc::clone(&self.shared.queue) }
     }
 
     pub fn queue_stats(&self) -> QueueStats {
-        self.queue.stats()
+        self.shared.queue.stats()
     }
 
-    /// Replica threads serving this pool.
+    /// Replica threads ever started for this pool (including lost and
+    /// retired ones — ids are never reused).
     pub fn replicas(&self) -> usize {
-        self.handles.len()
+        self.shared.retired.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// Replicas currently serving (not lost, not retired).
+    pub fn live_replicas(&self) -> usize {
+        self.shared.live.load(Ordering::Acquire)
+    }
+
+    /// Steal and replay every in-flight batch older than `max_age`,
+    /// retiring the wedged owners. Returns how many flights were
+    /// recovered. `cfg.stall_timeout` runs this periodically in the
+    /// background; deterministic tests drive it directly against a
+    /// [`super::clock::MockClock`].
+    pub fn watchdog_scan(&self, max_age: Duration) -> usize {
+        self.shared.scan_stalled(max_age)
+    }
+
+    /// Rendezvous with an injected [`FaultKind::Stall`]: block until at
+    /// least `n` replicas are parked (no sleeps in tests).
+    pub fn fault_wait_stalled(&self, n: usize) {
+        self.shared.injector.wait_stalled(n);
+    }
+
+    /// Release every parked stall (shutdown does this implicitly).
+    pub fn fault_release_stalls(&self) {
+        self.shared.injector.release();
     }
 
     /// Stop admitting, drain everything already queued, join every
-    /// replica, and hand back the primary learner (with all
+    /// replica, and hand back a current learner (with all
     /// serve-while-learning updates applied) plus the merged stats.
+    /// Panics if every replica was lost to a fault — use
+    /// [`Server::shutdown_all`] when that is an expected outcome.
     pub fn shutdown(self) -> (L, ServerStats) {
         let (mut learners, stats) = self.shutdown_all();
+        assert!(
+            !learners.is_empty(),
+            "no replica survived to shutdown — the whole pool was lost to faults"
+        );
         (learners.remove(0), stats)
     }
 
-    /// [`Server::shutdown`], returning every replica's learner (index =
-    /// replica id). After a drained shutdown all of them are
-    /// bit-identical — the parity tests assert exactly that.
+    /// [`Server::shutdown`], returning every surviving replica's
+    /// learner: the live pool first (bit-identical after a drained
+    /// shutdown — the parity tests assert exactly that), then any
+    /// retired replicas (stale snapshots), each group in id order.
+    /// Replicas lost to panics return nothing.
     pub fn shutdown_all(self) -> (Vec<L>, ServerStats) {
-        self.queue.close();
-        let mut learners = Vec::with_capacity(self.handles.len());
-        let mut merged = ServerStats::default();
-        for handle in self.handles {
-            let (learner, stats) = handle.join().expect("serve replica thread panicked");
-            merged.merge(&stats);
-            learners.push(learner);
+        let shared = &self.shared;
+        shared.queue.close();
+        shared.injector.release();
+        if let Some(wd) = self.watchdog {
+            let _ = wd.join();
         }
+        let mut exits: Vec<ReplicaExit<L>> = Vec::new();
+        loop {
+            let handle = shared.handles.lock().unwrap_or_else(|e| e.into_inner()).pop();
+            let Some(handle) = handle else { break };
+            match handle.join() {
+                Ok(exit) => exits.push(exit),
+                Err(payload) => {
+                    if payload.downcast_ref::<InjectedFault>().is_none() {
+                        // Organic replica panics are real bugs — re-raise.
+                        std::panic::resume_unwind(payload);
+                    }
+                    // Injected kill: the crash guard already retired the
+                    // replica and requeued its flight.
+                }
+            }
+        }
+        exits.sort_by_key(|e| (e.retired, e.id));
+        let mut merged = ServerStats::default();
+        let mut learners = Vec::with_capacity(exits.len());
+        for exit in exits {
+            merged.merge(&exit.stats);
+            learners.push(exit.learner);
+        }
+        merged.replays = shared.replays.load(Ordering::Relaxed);
+        merged.replicas_lost = shared.replicas_lost.load(Ordering::Relaxed);
+        merged.replicas_retired = shared.replicas_retired.load(Ordering::Relaxed);
+        merged.replicas_spawned = shared.replicas_spawned.load(Ordering::Relaxed);
+        merged.faults_injected = shared.injector.injected.load(Ordering::Relaxed);
+        merged.autoscale_events =
+            shared.autoscale_events.lock().unwrap_or_else(|e| e.into_inner()).clone();
         (learners, merged)
     }
 }
 
-/// Take any re-broadcast weights waiting in this replica's inbox.
-fn adopt<L: Learner>(
+/// Take any re-broadcast waiting in this replica's inbox — the batch
+/// boundary where a stale replica adopts the new version. Diff adoption
+/// copies only version-advanced tensors; a backend without version
+/// support falls back to cloning the shared snapshot.
+fn adopt<L: Learner + Send + 'static>(
     replica: usize,
-    inbox: &[Mutex<Option<L>>],
+    shared: &PoolShared<L>,
     learner: &mut L,
     stats: &mut ServerStats,
 ) {
-    let fresh = inbox[replica].lock().unwrap_or_else(|e| e.into_inner()).take();
-    if let Some(fresh) = fresh {
-        *learner = fresh;
-        stats.resyncs += 1;
+    let slot = shared.inbox.lock().unwrap_or_else(|e| e.into_inner())[replica].take();
+    match slot {
+        None => {}
+        Some(Resync::Full(fresh)) => {
+            *learner = fresh;
+            stats.resyncs += 1;
+        }
+        Some(Resync::Diff(src)) => {
+            let src = src.lock().unwrap_or_else(|e| e.into_inner());
+            match learner.sync_weights_from(&src) {
+                Some(bytes) => {
+                    stats.resyncs += 1;
+                    stats.resyncs_diff += 1;
+                    stats.resync_diff_bytes += bytes;
+                }
+                None => {
+                    *learner = src
+                        .clone_replica()
+                        .expect("diff re-sync fallback requires clone_replica");
+                    stats.resyncs += 1;
+                }
+            }
+        }
     }
 }
 
-/// One replica model thread: pop, (re-)sync, execute.
-fn model_loop<L: Learner>(
+/// Execute one predict batch under a flight lease (see module docs).
+/// `owes_done` is true for popped batches (which hold an in-flight
+/// slot) and false for orphans served inline at a barrier.
+fn serve_jobs<L: Learner + Send + 'static>(
+    replica: usize,
+    learner: &mut L,
+    shared: &PoolShared<L>,
+    jobs: Vec<PredictJob>,
+    stats: &mut ServerStats,
+    owes_done: bool,
+) {
+    let queue = &shared.queue;
+    // Last deadline check before compute: anything that expired while
+    // popped is shed (books reclassified), not answered stale.
+    let jobs: Vec<PredictJob> =
+        jobs.into_iter().filter_map(|j| queue.expire_if_late(j)).collect();
+    if jobs.is_empty() {
+        if owes_done {
+            queue.done();
+        }
+        return;
+    }
+    let batch_size = jobs.len();
+    // The jobs themselves (with their response channels) live in the
+    // flight table while we compute, so an unwind or a watchdog steal
+    // recovers them intact; compute reads these cheap input copies.
+    let inputs: Vec<(Tensor<f32>, usize)> =
+        jobs.iter().map(|j| (j.x.clone(), j.active_classes)).collect();
+    let lease = queue.clock().now_us();
+    let lease = shared.flights.check_in(replica, jobs, lease, owes_done);
+    if owes_done {
+        // Fault checkpoint: the batch is checked in, so an injected
+        // death or stall here exercises full recovery. Barrier-inline
+        // serving skips it — a fault while the pool is paused would
+        // wedge the barrier, not a replica.
+        shared.injector.check(replica, queue.clock().now_us());
+    }
+    // One packed forward per active-head group (requests virtually
+    // always share one head, so this is one `predict_batch` for the
+    // whole coalesced batch).
+    let mut by_head: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, (_, active)) in inputs.iter().enumerate() {
+        by_head.entry(*active).or_default().push(i);
+    }
+    let mut preds = vec![0usize; batch_size];
+    for (active, idxs) in by_head {
+        let xs: Vec<&Tensor<f32>> = idxs.iter().map(|&i| &inputs[i].0).collect();
+        let out = learner.predict_batch(&xs, active);
+        // A short vector would silently drop responses and hang the
+        // affected clients — fail attributably.
+        assert_eq!(
+            out.len(),
+            idxs.len(),
+            "predict_batch returned {} predictions for {} inputs",
+            out.len(),
+            idxs.len()
+        );
+        for (&i, p) in idxs.iter().zip(out) {
+            preds[i] = p;
+        }
+    }
+    let Some(flight) = shared.flights.complete(lease) else {
+        // The watchdog stole this lease mid-compute: the batch is being
+        // replayed elsewhere, the stealer settled the done() — discard
+        // our answers so nobody is double-answered.
+        stats.batches_stolen += 1;
+        return;
+    };
+    stats.batches += 1;
+    stats.served += batch_size as u64;
+    *stats.batch_hist.entry(batch_size).or_insert(0) += 1;
+    let done_us = queue.clock().now_us();
+    for (job, pred) in flight.jobs.into_iter().zip(preds) {
+        // A client that gave up is not an error.
+        let _ = job
+            .resp
+            .send(PredictOutcome::Answered(PredictResponse { pred, batch_size, done_us }));
+    }
+    if flight.owes_done {
+        queue.done();
+    }
+}
+
+/// This replica popped the train barrier: quiesce the pool, answer
+/// orphans on pre-update weights, apply the update, autoscale at the
+/// quiesce point, re-broadcast (diff when supported), reopen.
+fn lead_barrier<L: Learner + Send + 'static>(
+    replica: usize,
+    learner: &mut L,
+    shared: &Arc<PoolShared<L>>,
+    job: TrainJob,
+    stats: &mut ServerStats,
+) {
+    let queue = &shared.queue;
+    queue.wait_quiesced();
+    let resume_guard = ResumeGuard { queue };
+    // Orphans abandoned by a dead replica were all admitted before this
+    // barrier — answer them here, on pre-update weights, exactly as the
+    // stream order promises.
+    let orphans = queue.take_orphans();
+    if !orphans.is_empty() {
+        serve_jobs(replica, learner, shared, orphans, stats, false);
+    }
+    let loss = if job.cut == 0 {
+        learner.train_step(&job.x, job.label, job.active_classes, job.lr)
+    } else {
+        let max_cut = learner.max_latent_cut().unwrap_or(0);
+        assert!(
+            job.cut <= max_cut,
+            "train job at cut {} but the backend admits at most {max_cut}",
+            job.cut
+        );
+        let acts = learner.forward_to_cut_batch(&[&job.x], job.cut);
+        let act_refs: Vec<&Tensor<f32>> = acts.iter().collect();
+        learner.train_latent_batch(&act_refs, &[job.label], job.cut, job.active_classes, job.lr)
+    };
+    stats.train_steps += 1;
+    // Autoscale (retire side) before broadcasting so a retiring replica
+    // doesn't get a pointless snapshot; spawn side after, so a newborn
+    // (already current) doesn't get a redundant one.
+    let mut spawn_n = 0usize;
+    if let Some(policy) = shared.cfg.autoscale {
+        let live = shared.live.load(Ordering::Acquire);
+        let min = policy.min_replicas.max(1);
+        let max = policy.max_replicas.max(min);
+        let pending = queue.stats().pending;
+        if live < min {
+            spawn_n = min - live; // heal a crashed pool back to floor
+        } else if pending >= policy.scale_up_pending && live < max {
+            spawn_n = 1;
+        } else if pending <= policy.scale_down_pending && live > min {
+            let victim = {
+                let retired = shared.retired.lock().unwrap_or_else(|e| e.into_inner());
+                (0..retired.len()).rev().find(|&r| r != replica && !retired[r])
+            };
+            if let Some(victim) = victim {
+                shared.retire_slot(victim);
+                shared.replicas_retired.fetch_add(1, Ordering::Relaxed);
+                shared
+                    .autoscale_events
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push((queue.clock().now_us(), live, live - 1));
+            }
+        }
+    }
+    // Re-broadcast post-update weights to every other live replica.
+    let others: Vec<usize> = {
+        let retired = shared.retired.lock().unwrap_or_else(|e| e.into_inner());
+        (0..retired.len()).filter(|&r| r != replica && !retired[r]).collect()
+    };
+    if !others.is_empty() {
+        let clone_or_die = |l: &L| {
+            l.clone_replica()
+                .unwrap_or_else(|| panic!("replicated serving requires clone_replica support"))
+        };
+        if shared.cfg.diff_resync && learner.weights_version().is_some() {
+            // One shared snapshot for the whole pool: adopters copy
+            // only version-advanced tensors from it.
+            let snapshot = Arc::new(Mutex::new(clone_or_die(learner)));
+            let mut inbox = shared.inbox.lock().unwrap_or_else(|e| e.into_inner());
+            for r in others {
+                // Latest barrier wins over any unconsumed re-sync.
+                inbox[r] = Some(Resync::Diff(Arc::clone(&snapshot)));
+            }
+        } else {
+            let mut inbox = shared.inbox.lock().unwrap_or_else(|e| e.into_inner());
+            for r in others {
+                inbox[r] = Some(Resync::Full(clone_or_die(learner)));
+            }
+        }
+    }
+    if spawn_n > 0 {
+        let live = shared.live.load(Ordering::Acquire);
+        for _ in 0..spawn_n {
+            let snapshot = learner.clone_replica().unwrap_or_else(|| {
+                panic!("autoscaling requires clone_replica support")
+            });
+            spawn_replica(shared, snapshot);
+        }
+        shared.replicas_spawned.fetch_add(spawn_n as u64, Ordering::Relaxed);
+        shared
+            .autoscale_events
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push((queue.clock().now_us(), live, live + spawn_n));
+    }
+    drop(resume_guard); // reopen the queue
+    let _ = job.resp.send(loss);
+}
+
+/// One replica model thread: pop, (re-)sync, execute — under the crash
+/// guard that makes any panic a recoverable retirement.
+fn model_loop<L: Learner + Send + 'static>(
     replica: usize,
     mut learner: L,
-    queue: &ServeQueue,
-    cfg: ServerConfig,
-    inbox: &[Mutex<Option<L>>],
-) -> (L, ServerStats) {
+    shared: &Arc<PoolShared<L>>,
+    cancel: &AtomicBool,
+) -> ReplicaExit<L> {
+    let guard = CrashGuard { shared: Arc::clone(shared), replica };
     let mut stats = ServerStats::default();
-    while let Some(batch) = queue.pop_batch(cfg.max_batch, cfg.max_wait) {
+    let cfg = shared.cfg;
+    while let Some(batch) =
+        shared.queue.pop_batch_cancellable(cfg.max_batch, cfg.max_wait, cancel)
+    {
         // Another replica may have led a train barrier while this one
         // slept in pop_batch: adopt the re-broadcast weights *before*
         // executing anything popped after that barrier.
-        adopt(replica, inbox, &mut learner, &mut stats);
+        adopt(replica, shared, &mut learner, &mut stats);
         match batch {
             Batch::Predicts(jobs) => {
-                let batch_size = jobs.len();
-                stats.batches += 1;
-                stats.served += batch_size as u64;
-                *stats.batch_hist.entry(batch_size).or_insert(0) += 1;
-                // One packed forward per active-head group (requests
-                // virtually always share one head, so this is one
-                // `predict_batch` for the whole coalesced batch).
-                let mut by_head: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-                for (i, job) in jobs.iter().enumerate() {
-                    by_head.entry(job.active_classes).or_default().push(i);
-                }
-                for (active, idxs) in by_head {
-                    let xs: Vec<&Tensor<f32>> = idxs.iter().map(|&i| &jobs[i].x).collect();
-                    let preds = learner.predict_batch(&xs, active);
-                    // A short vector would silently drop responses and
-                    // hang the affected clients — fail attributably.
-                    assert_eq!(
-                        preds.len(),
-                        idxs.len(),
-                        "predict_batch returned {} predictions for {} inputs",
-                        preds.len(),
-                        idxs.len()
-                    );
-                    let done_us = queue.clock().now_us();
-                    for (&i, pred) in idxs.iter().zip(preds) {
-                        // A client that gave up is not an error.
-                        let _ = jobs[i].resp.send(PredictResponse { pred, batch_size, done_us });
-                    }
-                }
-                queue.done();
+                serve_jobs(replica, &mut learner, shared, jobs, &mut stats, true);
             }
-            Batch::Train(job) => {
-                // This replica popped the barrier: the queue is paused.
-                // Wait out in-flight predict batches (they were admitted
-                // before the train — pre-update weights are correct for
-                // them), apply the update here, re-broadcast, reopen.
-                queue.wait_quiesced();
-                let loss = learner.train_step(&job.x, job.label, job.active_classes, job.lr);
-                stats.train_steps += 1;
-                for (r, slot) in inbox.iter().enumerate() {
-                    if r != replica {
-                        let snapshot = learner.clone_replica().unwrap_or_else(|| {
-                            panic!("replicated serving requires clone_replica support")
-                        });
-                        // Latest barrier wins over any unconsumed snapshot.
-                        *slot.lock().unwrap_or_else(|e| e.into_inner()) = Some(snapshot);
-                    }
-                }
-                queue.resume();
-                let _ = job.resp.send(loss);
-            }
+            Batch::Train(job) => lead_barrier(replica, &mut learner, shared, job, &mut stats),
         }
     }
     // The final barrier may have been led by another replica after this
     // one's last pop: adopt before handing the learner back so shutdown
-    // returns bit-identical replicas.
-    adopt(replica, inbox, &mut learner, &mut stats);
-    (learner, stats)
+    // returns bit-identical live replicas.
+    adopt(replica, shared, &mut learner, &mut stats);
+    let retired = shared.retired.lock().unwrap_or_else(|e| e.into_inner())[replica];
+    drop(guard); // normal exit: thread::panicking() is false → no-op
+    ReplicaExit { id: replica, retired, learner, stats }
 }
 
 #[cfg(test)]
@@ -449,11 +1250,15 @@ mod tests {
         let stats_mid = server.queue_stats();
         assert!(stats_mid.consistent());
         assert_eq!(stats_mid.admitted, 12);
+        assert_eq!(server.live_replicas(), 1);
         let (_model, stats) = server.shutdown();
         assert_eq!(stats.served, 12);
         assert_eq!(stats.batch_hist.iter().map(|(s, n)| *s as u64 * n).sum::<u64>(), 12);
         assert!(stats.mean_batch() >= 1.0);
         assert_eq!(stats.per_replica_served, vec![12]);
+        assert_eq!(stats.replays, 0);
+        assert_eq!(stats.replicas_lost, 0);
+        assert_eq!(stats.faults_injected, 0);
     }
 
     #[test]
@@ -465,6 +1270,7 @@ mod tests {
             ServerConfig { replicas: 3, max_batch: 4, ..ServerConfig::default() },
         );
         assert_eq!(server.replicas(), 3);
+        assert_eq!(server.live_replicas(), 3);
         let images: Vec<Tensor<f32>> = (0..24u64).map(|i| rand_image(i, &cfg)).collect();
         std::thread::scope(|scope| {
             for c in 0..6 {
@@ -594,5 +1400,27 @@ mod tests {
             client.predict_async(&rand_image(1, &tiny_cfg()), 4, Lane::Bulk),
             Submitted::Closed
         ));
+    }
+
+    #[test]
+    fn train_at_cut_matches_direct_suffix_training() {
+        // A cut-2 train job through the serve path must equal the same
+        // suffix update applied directly: dense-only movement, conv
+        // weights untouched.
+        let cfg = tiny_cfg();
+        let seed_model = Model::new(cfg.clone(), 21).with_engine(Engine::Gemm);
+        let mut reference = seed_model.clone();
+        let server = Server::start(seed_model, ServerConfig::default());
+        let x = rand_image(500, &cfg);
+        let loss = server.client().train_at_cut(&x, 1, 4, 0.05, 2).expect("train at cut");
+        assert!(loss.is_finite());
+        let (trained, stats) = server.shutdown();
+        assert_eq!(stats.train_steps, 1);
+        let acts = reference.forward_to_cut_batch(&[&x], 2);
+        let act_refs: Vec<&Tensor<f32>> = acts.iter().collect();
+        Learner::train_latent_batch(&mut reference, &act_refs, &[1], 2, 4, 0.05);
+        assert_eq!(trained.params.w.data(), reference.params.w.data(), "w diverged");
+        assert_eq!(trained.params.k1.data(), reference.params.k1.data(), "k1 moved at cut 2");
+        assert_eq!(trained.params.k2.data(), reference.params.k2.data(), "k2 moved at cut 2");
     }
 }

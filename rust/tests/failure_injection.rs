@@ -6,6 +6,10 @@ use tinycl::data::Sample;
 use tinycl::fixed::Fx;
 use tinycl::nn::{Model, ModelConfig};
 use tinycl::qnn::QModel;
+use tinycl::serve::{
+    FaultPlan, FaultTarget, Lane, MockClock, PredictOutcome, Served, Server, ServerConfig,
+    Submitted,
+};
 #[cfg(feature = "xla")]
 use tinycl::runtime::{ArtifactSet, XlaRuntime};
 use tinycl::sim::{SimConfig, TinyClDevice};
@@ -156,4 +160,73 @@ fn empty_gradient_memory_reuse_is_safe() {
 
     assert_eq!(dev_a.read_params().w.data(), dev_b.read_params().w.data());
     assert_eq!(dev_a.read_params().k1.data(), dev_b.read_params().k1.data());
+}
+
+// ---- serve-layer faults: the pool must fail loudly, never hang ----
+
+/// Killing the *last* replica leaves nobody to replay on. The crash
+/// guard must fail fast: the blocked caller resolves to `Closed` (its
+/// response channel drops, no fabricated answer), the queue aborts, and
+/// later offers are refused immediately.
+#[test]
+fn killing_the_last_replica_closes_clients_instead_of_hanging() {
+    let model = Model::new(tiny(), 7);
+    let cfg = ServerConfig { max_batch: 1, replicas: 1, ..ServerConfig::default() };
+    let server = Server::start_with_faults(
+        model,
+        cfg,
+        MockClock::shared(),
+        FaultPlan::new().kill(FaultTarget::Any, 0),
+    );
+    let client = server.client();
+    let x = Tensor::full(Shape::d3(3, 8, 8), 0.5);
+
+    assert_eq!(client.predict(&x, 4), Served::Closed);
+    assert_eq!(server.live_replicas(), 0);
+    assert_eq!(client.predict(&x, 4), Served::Closed);
+
+    let (survivors, stats) = server.shutdown_all();
+    assert!(survivors.is_empty(), "the only replica was killed");
+    assert_eq!(stats.replicas_lost, 1);
+    assert_eq!(stats.faults_injected, 1);
+    assert_eq!(stats.served, 0);
+}
+
+/// A stalled replica released by the operator — before any watchdog
+/// scan steals its flight — must finish its own batch normally: one
+/// answer, no steal, no replay, no duplicate on the channel.
+#[test]
+fn released_stall_completes_its_batch_without_replay() {
+    let model = Model::new(tiny(), 7);
+    let cfg = ServerConfig { max_batch: 1, replicas: 1, ..ServerConfig::default() };
+    let server = Server::start_with_faults(
+        model,
+        cfg,
+        MockClock::shared(),
+        FaultPlan::new().stall(FaultTarget::Any, 0),
+    );
+    let client = server.client();
+    let x = Tensor::full(Shape::d3(3, 8, 8), 0.5);
+
+    let rx = match client.predict_async(&x, 4, Lane::Interactive) {
+        Submitted::Pending(rx) => rx,
+        _ => panic!("admission refused an empty queue"),
+    };
+    // Condvar rendezvous, not a sleep: block until the replica is
+    // parked mid-batch (after flight check-in, before compute).
+    server.fault_wait_stalled(1);
+    server.fault_release_stalls();
+
+    match rx.recv().expect("the released replica must answer") {
+        PredictOutcome::Answered(resp) => assert_eq!(resp.batch_size, 1),
+        PredictOutcome::DeadlineShed => panic!("no deadline was configured"),
+    }
+    assert!(rx.try_recv().is_err(), "a second outcome arrived for one request");
+
+    let (_, stats) = server.shutdown();
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.faults_injected, 1);
+    assert_eq!(stats.batches_stolen, 0);
+    assert_eq!(stats.replays, 0);
+    assert_eq!(stats.replicas_lost, 0);
 }

@@ -1,0 +1,380 @@
+//! Serve-pool robustness (PR 8): deterministic fault injection on the
+//! clock seam, exactly-once recovery of in-flight batches, SLO deadline
+//! shedding at both drop points, barrier-point autoscaling, and the
+//! diff-vs-full weight re-broadcast equivalence.
+//!
+//! Nothing here sleeps to synchronize: stalls rendezvous on the
+//! injector's condvar ([`Server::fault_wait_stalled`]), time is a
+//! [`MockClock`] wherever a deadline or a stall age matters, and the
+//! watchdog policy is driven directly via [`Server::watchdog_scan`].
+
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use tinycl::cl::Learner;
+use tinycl::coordinator::{Backend, BackendKind};
+use tinycl::data::{Dataset, SyntheticCifar};
+use tinycl::nn::ModelConfig;
+use tinycl::serve::{
+    Admission, AutoscalePolicy, Batch, FaultPlan, FaultTarget, Lane, MockClock, PredictJob,
+    PredictOutcome, Served, ServeQueue, Server, ServerConfig, Submitted,
+};
+use tinycl::sim::SimConfig;
+use tinycl::tensor::{Shape, Tensor};
+
+const ACTIVE: usize = 4;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        in_channels: 3,
+        image_size: 8,
+        conv_channels: 4,
+        num_classes: 4,
+        grad_clip: f32::INFINITY,
+    }
+}
+
+fn tiny_data() -> Dataset {
+    let gen = SyntheticCifar {
+        image_size: 8,
+        channels: 3,
+        num_classes: 4,
+        noise: 0.35,
+        seed: 11,
+    };
+    gen.generate(6, 0)
+}
+
+/// Same construction as the serve bench and parity tests: identical
+/// seed and warmup, so server replicas and the reference agree bit-wise
+/// on the exact Q4.12 datapath.
+fn warmed_qnn(data: &Dataset) -> Backend {
+    let mut b =
+        Backend::create(BackendKind::Qnn, &tiny_cfg(), &SimConfig::paper(), "artifacts", 5)
+            .unwrap();
+    b.set_threads(2);
+    for s in data.samples.iter().take(5) {
+        b.train_step(&s.x, s.label, ACTIVE, 0.125);
+    }
+    b
+}
+
+fn pool_cfg(replicas: usize) -> ServerConfig {
+    ServerConfig {
+        max_batch: 1,
+        max_wait: Duration::from_micros(200),
+        queue_depth: 64,
+        replicas,
+        ..ServerConfig::default()
+    }
+}
+
+// ---- deadline shedding: both drop points, books split by reason ----
+
+/// One MockClock grid exercising every admission verdict: a request
+/// that expires while queued (batch-build shed), one dead on arrival
+/// (admission shed), one over capacity, and one that survives. The
+/// per-reason books must balance at every step.
+#[test]
+fn deadline_grid_splits_admission_and_batch_build_sheds() {
+    let clock = MockClock::shared();
+    let queue = ServeQueue::with_clock(2, clock.clone())
+        .with_lane_slo(Lane::Interactive, Duration::from_micros(100));
+    let x = || Tensor::full(Shape::d1(4), 0.5);
+    let job = |deadline_us| {
+        let (tx, rx) = channel::<PredictOutcome>();
+        let j = PredictJob {
+            x: x(),
+            active_classes: ACTIVE,
+            lane: Lane::Interactive,
+            deadline_us,
+            resp: tx,
+        };
+        (j, rx)
+    };
+
+    // t=0: A has no explicit deadline — stamped t+100 from the lane SLO.
+    let (a, rx_a) = job(None);
+    assert_eq!(queue.offer(a), Admission::Admitted);
+    // C arrives already at its deadline: shed at admission, not queued.
+    let (c, rx_c) = job(Some(0));
+    assert_eq!(queue.offer(c), Admission::Shed);
+    // D is fresh with a far deadline.
+    let (d, rx_d) = job(Some(1_000_000));
+    assert_eq!(queue.offer(d), Admission::Admitted);
+    // E is fresh but the lane is at depth: a capacity shed.
+    let (e, rx_e) = job(None);
+    assert_eq!(queue.offer(e), Admission::Shed);
+
+    let mid = queue.stats();
+    assert!(mid.consistent(), "books inconsistent mid-grid: {mid:?}");
+    assert_eq!((mid.offered, mid.admitted, mid.pending), (4, 2, 2));
+    assert_eq!((mid.shed_capacity, mid.shed_deadline), (1, 1));
+
+    // t=150: A expired while queued. The batcher must shed it (books
+    // reclassified admitted -> shed_deadline) and batch only D.
+    clock.advance_us(150);
+    let batch = queue.pop_batch(8, Duration::ZERO).expect("queue is open with D queued");
+    match batch {
+        Batch::Predicts(jobs) => {
+            assert_eq!(jobs.len(), 1);
+            assert_eq!(jobs[0].deadline_us, Some(1_000_000));
+        }
+        Batch::Train(_) => panic!("no train was queued"),
+    }
+    queue.done();
+
+    let end = queue.stats();
+    assert!(end.consistent(), "books inconsistent after batch build: {end:?}");
+    assert_eq!((end.offered, end.admitted, end.pending), (4, 1, 0));
+    assert_eq!((end.shed, end.shed_capacity, end.shed_deadline), (3, 1, 2));
+    let lane = end.lane(Lane::Interactive);
+    assert_eq!((lane.shed_capacity, lane.shed_deadline), (1, 2));
+
+    // The expired-in-queue client hears the shed; admission sheds get
+    // no message — their channel just disconnects.
+    assert_eq!(rx_a.recv().unwrap(), PredictOutcome::DeadlineShed);
+    assert!(rx_c.recv().is_err());
+    assert!(rx_e.recv().is_err());
+    drop(rx_d);
+}
+
+// ---- crash recovery: exactly-once replay, bit-exact answers ----
+
+/// Kill one of two replicas on its first checked-in batch. The crash
+/// guard must orphan the batch, the survivor must replay it, and every
+/// answer — replayed or not — must stay bit-exact with a per-sample
+/// reference on the exact qnn datapath.
+#[test]
+fn replica_kill_recovers_with_bit_exact_answers_on_qnn() {
+    let data = tiny_data();
+    let mut reference = warmed_qnn(&data);
+    let server = Server::start_with_faults(
+        warmed_qnn(&data),
+        pool_cfg(2),
+        MockClock::shared(),
+        FaultPlan::new().kill(FaultTarget::Any, 0),
+    );
+    let client = server.client();
+
+    for s in &data.samples {
+        match client.predict(&s.x, ACTIVE) {
+            Served::Ok { pred, .. } => {
+                assert_eq!(pred, reference.predict(&s.x, ACTIVE), "answer diverged");
+            }
+            other => panic!("request not answered: {other:?}"),
+        }
+    }
+    assert_eq!(server.live_replicas(), 1);
+
+    let qs = client.queue_stats();
+    assert!(qs.consistent());
+    assert_eq!((qs.offered, qs.admitted, qs.shed), (6, 6, 0));
+
+    let (mut survivors, stats) = server.shutdown_all();
+    assert_eq!(survivors.len(), 1, "exactly one replica survived the kill");
+    assert_eq!(stats.served, data.samples.len() as u64);
+    assert_eq!(stats.replicas_lost, 1);
+    assert_eq!(stats.faults_injected, 1);
+    assert_eq!(stats.replays, 1, "the killed replica's batch replays exactly once");
+    assert_eq!(stats.batches_stolen, 0, "a dead replica never finishes its batch");
+    for s in &data.samples {
+        assert_eq!(survivors[0].predict(&s.x, ACTIVE), reference.predict(&s.x, ACTIVE));
+    }
+}
+
+/// Wedge a replica mid-batch, age the flight on a MockClock, and drive
+/// the watchdog policy directly: the flight is stolen and replayed by
+/// the other replica, and when the wedged replica finally wakes its
+/// stale answers are discarded — one answer per request, ever.
+#[test]
+fn watchdog_steals_wedged_replica_and_replays_exactly_once() {
+    let data = tiny_data();
+    let mut reference = warmed_qnn(&data);
+    let clock = MockClock::shared();
+    let server = Server::start_with_faults(
+        warmed_qnn(&data),
+        pool_cfg(2),
+        clock.clone(),
+        FaultPlan::new().stall(FaultTarget::Any, 0),
+    );
+    let client = server.client();
+    let s0 = &data.samples[0];
+
+    let rx = match client.predict_async(&s0.x, ACTIVE, Lane::Interactive) {
+        Submitted::Pending(rx) => rx,
+        _ => panic!("admission refused an empty queue"),
+    };
+    // Condvar rendezvous: whichever replica popped the batch is parked
+    // between flight check-in and compute.
+    server.fault_wait_stalled(1);
+
+    // Age the flight well past the policy window and scan.
+    clock.advance_us(2_000_000);
+    assert_eq!(server.watchdog_scan(Duration::from_secs(1)), 1);
+    assert_eq!(server.live_replicas(), 1, "the wedged owner was retired");
+
+    match rx.recv().expect("the stolen batch must be replayed, not lost") {
+        PredictOutcome::Answered(resp) => {
+            assert_eq!(resp.pred, reference.predict(&s0.x, ACTIVE));
+            assert_eq!(resp.batch_size, 1);
+        }
+        PredictOutcome::DeadlineShed => panic!("no deadline was configured"),
+    }
+
+    // Wake the wedged replica; it must discard its stolen batch.
+    server.fault_release_stalls();
+    let (survivors, stats) = server.shutdown_all();
+    assert!(rx.try_recv().is_err(), "the wedged replica double-answered");
+    assert_eq!(survivors.len(), 2, "retired replicas still return their (stale) learner");
+    assert_eq!(stats.served, 1);
+    assert_eq!(stats.replays, 1);
+    assert_eq!(stats.batches_stolen, 1, "the late owner discarded its answers");
+    assert_eq!(stats.replicas_retired, 1);
+    assert_eq!(stats.replicas_lost, 0);
+    assert_eq!(stats.faults_injected, 1);
+}
+
+// ---- autoscaling: membership changes only at barrier quiesce points ----
+
+/// After a kill drops the pool below `min_replicas`, the next train
+/// barrier heals it back to the floor — and the newborn serves the
+/// post-update weights bit-exactly.
+#[test]
+fn autoscaler_heals_killed_pool_at_the_next_barrier() {
+    let data = tiny_data();
+    let mut reference = warmed_qnn(&data);
+    let mut cfg = pool_cfg(2);
+    cfg.autoscale = Some(AutoscalePolicy {
+        min_replicas: 2,
+        max_replicas: 2,
+        scale_up_pending: usize::MAX,
+        scale_down_pending: 0,
+    });
+    let server = Server::start_with_faults(
+        warmed_qnn(&data),
+        cfg,
+        MockClock::shared(),
+        FaultPlan::new().kill(FaultTarget::Any, 0),
+    );
+    let client = server.client();
+    let s0 = &data.samples[0];
+
+    // The first predict trips the kill; its replay still answers.
+    assert!(matches!(client.predict(&s0.x, ACTIVE), Served::Ok { .. }));
+    assert_eq!(server.live_replicas(), 1);
+
+    // The barrier heals the pool before reopening the queue.
+    let loss = client.train(&s0.x, s0.label, ACTIVE, 0.125).expect("server open");
+    assert_eq!(loss, reference.train_step(&s0.x, s0.label, ACTIVE, 0.125));
+    assert_eq!(server.live_replicas(), 2);
+
+    for s in &data.samples {
+        match client.predict(&s.x, ACTIVE) {
+            Served::Ok { pred, .. } => assert_eq!(pred, reference.predict(&s.x, ACTIVE)),
+            other => panic!("post-heal request not answered: {other:?}"),
+        }
+    }
+
+    let (survivors, stats) = server.shutdown_all();
+    assert_eq!(survivors.len(), 2);
+    assert_eq!(stats.replicas_lost, 1);
+    assert_eq!(stats.replicas_spawned, 1);
+    assert_eq!(stats.autoscale_events.len(), 1);
+    let (_, from, to) = stats.autoscale_events[0];
+    assert_eq!((from, to), (1, 2));
+}
+
+/// An idle barrier (no queued predicts) shrinks an over-provisioned
+/// pool by one — never below the floor, never the barrier leader.
+#[test]
+fn autoscaler_shrinks_idle_pool_at_a_barrier() {
+    let data = tiny_data();
+    let mut reference = warmed_qnn(&data);
+    let mut cfg = pool_cfg(2);
+    cfg.autoscale = Some(AutoscalePolicy {
+        min_replicas: 1,
+        max_replicas: 2,
+        scale_up_pending: usize::MAX,
+        scale_down_pending: 0,
+    });
+    let server = Server::start_with_clock(warmed_qnn(&data), cfg, MockClock::shared());
+    let client = server.client();
+    let s0 = &data.samples[0];
+
+    let loss = client.train(&s0.x, s0.label, ACTIVE, 0.125).expect("server open");
+    assert_eq!(loss, reference.train_step(&s0.x, s0.label, ACTIVE, 0.125));
+    assert_eq!(server.live_replicas(), 1);
+
+    // The survivor keeps serving the post-update weights.
+    for s in &data.samples {
+        match client.predict(&s.x, ACTIVE) {
+            Served::Ok { pred, .. } => assert_eq!(pred, reference.predict(&s.x, ACTIVE)),
+            other => panic!("post-shrink request not answered: {other:?}"),
+        }
+    }
+
+    let (survivors, stats) = server.shutdown_all();
+    assert_eq!(survivors.len(), 2, "the retired replica still returns its learner");
+    assert_eq!(stats.replicas_retired, 1);
+    assert_eq!(stats.replicas_spawned, 0);
+    assert_eq!(stats.autoscale_events, vec![(stats.autoscale_events[0].0, 2, 1)]);
+}
+
+// ---- diff re-broadcast: same bits as full snapshots, fewer bytes ----
+
+/// Run one serve-while-learning workload twice — once with diff
+/// re-broadcast, once forced to full snapshots. Stream losses and the
+/// final pools must agree bit-exactly, and at the deepest latent cut
+/// (dense head only) the diff must ship strictly fewer bytes per
+/// re-sync than a full snapshot.
+#[test]
+fn diff_resync_matches_full_resync_bit_exactly_and_ships_fewer_bytes() {
+    let data = tiny_data();
+    let full_bytes = warmed_qnn(&data).weights_bytes().expect("qnn reports weight bytes");
+    let cut = warmed_qnn(&data).max_latent_cut().expect("qnn supports latent cuts");
+
+    let run = |diff_resync: bool| {
+        let mut cfg = pool_cfg(2);
+        cfg.diff_resync = diff_resync;
+        let server = Server::start_with_clock(warmed_qnn(&data), cfg, MockClock::shared());
+        let client = server.client();
+        let mut losses = Vec::new();
+        for s in &data.samples {
+            assert!(matches!(client.predict(&s.x, ACTIVE), Served::Ok { .. }));
+            let loss =
+                client.train_at_cut(&s.x, s.label, ACTIVE, 0.125, cut).expect("server open");
+            losses.push(loss);
+        }
+        let (pool, stats) = server.shutdown_all();
+        (pool, stats, losses)
+    };
+
+    let (mut diff_pool, diff_stats, diff_losses) = run(true);
+    let (mut full_pool, full_stats, full_losses) = run(false);
+
+    assert_eq!(diff_losses, full_losses, "re-sync mechanism changed the training stream");
+    assert_eq!(full_stats.resyncs_diff, 0);
+    assert_eq!(full_stats.resync_diff_bytes, 0);
+    assert!(diff_stats.resyncs_diff > 0, "diff mode never shipped a diff");
+    assert!(diff_stats.resync_diff_bytes > 0);
+    // Dense-head-only updates: every diff is one tensor, strictly
+    // smaller than the full parameter set it replaces.
+    assert!(
+        diff_stats.resync_diff_bytes < diff_stats.resyncs_diff * full_bytes,
+        "diffs shipped {} bytes over {} re-syncs, full snapshot is {full_bytes}",
+        diff_stats.resync_diff_bytes,
+        diff_stats.resyncs_diff
+    );
+
+    // Both pools (every live replica of each) are bit-identical, shown
+    // behaviorally on the exact datapath over the full probe set.
+    assert_eq!(diff_pool.len(), 2);
+    assert_eq!(full_pool.len(), 2);
+    for s in &data.samples {
+        let want = diff_pool[0].predict(&s.x, ACTIVE);
+        for b in diff_pool.iter_mut().skip(1).chain(full_pool.iter_mut()) {
+            assert_eq!(b.predict(&s.x, ACTIVE), want, "a replica desynced");
+        }
+    }
+}

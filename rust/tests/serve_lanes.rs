@@ -10,7 +10,7 @@ use std::sync::mpsc::{channel, Receiver};
 use std::time::Duration;
 use tinycl::serve::{
     flush_decision, Admission, Batch, BatchSnapshot, Clock, FlushDecision, Lane, MockClock,
-    PredictJob, PredictResponse, ServeQueue, Served, Server, ServerConfig, TrainJob,
+    PredictJob, PredictOutcome, ServeQueue, Served, Server, ServerConfig, TrainJob,
     STARVATION_BUDGET,
 };
 use tinycl::tensor::{Shape, Tensor};
@@ -19,14 +19,14 @@ fn img(v: f32) -> Tensor<f32> {
     Tensor::from_vec(Shape::d3(1, 2, 2), vec![v; 4])
 }
 
-fn job(v: f32, lane: Lane) -> (PredictJob, Receiver<PredictResponse>) {
+fn job(v: f32, lane: Lane) -> (PredictJob, Receiver<PredictOutcome>) {
     let (tx, rx) = channel();
-    (PredictJob { x: img(v), active_classes: 2, lane, resp: tx }, rx)
+    (PredictJob { x: img(v), active_classes: 2, lane, deadline_us: None, resp: tx }, rx)
 }
 
 fn train() -> TrainJob {
     let (tx, _) = channel();
-    TrainJob { x: img(0.0), label: 0, active_classes: 2, lr: 0.1, resp: tx }
+    TrainJob { x: img(0.0), label: 0, active_classes: 2, lr: 0.1, cut: 0, resp: tx }
 }
 
 /// Pop one predict batch with no hold-open and report (lane, ids) —

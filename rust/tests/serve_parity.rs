@@ -20,7 +20,7 @@ use tinycl::cl::Learner;
 use tinycl::coordinator::{Backend, BackendKind};
 use tinycl::data::{Dataset, SyntheticCifar};
 use tinycl::nn::{Engine, Model, ModelConfig};
-use tinycl::serve::{run_closed_loop, LoadConfig, Served, Server, ServerConfig};
+use tinycl::serve::{run_closed_loop, LoadConfig, RetryPolicy, Served, Server, ServerConfig};
 use tinycl::sim::SimConfig;
 use std::time::Duration;
 
@@ -66,6 +66,7 @@ fn replica_cfg(max_batch: usize, replicas: usize) -> ServerConfig {
         max_wait: Duration::from_micros(200),
         queue_depth: 64,
         replicas,
+        ..ServerConfig::default()
     }
 }
 
@@ -82,7 +83,12 @@ fn qnn_server_matches_per_sample_predict_across_grid() {
     for clients in [1usize, 4, 8] {
         for max_batch in [1usize, 8, 64] {
             let server = Server::start(warmed_qnn(&data), serve_cfg(max_batch));
-            let load = LoadConfig { clients, requests: 48, active_classes: ACTIVE };
+            let load = LoadConfig {
+                clients,
+                requests: 48,
+                active_classes: ACTIVE,
+                retry: RetryPolicy::default(),
+            };
             let result = run_closed_loop(&server.client(), &data.samples, &load);
             let queue = server.queue_stats();
             let (_backend, stats) = server.shutdown();
@@ -114,7 +120,12 @@ fn f32_fast_server_within_logit_tolerance_across_grid() {
     for clients in [1usize, 4, 8] {
         for max_batch in [1usize, 8, 64] {
             let server = Server::start(seed_model.clone(), serve_cfg(max_batch));
-            let load = LoadConfig { clients, requests: 48, active_classes: ACTIVE };
+            let load = LoadConfig {
+                clients,
+                requests: 48,
+                active_classes: ACTIVE,
+                retry: RetryPolicy::default(),
+            };
             let result = run_closed_loop(&server.client(), &data.samples, &load);
             let (_m, _stats) = server.shutdown();
             assert_eq!(result.predictions.len(), 48);
@@ -149,9 +160,15 @@ fn overloaded_server_sheds_gracefully_and_accounts() {
             max_wait: Duration::from_micros(100),
             queue_depth: 2,
             replicas: 1,
+            ..ServerConfig::default()
         },
     );
-    let load = LoadConfig { clients: 8, requests: 120, active_classes: ACTIVE };
+    let load = LoadConfig {
+        clients: 8,
+        requests: 120,
+        active_classes: ACTIVE,
+        retry: RetryPolicy::default(),
+    };
     let result = run_closed_loop(&server.client(), &data.samples, &load);
     let queue = server.queue_stats();
     let (_b, stats) = server.shutdown();
@@ -221,7 +238,12 @@ fn qnn_replica_grid_matches_per_sample_predict() {
     for replicas in [1usize, 2, 4] {
         for max_batch in [1usize, 64] {
             let server = Server::start(warmed_qnn(&data), replica_cfg(max_batch, replicas));
-            let load = LoadConfig { clients: 8, requests: 48, active_classes: ACTIVE };
+            let load = LoadConfig {
+                clients: 8,
+                requests: 48,
+                active_classes: ACTIVE,
+                retry: RetryPolicy::default(),
+            };
             let result = run_closed_loop(&server.client(), &data.samples, &load);
             let queue = server.queue_stats();
             let (backends, stats) = server.shutdown_all();
@@ -255,7 +277,12 @@ fn f32_fast_replica_grid_within_logit_tolerance() {
     for replicas in [1usize, 2, 4] {
         for max_batch in [1usize, 64] {
             let server = Server::start(seed_model.clone(), replica_cfg(max_batch, replicas));
-            let load = LoadConfig { clients: 8, requests: 48, active_classes: ACTIVE };
+            let load = LoadConfig {
+                clients: 8,
+                requests: 48,
+                active_classes: ACTIVE,
+                retry: RetryPolicy::default(),
+            };
             let result = run_closed_loop(&server.client(), &data.samples, &load);
             let (_models, stats) = server.shutdown_all();
             assert_eq!(result.predictions.len(), 48);
