@@ -1,0 +1,166 @@
+"""Differential oracle for the obs log2 latency histogram
+(rust/src/obs/hist.rs). Pure-python, no third-party deps: runnable
+standalone (``python3 python/tests/test_histogram.py``) or under pytest.
+
+The two suites pin the same convention with shared constants:
+
+* bucketing: ``bucket_index(v) = 0`` if ``v == 0`` else
+  ``min(floor(log2(v)) + 1, NBUCKETS - 1)`` — bucket 0 holds exactly 0,
+  bucket i >= 1 holds ``[2^(i-1), 2^i)``, the last bucket overflows.
+* the stream ``(i*i) % 65521`` for ``i in range(1000)``, quantiles
+  0.5 / 0.95 / 0.99 — mirrored by the Rust unit test
+  ``mean_is_exact_and_quantile_within_a_factor_of_two``.
+* error bounds: means are **exact** (the sum/count side-channels are not
+  bucket-derived); a quantile estimate lands inside the true value's
+  bucket, hence within a factor of 2 of the truth.
+* merging is lossless with respect to the representation: merging two
+  snapshots equals one snapshot of the union stream, so merged quantiles
+  equal union quantiles — the reason ``LatencySummary`` merges
+  histograms and never averages percentiles.
+"""
+
+import math
+
+NBUCKETS = 40
+
+# The shared fixed stream, and the quantiles both suites probe.
+STREAM = [(i * i) % 65_521 for i in range(1000)]
+QUANTILES = (0.5, 0.95, 0.99)
+
+
+def bucket_index(v):
+    """Mirror of rust ``obs::hist::bucket_index`` (for v >= 0).
+
+    ``int.bit_length`` is ``floor(log2(v)) + 1``, the same value the
+    Rust side computes as ``64 - leading_zeros``.
+    """
+    if v == 0:
+        return 0
+    return min(v.bit_length(), NBUCKETS - 1)
+
+
+def bucket_lo(i):
+    return 0 if i == 0 else 1 << (i - 1)
+
+
+def bucket_hi(i):
+    return 1 << i
+
+
+class Snapshot:
+    """Mirror of rust ``obs::hist::HistSnapshot``."""
+
+    def __init__(self):
+        self.buckets = [0] * NBUCKETS
+        self.count = 0
+        self.sum = 0
+        self.max = 0
+
+    @classmethod
+    def of(cls, values):
+        s = cls()
+        for v in values:
+            s.buckets[bucket_index(v)] += 1
+            s.count += 1
+            s.sum += v
+            s.max = max(s.max, v)
+        return s
+
+    def merge(self, other):
+        for i, b in enumerate(other.buckets):
+            self.buckets[i] += b
+        self.count += other.count
+        self.sum += other.sum
+        self.max = max(self.max, other.max)
+
+    def mean(self):
+        return 0.0 if self.count == 0 else self.sum / self.count
+
+    def quantile(self, q):
+        """Mirror of ``HistSnapshot::quantile_us``: nearest-rank bucket
+        with linear in-bucket interpolation by rank position, clamped to
+        the exact max."""
+        if self.count == 0:
+            return 0.0
+        rank = min(max(math.ceil(q * self.count), 1), self.count)
+        seen = 0
+        for i in range(NBUCKETS):
+            n = self.buckets[i]
+            if n == 0:
+                continue
+            if seen + n >= rank:
+                lo = float(bucket_lo(i))
+                hi = min(float(bucket_hi(i)), float(max(self.max, 1)))
+                frac = (rank - seen) / n
+                return min(lo + (hi - lo) * frac, float(self.max))
+            seen += n
+        return float(self.max)
+
+
+def test_bucket_boundaries_match_the_rust_constants():
+    # The exact pins of rust `bucket_index_boundaries`.
+    assert bucket_index(0) == 0
+    assert bucket_index(1) == 1
+    assert bucket_index(2) == 2
+    assert bucket_index(3) == 2
+    assert bucket_index(4) == 3
+    assert bucket_index(1023) == 10
+    assert bucket_index(1024) == 11
+    assert bucket_index(2**64 - 1) == NBUCKETS - 1
+    for i in range(1, NBUCKETS - 1):
+        assert bucket_index(bucket_lo(i)) == i
+        assert bucket_index(bucket_hi(i) - 1) == i
+
+
+def test_mean_is_exact_and_quantiles_are_bucket_bounded():
+    snap = Snapshot.of(STREAM)
+    assert snap.count == 1000
+    assert snap.sum == sum(STREAM)
+    assert abs(snap.mean() - sum(STREAM) / 1000.0) < 1e-9
+
+    truth_sorted = sorted(STREAM)
+    for q in QUANTILES:
+        rank = min(max(math.ceil(q * 1000), 1), 1000)
+        truth = float(truth_sorted[rank - 1])
+        est = snap.quantile(q)
+        # Factor-of-2 relative bound …
+        assert est / max(truth, 1.0) <= 2.0, f"q={q}: {est} vs {truth}"
+        assert truth / max(est, 1.0) <= 2.0, f"q={q}: {est} vs {truth}"
+        # … via the sharper claim: the estimate never leaves the true
+        # value's bucket.
+        bi = bucket_index(int(truth))
+        assert bucket_lo(bi) <= est <= bucket_hi(bi), f"q={q}: {est} left bucket {bi}"
+    assert snap.quantile(1.0) == float(snap.max)
+
+
+def test_merge_is_lossless_so_percentiles_are_never_averaged():
+    a, b = STREAM[:500], STREAM[500:]
+    merged = Snapshot.of(a)
+    merged.merge(Snapshot.of(b))
+    union = Snapshot.of(STREAM)
+    assert merged.buckets == union.buckets
+    assert (merged.count, merged.sum, merged.max) == (union.count, union.sum, union.max)
+    # Merge-then-quantile equals quantile-of-the-union — bit-for-bit,
+    # which averaging two per-shard p99s would not be.
+    for q in QUANTILES:
+        assert merged.quantile(q) == union.quantile(q)
+    assert merged.mean() == union.mean()
+
+
+def test_empty_and_single_value_edges():
+    empty = Snapshot.of([])
+    assert empty.mean() == 0.0
+    assert empty.quantile(0.99) == 0.0
+    one = Snapshot.of([42])
+    for q in QUANTILES:
+        est = one.quantile(q)
+        assert 32.0 <= est <= 42.0  # inside [2^5, 2^6), clamped to max
+    assert one.quantile(1.0) == 42.0
+
+
+if __name__ == "__main__":
+    test_bucket_boundaries_match_the_rust_constants()
+    test_mean_is_exact_and_quantiles_are_bucket_bounded()
+    test_merge_is_lossless_so_percentiles_are_never_averaged()
+    test_empty_and_single_value_edges()
+    print("log2-histogram differential: OK")

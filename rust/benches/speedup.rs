@@ -51,6 +51,7 @@ use tinycl::qnn::{QModel, QnnEngine};
 use tinycl::sim::SimConfig;
 use tinycl::tensor::{quantize_tensor, Tensor};
 use tinycl::util::cli::Args;
+use tinycl::util::json::{Json, Obj};
 use tinycl::util::rng::Pcg32;
 
 fn main() {
@@ -365,36 +366,38 @@ fn main() {
     println!("\npaper: 1.76 s vs 103 s on a P100 ⇒ 58× (their testbed; see EXPERIMENTS.md E4)");
     println!("(simulator wall time for reference: {sim_wall:.2} s for {steps} steps)");
 
-    // --- Machine-readable result (perf trajectory across PRs) ---
-    let json = format!(
-        "{{\n  \"bench\": \"speedup\",\n  \"mode\": \"{mode}\",\n  \
-         \"geometry\": {{\"image_size\": {}, \"in_channels\": {}, \
-         \"conv_channels\": {}, \"classes\": {}}},\n  \
-         \"steps\": {steps},\n  \"batch\": {batch},\n  \"threads\": {threads},\n  \
-         \"naive_ns_per_step\": {:.0},\n  \"fast_ns_per_step\": {:.0},\n  \
-         \"batched_ns_per_step\": {:.0},\n  \
-         \"qnn_naive_ns_per_step\": {:.0},\n  \"qnn_fast_ns_per_step\": {:.0},\n  \
-         \"gemm_serve_ref_ns\": {gemm_serve_ref_ns:.0},\n  \
-         \"gemm_serve_tiled_ns\": {gemm_serve_tiled_ns:.0},\n  \
-         \"gemm_serve_speedup\": {gemm_serve_speedup:.2},\n  \
-         \"gemm_dense_skipa_ns\": {gemm_dense_skipa_ns:.0},\n  \
-         \"gemm_dense_tiled_ns\": {gemm_dense_tiled_ns:.0},\n  \
-         \"gemm_conv_skipa_ns\": {gemm_conv_skipa_ns:.0},\n  \
-         \"gemm_conv_tiled_ns\": {gemm_conv_tiled_ns:.0},\n  \
-         \"fast_speedup_over_naive\": {host_speedup:.2},\n  \
-         \"batched_speedup_over_fast\": {batched_speedup:.2},\n  \
-         \"qnn_fast_speedup_over_naive\": {qnn_speedup:.2},\n  \
-         \"tinycl_epoch_secs\": {tinycl_epoch:.4},\n  \"sw_epoch_secs\": {sw_epoch:.4}\n}}\n",
-        cfg.image_size,
-        cfg.in_channels,
-        cfg.conv_channels,
-        cfg.num_classes,
-        naive_step * 1e9,
-        fast_step * 1e9,
-        batched_step * 1e9,
-        qnn_naive_step * 1e9,
-        qnn_fast_step * 1e9,
-    );
+    // --- Machine-readable result (perf trajectory across PRs; emitted
+    // through the shared `util::json` writer) ---
+    let mut geometry = Obj::new();
+    geometry.put("image_size", cfg.image_size);
+    geometry.put("in_channels", cfg.in_channels);
+    geometry.put("conv_channels", cfg.conv_channels);
+    geometry.put("classes", cfg.num_classes);
+    let mut doc = Obj::new();
+    doc.put("bench", "speedup");
+    doc.put("mode", mode);
+    doc.put("geometry", geometry.build());
+    doc.put("steps", steps);
+    doc.put("batch", batch);
+    doc.put("threads", threads);
+    doc.put("naive_ns_per_step", Json::fixed(naive_step * 1e9, 0));
+    doc.put("fast_ns_per_step", Json::fixed(fast_step * 1e9, 0));
+    doc.put("batched_ns_per_step", Json::fixed(batched_step * 1e9, 0));
+    doc.put("qnn_naive_ns_per_step", Json::fixed(qnn_naive_step * 1e9, 0));
+    doc.put("qnn_fast_ns_per_step", Json::fixed(qnn_fast_step * 1e9, 0));
+    doc.put("gemm_serve_ref_ns", Json::fixed(gemm_serve_ref_ns, 0));
+    doc.put("gemm_serve_tiled_ns", Json::fixed(gemm_serve_tiled_ns, 0));
+    doc.put("gemm_serve_speedup", Json::fixed(gemm_serve_speedup, 2));
+    doc.put("gemm_dense_skipa_ns", Json::fixed(gemm_dense_skipa_ns, 0));
+    doc.put("gemm_dense_tiled_ns", Json::fixed(gemm_dense_tiled_ns, 0));
+    doc.put("gemm_conv_skipa_ns", Json::fixed(gemm_conv_skipa_ns, 0));
+    doc.put("gemm_conv_tiled_ns", Json::fixed(gemm_conv_tiled_ns, 0));
+    doc.put("fast_speedup_over_naive", Json::fixed(host_speedup, 2));
+    doc.put("batched_speedup_over_fast", Json::fixed(batched_speedup, 2));
+    doc.put("qnn_fast_speedup_over_naive", Json::fixed(qnn_speedup, 2));
+    doc.put("tinycl_epoch_secs", Json::fixed(tinycl_epoch, 4));
+    doc.put("sw_epoch_secs", Json::fixed(sw_epoch, 4));
+    let json = doc.build().to_pretty(2);
     match std::fs::write("BENCH_speedup.json", &json) {
         Ok(()) => println!("\nwrote BENCH_speedup.json"),
         Err(e) => eprintln!("\nWARN: could not write BENCH_speedup.json: {e}"),

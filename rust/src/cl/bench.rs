@@ -25,6 +25,7 @@ use crate::nn::{ModelConfig, MAX_CUT};
 use crate::qnn::QnnEngine;
 use crate::sim::SimConfig;
 use crate::util::cli::Args;
+use crate::util::json::{Json, Obj};
 use anyhow::Result;
 use std::time::Instant;
 
@@ -45,28 +46,21 @@ struct RunRecord {
 }
 
 impl RunRecord {
-    fn to_json(&self, indent: &str) -> String {
-        let cut = match self.cut {
-            Some(c) => c.to_string(),
-            None => "null".to_string(),
-        };
-        format!(
-            "{indent}{{\"policy\": \"{}\", \"cut\": {cut}, \"budget_bytes\": {}, \
-             \"slot_bytes\": {}, \"capacity_slots\": {}, \"stored_slots\": {}, \
-             \"final_avg_acc\": {:.4}, \"forgetting\": {:.4}, \"train_secs\": {:.4}, \
-             \"train_steps\": {}, \"replay_read_bursts\": {}, \"replay_write_bursts\": {}}}",
-            self.policy,
-            self.budget_bytes,
-            self.slot_bytes,
-            self.capacity_slots,
-            self.stored_slots,
-            self.final_avg_acc,
-            self.forgetting,
-            self.train_secs,
-            self.train_steps,
-            self.replay_read_bursts,
-            self.replay_write_bursts,
-        )
+    fn to_json_value(&self) -> Json {
+        let mut o = Obj::new();
+        o.put("policy", self.policy);
+        o.put("cut", self.cut.map_or(Json::Null, Json::from));
+        o.put("budget_bytes", self.budget_bytes);
+        o.put("slot_bytes", self.slot_bytes);
+        o.put("capacity_slots", self.capacity_slots);
+        o.put("stored_slots", self.stored_slots);
+        o.put("final_avg_acc", Json::fixed(self.final_avg_acc, 4));
+        o.put("forgetting", Json::fixed(self.forgetting, 4));
+        o.put("train_secs", Json::fixed(self.train_secs, 4));
+        o.put("train_steps", self.train_steps);
+        o.put("replay_read_bursts", self.replay_read_bursts);
+        o.put("replay_write_bursts", self.replay_write_bursts);
+        o.build()
     }
 }
 
@@ -336,35 +330,38 @@ pub fn run(args: &Args) -> Result<()> {
         println!("qnn cut-0 runs match gdumb exactly (accuracy and step counts)");
     }
 
-    let run_objs: Vec<String> = runs.iter().map(|r| r.to_json("    ")).collect();
-    let speedups = interior
-        .iter()
-        .map(|(c, s)| format!("\"cut{c}\": {s:.2}"))
-        .collect::<Vec<_>>()
-        .join(", ");
-    let json = format!(
-        "{{\n  \"bench\": \"replay\",\n  \"mode\": \"{mode}\",\n  \
-         \"geometry\": {{\"image_size\": {}, \"in_channels\": {}, \
-         \"conv_channels\": {}, \"classes\": {}}},\n  \
-         \"backend\": \"{}\",\n  \"tasks\": {},\n  \"epochs\": {},\n  \
-         \"batch\": {},\n  \"threads\": {},\n  \"sample_bytes\": {},\n  \
-         \"budgets_bytes\": {budgets:?},\n  \
-         \"interior_speedup\": {{{speedups}}},\n  \"runs\": [\n{}\n  ]\n}}\n",
-        setup.model.image_size,
-        setup.model.in_channels,
-        setup.model.conv_channels,
-        setup.model.num_classes,
-        setup.backend.name(),
-        num_tasks,
-        setup.run_cfg.epochs,
-        setup.run_cfg.batch,
-        setup.threads,
-        setup.model.sample_bytes(),
-        run_objs.join(",\n"),
-    );
+    let mut geometry = Obj::new();
+    geometry.put("image_size", setup.model.image_size);
+    geometry.put("in_channels", setup.model.in_channels);
+    geometry.put("conv_channels", setup.model.conv_channels);
+    geometry.put("classes", setup.model.num_classes);
+    let mut speedups_obj = Obj::new();
+    for &(c, s) in &interior {
+        speedups_obj.put(&format!("cut{c}"), Json::fixed(s, 2));
+    }
+    let mut doc = Obj::new();
+    doc.put("bench", "replay");
+    doc.put("mode", mode);
+    doc.put("geometry", geometry.build());
+    doc.put("backend", setup.backend.name());
+    doc.put("tasks", num_tasks);
+    doc.put("epochs", setup.run_cfg.epochs);
+    doc.put("batch", setup.run_cfg.batch);
+    doc.put("threads", setup.threads);
+    doc.put("sample_bytes", setup.model.sample_bytes());
+    doc.put("budgets_bytes", Json::Arr(budgets.iter().map(|&b| Json::from(b)).collect()));
+    doc.put("interior_speedup", speedups_obj.build());
+    doc.put("runs", Json::Arr(runs.iter().map(RunRecord::to_json_value).collect()));
+    let json = doc.build().to_pretty(2);
     match std::fs::write("BENCH_replay.json", &json) {
         Ok(()) => println!("wrote BENCH_replay.json"),
         Err(e) => eprintln!("WARN: could not write BENCH_replay.json: {e}"),
+    }
+    if let Some(path) = args.get("metrics-json") {
+        match std::fs::write(path, crate::obs::export::json_snapshot()) {
+            Ok(()) => println!("wrote metrics snapshot to {path}"),
+            Err(e) => eprintln!("WARN: could not write {path}: {e}"),
+        }
     }
 
     // Ratio gate only at the paper geometry (repo convention: smoke

@@ -398,13 +398,25 @@ pub fn run_stream(
 ) -> ClReport {
     let mut matrix = AccuracyMatrix::new(stream.num_tasks());
     let mut train_steps = 0;
+    // Per-task phase timing: CL work alternates a train phase
+    // (observe_task: epochs + replay) with an eval phase (the accuracy
+    // row over all tasks seen so far). Wall-clock, not MockClock — CL
+    // runs are offline benches, not served traffic.
+    let train_us = crate::obs::histogram("cl_train_phase_us");
+    let eval_us = crate::obs::histogram("cl_eval_phase_us");
+    let tasks_total = crate::obs::counter("cl_tasks_total");
     for (t, task) in stream.tasks.iter().enumerate() {
         let active = stream.active_classes_after(t);
+        let t0 = std::time::Instant::now();
         train_steps += policy.observe_task(learner, task, train, active, cfg);
+        crate::obs::record_us(train_us, t0.elapsed().as_micros() as u64);
+        let t1 = std::time::Instant::now();
         let row: Vec<f64> = stream.tasks[..=t]
             .iter()
             .map(|seen| evaluate(learner, seen, test, active))
             .collect();
+        crate::obs::record_us(eval_us, t1.elapsed().as_micros() as u64);
+        tasks_total.inc();
         matrix.push_row(row);
     }
     ClReport {

@@ -241,6 +241,7 @@ pub fn gemm_nn_packed_mt(
     if m == 0 || n == 0 {
         return;
     }
+    crate::obs::count_gemm((m * k * n) as u64);
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {
@@ -303,6 +304,7 @@ pub fn gemm_nn_skipa_mt(
     if m == 0 || n == 0 {
         return;
     }
+    crate::obs::count_gemm((m * k * n) as u64);
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {
@@ -464,6 +466,7 @@ pub fn gemm_nn_fused_packed_mt(
     if m == 0 || n == 0 {
         return;
     }
+    crate::obs::count_gemm((m * k * n) as u64);
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(out.as_mut_ptr());
     if workers <= 1 {
@@ -559,6 +562,7 @@ pub fn gemm_tn_mt(
     if k == 0 || n == 0 {
         return;
     }
+    crate::obs::count_gemm((m * k * n) as u64);
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {
@@ -681,6 +685,7 @@ pub fn gemm_nt_mt(
     if m == 0 || n == 0 {
         return;
     }
+    crate::obs::count_gemm((m * kd * n) as u64);
     let workers = plan_workers(threads, m * kd.max(1) * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {

@@ -18,6 +18,7 @@ pub mod data;
 pub mod fixed;
 pub mod hw;
 pub mod nn;
+pub mod obs;
 pub mod qnn;
 /// PJRT runtime for the AOT software baseline — needs the off-by-default
 /// `xla` cargo feature (default builds run on machines with no PJRT

@@ -14,6 +14,9 @@
 //! * `replay-bench` — latent-replay frontier: cut × byte-budget sweep of
 //!                 accuracy and train time vs gdumb/er at equal byte
 //!                 budgets (emits BENCH_replay.json)
+//! * `obs-report` — run a small end-to-end workload and render the
+//!                 process-wide metric registry (Prometheus text or
+//!                 JSON snapshot)
 //! * `sweep`     — design-space sweep over lanes × taps (ablation A2)
 
 use anyhow::{bail, Result};
@@ -45,6 +48,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "speedup" => cmd_speedup(args),
         "serve-bench" => tinycl::serve::bench::run(args),
         "replay-bench" => tinycl::cl::bench::run(args),
+        "obs-report" => cmd_obs_report(args),
         "sweep" => cmd_sweep(args),
         "help" | "--help" => {
             print!("{HELP}");
@@ -122,6 +126,14 @@ SUBCOMMANDS
              asserts an interior cut trains ≥ 2× faster than gdumb at
              the paper geometry's largest budget; writes
              BENCH_replay.json
+  obs-report exercise a small end-to-end workload (a few train steps,
+             then a short served burst) and print the process-wide
+             metric registry
+             --format prom|json (default prom: Prometheus text
+             exposition; json: the same snapshot as --metrics-json)
+             --steps N (train steps, default 8)
+             --requests N (served predicts, default 32)
+             --backend ... (default f32-fast; same model flags as `infer`)
   sweep      design-space sweep over --lanes-list and --taps-list
   help       this text
 ";
@@ -332,6 +344,50 @@ fn cmd_speedup(args: &Args) -> Result<()> {
     println!("speedup vs this host's fastest software baseline: {:.1}×",
         xla_secs.unwrap_or(f64::INFINITY).min(fast_secs).min(batched_secs) / sim_secs);
     println!("paper: TinyCL {paper_tinycl} s vs P100 {paper_gpu} s ⇒ 58× (their testbed)");
+    Ok(())
+}
+
+/// `obs-report`: run a small representative workload — a few train
+/// steps to light up the engine counters, then a short served burst so
+/// the span histograms and flush books have entries — and render the
+/// process-wide metric registry. The CI smoke uses this as the
+/// exporter's end-to-end check; `--format json` prints the same
+/// snapshot document `--metrics-json` writes on the benches.
+fn cmd_obs_report(args: &Args) -> Result<()> {
+    let mut config = ExperimentConfig::from_args(args)?;
+    if args.get("backend").is_none() {
+        // The GEMM engine counters are the report's most interesting
+        // rows — default to the im2col+GEMM core, not the naive loops.
+        config.backend = BackendKind::F32Fast;
+    }
+    let mut backend = Experiment::new(config.clone()).backend()?;
+    let gen = SyntheticCifar {
+        image_size: config.model.image_size,
+        channels: config.model.in_channels,
+        num_classes: config.model.num_classes,
+        noise: config.noise,
+        seed: config.seed,
+    };
+    let data = gen.generate(8, 0);
+
+    use tinycl::cl::Learner;
+    for s in data.samples.iter().take(args.usize_or("steps", 8)) {
+        backend.train_step(&s.x, s.label, config.model.num_classes, config.lr);
+    }
+
+    let server =
+        tinycl::serve::Server::start(backend, tinycl::serve::ServerConfig::default());
+    let client = server.client();
+    for s in data.samples.iter().cycle().take(args.usize_or("requests", 32)) {
+        let _ = client.predict(&s.x, config.model.num_classes);
+    }
+    let _ = server.shutdown();
+
+    match args.str_or("format", "prom").as_str() {
+        "prom" => print!("{}", tinycl::obs::export::prometheus()),
+        "json" => print!("{}", tinycl::obs::export::json_snapshot()),
+        other => bail!("unknown --format '{other}' (expected prom|json)"),
+    }
     Ok(())
 }
 

@@ -163,6 +163,7 @@ pub fn gemm_nn_packed_mt(pa: &PackedA, n: usize, b: &[f32], c: &mut [f32], threa
     if m == 0 || n == 0 {
         return;
     }
+    crate::obs::count_gemm((m * k * n) as u64);
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {
@@ -289,6 +290,7 @@ pub fn gemm_nn_skipa_mt(
     if m == 0 || n == 0 {
         return;
     }
+    crate::obs::count_gemm((m * k * n) as u64);
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {
@@ -436,6 +438,7 @@ pub fn gemm_nn_fused_packed_mt(
     if m == 0 || n == 0 {
         return;
     }
+    crate::obs::count_gemm((m * k * n) as u64);
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(out.as_mut_ptr());
     if workers <= 1 {
@@ -493,6 +496,7 @@ pub fn gemm_tn_mt(
     if k == 0 || n == 0 {
         return;
     }
+    crate::obs::count_gemm((m * k * n) as u64);
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {
@@ -617,6 +621,7 @@ pub fn gemm_tn_skipa_mt(
     if k == 0 || n == 0 {
         return;
     }
+    crate::obs::count_gemm((m * k * n) as u64);
     let workers = plan_workers(threads, m * k * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {
@@ -680,6 +685,7 @@ pub fn gemm_nt_mt(
     if m == 0 || n == 0 {
         return;
     }
+    crate::obs::count_gemm((m * kd * n) as u64);
     let workers = plan_workers(threads, m * kd.max(1) * n, n);
     let ptr = SendPtr(c.as_mut_ptr());
     if workers <= 1 {

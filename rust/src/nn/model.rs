@@ -204,13 +204,54 @@ struct Scratch {
 
 impl Scratch {
     fn take(&mut self) -> Vec<f32> {
-        self.bufs.pop().unwrap_or_default()
+        match self.bufs.pop() {
+            Some(buf) => {
+                scratch_obs().0.inc();
+                buf
+            }
+            None => {
+                scratch_obs().1.inc();
+                Vec::new()
+            }
+        }
     }
 
     fn put(&mut self, mut buf: Vec<f32>) {
         buf.clear();
         self.bufs.push(buf);
     }
+}
+
+/// `(reuse, alloc)` counters for the GEMM scratch pool — a reuse rate
+/// near 1 after warm-up is the pool doing its job.
+pub(crate) fn scratch_obs() -> (&'static crate::obs::Counter, &'static crate::obs::Counter) {
+    static CELLS: std::sync::OnceLock<(
+        &'static crate::obs::Counter,
+        &'static crate::obs::Counter,
+    )> = std::sync::OnceLock::new();
+    *CELLS.get_or_init(|| {
+        (
+            crate::obs::counter("scratch_total{result=\"reuse\"}"),
+            crate::obs::counter("scratch_total{result=\"alloc\"}"),
+        )
+    })
+}
+
+/// `(hit, miss)` counters for the snapshot-packed conv-weight cache: a
+/// serving replica should hit on every forward after `pack_weights`; a
+/// miss means the batch paid an O(m·k) repack because a weight update
+/// invalidated the snapshot.
+pub(crate) fn pack_obs() -> (&'static crate::obs::Counter, &'static crate::obs::Counter) {
+    static CELLS: std::sync::OnceLock<(
+        &'static crate::obs::Counter,
+        &'static crate::obs::Counter,
+    )> = std::sync::OnceLock::new();
+    *CELLS.get_or_init(|| {
+        (
+            crate::obs::counter("pack_cache_total{result=\"hit\"}"),
+            crate::obs::counter("pack_cache_total{result=\"miss\"}"),
+        )
+    })
 }
 
 // Clone: the serving tests snapshot a warmed model (one copy moves onto
@@ -535,9 +576,11 @@ impl Model {
                     p.is_fresh(&self.params),
                     "stale packed weights: a weight update failed to invalidate the pack"
                 );
+                pack_obs().0.inc();
                 p
             }
             None => {
+                pack_obs().1.inc();
                 packed_store = PackedWeights::pack(&self.params);
                 &packed_store
             }

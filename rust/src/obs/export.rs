@@ -1,0 +1,177 @@
+//! Metric exporters: Prometheus text exposition and a JSON snapshot.
+//!
+//! Both render [`registry::snapshot`]. Names may carry a baked-in label
+//! block (`serve_stage_us{stage="compute",lane="interactive"}`); the
+//! Prometheus emitter splits it back out so histogram `le` labels can
+//! be appended inside the braces, while the JSON emitter keeps the full
+//! string as the object key (it is already unambiguous there).
+//!
+//! Histograms render the Prometheus way: cumulative `_bucket{le="..."}`
+//! series over the log2 upper bounds (only non-empty buckets, plus the
+//! mandatory `+Inf`), `_sum`, `_count`, and a non-standard `_max` gauge
+//! (exact, from the histogram side-channel). The JSON form carries the
+//! derived summary (count/sum/mean/p50/p95/p99/max) plus the sparse
+//! buckets, which is what the bench reports embed.
+
+use crate::util::json::{Json, Obj};
+
+use super::hist::{bucket_hi, HistSnapshot};
+use super::registry::{self, MetricsSnapshot};
+
+/// Split `name{labels}` into `(name, Some("labels"))` or `(name, None)`.
+fn split_labels(name: &str) -> (&str, Option<&str>) {
+    match (name.find('{'), name.rfind('}')) {
+        (Some(open), Some(close)) if close > open => {
+            (&name[..open], Some(&name[open + 1..close]))
+        }
+        _ => (name, None),
+    }
+}
+
+fn prom_series(base: &str, labels: Option<&str>, extra: Option<&str>) -> String {
+    match (labels, extra) {
+        (None, None) => base.to_string(),
+        (Some(l), None) => format!("{base}{{{l}}}"),
+        (None, Some(e)) => format!("{base}{{{e}}}"),
+        (Some(l), Some(e)) => format!("{base}{{{l},{e}}}"),
+    }
+}
+
+/// Render the whole registry in Prometheus text exposition format.
+pub fn prometheus() -> String {
+    render_prometheus(&registry::snapshot())
+}
+
+fn render_prometheus(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let (base, labels) = split_labels(name);
+        out.push_str(&format!("# TYPE {base} counter\n"));
+        out.push_str(&format!("{} {v}\n", prom_series(base, labels, None)));
+    }
+    for (name, v) in &snap.gauges {
+        let (base, labels) = split_labels(name);
+        out.push_str(&format!("# TYPE {base} gauge\n"));
+        out.push_str(&format!("{} {v}\n", prom_series(base, labels, None)));
+    }
+    for (name, h) in &snap.hists {
+        let (base, labels) = split_labels(name);
+        out.push_str(&format!("# TYPE {base} histogram\n"));
+        let mut cum = 0u64;
+        for (i, n) in h.buckets.iter().enumerate() {
+            if *n == 0 {
+                continue;
+            }
+            cum += n;
+            let le = format!("le=\"{}\"", bucket_hi(i));
+            out.push_str(&format!("{} {cum}\n", prom_series(&format!("{base}_bucket"), labels, Some(&le))));
+        }
+        out.push_str(&format!(
+            "{} {}\n",
+            prom_series(&format!("{base}_bucket"), labels, Some("le=\"+Inf\"")),
+            h.count
+        ));
+        out.push_str(&format!("{} {}\n", prom_series(&format!("{base}_sum"), labels, None), h.sum));
+        out.push_str(&format!("{} {}\n", prom_series(&format!("{base}_count"), labels, None), h.count));
+        out.push_str(&format!("{} {}\n", prom_series(&format!("{base}_max"), labels, None), h.max));
+    }
+    out
+}
+
+/// One histogram as a JSON object: derived summary + sparse buckets.
+pub fn hist_json(h: &HistSnapshot) -> Json {
+    let mut buckets = Obj::new();
+    for (i, n) in h.buckets.iter().enumerate() {
+        if *n > 0 {
+            buckets.put(&format!("le_{}", bucket_hi(i)), *n);
+        }
+    }
+    let mut o = Obj::new();
+    o.put("count", h.count);
+    o.put("sum_us", h.sum);
+    o.put("mean_us", Json::fixed(h.mean_us(), 1));
+    o.put("p50_us", Json::fixed(h.quantile_us(0.50), 1));
+    o.put("p95_us", Json::fixed(h.quantile_us(0.95), 1));
+    o.put("p99_us", Json::fixed(h.quantile_us(0.99), 1));
+    o.put("max_us", h.max);
+    o.put("buckets", buckets.build());
+    o.build()
+}
+
+/// The whole registry as a JSON value (embed in bench reports) —
+/// `{"counters": {...}, "gauges": {...}, "histograms": {...}}`.
+pub fn json_value() -> Json {
+    let snap = registry::snapshot();
+    let mut counters = Obj::new();
+    for (name, v) in &snap.counters {
+        counters.put(name, *v);
+    }
+    let mut gauges = Obj::new();
+    for (name, v) in &snap.gauges {
+        gauges.put(name, *v);
+    }
+    let mut hists = Obj::new();
+    for (name, h) in &snap.hists {
+        hists.put(name, hist_json(h));
+    }
+    let mut o = Obj::new();
+    o.put("counters", counters.build());
+    o.put("gauges", gauges.build());
+    o.put("histograms", hists.build());
+    o.build()
+}
+
+/// The whole registry as a pretty-printed JSON document
+/// (`--metrics-json PATH`, `tinycl obs-report --format json`).
+pub fn json_snapshot() -> String {
+    json_value().to_pretty(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_blocks_split_and_recombine() {
+        assert_eq!(split_labels("plain_total"), ("plain_total", None));
+        assert_eq!(
+            split_labels("serve_stage_us{stage=\"compute\",lane=\"bulk\"}"),
+            ("serve_stage_us", Some("stage=\"compute\",lane=\"bulk\""))
+        );
+        assert_eq!(
+            prom_series("x_bucket", Some("lane=\"bulk\""), Some("le=\"8\"")),
+            "x_bucket{lane=\"bulk\",le=\"8\"}"
+        );
+    }
+
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn prometheus_renders_registered_metrics() {
+        let _guard = crate::obs::test_lock();
+        registry::counter("test_export_total{lane=\"interactive\"}").add(2);
+        registry::histogram("test_export_us").record_us(100);
+        let text = prometheus();
+        assert!(text.contains("# TYPE test_export_total counter"));
+        assert!(text.contains("test_export_total{lane=\"interactive\"} 2"));
+        assert!(text.contains("# TYPE test_export_us histogram"));
+        assert!(text.contains("test_export_us_bucket{le=\"128\"} 1"));
+        assert!(text.contains("test_export_us_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("test_export_us_sum 100"));
+        assert!(text.contains("test_export_us_count 1"));
+    }
+
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn json_snapshot_is_a_valid_document() {
+        let _guard = crate::obs::test_lock();
+        registry::counter("test_export_json_total").add(1);
+        registry::histogram("test_export_json_us").record_us(5);
+        let s = json_snapshot();
+        assert!(s.contains("\"counters\""));
+        assert!(s.contains("\"test_export_json_total\""));
+        assert!(s.contains("\"le_8\": 1"));
+        // Crude structural check: balanced braces, ends with newline.
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert!(s.ends_with('\n'));
+    }
+}

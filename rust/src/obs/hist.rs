@@ -1,0 +1,288 @@
+//! Fixed-bucket log2 latency histogram backed by sharded atomics.
+//!
+//! The serve hot path stamps five timestamps per request and records
+//! four stage durations; a mutex-guarded `Vec<f64>` there would put a
+//! contended lock on every response. Instead each histogram keeps
+//! [`SHARDS`] independent cache-line-padded cells per bucket; a thread
+//! picks its shard once (round-robin thread-local) and every record is
+//! a handful of relaxed `fetch_add`s on lines no other core is writing.
+//! Reads merge all shards — reads are rare (export time), writes are
+//! the hot path.
+//!
+//! Bucketing: values are microseconds; bucket 0 holds exactly 0, bucket
+//! `i ≥ 1` holds `[2^(i-1), 2^i)`, and the last bucket is an overflow
+//! catch-all. Log2 buckets give a bounded **relative** quantile error:
+//! a reported quantile and the true value land in the same bucket, so
+//! `est/true ∈ (0.5, 2]` — pinned by the Python differential
+//! (`python/tests/test_histogram.py`) and the unit tests below, which
+//! share fixed constants.
+//!
+//! The `sum`/`count`/`max` side-channels are exact (not bucket-derived),
+//! so **means are lossless**: the serve-span acceptance check
+//! `sum(stage means) == end-to-end mean` holds to the microsecond, not
+//! to bucket resolution. [`HistSnapshot::merge`] is lossless with
+//! respect to the representation: bucket-wise addition commutes with
+//! recording, so merging per-replica snapshots equals one histogram fed
+//! the union stream — the fix for `LatencySummary`'s old
+//! re-sort-the-raw-vectors merge.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::shard_index;
+
+/// Bucket count: bucket 0 = zero, buckets 1..=38 cover `[1, 2^38) µs`
+/// (2^38 µs ≈ 76 h), bucket 39 is the overflow catch-all.
+pub const NBUCKETS: usize = 40;
+
+/// Shards per histogram. Power of two so shard selection is a mask.
+pub const SHARDS: usize = 16;
+
+/// Bucket index for a value in µs (shared constant of the Python
+/// differential: `bucket_index(v) = 0` if `v == 0` else
+/// `min(floor(log2(v)) + 1, NBUCKETS - 1)`).
+#[inline]
+pub fn bucket_index(us: u64) -> usize {
+    if us == 0 {
+        0
+    } else {
+        ((64 - us.leading_zeros()) as usize).min(NBUCKETS - 1)
+    }
+}
+
+/// Inclusive lower bound of a bucket, in µs.
+#[inline]
+pub fn bucket_lo(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Exclusive upper bound of a bucket, in µs (the overflow bucket
+/// reports its lower bound doubled, the best it can say).
+#[inline]
+pub fn bucket_hi(i: usize) -> u64 {
+    1u64 << i
+}
+
+#[repr(align(64))]
+struct Shard {
+    buckets: [AtomicU64; NBUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Sharded log2 histogram of µs values. Cheap to record (`Relaxed`
+/// adds on a thread-private shard), merged at read.
+pub struct Histogram {
+    shards: Box<[Shard]>,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { shards: (0..SHARDS).map(|_| Shard::new()).collect() }
+    }
+
+    /// Record one µs observation. Callers gate on [`crate::obs::enabled`];
+    /// this method itself never checks (handle holders may batch-gate).
+    #[inline]
+    pub fn record_us(&self, us: u64) {
+        let s = &self.shards[shard_index() & (SHARDS - 1)];
+        s.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        s.count.fetch_add(1, Ordering::Relaxed);
+        s.sum.fetch_add(us, Ordering::Relaxed);
+        s.max.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Merge every shard into an owned snapshot.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut out = HistSnapshot::empty();
+        for s in self.shards.iter() {
+            for (i, b) in s.buckets.iter().enumerate() {
+                out.buckets[i] += b.load(Ordering::Relaxed);
+            }
+            out.count += s.count.load(Ordering::Relaxed);
+            out.sum += s.sum.load(Ordering::Relaxed);
+            out.max = out.max.max(s.max.load(Ordering::Relaxed));
+        }
+        out
+    }
+}
+
+/// An owned, mergeable histogram snapshot.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; NBUCKETS],
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot { buckets: [0; NBUCKETS], count: 0, sum: 0, max: 0 }
+    }
+
+    /// Build a snapshot from raw values (tests and one-shot summaries).
+    pub fn of_us(values: impl IntoIterator<Item = u64>) -> HistSnapshot {
+        let mut s = HistSnapshot::empty();
+        for v in values {
+            s.buckets[bucket_index(v)] += 1;
+            s.count += 1;
+            s.sum += v;
+            s.max = s.max.max(v);
+        }
+        s
+    }
+
+    /// Lossless merge: recording a stream into two histograms and
+    /// merging equals recording the union into one (bucket-wise adds
+    /// commute; sum/count/max compose exactly).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Exact mean in µs (from the lossless sum, not the buckets).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank quantile estimate in µs: find the bucket holding
+    /// the rank-`ceil(q·count)` observation and interpolate linearly
+    /// across it by rank position. The true quantile lies in the same
+    /// bucket, so the estimate is within a factor of 2 (shared
+    /// convention of the Python differential). `max` clamps the top so
+    /// `quantile(1.0) == max` exactly.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for i in 0..NBUCKETS {
+            let n = self.buckets[i];
+            if n == 0 {
+                continue;
+            }
+            if seen + n >= rank {
+                let lo = bucket_lo(i) as f64;
+                let hi = (bucket_hi(i) as f64).min(self.max.max(1) as f64);
+                let frac = (rank - seen) as f64 / n as f64;
+                return (lo + (hi - lo) * frac).min(self.max as f64);
+            }
+            seen += n;
+        }
+        self.max as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), NBUCKETS - 1);
+        for i in 1..NBUCKETS - 1 {
+            assert_eq!(bucket_index(bucket_lo(i)), i);
+            assert_eq!(bucket_index(bucket_hi(i) - 1), i);
+        }
+    }
+
+    #[test]
+    fn merge_is_lossless_wrt_union() {
+        let a: Vec<u64> = (0..500).map(|i| i * 37 % 10_000).collect();
+        let b: Vec<u64> = (0..300).map(|i| i * 91 % 1_000_000).collect();
+        let mut merged = HistSnapshot::of_us(a.iter().copied());
+        merged.merge(&HistSnapshot::of_us(b.iter().copied()));
+        let union = HistSnapshot::of_us(a.into_iter().chain(b));
+        assert_eq!(merged, union);
+    }
+
+    #[test]
+    fn mean_is_exact_and_quantile_within_a_factor_of_two() {
+        // Constants shared with python/tests/test_histogram.py: the
+        // stream i² mod 65521 for i in 0..1000, quantiles 0.5/0.95/0.99.
+        let values: Vec<u64> = (0u64..1000).map(|i| (i * i) % 65_521).collect();
+        let snap = HistSnapshot::of_us(values.iter().copied());
+        let exact_sum: u64 = values.iter().sum();
+        assert_eq!(snap.sum, exact_sum);
+        assert_eq!(snap.count, 1000);
+        assert!((snap.mean_us() - exact_sum as f64 / 1000.0).abs() < 1e-9);
+
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        for q in [0.5, 0.95, 0.99] {
+            let rank = ((q * 1000.0).ceil() as usize).clamp(1, 1000);
+            let truth = sorted[rank - 1] as f64;
+            let est = snap.quantile_us(q);
+            assert!(
+                est / truth.max(1.0) <= 2.0 && truth / est.max(1.0) <= 2.0,
+                "q={q}: est {est} vs true {truth} outside the 2x bound"
+            );
+            // Bucket-bounds invariant (the sharper claim the
+            // differential pins): the estimate stays inside the true
+            // value's bucket range.
+            let bi = bucket_index(truth as u64);
+            assert!(
+                bucket_lo(bi) as f64 <= est && est <= bucket_hi(bi) as f64,
+                "q={q}: estimate {est} left the true value's bucket {bi}"
+            );
+        }
+        assert_eq!(snap.quantile_us(1.0), snap.max as f64);
+    }
+
+    #[test]
+    fn sharded_recording_merges_to_the_full_stream() {
+        let h = Histogram::new();
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let h = &h;
+                scope.spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record_us(t * 1000 + i);
+                    }
+                });
+            }
+        });
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 4000);
+        assert_eq!(snap.sum, (0..4000u64).sum());
+        assert_eq!(snap.max, 3999);
+    }
+}

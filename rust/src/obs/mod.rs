@@ -1,0 +1,111 @@
+//! Unified observability: metric registry, serve-path lifecycle spans,
+//! and the fault flight recorder.
+//!
+//! Until this PR, telemetry was fragmented — `serve/metrics.rs` kept
+//! its own latency vectors, `sim/stats.rs` its own cycle table, each
+//! bench its own JSON writer — and a replica that died under PR 8's
+//! fault injection left no trace of what it was doing. This module is
+//! the one place signals flow through:
+//!
+//! * [`registry`] — process-wide named **counters**, **gauges** and
+//!   log2 latency **histograms** ([`hist`]), all backed by sharded
+//!   atomics (one cache-padded cell per worker, merged at read) so a
+//!   hot-path increment is one relaxed `fetch_add` with no contention.
+//! * [`span`] — per-request lifecycle stamps on the serve `Clock` seam
+//!   (admission → queue-wait → assembly → compute → respond), recorded
+//!   into per-lane/per-replica stage histograms.
+//! * [`recorder`] — a bounded lock-free per-replica event ring (flush
+//!   decisions, barrier transitions, faults, steals, resyncs), dumped
+//!   automatically on organic panic, watchdog steal and shutdown.
+//! * [`export`] — Prometheus text + JSON snapshot emitters feeding
+//!   `tinycl obs-report`, `--metrics-json`, and the metrics block
+//!   embedded in `BENCH_serve.json`.
+//!
+//! **Overhead contract**: instrumentation stays on by default and must
+//! cost ≤ 3% serve-path p99 (asserted by the serve bench's obs rung).
+//! Two kill-switches honor it: the `obs-off` cargo feature compiles
+//! [`enabled`] to a constant `false` (every hook folds away), and
+//! [`set_enabled`]`(false)` is the runtime equivalent — one relaxed
+//! load on the hot path. Dependency-free, like the rest of the crate.
+
+pub mod export;
+pub mod hist;
+pub mod recorder;
+pub mod registry;
+pub mod span;
+
+pub use hist::{HistSnapshot, Histogram};
+pub use recorder::{Event, FlightRecorder, FlushWhy, Ring};
+pub use registry::{count_gemm, counter, gauge, histogram, record_us, Counter, Gauge};
+pub use span::{SpanStamps, Stage, STAGES};
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Is instrumentation live? With the `obs-off` feature this is a
+/// constant `false` and every gated hook compiles out; otherwise it is
+/// one relaxed atomic load (the runtime kill-switch).
+#[inline(always)]
+pub fn enabled() -> bool {
+    if cfg!(feature = "obs-off") {
+        return false;
+    }
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Runtime kill-switch (the obs-overhead bench rung measures with this
+/// off as its baseline). No-op under `obs-off` (already off for good).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// This thread's metric shard: assigned round-robin at first use, so
+/// pool workers and replica threads each get their own cache line in
+/// sharded counters/histograms. Masked by the shard count at use.
+#[inline]
+pub fn shard_index() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    SHARD.with(|s| *s)
+}
+
+/// Serializes unit tests that read global counters or toggle the
+/// kill-switch — the registry and `ENABLED` are process-wide, so
+/// count-asserting tests must not interleave with the toggle test.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    use std::sync::{Mutex, OnceLock};
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_index_is_stable_per_thread() {
+        let a = shard_index();
+        assert_eq!(a, shard_index());
+        let b = std::thread::spawn(shard_index).join().unwrap();
+        // A fresh thread gets the next round-robin slot, never racing
+        // onto this thread's cell.
+        assert_ne!(a, b);
+    }
+
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn runtime_kill_switch_gates_recording() {
+        let _guard = test_lock();
+        let c = registry::counter("test_obs_kill_switch_total");
+        c.add(1);
+        set_enabled(false);
+        c.add(10);
+        set_enabled(true);
+        c.add(2);
+        assert_eq!(c.get(), 3);
+    }
+}

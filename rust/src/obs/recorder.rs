@@ -1,0 +1,385 @@
+//! Flight recorder: a bounded lock-free ring of recent structured
+//! events per replica, dumped when something dies.
+//!
+//! PR 8's fault machinery can kill a replica mid-batch, steal its
+//! flight from the watchdog, or take the whole pool down — and until
+//! now a `serve_faults` failure printed a panic message and nothing
+//! else. Each replica now records its last [`RING_CAP`] decisions
+//! (flush reasons, barrier transitions, fault injections, steals,
+//! resyncs) into a fixed ring; [`FlightRecorder::dump`] renders every
+//! ring, newest last, and is invoked automatically on organic panic
+//! (crash-guard unwind), watchdog steal, and `shutdown_all`.
+//!
+//! Writer side is lock-free: one `fetch_add` claims a slot, then a
+//! seqlock-style sequence stamp brackets the field writes (odd =
+//! in-progress). The reader (dump time, rare) retries nothing — it
+//! simply skips slots whose stamp is torn. Losing one event under a
+//! racing dump is acceptable for a debugging aid; blocking the serve
+//! hot path is not.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::enabled;
+
+/// Events kept per replica ring.
+pub const RING_CAP: usize = 64;
+
+/// Why a predict batch was released to compute — the reason carried by
+/// every `serve::queue::flush_decision` flush (and by the orphan-replay
+/// pop, which never consults the flush rule).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushWhy {
+    /// Batch reached `max_batch`.
+    Full,
+    /// `max_wait` elapsed since the batch opened.
+    MaxWait,
+    /// Arrivals went idle — nothing more is coming soon.
+    Idle,
+    /// A queued train fence made further waiting pointless.
+    Fence,
+    /// The queue is closing (shutdown drain).
+    Closed,
+    /// An orphaned batch replayed after a replica death/steal.
+    Replay,
+}
+
+impl FlushWhy {
+    pub fn name(self) -> &'static str {
+        match self {
+            FlushWhy::Full => "full",
+            FlushWhy::MaxWait => "max_wait",
+            FlushWhy::Idle => "idle",
+            FlushWhy::Fence => "fence",
+            FlushWhy::Closed => "closed",
+            FlushWhy::Replay => "replay",
+        }
+    }
+}
+
+/// A structured flight-recorder event. Encoded into three `u64`s in the
+/// ring; the schema is part of the README's observability contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    ReplicaStart,
+    ReplicaExit,
+    /// An open batch flushed: why, and how many jobs it carried.
+    Flush { why: FlushWhy, batch: u64 },
+    /// Train barrier: replica started leading a quiesce.
+    BarrierEnter,
+    /// All replicas parked; orphans harvested.
+    BarrierQuiesced,
+    /// Barrier done, queue resumed.
+    BarrierResume { spawned: u64 },
+    /// Fault injector fired a panic on this replica.
+    FaultPanic,
+    /// Fault injector parked this replica mid-batch.
+    FaultStall,
+    /// Watchdog stole this replica's flight (jobs re-queued).
+    Stolen { jobs: u64 },
+    /// Weights re-broadcast after a barrier (diff or full).
+    Resync { diff: bool, bytes: u64 },
+    /// A train request was executed at a stream cut.
+    Train { cut: u64 },
+}
+
+impl Event {
+    fn encode(self) -> (u64, u64, u64) {
+        match self {
+            Event::ReplicaStart => (0, 0, 0),
+            Event::ReplicaExit => (1, 0, 0),
+            Event::Flush { why, batch } => (2, why as u64, batch),
+            Event::BarrierEnter => (3, 0, 0),
+            Event::BarrierQuiesced => (4, 0, 0),
+            Event::BarrierResume { spawned } => (5, spawned, 0),
+            Event::FaultPanic => (6, 0, 0),
+            Event::FaultStall => (7, 0, 0),
+            Event::Stolen { jobs } => (8, jobs, 0),
+            Event::Resync { diff, bytes } => (9, u64::from(diff), bytes),
+            Event::Train { cut } => (10, cut, 0),
+        }
+    }
+
+    fn decode(kind: u64, a: u64, b: u64) -> Option<Event> {
+        Some(match kind {
+            0 => Event::ReplicaStart,
+            1 => Event::ReplicaExit,
+            2 => Event::Flush {
+                why: match a {
+                    0 => FlushWhy::Full,
+                    1 => FlushWhy::MaxWait,
+                    2 => FlushWhy::Idle,
+                    3 => FlushWhy::Fence,
+                    4 => FlushWhy::Closed,
+                    5 => FlushWhy::Replay,
+                    _ => return None,
+                },
+                batch: b,
+            },
+            3 => Event::BarrierEnter,
+            4 => Event::BarrierQuiesced,
+            5 => Event::BarrierResume { spawned: a },
+            6 => Event::FaultPanic,
+            7 => Event::FaultStall,
+            8 => Event::Stolen { jobs: a },
+            9 => Event::Resync { diff: a != 0, bytes: b },
+            10 => Event::Train { cut: a },
+            _ => return None,
+        })
+    }
+
+    /// One-line rendering used by dumps (`event=flush why=full batch=8`).
+    pub fn render(&self) -> String {
+        match self {
+            Event::ReplicaStart => "event=replica_start".to_string(),
+            Event::ReplicaExit => "event=replica_exit".to_string(),
+            Event::Flush { why, batch } => {
+                format!("event=flush why={} batch={batch}", why.name())
+            }
+            Event::BarrierEnter => "event=barrier_enter".to_string(),
+            Event::BarrierQuiesced => "event=barrier_quiesced".to_string(),
+            Event::BarrierResume { spawned } => {
+                format!("event=barrier_resume spawned={spawned}")
+            }
+            Event::FaultPanic => "event=fault_panic".to_string(),
+            Event::FaultStall => "event=fault_stall".to_string(),
+            Event::Stolen { jobs } => format!("event=stolen jobs={jobs}"),
+            Event::Resync { diff, bytes } => {
+                format!("event=resync kind={} bytes={bytes}", if *diff { "diff" } else { "full" })
+            }
+            Event::Train { cut } => format!("event=train cut={cut}"),
+        }
+    }
+}
+
+struct Slot {
+    seq: AtomicU64,
+    t_us: AtomicU64,
+    kind: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+/// One replica's bounded event ring. Cheap to clone (`Arc`) into the
+/// replica thread; readable from any thread at dump time.
+pub struct Ring {
+    slots: Box<[Slot]>,
+    cursor: AtomicU64,
+}
+
+impl Ring {
+    pub fn new() -> Arc<Ring> {
+        Arc::new(Ring {
+            slots: (0..RING_CAP)
+                .map(|_| Slot {
+                    seq: AtomicU64::new(0),
+                    t_us: AtomicU64::new(0),
+                    kind: AtomicU64::new(0),
+                    a: AtomicU64::new(0),
+                    b: AtomicU64::new(0),
+                })
+                .collect(),
+            cursor: AtomicU64::new(0),
+        })
+    }
+
+    /// Record an event at clock time `t_us`. Lock-free; oldest events
+    /// are overwritten once the ring wraps.
+    pub fn push(&self, t_us: u64, ev: Event) {
+        if !enabled() {
+            return;
+        }
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(i as usize) % RING_CAP];
+        let (kind, a, b) = ev.encode();
+        // Seqlock: odd stamp while writing, even (2i+2) when complete.
+        slot.seq.store(2 * i + 1, Ordering::Release);
+        slot.t_us.store(t_us, Ordering::Relaxed);
+        slot.kind.store(kind, Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        slot.seq.store(2 * i + 2, Ordering::Release);
+    }
+
+    /// Total events ever pushed (≥ `events().len()`).
+    pub fn pushed(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// The retained events, oldest first. Torn slots (a write racing
+    /// this read) are skipped.
+    pub fn events(&self) -> Vec<(u64, Event)> {
+        let end = self.cursor.load(Ordering::Acquire);
+        let start = end.saturating_sub(RING_CAP as u64);
+        let mut out = Vec::new();
+        for i in start..end {
+            let slot = &self.slots[(i as usize) % RING_CAP];
+            let seq0 = slot.seq.load(Ordering::Acquire);
+            if seq0 != 2 * i + 2 {
+                continue; // torn or already overwritten
+            }
+            let t = slot.t_us.load(Ordering::Relaxed);
+            let kind = slot.kind.load(Ordering::Relaxed);
+            let a = slot.a.load(Ordering::Relaxed);
+            let b = slot.b.load(Ordering::Relaxed);
+            if slot.seq.load(Ordering::Acquire) != seq0 {
+                continue;
+            }
+            if let Some(ev) = Event::decode(kind, a, b) {
+                out.push((t, ev));
+            }
+        }
+        out
+    }
+}
+
+/// Registry of per-replica rings for one server pool, plus the dump
+/// machinery. Owned by the pool (`Arc`), shared with the watchdog and
+/// crash guards.
+#[derive(Default)]
+pub struct FlightRecorder {
+    rings: Mutex<Vec<(usize, Arc<Ring>)>>,
+}
+
+impl FlightRecorder {
+    pub fn new() -> Arc<FlightRecorder> {
+        Arc::new(FlightRecorder::default())
+    }
+
+    /// Create and register the ring for `replica`. Ids are never
+    /// reused, so one ring per id for the pool's lifetime.
+    pub fn ring(&self, replica: usize) -> Arc<Ring> {
+        let ring = Ring::new();
+        let mut rings = self.rings.lock().unwrap_or_else(|e| e.into_inner());
+        rings.push((replica, ring.clone()));
+        ring
+    }
+
+    /// The already-registered ring for `replica`, if any — how the
+    /// watchdog (which never spawned the replica) attributes a steal to
+    /// the wedged owner's timeline.
+    pub fn existing(&self, replica: usize) -> Option<Arc<Ring>> {
+        let rings = self.rings.lock().unwrap_or_else(|e| e.into_inner());
+        rings.iter().find(|(r, _)| *r == replica).map(|(_, ring)| Arc::clone(ring))
+    }
+
+    /// Render every ring (oldest event first, replicas in spawn order).
+    pub fn render(&self) -> String {
+        let rings = self.rings.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = String::new();
+        for (replica, ring) in rings.iter() {
+            for (t_us, ev) in ring.events() {
+                out.push_str(&format!("[flight] t_us={t_us} replica={replica} {}\n", ev.render()));
+            }
+        }
+        out
+    }
+
+    /// Dump every ring to stderr with a reason header, and retain the
+    /// text for tests (`last_dump`). Called on organic panic, watchdog
+    /// steal and `shutdown_all`; `quiet` suppresses stderr (the clean
+    /// shutdown path records for tests without spamming CI logs).
+    pub fn dump(&self, why: &str, quiet: bool) -> String {
+        let body = self.render();
+        let text = format!("[flight] --- dump: {why} ---\n{body}[flight] --- end dump ---\n");
+        if !quiet && !body.is_empty() {
+            eprint!("{text}");
+        }
+        let mut last = last_dump_cell().lock().unwrap_or_else(|e| e.into_inner());
+        *last = Some(text.clone());
+        text
+    }
+}
+
+fn last_dump_cell() -> &'static Mutex<Option<String>> {
+    static CELL: OnceLock<Mutex<Option<String>>> = OnceLock::new();
+    CELL.get_or_init(|| Mutex::new(None))
+}
+
+/// The most recent dump text, process-wide (test hook).
+pub fn last_dump() -> Option<String> {
+    last_dump_cell().lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn ring_wraps_keeping_the_newest_cap_events() {
+        let _guard = crate::obs::test_lock();
+        let ring = Ring::new();
+        for i in 0..(RING_CAP as u64 + 10) {
+            ring.push(i, Event::Train { cut: i });
+        }
+        let evs = ring.events();
+        assert_eq!(evs.len(), RING_CAP);
+        assert_eq!(evs[0], (10, Event::Train { cut: 10 }));
+        assert_eq!(
+            evs[RING_CAP - 1],
+            (RING_CAP as u64 + 9, Event::Train { cut: RING_CAP as u64 + 9 })
+        );
+        assert_eq!(ring.pushed(), RING_CAP as u64 + 10);
+    }
+
+    #[test]
+    fn every_event_round_trips_through_the_encoding() {
+        let all = [
+            Event::ReplicaStart,
+            Event::ReplicaExit,
+            Event::Flush { why: FlushWhy::Full, batch: 8 },
+            Event::Flush { why: FlushWhy::MaxWait, batch: 3 },
+            Event::Flush { why: FlushWhy::Idle, batch: 2 },
+            Event::Flush { why: FlushWhy::Fence, batch: 0 },
+            Event::Flush { why: FlushWhy::Closed, batch: 1 },
+            Event::Flush { why: FlushWhy::Replay, batch: 4 },
+            Event::BarrierEnter,
+            Event::BarrierQuiesced,
+            Event::BarrierResume { spawned: 1 },
+            Event::FaultPanic,
+            Event::FaultStall,
+            Event::Stolen { jobs: 4 },
+            Event::Resync { diff: true, bytes: 123 },
+            Event::Resync { diff: false, bytes: 99_999 },
+            Event::Train { cut: 17 },
+        ];
+        for ev in all {
+            let (k, a, b) = ev.encode();
+            assert_eq!(Event::decode(k, a, b), Some(ev));
+            assert!(ev.render().starts_with("event="));
+        }
+    }
+
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn concurrent_pushes_stay_decodable() {
+        let _guard = crate::obs::test_lock();
+        let ring = Ring::new();
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let ring = &ring;
+                scope.spawn(move || {
+                    for i in 0..500 {
+                        ring.push(t * 1000 + i, Event::Stolen { jobs: i });
+                    }
+                });
+            }
+        });
+        // All retained slots must decode (no torn writes once quiesced).
+        assert_eq!(ring.events().len(), RING_CAP);
+    }
+
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn dump_renders_and_is_retained() {
+        let _guard = crate::obs::test_lock();
+        let rec = FlightRecorder::new();
+        let ring = rec.ring(7);
+        ring.push(5, Event::FaultPanic);
+        let text = rec.dump("unit test", true);
+        assert!(text.contains("replica=7"));
+        assert!(text.contains("event=fault_panic"));
+        assert_eq!(last_dump().as_deref(), Some(text.as_str()));
+    }
+}

@@ -1,0 +1,226 @@
+//! Process-wide metric registry: named counters, gauges and log2
+//! latency histograms.
+//!
+//! Registration is lazy and idempotent — `counter("name")` returns the
+//! existing handle or creates one — and hands back `&'static` handles
+//! so hot paths register once (in a constructor or a `OnceLock`) and
+//! then increment with zero lookups and zero locks. The registry's own
+//! maps are only locked at registration and export time.
+//!
+//! Naming convention (see the README metric table): Prometheus-style
+//! `snake_case` bases with optional `{key="value",...}` label suffixes
+//! baked into the registered name, e.g.
+//! `serve_stage_us{stage="compute",lane="interactive"}`. The exporter
+//! splits the label block back out, so labeled series render as proper
+//! Prometheus labels; the JSON snapshot keeps the full string as the
+//! key. Metric handles live for the process lifetime (they are
+//! intentionally leaked — the set of metric names is small and static).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::hist::{HistSnapshot, Histogram};
+use super::{enabled, shard_index};
+
+/// Shards per counter (power of two, mask-selected).
+const SHARDS: usize = 16;
+
+#[repr(align(64))]
+struct PaddedU64(AtomicU64);
+
+/// Monotone counter, sharded so concurrent hot-path increments from
+/// different workers land on different cache lines.
+pub struct Counter {
+    shards: Box<[PaddedU64]>,
+}
+
+impl Counter {
+    fn new() -> Counter {
+        Counter { shards: (0..SHARDS).map(|_| PaddedU64(AtomicU64::new(0))).collect() }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if !enabled() {
+            return;
+        }
+        self.shards[shard_index() & (SHARDS - 1)].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Point-in-time value (pool live workers, live replicas, queue depth).
+/// Gauges are set on state transitions — low-rate by construction — so
+/// a single atomic cell is enough.
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge { v: AtomicI64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        if !enabled() {
+            return;
+        }
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        if !enabled() {
+            return;
+        }
+        self.v.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Default)]
+struct Maps {
+    counters: BTreeMap<String, &'static Counter>,
+    gauges: BTreeMap<String, &'static Gauge>,
+    hists: BTreeMap<String, &'static Histogram>,
+}
+
+static MAPS: OnceLock<Mutex<Maps>> = OnceLock::new();
+
+fn maps() -> &'static Mutex<Maps> {
+    MAPS.get_or_init(|| Mutex::new(Maps::default()))
+}
+
+/// Get-or-register a counter. Call once and keep the handle.
+pub fn counter(name: &str) -> &'static Counter {
+    let mut m = maps().lock().unwrap_or_else(|e| e.into_inner());
+    m.counters
+        .entry(name.to_string())
+        .or_insert_with(|| Box::leak(Box::new(Counter::new())))
+}
+
+/// Get-or-register a gauge.
+pub fn gauge(name: &str) -> &'static Gauge {
+    let mut m = maps().lock().unwrap_or_else(|e| e.into_inner());
+    m.gauges
+        .entry(name.to_string())
+        .or_insert_with(|| Box::leak(Box::new(Gauge::new())))
+}
+
+/// Get-or-register a histogram of µs values.
+pub fn histogram(name: &str) -> &'static Histogram {
+    let mut m = maps().lock().unwrap_or_else(|e| e.into_inner());
+    m.hists
+        .entry(name.to_string())
+        .or_insert_with(|| Box::leak(Box::new(Histogram::new())))
+}
+
+/// Record into a histogram, gated on the kill-switch (for call sites
+/// that hold the handle; histograms themselves don't re-check).
+#[inline]
+pub fn record_us(h: &Histogram, us: u64) {
+    if enabled() {
+        h.record_us(us);
+    }
+}
+
+/// Count one blocked-GEMM dispatch into the shared engine counters
+/// (`gemm_calls_total`, `gemm_macs_total`) — used by both the f32 and
+/// the integer GEMM cores. Handles resolve once; each call after that
+/// is two relaxed sharded adds, a no-op under the kill-switch.
+#[inline]
+pub fn count_gemm(macs: u64) {
+    static CELLS: OnceLock<(&'static Counter, &'static Counter)> = OnceLock::new();
+    let (calls, total_macs) =
+        CELLS.get_or_init(|| (counter("gemm_calls_total"), counter("gemm_macs_total")));
+    calls.inc();
+    total_macs.add(macs);
+}
+
+/// A point-in-time copy of every registered metric, name-sorted (the
+/// maps are BTreeMaps), suitable for export.
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+/// Snapshot the whole registry.
+pub fn snapshot() -> MetricsSnapshot {
+    let m = maps().lock().unwrap_or_else(|e| e.into_inner());
+    MetricsSnapshot {
+        counters: m.counters.iter().map(|(k, c)| (k.clone(), c.get())).collect(),
+        gauges: m.gauges.iter().map(|(k, g)| (k.clone(), g.get())).collect(),
+        hists: m.hists.iter().map(|(k, h)| (k.clone(), h.snapshot())).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Count-asserting tests are meaningless when the hooks are
+    // compiled out.
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn registration_is_idempotent_and_handles_are_stable() {
+        let _guard = crate::obs::test_lock();
+        let a = counter("test_registry_idempotent_total");
+        let b = counter("test_registry_idempotent_total");
+        assert!(std::ptr::eq(a, b));
+        a.add(3);
+        b.add(4);
+        assert_eq!(a.get(), 7);
+    }
+
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn concurrent_increments_never_lose_counts() {
+        let _guard = crate::obs::test_lock();
+        let c = counter("test_registry_concurrent_total");
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn gauges_set_and_drift() {
+        let _guard = crate::obs::test_lock();
+        let g = gauge("test_registry_gauge");
+        g.set(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn snapshot_sees_registered_metrics() {
+        let _guard = crate::obs::test_lock();
+        counter("test_registry_snapshot_total").add(1);
+        histogram("test_registry_snapshot_us").record_us(42);
+        let snap = snapshot();
+        assert!(snap.counters.iter().any(|(k, v)| k == "test_registry_snapshot_total" && *v >= 1));
+        assert!(snap.hists.iter().any(|(k, h)| k == "test_registry_snapshot_us" && h.count >= 1));
+    }
+}

@@ -1,0 +1,102 @@
+//! Per-request lifecycle spans for the serve path.
+//!
+//! Every request is stamped on the serve `Clock` seam (so `MockClock`
+//! makes span tests deterministic and sleep-free) at five points:
+//!
+//! ```text
+//! admission ──queue_wait──▶ joined batch ──assembly──▶ compute start
+//!           ──compute──▶ compute end ──respond──▶ response sent
+//! ```
+//!
+//! * **queue_wait** — admitted into the lane queue until popped into an
+//!   open batch (lane aging, fences and pauses all show up here).
+//! * **assembly** — sitting in the open batch while `flush_decision`
+//!   waits for more work or a deadline.
+//! * **compute** — the batched forward pass (plus flight check-in).
+//! * **respond** — compute done until the outcome hits the channel.
+//!
+//! The four stages partition the server-side end-to-end latency by
+//! construction: `sum(stages) == done - admitted` exactly (saturating
+//! only if a clock ever stepped backwards, which `MockClock` and the
+//! monotonic `WallClock` rule out). That identity is the acceptance
+//! gate `sum(stage means) == end-to-end mean` — exact on the lossless
+//! histogram sums, not approximate.
+
+/// The four serve-path stages, in lifecycle order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    QueueWait,
+    Assembly,
+    Compute,
+    Respond,
+}
+
+/// All stages in order (iteration + metric registration).
+pub const STAGES: [Stage; 4] = [Stage::QueueWait, Stage::Assembly, Stage::Compute, Stage::Respond];
+
+impl Stage {
+    /// Label value used in metric names
+    /// (`serve_stage_us{stage="queue_wait",lane="interactive"}`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::Assembly => "assembly",
+            Stage::Compute => "compute",
+            Stage::Respond => "respond",
+        }
+    }
+}
+
+/// The five clock stamps of one request's life, µs on the server's
+/// `Clock`. Built incrementally: admission stamps `admitted_us`, the
+/// batch pop stamps `assembled_us`, the replica stamps the compute
+/// bracket, and the respond site closes the span.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanStamps {
+    pub admitted_us: u64,
+    pub assembled_us: u64,
+    pub compute_start_us: u64,
+    pub compute_end_us: u64,
+    pub done_us: u64,
+}
+
+impl SpanStamps {
+    /// Stage durations in lifecycle order, saturating per stage.
+    pub fn stage_us(&self) -> [u64; 4] {
+        [
+            self.assembled_us.saturating_sub(self.admitted_us),
+            self.compute_start_us.saturating_sub(self.assembled_us),
+            self.compute_end_us.saturating_sub(self.compute_start_us),
+            self.done_us.saturating_sub(self.compute_end_us),
+        ]
+    }
+
+    /// Server-side end-to-end: admission to response.
+    pub fn e2e_us(&self) -> u64 {
+        self.done_us.saturating_sub(self.admitted_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stages_partition_end_to_end() {
+        let s = SpanStamps {
+            admitted_us: 100,
+            assembled_us: 130,
+            compute_start_us: 150,
+            compute_end_us: 950,
+            done_us: 960,
+        };
+        assert_eq!(s.stage_us(), [30, 20, 800, 10]);
+        assert_eq!(s.stage_us().iter().sum::<u64>(), s.e2e_us());
+    }
+
+    #[test]
+    fn stage_names_are_stable() {
+        let names: Vec<&str> = STAGES.iter().map(|s| s.name()).collect();
+        assert_eq!(names, ["queue_wait", "assembly", "compute", "respond"]);
+    }
+}

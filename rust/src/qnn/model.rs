@@ -126,7 +126,19 @@ struct QScratch {
 
 impl QScratch {
     fn take(&mut self) -> Vec<Fx> {
-        self.bufs.pop().unwrap_or_default()
+        // Shares the f32 engine's scratch counters — both pools answer
+        // the same question (is recycling working?).
+        let (reuse, alloc) = crate::nn::model::scratch_obs();
+        match self.bufs.pop() {
+            Some(buf) => {
+                reuse.inc();
+                buf
+            }
+            None => {
+                alloc.inc();
+                Vec::new()
+            }
+        }
     }
 
     fn put(&mut self, mut buf: Vec<Fx>) {
@@ -318,9 +330,11 @@ impl QModel {
                     p.is_fresh(&self.params),
                     "stale packed weights: a weight update failed to invalidate the pack"
                 );
+                crate::nn::model::pack_obs().0.inc();
                 p
             }
             None => {
+                crate::nn::model::pack_obs().1.inc();
                 packed_store = QPackedWeights::pack(&self.params);
                 &packed_store
             }

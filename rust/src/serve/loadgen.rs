@@ -512,6 +512,8 @@ mod tests {
             active_classes: 1,
             lane: Lane::Interactive,
             deadline_us: None,
+            admitted_us: 0,
+            assembled_us: 0,
             resp: tx,
         };
         assert!(matches!(queue.offer(filler), crate::serve::queue::Admission::Admitted));

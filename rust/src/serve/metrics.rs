@@ -5,6 +5,8 @@
 
 use super::queue::{Lane, LaneStats, QueueStats};
 use super::server::ServerStats;
+use crate::obs::HistSnapshot;
+use crate::util::json::{Json, Obj};
 use crate::util::stats::percentile_sorted;
 use std::fmt;
 
@@ -41,6 +43,38 @@ impl LatencySummary {
             max_us: sorted[sorted.len() - 1],
             mean_us: sorted.iter().sum::<f64>() / sorted.len() as f64,
         })
+    }
+
+    /// Summarize a log2 histogram snapshot — the mergeable path.
+    /// Partial runs (per-replica, per-chunk) each keep a
+    /// [`HistSnapshot`]; merge those (lossless, see
+    /// [`HistSnapshot::merge`]) and summarize the union. Never average
+    /// two summaries' percentiles — a "mean of p99s" is not a p99 of
+    /// anything. `mean`/`max` here are exact (the snapshot's lossless
+    /// side-channels); quantiles carry the histogram's factor-of-2
+    /// bucket bound.
+    pub fn of_hist(h: &HistSnapshot) -> Option<LatencySummary> {
+        if h.count == 0 {
+            return None;
+        }
+        Some(LatencySummary {
+            p50_us: h.quantile_us(0.50),
+            p95_us: h.quantile_us(0.95),
+            p99_us: h.quantile_us(0.99),
+            max_us: h.max as f64,
+            mean_us: h.mean_us(),
+        })
+    }
+
+    /// `{"p50": …, "p95": …, "p99": …, "max": …, "mean": …}` µs.
+    pub fn to_json_value(&self) -> Json {
+        let mut o = Obj::new();
+        o.put("p50", Json::fixed(self.p50_us, 1));
+        o.put("p95", Json::fixed(self.p95_us, 1));
+        o.put("p99", Json::fixed(self.p99_us, 1));
+        o.put("max", Json::fixed(self.max_us, 1));
+        o.put("mean", Json::fixed(self.mean_us, 1));
+        o.build()
     }
 }
 
@@ -136,92 +170,84 @@ impl ServeRunReport {
         }
     }
 
-    fn lane_json(l: &LaneStats) -> String {
-        format!(
-            "{{\"offered\": {}, \"admitted\": {}, \"shed\": {}, \
-             \"shed_capacity\": {}, \"shed_deadline\": {}}}",
-            l.offered, l.admitted, l.shed, l.shed_capacity, l.shed_deadline
-        )
+    fn lane_json(l: &LaneStats) -> Json {
+        let mut o = Obj::new();
+        o.put("offered", l.offered);
+        o.put("admitted", l.admitted);
+        o.put("shed", l.shed);
+        o.put("shed_capacity", l.shed_capacity);
+        o.put("shed_deadline", l.shed_deadline);
+        o.build()
     }
 
-    /// One JSON object (hand-rolled — the vendor set has no serde).
-    pub fn to_json(&self, indent: &str) -> String {
-        let lat = match &self.latency {
-            Some(l) => format!(
-                "{{\"p50\": {:.1}, \"p95\": {:.1}, \"p99\": {:.1}, \"max\": {:.1}, \"mean\": {:.1}}}",
-                l.p50_us, l.p95_us, l.p99_us, l.max_us, l.mean_us
+    /// The run as a [`Json`] tree — one escaper for every emitter
+    /// (`util::json`); `serve::bench` embeds these under `"runs"` in
+    /// `BENCH_serve.json`.
+    pub fn to_json_value(&self) -> Json {
+        let mut lanes = Obj::new();
+        lanes.put("interactive", Self::lane_json(self.queue.lane(Lane::Interactive)));
+        lanes.put("bulk", Self::lane_json(self.queue.lane(Lane::Bulk)));
+        let s = &self.server;
+        let mut o = Obj::new();
+        o.put("backend", self.backend.as_str());
+        o.put("mode", self.mode());
+        o.put("max_batch", self.max_batch);
+        o.put("clients", self.clients);
+        o.put("replicas", self.replicas);
+        o.put("offered_rps", self.offered_rps.map_or(Json::Null, |r| Json::fixed(r, 1)));
+        o.put("offered", self.queue.offered);
+        o.put("admitted", self.queue.admitted);
+        o.put("shed", self.queue.shed);
+        o.put("shed_capacity", self.queue.shed_capacity);
+        o.put("shed_deadline", self.queue.shed_deadline);
+        o.put("shed_rate", Json::fixed(self.queue.shed_rate(), 4));
+        o.put("slo_budget_us", self.slo_budget_us.map_or(Json::Null, Json::from));
+        o.put(
+            "slo_attainment_interactive",
+            self.slo_attainment_interactive.map_or(Json::Null, |a| Json::fixed(a, 4)),
+        );
+        o.put("lanes", lanes.build());
+        o.put("served", s.served);
+        o.put("train_steps", s.train_steps);
+        o.put("resyncs", s.resyncs);
+        o.put("resyncs_diff", s.resyncs_diff);
+        o.put("resync_diff_bytes", s.resync_diff_bytes);
+        o.put("replays", s.replays);
+        o.put("batches_stolen", s.batches_stolen);
+        o.put("replicas_lost", s.replicas_lost);
+        o.put("replicas_retired", s.replicas_retired);
+        o.put("replicas_spawned", s.replicas_spawned);
+        o.put("faults_injected", s.faults_injected);
+        o.put(
+            "autoscale_events",
+            Json::Arr(
+                s.autoscale_events
+                    .iter()
+                    .map(|&(t, from, to)| {
+                        Json::Arr(vec![Json::from(t), Json::from(from), Json::from(to)])
+                    })
+                    .collect(),
             ),
-            None => "null".to_string(),
-        };
-        let offered = match self.offered_rps {
-            Some(r) => format!("{r:.1}"),
-            None => "null".to_string(),
-        };
-        let hist: Vec<String> =
-            self.server.batch_hist.iter().map(|(s, n)| format!("[{s}, {n}]")).collect();
-        let per_replica: Vec<String> =
-            self.server.per_replica_served.iter().map(u64::to_string).collect();
-        let scaling: Vec<String> = self
-            .server
-            .autoscale_events
-            .iter()
-            .map(|(t, from, to)| format!("[{t}, {from}, {to}]"))
-            .collect();
-        let slo_budget = match self.slo_budget_us {
-            Some(b) => b.to_string(),
-            None => "null".to_string(),
-        };
-        let slo_attain = match self.slo_attainment_interactive {
-            Some(a) => format!("{a:.4}"),
-            None => "null".to_string(),
-        };
-        format!(
-            "{indent}{{\"backend\": \"{}\", \"mode\": \"{}\", \"max_batch\": {}, \
-             \"clients\": {}, \"replicas\": {}, \"offered_rps\": {offered}, \
-             \"offered\": {}, \"admitted\": {}, \"shed\": {}, \
-             \"shed_capacity\": {}, \"shed_deadline\": {}, \"shed_rate\": {:.4}, \
-             \"slo_budget_us\": {slo_budget}, \"slo_attainment_interactive\": {slo_attain}, \
-             \"lanes\": {{\"interactive\": {}, \"bulk\": {}}}, \
-             \"served\": {}, \"train_steps\": {}, \"resyncs\": {}, \
-             \"resyncs_diff\": {}, \"resync_diff_bytes\": {}, \
-             \"replays\": {}, \"batches_stolen\": {}, \"replicas_lost\": {}, \
-             \"replicas_retired\": {}, \"replicas_spawned\": {}, \"faults_injected\": {}, \
-             \"autoscale_events\": [{}], \"wall_secs\": {:.4}, \
-             \"throughput_rps\": {:.1}, \"latency_us\": {lat}, \
-             \"mean_batch\": {:.2}, \"batch_hist\": [{}], \
-             \"per_replica_served\": [{}], \"top1\": {:.3}}}",
-            self.backend,
-            self.mode(),
-            self.max_batch,
-            self.clients,
-            self.replicas,
-            self.queue.offered,
-            self.queue.admitted,
-            self.queue.shed,
-            self.queue.shed_capacity,
-            self.queue.shed_deadline,
-            self.queue.shed_rate(),
-            Self::lane_json(self.queue.lane(Lane::Interactive)),
-            Self::lane_json(self.queue.lane(Lane::Bulk)),
-            self.server.served,
-            self.server.train_steps,
-            self.server.resyncs,
-            self.server.resyncs_diff,
-            self.server.resync_diff_bytes,
-            self.server.replays,
-            self.server.batches_stolen,
-            self.server.replicas_lost,
-            self.server.replicas_retired,
-            self.server.replicas_spawned,
-            self.server.faults_injected,
-            scaling.join(", "),
-            self.wall_secs,
-            self.throughput_rps,
-            self.server.mean_batch(),
-            hist.join(", "),
-            per_replica.join(", "),
-            self.top1,
-        )
+        );
+        o.put("wall_secs", Json::fixed(self.wall_secs, 4));
+        o.put("throughput_rps", Json::fixed(self.throughput_rps, 1));
+        o.put("latency_us", self.latency.map_or(Json::Null, |l| l.to_json_value()));
+        o.put("mean_batch", Json::fixed(s.mean_batch(), 2));
+        o.put(
+            "batch_hist",
+            Json::Arr(
+                s.batch_hist
+                    .iter()
+                    .map(|(&size, &n)| Json::Arr(vec![Json::from(size), Json::from(n)]))
+                    .collect(),
+            ),
+        );
+        o.put(
+            "per_replica_served",
+            Json::Arr(s.per_replica_served.iter().map(|&n| Json::from(n)).collect()),
+        );
+        o.put("top1", Json::fixed(self.top1, 3));
+        o.build()
     }
 }
 
@@ -377,26 +403,29 @@ mod tests {
         let r =
             ServeRunReport::new("f32-fast", 8, 4, queue, server, 0.5, &[100.0, 200.0, 300.0], 7);
         assert_eq!(r.replicas, 2, "replicas inferred from per-replica stats");
-        let j = r.to_json("");
+        // Pretty rendering is what lands in BENCH_serve.json (and what
+        // CI greps): `"key": value` with two-space indentation.
+        let j = r.to_json_value().to_pretty(2);
         assert!(j.contains("\"backend\": \"f32-fast\""), "{j}");
         assert!(j.contains("\"mode\": \"closed\""), "{j}");
         assert!(j.contains("\"offered_rps\": null"), "{j}");
         assert!(j.contains("\"shed\": 2"), "{j}");
         assert!(j.contains("\"replicas\": 2"), "{j}");
-        assert!(j.contains("\"per_replica_served\": [6, 4]"), "{j}");
-        assert!(
-            j.contains(
-                "\"bulk\": {\"offered\": 3, \"admitted\": 2, \"shed\": 1, \
-                 \"shed_capacity\": 1, \"shed_deadline\": 0}"
-            ),
-            "{j}"
-        );
-        assert!(j.contains("\"shed_capacity\": 1, \"shed_deadline\": 1, \"shed_rate\""), "{j}");
         assert!(j.contains("\"slo_budget_us\": null"), "{j}");
         assert!(j.contains("\"autoscale_events\": []"), "{j}");
         assert!(j.contains("\"resync_diff_bytes\": 0"), "{j}");
-        assert!(j.contains("\"batch_hist\": [[2, 1], [4, 2]]"), "{j}");
         assert_eq!(j.matches('{').count(), j.matches('}').count(), "{j}");
+        // Structure is easiest to pin compactly.
+        let c = r.to_json_value().to_compact();
+        assert!(c.contains("\"per_replica_served\":[6,4]"), "{c}");
+        assert!(c.contains("\"batch_hist\":[[2,1],[4,2]]"), "{c}");
+        assert!(
+            c.contains(
+                "\"bulk\":{\"offered\":3,\"admitted\":2,\"shed\":1,\
+                 \"shed_capacity\":1,\"shed_deadline\":0}"
+            ),
+            "{c}"
+        );
         // Display renders without panicking and carries the shed line.
         let s = format!("{r}");
         assert!(s.contains("shed 2"), "{s}");
@@ -404,15 +433,49 @@ mod tests {
         assert!((r.throughput_rps - 20.0).abs() < 1e-9);
         // Open-loop marking flips the mode and records the offer.
         let open = r.clone().with_offered_rps(1234.5);
-        let oj = open.to_json("");
+        let oj = open.to_json_value().to_pretty(2);
         assert!(oj.contains("\"mode\": \"open\""), "{oj}");
         assert!(oj.contains("\"offered_rps\": 1234.5"), "{oj}");
         // SLO marking flips it again and records budget + attainment.
         let slo = open.with_slo(2000, 0.995);
-        let sj = slo.to_json("");
+        let sj = slo.to_json_value().to_pretty(2);
         assert!(sj.contains("\"mode\": \"slo\""), "{sj}");
         assert!(sj.contains("\"slo_budget_us\": 2000"), "{sj}");
         assert!(sj.contains("\"slo_attainment_interactive\": 0.9950"), "{sj}");
         assert_eq!(sj.matches('{').count(), sj.matches('}').count(), "{sj}");
+    }
+
+    #[test]
+    fn hist_backed_summary_matches_exact_on_mean_and_max() {
+        use crate::obs::HistSnapshot;
+        let values: Vec<u64> = (1..=1000u64).map(|i| i * 7 % 5000).collect();
+        let snap = HistSnapshot::of_us(values.iter().copied());
+        let h = LatencySummary::of_hist(&snap).unwrap();
+        let floats: Vec<f64> = values.iter().map(|&v| v as f64).collect();
+        let exact = LatencySummary::of_us(&floats).unwrap();
+        // Lossless side-channels: mean and max agree exactly.
+        assert!((h.mean_us - exact.mean_us).abs() < 1e-9);
+        assert_eq!(h.max_us, exact.max_us);
+        // Quantiles carry the log2 bucket bound (factor of 2).
+        for (est, truth) in [
+            (h.p50_us, exact.p50_us),
+            (h.p95_us, exact.p95_us),
+            (h.p99_us, exact.p99_us),
+        ] {
+            assert!(
+                est / truth.max(1.0) <= 2.0 && truth / est.max(1.0) <= 2.0,
+                "est {est} vs exact {truth} outside the 2x bound"
+            );
+        }
+        // Empty snapshot: no distribution, same contract as `of_us`.
+        assert!(LatencySummary::of_hist(&HistSnapshot::empty()).is_none());
+        // Merging partial snapshots then summarizing equals summarizing
+        // the union — the merge semantics `of_us` could never offer.
+        let (a, b) = values.split_at(400);
+        let mut merged = HistSnapshot::of_us(a.iter().copied());
+        merged.merge(&HistSnapshot::of_us(b.iter().copied()));
+        let m = LatencySummary::of_hist(&merged).unwrap();
+        assert!((m.mean_us - h.mean_us).abs() < 1e-9);
+        assert_eq!(m.p99_us, h.p99_us);
     }
 }

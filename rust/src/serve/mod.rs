@@ -59,6 +59,7 @@ pub use loadgen::{
     LoadConfig, LoadResult, OpenLoopConfig, OpenLoopResult, RetryPolicy,
 };
 pub use metrics::{LatencySummary, ServeRunReport};
+pub use crate::obs::FlushWhy;
 pub use queue::{
     flush_decision, Admission, Batch, BatchSnapshot, FlushDecision, Lane, LaneStats, PredictJob,
     PredictOutcome, PredictResponse, QueueStats, ServeQueue, TrainJob, IDLE_FLUSH,

@@ -72,6 +72,7 @@
 //! ownership moves queue → one replica → (on fault) queue → one replica.
 
 use super::clock::{Clock, WallClock};
+use crate::obs::FlushWhy;
 use crate::tensor::Tensor;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -123,6 +124,14 @@ pub struct PredictJob {
     /// means "use the lane's SLO budget if one is configured"; a request
     /// at or past this instant is shed instead of served.
     pub deadline_us: Option<u64>,
+    /// Lifecycle span stamp (µs on the queue's clock): when this job was
+    /// admitted. Stamped by [`ServeQueue::offer`] — the value passed in
+    /// is ignored (see [`crate::obs::SpanStamps`]).
+    pub admitted_us: u64,
+    /// Lifecycle span stamp: when this job joined an open batch (the end
+    /// of its queue-wait). Stamped at batch build; re-stamped if the job
+    /// is orphaned and replayed, so queue-wait then covers the full saga.
+    pub assembled_us: u64,
     pub resp: Sender<PredictOutcome>,
 }
 
@@ -177,10 +186,11 @@ pub const IDLE_FLUSH: Duration = Duration::from_micros(50);
 pub const STARVATION_BUDGET: u64 = 4;
 
 /// What a model thread pulled: a coalesced lane-pure predict batch
-/// (never empty, never crossing a train fence) or a single train job
-/// (the queue is paused until [`ServeQueue::resume`]).
+/// (never empty, never crossing a train fence) tagged with why it was
+/// released, or a single train job (the queue is paused until
+/// [`ServeQueue::resume`]).
 pub enum Batch {
-    Predicts(Vec<PredictJob>),
+    Predicts(Vec<PredictJob>, FlushWhy),
     Train(TrainJob),
 }
 
@@ -279,10 +289,12 @@ impl QueueStats {
 
 /// Why (or for how long not) to flush an open batch — the pure decision
 /// core of the dynamic batcher, factored out so the timing rules are
-/// testable against explicit clock values with no sleeps.
+/// testable against explicit clock values with no sleeps. A flush
+/// carries its [`FlushWhy`] reason, which rides the returned
+/// [`Batch::Predicts`] into the flight recorder.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FlushDecision {
-    Flush,
+    Flush(FlushWhy),
     /// Nothing forces a flush yet: wait at most this many µs for more
     /// arrivals (the earliest of the deadline and the idle window).
     WaitUs(u64),
@@ -319,17 +331,24 @@ pub fn flush_decision(
     max_wait_us: u64,
     idle_us: u64,
 ) -> FlushDecision {
-    if s.len >= s.max_batch || s.barrier_pending || s.closed {
-        return FlushDecision::Flush;
+    if s.len >= s.max_batch {
+        return FlushDecision::Flush(FlushWhy::Full);
+    }
+    if s.barrier_pending {
+        return FlushDecision::Flush(FlushWhy::Fence);
+    }
+    if s.closed {
+        return FlushDecision::Flush(FlushWhy::Closed);
     }
     let deadline = s.opened_us.saturating_add(max_wait_us);
     let idle_deadline = s.opened_us.max(s.last_arrival_us).saturating_add(idle_us);
-    let next = deadline.min(idle_deadline);
-    if now_us >= next {
-        FlushDecision::Flush
-    } else {
-        FlushDecision::WaitUs(next - now_us)
+    if now_us >= deadline {
+        return FlushDecision::Flush(FlushWhy::MaxWait);
     }
+    if now_us >= idle_deadline {
+        return FlushDecision::Flush(FlushWhy::Idle);
+    }
+    FlushDecision::WaitUs(deadline.min(idle_deadline) - now_us)
 }
 
 /// A queued job tagged with its admission sequence number (the
@@ -365,6 +384,36 @@ struct Inner {
     last_arrival_us: [u64; 2],
 }
 
+/// Cached `&'static` admission metric handles, registered once per
+/// queue so the offer/shed hot paths mirror the books into the
+/// process-wide [`crate::obs`] registry with zero lookups. The series
+/// are process-global (standard for a metric registry): two servers in
+/// one process share them.
+struct QueueObs {
+    offered: [&'static crate::obs::Counter; 2],
+    admitted: [&'static crate::obs::Counter; 2],
+    shed_capacity: [&'static crate::obs::Counter; 2],
+    shed_deadline: [&'static crate::obs::Counter; 2],
+}
+
+impl QueueObs {
+    fn new() -> QueueObs {
+        let c = |name: String| crate::obs::counter(&name);
+        QueueObs {
+            offered: Lane::ALL
+                .map(|l| c(format!("serve_offered_total{{lane=\"{}\"}}", l.name()))),
+            admitted: Lane::ALL
+                .map(|l| c(format!("serve_admitted_total{{lane=\"{}\"}}", l.name()))),
+            shed_capacity: Lane::ALL.map(|l| {
+                c(format!("serve_shed_total{{lane=\"{}\",reason=\"capacity\"}}", l.name()))
+            }),
+            shed_deadline: Lane::ALL.map(|l| {
+                c(format!("serve_shed_total{{lane=\"{}\",reason=\"deadline\"}}", l.name()))
+            }),
+        }
+    }
+}
+
 /// The bounded multi-producer multi-consumer queue. Cheap to share
 /// behind an `Arc`; all methods take `&self`.
 pub struct ServeQueue {
@@ -378,6 +427,7 @@ pub struct ServeQueue {
     /// deadline are stamped `now + budget` at admission.
     lane_slo_us: [Option<u64>; 2],
     clock: Arc<dyn Clock>,
+    obs: QueueObs,
 }
 
 impl ServeQueue {
@@ -410,6 +460,7 @@ impl ServeQueue {
             starvation_budget: STARVATION_BUDGET,
             lane_slo_us: [None, None],
             clock,
+            obs: QueueObs::new(),
         }
     }
 
@@ -455,6 +506,7 @@ impl ServeQueue {
     pub fn offer(&self, mut job: PredictJob) -> Admission {
         let li = job.lane.index();
         let now = self.clock.now_us();
+        job.admitted_us = now;
         if job.deadline_us.is_none() {
             job.deadline_us = self.lane_slo_us[li].map(|slo| now.saturating_add(slo));
         }
@@ -464,6 +516,7 @@ impl ServeQueue {
         }
         inner.stats.offered += 1;
         inner.stats.lanes[li].offered += 1;
+        self.obs.offered[li].inc();
         // Dead on arrival: a request already at/past its deadline is a
         // deadline shed, not a capacity signal.
         if job.deadline_us.is_some_and(|d| now >= d) {
@@ -471,6 +524,7 @@ impl ServeQueue {
             inner.stats.shed_deadline += 1;
             inner.stats.lanes[li].shed += 1;
             inner.stats.lanes[li].shed_deadline += 1;
+            self.obs.shed_deadline[li].inc();
             return Admission::Shed;
         }
         if inner.stats.lanes[li].pending >= self.depth {
@@ -478,12 +532,14 @@ impl ServeQueue {
             inner.stats.shed_capacity += 1;
             inner.stats.lanes[li].shed += 1;
             inner.stats.lanes[li].shed_capacity += 1;
+            self.obs.shed_capacity[li].inc();
             return Admission::Shed;
         }
         inner.stats.admitted += 1;
         inner.stats.pending += 1;
         inner.stats.lanes[li].admitted += 1;
         inner.stats.lanes[li].pending += 1;
+        self.obs.admitted[li].inc();
         inner.last_arrival_us[li] = now;
         let seq = inner.next_seq;
         inner.next_seq += 1;
@@ -626,7 +682,7 @@ impl ServeQueue {
     pub fn expire_if_late(&self, job: PredictJob) -> Option<PredictJob> {
         if Self::is_expired(&job, self.clock.now_us()) {
             let mut inner = self.lock();
-            Self::shed_expired(&mut inner, job, false);
+            self.shed_expired(&mut inner, job, false);
             None
         } else {
             Some(job)
@@ -640,7 +696,7 @@ impl ServeQueue {
     /// Reclassify one expired admitted job: `admitted` → `shed_deadline`
     /// (the invariant holds at every instant), tell the waiting client.
     /// `from_lane` also releases the job's pending slot.
-    fn shed_expired(inner: &mut Inner, job: PredictJob, from_lane: bool) {
+    fn shed_expired(&self, inner: &mut Inner, job: PredictJob, from_lane: bool) {
         let li = job.lane.index();
         if from_lane {
             inner.stats.pending -= 1;
@@ -652,6 +708,7 @@ impl ServeQueue {
         inner.stats.shed_deadline += 1;
         inner.stats.lanes[li].shed += 1;
         inner.stats.lanes[li].shed_deadline += 1;
+        self.obs.shed_deadline[li].inc();
         // A client that gave up is not an error.
         let _ = job.resp.send(PredictOutcome::DeadlineShed);
     }
@@ -659,10 +716,10 @@ impl ServeQueue {
     /// Drop expired jobs off a lane's front (batch-build shedding; jobs
     /// behind an unexpired front surface when they reach it — FIFO order
     /// with per-lane budgets means fronts expire first).
-    fn purge_expired_front(inner: &mut Inner, li: usize, now_us: u64) {
+    fn purge_expired_front(&self, inner: &mut Inner, li: usize, now_us: u64) {
         while inner.lanes[li].front().is_some_and(|Seq(_, j)| Self::is_expired(j, now_us)) {
             let Seq(_, job) = inner.lanes[li].pop_front().expect("checked front");
-            Self::shed_expired(inner, job, true);
+            self.shed_expired(inner, job, true);
         }
     }
 
@@ -721,19 +778,22 @@ impl ServeQueue {
                         match inner.orphans.pop_front() {
                             None => break,
                             Some(job) if Self::is_expired(&job, now) => {
-                                Self::shed_expired(&mut inner, job, false);
+                                self.shed_expired(&mut inner, job, false);
                             }
-                            Some(job) => batch.push(job),
+                            Some(mut job) => {
+                                job.assembled_us = now;
+                                batch.push(job);
+                            }
                         }
                     }
                     if !batch.is_empty() {
                         inner.busy += 1;
-                        return Some(Batch::Predicts(batch));
+                        return Some(Batch::Predicts(batch, FlushWhy::Replay));
                     }
                     // Every orphan had expired — fall through.
                 }
                 for li in 0..2 {
-                    Self::purge_expired_front(&mut inner, li, now);
+                    self.purge_expired_front(&mut inner, li, now);
                 }
                 let fence = Self::fence(&inner);
                 let int_ready = Self::lane_ready(&inner, Lane::Interactive, fence);
@@ -779,14 +839,15 @@ impl ServeQueue {
         // held in an *open* batch too, or it could re-broadcast weights
         // while pre-train requests are still unexecuted.
         let li = lane.index();
-        let Seq(_, first) = inner.lanes[li].pop_front().expect("ready lane was empty");
+        let Seq(_, mut first) = inner.lanes[li].pop_front().expect("ready lane was empty");
         inner.stats.pending -= 1;
         inner.stats.lanes[li].pending -= 1;
         inner.busy += 1;
+        let opened_us = self.clock.now_us();
+        first.assembled_us = opened_us;
         let mut batch = Vec::with_capacity(max_batch.min(64));
         batch.push(first);
-        let opened_us = self.clock.now_us();
-        loop {
+        let why = loop {
             // Drain what is already queued (up to the fence), shedding
             // anything that expired while it waited. While a train
             // barrier holds the queue (`paused`), the fence that
@@ -794,14 +855,15 @@ impl ServeQueue {
             // post-barrier arrival can never ride a pre-barrier batch.
             let now = self.clock.now_us();
             while batch.len() < max_batch && !inner.paused {
-                Self::purge_expired_front(&mut inner, li, now);
+                self.purge_expired_front(&mut inner, li, now);
                 let fence = Self::fence(&inner);
                 if !Self::lane_ready(&inner, lane, fence) {
                     break;
                 }
-                let Seq(_, p) = inner.lanes[li].pop_front().expect("ready lane was empty");
+                let Seq(_, mut p) = inner.lanes[li].pop_front().expect("ready lane was empty");
                 inner.stats.pending -= 1;
                 inner.stats.lanes[li].pending -= 1;
+                p.assembled_us = now;
                 batch.push(p);
             }
             let snap = BatchSnapshot {
@@ -815,7 +877,7 @@ impl ServeQueue {
                 closed: inner.closed,
             };
             match flush_decision(&snap, self.clock.now_us(), max_wait_us, idle_us) {
-                FlushDecision::Flush => break,
+                FlushDecision::Flush(why) => break why,
                 FlushDecision::WaitUs(wait_us) => {
                     let (guard, _timeout) = self
                         .nonempty
@@ -824,8 +886,8 @@ impl ServeQueue {
                     inner = guard;
                 }
             }
-        }
-        Some(Batch::Predicts(batch))
+        };
+        Some(Batch::Predicts(batch, why))
     }
 }
 
@@ -847,7 +909,15 @@ mod tests {
     fn lane_job(v: f32, lane: Lane) -> (PredictJob, Receiver<PredictOutcome>) {
         let (tx, rx) = channel();
         (
-            PredictJob { x: img(v), active_classes: 2, lane, deadline_us: None, resp: tx },
+            PredictJob {
+                x: img(v),
+                active_classes: 2,
+                lane,
+                deadline_us: None,
+                admitted_us: 0,
+                assembled_us: 0,
+                resp: tx,
+            },
             rx,
         )
     }
@@ -860,6 +930,8 @@ mod tests {
                 active_classes: 2,
                 lane: Lane::Interactive,
                 deadline_us: Some(deadline_us),
+                admitted_us: 0,
+                assembled_us: 0,
                 resp: tx,
             },
             rx,
@@ -874,7 +946,7 @@ mod tests {
 
     fn pop_predicts(q: &ServeQueue, max_batch: usize) -> Vec<PredictJob> {
         match q.pop_batch(max_batch, Duration::ZERO) {
-            Some(Batch::Predicts(b)) => {
+            Some(Batch::Predicts(b, _)) => {
                 q.done();
                 b
             }
@@ -993,6 +1065,27 @@ mod tests {
     }
 
     #[test]
+    fn span_stamps_mark_admission_and_assembly() {
+        // The offer stamps `admitted_us`, the batch build stamps
+        // `assembled_us`, and an orphan replay re-stamps assembly so a
+        // recovered request's queue-wait covers its whole saga.
+        let clock = MockClock::shared();
+        let q = ServeQueue::with_clock(16, std::sync::Arc::<MockClock>::clone(&clock));
+        clock.set_us(100);
+        let (j, _rx) = predict_job(1.0);
+        q.offer(j);
+        clock.set_us(250);
+        let batch = pop_predicts(&q, 8);
+        assert_eq!(batch[0].admitted_us, 100);
+        assert_eq!(batch[0].assembled_us, 250);
+        q.abandon(batch);
+        clock.set_us(400);
+        let replay = pop_predicts(&q, 8);
+        assert_eq!(replay[0].admitted_us, 100);
+        assert_eq!(replay[0].assembled_us, 400, "replay must re-stamp assembly");
+    }
+
+    #[test]
     fn orphans_replay_before_lanes_and_fence_trains() {
         // Abandoned jobs are served before queued lane work, and a
         // queued train cannot pop while orphans remain (they were
@@ -1095,8 +1188,9 @@ mod tests {
         // max_batch 3: first pop returns exactly 3 without waiting for
         // the deadline (the batch is already full).
         match q.pop_batch(3, Duration::from_secs(10)) {
-            Some(Batch::Predicts(b)) => {
+            Some(Batch::Predicts(b, why)) => {
                 assert_eq!(b.len(), 3);
+                assert_eq!(why, crate::obs::FlushWhy::Full);
                 q.done();
             }
             _ => panic!("expected predicts"),
@@ -1122,8 +1216,9 @@ mod tests {
         let (p3, _r3) = predict_job(3.0);
         q.offer(p3);
         match q.pop_batch(64, Duration::from_secs(10)) {
-            Some(Batch::Predicts(b)) => {
+            Some(Batch::Predicts(b, why)) => {
                 assert_eq!(b.len(), 2, "batch crossed a train job");
+                assert_eq!(why, crate::obs::FlushWhy::Fence);
                 q.done();
             }
             _ => panic!("expected predicts"),
@@ -1169,7 +1264,7 @@ mod tests {
         let (p, _r) = predict_job(1.0);
         q.offer(p);
         match q.pop_batch(8, Duration::ZERO) {
-            Some(Batch::Predicts(_)) => {}
+            Some(Batch::Predicts(..)) => {}
             _ => panic!("expected predicts"),
         }
         assert_eq!(q.in_flight(), 1);
@@ -1200,29 +1295,44 @@ mod tests {
             barrier_pending: false,
             closed: false,
         };
+        use crate::obs::FlushWhy;
         // Size flush.
-        assert_eq!(flush_decision(&snap(8, 0, 0), 0, 200, 50), FlushDecision::Flush);
+        assert_eq!(
+            flush_decision(&snap(8, 0, 0), 0, 200, 50),
+            FlushDecision::Flush(FlushWhy::Full)
+        );
         // Fresh batch: waits for the idle window first.
         assert_eq!(flush_decision(&snap(1, 100, 100), 100, 200, 50), FlushDecision::WaitUs(50));
         // A later arrival slides the idle deadline forward…
         assert_eq!(flush_decision(&snap(2, 100, 140), 149, 200, 50), FlushDecision::WaitUs(41));
         // …idle window expires with no new arrival → flush (well before
-        // the 200 µs deadline).
-        assert_eq!(flush_decision(&snap(2, 100, 140), 190, 200, 50), FlushDecision::Flush);
+        // the 200 µs deadline), attributed to the idle rule.
+        assert_eq!(
+            flush_decision(&snap(2, 100, 140), 190, 200, 50),
+            FlushDecision::Flush(FlushWhy::Idle)
+        );
         // A steady trickle keeps the idle window alive but the hard
         // deadline caps the hold-open time.
         assert_eq!(flush_decision(&snap(5, 100, 299), 299, 200, 50), FlushDecision::WaitUs(1));
-        assert_eq!(flush_decision(&snap(5, 100, 299), 300, 200, 50), FlushDecision::Flush);
+        assert_eq!(
+            flush_decision(&snap(5, 100, 299), 300, 200, 50),
+            FlushDecision::Flush(FlushWhy::MaxWait)
+        );
         // Stale arrivals (queued long before the pop): the idle window
         // counts from batch open, not from the old arrival stamp.
         assert_eq!(flush_decision(&snap(1, 500, 20), 510, 200, 50), FlushDecision::WaitUs(40));
-        // Train fence or shutdown → immediate flush.
+        // Train fence or shutdown → immediate flush, each with its own
+        // attribution (fence wins over closed only if both are set —
+        // irrelevant in practice, pinned here by checking order).
         let mut fenced = snap(3, 100, 100);
         fenced.barrier_pending = true;
-        assert_eq!(flush_decision(&fenced, 100, 200, 50), FlushDecision::Flush);
+        assert_eq!(flush_decision(&fenced, 100, 200, 50), FlushDecision::Flush(FlushWhy::Fence));
         let mut closing = snap(3, 100, 100);
         closing.closed = true;
-        assert_eq!(flush_decision(&closing, 100, 200, 50), FlushDecision::Flush);
+        assert_eq!(
+            flush_decision(&closing, 100, 200, 50),
+            FlushDecision::Flush(FlushWhy::Closed)
+        );
     }
 
     #[test]
@@ -1240,8 +1350,9 @@ mod tests {
             .collect();
         let t0 = std::time::Instant::now();
         match q.pop_batch(8, Duration::from_secs(10)) {
-            Some(Batch::Predicts(b)) => {
+            Some(Batch::Predicts(b, why)) => {
                 assert_eq!(b.len(), 5);
+                assert_eq!(why, crate::obs::FlushWhy::Idle);
                 q.done();
             }
             _ => panic!("expected predicts"),
@@ -1276,7 +1387,7 @@ mod tests {
         let q = std::sync::Arc::new(ServeQueue::new(4));
         let q2 = std::sync::Arc::clone(&q);
         let t = std::thread::spawn(move || match q2.pop_batch(4, Duration::ZERO) {
-            Some(Batch::Predicts(b)) => {
+            Some(Batch::Predicts(b, _)) => {
                 q2.done();
                 b.len()
             }

@@ -71,6 +71,9 @@ use super::queue::{
     TrainJob,
 };
 use crate::cl::Learner;
+use crate::obs::{
+    self, Event, FlightRecorder, FlushWhy, Histogram, Ring, SpanStamps, STAGES,
+};
 use crate::tensor::Tensor;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -395,7 +398,15 @@ impl ServeClient {
         deadline_us: Option<u64>,
     ) -> Submitted {
         let (tx, rx) = channel::<PredictOutcome>();
-        let job = PredictJob { x: x.clone(), active_classes, lane, deadline_us, resp: tx };
+        let job = PredictJob {
+            x: x.clone(),
+            active_classes,
+            lane,
+            deadline_us,
+            resp: tx,
+            admitted_us: 0,
+            assembled_us: 0,
+        };
         match self.queue.offer(job) {
             Admission::Admitted => Submitted::Pending(rx),
             Admission::Shed => Submitted::Shed,
@@ -536,13 +547,19 @@ struct FaultInjector {
     stall_cv: Condvar,
     released: AtomicBool,
     injected: AtomicU64,
+    /// Replicas whose panic was *injected* — the crash guard dumps the
+    /// flight recorder quietly for these (expected event), loudly for
+    /// organic panics (real bug).
+    injected_panics: Mutex<Vec<usize>>,
 }
 
 impl FaultInjector {
     /// Serve-path fault checkpoint: fire the first due fault targeting
     /// this replica. A panic unwinds from here (the caller's batch is
-    /// already checked in); a stall parks here until release.
-    fn check(&self, replica: usize, now_us: u64) {
+    /// already checked in); a stall parks here until release. The event
+    /// lands in `ring` *before* the fault fires, so the recorder's last
+    /// entry for a dead replica is the fault itself.
+    fn check(&self, replica: usize, now_us: u64, ring: &Ring) {
         let due = {
             let mut pending = self.pending.lock().unwrap_or_else(|e| e.into_inner());
             let idx = pending.iter().position(|f| {
@@ -557,9 +574,23 @@ impl FaultInjector {
         let Some(spec) = due else { return };
         self.injected.fetch_add(1, Ordering::Relaxed);
         match spec.kind {
-            FaultKind::Panic => std::panic::panic_any(InjectedFault { replica }),
-            FaultKind::Stall => self.park(replica),
+            FaultKind::Panic => {
+                ring.push(now_us, Event::FaultPanic);
+                self.injected_panics
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .push(replica);
+                std::panic::panic_any(InjectedFault { replica })
+            }
+            FaultKind::Stall => {
+                ring.push(now_us, Event::FaultStall);
+                self.park(replica)
+            }
         }
+    }
+
+    fn was_injected_panic(&self, replica: usize) -> bool {
+        self.injected_panics.lock().unwrap_or_else(|e| e.into_inner()).contains(&replica)
     }
 
     fn park(&self, replica: usize) {
@@ -600,6 +631,7 @@ struct PoolShared<L: Learner + Send + 'static> {
     retired: Mutex<Vec<bool>>,
     live: AtomicUsize,
     injector: FaultInjector,
+    recorder: Arc<FlightRecorder>,
     handles: Mutex<Vec<JoinHandle<ReplicaExit<L>>>>,
     replays: AtomicU64,
     replicas_lost: AtomicU64,
@@ -628,7 +660,8 @@ impl<L: Learner + Send + 'static> PoolShared<L> {
                 Arc::clone(&cancels[replica])
             };
             cancel.store(true, Ordering::Release);
-            self.live.fetch_sub(1, Ordering::AcqRel);
+            let live = self.live.fetch_sub(1, Ordering::AcqRel) - 1;
+            obs::gauge("serve_live_replicas").set(live as i64);
             self.queue.poke();
         }
         newly
@@ -641,8 +674,14 @@ impl<L: Learner + Send + 'static> PoolShared<L> {
     /// abort everything still queued.
     fn requeue_stolen(&self, stolen: Vec<Flight>) {
         let alive = self.live.load(Ordering::Acquire) > 0;
+        let now = self.queue.clock().now_us();
         for flight in stolen {
             self.replays.fetch_add(1, Ordering::Relaxed);
+            // The steal lands on the *owner's* timeline, whether it came
+            // from the owner's own crash guard or the watchdog.
+            if let Some(ring) = self.recorder.existing(flight.owner) {
+                ring.push(now, Event::Stolen { jobs: flight.jobs.len() as u64 });
+            }
             if alive {
                 // Abandon before done(): a barrier leader waking from
                 // wait_quiesced is guaranteed to see these orphans.
@@ -670,6 +709,11 @@ impl<L: Learner + Send + 'static> PoolShared<L> {
             }
             self.requeue_stolen(vec![flight]);
         }
+        if recovered > 0 {
+            // A watchdog steal means a replica wedged — dump the event
+            // timeline loudly; it is the postmortem for the retirement.
+            self.recorder.dump("watchdog steal", false);
+        }
         recovered
     }
 }
@@ -688,7 +732,8 @@ fn spawn_replica<L: Learner + Send + 'static>(shared: &Arc<PoolShared<L>>, learn
         inbox.push(None);
         id
     };
-    shared.live.fetch_add(1, Ordering::AcqRel);
+    let live = shared.live.fetch_add(1, Ordering::AcqRel) + 1;
+    obs::gauge("serve_live_replicas").set(live as i64);
     let shared2 = Arc::clone(shared);
     let handle = std::thread::Builder::new()
         .name(format!("tinycl-serve-{id}"))
@@ -696,6 +741,56 @@ fn spawn_replica<L: Learner + Send + 'static>(shared: &Arc<PoolShared<L>>, learn
         .expect("spawning a serve replica thread");
     shared.handles.lock().unwrap_or_else(|e| e.into_inner()).push(handle);
     id
+}
+
+/// Per-replica observability handles, resolved once per model thread so
+/// the serve hot path records spans and counters with zero registry
+/// lookups (registration takes the registry mutex once here; recording
+/// is lock-free sharded atomics, and a no-op under `obs-off` or the
+/// runtime kill-switch).
+struct ReplicaObs {
+    /// This replica's flight-recorder event ring.
+    ring: Arc<Ring>,
+    /// `serve_stage_us{stage,lane}`, indexed `[stage][lane]`.
+    stage: [[&'static Histogram; 2]; 4],
+    /// `serve_e2e_us{lane}` — server-side admission→respond.
+    e2e: [&'static Histogram; 2],
+    /// `serve_answered_total{lane}`.
+    answered: [&'static obs::Counter; 2],
+    /// `serve_flush_total{why}`, indexed by `FlushWhy as usize`.
+    flush: [&'static obs::Counter; 6],
+    /// `serve_replica_compute_us` — the batched-forward bracket.
+    compute: &'static Histogram,
+    /// `serve_barrier_us` — quiesce→resume held by a barrier leader.
+    barrier: &'static Histogram,
+}
+
+impl ReplicaObs {
+    fn new(recorder: &FlightRecorder, replica: usize) -> ReplicaObs {
+        let h = |name: String| obs::histogram(&name);
+        ReplicaObs {
+            ring: recorder.ring(replica),
+            stage: STAGES.map(|s| {
+                Lane::ALL.map(|l| {
+                    h(format!("serve_stage_us{{stage=\"{}\",lane=\"{}\"}}", s.name(), l.name()))
+                })
+            }),
+            e2e: Lane::ALL.map(|l| h(format!("serve_e2e_us{{lane=\"{}\"}}", l.name()))),
+            answered: Lane::ALL
+                .map(|l| obs::counter(&format!("serve_answered_total{{lane=\"{}\"}}", l.name()))),
+            flush: [
+                FlushWhy::Full,
+                FlushWhy::MaxWait,
+                FlushWhy::Idle,
+                FlushWhy::Fence,
+                FlushWhy::Closed,
+                FlushWhy::Replay,
+            ]
+            .map(|w| obs::counter(&format!("serve_flush_total{{why=\"{}\"}}", w.name()))),
+            compute: h("serve_replica_compute_us".to_string()),
+            barrier: h("serve_barrier_us".to_string()),
+        }
+    }
 }
 
 /// What a replica thread hands back at exit.
@@ -726,6 +821,12 @@ impl<L: Learner + Send + 'static> Drop for CrashGuard<L> {
         self.shared.retire_slot(self.replica);
         let stolen = self.shared.flights.steal_from(self.replica);
         self.shared.requeue_stolen(stolen);
+        // An injected kill is an expected, attributable event — record
+        // the dump for tests but keep stderr clean. An organic panic is
+        // a real bug: dump loudly so the event timeline rides along
+        // with the panic message.
+        let quiet = self.shared.injector.was_injected_panic(self.replica);
+        self.shared.recorder.dump(&format!("replica {} panicked", self.replica), quiet);
     }
 }
 
@@ -795,6 +896,7 @@ impl<L: Learner + Send + 'static> Server<L> {
                 pending: Mutex::new(plan.faults),
                 ..FaultInjector::default()
             },
+            recorder: FlightRecorder::new(),
             handles: Mutex::new(Vec::new()),
             replays: AtomicU64::new(0),
             replicas_lost: AtomicU64::new(0),
@@ -863,6 +965,13 @@ impl<L: Learner + Send + 'static> Server<L> {
         self.shared.scan_stalled(max_age)
     }
 
+    /// The pool's flight recorder: per-replica bounded event rings
+    /// (flushes, barriers, faults, steals, resyncs), dumped
+    /// automatically on organic panic, watchdog steal and shutdown.
+    pub fn flight_recorder(&self) -> Arc<FlightRecorder> {
+        Arc::clone(&self.shared.recorder)
+    }
+
     /// Rendezvous with an injected [`FaultKind::Stall`]: block until at
     /// least `n` replicas are parked (no sleeps in tests).
     pub fn fault_wait_stalled(&self, n: usize) {
@@ -916,6 +1025,9 @@ impl<L: Learner + Send + 'static> Server<L> {
                 }
             }
         }
+        // Quiet dump: retain the full event timeline for inspection
+        // (tests, `obs::last_dump`) without spamming a clean shutdown.
+        shared.recorder.dump("shutdown", true);
         exits.sort_by_key(|e| (e.retired, e.id));
         let mut merged = ServerStats::default();
         let mut learners = Vec::with_capacity(exits.len());
@@ -943,6 +1055,7 @@ fn adopt<L: Learner + Send + 'static>(
     shared: &PoolShared<L>,
     learner: &mut L,
     stats: &mut ServerStats,
+    ring: &Ring,
 ) {
     let slot = shared.inbox.lock().unwrap_or_else(|e| e.into_inner())[replica].take();
     match slot {
@@ -950,6 +1063,7 @@ fn adopt<L: Learner + Send + 'static>(
         Some(Resync::Full(fresh)) => {
             *learner = fresh;
             stats.resyncs += 1;
+            ring.push(shared.queue.clock().now_us(), Event::Resync { diff: false, bytes: 0 });
         }
         Some(Resync::Diff(src)) => {
             let src = src.lock().unwrap_or_else(|e| e.into_inner());
@@ -958,12 +1072,17 @@ fn adopt<L: Learner + Send + 'static>(
                     stats.resyncs += 1;
                     stats.resyncs_diff += 1;
                     stats.resync_diff_bytes += bytes;
+                    ring.push(shared.queue.clock().now_us(), Event::Resync { diff: true, bytes });
                 }
                 None => {
                     *learner = src
                         .clone_replica()
                         .expect("diff re-sync fallback requires clone_replica");
                     stats.resyncs += 1;
+                    ring.push(
+                        shared.queue.clock().now_us(),
+                        Event::Resync { diff: false, bytes: 0 },
+                    );
                 }
             }
         }
@@ -980,6 +1099,7 @@ fn serve_jobs<L: Learner + Send + 'static>(
     jobs: Vec<PredictJob>,
     stats: &mut ServerStats,
     owes_done: bool,
+    robs: &ReplicaObs,
 ) {
     let queue = &shared.queue;
     // Last deadline check before compute: anything that expired while
@@ -1005,8 +1125,11 @@ fn serve_jobs<L: Learner + Send + 'static>(
         // death or stall here exercises full recovery. Barrier-inline
         // serving skips it — a fault while the pool is paused would
         // wedge the barrier, not a replica.
-        shared.injector.check(replica, queue.clock().now_us());
+        shared.injector.check(replica, queue.clock().now_us(), &robs.ring);
     }
+    // The compute bracket opens after the fault checkpoint: a released
+    // stall's park time stays out of the compute stage.
+    let compute_start_us = queue.clock().now_us();
     // One packed forward per active-head group (requests virtually
     // always share one head, so this is one `predict_batch` for the
     // whole coalesced batch).
@@ -1031,6 +1154,8 @@ fn serve_jobs<L: Learner + Send + 'static>(
             preds[i] = p;
         }
     }
+    let compute_end_us = queue.clock().now_us();
+    obs::record_us(robs.compute, compute_end_us.saturating_sub(compute_start_us));
     let Some(flight) = shared.flights.complete(lease) else {
         // The watchdog stole this lease mid-compute: the batch is being
         // replayed elsewhere, the stealer settled the done() — discard
@@ -1043,6 +1168,21 @@ fn serve_jobs<L: Learner + Send + 'static>(
     *stats.batch_hist.entry(batch_size).or_insert(0) += 1;
     let done_us = queue.clock().now_us();
     for (job, pred) in flight.jobs.into_iter().zip(preds) {
+        if obs::enabled() {
+            let li = job.lane.index();
+            let span = SpanStamps {
+                admitted_us: job.admitted_us,
+                assembled_us: job.assembled_us,
+                compute_start_us,
+                compute_end_us,
+                done_us,
+            };
+            for (si, &us) in span.stage_us().iter().enumerate() {
+                obs::record_us(robs.stage[si][li], us);
+            }
+            obs::record_us(robs.e2e[li], span.e2e_us());
+            robs.answered[li].inc();
+        }
         // A client that gave up is not an error.
         let _ = job
             .resp
@@ -1062,16 +1202,20 @@ fn lead_barrier<L: Learner + Send + 'static>(
     shared: &Arc<PoolShared<L>>,
     job: TrainJob,
     stats: &mut ServerStats,
+    robs: &ReplicaObs,
 ) {
     let queue = &shared.queue;
+    let barrier_open_us = queue.clock().now_us();
+    robs.ring.push(barrier_open_us, Event::BarrierEnter);
     queue.wait_quiesced();
     let resume_guard = ResumeGuard { queue };
+    robs.ring.push(queue.clock().now_us(), Event::BarrierQuiesced);
     // Orphans abandoned by a dead replica were all admitted before this
     // barrier — answer them here, on pre-update weights, exactly as the
     // stream order promises.
     let orphans = queue.take_orphans();
     if !orphans.is_empty() {
-        serve_jobs(replica, learner, shared, orphans, stats, false);
+        serve_jobs(replica, learner, shared, orphans, stats, false, robs);
     }
     let loss = if job.cut == 0 {
         learner.train_step(&job.x, job.label, job.active_classes, job.lr)
@@ -1087,6 +1231,7 @@ fn lead_barrier<L: Learner + Send + 'static>(
         learner.train_latent_batch(&act_refs, &[job.label], job.cut, job.active_classes, job.lr)
     };
     stats.train_steps += 1;
+    robs.ring.push(queue.clock().now_us(), Event::Train { cut: job.cut as u64 });
     // Autoscale (retire side) before broadcasting so a retiring replica
     // doesn't get a pointless snapshot; spawn side after, so a newborn
     // (already current) doesn't get a redundant one.
@@ -1158,6 +1303,9 @@ fn lead_barrier<L: Learner + Send + 'static>(
             .push((queue.clock().now_us(), live, live + spawn_n));
     }
     drop(resume_guard); // reopen the queue
+    let barrier_done_us = queue.clock().now_us();
+    robs.ring.push(barrier_done_us, Event::BarrierResume { spawned: spawn_n as u64 });
+    obs::record_us(robs.barrier, barrier_done_us.saturating_sub(barrier_open_us));
     let _ = job.resp.send(loss);
 }
 
@@ -1172,25 +1320,35 @@ fn model_loop<L: Learner + Send + 'static>(
     let guard = CrashGuard { shared: Arc::clone(shared), replica };
     let mut stats = ServerStats::default();
     let cfg = shared.cfg;
+    let robs = ReplicaObs::new(&shared.recorder, replica);
+    robs.ring.push(shared.queue.clock().now_us(), Event::ReplicaStart);
     while let Some(batch) =
         shared.queue.pop_batch_cancellable(cfg.max_batch, cfg.max_wait, cancel)
     {
         // Another replica may have led a train barrier while this one
         // slept in pop_batch: adopt the re-broadcast weights *before*
         // executing anything popped after that barrier.
-        adopt(replica, shared, &mut learner, &mut stats);
+        adopt(replica, shared, &mut learner, &mut stats, &robs.ring);
         match batch {
-            Batch::Predicts(jobs) => {
-                serve_jobs(replica, &mut learner, shared, jobs, &mut stats, true);
+            Batch::Predicts(jobs, why) => {
+                robs.ring.push(
+                    shared.queue.clock().now_us(),
+                    Event::Flush { why, batch: jobs.len() as u64 },
+                );
+                robs.flush[why as usize].inc();
+                serve_jobs(replica, &mut learner, shared, jobs, &mut stats, true, &robs);
             }
-            Batch::Train(job) => lead_barrier(replica, &mut learner, shared, job, &mut stats),
+            Batch::Train(job) => {
+                lead_barrier(replica, &mut learner, shared, job, &mut stats, &robs)
+            }
         }
     }
     // The final barrier may have been led by another replica after this
     // one's last pop: adopt before handing the learner back so shutdown
     // returns bit-identical live replicas.
-    adopt(replica, shared, &mut learner, &mut stats);
+    adopt(replica, shared, &mut learner, &mut stats, &robs.ring);
     let retired = shared.retired.lock().unwrap_or_else(|e| e.into_inner())[replica];
+    robs.ring.push(shared.queue.clock().now_us(), Event::ReplicaExit);
     drop(guard); // normal exit: thread::panicking() is false → no-op
     ReplicaExit { id: replica, retired, learner, stats }
 }

@@ -98,8 +98,33 @@ pub struct RunStats {
     pub by_op: BTreeMap<OpKind, OpStats>,
 }
 
+/// Process-wide re-export of simulator activity into the metric
+/// registry: `(cycles, mults, adds, reads, writes)`.
+fn sim_obs() -> &'static [&'static crate::obs::Counter; 5] {
+    static CELLS: std::sync::OnceLock<[&'static crate::obs::Counter; 5]> =
+        std::sync::OnceLock::new();
+    CELLS.get_or_init(|| {
+        [
+            crate::obs::counter("sim_cycles_total"),
+            crate::obs::counter("sim_mults_total"),
+            crate::obs::counter("sim_adds_total"),
+            crate::obs::counter("sim_sram_reads_total"),
+            crate::obs::counter("sim_sram_writes_total"),
+        ]
+    })
+}
+
 impl RunStats {
+    // Export happens here and only here: `merge` re-aggregates stats
+    // that already passed through `record`, so counting there would
+    // double-book every merged epoch.
     pub fn record(&mut self, kind: OpKind, stats: OpStats) {
+        let [cycles, mults, adds, reads, writes] = sim_obs();
+        cycles.add(stats.cycles);
+        mults.add(stats.mults);
+        adds.add(stats.adds);
+        reads.add(stats.total_reads());
+        writes.add(stats.total_writes());
         *self.by_op.entry(kind).or_default() += stats;
     }
 

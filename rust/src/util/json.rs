@@ -1,0 +1,296 @@
+//! The one hand-rolled JSON writer.
+//!
+//! PRs 4–8 each grew their own `format!`-based emitter
+//! (`serve/metrics.rs`, `benches/speedup.rs`, `cl/bench.rs`), all three
+//! re-deriving string escaping (i.e. not doing it) and float formatting.
+//! This module replaces them with a single value tree + builder so every
+//! `BENCH_*.json` and metrics snapshot goes through the same escaper.
+//!
+//! Policy decisions, made once here:
+//!
+//! - **Strings** are escaped per RFC 8259: `"` and `\` are backslash
+//!   escaped, control characters (< 0x20) become `\n`/`\r`/`\t` or
+//!   `\u00XX`. Keys are strings and get the same treatment — a
+//!   "malformed" key (embedded quote, newline) emits as valid JSON
+//!   rather than corrupting the document.
+//! - **Non-finite floats** (`NaN`, `±Inf`) emit as `null`. JSON has no
+//!   spelling for them, and a bench emitting `NaN` bare would produce a
+//!   document every strict parser rejects — `null` keeps the document
+//!   loadable and makes the absent measurement visible downstream.
+//!   `-0.0` emits as `-0.0` (it round-trips).
+//! - **Fixed-precision floats** (`Json::fixed`) keep the benches'
+//!   human-diffable output stable across PRs; `Json::f64` uses Rust's
+//!   shortest round-trip repr.
+//!
+//! No third-party deps (the vendor set has no serde) and no reader —
+//! the repo only ever *emits* JSON.
+
+use std::fmt::Write as _;
+
+/// A JSON value tree. Construct leaves via the `From` impls or the
+/// float constructors, objects via [`Obj`], arrays from `Vec<Json>`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// A pre-rendered numeric token (always valid JSON by construction).
+    Num(String),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Shortest round-trip float repr; `NaN`/`±Inf` become `null`.
+    pub fn f64(v: f64) -> Json {
+        if v.is_finite() {
+            let mut s = format!("{v}");
+            // `format!("{}", 1.0)` prints "1" — valid JSON, but keep a
+            // decimal point so readers see a float-typed field.
+            if !s.contains('.') && !s.contains('e') && !s.contains("inf") {
+                s.push_str(".0");
+            }
+            Json::Num(s)
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Fixed-precision float (the benches' stable output format);
+    /// `NaN`/`±Inf` become `null`.
+    pub fn fixed(v: f64, decimals: usize) -> Json {
+        if v.is_finite() {
+            Json::Num(format!("{v:.decimals$}"))
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Render compactly (no whitespace).
+    pub fn to_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Render with `indent`-space indentation and a trailing newline —
+    /// the `BENCH_*.json` house style.
+    pub fn to_pretty(&self, indent: usize) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(indent), 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(s) => out.push_str(s),
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    item.write(out, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, depth + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                newline_indent(out, indent, depth);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
+    if let Some(n) = indent {
+        out.push('\n');
+        for _ in 0..n * depth {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Num(v.to_string())
+    }
+}
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::Num(v.to_string())
+    }
+}
+impl From<u32> for Json {
+    fn from(v: u32) -> Json {
+        Json::Num(v.to_string())
+    }
+}
+impl From<i64> for Json {
+    fn from(v: i64) -> Json {
+        Json::Num(v.to_string())
+    }
+}
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::f64(v)
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Json {
+        Json::Arr(v)
+    }
+}
+impl From<Obj> for Json {
+    fn from(o: Obj) -> Json {
+        Json::Obj(o.0)
+    }
+}
+
+/// Ordered object builder: fields emit in insertion order, so emitted
+/// documents stay byte-diffable across runs.
+#[derive(Clone, Debug, Default)]
+pub struct Obj(Vec<(String, Json)>);
+
+impl Obj {
+    pub fn new() -> Obj {
+        Obj(Vec::new())
+    }
+
+    pub fn put(&mut self, key: &str, value: impl Into<Json>) -> &mut Obj {
+        self.0.push((key.to_string(), value.into()));
+        self
+    }
+
+    /// `put` only when the value is present — optional bench fields.
+    pub fn put_opt(&mut self, key: &str, value: Option<impl Into<Json>>) -> &mut Obj {
+        if let Some(v) = value {
+            self.0.push((key.to_string(), v.into()));
+        }
+        self
+    }
+
+    pub fn build(&mut self) -> Json {
+        Json::Obj(std::mem::take(&mut self.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_hostile_strings_and_keys() {
+        let mut o = Obj::new();
+        o.put("quote\"backslash\\", "line\nbreak\ttab\rret");
+        o.put("ctrl", "\u{1}bell\u{7}");
+        let s = o.build().to_compact();
+        assert_eq!(
+            s,
+            "{\"quote\\\"backslash\\\\\":\"line\\nbreak\\ttab\\rret\",\
+             \"ctrl\":\"\\u0001bell\\u0007\"}"
+        );
+    }
+
+    #[test]
+    fn non_finite_floats_emit_null() {
+        let mut o = Obj::new();
+        o.put("nan", f64::NAN);
+        o.put("inf", f64::INFINITY);
+        o.put("ninf", Json::fixed(f64::NEG_INFINITY, 2));
+        o.put("ok", Json::fixed(1.23456, 2));
+        assert_eq!(
+            o.build().to_compact(),
+            "{\"nan\":null,\"inf\":null,\"ninf\":null,\"ok\":1.23}"
+        );
+    }
+
+    #[test]
+    fn floats_round_trip_and_keep_a_decimal_point() {
+        assert_eq!(Json::f64(1.0).to_compact(), "1.0");
+        assert_eq!(Json::f64(0.1).to_compact(), "0.1");
+        assert_eq!(Json::f64(-0.0).to_compact(), "-0.0");
+        assert_eq!(Json::f64(1e300).to_compact(), "1e300");
+        assert_eq!(Json::fixed(2.0, 0).to_compact(), "2");
+    }
+
+    #[test]
+    fn pretty_printing_matches_the_bench_house_style() {
+        let mut inner = Obj::new();
+        inner.put("x", 1usize);
+        let mut o = Obj::new();
+        o.put("bench", "demo");
+        o.put("geometry", inner.build());
+        o.put("list", vec![Json::from(1u64), Json::from(2u64)]);
+        o.put("empty", Obj::new().build());
+        let s = o.build().to_pretty(2);
+        let want = "{\n  \"bench\": \"demo\",\n  \"geometry\": {\n    \"x\": 1\n  },\n  \
+                    \"list\": [\n    1,\n    2\n  ],\n  \"empty\": {}\n}\n";
+        assert_eq!(s, want);
+    }
+
+    #[test]
+    fn unicode_passes_through_unescaped() {
+        assert_eq!(Json::from("µs ✓").to_compact(), "\"µs ✓\"");
+    }
+}

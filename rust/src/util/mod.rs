@@ -7,6 +7,7 @@
 
 pub mod cli;
 pub mod config;
+pub mod json;
 pub mod pool;
 pub mod proptest;
 pub mod rng;

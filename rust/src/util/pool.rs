@@ -74,6 +74,30 @@ pub fn col_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// `(dispatches, tasks, inline)` counters for the shared worker pool:
+/// fan-outs that reached the queue, shards handed to workers (the
+/// caller always keeps shard 0), and fan-outs that ran entirely on the
+/// caller's thread. `tasks / dispatches` ≈ average fan-out width;
+/// `inline` dominating means problems are landing under `MT_MIN_MACS`.
+fn pool_obs() -> (
+    &'static crate::obs::Counter,
+    &'static crate::obs::Counter,
+    &'static crate::obs::Counter,
+) {
+    static CELLS: OnceLock<(
+        &'static crate::obs::Counter,
+        &'static crate::obs::Counter,
+        &'static crate::obs::Counter,
+    )> = OnceLock::new();
+    *CELLS.get_or_init(|| {
+        (
+            crate::obs::counter("pool_dispatches_total"),
+            crate::obs::counter("pool_tasks_total"),
+            crate::obs::counter("pool_inline_total"),
+        )
+    })
+}
+
 struct Pool {
     tx: Mutex<Sender<Job>>,
     workers: usize,
@@ -103,6 +127,7 @@ fn pool() -> &'static Pool {
                 spawned += 1;
             }
         }
+        crate::obs::gauge("pool_workers").set(spawned as i64);
         Pool { tx: Mutex::new(tx), workers: spawned }
     })
 }
@@ -185,17 +210,22 @@ pub fn run<F: Fn(usize) + Sync>(tasks: usize, f: F) {
     if tasks == 0 {
         return;
     }
+    let (dispatches, shard_tasks, inline) = pool_obs();
     if tasks == 1 {
+        inline.inc();
         f(0);
         return;
     }
     let p = pool();
     if p.workers == 0 {
+        inline.inc();
         for i in 0..tasks {
             f(i);
         }
         return;
     }
+    dispatches.inc();
+    shard_tasks.add((tasks - 1) as u64);
     let latch = Latch::new(tasks - 1);
     {
         // Erase the borrow lifetimes: the `WaitOnDrop` guard below keeps

@@ -192,6 +192,97 @@ fn killing_the_last_replica_closes_clients_instead_of_hanging() {
     assert_eq!(stats.served, 0);
 }
 
+/// Serializes the flight-recorder tests: `obs::recorder::last_dump` is
+/// process-wide, so dump-asserting tests must not interleave.
+#[cfg(not(feature = "obs-off"))]
+static DUMP_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// An injected panic must leave a readable flight-recorder timeline:
+/// the fault event lands in the ring *before* the panic fires, the ring
+/// outlives its replica, and the crash guard dumps the timeline.
+#[cfg(not(feature = "obs-off"))]
+#[test]
+fn injected_panic_leaves_a_flight_recorder_timeline() {
+    let _g = DUMP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let model = Model::new(tiny(), 7);
+    let cfg = ServerConfig { max_batch: 1, replicas: 1, ..ServerConfig::default() };
+    let server = Server::start_with_faults(
+        model,
+        cfg,
+        MockClock::shared(),
+        FaultPlan::new().kill(FaultTarget::Any, 0),
+    );
+    let client = server.client();
+    let x = Tensor::full(Shape::d3(3, 8, 8), 0.5);
+    assert_eq!(client.predict(&x, 4), Served::Closed);
+
+    // The ring survives its replica's death, fault last.
+    let timeline = server.flight_recorder().render();
+    assert!(timeline.contains("event=replica_start"), "missing start: {timeline}");
+    assert!(timeline.contains("event=fault_panic"), "missing fault: {timeline}");
+
+    // The crash guard dumps on the dying thread (quietly — this panic
+    // was injected) and retains the text; poll briefly for the unwind
+    // to finish rather than sleeping a fixed amount.
+    let mut dumped = false;
+    for _ in 0..400 {
+        if let Some(d) = tinycl::obs::recorder::last_dump() {
+            if d.contains("panicked") && d.contains("event=fault_panic") {
+                dumped = true;
+                break;
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert!(dumped, "no crash-guard dump was retained");
+
+    let (survivors, stats) = server.shutdown_all();
+    assert!(survivors.is_empty());
+    assert_eq!(stats.replicas_lost, 1);
+}
+
+/// A watchdog steal must be attributed to the wedged owner's timeline —
+/// the stall and the steal both ride the owner's ring even though the
+/// owner never ran again — and the scan dumps every ring on the spot.
+#[cfg(not(feature = "obs-off"))]
+#[test]
+fn watchdog_steal_is_attributed_in_the_wedged_owners_ring() {
+    let _g = DUMP_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let clock = MockClock::shared();
+    let cfg = ServerConfig { max_batch: 1, replicas: 2, ..ServerConfig::default() };
+    let server = Server::start_with_faults(
+        Model::new(tiny(), 7),
+        cfg,
+        clock.clone(),
+        FaultPlan::new().stall(FaultTarget::Any, 0),
+    );
+    let client = server.client();
+    let x = Tensor::full(Shape::d3(3, 8, 8), 0.5);
+    let rx = match client.predict_async(&x, 4, Lane::Interactive) {
+        Submitted::Pending(rx) => rx,
+        _ => panic!("admission refused an empty queue"),
+    };
+    server.fault_wait_stalled(1);
+    clock.advance_us(2_000_000);
+    assert_eq!(server.watchdog_scan(std::time::Duration::from_secs(1)), 1);
+
+    // The scan dumped synchronously before returning.
+    let dump = tinycl::obs::recorder::last_dump().expect("the watchdog scan must dump");
+    assert!(dump.contains("watchdog steal"), "wrong dump reason: {dump}");
+    let timeline = server.flight_recorder().render();
+    assert!(timeline.contains("event=fault_stall"), "missing stall: {timeline}");
+    assert!(timeline.contains("event=stolen jobs=1"), "missing steal: {timeline}");
+
+    match rx.recv().expect("the stolen batch must be replayed") {
+        PredictOutcome::Answered(resp) => assert_eq!(resp.batch_size, 1),
+        PredictOutcome::DeadlineShed => panic!("no deadline was configured"),
+    }
+    server.fault_release_stalls();
+    let (_, stats) = server.shutdown_all();
+    assert_eq!(stats.batches_stolen, 1);
+    assert_eq!(stats.replays, 1);
+}
+
 /// A stalled replica released by the operator — before any watchdog
 /// scan steals its flight — must finish its own batch normally: one
 /// answer, no steal, no replay, no duplicate on the channel.

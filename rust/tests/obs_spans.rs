@@ -1,0 +1,182 @@
+//! MockClock span determinism (the observability layer's serve-path
+//! acceptance tests): the four lifecycle stages must partition the
+//! server-side end-to-end latency *exactly* on the histograms' lossless
+//! sums, queue-wait must grow with time spent queued, and the runtime
+//! kill-switch must stop span recording without touching serving.
+//!
+//! The metric registry is process-wide and cumulative, so every test
+//! that reads it takes `REGISTRY_LOCK` and asserts only on snapshot
+//! deltas, never absolute values.
+
+#![cfg(not(feature = "obs-off"))]
+
+use std::sync::mpsc::channel;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use tinycl::nn::{Model, ModelConfig};
+use tinycl::obs::{self, HistSnapshot};
+use tinycl::serve::{
+    Admission, Batch, FaultPlan, FaultTarget, Lane, MockClock, PredictJob, PredictOutcome,
+    ServeQueue, Served, Server, ServerConfig, Submitted,
+};
+use tinycl::tensor::{Shape, Tensor};
+
+static REGISTRY_LOCK: Mutex<()> = Mutex::new(());
+
+const ACTIVE: usize = 4;
+
+fn tiny() -> ModelConfig {
+    ModelConfig {
+        in_channels: 3,
+        image_size: 8,
+        conv_channels: 4,
+        num_classes: 4,
+        grad_clip: f32::INFINITY,
+    }
+}
+
+fn interactive_stage_hists() -> [&'static obs::Histogram; 4] {
+    obs::STAGES.map(|s| {
+        obs::histogram(&format!("serve_stage_us{{stage=\"{}\",lane=\"interactive\"}}", s.name()))
+    })
+}
+
+fn e2e_hist() -> &'static obs::Histogram {
+    obs::histogram("serve_e2e_us{lane=\"interactive\"}")
+}
+
+/// Park the only replica mid-batch on the injector's condvar, advance
+/// the MockClock 700 µs, release. All 700 µs must land in the assembly
+/// stage (the compute bracket opens after the fault checkpoint, so a
+/// released stall's park time stays out of compute), and the stage sums
+/// must add up to the end-to-end sum exactly — the
+/// `sum(stage means) == e2e mean` acceptance identity, on lossless sums.
+#[test]
+fn stage_sums_partition_end_to_end_exactly_on_mock_clock() {
+    let _g = REGISTRY_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let stages = interactive_stage_hists();
+    let e2e = e2e_hist();
+    let stages_before: Vec<HistSnapshot> = stages.iter().map(|h| h.snapshot()).collect();
+    let e2e_before = e2e.snapshot();
+    let answered = obs::counter("serve_answered_total{lane=\"interactive\"}");
+    let answered_before = answered.get();
+
+    let clock = MockClock::shared();
+    let cfg = ServerConfig { max_batch: 1, replicas: 1, ..ServerConfig::default() };
+    let server = Server::start_with_faults(
+        Model::new(tiny(), 7),
+        cfg,
+        clock.clone(),
+        FaultPlan::new().stall(FaultTarget::Any, 0),
+    );
+    let client = server.client();
+    let x = Tensor::full(Shape::d3(3, 8, 8), 0.5);
+    let rx = match client.predict_async(&x, ACTIVE, Lane::Interactive) {
+        Submitted::Pending(rx) => rx,
+        _ => panic!("admission refused an empty queue"),
+    };
+    // Condvar rendezvous: the replica is parked between flight check-in
+    // and compute. Everything before the park happened at one clock
+    // instant, so the advance below is the request's only latency.
+    server.fault_wait_stalled(1);
+    clock.advance_us(700);
+    server.fault_release_stalls();
+    match rx.recv().expect("the released replica must answer") {
+        PredictOutcome::Answered(resp) => assert_eq!(resp.batch_size, 1),
+        PredictOutcome::DeadlineShed => panic!("no deadline was configured"),
+    }
+    let (_, stats) = server.shutdown();
+    assert_eq!(stats.served, 1);
+
+    let mut stage_deltas = [0u64; 4];
+    for (i, (h, before)) in stages.iter().zip(&stages_before).enumerate() {
+        let after = h.snapshot();
+        assert_eq!(after.count - before.count, 1, "stage {i} must record exactly once");
+        stage_deltas[i] = after.sum - before.sum;
+    }
+    let e2e_after = e2e.snapshot();
+    assert_eq!(e2e_after.count - e2e_before.count, 1);
+    let e2e_delta = e2e_after.sum - e2e_before.sum;
+
+    assert_eq!(
+        stage_deltas.iter().sum::<u64>(),
+        e2e_delta,
+        "stages must partition end-to-end: {stage_deltas:?} vs {e2e_delta}"
+    );
+    // All parked time belongs to assembly; nothing else saw time move.
+    assert_eq!(stage_deltas, [0, 700, 0, 0]);
+    assert_eq!(e2e_delta, 700);
+    assert_eq!(answered.get() - answered_before, 1);
+}
+
+/// Queue-wait is the admission→assembly stamp gap: while nothing pops
+/// (a paused pool), it grows µs-for-µs with the clock, and a request
+/// arriving right at the pop shows none.
+#[test]
+fn queue_wait_grows_while_the_queue_sits_unpopped() {
+    let clock = MockClock::shared();
+    let queue = ServeQueue::with_clock(16, clock.clone());
+    let job = || {
+        let (tx, rx) = channel::<PredictOutcome>();
+        (
+            PredictJob {
+                x: Tensor::full(Shape::d1(4), 0.5),
+                active_classes: ACTIVE,
+                lane: Lane::Interactive,
+                deadline_us: None,
+                admitted_us: 0,
+                assembled_us: 0,
+                resp: tx,
+            },
+            rx,
+        )
+    };
+
+    clock.set_us(1_000);
+    let (a, _rx_a) = job();
+    assert_eq!(queue.offer(a), Admission::Admitted);
+    // Nobody pops for 150 µs — the pause every µs of which must be
+    // charged to A's queue-wait.
+    clock.advance_us(150);
+    let (b, _rx_b) = job();
+    assert_eq!(queue.offer(b), Admission::Admitted);
+
+    let batch = queue.pop_batch(8, Duration::ZERO).expect("queue is open with work queued");
+    match batch {
+        Batch::Predicts(jobs, _) => {
+            assert_eq!(jobs.len(), 2);
+            assert_eq!(jobs[0].assembled_us - jobs[0].admitted_us, 150);
+            assert_eq!(jobs[1].assembled_us - jobs[1].admitted_us, 0);
+            // One batch build: both assembled at the same instant.
+            assert_eq!(jobs[0].assembled_us, jobs[1].assembled_us);
+        }
+        Batch::Train(_) => panic!("no train was queued"),
+    }
+    queue.done();
+}
+
+/// The runtime kill-switch must stop span recording on the serve path
+/// end-to-end: a request served with obs disabled answers normally but
+/// leaves no trace in the histograms.
+#[test]
+fn kill_switch_stops_span_recording_end_to_end() {
+    let _g = REGISTRY_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let e2e = e2e_hist();
+    let before = e2e.snapshot();
+
+    obs::set_enabled(false);
+    let server = Server::start_with_clock(
+        Model::new(tiny(), 7),
+        ServerConfig { max_batch: 1, replicas: 1, ..ServerConfig::default() },
+        MockClock::shared(),
+    );
+    let client = server.client();
+    let x = Tensor::full(Shape::d3(3, 8, 8), 0.5);
+    assert!(matches!(client.predict(&x, ACTIVE), Served::Ok { .. }));
+    let (_, stats) = server.shutdown();
+    obs::set_enabled(true);
+
+    assert_eq!(stats.served, 1, "the kill-switch must not affect serving itself");
+    assert_eq!(e2e.snapshot().count, before.count, "disabled obs still recorded a span");
+}

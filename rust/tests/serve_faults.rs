@@ -88,6 +88,8 @@ fn deadline_grid_splits_admission_and_batch_build_sheds() {
             active_classes: ACTIVE,
             lane: Lane::Interactive,
             deadline_us,
+            admitted_us: 0,
+            assembled_us: 0,
             resp: tx,
         };
         (j, rx)
@@ -116,7 +118,7 @@ fn deadline_grid_splits_admission_and_batch_build_sheds() {
     clock.advance_us(150);
     let batch = queue.pop_batch(8, Duration::ZERO).expect("queue is open with D queued");
     match batch {
-        Batch::Predicts(jobs) => {
+        Batch::Predicts(jobs, _) => {
             assert_eq!(jobs.len(), 1);
             assert_eq!(jobs[0].deadline_us, Some(1_000_000));
         }

@@ -9,8 +9,8 @@
 use std::sync::mpsc::{channel, Receiver};
 use std::time::Duration;
 use tinycl::serve::{
-    flush_decision, Admission, Batch, BatchSnapshot, Clock, FlushDecision, Lane, MockClock,
-    PredictJob, PredictOutcome, ServeQueue, Served, Server, ServerConfig, TrainJob,
+    flush_decision, Admission, Batch, BatchSnapshot, Clock, FlushDecision, FlushWhy, Lane,
+    MockClock, PredictJob, PredictOutcome, ServeQueue, Served, Server, ServerConfig, TrainJob,
     STARVATION_BUDGET,
 };
 use tinycl::tensor::{Shape, Tensor};
@@ -21,7 +21,18 @@ fn img(v: f32) -> Tensor<f32> {
 
 fn job(v: f32, lane: Lane) -> (PredictJob, Receiver<PredictOutcome>) {
     let (tx, rx) = channel();
-    (PredictJob { x: img(v), active_classes: 2, lane, deadline_us: None, resp: tx }, rx)
+    (
+        PredictJob {
+            x: img(v),
+            active_classes: 2,
+            lane,
+            deadline_us: None,
+            admitted_us: 0,
+            assembled_us: 0,
+            resp: tx,
+        },
+        rx,
+    )
 }
 
 fn train() -> TrainJob {
@@ -33,7 +44,7 @@ fn train() -> TrainJob {
 /// the ids are encoded in the image values.
 fn pop_ids(q: &ServeQueue, max_batch: usize) -> (Lane, Vec<i32>) {
     match q.pop_batch(max_batch, Duration::ZERO) {
-        Some(Batch::Predicts(b)) => {
+        Some(Batch::Predicts(b, _)) => {
             q.done();
             let lane = b[0].lane;
             assert!(b.iter().all(|j| j.lane == lane), "batches must be lane-pure");
@@ -190,7 +201,7 @@ fn train_barrier_waits_for_open_and_in_flight_batches() {
     let q = std::sync::Arc::new(ServeQueue::new(64));
     let (a, _rx) = job(0.0, Lane::Interactive);
     q.offer(a);
-    assert!(matches!(q.pop_batch(8, Duration::ZERO), Some(Batch::Predicts(_))));
+    assert!(matches!(q.pop_batch(8, Duration::ZERO), Some(Batch::Predicts(..))));
     assert_eq!(q.in_flight(), 1);
     q.push_train(train());
     assert!(matches!(q.pop_batch(8, Duration::ZERO), Some(Batch::Train(_))));
@@ -231,25 +242,27 @@ fn flush_policy_on_a_mock_clock() {
     snap.last_arrival_us = clock.now_us();
     snap.len = 2;
     assert_eq!(decide(&snap, clock.now_us()), FlushDecision::WaitUs(50));
-    // Quiet for the whole window → flush, 120 µs before the deadline.
+    // Quiet for the whole window → flush, 120 µs before the deadline,
+    // attributed to the idle rule.
     clock.advance_us(idle_us);
-    assert_eq!(decide(&snap, clock.now_us()), FlushDecision::Flush);
+    assert_eq!(decide(&snap, clock.now_us()), FlushDecision::Flush(FlushWhy::Idle));
     // A steady trickle re-arms idle forever, but the deadline caps it:
     // at opened+200 the batch flushes no matter how recent the arrival.
     let mut trickle = snap;
     trickle.last_arrival_us = opened + 199;
     assert_eq!(decide(&trickle, opened + 199), FlushDecision::WaitUs(1));
-    assert_eq!(decide(&trickle, opened + 200), FlushDecision::Flush);
-    // Size, fence and shutdown flush immediately regardless of time.
+    assert_eq!(decide(&trickle, opened + 200), FlushDecision::Flush(FlushWhy::MaxWait));
+    // Size, fence and shutdown flush immediately regardless of time —
+    // each attributed to its own cause (the flight recorder records it).
     let mut full = snap;
     full.len = full.max_batch;
-    assert_eq!(decide(&full, opened), FlushDecision::Flush);
+    assert_eq!(decide(&full, opened), FlushDecision::Flush(FlushWhy::Full));
     let mut fenced = snap;
     fenced.barrier_pending = true;
-    assert_eq!(decide(&fenced, opened), FlushDecision::Flush);
+    assert_eq!(decide(&fenced, opened), FlushDecision::Flush(FlushWhy::Fence));
     let mut closing = snap;
     closing.closed = true;
-    assert_eq!(decide(&closing, opened), FlushDecision::Flush);
+    assert_eq!(decide(&closing, opened), FlushDecision::Flush(FlushWhy::Closed));
 }
 
 #[test]
