@@ -1,0 +1,237 @@
+"""Differential oracle for the continual-learning retention metrics and
+the multi-task stream generators (rust/src/cl/metrics.rs,
+rust/src/data/synthetic.rs).
+
+Pure-python, no third-party deps: runnable standalone
+(``python3 python/tests/test_retention.py``) or under pytest.
+
+Two halves, both pinned against the exact constants the Rust unit
+tests assert, so the suites must agree on the same numbers or one of
+them drifted:
+
+* **Accuracy-matrix math** — ``R[i][j]`` is accuracy on task *j* after
+  training task *i* (lower-triangular, filled row by row). Per-task
+  final accuracy is the last row; forgetting for task *j < T-1* is
+  ``max_{j<=i<T-1} R[i][j] - R[T-1][j]`` (the last task contributes 0);
+  backward transfer is ``R[T-1][j] - R[j][j]``; retention is
+  ``R[T-1][j] / max_{j<=i<=T-1} R[i][j]`` with the 0/0 case defined as
+  1.0 (nothing learned => nothing forgotten). The aggregates are the
+  means over the first T-1 tasks. Degenerate single-task and all-zero
+  matrices are covered explicitly.
+
+* **Stream generators** — ``splitmix64``, the Fisher-Yates
+  class-partition shuffle, and the three task schedules (roundrobin /
+  blocked / random) mirrored constant-for-constant: same seed => same
+  schedule, partitions are disjoint and exhaustive, and every schedule
+  position is addressable without generating its prefix.
+"""
+
+MASK = (1 << 64) - 1
+
+
+# ---- accuracy-matrix math (mirror of cl::metrics) --------------------
+
+def accuracy_per_task(r):
+    return list(r[-1])
+
+
+def forgetting_per_task(r):
+    t = len(r)
+    last = r[-1]
+    out = []
+    for j in range(t):
+        if j + 1 >= t:
+            out.append(0.0)
+            continue
+        best = max(r[i][j] for i in range(j, t - 1))
+        out.append(best - last[j])
+    return out
+
+
+def backward_transfer_per_task(r):
+    t = len(r)
+    last = r[-1]
+    return [last[j] - r[j][j] if j + 1 < t else 0.0 for j in range(t)]
+
+
+def retention_per_task(r):
+    t = len(r)
+    last = r[-1]
+    out = []
+    for j in range(t):
+        best = max(r[i][j] for i in range(j, t))
+        out.append(1.0 if best == 0.0 else last[j] / best)
+    return out
+
+
+def forgetting(r):
+    t = len(r)
+    if t < 2:
+        return 0.0
+    return sum(forgetting_per_task(r)[: t - 1]) / (t - 1)
+
+
+def backward_transfer(r):
+    t = len(r)
+    if t < 2:
+        return 0.0
+    return sum(backward_transfer_per_task(r)[: t - 1]) / (t - 1)
+
+
+def final_average(r):
+    return sum(r[-1]) / len(r[-1])
+
+
+# ---- stream generators (mirror of data::synthetic) -------------------
+
+def splitmix64(seed):
+    z = (seed + 0x9E37_79B9_7F4A_7C15) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK
+    return z ^ (z >> 31)
+
+
+def task_class_partition(num_classes, num_tasks, seed):
+    assert 0 < num_tasks <= num_classes
+    classes = list(range(num_classes))
+    for i in range(num_classes - 1, 0, -1):
+        j = splitmix64(seed ^ i) % (i + 1)
+        classes[i], classes[j] = classes[j], classes[i]
+    base, extra = divmod(num_classes, num_tasks)
+    parts, at = [], 0
+    for t in range(num_tasks):
+        take = base + (1 if t < extra else 0)
+        parts.append(classes[at:at + take])
+        at += take
+    return parts
+
+
+def task_for(schedule, i, n, k, seed):
+    assert k > 0
+    if schedule == "roundrobin":
+        return i % k
+    if schedule == "blocked":
+        return 0 if n == 0 else min((i * k) // n, k - 1)
+    if schedule == "random":
+        h = splitmix64(seed ^ ((i * 0xD6E8_FEB8_6659_FD93) & MASK))
+        return h % k
+    raise ValueError(schedule)
+
+
+# ---- tests -----------------------------------------------------------
+
+def assert_close(a, b, what):
+    assert abs(a - b) < 1e-12, f"{what}: {a} vs {b}"
+
+
+def test_perfect_memory_no_forgetting():
+    r = [[0.9], [0.9, 0.8], [0.9, 0.8, 0.85]]
+    assert_close(final_average(r), 0.85, "final_average")
+    assert backward_transfer(r) == 0.0
+    assert forgetting(r) == 0.0
+    assert retention_per_task(r) == [1.0, 1.0, 1.0]
+
+
+def test_catastrophic_forgetting_detected():
+    r = [[0.95], [0.10, 0.95]]
+    assert backward_transfer(r) < -0.8
+    assert forgetting(r) > 0.8
+    assert_close(forgetting_per_task(r)[0], 0.85, "forgetting[0]")
+    assert_close(retention_per_task(r)[0], 0.10 / 0.95, "retention[0]")
+
+
+def test_per_task_vectors_match_aggregates():
+    # Task 0 peaks after task 1, then collapses — forgetting is measured
+    # against the best intermediate, never just the diagonal.
+    r = [[0.5], [0.9, 0.9], [0.1, 0.9, 0.9]]
+    assert accuracy_per_task(r) == [0.1, 0.9, 0.9]
+    assert forgetting_per_task(r) == [0.8, 0.0, 0.0]
+    assert_close(forgetting(r), (0.8 + 0.0) / 2.0, "forgetting")
+    b = backward_transfer_per_task(r)
+    assert_close(b[0], 0.1 - 0.5, "bwt[0]")
+    assert b[1] == 0.0 and b[2] == 0.0
+    assert_close(backward_transfer(r), (b[0] + b[1]) / 2.0, "bwt")
+    ret = retention_per_task(r)
+    assert_close(ret[0], 0.1 / 0.9, "retention[0]")
+    assert ret[1] == 1.0 and ret[2] == 1.0
+
+
+def test_single_task_degenerate():
+    r = [[0.7]]
+    assert accuracy_per_task(r) == [0.7]
+    assert forgetting_per_task(r) == [0.0]
+    assert backward_transfer_per_task(r) == [0.0]
+    assert retention_per_task(r) == [1.0]
+    assert forgetting(r) == 0.0 and backward_transfer(r) == 0.0
+    assert_close(final_average(r), 0.7, "final_average")
+
+
+def test_all_zero_retention_is_one():
+    # A task that never learned anything has nothing to forget:
+    # retention 1.0 by definition, never 0/0.
+    r = [[0.0], [0.0, 0.0]]
+    assert retention_per_task(r) == [1.0, 1.0]
+    assert forgetting_per_task(r) == [0.0, 0.0]
+
+
+def test_splitmix64_is_the_rust_splitmix64():
+    # Reference values of the standard splitmix64 stream — the same
+    # constants the Rust side hard-codes.
+    assert splitmix64(0) == 0xE220A8397B1DCDAF
+    assert splitmix64(1) == 0x910A2DEC89025CC1
+    # Deterministic and 64-bit clean.
+    for s in (0, 1, 42, MASK):
+        assert splitmix64(s) == splitmix64(s)
+        assert 0 <= splitmix64(s) <= MASK
+
+
+def test_partition_is_disjoint_exhaustive_and_seeded():
+    for num_classes, num_tasks in [(10, 3), (8, 8), (4, 1), (7, 2)]:
+        for seed in (3, 11, 99):
+            parts = task_class_partition(num_classes, num_tasks, seed)
+            assert parts == task_class_partition(num_classes, num_tasks, seed)
+            flat = sorted(c for p in parts for c in p)
+            assert flat == list(range(num_classes)), "not a partition"
+            sizes = [len(p) for p in parts]
+            assert max(sizes) - min(sizes) <= 1, "not near-equal"
+            # The first num_classes % num_tasks tasks take the extra.
+            base, extra = divmod(num_classes, num_tasks)
+            assert sizes == [base + (1 if t < extra else 0)
+                             for t in range(num_tasks)]
+    # Different seeds give different shuffles (for a space this large).
+    assert task_class_partition(10, 3, 3) != task_class_partition(10, 3, 4)
+
+
+def test_schedules_are_deterministic_and_cover_tasks():
+    n, k, seed = 96, 3, 7
+    for schedule in ("roundrobin", "blocked", "random"):
+        a = [task_for(schedule, i, n, k, seed) for i in range(n)]
+        b = [task_for(schedule, i, n, k, seed) for i in range(n)]
+        assert a == b, f"{schedule} is not deterministic"
+        assert all(0 <= t < k for t in a)
+        assert sorted(set(a)) == list(range(k)), f"{schedule} skipped a task"
+    # Roundrobin is literally i % k; blocked is monotone contiguous.
+    assert [task_for("roundrobin", i, n, k, seed) for i in range(6)] == \
+        [0, 1, 2, 0, 1, 2]
+    blocked = [task_for("blocked", i, n, k, seed) for i in range(n)]
+    assert blocked == sorted(blocked)
+    assert blocked.count(0) == blocked.count(1) == blocked.count(2) == n // k
+    # Random depends on the seed, and positions are addressable out of
+    # order (pure in i).
+    r7 = [task_for("random", i, n, k, 7) for i in range(n)]
+    r8 = [task_for("random", i, n, k, 8) for i in range(n)]
+    assert r7 != r8
+    assert task_for("random", 50, n, k, 7) == r7[50]
+
+
+def main():
+    tests = [(n, f) for n, f in sorted(globals().items())
+             if n.startswith("test_") and callable(f)]
+    for name, fn in tests:
+        fn()
+        print(f"  ok {name}")
+    print(f"test_retention: {len(tests)} passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -62,14 +62,65 @@ impl AccuracyMatrix {
         if t < 2 {
             return 0.0;
         }
-        let last = &self.r[t - 1];
-        let sum: f64 = (0..t - 1)
+        let sum: f64 = self.forgetting_per_task().iter().take(t - 1).sum();
+        sum / (t - 1) as f64
+    }
+
+    /// Final accuracy per task: the last row, one entry per task — what
+    /// the deployed model scores on each task after the whole schedule.
+    pub fn accuracy_per_task(&self) -> Vec<f64> {
+        self.r.last().expect("empty matrix").clone()
+    }
+
+    /// Per-task forgetting: for task j < T−1,
+    /// `max_{j ≤ i < T−1} R[i][j] − R[T−1][j]` (how far the final
+    /// accuracy fell from the best it ever was before the last task);
+    /// the last task contributes 0 by convention (nothing trained after
+    /// it). [`AccuracyMatrix::forgetting`] is the mean of the first
+    /// T−1 entries.
+    pub fn forgetting_per_task(&self) -> Vec<f64> {
+        let t = self.r.len();
+        let last = self.r.last().expect("empty matrix");
+        (0..t)
             .map(|j| {
+                if j + 1 >= t {
+                    return 0.0;
+                }
                 let best = (j..t - 1).map(|i| self.r[i][j]).fold(f64::MIN, f64::max);
                 best - last[j]
             })
-            .sum();
-        sum / (t - 1) as f64
+            .collect()
+    }
+
+    /// Per-task backward transfer: `R[T−1][j] − R[j][j]` for j < T−1
+    /// (how training later tasks moved task j relative to right after
+    /// its own training); the last task contributes 0.
+    /// [`AccuracyMatrix::backward_transfer`] is the mean of the first
+    /// T−1 entries.
+    pub fn backward_transfer_per_task(&self) -> Vec<f64> {
+        let t = self.r.len();
+        let last = self.r.last().expect("empty matrix");
+        (0..t).map(|j| if j + 1 < t { last[j] - self.r[j][j] } else { 0.0 }).collect()
+    }
+
+    /// Per-task retention: final accuracy over the best accuracy the
+    /// task ever had (`R[T−1][j] / max_{j ≤ i ≤ T−1} R[i][j]`), 1.0
+    /// when the best is 0 (nothing learned ⇒ nothing forgotten). A
+    /// perfectly isolated multi-head model retains exactly 1.0 on every
+    /// task it stops training.
+    pub fn retention_per_task(&self) -> Vec<f64> {
+        let t = self.r.len();
+        let last = self.r.last().expect("empty matrix");
+        (0..t)
+            .map(|j| {
+                let best = (j..t).map(|i| self.r[i][j]).fold(f64::MIN, f64::max);
+                if best == 0.0 {
+                    1.0
+                } else {
+                    last[j] / best
+                }
+            })
+            .collect()
     }
 }
 
@@ -164,6 +215,45 @@ mod tests {
         assert_eq!(m.backward_transfer(), 0.0);
         assert_eq!(m.forgetting(), 0.0);
         assert!((m.final_average() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_task_vectors_match_aggregates() {
+        let m = matrix(&[&[0.5], &[0.9, 0.9], &[0.1, 0.9, 0.9]]);
+        let acc = m.accuracy_per_task();
+        assert_eq!(acc, vec![0.1, 0.9, 0.9]);
+        let f = m.forgetting_per_task();
+        // j=0: best over rows 0..2 is 0.9, last 0.1 → 0.8; j=1: 0.0;
+        // j=2 (last task): 0 by convention.
+        assert_eq!(f, vec![0.8, 0.0, 0.0]);
+        assert!((m.forgetting() - (0.8 + 0.0) / 2.0).abs() < 1e-12);
+        let b = m.backward_transfer_per_task();
+        assert!((b[0] - (0.1 - 0.5)).abs() < 1e-12);
+        assert_eq!(b[1], 0.0);
+        assert_eq!(b[2], 0.0);
+        assert!((m.backward_transfer() - (b[0] + b[1]) / 2.0).abs() < 1e-12);
+        let r = m.retention_per_task();
+        assert!((r[0] - 0.1 / 0.9).abs() < 1e-12);
+        assert_eq!(r[1], 1.0);
+        assert_eq!(r[2], 1.0);
+    }
+
+    #[test]
+    fn per_task_degenerate_single_task() {
+        let m = matrix(&[&[0.7]]);
+        assert_eq!(m.accuracy_per_task(), vec![0.7]);
+        assert_eq!(m.forgetting_per_task(), vec![0.0]);
+        assert_eq!(m.backward_transfer_per_task(), vec![0.0]);
+        assert_eq!(m.retention_per_task(), vec![1.0]);
+    }
+
+    #[test]
+    fn per_task_all_zero_retention_is_one() {
+        // A task that never learned anything has nothing to forget:
+        // retention 1.0, not 0/0.
+        let m = matrix(&[&[0.0], &[0.0, 0.0]]);
+        assert_eq!(m.retention_per_task(), vec![1.0, 1.0]);
+        assert_eq!(m.forgetting_per_task(), vec![0.0, 0.0]);
     }
 
     #[test]

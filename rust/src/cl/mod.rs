@@ -60,6 +60,40 @@ pub fn train_batch_sequential<L: Learner + ?Sized>(
     sum / xs.len() as f32
 }
 
+/// Group-and-swap mixed-task routing fallback: samples grouped by
+/// (task, active mask), each head swapped in via
+/// [`Learner::set_active_task`], results assembled in input order, the
+/// entry task restored. Shared by the trait's default
+/// `predict_batch_tasks` and by backend dispatchers whose variants lack
+/// a native router, so the two can never drift.
+pub fn default_predict_batch_tasks<L: Learner + ?Sized>(
+    learner: &mut L,
+    xs: &[&Tensor<f32>],
+    tasks: &[usize],
+    actives: &[usize],
+) -> Vec<usize> {
+    assert_eq!(xs.len(), tasks.len(), "batch inputs vs tasks");
+    assert_eq!(xs.len(), actives.len(), "batch inputs vs active masks");
+    let entry = learner.active_task();
+    let mut groups: std::collections::BTreeMap<(usize, usize), Vec<usize>> =
+        std::collections::BTreeMap::new();
+    for (i, (&t, &a)) in tasks.iter().zip(actives).enumerate() {
+        groups.entry((t, a)).or_default().push(i);
+    }
+    let mut out = vec![0usize; xs.len()];
+    for ((task, active), idxs) in groups {
+        learner
+            .set_active_task(task)
+            .unwrap_or_else(|e| panic!("predict routed to a missing head: {e}"));
+        let gxs: Vec<&Tensor<f32>> = idxs.iter().map(|&i| xs[i]).collect();
+        for (&i, p) in idxs.iter().zip(learner.predict_batch(&gxs, active)) {
+            out[i] = p;
+        }
+    }
+    learner.set_active_task(entry).expect("entry task vanished during routing");
+    out
+}
+
 /// A trainable classifier backend. `active_classes` masks the head to the
 /// classes seen so far — the paper's dense layer "output features' value
 /// … is not static and changes during the operation" (§III-F-4).
@@ -186,6 +220,73 @@ pub trait Learner {
     fn weights_bytes(&self) -> Option<u64> {
         None
     }
+
+    // ---- Multi-task heads (PR 10) -----------------------------------
+    //
+    // A multi-task backend shares one backbone across K dense heads:
+    // zero parameter growth outside the head itself. Single-head
+    // backends keep the defaults below — task 0 is the only task and
+    // routing degenerates to the plain batched predict.
+
+    /// Number of task heads this backend serves (single-head backends: 1).
+    fn num_tasks(&self) -> usize {
+        1
+    }
+
+    /// Add a fresh dense head with `classes` outputs, deterministic in
+    /// `seed`. Returns the new task id, or `None` when the backend
+    /// ships a fixed single-head program (the cycle-accurate device,
+    /// the AOT XLA executable) — like `clone_replica`, a runtime
+    /// capability so multi-task serving can refuse an unsupported
+    /// backend with an actionable error instead of a panic mid-run.
+    fn add_task_head(&mut self, _classes: usize, _seed: u64) -> Option<usize> {
+        None
+    }
+
+    /// Switch the active head. Task 0 always exists; switching to a
+    /// missing head returns an actionable error (never panics or
+    /// silently serves the wrong head).
+    fn set_active_task(&mut self, task: usize) -> Result<(), String> {
+        if task == 0 {
+            Ok(())
+        } else {
+            Err(format!("backend has a single head; task {task} does not exist"))
+        }
+    }
+
+    /// The task whose head is active.
+    fn active_task(&self) -> usize {
+        0
+    }
+
+    /// Freeze the shared backbone so training moves only the active
+    /// head (the serve barrier's head-only diff case). Returns whether
+    /// the backend honors the flag.
+    fn set_freeze_backbone(&mut self, _freeze: bool) -> bool {
+        false
+    }
+
+    /// Route a mixed-task batch: `tasks[i]` selects sample i's head,
+    /// `actives[i]` masks its logits. The default groups samples by
+    /// (task, mask), swaps each head in via [`Learner::set_active_task`]
+    /// and delegates to [`Learner::predict_batch`], restoring the entry
+    /// task ([`default_predict_batch_tasks`]) — correct for any backend;
+    /// multi-task backends override with one shared backbone pass over
+    /// the whole batch.
+    fn predict_batch_tasks(
+        &mut self,
+        xs: &[&Tensor<f32>],
+        tasks: &[usize],
+        actives: &[usize],
+    ) -> Vec<usize> {
+        default_predict_batch_tasks(self, xs, tasks, actives)
+    }
+
+    /// Bytes of the *active* head — the entire per-task parameter
+    /// growth — or `None` when the backend has no head accounting.
+    fn head_bytes(&self) -> Option<u64> {
+        None
+    }
 }
 
 impl Learner for crate::nn::Model {
@@ -266,5 +367,39 @@ impl Learner for crate::nn::Model {
 
     fn weights_bytes(&self) -> Option<u64> {
         Some(crate::nn::Model::weights_bytes(self))
+    }
+
+    fn num_tasks(&self) -> usize {
+        crate::nn::Model::num_tasks(self)
+    }
+
+    fn add_task_head(&mut self, classes: usize, seed: u64) -> Option<usize> {
+        Some(crate::nn::Model::add_task_head(self, classes, seed))
+    }
+
+    fn set_active_task(&mut self, task: usize) -> Result<(), String> {
+        crate::nn::Model::set_active_task(self, task)
+    }
+
+    fn active_task(&self) -> usize {
+        crate::nn::Model::active_task(self)
+    }
+
+    fn set_freeze_backbone(&mut self, freeze: bool) -> bool {
+        crate::nn::Model::set_freeze_backbone(self, freeze);
+        true
+    }
+
+    fn predict_batch_tasks(
+        &mut self,
+        xs: &[&Tensor<f32>],
+        tasks: &[usize],
+        actives: &[usize],
+    ) -> Vec<usize> {
+        crate::nn::Model::predict_batch_tasks(self, xs, tasks, actives)
+    }
+
+    fn head_bytes(&self) -> Option<u64> {
+        Some(crate::nn::Model::head_bytes(self, crate::nn::Model::active_task(self)))
     }
 }

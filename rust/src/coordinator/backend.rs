@@ -215,6 +215,39 @@ impl Backend {
             _ => None,
         }
     }
+
+    /// One FNV-1a fingerprint per task head over the head's exact bit
+    /// pattern (f32 bits; Q4.12 words via their injective f32 image) —
+    /// the bit-exactness witness the multitask rung and the isolation
+    /// tests compare across train barriers and replicas. `None` for
+    /// backends without host-visible heads.
+    pub fn head_fingerprints(&self) -> Option<Vec<u64>> {
+        fn fnv<I: Iterator<Item = u64>>(words: I) -> u64 {
+            let mut h = 0xCBF2_9CE4_8422_2325u64;
+            for w in words {
+                for byte in w.to_le_bytes() {
+                    h ^= byte as u64;
+                    h = h.wrapping_mul(0x0000_0100_0000_01B3);
+                }
+            }
+            h
+        }
+        match self {
+            Backend::F32(m) => Some(
+                (0..m.num_tasks())
+                    .map(|t| fnv(m.head_view(t).data().iter().map(|v| v.to_bits() as u64)))
+                    .collect(),
+            ),
+            Backend::Qnn { model, .. } => Some(
+                (0..model.num_tasks())
+                    .map(|t| {
+                        fnv(model.head_view(t).data().iter().map(|v| v.to_f32().to_bits() as u64))
+                    })
+                    .collect(),
+            ),
+            _ => None,
+        }
+    }
 }
 
 impl Learner for Backend {
@@ -369,6 +402,87 @@ impl Learner for Backend {
         match self {
             Backend::F32(m) => Some(m.weights_bytes()),
             Backend::Qnn { model, .. } => Some(model.weights_bytes()),
+            _ => None,
+        }
+    }
+
+    fn num_tasks(&self) -> usize {
+        match self {
+            Backend::F32(m) => m.num_tasks(),
+            Backend::Qnn { model, .. } => model.num_tasks(),
+            // Device/XLA programs ship one fixed head.
+            _ => 1,
+        }
+    }
+
+    fn add_task_head(&mut self, classes: usize, seed: u64) -> Option<usize> {
+        match self {
+            Backend::F32(m) => Some(m.add_task_head(classes, seed)),
+            Backend::Qnn { model, .. } => Some(model.add_task_head(classes, seed)),
+            _ => None,
+        }
+    }
+
+    fn set_active_task(&mut self, task: usize) -> Result<(), String> {
+        match self {
+            Backend::F32(m) => m.set_active_task(task),
+            Backend::Qnn { model, .. } => model.set_active_task(task),
+            other if task == 0 => {
+                let _ = other;
+                Ok(())
+            }
+            other => Err(format!(
+                "the {} backend ships a fixed single-head program; task {task} does not exist",
+                other.kind().name()
+            )),
+        }
+    }
+
+    fn active_task(&self) -> usize {
+        match self {
+            Backend::F32(m) => m.active_task(),
+            Backend::Qnn { model, .. } => model.active_task(),
+            _ => 0,
+        }
+    }
+
+    fn set_freeze_backbone(&mut self, freeze: bool) -> bool {
+        match self {
+            Backend::F32(m) => {
+                m.set_freeze_backbone(freeze);
+                true
+            }
+            Backend::Qnn { model, .. } => {
+                model.set_freeze_backbone(freeze);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn predict_batch_tasks(
+        &mut self,
+        xs: &[&Tensor<f32>],
+        tasks: &[usize],
+        actives: &[usize],
+    ) -> Vec<usize> {
+        match self {
+            Backend::F32(m) => m.predict_batch_tasks(xs, tasks, actives),
+            Backend::Qnn { model, .. } => {
+                let xqs: Vec<Tensor<Fx>> = xs.iter().map(|x| quantize_tensor(x)).collect();
+                let refs: Vec<&Tensor<Fx>> = xqs.iter().collect();
+                model.predict_batch_tasks(&refs, tasks, actives)
+            }
+            // Device/XLA backends: the trait's group-and-swap default
+            // (degenerates to plain predict for all-task-0 traffic).
+            _ => crate::cl::default_predict_batch_tasks(self, xs, tasks, actives),
+        }
+    }
+
+    fn head_bytes(&self) -> Option<u64> {
+        match self {
+            Backend::F32(m) => Some(m.head_bytes(m.active_task())),
+            Backend::Qnn { model, .. } => Some(model.head_bytes(model.active_task())),
             _ => None,
         }
     }

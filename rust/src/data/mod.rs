@@ -10,7 +10,9 @@
 
 mod synthetic;
 
-pub use synthetic::{Dataset, Sample, SyntheticCifar};
+pub use synthetic::{
+    splitmix64, task_class_partition, Dataset, Sample, SyntheticCifar, TaskSchedule,
+};
 
 use crate::fixed::Fx;
 use crate::tensor::Tensor;

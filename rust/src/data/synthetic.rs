@@ -57,6 +57,101 @@ impl Dataset {
     }
 }
 
+/// SplitMix64: one 64-bit hash step per index. Stateless (any index is
+/// addressable directly), trivially mirrored by the pure-Python
+/// differential tests — the seed substrate for the task-stream
+/// generators below.
+pub fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Disjoint near-equal class partition for a K-task class-incremental
+/// split: classes are shuffled (Fisher–Yates over [`splitmix64`]) then
+/// chunked, the first `num_classes % num_tasks` tasks taking one extra
+/// class. Same seed ⇒ same partition; every class lands in exactly one
+/// task.
+pub fn task_class_partition(num_classes: usize, num_tasks: usize, seed: u64) -> Vec<Vec<usize>> {
+    assert!(num_tasks > 0, "partition needs at least one task");
+    assert!(
+        num_tasks <= num_classes,
+        "cannot split {num_classes} classes across {num_tasks} tasks"
+    );
+    let mut classes: Vec<usize> = (0..num_classes).collect();
+    for i in (1..num_classes).rev() {
+        let j = (splitmix64(seed ^ i as u64) % (i as u64 + 1)) as usize;
+        classes.swap(i, j);
+    }
+    let base = num_classes / num_tasks;
+    let extra = num_classes % num_tasks;
+    let mut parts = Vec::with_capacity(num_tasks);
+    let mut at = 0;
+    for t in 0..num_tasks {
+        let take = base + usize::from(t < extra);
+        parts.push(classes[at..at + take].to_vec());
+        at += take;
+    }
+    parts
+}
+
+/// How a request stream interleaves its tasks — the task-incremental
+/// generators driving the multi-task serve rung and its tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskSchedule {
+    /// Request i → task `i % K`: maximal interleaving, every coalesced
+    /// batch mixes tasks (the shared-backbone router's worst case).
+    RoundRobin,
+    /// Contiguous task blocks (`i·K/n`): the classic task-incremental
+    /// stream — one task at a time, a hard switch between them.
+    Blocked,
+    /// Seeded uniform task draw per request ([`splitmix64`] on the
+    /// index): same seed ⇒ same schedule.
+    Random,
+}
+
+impl TaskSchedule {
+    pub fn parse(s: &str) -> Option<TaskSchedule> {
+        match s {
+            "roundrobin" => Some(TaskSchedule::RoundRobin),
+            "blocked" => Some(TaskSchedule::Blocked),
+            "random" => Some(TaskSchedule::Random),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskSchedule::RoundRobin => "roundrobin",
+            TaskSchedule::Blocked => "blocked",
+            TaskSchedule::Random => "random",
+        }
+    }
+
+    /// Task id for request `i` of a stream of `n` across `k` tasks.
+    /// Pure in (i, n, k, seed) — any position is addressable without
+    /// generating its prefix, so concurrent load clients stay
+    /// deterministic.
+    pub fn task_for(&self, i: usize, n: usize, k: usize, seed: u64) -> usize {
+        assert!(k > 0, "schedule needs at least one task");
+        match self {
+            TaskSchedule::RoundRobin => i % k,
+            TaskSchedule::Blocked => {
+                if n == 0 {
+                    0
+                } else {
+                    ((i * k) / n).min(k - 1)
+                }
+            }
+            TaskSchedule::Random => {
+                let h = splitmix64(seed ^ (i as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93));
+                (h % k as u64) as usize
+            }
+        }
+    }
+}
+
 /// Generator configuration.
 #[derive(Clone, Debug)]
 pub struct SyntheticCifar {
@@ -143,6 +238,46 @@ impl SyntheticCifar {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn partition_is_disjoint_exhaustive_and_seeded() {
+        for &(c, k) in &[(10usize, 3usize), (10, 10), (4, 3), (7, 2)] {
+            let a = task_class_partition(c, k, 42);
+            let b = task_class_partition(c, k, 42);
+            assert_eq!(a, b, "same seed must give the same partition");
+            let mut seen: Vec<usize> = a.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..c).collect::<Vec<_>>(), "({c},{k}) not a partition");
+            let sizes: Vec<usize> = a.iter().map(Vec::len).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "({c},{k}) sizes unbalanced: {sizes:?}");
+        }
+        assert_ne!(
+            task_class_partition(10, 3, 1),
+            task_class_partition(10, 3, 2),
+            "different seeds should shuffle differently"
+        );
+    }
+
+    #[test]
+    fn schedules_are_deterministic_and_cover_tasks() {
+        let (n, k) = (60, 3);
+        for sched in [TaskSchedule::RoundRobin, TaskSchedule::Blocked, TaskSchedule::Random] {
+            let a: Vec<usize> = (0..n).map(|i| sched.task_for(i, n, k, 9)).collect();
+            let b: Vec<usize> = (0..n).map(|i| sched.task_for(i, n, k, 9)).collect();
+            assert_eq!(a, b, "{} not seed-deterministic", sched.name());
+            assert!(a.iter().all(|&t| t < k));
+            for t in 0..k {
+                assert!(a.contains(&t), "{} never scheduled task {t}", sched.name());
+            }
+            assert_eq!(TaskSchedule::parse(sched.name()), Some(sched));
+        }
+        // Blocked = contiguous non-decreasing runs; roundrobin cycles.
+        let blocked: Vec<usize> =
+            (0..n).map(|i| TaskSchedule::Blocked.task_for(i, n, k, 0)).collect();
+        assert!(blocked.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(TaskSchedule::RoundRobin.task_for(7, n, k, 0), 1);
+    }
 
     #[test]
     fn generation_is_deterministic() {

@@ -99,8 +99,14 @@ SUBCOMMANDS
              and an SLO-attainment rung at 0.9× the knee with
              serve-while-learning on, per-request deadlines, a
              watchdog, the autoscaler healing an injected replica
-             kill mid-run, and diff-only weight re-broadcast
+             kill mid-run, and diff-only weight re-broadcast, plus a
+             multitask rung: K per-task dense heads on one shared
+             frozen backbone behind the task router, head-only train
+             bursts through the serve path, bit-exact head-isolation /
+             zero-growth-byte / equal-load-throughput gates
              --backend f32|f32-fast|qnn|sim (default: both fast backends)
+             --tasks K (multitask head count, default 3; ≤ 1 skips)
+             --task-schedule roundrobin|blocked|random (load interleave)
              --clients N (default 8) --requests N (default 2000)
              --max-batch N (default 64) --max-wait-us N (default 200)
              --queue-depth N (shed beyond it per lane; default

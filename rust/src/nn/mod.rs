@@ -23,5 +23,6 @@ pub mod relu;
 pub mod sgd;
 
 pub use model::{
-    BatchTrainOutput, Engine, Gradients, Model, ModelConfig, Params, TrainOutput, MAX_CUT,
+    fresh_head, BatchTrainOutput, Engine, Gradients, Model, ModelConfig, Params, TrainOutput,
+    MAX_CUT,
 };

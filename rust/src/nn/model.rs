@@ -281,6 +281,21 @@ pub struct Model {
     /// last update. Diff sync copies exactly the tensors whose stamp
     /// differs from the source snapshot's.
     tensor_versions: [u64; 3],
+    /// Per-task dense heads (always ≥ 1). The *active* head's live
+    /// tensor is `params.w`; `heads[active_task]` is a stale
+    /// placeholder parked there by the last head swap. Heads may be
+    /// narrower than `config.num_classes` (a task classifies only its
+    /// own class slice), which is what keeps per-task growth small.
+    heads: Vec<Tensor<f32>>,
+    /// Version stamp of each *parked* head (`head_versions[active_task]`
+    /// is stale; the active head's stamp lives in `tensor_versions[2]`).
+    head_versions: Vec<u64>,
+    /// Which head `params.w` currently is.
+    active_task: usize,
+    /// When set, training moves only the active dense head — the conv
+    /// backbone is shared across tasks and stays frozen, so a train
+    /// barrier's diff re-broadcast ships one head, not the model.
+    freeze_backbone: bool,
 }
 
 impl Model {
@@ -304,6 +319,7 @@ impl Model {
             ),
             w: super::init::dense_weights(&mut rng, config.dense_in(), config.num_classes),
         };
+        let heads = vec![params.w.clone()];
         Model {
             config,
             params,
@@ -313,6 +329,10 @@ impl Model {
             scratch: RefCell::new(Scratch::default()),
             version: 0,
             tensor_versions: [0; 3],
+            heads,
+            head_versions: vec![0],
+            active_task: 0,
+            freeze_backbone: false,
         }
     }
 
@@ -321,6 +341,7 @@ impl Model {
             params.w.shape(),
             &Shape::d2(config.dense_in(), config.num_classes)
         );
+        let heads = vec![params.w.clone()];
         Model {
             config,
             params,
@@ -330,6 +351,10 @@ impl Model {
             scratch: RefCell::new(Scratch::default()),
             version: 0,
             tensor_versions: [0; 3],
+            heads,
+            head_versions: vec![0],
+            active_task: 0,
+            freeze_backbone: false,
         }
     }
 
@@ -359,10 +384,121 @@ impl Model {
     }
 
     /// Bytes of one full weight snapshot (the re-broadcast baseline
-    /// diff sync saves against).
+    /// diff sync saves against): the shared conv backbone plus every
+    /// task head. For a single-head model this is exactly the pre-PR-10
+    /// value.
     pub fn weights_bytes(&self) -> u64 {
-        4 * (self.params.k1.data().len() + self.params.k2.data().len() + self.params.w.data().len())
-            as u64
+        let head_values: usize = (0..self.heads.len()).map(|h| self.head_view(h).data().len()).sum();
+        4 * (self.params.k1.data().len() + self.params.k2.data().len() + head_values) as u64
+    }
+
+    // ---- Multi-task heads -------------------------------------------
+    //
+    // One shared conv backbone (k1, k2), K dense heads. The active
+    // head's live tensor is always `params.w`, so every existing
+    // forward/train path works unchanged on whatever head is active;
+    // `set_active_task` swaps heads in O(1) without moving weight
+    // bytes. Heads carry their own version stamps so the serve layer's
+    // diff re-broadcast ships exactly the heads that moved.
+
+    /// Number of task heads (≥ 1; a fresh model has one).
+    pub fn num_tasks(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// The task whose head is live in `params.w`.
+    pub fn active_task(&self) -> usize {
+        self.active_task
+    }
+
+    /// Output width of the *active* head, derived from the dense weight
+    /// shape (heads added via [`Model::add_task_head`] may be narrower
+    /// than `config.num_classes`).
+    pub fn out_classes(&self) -> usize {
+        self.params.w.shape().dims()[1]
+    }
+
+    /// Freeze (or thaw) the conv backbone: frozen, `train_batch` routes
+    /// through the deepest-cut suffix step and moves only the active
+    /// dense head.
+    pub fn set_freeze_backbone(&mut self, freeze: bool) {
+        self.freeze_backbone = freeze;
+    }
+
+    /// Whether the conv backbone is frozen.
+    pub fn backbone_frozen(&self) -> bool {
+        self.freeze_backbone
+    }
+
+    /// Add a fresh dense head with `classes` outputs, deterministic in
+    /// `seed`, and return its task id. Zero growth in the shared
+    /// backbone: the new parameters are exactly one `dense_in × classes`
+    /// tensor ([`Model::head_bytes`]). The active task is unchanged.
+    pub fn add_task_head(&mut self, classes: usize, seed: u64) -> usize {
+        let w = fresh_head(&self.config, classes, seed);
+        // A new head is a weight update like any other: it gets its own
+        // fresh stamp so replica diff sync ships it (and nothing else).
+        self.version += 1;
+        self.head_versions.push(self.version);
+        self.heads.push(w);
+        self.heads.len() - 1
+    }
+
+    /// Make task `task`'s head the live `params.w`. O(1): the outgoing
+    /// head parks back into its slot (with its current stamp), the
+    /// incoming head swaps in. No weight bytes move, the version does
+    /// not advance, and the conv weight pack survives (it holds only
+    /// k1/k2). Returns an actionable error when the head does not exist
+    /// — callers must `add_task_head` first.
+    pub fn set_active_task(&mut self, task: usize) -> Result<(), String> {
+        if task >= self.heads.len() {
+            return Err(format!(
+                "task {task} has no head: model has {} head(s) (ids 0..={}); \
+                 call add_task_head before routing task {task}",
+                self.heads.len(),
+                self.heads.len() - 1
+            ));
+        }
+        if task == self.active_task {
+            return Ok(());
+        }
+        let old = self.active_task;
+        std::mem::swap(&mut self.heads[old], &mut self.params.w);
+        self.head_versions[old] = self.tensor_versions[2];
+        std::mem::swap(&mut self.heads[task], &mut self.params.w);
+        self.tensor_versions[2] = self.head_versions[task];
+        self.active_task = task;
+        Ok(())
+    }
+
+    /// Current weights of head `task` — the live `params.w` when active,
+    /// the parked copy otherwise.
+    pub fn head_view(&self, task: usize) -> &Tensor<f32> {
+        assert!(
+            task < self.heads.len(),
+            "task {task} has no head: model has {} head(s)",
+            self.heads.len()
+        );
+        if task == self.active_task {
+            &self.params.w
+        } else {
+            &self.heads[task]
+        }
+    }
+
+    /// Version stamp of head `task`'s current weights.
+    fn head_stamp(&self, task: usize) -> u64 {
+        if task == self.active_task {
+            self.tensor_versions[2]
+        } else {
+            self.head_versions[task]
+        }
+    }
+
+    /// Bytes of head `task` — the entire per-task parameter growth
+    /// (compare [`Model::weights_bytes`] for the whole model).
+    pub fn head_bytes(&self, task: usize) -> u64 {
+        4 * self.head_view(task).data().len() as u64
     }
 
     /// Adopt `src`'s weights by diff: copy exactly the tensors whose
@@ -376,6 +512,34 @@ impl Model {
     /// adopted too.
     pub fn sync_weights_from(&mut self, src: &Model) -> u64 {
         let mut bytes = 0u64;
+        // Heads added on the source since this replica's snapshot.
+        while self.heads.len() < src.heads.len() {
+            let h = self.heads.len();
+            self.heads.push(src.head_view(h).clone());
+            self.head_versions.push(src.head_stamp(h));
+            bytes += 4 * self.heads[h].data().len() as u64;
+        }
+        // Align the active head (a local swap — no weight bytes move);
+        // after this, `params.w` on both sides is the same head, so the
+        // tensor loop below diffs it by stamp like any other tensor.
+        if self.active_task != src.active_task {
+            self.set_active_task(src.active_task).expect("heads grown above");
+        }
+        // A source with *fewer* heads (a `reinit` resets to one) wins:
+        // replicas mirror the snapshot, they never out-live it.
+        if self.heads.len() > src.heads.len() {
+            self.heads.truncate(src.heads.len());
+            self.head_versions.truncate(src.heads.len());
+        }
+        // Parked heads whose stamp advanced on the source.
+        for h in 0..self.heads.len() {
+            if h == self.active_task || self.head_versions[h] == src.head_stamp(h) {
+                continue;
+            }
+            self.heads[h] = src.head_view(h).clone();
+            self.head_versions[h] = src.head_stamp(h);
+            bytes += 4 * self.heads[h].data().len() as u64;
+        }
         let mut conv_changed = false;
         for i in 0..3 {
             if self.tensor_versions[i] == src.tensor_versions[i] {
@@ -414,7 +578,9 @@ impl Model {
     /// from scratch for every query), deterministic in `seed`,
     /// preserving the engine and thread configuration. Centralizes the
     /// engine-preserving reset the CL layer and the coordinator both
-    /// hand-rolled before PR 2 (flagged in PR 1 review).
+    /// hand-rolled before PR 2 (flagged in PR 1 review). Resets the
+    /// multi-task state too: a reinit model matches `Model::new` — one
+    /// head, task 0 active, backbone thawed.
     pub fn reinit(&mut self, seed: u64) {
         let (engine, threads, version) = (self.engine, self.threads, self.version);
         *self = Model::new(self.config.clone(), seed).with_engine(engine).with_threads(threads);
@@ -460,9 +626,13 @@ impl Model {
     }
 
     fn dense_forward(&self, flat: &[f32]) -> Vec<f32> {
+        self.dense_forward_with(flat, &self.params.w)
+    }
+
+    fn dense_forward_with(&self, flat: &[f32], w: &Tensor<f32>) -> Vec<f32> {
         match self.engine {
-            Engine::Naive => dense::forward(flat, &self.params.w),
-            Engine::Gemm => gemm::dense_forward(flat, &self.params.w),
+            Engine::Naive => dense::forward(flat, w),
+            Engine::Gemm => gemm::dense_forward(flat, w),
         }
     }
 
@@ -544,11 +714,45 @@ impl Model {
         match self.engine {
             Engine::Naive => xs.iter().map(|x| self.forward(x)).collect(),
             Engine::Gemm => {
-                let classes = self.config.num_classes;
+                let classes = self.out_classes();
                 let logits = self.gemm_serve_logits(xs);
                 logits.chunks(classes).map(|c| c.to_vec()).collect()
             }
         }
+    }
+
+    /// Batched inference over a *mixed-task* batch: one shared backbone
+    /// pass for the whole batch (the zero-growth payoff — cross-task
+    /// requests still coalesce into one conv pass), then each sample's
+    /// logits come from its own task head. `tasks[i]` must name an
+    /// existing head. Per sample this matches the single-task forward
+    /// bit-for-bit on the naive engine and within float round-off on
+    /// the GEMM engine (the shared pass reuses the cut-point datapath,
+    /// whose summation order differs from the fused serve forward).
+    pub fn forward_batch_tasks(&self, xs: &[&Tensor<f32>], tasks: &[usize]) -> Vec<Vec<f32>> {
+        assert!(!xs.is_empty(), "empty batch");
+        assert_eq!(xs.len(), tasks.len(), "batch inputs vs tasks");
+        let acts = self.forward_to_cut_batch(xs, MAX_CUT);
+        acts.iter()
+            .zip(tasks)
+            .map(|(a, &t)| self.dense_forward_with(a.data(), self.head_view(t)))
+            .collect()
+    }
+
+    /// Predicted classes for a mixed-task batch, each sample masked to
+    /// the first `actives[i]` outputs of its own head.
+    pub fn predict_batch_tasks(
+        &self,
+        xs: &[&Tensor<f32>],
+        tasks: &[usize],
+        actives: &[usize],
+    ) -> Vec<usize> {
+        assert_eq!(xs.len(), actives.len(), "batch inputs vs active masks");
+        self.forward_batch_tasks(xs, tasks)
+            .iter()
+            .zip(actives)
+            .map(|(logits, &active)| loss::predict(logits, active))
+            .collect()
     }
 
     /// Serve-path batched forward: inference needs no pre-activations,
@@ -629,6 +833,15 @@ impl Model {
     ) -> BatchTrainOutput {
         assert!(!xs.is_empty(), "empty batch");
         assert_eq!(xs.len(), labels.len(), "batch inputs vs labels");
+        if self.freeze_backbone {
+            // Frozen backbone: run the conv prefix forward-only and
+            // train just the active dense head via the deepest-cut
+            // suffix step — a barrier diff re-broadcast then ships one
+            // head instead of the whole model.
+            let acts = self.forward_to_cut_batch(xs, MAX_CUT);
+            let act_refs: Vec<&Tensor<f32>> = acts.iter().collect();
+            return self.train_batch_from(MAX_CUT, &act_refs, labels, active_classes, lr);
+        }
         let (mut grads, loss_sum, correct) = match self.engine {
             Engine::Naive => self.naive_batch_grads(xs, labels, active_classes),
             Engine::Gemm => self.gemm_batch_grads(xs, labels, active_classes),
@@ -721,7 +934,7 @@ impl Model {
         let hw = self.config.image_size;
         let n = hw * hw;
         let cc = self.config.conv_channels;
-        let classes = self.config.num_classes;
+        let classes = self.out_classes();
         let t = self.threads;
         let fwd = self.gemm_forward_batch(xs);
         let (dlogits, loss_sum, correct) =
@@ -897,7 +1110,7 @@ impl Model {
                 let hw = self.config.image_size;
                 let n = hw * hw;
                 let cc = self.config.conv_channels;
-                let classes = self.config.num_classes;
+                let classes = self.out_classes();
                 let d_in = self.config.dense_in();
                 let t = self.threads;
                 let packed_acts;
@@ -955,7 +1168,7 @@ impl Model {
             }
             Engine::Gemm => {
                 let b = acts.len();
-                let classes = self.config.num_classes;
+                let classes = self.out_classes();
                 let d_in = self.config.dense_in();
                 let t = self.threads;
                 let xd = gemm::rows_from_samples(acts);
@@ -995,6 +1208,17 @@ impl Model {
         sgd::step(&mut self.params.k2, &grads.k2, lr);
         sgd::step(&mut self.params.w, &grads.w, lr);
     }
+}
+
+/// Deterministic fresh dense-head draw: the same He-uniform init the
+/// constructor uses, on its own rng stream so head draws never collide
+/// with `Model::new`'s. The quantized model quantizes this exact draw
+/// (`QModel::add_task_head`), keeping the two engines' heads
+/// comparable sample-for-sample.
+pub fn fresh_head(config: &ModelConfig, classes: usize, seed: u64) -> Tensor<f32> {
+    assert!(classes >= 1, "a head needs at least one output class");
+    let mut rng = Pcg32::new(seed, 200);
+    super::init::dense_weights(&mut rng, config.dense_in(), classes)
 }
 
 fn add_tensor(dst: &mut Tensor<f32>, src: &Tensor<f32>) {
@@ -1392,5 +1616,102 @@ mod tests {
         assert_eq!(m.params.k2.data(), &k2[..]);
         let fresh = Model::new(cfg, 123);
         assert_eq!(m.params.w.data(), fresh.params.w.data(), "w must come from the fresh draw");
+    }
+
+    #[test]
+    fn head_swap_round_trip_is_bit_exact() {
+        let cfg = tiny_config();
+        let mut m = Model::new(cfg.clone(), 3);
+        let w0 = m.params.w.data().to_vec();
+        let t1 = m.add_task_head(2, 77);
+        assert_eq!(t1, 1);
+        assert_eq!(m.num_tasks(), 2);
+        assert_eq!(m.active_task(), 0, "adding a head must not switch tasks");
+        m.set_active_task(t1).unwrap();
+        assert_eq!(m.out_classes(), 2, "narrow head width comes from the live w shape");
+        assert_eq!(m.params.w.data(), fresh_head(&cfg, 2, 77).data());
+        m.set_active_task(0).unwrap();
+        assert_eq!(m.params.w.data(), &w0[..], "round-trip swap must be bit-exact");
+        assert_eq!(m.out_classes(), cfg.num_classes);
+    }
+
+    #[test]
+    fn set_active_task_missing_head_is_actionable() {
+        let mut m = Model::new(tiny_config(), 3);
+        let err = m.set_active_task(5).unwrap_err();
+        assert!(err.contains("task 5") && err.contains("add_task_head"), "unhelpful: {err}");
+        assert_eq!(m.active_task(), 0, "failed switch must not move the active task");
+    }
+
+    #[test]
+    fn frozen_backbone_moves_only_active_head() {
+        let cfg = tiny_config();
+        let xs: Vec<Tensor<f32>> = (0..2).map(|i| rand_image(110 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        for engine in [Engine::Naive, Engine::Gemm] {
+            let mut m = Model::new(cfg.clone(), 6).with_engine(engine);
+            let t1 = m.add_task_head(2, 50);
+            let head0 = m.head_view(0).data().to_vec();
+            let k1 = m.params.k1.data().to_vec();
+            let k2 = m.params.k2.data().to_vec();
+            m.set_active_task(t1).unwrap();
+            m.set_freeze_backbone(true);
+            m.train_batch(&refs, &[0, 1], 2, 0.05);
+            assert_eq!(m.params.k1.data(), &k1[..], "{engine:?} frozen k1 moved");
+            assert_eq!(m.params.k2.data(), &k2[..], "{engine:?} frozen k2 moved");
+            assert_eq!(m.head_view(0).data(), &head0[..], "{engine:?} parked head moved");
+            assert_ne!(
+                m.head_view(t1).data(),
+                fresh_head(&cfg, 2, 50).data(),
+                "{engine:?} active head never trained"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_task_router_matches_single_task_forward() {
+        let cfg = tiny_config();
+        let xs: Vec<Tensor<f32>> = (0..4).map(|i| rand_image(120 + i, &cfg)).collect();
+        let refs: Vec<&Tensor<f32>> = xs.iter().collect();
+        for engine in [Engine::Naive, Engine::Gemm] {
+            let mut m = Model::new(cfg.clone(), 12).with_engine(engine).with_threads(2);
+            let t1 = m.add_task_head(2, 33);
+            let tasks = [0usize, t1, 0, t1];
+            let actives = [4usize, 2, 4, 2];
+            let routed = m.forward_batch_tasks(&refs, &tasks);
+            let preds = m.predict_batch_tasks(&refs, &tasks, &actives);
+            for (bi, (&t, &active)) in tasks.iter().zip(&actives).enumerate() {
+                m.set_active_task(t).unwrap();
+                let solo = m.forward(&xs[bi]);
+                crate::util::proptest::assert_close(
+                    &routed[bi],
+                    &solo,
+                    if engine == Engine::Naive { 0.0 } else { 1e-4 },
+                    &format!("{engine:?} routed logits sample {bi}"),
+                );
+                assert_eq!(preds[bi], loss::predict(&routed[bi], active));
+            }
+        }
+    }
+
+    #[test]
+    fn head_diff_sync_ships_one_head() {
+        let cfg = tiny_config();
+        let mut src = Model::new(cfg.clone(), 9);
+        src.add_task_head(2, 40);
+        src.add_task_head(2, 41);
+        let mut replica = src.clone();
+        let x = rand_image(130, &cfg);
+        src.set_active_task(1).unwrap();
+        src.set_freeze_backbone(true);
+        src.train_step(&x, 0, 2, 0.05);
+        let bytes = replica.sync_weights_from(&src);
+        assert_eq!(bytes, src.head_bytes(1), "only the trained head should ship");
+        assert!(bytes * 4 < src.weights_bytes(), "head diff must be ≪ full snapshot");
+        assert_eq!(replica.active_task(), 1);
+        for h in 0..src.num_tasks() {
+            assert_eq!(replica.head_view(h).data(), src.head_view(h).data(), "head {h}");
+        }
+        assert_eq!(replica.weights_version(), src.weights_version());
     }
 }

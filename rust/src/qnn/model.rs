@@ -178,6 +178,19 @@ pub struct QModel {
     /// Per-tensor stamp (k1, k2, w): the `version` at each tensor's
     /// last update.
     tensor_versions: [u64; 3],
+    /// Per-task dense heads (always ≥ 1). Same contract as the float
+    /// model: the active head's live tensor is `params.w`, and
+    /// `heads[active_task]` is a stale placeholder parked by the last
+    /// head swap.
+    heads: Vec<Tensor<Fx>>,
+    /// Version stamp of each *parked* head (the active head's stamp
+    /// lives in `tensor_versions[2]`).
+    head_versions: Vec<u64>,
+    /// Which head `params.w` currently is.
+    active_task: usize,
+    /// When set, training moves only the active dense head (the conv
+    /// backbone stays frozen; a barrier diff then ships one head).
+    freeze_backbone: bool,
 }
 
 /// Host-side loss layer (float; see module docs of `qnn`): loss, top-1
@@ -191,6 +204,7 @@ fn loss_grad(logits: &[Fx], label: usize, active_classes: usize) -> (f32, bool, 
 
 impl QModel {
     pub fn new(config: ModelConfig, params: QParams) -> QModel {
+        let heads = vec![params.w.clone()];
         QModel {
             config,
             params,
@@ -201,6 +215,10 @@ impl QModel {
             scratch: RefCell::new(QScratch::default()),
             version: 0,
             tensor_versions: [0; 3],
+            heads,
+            head_versions: vec![0],
+            active_task: 0,
+            freeze_backbone: false,
         }
     }
 
@@ -237,11 +255,113 @@ impl QModel {
         self.touch(true, true, true);
     }
 
-    /// Bytes of one full Q4.12 weight snapshot (2 bytes per value).
+    /// Bytes of one full Q4.12 weight snapshot (2 bytes per value):
+    /// the shared conv backbone plus every task head.
     pub fn weights_bytes(&self) -> u64 {
-        2 * (self.params.k1.data().len()
-            + self.params.k2.data().len()
-            + self.params.w.data().len()) as u64
+        let head_values: usize = (0..self.heads.len()).map(|h| self.head_view(h).data().len()).sum();
+        2 * (self.params.k1.data().len() + self.params.k2.data().len() + head_values) as u64
+    }
+
+    // ---- Multi-task heads -------------------------------------------
+    //
+    // Mirror of the float model's head machinery (`nn::model`): one
+    // shared integer conv backbone, K quantized dense heads, O(1)
+    // swap-in of the active head, per-head version stamps for the serve
+    // layer's diff re-broadcast. A head is quantized from the *same*
+    // deterministic float draw the reference model uses, so the two
+    // engines' heads stay comparable sample-for-sample.
+
+    /// Number of task heads (≥ 1).
+    pub fn num_tasks(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// The task whose head is live in `params.w`.
+    pub fn active_task(&self) -> usize {
+        self.active_task
+    }
+
+    /// Output width of the *active* head, derived from the dense weight
+    /// shape (heads may be narrower than `config.num_classes`).
+    pub fn out_classes(&self) -> usize {
+        self.params.w.shape().dims()[1]
+    }
+
+    /// Freeze (or thaw) the conv backbone: frozen, `train_batch` routes
+    /// through the deepest-cut suffix step and moves only the active
+    /// dense head.
+    pub fn set_freeze_backbone(&mut self, freeze: bool) {
+        self.freeze_backbone = freeze;
+    }
+
+    /// Whether the conv backbone is frozen.
+    pub fn backbone_frozen(&self) -> bool {
+        self.freeze_backbone
+    }
+
+    /// Add a fresh quantized dense head with `classes` outputs,
+    /// deterministic in `seed` (the float draw of `nn::fresh_head`,
+    /// quantized tensor-by-tensor like every other init). Returns the
+    /// new task id; the active task is unchanged.
+    pub fn add_task_head(&mut self, classes: usize, seed: u64) -> usize {
+        let w = quantize_tensor(&crate::nn::fresh_head(&self.config, classes, seed));
+        self.version += 1;
+        self.head_versions.push(self.version);
+        self.heads.push(w);
+        self.heads.len() - 1
+    }
+
+    /// Make task `task`'s head the live `params.w` (O(1) swaps, no
+    /// weight bytes move, the conv pack survives, the version does not
+    /// advance). Errors actionably when the head does not exist.
+    pub fn set_active_task(&mut self, task: usize) -> Result<(), String> {
+        if task >= self.heads.len() {
+            return Err(format!(
+                "task {task} has no head: model has {} head(s) (ids 0..={}); \
+                 call add_task_head before routing task {task}",
+                self.heads.len(),
+                self.heads.len() - 1
+            ));
+        }
+        if task == self.active_task {
+            return Ok(());
+        }
+        let old = self.active_task;
+        std::mem::swap(&mut self.heads[old], &mut self.params.w);
+        self.head_versions[old] = self.tensor_versions[2];
+        std::mem::swap(&mut self.heads[task], &mut self.params.w);
+        self.tensor_versions[2] = self.head_versions[task];
+        self.active_task = task;
+        Ok(())
+    }
+
+    /// Current weights of head `task` — the live `params.w` when
+    /// active, the parked copy otherwise.
+    pub fn head_view(&self, task: usize) -> &Tensor<Fx> {
+        assert!(
+            task < self.heads.len(),
+            "task {task} has no head: model has {} head(s)",
+            self.heads.len()
+        );
+        if task == self.active_task {
+            &self.params.w
+        } else {
+            &self.heads[task]
+        }
+    }
+
+    /// Version stamp of head `task`'s current weights.
+    fn head_stamp(&self, task: usize) -> u64 {
+        if task == self.active_task {
+            self.tensor_versions[2]
+        } else {
+            self.head_versions[task]
+        }
+    }
+
+    /// Bytes of head `task` — the entire per-task parameter growth.
+    pub fn head_bytes(&self, task: usize) -> u64 {
+        2 * self.head_view(task).data().len() as u64
     }
 
     /// Adopt `src`'s weights by diff: copy exactly the tensors whose
@@ -254,6 +374,32 @@ impl QModel {
     /// weight pack valid (`QPackedWeights` holds only k1/k2).
     pub fn sync_weights_from(&mut self, src: &QModel) -> u64 {
         let mut bytes = 0u64;
+        // Heads added on the source since this replica's snapshot.
+        while self.heads.len() < src.heads.len() {
+            let h = self.heads.len();
+            self.heads.push(src.head_view(h).clone());
+            self.head_versions.push(src.head_stamp(h));
+            bytes += 2 * self.heads[h].data().len() as u64;
+        }
+        // Align the active head (a local swap — no weight bytes move);
+        // the tensor loop below then diffs `w` by stamp as usual.
+        if self.active_task != src.active_task {
+            self.set_active_task(src.active_task).expect("heads grown above");
+        }
+        // A source with *fewer* heads (a reinit resets to one) wins.
+        if self.heads.len() > src.heads.len() {
+            self.heads.truncate(src.heads.len());
+            self.head_versions.truncate(src.heads.len());
+        }
+        // Parked heads whose stamp advanced on the source.
+        for h in 0..self.heads.len() {
+            if h == self.active_task || self.head_versions[h] == src.head_stamp(h) {
+                continue;
+            }
+            self.heads[h] = src.head_view(h).clone();
+            self.head_versions[h] = src.head_stamp(h);
+            bytes += 2 * self.heads[h].data().len() as u64;
+        }
         let mut conv_changed = false;
         for i in 0..3 {
             if self.tensor_versions[i] == src.tensor_versions[i] {
@@ -419,7 +565,7 @@ impl QModel {
         match self.engine {
             QnnEngine::Naive => xs.iter().map(|x| self.forward(x)).collect(),
             QnnEngine::Fast => {
-                let classes = self.config.num_classes;
+                let classes = self.out_classes();
                 let fwd = self.fast_forward(xs);
                 let out = fwd.logits.chunks(classes).map(|c| c.to_vec()).collect();
                 self.recycle(fwd);
@@ -443,6 +589,51 @@ impl QModel {
             .map(|logits| {
                 let f: Vec<f32> = logits.iter().map(|l| l.to_f32()).collect();
                 loss::predict(&f, active_classes)
+            })
+            .collect()
+    }
+
+    /// Dense forward against an arbitrary head's weights (engine seam).
+    /// Both engines are bit-identical per sample (wrapping adds are
+    /// order-independent), so routing through either is exact.
+    fn dense_forward_with(&self, flat: &[Fx], w: &Tensor<Fx>) -> Vec<Fx> {
+        match self.engine {
+            QnnEngine::Naive => layers::dense_forward(flat, w),
+            QnnEngine::Fast => qgemm::dense_forward_batch(flat, w, 1, self.threads),
+        }
+    }
+
+    /// Batched inference over a *mixed-task* batch: one shared integer
+    /// backbone pass, then each sample's logits from its own task head.
+    /// Per sample this is bit-identical to the single-task forward on
+    /// both engines (integer wrapping sums are order-independent; the
+    /// non-packed cut-point convs match the packed serve convs
+    /// bit-for-bit).
+    pub fn forward_batch_tasks(&self, xs: &[&Tensor<Fx>], tasks: &[usize]) -> Vec<Vec<Fx>> {
+        assert!(!xs.is_empty(), "empty batch");
+        assert_eq!(xs.len(), tasks.len(), "batch inputs vs tasks");
+        let acts = self.forward_to_cut_batch(xs, crate::nn::MAX_CUT);
+        acts.iter()
+            .zip(tasks)
+            .map(|(a, &t)| self.dense_forward_with(a.data(), self.head_view(t)))
+            .collect()
+    }
+
+    /// Predicted classes for a mixed-task batch, each sample masked to
+    /// the first `actives[i]` outputs of its own head.
+    pub fn predict_batch_tasks(
+        &self,
+        xs: &[&Tensor<Fx>],
+        tasks: &[usize],
+        actives: &[usize],
+    ) -> Vec<usize> {
+        assert_eq!(xs.len(), actives.len(), "batch inputs vs active masks");
+        self.forward_batch_tasks(xs, tasks)
+            .iter()
+            .zip(actives)
+            .map(|(logits, &active)| {
+                let f: Vec<f32> = logits.iter().map(|l| l.to_f32()).collect();
+                loss::predict(&f, active)
             })
             .collect()
     }
@@ -476,6 +667,15 @@ impl QModel {
     ) -> (f32, usize) {
         assert!(!xs.is_empty(), "empty batch");
         assert_eq!(xs.len(), labels.len(), "batch inputs vs labels");
+        if self.freeze_backbone {
+            // Frozen backbone: forward the conv prefix, then run the
+            // dense-only suffix step (per-sample stream-order fused
+            // updates, dither steps advancing exactly as a full step's
+            // dense updates would) — only the active head moves.
+            let acts = self.forward_to_cut_batch(xs, crate::nn::MAX_CUT);
+            let act_refs: Vec<&Tensor<Fx>> = acts.iter().collect();
+            return self.train_batch_from(crate::nn::MAX_CUT, &act_refs, labels, active_classes, lr);
+        }
         self.touch(true, true, true); // the step below updates every parameter
         match self.engine {
             QnnEngine::Naive => self.train_batch_naive(xs, labels, active_classes, lr),
@@ -568,7 +768,7 @@ impl QModel {
         let hw = self.config.image_size;
         let n = hw * hw;
         let cc = self.config.conv_channels;
-        let classes = self.config.num_classes;
+        let classes = self.out_classes();
         let d_in = self.config.dense_in();
         let t = self.threads;
         let fwd = self.fast_forward(xs);
@@ -792,7 +992,7 @@ impl QModel {
         let hw = self.config.image_size;
         let n = hw * hw;
         let cc = self.config.conv_channels;
-        let classes = self.config.num_classes;
+        let classes = self.out_classes();
         let d_in = self.config.dense_in();
         let t = self.threads;
         let packed_acts;
@@ -887,7 +1087,7 @@ impl QModel {
             }
             QnnEngine::Fast => {
                 let t = self.threads;
-                let classes = self.config.num_classes;
+                let classes = self.out_classes();
                 let xd = crate::nn::gemm::rows_from_samples(acts);
                 let logits = qgemm::dense_forward_batch(&xd, &self.params.w, b, t);
                 for (bi, &label) in labels.iter().enumerate() {
@@ -1220,5 +1420,68 @@ mod tests {
         assert_eq!(qm.params.k1.data(), before.k1.data(), "k1 kept");
         assert_eq!(qm.params.k2.data(), before.k2.data(), "k2 kept");
         assert_eq!(qm.params.w.data(), fresh.w.data(), "w redrawn");
+    }
+
+    #[test]
+    fn head_swap_round_trip_is_bit_exact() {
+        let cfg = tiny();
+        let mut qm = QModel::from_model(&Model::new(cfg.clone(), 60));
+        let w0 = qm.params.w.data().to_vec();
+        let t1 = qm.add_task_head(2, 77);
+        assert_eq!((t1, qm.num_tasks(), qm.active_task()), (1, 2, 0));
+        qm.set_active_task(t1).unwrap();
+        assert_eq!(qm.out_classes(), 2);
+        let expect = quantize_tensor(&crate::nn::fresh_head(&cfg, 2, 77));
+        assert_eq!(qm.params.w.data(), expect.data(), "head must be the quantized float draw");
+        qm.set_active_task(0).unwrap();
+        assert_eq!(qm.params.w.data(), &w0[..], "round-trip swap must be bit-exact");
+        assert!(qm.set_active_task(9).unwrap_err().contains("add_task_head"));
+    }
+
+    #[test]
+    fn mixed_task_router_is_bit_exact_on_both_engines() {
+        let cfg = tiny();
+        let xs: Vec<Tensor<Fx>> =
+            (0..4).map(|i| quantize_tensor(&rand_image(700 + i, &cfg))).collect();
+        let refs: Vec<&Tensor<Fx>> = xs.iter().collect();
+        for engine in [QnnEngine::Naive, QnnEngine::Fast] {
+            let mut qm = QModel::from_model(&Model::new(cfg.clone(), 61))
+                .with_engine(engine)
+                .with_threads(2);
+            let t1 = qm.add_task_head(2, 42);
+            let tasks = [0usize, t1, 0, t1];
+            let routed = qm.forward_batch_tasks(&refs, &tasks);
+            for (bi, &t) in tasks.iter().enumerate() {
+                qm.set_active_task(t).unwrap();
+                assert_eq!(
+                    routed[bi],
+                    qm.forward(&xs[bi]),
+                    "{engine:?} routed logits must be bit-identical, sample {bi}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frozen_backbone_ships_one_head_through_diff_sync() {
+        let cfg = tiny();
+        let mut src = QModel::from_model(&Model::new(cfg.clone(), 62));
+        src.add_task_head(2, 43);
+        src.add_task_head(2, 44);
+        let mut replica = src.clone();
+        let x = quantize_tensor(&rand_image(800, &cfg));
+        let k1 = src.params.k1.data().to_vec();
+        let head0 = src.head_view(0).data().to_vec();
+        src.set_active_task(1).unwrap();
+        src.set_freeze_backbone(true);
+        src.train_step(&x, 0, 2, Fx::from_f32(0.125));
+        assert_eq!(src.params.k1.data(), &k1[..], "frozen backbone moved");
+        assert_eq!(src.head_view(0).data(), &head0[..], "parked head moved");
+        let bytes = replica.sync_weights_from(&src);
+        assert_eq!(bytes, src.head_bytes(1), "diff must ship exactly the trained head");
+        for h in 0..src.num_tasks() {
+            assert_eq!(replica.head_view(h).data(), src.head_view(h).data(), "head {h}");
+        }
+        assert_eq!(replica.step, src.step, "dither counter must travel with the diff");
     }
 }

@@ -23,6 +23,18 @@
 //!    at the paper geometry: ≥ 99% of offered requests answered within
 //!    budget, zero duplicate and zero lost responses, and diff
 //!    re-broadcast bytes strictly under the full-snapshot baseline.
+//! 5. **Multitask rung** (`--tasks K`, default 3): K per-task dense
+//!    heads on one shared frozen conv backbone behind the task router,
+//!    each added head trained *through the serve path* (quiesce
+//!    barrier + head-only diff re-broadcast per step) while every seen
+//!    task is probed — a genuine task-incremental accuracy matrix.
+//!    Gates in every mode: untouched heads' served predictions and
+//!    weight bits identical across every train barrier (forgetting
+//!    exactly 0.0, retention exactly 1.0 per task), every replica
+//!    bit-identical at shutdown, per-barrier diff bytes < 25% of the
+//!    full snapshot (K ≥ 3). Paper-mode gates: K-task throughput
+//!    within 10% of the K=1 router baseline at equal offered load,
+//!    per-task SLO attainment ≥ 99%.
 //!
 //! Flags: `--backend f32|f32-fast|qnn|sim` (default: ladder both
 //! `f32-fast` and `qnn`), `--threads N` (GEMM workers, 0 = auto),
@@ -33,6 +45,9 @@
 //! `--slo=false` skips it), `--arrival-rate R` (req/s; replaces the
 //! sweep with one point), `--arrival-process poisson|uniform`,
 //! `--max-wait-us N`, `--queue-depth N`, `--requests N`, `--seed N`,
+//! `--tasks K` (multitask rung head count, default 3; ≤ 1 skips it),
+//! `--task-schedule roundrobin|blocked|random` (how the load phase
+//! interleaves tasks),
 //! `--smoke` (tiny geometry, ratio asserts relaxed — the CI rung; the
 //! fault-injected SLO rung still runs and its exactly-once gates still
 //! apply), `--obs-rung` (kill-switched-vs-instrumented p99 comparison;
@@ -61,19 +76,19 @@ use super::loadgen::{
 use super::metrics::{LatencySummary, ServeRunReport};
 use super::queue::Lane;
 use super::server::{
-    default_queue_depth, AutoscalePolicy, FaultPlan, FaultTarget, Server, ServerConfig,
-    DEFAULT_MAX_WAIT,
+    default_queue_depth, AutoscalePolicy, FaultPlan, FaultTarget, Served, ServeClient, Server,
+    ServerConfig, DEFAULT_MAX_WAIT,
 };
-use crate::cl::Learner;
+use crate::cl::{AccuracyMatrix, Learner};
 use crate::coordinator::{Backend, BackendKind};
-use crate::data::{Sample, SyntheticCifar};
+use crate::data::{Sample, SyntheticCifar, TaskSchedule};
 use crate::nn::ModelConfig;
 use crate::qnn::QnnEngine;
 use crate::sim::SimConfig;
 use crate::util::cli::Args;
 use crate::util::json::{Json, Obj};
 use anyhow::Result;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Quick fine-tune applied identically to the served backend and the
 /// parity reference, so the model is not random and both agree bit-wise.
@@ -107,6 +122,41 @@ const SLO_BUDGET_FLOOR_US: u64 = 10_000;
 /// (best-of-3 p99 each way) and the instrumented side may cost at most
 /// 3% — the observability layer's overhead contract.
 const OBS_OVERHEAD_CEIL: f64 = 1.03;
+
+/// Paper-mode floor for multitask throughput against the K=1 router
+/// baseline at equal offered load — the shared-backbone batch pass must
+/// keep cross-task traffic within 10% of single-task serving.
+const MULTITASK_TPUT_FLOOR: f64 = 0.9;
+
+/// Every head-only diff re-broadcast must ship under this fraction of
+/// the full snapshot. Asserted at K ≥ 3 (where even the widest added
+/// head is comfortably narrow); at K = 2 a near-equal class split puts
+/// one head at ~1/3 of the dense parameters, so only the strict
+/// `diff < full` bound applies.
+const HEAD_DIFF_CEIL: f64 = 0.25;
+
+/// Probe samples per task per accuracy-matrix evaluation round.
+const PROBES_PER_TASK: usize = 6;
+
+/// Serve-while-learning steps per added head in the matrix schedule —
+/// each one a pool-wide quiesce barrier plus head-only diff re-broadcast.
+const HEAD_BURST_STEPS: usize = 2;
+
+/// Per-task SLO budget for the multitask rung: generous enough that an
+/// honest run sheds nothing, so per-task attainment gates liveness, not
+/// scheduler luck.
+const TASK_SLO_BUDGET: Duration = Duration::from_millis(500);
+
+/// Head width for `task` of `k`: task 0 keeps the deployed full-width
+/// head; added tasks get narrow heads (a near-equal class split, floor
+/// 2) — the zero-parameter-growth sizing the byte gate rides on.
+fn head_width(num_classes: usize, k: usize, task: usize) -> usize {
+    if task == 0 {
+        num_classes
+    } else {
+        num_classes.div_ceil(k).max(2)
+    }
+}
 
 struct BenchSetup {
     model_cfg: ModelConfig,
@@ -305,6 +355,7 @@ fn run_slo(
             queue_depth: setup.queue_depth,
             replicas: 2,
             lane_slo: [Some(Duration::from_micros(budget_us)), None],
+            task_slo: Vec::new(),
             stall_timeout: Some(Duration::from_secs(5)),
             diff_resync: true,
             autoscale: Some(AutoscalePolicy {
@@ -427,6 +478,393 @@ fn run_slo(
     Ok(report)
 }
 
+/// What one closed-loop task-routed load phase measured.
+struct TaskLoadOutcome {
+    /// Answered-request latencies (µs), all tasks pooled.
+    latencies_us: Vec<f64>,
+    /// Per task: (answered within [`TASK_SLO_BUDGET`], offered).
+    per_task: Vec<(u64, u64)>,
+    /// (sample index, served class) pairs for the parity oracle.
+    predictions: Vec<(usize, usize)>,
+    correct: u64,
+    shed: u64,
+    wall_secs: f64,
+}
+
+/// Closed-loop load with every request routed by task id: `clients`
+/// threads stripe `requests` indices, each index's task drawn from the
+/// (seeded, stateless) `schedule` so the stream is deterministic no
+/// matter how threads interleave.
+#[allow(clippy::too_many_arguments)]
+fn run_task_load(
+    client: &ServeClient,
+    samples: &[Sample],
+    num_classes: usize,
+    tasks_k: usize,
+    schedule: TaskSchedule,
+    clients: usize,
+    requests: usize,
+    seed: u64,
+) -> TaskLoadOutcome {
+    let budget_us = TASK_SLO_BUDGET.as_micros() as f64;
+    let t0 = Instant::now();
+    type ClientRecs = (Vec<(usize, f64, usize, usize, bool)>, Vec<usize>);
+    let results: Vec<ClientRecs> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let client = client.clone();
+                scope.spawn(move || {
+                    let mut answered = Vec::new();
+                    let mut shed_tasks = Vec::new();
+                    let mut g = c;
+                    while g < requests {
+                        let task = schedule.task_for(g, requests, tasks_k, seed);
+                        let w = head_width(num_classes, tasks_k, task);
+                        let idx = g % samples.len();
+                        let s = &samples[idx];
+                        let q0 = Instant::now();
+                        match client.predict_task(&s.x, w, task) {
+                            Served::Ok { pred, .. } => {
+                                let lat = q0.elapsed().as_secs_f64() * 1e6;
+                                answered.push((task, lat, idx, pred, pred == s.label % w));
+                            }
+                            Served::Shed => shed_tasks.push(task),
+                            Served::Closed => panic!("server closed under task load"),
+                        }
+                        g += clients;
+                    }
+                    (answered, shed_tasks)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("load client panicked")).collect()
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let mut out = TaskLoadOutcome {
+        latencies_us: Vec::new(),
+        per_task: vec![(0, 0); tasks_k],
+        predictions: Vec::new(),
+        correct: 0,
+        shed: 0,
+        wall_secs,
+    };
+    for (answered, shed_tasks) in results {
+        for (task, lat, idx, pred, correct) in answered {
+            out.per_task[task].1 += 1;
+            if lat <= budget_us {
+                out.per_task[task].0 += 1;
+            }
+            out.latencies_us.push(lat);
+            out.predictions.push((idx, pred));
+            out.correct += u64::from(correct);
+        }
+        for task in shed_tasks {
+            out.per_task[task].1 += 1;
+            out.shed += 1;
+        }
+    }
+    out
+}
+
+/// The multitask rung: K per-task dense heads on one shared frozen
+/// conv backbone, served behind the task router while each added head
+/// takes its serve-while-learning burst — then the task-isolation,
+/// zero-growth-byte, and equal-load-throughput gates.
+///
+/// Task 0 keeps the deployed full-width head (its training is the
+/// pre-serve warmup); tasks 1..K are added post-deployment as narrow
+/// heads and trained *through the serve path*, one quiesce barrier +
+/// head-only diff re-broadcast per step. The accuracy matrix is filled
+/// exactly like a CL run (row t = probe accuracy on tasks 0..=t after
+/// task t's burst), so `cl::metrics` per-task forgetting/retention
+/// apply verbatim — and with bit-exact head isolation they must come
+/// out 0.0 / 1.0 *exactly*, which is asserted, not eyeballed.
+///
+/// Returns the multitask report plus the K=1 baseline's predictions
+/// (every request on task 0 through the same router) for the caller's
+/// parity check against per-sample `predict`.
+fn run_multitask(
+    setup: &BenchSetup,
+    kind: BackendKind,
+    max_batch: usize,
+    tasks_k: usize,
+    schedule: TaskSchedule,
+    samples: &[Sample],
+    smoke: bool,
+) -> Result<(ServeRunReport, Vec<(usize, usize)>)> {
+    let num_classes = setup.model_cfg.num_classes;
+    let queue_depth = setup.queue_depth.max(setup.clients);
+
+    // --- K=1 baseline: the identical closed-loop load, every request
+    // routed to task 0 — the equal-offered-load throughput anchor and
+    // the "K=1 multitask ≡ single-task path" parity witness.
+    let backend = setup.build_backend(kind, samples, setup.threads)?;
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            max_batch,
+            max_wait: setup.max_wait,
+            queue_depth,
+            replicas: 2,
+            task_slo: vec![(0, TASK_SLO_BUDGET)],
+            ..ServerConfig::default()
+        },
+    );
+    let single = run_task_load(
+        &server.client(),
+        samples,
+        num_classes,
+        1,
+        schedule,
+        setup.clients,
+        setup.requests,
+        setup.seed,
+    );
+    server.shutdown();
+    assert_eq!(
+        single.shed,
+        0,
+        "{}: K=1 baseline shed under a {} ms per-task budget",
+        kind.name(),
+        TASK_SLO_BUDGET.as_millis()
+    );
+    let single_tput = single.latencies_us.len() as f64 / single.wall_secs.max(1e-12);
+
+    // --- the K-task pool: shared warmed backbone, frozen; task 0 keeps
+    // the deployed head, tasks 1..K get fresh narrow heads.
+    let mut backend = setup.build_backend(kind, samples, setup.threads)?;
+    for t in 1..tasks_k {
+        let id = backend
+            .add_task_head(head_width(num_classes, tasks_k, t), setup.seed ^ (0x4EAD + t as u64))
+            .expect("host backends grow task heads");
+        assert_eq!(id, t, "task head ids must be dense");
+    }
+    assert!(backend.set_freeze_backbone(true), "host backends freeze the backbone");
+    let full_bytes = backend.weights_bytes().expect("versioned backends report snapshot bytes");
+    let baseline_prints = backend.head_fingerprints().expect("host backends expose head bits");
+    let wall0 = Instant::now();
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            max_batch,
+            max_wait: setup.max_wait,
+            queue_depth,
+            replicas: 2,
+            diff_resync: true,
+            task_slo: (0..tasks_k).map(|t| (t, TASK_SLO_BUDGET)).collect(),
+            ..ServerConfig::default()
+        },
+    );
+    let client = server.client();
+
+    let probes = PROBES_PER_TASK.min(samples.len());
+    let budget_us = TASK_SLO_BUDGET.as_micros() as f64;
+    // Probe a task's head through the serve path: blocking single
+    // predicts, so the eval is deterministic regardless of batching.
+    let eval = |task: usize| -> (Vec<usize>, Vec<f64>) {
+        let w = head_width(num_classes, tasks_k, task);
+        let mut preds = Vec::with_capacity(probes);
+        let mut lats = Vec::with_capacity(probes);
+        for s in samples.iter().take(probes) {
+            let q0 = Instant::now();
+            match client.predict_task(&s.x, w, task) {
+                Served::Ok { pred, .. } => {
+                    lats.push(q0.elapsed().as_secs_f64() * 1e6);
+                    preds.push(pred);
+                }
+                other => panic!("probe on task {task} not answered: {other:?}"),
+            }
+        }
+        (preds, lats)
+    };
+
+    // --- matrix phase: burst each added head through the serve path,
+    // evaluating probe accuracy on every seen task after each burst.
+    let mut lat_all: Vec<f64> = Vec::new();
+    let mut per_task: Vec<(u64, u64)> = vec![(0, 0); tasks_k];
+    let mut correct_total = 0u64;
+    let mut matrix = AccuracyMatrix::new(tasks_k);
+    let mut probe_preds: Vec<Vec<Vec<usize>>> = Vec::with_capacity(tasks_k);
+    let mut trained = 0u64;
+    for t in 0..tasks_k {
+        if t > 0 {
+            let w = head_width(num_classes, tasks_k, t);
+            for step in 0..HEAD_BURST_STEPS {
+                let s = &samples[(t * 7 + step) % samples.len()];
+                let applied = client.train_task(&s.x, s.label % w, w, t, WARMUP_LR);
+                assert!(applied.is_some(), "train burst on task {t} shed under an idle queue");
+                trained += 1;
+            }
+        }
+        let mut row = Vec::with_capacity(t + 1);
+        let mut round = Vec::with_capacity(t + 1);
+        for j in 0..=t {
+            let w = head_width(num_classes, tasks_k, j);
+            let (preds, lats) = eval(j);
+            let correct = preds
+                .iter()
+                .zip(samples.iter().take(probes))
+                .filter(|&(&p, s)| p == s.label % w)
+                .count();
+            row.push(correct as f64 / probes as f64);
+            correct_total += correct as u64;
+            for lat in lats {
+                per_task[j].1 += 1;
+                if lat <= budget_us {
+                    per_task[j].0 += 1;
+                }
+                lat_all.push(lat);
+            }
+            round.push(preds);
+        }
+        matrix.push_row(row);
+        probe_preds.push(round);
+    }
+
+    // Bit-exact isolation, served form: task j's probe predictions are
+    // frozen from its own burst's round through every later barrier.
+    for j in 0..tasks_k {
+        for i in j + 1..tasks_k {
+            assert_eq!(
+                probe_preds[i][j],
+                probe_preds[j][j],
+                "{}: task {j}'s served predictions moved across the task-{i} train barrier",
+                kind.name()
+            );
+        }
+    }
+    let forgetting = matrix.forgetting_per_task();
+    let retention = matrix.retention_per_task();
+    for (j, (&f, &r)) in forgetting.iter().zip(&retention).enumerate() {
+        assert_eq!(
+            f,
+            0.0,
+            "{}: nonzero forgetting on task {j} despite head isolation",
+            kind.name()
+        );
+        assert_eq!(r, 1.0, "{}: retention {r} on task {j} despite head isolation", kind.name());
+    }
+
+    // --- load phase: the same closed-loop load as the K=1 baseline,
+    // tasks interleaved by the schedule so coalesced batches mix heads
+    // on one shared backbone pass.
+    let load = run_task_load(
+        &client,
+        samples,
+        num_classes,
+        tasks_k,
+        schedule,
+        setup.clients,
+        setup.requests,
+        setup.seed,
+    );
+    for (t, &(within, offered)) in load.per_task.iter().enumerate() {
+        per_task[t].0 += within;
+        per_task[t].1 += offered;
+    }
+    lat_all.extend_from_slice(&load.latencies_us);
+    correct_total += load.correct;
+
+    let queue = server.queue_stats();
+    let (learners, stats) = server.shutdown_all();
+    let wall_secs = wall0.elapsed().as_secs_f64();
+
+    // Weight-level isolation + pool coherence: every replica ends with
+    // bit-identical heads, and task 0's head — served throughout, never
+    // trained after deployment — still matches its pre-start bits.
+    let finals: Vec<Vec<u64>> =
+        learners.iter().map(|l| l.head_fingerprints().expect("host backend")).collect();
+    for (r, prints) in finals.iter().enumerate() {
+        assert_eq!(prints.len(), tasks_k, "{}: replica {r} lost heads", kind.name());
+        assert_eq!(
+            prints[0],
+            baseline_prints[0],
+            "{}: replica {r}'s task-0 head moved across {trained} foreign train barriers",
+            kind.name()
+        );
+        assert_eq!(
+            prints,
+            &finals[0],
+            "{}: replica {r}'s heads diverged from replica 0",
+            kind.name()
+        );
+    }
+
+    // Zero-growth byte accounting: every re-broadcast shipped one
+    // narrow head, not the snapshot.
+    assert_eq!(stats.train_steps, trained, "{}: train books disagree", kind.name());
+    assert!(
+        stats.resyncs_diff > 0,
+        "{}: no diff re-broadcasts despite {trained} head trains",
+        kind.name()
+    );
+    let head_diff = stats.resync_diff_bytes / stats.resyncs_diff;
+    assert!(
+        head_diff < full_bytes,
+        "{}: per-barrier diff {head_diff} B did not beat the {full_bytes} B snapshot",
+        kind.name()
+    );
+    if tasks_k >= 3 {
+        assert!(
+            (head_diff as f64) < HEAD_DIFF_CEIL * full_bytes as f64,
+            "{}: head-only diff {head_diff} B is not ≪ the {full_bytes} B full snapshot \
+             (≥ {:.0}%)",
+            kind.name(),
+            HEAD_DIFF_CEIL * 100.0
+        );
+    }
+
+    let multi_tput = load.latencies_us.len() as f64 / load.wall_secs.max(1e-12);
+    println!(
+        "{}: multitask rung — {tasks_k} tasks ({} schedule), {trained} head-burst trains, \
+         accuracy matrix:\n{matrix}",
+        kind.name(),
+        schedule.name(),
+    );
+    println!(
+        "  isolation: task-0 head bit-identical across all barriers, head diff {head_diff} B \
+         vs {full_bytes} B full ({:.1}%), load {multi_tput:.0} rps vs K=1 {single_tput:.0} rps\n",
+        100.0 * head_diff as f64 / full_bytes as f64,
+    );
+    if !smoke {
+        assert!(
+            multi_tput >= MULTITASK_TPUT_FLOOR * single_tput,
+            "{}: {tasks_k}-task throughput {multi_tput:.0} rps fell more than 10% under the \
+             K=1 baseline {single_tput:.0} rps at equal offered load",
+            kind.name()
+        );
+    }
+
+    let attainment: Vec<f64> = per_task
+        .iter()
+        .map(|&(within, offered)| if offered == 0 { 1.0 } else { within as f64 / offered as f64 })
+        .collect();
+    if !smoke {
+        for (t, &a) in attainment.iter().enumerate() {
+            assert!(
+                a >= SLO_ATTAINMENT_FLOOR,
+                "{}: task {t} attainment {a:.4} under its {} ms budget",
+                kind.name(),
+                TASK_SLO_BUDGET.as_millis()
+            );
+        }
+    }
+    let report = ServeRunReport::new(
+        kind.name(),
+        max_batch,
+        setup.clients,
+        queue,
+        stats.clone(),
+        wall_secs,
+        &lat_all,
+        correct_total,
+    )
+    .with_multitask(tasks_k, head_diff, attainment)
+    .with_task_metrics(forgetting, retention);
+    check_accounting(&report, load.shed);
+    Ok((report, single.predictions))
+}
+
 /// Serving parity: every served answer must match the per-sample oracle
 /// (near-tie escape on float backends only — see module docs).
 fn check_parity(
@@ -488,6 +926,13 @@ pub fn run(args: &Args) -> Result<()> {
         ArrivalProcess::parse(&raw)
             .ok_or_else(|| anyhow::anyhow!("unknown arrival process '{raw}' (poisson|uniform)"))?
     };
+    let tasks_k = args.usize_or("tasks", 3);
+    let task_schedule = {
+        let raw = args.str_or("task-schedule", "roundrobin");
+        TaskSchedule::parse(&raw).ok_or_else(|| {
+            anyhow::anyhow!("unknown task schedule '{raw}' (roundrobin|blocked|random)")
+        })?
+    };
     let setup = BenchSetup {
         sim_cfg: SimConfig::paper(),
         threads: args.threads_or_auto("threads", 0),
@@ -530,6 +975,13 @@ pub fn run(args: &Args) -> Result<()> {
         if open_loop { setup.arrival_process.name() } else { "off" },
         if slo { "on (kill + autoscale + diff resync)" } else { "off" },
     );
+    if tasks_k > 1 {
+        println!(
+            "multitask rung: {tasks_k} per-task heads, {} schedule, per-task SLO {} ms\n",
+            task_schedule.name(),
+            TASK_SLO_BUDGET.as_millis(),
+        );
+    }
 
     let mut runs: Vec<ServeRunReport> = Vec::new();
     let mut batch_speedups: Vec<(BackendKind, f64)> = Vec::new();
@@ -668,9 +1120,31 @@ pub fn run(args: &Args) -> Result<()> {
                 .push((kind, report.slo_attainment_interactive.expect("slo rung sets it")));
             runs.push(report);
         }
+
+        // --- 5. multitask rung: K per-task heads on the shared frozen
+        // backbone behind the task router, serve-while-learning bursts
+        // per added head, the task-isolation / zero-growth-byte /
+        // equal-load gates (see run_multitask) ---
+        if tasks_k > 1
+            && matches!(kind, BackendKind::F32 | BackendKind::F32Fast | BackendKind::Qnn)
+        {
+            let (report, single_preds) =
+                run_multitask(&setup, kind, max_batch, tasks_k, task_schedule, &samples, smoke)?;
+            check_parity(
+                &setup,
+                kind,
+                &mut reference,
+                &ref_preds,
+                &single_preds,
+                &samples,
+                "multitask k=1 baseline",
+            );
+            println!("{report}\n");
+            runs.push(report);
+        }
     }
 
-    // --- 5. obs-overhead rung: the same closed-loop point with the
+    // --- 6. obs-overhead rung: the same closed-loop point with the
     // runtime kill-switch off vs on. Alternating reps, best p99 each
     // way (the cost floor is what the contract bounds); the ≤ 3% gate
     // applies at the paper geometry only (repo convention). ---
@@ -740,6 +1214,8 @@ pub fn run(args: &Args) -> Result<()> {
     doc.put("queue_depth", setup.queue_depth);
     doc.put("replicas_ladder", Json::Arr(vec![Json::from(1usize), Json::from(replicas)]));
     doc.put("arrival_process", setup.arrival_process.name());
+    doc.put("tasks", tasks_k);
+    doc.put("task_schedule", task_schedule.name());
     doc.put("batched_speedup", pairs_json(&batch_speedups, 2));
     doc.put("replica_speedup", pairs_json(&replica_speedups, 2));
     doc.put("open_loop_knee_rps", knees_obj.build());

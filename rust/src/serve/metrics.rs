@@ -115,6 +115,23 @@ pub struct ServeRunReport {
     /// SLO budget (sheds count against attainment — dropping a request
     /// is an SLO miss, not an exemption).
     pub slo_attainment_interactive: Option<f64>,
+    /// Number of serving tasks (per-task dense heads) when this run
+    /// exercised the multi-task router; `None` for single-task runs.
+    pub tasks: Option<usize>,
+    /// Bytes one post-train re-broadcast shipped when only the trained
+    /// task's head moved (the zero-growth byte accounting the multitask
+    /// rung gates on).
+    pub head_diff_bytes: Option<u64>,
+    /// Per-task SLO attainment, indexed by task id (multitask runs
+    /// with an SLO; offered-based like the interactive number).
+    pub task_attainment: Vec<f64>,
+    /// Per-task forgetting over the rung's train schedule
+    /// ([`crate::cl::AccuracyMatrix::forgetting_per_task`]) — exactly
+    /// 0.0 everywhere when head isolation holds.
+    pub task_forgetting: Vec<f64>,
+    /// Per-task retention ([`crate::cl::AccuracyMatrix::retention_per_task`])
+    /// — exactly 1.0 everywhere when head isolation holds.
+    pub task_retention: Vec<f64>,
 }
 
 impl ServeRunReport {
@@ -144,6 +161,11 @@ impl ServeRunReport {
             top1: correct as f64 / served as f64,
             slo_budget_us: None,
             slo_attainment_interactive: None,
+            tasks: None,
+            head_diff_bytes: None,
+            task_attainment: Vec::new(),
+            task_forgetting: Vec::new(),
+            task_retention: Vec::new(),
         }
     }
 
@@ -160,8 +182,37 @@ impl ServeRunReport {
         self
     }
 
+    /// Mark this run as multi-task: `tasks` heads behind the router,
+    /// one re-broadcast shipping `head_diff_bytes`, and per-task SLO
+    /// attainment (empty when the run carried no SLO).
+    pub fn with_multitask(
+        mut self,
+        tasks: usize,
+        head_diff_bytes: u64,
+        task_attainment: Vec<f64>,
+    ) -> ServeRunReport {
+        self.tasks = Some(tasks);
+        self.head_diff_bytes = Some(head_diff_bytes);
+        self.task_attainment = task_attainment;
+        self
+    }
+
+    /// Attach the per-task continual-learning outcome of the rung's
+    /// train schedule (from [`crate::cl::AccuracyMatrix`]).
+    pub fn with_task_metrics(
+        mut self,
+        task_forgetting: Vec<f64>,
+        task_retention: Vec<f64>,
+    ) -> ServeRunReport {
+        self.task_forgetting = task_forgetting;
+        self.task_retention = task_retention;
+        self
+    }
+
     fn mode(&self) -> &'static str {
-        if self.slo_attainment_interactive.is_some() {
+        if self.tasks.is_some() {
+            "multitask"
+        } else if self.slo_attainment_interactive.is_some() {
             "slo"
         } else if self.offered_rps.is_some() {
             "open"
@@ -207,6 +258,24 @@ impl ServeRunReport {
             self.slo_attainment_interactive.map_or(Json::Null, |a| Json::fixed(a, 4)),
         );
         o.put("lanes", lanes.build());
+        o.put("tasks", self.tasks.map_or(Json::Null, Json::from));
+        o.put("head_diff_bytes", self.head_diff_bytes.map_or(Json::Null, Json::from));
+        o.put(
+            "task_attainment",
+            Json::Arr(self.task_attainment.iter().map(|&a| Json::fixed(a, 4)).collect()),
+        );
+        o.put(
+            "task_forgetting",
+            Json::Arr(self.task_forgetting.iter().map(|&a| Json::fixed(a, 4)).collect()),
+        );
+        o.put(
+            "task_retention",
+            Json::Arr(self.task_retention.iter().map(|&a| Json::fixed(a, 4)).collect()),
+        );
+        o.put(
+            "task_books",
+            Json::Arr(self.queue.tasks.iter().map(Self::lane_json).collect()),
+        );
         o.put("served", s.served);
         o.put("train_steps", s.train_steps);
         o.put("resyncs", s.resyncs);
@@ -291,6 +360,29 @@ impl fmt::Display for ServeRunReport {
         if let (Some(budget), Some(attain)) = (self.slo_budget_us, self.slo_attainment_interactive)
         {
             writeln!(f, "  slo     : {budget} µs budget, {:.2}% attainment", attain * 100.0)?;
+        }
+        if let Some(k) = self.tasks {
+            let diff = self.head_diff_bytes.unwrap_or(0);
+            let attain: Vec<String> =
+                self.task_attainment.iter().map(|a| format!("{:.2}%", a * 100.0)).collect();
+            write!(f, "  tasks   : {k} heads, head diff {diff} B")?;
+            if attain.is_empty() {
+                writeln!(f)?;
+            } else {
+                writeln!(f, ", attainment [{}]", attain.join(" "))?;
+            }
+            if !self.task_retention.is_empty() {
+                let ret: Vec<String> =
+                    self.task_retention.iter().map(|r| format!("{r:.3}")).collect();
+                let forg: Vec<String> =
+                    self.task_forgetting.iter().map(|v| format!("{v:.3}")).collect();
+                writeln!(
+                    f,
+                    "  cl      : retention [{}], forgetting [{}]",
+                    ret.join(" "),
+                    forg.join(" ")
+                )?;
+            }
         }
         let bulk = self.queue.lane(Lane::Bulk);
         if bulk.offered > 0 {
@@ -443,6 +535,21 @@ mod tests {
         assert!(sj.contains("\"slo_budget_us\": 2000"), "{sj}");
         assert!(sj.contains("\"slo_attainment_interactive\": 0.9950"), "{sj}");
         assert_eq!(sj.matches('{').count(), sj.matches('}').count(), "{sj}");
+        // Multitask marking wins the mode and records the byte
+        // accounting plus per-task attainment (what CI greps for).
+        let mt = slo
+            .with_multitask(3, 8192, vec![0.99, 0.98, 1.0])
+            .with_task_metrics(vec![0.0, 0.0, 0.0], vec![1.0, 1.0, 1.0]);
+        let mj = mt.to_json_value().to_pretty(2);
+        assert!(mj.contains("\"mode\": \"multitask\""), "{mj}");
+        assert!(mj.contains("\"tasks\": 3"), "{mj}");
+        assert!(mj.contains("\"head_diff_bytes\": 8192"), "{mj}");
+        assert!(mj.contains("\"task_attainment\""), "{mj}");
+        assert!(mj.contains("\"task_forgetting\""), "{mj}");
+        assert!(mj.contains("\"task_retention\""), "{mj}");
+        let ms = format!("{mt}");
+        assert!(ms.contains("3 heads, head diff 8192 B"), "{ms}");
+        assert!(ms.contains("retention [1.000 1.000 1.000]"), "{ms}");
     }
 
     #[test]

@@ -45,6 +45,14 @@
 //!   bench binary): batching ladder, replica ladder, open-loop
 //!   saturation sweep, SLO-attainment rung with an injected replica
 //!   kill, all parity-pinned against per-sample `predict`.
+//!
+//! PR 10 adds **multi-task serving with zero parameter growth**: jobs
+//! carry a `task` id, the queue keeps per-task admission books and SLO
+//! budgets, the pool routes each coalesced batch through
+//! [`crate::cl::Learner::predict_batch_tasks`] (one shared backbone
+//! pass, per-task dense heads), and a train job moves only its task's
+//! head — pinned by the task-isolation suite in
+//! `tests/multitask_parity.rs` and the `serve-bench --tasks K` rung.
 
 pub mod bench;
 pub mod clock;

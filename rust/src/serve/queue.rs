@@ -119,6 +119,11 @@ impl Lane {
 pub struct PredictJob {
     pub x: Tensor<f32>,
     pub active_classes: usize,
+    /// Task whose head answers this request (0 when single-task). The
+    /// admission books are mirrored per task, and the server's router
+    /// answers each request on this task's dense head while the conv
+    /// backbone pass stays shared across the whole coalesced batch.
+    pub task: usize,
     pub lane: Lane,
     /// Absolute deadline on the queue's clock (µs). `None` at offer time
     /// means "use the lane's SLO budget if one is configured"; a request
@@ -164,6 +169,10 @@ pub struct TrainJob {
     pub x: Tensor<f32>,
     pub label: usize,
     pub active_classes: usize,
+    /// Task whose head this update trains (0 when single-task). The
+    /// barrier leader switches the learner's active head to this task
+    /// before applying the step, so only that head's weights move.
+    pub task: usize,
     pub lr: f32,
     /// Latent-replay cut this update trains at: 0 = full-network step;
     /// `cut > 0` forwards the frozen prefix and trains only the suffix
@@ -237,8 +246,8 @@ impl LaneStats {
 }
 
 /// Admission-control counters: aggregates over both lanes plus the
-/// per-lane books.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+/// per-lane and per-task books.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct QueueStats {
     /// Predicts presented to [`ServeQueue::offer`] while open (all lanes).
     pub offered: u64,
@@ -256,19 +265,32 @@ pub struct QueueStats {
     pub pending: usize,
     /// The per-lane books, indexed by [`Lane::index`].
     pub lanes: [LaneStats; 2],
+    /// The per-task books, indexed by task id and grown on first
+    /// traffic for that task — the same shape as a lane book, so the
+    /// `offered == admitted + shed` invariant is checked per task too.
+    pub tasks: Vec<LaneStats>,
 }
 
 impl QueueStats {
     /// The accounting contract: every offered predict was either
     /// admitted or shed for exactly one recorded reason — nothing
-    /// vanishes, per lane and in aggregate.
+    /// vanishes, per lane, per task, and in aggregate. (Every offer
+    /// lands in exactly one lane book and one task book, so the lane
+    /// sums and the task sums must both equal the aggregates.)
     pub fn consistent(&self) -> bool {
         self.lanes.iter().all(LaneStats::consistent)
+            && self.tasks.iter().all(LaneStats::consistent)
             && self.offered == self.lanes.iter().map(|l| l.offered).sum::<u64>()
             && self.admitted == self.lanes.iter().map(|l| l.admitted).sum::<u64>()
             && self.shed == self.lanes.iter().map(|l| l.shed).sum::<u64>()
             && self.shed_capacity == self.lanes.iter().map(|l| l.shed_capacity).sum::<u64>()
             && self.shed_deadline == self.lanes.iter().map(|l| l.shed_deadline).sum::<u64>()
+            && self.offered == self.tasks.iter().map(|t| t.offered).sum::<u64>()
+            && self.admitted == self.tasks.iter().map(|t| t.admitted).sum::<u64>()
+            && self.shed == self.tasks.iter().map(|t| t.shed).sum::<u64>()
+            && self.shed_capacity == self.tasks.iter().map(|t| t.shed_capacity).sum::<u64>()
+            && self.shed_deadline == self.tasks.iter().map(|t| t.shed_deadline).sum::<u64>()
+            && self.pending == self.tasks.iter().map(|t| t.pending).sum::<usize>()
             && self.shed == self.shed_capacity + self.shed_deadline
             && self.offered == self.admitted + self.shed
     }
@@ -284,6 +306,20 @@ impl QueueStats {
 
     pub fn lane(&self, lane: Lane) -> &LaneStats {
         &self.lanes[lane.index()]
+    }
+
+    /// The books for one task. A task that has never seen traffic has
+    /// zeroed books — absence of offers is not an error.
+    pub fn task(&self, task: usize) -> LaneStats {
+        self.tasks.get(task).copied().unwrap_or_default()
+    }
+
+    /// Mutable per-task book, growing the vector on first traffic.
+    fn task_mut(&mut self, task: usize) -> &mut LaneStats {
+        if self.tasks.len() <= task {
+            self.tasks.resize(task + 1, LaneStats::default());
+        }
+        &mut self.tasks[task]
     }
 }
 
@@ -426,6 +462,10 @@ pub struct ServeQueue {
     /// Per-lane latency SLO budget (µs): offers without an explicit
     /// deadline are stamped `now + budget` at admission.
     lane_slo_us: [Option<u64>; 2],
+    /// Per-task latency SLO budget (µs), indexed by task id. When both
+    /// a lane and a task budget apply, the tighter one stamps the
+    /// deadline.
+    task_slo_us: Vec<Option<u64>>,
     clock: Arc<dyn Clock>,
     obs: QueueObs,
 }
@@ -459,6 +499,7 @@ impl ServeQueue {
             depth: depth.max(1),
             starvation_budget: STARVATION_BUDGET,
             lane_slo_us: [None, None],
+            task_slo_us: Vec::new(),
             clock,
             obs: QueueObs::new(),
         }
@@ -479,6 +520,18 @@ impl ServeQueue {
         self
     }
 
+    /// Set a task's latency SLO budget (builder-style, pre-`Arc`): every
+    /// offer routed to that task without an explicit deadline is stamped
+    /// with the tighter of the task budget and the lane budget. Lets a
+    /// latency-critical task keep its SLO while batched with laxer ones.
+    pub fn with_task_slo(mut self, task: usize, budget: Duration) -> ServeQueue {
+        if self.task_slo_us.len() <= task {
+            self.task_slo_us.resize(task + 1, None);
+        }
+        self.task_slo_us[task] = Some(budget.as_micros() as u64);
+        self
+    }
+
     /// Flushes a non-empty bulk lane may wait behind interactive traffic
     /// before it must be served.
     pub fn starvation_budget(&self) -> u64 {
@@ -488,6 +541,11 @@ impl ServeQueue {
     /// The lane's SLO budget, if one is configured.
     pub fn lane_slo_us(&self, lane: Lane) -> Option<u64> {
         self.lane_slo_us[lane.index()]
+    }
+
+    /// The task's SLO budget, if one is configured.
+    pub fn task_slo_us(&self, task: usize) -> Option<u64> {
+        self.task_slo_us.get(task).copied().flatten()
     }
 
     /// The queue's time source (shared with the owning server).
@@ -505,10 +563,16 @@ impl ServeQueue {
     /// `shed_capacity`.
     pub fn offer(&self, mut job: PredictJob) -> Admission {
         let li = job.lane.index();
+        let ti = job.task;
         let now = self.clock.now_us();
         job.admitted_us = now;
         if job.deadline_us.is_none() {
-            job.deadline_us = self.lane_slo_us[li].map(|slo| now.saturating_add(slo));
+            // The tighter of the lane budget and the task budget wins.
+            let budget = match (self.lane_slo_us[li], self.task_slo_us(ti)) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            job.deadline_us = budget.map(|slo| now.saturating_add(slo));
         }
         let mut inner = self.lock();
         if inner.closed {
@@ -516,6 +580,7 @@ impl ServeQueue {
         }
         inner.stats.offered += 1;
         inner.stats.lanes[li].offered += 1;
+        inner.stats.task_mut(ti).offered += 1;
         self.obs.offered[li].inc();
         // Dead on arrival: a request already at/past its deadline is a
         // deadline shed, not a capacity signal.
@@ -524,6 +589,9 @@ impl ServeQueue {
             inner.stats.shed_deadline += 1;
             inner.stats.lanes[li].shed += 1;
             inner.stats.lanes[li].shed_deadline += 1;
+            let tb = inner.stats.task_mut(ti);
+            tb.shed += 1;
+            tb.shed_deadline += 1;
             self.obs.shed_deadline[li].inc();
             return Admission::Shed;
         }
@@ -532,6 +600,9 @@ impl ServeQueue {
             inner.stats.shed_capacity += 1;
             inner.stats.lanes[li].shed += 1;
             inner.stats.lanes[li].shed_capacity += 1;
+            let tb = inner.stats.task_mut(ti);
+            tb.shed += 1;
+            tb.shed_capacity += 1;
             self.obs.shed_capacity[li].inc();
             return Admission::Shed;
         }
@@ -539,6 +610,9 @@ impl ServeQueue {
         inner.stats.pending += 1;
         inner.stats.lanes[li].admitted += 1;
         inner.stats.lanes[li].pending += 1;
+        let tb = inner.stats.task_mut(ti);
+        tb.admitted += 1;
+        tb.pending += 1;
         self.obs.admitted[li].inc();
         inner.last_arrival_us[li] = now;
         let seq = inner.next_seq;
@@ -590,10 +664,13 @@ impl ServeQueue {
         let mut inner = self.lock();
         inner.closed = true;
         for li in 0..2 {
-            let n = inner.lanes[li].len();
-            inner.stats.pending -= n;
-            inner.stats.lanes[li].pending -= n;
-            inner.lanes[li].clear();
+            let dropped: Vec<usize> =
+                inner.lanes[li].drain(..).map(|Seq(_, j)| j.task).collect();
+            inner.stats.pending -= dropped.len();
+            inner.stats.lanes[li].pending -= dropped.len();
+            for ti in dropped {
+                inner.stats.task_mut(ti).pending -= 1;
+            }
         }
         inner.trains.clear();
         inner.orphans.clear();
@@ -604,7 +681,7 @@ impl ServeQueue {
     }
 
     pub fn stats(&self) -> QueueStats {
-        self.lock().stats
+        self.lock().stats.clone()
     }
 
     /// Predict batches popped but not yet marked [`ServeQueue::done`].
@@ -698,6 +775,7 @@ impl ServeQueue {
     /// `from_lane` also releases the job's pending slot.
     fn shed_expired(&self, inner: &mut Inner, job: PredictJob, from_lane: bool) {
         let li = job.lane.index();
+        let ti = job.task;
         if from_lane {
             inner.stats.pending -= 1;
             inner.stats.lanes[li].pending -= 1;
@@ -708,6 +786,13 @@ impl ServeQueue {
         inner.stats.shed_deadline += 1;
         inner.stats.lanes[li].shed += 1;
         inner.stats.lanes[li].shed_deadline += 1;
+        let tb = inner.stats.task_mut(ti);
+        if from_lane {
+            tb.pending -= 1;
+        }
+        tb.admitted -= 1;
+        tb.shed += 1;
+        tb.shed_deadline += 1;
         self.obs.shed_deadline[li].inc();
         // A client that gave up is not an error.
         let _ = job.resp.send(PredictOutcome::DeadlineShed);
@@ -842,6 +927,7 @@ impl ServeQueue {
         let Seq(_, mut first) = inner.lanes[li].pop_front().expect("ready lane was empty");
         inner.stats.pending -= 1;
         inner.stats.lanes[li].pending -= 1;
+        inner.stats.task_mut(first.task).pending -= 1;
         inner.busy += 1;
         let opened_us = self.clock.now_us();
         first.assembled_us = opened_us;
@@ -863,6 +949,7 @@ impl ServeQueue {
                 let Seq(_, mut p) = inner.lanes[li].pop_front().expect("ready lane was empty");
                 inner.stats.pending -= 1;
                 inner.stats.lanes[li].pending -= 1;
+                inner.stats.task_mut(p.task).pending -= 1;
                 p.assembled_us = now;
                 batch.push(p);
             }
@@ -907,11 +994,16 @@ mod tests {
     }
 
     fn lane_job(v: f32, lane: Lane) -> (PredictJob, Receiver<PredictOutcome>) {
+        task_job(v, lane, 0)
+    }
+
+    fn task_job(v: f32, lane: Lane, task: usize) -> (PredictJob, Receiver<PredictOutcome>) {
         let (tx, rx) = channel();
         (
             PredictJob {
                 x: img(v),
                 active_classes: 2,
+                task,
                 lane,
                 deadline_us: None,
                 admitted_us: 0,
@@ -928,6 +1020,7 @@ mod tests {
             PredictJob {
                 x: img(v),
                 active_classes: 2,
+                task: 0,
                 lane: Lane::Interactive,
                 deadline_us: Some(deadline_us),
                 admitted_us: 0,
@@ -941,7 +1034,7 @@ mod tests {
     fn train_job() -> TrainJob {
         // The receiver is dropped — fine, nothing sends on it here.
         let (tx, _) = channel();
-        TrainJob { x: img(0.0), label: 0, active_classes: 2, lr: 0.1, cut: 0, resp: tx }
+        TrainJob { x: img(0.0), label: 0, active_classes: 2, task: 0, lr: 0.1, cut: 0, resp: tx }
     }
 
     fn pop_predicts(q: &ServeQueue, max_batch: usize) -> Vec<PredictJob> {
@@ -1007,6 +1100,62 @@ mod tests {
         );
         assert_eq!((s.lane(Lane::Bulk).admitted, s.lane(Lane::Bulk).shed), (2, 2));
         assert_eq!((s.offered, s.admitted, s.shed), (7, 4, 3));
+    }
+
+    #[test]
+    fn per_task_books_mirror_every_admission_verdict() {
+        // depth 2, traffic on tasks 0 and 2 (task 1 never offered): each
+        // verdict lands in exactly one task book, the task sums equal
+        // the aggregates, and an unseen task reads as zeroed books.
+        let q = ServeQueue::new(2);
+        let mut keep = Vec::new();
+        for i in 0..3 {
+            let (j, rx) = task_job(i as f32, Lane::Interactive, 0);
+            q.offer(j); // third offer sheds at the lane bound
+            keep.push(rx);
+        }
+        let (j, rx) = task_job(10.0, Lane::Bulk, 2);
+        assert_eq!(q.offer(j), Admission::Admitted);
+        keep.push(rx);
+        let s = q.stats();
+        assert!(s.consistent());
+        assert_eq!((s.task(0).offered, s.task(0).admitted, s.task(0).shed_capacity), (3, 2, 1));
+        assert_eq!((s.task(2).offered, s.task(2).admitted, s.task(2).pending), (1, 1, 1));
+        assert_eq!(s.task(1), LaneStats::default(), "untouched task has zeroed books");
+        assert_eq!(s.task(99), LaneStats::default(), "unknown task reads as zeroed books");
+        // Draining releases the per-task pending slots too.
+        assert_eq!(pop_predicts(&q, 8).len(), 2); // interactive lane, task 0
+        assert_eq!(pop_predicts(&q, 8).len(), 1); // bulk lane, task 2
+        let s = q.stats();
+        assert!(s.consistent());
+        assert_eq!((s.task(0).pending, s.task(2).pending), (0, 0));
+    }
+
+    #[test]
+    fn task_slo_stamps_the_tighter_deadline() {
+        // Task 1 carries a 300 µs SLO while its lane carries 500 µs: the
+        // task budget (tighter) stamps the deadline. Task 0 on the same
+        // lane keeps the lane budget, and a task SLO alone works on a
+        // lane with no budget of its own.
+        let clock = MockClock::shared();
+        let q = ServeQueue::with_clock(16, std::sync::Arc::<MockClock>::clone(&clock))
+            .with_lane_slo(Lane::Interactive, Duration::from_micros(500))
+            .with_task_slo(1, Duration::from_micros(300));
+        assert_eq!(q.task_slo_us(1), Some(300));
+        assert_eq!(q.task_slo_us(0), None);
+        clock.set_us(1000);
+        let (j0, _r0) = task_job(1.0, Lane::Interactive, 0);
+        let (j1, _r1) = task_job(2.0, Lane::Interactive, 1);
+        let (jb, _rb) = task_job(3.0, Lane::Bulk, 1);
+        q.offer(j0);
+        q.offer(j1);
+        q.offer(jb);
+        let batch = pop_predicts(&q, 8);
+        assert_eq!(batch[0].deadline_us, Some(1500), "lane budget for task 0");
+        assert_eq!(batch[1].deadline_us, Some(1300), "tighter task budget wins");
+        let bulk = pop_predicts(&q, 8);
+        assert_eq!(bulk[0].deadline_us, Some(1300), "task budget applies on a budget-less lane");
+        assert!(q.stats().consistent());
     }
 
     #[test]

@@ -19,6 +19,22 @@
 //! before the train see pre-update weights, those after see post-update
 //! weights, on every replica.
 //!
+//! # Multi-task serving (zero parameter growth)
+//!
+//! Every predict and train job carries a `task` id. Backends that grow
+//! per-task dense heads over one shared conv backbone
+//! ([`crate::nn::Model::add_task_head`]) serve a coalesced cross-task
+//! batch with a **single shared backbone pass** — each request's logits
+//! come from its own task's head via [`Learner::predict_batch_tasks`] —
+//! so cross-task traffic still batches. A train job moves only its
+//! task's head: the barrier leader switches the active head before
+//! applying the update, and with a frozen backbone the post-train diff
+//! re-broadcast ships exactly that one narrow head. Single-head
+//! backends fall back to group-and-swap routing and reject train jobs
+//! for tasks other than 0. `tests/multitask_parity.rs` pins the
+//! isolation contract: training task *t* leaves every other head — and
+//! every prediction served from it — bit-identical.
+//!
 //! # Exactly-once execution and fault recovery
 //!
 //! Every popped predict batch is **checked into a flight table** before
@@ -207,7 +223,7 @@ fn install_injected_panic_hook() {
 }
 
 /// Batcher + admission-control + pool knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Flush a batch at this many coalesced requests. Default:
     /// [`crate::cl::EVAL_BATCH`] — the same packed-forward chunk size
@@ -225,6 +241,11 @@ pub struct ServerConfig {
     /// without an explicit deadline are stamped `admission + budget`
     /// and shed once past it (at admission and at batch build).
     pub lane_slo: [Option<Duration>; 2],
+    /// Per-task latency SLO budgets (`(task, budget)` pairs). When a
+    /// request's lane and task both carry a budget, the tighter one
+    /// stamps the deadline — a latency-critical task keeps its SLO even
+    /// when batched behind laxer tasks' traffic.
+    pub task_slo: Vec<(usize, Duration)>,
     /// Steal in-flight batches older than this (wedged-replica
     /// recovery): `Some` also starts a background watchdog thread that
     /// scans at a quarter of this period. Set it well above the worst
@@ -248,6 +269,7 @@ impl Default for ServerConfig {
             queue_depth: DEFAULT_QUEUE_DEPTH,
             replicas: 1,
             lane_slo: [None, None],
+            task_slo: Vec::new(),
             stall_timeout: None,
             diff_resync: true,
             autoscale: None,
@@ -365,7 +387,30 @@ impl ServeClient {
     /// batch-build deadline drop surfaces as [`Served::Shed`], same as
     /// an admission shed — the per-reason queue books tell them apart.
     pub fn predict_on(&self, x: &Tensor<f32>, active_classes: usize, lane: Lane) -> Served {
-        match self.predict_async(x, active_classes, lane) {
+        Self::wait(self.predict_async(x, active_classes, lane))
+    }
+
+    /// Synchronous predict routed to `task`'s head (interactive lane).
+    /// The single-task [`ServeClient::predict`] is exactly this with
+    /// task 0.
+    pub fn predict_task(&self, x: &Tensor<f32>, active_classes: usize, task: usize) -> Served {
+        self.predict_task_on(x, active_classes, task, Lane::Interactive)
+    }
+
+    /// [`ServeClient::predict_task`] with an explicit priority lane.
+    pub fn predict_task_on(
+        &self,
+        x: &Tensor<f32>,
+        active_classes: usize,
+        task: usize,
+        lane: Lane,
+    ) -> Served {
+        Self::wait(self.predict_task_async_with_deadline(x, active_classes, task, lane, None))
+    }
+
+    /// Block on an admitted submission's outcome.
+    fn wait(submitted: Submitted) -> Served {
+        match submitted {
             Submitted::Pending(rx) => match rx.recv() {
                 Ok(PredictOutcome::Answered(r)) => {
                     Served::Ok { pred: r.pred, batch_size: r.batch_size }
@@ -397,10 +442,26 @@ impl ServeClient {
         lane: Lane,
         deadline_us: Option<u64>,
     ) -> Submitted {
+        self.predict_task_async_with_deadline(x, active_classes, 0, lane, deadline_us)
+    }
+
+    /// The full submission form: non-blocking, routed to `task`'s head,
+    /// on an explicit lane, with an optional absolute deadline (µs on
+    /// the server's clock) overriding the lane/task SLO stamp. Every
+    /// other predict entry point funnels here.
+    pub fn predict_task_async_with_deadline(
+        &self,
+        x: &Tensor<f32>,
+        active_classes: usize,
+        task: usize,
+        lane: Lane,
+        deadline_us: Option<u64>,
+    ) -> Submitted {
         let (tx, rx) = channel::<PredictOutcome>();
         let job = PredictJob {
             x: x.clone(),
             active_classes,
+            task,
             lane,
             deadline_us,
             resp: tx,
@@ -441,8 +502,38 @@ impl ServeClient {
         lr: f32,
         cut: usize,
     ) -> Option<f32> {
+        self.train_task_at_cut(x, label, active_classes, 0, lr, cut)
+    }
+
+    /// Serve-while-learning on `task`'s head: the barrier leader
+    /// switches the pool's active head to `task` before applying the
+    /// step, so only that head's weights move (with a frozen backbone
+    /// the re-broadcast diff is exactly that head). The single-task
+    /// [`ServeClient::train`] is this with task 0.
+    pub fn train_task(
+        &self,
+        x: &Tensor<f32>,
+        label: usize,
+        active_classes: usize,
+        task: usize,
+        lr: f32,
+    ) -> Option<f32> {
+        self.train_task_at_cut(x, label, active_classes, task, lr, 0)
+    }
+
+    /// [`ServeClient::train_task`] at a latent-replay cut — the full
+    /// train submission form every other train entry point funnels to.
+    pub fn train_task_at_cut(
+        &self,
+        x: &Tensor<f32>,
+        label: usize,
+        active_classes: usize,
+        task: usize,
+        lr: f32,
+        cut: usize,
+    ) -> Option<f32> {
         let (tx, rx) = channel::<f32>();
-        let job = TrainJob { x: x.clone(), label, active_classes, lr, cut, resp: tx };
+        let job = TrainJob { x: x.clone(), label, active_classes, task, lr, cut, resp: tx };
         if !self.queue.push_train(job) {
             return None;
         }
@@ -763,6 +854,13 @@ struct ReplicaObs {
     compute: &'static Histogram,
     /// `serve_barrier_us` — quiesce→resume held by a barrier leader.
     barrier: &'static Histogram,
+    /// `serve_multitask_groups_total` — coalesced batches that carried
+    /// requests for more than one task (the router still ran a single
+    /// shared backbone pass for them).
+    mixed: &'static obs::Counter,
+    /// `serve_head_switch_total` — active-head switches performed by
+    /// barrier leaders routing train jobs to their task.
+    head_switch: &'static obs::Counter,
 }
 
 impl ReplicaObs {
@@ -789,6 +887,8 @@ impl ReplicaObs {
             .map(|w| obs::counter(&format!("serve_flush_total{{why=\"{}\"}}", w.name()))),
             compute: h("serve_replica_compute_us".to_string()),
             barrier: h("serve_barrier_us".to_string()),
+            mixed: obs::counter("serve_multitask_groups_total"),
+            head_switch: obs::counter("serve_head_switch_total"),
         }
     }
 }
@@ -878,11 +978,15 @@ impl<L: Learner + Send + 'static> Server<L> {
             install_injected_panic_hook();
         }
         let replicas = cfg.replicas.max(1);
+        let stall_timeout = cfg.stall_timeout;
         let mut queue = ServeQueue::with_clock(cfg.queue_depth, clock);
         for lane in Lane::ALL {
             if let Some(budget) = cfg.lane_slo[lane.index()] {
                 queue = queue.with_lane_slo(lane, budget);
             }
+        }
+        for &(task, budget) in &cfg.task_slo {
+            queue = queue.with_task_slo(task, budget);
         }
         let shared = Arc::new(PoolShared {
             queue: Arc::new(queue),
@@ -918,7 +1022,7 @@ impl<L: Learner + Send + 'static> Server<L> {
         for l in learners {
             spawn_replica(&shared, l);
         }
-        let watchdog = cfg.stall_timeout.map(|timeout| {
+        let watchdog = stall_timeout.map(|timeout| {
             let shared = Arc::clone(&shared);
             std::thread::Builder::new()
                 .name("tinycl-serve-watchdog".into())
@@ -1116,8 +1220,8 @@ fn serve_jobs<L: Learner + Send + 'static>(
     // The jobs themselves (with their response channels) live in the
     // flight table while we compute, so an unwind or a watchdog steal
     // recovers them intact; compute reads these cheap input copies.
-    let inputs: Vec<(Tensor<f32>, usize)> =
-        jobs.iter().map(|j| (j.x.clone(), j.active_classes)).collect();
+    let inputs: Vec<(Tensor<f32>, usize, usize)> =
+        jobs.iter().map(|j| (j.x.clone(), j.active_classes, j.task)).collect();
     let lease = queue.clock().now_us();
     let lease = shared.flights.check_in(replica, jobs, lease, owes_done);
     if owes_done {
@@ -1130,30 +1234,26 @@ fn serve_jobs<L: Learner + Send + 'static>(
     // The compute bracket opens after the fault checkpoint: a released
     // stall's park time stays out of the compute stage.
     let compute_start_us = queue.clock().now_us();
-    // One packed forward per active-head group (requests virtually
-    // always share one head, so this is one `predict_batch` for the
-    // whole coalesced batch).
-    let mut by_head: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-    for (i, (_, active)) in inputs.iter().enumerate() {
-        by_head.entry(*active).or_default().push(i);
+    // The task router: one call routes the whole coalesced batch —
+    // backends with native multi-task support run a single shared
+    // backbone pass and answer each request on its own task's dense
+    // head, so cross-task traffic still batches; single-head backends
+    // fall back to group-and-swap (see `cl::default_predict_batch_tasks`).
+    let xs: Vec<&Tensor<f32>> = inputs.iter().map(|(x, _, _)| x).collect();
+    let actives: Vec<usize> = inputs.iter().map(|&(_, a, _)| a).collect();
+    let tasks: Vec<usize> = inputs.iter().map(|&(_, _, t)| t).collect();
+    if tasks.iter().any(|&t| t != tasks[0]) {
+        robs.mixed.inc();
     }
-    let mut preds = vec![0usize; batch_size];
-    for (active, idxs) in by_head {
-        let xs: Vec<&Tensor<f32>> = idxs.iter().map(|&i| &inputs[i].0).collect();
-        let out = learner.predict_batch(&xs, active);
-        // A short vector would silently drop responses and hang the
-        // affected clients — fail attributably.
-        assert_eq!(
-            out.len(),
-            idxs.len(),
-            "predict_batch returned {} predictions for {} inputs",
-            out.len(),
-            idxs.len()
-        );
-        for (&i, p) in idxs.iter().zip(out) {
-            preds[i] = p;
-        }
-    }
+    let preds = learner.predict_batch_tasks(&xs, &tasks, &actives);
+    // A short vector would silently drop responses and hang the
+    // affected clients — fail attributably.
+    assert_eq!(
+        preds.len(),
+        batch_size,
+        "predict_batch_tasks returned {} predictions for {batch_size} inputs",
+        preds.len(),
+    );
     let compute_end_us = queue.clock().now_us();
     obs::record_us(robs.compute, compute_end_us.saturating_sub(compute_start_us));
     let Some(flight) = shared.flights.complete(lease) else {
@@ -1217,6 +1317,16 @@ fn lead_barrier<L: Learner + Send + 'static>(
     if !orphans.is_empty() {
         serve_jobs(replica, learner, shared, orphans, stats, false, robs);
     }
+    // Route the update to its task's head. The whole pool is paused and
+    // drained here, so the switch can never race a predict batch; the
+    // re-broadcast below carries the new active-task state to every
+    // replica. A missing head is a routing bug — fail attributably.
+    if learner.active_task() != job.task {
+        robs.head_switch.inc();
+    }
+    learner.set_active_task(job.task).unwrap_or_else(|e| {
+        panic!("train job routed to task {} cannot be applied: {e}", job.task)
+    });
     let loss = if job.cut == 0 {
         learner.train_step(&job.x, job.label, job.active_classes, job.lr)
     } else {
@@ -1319,7 +1429,7 @@ fn model_loop<L: Learner + Send + 'static>(
 ) -> ReplicaExit<L> {
     let guard = CrashGuard { shared: Arc::clone(shared), replica };
     let mut stats = ServerStats::default();
-    let cfg = shared.cfg;
+    let cfg = &shared.cfg;
     let robs = ReplicaObs::new(&shared.recorder, replica);
     robs.ring.push(shared.queue.clock().now_us(), Event::ReplicaStart);
     while let Some(batch) =

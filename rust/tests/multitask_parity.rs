@@ -1,0 +1,315 @@
+//! Multi-task routing parity + head-isolation pins (PR 10).
+//!
+//! The zero-growth contract in three layers: (a) **K=1 degeneracy** —
+//! routing through the mixed-task batch path with every sample on task
+//! 0 is the single-head path (bit-for-bit on the integer backend and
+//! the naive float engine, within the documented ≤ 1e-4 logit contract
+//! on the GEMM engine); (b) **head isolation** — training head t moves
+//! head t and *only* head t: every other head's weight bits and served
+//! answers are identical across the train barrier, on every replica,
+//! on every backend; (c) **router accounting** — per-task admission
+//! books balance (`offered == admitted + shed` per task) across a
+//! tasks × lanes × max_batch grid. Plus regression pins for the
+//! actionable `set_active_task` error and `clone_replica`'s deep head
+//! copies.
+
+use std::time::Duration;
+use tinycl::cl::Learner;
+use tinycl::coordinator::{Backend, BackendKind};
+use tinycl::data::{Dataset, SyntheticCifar};
+use tinycl::fixed::Fx;
+use tinycl::nn::{Engine, Model, ModelConfig};
+use tinycl::qnn::{QModel, QnnEngine};
+use tinycl::serve::{Lane, Served, Server, ServerConfig};
+use tinycl::sim::SimConfig;
+use tinycl::tensor::{quantize_tensor, Tensor};
+
+const ACTIVE: usize = 4;
+/// Width of every added (narrow) head in these tests.
+const NARROW: usize = 2;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        in_channels: 3,
+        image_size: 8,
+        conv_channels: 4,
+        num_classes: 4,
+        grad_clip: f32::INFINITY,
+    }
+}
+
+fn tiny_data() -> Dataset {
+    let gen = SyntheticCifar {
+        image_size: 8,
+        channels: 3,
+        num_classes: 4,
+        noise: 0.35,
+        seed: 11,
+    };
+    gen.generate(6, 0)
+}
+
+/// A backend with two narrow heads added and the backbone frozen — the
+/// multi-task serving shape. Heads 1 and 2 are deterministic in `seed`.
+fn multitask_backend(kind: BackendKind, seed: u64) -> Backend {
+    let mut b = Backend::create(kind, &tiny_cfg(), &SimConfig::paper(), "artifacts", seed)
+        .expect("host backends always build");
+    b.set_threads(2);
+    assert_eq!(b.add_task_head(NARROW, seed ^ 0x4EAD), Some(1));
+    assert_eq!(b.add_task_head(NARROW, seed ^ 0x4EAE), Some(2));
+    assert_eq!(b.num_tasks(), 3);
+    assert!(b.set_freeze_backbone(true), "multi-task backends honor the freeze flag");
+    b
+}
+
+// ---- (a) K=1 degeneracy ---------------------------------------------
+
+#[test]
+fn k1_routing_matches_single_head_bit_for_bit_on_qnn() {
+    // Every sample on task 0: the shared-backbone router must be the
+    // plain batched forward, bit-for-bit, on both integer engines (the
+    // wrapping sums are order-independent, so there is no tolerance to
+    // hide behind).
+    let data = tiny_data();
+    let float = Model::new(tiny_cfg(), 5);
+    let qxs: Vec<Tensor<Fx>> = data.samples.iter().map(|s| quantize_tensor(&s.x)).collect();
+    let refs: Vec<&Tensor<Fx>> = qxs.iter().collect();
+    let tasks = vec![0usize; refs.len()];
+    let actives = vec![ACTIVE; refs.len()];
+    for engine in [QnnEngine::Naive, QnnEngine::Fast] {
+        let qm = QModel::from_model(&float).with_engine(engine).with_threads(2);
+        assert_eq!(
+            qm.forward_batch_tasks(&refs, &tasks),
+            qm.forward_batch(&refs),
+            "task-0 routed logits diverged from the single-head forward ({engine:?})"
+        );
+        assert_eq!(
+            qm.predict_batch_tasks(&refs, &tasks, &actives),
+            qm.predict_batch(&refs, ACTIVE),
+            "task-0 routed predictions diverged ({engine:?})"
+        );
+    }
+}
+
+#[test]
+fn k1_routing_matches_single_head_within_logit_contract_on_f32() {
+    // Naive engine: the routed path reuses the identical per-sample
+    // loops — exact equality. GEMM engine: the router's shared backbone
+    // pass runs the cut-point datapath whose summation order differs
+    // from the fused serve forward — the documented ≤ 1e-4 contract.
+    let data = tiny_data();
+    let xs: Vec<&Tensor<f32>> = data.samples.iter().map(|s| &s.x).collect();
+    let tasks = vec![0usize; xs.len()];
+    let actives = vec![ACTIVE; xs.len()];
+
+    let naive = Model::new(tiny_cfg(), 5);
+    assert_eq!(
+        naive.forward_batch_tasks(&xs, &tasks),
+        naive.forward_batch(&xs),
+        "task-0 routing must be exact on the naive engine"
+    );
+
+    let fast = Model::new(tiny_cfg(), 5).with_engine(Engine::Gemm).with_threads(2);
+    let routed = fast.forward_batch_tasks(&xs, &tasks);
+    let single = fast.forward_batch(&xs);
+    for (i, (r, s)) in routed.iter().zip(&single).enumerate() {
+        for (c, (a, b)) in r.iter().zip(s).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4,
+                "sample {i} class {c}: routed logit {a} vs single-head {b}"
+            );
+        }
+    }
+    let _ = fast.predict_batch_tasks(&xs, &tasks, &actives);
+}
+
+// ---- (b) head isolation across the train barrier --------------------
+
+#[test]
+fn training_one_head_leaves_every_other_head_bit_identical() {
+    // replicas {1,2,4} × backends: burst head 1 through the serve
+    // barrier; heads 0 and 2 must keep their exact weight bits (the
+    // fingerprint witness) and their exact served answers, and every
+    // replica must agree with every other bit-for-bit after adoption.
+    let data = tiny_data();
+    for kind in [BackendKind::F32, BackendKind::F32Fast, BackendKind::Qnn] {
+        for replicas in [1usize, 2, 4] {
+            let backend = multitask_backend(kind, 5);
+            let baseline = backend.head_fingerprints().expect("host backends fingerprint");
+            assert_eq!(baseline.len(), 3);
+            let server = Server::start(
+                backend,
+                ServerConfig {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(200),
+                    queue_depth: 64,
+                    replicas,
+                    ..ServerConfig::default()
+                },
+            );
+            let client = server.client();
+            let probe = |task: usize, classes: usize| -> Vec<usize> {
+                data.samples
+                    .iter()
+                    .map(|s| match client.predict_task(&s.x, classes, task) {
+                        Served::Ok { pred, .. } => pred,
+                        other => panic!("probe on task {task} was not served: {other:?}"),
+                    })
+                    .collect()
+            };
+            let (pre0, pre2) = (probe(0, ACTIVE), probe(2, NARROW));
+            for step in 0..3 {
+                let s = &data.samples[(step * 7) % data.samples.len()];
+                let loss = client.train_task(&s.x, s.label % NARROW, NARROW, 1, 0.25);
+                assert!(loss.is_some(), "head-1 train step {step} must apply");
+            }
+            assert_eq!(
+                probe(0, ACTIVE),
+                pre0,
+                "{kind:?} r={replicas}: task-0 answers changed across a head-1 barrier"
+            );
+            assert_eq!(
+                probe(2, NARROW),
+                pre2,
+                "{kind:?} r={replicas}: task-2 answers changed across a head-1 barrier"
+            );
+            let (backends, stats) = server.shutdown_all();
+            assert_eq!(backends.len(), replicas);
+            assert_eq!(stats.train_steps, 3);
+            let finals: Vec<Vec<u64>> = backends
+                .iter()
+                .map(|b| b.head_fingerprints().expect("host backends fingerprint"))
+                .collect();
+            for (r, f) in finals.iter().enumerate() {
+                assert_eq!(f[0], baseline[0], "{kind:?} replica {r}: head 0 bits moved");
+                assert_eq!(f[2], baseline[2], "{kind:?} replica {r}: head 2 bits moved");
+                assert_ne!(f[1], baseline[1], "{kind:?} replica {r}: head 1 never trained");
+                assert_eq!(f, &finals[0], "{kind:?} replica {r} desynced from replica 0");
+            }
+        }
+    }
+}
+
+// ---- (c) router accounting across the grid --------------------------
+
+#[test]
+fn router_grid_keeps_per_task_books() {
+    // tasks {1,3,8} × max_batch {1,64}, both lanes interleaved in every
+    // run: each task's book must balance (offered == admitted + shed —
+    // `QueueStats::consistent` checks every task and the cross-task
+    // sums), the per-task offered counts must match what the clients
+    // actually sent, and tasks beyond K must stay empty.
+    let data = tiny_data();
+    for tasks_k in [1usize, 3, 8] {
+        for max_batch in [1usize, 64] {
+            let mut model = Model::new(tiny_cfg(), 5).with_engine(Engine::Gemm).with_threads(2);
+            for t in 1..tasks_k {
+                assert_eq!(model.add_task_head(NARROW, 0x4EAD + t as u64), t);
+            }
+            model.set_freeze_backbone(true);
+            let server = Server::start(
+                model,
+                ServerConfig {
+                    max_batch,
+                    max_wait: Duration::from_micros(200),
+                    queue_depth: 16,
+                    replicas: 1,
+                    ..ServerConfig::default()
+                },
+            );
+            let clients = 4usize;
+            let per_client = 24usize;
+            std::thread::scope(|scope| {
+                for c in 0..clients {
+                    let client = server.client();
+                    let data = &data;
+                    scope.spawn(move || {
+                        for i in 0..per_client {
+                            let task = (c + i) % tasks_k;
+                            let classes = if task == 0 { ACTIVE } else { NARROW };
+                            let lane = if i % 2 == 0 { Lane::Interactive } else { Lane::Bulk };
+                            let s = &data.samples[i % data.samples.len()];
+                            match client.predict_task_on(&s.x, classes, task, lane) {
+                                Served::Ok { .. } | Served::Shed => {}
+                                Served::Closed => panic!("server closed mid-run"),
+                            }
+                        }
+                    });
+                }
+            });
+            let q = server.queue_stats();
+            let (_m, stats) = server.shutdown();
+            assert!(q.consistent(), "books broke at k={tasks_k} mb={max_batch}: {q:?}");
+            let total = (clients * per_client) as u64;
+            assert_eq!(q.offered, total);
+            assert_eq!(stats.served, q.admitted, "an admitted request went unanswered");
+            for t in 0..tasks_k {
+                let book = q.task(t);
+                // Client c sends tasks (c + i) % K round-robin, so every
+                // task gets exactly per_client * clients / K requests
+                // when K divides per_client — it does for 1, 3, 8.
+                assert_eq!(
+                    book.offered,
+                    total / tasks_k as u64,
+                    "task {t} offered count at k={tasks_k} mb={max_batch}"
+                );
+                assert_eq!(book.offered, book.admitted + book.shed, "task {t} book");
+            }
+            assert_eq!(q.task(tasks_k).offered, 0, "a task beyond K has traffic");
+        }
+    }
+}
+
+// ---- regression pins ------------------------------------------------
+
+#[test]
+fn set_active_task_on_a_missing_head_errors_actionably() {
+    // Never a panic, never a silent wrong-head serve: the error names
+    // the task, the head count, and the fix, on every layer.
+    let mut float = Model::new(tiny_cfg(), 5);
+    let err = float.set_active_task(3).unwrap_err();
+    assert!(err.contains("task 3 has no head"), "unhelpful nn error: {err}");
+    assert!(err.contains("add_task_head"), "nn error names no fix: {err}");
+
+    let mut qm = QModel::from_model(&Model::new(tiny_cfg(), 5));
+    let err = qm.set_active_task(7).unwrap_err();
+    assert!(err.contains("task 7 has no head"), "unhelpful qnn error: {err}");
+    assert!(err.contains("add_task_head"), "qnn error names no fix: {err}");
+
+    for kind in [BackendKind::F32, BackendKind::Qnn] {
+        let mut b = Backend::create(kind, &tiny_cfg(), &SimConfig::paper(), "artifacts", 5)
+            .expect("host backends always build");
+        let err = Learner::set_active_task(&mut b, 2).unwrap_err();
+        assert!(err.contains("has no head"), "{kind:?} backend error: {err}");
+        // Task 0 always exists — switching to it is never an error.
+        assert!(Learner::set_active_task(&mut b, 0).is_ok());
+    }
+}
+
+#[test]
+fn clone_replica_deep_copies_every_head() {
+    // The replica-pool seed path: a clone must own all K heads outright
+    // — training the original afterwards may not leak into the clone
+    // through a shared buffer (and vice versa).
+    let data = tiny_data();
+    for kind in [BackendKind::F32, BackendKind::Qnn] {
+        let mut original = multitask_backend(kind, 5);
+        let clone = original.clone_replica().expect("host backends clone");
+        assert_eq!(clone.num_tasks(), 3, "{kind:?}: clone dropped heads");
+        let before = clone.head_fingerprints().expect("host backends fingerprint");
+        assert_eq!(before, original.head_fingerprints().unwrap());
+
+        Learner::set_active_task(&mut original, 1).unwrap();
+        for step in 0..3 {
+            let s = &data.samples[step % data.samples.len()];
+            original.train_step(&s.x, s.label % NARROW, NARROW, 0.25);
+        }
+        let after_orig = original.head_fingerprints().unwrap();
+        assert_ne!(after_orig[1], before[1], "{kind:?}: training head 1 moved nothing");
+        assert_eq!(
+            clone.head_fingerprints().unwrap(),
+            before,
+            "{kind:?}: training the original mutated the clone — heads are aliased"
+        );
+    }
+}

@@ -123,6 +123,7 @@ fn queue_wait_grows_while_the_queue_sits_unpopped() {
             PredictJob {
                 x: Tensor::full(Shape::d1(4), 0.5),
                 active_classes: ACTIVE,
+                task: 0,
                 lane: Lane::Interactive,
                 deadline_us: None,
                 admitted_us: 0,

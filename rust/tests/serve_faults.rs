@@ -86,6 +86,7 @@ fn deadline_grid_splits_admission_and_batch_build_sheds() {
         let j = PredictJob {
             x: x(),
             active_classes: ACTIVE,
+            task: 0,
             lane: Lane::Interactive,
             deadline_us,
             admitted_us: 0,

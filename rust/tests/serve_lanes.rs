@@ -20,11 +20,16 @@ fn img(v: f32) -> Tensor<f32> {
 }
 
 fn job(v: f32, lane: Lane) -> (PredictJob, Receiver<PredictOutcome>) {
+    task_job(v, lane, 0)
+}
+
+fn task_job(v: f32, lane: Lane, task: usize) -> (PredictJob, Receiver<PredictOutcome>) {
     let (tx, rx) = channel();
     (
         PredictJob {
             x: img(v),
             active_classes: 2,
+            task,
             lane,
             deadline_us: None,
             admitted_us: 0,
@@ -37,7 +42,7 @@ fn job(v: f32, lane: Lane) -> (PredictJob, Receiver<PredictOutcome>) {
 
 fn train() -> TrainJob {
     let (tx, _) = channel();
-    TrainJob { x: img(0.0), label: 0, active_classes: 2, lr: 0.1, cut: 0, resp: tx }
+    TrainJob { x: img(0.0), label: 0, active_classes: 2, task: 0, lr: 0.1, cut: 0, resp: tx }
 }
 
 /// Pop one predict batch with no hold-open and report (lane, ids) —
@@ -295,4 +300,79 @@ fn lanes_flow_end_to_end_through_a_server() {
     assert_eq!(stats.lane(Lane::Bulk).admitted, 3);
     let (_m, server_stats) = server.shutdown();
     assert_eq!(server_stats.served, 6);
+}
+
+#[test]
+fn multitask_fence_leaves_untrained_heads_bit_identical() {
+    // Head isolation across the train fence, end to end on a MockClock
+    // pool (virtual sleeps only — any wall-clock wait in the pool would
+    // hang forever here, so passing proves the barrier is rendezvous-
+    // ordered, not timed): task-0 and task-2 predict traffic interleaved
+    // with a head-1 train barrier. The barrier's diff re-broadcast may
+    // ship exactly head 1; every other head's bytes, and the answers
+    // those heads serve, must be bit-identical on both sides of the
+    // fence on every replica.
+    use tinycl::nn::{Engine, Model, ModelConfig};
+    let cfg = ModelConfig {
+        in_channels: 3,
+        image_size: 8,
+        conv_channels: 4,
+        num_classes: 4,
+        grad_clip: f32::INFINITY,
+    };
+    let mut model = Model::new(cfg, 5).with_engine(Engine::Gemm);
+    let (t1, t2) = (model.add_task_head(2, 11), model.add_task_head(2, 12));
+    assert_eq!((t1, t2), (1, 2));
+    model.set_freeze_backbone(true);
+    let head0_before = model.head_view(0).data().to_vec();
+    let head1_before = model.head_view(t1).data().to_vec();
+    let head2_before = model.head_view(t2).data().to_vec();
+    let head1_bytes = model.head_bytes(t1);
+    let full_bytes = model.weights_bytes();
+
+    let server = Server::start_with_clock(
+        model,
+        ServerConfig { max_batch: 4, replicas: 2, diff_resync: true, ..Default::default() },
+        MockClock::shared(),
+    );
+    let client = server.client();
+    let shape = Shape::d3(3, 8, 8);
+    let xs: Vec<Tensor<f32>> =
+        (0..4).map(|i| Tensor::full(shape.clone(), 0.1 + 0.2 * i as f32)).collect();
+    let probe = |task: usize, classes: usize| -> Vec<usize> {
+        xs.iter()
+            .map(|x| match client.predict_task(x, classes, task) {
+                Served::Ok { pred, .. } => pred,
+                other => panic!("probe on task {task} was not served: {other:?}"),
+            })
+            .collect()
+    };
+
+    let (pre0, pre2) = (probe(0, 4), probe(t2, 2));
+    assert!(client.train_task(&xs[0], 1, 2, t1, 0.1).is_some(), "head-1 barrier train");
+    assert_eq!(probe(0, 4), pre0, "task-0 answers changed across a head-1 barrier");
+    assert_eq!(probe(t2, 2), pre2, "task-2 answers changed across a head-1 barrier");
+
+    let q = server.queue_stats();
+    assert!(q.consistent(), "per-task books broke: {q:?}");
+    assert_eq!(q.trains, 1);
+    assert_eq!((q.task(0).admitted, q.task(t1).admitted, q.task(t2).admitted), (8, 0, 8));
+    assert_eq!(q.shed, 0);
+
+    let (models, stats) = server.shutdown_all();
+    assert_eq!(stats.train_steps, 1);
+    assert_eq!(stats.resyncs_diff, 1, "the non-leader replica must adopt the barrier by diff");
+    // Zero-growth byte accounting: the re-broadcast shipped exactly the
+    // trained head, never the full snapshot.
+    assert_eq!(stats.resync_diff_bytes, head1_bytes);
+    assert!(head1_bytes < full_bytes);
+    for (r, m) in models.iter().enumerate() {
+        assert_eq!(m.head_view(0).data(), head0_before.as_slice(), "replica {r}: head 0 moved");
+        assert_eq!(m.head_view(t2).data(), head2_before.as_slice(), "replica {r}: head 2 moved");
+        assert_ne!(
+            m.head_view(t1).data(),
+            head1_before.as_slice(),
+            "replica {r}: head 1 never adopted the train step"
+        );
+    }
 }
